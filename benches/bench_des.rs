@@ -1,0 +1,69 @@
+//! DES-core microbenchmarks: calendar throughput and resource cycling.
+//!
+//! These bound the simulator's event-loop cost (the denominator of the
+//! Fig 13 headline). Run: `cargo bench --bench bench_des`
+
+use pipesim::des::{Calendar, Resource};
+use pipesim::stats::rng::Pcg64;
+use pipesim::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new();
+
+    // schedule+pop cycle on a queue kept at depth ~1000
+    let mut cal: Calendar<u64> = Calendar::new();
+    let mut rng = Pcg64::new(1);
+    for i in 0..1000 {
+        cal.schedule(rng.uniform() * 1e6, i);
+    }
+    let mut i = 1000u64;
+    b.bench("calendar schedule+pop (depth 1000)", || {
+        let (t, v) = cal.pop().unwrap();
+        black_box(v);
+        cal.schedule_at(t + rng.uniform() * 1e6, i);
+        i += 1;
+    });
+
+    // deep calendar
+    let mut cal2: Calendar<u64> = Calendar::new();
+    for i in 0..100_000 {
+        cal2.schedule(rng.uniform() * 1e9, i);
+    }
+    let mut j = 100_000u64;
+    b.bench("calendar schedule+pop (depth 100k)", || {
+        let (t, v) = cal2.pop().unwrap();
+        black_box(v);
+        cal2.schedule_at(t + rng.uniform() * 1e9, j);
+        j += 1;
+    });
+
+    // resource request/release with queueing (capacity 10, 20 in flight)
+    let mut res: Resource<u32> = Resource::new("bench", 10);
+    let mut t = 0.0f64;
+    for k in 0..20 {
+        res.request(t, k, 1.0);
+    }
+    b.bench("resource release+request (contended)", || {
+        t += 1.0;
+        black_box(res.release(t));
+        res.request(t, 99, 1.0);
+    });
+
+    // uncontended fast path
+    let mut res2: Resource<u32> = Resource::new("bench2", 1_000_000);
+    let mut t2 = 0.0f64;
+    b.bench("resource request+release (uncontended)", || {
+        t2 += 1.0;
+        res2.request(t2, 1, 0.0);
+        black_box(res2.release(t2));
+    });
+
+    // RNG primitives feeding the simulator
+    let mut r = Pcg64::new(2);
+    b.bench("pcg64 normal()", || {
+        black_box(r.normal());
+    });
+    b.bench("pcg64 uniform()", || {
+        black_box(r.uniform());
+    });
+}

@@ -1,0 +1,67 @@
+//! Fitting-pipeline bench (Fig 8 / 9 / 10 inputs): EM over the AOT
+//! artifacts vs the pure-Rust baseline, curve NLLS, exp-Weibull MLE, and
+//! the 168-cluster arrival-profile fit.
+//!
+//! Run: `cargo bench --bench bench_fit`
+
+use std::rc::Rc;
+
+use pipesim::arrivals::ArrivalProfile;
+use pipesim::empirical::GroundTruth;
+use pipesim::runtime::fitter::{fit_gmm1_cpu, fit_gmm3_cpu};
+use pipesim::runtime::{fit_gmm1, fit_gmm3, Runtime, K1, K3};
+use pipesim::stats::fit::{fit_exp_curve, fit_expweibull};
+use pipesim::stats::rng::Pcg64;
+use pipesim::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::with_budget(std::time::Duration::from_millis(200), 3);
+    let db = GroundTruth::new(9).generate_weeks(6);
+    let runtime = Runtime::load_default().map(Rc::new);
+
+    let assets = db.asset_log_matrix();
+    let spark_logs: Vec<f64> = db
+        .durations_for(pipesim::model::Framework::SparkML)
+        .into_iter()
+        .map(|d| d.ln())
+        .collect();
+
+    // one EM iteration + full fit, PJRT vs CPU
+    if let Some(rt) = &runtime {
+        b.bench_once("fit_gmm3 K=50 (60 iters) [pjrt]", || {
+            let mut rng = Pcg64::new(1);
+            black_box(fit_gmm3(rt, &assets, &mut rng, 60, 1e-6).unwrap());
+        });
+        b.bench_once("fit_gmm1 K=8 (80 iters) [pjrt]", || {
+            let mut rng = Pcg64::new(2);
+            black_box(fit_gmm1(rt, &spark_logs, &mut rng, 80, 1e-7).unwrap());
+        });
+    } else {
+        println!("# artifacts not built: PJRT fits skipped");
+    }
+    b.bench_once("fit_gmm3 K=50 (60 iters) [cpu]", || {
+        let mut rng = Pcg64::new(1);
+        black_box(fit_gmm3_cpu(&assets, K3, &mut rng, 60, 1e-6).unwrap());
+    });
+    b.bench_once("fit_gmm1 K=8 (80 iters) [cpu]", || {
+        let mut rng = Pcg64::new(2);
+        black_box(fit_gmm1_cpu(&spark_logs, K1, &mut rng, 80, 1e-7));
+    });
+
+    // Fig 9a curve fit
+    let (xs, ys) = db.preproc_pairs();
+    b.bench_once("fit_exp_curve (NLLS, Fig 9a)", || {
+        black_box(fit_exp_curve(&xs, &ys).unwrap());
+    });
+
+    // interarrival MLE + the full 168-cluster profile (Fig 10 / 12)
+    let gaps: Vec<f64> = db.interarrivals().into_iter().filter(|&g| g > 0.0).collect();
+    let sub: Vec<f64> = gaps.iter().take(5000).cloned().collect();
+    b.bench_once("fit_expweibull MLE (5k gaps)", || {
+        black_box(fit_expweibull(&sub).unwrap());
+    });
+    b.bench_once("arrival profile fit (168 clusters)", || {
+        let mut rng = Pcg64::new(3);
+        black_box(ArrivalProfile::fit(&db, &mut rng).unwrap());
+    });
+}

@@ -1,0 +1,93 @@
+//! Runtime-layer bench: PJRT artifact sampling vs the pure-Rust
+//! baseline — the cost of the batched hot path the coordinator drives.
+//!
+//! Skips the PJRT cases when `artifacts/` is not built.
+//! Run: `cargo bench --bench bench_runtime`
+
+use std::rc::Rc;
+
+use pipesim::runtime::pool::{Backend, PreprocDurationPool, SamplePool1, SamplePool3};
+use pipesim::runtime::{Runtime, K1, K3, N_SAMPLE};
+use pipesim::stats::dist::LogNormal;
+use pipesim::stats::gmm::{Gmm1, Gmm3};
+use pipesim::stats::rng::Pcg64;
+use pipesim::stats::ExpCurve;
+use pipesim::util::bench::{black_box, Bench};
+
+fn toy_gmm3() -> Gmm3 {
+    let mut logw = vec![-60.0f64; K3];
+    logw[0] = 0.0;
+    let eye = [[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]];
+    Gmm3 {
+        logw,
+        mu: vec![[8.0, 3.0, 12.0]; K3],
+        cchol: vec![eye; K3],
+        pchol: vec![eye; K3],
+    }
+}
+
+fn toy_gmm1() -> Gmm1 {
+    let mut logw = vec![-60.0f64; K1];
+    logw[0] = 0.0;
+    Gmm1 {
+        logw,
+        mu: vec![3.0; K1],
+        logsd: vec![0.5; K1],
+    }
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let runtime = Runtime::load_default().map(Rc::new);
+
+    let backends: Vec<(&str, Backend)> = match &runtime {
+        Some(rt) => vec![
+            ("pjrt", Backend::Runtime(rt.clone())),
+            ("cpu", Backend::Cpu),
+        ],
+        None => {
+            println!("# artifacts not built: PJRT cases skipped");
+            vec![("cpu", Backend::Cpu)]
+        }
+    };
+
+    for (name, backend) in &backends {
+        let mut pool3 = SamplePool3::new(backend.clone(), toy_gmm3(), Pcg64::new(1));
+        b.bench(format!("pool3 next() amortized [{name}]"), || {
+            black_box(pool3.next().unwrap());
+        });
+
+        let mut pool1 = SamplePool1::new(backend.clone(), toy_gmm1(), Pcg64::new(2));
+        b.bench(format!("pool1 next() amortized [{name}]"), || {
+            black_box(pool1.next().unwrap());
+        });
+
+        let mut pre = PreprocDurationPool::new(
+            backend.clone(),
+            ExpCurve {
+                a: 0.018,
+                b: 1.330,
+                c: 2.156,
+            },
+            LogNormal::new(-1.0, 0.15),
+            Pcg64::new(3),
+        );
+        let logsizes = vec![9.0f64; N_SAMPLE];
+        b.bench_once(format!("preproc batch of {N_SAMPLE} [{name}]"), || {
+            black_box(pre.durations(&logsizes).unwrap());
+        });
+    }
+
+    // raw artifact execution cost (per PJRT call)
+    if let Some(rt) = &runtime {
+        let g = toy_gmm3();
+        let mut rng = Pcg64::new(4);
+        let mut u = vec![0f32; N_SAMPLE];
+        let mut z = vec![0f32; N_SAMPLE * 3];
+        rng.fill_uniform_f32(&mut u);
+        rng.fill_normal_f32(&mut z);
+        b.bench("raw gmm_sample3 execute (4096 draws)", || {
+            black_box(rt.sample3(&g, &u, &z).unwrap());
+        });
+    }
+}

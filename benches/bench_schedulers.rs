@@ -1,0 +1,106 @@
+//! Operational-strategy ablation (Fig 4's scheduler concept + DESIGN.md
+//! ablations): queue disciplines under saturation, and retraining trigger
+//! policies trading model quality against infrastructure load.
+//!
+//! Run: `cargo bench --bench bench_schedulers`
+
+use std::rc::Rc;
+
+use pipesim::coordinator::config::RuntimeViewConfig;
+use pipesim::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig, TriggerPolicy};
+use pipesim::des::resource::Discipline;
+use pipesim::des::DAY;
+use pipesim::empirical::GroundTruth;
+use pipesim::runtime::Runtime;
+use pipesim::util::bench::Bench;
+
+fn main() {
+    let db = GroundTruth::new(17).generate_weeks(4);
+    let runtime = Runtime::load_default().map(Rc::new);
+    let params = fit_params(&db, runtime.clone()).expect("fit");
+    let mut b = Bench::with_budget(std::time::Duration::from_millis(100), 3);
+
+    println!("# discipline ablation (7 days, training capacity 4)");
+    println!("discipline,mean_wait_s,max_wait_s,completed,util_training");
+    for (name, d) in [
+        ("fifo", Discipline::Fifo),
+        ("sjf", Discipline::ShortestJobFirst),
+        ("priority", Discipline::Priority),
+    ] {
+        let mut out = None;
+        b.bench_once(format!("7-day run [{name}]"), || {
+            let mut cfg = ExperimentConfig {
+                name: name.into(),
+                seed: 2,
+                horizon: 7.0 * DAY,
+                arrival: ArrivalSpec::Profile,
+                record_traces: false,
+                ..Default::default()
+            };
+            cfg.infra.training_capacity = 4;
+            cfg.infra.discipline = d;
+            let r = Experiment::new(cfg, params.clone())
+                .with_runtime(runtime.clone())
+                .run()
+                .expect("run");
+            out = Some((
+                r.wait_training.mean(),
+                r.wait_training.max,
+                r.completed,
+                r.util_training,
+            ));
+        });
+        let (mw, xw, c, u) = out.unwrap();
+        println!("{name},{mw:.1},{xw:.0},{c},{u:.3}");
+    }
+
+    println!("# trigger-policy ablation (14 days, runtime view on)");
+    println!("policy,retrains,mean_perf,util_training,completed");
+    for (name, policy) in [
+        ("never", TriggerPolicy::Never),
+        ("eager", TriggerPolicy::Eager),
+        ("threshold", TriggerPolicy::DriftThreshold { threshold: 0.05 }),
+        (
+            "offpeak",
+            TriggerPolicy::OffPeak {
+                threshold: 0.05,
+                max_intensity: 0.5,
+            },
+        ),
+    ] {
+        let mut out = None;
+        b.bench_once(format!("14-day run [{name}]"), || {
+            let cfg = ExperimentConfig {
+                name: name.into(),
+                seed: 2,
+                horizon: 14.0 * DAY,
+                arrival: ArrivalSpec::Poisson {
+                    mean_interarrival: 300.0,
+                },
+                record_traces: false,
+                runtime_view: RuntimeViewConfig {
+                    enabled: true,
+                    detector_interval: 3600.0,
+                    decay_per_day: 0.02,
+                    sudden_drift_prob: 0.02,
+                    sudden_drift_drop: 0.08,
+                    trigger: policy,
+                    max_models: 1000,
+                },
+                ..Default::default()
+            };
+            let r = Experiment::new(cfg, params.clone())
+                .with_runtime(runtime.clone())
+                .run()
+                .expect("run");
+            out = Some((
+                r.retrains_triggered,
+                r.final_mean_performance,
+                r.util_training,
+                r.completed,
+            ));
+        });
+        let (rt_, p, u, c) = out.unwrap();
+        println!("{name},{rt_},{p:.3},{u:.3},{c}");
+    }
+}

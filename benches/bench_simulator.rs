@@ -1,0 +1,74 @@
+//! Fig 13 reproduction bench: end-to-end simulator throughput vs number
+//! of pipeline executions (wall-clock + µs/pipeline + memory), plus the
+//! paper's headline configuration (44 s mean interarrival).
+//!
+//! Run: `cargo bench --bench bench_simulator`
+
+use std::rc::Rc;
+
+use pipesim::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig};
+use pipesim::empirical::GroundTruth;
+use pipesim::runtime::Runtime;
+use pipesim::util::bench::Bench;
+
+fn main() {
+    let db = GroundTruth::new(5).generate_weeks(4);
+    let runtime = Runtime::load_default().map(Rc::new);
+    println!(
+        "# sampler backend: {}",
+        if runtime.is_some() { "pjrt" } else { "cpu" }
+    );
+    let params = fit_params(&db, runtime.clone()).expect("fit");
+
+    let mut b = Bench::with_budget(std::time::Duration::from_millis(200), 3);
+
+    println!("# Fig 13: wall-clock vs #pipelines (flat 44 s interarrival)");
+    println!("pipelines,wall_secs,us_per_pipeline,events_per_sec,peak_rss_mb");
+    for n in [1_000u64, 10_000, 100_000] {
+        let mut last = None;
+        b.bench_once(format!("simulate {n} pipelines"), || {
+            let cfg = ExperimentConfig {
+                name: format!("bench-{n}"),
+                seed: 1,
+                horizon: f64::MAX / 4.0,
+                arrival: ArrivalSpec::Poisson {
+                    mean_interarrival: 44.0,
+                },
+                max_pipelines: Some(n),
+                record_traces: false,
+                sample_interval: 3600.0,
+                ..Default::default()
+            };
+            let r = Experiment::new(cfg, params.clone())
+                .with_runtime(runtime.clone())
+                .run()
+                .expect("run");
+            last = Some((r.wall_secs, r.us_per_pipeline(), r.events_per_sec(), r.peak_rss_mb));
+        });
+        let (w, us, eps, rss) = last.unwrap();
+        println!("{n},{w:.4},{us:.2},{eps:.0},{rss:.1}");
+    }
+
+    // trace recording cost (the tsdb substrate's overhead, cf. the
+    // paper's InfluxDB pain)
+    for record in [false, true] {
+        b.bench_once(format!("simulate 50k pipelines, traces={record}"), || {
+            let cfg = ExperimentConfig {
+                name: "bench-traces".into(),
+                seed: 1,
+                horizon: f64::MAX / 4.0,
+                arrival: ArrivalSpec::Poisson {
+                    mean_interarrival: 44.0,
+                },
+                max_pipelines: Some(50_000),
+                record_traces: record,
+                sample_interval: 3600.0,
+                ..Default::default()
+            };
+            Experiment::new(cfg, params.clone())
+                .with_runtime(runtime.clone())
+                .run()
+                .expect("run");
+        });
+    }
+}

@@ -1,0 +1,56 @@
+//! Trace-store bench: the substrate that replaces InfluxDB (which the
+//! paper reports OOM-ing past a few hundred thousand pipelines, Fig 13
+//! discussion). Measures hot-path appends and the dashboard queries.
+//!
+//! Run: `cargo bench --bench bench_tsdb`
+
+use pipesim::stats::rng::Pcg64;
+use pipesim::tsdb::{Agg, SeriesKey, TsStore};
+use pipesim::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new();
+
+    // hot-path append via interned handle
+    let mut db = TsStore::new();
+    let h = db.handle(SeriesKey::new("task_exec").tag("task", "train"));
+    let mut t = 0.0f64;
+    b.bench("append via handle", || {
+        t += 1.0;
+        db.append(h, t, 42.0);
+    });
+
+    // cold-path record (hash + intern each time)
+    let mut db2 = TsStore::new();
+    let mut t2 = 0.0f64;
+    b.bench("record via key lookup", || {
+        t2 += 1.0;
+        db2.record(SeriesKey::new("util").tag("resource", "training"), t2, 0.5);
+    });
+
+    // build a realistic store: 3M points across 24 series
+    let mut big = TsStore::new();
+    let mut rng = Pcg64::new(1);
+    let handles: Vec<_> = (0..24)
+        .map(|i| big.handle(SeriesKey::new("m").tag("k", format!("{i}"))))
+        .collect();
+    for i in 0..3_000_000u64 {
+        let h = handles[(i % 24) as usize];
+        big.append(h, i as f64, rng.uniform());
+    }
+    println!(
+        "# store: {} points, ~{} MB",
+        big.num_points(),
+        big.approx_bytes() / (1 << 20)
+    );
+
+    b.bench_once("window mean over 125k-point series", || {
+        black_box(big.window(handles[0], 0.0, 3_000_000.0, 3600.0, Agg::Mean));
+    });
+    b.bench_once("window p95 over 125k-point series", || {
+        black_box(big.window(handles[0], 0.0, 3_000_000.0, 3600.0, Agg::P95));
+    });
+    b.bench_once("group-by over 3M points / 24 groups", || {
+        black_box(big.group_by("m", "k", 0.0, 3_000_000.0, 86_400.0, Agg::Mean));
+    });
+}

@@ -1,0 +1,83 @@
+//! Simulation accuracy (Fig 12): fit on the empirical DB, simulate four
+//! weeks, and compare simulated vs empirical distributions — Q-Q of task
+//! durations per stratum (12a), interarrivals for both arrival modes
+//! (12b), and the hour-of-week arrival overlay (12c).
+//!
+//! Run: `cargo run --release --example accuracy_eval`
+
+use std::rc::Rc;
+
+use pipesim::analytics::figures;
+use pipesim::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig};
+use pipesim::des::DAY;
+use pipesim::empirical::GroundTruth;
+use pipesim::runtime::Runtime;
+use pipesim::stats::pearson;
+
+fn main() -> anyhow::Result<()> {
+    let db = GroundTruth::new(19).generate_weeks(8);
+    println!("{}", db.summary());
+    let runtime = Runtime::load_default().map(Rc::new);
+    let params = fit_params(&db, runtime.clone())?;
+
+    let run = |arrival: ArrivalSpec, name: &str| {
+        let cfg = ExperimentConfig {
+            name: name.into(),
+            seed: 23,
+            horizon: 28.0 * DAY,
+            arrival,
+            ..Default::default()
+        };
+        Experiment::new(cfg, params.clone())
+            .with_runtime(runtime.clone())
+            .run()
+    };
+
+    println!("\n== Fig 12a: task-duration Q-Q (4 simulated weeks vs empirical) ==");
+    let r_profile = run(ArrivalSpec::Profile, "accuracy-profile")?;
+    for q in figures::fig12a_qq(&db, &r_profile, 60) {
+        println!("{}", q.verdict());
+    }
+
+    println!("\n== Fig 12b: interarrival Q-Q ==");
+    if let Some(q) = figures::fig12b_qq(&db, &r_profile, "realistic", 60) {
+        println!("{}", q.verdict());
+    }
+    let r_random = run(ArrivalSpec::Random, "accuracy-random")?;
+    if let Some(q) = figures::fig12b_qq(&db, &r_random, "random", 60) {
+        println!("{}", q.verdict());
+    }
+
+    println!("\n== Fig 12c: arrivals per hour-of-week, simulated vs empirical ==");
+    let csv = figures::fig12c_profile(&db, &r_profile);
+    let mut emp = Vec::new();
+    let mut sim = Vec::new();
+    for line in csv.lines().skip(1) {
+        let mut parts = line.split(',');
+        parts.next();
+        emp.push(parts.next().unwrap().parse::<f64>()?);
+        sim.push(parts.next().unwrap().parse::<f64>()?);
+    }
+    let corr = pearson(&emp, &sim);
+    println!("hour-of-week profile correlation (sim vs emp): {corr:.4}");
+    let peak_emp = emp
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    let peak_sim = sim
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    println!(
+        "empirical peak hour-of-week: {peak_emp} (day {}, {:02}:00); simulated: {peak_sim}",
+        peak_emp / 24,
+        peak_emp % 24
+    );
+    std::fs::write("fig12c_profile.csv", csv)?;
+    println!("wrote fig12c_profile.csv");
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Capacity planning (the Fig 11 scenario + the paper's stated use case).
+//!
+//! The paper's dashboard walkthrough: an arrival peak around 16:00
+//! saturates the learning cluster, jobs queue, and post-processing tasks
+//! are delayed. Here we sweep the training-cluster capacity, watch
+//! utilization / queue wait / pipeline wait respond, and also ablate the
+//! queueing discipline (FIFO vs shortest-job-first vs priority) — the
+//! operational strategies the framework exists to evaluate (Fig 4).
+//!
+//! Run: `cargo run --release --example capacity_planning`
+
+use std::rc::Rc;
+
+use pipesim::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig};
+use pipesim::des::resource::Discipline;
+use pipesim::des::DAY;
+use pipesim::empirical::GroundTruth;
+use pipesim::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let db = GroundTruth::new(7).generate_weeks(6);
+    let runtime = Runtime::load_default().map(Rc::new);
+    let params = fit_params(&db, runtime.clone())?;
+
+    println!("== capacity sweep: 7 days each, realistic arrival profile ==");
+    println!(
+        "{:>9} {:>11} {:>12} {:>14} {:>14} {:>11}",
+        "capacity", "util_train", "queue_len", "mean_wait_s", "p_completed", "max_wait_s"
+    );
+    for capacity in [2, 4, 6, 8, 12, 16, 24] {
+        let mut cfg = ExperimentConfig {
+            name: format!("cap-{capacity}"),
+            seed: 11,
+            horizon: 7.0 * DAY,
+            arrival: ArrivalSpec::Profile,
+            record_traces: false,
+            ..Default::default()
+        };
+        cfg.infra.training_capacity = capacity;
+        let r = Experiment::new(cfg, params.clone())
+            .with_runtime(runtime.clone())
+            .run()?;
+        println!(
+            "{:>9} {:>10.1}% {:>12.2} {:>14.1} {:>13.1}% {:>11.0}",
+            capacity,
+            100.0 * r.util_training,
+            r.avg_queue_training,
+            r.wait_training.mean(),
+            100.0 * r.completed as f64 / r.arrived as f64,
+            r.wait_training.max,
+        );
+    }
+
+    println!();
+    println!("== discipline ablation at tight capacity (4 slots) ==");
+    println!(
+        "{:>10} {:>14} {:>14} {:>12}",
+        "discipline", "mean_wait_s", "max_wait_s", "completed"
+    );
+    for (name, discipline) in [
+        ("fifo", Discipline::Fifo),
+        ("sjf", Discipline::ShortestJobFirst),
+        ("priority", Discipline::Priority),
+    ] {
+        let mut cfg = ExperimentConfig {
+            name: format!("disc-{name}"),
+            seed: 11,
+            horizon: 7.0 * DAY,
+            arrival: ArrivalSpec::Profile,
+            record_traces: false,
+            ..Default::default()
+        };
+        cfg.infra.training_capacity = 4;
+        cfg.infra.discipline = discipline;
+        let r = Experiment::new(cfg, params.clone())
+            .with_runtime(runtime.clone())
+            .run()?;
+        println!(
+            "{:>10} {:>14.1} {:>14.0} {:>12}",
+            name,
+            r.wait_training.mean(),
+            r.wait_training.max,
+            r.completed
+        );
+    }
+    println!();
+    println!("(shortest-job-first should cut the mean wait vs FIFO at the");
+    println!(" cost of long-job starvation, visible in the max wait)");
+    Ok(())
+}

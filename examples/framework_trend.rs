@@ -1,0 +1,55 @@
+//! Framework-trend what-if (paper section V-A2b): "the number of
+//! TensorFlow builds is increasing over time" — the paper wants to
+//! "easily adapt these percentages to observe the effect on the system".
+//!
+//! Sweep the TensorFlow share from the production 32% up to 80% and watch
+//! the training cluster saturate: TF jobs run ~18x longer than SparkML
+//! (median 180 s vs 10 s), so a TF-heavy mix starves the cluster at the
+//! same arrival rate.
+//!
+//! Run: `cargo run --release --example framework_trend`
+
+use std::rc::Rc;
+
+use pipesim::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig};
+use pipesim::des::DAY;
+use pipesim::empirical::GroundTruth;
+use pipesim::runtime::Runtime;
+use pipesim::synth::SynthConfig;
+
+fn main() -> anyhow::Result<()> {
+    let db = GroundTruth::new(13).generate_weeks(6);
+    let runtime = Runtime::load_default().map(Rc::new);
+    let params = fit_params(&db, runtime.clone())?;
+
+    println!("== TensorFlow share sweep (7 days, fixed infra) ==");
+    println!(
+        "{:>9} {:>11} {:>13} {:>14} {:>12}",
+        "tf_share", "util_train", "queue_train", "mean_wait_s", "completed%"
+    );
+    for tf_share in [0.32, 0.45, 0.60, 0.70, 0.80] {
+        let cfg = ExperimentConfig {
+            name: format!("tf-{tf_share}"),
+            seed: 3,
+            horizon: 7.0 * DAY,
+            arrival: ArrivalSpec::Profile,
+            synth: SynthConfig::default().with_tensorflow_share(tf_share),
+            record_traces: false,
+            ..Default::default()
+        };
+        let r = Experiment::new(cfg, params.clone())
+            .with_runtime(runtime.clone())
+            .run()?;
+        println!(
+            "{:>8.0}% {:>10.1}% {:>13.2} {:>14.1} {:>11.1}%",
+            100.0 * tf_share,
+            100.0 * r.util_training,
+            r.avg_queue_training,
+            r.wait_training.mean(),
+            100.0 * r.completed as f64 / r.arrived as f64,
+        );
+    }
+    println!();
+    println!("(utilization and queueing must rise monotonically with the TF share)");
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Quickstart: the full PipeSim loop in one binary.
+//!
+//! 1. Generate a synthetic empirical analytics database (the stand-in for
+//!    the paper's production usage DB).
+//! 2. Fit every simulation model on it (asset GMM, per-framework duration
+//!    mixtures, preprocess curve, arrival profile) — through the AOT PJRT
+//!    artifacts when `artifacts/` is built, pure Rust otherwise.
+//! 3. Run a 3-day experiment and render the dashboard.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::rc::Rc;
+
+use pipesim::analytics::render_dashboard;
+use pipesim::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig};
+use pipesim::des::DAY;
+use pipesim::empirical::GroundTruth;
+use pipesim::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    // 1. empirical substrate (8 weeks ≈ 32k training jobs)
+    println!("== generating empirical database (8 weeks) ==");
+    let db = GroundTruth::new(42).generate_weeks(8);
+    println!("{}", db.summary());
+
+    // 2. fit the modeled system
+    let runtime = Runtime::load_default().map(Rc::new);
+    println!(
+        "== fitting simulation parameters ({}) ==",
+        if runtime.is_some() { "PJRT artifacts" } else { "CPU fallback" }
+    );
+    let params = fit_params(&db, runtime.clone())?;
+    println!(
+        "preprocess curve: f(x) = {:.4}*{:.4}^x + {:.3}  (ground truth 0.018*1.330^x + 2.156)",
+        params.preproc_curve.a, params.preproc_curve.b, params.preproc_curve.c
+    );
+
+    // 3. simulate 3 days under the realistic arrival profile
+    println!("== simulating 3 days ==");
+    let cfg = ExperimentConfig {
+        name: "quickstart".into(),
+        horizon: 3.0 * DAY,
+        arrival: ArrivalSpec::Profile,
+        ..Default::default()
+    };
+    let result = Experiment::new(cfg, params).with_runtime(runtime).run()?;
+    println!("{}", render_dashboard(&result, 72));
+    Ok(())
+}

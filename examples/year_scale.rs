@@ -1,0 +1,95 @@
+//! End-to-end headline run (Fig 13): simulate a full year of pipeline
+//! executions at the paper's load and measure simulator performance.
+//!
+//! The paper: 365 days at an average 44 s interarrival ≈ 720,000 pipeline
+//! executions, simulated in ~8.6 min (≈1.4 ms/pipeline) on an FX-8350,
+//! with ~850 MB peak memory and linear time scaling. This driver
+//! exercises ALL layers on the same workload: empirical generation → PJRT
+//! EM fitting → synthesizers + batched PJRT sampling → DES engine →
+//! analytics, and prints the scaling table + the year-long headline row.
+//!
+//! Run: `cargo run --release --example year_scale`
+
+use std::rc::Rc;
+
+use pipesim::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig};
+use pipesim::des::DAY;
+use pipesim::empirical::GroundTruth;
+use pipesim::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let db = GroundTruth::new(5).generate_weeks(8);
+    let runtime = Runtime::load_default().map(Rc::new);
+    println!(
+        "sampler backend: {}",
+        if runtime.is_some() { "pjrt (AOT artifacts)" } else { "cpu fallback" }
+    );
+    let params = fit_params(&db, runtime.clone())?;
+
+    // --- Fig 13 sweep: pipelines vs wall-clock and memory -------------
+    println!("\n== scaling sweep (flat 44 s interarrival, traces off) ==");
+    println!(
+        "{:>10} {:>11} {:>15} {:>14} {:>12}",
+        "pipelines", "wall_s", "us/pipeline", "events/s", "peak_rss_mb"
+    );
+    let mut rows = Vec::new();
+    for n in [1_000u64, 5_000, 10_000, 50_000, 100_000, 300_000] {
+        let cfg = ExperimentConfig {
+            name: format!("scale-{n}"),
+            seed: 1,
+            horizon: f64::MAX / 4.0,
+            arrival: ArrivalSpec::Poisson {
+                mean_interarrival: 44.0,
+            },
+            max_pipelines: Some(n),
+            record_traces: false,
+            sample_interval: 3600.0,
+            ..Default::default()
+        };
+        let r = Experiment::new(cfg, params.clone())
+            .with_runtime(runtime.clone())
+            .run()?;
+        println!(
+            "{:>10} {:>11.3} {:>15.2} {:>14.0} {:>12.1}",
+            n,
+            r.wall_secs,
+            r.us_per_pipeline(),
+            r.events_per_sec(),
+            r.peak_rss_mb
+        );
+        rows.push((n as f64, r.wall_secs));
+    }
+    // linearity check: wall time per pipeline at largest vs smallest scale
+    let small = rows[0].1 / rows[0].0;
+    let large = rows[rows.len() - 1].1 / rows[rows.len() - 1].0;
+    println!(
+        "time/pipeline smallest vs largest scale: {:.2} µs vs {:.2} µs (ratio {:.2}, ~1.0 = linear)",
+        small * 1e6,
+        large * 1e6,
+        large / small
+    );
+
+    // --- headline: 365 days @ 44 s ≈ 720k pipelines --------------------
+    println!("\n== headline: 365 simulated days @ 44 s mean interarrival ==");
+    let cfg = ExperimentConfig {
+        name: "year".into(),
+        seed: 1,
+        horizon: 365.0 * DAY,
+        arrival: ArrivalSpec::Poisson {
+            mean_interarrival: 44.0,
+        },
+        record_traces: false,
+        sample_interval: 3600.0,
+        ..Default::default()
+    };
+    let r = Experiment::new(cfg, params).with_runtime(runtime).run()?;
+    println!("{}", r.summary());
+    println!(
+        "paper: ~720k pipelines in ~517 s (1.4 ms each). this run: {} pipelines in {:.1} s ({:.1} µs each, {:.0}x faster)",
+        r.arrived,
+        r.wall_secs,
+        r.us_per_pipeline(),
+        1400.0 / r.us_per_pipeline().max(1e-9) * 1.0
+    );
+    Ok(())
+}

@@ -1,0 +1,77 @@
+"""AOT-lower the L2 model functions to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile().serialize()`` / serialized HloModuleProto)
+is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects (`proto.id() <=
+INT_MAX`). The text parser reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/load_hlo/ and gen_hlo.py there.
+
+Usage (from python/):  python -m compile.aot --out ../artifacts
+
+Writes one <name>.hlo.txt per AOT entry plus manifest.json recording the
+shapes the Rust runtime must feed.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import AOT_ENTRIES, D, K1, K3, N_FIT, N_SAMPLE
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name: str):
+    fn, specs = AOT_ENTRIES[name]
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered), specs
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output dir")
+    parser.add_argument(
+        "--only", default=None, help="comma-separated subset of entries"
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = list(AOT_ENTRIES) if not args.only else args.only.split(",")
+    manifest = {
+        "shapes": {
+            "N_FIT": N_FIT,
+            "N_SAMPLE": N_SAMPLE,
+            "D": D,
+            "K3": K3,
+            "K1": K1,
+        },
+        "modules": {},
+    }
+    for name in names:
+        text, specs = lower_entry(name)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["modules"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [list(s.shape) for s in specs],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""L1 Pallas kernel: batched GMM log-density matrix (the EM E-step hot-spot).
+
+The kernel computes ``logp[n, k] = log w_k + log N(x_n | mu_k, Sigma_k)``
+for a tile of rows at a time. This is the dominant FLOP cost of fitting
+the paper's 50-component full-covariance asset mixture (Fig 8) and the
+per-framework duration mixtures (Fig 9b): an (N x K x D x D) batch of tiny
+Mahalanobis transforms reshaped into MXU-friendly dots.
+
+TPU mapping (see DESIGN.md section Hardware-Adaptation):
+  * grid axis = row tiles of BLOCK_N (HBM -> VMEM staging via BlockSpec);
+  * the K axis (component parameters: mu, pchol, logw) stays VMEM-resident
+    across the whole grid (~2.6 KB for K=50, D=3);
+  * the (x - mu) @ pchol^T contraction is expressed with jnp.einsum so it
+    lowers to dot_general (MXU) rather than scalar loops.
+
+interpret=True is mandatory here: the artifacts must run on the Rust CPU
+PJRT client, which cannot execute Mosaic custom-calls. Correctness is
+asserted against kernels/ref.py by the pytest suite.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import LOG_2PI
+
+# Row-tile size. VMEM budget per tile at K=50, D=3 (f32):
+#   in 2048x3 (24 KB) + out 2048x50 (400 KB) + params (~2.6 KB) ~ 430 KB,
+# comfortably inside a 16 MB VMEM with room for double buffering; larger
+# tiles amortize grid-loop overhead on both TPU and the interpret path.
+BLOCK_N = 2048
+
+
+def _gmm_logpdf_kernel(x_ref, logw_ref, mu_ref, pchol_ref, o_ref):
+    """One row-tile of the log-density matrix.
+
+    x_ref:     (BLOCK_N, D) tile of data rows.
+    logw_ref:  (K,) log weights (full, VMEM-resident).
+    mu_ref:    (K, D) means (full).
+    pchol_ref: (K, D, D) lower-triangular inverse-covariance-Cholesky (full).
+    o_ref:     (BLOCK_N, K) output tile.
+    """
+    x = x_ref[...]
+    logw = logw_ref[...]
+    mu = mu_ref[...]
+    pchol = pchol_ref[...]
+    d = x.shape[1]
+
+    diff = x[:, None, :] - mu[None, :, :]             # (BN, K, D)
+    # y[n,k,:] = pchol_k @ diff[n,k,:]  -- batched small matmul (dot_general)
+    y = jnp.einsum("kde,nke->nkd", pchol, diff)
+    maha = jnp.sum(y * y, axis=-1)                    # (BN, K)
+    logdet = jnp.sum(
+        jnp.log(jnp.abs(jnp.diagonal(pchol, axis1=1, axis2=2))), axis=1
+    )
+    o_ref[...] = logw[None, :] + logdet[None, :] - 0.5 * d * LOG_2PI - 0.5 * maha
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def gmm_logpdf(x, logw, mu, pchol, *, block_n=BLOCK_N):
+    """Pallas-tiled GMM log joint density.
+
+    Args mirror ref.gmm_logpdf_ref. N must be divisible by block_n.
+    Returns (N, K) f32.
+    """
+    n, d = x.shape
+    k = logw.shape[0]
+    if n % block_n != 0:
+        raise ValueError(f"N={n} not divisible by block_n={block_n}")
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _gmm_logpdf_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k, d, d), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=True,
+    )(x, logw, mu, pchol)
+
+
+def _gmm_logpdf1_kernel(x_ref, logw_ref, mu_ref, logsd_ref, o_ref):
+    """1-D mixture tile: logp[n,k] = logw_k + log N(x_n | mu_k, sd_k^2)."""
+    x = x_ref[...]                                    # (BN,)
+    logw = logw_ref[...]
+    mu = mu_ref[...]
+    logsd = logsd_ref[...]
+    z = (x[:, None] - mu[None, :]) * jnp.exp(-logsd)[None, :]
+    o_ref[...] = logw[None, :] - logsd[None, :] - 0.5 * LOG_2PI - 0.5 * z * z
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def gmm_logpdf1(x, logw, mu, logsd, *, block_n=BLOCK_N):
+    """Pallas-tiled 1-D GMM log joint density. Returns (N, K) f32."""
+    n = x.shape[0]
+    k = logw.shape[0]
+    if n % block_n != 0:
+        raise ValueError(f"N={n} not divisible by block_n={block_n}")
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _gmm_logpdf1_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=True,
+    )(x, logw, mu, logsd)

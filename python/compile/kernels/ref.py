@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for the Pallas kernels and L2 building blocks.
+
+Everything here is the *reference* implementation: numerically
+straightforward, no tiling, no Pallas. The pytest suite asserts that the
+Pallas kernel (kernels/gmm.py) and the AOT-lowered model functions
+(compile/model.py) agree with these to tight tolerances.
+"""
+
+import jax.numpy as jnp
+
+LOG_2PI = 1.8378770664093453
+
+
+def gmm_logpdf_ref(x, logw, mu, pchol):
+    """Log joint density log w_k + log N(x_n | mu_k, Sigma_k).
+
+    Args:
+      x:     (N, D) data.
+      logw:  (K,) log mixture weights.
+      mu:    (K, D) component means.
+      pchol: (K, D, D) lower-triangular C^{-1}, the inverse of the
+             covariance Cholesky factor, so that the precision is
+             P = pchol^T pchol and the Mahalanobis distance is
+             ||pchol (x - mu)||^2.
+
+    Returns:
+      (N, K) log densities.
+    """
+    d = x.shape[1]
+    diff = x[:, None, :] - mu[None, :, :]              # (N, K, D)
+    y = jnp.einsum("kde,nke->nkd", pchol, diff)        # (N, K, D)
+    maha = jnp.sum(y * y, axis=-1)                     # (N, K)
+    logdet = jnp.sum(
+        jnp.log(jnp.abs(jnp.diagonal(pchol, axis1=1, axis2=2))), axis=1
+    )                                                  # (K,)
+    return logw[None, :] + logdet[None, :] - 0.5 * d * LOG_2PI - 0.5 * maha
+
+
+def gmm_logpdf1_ref(x, logw, mu, logsd):
+    """1-D version: log w_k + log N(x_n | mu_k, sd_k^2).
+
+    Args: x (N,), logw/mu/logsd (K,). Returns (N, K).
+    """
+    z = (x[:, None] - mu[None, :]) * jnp.exp(-logsd)[None, :]
+    return logw[None, :] - logsd[None, :] - 0.5 * LOG_2PI - 0.5 * z * z
+
+
+def chol3_ref(a):
+    """Closed-form Cholesky of a batch of 3x3 SPD matrices, (K,3,3)->(K,3,3).
+
+    Hand-unrolled: jnp.linalg.cholesky lowers to a LAPACK custom-call on
+    CPU which the Rust PJRT client (xla_extension 0.5.1) cannot execute,
+    so the AOT path must stay custom-call-free.
+    """
+    l11 = jnp.sqrt(a[:, 0, 0])
+    l21 = a[:, 1, 0] / l11
+    l31 = a[:, 2, 0] / l11
+    l22 = jnp.sqrt(a[:, 1, 1] - l21 * l21)
+    l32 = (a[:, 2, 1] - l31 * l21) / l22
+    l33 = jnp.sqrt(a[:, 2, 2] - l31 * l31 - l32 * l32)
+    z = jnp.zeros_like(l11)
+    return jnp.stack(
+        [
+            jnp.stack([l11, z, z], axis=-1),
+            jnp.stack([l21, l22, z], axis=-1),
+            jnp.stack([l31, l32, l33], axis=-1),
+        ],
+        axis=1,
+    )
+
+
+def tril3_inv_ref(l):
+    """Closed-form inverse of a batch of lower-triangular 3x3 matrices."""
+    i11 = 1.0 / l[:, 0, 0]
+    i22 = 1.0 / l[:, 1, 1]
+    i33 = 1.0 / l[:, 2, 2]
+    i21 = -l[:, 1, 0] * i11 * i22
+    i31 = (l[:, 1, 0] * l[:, 2, 1] - l[:, 1, 1] * l[:, 2, 0]) * i11 * i22 * i33
+    i32 = -l[:, 2, 1] * i22 * i33
+    z = jnp.zeros_like(i11)
+    return jnp.stack(
+        [
+            jnp.stack([i11, z, z], axis=-1),
+            jnp.stack([i21, i22, z], axis=-1),
+            jnp.stack([i31, i32, i33], axis=-1),
+        ],
+        axis=1,
+    )

@@ -1,0 +1,68 @@
+"""AOT path: every entry lowers to clean HLO text the Rust client can load.
+
+The hard constraint: no custom-calls (LAPACK, Mosaic) in any artifact --
+xla_extension 0.5.1's CPU PJRT client has no registry for them.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile.aot import lower_entry
+from compile.model import AOT_ENTRIES, D, K1, K3, N_FIT, N_SAMPLE
+
+ENTRY_NAMES = sorted(AOT_ENTRIES)
+
+
+@pytest.fixture(scope="module")
+def lowered():
+    return {name: lower_entry(name)[0] for name in ENTRY_NAMES}
+
+
+@pytest.mark.parametrize("name", ENTRY_NAMES)
+def test_no_custom_calls(lowered, name):
+    assert "custom-call" not in lowered[name], f"{name} has a custom-call"
+
+
+@pytest.mark.parametrize("name", ENTRY_NAMES)
+def test_has_entry_computation(lowered, name):
+    text = lowered[name]
+    assert "ENTRY" in text
+    assert "entry_computation_layout" in text
+
+
+def test_em_step3_signature(lowered):
+    head = lowered["gmm_em_step3"].splitlines()[0]
+    assert f"f32[{N_FIT},{D}]" in head
+    assert f"f32[{K3},{D},{D}]" in head
+
+
+def test_sample3_signature(lowered):
+    head = lowered["gmm_sample3"].splitlines()[0]
+    assert f"f32[{N_SAMPLE},{D}]" in head
+    assert f"f32[{K3}]" in head
+
+
+def test_sample1_signature(lowered):
+    head = lowered["gmm_sample1"].splitlines()[0]
+    assert f"f32[{N_SAMPLE}]" in head
+    assert f"f32[{K1}]" in head
+
+
+def test_artifacts_dir_consistent_if_built():
+    """If `make artifacts` has run, files + manifest must match AOT_ENTRIES."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest_path = os.path.join(art, "manifest.json")
+    if not os.path.exists(manifest_path):
+        pytest.skip("artifacts not built")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    assert set(manifest["modules"]) == set(AOT_ENTRIES)
+    for name, info in manifest["modules"].items():
+        path = os.path.join(art, info["file"])
+        assert os.path.exists(path), f"missing artifact {path}"
+        with open(path) as fh:
+            assert "custom-call" not in fh.read()
+    shapes = manifest["shapes"]
+    assert shapes == {"N_FIT": N_FIT, "N_SAMPLE": N_SAMPLE, "D": D, "K3": K3, "K1": K1}

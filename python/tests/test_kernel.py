@@ -1,0 +1,171 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (kernels/ref.py).
+
+This is the core correctness signal for the AOT path: everything the Rust
+runtime executes flows through these kernels.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gmm import gmm_logpdf, gmm_logpdf1
+from compile.kernels.ref import (
+    chol3_ref,
+    gmm_logpdf1_ref,
+    gmm_logpdf_ref,
+    tril3_inv_ref,
+)
+
+
+def _rand_gmm_params(rng, k, d):
+    logw = jnp.asarray(np.log(rng.dirichlet(np.ones(k))), jnp.float32)
+    mu = jnp.asarray(rng.normal(size=(k, d)) * 3.0, jnp.float32)
+    # random SPD covariance -> cchol -> pchol
+    a = rng.normal(size=(k, d, d))
+    cov = a @ np.transpose(a, (0, 2, 1)) + 0.5 * np.eye(d)
+    cchol = np.linalg.cholesky(cov)
+    pchol = np.linalg.inv(cchol)
+    # np.linalg.inv of lower-tri is lower-tri up to fp noise; mask exactly
+    pchol = np.tril(pchol)
+    return logw, mu, jnp.asarray(pchol, jnp.float32), jnp.asarray(cchol, jnp.float32)
+
+
+class TestGmmLogpdf3D:
+    def test_matches_ref_default_shapes(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(2048, 3)) * 2.0, jnp.float32)
+        logw, mu, pchol, _ = _rand_gmm_params(rng, 50, 3)
+        got = gmm_logpdf(x, logw, mu, pchol)
+        want = gmm_logpdf_ref(x, logw, mu, pchol)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_matches_scipy_density(self):
+        """Cross-check the *oracle* against scipy's multivariate normal."""
+        from scipy.stats import multivariate_normal
+
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(64, 3)).astype(np.float32)
+        logw, mu, pchol, cchol = _rand_gmm_params(rng, 4, 3)
+        want = np.stack(
+            [
+                np.asarray(logw)[k]
+                + multivariate_normal(
+                    np.asarray(mu)[k],
+                    np.asarray(cchol)[k] @ np.asarray(cchol)[k].T,
+                ).logpdf(x)
+                for k in range(4)
+            ],
+            axis=1,
+        )
+        got = gmm_logpdf(jnp.asarray(x), logw, mu, pchol, block_n=64)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_rejects_nondivisible_n(self):
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.normal(size=(100, 3)), jnp.float32)
+        logw, mu, pchol, _ = _rand_gmm_params(rng, 3, 3)
+        with pytest.raises(ValueError, match="not divisible"):
+            gmm_logpdf(x, logw, mu, pchol)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n_blocks=st.integers(1, 4),
+        block=st.sampled_from([8, 64, 128]),
+        k=st.integers(1, 50),
+        d=st.integers(2, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, n_blocks, block, k, d, seed):
+        rng = np.random.default_rng(seed)
+        n = n_blocks * block
+        x = jnp.asarray(rng.normal(size=(n, d)) * 2.0, jnp.float32)
+        logw = jnp.asarray(np.log(rng.dirichlet(np.ones(k))), jnp.float32)
+        mu = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+        a = rng.normal(size=(k, d, d))
+        cov = a @ np.transpose(a, (0, 2, 1)) + 0.5 * np.eye(d)
+        pchol = jnp.asarray(np.tril(np.linalg.inv(np.linalg.cholesky(cov))), jnp.float32)
+        got = gmm_logpdf(x, logw, mu, pchol, block_n=block)
+        want = gmm_logpdf_ref(x, logw, mu, pchol)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+class TestGmmLogpdf1D:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.normal(size=(2048,)) * 4.0, jnp.float32)
+        logw = jnp.asarray(np.log(rng.dirichlet(np.ones(8))), jnp.float32)
+        mu = jnp.asarray(rng.normal(size=(8,)) * 3.0, jnp.float32)
+        logsd = jnp.asarray(rng.normal(size=(8,)) * 0.3, jnp.float32)
+        got = gmm_logpdf1(x, logw, mu, logsd)
+        want = gmm_logpdf1_ref(x, logw, mu, logsd)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_matches_scipy_norm(self):
+        from scipy.stats import norm
+
+        rng = np.random.default_rng(4)
+        x = rng.normal(size=(128,)).astype(np.float32)
+        mu = np.array([-1.0, 0.5], np.float32)
+        sd = np.array([0.7, 2.0], np.float32)
+        logw = np.log(np.array([0.3, 0.7], np.float32))
+        want = logw[None, :] + np.stack(
+            [norm(mu[k], sd[k]).logpdf(x) for k in range(2)], axis=1
+        )
+        got = gmm_logpdf1(
+            jnp.asarray(x), jnp.asarray(logw), jnp.asarray(mu),
+            jnp.asarray(np.log(sd)), block_n=128,
+        )
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n_blocks=st.integers(1, 3),
+        k=st.integers(1, 16),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, n_blocks, k, seed):
+        rng = np.random.default_rng(seed)
+        n = n_blocks * 128
+        x = jnp.asarray(rng.normal(size=(n,)) * 3.0, jnp.float32)
+        logw = jnp.asarray(np.log(rng.dirichlet(np.ones(k))), jnp.float32)
+        mu = jnp.asarray(rng.normal(size=(k,)), jnp.float32)
+        logsd = jnp.asarray(rng.normal(size=(k,)) * 0.3, jnp.float32)
+        got = gmm_logpdf1(x, logw, mu, logsd, block_n=128)
+        want = gmm_logpdf1_ref(x, logw, mu, logsd)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+class TestChol3:
+    """The hand-unrolled 3x3 factorizations vs LAPACK (test-time only)."""
+
+    @settings(max_examples=25, deadline=None)
+    @given(k=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+    def test_chol3_matches_lapack(self, k, seed):
+        rng = np.random.default_rng(seed)
+        a = rng.normal(size=(k, 3, 3))
+        spd = (a @ np.transpose(a, (0, 2, 1)) + 0.5 * np.eye(3)).astype(np.float32)
+        got = chol3_ref(jnp.asarray(spd))
+        want = np.linalg.cholesky(spd.astype(np.float64))
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+    @settings(max_examples=25, deadline=None)
+    @given(k=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+    def test_tril3_inv_is_inverse(self, k, seed):
+        rng = np.random.default_rng(seed)
+        a = rng.normal(size=(k, 3, 3))
+        spd = a @ np.transpose(a, (0, 2, 1)) + 0.5 * np.eye(3)
+        l = np.linalg.cholesky(spd).astype(np.float32)
+        inv = np.asarray(tril3_inv_ref(jnp.asarray(l)))
+        prod = inv @ l
+        np.testing.assert_allclose(prod, np.broadcast_to(np.eye(3), (k, 3, 3)),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_tril3_inv_is_lower_triangular(self):
+        rng = np.random.default_rng(7)
+        a = rng.normal(size=(16, 3, 3))
+        spd = a @ np.transpose(a, (0, 2, 1)) + 0.5 * np.eye(3)
+        l = np.linalg.cholesky(spd).astype(np.float32)
+        inv = np.asarray(tril3_inv_ref(jnp.asarray(l)))
+        assert np.allclose(np.triu(inv, 1), 0.0)

@@ -1,0 +1,216 @@
+"""L2 correctness: EM convergence/recovery, samplers, duration models."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels.ref import chol3_ref, tril3_inv_ref
+from compile.model import (
+    _pick_component,
+    em_step1,
+    em_step3,
+    gmm_sample1,
+    gmm_sample3,
+    preproc_duration,
+)
+
+
+def _init3(rng, x, k):
+    """k-random-row init mirroring what the Rust fitter does."""
+    n = x.shape[0]
+    logw = jnp.full((k,), -np.log(k), jnp.float32)
+    mu = jnp.asarray(x[rng.choice(n, k, replace=False)], jnp.float32)
+    pchol = jnp.broadcast_to(jnp.eye(3, dtype=jnp.float32), (k, 3, 3))
+    return logw, mu, pchol
+
+
+def _sample_true_gmm3(rng, n):
+    """Three well-separated 3-D components with non-trivial covariance."""
+    means = np.array([[-4.0, 0.0, 2.0], [3.0, 3.0, -2.0], [0.0, -4.0, 4.0]])
+    a = rng.normal(size=(3, 3, 3)) * 0.3
+    covs = a @ np.transpose(a, (0, 2, 1)) + 0.3 * np.eye(3)
+    w = np.array([0.5, 0.3, 0.2])
+    idx = rng.choice(3, size=n, p=w)
+    chol = np.linalg.cholesky(covs)
+    z = rng.normal(size=(n, 3))
+    x = means[idx] + np.einsum("nde,ne->nd", chol[idx], z)
+    return x.astype(np.float32), means, w
+
+
+class TestEmStep3:
+    def test_loglik_monotone(self):
+        rng = np.random.default_rng(0)
+        x, _, _ = _sample_true_gmm3(rng, 2048)
+        x = jnp.asarray(x)
+        logw, mu, pchol = _init3(rng, np.asarray(x), 8)
+        lls = []
+        for _ in range(25):
+            logw, mu, _, pchol, ll = em_step3(x, logw, mu, pchol)
+            lls.append(float(ll))
+        # loglik reported is under *pre-step* params; after the first few
+        # steps it must be non-decreasing (EM guarantee, fp tolerance).
+        diffs = np.diff(lls[2:])
+        assert np.all(diffs > -1e-2 * np.abs(np.array(lls[3:])).clip(min=1.0))
+        assert lls[-1] > lls[0]
+
+    def test_recovers_separated_means(self):
+        rng = np.random.default_rng(1)
+        x, true_means, true_w = _sample_true_gmm3(rng, 4096)
+        x = jnp.asarray(x)
+        logw, mu, pchol = _init3(rng, np.asarray(x), 3)
+        for _ in range(60):
+            logw, mu, cchol, pchol, ll = em_step3(x, logw, mu, pchol)
+        mu = np.asarray(mu)
+        w = np.exp(np.asarray(logw))
+        # match each true mean to its closest recovered mean
+        for tm, tw in zip(true_means, true_w):
+            d = np.linalg.norm(mu - tm, axis=1)
+            j = int(np.argmin(d))
+            assert d[j] < 0.25, f"mean {tm} not recovered: {mu}"
+            assert abs(w[j] - tw) < 0.05
+
+    def test_weights_normalized_and_cchol_consistent(self):
+        rng = np.random.default_rng(2)
+        x, _, _ = _sample_true_gmm3(rng, 2048)
+        x = jnp.asarray(x)
+        logw, mu, pchol = _init3(rng, np.asarray(x), 6)
+        logw, mu, cchol, pchol, _ = em_step3(x, logw, mu, pchol)
+        np.testing.assert_allclose(np.exp(np.asarray(logw)).sum(), 1.0, rtol=1e-5)
+        # pchol must be the inverse of cchol
+        prod = np.asarray(pchol) @ np.asarray(cchol)
+        np.testing.assert_allclose(
+            prod, np.broadcast_to(np.eye(3), prod.shape), atol=2e-3
+        )
+
+    def test_closed_form_factorizations_roundtrip(self):
+        rng = np.random.default_rng(3)
+        a = rng.normal(size=(10, 3, 3)).astype(np.float32)
+        spd = a @ np.transpose(a, (0, 2, 1)) + np.eye(3, dtype=np.float32)
+        c = chol3_ref(jnp.asarray(spd))
+        np.testing.assert_allclose(
+            np.asarray(c) @ np.asarray(c).transpose(0, 2, 1), spd, rtol=1e-3, atol=1e-3
+        )
+        pc = tril3_inv_ref(c)
+        np.testing.assert_allclose(
+            np.asarray(pc) @ np.asarray(c),
+            np.broadcast_to(np.eye(3), (10, 3, 3)),
+            atol=1e-3,
+        )
+
+
+class TestEmStep1:
+    def test_recovers_bimodal(self):
+        rng = np.random.default_rng(4)
+        n = 8192
+        idx = rng.choice(2, size=n, p=[0.6, 0.4])
+        x = np.where(idx == 0, rng.normal(2.0, 0.5, n), rng.normal(7.0, 1.0, n))
+        x = jnp.asarray(x, jnp.float32)
+        k = 2
+        logw = jnp.full((k,), -np.log(k), jnp.float32)
+        mu = jnp.asarray([0.0, 10.0], jnp.float32)
+        logsd = jnp.zeros((k,), jnp.float32)
+        for _ in range(50):
+            logw, mu, logsd, ll = em_step1(x, logw, mu, logsd)
+        mu = np.sort(np.asarray(mu))
+        np.testing.assert_allclose(mu, [2.0, 7.0], atol=0.1)
+
+    def test_loglik_monotone(self):
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(np.concatenate([
+            rng.normal(0, 1, 1024), rng.normal(5, 2, 1024)
+        ]), jnp.float32)
+        k = 4
+        logw = jnp.full((k,), -np.log(k), jnp.float32)
+        mu = jnp.asarray(rng.normal(2, 3, k), jnp.float32)
+        logsd = jnp.zeros((k,), jnp.float32)
+        lls = []
+        for _ in range(30):
+            logw, mu, logsd, ll = em_step1(x, logw, mu, logsd)
+            lls.append(float(ll))
+        assert lls[-1] > lls[0]
+        diffs = np.diff(lls[2:])
+        assert np.all(diffs > -1e-2 * np.abs(np.array(lls[3:])).clip(min=1.0))
+
+
+class TestSamplers:
+    def test_pick_component_frequencies(self):
+        rng = np.random.default_rng(6)
+        w = np.array([0.1, 0.2, 0.3, 0.4], np.float32)
+        u = jnp.asarray(rng.uniform(size=200_000), jnp.float32)
+        idx = np.asarray(_pick_component(jnp.log(jnp.asarray(w)), u))
+        freq = np.bincount(idx, minlength=4) / len(idx)
+        np.testing.assert_allclose(freq, w, atol=0.01)
+
+    def test_sample3_moments(self):
+        rng = np.random.default_rng(7)
+        k = 3
+        mu = rng.normal(size=(k, 3)).astype(np.float32) * 2
+        a = rng.normal(size=(k, 3, 3)) * 0.4
+        cov = (a @ np.transpose(a, (0, 2, 1)) + 0.2 * np.eye(3)).astype(np.float32)
+        cchol = np.linalg.cholesky(cov).astype(np.float32)
+        w = np.array([0.2, 0.5, 0.3], np.float32)
+        n = 100_000
+        u = jnp.asarray(rng.uniform(size=n), jnp.float32)
+        z = jnp.asarray(rng.normal(size=(n, 3)), jnp.float32)
+        s = np.asarray(gmm_sample3(
+            jnp.log(jnp.asarray(w)), jnp.asarray(mu), jnp.asarray(cchol), u, z
+        ))
+        want_mean = (w[:, None] * mu).sum(0)
+        np.testing.assert_allclose(s.mean(0), want_mean, atol=0.05)
+        # second moment: E[xx^T] = sum_k w_k (cov_k + mu_k mu_k^T)
+        want_m2 = sum(w[k_] * (cov[k_] + np.outer(mu[k_], mu[k_])) for k_ in range(k))
+        got_m2 = (s[:, :, None] * s[:, None, :]).mean(0)
+        np.testing.assert_allclose(got_m2, want_m2, atol=0.15)
+
+    def test_sample1_moments(self):
+        rng = np.random.default_rng(8)
+        w = np.array([0.3, 0.7], np.float32)
+        mu = np.array([-2.0, 3.0], np.float32)
+        sd = np.array([0.5, 1.5], np.float32)
+        n = 200_000
+        u = jnp.asarray(rng.uniform(size=n), jnp.float32)
+        z = jnp.asarray(rng.normal(size=n), jnp.float32)
+        s = np.asarray(gmm_sample1(
+            jnp.log(jnp.asarray(w)), jnp.asarray(mu),
+            jnp.asarray(np.log(sd)), u, z,
+        ))
+        want_mean = (w * mu).sum()
+        want_var = (w * (sd**2 + mu**2)).sum() - want_mean**2
+        np.testing.assert_allclose(s.mean(), want_mean, atol=0.03)
+        np.testing.assert_allclose(s.var(), want_var, rtol=0.03)
+
+    def test_sample3_deterministic_in_inputs(self):
+        rng = np.random.default_rng(9)
+        k = 2
+        mu = jnp.zeros((k, 3), jnp.float32)
+        cchol = jnp.broadcast_to(jnp.eye(3, dtype=jnp.float32), (k, 3, 3))
+        logw = jnp.log(jnp.asarray([0.5, 0.5], jnp.float32))
+        u = jnp.asarray(rng.uniform(size=64), jnp.float32)
+        z = jnp.asarray(rng.normal(size=(64, 3)), jnp.float32)
+        s1 = np.asarray(gmm_sample3(logw, mu, cchol, u, z))
+        s2 = np.asarray(gmm_sample3(logw, mu, cchol, u, z))
+        np.testing.assert_array_equal(s1, s2)
+
+
+class TestPreprocDuration:
+    def test_matches_paper_formula(self):
+        """t = a*b**x + c + LogNormal(mu_n, sigma_n), paper Fig 9a params."""
+        rng = np.random.default_rng(10)
+        x = rng.uniform(2, 20, size=256).astype(np.float32)
+        z = rng.normal(size=256).astype(np.float32)
+        abc = np.array([0.018, 1.330, 2.156], np.float32)
+        noise = np.array([-1.0, 0.15], np.float32)
+        got = np.asarray(preproc_duration(
+            jnp.asarray(x), jnp.asarray(abc), jnp.asarray(noise), jnp.asarray(z)
+        ))
+        want = 0.018 * 1.330**x + 2.156 + np.exp(-1.0 + 0.15 * z)
+        np.testing.assert_allclose(got, want, rtol=1e-4)
+
+    def test_durations_positive_and_monotone_in_size(self):
+        x = jnp.asarray(np.linspace(2, 25, 128), jnp.float32)
+        z = jnp.zeros(128, jnp.float32)
+        abc = jnp.asarray([0.018, 1.330, 2.156], jnp.float32)
+        noise = jnp.asarray([-1.0, 0.15], jnp.float32)
+        t = np.asarray(preproc_duration(x, abc, noise, z))
+        assert np.all(t > 0)
+        assert np.all(np.diff(t) > 0)

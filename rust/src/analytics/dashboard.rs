@@ -1,0 +1,118 @@
+//! Terminal rendering of the experiment dashboard (the paper's Grafana
+//! front-end, Fig 11): parameter panel, task statistics, utilization /
+//! arrival / wait-time timelines as sparklines.
+
+use crate::coordinator::result::series;
+use crate::coordinator::ExperimentResult;
+use crate::tsdb::Agg;
+
+const SPARK_CHARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+
+/// Render a sequence of optional values as a unicode sparkline.
+pub fn sparkline(values: &[Option<f64>]) -> String {
+    let present: Vec<f64> = values.iter().flatten().cloned().collect();
+    if present.is_empty() {
+        return String::from("(no data)");
+    }
+    let lo = present.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = present.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    values
+        .iter()
+        .map(|v| match v {
+            None => ' ',
+            Some(x) => {
+                let idx = (((x - lo) / span) * 7.0).round() as usize;
+                SPARK_CHARS[idx.min(7)]
+            }
+        })
+        .collect()
+}
+
+/// Full dashboard text for an experiment result.
+pub fn render_dashboard(r: &ExperimentResult, windows: usize) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = writeln!(out, "┌─ PipeSim experiment dashboard ─ {}", r.name);
+    out.push_str(&indent(&r.summary()));
+    let width = r.horizon / windows as f64;
+
+    let mut timeline = |title: &str, measurement: &str, tag: Option<(&str, &str)>, agg: Agg| {
+        let handles = match tag {
+            Some((k, v)) => r.tsdb.find_tagged(measurement, k, v),
+            None => r.tsdb.find(measurement),
+        };
+        if handles.is_empty() {
+            return;
+        }
+        // merge all matching series into one windowed line
+        let mut merged: Vec<Option<f64>> = vec![None; windows];
+        for h in handles {
+            let w = r.tsdb.window(h, 0.0, r.horizon, width, agg);
+            for (i, wa) in w.iter().enumerate().take(windows) {
+                if let Some(v) = wa.value {
+                    merged[i] = Some(merged[i].unwrap_or(0.0) + v);
+                }
+            }
+        }
+        let vals: Vec<f64> = merged.iter().flatten().cloned().collect();
+        let (lo, hi) = if vals.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (
+                vals.iter().cloned().fold(f64::INFINITY, f64::min),
+                vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            )
+        };
+        let _ = writeln!(
+            out,
+            "│ {:<28} {}  [{:.2} … {:.2}]",
+            title,
+            sparkline(&merged),
+            lo,
+            hi
+        );
+    };
+
+    timeline("training utilization", series::UTILIZATION, Some(("resource", "training")), Agg::Mean);
+    timeline("compute utilization", series::UTILIZATION, Some(("resource", "compute")), Agg::Mean);
+    timeline("training queue length", series::QUEUE_LEN, Some(("resource", "training")), Agg::Mean);
+    timeline("pipeline arrivals", series::ARRIVALS, None, Agg::Count);
+    timeline("pipeline wait (s)", series::PIPELINE_WAIT, None, Agg::Mean);
+    timeline("wire traffic (bytes)", series::TRAFFIC, None, Agg::Sum);
+    timeline("mean model perf", series::MODEL_PERF, None, Agg::Mean);
+    out.push_str("└─\n");
+    out
+}
+
+fn indent(s: &str) -> String {
+    s.lines()
+        .map(|l| format!("│ {l}\n"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparkline_shapes() {
+        let vals: Vec<Option<f64>> = vec![Some(0.0), Some(0.5), Some(1.0), None];
+        let s = sparkline(&vals);
+        assert_eq!(s.chars().count(), 4);
+        assert!(s.starts_with('▁'));
+        assert!(s.contains('█'));
+        assert!(s.ends_with(' '));
+    }
+
+    #[test]
+    fn sparkline_empty() {
+        assert_eq!(sparkline(&[None, None]), "(no data)");
+    }
+
+    #[test]
+    fn sparkline_constant() {
+        let s = sparkline(&[Some(5.0), Some(5.0)]);
+        assert_eq!(s.chars().count(), 2);
+    }
+}

@@ -1,0 +1,288 @@
+//! Figure-data emitters: every table/figure of the paper's evaluation
+//! regenerated as CSV (the plots are one `plot <csv>` away; the *data*
+//! is what the reproduction asserts on).
+
+use crate::coordinator::result::series;
+use crate::coordinator::{ExperimentResult, SimParams};
+use crate::empirical::AnalyticsDb;
+use crate::model::{CompressionModel, Framework};
+use crate::stats::rng::Pcg64;
+use crate::tsdb::Agg;
+
+use super::qq::{qq_report, QqSeries};
+
+/// Fig 8: empirical vs synthesized asset observations in log space.
+/// Columns: `source,ln_rows,ln_cols,ln_bytes`.
+pub fn fig8_assets(db: &AnalyticsDb, params: &SimParams, n_synth: usize, seed: u64) -> String {
+    let mut out = String::from("source,ln_rows,ln_cols,ln_bytes\n");
+    for row in db.asset_log_matrix() {
+        out.push_str(&format!("empirical,{},{},{}\n", row[0], row[1], row[2]));
+    }
+    let mut rng = Pcg64::new(seed);
+    for _ in 0..n_synth {
+        let s = params.asset_gmm.sample(&mut rng);
+        out.push_str(&format!("synthesized,{},{},{}\n", s[0], s[1], s[2]));
+    }
+    out
+}
+
+/// Fig 9a: preprocess compute time vs ln(rows·cols), empirical scatter +
+/// the fitted curve. Columns: `kind,x,y`.
+pub fn fig9a_preproc(db: &AnalyticsDb, params: &SimParams, max_points: usize) -> String {
+    let mut out = String::from("kind,x,y\n");
+    let (xs, ys) = db.preproc_pairs();
+    let stride = (xs.len() / max_points.max(1)).max(1);
+    for i in (0..xs.len()).step_by(stride) {
+        out.push_str(&format!("observed,{},{}\n", xs[i], ys[i]));
+    }
+    let (lo, hi) = xs.iter().fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &x| {
+        (l.min(x), h.max(x))
+    });
+    let mut x = lo;
+    while x <= hi {
+        out.push_str(&format!("fitted,{},{}\n", x, params.preproc_curve.eval(x)));
+        x += (hi - lo) / 200.0;
+    }
+    out
+}
+
+/// Fig 9b: training-duration samples per framework, empirical vs the
+/// fitted mixture (below the 99th percentile, as the paper plots).
+/// Columns: `source,framework,duration_s`.
+pub fn fig9b_train(db: &AnalyticsDb, params: &SimParams, n_synth: usize, seed: u64) -> String {
+    let mut out = String::from("source,framework,duration_s\n");
+    let mut rng = Pcg64::new(seed);
+    for fw in [Framework::SparkML, Framework::TensorFlow] {
+        let mut emp = db.durations_for(fw);
+        emp.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p99 = crate::stats::desc::quantile_sorted(&emp, 0.99);
+        for d in emp.iter().filter(|&&d| d <= p99) {
+            out.push_str(&format!("empirical,{fw},{d}\n"));
+        }
+        let g = params.train_gmm(fw);
+        for _ in 0..n_synth {
+            let d = g.sample(&mut rng).exp();
+            if d <= p99 {
+                out.push_str(&format!("simulated,{fw},{d}\n"));
+            }
+        }
+    }
+    out
+}
+
+/// Fig 10: average arrivals per hour by hour-of-week.
+/// Columns: `hour_of_week,day,hour,arrivals_per_hour`.
+pub fn fig10_arrivals(db: &AnalyticsDb) -> String {
+    const DAYS: [&str; 7] = ["mon", "tue", "wed", "thu", "fri", "sat", "sun"];
+    let mut out = String::from("hour_of_week,day,hour,arrivals_per_hour\n");
+    for (how, rate) in db.arrivals_per_hour_of_week().iter().enumerate() {
+        out.push_str(&format!("{how},{},{},{rate}\n", DAYS[how / 24], how % 24));
+    }
+    out
+}
+
+/// Fig 11: the dashboard's windowed series of one experiment.
+/// Columns: `series,window_start_s,value`.
+pub fn fig11_dashboard(r: &ExperimentResult, window: f64) -> String {
+    let mut out = String::from("series,window_start_s,value\n");
+    let mut emit = |label: &str, measurement: &str, tag: Option<(&str, &str)>, agg: Agg| {
+        let handles = match tag {
+            Some((k, v)) => r.tsdb.find_tagged(measurement, k, v),
+            None => r.tsdb.find(measurement),
+        };
+        for h in handles {
+            for w in r.tsdb.window(h, 0.0, r.horizon, window, agg) {
+                if let Some(v) = w.value {
+                    out.push_str(&format!("{label},{},{v}\n", w.start));
+                }
+            }
+        }
+    };
+    emit("util_training", series::UTILIZATION, Some(("resource", "training")), Agg::Mean);
+    emit("util_compute", series::UTILIZATION, Some(("resource", "compute")), Agg::Mean);
+    emit("queue_training", series::QUEUE_LEN, Some(("resource", "training")), Agg::Mean);
+    emit("queue_compute", series::QUEUE_LEN, Some(("resource", "compute")), Agg::Mean);
+    emit("arrivals_per_window", series::ARRIVALS, None, Agg::Count);
+    emit("pipeline_wait_mean", series::PIPELINE_WAIT, None, Agg::Mean);
+    emit("traffic_read", series::TRAFFIC, Some(("dir", "read")), Agg::Sum);
+    emit("traffic_write", series::TRAFFIC, Some(("dir", "write")), Agg::Sum);
+    emit("model_perf", series::MODEL_PERF, None, Agg::Mean);
+    out
+}
+
+/// Extract simulated exec durations for a task stratum from a result.
+pub fn simulated_durations(
+    r: &ExperimentResult,
+    task: &str,
+    framework: Option<&str>,
+) -> Vec<f64> {
+    let mut out = Vec::new();
+    for h in r.tsdb.find_tagged(series::TASK_EXEC, "task", task) {
+        if let Some(fw) = framework {
+            if r.tsdb.key(h).tag_value("framework") != Some(fw) {
+                continue;
+            }
+        }
+        out.extend_from_slice(r.tsdb.values(h));
+    }
+    out
+}
+
+/// Simulated interarrivals from the arrivals marker series.
+pub fn simulated_interarrivals(r: &ExperimentResult) -> Vec<f64> {
+    let mut times: Vec<f64> = Vec::new();
+    for h in r.tsdb.find(series::ARRIVALS) {
+        times.extend_from_slice(&r.tsdb.series(h).times);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times.windows(2).map(|w| w[1] - w[0]).collect()
+}
+
+/// Fig 12a: Q-Q of task durations — preprocess, train × framework,
+/// evaluate — simulated (from an experiment run) vs empirical (DB).
+pub fn fig12a_qq(db: &AnalyticsDb, r: &ExperimentResult, n_q: usize) -> Vec<QqSeries> {
+    let mut out = Vec::new();
+    let (_, pre_emp) = db.preproc_pairs();
+    let pre_sim = simulated_durations(r, "preprocess", None);
+    if !pre_emp.is_empty() && !pre_sim.is_empty() {
+        out.push(qq_report("preprocess", &pre_emp, &pre_sim, n_q));
+    }
+    for fw in [
+        Framework::SparkML,
+        Framework::TensorFlow,
+        Framework::PyTorch,
+        Framework::Caffe,
+    ] {
+        let emp = db.durations_for(fw);
+        let sim = simulated_durations(r, "train", Some(fw.name()));
+        if emp.len() > 50 && sim.len() > 50 {
+            out.push(qq_report(format!("train/{fw}"), &emp, &sim, n_q));
+        }
+    }
+    let ev_emp = db.eval_durations();
+    let ev_sim = simulated_durations(r, "evaluate", None);
+    if !ev_emp.is_empty() && !ev_sim.is_empty() {
+        out.push(qq_report("evaluate", &ev_emp, &ev_sim, n_q));
+    }
+    out
+}
+
+/// Fig 12b: Q-Q of interarrivals (one result per arrival mode).
+pub fn fig12b_qq(db: &AnalyticsDb, r: &ExperimentResult, label: &str, n_q: usize) -> Option<QqSeries> {
+    let emp = db.interarrivals();
+    let sim = simulated_interarrivals(r);
+    if emp.len() > 100 && sim.len() > 100 {
+        Some(qq_report(format!("interarrival/{label}"), &emp, &sim, n_q))
+    } else {
+        None
+    }
+}
+
+/// Fig 12c: simulated vs empirical average arrivals per hour-of-week.
+/// Columns: `hour_of_week,empirical,simulated`.
+pub fn fig12c_profile(db: &AnalyticsDb, r: &ExperimentResult) -> String {
+    let emp = db.arrivals_per_hour_of_week();
+    // bucket simulated arrival times by hour-of-week
+    let mut sim = [0.0f64; 168];
+    let mut times: Vec<f64> = Vec::new();
+    for h in r.tsdb.find(series::ARRIVALS) {
+        times.extend_from_slice(&r.tsdb.series(h).times);
+    }
+    for &t in &times {
+        sim[crate::empirical::db::hour_of_week(t)] += 1.0;
+    }
+    let weeks = (r.horizon / crate::des::WEEK).max(1e-9);
+    for s in sim.iter_mut() {
+        *s /= weeks;
+    }
+    let mut out = String::from("hour_of_week,empirical,simulated\n");
+    for how in 0..168 {
+        out.push_str(&format!("{how},{},{}\n", emp[how], sim[how]));
+    }
+    out
+}
+
+/// Table I: the calibration data and the regenerated table side by side.
+pub fn table1() -> String {
+    let model = CompressionModel::from_table1();
+    let regen = model.regenerate_table1();
+    let mut out = String::from(
+        "prune_pct,gn_acc_paper,gn_acc_model,rn50_acc_paper,rn50_acc_model,\
+gn_mb_paper,gn_mb_model,rn50_mb_paper,rn50_mb_model,\
+gn_ms_paper,gn_ms_model,rn50_ms_paper,rn50_ms_model\n",
+    );
+    for (p, m) in crate::model::compression::TABLE1.iter().zip(&regen) {
+        out.push_str(&format!(
+            "{},{},{:.1},{},{:.1},{},{:.1},{},{:.1},{},{:.0},{},{:.0}\n",
+            p.prune_pct,
+            p.gn_accuracy,
+            m.gn_accuracy,
+            p.rn50_accuracy,
+            m.rn50_accuracy,
+            p.gn_size_mb,
+            m.gn_size_mb,
+            p.rn50_size_mb,
+            m.rn50_size_mb,
+            p.gn_inference_ms,
+            m.gn_inference_ms,
+            p.rn50_inference_ms,
+            m.rn50_inference_ms,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig};
+    use crate::des::DAY;
+    use crate::empirical::GroundTruth;
+
+    fn setup() -> (AnalyticsDb, SimParams, ExperimentResult) {
+        let db = GroundTruth::new(31).generate_weeks(3);
+        let params = fit_params(&db, None).unwrap();
+        let cfg = ExperimentConfig {
+            horizon: 2.0 * DAY,
+            arrival: ArrivalSpec::Random,
+            ..Default::default()
+        };
+        let r = Experiment::new(cfg, params.clone()).run().unwrap();
+        (db, params, r)
+    }
+
+    #[test]
+    fn all_figures_emit() {
+        let (db, params, r) = setup();
+        assert!(fig8_assets(&db, &params, 500, 1).lines().count() > 500);
+        assert!(fig9a_preproc(&db, &params, 500).contains("fitted,"));
+        assert!(fig9b_train(&db, &params, 500, 2).contains("tensorflow"));
+        assert_eq!(fig10_arrivals(&db).lines().count(), 169);
+        assert!(fig11_dashboard(&r, 3600.0).contains("util_training"));
+        let qq = fig12a_qq(&db, &r, 40);
+        assert!(qq.len() >= 3, "got {} strata", qq.len());
+        assert!(fig12b_qq(&db, &r, "random", 40).is_some());
+        assert_eq!(fig12c_profile(&db, &r).lines().count(), 169);
+        assert!(table1().contains("80"));
+    }
+
+    #[test]
+    fn qq_train_accuracy_reasonable() {
+        // the paper's train Q-Q is near-diagonal; require q-corr > 0.95
+        let (db, _, r) = setup();
+        let qq = fig12a_qq(&db, &r, 40);
+        let train = qq
+            .iter()
+            .find(|q| q.name.starts_with("train/sparkml"))
+            .expect("sparkml stratum");
+        assert!(train.quantile_corr > 0.95, "{}", train.verdict());
+    }
+
+    #[test]
+    fn simulated_interarrivals_extracted() {
+        let (_, _, r) = setup();
+        let gaps = simulated_interarrivals(&r);
+        assert!(gaps.len() as u64 == r.arrived - 1);
+        assert!(gaps.iter().all(|&g| g >= 0.0));
+    }
+}

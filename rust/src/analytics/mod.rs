@@ -1,0 +1,11 @@
+//! Analytics: the exploratory dashboard (Fig 11), the statistical
+//! accuracy analysis (Fig 12), and the figure-data emitters.
+
+pub mod dashboard;
+pub mod figures;
+pub mod qq;
+pub mod report;
+
+pub use dashboard::render_dashboard;
+pub use qq::{qq_report, QqSeries};
+pub use report::{Comparison, Metric};

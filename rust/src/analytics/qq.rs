@@ -1,0 +1,105 @@
+//! Simulation-accuracy analysis: Q-Q data of simulated vs empirical
+//! distributions (Fig 12a/b) plus summary statistics (KS distance,
+//! quantile correlation).
+
+use crate::stats::desc::{ks_distance, pearson, qq_points};
+
+/// One Q-Q comparison: a named stratum (task type, framework, arrival
+/// mode) with paired quantiles of empirical (x) vs simulated (y) data.
+#[derive(Clone, Debug)]
+pub struct QqSeries {
+    pub name: String,
+    /// (empirical quantile, simulated quantile) pairs.
+    pub points: Vec<(f64, f64)>,
+    /// Two-sample KS distance.
+    pub ks: f64,
+    /// Pearson correlation of the paired quantiles (1.0 = perfect).
+    pub quantile_corr: f64,
+    /// Mean relative quantile error |q_sim - q_emp| / q_emp.
+    pub mean_rel_err: f64,
+    pub n_empirical: usize,
+    pub n_simulated: usize,
+}
+
+/// Build a Q-Q comparison between empirical and simulated samples.
+pub fn qq_report(name: impl Into<String>, empirical: &[f64], simulated: &[f64], n_q: usize) -> QqSeries {
+    let points = qq_points(empirical, simulated, n_q);
+    let xs: Vec<f64> = points.iter().map(|p| p.0).collect();
+    let ys: Vec<f64> = points.iter().map(|p| p.1).collect();
+    let mean_rel_err = points
+        .iter()
+        .filter(|(x, _)| x.abs() > 1e-12)
+        .map(|(x, y)| ((y - x) / x).abs())
+        .sum::<f64>()
+        / points.len().max(1) as f64;
+    QqSeries {
+        name: name.into(),
+        ks: ks_distance(empirical, simulated),
+        quantile_corr: pearson(&xs, &ys),
+        mean_rel_err,
+        n_empirical: empirical.len(),
+        n_simulated: simulated.len(),
+        points,
+    }
+}
+
+impl QqSeries {
+    /// CSV rows: `name,empirical_q,simulated_q`.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        for (x, y) in &self.points {
+            out.push_str(&format!("{},{x},{y}\n", self.name));
+        }
+        out
+    }
+
+    /// One-line verdict used in reports.
+    pub fn verdict(&self) -> String {
+        format!(
+            "{:<24} n_emp={:<7} n_sim={:<7} KS={:.4} q-corr={:.4} rel-err={:.1}%",
+            self.name,
+            self.n_empirical,
+            self.n_simulated,
+            self.ks,
+            self.quantile_corr,
+            100.0 * self.mean_rel_err
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::dist::{Distribution, LogNormal};
+    use crate::stats::rng::Pcg64;
+
+    #[test]
+    fn identical_distributions_near_diagonal() {
+        let mut rng = Pcg64::new(1);
+        let d = LogNormal::new(2.0, 0.8);
+        let a: Vec<f64> = (0..30_000).map(|_| d.sample(&mut rng)).collect();
+        let b: Vec<f64> = (0..30_000).map(|_| d.sample(&mut rng)).collect();
+        let q = qq_report("same", &a, &b, 50);
+        assert!(q.ks < 0.02, "ks {}", q.ks);
+        assert!(q.quantile_corr > 0.999);
+        assert!(q.mean_rel_err < 0.05, "rel err {}", q.mean_rel_err);
+    }
+
+    #[test]
+    fn shifted_distribution_detected() {
+        let mut rng = Pcg64::new(2);
+        let a: Vec<f64> = (0..20_000).map(|_| LogNormal::new(2.0, 0.8).sample(&mut rng)).collect();
+        let b: Vec<f64> = (0..20_000).map(|_| LogNormal::new(2.5, 0.8).sample(&mut rng)).collect();
+        let q = qq_report("shifted", &a, &b, 50);
+        assert!(q.ks > 0.2);
+        assert!(q.mean_rel_err > 0.3);
+    }
+
+    #[test]
+    fn csv_format() {
+        let q = qq_report("x", &[1.0, 2.0, 3.0], &[1.0, 2.0, 3.0], 3);
+        let csv = q.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("x,"));
+    }
+}

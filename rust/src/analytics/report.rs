@@ -1,0 +1,243 @@
+//! Experiment comparison — the statistical-analysis-tool side of Fig 5:
+//! put N experiment results side by side and quantify the deltas that
+//! operational-strategy studies care about (wait, utilization, throughput,
+//! model quality, retraining cost).
+
+use crate::coordinator::ExperimentResult;
+
+/// One comparable metric extracted from a result.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Metric {
+    UtilTraining,
+    UtilCompute,
+    MeanWaitTraining,
+    MaxWaitTraining,
+    AvgQueueTraining,
+    CompletionRate,
+    Throughput,
+    MeanModelPerformance,
+    Retrains,
+    WirePerPipelineMb,
+}
+
+impl Metric {
+    pub const ALL: [Metric; 10] = [
+        Metric::UtilTraining,
+        Metric::UtilCompute,
+        Metric::MeanWaitTraining,
+        Metric::MaxWaitTraining,
+        Metric::AvgQueueTraining,
+        Metric::CompletionRate,
+        Metric::Throughput,
+        Metric::MeanModelPerformance,
+        Metric::Retrains,
+        Metric::WirePerPipelineMb,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::UtilTraining => "util_training",
+            Metric::UtilCompute => "util_compute",
+            Metric::MeanWaitTraining => "mean_wait_training_s",
+            Metric::MaxWaitTraining => "max_wait_training_s",
+            Metric::AvgQueueTraining => "avg_queue_training",
+            Metric::CompletionRate => "completion_rate",
+            Metric::Throughput => "pipelines_per_sim_hour",
+            Metric::MeanModelPerformance => "mean_model_perf",
+            Metric::Retrains => "retrains",
+            Metric::WirePerPipelineMb => "wire_mb_per_pipeline",
+        }
+    }
+
+    /// Extract the metric from a result.
+    pub fn of(&self, r: &ExperimentResult) -> f64 {
+        match self {
+            Metric::UtilTraining => r.util_training,
+            Metric::UtilCompute => r.util_compute,
+            Metric::MeanWaitTraining => r.wait_training.mean(),
+            Metric::MaxWaitTraining => {
+                if r.wait_training.count > 0 {
+                    r.wait_training.max
+                } else {
+                    0.0
+                }
+            }
+            Metric::AvgQueueTraining => r.avg_queue_training,
+            Metric::CompletionRate => {
+                if r.arrived == 0 {
+                    0.0
+                } else {
+                    r.completed as f64 / r.arrived as f64
+                }
+            }
+            Metric::Throughput => {
+                if r.horizon <= 0.0 {
+                    0.0
+                } else {
+                    r.completed as f64 / (r.horizon / 3600.0)
+                }
+            }
+            Metric::MeanModelPerformance => r.final_mean_performance,
+            Metric::Retrains => r.retrains_triggered as f64,
+            Metric::WirePerPipelineMb => {
+                if r.arrived == 0 {
+                    0.0
+                } else {
+                    (r.wire_read_bytes + r.wire_write_bytes) / 1e6 / r.arrived as f64
+                }
+            }
+        }
+    }
+}
+
+/// Side-by-side comparison of experiment results (first = baseline).
+pub struct Comparison<'a> {
+    pub results: Vec<&'a ExperimentResult>,
+}
+
+impl<'a> Comparison<'a> {
+    pub fn new(results: Vec<&'a ExperimentResult>) -> Self {
+        assert!(!results.is_empty());
+        Comparison { results }
+    }
+
+    /// Relative change of `metric` for result `i` vs the baseline (0).
+    pub fn delta(&self, metric: Metric, i: usize) -> f64 {
+        let base = metric.of(self.results[0]);
+        let v = metric.of(self.results[i]);
+        if base.abs() < 1e-12 {
+            if v.abs() < 1e-12 {
+                0.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            v / base - 1.0
+        }
+    }
+
+    /// Markdown-style table: rows = metrics, cols = experiments, deltas
+    /// vs the baseline in parentheses.
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let _ = write!(out, "{:<26}", "metric");
+        for r in &self.results {
+            let _ = write!(out, " {:>22}", truncate(&r.name, 22));
+        }
+        out.push('\n');
+        for m in Metric::ALL {
+            // skip all-zero rows (e.g. runtime view off)
+            if self.results.iter().all(|r| m.of(r).abs() < 1e-12) {
+                continue;
+            }
+            let _ = write!(out, "{:<26}", m.name());
+            for (i, r) in self.results.iter().enumerate() {
+                let v = m.of(r);
+                if i == 0 {
+                    let _ = write!(out, " {v:>22.3}");
+                } else {
+                    let d = self.delta(m, i);
+                    let _ = write!(out, " {:>13.3} ({:>+6.1}%)", v, 100.0 * d);
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV form: metric, then one column per experiment.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("metric");
+        for r in &self.results {
+            out.push(',');
+            out.push_str(&r.name);
+        }
+        out.push('\n');
+        for m in Metric::ALL {
+            out.push_str(m.name());
+            for r in &self.results {
+                out.push_str(&format!(",{}", m.of(r)));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn truncate(s: &str, n: usize) -> &str {
+    if s.len() <= n {
+        s
+    } else {
+        &s[..n]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig};
+    use crate::des::resource::Discipline;
+    use crate::des::DAY;
+    use crate::empirical::GroundTruth;
+
+    fn two_results() -> (ExperimentResult, ExperimentResult) {
+        let db = GroundTruth::new(55).generate_weeks(2);
+        let params = fit_params(&db, None).unwrap();
+        let mk = |name: &str, discipline| {
+            let mut cfg = ExperimentConfig {
+                name: name.into(),
+                seed: 3,
+                horizon: 2.0 * DAY,
+                arrival: ArrivalSpec::Poisson {
+                    mean_interarrival: 40.0,
+                },
+                record_traces: false,
+                ..Default::default()
+            };
+            cfg.infra.training_capacity = 3;
+            cfg.infra.discipline = discipline;
+            Experiment::new(cfg, params.clone()).run().unwrap()
+        };
+        (mk("fifo", Discipline::Fifo), mk("sjf", Discipline::ShortestJobFirst))
+    }
+
+    #[test]
+    fn comparison_quantifies_sjf_gain() {
+        let (fifo, sjf) = two_results();
+        let cmp = Comparison::new(vec![&fifo, &sjf]);
+        // SJF must reduce the mean training wait vs FIFO baseline
+        let d = cmp.delta(Metric::MeanWaitTraining, 1);
+        assert!(d < -0.2, "SJF wait delta {d}");
+        let table = cmp.render();
+        assert!(table.contains("mean_wait_training_s"));
+        assert!(table.contains("fifo") && table.contains("sjf"));
+    }
+
+    #[test]
+    fn csv_has_all_metrics() {
+        let (a, b) = two_results();
+        let cmp = Comparison::new(vec![&a, &b]);
+        let csv = cmp.to_csv();
+        assert_eq!(csv.lines().count(), Metric::ALL.len() + 1);
+        assert!(csv.starts_with("metric,fifo,sjf"));
+    }
+
+    #[test]
+    fn delta_against_zero_baseline() {
+        let (a, _) = two_results();
+        let cmp = Comparison::new(vec![&a]);
+        // retrains are zero with runtime view off
+        assert_eq!(Metric::Retrains.of(&a), 0.0);
+        assert_eq!(cmp.delta(Metric::Retrains, 0), 0.0);
+    }
+
+    #[test]
+    fn metric_extraction_sane() {
+        let (a, _) = two_results();
+        assert!(Metric::UtilTraining.of(&a) > 0.0);
+        assert!(Metric::CompletionRate.of(&a) <= 1.0);
+        assert!(Metric::Throughput.of(&a) > 0.0);
+        assert!(Metric::WirePerPipelineMb.of(&a) > 0.0);
+    }
+}

@@ -1,0 +1,281 @@
+//! Pipeline arrival processes (paper sections IV-C2, V-A3).
+//!
+//! Two modes, exactly as evaluated in Fig 12b/c:
+//! * **Random**: one interarrival distribution for the whole trace — the
+//!   paper found the exponentiated Weibull fits best.
+//! * **Realistic profile**: interarrivals clustered by hour-of-week (168
+//!   clusters); each cluster fitted with {log-normal, exp-Weibull,
+//!   Pareto} and the best SSE fit selected; at simulation time the
+//!   sampler draws from the cluster of the current simulated hour.
+//!
+//! Both support the paper's *interarrival factor* to scale load up/down.
+
+use crate::empirical::AnalyticsDb;
+use crate::error::{Error, Result};
+use crate::stats::dist::{Dist, Distribution};
+use crate::stats::fit::{fit_expweibull, select_best_fit};
+use crate::stats::rng::Pcg64;
+
+/// Subsample cap per cluster fit (keeps 52-week fits fast without
+/// hurting fidelity: >2000 points gain little for 2-3 param families).
+const CLUSTER_FIT_CAP: usize = 2000;
+
+/// An arrival process: produces the next interarrival gap given the
+/// current simulation time.
+#[derive(Clone, Debug)]
+pub enum ArrivalModel {
+    /// Single fitted distribution (paper: exp-Weibull).
+    Random(Dist),
+    /// 168 per-hour-of-week fitted distributions.
+    Profile(ArrivalProfile),
+    /// Fixed mean interarrival (exponential) — scalability experiments
+    /// (Fig 13 uses a flat 44 s interarrival).
+    Poisson { mean_interarrival: f64 },
+    /// Literal trace replay: the recorded interarrival sequence from the
+    /// analytics DB, cycled when exhausted. The purest "trace-driven"
+    /// mode — zero modeling error, at the cost of no extrapolation.
+    Replay(ReplayTrace),
+}
+
+/// Recorded interarrival gaps with a replay cursor.
+#[derive(Clone, Debug)]
+pub struct ReplayTrace {
+    pub gaps: std::rc::Rc<Vec<f64>>,
+    cursor: std::cell::Cell<usize>,
+}
+
+impl ReplayTrace {
+    pub fn new(gaps: Vec<f64>) -> Self {
+        assert!(!gaps.is_empty(), "replay trace must be non-empty");
+        ReplayTrace {
+            gaps: std::rc::Rc::new(gaps),
+            cursor: std::cell::Cell::new(0),
+        }
+    }
+
+    fn next(&self) -> f64 {
+        let i = self.cursor.get();
+        self.cursor.set((i + 1) % self.gaps.len());
+        self.gaps[i]
+    }
+}
+
+impl ArrivalModel {
+    /// Draw the next interarrival at simulated time `t`, scaled by
+    /// `factor` (>1 = fewer arrivals, the paper's interarrival factor).
+    pub fn next_interarrival(&self, t: f64, factor: f64, rng: &mut Pcg64) -> f64 {
+        let gap = match self {
+            ArrivalModel::Random(d) => d.sample(rng),
+            ArrivalModel::Profile(p) => p.sample(t, rng),
+            ArrivalModel::Poisson { mean_interarrival } => {
+                rng.exponential(1.0 / mean_interarrival)
+            }
+            ArrivalModel::Replay(trace) => trace.next(),
+        };
+        (gap * factor).max(1e-3)
+    }
+
+    /// Build a replay model from the analytics DB's recorded arrivals.
+    pub fn from_trace(db: &AnalyticsDb) -> Result<Self> {
+        let gaps: Vec<f64> = db
+            .interarrivals()
+            .into_iter()
+            .filter(|&g| g > 0.0)
+            .collect();
+        if gaps.is_empty() {
+            return Err(Error::Stats("from_trace: empty trace".into()));
+        }
+        Ok(ArrivalModel::Replay(ReplayTrace::new(gaps)))
+    }
+
+    /// Fit the random (global) model: exp-Weibull on all interarrivals.
+    pub fn fit_random(db: &AnalyticsDb) -> Result<Self> {
+        let gaps: Vec<f64> = db
+            .interarrivals()
+            .into_iter()
+            .filter(|&g| g > 0.0)
+            .collect();
+        if gaps.len() < 100 {
+            return Err(Error::Stats("fit_random: too few interarrivals".into()));
+        }
+        let d = fit_expweibull(&gaps)?;
+        Ok(ArrivalModel::Random(Dist::ExpWeibull(d)))
+    }
+
+    /// Fit the realistic 168-cluster profile.
+    pub fn fit_profile(db: &AnalyticsDb, rng: &mut Pcg64) -> Result<Self> {
+        Ok(ArrivalModel::Profile(ArrivalProfile::fit(db, rng)?))
+    }
+}
+
+/// The 168-cluster hour-of-week interarrival profile.
+#[derive(Clone, Debug)]
+pub struct ArrivalProfile {
+    /// Best-fit distribution per hour-of-week cluster.
+    pub clusters: Vec<Dist>,
+    /// SSE of the selected fit (diagnostics / reporting).
+    pub sse: Vec<f64>,
+}
+
+impl ArrivalProfile {
+    /// Cluster interarrivals by the hour-of-week of the gap's start, fit
+    /// the three candidate families per cluster, select by SSE
+    /// (section V-A3 verbatim).
+    pub fn fit(db: &AnalyticsDb, rng: &mut Pcg64) -> Result<Self> {
+        let mut by_hour = db.interarrivals_by_hour_of_week();
+        let mut clusters = Vec::with_capacity(168);
+        let mut sses = Vec::with_capacity(168);
+        // global fallback for sparse clusters
+        let all: Vec<f64> = db.interarrivals().into_iter().filter(|&g| g > 0.0).collect();
+        if all.len() < 100 {
+            return Err(Error::Stats("fit_profile: too few interarrivals".into()));
+        }
+        let (global, global_sse) = select_best_fit(&all, 40)?;
+        for cluster in by_hour.iter_mut() {
+            cluster.retain(|&g| g > 0.0);
+            if cluster.len() < 32 {
+                clusters.push(global.clone());
+                sses.push(global_sse);
+                continue;
+            }
+            if cluster.len() > CLUSTER_FIT_CAP {
+                rng.shuffle(cluster);
+                cluster.truncate(CLUSTER_FIT_CAP);
+            }
+            match select_best_fit(cluster, 30) {
+                Ok((d, sse)) => {
+                    clusters.push(d);
+                    sses.push(sse);
+                }
+                Err(_) => {
+                    clusters.push(global.clone());
+                    sses.push(global_sse);
+                }
+            }
+        }
+        Ok(ArrivalProfile {
+            clusters,
+            sse: sses,
+        })
+    }
+
+    /// Sample an interarrival from the cluster of simulated time `t`.
+    pub fn sample(&self, t: f64, rng: &mut Pcg64) -> f64 {
+        let how = crate::empirical::db::hour_of_week(t);
+        self.clusters[how].sample(rng)
+    }
+
+    /// Count of clusters per selected family (reporting).
+    pub fn family_histogram(&self) -> Vec<(String, usize)> {
+        let mut counts = std::collections::BTreeMap::new();
+        for d in &self.clusters {
+            *counts.entry(d.name().to_string()).or_insert(0usize) += 1;
+        }
+        counts.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::HOUR;
+    use crate::empirical::GroundTruth;
+
+    fn db() -> AnalyticsDb {
+        GroundTruth::new(11).generate_weeks(6)
+    }
+
+    #[test]
+    fn random_model_fits_and_samples() {
+        let db = db();
+        let m = ArrivalModel::fit_random(&db).unwrap();
+        let mut rng = Pcg64::new(1);
+        let gaps: Vec<f64> = (0..20_000)
+            .map(|_| m.next_interarrival(0.0, 1.0, &mut rng))
+            .collect();
+        let sim_mean = crate::stats::mean(&gaps);
+        let emp_mean = crate::stats::mean(&db.interarrivals());
+        // global exp-Weibull should land within 25% of the empirical mean
+        assert!(
+            (sim_mean - emp_mean).abs() / emp_mean < 0.25,
+            "sim {sim_mean} vs emp {emp_mean}"
+        );
+    }
+
+    #[test]
+    fn profile_fits_all_clusters() {
+        let db = db();
+        let mut rng = Pcg64::new(2);
+        let p = match ArrivalModel::fit_profile(&db, &mut rng).unwrap() {
+            ArrivalModel::Profile(p) => p,
+            _ => unreachable!(),
+        };
+        assert_eq!(p.clusters.len(), 168);
+        // peak hour (weekday 16:00) must have shorter interarrivals than
+        // the quietest night hour
+        let mut rng2 = Pcg64::new(3);
+        let peak: f64 = (0..4000)
+            .map(|_| p.sample(16.0 * HOUR, &mut rng2))
+            .sum::<f64>()
+            / 4000.0;
+        let night: f64 = (0..4000)
+            .map(|_| p.sample(3.0 * HOUR, &mut rng2))
+            .sum::<f64>()
+            / 4000.0;
+        assert!(peak < night, "peak {peak} !< night {night}");
+    }
+
+    #[test]
+    fn interarrival_factor_scales() {
+        let m = ArrivalModel::Poisson {
+            mean_interarrival: 10.0,
+        };
+        let mut rng = Pcg64::new(4);
+        let g1: f64 = (0..20_000).map(|_| m.next_interarrival(0.0, 1.0, &mut rng)).sum();
+        let g2: f64 = (0..20_000).map(|_| m.next_interarrival(0.0, 2.0, &mut rng)).sum();
+        assert!((g2 / g1 - 2.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn family_histogram_covers_all() {
+        let db = db();
+        let mut rng = Pcg64::new(5);
+        let p = ArrivalProfile::fit(&db, &mut rng).unwrap();
+        let total: usize = p.family_histogram().iter().map(|(_, c)| c).sum();
+        assert_eq!(total, 168);
+    }
+
+    #[test]
+    fn replay_reproduces_trace_exactly() {
+        let db = db();
+        let m = ArrivalModel::from_trace(&db).unwrap();
+        let mut rng = Pcg64::new(9);
+        let want: Vec<f64> = db.interarrivals().into_iter().filter(|&g| g > 0.0).collect();
+        for (i, &w) in want.iter().take(500).enumerate() {
+            let got = m.next_interarrival(0.0, 1.0, &mut rng);
+            assert!((got - w.max(1e-3)).abs() < 1e-12, "gap {i}");
+        }
+    }
+
+    #[test]
+    fn replay_cycles_when_exhausted() {
+        let trace = ReplayTrace::new(vec![1.0, 2.0, 3.0]);
+        let m = ArrivalModel::Replay(trace);
+        let mut rng = Pcg64::new(10);
+        let gaps: Vec<f64> = (0..7).map(|_| m.next_interarrival(0.0, 1.0, &mut rng)).collect();
+        assert_eq!(gaps, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let m = ArrivalModel::Poisson {
+            mean_interarrival: 44.0,
+        };
+        let mut rng = Pcg64::new(6);
+        let mean: f64 = (0..50_000)
+            .map(|_| m.next_interarrival(0.0, 1.0, &mut rng))
+            .sum::<f64>()
+            / 50_000.0;
+        assert!((mean - 44.0).abs() < 1.0, "{mean}");
+    }
+}

@@ -1,0 +1,218 @@
+//! Experiment configuration (TOML-loadable).
+
+use crate::des::DAY;
+use crate::error::Result;
+use crate::model::InfraConfig;
+use crate::synth::SynthConfig;
+
+use super::triggers::TriggerPolicy;
+
+/// Which arrival process drives the experiment.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalSpec {
+    /// The fitted global interarrival distribution.
+    Random,
+    /// The fitted 168-cluster hour-of-week profile.
+    Profile,
+    /// Flat exponential interarrivals (Fig 13 scalability runs).
+    Poisson { mean_interarrival: f64 },
+    /// Replay the recorded empirical arrival trace verbatim.
+    Replay,
+}
+
+/// Run-time view configuration (drift detection + automated retraining,
+/// paper section IV-A2 / Fig 7).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RuntimeViewConfig {
+    pub enabled: bool,
+    /// Detector evaluation period, seconds.
+    pub detector_interval: f64,
+    /// Mean performance decay per day (gradual drift).
+    pub decay_per_day: f64,
+    /// Probability per detector tick of a sudden concept drift.
+    pub sudden_drift_prob: f64,
+    /// Performance drop on a sudden drift event.
+    pub sudden_drift_drop: f64,
+    /// Retraining trigger policy.
+    pub trigger: TriggerPolicy,
+    /// Cap on concurrently monitored models (memory bound).
+    pub max_models: usize,
+}
+
+impl Default for RuntimeViewConfig {
+    fn default() -> Self {
+        RuntimeViewConfig {
+            enabled: false,
+            detector_interval: 6.0 * 3600.0,
+            decay_per_day: 0.004,
+            sudden_drift_prob: 0.01,
+            sudden_drift_drop: 0.08,
+            trigger: TriggerPolicy::DriftThreshold { threshold: 0.05 },
+            max_models: 2000,
+        }
+    }
+}
+
+/// Full experiment definition (the paper's "experiment and its
+/// parameters", section IV).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Experiment name (labels outputs).
+    pub name: String,
+    /// RNG seed — every run is reproducible from this.
+    pub seed: u64,
+    /// Simulated horizon in seconds.
+    pub horizon: f64,
+    pub arrival: ArrivalSpec,
+    /// Interarrival scale factor (>1 = lighter load), section VI-B.
+    pub interarrival_factor: f64,
+    pub infra: InfraConfig,
+    pub synth: SynthConfig,
+    /// Monitor sampling period (utilization/queue series), seconds.
+    pub sample_interval: f64,
+    /// Record per-task duration/wait series into the tsdb.
+    pub record_traces: bool,
+    pub runtime_view: RuntimeViewConfig,
+    /// Stop after this many pipeline arrivals (None = horizon only).
+    pub max_pipelines: Option<u64>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            seed: 1,
+            horizon: 3.0 * DAY,
+            arrival: ArrivalSpec::Profile,
+            interarrival_factor: 1.0,
+            infra: InfraConfig::default(),
+            synth: SynthConfig::default(),
+            sample_interval: 300.0,
+            record_traces: true,
+            runtime_view: RuntimeViewConfig::default(),
+            max_pipelines: None,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        use crate::util::jsonio::JsonIo;
+        Self::from_json(&crate::util::Json::parse(text)?)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::from_json_text(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn to_json_text(&self) -> String {
+        use crate::util::jsonio::JsonIo;
+        self.to_json().to_string()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.horizon <= 0.0 {
+            return Err(crate::error::Error::Config("horizon must be > 0".into()));
+        }
+        if self.interarrival_factor <= 0.0 {
+            return Err(crate::error::Error::Config(
+                "interarrival_factor must be > 0".into(),
+            ));
+        }
+        if self.sample_interval <= 0.0 {
+            return Err(crate::error::Error::Config(
+                "sample_interval must be > 0".into(),
+            ));
+        }
+        let share_sum: f64 = self.synth.framework_shares.iter().sum();
+        if (share_sum - 1.0).abs() > 1e-6 {
+            return Err(crate::error::Error::Config(format!(
+                "framework shares sum to {share_sum}, expected 1"
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = ExperimentConfig {
+            name: "rt".into(),
+            arrival: ArrivalSpec::Poisson {
+                mean_interarrival: 44.0,
+            },
+            ..Default::default()
+        };
+        let text = cfg.to_json_text();
+        let back = ExperimentConfig::from_json_text(&text).unwrap();
+        assert_eq!(back.name, "rt");
+        assert_eq!(
+            back.arrival,
+            ArrivalSpec::Poisson {
+                mean_interarrival: 44.0
+            }
+        );
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.horizon = -1.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.interarrival_factor = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.synth.framework_shares = [1.0, 1.0, 0.0, 0.0, 0.0];
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn json_example_parses() {
+        let text = r#"{
+            "name": "peak-load",
+            "seed": 7,
+            "horizon": 259200.0,
+            "arrival": {"mode": "profile"},
+            "interarrival_factor": 0.5,
+            "infra": {
+                "training_capacity": 6,
+                "compute_capacity": 12,
+                "discipline": "fifo",
+                "store": {"read_bw": 4e8, "write_bw": 2.5e8,
+                           "latency": 0.05, "tcp_overhead": 1.06}
+            },
+            "synth": {
+                "framework_shares": [0.63, 0.32, 0.03, 0.01, 0.01],
+                "p_preprocess": 0.55, "p_evaluate": 0.7, "p_compress": 0.1,
+                "p_harden": 0.05, "p_reevaluate": 0.8, "p_transfer": 0.05,
+                "p_deploy": 0.8
+            },
+            "sample_interval": 300.0,
+            "record_traces": true,
+            "runtime_view": {
+                "enabled": true,
+                "detector_interval": 21600.0,
+                "decay_per_day": 0.004,
+                "sudden_drift_prob": 0.01,
+                "sudden_drift_drop": 0.08,
+                "trigger": {"policy": "drift_threshold", "threshold": 0.05},
+                "max_models": 500
+            }
+        }"#;
+        let cfg = ExperimentConfig::from_json_text(text).unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.infra.training_capacity, 6);
+        assert!(cfg.runtime_view.enabled);
+        assert_eq!(cfg.max_pipelines, None);
+    }
+}

@@ -1,0 +1,794 @@
+//! The discrete-event experiment runner — PipeSim's simulator core
+//! (paper section V-B) on the Rust DES substrate.
+//!
+//! Each pipeline execution is a small state machine over the calendar:
+//! arrival → per task: request resource (queue if saturated) →
+//! read → exec → write → release → next task → completion. Durations come
+//! from the fitted statistical models, batch-sampled through the AOT
+//! artifacts. The optional run-time view ages deployed models and feeds
+//! retraining pipelines back into the arrival stream (Fig 7).
+
+use std::rc::Rc;
+
+use crate::arrivals::ArrivalModel;
+use crate::des::{AcquireResult, Calendar, Resource, SimTime};
+use crate::error::Result;
+use crate::model::pipeline::TaskNode;
+use crate::model::{
+    CompressionModel, DataAsset, Framework, ModelMetrics, ResourceKind, TaskExecutor, TaskType,
+};
+use crate::runtime::pool::{Backend, SamplePool1};
+use crate::runtime::{Runtime, K1};
+use crate::stats::gmm::Gmm1;
+use crate::stats::rng::Pcg64;
+use crate::synth::{AssetSynthesizer, PipelineSynthesizer, TaskList};
+use crate::tsdb::{SeriesHandle, SeriesKey, TsStore};
+
+use super::config::{ArrivalSpec, ExperimentConfig};
+use super::params::SimParams;
+use super::result::{rss_mb, series, ExperimentResult};
+use super::triggers::DeployedModel;
+
+/// Calendar events.
+#[derive(Clone, Copy, Debug)]
+enum Event {
+    /// Next pipeline arrival (self-rescheduling).
+    Arrival,
+    /// Task of pipeline `pid` finished (exec + write done).
+    TaskDone(u32),
+    /// Periodic utilization/queue sampling.
+    Monitor,
+    /// Run-time view detector sweep.
+    Drift,
+    /// Launch a (possibly deferred) retraining for deployed-model slot.
+    RetrainLaunch(u32),
+}
+
+/// Per-pipeline execution state (slab-allocated, freed on completion so
+/// memory scales with *concurrent*, not total, pipelines).
+struct PipelineState {
+    tasks: TaskList,
+    cur: usize,
+    framework: Framework,
+    asset: DataAsset,
+    preproc_t: f64,
+    /// Last sampled training duration (drives compress/harden cost).
+    train_t: f64,
+    metrics: ModelMetrics,
+    model_bytes: f64,
+    arrived_at: SimTime,
+    total_wait: SimTime,
+    /// Sampled exec duration for the task awaiting a resource grant.
+    pending_exec: f64,
+    pending_read: f64,
+    pending_write: f64,
+    /// Deployed-model slot to refresh when this (retraining) run deploys.
+    retrain_of: Option<u32>,
+    /// User priority (lower = more important; Fig 4's "model
+    /// prioritization"). Retraining pipelines get priority 0.
+    priority: f64,
+}
+
+/// An experiment: config + fitted parameters (+ optional PJRT runtime).
+pub struct Experiment {
+    cfg: ExperimentConfig,
+    params: SimParams,
+    runtime: Option<Rc<Runtime>>,
+}
+
+impl Experiment {
+    pub fn new(cfg: ExperimentConfig, params: SimParams) -> Self {
+        Experiment {
+            cfg,
+            params,
+            runtime: None,
+        }
+    }
+
+    /// Use the AOT artifacts for all simulation-time sampling.
+    pub fn with_runtime(mut self, rt: Option<Rc<Runtime>>) -> Self {
+        self.runtime = rt;
+        self
+    }
+
+    /// Run to completion; single-threaded, deterministic per seed.
+    pub fn run(self) -> Result<ExperimentResult> {
+        let started = std::time::Instant::now();
+        let cfg = self.cfg;
+        cfg.validate()?;
+        let params = self.params;
+        let backend = match &self.runtime {
+            Some(rt) => Backend::Runtime(rt.clone()),
+            None => Backend::Cpu,
+        };
+
+        let mut root = Pcg64::new(cfg.seed);
+        let mut rng_arrival = root.substream(1);
+        let rng_pipe = root.substream(2);
+        let mut rng_asset = root.substream(3);
+        let mut rng_noise = root.substream(4);
+        let mut rng_drift = root.substream(5);
+
+        // --- samplers -------------------------------------------------
+        let mut asset_synth = AssetSynthesizer::new(
+            backend.clone(),
+            params.asset_gmm.clone(),
+            params.preproc_curve,
+            params.preproc_noise,
+            &mut rng_asset,
+        );
+        let mut pipe_synth = PipelineSynthesizer::new(cfg.synth.clone(), rng_pipe);
+        let mut train_pools: Vec<SamplePool1> = Framework::ALL
+            .iter()
+            .map(|fw| {
+                SamplePool1::new(
+                    backend.clone(),
+                    pad_gmm(params.train_gmm(*fw)),
+                    root.substream(0x100 + fw.index() as u64),
+                )
+            })
+            .collect();
+        let mut eval_pool = SamplePool1::new(
+            backend.clone(),
+            pad_gmm(&params.eval_log_gmm),
+            root.substream(0x200),
+        );
+        let arrival = match cfg.arrival {
+            ArrivalSpec::Random => params.arrival_random.clone(),
+            ArrivalSpec::Profile => params.arrival_profile.clone(),
+            ArrivalSpec::Replay => params.arrival_replay.clone(),
+            ArrivalSpec::Poisson { mean_interarrival } => {
+                ArrivalModel::Poisson { mean_interarrival }
+            }
+        };
+        let compression = CompressionModel::from_table1();
+
+        // --- world ----------------------------------------------------
+        let mut cal: Calendar<Event> = Calendar::new();
+        let mut training: Resource<u32> =
+            Resource::with_discipline("training", cfg.infra.training_capacity, cfg.infra.discipline);
+        let mut compute: Resource<u32> =
+            Resource::with_discipline("compute", cfg.infra.compute_capacity, cfg.infra.discipline);
+        let mut slab: Vec<Option<PipelineState>> = Vec::new();
+        let mut free: Vec<u32> = Vec::new();
+        let mut deployed: Vec<DeployedModel> = Vec::new();
+        let mut db = TsStore::new();
+
+        // interned hot-path series
+        let h_arrivals = db.handle(SeriesKey::new(series::ARRIVALS));
+        let h_completions = db.handle(SeriesKey::new(series::COMPLETIONS));
+        let h_pipeline_wait = db.handle(SeriesKey::new(series::PIPELINE_WAIT));
+        let h_util_t = db.handle(SeriesKey::new(series::UTILIZATION).tag("resource", "training"));
+        let h_util_c = db.handle(SeriesKey::new(series::UTILIZATION).tag("resource", "compute"));
+        let h_q_t = db.handle(SeriesKey::new(series::QUEUE_LEN).tag("resource", "training"));
+        let h_q_c = db.handle(SeriesKey::new(series::QUEUE_LEN).tag("resource", "compute"));
+        let h_wait_t = db.handle(SeriesKey::new(series::TASK_WAIT).tag("resource", "training"));
+        let h_wait_c = db.handle(SeriesKey::new(series::TASK_WAIT).tag("resource", "compute"));
+        let h_traffic_r = db.handle(SeriesKey::new(series::TRAFFIC).tag("dir", "read"));
+        let h_traffic_w = db.handle(SeriesKey::new(series::TRAFFIC).tag("dir", "write"));
+        let h_model_perf = db.handle(SeriesKey::new(series::MODEL_PERF));
+        let h_retrains = db.handle(SeriesKey::new(series::RETRAINS));
+        // task exec series per (task, framework)
+        let mut h_exec: std::collections::HashMap<(TaskType, Option<Framework>), SeriesHandle> =
+            std::collections::HashMap::new();
+
+        // --- counters ---------------------------------------------------
+        let mut arrived: u64 = 0;
+        let mut live: u64 = 0; // pipelines in flight (slab occupancy)
+        let mut arrivals_stopped = false;
+        let mut completed: u64 = 0;
+        let mut tasks_executed: u64 = 0;
+        let mut gate_failures: u64 = 0;
+        let mut retrains: u64 = 0;
+        let mut models_deployed: u64 = 0;
+        let mut events: u64 = 0;
+        let mut wire_read = 0.0f64;
+        let mut wire_write = 0.0f64;
+        let mut peak_rss = rss_mb();
+
+        // helpers -------------------------------------------------------
+        macro_rules! resource_for {
+            ($kind:expr) => {
+                match $kind {
+                    ResourceKind::Training => &mut training,
+                    ResourceKind::Compute => &mut compute,
+                }
+            };
+        }
+
+        macro_rules! alloc_pid {
+            ($st:expr) => {{
+                if let Some(pid) = free.pop() {
+                    slab[pid as usize] = Some($st);
+                    pid
+                } else {
+                    slab.push(Some($st));
+                    (slab.len() - 1) as u32
+                }
+            }};
+        }
+
+        // sample the exec duration for the current task of `st`
+        macro_rules! sample_exec {
+            ($st:expr) => {{
+                let task = $st.tasks.get($st.cur).task;
+                match task {
+                    TaskType::Preprocess => $st.preproc_t,
+                    TaskType::Train => {
+                        let fw = $st.tasks.get($st.cur).framework.unwrap_or($st.framework);
+                        let d = train_pools[fw.index()].next()?.exp().max(0.1);
+                        $st.train_t = d;
+                        d
+                    }
+                    TaskType::Evaluate => eval_pool.next()?.exp().max(0.05),
+                    // compression costs roughly a training run (section V-A2d)
+                    TaskType::Compress => {
+                        ($st.train_t * (1.0 + 0.05 * rng_noise.normal())).max(0.1)
+                    }
+                    TaskType::Harden => {
+                        ($st.train_t * (1.5 + 0.2 * rng_noise.normal())).max(0.1)
+                    }
+                    TaskType::Deploy => (5.0 * (0.3 * rng_noise.normal()).exp()).max(0.5),
+                }
+            }};
+        }
+
+        // prepare pending durations and request the resource
+        macro_rules! start_task {
+            ($pid:expr) => {{
+                let t_now = cal.now();
+                let st = slab[$pid as usize].as_mut().expect("live pipeline");
+                let node = st.tasks.get(st.cur);
+                let exec = sample_exec!(st);
+                let (read_b, write_b) =
+                    TaskExecutor::payload_bytes(node.task, &st.asset, st.model_bytes);
+                st.pending_exec = exec;
+                st.pending_read = cfg.infra.store.read_time(read_b);
+                st.pending_write = cfg.infra.store.write_time(write_b);
+                wire_read += cfg.infra.store.wire_bytes(read_b);
+                wire_write += cfg.infra.store.wire_bytes(write_b);
+                if cfg.record_traces {
+                    db.append(h_traffic_r, t_now, cfg.infra.store.wire_bytes(read_b));
+                    db.append(h_traffic_w, t_now, cfg.infra.store.wire_bytes(write_b));
+                }
+                let kind = ResourceKind::for_task(node.task);
+                let total = st.pending_read + st.pending_exec + st.pending_write;
+                // the waiter key depends on the operational strategy:
+                // SJF orders by expected occupancy, Priority by the
+                // pipeline's user priority
+                let key = match cfg.infra.discipline {
+                    crate::des::resource::Discipline::ShortestJobFirst => total,
+                    crate::des::resource::Discipline::Priority => st.priority,
+                    crate::des::resource::Discipline::Fifo => 0.0,
+                };
+                let res = resource_for!(kind);
+                match res.request(t_now, $pid, key) {
+                    AcquireResult::Acquired => {
+                        cal.schedule(total, Event::TaskDone($pid));
+                    }
+                    AcquireResult::Queued => {}
+                }
+            }};
+        }
+
+        // --- prime the calendar ---------------------------------------
+        let first_gap = arrival.next_interarrival(0.0, cfg.interarrival_factor, &mut rng_arrival);
+        cal.schedule(first_gap, Event::Arrival);
+        cal.schedule(cfg.sample_interval, Event::Monitor);
+        if cfg.runtime_view.enabled {
+            cal.schedule(cfg.runtime_view.detector_interval, Event::Drift);
+        }
+
+        // --- main loop --------------------------------------------------
+        while let Some((t, ev)) = cal.pop() {
+            if t > cfg.horizon {
+                break;
+            }
+            events += 1;
+            match ev {
+                Event::Arrival => {
+                    arrived += 1;
+                    db.append(h_arrivals, t, 1.0);
+                    // next arrival
+                    let stop = cfg.max_pipelines.map_or(false, |m| arrived >= m);
+                    if !stop {
+                        let gap = arrival.next_interarrival(
+                            t,
+                            cfg.interarrival_factor,
+                            &mut rng_arrival,
+                        );
+                        if t + gap <= cfg.horizon {
+                            cal.schedule(gap, Event::Arrival);
+                        } else {
+                            arrivals_stopped = true;
+                        }
+                    } else {
+                        arrivals_stopped = true;
+                    }
+                    // new pipeline
+                    let tasks = pipe_synth.generate_nodes();
+                    let fw = tasks
+                        .as_slice()
+                        .iter()
+                        .find_map(|n| n.framework)
+                        .unwrap_or(Framework::SparkML);
+                    let (asset, preproc_t) = asset_synth.next()?;
+                    let st = PipelineState {
+                        tasks,
+                        cur: 0,
+                        framework: fw,
+                        asset,
+                        preproc_t,
+                        train_t: 60.0,
+                        metrics: ModelMetrics::default(),
+                        model_bytes: 1e7,
+                        arrived_at: t,
+                        total_wait: 0.0,
+                        pending_exec: 0.0,
+                        pending_read: 0.0,
+                        pending_write: 0.0,
+                        retrain_of: None,
+                        // user-assigned priority class 1..=10
+                        priority: 1.0 + rng_noise.below(10) as f64,
+                    };
+                    let pid = alloc_pid!(st);
+                    live += 1;
+                    start_task!(pid);
+                }
+
+                Event::TaskDone(pid) => {
+                    tasks_executed += 1;
+                    // release + grant next waiter
+                    let (task, fw_tag, exec_dur, kind) = {
+                        let st = slab[pid as usize].as_ref().expect("live");
+                        let node = st.tasks.get(st.cur);
+                        (
+                            node.task,
+                            node.framework,
+                            st.pending_exec,
+                            ResourceKind::for_task(node.task),
+                        )
+                    };
+                    let granted = {
+                        let res = resource_for!(kind);
+                        res.release(t)
+                    };
+                    if let Some(g) = granted {
+                        let w = slab[g.token as usize].as_mut().expect("queued pipeline");
+                        w.total_wait += g.waited;
+                        if cfg.record_traces {
+                            let h = match kind {
+                                ResourceKind::Training => h_wait_t,
+                                ResourceKind::Compute => h_wait_c,
+                            };
+                            db.append(h, t, g.waited);
+                        }
+                        let total = w.pending_read + w.pending_exec + w.pending_write;
+                        cal.schedule(total, Event::TaskDone(g.token));
+                    }
+                    if cfg.record_traces {
+                        let h = *h_exec.entry((task, fw_tag)).or_insert_with(|| {
+                            let mut key =
+                                SeriesKey::new(series::TASK_EXEC).tag("task", task.name());
+                            if let Some(fw) = fw_tag {
+                                key = key.tag("framework", fw.name());
+                            }
+                            db.handle(key)
+                        });
+                        db.append(h, t, exec_dur);
+                    }
+
+                    // task-specific model-metric effects
+                    let mut truncated = false;
+                    {
+                        let st = slab[pid as usize].as_mut().expect("live");
+                        match task {
+                            TaskType::Train => {
+                                let laws = &params.model_laws;
+                                st.metrics.performance = (laws.perf_mean
+                                    + laws.perf_sd * rng_noise.normal())
+                                .clamp(0.05, 0.999);
+                                st.metrics.size_mb = (laws.size_ln_mean
+                                    + laws.size_ln_sd * rng_noise.normal())
+                                .exp();
+                                st.metrics.inference_ms = (laws.inference_ln_mean
+                                    + laws.inference_ln_sd * rng_noise.normal())
+                                .exp();
+                                st.metrics.clever_score =
+                                    rng_noise.uniform() * laws.clever_max;
+                                st.metrics.confidence = st.metrics.performance
+                                    * (0.9 + 0.1 * rng_noise.uniform());
+                                st.model_bytes = st.metrics.size_mb * 1e6;
+                            }
+                            TaskType::Compress => {
+                                let prune = 0.2 + 0.6 * rng_noise.uniform();
+                                st.metrics = compression.apply(prune, &st.metrics);
+                                st.model_bytes = st.metrics.size_mb * 1e6;
+                            }
+                            TaskType::Harden => {
+                                st.metrics.clever_score =
+                                    (st.metrics.clever_score * 1.5).min(5.0);
+                                st.metrics.performance *= 0.99;
+                            }
+                            TaskType::Evaluate => {
+                                // quality gate: pipelines whose model fails
+                                // are aborted (Fig 3's gates)
+                                if st.metrics.performance < 0.55 {
+                                    truncated = true;
+                                }
+                            }
+                            TaskType::Deploy => {
+                                if cfg.runtime_view.enabled {
+                                    if let Some(slot) = st.retrain_of {
+                                        deployed[slot as usize]
+                                            .redeploy(t, st.metrics.performance);
+                                    } else if deployed.len() < cfg.runtime_view.max_models {
+                                        deployed.push(DeployedModel::new(
+                                            models_deployed,
+                                            st.framework,
+                                            st.metrics.performance,
+                                            t,
+                                            1,
+                                        ));
+                                    }
+                                    models_deployed += 1;
+                                }
+                            }
+                            TaskType::Preprocess => {}
+                        }
+                    }
+
+                    // advance or complete
+                    let done = {
+                        let st = slab[pid as usize].as_mut().expect("live");
+                        st.cur += 1;
+                        truncated || st.cur >= st.tasks.len()
+                    };
+                    if done {
+                        let st = slab[pid as usize].take().expect("live");
+                        free.push(pid);
+                        live -= 1;
+                        completed += 1;
+                        if truncated {
+                            gate_failures += 1;
+                        }
+                        db.append(h_completions, t, t - st.arrived_at);
+                        db.append(h_pipeline_wait, t, st.total_wait);
+                        if let (Some(slot), true) = (st.retrain_of, truncated) {
+                            // failed retraining: allow future triggers
+                            deployed[slot as usize].retraining = false;
+                        }
+                    } else {
+                        start_task!(pid);
+                    }
+                }
+
+                Event::Monitor => {
+                    db.append(h_util_t, t, training.in_use() as f64 / training.capacity() as f64);
+                    db.append(h_util_c, t, compute.in_use() as f64 / compute.capacity() as f64);
+                    db.append(h_q_t, t, training.queued() as f64);
+                    db.append(h_q_c, t, compute.queued() as f64);
+                    if !deployed.is_empty() {
+                        let mean: f64 = deployed.iter().map(|m| m.performance).sum::<f64>()
+                            / deployed.len() as f64;
+                        db.append(h_model_perf, t, mean);
+                    }
+                    let rss = rss_mb();
+                    if rss > peak_rss {
+                        peak_rss = rss;
+                    }
+                    // stop sampling once the system has fully drained —
+                    // otherwise a max_pipelines run with a far horizon
+                    // would tick forever
+                    let drained = arrivals_stopped && live == 0;
+                    if !drained && t + cfg.sample_interval <= cfg.horizon {
+                        cal.schedule(cfg.sample_interval, Event::Monitor);
+                    }
+                }
+
+                Event::Drift => {
+                    let rv = &cfg.runtime_view;
+                    for slot in 0..deployed.len() {
+                        let m = &mut deployed[slot];
+                        m.tick(
+                            t,
+                            rv.decay_per_day,
+                            rv.sudden_drift_prob,
+                            rv.sudden_drift_drop,
+                            &mut rng_drift,
+                        );
+                        if m.retraining {
+                            continue;
+                        }
+                        if let Some(delay) = rv.trigger.decide(t, m.drift) {
+                            m.retraining = true;
+                            cal.schedule(delay, Event::RetrainLaunch(slot as u32));
+                        }
+                    }
+                    let drained = arrivals_stopped && live == 0 && deployed.is_empty();
+                    if !drained && t + rv.detector_interval <= cfg.horizon {
+                        cal.schedule(rv.detector_interval, Event::Drift);
+                    }
+                }
+
+                Event::RetrainLaunch(slot) => {
+                    retrains += 1;
+                    db.append(h_retrains, t, 1.0);
+                    let fw = deployed[slot as usize].framework;
+                    let (asset, preproc_t) = asset_synth.next()?;
+                    // retraining pipeline: train – evaluate – deploy
+                    let st = PipelineState {
+                        tasks: TaskList::from_slice(&[
+                            TaskNode::with_framework(TaskType::Train, fw),
+                            TaskNode::new(TaskType::Evaluate),
+                            TaskNode::new(TaskType::Deploy),
+                        ]),
+                        cur: 0,
+                        framework: fw,
+                        asset,
+                        preproc_t,
+                        train_t: 60.0,
+                        metrics: ModelMetrics::default(),
+                        model_bytes: 1e7,
+                        arrived_at: t,
+                        total_wait: 0.0,
+                        pending_exec: 0.0,
+                        pending_read: 0.0,
+                        pending_write: 0.0,
+                        retrain_of: Some(slot),
+                        priority: 0.0, // retrains jump the queue
+                    };
+                    arrived += 1;
+                    db.append(h_arrivals, t, 1.0);
+                    let pid = alloc_pid!(st);
+                    live += 1;
+                    start_task!(pid);
+                }
+            }
+        }
+
+        let horizon_covered = cal.now().min(cfg.horizon);
+        let final_perf = if deployed.is_empty() {
+            0.0
+        } else {
+            deployed.iter().map(|m| m.performance).sum::<f64>() / deployed.len() as f64
+        };
+        let pool_refills = train_pools.iter().map(|p| p.refills).sum::<u64>() + eval_pool.refills;
+        Ok(ExperimentResult {
+            name: cfg.name,
+            seed: cfg.seed,
+            horizon: horizon_covered,
+            arrived,
+            completed,
+            tasks_executed,
+            gate_failures,
+            retrains_triggered: retrains,
+            models_deployed,
+            events_processed: events,
+            util_training: training.utilization(horizon_covered),
+            util_compute: compute.utilization(horizon_covered),
+            wait_training: training.wait_stats.clone(),
+            wait_compute: compute.wait_stats.clone(),
+            avg_queue_training: training.avg_queue_len(horizon_covered),
+            avg_queue_compute: compute.avg_queue_len(horizon_covered),
+            final_mean_performance: final_perf,
+            wire_read_bytes: wire_read,
+            wire_write_bytes: wire_write,
+            wall_secs: started.elapsed().as_secs_f64(),
+            peak_rss_mb: peak_rss,
+            sampler_backend: backend.name().into(),
+            pool_refills,
+            tsdb: db,
+        })
+    }
+}
+
+/// Pad a fitted mixture to exactly K1 components (the AOT sampler's fixed
+/// shape); extra components get -inf-ish weight.
+fn pad_gmm(g: &Gmm1) -> Gmm1 {
+    if g.k() == K1 {
+        return g.clone();
+    }
+    let mut out = Gmm1 {
+        logw: vec![-60.0; K1],
+        mu: vec![0.0; K1],
+        logsd: vec![0.0; K1],
+    };
+    for i in 0..g.k().min(K1) {
+        out.logw[i] = g.logw[i];
+        out.mu[i] = g.mu[i];
+        out.logsd[i] = g.logsd[i];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::RuntimeViewConfig;
+    use crate::coordinator::fit_params;
+    use crate::coordinator::TriggerPolicy;
+    use crate::des::DAY;
+    use crate::empirical::GroundTruth;
+
+    fn quick_params() -> SimParams {
+        let db = GroundTruth::new(21).generate_weeks(3);
+        fit_params(&db, None).unwrap()
+    }
+
+    fn run_with(cfg: ExperimentConfig) -> ExperimentResult {
+        Experiment::new(cfg, quick_params()).run().unwrap()
+    }
+
+    #[test]
+    fn one_day_run_completes_pipelines() {
+        let cfg = ExperimentConfig {
+            horizon: DAY,
+            arrival: ArrivalSpec::Poisson {
+                mean_interarrival: 120.0,
+            },
+            ..Default::default()
+        };
+        let r = run_with(cfg);
+        assert!(r.arrived > 400, "arrived {}", r.arrived);
+        // most pipelines finish within the day at this load
+        assert!(r.completed as f64 > 0.85 * r.arrived as f64,
+            "completed {} of {}", r.completed, r.arrived);
+        assert!(r.tasks_executed > r.completed);
+        assert!(r.util_training > 0.0 && r.util_training <= 1.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = ExperimentConfig {
+            horizon: DAY / 2.0,
+            seed: 99,
+            arrival: ArrivalSpec::Poisson {
+                mean_interarrival: 100.0,
+            },
+            ..Default::default()
+        };
+        let a = run_with(cfg.clone());
+        let b = run_with(cfg);
+        assert_eq!(a.arrived, b.arrived);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.events_processed, b.events_processed);
+        assert!((a.util_training - b.util_training).abs() < 1e-12);
+    }
+
+    #[test]
+    fn saturation_builds_queues() {
+        let mut cfg = ExperimentConfig {
+            horizon: DAY,
+            arrival: ArrivalSpec::Poisson {
+                mean_interarrival: 20.0,
+            },
+            ..Default::default()
+        };
+        cfg.infra.training_capacity = 2;
+        let r = run_with(cfg);
+        assert!(
+            r.util_training > 0.9,
+            "training saturated: {}",
+            r.util_training
+        );
+        assert!(r.wait_training.mean() > 0.0);
+        assert!(r.avg_queue_training > 0.5, "{}", r.avg_queue_training);
+    }
+
+    #[test]
+    fn conservation_arrived_completed_inflight() {
+        let cfg = ExperimentConfig {
+            horizon: DAY / 4.0,
+            arrival: ArrivalSpec::Poisson {
+                mean_interarrival: 60.0,
+            },
+            ..Default::default()
+        };
+        let r = run_with(cfg);
+        assert!(r.completed <= r.arrived);
+        // whatever didn't complete is still queued/running: bounded
+        assert!(r.arrived - r.completed < 2000);
+    }
+
+    #[test]
+    fn runtime_view_triggers_retrains() {
+        let cfg = ExperimentConfig {
+            horizon: 7.0 * DAY,
+            arrival: ArrivalSpec::Poisson {
+                mean_interarrival: 600.0,
+            },
+            runtime_view: RuntimeViewConfig {
+                enabled: true,
+                detector_interval: 3600.0,
+                decay_per_day: 0.05,
+                sudden_drift_prob: 0.05,
+                sudden_drift_drop: 0.1,
+                trigger: TriggerPolicy::DriftThreshold { threshold: 0.04 },
+                max_models: 500,
+            },
+            ..Default::default()
+        };
+        let r = run_with(cfg);
+        assert!(r.models_deployed > 10, "deployed {}", r.models_deployed);
+        assert!(r.retrains_triggered > 5, "retrains {}", r.retrains_triggered);
+        assert!(r.final_mean_performance > 0.3);
+    }
+
+    #[test]
+    fn never_policy_lets_models_decay() {
+        let mk = |policy| ExperimentConfig {
+            horizon: 10.0 * DAY,
+            seed: 5,
+            arrival: ArrivalSpec::Poisson {
+                mean_interarrival: 900.0,
+            },
+            runtime_view: RuntimeViewConfig {
+                enabled: true,
+                detector_interval: 3600.0,
+                decay_per_day: 0.03,
+                sudden_drift_prob: 0.02,
+                sudden_drift_drop: 0.1,
+                trigger: policy,
+                max_models: 300,
+            },
+            ..Default::default()
+        };
+        let never = run_with(mk(TriggerPolicy::Never));
+        let eager = run_with(mk(TriggerPolicy::DriftThreshold { threshold: 0.03 }));
+        assert_eq!(never.retrains_triggered, 0);
+        assert!(
+            eager.final_mean_performance > never.final_mean_performance + 0.05,
+            "retraining must preserve performance: {} vs {}",
+            eager.final_mean_performance,
+            never.final_mean_performance
+        );
+    }
+
+    #[test]
+    fn max_pipelines_caps_arrivals() {
+        let cfg = ExperimentConfig {
+            horizon: 30.0 * DAY,
+            arrival: ArrivalSpec::Poisson {
+                mean_interarrival: 10.0,
+            },
+            max_pipelines: Some(500),
+            ..Default::default()
+        };
+        let r = run_with(cfg);
+        assert_eq!(r.arrived, 500);
+    }
+
+    #[test]
+    fn traces_recorded_when_enabled() {
+        let cfg = ExperimentConfig {
+            horizon: DAY / 2.0,
+            arrival: ArrivalSpec::Poisson {
+                mean_interarrival: 120.0,
+            },
+            ..Default::default()
+        };
+        let r = run_with(cfg);
+        assert!(!r.tsdb.find(series::TASK_EXEC).is_empty());
+        assert!(!r.tsdb.find(series::ARRIVALS).is_empty());
+        assert!(!r.tsdb.find(series::UTILIZATION).is_empty());
+        // train exec series tagged by framework
+        let train_series = r.tsdb.find_tagged(series::TASK_EXEC, "task", "train");
+        assert!(!train_series.is_empty());
+    }
+
+    #[test]
+    fn trace_recording_off_shrinks_store() {
+        let mk = |record| ExperimentConfig {
+            horizon: DAY / 2.0,
+            record_traces: record,
+            arrival: ArrivalSpec::Poisson {
+                mean_interarrival: 60.0,
+            },
+            ..Default::default()
+        };
+        let with = run_with(mk(true));
+        let without = run_with(mk(false));
+        assert!(without.tsdb.num_points() < with.tsdb.num_points() / 2);
+    }
+}

@@ -1,0 +1,16 @@
+//! The experimentation coordinator: fitted simulation parameters, the
+//! experiment configuration, the discrete-event experiment runner, and the
+//! operational strategies (queue disciplines + retraining trigger
+//! policies) the paper's framework exists to evaluate.
+
+pub mod config;
+pub mod experiment;
+pub mod params;
+pub mod result;
+pub mod triggers;
+
+pub use config::{ArrivalSpec, ExperimentConfig, RuntimeViewConfig};
+pub use experiment::Experiment;
+pub use params::{fit_params, fit_params_with_report, FitReport, SimParams};
+pub use result::ExperimentResult;
+pub use triggers::TriggerPolicy;

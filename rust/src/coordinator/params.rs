@@ -1,0 +1,320 @@
+//! Fitted simulation parameters — the "modeled system" of Fig 5.
+//!
+//! `fit_params` is PipeSim's data-acquisition pipeline (paper section
+//! V-A): it queries the analytics DB, fits every statistical model the
+//! simulator samples from, and packages them as a serializable
+//! [`SimParams`]. The mixture fits run through the AOT EM artifacts when
+//! a [`Runtime`] is supplied (the production path) and fall back to the
+//! identical pure-Rust EM otherwise.
+
+use std::rc::Rc;
+
+use crate::arrivals::ArrivalModel;
+use crate::empirical::AnalyticsDb;
+use crate::error::{Error, Result};
+use crate::model::Framework;
+use crate::runtime::{fit_gmm1, fit_gmm3, Runtime, K1, K3};
+use crate::stats::dist::LogNormal;
+use crate::stats::fit::{fit_exp_curve, fit_lognormal};
+use crate::stats::gmm::{Gmm1, Gmm3};
+use crate::stats::rng::Pcg64;
+use crate::stats::ExpCurve;
+
+/// Materialization laws for trained-model metrics (section V-B b: "sample
+/// from the distribution of performance values historically observed").
+#[derive(Clone, Debug)]
+pub struct ModelLaws {
+    /// Mean/σ of the initial composite performance p(M).
+    pub perf_mean: f64,
+    pub perf_sd: f64,
+    /// ln-space mean/σ of model size in MB.
+    pub size_ln_mean: f64,
+    pub size_ln_sd: f64,
+    /// ln-space mean/σ of inference latency in ms.
+    pub inference_ln_mean: f64,
+    pub inference_ln_sd: f64,
+    /// CLEVER score range.
+    pub clever_max: f64,
+}
+
+impl Default for ModelLaws {
+    fn default() -> Self {
+        ModelLaws {
+            perf_mean: 0.82,
+            perf_sd: 0.07,
+            size_ln_mean: 42.5f64.ln(), // GoogleNet-class median, Table I
+            size_ln_sd: 0.9,
+            inference_ln_mean: 128f64.ln(),
+            inference_ln_sd: 0.5,
+            clever_max: 2.0,
+        }
+    }
+}
+
+/// Everything the simulator samples from.
+#[derive(Clone, Debug)]
+pub struct SimParams {
+    /// 50-component full-covariance mixture over ln(rows, cols, bytes).
+    pub asset_gmm: Gmm3,
+    /// Per-framework K1-component mixtures over ln(train seconds).
+    pub train_log_gmm: Vec<Gmm1>,
+    /// Mixture over ln(evaluate seconds).
+    pub eval_log_gmm: Gmm1,
+    /// Preprocess duration curve f(x) = a·bˣ + c over x = ln(rows·cols).
+    pub preproc_curve: ExpCurve,
+    /// Additive log-normal noise around the curve.
+    pub preproc_noise: LogNormal,
+    /// Global interarrival fit (Fig 12b "random").
+    pub arrival_random: ArrivalModel,
+    /// 168-cluster hour-of-week profile (Fig 12b/c "realistic").
+    pub arrival_profile: ArrivalModel,
+    /// Literal recorded-trace replay (zero modeling error baseline).
+    pub arrival_replay: ArrivalModel,
+    /// Mean interarrival seconds observed in the DB.
+    pub mean_interarrival: f64,
+    /// Model-metric materialization laws.
+    pub model_laws: ModelLaws,
+}
+
+/// Fit diagnostics surfaced to the CLI / EXPERIMENTS.md.
+#[derive(Clone, Debug, Default)]
+pub struct FitReport {
+    pub backend: String,
+    pub asset_rows: usize,
+    pub asset_loglik: f64,
+    pub asset_iters: usize,
+    pub train_rows: Vec<(String, usize)>,
+    pub preproc_curve: Option<ExpCurve>,
+    pub profile_families: Vec<(String, usize)>,
+    pub wall_secs: f64,
+}
+
+impl SimParams {
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        use crate::util::jsonio::JsonIo;
+        self.save_json(path)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        use crate::util::jsonio::JsonIo;
+        Self::load_json(path)
+    }
+
+    pub fn train_gmm(&self, fw: Framework) -> &Gmm1 {
+        &self.train_log_gmm[fw.index()]
+    }
+}
+
+/// Fit all simulation parameters from the analytics database.
+///
+/// `runtime`: pass the loaded PJRT runtime to fit through the AOT EM
+/// artifacts; `None` uses the pure-Rust EM baseline.
+pub fn fit_params(db: &AnalyticsDb, runtime: Option<Rc<Runtime>>) -> Result<SimParams> {
+    fit_params_with_report(db, runtime).map(|(p, _)| p)
+}
+
+/// Like [`fit_params`] but also returns fit diagnostics.
+pub fn fit_params_with_report(
+    db: &AnalyticsDb,
+    runtime: Option<Rc<Runtime>>,
+) -> Result<(SimParams, FitReport)> {
+    let started = std::time::Instant::now();
+    let mut rng = Pcg64::new(0x5EED_F177);
+    let mut report = FitReport {
+        backend: runtime.as_ref().map_or("cpu", |_| "pjrt").to_string(),
+        ..Default::default()
+    };
+
+    // --- asset mixture (section V-A1, Fig 8) -------------------------
+    let log_assets = db.asset_log_matrix();
+    if log_assets.len() < K3 {
+        return Err(Error::Stats(format!(
+            "fit_params: only {} plausible assets",
+            log_assets.len()
+        )));
+    }
+    report.asset_rows = log_assets.len();
+    let asset_gmm = match &runtime {
+        Some(rt) => {
+            let (g, ll, iters) = fit_gmm3(rt, &log_assets, &mut rng, 60, 1e-6)?;
+            report.asset_loglik = ll;
+            report.asset_iters = iters;
+            g
+        }
+        None => {
+            let (g, ll) = crate::runtime::fitter::fit_gmm3_cpu(&log_assets, K3, &mut rng, 60, 1e-6)?;
+            report.asset_loglik = ll;
+            g
+        }
+    };
+
+    // --- per-framework train duration mixtures (section V-A2b, Fig 9b)
+    let mut train_log_gmm = Vec::with_capacity(Framework::ALL.len());
+    for fw in Framework::ALL {
+        let durs: Vec<f64> = db
+            .durations_for(fw)
+            .into_iter()
+            .filter(|&d| d > 0.0)
+            .map(|d| d.ln())
+            .collect();
+        report.train_rows.push((fw.to_string(), durs.len()));
+        let g = fit_log_mixture(&durs, &runtime, &mut rng)?;
+        train_log_gmm.push(g);
+    }
+
+    // --- evaluation durations (section V-A2c) ------------------------
+    let eval_logs: Vec<f64> = db
+        .eval_durations()
+        .into_iter()
+        .filter(|&d| d > 0.0)
+        .map(|d| d.ln())
+        .collect();
+    let eval_log_gmm = fit_log_mixture(&eval_logs, &runtime, &mut rng)?;
+
+    // --- preprocess curve + noise (section V-A2a, Fig 9a) ------------
+    let (xs, ys) = db.preproc_pairs();
+    if xs.len() < 16 {
+        return Err(Error::Stats("fit_params: too few preprocess traces".into()));
+    }
+    let preproc_curve = fit_exp_curve(&xs, &ys)?;
+    let residuals: Vec<f64> = xs
+        .iter()
+        .zip(&ys)
+        .map(|(&x, &y)| y - preproc_curve.eval(x))
+        .filter(|&r| r > 1e-6)
+        .collect();
+    let preproc_noise = if residuals.len() > 32 {
+        fit_lognormal(&residuals)?
+    } else {
+        LogNormal::new(-1.0, 0.15)
+    };
+    report.preproc_curve = Some(preproc_curve);
+
+    // --- arrivals (section V-A3, Figs 10/12) --------------------------
+    let arrival_random = ArrivalModel::fit_random(db)?;
+    let arrival_profile = ArrivalModel::fit_profile(db, &mut rng)?;
+    if let ArrivalModel::Profile(p) = &arrival_profile {
+        report.profile_families = p.family_histogram();
+    }
+    let arrival_replay = ArrivalModel::from_trace(db)?;
+    let gaps = db.interarrivals();
+    let mean_interarrival = crate::stats::mean(&gaps).max(1e-3);
+
+    report.wall_secs = started.elapsed().as_secs_f64();
+    Ok((
+        SimParams {
+            asset_gmm,
+            train_log_gmm,
+            eval_log_gmm,
+            preproc_curve,
+            preproc_noise,
+            arrival_random,
+            arrival_profile,
+            arrival_replay,
+            mean_interarrival,
+            model_laws: ModelLaws::default(),
+        },
+        report,
+    ))
+}
+
+fn fit_log_mixture(
+    logs: &[f64],
+    runtime: &Option<Rc<Runtime>>,
+    rng: &mut Pcg64,
+) -> Result<Gmm1> {
+    if logs.len() < K1 {
+        // degenerate stratum: single flat component around the mean
+        let m = crate::stats::mean(logs);
+        return Ok(Gmm1 {
+            logw: vec![0.0],
+            mu: vec![if m.is_finite() { m } else { 3.0 }],
+            logsd: vec![0.0],
+        });
+    }
+    match runtime {
+        Some(rt) => {
+            let (g, _, _) = fit_gmm1(rt, logs, rng, 80, 1e-7)?;
+            Ok(g)
+        }
+        None => {
+            let (g, _) = crate::runtime::fitter::fit_gmm1_cpu(logs, K1, rng, 80, 1e-7);
+            Ok(g)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::empirical::GroundTruth;
+
+    fn fitted() -> SimParams {
+        let db = GroundTruth::new(3).generate_weeks(4);
+        fit_params(&db, None).unwrap()
+    }
+
+    #[test]
+    fn fit_recovers_duration_medians() {
+        let p = fitted();
+        let mut rng = Pcg64::new(1);
+        // sample train durations for SparkML and TF and compare medians
+        let mut med = |fw: Framework| {
+            let g = p.train_gmm(fw);
+            let mut xs: Vec<f64> = (0..20_000).map(|_| g.sample(&mut rng).exp()).collect();
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            xs[xs.len() / 2]
+        };
+        let spark = med(Framework::SparkML);
+        let tf = med(Framework::TensorFlow);
+        assert!((5.0..20.0).contains(&spark), "spark median {spark}");
+        assert!((100.0..320.0).contains(&tf), "tf median {tf}");
+    }
+
+    #[test]
+    fn fit_recovers_preproc_curve() {
+        let p = fitted();
+        // ground truth: a=0.018 b=1.330 c=2.156
+        assert!((p.preproc_curve.b - 1.330).abs() < 0.02, "b={}", p.preproc_curve.b);
+        assert!((p.preproc_curve.c - 2.156).abs() < 0.4, "c={}", p.preproc_curve.c);
+    }
+
+    #[test]
+    fn fit_interarrival_mean_close_to_db() {
+        let db = GroundTruth::new(5).generate_weeks(4);
+        let p = fit_params(&db, None).unwrap();
+        let want = crate::stats::mean(&db.interarrivals());
+        assert!((p.mean_interarrival - want).abs() / want < 1e-9);
+        // sampled interarrivals from the random model within 25%
+        let mut rng = Pcg64::new(2);
+        let sim: f64 = (0..20_000)
+            .map(|_| p.arrival_random.next_interarrival(0.0, 1.0, &mut rng))
+            .sum::<f64>()
+            / 20_000.0;
+        assert!((sim - want).abs() / want < 0.25, "sim {sim} want {want}");
+    }
+
+    #[test]
+    fn params_roundtrip_json() {
+        let p = fitted();
+        let path = std::env::temp_dir().join("pipesim_params_test.json");
+        p.save(&path).unwrap();
+        let back = SimParams::load(&path).unwrap();
+        assert_eq!(back.train_log_gmm.len(), 5);
+        assert!((back.preproc_curve.b - p.preproc_curve.b).abs() < 1e-12);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn report_populated() {
+        let db = GroundTruth::new(6).generate_weeks(4);
+        let (_, report) = fit_params_with_report(&db, None).unwrap();
+        assert_eq!(report.backend, "cpu");
+        assert!(report.asset_rows > 500);
+        assert_eq!(report.train_rows.len(), 5);
+        assert_eq!(
+            report.profile_families.iter().map(|(_, c)| c).sum::<usize>(),
+            168
+        );
+    }
+}

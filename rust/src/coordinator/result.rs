@@ -1,0 +1,222 @@
+//! Experiment results: counters, summaries, and the trace store.
+
+use crate::stats::Summary;
+use crate::tsdb::TsStore;
+
+/// Canonical series names recorded by the experiment runner.
+pub mod series {
+    /// Resource slot utilization sample, tag `resource`.
+    pub const UTILIZATION: &str = "utilization";
+    /// Queue length sample, tag `resource`.
+    pub const QUEUE_LEN: &str = "queue_len";
+    /// Task execution (compute) duration, tags `task` (+ `framework`).
+    pub const TASK_EXEC: &str = "task_exec";
+    /// Time spent queued for a resource, tag `resource`.
+    pub const TASK_WAIT: &str = "task_wait";
+    /// Pipeline arrival marker (value 1).
+    pub const ARRIVALS: &str = "arrivals";
+    /// Pipeline completion marker (value = makespan seconds).
+    pub const COMPLETIONS: &str = "completions";
+    /// Total queueing wait accumulated by a completed pipeline.
+    pub const PIPELINE_WAIT: &str = "pipeline_wait";
+    /// Store wire traffic bytes, tag `dir` = read|write.
+    pub const TRAFFIC: &str = "traffic";
+    /// Mean performance over deployed models (monitor tick).
+    pub const MODEL_PERF: &str = "model_perf_mean";
+    /// Retraining launches (value 1).
+    pub const RETRAINS: &str = "retrains";
+}
+
+/// Everything an experiment run produces.
+pub struct ExperimentResult {
+    pub name: String,
+    pub seed: u64,
+    /// Simulated horizon actually covered (seconds).
+    pub horizon: f64,
+    /// The trace store (series listed in [`series`]).
+    pub tsdb: TsStore,
+    // counters
+    pub arrived: u64,
+    pub completed: u64,
+    pub tasks_executed: u64,
+    pub gate_failures: u64,
+    pub retrains_triggered: u64,
+    pub models_deployed: u64,
+    pub events_processed: u64,
+    // resource outcomes
+    pub util_training: f64,
+    pub util_compute: f64,
+    pub wait_training: Summary,
+    pub wait_compute: Summary,
+    pub avg_queue_training: f64,
+    pub avg_queue_compute: f64,
+    // model quality (runtime view)
+    pub final_mean_performance: f64,
+    // traffic
+    pub wire_read_bytes: f64,
+    pub wire_write_bytes: f64,
+    // engine accounting
+    pub wall_secs: f64,
+    pub peak_rss_mb: f64,
+    pub sampler_backend: String,
+    pub pool_refills: u64,
+}
+
+impl ExperimentResult {
+    /// events/sec of simulated execution.
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.events_processed as f64 / self.wall_secs
+    }
+
+    /// Wall-clock microseconds per simulated pipeline (Fig 13 headline).
+    pub fn us_per_pipeline(&self) -> f64 {
+        if self.arrived == 0 {
+            return 0.0;
+        }
+        self.wall_secs * 1e6 / self.arrived as f64
+    }
+
+    /// Human-readable run summary (the dashboard's stat panel, Fig 11).
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        use std::fmt::Write;
+        let _ = writeln!(s, "experiment '{}' (seed {})", self.name, self.seed);
+        let _ = writeln!(
+            s,
+            "  horizon          {:.2} days ({:.0} s)",
+            self.horizon / 86400.0,
+            self.horizon
+        );
+        let _ = writeln!(
+            s,
+            "  pipelines        arrived {}  completed {}  gate-failed {}",
+            self.arrived, self.completed, self.gate_failures
+        );
+        let _ = writeln!(
+            s,
+            "  tasks            {} executed, {} events total",
+            self.tasks_executed, self.events_processed
+        );
+        let _ = writeln!(
+            s,
+            "  utilization      training {:.1}%  compute {:.1}%",
+            100.0 * self.util_training,
+            100.0 * self.util_compute
+        );
+        let _ = writeln!(
+            s,
+            "  queue wait       training mean {:.1}s max {:.1}s | compute mean {:.1}s max {:.1}s",
+            self.wait_training.mean(),
+            if self.wait_training.count > 0 { self.wait_training.max } else { 0.0 },
+            self.wait_compute.mean(),
+            if self.wait_compute.count > 0 { self.wait_compute.max } else { 0.0 },
+        );
+        let _ = writeln!(
+            s,
+            "  avg queue len    training {:.2}  compute {:.2}",
+            self.avg_queue_training, self.avg_queue_compute
+        );
+        let _ = writeln!(
+            s,
+            "  traffic          read {:.2} GB  write {:.2} GB (incl. TCP overhead)",
+            self.wire_read_bytes / 1e9,
+            self.wire_write_bytes / 1e9
+        );
+        if self.models_deployed > 0 {
+            let _ = writeln!(
+                s,
+                "  runtime view     {} deployed, {} retrains, mean p(M) {:.3}",
+                self.models_deployed, self.retrains_triggered, self.final_mean_performance
+            );
+        }
+        let _ = writeln!(
+            s,
+            "  engine           {:.2}s wall, {:.0} events/s, {:.1} µs/pipeline, {} sampler ({} refills), peak RSS {:.0} MB",
+            self.wall_secs,
+            self.events_per_sec(),
+            self.us_per_pipeline(),
+            self.sampler_backend,
+            self.pool_refills,
+            self.peak_rss_mb
+        );
+        s
+    }
+}
+
+/// Current resident set size of this process in MB (Linux), 0 elsewhere.
+pub fn rss_mb() -> f64 {
+    if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
+        for line in status.lines() {
+            if let Some(rest) = line.strip_prefix("VmRSS:") {
+                let kb: f64 = rest
+                    .trim()
+                    .trim_end_matches("kB")
+                    .trim()
+                    .parse()
+                    .unwrap_or(0.0);
+                return kb / 1024.0;
+            }
+        }
+    }
+    0.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empty_result() -> ExperimentResult {
+        ExperimentResult {
+            name: "t".into(),
+            seed: 1,
+            horizon: 86400.0,
+            tsdb: TsStore::new(),
+            arrived: 100,
+            completed: 90,
+            tasks_executed: 300,
+            gate_failures: 2,
+            retrains_triggered: 0,
+            models_deployed: 0,
+            events_processed: 1000,
+            util_training: 0.5,
+            util_compute: 0.25,
+            wait_training: Summary::new(),
+            wait_compute: Summary::new(),
+            avg_queue_training: 0.1,
+            avg_queue_compute: 0.0,
+            final_mean_performance: 0.0,
+            wire_read_bytes: 1e9,
+            wire_write_bytes: 5e8,
+            wall_secs: 0.5,
+            peak_rss_mb: 100.0,
+            sampler_backend: "cpu".into(),
+            pool_refills: 3,
+        }
+    }
+
+    #[test]
+    fn rates() {
+        let r = empty_result();
+        assert_eq!(r.events_per_sec(), 2000.0);
+        assert_eq!(r.us_per_pipeline(), 5000.0);
+    }
+
+    #[test]
+    fn summary_contains_key_stats() {
+        let s = empty_result().summary();
+        assert!(s.contains("arrived 100"));
+        assert!(s.contains("training 50.0%"));
+        assert!(s.contains("µs/pipeline"));
+    }
+
+    #[test]
+    fn rss_readable_on_linux() {
+        let mb = rss_mb();
+        if cfg!(target_os = "linux") {
+            assert!(mb > 1.0, "rss {mb}");
+        }
+    }
+}

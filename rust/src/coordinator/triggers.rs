@@ -1,0 +1,220 @@
+//! Run-time view: deployed models, drift processes, detectors, and the
+//! retraining trigger policies (paper sections III-A, IV-A2, Fig 7).
+//!
+//! A deployed model's performance p(M) degrades over time — gradual decay
+//! plus sudden concept-drift events (Fig 2). A detector evaluates each
+//! model periodically; when the configured trigger rule fires, a
+//! retraining pipeline is scheduled. The *policy* deciding when to fire
+//! is the operational strategy under study (Fig 4): retrain eagerly, on a
+//! drift threshold, or deferred into predicted low-load hours.
+
+use crate::des::SimTime;
+use crate::empirical::db::hour_of_week;
+use crate::empirical::GroundTruth;
+use crate::stats::rng::Pcg64;
+
+/// When does a drifting model get retrained?
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TriggerPolicy {
+    /// Retrain at every detector tick (the wasteful baseline the paper's
+    /// section III-B warns about).
+    Eager,
+    /// Retrain when the drift metric exceeds a threshold (Fig 7's rule).
+    DriftThreshold { threshold: f64 },
+    /// Drift threshold + defer the launch into the next predicted
+    /// low-load hour (uses the arrival-profile intensity forecast).
+    OffPeak {
+        threshold: f64,
+        /// Launch only in hours with forecast intensity below this.
+        max_intensity: f64,
+    },
+    /// Never retrain (ablation lower bound).
+    Never,
+}
+
+impl TriggerPolicy {
+    /// Decide at detector time `t`: `None` = don't retrain, `Some(delay)`
+    /// = schedule the retraining pipeline after `delay` seconds.
+    pub fn decide(&self, t: SimTime, drift: f64) -> Option<SimTime> {
+        match *self {
+            TriggerPolicy::Eager => Some(0.0),
+            TriggerPolicy::Never => None,
+            TriggerPolicy::DriftThreshold { threshold } => {
+                (drift >= threshold).then_some(0.0)
+            }
+            TriggerPolicy::OffPeak {
+                threshold,
+                max_intensity,
+            } => {
+                if drift < threshold {
+                    return None;
+                }
+                Some(delay_to_off_peak(t, max_intensity))
+            }
+        }
+    }
+}
+
+/// Seconds until the next hour whose forecast arrival intensity is below
+/// `max_intensity` (0 if the current hour already is).
+pub fn delay_to_off_peak(t: SimTime, max_intensity: f64) -> SimTime {
+    for ahead in 0..168 {
+        let how = (hour_of_week(t) + ahead) % 168;
+        if GroundTruth::intensity(how) <= max_intensity {
+            if ahead == 0 {
+                return 0.0;
+            }
+            // start of that hour
+            let hour_start = (t / 3600.0).floor() * 3600.0 + ahead as f64 * 3600.0;
+            return hour_start - t;
+        }
+    }
+    0.0 // no hour qualifies: fire now rather than starve
+}
+
+/// A deployed model being monitored by the run-time view.
+#[derive(Clone, Debug)]
+pub struct DeployedModel {
+    pub model_id: u64,
+    pub framework: crate::model::Framework,
+    /// Performance at deployment.
+    pub initial_performance: f64,
+    /// Current composite performance p(M).
+    pub performance: f64,
+    /// Accumulated drift metric (detector output).
+    pub drift: f64,
+    pub deployed_at: SimTime,
+    pub last_tick: SimTime,
+    /// Version in the retraining lineage.
+    pub version: u32,
+    /// Is a retraining for this model already in flight?
+    pub retraining: bool,
+}
+
+impl DeployedModel {
+    pub fn new(
+        model_id: u64,
+        framework: crate::model::Framework,
+        performance: f64,
+        t: SimTime,
+        version: u32,
+    ) -> Self {
+        DeployedModel {
+            model_id,
+            framework,
+            initial_performance: performance,
+            performance,
+            drift: 0.0,
+            deployed_at: t,
+            last_tick: t,
+            version,
+            retraining: false,
+        }
+    }
+
+    /// Advance the drift process to time `t` (one detector tick):
+    /// gradual decay + stochastic sudden drops + detector noise.
+    pub fn tick(
+        &mut self,
+        t: SimTime,
+        decay_per_day: f64,
+        sudden_prob: f64,
+        sudden_drop: f64,
+        rng: &mut Pcg64,
+    ) {
+        let dt_days = (t - self.last_tick) / 86_400.0;
+        self.last_tick = t;
+        let mut drop = decay_per_day * dt_days;
+        if rng.uniform() < sudden_prob {
+            drop += sudden_drop * (0.5 + rng.uniform());
+        }
+        self.performance = (self.performance - drop).max(0.0);
+        // detector measures staleness with a little observation noise
+        let staleness = (self.initial_performance - self.performance).max(0.0);
+        self.drift = (staleness + 0.005 * rng.normal()).max(0.0);
+    }
+
+    /// Refresh after a completed retraining deployment.
+    pub fn redeploy(&mut self, t: SimTime, performance: f64) {
+        self.version += 1;
+        self.initial_performance = performance;
+        self.performance = performance;
+        self.drift = 0.0;
+        self.deployed_at = t;
+        self.last_tick = t;
+        self.retraining = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Framework;
+
+    #[test]
+    fn eager_always_fires() {
+        assert_eq!(TriggerPolicy::Eager.decide(0.0, 0.0), Some(0.0));
+    }
+
+    #[test]
+    fn never_never_fires() {
+        assert_eq!(TriggerPolicy::Never.decide(0.0, 9.9), None);
+    }
+
+    #[test]
+    fn threshold_gates_on_drift() {
+        let p = TriggerPolicy::DriftThreshold { threshold: 0.05 };
+        assert_eq!(p.decide(0.0, 0.01), None);
+        assert_eq!(p.decide(0.0, 0.08), Some(0.0));
+    }
+
+    #[test]
+    fn off_peak_defers_to_quiet_hours() {
+        let p = TriggerPolicy::OffPeak {
+            threshold: 0.05,
+            max_intensity: 0.5,
+        };
+        // Monday 16:00 is the peak -> must defer
+        let t_peak = 16.0 * 3600.0;
+        let delay = p.decide(t_peak, 0.10).unwrap();
+        assert!(delay > 0.0, "must defer from the peak hour");
+        // landing hour must be quiet
+        let landing = hour_of_week(t_peak + delay);
+        assert!(GroundTruth::intensity(landing) <= 0.5);
+        // Monday 03:00 is already quiet -> immediate
+        assert_eq!(p.decide(3.0 * 3600.0, 0.10), Some(0.0));
+    }
+
+    #[test]
+    fn drift_process_decays_performance() {
+        let mut m = DeployedModel::new(1, Framework::TensorFlow, 0.9, 0.0, 1);
+        let mut rng = Pcg64::new(1);
+        // 30 days of 6-hour ticks with no sudden drift
+        for i in 1..=120 {
+            m.tick(i as f64 * 21_600.0, 0.004, 0.0, 0.0, &mut rng);
+        }
+        let expected = 0.9 - 0.004 * 30.0;
+        assert!((m.performance - expected).abs() < 1e-9);
+        assert!(m.drift > 0.05, "drift metric accumulated: {}", m.drift);
+    }
+
+    #[test]
+    fn sudden_drift_drops_fast() {
+        let mut m = DeployedModel::new(1, Framework::SparkML, 0.9, 0.0, 1);
+        let mut rng = Pcg64::new(2);
+        m.tick(3600.0, 0.0, 1.0, 0.1, &mut rng); // forced sudden event
+        assert!(m.performance < 0.86);
+    }
+
+    #[test]
+    fn redeploy_resets() {
+        let mut m = DeployedModel::new(1, Framework::SparkML, 0.9, 0.0, 1);
+        let mut rng = Pcg64::new(3);
+        m.tick(86_400.0, 0.05, 0.0, 0.0, &mut rng);
+        m.redeploy(100_000.0, 0.88);
+        assert_eq!(m.version, 2);
+        assert_eq!(m.performance, 0.88);
+        assert_eq!(m.drift, 0.0);
+        assert!(!m.retraining);
+    }
+}

@@ -1,0 +1,178 @@
+//! Calendar event queue: a binary heap keyed by (time, sequence).
+//!
+//! The sequence number makes event ordering fully deterministic: two
+//! events scheduled for the same instant fire in scheduling order, which
+//! is what makes simulations reproducible bit-for-bit across runs.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::SimTime;
+
+struct Entry<E> {
+    time: SimTime,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .expect("NaN sim time")
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Priority queue of future events of type `E`.
+pub struct Calendar<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+    now: SimTime,
+}
+
+impl<E> Default for Calendar<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> Calendar<E> {
+    pub fn new() -> Self {
+        Calendar {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0.0,
+        }
+    }
+
+    /// Current simulation time (the time of the last popped event).
+    #[inline]
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Schedule `event` at absolute time `t`. `t` must not be in the past.
+    pub fn schedule_at(&mut self, t: SimTime, event: E) {
+        debug_assert!(t >= self.now, "scheduling into the past: {t} < {}", self.now);
+        debug_assert!(!t.is_nan());
+        self.heap.push(Entry {
+            time: t,
+            seq: self.seq,
+            event,
+        });
+        self.seq += 1;
+    }
+
+    /// Schedule `event` after a non-negative `delay` from now.
+    #[inline]
+    pub fn schedule(&mut self, delay: SimTime, event: E) {
+        debug_assert!(delay >= 0.0, "negative delay {delay}");
+        self.schedule_at(self.now + delay, event);
+    }
+
+    /// Pop the next event, advancing the clock to its time.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        self.heap.pop().map(|e| {
+            debug_assert!(e.time >= self.now);
+            self.now = e.time;
+            (e.time, e.event)
+        })
+    }
+
+    /// Time of the next event without popping it.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Total events ever scheduled (the sequence counter).
+    pub fn scheduled_total(&self) -> u64 {
+        self.seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut c = Calendar::new();
+        c.schedule_at(3.0, "c");
+        c.schedule_at(1.0, "a");
+        c.schedule_at(2.0, "b");
+        assert_eq!(c.pop().unwrap(), (1.0, "a"));
+        assert_eq!(c.pop().unwrap(), (2.0, "b"));
+        assert_eq!(c.pop().unwrap(), (3.0, "c"));
+        assert!(c.pop().is_none());
+    }
+
+    #[test]
+    fn fifo_tie_break() {
+        let mut c = Calendar::new();
+        for i in 0..100 {
+            c.schedule_at(5.0, i);
+        }
+        for i in 0..100 {
+            assert_eq!(c.pop().unwrap(), (5.0, i));
+        }
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut c = Calendar::new();
+        c.schedule(10.0, ());
+        c.schedule(5.0, ());
+        assert_eq!(c.now(), 0.0);
+        let (t1, _) = c.pop().unwrap();
+        assert_eq!(t1, 5.0);
+        assert_eq!(c.now(), 5.0);
+        c.schedule(1.0, ()); // relative to now=5
+        let (t2, _) = c.pop().unwrap();
+        assert_eq!(t2, 6.0);
+        let (t3, _) = c.pop().unwrap();
+        assert_eq!(t3, 10.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduling into the past")]
+    #[cfg(debug_assertions)]
+    fn rejects_past_scheduling() {
+        let mut c = Calendar::new();
+        c.schedule_at(10.0, ());
+        c.pop();
+        c.schedule_at(5.0, ());
+    }
+
+    #[test]
+    fn peek_does_not_advance() {
+        let mut c = Calendar::new();
+        c.schedule_at(7.0, ());
+        assert_eq!(c.peek_time(), Some(7.0));
+        assert_eq!(c.now(), 0.0);
+        assert_eq!(c.len(), 1);
+    }
+}

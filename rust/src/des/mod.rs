@@ -1,0 +1,25 @@
+//! Discrete-event simulation core.
+//!
+//! The substrate replacing SimPy (paper section V-B): a calendar event
+//! queue with deterministic FIFO tie-breaking, shared resources with job
+//! capacity and wait queues (SimPy's `Resource` semantics), and
+//! time-weighted monitors for utilization/queue statistics.
+//!
+//! The core is engine-agnostic: it knows nothing about pipelines. The
+//! experiment runner in [`crate::coordinator`] drives the loop.
+
+pub mod calendar;
+pub mod monitor;
+pub mod resource;
+
+pub use calendar::Calendar;
+pub use monitor::{Counter, TimeWeighted};
+pub use resource::{AcquireResult, Resource};
+
+/// Simulated time in seconds since experiment start.
+pub type SimTime = f64;
+
+/// Seconds in an hour/day/week — used throughout arrival profiles.
+pub const HOUR: SimTime = 3600.0;
+pub const DAY: SimTime = 24.0 * HOUR;
+pub const WEEK: SimTime = 7.0 * DAY;

@@ -1,0 +1,262 @@
+//! The analytics database: record tables and the query layer the fitting
+//! pipeline runs against (the paper's "we run queries on this database and
+//! fit different statistical distributions on the extracted data").
+
+use crate::des::{HOUR, WEEK};
+use crate::error::Result;
+use crate::model::Framework;
+
+/// One training-job event (the paper uses training-job arrivals as the
+/// proxy for pipeline arrivals, section V-A3).
+#[derive(Clone, Copy, Debug)]
+pub struct JobRecord {
+    /// Arrival time, seconds since epoch start of the trace.
+    pub t: f64,
+    pub framework: Framework,
+    /// Compute duration in seconds.
+    pub duration: f64,
+}
+
+/// Metadata of one data asset processed by the platform.
+#[derive(Clone, Copy, Debug)]
+pub struct AssetRecord {
+    pub rows: f64,
+    pub cols: f64,
+    pub bytes: f64,
+}
+
+/// One data-preprocessing trace: asset dimensions + compute time.
+#[derive(Clone, Copy, Debug)]
+pub struct PreprocRecord {
+    pub rows: f64,
+    pub cols: f64,
+    pub duration: f64,
+}
+
+/// One model-evaluation trace.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalRecord {
+    pub duration: f64,
+}
+
+/// The synthetic production analytics database.
+#[derive(Clone, Debug, Default)]
+pub struct AnalyticsDb {
+    pub weeks: u32,
+    pub jobs: Vec<JobRecord>,
+    pub assets: Vec<AssetRecord>,
+    pub preproc: Vec<PreprocRecord>,
+    pub evals: Vec<EvalRecord>,
+}
+
+impl AnalyticsDb {
+    // -- query layer ---------------------------------------------------
+
+    /// Job interarrival times in seconds (jobs are stored time-ordered).
+    pub fn interarrivals(&self) -> Vec<f64> {
+        self.jobs.windows(2).map(|w| w[1].t - w[0].t).collect()
+    }
+
+    /// Interarrivals bucketed by hour-of-week (0 = Monday 00:00), the
+    /// 168 clusters of the realistic arrival profile (section V-A3).
+    pub fn interarrivals_by_hour_of_week(&self) -> Vec<Vec<f64>> {
+        let mut clusters: Vec<Vec<f64>> = vec![Vec::new(); 168];
+        for w in self.jobs.windows(2) {
+            let gap = w[1].t - w[0].t;
+            let how = hour_of_week(w[0].t);
+            clusters[how].push(gap);
+        }
+        clusters
+    }
+
+    /// Average arrivals per hour stratified by hour-of-week (Fig 10).
+    pub fn arrivals_per_hour_of_week(&self) -> [f64; 168] {
+        let mut counts = [0.0f64; 168];
+        for j in &self.jobs {
+            counts[hour_of_week(j.t)] += 1.0;
+        }
+        let weeks = self.weeks.max(1) as f64;
+        for c in counts.iter_mut() {
+            *c /= weeks;
+        }
+        counts
+    }
+
+    /// Observed framework shares.
+    pub fn framework_share(&self) -> Vec<(Framework, f64)> {
+        let mut counts = [0usize; 5];
+        for j in &self.jobs {
+            counts[j.framework.index()] += 1;
+        }
+        let total = self.jobs.len().max(1) as f64;
+        Framework::ALL
+            .iter()
+            .map(|&f| (f, counts[f.index()] as f64 / total))
+            .collect()
+    }
+
+    /// Training durations stratified by framework (Fig 9b input).
+    pub fn durations_for(&self, fw: Framework) -> Vec<f64> {
+        self.jobs
+            .iter()
+            .filter(|j| j.framework == fw)
+            .map(|j| j.duration)
+            .collect()
+    }
+
+    /// Log-transformed (ln rows, ln cols, ln bytes) asset matrix after the
+    /// paper's plausibility filter (rows >= 50, cols >= 2) — the GMM fit
+    /// input of section V-A1.
+    pub fn asset_log_matrix(&self) -> Vec<[f64; 3]> {
+        self.assets
+            .iter()
+            .filter(|a| a.rows >= 50.0 && a.cols >= 2.0 && a.bytes > 0.0)
+            .map(|a| [a.rows.ln(), a.cols.ln(), a.bytes.ln()])
+            .collect()
+    }
+
+    /// (ln(rows*cols), duration) pairs for the preprocess curve fit
+    /// (Fig 9a input).
+    pub fn preproc_pairs(&self) -> (Vec<f64>, Vec<f64>) {
+        let mut xs = Vec::with_capacity(self.preproc.len());
+        let mut ys = Vec::with_capacity(self.preproc.len());
+        for p in &self.preproc {
+            xs.push((p.rows * p.cols).max(1.0).ln());
+            ys.push(p.duration);
+        }
+        (xs, ys)
+    }
+
+    /// Evaluation durations (Fig 12a "evaluate" stratum input).
+    pub fn eval_durations(&self) -> Vec<f64> {
+        self.evals.iter().map(|e| e.duration).collect()
+    }
+
+    /// Mean arrival rate over the trace, jobs/second.
+    pub fn mean_arrival_rate(&self) -> f64 {
+        if self.jobs.len() < 2 {
+            return 0.0;
+        }
+        let span = self.jobs.last().unwrap().t - self.jobs[0].t;
+        (self.jobs.len() - 1) as f64 / span.max(1e-9)
+    }
+
+    // -- persistence ----------------------------------------------------
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        use crate::util::jsonio::JsonIo;
+        self.save_json(path)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        use crate::util::jsonio::JsonIo;
+        Self::load_json(path)
+    }
+
+    /// One-line summary for CLI output.
+    pub fn summary(&self) -> String {
+        format!(
+            "analytics db: {} weeks, {} jobs, {} assets, {} preproc traces, {} eval traces",
+            self.weeks,
+            self.jobs.len(),
+            self.assets.len(),
+            self.preproc.len(),
+            self.evals.len()
+        )
+    }
+}
+
+/// Hour-of-week index (0..168) of a trace timestamp; t=0 is Monday 00:00.
+pub fn hour_of_week(t: f64) -> usize {
+    let in_week = t.rem_euclid(WEEK);
+    (in_week / HOUR) as usize % 168
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::DAY;
+
+    fn tiny_db() -> AnalyticsDb {
+        AnalyticsDb {
+            weeks: 1,
+            jobs: vec![
+                JobRecord { t: 0.0, framework: Framework::SparkML, duration: 10.0 },
+                JobRecord { t: 30.0, framework: Framework::TensorFlow, duration: 200.0 },
+                JobRecord { t: 90.0, framework: Framework::SparkML, duration: 12.0 },
+            ],
+            assets: vec![
+                AssetRecord { rows: 100.0, cols: 10.0, bytes: 8000.0 },
+                AssetRecord { rows: 10.0, cols: 10.0, bytes: 800.0 }, // filtered
+                AssetRecord { rows: 100.0, cols: 1.0, bytes: 800.0 }, // filtered
+            ],
+            preproc: vec![PreprocRecord { rows: 100.0, cols: 10.0, duration: 3.0 }],
+            evals: vec![EvalRecord { duration: 5.0 }],
+        }
+    }
+
+    #[test]
+    fn interarrivals() {
+        let db = tiny_db();
+        assert_eq!(db.interarrivals(), vec![30.0, 60.0]);
+    }
+
+    #[test]
+    fn framework_share_sums_to_one() {
+        let db = tiny_db();
+        let share = db.framework_share();
+        let total: f64 = share.iter().map(|(_, s)| s).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        let spark = share.iter().find(|(f, _)| *f == Framework::SparkML).unwrap();
+        assert!((spark.1 - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn asset_filter_applied() {
+        let db = tiny_db();
+        let m = db.asset_log_matrix();
+        assert_eq!(m.len(), 1);
+        assert!((m[0][0] - 100.0f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hour_of_week_mapping() {
+        assert_eq!(hour_of_week(0.0), 0);
+        assert_eq!(hour_of_week(3600.0), 1);
+        assert_eq!(hour_of_week(DAY), 24);
+        assert_eq!(hour_of_week(WEEK), 0); // wraps
+        assert_eq!(hour_of_week(WEEK + 2.5 * 3600.0), 2);
+    }
+
+    #[test]
+    fn durations_stratified() {
+        let db = tiny_db();
+        assert_eq!(db.durations_for(Framework::SparkML), vec![10.0, 12.0]);
+        assert_eq!(db.durations_for(Framework::Caffe), Vec::<f64>::new());
+    }
+
+    #[test]
+    fn arrivals_per_hour_counts() {
+        let db = tiny_db();
+        let per_hour = db.arrivals_per_hour_of_week();
+        assert_eq!(per_hour[0], 3.0); // all three jobs in hour 0 of week 1
+        assert_eq!(per_hour[1], 0.0);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let db = tiny_db();
+        let dir = std::env::temp_dir().join("pipesim_test_db.json");
+        db.save(&dir).unwrap();
+        let back = AnalyticsDb::load(&dir).unwrap();
+        assert_eq!(back.jobs.len(), 3);
+        assert_eq!(back.weeks, 1);
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn mean_rate() {
+        let db = tiny_db();
+        assert!((db.mean_arrival_rate() - 2.0 / 90.0).abs() < 1e-12);
+    }
+}

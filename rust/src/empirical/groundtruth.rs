@@ -1,0 +1,347 @@
+//! Hidden ground-truth processes that generate the synthetic analytics DB.
+//!
+//! Every disclosed statistic from the paper is honored:
+//! * framework mix 63/32/3/1/1 (section IV-B1);
+//! * SparkML median duration ≈ 10 s, TensorFlow ≈ 180 s (section V-A2b);
+//! * preprocess duration = 0.018·1.330^x + 2.156 + LogNormal(−1, 0.15)
+//!   with x = ln(rows·cols) (section V-A2a — used here as the *true*
+//!   generating process, which PipeSim must then re-fit);
+//! * arrival volume ≈ 210 824 jobs/year ≈ 24 jobs/hour average, with a
+//!   day/night + weekday/weekend intensity profile like Fig 10;
+//! * 9 821 plausible asset observations in log-space clusters (Fig 8).
+
+use super::db::{AnalyticsDb, AssetRecord, EvalRecord, JobRecord, PreprocRecord};
+use crate::des::{HOUR, WEEK};
+use crate::model::Framework;
+use crate::stats::dist::{Distribution, LogNormal};
+use crate::stats::rng::Pcg64;
+use crate::stats::ExpCurve;
+
+/// Mixture of two log-normals (duration laws).
+#[derive(Clone, Copy, Debug)]
+struct LnMix2 {
+    w1: f64,
+    c1: LogNormal,
+    c2: LogNormal,
+}
+
+impl LnMix2 {
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        if rng.uniform() < self.w1 {
+            self.c1.sample(rng)
+        } else {
+            self.c2.sample(rng)
+        }
+    }
+}
+
+/// One asset cluster in (ln rows, ln cols) with correlation, plus a
+/// per-cell byte factor.
+#[derive(Clone, Copy, Debug)]
+struct AssetCluster {
+    w: f64,
+    mu_rows: f64,
+    mu_cols: f64,
+    sd_rows: f64,
+    sd_cols: f64,
+    corr: f64,
+}
+
+/// The hidden generator. All parameters are private by design: PipeSim's
+/// fitting pipeline must recover them from the generated records alone.
+pub struct GroundTruth {
+    rng: Pcg64,
+    /// Average arrivals/hour across the week (paper: ≈ 210 824 / year).
+    pub base_rate: f64,
+    duration_laws: [LnMix2; 5],
+    asset_clusters: [AssetCluster; 4],
+    preproc_curve: ExpCurve,
+    preproc_noise: LogNormal,
+    eval_law: LnMix2,
+}
+
+impl GroundTruth {
+    pub fn new(seed: u64) -> Self {
+        GroundTruth {
+            rng: Pcg64::new(seed),
+            base_rate: 210_824.0 / (52.0 * 168.0), // ≈ 24.1 jobs/hour
+            duration_laws: [
+                // SparkML: median ≈ 10 s, heavy tail
+                LnMix2 { w1: 0.65, c1: LogNormal::new(6f64.ln(), 0.8), c2: LogNormal::new(80f64.ln(), 1.3) },
+                // TensorFlow: median ≈ 180 s, long-running tail
+                LnMix2 { w1: 0.60, c1: LogNormal::new(100f64.ln(), 0.9), c2: LogNormal::new(900f64.ln(), 1.1) },
+                // PyTorch
+                LnMix2 { w1: 0.70, c1: LogNormal::new(120f64.ln(), 0.8), c2: LogNormal::new(1500f64.ln(), 1.0) },
+                // Caffe
+                LnMix2 { w1: 0.60, c1: LogNormal::new(300f64.ln(), 0.9), c2: LogNormal::new(3000f64.ln(), 0.9) },
+                // Other
+                LnMix2 { w1: 0.80, c1: LogNormal::new(45f64.ln(), 1.2), c2: LogNormal::new(600f64.ln(), 1.4) },
+            ],
+            asset_clusters: [
+                // small tabular
+                AssetCluster { w: 0.40, mu_rows: 7.0, mu_cols: 2.2, sd_rows: 1.0, sd_cols: 0.5, corr: 0.3 },
+                // medium wide
+                AssetCluster { w: 0.30, mu_rows: 9.5, mu_cols: 3.4, sd_rows: 1.2, sd_cols: 0.7, corr: 0.2 },
+                // tall narrow
+                AssetCluster { w: 0.20, mu_rows: 12.0, mu_cols: 1.6, sd_rows: 1.0, sd_cols: 0.4, corr: -0.2 },
+                // huge feature-rich
+                AssetCluster { w: 0.10, mu_rows: 11.0, mu_cols: 5.0, sd_rows: 1.5, sd_cols: 0.8, corr: 0.4 },
+            ],
+            // the paper's production fit, used as the true process
+            preproc_curve: ExpCurve { a: 0.018, b: 1.330, c: 2.156 },
+            preproc_noise: LogNormal::new(-1.0, 0.15),
+            eval_law: LnMix2 { w1: 0.75, c1: LogNormal::new(18f64.ln(), 0.9), c2: LogNormal::new(240f64.ln(), 1.2) },
+        }
+    }
+
+    /// Hour-of-week intensity multiplier (mean 1.0 across the week):
+    /// office-hours peak (≈16:00 as in Fig 11), evening shoulder, quiet
+    /// nights, subdued weekends.
+    pub fn intensity(how: usize) -> f64 {
+        let day = how / 24;
+        let hour = how % 24;
+        let weekday = day < 5;
+        let shape = if weekday {
+            match hour {
+                0..=5 => 0.25,
+                6..=7 => 0.55,
+                8..=11 => 1.35,
+                12 => 1.05,
+                13..=15 => 1.45,
+                16 => 1.65, // afternoon peak
+                17..=18 => 1.15,
+                19..=21 => 0.65,
+                _ => 0.40,
+            }
+        } else {
+            match hour {
+                0..=6 => 0.15,
+                7..=10 => 0.30,
+                11..=17 => 0.45,
+                _ => 0.25,
+            }
+        };
+        // normalize so the weekly mean multiplier is 1.0
+        shape / Self::mean_shape()
+    }
+
+    fn mean_shape() -> f64 {
+        // cached closed form of the weekly average of the raw shape above
+        // (5 weekdays + 2 weekend days) / 168
+        let weekday_sum = 6.0 * 0.25 + 2.0 * 0.55 + 4.0 * 1.35 + 1.05 + 3.0 * 1.45 + 1.65 + 2.0 * 1.15 + 3.0 * 0.65 + 2.0 * 0.40;
+        let weekend_sum = 7.0 * 0.15 + 4.0 * 0.30 + 7.0 * 0.45 + 6.0 * 0.25;
+        (5.0 * weekday_sum + 2.0 * weekend_sum) / 168.0
+    }
+
+    fn sample_framework(&mut self) -> Framework {
+        let shares: Vec<f64> = Framework::ALL.iter().map(|f| f.paper_share()).collect();
+        Framework::ALL[self.rng.categorical(&shares)]
+    }
+
+    fn sample_duration(&mut self, fw: Framework) -> f64 {
+        let law = self.duration_laws[fw.index()];
+        law.sample(&mut self.rng).max(0.2)
+    }
+
+    fn sample_asset(&mut self) -> AssetRecord {
+        let ws: Vec<f64> = self.asset_clusters.iter().map(|c| c.w).collect();
+        let c = self.asset_clusters[self.rng.categorical(&ws)];
+        let z1 = self.rng.normal();
+        let z2 = c.corr * z1 + (1.0 - c.corr * c.corr).sqrt() * self.rng.normal();
+        let ln_rows = c.mu_rows + c.sd_rows * z1;
+        let ln_cols = c.mu_cols + c.sd_cols * z2;
+        let rows = ln_rows.exp().round().max(1.0);
+        let cols = ln_cols.exp().round().max(1.0);
+        // bytes ≈ rows*cols*cell_bytes with lognormal spread (Fig 8 right:
+        // linear relation with large variability)
+        let cell = (2.2 + 0.45 * self.rng.normal()).exp(); // ~9 B/cell median
+        AssetRecord {
+            rows,
+            cols,
+            bytes: (rows * cols * cell).max(64.0),
+        }
+    }
+
+    /// True preprocess duration for an asset (the process PipeSim re-fits).
+    pub fn preproc_duration(&mut self, rows: f64, cols: f64) -> f64 {
+        let x = (rows * cols).max(1.0).ln();
+        self.preproc_curve.eval(x) + self.preproc_noise.sample(&mut self.rng)
+    }
+
+    /// Generate a `weeks`-long usage database.
+    pub fn generate_weeks(mut self, weeks: u32) -> AnalyticsDb {
+        let horizon = weeks as f64 * WEEK;
+
+        // --- job arrivals: piecewise-constant-rate Poisson process ----
+        let mut jobs = Vec::new();
+        let mut t = 0.0;
+        while t < horizon {
+            let how = super::db::hour_of_week(t);
+            let rate_per_sec = self.base_rate * Self::intensity(how) / HOUR;
+            let gap = self.rng.exponential(rate_per_sec.max(1e-9));
+            // cap the jump so rate changes at hour boundaries are honored
+            let next_boundary = (t / HOUR).floor() * HOUR + HOUR;
+            if t + gap > next_boundary && rate_per_sec * (next_boundary - t) < 30.0 {
+                // thinning across the boundary: restart from the boundary
+                t = next_boundary;
+                continue;
+            }
+            t += gap;
+            if t >= horizon {
+                break;
+            }
+            let fw = self.sample_framework();
+            let duration = self.sample_duration(fw);
+            jobs.push(JobRecord { t, framework: fw, duration });
+        }
+
+        // --- assets: scale the paper's 9 821 observations to trace length
+        let n_assets = ((9_821.0 * weeks as f64 / 52.0).round() as usize).max(200);
+        let mut assets = Vec::with_capacity(n_assets);
+        while assets.len() < n_assets {
+            let a = self.sample_asset();
+            assets.push(a);
+        }
+
+        // --- preprocess traces: ~55% of pipelines have a preprocess step
+        let n_preproc = (jobs.len() as f64 * 0.55) as usize;
+        let mut preproc = Vec::with_capacity(n_preproc);
+        let plausible: Vec<AssetRecord> = assets
+            .iter()
+            .cloned()
+            .filter(|a| a.rows >= 50.0 && a.cols >= 2.0)
+            .collect();
+        for _ in 0..n_preproc {
+            let a = plausible[self.rng.below(plausible.len())];
+            let duration = self.preproc_duration(a.rows, a.cols);
+            preproc.push(PreprocRecord { rows: a.rows, cols: a.cols, duration });
+        }
+
+        // --- evaluation traces: ~70% of pipelines evaluate
+        let n_eval = (jobs.len() as f64 * 0.7) as usize;
+        let evals = (0..n_eval)
+            .map(|_| EvalRecord {
+                duration: self.eval_law.sample(&mut self.rng).max(0.1),
+            })
+            .collect();
+
+        AnalyticsDb {
+            weeks,
+            jobs,
+            assets,
+            preproc,
+            evals,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::desc::quantile;
+
+    fn db_8w() -> AnalyticsDb {
+        GroundTruth::new(42).generate_weeks(8)
+    }
+
+    #[test]
+    fn job_volume_matches_paper_rate() {
+        let db = db_8w();
+        // ≈ 24.1/h * 168h * 8w ≈ 32 400 jobs, ±10%
+        let expect = 210_824.0 / 52.0 * 8.0;
+        let got = db.jobs.len() as f64;
+        assert!((got - expect).abs() / expect < 0.10, "jobs={got} expect≈{expect}");
+    }
+
+    #[test]
+    fn framework_mix_matches_paper() {
+        let db = db_8w();
+        for (fw, share) in db.framework_share() {
+            let want = fw.paper_share();
+            assert!(
+                (share - want).abs() < 0.02,
+                "{fw}: {share} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn duration_medians_match_paper() {
+        let db = db_8w();
+        let spark = db.durations_for(Framework::SparkML);
+        let tf = db.durations_for(Framework::TensorFlow);
+        let p50_spark = quantile(&spark, 0.5);
+        let p50_tf = quantile(&tf, 0.5);
+        // paper: 50% of Spark ML jobs < 10 s; 50% of TF jobs < 180 s
+        assert!((6.0..16.0).contains(&p50_spark), "spark p50={p50_spark}");
+        assert!((120.0..260.0).contains(&p50_tf), "tf p50={p50_tf}");
+        assert!(p50_tf > 8.0 * p50_spark, "TF must dwarf Spark");
+    }
+
+    #[test]
+    fn arrivals_show_weekly_pattern() {
+        let db = db_8w();
+        let per_hour = db.arrivals_per_hour_of_week();
+        // weekday 16:00 (hour 16) must beat weekday 03:00 (hour 3) and
+        // saturday afternoon (5*24+14)
+        assert!(per_hour[16] > 2.0 * per_hour[3], "{} vs {}", per_hour[16], per_hour[3]);
+        assert!(per_hour[16] > 2.0 * per_hour[5 * 24 + 14]);
+    }
+
+    #[test]
+    fn intensity_normalized() {
+        let mean: f64 = (0..168).map(GroundTruth::intensity).sum::<f64>() / 168.0;
+        assert!((mean - 1.0).abs() < 1e-9, "mean intensity {mean}");
+    }
+
+    #[test]
+    fn timestamps_sorted_and_in_horizon() {
+        let db = db_8w();
+        let horizon = 8.0 * WEEK;
+        let mut prev = 0.0;
+        for j in &db.jobs {
+            assert!(j.t >= prev && j.t < horizon);
+            prev = j.t;
+        }
+    }
+
+    #[test]
+    fn asset_population_plausible() {
+        let db = db_8w();
+        let m = db.asset_log_matrix();
+        // most assets survive the filter and cluster structure is present
+        assert!(m.len() > db.assets.len() / 2);
+        let mean_lr = m.iter().map(|r| r[0]).sum::<f64>() / m.len() as f64;
+        assert!((6.0..12.0).contains(&mean_lr), "mean ln rows {mean_lr}");
+        // bytes correlate with rows*cols (Fig 8 right)
+        let size: Vec<f64> = m.iter().map(|r| r[0] + r[1]).collect();
+        let bytes: Vec<f64> = m.iter().map(|r| r[2]).collect();
+        let corr = crate::stats::pearson(&size, &bytes);
+        assert!(corr > 0.9, "log size/bytes corr {corr}");
+    }
+
+    #[test]
+    fn preproc_durations_follow_curve() {
+        let db = db_8w();
+        let (xs, ys) = db.preproc_pairs();
+        assert!(!xs.is_empty());
+        // all durations above the asymptote c=2.156
+        assert!(ys.iter().all(|&y| y > 2.0));
+        // duration grows with log size: top-decile sizes slower than bottom
+        let mut pairs: Vec<(f64, f64)> = xs.into_iter().zip(ys).collect();
+        pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let lo_mean: f64 = pairs[..pairs.len() / 10].iter().map(|p| p.1).sum::<f64>() / (pairs.len() / 10) as f64;
+        let hi_mean: f64 = pairs[pairs.len() * 9 / 10..].iter().map(|p| p.1).sum::<f64>() / (pairs.len() - pairs.len() * 9 / 10) as f64;
+        assert!(hi_mean > lo_mean, "{hi_mean} !> {lo_mean}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = GroundTruth::new(7).generate_weeks(1);
+        let b = GroundTruth::new(7).generate_weeks(1);
+        assert_eq!(a.jobs.len(), b.jobs.len());
+        assert_eq!(a.jobs[10].t, b.jobs[10].t);
+        let c = GroundTruth::new(8).generate_weeks(1);
+        assert_ne!(a.jobs.len(), c.jobs.len());
+    }
+}

@@ -1,0 +1,21 @@
+//! Synthetic empirical substrate — the stand-in for the paper's
+//! proprietary IBM analytics database (section V-A).
+//!
+//! The paper fits its simulation models on "several million rows of user
+//! and system events … several thousand pipeline execution traces" from a
+//! production platform. That database is not available, so this module
+//! implements *hidden ground-truth processes* whose parameters match
+//! every statistic the paper discloses (framework mix, per-framework
+//! duration medians, arrival volumes, the preprocess duration curve,
+//! asset-dimension clustering), generates a realistic usage database from
+//! them, and exposes the query layer PipeSim's fitting pipeline consumes.
+//!
+//! Because the generating processes are known exactly, the Fig 12
+//! accuracy evaluation becomes sharper than in the paper: simulated
+//! output is compared against data whose true distribution is known.
+
+pub mod db;
+pub mod groundtruth;
+
+pub use db::{AnalyticsDb, AssetRecord, EvalRecord, JobRecord, PreprocRecord};
+pub use groundtruth::GroundTruth;

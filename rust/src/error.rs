@@ -1,0 +1,65 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Unified error for all PipeSim subsystems.
+#[derive(Debug)]
+pub enum Error {
+    /// PJRT / XLA runtime failures (artifact load, compile, execute).
+    Xla(xla::Error),
+    /// Filesystem / serialization problems.
+    Io(std::io::Error),
+    /// Statistical routine failed to converge or received bad input.
+    Stats(String),
+    /// Experiment / simulation configuration is invalid.
+    Config(String),
+    /// Anything else.
+    Other(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(e) => write!(f, "xla: {e}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Stats(m) => write!(f, "stats: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_variants() {
+        assert!(Error::Stats("nan".into()).to_string().contains("stats"));
+        assert!(Error::Config("bad".into()).to_string().contains("config"));
+        assert!(Error::Other("x".into()).to_string().contains('x'));
+    }
+
+    #[test]
+    fn from_io() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "nope").into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,57 @@
+//! # PipeSim — trace-driven simulation of large-scale AI operations platforms
+//!
+//! A production-grade Rust reimplementation of *PipeSim* (Rausch, Hummer,
+//! Muthusamy, 2020): a stochastic, standalone, discrete-event simulator for
+//! AI lifecycle platforms, plus the experimentation and analytics
+//! environment around it.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the coordinator: discrete-event engine
+//!   ([`des`]), system model ([`model`]), pipeline/asset synthesizers
+//!   ([`synth`]), arrival processes ([`arrivals`]), the experiment runner
+//!   and operational strategies ([`coordinator`]), an embedded time-series
+//!   store ([`tsdb`]), the synthetic empirical substrate ([`empirical`]),
+//!   statistics ([`stats`]) and analytics ([`analytics`]).
+//! * **L2/L1 (build-time Python)** — JAX compute graphs with a Pallas
+//!   E-step kernel, AOT-lowered to HLO text under `artifacts/` and executed
+//!   from [`runtime`] through the PJRT C API. Python never runs on the
+//!   simulation path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use pipesim::prelude::*;
+//!
+//! let db = pipesim::empirical::GroundTruth::new(7).generate_weeks(8);
+//! let params = pipesim::coordinator::fit_params(&db, None).unwrap();
+//! let cfg = ExperimentConfig::default();
+//! let result = Experiment::new(cfg, params).run().unwrap();
+//! println!("{}", result.summary());
+//! ```
+
+pub mod analytics;
+pub mod arrivals;
+pub mod coordinator;
+pub mod des;
+pub mod empirical;
+pub mod error;
+pub mod model;
+pub mod runtime;
+pub mod stats;
+pub mod synth;
+pub mod tsdb;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Convenient re-exports for the common experiment workflow.
+pub mod prelude {
+    pub use crate::coordinator::{Experiment, ExperimentConfig, SimParams};
+    pub use crate::des::{Resource, SimTime};
+    pub use crate::empirical::{AnalyticsDb, GroundTruth};
+    pub use crate::error::{Error, Result};
+    pub use crate::model::{Framework, TaskType};
+    pub use crate::stats::rng::Pcg64;
+    pub use crate::tsdb::TsStore;
+}

@@ -1,0 +1,275 @@
+//! PipeSim CLI — generate the empirical substrate, fit simulation
+//! parameters, run experiments, and regenerate every figure/table of the
+//! paper's evaluation.
+//!
+//! Subcommands:
+//!   gen-empirical  --weeks N --seed S --out DB.json
+//!   fit            --db DB.json --out PARAMS.json [--cpu]
+//!   simulate       --params PARAMS.json [--config CFG.json] [--days D]
+//!                  [--arrival random|profile|poisson:SECS] [--seed S]
+//!                  [--cpu] [--export CSV]
+//!   figures        --fig 8|9a|9b|10|11|12|table1|all [--out-dir DIR]
+//!   table1
+//!   qq             --db DB.json --params PARAMS.json [--days D] [--cpu]
+//!   scale          --params PARAMS.json --counts 1000,10000 [--cpu]
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use pipesim::analytics::{figures, render_dashboard};
+use pipesim::coordinator::{
+    fit_params_with_report, ArrivalSpec, Experiment, ExperimentConfig, SimParams,
+};
+use pipesim::des::DAY;
+use pipesim::empirical::{AnalyticsDb, GroundTruth};
+use pipesim::runtime::Runtime;
+use pipesim::util::Args;
+
+const USAGE: &str = "usage: pipesim <gen-empirical|fit|simulate|figures|table1|qq|scale> [--options]
+run `pipesim <subcommand> --help` semantics: see README.md";
+
+fn load_runtime(cpu: bool) -> Option<Rc<Runtime>> {
+    if cpu {
+        return None;
+    }
+    match Runtime::load_default() {
+        Some(rt) => {
+            eprintln!("runtime: PJRT artifacts loaded");
+            Some(Rc::new(rt))
+        }
+        None => {
+            eprintln!("runtime: artifacts not found, using CPU sampler fallback");
+            None
+        }
+    }
+}
+
+fn parse_arrival(s: &str) -> anyhow::Result<ArrivalSpec> {
+    match s {
+        "random" => Ok(ArrivalSpec::Random),
+        "profile" => Ok(ArrivalSpec::Profile),
+        "replay" => Ok(ArrivalSpec::Replay),
+        other => {
+            if let Some(rest) = other.strip_prefix("poisson:") {
+                Ok(ArrivalSpec::Poisson {
+                    mean_interarrival: rest.parse()?,
+                })
+            } else {
+                anyhow::bail!("unknown arrival mode {other}")
+            }
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let sub = args.subcommand.clone().unwrap_or_default();
+    match sub.as_str() {
+        "gen-empirical" => {
+            let weeks: u32 = args.get_parse("weeks", 8)?;
+            let seed: u64 = args.get_parse("seed", 42)?;
+            let out = PathBuf::from(args.get("out", "empirical_db.json"));
+            args.reject_unknown()?;
+            let db = GroundTruth::new(seed).generate_weeks(weeks);
+            println!("{}", db.summary());
+            db.save(&out)?;
+            println!("wrote {}", out.display());
+        }
+
+        "fit" => {
+            let db_path = PathBuf::from(args.get("db", "empirical_db.json"));
+            let out = PathBuf::from(args.get("out", "sim_params.json"));
+            let cpu = args.flag("cpu");
+            args.reject_unknown()?;
+            let db = AnalyticsDb::load(&db_path)?;
+            println!("{}", db.summary());
+            let rt = load_runtime(cpu);
+            let (params, report) = fit_params_with_report(&db, rt)?;
+            println!(
+                "fit ({} backend): {} assets (loglik {:.0}, {} EM iters), curve a={:.4} b={:.4} c={:.3}, {:.2}s",
+                report.backend,
+                report.asset_rows,
+                report.asset_loglik,
+                report.asset_iters,
+                params.preproc_curve.a,
+                params.preproc_curve.b,
+                params.preproc_curve.c,
+                report.wall_secs
+            );
+            for (fam, n) in &report.profile_families {
+                println!("  arrival profile: {n:>4} clusters -> {fam}");
+            }
+            params.save(&out)?;
+            println!("wrote {}", out.display());
+        }
+
+        "simulate" => {
+            let params = SimParams::load(&PathBuf::from(args.get("params", "sim_params.json")))?;
+            let mut cfg = match args.get_opt("config") {
+                Some(p) => ExperimentConfig::load(&PathBuf::from(p))?,
+                None => ExperimentConfig::default(),
+            };
+            if let Some(d) = args.get_parse_opt::<f64>("days")? {
+                cfg.horizon = d * DAY;
+            }
+            if let Some(a) = args.get_opt("arrival") {
+                cfg.arrival = parse_arrival(&a)?;
+            }
+            if let Some(s) = args.get_parse_opt::<u64>("seed")? {
+                cfg.seed = s;
+            }
+            let cpu = args.flag("cpu");
+            let export = args.get_opt("export");
+            args.reject_unknown()?;
+            let rt = load_runtime(cpu);
+            let result = Experiment::new(cfg, params).with_runtime(rt).run()?;
+            println!("{}", render_dashboard(&result, 72));
+            if let Some(path) = export {
+                let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+                result.tsdb.export_csv(&mut f)?;
+                println!("traces -> {path}");
+            }
+        }
+
+        "figures" => {
+            let fig = args.get("fig", "all");
+            let db = AnalyticsDb::load(&PathBuf::from(args.get("db", "empirical_db.json")))?;
+            let params = SimParams::load(&PathBuf::from(args.get("params", "sim_params.json")))?;
+            let out_dir = PathBuf::from(args.get("out-dir", "figures"));
+            let cpu = args.flag("cpu");
+            args.reject_unknown()?;
+            std::fs::create_dir_all(&out_dir)?;
+            let rt = load_runtime(cpu);
+            let write = |name: &str, data: String| -> anyhow::Result<()> {
+                let path = out_dir.join(name);
+                std::fs::write(&path, data)?;
+                println!("wrote {}", path.display());
+                Ok(())
+            };
+            let want = |k: &str| fig == "all" || fig == k;
+            if want("8") {
+                write("fig8_assets.csv", figures::fig8_assets(&db, &params, 9821, 8))?;
+            }
+            if want("9a") {
+                write("fig9a_preproc.csv", figures::fig9a_preproc(&db, &params, 4000))?;
+            }
+            if want("9b") {
+                write("fig9b_train.csv", figures::fig9b_train(&db, &params, 50_000, 9))?;
+            }
+            if want("10") {
+                write("fig10_arrivals.csv", figures::fig10_arrivals(&db))?;
+            }
+            if want("11") || want("12") {
+                // one 4-week profile-driven run feeds Figs 11 + 12
+                let cfg = ExperimentConfig {
+                    name: "figures".into(),
+                    horizon: 28.0 * DAY,
+                    arrival: ArrivalSpec::Profile,
+                    ..Default::default()
+                };
+                let r = Experiment::new(cfg, params.clone())
+                    .with_runtime(rt.clone())
+                    .run()?;
+                if want("11") {
+                    write("fig11_dashboard.csv", figures::fig11_dashboard(&r, 3600.0))?;
+                }
+                if want("12") {
+                    let mut csv = String::from("series,empirical_q,simulated_q\n");
+                    for q in figures::fig12a_qq(&db, &r, 60) {
+                        println!("{}", q.verdict());
+                        csv.push_str(&q.to_csv());
+                    }
+                    if let Some(q) = figures::fig12b_qq(&db, &r, "profile", 60) {
+                        println!("{}", q.verdict());
+                        csv.push_str(&q.to_csv());
+                    }
+                    // plus a random-arrival run for the second 12b panel
+                    let cfg2 = ExperimentConfig {
+                        name: "figures-random".into(),
+                        horizon: 28.0 * DAY,
+                        arrival: ArrivalSpec::Random,
+                        ..Default::default()
+                    };
+                    let r2 = Experiment::new(cfg2, params.clone())
+                        .with_runtime(rt.clone())
+                        .run()?;
+                    if let Some(q) = figures::fig12b_qq(&db, &r2, "random", 60) {
+                        println!("{}", q.verdict());
+                        csv.push_str(&q.to_csv());
+                    }
+                    write("fig12ab_qq.csv", csv)?;
+                    write("fig12c_profile.csv", figures::fig12c_profile(&db, &r))?;
+                }
+            }
+            if want("table1") {
+                write("table1_compression.csv", figures::table1())?;
+            }
+        }
+
+        "table1" => {
+            args.reject_unknown()?;
+            print!("{}", figures::table1());
+        }
+
+        "qq" => {
+            let db = AnalyticsDb::load(&PathBuf::from(args.get("db", "empirical_db.json")))?;
+            let params = SimParams::load(&PathBuf::from(args.get("params", "sim_params.json")))?;
+            let days: f64 = args.get_parse("days", 28.0)?;
+            let cpu = args.flag("cpu");
+            args.reject_unknown()?;
+            let rt = load_runtime(cpu);
+            let cfg = ExperimentConfig {
+                name: "qq".into(),
+                horizon: days * DAY,
+                arrival: ArrivalSpec::Profile,
+                ..Default::default()
+            };
+            let r = Experiment::new(cfg, params).with_runtime(rt).run()?;
+            println!("simulated {} pipelines over {days} days", r.arrived);
+            for q in figures::fig12a_qq(&db, &r, 60) {
+                println!("{}", q.verdict());
+            }
+            if let Some(q) = figures::fig12b_qq(&db, &r, "profile", 60) {
+                println!("{}", q.verdict());
+            }
+        }
+
+        "scale" => {
+            let params = SimParams::load(&PathBuf::from(args.get("params", "sim_params.json")))?;
+            let counts = args.get("counts", "1000,5000,10000,50000,100000");
+            let mean_interarrival: f64 = args.get_parse("mean-interarrival", 44.0)?;
+            let cpu = args.flag("cpu");
+            args.reject_unknown()?;
+            let rt = load_runtime(cpu);
+            println!("pipelines,wall_secs,us_per_pipeline,events_per_sec,peak_rss_mb");
+            for count in counts.split(',') {
+                let n: u64 = count.trim().parse()?;
+                let cfg = ExperimentConfig {
+                    name: format!("scale-{n}"),
+                    horizon: f64::MAX / 4.0,
+                    arrival: ArrivalSpec::Poisson { mean_interarrival },
+                    max_pipelines: Some(n),
+                    record_traces: false,
+                    sample_interval: 3600.0,
+                    ..Default::default()
+                };
+                let r = Experiment::new(cfg, params.clone())
+                    .with_runtime(rt.clone())
+                    .run()?;
+                println!(
+                    "{n},{:.3},{:.2},{:.0},{:.1}",
+                    r.wall_secs,
+                    r.us_per_pipeline(),
+                    r.events_per_sec(),
+                    r.peak_rss_mb
+                );
+            }
+        }
+
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

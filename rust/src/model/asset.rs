@@ -1,0 +1,150 @@
+//! Assets (paper section IV-A1c): data assets D = (rows, cols, bytes) and
+//! trained models M with static and dynamic metric sets.
+
+use super::task::{Framework, ModelType, PredictionType};
+
+/// A data asset: an observation of the multivariate variable
+/// D = (D_d dimensions, D_r rows, D_b bytes), paper section IV-B2.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DataAsset {
+    pub rows: f64,
+    pub cols: f64,
+    pub bytes: f64,
+}
+
+impl DataAsset {
+    pub fn new(rows: f64, cols: f64, bytes: f64) -> Self {
+        DataAsset { rows, cols, bytes }
+    }
+
+    /// Dataset dimension rows × cols (the x-axis of Fig 8 right / Fig 9a).
+    pub fn size(&self) -> f64 {
+        self.rows * self.cols
+    }
+
+    /// ln(rows × cols), the input of the preprocess duration curve.
+    pub fn log_size(&self) -> f64 {
+        self.size().max(1.0).ln()
+    }
+
+    /// The paper filters assets with < 50 rows or < 2 columns as unlikely
+    /// to train models (section V-A1).
+    pub fn is_plausible(&self) -> bool {
+        self.rows >= 50.0 && self.cols >= 2.0 && self.bytes > 0.0
+    }
+}
+
+/// Static + dynamic metrics of a trained model (section III-A).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelMetrics {
+    /// Composite model performance p(M) in [0,1] (e.g. accuracy / AUC).
+    pub performance: f64,
+    /// CLEVER robustness score (static).
+    pub clever_score: f64,
+    /// Model size in MB (static).
+    pub size_mb: f64,
+    /// Inference latency in ms (dynamic).
+    pub inference_ms: f64,
+    /// Scoring confidence (dynamic).
+    pub confidence: f64,
+    /// Drift metric accumulated at run time (dynamic).
+    pub drift: f64,
+}
+
+impl Default for ModelMetrics {
+    fn default() -> Self {
+        ModelMetrics {
+            performance: 0.0,
+            clever_score: 0.0,
+            size_mb: 0.0,
+            inference_ms: 0.0,
+            confidence: 0.0,
+            drift: 0.0,
+        }
+    }
+}
+
+/// A trained ML model asset M produced by a pipeline execution.
+#[derive(Clone, Debug)]
+pub struct TrainedModel {
+    pub id: u64,
+    /// Pipeline that produced this model version.
+    pub pipeline_id: u64,
+    /// Version counter within the pipeline's lineage.
+    pub version: u32,
+    pub framework: Framework,
+    pub prediction_type: PredictionType,
+    pub model_type: ModelType,
+    pub metrics: ModelMetrics,
+    /// Simulation time the model was created.
+    pub created_at: f64,
+}
+
+impl TrainedModel {
+    /// Staleness proxy: performance lost since deployment, section III-A.
+    pub fn staleness(&self, initial_performance: f64) -> f64 {
+        (initial_performance - self.metrics.performance).max(0.0)
+    }
+
+    /// Potential improvement of retraining: staleness weighted with newly
+    /// available data (normalized), the quantity the paper proposes
+    /// schedulers optimize (section III-A/B).
+    pub fn potential_improvement(&self, initial_performance: f64, new_data_fraction: f64) -> f64 {
+        let staleness = self.staleness(initial_performance);
+        let headroom = 1.0 - self.metrics.performance.clamp(0.0, 1.0);
+        (0.5 * staleness + 0.5 * headroom * new_data_fraction.clamp(0.0, 1.0)).clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn asset_size_and_log() {
+        let a = DataAsset::new(1000.0, 10.0, 80_000.0);
+        assert_eq!(a.size(), 10_000.0);
+        assert!((a.log_size() - 10_000f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plausibility_filter_matches_paper() {
+        assert!(DataAsset::new(50.0, 2.0, 1.0).is_plausible());
+        assert!(!DataAsset::new(49.0, 10.0, 1.0).is_plausible());
+        assert!(!DataAsset::new(100.0, 1.0, 1.0).is_plausible());
+        assert!(!DataAsset::new(100.0, 5.0, 0.0).is_plausible());
+    }
+
+    fn mk_model(perf: f64) -> TrainedModel {
+        TrainedModel {
+            id: 1,
+            pipeline_id: 1,
+            version: 1,
+            framework: Framework::TensorFlow,
+            prediction_type: PredictionType::Binary,
+            model_type: ModelType::NeuralNetwork,
+            metrics: ModelMetrics {
+                performance: perf,
+                ..Default::default()
+            },
+            created_at: 0.0,
+        }
+    }
+
+    #[test]
+    fn staleness_nonnegative() {
+        let m = mk_model(0.8);
+        assert!((m.staleness(0.9) - 0.1).abs() < 1e-12);
+        assert_eq!(m.staleness(0.7), 0.0); // improved models aren't stale
+    }
+
+    #[test]
+    fn potential_improvement_bounds() {
+        let m = mk_model(0.5);
+        let p = m.potential_improvement(0.9, 1.0);
+        assert!(p > 0.0 && p <= 1.0);
+        // fresher model with no new data -> lower potential
+        let fresh = mk_model(0.9);
+        assert!(fresh.potential_improvement(0.9, 0.0) < p);
+    }
+}

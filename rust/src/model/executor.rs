@@ -1,0 +1,136 @@
+//! Task executors (paper section IV-A1d): a task is a sequence of system
+//! operations Ω = {read(A), write(A), req(R), rel(R), exec(v, R)}.
+//!
+//! The executor for each task type produces the canonical op sequence;
+//! the coordinator simulates each op's duration (queueing for `req`,
+//! store bandwidth for `read`/`write`, statistical models for `exec`).
+
+use super::asset::DataAsset;
+use super::infra::ResourceKind;
+use super::task::TaskType;
+
+/// A system operation ω ∈ Ω.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Op {
+    /// Request a slot on a compute resource (may queue).
+    Req(ResourceKind),
+    /// Read `bytes` from the data store.
+    Read(f64),
+    /// The type-specific execution on the acquired resource.
+    Exec,
+    /// Write `bytes` to the data store.
+    Write(f64),
+    /// Release the resource slot.
+    Rel(ResourceKind),
+}
+
+/// Builds op sequences for task types.
+pub struct TaskExecutor;
+
+impl TaskExecutor {
+    /// The canonical sequence: req → read → exec → write → rel.
+    ///
+    /// Payload sizes follow the asset: preprocessing reads and re-writes
+    /// the data asset (D → D', the paper substitutes D for D'); training
+    /// reads the data asset and writes the model; model-stage tasks read
+    /// and write the model artifact.
+    pub fn ops(task: TaskType, data: &DataAsset, model_bytes: f64) -> Vec<Op> {
+        let r = ResourceKind::for_task(task);
+        let (read_bytes, write_bytes) = match task {
+            TaskType::Preprocess => (data.bytes, data.bytes),
+            TaskType::Train => (data.bytes, model_bytes),
+            TaskType::Evaluate => (data.bytes * 0.2 + model_bytes, 1e4),
+            TaskType::Compress => (model_bytes, model_bytes * 0.5),
+            TaskType::Harden => (data.bytes * 0.5 + model_bytes, model_bytes),
+            TaskType::Deploy => (model_bytes, model_bytes),
+        };
+        vec![
+            Op::Req(r),
+            Op::Read(read_bytes),
+            Op::Exec,
+            Op::Write(write_bytes),
+            Op::Rel(r),
+        ]
+    }
+
+    /// Total bytes moved to/from the store by a task (traffic accounting).
+    pub fn payload_bytes(task: TaskType, data: &DataAsset, model_bytes: f64) -> (f64, f64) {
+        let ops = Self::ops(task, data, model_bytes);
+        let mut read = 0.0;
+        let mut write = 0.0;
+        for op in ops {
+            match op {
+                Op::Read(b) => read += b,
+                Op::Write(b) => write += b,
+                _ => {}
+            }
+        }
+        (read, write)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn asset() -> DataAsset {
+        DataAsset::new(10_000.0, 20.0, 5e7)
+    }
+
+    #[test]
+    fn sequence_shape() {
+        let ops = TaskExecutor::ops(TaskType::Train, &asset(), 1e8);
+        assert_eq!(ops.len(), 5);
+        assert!(matches!(ops[0], Op::Req(ResourceKind::Training)));
+        assert!(matches!(ops[1], Op::Read(_)));
+        assert!(matches!(ops[2], Op::Exec));
+        assert!(matches!(ops[3], Op::Write(_)));
+        assert!(matches!(ops[4], Op::Rel(ResourceKind::Training)));
+    }
+
+    #[test]
+    fn first_and_last_are_req_rel() {
+        for t in TaskType::ALL {
+            let ops = TaskExecutor::ops(t, &asset(), 1e8);
+            assert!(matches!(ops.first(), Some(Op::Req(_))));
+            assert!(matches!(ops.last(), Some(Op::Rel(_))));
+        }
+    }
+
+    #[test]
+    fn train_reads_data_writes_model() {
+        let a = asset();
+        let ops = TaskExecutor::ops(TaskType::Train, &a, 1e8);
+        match (&ops[1], &ops[3]) {
+            (Op::Read(r), Op::Write(w)) => {
+                assert_eq!(*r, a.bytes);
+                assert_eq!(*w, 1e8);
+            }
+            _ => panic!("unexpected ops"),
+        }
+    }
+
+    #[test]
+    fn payload_accounting() {
+        let a = asset();
+        let (r, w) = TaskExecutor::payload_bytes(TaskType::Preprocess, &a, 0.0);
+        assert_eq!(r, a.bytes);
+        assert_eq!(w, a.bytes);
+    }
+
+    #[test]
+    fn req_rel_matched_resource() {
+        for t in TaskType::ALL {
+            let ops = TaskExecutor::ops(t, &asset(), 1e6);
+            let req = ops.iter().find_map(|o| match o {
+                Op::Req(r) => Some(*r),
+                _ => None,
+            });
+            let rel = ops.iter().find_map(|o| match o {
+                Op::Rel(r) => Some(*r),
+                _ => None,
+            });
+            assert_eq!(req, rel);
+        }
+    }
+}

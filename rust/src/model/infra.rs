@@ -1,0 +1,163 @@
+//! Infrastructure resources (paper section IV-A1b): a generic data store
+//! plus training and compute clusters, each with a job capacity.
+
+use super::task::TaskType;
+use crate::des::resource::Discipline;
+
+/// The kinds of compute resource in the modeled platform.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ResourceKind {
+    /// Dedicated training infrastructure (GPU / learning cluster).
+    Training,
+    /// General-purpose compute (Spark/Hadoop style preprocessing).
+    Compute,
+}
+
+impl ResourceKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ResourceKind::Training => "training",
+            ResourceKind::Compute => "compute",
+        }
+    }
+
+    /// Which cluster each task type executes on.
+    pub fn for_task(task: TaskType) -> ResourceKind {
+        match task {
+            TaskType::Preprocess | TaskType::Evaluate | TaskType::Deploy => ResourceKind::Compute,
+            TaskType::Train | TaskType::Compress | TaskType::Harden => ResourceKind::Training,
+        }
+    }
+}
+
+impl std::fmt::Display for ResourceKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The data store abstraction: read/write ops parameterized by bandwidth
+/// and latency, with a TCP overhead factor for traffic accounting
+/// (the paper's dashboard reports network traffic incl. TCP overhead).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StoreConfig {
+    /// Sustained read bandwidth, bytes/s.
+    pub read_bw: f64,
+    /// Sustained write bandwidth, bytes/s.
+    pub write_bw: f64,
+    /// Per-operation latency, seconds.
+    pub latency: f64,
+    /// Multiplier on payload bytes for wire traffic (TCP/framing overhead).
+    pub tcp_overhead: f64,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        // S3-class object store over 10 GbE
+        StoreConfig {
+            read_bw: 400e6,
+            write_bw: 250e6,
+            latency: 0.05,
+            tcp_overhead: 1.06,
+        }
+    }
+}
+
+impl StoreConfig {
+    /// t(read(A)) for a payload of `bytes`.
+    pub fn read_time(&self, bytes: f64) -> f64 {
+        self.latency + bytes / self.read_bw
+    }
+
+    /// t(write(A)).
+    pub fn write_time(&self, bytes: f64) -> f64 {
+        self.latency + bytes / self.write_bw
+    }
+
+    /// Wire bytes including protocol overhead.
+    pub fn wire_bytes(&self, bytes: f64) -> f64 {
+        bytes * self.tcp_overhead
+    }
+}
+
+/// Full infrastructure configuration for an experiment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InfraConfig {
+    /// Job capacity of the training (learning) cluster.
+    pub training_capacity: usize,
+    /// Job capacity of the generic compute cluster.
+    pub compute_capacity: usize,
+    /// Queueing discipline for both clusters.
+    pub discipline: Discipline,
+    pub store: StoreConfig,
+}
+
+impl Default for InfraConfig {
+    fn default() -> Self {
+        InfraConfig {
+            training_capacity: 10,
+            compute_capacity: 20,
+            discipline: Discipline::Fifo,
+            store: StoreConfig::default(),
+        }
+    }
+}
+
+impl InfraConfig {
+    pub fn capacity(&self, kind: ResourceKind) -> usize {
+        match kind {
+            ResourceKind::Training => self.training_capacity,
+            ResourceKind::Compute => self.compute_capacity,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_to_resource_mapping() {
+        assert_eq!(ResourceKind::for_task(TaskType::Train), ResourceKind::Training);
+        assert_eq!(ResourceKind::for_task(TaskType::Compress), ResourceKind::Training);
+        assert_eq!(ResourceKind::for_task(TaskType::Preprocess), ResourceKind::Compute);
+        assert_eq!(ResourceKind::for_task(TaskType::Evaluate), ResourceKind::Compute);
+    }
+
+    #[test]
+    fn store_times_scale_with_bytes() {
+        let s = StoreConfig::default();
+        let t1 = s.read_time(1e6);
+        let t2 = s.read_time(2e6);
+        assert!(t2 > t1);
+        assert!(t1 > s.latency);
+        assert!(s.write_time(1e6) > s.read_time(1e6)); // write bw lower
+    }
+
+    #[test]
+    fn wire_bytes_include_overhead() {
+        let s = StoreConfig::default();
+        assert!((s.wire_bytes(100.0) - 106.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn config_capacity_lookup() {
+        let c = InfraConfig {
+            training_capacity: 4,
+            compute_capacity: 9,
+            ..Default::default()
+        };
+        assert_eq!(c.capacity(ResourceKind::Training), 4);
+        assert_eq!(c.capacity(ResourceKind::Compute), 9);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        use crate::util::jsonio::JsonIo;
+        let c = InfraConfig::default();
+        let back =
+            InfraConfig::from_json(&crate::util::Json::parse(&c.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(c, back);
+    }
+}

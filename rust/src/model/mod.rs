@@ -1,0 +1,17 @@
+//! Conceptual system model (paper section IV-A): pipelines, tasks, assets,
+//! infrastructure resources, task executors, and the compression-effect
+//! model calibrated on Table I.
+
+pub mod asset;
+pub mod compression;
+pub mod executor;
+pub mod infra;
+pub mod pipeline;
+pub mod task;
+
+pub use asset::{DataAsset, ModelMetrics, TrainedModel};
+pub use compression::CompressionModel;
+pub use executor::{Op, TaskExecutor};
+pub use infra::{InfraConfig, ResourceKind, StoreConfig};
+pub use pipeline::{Pipeline, PipelineId, PipelineTemplate};
+pub use task::{Framework, ModelType, PredictionType, TaskType};

@@ -1,0 +1,278 @@
+//! Pipelines as task digraphs (paper section IV-A1a).
+//!
+//! A pipeline G_p = (V_p, E_p) with typed task vertices. The simulator
+//! executes tasks sequentially (the paper's current system model assumes
+//! no intra-pipeline parallelism), so the digraph is validated and then
+//! linearized into an execution order.
+
+use super::task::{Framework, TaskType};
+use crate::error::{Error, Result};
+
+/// Identifier of one pipeline execution.
+pub type PipelineId = u64;
+
+/// A task vertex with its type-specific attributes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TaskNode {
+    pub task: TaskType,
+    /// Training framework (train/compress/harden tasks).
+    pub framework: Option<Framework>,
+}
+
+impl TaskNode {
+    pub fn new(task: TaskType) -> Self {
+        TaskNode {
+            task,
+            framework: None,
+        }
+    }
+
+    pub fn with_framework(task: TaskType, fw: Framework) -> Self {
+        TaskNode {
+            task,
+            framework: Some(fw),
+        }
+    }
+}
+
+/// A pipeline structure: vertices + directed edges (indices into `nodes`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Pipeline {
+    pub nodes: Vec<TaskNode>,
+    pub edges: Vec<(usize, usize)>,
+}
+
+impl Pipeline {
+    /// A linear pipeline from an ordered task list.
+    pub fn linear(nodes: Vec<TaskNode>) -> Self {
+        let edges = (1..nodes.len()).map(|i| (i - 1, i)).collect();
+        Pipeline { nodes, edges }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn has_task(&self, t: TaskType) -> bool {
+        self.nodes.iter().any(|n| n.task == t)
+    }
+
+    pub fn framework(&self) -> Option<Framework> {
+        self.nodes.iter().find_map(|n| n.framework)
+    }
+
+    /// Topological order (Kahn). Errors on cycles.
+    pub fn topo_order(&self) -> Result<Vec<usize>> {
+        let n = self.nodes.len();
+        let mut indeg = vec![0usize; n];
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for &(a, b) in &self.edges {
+            if a >= n || b >= n {
+                return Err(Error::Config(format!("edge ({a},{b}) out of range")));
+            }
+            adj[a].push(b);
+            indeg[b] += 1;
+        }
+        let mut queue: std::collections::VecDeque<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(v) = queue.pop_front() {
+            order.push(v);
+            for &w in &adj[v] {
+                indeg[w] -= 1;
+                if indeg[w] == 0 {
+                    queue.push_back(w);
+                }
+            }
+        }
+        if order.len() != n {
+            return Err(Error::Config("pipeline digraph has a cycle".into()));
+        }
+        Ok(order)
+    }
+
+    /// Structural validity (the synthesizer's "sensible pipeline" rules,
+    /// section IV-B1): a generating pipeline needs a train task; anything
+    /// operating on a model (evaluate/compress/harden/deploy) must come
+    /// after training; preprocess must precede training.
+    pub fn validate(&self) -> Result<()> {
+        let order = self.topo_order()?;
+        let pos: Vec<usize> = {
+            let mut p = vec![0; self.nodes.len()];
+            for (rank, &v) in order.iter().enumerate() {
+                p[v] = rank;
+            }
+            p
+        };
+        let train_pos = self
+            .nodes
+            .iter()
+            .position(|nd| nd.task == TaskType::Train)
+            .ok_or_else(|| Error::Config("pipeline lacks a train task".into()))?;
+        let train_rank = pos[train_pos];
+        for (i, nd) in self.nodes.iter().enumerate() {
+            match nd.task {
+                TaskType::Preprocess => {
+                    if pos[i] > train_rank {
+                        return Err(Error::Config("preprocess after train".into()));
+                    }
+                }
+                TaskType::Evaluate | TaskType::Compress | TaskType::Harden | TaskType::Deploy => {
+                    if pos[i] < train_rank {
+                        return Err(Error::Config(format!("{} before train", nd.task)));
+                    }
+                }
+                TaskType::Train => {}
+            }
+        }
+        // train/compress/harden need a framework assignment
+        for nd in &self.nodes {
+            if matches!(nd.task, TaskType::Train | TaskType::Compress | TaskType::Harden)
+                && nd.framework.is_none()
+            {
+                return Err(Error::Config(format!("{} lacks framework", nd.task)));
+            }
+        }
+        Ok(())
+    }
+
+    /// The sequential execution order of task indices.
+    pub fn execution_order(&self) -> Result<Vec<usize>> {
+        self.validate()?;
+        self.topo_order()
+    }
+
+    /// Compact signature like "p-t-e-d" (paper's shorthand).
+    pub fn signature(&self) -> String {
+        self.topo_order()
+            .map(|o| {
+                o.iter()
+                    .map(|&i| self.nodes[i].task.short().to_string())
+                    .collect::<Vec<_>>()
+                    .join("-")
+            })
+            .unwrap_or_else(|_| "<cyclic>".into())
+    }
+}
+
+/// The prototypical pipeline structures of Fig 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PipelineTemplate {
+    /// Fig 1(1): process – train – validate – deploy.
+    Simple,
+    /// Fig 1(2): extended with custom steps (compress / harden).
+    Extended,
+    /// Fig 1(3): hierarchical with transfer learning (base model train
+    /// feeding a fine-tune train).
+    Hierarchical,
+}
+
+impl PipelineTemplate {
+    pub fn build(&self, fw: Framework) -> Pipeline {
+        use TaskType::*;
+        match self {
+            PipelineTemplate::Simple => Pipeline::linear(vec![
+                TaskNode::new(Preprocess),
+                TaskNode::with_framework(Train, fw),
+                TaskNode::new(Evaluate),
+                TaskNode::new(Deploy),
+            ]),
+            PipelineTemplate::Extended => Pipeline::linear(vec![
+                TaskNode::new(Preprocess),
+                TaskNode::with_framework(Train, fw),
+                TaskNode::new(Evaluate),
+                TaskNode::with_framework(Compress, fw),
+                TaskNode::with_framework(Harden, fw),
+                TaskNode::new(Evaluate),
+                TaskNode::new(Deploy),
+            ]),
+            PipelineTemplate::Hierarchical => Pipeline::linear(vec![
+                TaskNode::new(Preprocess),
+                TaskNode::with_framework(Train, fw), // base model
+                TaskNode::with_framework(Train, fw), // transfer fine-tune
+                TaskNode::new(Evaluate),
+                TaskNode::new(Deploy),
+            ]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_pipeline_valid() {
+        let p = PipelineTemplate::Simple.build(Framework::SparkML);
+        p.validate().unwrap();
+        assert_eq!(p.signature(), "p-t-e-d");
+    }
+
+    #[test]
+    fn all_templates_valid() {
+        for t in [
+            PipelineTemplate::Simple,
+            PipelineTemplate::Extended,
+            PipelineTemplate::Hierarchical,
+        ] {
+            t.build(Framework::TensorFlow).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn rejects_eval_before_train() {
+        let p = Pipeline::linear(vec![
+            TaskNode::new(TaskType::Evaluate),
+            TaskNode::with_framework(TaskType::Train, Framework::Caffe),
+        ]);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_missing_train() {
+        let p = Pipeline::linear(vec![TaskNode::new(TaskType::Preprocess)]);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_cycle() {
+        let mut p = PipelineTemplate::Simple.build(Framework::SparkML);
+        p.edges.push((3, 0));
+        assert!(p.topo_order().is_err());
+    }
+
+    #[test]
+    fn rejects_train_without_framework() {
+        let p = Pipeline::linear(vec![TaskNode::new(TaskType::Train)]);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        // diamond: 0 -> {1,2} -> 3
+        let p = Pipeline {
+            nodes: vec![
+                TaskNode::new(TaskType::Preprocess),
+                TaskNode::with_framework(TaskType::Train, Framework::SparkML),
+                TaskNode::new(TaskType::Evaluate),
+                TaskNode::new(TaskType::Deploy),
+            ],
+            edges: vec![(0, 1), (1, 2), (1, 3), (2, 3)],
+        };
+        let order = p.topo_order().unwrap();
+        let rank = |i: usize| order.iter().position(|&v| v == i).unwrap();
+        assert!(rank(0) < rank(1));
+        assert!(rank(1) < rank(2));
+        assert!(rank(2) < rank(3));
+    }
+
+    #[test]
+    fn hierarchical_has_two_train_tasks() {
+        let p = PipelineTemplate::Hierarchical.build(Framework::TensorFlow);
+        let trains = p.nodes.iter().filter(|n| n.task == TaskType::Train).count();
+        assert_eq!(trains, 2);
+    }
+}

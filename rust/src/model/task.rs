@@ -1,0 +1,182 @@
+//! Task types, ML frameworks, and model categories.
+
+use std::fmt;
+
+/// Pipeline task types τ (paper section IV-A1a):
+/// τ ∈ {preprocess, train, evaluate, compress, harden, deploy}.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TaskType {
+    /// Data preprocessing (runs on the generic compute cluster).
+    Preprocess,
+    /// Model training (runs on the GPU/learning cluster).
+    Train,
+    /// Model evaluation / validation.
+    Evaluate,
+    /// Model compression (learning cluster; ~training cost, section V-A2d).
+    Compress,
+    /// Robustness hardening (e.g. adversarial training).
+    Harden,
+    /// Model deployment to serving.
+    Deploy,
+}
+
+impl TaskType {
+    pub const ALL: [TaskType; 6] = [
+        TaskType::Preprocess,
+        TaskType::Train,
+        TaskType::Evaluate,
+        TaskType::Compress,
+        TaskType::Harden,
+        TaskType::Deploy,
+    ];
+
+    /// Paper shorthand: the first letter of the type.
+    pub fn short(&self) -> char {
+        match self {
+            TaskType::Preprocess => 'p',
+            TaskType::Train => 't',
+            TaskType::Evaluate => 'e',
+            TaskType::Compress => 'c',
+            TaskType::Harden => 'h',
+            TaskType::Deploy => 'd',
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskType::Preprocess => "preprocess",
+            TaskType::Train => "train",
+            TaskType::Evaluate => "evaluate",
+            TaskType::Compress => "compress",
+            TaskType::Harden => "harden",
+            TaskType::Deploy => "deploy",
+        }
+    }
+}
+
+impl fmt::Display for TaskType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// ML frameworks with the production share the paper reports
+/// (section IV-B1: 63% SparkML, 32% TensorFlow, 3% PyTorch, 1% Caffe,
+/// 1% other).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Framework {
+    SparkML,
+    TensorFlow,
+    PyTorch,
+    Caffe,
+    Other,
+}
+
+impl Framework {
+    pub const ALL: [Framework; 5] = [
+        Framework::SparkML,
+        Framework::TensorFlow,
+        Framework::PyTorch,
+        Framework::Caffe,
+        Framework::Other,
+    ];
+
+    /// The paper's observed production mix.
+    pub fn paper_share(&self) -> f64 {
+        match self {
+            Framework::SparkML => 0.63,
+            Framework::TensorFlow => 0.32,
+            Framework::PyTorch => 0.03,
+            Framework::Caffe => 0.01,
+            Framework::Other => 0.01,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Framework::SparkML => "sparkml",
+            Framework::TensorFlow => "tensorflow",
+            Framework::PyTorch => "pytorch",
+            Framework::Caffe => "caffe",
+            Framework::Other => "other",
+        }
+    }
+
+    pub fn index(&self) -> usize {
+        Self::ALL.iter().position(|f| f == self).unwrap()
+    }
+}
+
+impl fmt::Display for Framework {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Prediction type M_t of a trained model (static property).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PredictionType {
+    Binary,
+    Multiclass,
+    Regression,
+}
+
+/// Model/estimator type M_e (static property).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelType {
+    LinearRegression,
+    LogisticRegression,
+    RandomForest,
+    GradientBoosting,
+    NeuralNetwork,
+}
+
+impl ModelType {
+    pub const ALL: [ModelType; 5] = [
+        ModelType::LinearRegression,
+        ModelType::LogisticRegression,
+        ModelType::RandomForest,
+        ModelType::GradientBoosting,
+        ModelType::NeuralNetwork,
+    ];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shares_sum_to_one() {
+        let total: f64 = Framework::ALL.iter().map(|f| f.paper_share()).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shorthand_letters() {
+        assert_eq!(TaskType::Preprocess.short(), 'p');
+        assert_eq!(TaskType::Train.short(), 't');
+        assert_eq!(TaskType::Evaluate.short(), 'e');
+    }
+
+    #[test]
+    fn display_names() {
+        assert_eq!(TaskType::Train.to_string(), "train");
+        assert_eq!(Framework::TensorFlow.to_string(), "tensorflow");
+    }
+
+    #[test]
+    fn framework_index_roundtrip() {
+        for (i, f) in Framework::ALL.iter().enumerate() {
+            assert_eq!(f.index(), i);
+        }
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        use crate::model::Framework;
+        for fw in Framework::ALL {
+            assert_eq!(Framework::parse_name(fw.name()).unwrap(), fw);
+        }
+        assert!(Framework::parse_name("bogus").is_err());
+    }
+}

@@ -1,0 +1,429 @@
+//! PJRT client wrapper and typed executors for the AOT modules.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::stats::gmm::{Gmm1, Gmm3};
+
+// AOT shapes — must match python/compile/model.py (checked against
+// artifacts/manifest.json at load time).
+pub const N_FIT: usize = 8192;
+pub const N_SAMPLE: usize = 4096;
+pub const D: usize = 3;
+pub const K3: usize = 50;
+pub const K1: usize = 8;
+
+/// Names of the HLO modules the runtime loads.
+const MODULES: [&str; 5] = [
+    "gmm_em_step3",
+    "gmm_em_step1",
+    "gmm_sample3",
+    "gmm_sample1",
+    "preproc_duration",
+];
+
+/// The loaded runtime: one compiled executable per artifact.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    em_step3: xla::PjRtLoadedExecutable,
+    em_step1: xla::PjRtLoadedExecutable,
+    sample3: xla::PjRtLoadedExecutable,
+    sample1: xla::PjRtLoadedExecutable,
+    preproc: xla::PjRtLoadedExecutable,
+    /// Executions performed, per module (perf accounting).
+    pub exec_count: std::cell::Cell<u64>,
+}
+
+fn f32_literal(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    Ok(lit.reshape(dims)?)
+}
+
+impl Runtime {
+    /// Load and compile all artifacts from `dir` (default `artifacts/`).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        if manifest_path.exists() {
+            let manifest = crate::util::Json::load(&manifest_path)?;
+            let shapes = manifest.req("shapes")?;
+            for (name, want) in [
+                ("N_FIT", N_FIT),
+                ("N_SAMPLE", N_SAMPLE),
+                ("D", D),
+                ("K3", K3),
+                ("K1", K1),
+            ] {
+                let got = shapes.get(name).and_then(|v| v.as_usize().ok()).unwrap_or(0);
+                if got != want {
+                    return Err(Error::Config(format!(
+                        "artifact manifest {name}={got}, runtime built for {want}; re-run `make artifacts`"
+                    )));
+                }
+            }
+        }
+        let client = xla::PjRtClient::cpu()?;
+        let mut exes = Vec::with_capacity(MODULES.len());
+        for name in MODULES {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            if !path.exists() {
+                return Err(Error::Config(format!(
+                    "missing artifact {}; run `make artifacts`",
+                    path.display()
+                )));
+            }
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            exes.push(client.compile(&comp)?);
+        }
+        let mut it = exes.into_iter();
+        Ok(Runtime {
+            client,
+            em_step3: it.next().unwrap(),
+            em_step1: it.next().unwrap(),
+            sample3: it.next().unwrap(),
+            sample1: it.next().unwrap(),
+            preproc: it.next().unwrap(),
+            exec_count: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Default artifact location relative to the repo root / cwd.
+    pub fn default_dir() -> PathBuf {
+        // honor PIPESIM_ARTIFACTS, else ./artifacts
+        std::env::var("PIPESIM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Try loading from the default dir; None if artifacts are not built.
+    pub fn load_default() -> Option<Runtime> {
+        let dir = Self::default_dir();
+        Runtime::load(&dir).ok()
+    }
+
+    fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        self.exec_count.set(self.exec_count.get() + 1);
+        let result = exe.execute::<L>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    // ---------------------------------------------------------------
+    // gmm_em_step3: (X[N,3], logw[50], mu[50,3], pchol[50,3,3])
+    //            -> (logw', mu', cchol', pchol', loglik)
+    // ---------------------------------------------------------------
+
+    /// Pre-build the data literal for [`Runtime::em_step3_lit`] so the
+    /// fit loop uploads X once instead of per iteration.
+    pub fn em_data3(&self, x: &[f32]) -> Result<xla::Literal> {
+        assert_eq!(x.len(), N_FIT * D);
+        f32_literal(x, &[N_FIT as i64, D as i64])
+    }
+
+    /// One EM step for the 3-D asset mixture. `x` is row-major [N_FIT*3].
+    /// Updates `g` in place and returns the pre-step log-likelihood.
+    pub fn em_step3(&self, x: &[f32], g: &mut Gmm3) -> Result<f64> {
+        let x_lit = self.em_data3(x)?;
+        self.em_step3_lit(&x_lit, g)
+    }
+
+    /// EM step against a pre-built data literal (hot fit loop).
+    pub fn em_step3_lit(&self, x_lit: &xla::Literal, g: &mut Gmm3) -> Result<f64> {
+        assert_eq!(g.k(), K3);
+        let logw: Vec<f32> = g.logw.iter().map(|&v| v as f32).collect();
+        let mu: Vec<f32> = g.mu.iter().flat_map(|m| m.iter().map(|&v| v as f32)).collect();
+        let pchol: Vec<f32> = g
+            .pchol
+            .iter()
+            .flat_map(|m| m.iter().flatten().map(|&v| v as f32))
+            .collect();
+        let logw_lit = f32_literal(&logw, &[K3 as i64])?;
+        let mu_lit = f32_literal(&mu, &[K3 as i64, D as i64])?;
+        let pchol_lit = f32_literal(&pchol, &[K3 as i64, D as i64, D as i64])?;
+        let outs = self.run(
+            &self.em_step3,
+            &[x_lit, &logw_lit, &mu_lit, &pchol_lit],
+        )?;
+        if outs.len() != 5 {
+            return Err(Error::Other(format!("em_step3: {} outputs", outs.len())));
+        }
+        let new_logw = outs[0].to_vec::<f32>()?;
+        let new_mu = outs[1].to_vec::<f32>()?;
+        let new_cchol = outs[2].to_vec::<f32>()?;
+        let new_pchol = outs[3].to_vec::<f32>()?;
+        let ll = outs[4].to_vec::<f32>()?[0] as f64;
+        for k in 0..K3 {
+            g.logw[k] = new_logw[k] as f64;
+            for d in 0..D {
+                g.mu[k][d] = new_mu[k * D + d] as f64;
+                for e in 0..D {
+                    g.cchol[k][d][e] = new_cchol[(k * D + d) * D + e] as f64;
+                    g.pchol[k][d][e] = new_pchol[(k * D + d) * D + e] as f64;
+                }
+            }
+        }
+        Ok(ll)
+    }
+
+    // ---------------------------------------------------------------
+    // gmm_em_step1: (x[N], logw[8], mu[8], logsd[8]) -> (.., loglik)
+    // ---------------------------------------------------------------
+
+    /// One EM step for a 1-D duration mixture.
+    pub fn em_step1(&self, x: &[f32], g: &mut Gmm1) -> Result<f64> {
+        assert_eq!(x.len(), N_FIT);
+        assert_eq!(g.k(), K1);
+        let logw: Vec<f32> = g.logw.iter().map(|&v| v as f32).collect();
+        let mu: Vec<f32> = g.mu.iter().map(|&v| v as f32).collect();
+        let logsd: Vec<f32> = g.logsd.iter().map(|&v| v as f32).collect();
+        let outs = self.run(
+            &self.em_step1,
+            &[
+                f32_literal(x, &[N_FIT as i64])?,
+                f32_literal(&logw, &[K1 as i64])?,
+                f32_literal(&mu, &[K1 as i64])?,
+                f32_literal(&logsd, &[K1 as i64])?,
+            ],
+        )?;
+        if outs.len() != 4 {
+            return Err(Error::Other(format!("em_step1: {} outputs", outs.len())));
+        }
+        let new_logw = outs[0].to_vec::<f32>()?;
+        let new_mu = outs[1].to_vec::<f32>()?;
+        let new_logsd = outs[2].to_vec::<f32>()?;
+        let ll = outs[3].to_vec::<f32>()?[0] as f64;
+        for k in 0..K1 {
+            g.logw[k] = new_logw[k] as f64;
+            g.mu[k] = new_mu[k] as f64;
+            g.logsd[k] = new_logsd[k] as f64;
+        }
+        Ok(ll)
+    }
+
+    // ---------------------------------------------------------------
+    // gmm_sample3: (logw, mu, cchol, u[N], z[N,3]) -> s[N,3]
+    // ---------------------------------------------------------------
+
+    /// Batch-sample N_SAMPLE points from the 3-D mixture. `u`/`z` are the
+    /// Rust-generated uniforms and normals. Returns row-major [N*3].
+    pub fn sample3(&self, g: &Gmm3, u: &[f32], z: &[f32]) -> Result<Vec<f32>> {
+        assert_eq!(u.len(), N_SAMPLE);
+        assert_eq!(z.len(), N_SAMPLE * D);
+        assert_eq!(g.k(), K3);
+        let logw: Vec<f32> = g.logw.iter().map(|&v| v as f32).collect();
+        let mu: Vec<f32> = g.mu.iter().flat_map(|m| m.iter().map(|&v| v as f32)).collect();
+        let cchol: Vec<f32> = g
+            .cchol
+            .iter()
+            .flat_map(|m| m.iter().flatten().map(|&v| v as f32))
+            .collect();
+        let outs = self.run(
+            &self.sample3,
+            &[
+                f32_literal(&logw, &[K3 as i64])?,
+                f32_literal(&mu, &[K3 as i64, D as i64])?,
+                f32_literal(&cchol, &[K3 as i64, D as i64, D as i64])?,
+                f32_literal(u, &[N_SAMPLE as i64])?,
+                f32_literal(z, &[N_SAMPLE as i64, D as i64])?,
+            ],
+        )?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    // ---------------------------------------------------------------
+    // gmm_sample1: (logw, mu, logsd, u[N], z[N]) -> s[N]
+    // ---------------------------------------------------------------
+
+    /// Batch-sample N_SAMPLE points from a 1-D mixture.
+    pub fn sample1(&self, g: &Gmm1, u: &[f32], z: &[f32]) -> Result<Vec<f32>> {
+        assert_eq!(u.len(), N_SAMPLE);
+        assert_eq!(z.len(), N_SAMPLE);
+        assert_eq!(g.k(), K1);
+        let logw: Vec<f32> = g.logw.iter().map(|&v| v as f32).collect();
+        let mu: Vec<f32> = g.mu.iter().map(|&v| v as f32).collect();
+        let logsd: Vec<f32> = g.logsd.iter().map(|&v| v as f32).collect();
+        let outs = self.run(
+            &self.sample1,
+            &[
+                f32_literal(&logw, &[K1 as i64])?,
+                f32_literal(&mu, &[K1 as i64])?,
+                f32_literal(&logsd, &[K1 as i64])?,
+                f32_literal(u, &[N_SAMPLE as i64])?,
+                f32_literal(z, &[N_SAMPLE as i64])?,
+            ],
+        )?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    // ---------------------------------------------------------------
+    // preproc_duration: (logsize[N], abc[3], noise[2], z[N]) -> t[N]
+    // ---------------------------------------------------------------
+
+    /// Batch preprocess durations for N_SAMPLE log-sizes.
+    pub fn preproc_duration(
+        &self,
+        logsize: &[f32],
+        abc: [f32; 3],
+        noise: [f32; 2],
+        z: &[f32],
+    ) -> Result<Vec<f32>> {
+        assert_eq!(logsize.len(), N_SAMPLE);
+        assert_eq!(z.len(), N_SAMPLE);
+        let outs = self.run(
+            &self.preproc,
+            &[
+                f32_literal(logsize, &[N_SAMPLE as i64])?,
+                f32_literal(&abc, &[3])?,
+                f32_literal(&noise, &[2])?,
+                f32_literal(z, &[N_SAMPLE as i64])?,
+            ],
+        )?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! These tests require built artifacts; they skip gracefully when
+    //! `artifacts/` is absent (plain `cargo test` before `make artifacts`).
+    use super::*;
+    use crate::stats::rng::Pcg64;
+
+    fn runtime() -> Option<Runtime> {
+        Runtime::load_default()
+    }
+
+    fn toy_gmm3() -> Gmm3 {
+        // K3 components but only 2 carry weight — easy moment checks
+        let mut logw = vec![-50.0f64; K3];
+        logw[0] = 0.7f64.ln();
+        logw[1] = 0.3f64.ln();
+        let mut mu = vec![[0.0; 3]; K3];
+        mu[0] = [-2.0, 0.0, 1.0];
+        mu[1] = [3.0, 1.0, -1.0];
+        let eye = [[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]];
+        Gmm3 {
+            logw,
+            mu,
+            cchol: vec![eye; K3],
+            pchol: vec![eye; K3],
+        }
+    }
+
+    #[test]
+    fn sample3_moments_match() {
+        let Some(rt) = runtime() else { return };
+        let g = toy_gmm3();
+        let mut rng = Pcg64::new(1);
+        let mut mean = [0.0f64; 3];
+        let rounds = 8;
+        for _ in 0..rounds {
+            let mut u = vec![0f32; N_SAMPLE];
+            let mut z = vec![0f32; N_SAMPLE * D];
+            rng.fill_uniform_f32(&mut u);
+            rng.fill_normal_f32(&mut z);
+            let s = rt.sample3(&g, &u, &z).unwrap();
+            for row in s.chunks(3) {
+                for d in 0..3 {
+                    mean[d] += row[d] as f64;
+                }
+            }
+        }
+        let n = (rounds * N_SAMPLE) as f64;
+        let want = [0.7 * -2.0 + 0.3 * 3.0, 0.3, 0.7 - 0.3];
+        for d in 0..3 {
+            let got = mean[d] / n;
+            assert!((got - want[d]).abs() < 0.05, "dim {d}: {got} vs {}", want[d]);
+        }
+    }
+
+    #[test]
+    fn sample1_moments_match() {
+        let Some(rt) = runtime() else { return };
+        let mut logw = vec![-50.0f64; K1];
+        logw[0] = 0.5f64.ln();
+        logw[1] = 0.5f64.ln();
+        let mut mu = vec![0.0f64; K1];
+        mu[0] = -1.0;
+        mu[1] = 5.0;
+        let g = Gmm1 {
+            logw,
+            mu,
+            logsd: vec![0.0; K1],
+        };
+        let mut rng = Pcg64::new(2);
+        let mut u = vec![0f32; N_SAMPLE];
+        let mut z = vec![0f32; N_SAMPLE];
+        rng.fill_uniform_f32(&mut u);
+        rng.fill_normal_f32(&mut z);
+        let s = rt.sample1(&g, &u, &z).unwrap();
+        let mean: f64 = s.iter().map(|&v| v as f64).sum::<f64>() / s.len() as f64;
+        assert!((mean - 2.0).abs() < 0.1, "{mean}");
+    }
+
+    #[test]
+    fn em_step3_agrees_with_cpu_baseline() {
+        let Some(rt) = runtime() else { return };
+        // generate data from a simple mixture
+        let truth = toy_gmm3();
+        let mut rng = Pcg64::new(3);
+        let x3: Vec<[f64; 3]> = (0..N_FIT).map(|_| truth.sample(&mut rng)).collect();
+        let x_flat: Vec<f32> = x3.iter().flat_map(|r| r.iter().map(|&v| v as f32)).collect();
+
+        let mut g_rt = Gmm3::init_from_data(&x3, K3, &mut Pcg64::new(4));
+        let mut g_cpu = g_rt.clone();
+        let ll_rt = rt.em_step3(&x_flat, &mut g_rt).unwrap();
+        let ll_cpu = g_cpu.em_step(&x3).unwrap();
+        // f32 vs f64 path: relative tolerance
+        assert!(
+            (ll_rt - ll_cpu).abs() / ll_cpu.abs() < 1e-3,
+            "loglik {ll_rt} vs {ll_cpu}"
+        );
+        for k in 0..K3 {
+            for d in 0..3 {
+                assert!(
+                    (g_rt.mu[k][d] - g_cpu.mu[k][d]).abs() < 2e-2,
+                    "mu[{k}][{d}]: {} vs {}",
+                    g_rt.mu[k][d],
+                    g_cpu.mu[k][d]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn em_step1_agrees_with_cpu_baseline() {
+        let Some(rt) = runtime() else { return };
+        let mut rng = Pcg64::new(5);
+        let x: Vec<f64> = (0..N_FIT)
+            .map(|i| if i % 2 == 0 { rng.normal() } else { 4.0 + rng.normal() })
+            .collect();
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let mut g_rt = Gmm1::init_from_data(&x, K1, &mut Pcg64::new(6));
+        let mut g_cpu = g_rt.clone();
+        let ll_rt = rt.em_step1(&xf, &mut g_rt).unwrap();
+        let ll_cpu = g_cpu.em_step(&x);
+        assert!((ll_rt - ll_cpu).abs() / ll_cpu.abs() < 1e-3);
+        for k in 0..K1 {
+            assert!((g_rt.mu[k] - g_cpu.mu[k]).abs() < 2e-2);
+        }
+    }
+
+    #[test]
+    fn preproc_duration_matches_formula() {
+        let Some(rt) = runtime() else { return };
+        let logsize: Vec<f32> = (0..N_SAMPLE).map(|i| 2.0 + (i as f32) * 0.003).collect();
+        let z = vec![0f32; N_SAMPLE];
+        let t = rt
+            .preproc_duration(&logsize, [0.018, 1.330, 2.156], [-1.0, 0.15], &z)
+            .unwrap();
+        for (i, (&x, &got)) in logsize.iter().zip(&t).enumerate() {
+            let want = 0.018 * 1.330f32.powf(x) + 2.156 + (-1.0f32).exp();
+            assert!((got - want).abs() / want < 1e-3, "i={i}: {got} vs {want}");
+        }
+    }
+}

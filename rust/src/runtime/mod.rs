@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts` from the JAX/Pallas build path) and executes
+//! them on the CPU PJRT client from the simulation hot path.
+//!
+//! Python never runs here: HLO text is parsed by XLA's own parser
+//! (`HloModuleProto::from_text_file`), compiled once per module, and the
+//! executables are then pure functions fed with f32 buffers and
+//! Rust-generated randomness.
+
+pub mod client;
+pub mod fitter;
+pub mod pool;
+
+pub use client::{Runtime, D, K1, K3, N_FIT, N_SAMPLE};
+pub use fitter::{fit_gmm1, fit_gmm3};
+pub use pool::{PreprocDurationPool, SamplePool1, SamplePool3};

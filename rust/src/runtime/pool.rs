@@ -1,0 +1,286 @@
+//! Batched sample pools: amortize one PJRT execution over thousands of
+//! simulator draws.
+//!
+//! The simulator consumes samples one at a time (per pipeline arrival /
+//! task start), but PJRT executions have per-call overhead. Pools draw
+//! N_SAMPLE samples per artifact execution and hand them out
+//! incrementally — ≈1 execution per 4096 draws on the hot path. Every
+//! pool also has a pure-Rust fallback so the whole system runs (slower,
+//! identical distributions) without built artifacts.
+
+use std::rc::Rc;
+
+use super::client::{Runtime, D, N_SAMPLE};
+use crate::error::Result;
+use crate::stats::dist::{Distribution, LogNormal};
+use crate::stats::gmm::{Gmm1, Gmm3};
+use crate::stats::rng::Pcg64;
+use crate::stats::ExpCurve;
+
+/// Which engine draws the batches.
+#[derive(Clone)]
+pub enum Backend {
+    /// AOT artifacts over PJRT (the production path).
+    Runtime(Rc<Runtime>),
+    /// Pure Rust (artifact-free fallback / baseline).
+    Cpu,
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Runtime(_) => "pjrt",
+            Backend::Cpu => "cpu",
+        }
+    }
+}
+
+/// Pool over the 3-D asset mixture (`gmm_sample3`).
+pub struct SamplePool3 {
+    backend: Backend,
+    gmm: Gmm3,
+    rng: Pcg64,
+    buf: Vec<[f64; 3]>,
+    pos: usize,
+    /// Batches drawn (perf accounting).
+    pub refills: u64,
+}
+
+impl SamplePool3 {
+    pub fn new(backend: Backend, gmm: Gmm3, rng: Pcg64) -> Self {
+        SamplePool3 {
+            backend,
+            gmm,
+            rng,
+            buf: Vec::new(),
+            pos: 0,
+            refills: 0,
+        }
+    }
+
+    fn refill(&mut self) -> Result<()> {
+        self.refills += 1;
+        self.buf.clear();
+        self.pos = 0;
+        match &self.backend {
+            Backend::Runtime(rt) => {
+                let mut u = vec![0f32; N_SAMPLE];
+                let mut z = vec![0f32; N_SAMPLE * D];
+                self.rng.fill_uniform_f32(&mut u);
+                self.rng.fill_normal_f32(&mut z);
+                let s = rt.sample3(&self.gmm, &u, &z)?;
+                self.buf
+                    .extend(s.chunks(3).map(|r| [r[0] as f64, r[1] as f64, r[2] as f64]));
+            }
+            Backend::Cpu => {
+                for _ in 0..N_SAMPLE {
+                    self.buf.push(self.gmm.sample(&mut self.rng));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Next 3-D sample (log-space).
+    pub fn next(&mut self) -> Result<[f64; 3]> {
+        if self.pos >= self.buf.len() {
+            self.refill()?;
+        }
+        let s = self.buf[self.pos];
+        self.pos += 1;
+        Ok(s)
+    }
+}
+
+/// Pool over a 1-D mixture (`gmm_sample1`) — per-framework train
+/// durations, evaluate durations (all in log-space).
+pub struct SamplePool1 {
+    backend: Backend,
+    gmm: Gmm1,
+    rng: Pcg64,
+    buf: Vec<f64>,
+    pos: usize,
+    pub refills: u64,
+}
+
+impl SamplePool1 {
+    pub fn new(backend: Backend, gmm: Gmm1, rng: Pcg64) -> Self {
+        SamplePool1 {
+            backend,
+            gmm,
+            rng,
+            buf: Vec::new(),
+            pos: 0,
+            refills: 0,
+        }
+    }
+
+    fn refill(&mut self) -> Result<()> {
+        self.refills += 1;
+        self.buf.clear();
+        self.pos = 0;
+        match &self.backend {
+            Backend::Runtime(rt) => {
+                let mut u = vec![0f32; N_SAMPLE];
+                let mut z = vec![0f32; N_SAMPLE];
+                self.rng.fill_uniform_f32(&mut u);
+                self.rng.fill_normal_f32(&mut z);
+                let s = rt.sample1(&self.gmm, &u, &z)?;
+                self.buf.extend(s.iter().map(|&v| v as f64));
+            }
+            Backend::Cpu => {
+                for _ in 0..N_SAMPLE {
+                    self.buf.push(self.gmm.sample(&mut self.rng));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn next(&mut self) -> Result<f64> {
+        if self.pos >= self.buf.len() {
+            self.refill()?;
+        }
+        let s = self.buf[self.pos];
+        self.pos += 1;
+        Ok(s)
+    }
+}
+
+/// Batch evaluator of the preprocess duration model
+/// (`preproc_duration`): durations for a slab of asset log-sizes.
+pub struct PreprocDurationPool {
+    backend: Backend,
+    pub curve: ExpCurve,
+    pub noise: LogNormal,
+    rng: Pcg64,
+    pub calls: u64,
+}
+
+impl PreprocDurationPool {
+    pub fn new(backend: Backend, curve: ExpCurve, noise: LogNormal, rng: Pcg64) -> Self {
+        PreprocDurationPool {
+            backend,
+            curve,
+            noise,
+            rng,
+            calls: 0,
+        }
+    }
+
+    /// Durations for each log-size (vectorized; input length arbitrary —
+    /// chunked/padded to the artifact batch internally).
+    pub fn durations(&mut self, logsizes: &[f64]) -> Result<Vec<f64>> {
+        match &self.backend {
+            Backend::Runtime(rt) => {
+                let mut out = Vec::with_capacity(logsizes.len());
+                for chunk in logsizes.chunks(N_SAMPLE) {
+                    self.calls += 1;
+                    let mut ls = vec![0f32; N_SAMPLE];
+                    for (dst, &src) in ls.iter_mut().zip(chunk) {
+                        *dst = src as f32;
+                    }
+                    let mut z = vec![0f32; N_SAMPLE];
+                    self.rng.fill_normal_f32(&mut z);
+                    let t = rt.preproc_duration(
+                        &ls,
+                        [self.curve.a as f32, self.curve.b as f32, self.curve.c as f32],
+                        [self.noise.mu as f32, self.noise.sigma as f32],
+                        &z,
+                    )?;
+                    out.extend(t[..chunk.len()].iter().map(|&v| v as f64));
+                }
+                Ok(out)
+            }
+            Backend::Cpu => {
+                self.calls += 1;
+                Ok(logsizes
+                    .iter()
+                    .map(|&x| self.curve.eval(x) + self.noise.sample(&mut self.rng))
+                    .collect())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_gmm1() -> Gmm1 {
+        Gmm1 {
+            logw: vec![0.5f64.ln(), 0.5f64.ln()],
+            mu: vec![0.0, 10.0],
+            logsd: vec![0.0, 0.0],
+        }
+    }
+
+    #[test]
+    fn cpu_pool1_statistics() {
+        let mut pool = SamplePool1::new(Backend::Cpu, toy_gmm1(), Pcg64::new(1));
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| pool.next().unwrap()).sum::<f64>() / n as f64;
+        assert!((mean - 5.0).abs() < 0.1, "{mean}");
+        assert!(pool.refills >= (n / N_SAMPLE) as u64);
+    }
+
+    #[test]
+    fn cpu_pool3_statistics() {
+        let eye = [[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]];
+        let g = Gmm3 {
+            logw: vec![0.0],
+            mu: vec![[1.0, 2.0, 3.0]],
+            cchol: vec![eye],
+            pchol: vec![eye],
+        };
+        let mut pool = SamplePool3::new(Backend::Cpu, g, Pcg64::new(2));
+        let n = 20_000;
+        let mut mean = [0.0f64; 3];
+        for _ in 0..n {
+            let s = pool.next().unwrap();
+            for d in 0..3 {
+                mean[d] += s[d];
+            }
+        }
+        for (d, want) in [1.0, 2.0, 3.0].iter().enumerate() {
+            let got = mean[d] / n as f64;
+            assert!((got - want).abs() < 0.05, "dim {d}: {got}");
+        }
+    }
+
+    #[test]
+    fn preproc_cpu_matches_curve() {
+        let curve = ExpCurve { a: 0.018, b: 1.330, c: 2.156 };
+        let mut pool = PreprocDurationPool::new(
+            Backend::Cpu,
+            curve,
+            LogNormal::new(-1.0, 0.15),
+            Pcg64::new(3),
+        );
+        let xs = vec![5.0, 10.0, 15.0];
+        let t = pool.durations(&xs).unwrap();
+        for (&x, &d) in xs.iter().zip(&t) {
+            assert!(d > curve.eval(x), "noise is positive lognormal");
+            assert!(d < curve.eval(x) + 2.0);
+        }
+    }
+
+    #[test]
+    fn runtime_pools_match_cpu_distribution() {
+        let Some(rt) = Runtime::load_default() else { return };
+        let rt = Rc::new(rt);
+        // pad toy mixture to K1 components
+        let mut logw = vec![-60.0f64; super::super::client::K1];
+        logw[0] = 0.0;
+        let mut mu = vec![0.0f64; super::super::client::K1];
+        mu[0] = 3.0;
+        let g = Gmm1 { logw, mu, logsd: vec![0.0; super::super::client::K1] };
+        let mut pjrt = SamplePool1::new(Backend::Runtime(rt), g.clone(), Pcg64::new(4));
+        let mut cpu = SamplePool1::new(Backend::Cpu, g, Pcg64::new(5));
+        let n = 2 * N_SAMPLE;
+        let a: Vec<f64> = (0..n).map(|_| pjrt.next().unwrap()).collect();
+        let b: Vec<f64> = (0..n).map(|_| cpu.next().unwrap()).collect();
+        let ks = crate::stats::desc::ks_distance(&a, &b);
+        assert!(ks < 0.03, "KS {ks}");
+    }
+}

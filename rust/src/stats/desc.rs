@@ -1,0 +1,304 @@
+//! Descriptive statistics: quantiles, ECDF, histograms, Q-Q data, KS/SSE.
+//!
+//! These back both the fitting pipeline (SSE model selection, section V-A3)
+//! and the accuracy analytics (Q-Q plots of Fig 12).
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample variance; 0 for n < 2.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+/// Sample standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Sort a copy ascending (NaNs must not be present).
+pub fn sorted(xs: &[f64]) -> Vec<f64> {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in data"));
+    v
+}
+
+/// Linear-interpolated quantile of *sorted* data, p in [0,1] (type-7, the
+/// numpy/R default).
+pub fn quantile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&p));
+    let h = p * (sorted.len() - 1) as f64;
+    let lo = h.floor() as usize;
+    let hi = h.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (h - lo as f64) * (sorted[hi] - sorted[lo])
+    }
+}
+
+/// Quantile of unsorted data.
+pub fn quantile(xs: &[f64], p: f64) -> f64 {
+    quantile_sorted(&sorted(xs), p)
+}
+
+/// `n` evenly spaced quantiles (excluding the exact 0/1 endpoints) — the
+/// axes of a Q-Q plot.
+pub fn quantiles(xs: &[f64], n: usize) -> Vec<f64> {
+    let s = sorted(xs);
+    (1..=n)
+        .map(|i| quantile_sorted(&s, i as f64 / (n + 1) as f64))
+        .collect()
+}
+
+/// Paired quantiles of two samples: the Q-Q plot of `a` (x-axis,
+/// "empirical") against `b` (y-axis, "simulated").
+pub fn qq_points(a: &[f64], b: &[f64], n: usize) -> Vec<(f64, f64)> {
+    quantiles(a, n).into_iter().zip(quantiles(b, n)).collect()
+}
+
+/// Two-sample Kolmogorov–Smirnov distance.
+pub fn ks_distance(a: &[f64], b: &[f64]) -> f64 {
+    let sa = sorted(a);
+    let sb = sorted(b);
+    let (na, nb) = (sa.len() as f64, sb.len() as f64);
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut d: f64 = 0.0;
+    while i < sa.len() && j < sb.len() {
+        let (fa, fb) = (i as f64 / na, j as f64 / nb);
+        d = d.max((fa - fb).abs());
+        if sa[i] <= sb[j] {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    // account for the unconsumed tail of either sample
+    d = d.max(((sa.len() as f64 / na) - (j as f64 / nb)).abs());
+    d = d.max(((i as f64 / na) - (sb.len() as f64 / nb)).abs());
+    d
+}
+
+/// Equal-width histogram over [lo, hi]; returns (bin_centers, counts).
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> (Vec<f64>, Vec<usize>) {
+    assert!(bins > 0 && hi > lo);
+    let w = (hi - lo) / bins as f64;
+    let mut counts = vec![0usize; bins];
+    for &x in xs {
+        if x >= lo && x < hi {
+            counts[((x - lo) / w) as usize] += 1;
+        } else if (x - hi).abs() < 1e-12 {
+            counts[bins - 1] += 1;
+        }
+    }
+    let centers = (0..bins).map(|i| lo + (i as f64 + 0.5) * w).collect();
+    (centers, counts)
+}
+
+/// Normalized histogram as an empirical density; returns (centers, density).
+pub fn density_histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> (Vec<f64>, Vec<f64>) {
+    let (centers, counts) = histogram(xs, lo, hi, bins);
+    let w = (hi - lo) / bins as f64;
+    let total: usize = counts.iter().sum();
+    let dens = counts
+        .iter()
+        .map(|&c| {
+            if total == 0 {
+                0.0
+            } else {
+                c as f64 / (total as f64 * w)
+            }
+        })
+        .collect();
+    (centers, dens)
+}
+
+/// Sum of squared errors between an empirical density histogram and a
+/// model pdf evaluated at bin centers — the paper's fit-selection
+/// criterion for the 168 arrival clusters (section V-A3).
+pub fn sse_against_pdf(xs: &[f64], pdf: impl Fn(f64) -> f64, bins: usize) -> f64 {
+    if xs.is_empty() {
+        return f64::INFINITY;
+    }
+    let s = sorted(xs);
+    let lo = s[0];
+    let hi = s[s.len() - 1];
+    if hi <= lo {
+        return f64::INFINITY;
+    }
+    let (centers, dens) = density_histogram(xs, lo, hi, bins);
+    centers
+        .iter()
+        .zip(&dens)
+        .map(|(&c, &d)| {
+            let e = d - pdf(c);
+            e * e
+        })
+        .sum()
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (ma, mb) = (mean(a), mean(b));
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for (&x, &y) in a.iter().zip(b) {
+        cov += (x - ma) * (y - mb);
+        va += (x - ma) * (x - ma);
+        vb += (y - mb) * (y - mb);
+    }
+    if va == 0.0 || vb == 0.0 {
+        0.0
+    } else {
+        cov / (va.sqrt() * vb.sqrt())
+    }
+}
+
+/// Streaming mean/min/max/count accumulator (used by monitors and reports).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub count: u64,
+    pub sum: f64,
+    pub sum_sq: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary {
+            count: 0,
+            sum: 0.0,
+            sum_sq: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        self.sum_sq += x * x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        if self.count < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        ((self.sum_sq / self.count as f64 - m * m).max(0.0)).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Pcg64;
+
+    #[test]
+    fn mean_var() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_interpolation() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert_eq!(quantile(&xs, 0.5), 2.5);
+    }
+
+    #[test]
+    fn qq_identical_samples_on_diagonal() {
+        let mut rng = Pcg64::new(1);
+        let xs: Vec<f64> = (0..10_000).map(|_| rng.normal()).collect();
+        for (x, y) in qq_points(&xs, &xs, 20) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn ks_same_vs_shifted() {
+        let mut rng = Pcg64::new(2);
+        let a: Vec<f64> = (0..20_000).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..20_000).map(|_| rng.normal()).collect();
+        let c: Vec<f64> = (0..20_000).map(|_| rng.normal() + 1.0).collect();
+        assert!(ks_distance(&a, &b) < 0.02);
+        assert!(ks_distance(&a, &c) > 0.3);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let xs = [0.5, 1.5, 1.6, 2.5, 3.0];
+        let (centers, counts) = histogram(&xs, 0.0, 3.0, 3);
+        assert_eq!(centers.len(), 3);
+        assert_eq!(counts, vec![1, 2, 2]); // 3.0 lands in the last bin
+    }
+
+    #[test]
+    fn density_integrates_to_one() {
+        let mut rng = Pcg64::new(3);
+        let xs: Vec<f64> = (0..50_000).map(|_| rng.normal()).collect();
+        let (_, dens) = density_histogram(&xs, -5.0, 5.0, 100);
+        let total: f64 = dens.iter().map(|d| d * 0.1).sum();
+        assert!((total - 1.0).abs() < 0.01, "{total}");
+    }
+
+    #[test]
+    fn sse_prefers_true_model() {
+        use crate::stats::dist::{Distribution, LogNormal, Normal};
+        let mut rng = Pcg64::new(4);
+        let d = LogNormal::new(1.0, 0.5);
+        let xs: Vec<f64> = (0..30_000).map(|_| d.sample(&mut rng)).collect();
+        let sse_true = sse_against_pdf(&xs, |x| d.pdf(x), 50);
+        let wrong = Normal::new(mean(&xs), std_dev(&xs));
+        let sse_wrong = sse_against_pdf(&xs, |x| wrong.pdf(x), 50);
+        assert!(sse_true < sse_wrong, "{sse_true} !< {sse_wrong}");
+    }
+
+    #[test]
+    fn pearson_perfect_and_none() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-12);
+        let c = [1.0, -1.0, 1.0, -1.0];
+        assert!(pearson(&a, &c).abs() < 0.5);
+    }
+
+    #[test]
+    fn summary_accumulator() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count, 3);
+        assert_eq!(s.mean(), 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.std_dev() - (2.0f64 / 3.0).sqrt()).abs() < 1e-9);
+    }
+}

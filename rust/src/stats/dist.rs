@@ -1,0 +1,540 @@
+//! Continuous distributions used by the simulator and the fitting pipeline.
+//!
+//! Each distribution implements [`Distribution`]: sampling (inverse-CDF
+//! where closed-form, otherwise transform methods), density, CDF and
+//! quantile function. The set mirrors the paper: log-normal,
+//! exponentiated Weibull and Pareto for interarrivals (section V-A3),
+//! plus Normal/Exponential/Weibull as building blocks.
+
+use super::rng::Pcg64;
+
+/// Common interface over the parametric families.
+pub trait Distribution {
+    /// Draw one sample.
+    fn sample(&self, rng: &mut Pcg64) -> f64;
+    /// Probability density at `x`.
+    fn pdf(&self, x: f64) -> f64;
+    /// Cumulative distribution at `x`.
+    fn cdf(&self, x: f64) -> f64;
+    /// Quantile (inverse CDF) at `p` in (0,1).
+    fn quantile(&self, p: f64) -> f64;
+    /// Log-likelihood of a dataset.
+    fn loglik(&self, xs: &[f64]) -> f64 {
+        xs.iter().map(|&x| self.pdf(x).max(1e-300).ln()).sum()
+    }
+}
+
+/// A closed enum over the families so fitted models can be stored/serialized.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Dist {
+    Normal(Normal),
+    LogNormal(LogNormal),
+    Exponential(Exponential),
+    Weibull(Weibull),
+    ExpWeibull(ExpWeibull),
+    Pareto(Pareto),
+}
+
+impl Dist {
+    /// Short family name (used in fit-selection reports).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dist::Normal(_) => "normal",
+            Dist::LogNormal(_) => "lognormal",
+            Dist::Exponential(_) => "exponential",
+            Dist::Weibull(_) => "weibull",
+            Dist::ExpWeibull(_) => "expweibull",
+            Dist::Pareto(_) => "pareto",
+        }
+    }
+}
+
+impl Distribution for Dist {
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        match self {
+            Dist::Normal(d) => d.sample(rng),
+            Dist::LogNormal(d) => d.sample(rng),
+            Dist::Exponential(d) => d.sample(rng),
+            Dist::Weibull(d) => d.sample(rng),
+            Dist::ExpWeibull(d) => d.sample(rng),
+            Dist::Pareto(d) => d.sample(rng),
+        }
+    }
+    fn pdf(&self, x: f64) -> f64 {
+        match self {
+            Dist::Normal(d) => d.pdf(x),
+            Dist::LogNormal(d) => d.pdf(x),
+            Dist::Exponential(d) => d.pdf(x),
+            Dist::Weibull(d) => d.pdf(x),
+            Dist::ExpWeibull(d) => d.pdf(x),
+            Dist::Pareto(d) => d.pdf(x),
+        }
+    }
+    fn cdf(&self, x: f64) -> f64 {
+        match self {
+            Dist::Normal(d) => d.cdf(x),
+            Dist::LogNormal(d) => d.cdf(x),
+            Dist::Exponential(d) => d.cdf(x),
+            Dist::Weibull(d) => d.cdf(x),
+            Dist::ExpWeibull(d) => d.cdf(x),
+            Dist::Pareto(d) => d.cdf(x),
+        }
+    }
+    fn quantile(&self, p: f64) -> f64 {
+        match self {
+            Dist::Normal(d) => d.quantile(p),
+            Dist::LogNormal(d) => d.quantile(p),
+            Dist::Exponential(d) => d.quantile(p),
+            Dist::Weibull(d) => d.quantile(p),
+            Dist::ExpWeibull(d) => d.quantile(p),
+            Dist::Pareto(d) => d.quantile(p),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// N(mu, sigma^2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Normal {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+impl Normal {
+    pub fn new(mu: f64, sigma: f64) -> Self {
+        assert!(sigma > 0.0, "sigma must be positive");
+        Normal { mu, sigma }
+    }
+}
+
+impl Distribution for Normal {
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        self.mu + self.sigma * rng.normal()
+    }
+    fn pdf(&self, x: f64) -> f64 {
+        let z = (x - self.mu) / self.sigma;
+        (-0.5 * z * z).exp() / (self.sigma * (2.0 * std::f64::consts::PI).sqrt())
+    }
+    fn cdf(&self, x: f64) -> f64 {
+        0.5 * erfc(-(x - self.mu) / (self.sigma * std::f64::consts::SQRT_2))
+    }
+    fn quantile(&self, p: f64) -> f64 {
+        self.mu + self.sigma * std_normal_quantile(p)
+    }
+}
+
+/// ln X ~ N(mu, sigma^2), X > 0.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LogNormal {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+impl LogNormal {
+    pub fn new(mu: f64, sigma: f64) -> Self {
+        assert!(sigma > 0.0);
+        LogNormal { mu, sigma }
+    }
+    pub fn mean(&self) -> f64 {
+        (self.mu + 0.5 * self.sigma * self.sigma).exp()
+    }
+    pub fn median(&self) -> f64 {
+        self.mu.exp()
+    }
+}
+
+impl Distribution for LogNormal {
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        (self.mu + self.sigma * rng.normal()).exp()
+    }
+    fn pdf(&self, x: f64) -> f64 {
+        if x <= 0.0 {
+            return 0.0;
+        }
+        let z = (x.ln() - self.mu) / self.sigma;
+        (-0.5 * z * z).exp()
+            / (x * self.sigma * (2.0 * std::f64::consts::PI).sqrt())
+    }
+    fn cdf(&self, x: f64) -> f64 {
+        if x <= 0.0 {
+            return 0.0;
+        }
+        0.5 * erfc(-(x.ln() - self.mu) / (self.sigma * std::f64::consts::SQRT_2))
+    }
+    fn quantile(&self, p: f64) -> f64 {
+        (self.mu + self.sigma * std_normal_quantile(p)).exp()
+    }
+}
+
+/// Exp(lambda): f(x) = lambda e^{-lambda x}.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Exponential {
+    pub lambda: f64,
+}
+
+impl Exponential {
+    pub fn new(lambda: f64) -> Self {
+        assert!(lambda > 0.0);
+        Exponential { lambda }
+    }
+}
+
+impl Distribution for Exponential {
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        rng.exponential(self.lambda)
+    }
+    fn pdf(&self, x: f64) -> f64 {
+        if x < 0.0 {
+            0.0
+        } else {
+            self.lambda * (-self.lambda * x).exp()
+        }
+    }
+    fn cdf(&self, x: f64) -> f64 {
+        if x < 0.0 {
+            0.0
+        } else {
+            1.0 - (-self.lambda * x).exp()
+        }
+    }
+    fn quantile(&self, p: f64) -> f64 {
+        -(1.0 - p).ln() / self.lambda
+    }
+}
+
+/// Weibull(k, lambda): F(x) = 1 - exp(-(x/lambda)^k).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Weibull {
+    /// shape
+    pub k: f64,
+    /// scale
+    pub lambda: f64,
+}
+
+impl Weibull {
+    pub fn new(k: f64, lambda: f64) -> Self {
+        assert!(k > 0.0 && lambda > 0.0);
+        Weibull { k, lambda }
+    }
+}
+
+impl Distribution for Weibull {
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        self.lambda * (-rng.uniform_pos().ln()).powf(1.0 / self.k)
+    }
+    fn pdf(&self, x: f64) -> f64 {
+        if x < 0.0 {
+            return 0.0;
+        }
+        let z = x / self.lambda;
+        (self.k / self.lambda) * z.powf(self.k - 1.0) * (-z.powf(self.k)).exp()
+    }
+    fn cdf(&self, x: f64) -> f64 {
+        if x < 0.0 {
+            0.0
+        } else {
+            1.0 - (-(x / self.lambda).powf(self.k)).exp()
+        }
+    }
+    fn quantile(&self, p: f64) -> f64 {
+        self.lambda * (-(1.0 - p).ln()).powf(1.0 / self.k)
+    }
+}
+
+/// Exponentiated Weibull(alpha, k, lambda): F(x) = (1 - exp(-(x/lambda)^k))^alpha.
+///
+/// The family the paper found to fit pipeline interarrivals best
+/// (section V-A3).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExpWeibull {
+    /// exponentiation (second shape)
+    pub alpha: f64,
+    /// Weibull shape
+    pub k: f64,
+    /// scale
+    pub lambda: f64,
+}
+
+impl ExpWeibull {
+    pub fn new(alpha: f64, k: f64, lambda: f64) -> Self {
+        assert!(alpha > 0.0 && k > 0.0 && lambda > 0.0);
+        ExpWeibull { alpha, k, lambda }
+    }
+}
+
+impl Distribution for ExpWeibull {
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        self.quantile(rng.uniform())
+    }
+    fn pdf(&self, x: f64) -> f64 {
+        if x <= 0.0 {
+            return 0.0;
+        }
+        let z = x / self.lambda;
+        let zk = z.powf(self.k);
+        let e = (-zk).exp();
+        let base = 1.0 - e;
+        if base <= 0.0 {
+            return 0.0;
+        }
+        self.alpha * (self.k / self.lambda) * z.powf(self.k - 1.0)
+            * e
+            * base.powf(self.alpha - 1.0)
+    }
+    fn cdf(&self, x: f64) -> f64 {
+        if x <= 0.0 {
+            0.0
+        } else {
+            (1.0 - (-(x / self.lambda).powf(self.k)).exp()).powf(self.alpha)
+        }
+    }
+    fn quantile(&self, p: f64) -> f64 {
+        // invert F: x = lambda * (-ln(1 - p^(1/alpha)))^(1/k)
+        let inner = 1.0 - p.powf(1.0 / self.alpha);
+        self.lambda * (-(inner.max(1e-300)).ln()).powf(1.0 / self.k)
+    }
+}
+
+/// Pareto(xm, alpha) (Type I): F(x) = 1 - (xm/x)^alpha for x >= xm.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Pareto {
+    /// scale (minimum)
+    pub xm: f64,
+    /// tail index
+    pub alpha: f64,
+}
+
+impl Pareto {
+    pub fn new(xm: f64, alpha: f64) -> Self {
+        assert!(xm > 0.0 && alpha > 0.0);
+        Pareto { xm, alpha }
+    }
+}
+
+impl Distribution for Pareto {
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        self.xm / rng.uniform_pos().powf(1.0 / self.alpha)
+    }
+    fn pdf(&self, x: f64) -> f64 {
+        if x < self.xm {
+            0.0
+        } else {
+            self.alpha * self.xm.powf(self.alpha) / x.powf(self.alpha + 1.0)
+        }
+    }
+    fn cdf(&self, x: f64) -> f64 {
+        if x < self.xm {
+            0.0
+        } else {
+            1.0 - (self.xm / x).powf(self.alpha)
+        }
+    }
+    fn quantile(&self, p: f64) -> f64 {
+        self.xm / (1.0 - p).powf(1.0 / self.alpha)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Special functions (no external deps).
+// ---------------------------------------------------------------------------
+
+/// Complementary error function (Numerical-Recipes rational approximation,
+/// |rel err| < 1.2e-7 — plenty for CDF work here).
+pub fn erfc(x: f64) -> f64 {
+    let z = x.abs();
+    let t = 1.0 / (1.0 + 0.5 * z);
+    let ans = t
+        * (-z * z - 1.26551223
+            + t * (1.00002368
+                + t * (0.37409196
+                    + t * (0.09678418
+                        + t * (-0.18628806
+                            + t * (0.27886807
+                                + t * (-1.13520398
+                                    + t * (1.48851587
+                                        + t * (-0.82215223 + t * 0.17087277)))))))))
+        .exp();
+    if x >= 0.0 {
+        ans
+    } else {
+        2.0 - ans
+    }
+}
+
+/// Standard normal quantile (Acklam's algorithm, |rel err| < 1.15e-9).
+pub fn std_normal_quantile(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "quantile needs p in (0,1), got {p}");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_quantile_roundtrip(d: &dyn Distribution) {
+        for &p in &[0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99] {
+            let x = d.quantile(p);
+            let back = d.cdf(x);
+            assert!((back - p).abs() < 1e-6, "p={p} x={x} back={back}");
+        }
+    }
+
+    fn check_sample_matches_cdf(d: &dyn Distribution, seed: u64) {
+        // KS-style check: empirical CDF of 50k samples vs analytic CDF.
+        let mut rng = Pcg64::new(seed);
+        let mut xs: Vec<f64> = (0..50_000).map(|_| d.sample(&mut rng)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len() as f64;
+        let mut dmax: f64 = 0.0;
+        for (i, &x) in xs.iter().enumerate() {
+            let emp = (i + 1) as f64 / n;
+            dmax = dmax.max((emp - d.cdf(x)).abs());
+        }
+        // KS critical value at alpha=0.001 for n=50k is ~0.0087
+        assert!(dmax < 0.012, "KS distance {dmax}");
+    }
+
+    #[test]
+    fn normal_basics() {
+        let d = Normal::new(2.0, 3.0);
+        // erfc approximation is good to ~1.2e-7
+        assert!((d.cdf(2.0) - 0.5).abs() < 1e-6);
+        assert!((d.quantile(0.975) - (2.0 + 3.0 * 1.959964)).abs() < 1e-3);
+        check_quantile_roundtrip(&d);
+        check_sample_matches_cdf(&d, 10);
+    }
+
+    #[test]
+    fn lognormal_basics() {
+        let d = LogNormal::new(1.0, 0.5);
+        assert!((d.median() - 1.0f64.exp()).abs() < 1e-9);
+        assert!((d.mean() - (1.0 + 0.125f64).exp()).abs() < 1e-9);
+        check_quantile_roundtrip(&d);
+        check_sample_matches_cdf(&d, 11);
+    }
+
+    #[test]
+    fn exponential_basics() {
+        let d = Exponential::new(2.0);
+        assert!((d.quantile(0.5) - 0.5f64.ln().abs() / 2.0).abs() < 1e-9);
+        check_quantile_roundtrip(&d);
+        check_sample_matches_cdf(&d, 12);
+    }
+
+    #[test]
+    fn weibull_basics() {
+        let d = Weibull::new(1.5, 10.0);
+        check_quantile_roundtrip(&d);
+        check_sample_matches_cdf(&d, 13);
+        // k=1 degenerates to exponential
+        let w = Weibull::new(1.0, 2.0);
+        let e = Exponential::new(0.5);
+        for &x in &[0.1, 1.0, 5.0] {
+            assert!((w.cdf(x) - e.cdf(x)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn expweibull_basics() {
+        let d = ExpWeibull::new(2.5, 0.8, 30.0);
+        check_quantile_roundtrip(&d);
+        check_sample_matches_cdf(&d, 14);
+        // alpha=1 degenerates to plain Weibull
+        let ew = ExpWeibull::new(1.0, 1.3, 4.0);
+        let w = Weibull::new(1.3, 4.0);
+        for &x in &[0.5, 2.0, 8.0] {
+            assert!((ew.cdf(x) - w.cdf(x)).abs() < 1e-12);
+            assert!((ew.pdf(x) - w.pdf(x)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn pareto_basics() {
+        let d = Pareto::new(1.5, 2.5);
+        assert_eq!(d.cdf(1.0), 0.0);
+        check_quantile_roundtrip(&d);
+        check_sample_matches_cdf(&d, 15);
+    }
+
+    #[test]
+    fn pdf_integrates_to_one() {
+        // trapezoid integration sanity for the exotic families
+        let d = ExpWeibull::new(2.0, 1.2, 5.0);
+        let mut total = 0.0;
+        let (lo, hi, n) = (1e-6, 200.0, 400_000);
+        let h = (hi - lo) / n as f64;
+        for i in 0..n {
+            let x = lo + (i as f64 + 0.5) * h;
+            total += d.pdf(x) * h;
+        }
+        assert!((total - 1.0).abs() < 1e-3, "integral={total}");
+    }
+
+    #[test]
+    fn erfc_reference_values() {
+        assert!((erfc(0.0) - 1.0).abs() < 1e-7);
+        assert!((erfc(1.0) - 0.157_299_2).abs() < 1e-6);
+        assert!((erfc(-1.0) - 1.842_700_8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normal_quantile_reference_values() {
+        assert!(std_normal_quantile(0.5).abs() < 1e-9);
+        assert!((std_normal_quantile(0.975) - 1.959_964).abs() < 1e-5);
+        assert!((std_normal_quantile(0.025) + 1.959_964).abs() < 1e-5);
+    }
+
+    #[test]
+    fn dist_enum_dispatch() {
+        let mut rng = Pcg64::new(16);
+        let d = Dist::LogNormal(LogNormal::new(0.0, 1.0));
+        assert_eq!(d.name(), "lognormal");
+        let x = d.sample(&mut rng);
+        assert!(x > 0.0);
+        assert!((d.cdf(d.quantile(0.3)) - 0.3).abs() < 1e-6);
+    }
+}

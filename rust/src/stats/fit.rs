@@ -1,0 +1,404 @@
+//! Distribution fitting: closed-form MLEs, Nelder–Mead MLE for the
+//! exponentiated Weibull, nonlinear least squares for the preprocess
+//! duration curve, and the paper's SSE-based family selection.
+
+use super::desc::{mean, sse_against_pdf, std_dev};
+use super::dist::{Dist, Distribution, ExpWeibull, Exponential, LogNormal, Normal, Pareto, Weibull};
+use crate::error::{Error, Result};
+
+// ---------------------------------------------------------------------------
+// Nelder–Mead simplex minimizer (dependency-free).
+// ---------------------------------------------------------------------------
+
+/// Minimize `f` over R^n starting from `x0` with initial step `step`.
+/// Returns (argmin, min). Standard coefficients, adaptive-free.
+pub fn nelder_mead(
+    f: impl Fn(&[f64]) -> f64,
+    x0: &[f64],
+    step: f64,
+    max_iter: usize,
+    tol: f64,
+) -> (Vec<f64>, f64) {
+    let n = x0.len();
+    let (alpha, gamma, rho, sigma) = (1.0, 2.0, 0.5, 0.5);
+    // initial simplex
+    let mut simplex: Vec<(Vec<f64>, f64)> = Vec::with_capacity(n + 1);
+    simplex.push((x0.to_vec(), f(x0)));
+    for i in 0..n {
+        let mut x = x0.to_vec();
+        x[i] += if x[i].abs() > 1e-12 { step * x[i].abs() } else { step };
+        let fx = f(&x);
+        simplex.push((x, fx));
+    }
+
+    for _ in 0..max_iter {
+        simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        if (simplex[n].1 - simplex[0].1).abs() < tol * (1.0 + simplex[0].1.abs()) {
+            break;
+        }
+        // centroid of all but worst
+        let mut c = vec![0.0; n];
+        for (x, _) in &simplex[..n] {
+            for (ci, xi) in c.iter_mut().zip(x) {
+                *ci += xi / n as f64;
+            }
+        }
+        let worst = simplex[n].clone();
+        let refl: Vec<f64> = c.iter().zip(&worst.0).map(|(ci, wi)| ci + alpha * (ci - wi)).collect();
+        let f_refl = f(&refl);
+        if f_refl < simplex[0].1 {
+            // expand
+            let exp: Vec<f64> = c.iter().zip(&refl).map(|(ci, ri)| ci + gamma * (ri - ci)).collect();
+            let f_exp = f(&exp);
+            simplex[n] = if f_exp < f_refl { (exp, f_exp) } else { (refl, f_refl) };
+        } else if f_refl < simplex[n - 1].1 {
+            simplex[n] = (refl, f_refl);
+        } else {
+            // contract
+            let con: Vec<f64> = c.iter().zip(&worst.0).map(|(ci, wi)| ci + rho * (wi - ci)).collect();
+            let f_con = f(&con);
+            if f_con < worst.1 {
+                simplex[n] = (con, f_con);
+            } else {
+                // shrink toward best
+                let best = simplex[0].0.clone();
+                for entry in simplex.iter_mut().skip(1) {
+                    let x: Vec<f64> = best
+                        .iter()
+                        .zip(&entry.0)
+                        .map(|(bi, xi)| bi + sigma * (xi - bi))
+                        .collect();
+                    let fx = f(&x);
+                    *entry = (x, fx);
+                }
+            }
+        }
+    }
+    simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    simplex[0].clone()
+}
+
+// ---------------------------------------------------------------------------
+// Per-family fitters.
+// ---------------------------------------------------------------------------
+
+/// MLE for Normal: sample mean / std.
+pub fn fit_normal(xs: &[f64]) -> Result<Normal> {
+    if xs.len() < 2 {
+        return Err(Error::Stats("fit_normal: need >= 2 points".into()));
+    }
+    let s = std_dev(xs).max(1e-12);
+    Ok(Normal::new(mean(xs), s))
+}
+
+/// MLE for LogNormal: Normal MLE on ln(x).
+pub fn fit_lognormal(xs: &[f64]) -> Result<LogNormal> {
+    if xs.iter().any(|&x| x <= 0.0) {
+        return Err(Error::Stats("fit_lognormal: non-positive data".into()));
+    }
+    let logs: Vec<f64> = xs.iter().map(|x| x.ln()).collect();
+    let n = fit_normal(&logs)?;
+    Ok(LogNormal::new(n.mu, n.sigma))
+}
+
+/// MLE for Exponential: 1 / mean.
+pub fn fit_exponential(xs: &[f64]) -> Result<Exponential> {
+    let m = mean(xs);
+    if m <= 0.0 {
+        return Err(Error::Stats("fit_exponential: non-positive mean".into()));
+    }
+    Ok(Exponential::new(1.0 / m))
+}
+
+/// MLE for Pareto with xm = min(x).
+pub fn fit_pareto(xs: &[f64]) -> Result<Pareto> {
+    let xm = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    if !(xm > 0.0) {
+        return Err(Error::Stats("fit_pareto: need positive data".into()));
+    }
+    let s: f64 = xs.iter().map(|&x| (x / xm).ln()).sum();
+    if s <= 0.0 {
+        return Err(Error::Stats("fit_pareto: degenerate data".into()));
+    }
+    Ok(Pareto::new(xm, xs.len() as f64 / s))
+}
+
+/// MLE for Weibull via Nelder–Mead on (ln k, ln lambda).
+pub fn fit_weibull(xs: &[f64]) -> Result<Weibull> {
+    if xs.iter().any(|&x| x <= 0.0) || xs.len() < 8 {
+        return Err(Error::Stats("fit_weibull: need >=8 positive points".into()));
+    }
+    let m = mean(xs);
+    let nll = |p: &[f64]| {
+        let d = Weibull::new(p[0].exp(), p[1].exp());
+        -d.loglik(xs)
+    };
+    let (p, _) = nelder_mead(nll, &[0.0, m.max(1e-9).ln()], 0.5, 400, 1e-10);
+    Ok(Weibull::new(p[0].exp(), p[1].exp()))
+}
+
+/// MLE for the exponentiated Weibull via Nelder–Mead on
+/// (ln alpha, ln k, ln lambda), multi-start to dodge local optima.
+pub fn fit_expweibull(xs: &[f64]) -> Result<ExpWeibull> {
+    if xs.iter().any(|&x| x <= 0.0) || xs.len() < 16 {
+        return Err(Error::Stats("fit_expweibull: need >=16 positive points".into()));
+    }
+    let m = mean(xs).max(1e-9);
+    let nll = |p: &[f64]| {
+        if p.iter().any(|v| v.abs() > 12.0) {
+            return f64::INFINITY; // keep parameters in a sane range
+        }
+        let d = ExpWeibull::new(p[0].exp(), p[1].exp(), p[2].exp());
+        -d.loglik(xs)
+    };
+    let starts = [
+        [0.0, 0.0, m.ln()],
+        [1.0, -0.5, m.ln()],
+        [-0.7, 0.5, m.ln() - 0.7],
+    ];
+    let mut best: Option<(Vec<f64>, f64)> = None;
+    for s in &starts {
+        let (p, v) = nelder_mead(&nll, s, 0.4, 600, 1e-10);
+        if best.as_ref().map_or(true, |b| v < b.1) {
+            best = Some((p, v));
+        }
+    }
+    let (p, v) = best.unwrap();
+    if !v.is_finite() {
+        return Err(Error::Stats("fit_expweibull: diverged".into()));
+    }
+    Ok(ExpWeibull::new(p[0].exp(), p[1].exp(), p[2].exp()))
+}
+
+// ---------------------------------------------------------------------------
+// SSE family selection (paper section V-A3: per-cluster best of
+// {lognormal, expweibull, pareto}).
+// ---------------------------------------------------------------------------
+
+/// Fit every candidate family and return (best_fit, its SSE), selecting by
+/// SSE between the empirical density histogram and the fitted pdf.
+pub fn select_best_fit(xs: &[f64], bins: usize) -> Result<(Dist, f64)> {
+    let mut candidates: Vec<Dist> = Vec::new();
+    if let Ok(d) = fit_lognormal(xs) {
+        candidates.push(Dist::LogNormal(d));
+    }
+    if let Ok(d) = fit_expweibull(xs) {
+        candidates.push(Dist::ExpWeibull(d));
+    }
+    if let Ok(d) = fit_pareto(xs) {
+        candidates.push(Dist::Pareto(d));
+    }
+    if candidates.is_empty() {
+        return Err(Error::Stats("select_best_fit: no family fit".into()));
+    }
+    let mut best: Option<(Dist, f64)> = None;
+    for d in candidates {
+        let sse = sse_against_pdf(xs, |x| d.pdf(x), bins);
+        if best.as_ref().map_or(true, |b| sse < b.1) {
+            best = Some((d, sse));
+        }
+    }
+    Ok(best.unwrap())
+}
+
+// ---------------------------------------------------------------------------
+// Nonlinear least squares for the preprocess curve f(x) = a*b^x + c
+// (paper section V-A2a, Fig 9a).
+// ---------------------------------------------------------------------------
+
+/// Parameters of f(x) = a * b^x + c.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExpCurve {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+}
+
+impl ExpCurve {
+    pub fn eval(&self, x: f64) -> f64 {
+        self.a * self.b.powf(x) + self.c
+    }
+}
+
+/// Fit f(x)=a*b^x+c by Nelder–Mead on the residual SSE, grid-initialized
+/// over b (the curve is linear in (a, c) given b, solved in closed form).
+pub fn fit_exp_curve(xs: &[f64], ys: &[f64]) -> Result<ExpCurve> {
+    if xs.len() != ys.len() || xs.len() < 4 {
+        return Err(Error::Stats("fit_exp_curve: need >=4 paired points".into()));
+    }
+    // Given b, minimize over (a, c) by 2x2 least squares on [b^x, 1].
+    let solve_ac = |b: f64| -> (f64, f64, f64) {
+        let n = xs.len() as f64;
+        let (mut s_t, mut s_tt, mut s_y, mut s_ty) = (0.0, 0.0, 0.0, 0.0);
+        for (&x, &y) in xs.iter().zip(ys) {
+            let t = b.powf(x);
+            s_t += t;
+            s_tt += t * t;
+            s_y += y;
+            s_ty += t * y;
+        }
+        let det = n * s_tt - s_t * s_t;
+        if det.abs() < 1e-12 {
+            return (0.0, 0.0, f64::INFINITY);
+        }
+        let a = (n * s_ty - s_t * s_y) / det;
+        let c = (s_y - a * s_t) / n;
+        let sse: f64 = xs
+            .iter()
+            .zip(ys)
+            .map(|(&x, &y)| {
+                let e = a * b.powf(x) + c - y;
+                e * e
+            })
+            .sum();
+        (a, c, sse)
+    };
+
+    // grid over b then refine with golden-section
+    let mut best_b = 1.1;
+    let mut best_sse = f64::INFINITY;
+    let mut b = 1.01;
+    while b < 3.0 {
+        let (_, _, sse) = solve_ac(b);
+        if sse < best_sse {
+            best_sse = sse;
+            best_b = b;
+        }
+        b += 0.01;
+    }
+    // golden-section refine in [best_b - 0.02, best_b + 0.02]
+    let (mut lo, mut hi) = ((best_b - 0.02).max(1.001), best_b + 0.02);
+    let phi = (5f64.sqrt() - 1.0) / 2.0;
+    for _ in 0..60 {
+        let m1 = hi - phi * (hi - lo);
+        let m2 = lo + phi * (hi - lo);
+        if solve_ac(m1).2 < solve_ac(m2).2 {
+            hi = m2;
+        } else {
+            lo = m1;
+        }
+    }
+    let bb = 0.5 * (lo + hi);
+    let (a, c, sse) = solve_ac(bb);
+    if !sse.is_finite() {
+        return Err(Error::Stats("fit_exp_curve: singular".into()));
+    }
+    Ok(ExpCurve { a, b: bb, c })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Pcg64;
+
+    #[test]
+    fn nelder_mead_rosenbrock() {
+        let f = |p: &[f64]| {
+            let (x, y) = (p[0], p[1]);
+            (1.0 - x).powi(2) + 100.0 * (y - x * x).powi(2)
+        };
+        let (p, v) = nelder_mead(f, &[-1.2, 1.0], 0.5, 2000, 1e-14);
+        assert!(v < 1e-6, "v={v}");
+        assert!((p[0] - 1.0).abs() < 1e-2 && (p[1] - 1.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn fit_lognormal_roundtrip() {
+        let mut rng = Pcg64::new(1);
+        let d = LogNormal::new(3.2, 0.8);
+        let xs: Vec<f64> = (0..50_000).map(|_| d.sample(&mut rng)).collect();
+        let f = fit_lognormal(&xs).unwrap();
+        assert!((f.mu - 3.2).abs() < 0.02, "mu={}", f.mu);
+        assert!((f.sigma - 0.8).abs() < 0.02, "sigma={}", f.sigma);
+    }
+
+    #[test]
+    fn fit_exponential_roundtrip() {
+        let mut rng = Pcg64::new(2);
+        let d = Exponential::new(0.25);
+        let xs: Vec<f64> = (0..50_000).map(|_| d.sample(&mut rng)).collect();
+        let f = fit_exponential(&xs).unwrap();
+        assert!((f.lambda - 0.25).abs() < 0.01);
+    }
+
+    #[test]
+    fn fit_pareto_roundtrip() {
+        let mut rng = Pcg64::new(3);
+        let d = Pareto::new(2.0, 1.8);
+        let xs: Vec<f64> = (0..50_000).map(|_| d.sample(&mut rng)).collect();
+        let f = fit_pareto(&xs).unwrap();
+        assert!((f.xm - 2.0).abs() < 0.01, "xm={}", f.xm);
+        assert!((f.alpha - 1.8).abs() < 0.05, "alpha={}", f.alpha);
+    }
+
+    #[test]
+    fn fit_weibull_roundtrip() {
+        let mut rng = Pcg64::new(4);
+        let d = Weibull::new(1.7, 12.0);
+        let xs: Vec<f64> = (0..30_000).map(|_| d.sample(&mut rng)).collect();
+        let f = fit_weibull(&xs).unwrap();
+        assert!((f.k - 1.7).abs() < 0.05, "k={}", f.k);
+        assert!((f.lambda - 12.0).abs() < 0.3, "lambda={}", f.lambda);
+    }
+
+    #[test]
+    fn fit_expweibull_recovers_shape() {
+        let mut rng = Pcg64::new(5);
+        let d = ExpWeibull::new(2.0, 0.9, 40.0);
+        let xs: Vec<f64> = (0..30_000).map(|_| d.sample(&mut rng)).collect();
+        let f = fit_expweibull(&xs).unwrap();
+        // the (alpha, k, lambda) surface is fairly flat; check the implied
+        // distribution matches rather than raw parameters.
+        for &p in &[0.1, 0.25, 0.5, 0.75, 0.9] {
+            let (qd, qf) = (d.quantile(p), f.quantile(p));
+            assert!(
+                (qd - qf).abs() / qd < 0.08,
+                "p={p}: true q={qd} fit q={qf} ({f:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn select_best_prefers_true_family() {
+        let mut rng = Pcg64::new(6);
+        let d = LogNormal::new(2.0, 1.0);
+        let xs: Vec<f64> = (0..40_000).map(|_| d.sample(&mut rng)).collect();
+        let (best, _) = select_best_fit(&xs, 60).unwrap();
+        assert_eq!(best.name(), "lognormal");
+
+        let d2 = Pareto::new(1.0, 1.2);
+        let xs2: Vec<f64> = (0..40_000).map(|_| d2.sample(&mut rng)).collect();
+        let (best2, _) = select_best_fit(&xs2, 60).unwrap();
+        assert_eq!(best2.name(), "pareto");
+    }
+
+    #[test]
+    fn exp_curve_recovers_paper_params() {
+        // the paper's production fit: a=0.018, b=1.330, c=2.156
+        let truth = ExpCurve { a: 0.018, b: 1.330, c: 2.156 };
+        let mut rng = Pcg64::new(7);
+        let xs: Vec<f64> = (0..2000).map(|_| rng.uniform_range(2.0, 18.0)).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|&x| truth.eval(x) + 0.02 * rng.normal())
+            .collect();
+        let fit = fit_exp_curve(&xs, &ys).unwrap();
+        assert!((fit.b - 1.330).abs() < 0.01, "b={}", fit.b);
+        assert!((fit.a - 0.018).abs() < 0.005, "a={}", fit.a);
+        assert!((fit.c - 2.156).abs() < 0.1, "c={}", fit.c);
+    }
+
+    #[test]
+    fn exp_curve_eval() {
+        let c = ExpCurve { a: 2.0, b: 2.0, c: 1.0 };
+        assert_eq!(c.eval(3.0), 17.0);
+    }
+
+    #[test]
+    fn fitters_reject_bad_input() {
+        assert!(fit_lognormal(&[1.0, -2.0]).is_err());
+        assert!(fit_normal(&[1.0]).is_err());
+        assert!(fit_exp_curve(&[1.0], &[1.0]).is_err());
+        assert!(fit_pareto(&[0.0, 1.0]).is_err());
+    }
+}

@@ -1,0 +1,509 @@
+//! Gaussian mixture models: parameter containers shared with the AOT
+//! runtime, plus a pure-Rust EM fitter/sampler that serves as (a) the
+//! CPU baseline the benches compare the PJRT path against and (b) the
+//! fallback when `artifacts/` are not built (unit tests, CI).
+//!
+//! Shapes mirror the AOT modules: the 3-D mixture is full-covariance
+//! (paper section V-A1, 50 components over log(rows, cols, bytes)); the
+//! 1-D mixtures model log-durations (section V-A2b/c).
+
+use super::rng::Pcg64;
+use crate::error::{Error, Result};
+
+pub const LOG_2PI: f64 = 1.837_877_066_409_345_3;
+
+// ---------------------------------------------------------------------------
+// 3-D full covariance mixture
+// ---------------------------------------------------------------------------
+
+/// Parameters of a K-component full-covariance 3-D Gaussian mixture.
+///
+/// `pchol` is the lower-triangular inverse of the covariance Cholesky
+/// factor (so the precision is `pchol^T pchol`), matching the AOT kernel's
+/// convention; `cchol` is the covariance Cholesky factor used for sampling.
+#[derive(Clone, Debug)]
+pub struct Gmm3 {
+    pub logw: Vec<f64>,            // K
+    pub mu: Vec<[f64; 3]>,         // K
+    pub cchol: Vec<[[f64; 3]; 3]>, // K, lower
+    pub pchol: Vec<[[f64; 3]; 3]>, // K, lower
+}
+
+/// Closed-form Cholesky of a 3x3 SPD matrix (lower factor).
+pub fn chol3(a: &[[f64; 3]; 3]) -> Result<[[f64; 3]; 3]> {
+    let l11 = a[0][0];
+    if l11 <= 0.0 {
+        return Err(Error::Stats("chol3: not SPD".into()));
+    }
+    let l11 = l11.sqrt();
+    let l21 = a[1][0] / l11;
+    let l31 = a[2][0] / l11;
+    let d22 = a[1][1] - l21 * l21;
+    if d22 <= 0.0 {
+        return Err(Error::Stats("chol3: not SPD".into()));
+    }
+    let l22 = d22.sqrt();
+    let l32 = (a[2][1] - l31 * l21) / l22;
+    let d33 = a[2][2] - l31 * l31 - l32 * l32;
+    if d33 <= 0.0 {
+        return Err(Error::Stats("chol3: not SPD".into()));
+    }
+    Ok([
+        [l11, 0.0, 0.0],
+        [l21, l22, 0.0],
+        [l31, l32, d33.sqrt()],
+    ])
+}
+
+/// Closed-form inverse of a lower-triangular 3x3 matrix.
+pub fn tril3_inv(l: &[[f64; 3]; 3]) -> [[f64; 3]; 3] {
+    let i11 = 1.0 / l[0][0];
+    let i22 = 1.0 / l[1][1];
+    let i33 = 1.0 / l[2][2];
+    let i21 = -l[1][0] * i11 * i22;
+    let i31 = (l[1][0] * l[2][1] - l[1][1] * l[2][0]) * i11 * i22 * i33;
+    let i32 = -l[2][1] * i22 * i33;
+    [[i11, 0.0, 0.0], [i21, i22, 0.0], [i31, i32, i33]]
+}
+
+impl Gmm3 {
+    pub fn k(&self) -> usize {
+        self.logw.len()
+    }
+
+    /// k-means++ init (scikit-learn's default for `GaussianMixture`):
+    /// means at k-means centers, spherical covariance from the data
+    /// spread. Falls back to the same covariance logic as the random
+    /// init, which EM then refines.
+    pub fn init_from_data(x: &[[f64; 3]], k: usize, rng: &mut Pcg64) -> Self {
+        assert!(x.len() >= k);
+        // subsample for seeding cost on large inputs
+        let seed_rows: Vec<Vec<f64>> = if x.len() > 4096 {
+            rng.sample_indices(x.len(), 4096)
+                .into_iter()
+                .map(|i| x[i].to_vec())
+                .collect()
+        } else {
+            x.iter().map(|r| r.to_vec()).collect()
+        };
+        let (centers, _) = super::kmeans::kmeans(&seed_rows, k, rng, 10);
+        let mut g = Self::init_random(x, k, rng);
+        for (m, c) in g.mu.iter_mut().zip(&centers) {
+            *m = [c[0], c[1], c[2]];
+        }
+        g
+    }
+
+    /// Random-row init: means at k random rows, identity-ish covariance
+    /// scaled to the data spread (the cheap baseline).
+    pub fn init_random(x: &[[f64; 3]], k: usize, rng: &mut Pcg64) -> Self {
+        assert!(x.len() >= k);
+        let idx = rng.sample_indices(x.len(), k);
+        let mut var = [0.0f64; 3];
+        let mut m = [0.0f64; 3];
+        for r in x {
+            for d in 0..3 {
+                m[d] += r[d];
+            }
+        }
+        for d in 0..3 {
+            m[d] /= x.len() as f64;
+        }
+        for r in x {
+            for d in 0..3 {
+                var[d] += (r[d] - m[d]) * (r[d] - m[d]);
+            }
+        }
+        for d in 0..3 {
+            var[d] = (var[d] / x.len() as f64).max(1e-3);
+        }
+        let logw = vec![-(k as f64).ln(); k];
+        let mu: Vec<[f64; 3]> = idx.iter().map(|&i| x[i]).collect();
+        let mut cchol = Vec::with_capacity(k);
+        let mut pchol = Vec::with_capacity(k);
+        for _ in 0..k {
+            let mut c = [[0.0; 3]; 3];
+            for d in 0..3 {
+                c[d][d] = var[d].sqrt();
+            }
+            cchol.push(c);
+            pchol.push(tril3_inv(&c));
+        }
+        Gmm3 { logw, mu, cchol, pchol }
+    }
+
+    /// Log joint density log w_k + log N(x | mu_k, Sigma_k) for one point.
+    pub fn log_joint(&self, x: &[f64; 3]) -> Vec<f64> {
+        (0..self.k())
+            .map(|k| {
+                let p = &self.pchol[k];
+                let m = &self.mu[k];
+                let d = [x[0] - m[0], x[1] - m[1], x[2] - m[2]];
+                // y = pchol * d (lower-tri)
+                let y0 = p[0][0] * d[0];
+                let y1 = p[1][0] * d[0] + p[1][1] * d[1];
+                let y2 = p[2][0] * d[0] + p[2][1] * d[1] + p[2][2] * d[2];
+                let maha = y0 * y0 + y1 * y1 + y2 * y2;
+                let logdet = p[0][0].abs().ln() + p[1][1].abs().ln() + p[2][2].abs().ln();
+                self.logw[k] + logdet - 1.5 * LOG_2PI - 0.5 * maha
+            })
+            .collect()
+    }
+
+    /// Total log-likelihood of a dataset.
+    pub fn loglik(&self, x: &[[f64; 3]]) -> f64 {
+        x.iter()
+            .map(|r| {
+                let lp = self.log_joint(r);
+                log_sum_exp(&lp)
+            })
+            .sum()
+    }
+
+    /// One EM iteration in pure Rust. Returns the pre-step log-likelihood.
+    /// This is the CPU baseline mirroring the AOT `gmm_em_step3` artifact.
+    pub fn em_step(&mut self, x: &[[f64; 3]]) -> Result<f64> {
+        let n = x.len();
+        let k = self.k();
+        let mut nk = vec![1e-8f64; k];
+        let mut sum_x = vec![[0.0f64; 3]; k];
+        let mut sum_xx = vec![[[0.0f64; 3]; 3]; k];
+        let mut total_ll = 0.0;
+        let mut resp = vec![0.0f64; k];
+        for r in x {
+            let lp = self.log_joint(r);
+            let lse = log_sum_exp(&lp);
+            total_ll += lse;
+            for j in 0..k {
+                resp[j] = (lp[j] - lse).exp();
+            }
+            for j in 0..k {
+                let w = resp[j];
+                nk[j] += w;
+                for d in 0..3 {
+                    sum_x[j][d] += w * r[d];
+                }
+                for d in 0..3 {
+                    for e in 0..=d {
+                        sum_xx[j][d][e] += w * r[d] * r[e];
+                    }
+                }
+            }
+        }
+        for j in 0..k {
+            self.logw[j] = nk[j].ln() - (n as f64).ln();
+            let mut mu = [0.0; 3];
+            for d in 0..3 {
+                mu[d] = sum_x[j][d] / nk[j];
+            }
+            self.mu[j] = mu;
+            let mut cov = [[0.0; 3]; 3];
+            for d in 0..3 {
+                for e in 0..=d {
+                    let c = sum_xx[j][d][e] / nk[j] - mu[d] * mu[e];
+                    cov[d][e] = c;
+                    cov[e][d] = c;
+                }
+                cov[d][d] += 1e-4; // regularizer, matches the AOT module
+            }
+            let c = chol3(&cov)?;
+            self.cchol[j] = c;
+            self.pchol[j] = tril3_inv(&c);
+        }
+        Ok(total_ll)
+    }
+
+    /// Fit by EM from a fresh init until the relative log-lik improvement
+    /// drops below `tol` or `max_iter` is reached. Returns final loglik.
+    pub fn fit(x: &[[f64; 3]], k: usize, rng: &mut Pcg64, max_iter: usize, tol: f64) -> Result<(Self, f64)> {
+        let mut g = Self::init_from_data(x, k, rng);
+        let mut prev = f64::NEG_INFINITY;
+        let mut ll = prev;
+        for _ in 0..max_iter {
+            ll = g.em_step(x)?;
+            if (ll - prev).abs() < tol * (1.0 + ll.abs()) {
+                break;
+            }
+            prev = ll;
+        }
+        Ok((g, ll))
+    }
+
+    /// Draw one sample: pick a component, then mu + cchol * z.
+    pub fn sample(&self, rng: &mut Pcg64) -> [f64; 3] {
+        let w: Vec<f64> = self.logw.iter().map(|l| l.exp()).collect();
+        let k = rng.categorical(&w);
+        self.sample_component(k, rng)
+    }
+
+    /// Sample from a fixed component.
+    pub fn sample_component(&self, k: usize, rng: &mut Pcg64) -> [f64; 3] {
+        let z = [rng.normal(), rng.normal(), rng.normal()];
+        let c = &self.cchol[k];
+        let m = &self.mu[k];
+        [
+            m[0] + c[0][0] * z[0],
+            m[1] + c[1][0] * z[0] + c[1][1] * z[1],
+            m[2] + c[2][0] * z[0] + c[2][1] * z[1] + c[2][2] * z[2],
+        ]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1-D mixture
+// ---------------------------------------------------------------------------
+
+/// K-component 1-D Gaussian mixture (log-duration models).
+#[derive(Clone, Debug)]
+pub struct Gmm1 {
+    pub logw: Vec<f64>,
+    pub mu: Vec<f64>,
+    pub logsd: Vec<f64>,
+}
+
+impl Gmm1 {
+    pub fn k(&self) -> usize {
+        self.logw.len()
+    }
+
+    pub fn init_from_data(x: &[f64], k: usize, rng: &mut Pcg64) -> Self {
+        assert!(x.len() >= k);
+        let idx = rng.sample_indices(x.len(), k);
+        let sd = super::desc::std_dev(x).max(1e-3);
+        Gmm1 {
+            logw: vec![-(k as f64).ln(); k],
+            mu: idx.iter().map(|&i| x[i]).collect(),
+            logsd: vec![sd.ln(); k],
+        }
+    }
+
+    pub fn log_joint(&self, x: f64) -> Vec<f64> {
+        (0..self.k())
+            .map(|k| {
+                let z = (x - self.mu[k]) * (-self.logsd[k]).exp();
+                self.logw[k] - self.logsd[k] - 0.5 * LOG_2PI - 0.5 * z * z
+            })
+            .collect()
+    }
+
+    pub fn loglik(&self, x: &[f64]) -> f64 {
+        x.iter().map(|&v| log_sum_exp(&self.log_joint(v))).sum()
+    }
+
+    /// One EM iteration (CPU baseline of `gmm_em_step1`).
+    pub fn em_step(&mut self, x: &[f64]) -> f64 {
+        let n = x.len();
+        let k = self.k();
+        let mut nk = vec![1e-8f64; k];
+        let mut s1 = vec![0.0f64; k];
+        let mut s2 = vec![0.0f64; k];
+        let mut total_ll = 0.0;
+        for &v in x {
+            let lp = self.log_joint(v);
+            let lse = log_sum_exp(&lp);
+            total_ll += lse;
+            for j in 0..k {
+                let w = (lp[j] - lse).exp();
+                nk[j] += w;
+                s1[j] += w * v;
+                s2[j] += w * v * v;
+            }
+        }
+        for j in 0..k {
+            self.logw[j] = nk[j].ln() - (n as f64).ln();
+            let mu = s1[j] / nk[j];
+            self.mu[j] = mu;
+            let var = (s2[j] / nk[j] - mu * mu).max(0.0) + 1e-4;
+            self.logsd[j] = 0.5 * var.ln();
+        }
+        total_ll
+    }
+
+    pub fn fit(x: &[f64], k: usize, rng: &mut Pcg64, max_iter: usize, tol: f64) -> (Self, f64) {
+        let mut g = Self::init_from_data(x, k, rng);
+        let mut prev = f64::NEG_INFINITY;
+        let mut ll = prev;
+        for _ in 0..max_iter {
+            ll = g.em_step(x);
+            if (ll - prev).abs() < tol * (1.0 + ll.abs()) {
+                break;
+            }
+            prev = ll;
+        }
+        (g, ll)
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        let w: Vec<f64> = self.logw.iter().map(|l| l.exp()).collect();
+        let k = rng.categorical(&w);
+        self.mu[k] + self.logsd[k].exp() * rng.normal()
+    }
+
+    /// Mixture mean.
+    pub fn mean(&self) -> f64 {
+        self.logw
+            .iter()
+            .zip(&self.mu)
+            .map(|(lw, m)| lw.exp() * m)
+            .sum()
+    }
+}
+
+/// Numerically stable log(sum(exp(xs))).
+pub fn log_sum_exp(xs: &[f64]) -> f64 {
+    let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if !m.is_finite() {
+        return m;
+    }
+    m + xs.iter().map(|x| (x - m).exp()).sum::<f64>().ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn true_gmm3() -> Gmm3 {
+        let c1 = [[1.0, 0.0, 0.0], [0.3, 0.8, 0.0], [0.1, -0.2, 0.6]];
+        let c2 = [[0.5, 0.0, 0.0], [-0.2, 0.9, 0.0], [0.0, 0.3, 0.7]];
+        Gmm3 {
+            logw: vec![0.6f64.ln(), 0.4f64.ln()],
+            mu: vec![[-3.0, 0.0, 2.0], [3.0, 4.0, -2.0]],
+            pchol: vec![tril3_inv(&c1), tril3_inv(&c2)],
+            cchol: vec![c1, c2],
+        }
+    }
+
+    #[test]
+    fn chol3_roundtrip() {
+        let a = [[4.0, 2.0, 0.6], [2.0, 5.0, 1.0], [0.6, 1.0, 3.0]];
+        let l = chol3(&a).unwrap();
+        // L L^T == a
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut s = 0.0;
+                for k in 0..3 {
+                    s += l[i][k] * l[j][k];
+                }
+                assert!((s - a[i][j]).abs() < 1e-12, "({i},{j})");
+            }
+        }
+        let inv = tril3_inv(&l);
+        // inv * l == I
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut s = 0.0;
+                for k in 0..3 {
+                    s += inv[i][k] * l[k][j];
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((s - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn chol3_rejects_non_spd() {
+        let a = [[1.0, 0.0, 0.0], [0.0, -1.0, 0.0], [0.0, 0.0, 1.0]];
+        assert!(chol3(&a).is_err());
+    }
+
+    #[test]
+    fn gmm3_em_recovers_means() {
+        let truth = true_gmm3();
+        let mut rng = Pcg64::new(1);
+        let x: Vec<[f64; 3]> = (0..4000).map(|_| truth.sample(&mut rng)).collect();
+        let (fit, _) = Gmm3::fit(&x, 2, &mut rng, 100, 1e-8).unwrap();
+        // match components by nearest mean
+        for (tm, tw) in truth.mu.iter().zip(&truth.logw) {
+            let (j, dist) = fit
+                .mu
+                .iter()
+                .enumerate()
+                .map(|(j, m)| {
+                    let d: f64 = (0..3).map(|d| (m[d] - tm[d]).powi(2)).sum();
+                    (j, d.sqrt())
+                })
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            assert!(dist < 0.2, "mean {tm:?} off by {dist}");
+            assert!((fit.logw[j].exp() - tw.exp()).abs() < 0.05);
+        }
+    }
+
+    #[test]
+    fn gmm3_em_monotone_loglik() {
+        let truth = true_gmm3();
+        let mut rng = Pcg64::new(2);
+        let x: Vec<[f64; 3]> = (0..2000).map(|_| truth.sample(&mut rng)).collect();
+        let mut g = Gmm3::init_from_data(&x, 4, &mut rng);
+        let mut prev = f64::NEG_INFINITY;
+        for i in 0..30 {
+            let ll = g.em_step(&x).unwrap();
+            if i > 1 {
+                assert!(ll >= prev - 1e-6 * prev.abs(), "iter {i}: {ll} < {prev}");
+            }
+            prev = ll;
+        }
+    }
+
+    #[test]
+    fn gmm3_sample_moments() {
+        let truth = true_gmm3();
+        let mut rng = Pcg64::new(3);
+        let n = 100_000;
+        let mut m = [0.0f64; 3];
+        for _ in 0..n {
+            let s = truth.sample(&mut rng);
+            for d in 0..3 {
+                m[d] += s[d];
+            }
+        }
+        for d in 0..3 {
+            m[d] /= n as f64;
+        }
+        let want = [
+            0.6 * -3.0 + 0.4 * 3.0,
+            0.6 * 0.0 + 0.4 * 4.0,
+            0.6 * 2.0 + 0.4 * -2.0,
+        ];
+        for d in 0..3 {
+            assert!((m[d] - want[d]).abs() < 0.05, "dim {d}: {} vs {}", m[d], want[d]);
+        }
+    }
+
+    #[test]
+    fn gmm1_em_recovers_bimodal() {
+        let mut rng = Pcg64::new(4);
+        let x: Vec<f64> = (0..8000)
+            .map(|i| {
+                if i % 5 < 3 {
+                    2.0 + 0.5 * rng.normal()
+                } else {
+                    7.0 + 1.0 * rng.normal()
+                }
+            })
+            .collect();
+        let (fit, _) = Gmm1::fit(&x, 2, &mut rng, 200, 1e-10);
+        let mut mus = fit.mu.clone();
+        mus.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((mus[0] - 2.0).abs() < 0.1, "{mus:?}");
+        assert!((mus[1] - 7.0).abs() < 0.1, "{mus:?}");
+    }
+
+    #[test]
+    fn gmm1_mean() {
+        let g = Gmm1 {
+            logw: vec![0.25f64.ln(), 0.75f64.ln()],
+            mu: vec![0.0, 4.0],
+            logsd: vec![0.0, 0.0],
+        };
+        assert!((g.mean() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lse_stable() {
+        assert!((log_sum_exp(&[0.0, 0.0]) - 2.0f64.ln()).abs() < 1e-12);
+        assert!((log_sum_exp(&[-1000.0, -1000.0]) - (-1000.0 + 2.0f64.ln())).abs() < 1e-9);
+        assert_eq!(log_sum_exp(&[f64::NEG_INFINITY]), f64::NEG_INFINITY);
+    }
+}

@@ -1,0 +1,183 @@
+//! k-means++ seeding and Lloyd iterations — the GMM initializer.
+//!
+//! scikit-learn's `GaussianMixture` (which the paper uses, section V-A1)
+//! initializes EM from k-means; random-row init needs many more EM
+//! iterations and is prone to collapsed components on clustered data like
+//! the asset mixture. This module provides the same initialization
+//! quality for both the CPU and the AOT EM drivers.
+
+use super::rng::Pcg64;
+
+/// Squared Euclidean distance between D-dim points.
+#[inline]
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// k-means++ seeding: D^2-weighted center choices (Arthur & Vassilvitskii).
+pub fn kmeanspp_seed(x: &[Vec<f64>], k: usize, rng: &mut Pcg64) -> Vec<Vec<f64>> {
+    assert!(x.len() >= k && k > 0);
+    let mut centers: Vec<Vec<f64>> = Vec::with_capacity(k);
+    centers.push(x[rng.below(x.len())].clone());
+    let mut d2: Vec<f64> = x.iter().map(|p| dist2(p, &centers[0])).collect();
+    while centers.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            // all remaining points coincide with a center: pick random
+            x[rng.below(x.len())].clone()
+        } else {
+            let mut u = rng.uniform() * total;
+            let mut pick = x.len() - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                u -= w;
+                if u <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            x[pick].clone()
+        };
+        for (i, p) in x.iter().enumerate() {
+            let d = dist2(p, &next);
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+        centers.push(next);
+    }
+    centers
+}
+
+/// Lloyd's algorithm from given centers. Returns (centers, assignment).
+pub fn lloyd(
+    x: &[Vec<f64>],
+    mut centers: Vec<Vec<f64>>,
+    max_iter: usize,
+) -> (Vec<Vec<f64>>, Vec<usize>) {
+    let k = centers.len();
+    let d = centers[0].len();
+    let mut assign = vec![0usize; x.len()];
+    for _ in 0..max_iter {
+        let mut moved = false;
+        // assignment step
+        for (i, p) in x.iter().enumerate() {
+            let mut best = (f64::INFINITY, 0usize);
+            for (c, center) in centers.iter().enumerate() {
+                let dd = dist2(p, center);
+                if dd < best.0 {
+                    best = (dd, c);
+                }
+            }
+            if assign[i] != best.1 {
+                assign[i] = best.1;
+                moved = true;
+            }
+        }
+        if !moved {
+            break;
+        }
+        // update step
+        let mut sums = vec![vec![0.0f64; d]; k];
+        let mut counts = vec![0usize; k];
+        for (i, p) in x.iter().enumerate() {
+            counts[assign[i]] += 1;
+            for (s, &v) in sums[assign[i]].iter_mut().zip(p) {
+                *s += v;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for s in sums[c].iter_mut() {
+                    *s /= counts[c] as f64;
+                }
+                centers[c] = sums[c].clone();
+            }
+        }
+    }
+    (centers, assign)
+}
+
+/// k-means++ + Lloyd in one call.
+pub fn kmeans(x: &[Vec<f64>], k: usize, rng: &mut Pcg64, max_iter: usize) -> (Vec<Vec<f64>>, Vec<usize>) {
+    let seeds = kmeanspp_seed(x, k, rng);
+    lloyd(x, seeds, max_iter)
+}
+
+/// Within-cluster sum of squares (inertia) — quality metric for tests.
+pub fn inertia(x: &[Vec<f64>], centers: &[Vec<f64>], assign: &[usize]) -> f64 {
+    x.iter()
+        .zip(assign)
+        .map(|(p, &a)| dist2(p, &centers[a]))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs(rng: &mut Pcg64, n_per: usize) -> Vec<Vec<f64>> {
+        let centers = [[-5.0, 0.0], [5.0, 5.0], [0.0, -6.0]];
+        let mut out = Vec::new();
+        for c in &centers {
+            for _ in 0..n_per {
+                out.push(vec![c[0] + 0.5 * rng.normal(), c[1] + 0.5 * rng.normal()]);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn finds_well_separated_blobs() {
+        let mut rng = Pcg64::new(1);
+        let x = blobs(&mut rng, 300);
+        let (centers, assign) = kmeans(&x, 3, &mut rng, 50);
+        // every true blob center must be within 0.3 of a found center
+        for truth in [[-5.0, 0.0], [5.0, 5.0], [0.0, -6.0]] {
+            let best = centers
+                .iter()
+                .map(|c| dist2(c, &truth.to_vec()).sqrt())
+                .fold(f64::INFINITY, f64::min);
+            assert!(best < 0.3, "blob {truth:?} missed: {centers:?}");
+        }
+        let wcss = inertia(&x, &centers, &assign);
+        assert!(wcss / (x.len() as f64) < 1.0, "inertia {wcss}");
+    }
+
+    #[test]
+    fn kmeanspp_beats_random_seed_on_average() {
+        let mut rng = Pcg64::new(2);
+        let x = blobs(&mut rng, 200);
+        let mut pp_wins = 0;
+        for trial in 0..10 {
+            let mut r1 = Pcg64::new(100 + trial);
+            let seeds_pp = kmeanspp_seed(&x, 3, &mut r1);
+            let (c1, a1) = lloyd(&x, seeds_pp, 30);
+            let mut r2 = Pcg64::new(200 + trial);
+            let seeds_rand: Vec<Vec<f64>> =
+                (0..3).map(|_| x[r2.below(x.len())].clone()).collect();
+            let (c2, a2) = lloyd(&x, seeds_rand, 30);
+            if inertia(&x, &c1, &a1) <= inertia(&x, &c2, &a2) + 1e-9 {
+                pp_wins += 1;
+            }
+        }
+        assert!(pp_wins >= 7, "kmeans++ won only {pp_wins}/10");
+    }
+
+    #[test]
+    fn handles_k_equals_n() {
+        let mut rng = Pcg64::new(3);
+        let x: Vec<Vec<f64>> = (0..5).map(|i| vec![i as f64, 0.0]).collect();
+        let (centers, assign) = kmeans(&x, 5, &mut rng, 10);
+        assert_eq!(centers.len(), 5);
+        // perfect assignment: zero inertia
+        assert!(inertia(&x, &centers, &assign) < 1e-18);
+    }
+
+    #[test]
+    fn duplicate_points_no_panic() {
+        let mut rng = Pcg64::new(4);
+        let x = vec![vec![1.0, 1.0]; 50];
+        let (centers, _) = kmeans(&x, 3, &mut rng, 10);
+        assert_eq!(centers.len(), 3);
+    }
+}

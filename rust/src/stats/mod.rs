@@ -1,0 +1,19 @@
+//! Statistical substrate: RNG, parametric distributions, descriptive
+//! statistics, fitting (MLE / NLLS / SSE selection) and Gaussian mixtures.
+//!
+//! The paper leans on SciPy + scikit-learn for all of this (section V-A);
+//! here it is native Rust, with the mixture EM additionally available as
+//! an AOT-compiled JAX/Pallas artifact (see [`crate::runtime`]).
+
+pub mod desc;
+pub mod dist;
+pub mod fit;
+pub mod gmm;
+pub mod kmeans;
+pub mod rng;
+
+pub use desc::{mean, pearson, qq_points, quantile, quantiles, std_dev, Summary};
+pub use dist::{Dist, Distribution, ExpWeibull, Exponential, LogNormal, Normal, Pareto, Weibull};
+pub use fit::{fit_exp_curve, fit_expweibull, fit_lognormal, fit_pareto, select_best_fit, ExpCurve};
+pub use gmm::{Gmm1, Gmm3};
+pub use rng::Pcg64;

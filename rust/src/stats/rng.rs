@@ -1,0 +1,239 @@
+//! Deterministic PCG64 random number generator.
+//!
+//! One seedable stream drives the entire simulation (both the Rust-side
+//! draws and the uniforms/normals fed to the AOT artifacts), so every
+//! experiment is reproducible from a single `seed` in the config.
+
+/// PCG-XSL-RR 128/64 (the reference `pcg64` variant of O'Neill's PCG).
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    /// Cached second normal from the Box–Muller pair.
+    cached_normal: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a seed; distinct seeds give distinct streams.
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    /// Create a generator with an explicit stream selector, used to derive
+    /// independent sub-streams (e.g. one per distribution pool).
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: ((stream as u128) << 1) | 1,
+            cached_normal: None,
+        };
+        rng.next_u64();
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive an independent sub-stream keyed by `tag`.
+    pub fn substream(&mut self, tag: u64) -> Pcg64 {
+        Pcg64::with_stream(self.next_u64(), tag.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+    }
+
+    /// Next raw 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1) with 53-bit precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in (0, 1] — safe to take `ln` of.
+    #[inline]
+    pub fn uniform_pos(&mut self) -> f64 {
+        1.0 - self.uniform()
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection-free approximation is fine here:
+        // the statistical bias for n << 2^64 is immaterial to the simulator.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (pairs cached).
+    #[inline]
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.cached_normal.take() {
+            return z;
+        }
+        let u1 = self.uniform_pos();
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (std::f64::consts::TAU * u2).sin_cos();
+        self.cached_normal = Some(r * s);
+        r * c
+    }
+
+    /// Exponential with rate `lambda`.
+    #[inline]
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        -self.uniform_pos().ln() / lambda
+    }
+
+    /// Fill `buf` with uniforms in [0,1) as f32 (artifact input feed).
+    pub fn fill_uniform_f32(&mut self, buf: &mut [f32]) {
+        for v in buf.iter_mut() {
+            *v = self.uniform() as f32;
+        }
+    }
+
+    /// Fill `buf` with standard normals as f32 (artifact input feed).
+    pub fn fill_normal_f32(&mut self, buf: &mut [f32]) {
+        for v in buf.iter_mut() {
+            *v = self.normal() as f32;
+        }
+    }
+
+    /// Draw an index from unnormalized weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut u = self.uniform() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u < 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Sample `k` distinct indices from [0, n) (Floyd's algorithm).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.below(j + 1);
+            let pick = if chosen.contains(&t) { j } else { t };
+            chosen.insert(pick);
+            out.push(pick);
+        }
+        out
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            xs.swap(i, self.below(i + 1));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg64::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range_and_roughly_uniform() {
+        let mut rng = Pcg64::new(1);
+        let n = 100_000;
+        let mut mean = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            mean += u;
+        }
+        mean /= n as f64;
+        assert!((mean - 0.5).abs() < 0.005, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(2);
+        let n = 200_000;
+        let (mut m, mut v) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.normal();
+            m += z;
+            v += z * z;
+        }
+        m /= n as f64;
+        v = v / n as f64 - m * m;
+        assert!(m.abs() < 0.01, "mean={m}");
+        assert!((v - 1.0).abs() < 0.02, "var={v}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Pcg64::new(3);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.exponential(0.5)).sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn categorical_frequencies() {
+        let mut rng = Pcg64::new(4);
+        let w = [1.0, 2.0, 7.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..100_000 {
+            counts[rng.categorical(&w)] += 1;
+        }
+        assert!((counts[2] as f64 / 100_000.0 - 0.7).abs() < 0.01);
+        assert!((counts[0] as f64 / 100_000.0 - 0.1).abs() < 0.01);
+    }
+
+    #[test]
+    fn substreams_are_independent() {
+        let mut root = Pcg64::new(5);
+        let mut s1 = root.substream(1);
+        let mut s2 = root.substream(2);
+        let a: Vec<u64> = (0..16).map(|_| s1.next_u64()).collect();
+        let b: Vec<u64> = (0..16).map(|_| s2.next_u64()).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Pcg64::new(6);
+        let idx = rng.sample_indices(100, 50);
+        let set: std::collections::HashSet<_> = idx.iter().collect();
+        assert_eq!(set.len(), 50);
+        assert!(idx.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut rng = Pcg64::new(7);
+        for _ in 0..10_000 {
+            assert!(rng.below(13) < 13);
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! Synthetic data assets (paper section IV-B2 / V-A1).
+//!
+//! Samples (ln rows, ln cols, ln bytes) from the fitted 50-component
+//! Gaussian mixture, transforms back from log space, and rejects
+//! out-of-bound values — exactly the paper's procedure. Each refill also
+//! batch-computes the asset's preprocess duration through the
+//! `preproc_duration` artifact, so the simulator's per-arrival cost is an
+//! array lookup.
+
+use crate::error::Result;
+use crate::model::DataAsset;
+use crate::runtime::pool::{Backend, PreprocDurationPool, SamplePool3};
+use crate::stats::dist::LogNormal;
+use crate::stats::gmm::Gmm3;
+use crate::stats::rng::Pcg64;
+use crate::stats::ExpCurve;
+
+/// Plausibility bounds for the back-transformed samples (the paper's
+/// "reject out-of-bound values", aligned with its >=50 rows / >=2 cols
+/// filter).
+const MIN_ROWS: f64 = 50.0;
+const MAX_ROWS: f64 = 1e9;
+const MIN_COLS: f64 = 2.0;
+const MAX_COLS: f64 = 1e5;
+const MIN_BYTES: f64 = 64.0;
+const MAX_BYTES: f64 = 1e13;
+
+/// Streams (asset, preprocess-duration) pairs.
+pub struct AssetSynthesizer {
+    pool: SamplePool3,
+    durations: PreprocDurationPool,
+    buf: Vec<(DataAsset, f64)>,
+    pos: usize,
+    /// Samples rejected by the plausibility bounds (diagnostics).
+    pub rejected: u64,
+    pub produced: u64,
+}
+
+impl AssetSynthesizer {
+    pub fn new(
+        backend: Backend,
+        gmm: Gmm3,
+        curve: ExpCurve,
+        noise: LogNormal,
+        rng: &mut Pcg64,
+    ) -> Self {
+        AssetSynthesizer {
+            pool: SamplePool3::new(backend.clone(), gmm, rng.substream(0x01)),
+            durations: PreprocDurationPool::new(backend, curve, noise, rng.substream(0x02)),
+            buf: Vec::new(),
+            pos: 0,
+            rejected: 0,
+            produced: 0,
+        }
+    }
+
+    fn refill(&mut self) -> Result<()> {
+        self.buf.clear();
+        self.pos = 0;
+        let target = 1024;
+        let mut assets = Vec::with_capacity(target);
+        let mut guard = 0;
+        while assets.len() < target {
+            let s = self.pool.next()?;
+            guard += 1;
+            if guard > target * 64 {
+                // mixture collapsed to implausible region: accept clamped
+                assets.push(clamp_asset(s));
+                self.rejected += 1;
+                continue;
+            }
+            let rows = s[0].exp();
+            let cols = s[1].exp();
+            let bytes = s[2].exp();
+            if (MIN_ROWS..=MAX_ROWS).contains(&rows)
+                && (MIN_COLS..=MAX_COLS).contains(&cols)
+                && (MIN_BYTES..=MAX_BYTES).contains(&bytes)
+            {
+                assets.push(DataAsset::new(rows.round(), cols.round(), bytes));
+            } else {
+                self.rejected += 1;
+            }
+        }
+        let logsizes: Vec<f64> = assets.iter().map(|a| a.log_size()).collect();
+        let durs = self.durations.durations(&logsizes)?;
+        self.buf.extend(assets.into_iter().zip(durs));
+        Ok(())
+    }
+
+    /// Next synthetic asset with its preprocess compute duration.
+    pub fn next(&mut self) -> Result<(DataAsset, f64)> {
+        if self.pos >= self.buf.len() {
+            self.refill()?;
+        }
+        let out = self.buf[self.pos];
+        self.pos += 1;
+        self.produced += 1;
+        Ok(out)
+    }
+}
+
+fn clamp_asset(s: [f64; 3]) -> DataAsset {
+    DataAsset::new(
+        s[0].exp().clamp(MIN_ROWS, MAX_ROWS).round(),
+        s[1].exp().clamp(MIN_COLS, MAX_COLS).round(),
+        s[2].exp().clamp(MIN_BYTES, MAX_BYTES),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_gmm() -> Gmm3 {
+        // one component centered at plausible log values
+        let c = [[0.5, 0.0, 0.0], [0.1, 0.4, 0.0], [0.2, 0.1, 0.5]];
+        Gmm3 {
+            logw: vec![0.0],
+            mu: vec![[8.0, 3.0, 12.0]], // ~3000 rows, ~20 cols, ~160 KB
+            pchol: vec![crate::stats::gmm::tril3_inv(&c)],
+            cchol: vec![c],
+        }
+    }
+
+    #[test]
+    fn produces_plausible_assets() {
+        let mut rng = Pcg64::new(1);
+        let mut synth = AssetSynthesizer::new(
+            Backend::Cpu,
+            toy_gmm(),
+            ExpCurve { a: 0.018, b: 1.330, c: 2.156 },
+            LogNormal::new(-1.0, 0.15),
+            &mut rng,
+        );
+        for _ in 0..3000 {
+            let (a, t) = synth.next().unwrap();
+            assert!(a.rows >= MIN_ROWS && a.cols >= MIN_COLS);
+            assert!(a.is_plausible());
+            assert!(t > 2.0, "duration above asymptote");
+        }
+        assert_eq!(synth.produced, 3000);
+    }
+
+    #[test]
+    fn durations_grow_with_size() {
+        let mut rng = Pcg64::new(2);
+        let mut synth = AssetSynthesizer::new(
+            Backend::Cpu,
+            toy_gmm(),
+            ExpCurve { a: 0.018, b: 1.330, c: 2.156 },
+            LogNormal::new(-1.0, 0.15),
+            &mut rng,
+        );
+        let mut pairs: Vec<(f64, f64)> = (0..4000)
+            .map(|_| {
+                let (a, t) = synth.next().unwrap();
+                (a.log_size(), t)
+            })
+            .collect();
+        pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let n = pairs.len();
+        let lo: f64 = pairs[..n / 4].iter().map(|p| p.1).sum::<f64>() / (n / 4) as f64;
+        let hi: f64 = pairs[3 * n / 4..].iter().map(|p| p.1).sum::<f64>() / (n - 3 * n / 4) as f64;
+        assert!(hi > lo, "{hi} !> {lo}");
+    }
+
+    #[test]
+    fn rejection_counted_for_wild_mixture() {
+        // component centered far out of bounds -> heavy rejection
+        let c = [[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]];
+        let g = Gmm3 {
+            logw: vec![0.5f64.ln(), 0.5f64.ln()],
+            mu: vec![[8.0, 3.0, 12.0], [0.0, 0.0, 0.0]], // 2nd: rows ~1 -> rejected
+            pchol: vec![crate::stats::gmm::tril3_inv(&c); 2],
+            cchol: vec![c; 2],
+        };
+        let mut rng = Pcg64::new(3);
+        let mut synth = AssetSynthesizer::new(
+            Backend::Cpu,
+            g,
+            ExpCurve { a: 0.018, b: 1.330, c: 2.156 },
+            LogNormal::new(-1.0, 0.15),
+            &mut rng,
+        );
+        for _ in 0..500 {
+            synth.next().unwrap();
+        }
+        assert!(synth.rejected > 100, "rejected={}", synth.rejected);
+    }
+}

@@ -1,0 +1,7 @@
+//! Pipeline & data synthesizers (paper section IV-B).
+
+pub mod asset_synth;
+pub mod pipeline_synth;
+
+pub use asset_synth::AssetSynthesizer;
+pub use pipeline_synth::{PipelineSynthesizer, SynthConfig, TaskList};

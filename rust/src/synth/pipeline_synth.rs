@@ -1,0 +1,278 @@
+//! Stochastic pipeline synthesizer (paper section IV-B1).
+//!
+//! Generates plausible pipelines: the task sequence follows the
+//! prototypical structures of Fig 1, optional steps carry (possibly
+//! conditional) probabilities, and task characteristics (training
+//! framework) follow configurable frequencies — defaulting to the
+//! production mix the paper reports.
+
+use crate::model::{Framework, Pipeline, TaskType};
+use crate::model::pipeline::TaskNode;
+use crate::stats::rng::Pcg64;
+
+/// Synthesis probabilities. Every optional step has an inclusion
+/// probability; conditional ones depend on the state of the pipeline
+/// being generated (e.g. a re-evaluation only after compress/harden).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SynthConfig {
+    /// Framework mix (must sum to 1 across Framework::ALL order).
+    pub framework_shares: [f64; 5],
+    /// P(pipeline has a data-preprocessing step).
+    pub p_preprocess: f64,
+    /// P(evaluation step after training).
+    pub p_evaluate: f64,
+    /// P(model compression step) — conditional on having evaluated.
+    pub p_compress: f64,
+    /// P(robustness hardening step).
+    pub p_harden: f64,
+    /// P(re-evaluation | compress or harden present).
+    pub p_reevaluate: f64,
+    /// P(transfer-learning second training step), Fig 1(3).
+    pub p_transfer: f64,
+    /// P(deployment step at the end).
+    pub p_deploy: f64,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        SynthConfig {
+            framework_shares: [0.63, 0.32, 0.03, 0.01, 0.01],
+            p_preprocess: 0.55,
+            p_evaluate: 0.70,
+            p_compress: 0.10,
+            p_harden: 0.05,
+            p_reevaluate: 0.80,
+            p_transfer: 0.05,
+            p_deploy: 0.80,
+        }
+    }
+}
+
+impl SynthConfig {
+    /// Shift the framework mix (the "TensorFlow trending" experiment the
+    /// paper motivates in section V-A2b). `tf_share` takes from SparkML.
+    pub fn with_tensorflow_share(mut self, tf_share: f64) -> Self {
+        let tf_share = tf_share.clamp(0.0, 0.95);
+        let others: f64 = self.framework_shares[2..].iter().sum();
+        self.framework_shares[1] = tf_share;
+        self.framework_shares[0] = (1.0 - tf_share - others).max(0.0);
+        self
+    }
+}
+
+/// Draws pipelines from the configured distribution.
+pub struct PipelineSynthesizer {
+    pub cfg: SynthConfig,
+    rng: Pcg64,
+    pub generated: u64,
+}
+
+impl PipelineSynthesizer {
+    pub fn new(cfg: SynthConfig, rng: Pcg64) -> Self {
+        PipelineSynthesizer {
+            cfg,
+            rng,
+            generated: 0,
+        }
+    }
+
+    /// Sample a framework from the configured mix.
+    pub fn sample_framework(&mut self) -> Framework {
+        let idx = self.rng.categorical(&self.cfg.framework_shares);
+        Framework::ALL[idx]
+    }
+
+    /// Generate one plausible pipeline.
+    pub fn generate(&mut self) -> Pipeline {
+        let nodes = self.generate_nodes();
+        Pipeline::linear(nodes.as_slice().to_vec())
+    }
+
+    /// Hot-path variant: the task sequence without digraph construction
+    /// (the simulator executes sequentially; building edge vectors per
+    /// arrival costs an allocation for nothing — see EXPERIMENTS.md §Perf).
+    pub fn generate_nodes(&mut self) -> TaskList {
+        self.generated += 1;
+        let fw = self.sample_framework();
+        let mut nodes = TaskList::new();
+        if self.rng.uniform() < self.cfg.p_preprocess {
+            nodes.push(TaskNode::new(TaskType::Preprocess));
+        }
+        nodes.push(TaskNode::with_framework(TaskType::Train, fw));
+        if self.rng.uniform() < self.cfg.p_transfer {
+            // hierarchical: fine-tune on top of the base model, Fig 1(3)
+            nodes.push(TaskNode::with_framework(TaskType::Train, fw));
+        }
+        let evaluated = self.rng.uniform() < self.cfg.p_evaluate;
+        if evaluated {
+            nodes.push(TaskNode::new(TaskType::Evaluate));
+        }
+        // compression is observed on evaluated (quality-gated) pipelines
+        let mut post = false;
+        if evaluated && self.rng.uniform() < self.cfg.p_compress {
+            nodes.push(TaskNode::with_framework(TaskType::Compress, fw));
+            post = true;
+        }
+        if self.rng.uniform() < self.cfg.p_harden {
+            nodes.push(TaskNode::with_framework(TaskType::Harden, fw));
+            post = true;
+        }
+        if post && self.rng.uniform() < self.cfg.p_reevaluate {
+            nodes.push(TaskNode::new(TaskType::Evaluate));
+        }
+        if self.rng.uniform() < self.cfg.p_deploy {
+            nodes.push(TaskNode::new(TaskType::Deploy));
+        }
+        nodes
+    }
+}
+
+/// Inline fixed-capacity task sequence (max 8 tasks: preprocess, 2x train,
+/// evaluate, compress, harden, re-evaluate, deploy) — allocation-free on
+/// the arrival hot path.
+#[derive(Clone, Copy, Debug)]
+pub struct TaskList {
+    items: [TaskNode; 8],
+    len: u8,
+}
+
+impl TaskList {
+    pub fn new() -> Self {
+        TaskList {
+            items: [TaskNode::new(TaskType::Train); 8],
+            len: 0,
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, node: TaskNode) {
+        assert!((self.len as usize) < 8, "pipeline longer than 8 tasks");
+        self.items[self.len as usize] = node;
+        self.len += 1;
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> TaskNode {
+        debug_assert!(i < self.len as usize);
+        self.items[i]
+    }
+
+    pub fn as_slice(&self) -> &[TaskNode] {
+        &self.items[..self.len as usize]
+    }
+
+    /// Build from a slice (retraining pipelines).
+    pub fn from_slice(nodes: &[TaskNode]) -> Self {
+        let mut l = TaskList::new();
+        for &n in nodes {
+            l.push(n);
+        }
+        l
+    }
+}
+
+impl Default for TaskList {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_generated_pipelines_are_valid() {
+        let mut synth = PipelineSynthesizer::new(SynthConfig::default(), Pcg64::new(1));
+        for _ in 0..5000 {
+            let p = synth.generate();
+            p.validate()
+                .unwrap_or_else(|e| panic!("invalid pipeline {}: {e}", p.signature()));
+        }
+    }
+
+    #[test]
+    fn framework_mix_matches_config() {
+        let mut synth = PipelineSynthesizer::new(SynthConfig::default(), Pcg64::new(2));
+        let mut counts = [0usize; 5];
+        let n = 50_000;
+        for _ in 0..n {
+            counts[synth.sample_framework().index()] += 1;
+        }
+        for (i, f) in Framework::ALL.iter().enumerate() {
+            let got = counts[i] as f64 / n as f64;
+            assert!(
+                (got - f.paper_share()).abs() < 0.01,
+                "{f}: {got} vs {}",
+                f.paper_share()
+            );
+        }
+    }
+
+    #[test]
+    fn optional_step_frequencies() {
+        let mut synth = PipelineSynthesizer::new(SynthConfig::default(), Pcg64::new(3));
+        let n = 20_000;
+        let mut with_pre = 0;
+        let mut with_eval = 0;
+        for _ in 0..n {
+            let p = synth.generate();
+            if p.has_task(TaskType::Preprocess) {
+                with_pre += 1;
+            }
+            if p.has_task(TaskType::Evaluate) {
+                with_eval += 1;
+            }
+        }
+        assert!((with_pre as f64 / n as f64 - 0.55).abs() < 0.02);
+        // evaluate appears via p_evaluate and re-evaluate
+        assert!(with_eval as f64 / n as f64 > 0.65);
+    }
+
+    #[test]
+    fn compression_conditional_on_evaluation() {
+        let cfg = SynthConfig {
+            p_evaluate: 0.0,
+            p_compress: 1.0,
+            ..Default::default()
+        };
+        let mut synth = PipelineSynthesizer::new(cfg, Pcg64::new(4));
+        for _ in 0..2000 {
+            let p = synth.generate();
+            assert!(!p.has_task(TaskType::Compress), "compress without evaluate");
+        }
+    }
+
+    #[test]
+    fn tensorflow_trend_shifts_mix() {
+        let cfg = SynthConfig::default().with_tensorflow_share(0.80);
+        let mut synth = PipelineSynthesizer::new(cfg, Pcg64::new(5));
+        let n = 20_000;
+        let mut tf = 0;
+        for _ in 0..n {
+            if synth.sample_framework() == Framework::TensorFlow {
+                tf += 1;
+            }
+        }
+        assert!((tf as f64 / n as f64 - 0.80).abs() < 0.02);
+        let total: f64 = synth.cfg.framework_shares.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn every_pipeline_trains() {
+        let mut synth = PipelineSynthesizer::new(SynthConfig::default(), Pcg64::new(6));
+        for _ in 0..1000 {
+            assert!(synth.generate().has_task(TaskType::Train));
+        }
+    }
+}

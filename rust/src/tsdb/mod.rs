@@ -1,0 +1,17 @@
+//! Embedded time-series store for simulation traces.
+//!
+//! The paper persisted synthetic traces to InfluxDB and concluded it "was
+//! overall a poor choice" (section VI-C: index blow-up on group-by, OOM
+//! past a few hundred thousand pipelines). This module is the fix they
+//! call for: an in-process, append-only, tag-indexed store with windowed
+//! aggregation and group-by queries, bounded memory, and CSV/JSON export.
+//!
+//! Hot-path design: series are interned to integer handles once
+//! ([`TsStore::handle`]) so recording a point in the simulator's event
+//! loop is two `Vec::push`es — no hashing, no allocation.
+
+mod query;
+mod store;
+
+pub use query::{Agg, GroupedSeries, WindowAgg};
+pub use store::{SeriesHandle, SeriesKey, TsStore};

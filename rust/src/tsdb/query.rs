@@ -1,0 +1,233 @@
+//! Windowed aggregation and group-by queries over the store.
+//!
+//! These are the queries the paper's Grafana dashboard issued against
+//! InfluxDB (Fig 11): utilization per resource over time windows, task
+//! arrivals per hour, wait-time aggregates — here O(n) over columnar
+//! series with no index amplification.
+
+use super::store::{Series, SeriesHandle, TsStore};
+use crate::des::SimTime;
+
+/// Aggregation functions over a window of values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Agg {
+    Mean,
+    Sum,
+    Min,
+    Max,
+    Count,
+    /// 50th percentile.
+    P50,
+    /// 95th percentile.
+    P95,
+    /// Last value in the window (gauge semantics).
+    Last,
+}
+
+impl Agg {
+    fn apply(self, vals: &mut Vec<f64>) -> Option<f64> {
+        if vals.is_empty() {
+            return None;
+        }
+        Some(match self {
+            Agg::Mean => vals.iter().sum::<f64>() / vals.len() as f64,
+            Agg::Sum => vals.iter().sum(),
+            Agg::Min => vals.iter().cloned().fold(f64::INFINITY, f64::min),
+            Agg::Max => vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            Agg::Count => vals.len() as f64,
+            Agg::P50 => percentile(vals, 0.50),
+            Agg::P95 => percentile(vals, 0.95),
+            Agg::Last => *vals.last().unwrap(),
+        })
+    }
+}
+
+fn percentile(vals: &mut [f64], p: f64) -> f64 {
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    crate::stats::desc::quantile_sorted(vals, p)
+}
+
+/// One aggregated window: [start, start+width) -> value (None if empty).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WindowAgg {
+    pub start: SimTime,
+    pub value: Option<f64>,
+}
+
+/// Aggregate one series into fixed-width windows over [t0, t1).
+pub fn window_aggregate(
+    s: &Series,
+    t0: SimTime,
+    t1: SimTime,
+    width: SimTime,
+    agg: Agg,
+) -> Vec<WindowAgg> {
+    assert!(width > 0.0 && t1 > t0);
+    let n_windows = ((t1 - t0) / width).ceil() as usize;
+    let mut buckets: Vec<Vec<f64>> = vec![Vec::new(); n_windows];
+    for (&t, &v) in s.times.iter().zip(&s.values) {
+        if t >= t0 && t < t1 {
+            let idx = ((t - t0) / width) as usize;
+            if idx < n_windows {
+                buckets[idx].push(v);
+            }
+        }
+    }
+    buckets
+        .into_iter()
+        .enumerate()
+        .map(|(i, mut vals)| WindowAgg {
+            start: t0 + i as f64 * width,
+            value: agg.apply(&mut vals),
+        })
+        .collect()
+}
+
+/// A group-by result: one aggregated series per tag value.
+#[derive(Clone, Debug)]
+pub struct GroupedSeries {
+    pub group: String,
+    pub windows: Vec<WindowAgg>,
+}
+
+impl TsStore {
+    /// Windowed aggregation of a single series.
+    pub fn window(
+        &self,
+        h: SeriesHandle,
+        t0: SimTime,
+        t1: SimTime,
+        width: SimTime,
+        agg: Agg,
+    ) -> Vec<WindowAgg> {
+        window_aggregate(self.series(h), t0, t1, width, agg)
+    }
+
+    /// `GROUP BY <tag>`: aggregate all series of `measurement`, grouped by
+    /// the value of `tag`, each into fixed-width windows.
+    pub fn group_by(
+        &self,
+        measurement: &str,
+        tag: &str,
+        t0: SimTime,
+        t1: SimTime,
+        width: SimTime,
+        agg: Agg,
+    ) -> Vec<GroupedSeries> {
+        use std::collections::BTreeMap;
+        // merge series sharing a tag value before aggregating
+        let mut merged: BTreeMap<String, Series> = BTreeMap::new();
+        for h in self.find(measurement) {
+            let group = self
+                .key(h)
+                .tag_value(tag)
+                .unwrap_or("<none>")
+                .to_string();
+            let s = self.series(h);
+            let m = merged.entry(group).or_default();
+            m.times.extend_from_slice(&s.times);
+            m.values.extend_from_slice(&s.values);
+        }
+        merged
+            .into_iter()
+            .map(|(group, mut s)| {
+                // restore time order after merge
+                let mut idx: Vec<usize> = (0..s.times.len()).collect();
+                idx.sort_by(|&a, &b| s.times[a].partial_cmp(&s.times[b]).unwrap());
+                s.times = idx.iter().map(|&i| s.times[i]).collect();
+                s.values = idx.iter().map(|&i| s.values[i]).collect();
+                GroupedSeries {
+                    group,
+                    windows: window_aggregate(&s, t0, t1, width, agg),
+                }
+            })
+            .collect()
+    }
+
+    /// Scalar aggregate over the full range of one series.
+    pub fn aggregate(&self, h: SeriesHandle, agg: Agg) -> Option<f64> {
+        let s = self.series(h);
+        let mut vals = s.values.clone();
+        agg.apply(&mut vals)
+    }
+
+    /// All raw values of a series (for Q-Q / distribution analytics).
+    pub fn values(&self, h: SeriesHandle) -> &[f64] {
+        &self.series(h).values
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tsdb::SeriesKey;
+
+    fn sample_store() -> (TsStore, SeriesHandle) {
+        let mut db = TsStore::new();
+        let h = db.handle(SeriesKey::new("m"));
+        // points at t = 0..10, value = t
+        for i in 0..10 {
+            db.append(h, i as f64, i as f64);
+        }
+        (db, h)
+    }
+
+    #[test]
+    fn window_mean() {
+        let (db, h) = sample_store();
+        let w = db.window(h, 0.0, 10.0, 5.0, Agg::Mean);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0].value, Some(2.0)); // mean of 0..=4
+        assert_eq!(w[1].value, Some(7.0)); // mean of 5..=9
+    }
+
+    #[test]
+    fn window_count_and_empty() {
+        let (db, h) = sample_store();
+        let w = db.window(h, 0.0, 20.0, 5.0, Agg::Count);
+        assert_eq!(w.len(), 4);
+        assert_eq!(w[0].value, Some(5.0));
+        assert_eq!(w[1].value, Some(5.0));
+        assert_eq!(w[2].value, None);
+        assert_eq!(w[3].value, None);
+    }
+
+    #[test]
+    fn window_minmax_sum_last() {
+        let (db, h) = sample_store();
+        assert_eq!(db.window(h, 0.0, 10.0, 10.0, Agg::Min)[0].value, Some(0.0));
+        assert_eq!(db.window(h, 0.0, 10.0, 10.0, Agg::Max)[0].value, Some(9.0));
+        assert_eq!(db.window(h, 0.0, 10.0, 10.0, Agg::Sum)[0].value, Some(45.0));
+        assert_eq!(db.window(h, 0.0, 10.0, 10.0, Agg::Last)[0].value, Some(9.0));
+    }
+
+    #[test]
+    fn percentiles() {
+        let (db, h) = sample_store();
+        let p50 = db.window(h, 0.0, 10.0, 10.0, Agg::P50)[0].value.unwrap();
+        assert!((p50 - 4.5).abs() < 1e-12);
+        let p95 = db.window(h, 0.0, 10.0, 10.0, Agg::P95)[0].value.unwrap();
+        assert!(p95 > 8.0);
+    }
+
+    #[test]
+    fn group_by_tag() {
+        let mut db = TsStore::new();
+        db.record(SeriesKey::new("dur").tag("fw", "tf"), 0.0, 100.0);
+        db.record(SeriesKey::new("dur").tag("fw", "tf"), 1.0, 200.0);
+        db.record(SeriesKey::new("dur").tag("fw", "spark"), 0.5, 10.0);
+        let groups = db.group_by("dur", "fw", 0.0, 2.0, 2.0, Agg::Mean);
+        assert_eq!(groups.len(), 2);
+        let spark = groups.iter().find(|g| g.group == "spark").unwrap();
+        assert_eq!(spark.windows[0].value, Some(10.0));
+        let tf = groups.iter().find(|g| g.group == "tf").unwrap();
+        assert_eq!(tf.windows[0].value, Some(150.0));
+    }
+
+    #[test]
+    fn full_range_aggregate() {
+        let (db, h) = sample_store();
+        assert_eq!(db.aggregate(h, Agg::Sum), Some(45.0));
+        assert_eq!(db.values(h).len(), 10);
+    }
+}

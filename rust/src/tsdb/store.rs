@@ -1,0 +1,253 @@
+//! Series storage: interned keys, append-only columnar points.
+
+use std::collections::HashMap;
+use std::io::Write;
+
+use crate::des::SimTime;
+use crate::error::Result;
+
+/// A measurement name plus sorted tag pairs, e.g.
+/// `("task_duration", [("task","train"),("framework","tensorflow")])`.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct SeriesKey {
+    pub measurement: String,
+    pub tags: Vec<(String, String)>,
+}
+
+impl SeriesKey {
+    pub fn new(measurement: impl Into<String>) -> Self {
+        SeriesKey {
+            measurement: measurement.into(),
+            tags: Vec::new(),
+        }
+    }
+
+    pub fn tag(mut self, k: impl Into<String>, v: impl Into<String>) -> Self {
+        self.tags.push((k.into(), v.into()));
+        self.tags.sort();
+        self
+    }
+
+    pub fn tag_value(&self, key: &str) -> Option<&str> {
+        self.tags
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+impl std::fmt::Display for SeriesKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.measurement)?;
+        for (k, v) in &self.tags {
+            write!(f, ",{k}={v}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Interned handle for hot-path appends.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SeriesHandle(pub(crate) u32);
+
+/// Columnar storage for one series.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub times: Vec<f64>,
+    pub values: Vec<f64>,
+}
+
+impl Series {
+    pub fn len(&self) -> usize {
+        self.times.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.times.is_empty()
+    }
+}
+
+/// The store: all series of one experiment run.
+#[derive(Default)]
+pub struct TsStore {
+    keys: Vec<SeriesKey>,
+    series: Vec<Series>,
+    index: HashMap<SeriesKey, u32>,
+}
+
+impl TsStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Intern a key, returning a stable handle. Idempotent.
+    pub fn handle(&mut self, key: SeriesKey) -> SeriesHandle {
+        if let Some(&id) = self.index.get(&key) {
+            return SeriesHandle(id);
+        }
+        let id = self.keys.len() as u32;
+        self.index.insert(key.clone(), id);
+        self.keys.push(key);
+        self.series.push(Series::default());
+        SeriesHandle(id)
+    }
+
+    /// Append a point. Times within one series must be non-decreasing
+    /// (the simulator's clock is monotone, so this is free).
+    #[inline]
+    pub fn append(&mut self, h: SeriesHandle, t: SimTime, v: f64) {
+        let s = &mut self.series[h.0 as usize];
+        debug_assert!(
+            s.times.last().map_or(true, |&last| t >= last),
+            "out-of-order append to {}",
+            self.keys[h.0 as usize]
+        );
+        s.times.push(t);
+        s.values.push(v);
+    }
+
+    /// Convenience: intern + append in one call (cold paths only).
+    pub fn record(&mut self, key: SeriesKey, t: SimTime, v: f64) {
+        let h = self.handle(key);
+        self.append(h, t, v);
+    }
+
+    pub fn series(&self, h: SeriesHandle) -> &Series {
+        &self.series[h.0 as usize]
+    }
+
+    pub fn key(&self, h: SeriesHandle) -> &SeriesKey {
+        &self.keys[h.0 as usize]
+    }
+
+    pub fn get(&self, key: &SeriesKey) -> Option<&Series> {
+        self.index.get(key).map(|&id| &self.series[id as usize])
+    }
+
+    /// All handles whose measurement matches.
+    pub fn find(&self, measurement: &str) -> Vec<SeriesHandle> {
+        self.keys
+            .iter()
+            .enumerate()
+            .filter(|(_, k)| k.measurement == measurement)
+            .map(|(i, _)| SeriesHandle(i as u32))
+            .collect()
+    }
+
+    /// All handles matching measurement + a tag filter.
+    pub fn find_tagged(&self, measurement: &str, tag: &str, value: &str) -> Vec<SeriesHandle> {
+        self.find(measurement)
+            .into_iter()
+            .filter(|h| self.key(*h).tag_value(tag) == Some(value))
+            .collect()
+    }
+
+    pub fn num_series(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn num_points(&self) -> usize {
+        self.series.iter().map(|s| s.len()).sum()
+    }
+
+    /// Approximate resident bytes of the stored points.
+    pub fn approx_bytes(&self) -> usize {
+        self.num_points() * 16
+    }
+
+    pub fn handles(&self) -> impl Iterator<Item = SeriesHandle> + '_ {
+        (0..self.keys.len() as u32).map(SeriesHandle)
+    }
+
+    /// Export every series to CSV: `series,time,value` rows.
+    pub fn export_csv<W: Write>(&self, w: &mut W) -> Result<()> {
+        writeln!(w, "series,time,value")?;
+        for h in self.handles() {
+            let key = self.key(h).to_string();
+            let s = self.series(h);
+            for (t, v) in s.times.iter().zip(&s.values) {
+                writeln!(w, "{key},{t},{v}")?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Export one series as JSON {key, times, values}.
+    pub fn export_series_json(&self, h: SeriesHandle) -> Result<String> {
+        use crate::util::Json;
+        let s = self.series(h);
+        Ok(Json::obj(vec![
+            ("key", Json::Str(self.key(h).to_string())),
+            ("times", Json::arr_f64(s.times.iter().cloned())),
+            ("values", Json::arr_f64(s.values.iter().cloned())),
+        ])
+        .to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_is_idempotent() {
+        let mut db = TsStore::new();
+        let k = SeriesKey::new("util").tag("resource", "train");
+        let h1 = db.handle(k.clone());
+        let h2 = db.handle(k);
+        assert_eq!(h1, h2);
+        assert_eq!(db.num_series(), 1);
+    }
+
+    #[test]
+    fn append_and_read_back() {
+        let mut db = TsStore::new();
+        let h = db.handle(SeriesKey::new("m"));
+        db.append(h, 1.0, 10.0);
+        db.append(h, 2.0, 20.0);
+        let s = db.series(h);
+        assert_eq!(s.times, vec![1.0, 2.0]);
+        assert_eq!(s.values, vec![10.0, 20.0]);
+        assert_eq!(db.num_points(), 2);
+    }
+
+    #[test]
+    fn tags_sorted_and_queryable() {
+        let k = SeriesKey::new("x").tag("b", "2").tag("a", "1");
+        assert_eq!(k.tags[0].0, "a");
+        assert_eq!(k.tag_value("b"), Some("2"));
+        assert_eq!(k.tag_value("zz"), None);
+        assert_eq!(k.to_string(), "x,a=1,b=2");
+    }
+
+    #[test]
+    fn find_by_measurement_and_tag() {
+        let mut db = TsStore::new();
+        db.record(SeriesKey::new("dur").tag("task", "train"), 0.0, 1.0);
+        db.record(SeriesKey::new("dur").tag("task", "eval"), 0.0, 2.0);
+        db.record(SeriesKey::new("util").tag("task", "train"), 0.0, 3.0);
+        assert_eq!(db.find("dur").len(), 2);
+        assert_eq!(db.find_tagged("dur", "task", "train").len(), 1);
+        assert_eq!(db.find_tagged("dur", "task", "nope").len(), 0);
+    }
+
+    #[test]
+    fn csv_export() {
+        let mut db = TsStore::new();
+        db.record(SeriesKey::new("m").tag("t", "a"), 1.5, 2.5);
+        let mut buf = Vec::new();
+        db.export_csv(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("series,time,value"));
+        assert!(text.contains("m,t=a,1.5,2.5"));
+    }
+
+    #[test]
+    #[should_panic(expected = "out-of-order")]
+    #[cfg(debug_assertions)]
+    fn rejects_out_of_order() {
+        let mut db = TsStore::new();
+        let h = db.handle(SeriesKey::new("m"));
+        db.append(h, 5.0, 0.0);
+        db.append(h, 1.0, 0.0);
+    }
+}

@@ -1,0 +1,185 @@
+//! Micro-benchmark harness (offline environment: no criterion).
+//!
+//! Criterion-style adaptive timing: warm up, pick an iteration count that
+//! fills the measurement window, run repeats, report mean/min/σ. Used by
+//! every file under `benches/` (declared `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// One measured result.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters_per_round: u64,
+    pub rounds: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub std_dev: Duration,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (min {:>12}, σ {:>10}, {} x {} iters)",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.min),
+            fmt_dur(self.std_dev),
+            self.rounds,
+            self.iters_per_round,
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with a fixed wall-clock budget per case.
+pub struct Bench {
+    /// Target time per measurement round.
+    pub round_budget: Duration,
+    pub rounds: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            round_budget: Duration::from_millis(300),
+            rounds: 5,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_budget(round_budget: Duration, rounds: usize) -> Self {
+        Bench {
+            round_budget,
+            rounds,
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`, which performs ONE logical iteration per call.
+    pub fn bench(&mut self, name: impl Into<String>, mut f: impl FnMut()) -> &Measurement {
+        // warmup + calibration
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().max(Duration::from_nanos(20));
+        let iters = (self.round_budget.as_nanos() / once.as_nanos()).clamp(1, 50_000_000) as u64;
+        let mut round_means = Vec::with_capacity(self.rounds);
+        for _ in 0..self.rounds {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            round_means.push(t.elapsed().as_secs_f64() / iters as f64);
+        }
+        let mean = round_means.iter().sum::<f64>() / round_means.len() as f64;
+        let min = round_means.iter().cloned().fold(f64::INFINITY, f64::min);
+        let var = round_means
+            .iter()
+            .map(|m| (m - mean) * (m - mean))
+            .sum::<f64>()
+            / round_means.len() as f64;
+        let m = Measurement {
+            name: name.into(),
+            iters_per_round: iters,
+            rounds: self.rounds,
+            mean: Duration::from_secs_f64(mean),
+            min: Duration::from_secs_f64(min),
+            std_dev: Duration::from_secs_f64(var.sqrt()),
+        };
+        println!("{}", m.report());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Measure a one-shot (non-repeatable) workload: runs once per round.
+    pub fn bench_once(&mut self, name: impl Into<String>, mut f: impl FnMut()) -> &Measurement {
+        let mut round_means = Vec::with_capacity(self.rounds);
+        for _ in 0..self.rounds {
+            let t = Instant::now();
+            f();
+            round_means.push(t.elapsed().as_secs_f64());
+        }
+        let mean = round_means.iter().sum::<f64>() / round_means.len() as f64;
+        let min = round_means.iter().cloned().fold(f64::INFINITY, f64::min);
+        let var = round_means
+            .iter()
+            .map(|m| (m - mean) * (m - mean))
+            .sum::<f64>()
+            / round_means.len() as f64;
+        let m = Measurement {
+            name: name.into(),
+            iters_per_round: 1,
+            rounds: self.rounds,
+            mean: Duration::from_secs_f64(mean),
+            min: Duration::from_secs_f64(min),
+            std_dev: Duration::from_secs_f64(var.sqrt()),
+        };
+        println!("{}", m.report());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Opaque value sink preventing the optimizer from deleting benched work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_simple_work() {
+        let mut b = Bench::with_budget(Duration::from_millis(5), 3);
+        let mut acc = 0u64;
+        let m = b
+            .bench("add", || {
+                acc = black_box(acc.wrapping_add(1));
+            })
+            .clone();
+        assert!(m.mean.as_nanos() > 0);
+        assert!(m.iters_per_round >= 1);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn bench_once_counts_rounds() {
+        let mut b = Bench::with_budget(Duration::from_millis(1), 4);
+        let mut runs = 0;
+        b.bench_once("once", || runs += 1);
+        assert_eq!(runs, 4);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

@@ -1,0 +1,158 @@
+//! Tiny CLI argument parser (offline environment: no clap).
+//!
+//! Supports `pipesim <subcommand> --key value --flag` with typed getters
+//! and defaults; unknown options are an error so typos surface.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed arguments: a subcommand plus `--key [value]` options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            let key = tok
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Config(format!("unexpected argument '{tok}'")))?
+                .to_string();
+            // a value follows unless the next token is another option
+            match it.peek() {
+                Some(next) if !next.starts_with("--") => {
+                    let val = it.next().unwrap();
+                    args.opts.insert(key, val);
+                }
+                _ => args.flags.push(key),
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    /// String option with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.opts.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string option.
+    pub fn get_opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.opts.get(key).cloned()
+    }
+
+    /// Typed option with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        self.mark(key);
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: cannot parse '{v}'"))),
+        }
+    }
+
+    /// Optional typed option.
+    pub fn get_parse_opt<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>> {
+        self.mark(key);
+        match self.opts.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| Error::Config(format!("--{key}: cannot parse '{v}'"))),
+        }
+    }
+
+    /// Boolean flag (present = true).
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key) || self.opts.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+
+    /// Error on any option that no getter asked about (typo guard).
+    /// Call after all getters.
+    pub fn reject_unknown(&self) -> Result<()> {
+        let seen = self.consumed.borrow();
+        for key in self.opts.keys().chain(self.flags.iter()) {
+            if !seen.iter().any(|s| s == key) {
+                return Err(Error::Config(format!("unknown option --{key}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["simulate", "--days", "3.5", "--cpu", "--seed", "7"]);
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.get_parse("days", 1.0).unwrap(), 3.5);
+        assert_eq!(a.get_parse("seed", 0u64).unwrap(), 7);
+        assert!(a.flag("cpu"));
+        assert!(!a.flag("gpu"));
+        a.reject_unknown().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["fit"]);
+        assert_eq!(a.get("db", "empirical_db.json"), "empirical_db.json");
+        assert_eq!(a.get_parse("weeks", 8u32).unwrap(), 8);
+        assert_eq!(a.get_opt("missing"), None);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["x", "--verbose"]);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.get_parse("n", 0u32).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = parse(&["x", "--typo", "1"]);
+        a.get("other", "");
+        assert!(a.reject_unknown().is_err());
+    }
+
+    #[test]
+    fn unexpected_positional_is_error() {
+        assert!(Args::parse(["x".to_string(), "stray".to_string()]).is_err());
+    }
+}

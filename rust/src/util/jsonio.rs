@@ -1,0 +1,702 @@
+//! JSON (de)serialization impls for every persisted type, centralized so
+//! the domain modules stay serialization-free.
+
+use super::json::Json;
+use crate::arrivals::{ArrivalModel, ArrivalProfile};
+use crate::coordinator::config::{ArrivalSpec, ExperimentConfig, RuntimeViewConfig};
+use crate::coordinator::params::{ModelLaws, SimParams};
+use crate::coordinator::triggers::TriggerPolicy;
+use crate::des::resource::Discipline;
+use crate::empirical::{AnalyticsDb, AssetRecord, EvalRecord, JobRecord, PreprocRecord};
+use crate::error::{Error, Result};
+use crate::model::{Framework, InfraConfig, StoreConfig};
+use crate::stats::dist::{Dist, ExpWeibull, Exponential, LogNormal, Normal, Pareto, Weibull};
+use crate::stats::gmm::{Gmm1, Gmm3};
+use crate::stats::ExpCurve;
+use crate::synth::SynthConfig;
+
+/// Symmetric JSON conversion.
+pub trait JsonIo: Sized {
+    fn to_json(&self) -> Json;
+    fn from_json(j: &Json) -> Result<Self>;
+
+    fn save_json(&self, path: &std::path::Path) -> Result<()> {
+        self.to_json().save(path)
+    }
+
+    fn load_json(path: &std::path::Path) -> Result<Self> {
+        Self::from_json(&Json::load(path)?)
+    }
+}
+
+// ---------------------------------------------------------------------
+// enums with string forms
+// ---------------------------------------------------------------------
+
+impl Framework {
+    pub fn parse_name(s: &str) -> Result<Framework> {
+        Framework::ALL
+            .iter()
+            .find(|f| f.name() == s)
+            .copied()
+            .ok_or_else(|| Error::Other(format!("unknown framework '{s}'")))
+    }
+}
+
+impl JsonIo for Discipline {
+    fn to_json(&self) -> Json {
+        Json::Str(
+            match self {
+                Discipline::Fifo => "fifo",
+                Discipline::Priority => "priority",
+                Discipline::ShortestJobFirst => "sjf",
+            }
+            .into(),
+        )
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        match j.as_str()? {
+            "fifo" => Ok(Discipline::Fifo),
+            "priority" => Ok(Discipline::Priority),
+            "sjf" => Ok(Discipline::ShortestJobFirst),
+            s => Err(Error::Other(format!("unknown discipline '{s}'"))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// distributions
+// ---------------------------------------------------------------------
+
+impl JsonIo for Dist {
+    fn to_json(&self) -> Json {
+        match self {
+            Dist::Normal(d) => Json::obj(vec![
+                ("family", Json::Str("normal".into())),
+                ("mu", Json::Num(d.mu)),
+                ("sigma", Json::Num(d.sigma)),
+            ]),
+            Dist::LogNormal(d) => Json::obj(vec![
+                ("family", Json::Str("lognormal".into())),
+                ("mu", Json::Num(d.mu)),
+                ("sigma", Json::Num(d.sigma)),
+            ]),
+            Dist::Exponential(d) => Json::obj(vec![
+                ("family", Json::Str("exponential".into())),
+                ("lambda", Json::Num(d.lambda)),
+            ]),
+            Dist::Weibull(d) => Json::obj(vec![
+                ("family", Json::Str("weibull".into())),
+                ("k", Json::Num(d.k)),
+                ("lambda", Json::Num(d.lambda)),
+            ]),
+            Dist::ExpWeibull(d) => Json::obj(vec![
+                ("family", Json::Str("expweibull".into())),
+                ("alpha", Json::Num(d.alpha)),
+                ("k", Json::Num(d.k)),
+                ("lambda", Json::Num(d.lambda)),
+            ]),
+            Dist::Pareto(d) => Json::obj(vec![
+                ("family", Json::Str("pareto".into())),
+                ("xm", Json::Num(d.xm)),
+                ("alpha", Json::Num(d.alpha)),
+            ]),
+        }
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(match j.s("family")? {
+            "normal" => Dist::Normal(Normal::new(j.f("mu")?, j.f("sigma")?)),
+            "lognormal" => Dist::LogNormal(LogNormal::new(j.f("mu")?, j.f("sigma")?)),
+            "exponential" => Dist::Exponential(Exponential::new(j.f("lambda")?)),
+            "weibull" => Dist::Weibull(Weibull::new(j.f("k")?, j.f("lambda")?)),
+            "expweibull" => {
+                Dist::ExpWeibull(ExpWeibull::new(j.f("alpha")?, j.f("k")?, j.f("lambda")?))
+            }
+            "pareto" => Dist::Pareto(Pareto::new(j.f("xm")?, j.f("alpha")?)),
+            s => return Err(Error::Other(format!("unknown family '{s}'"))),
+        })
+    }
+}
+
+impl JsonIo for LogNormal {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![("mu", Json::Num(self.mu)), ("sigma", Json::Num(self.sigma))])
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(LogNormal::new(j.f("mu")?, j.f("sigma")?))
+    }
+}
+
+impl JsonIo for ExpCurve {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("a", Json::Num(self.a)),
+            ("b", Json::Num(self.b)),
+            ("c", Json::Num(self.c)),
+        ])
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(ExpCurve {
+            a: j.f("a")?,
+            b: j.f("b")?,
+            c: j.f("c")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// mixtures (matrices stored flat, row-major)
+// ---------------------------------------------------------------------
+
+impl JsonIo for Gmm3 {
+    fn to_json(&self) -> Json {
+        let flat3 = |m: &Vec<[f64; 3]>| Json::arr_f64(m.iter().flatten().cloned());
+        let flat33 = |m: &Vec<[[f64; 3]; 3]>| {
+            Json::arr_f64(m.iter().flat_map(|a| a.iter().flatten().cloned()))
+        };
+        Json::obj(vec![
+            ("logw", Json::arr_f64(self.logw.iter().cloned())),
+            ("mu", flat3(&self.mu)),
+            ("cchol", flat33(&self.cchol)),
+            ("pchol", flat33(&self.pchol)),
+        ])
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        let logw = j.req("logw")?.as_f64_vec()?;
+        let k = logw.len();
+        let mu_flat = j.req("mu")?.as_f64_vec()?;
+        let cchol_flat = j.req("cchol")?.as_f64_vec()?;
+        let pchol_flat = j.req("pchol")?.as_f64_vec()?;
+        if mu_flat.len() != k * 3 || cchol_flat.len() != k * 9 || pchol_flat.len() != k * 9 {
+            return Err(Error::Other("gmm3: shape mismatch".into()));
+        }
+        let mu = mu_flat.chunks(3).map(|c| [c[0], c[1], c[2]]).collect();
+        let unflat = |flat: &[f64]| {
+            flat.chunks(9)
+                .map(|c| {
+                    [
+                        [c[0], c[1], c[2]],
+                        [c[3], c[4], c[5]],
+                        [c[6], c[7], c[8]],
+                    ]
+                })
+                .collect()
+        };
+        Ok(Gmm3 {
+            logw,
+            mu,
+            cchol: unflat(&cchol_flat),
+            pchol: unflat(&pchol_flat),
+        })
+    }
+}
+
+impl JsonIo for Gmm1 {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("logw", Json::arr_f64(self.logw.iter().cloned())),
+            ("mu", Json::arr_f64(self.mu.iter().cloned())),
+            ("logsd", Json::arr_f64(self.logsd.iter().cloned())),
+        ])
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        let g = Gmm1 {
+            logw: j.req("logw")?.as_f64_vec()?,
+            mu: j.req("mu")?.as_f64_vec()?,
+            logsd: j.req("logsd")?.as_f64_vec()?,
+        };
+        if g.mu.len() != g.logw.len() || g.logsd.len() != g.logw.len() {
+            return Err(Error::Other("gmm1: shape mismatch".into()));
+        }
+        Ok(g)
+    }
+}
+
+// ---------------------------------------------------------------------
+// arrivals
+// ---------------------------------------------------------------------
+
+impl JsonIo for ArrivalModel {
+    fn to_json(&self) -> Json {
+        match self {
+            ArrivalModel::Random(d) => Json::obj(vec![
+                ("mode", Json::Str("random".into())),
+                ("dist", d.to_json()),
+            ]),
+            ArrivalModel::Profile(p) => Json::obj(vec![
+                ("mode", Json::Str("profile".into())),
+                ("clusters", Json::Arr(p.clusters.iter().map(|d| d.to_json()).collect())),
+                ("sse", Json::arr_f64(p.sse.iter().cloned())),
+            ]),
+            ArrivalModel::Poisson { mean_interarrival } => Json::obj(vec![
+                ("mode", Json::Str("poisson".into())),
+                ("mean_interarrival", Json::Num(*mean_interarrival)),
+            ]),
+            ArrivalModel::Replay(trace) => Json::obj(vec![
+                ("mode", Json::Str("replay".into())),
+                ("gaps", Json::arr_f64(trace.gaps.iter().cloned())),
+            ]),
+        }
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(match j.s("mode")? {
+            "random" => ArrivalModel::Random(Dist::from_json(j.req("dist")?)?),
+            "profile" => {
+                let clusters = j
+                    .req("clusters")?
+                    .as_arr()?
+                    .iter()
+                    .map(Dist::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                let sse = j.req("sse")?.as_f64_vec()?;
+                if clusters.len() != 168 {
+                    return Err(Error::Other(format!(
+                        "profile: {} clusters, expected 168",
+                        clusters.len()
+                    )));
+                }
+                ArrivalModel::Profile(ArrivalProfile { clusters, sse })
+            }
+            "poisson" => ArrivalModel::Poisson {
+                mean_interarrival: j.f("mean_interarrival")?,
+            },
+            "replay" => ArrivalModel::Replay(crate::arrivals::ReplayTrace::new(
+                j.req("gaps")?.as_f64_vec()?,
+            )),
+            s => return Err(Error::Other(format!("unknown arrival mode '{s}'"))),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// sim params
+// ---------------------------------------------------------------------
+
+impl JsonIo for ModelLaws {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("perf_mean", Json::Num(self.perf_mean)),
+            ("perf_sd", Json::Num(self.perf_sd)),
+            ("size_ln_mean", Json::Num(self.size_ln_mean)),
+            ("size_ln_sd", Json::Num(self.size_ln_sd)),
+            ("inference_ln_mean", Json::Num(self.inference_ln_mean)),
+            ("inference_ln_sd", Json::Num(self.inference_ln_sd)),
+            ("clever_max", Json::Num(self.clever_max)),
+        ])
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(ModelLaws {
+            perf_mean: j.f("perf_mean")?,
+            perf_sd: j.f("perf_sd")?,
+            size_ln_mean: j.f("size_ln_mean")?,
+            size_ln_sd: j.f("size_ln_sd")?,
+            inference_ln_mean: j.f("inference_ln_mean")?,
+            inference_ln_sd: j.f("inference_ln_sd")?,
+            clever_max: j.f("clever_max")?,
+        })
+    }
+}
+
+impl JsonIo for SimParams {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("asset_gmm", self.asset_gmm.to_json()),
+            (
+                "train_log_gmm",
+                Json::Arr(self.train_log_gmm.iter().map(|g| g.to_json()).collect()),
+            ),
+            ("eval_log_gmm", self.eval_log_gmm.to_json()),
+            ("preproc_curve", self.preproc_curve.to_json()),
+            ("preproc_noise", self.preproc_noise.to_json()),
+            ("arrival_random", self.arrival_random.to_json()),
+            ("arrival_profile", self.arrival_profile.to_json()),
+            ("arrival_replay", self.arrival_replay.to_json()),
+            ("mean_interarrival", Json::Num(self.mean_interarrival)),
+            ("model_laws", self.model_laws.to_json()),
+        ])
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(SimParams {
+            asset_gmm: Gmm3::from_json(j.req("asset_gmm")?)?,
+            train_log_gmm: j
+                .req("train_log_gmm")?
+                .as_arr()?
+                .iter()
+                .map(Gmm1::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            eval_log_gmm: Gmm1::from_json(j.req("eval_log_gmm")?)?,
+            preproc_curve: ExpCurve::from_json(j.req("preproc_curve")?)?,
+            preproc_noise: LogNormal::from_json(j.req("preproc_noise")?)?,
+            arrival_random: ArrivalModel::from_json(j.req("arrival_random")?)?,
+            arrival_profile: ArrivalModel::from_json(j.req("arrival_profile")?)?,
+            arrival_replay: ArrivalModel::from_json(j.req("arrival_replay")?)?,
+            mean_interarrival: j.f("mean_interarrival")?,
+            model_laws: ModelLaws::from_json(j.req("model_laws")?)?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// analytics DB (columnar for compactness/speed)
+// ---------------------------------------------------------------------
+
+impl JsonIo for AnalyticsDb {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("weeks", Json::Num(self.weeks as f64)),
+            ("job_t", Json::arr_f64(self.jobs.iter().map(|r| r.t))),
+            (
+                "job_fw",
+                Json::arr_f64(self.jobs.iter().map(|r| r.framework.index() as f64)),
+            ),
+            ("job_dur", Json::arr_f64(self.jobs.iter().map(|r| r.duration))),
+            ("asset_rows", Json::arr_f64(self.assets.iter().map(|r| r.rows))),
+            ("asset_cols", Json::arr_f64(self.assets.iter().map(|r| r.cols))),
+            ("asset_bytes", Json::arr_f64(self.assets.iter().map(|r| r.bytes))),
+            ("pre_rows", Json::arr_f64(self.preproc.iter().map(|r| r.rows))),
+            ("pre_cols", Json::arr_f64(self.preproc.iter().map(|r| r.cols))),
+            ("pre_dur", Json::arr_f64(self.preproc.iter().map(|r| r.duration))),
+            ("eval_dur", Json::arr_f64(self.evals.iter().map(|r| r.duration))),
+        ])
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        let job_t = j.req("job_t")?.as_f64_vec()?;
+        let job_fw = j.req("job_fw")?.as_f64_vec()?;
+        let job_dur = j.req("job_dur")?.as_f64_vec()?;
+        if job_fw.len() != job_t.len() || job_dur.len() != job_t.len() {
+            return Err(Error::Other("db: job column mismatch".into()));
+        }
+        let jobs = job_t
+            .iter()
+            .zip(&job_fw)
+            .zip(&job_dur)
+            .map(|((&t, &fw), &duration)| {
+                let idx = fw as usize;
+                if idx >= Framework::ALL.len() {
+                    return Err(Error::Other(format!("db: bad framework index {idx}")));
+                }
+                Ok(JobRecord {
+                    t,
+                    framework: Framework::ALL[idx],
+                    duration,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let zip3 = |a: Vec<f64>, b: Vec<f64>, c: Vec<f64>| -> Result<Vec<(f64, f64, f64)>> {
+            if a.len() != b.len() || a.len() != c.len() {
+                return Err(Error::Other("db: column mismatch".into()));
+            }
+            Ok(a.into_iter()
+                .zip(b)
+                .zip(c)
+                .map(|((x, y), z)| (x, y, z))
+                .collect())
+        };
+        let assets = zip3(
+            j.req("asset_rows")?.as_f64_vec()?,
+            j.req("asset_cols")?.as_f64_vec()?,
+            j.req("asset_bytes")?.as_f64_vec()?,
+        )?
+        .into_iter()
+        .map(|(rows, cols, bytes)| AssetRecord { rows, cols, bytes })
+        .collect();
+        let preproc = zip3(
+            j.req("pre_rows")?.as_f64_vec()?,
+            j.req("pre_cols")?.as_f64_vec()?,
+            j.req("pre_dur")?.as_f64_vec()?,
+        )?
+        .into_iter()
+        .map(|(rows, cols, duration)| PreprocRecord {
+            rows,
+            cols,
+            duration,
+        })
+        .collect();
+        let evals = j
+            .req("eval_dur")?
+            .as_f64_vec()?
+            .into_iter()
+            .map(|duration| EvalRecord { duration })
+            .collect();
+        Ok(AnalyticsDb {
+            weeks: j.req("weeks")?.as_u64()? as u32,
+            jobs,
+            assets,
+            preproc,
+            evals,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// experiment config tree
+// ---------------------------------------------------------------------
+
+impl JsonIo for StoreConfig {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("read_bw", Json::Num(self.read_bw)),
+            ("write_bw", Json::Num(self.write_bw)),
+            ("latency", Json::Num(self.latency)),
+            ("tcp_overhead", Json::Num(self.tcp_overhead)),
+        ])
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(StoreConfig {
+            read_bw: j.f("read_bw")?,
+            write_bw: j.f("write_bw")?,
+            latency: j.f("latency")?,
+            tcp_overhead: j.f("tcp_overhead")?,
+        })
+    }
+}
+
+impl JsonIo for InfraConfig {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("training_capacity", Json::Num(self.training_capacity as f64)),
+            ("compute_capacity", Json::Num(self.compute_capacity as f64)),
+            ("discipline", self.discipline.to_json()),
+            ("store", self.store.to_json()),
+        ])
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(InfraConfig {
+            training_capacity: j.req("training_capacity")?.as_usize()?,
+            compute_capacity: j.req("compute_capacity")?.as_usize()?,
+            discipline: Discipline::from_json(j.req("discipline")?)?,
+            store: StoreConfig::from_json(j.req("store")?)?,
+        })
+    }
+}
+
+impl JsonIo for SynthConfig {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "framework_shares",
+                Json::arr_f64(self.framework_shares.iter().cloned()),
+            ),
+            ("p_preprocess", Json::Num(self.p_preprocess)),
+            ("p_evaluate", Json::Num(self.p_evaluate)),
+            ("p_compress", Json::Num(self.p_compress)),
+            ("p_harden", Json::Num(self.p_harden)),
+            ("p_reevaluate", Json::Num(self.p_reevaluate)),
+            ("p_transfer", Json::Num(self.p_transfer)),
+            ("p_deploy", Json::Num(self.p_deploy)),
+        ])
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        let shares = j.req("framework_shares")?.as_f64_vec()?;
+        if shares.len() != 5 {
+            return Err(Error::Other("framework_shares must have 5 entries".into()));
+        }
+        Ok(SynthConfig {
+            framework_shares: [shares[0], shares[1], shares[2], shares[3], shares[4]],
+            p_preprocess: j.f("p_preprocess")?,
+            p_evaluate: j.f("p_evaluate")?,
+            p_compress: j.f("p_compress")?,
+            p_harden: j.f("p_harden")?,
+            p_reevaluate: j.f("p_reevaluate")?,
+            p_transfer: j.f("p_transfer")?,
+            p_deploy: j.f("p_deploy")?,
+        })
+    }
+}
+
+impl JsonIo for TriggerPolicy {
+    fn to_json(&self) -> Json {
+        match self {
+            TriggerPolicy::Eager => Json::obj(vec![("policy", Json::Str("eager".into()))]),
+            TriggerPolicy::Never => Json::obj(vec![("policy", Json::Str("never".into()))]),
+            TriggerPolicy::DriftThreshold { threshold } => Json::obj(vec![
+                ("policy", Json::Str("drift_threshold".into())),
+                ("threshold", Json::Num(*threshold)),
+            ]),
+            TriggerPolicy::OffPeak {
+                threshold,
+                max_intensity,
+            } => Json::obj(vec![
+                ("policy", Json::Str("off_peak".into())),
+                ("threshold", Json::Num(*threshold)),
+                ("max_intensity", Json::Num(*max_intensity)),
+            ]),
+        }
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(match j.s("policy")? {
+            "eager" => TriggerPolicy::Eager,
+            "never" => TriggerPolicy::Never,
+            "drift_threshold" => TriggerPolicy::DriftThreshold {
+                threshold: j.f("threshold")?,
+            },
+            "off_peak" => TriggerPolicy::OffPeak {
+                threshold: j.f("threshold")?,
+                max_intensity: j.f("max_intensity")?,
+            },
+            s => return Err(Error::Other(format!("unknown trigger policy '{s}'"))),
+        })
+    }
+}
+
+impl JsonIo for RuntimeViewConfig {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("enabled", Json::Bool(self.enabled)),
+            ("detector_interval", Json::Num(self.detector_interval)),
+            ("decay_per_day", Json::Num(self.decay_per_day)),
+            ("sudden_drift_prob", Json::Num(self.sudden_drift_prob)),
+            ("sudden_drift_drop", Json::Num(self.sudden_drift_drop)),
+            ("trigger", self.trigger.to_json()),
+            ("max_models", Json::Num(self.max_models as f64)),
+        ])
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(RuntimeViewConfig {
+            enabled: j.req("enabled")?.as_bool()?,
+            detector_interval: j.f("detector_interval")?,
+            decay_per_day: j.f("decay_per_day")?,
+            sudden_drift_prob: j.f("sudden_drift_prob")?,
+            sudden_drift_drop: j.f("sudden_drift_drop")?,
+            trigger: TriggerPolicy::from_json(j.req("trigger")?)?,
+            max_models: j.req("max_models")?.as_usize()?,
+        })
+    }
+}
+
+impl JsonIo for ArrivalSpec {
+    fn to_json(&self) -> Json {
+        match self {
+            ArrivalSpec::Random => Json::obj(vec![("mode", Json::Str("random".into()))]),
+            ArrivalSpec::Profile => Json::obj(vec![("mode", Json::Str("profile".into()))]),
+            ArrivalSpec::Poisson { mean_interarrival } => Json::obj(vec![
+                ("mode", Json::Str("poisson".into())),
+                ("mean_interarrival", Json::Num(*mean_interarrival)),
+            ]),
+            ArrivalSpec::Replay => Json::obj(vec![("mode", Json::Str("replay".into()))]),
+        }
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(match j.s("mode")? {
+            "random" => ArrivalSpec::Random,
+            "profile" => ArrivalSpec::Profile,
+            "replay" => ArrivalSpec::Replay,
+            "poisson" => ArrivalSpec::Poisson {
+                mean_interarrival: j.f("mean_interarrival")?,
+            },
+            s => return Err(Error::Other(format!("unknown arrival spec '{s}'"))),
+        })
+    }
+}
+
+impl JsonIo for ExperimentConfig {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("horizon", Json::Num(self.horizon)),
+            ("arrival", self.arrival.to_json()),
+            ("interarrival_factor", Json::Num(self.interarrival_factor)),
+            ("infra", self.infra.to_json()),
+            ("synth", self.synth.to_json()),
+            ("sample_interval", Json::Num(self.sample_interval)),
+            ("record_traces", Json::Bool(self.record_traces)),
+            ("runtime_view", self.runtime_view.to_json()),
+            (
+                "max_pipelines",
+                self.max_pipelines
+                    .map(|m| Json::Num(m as f64))
+                    .unwrap_or(Json::Null),
+            ),
+        ])
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(ExperimentConfig {
+            name: j.s("name")?.to_string(),
+            seed: j.req("seed")?.as_u64()?,
+            horizon: j.f("horizon")?,
+            arrival: ArrivalSpec::from_json(j.req("arrival")?)?,
+            interarrival_factor: j.f("interarrival_factor")?,
+            infra: InfraConfig::from_json(j.req("infra")?)?,
+            synth: SynthConfig::from_json(j.req("synth")?)?,
+            sample_interval: j.f("sample_interval")?,
+            record_traces: j.req("record_traces")?.as_bool()?,
+            runtime_view: RuntimeViewConfig::from_json(j.req("runtime_view")?)?,
+            max_pipelines: match j.get("max_pipelines") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_u64()?),
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Pcg64;
+
+    fn roundtrip<T: JsonIo + std::fmt::Debug>(v: &T) -> T {
+        let text = v.to_json().to_string();
+        T::from_json(&Json::parse(&text).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn dist_roundtrips() {
+        for d in [
+            Dist::Normal(Normal::new(1.0, 2.0)),
+            Dist::LogNormal(LogNormal::new(-1.0, 0.15)),
+            Dist::Exponential(Exponential::new(0.5)),
+            Dist::Weibull(Weibull::new(1.5, 10.0)),
+            Dist::ExpWeibull(ExpWeibull::new(2.0, 0.9, 40.0)),
+            Dist::Pareto(Pareto::new(1.0, 1.5)),
+        ] {
+            assert_eq!(roundtrip(&d), d);
+        }
+    }
+
+    #[test]
+    fn gmm_roundtrips() {
+        let mut rng = Pcg64::new(1);
+        let data: Vec<[f64; 3]> = (0..200)
+            .map(|_| [rng.normal(), rng.normal(), rng.normal()])
+            .collect();
+        let (g, _) = Gmm3::fit(&data, 3, &mut rng, 10, 1e-6).unwrap();
+        let back = roundtrip(&g);
+        assert_eq!(back.logw, g.logw);
+        assert_eq!(back.mu, g.mu);
+        assert_eq!(back.pchol, g.pchol);
+
+        let x: Vec<f64> = (0..100).map(|_| rng.normal()).collect();
+        let (g1, _) = Gmm1::fit(&x, 2, &mut rng, 10, 1e-6);
+        let back = roundtrip(&g1);
+        assert_eq!(back.mu, g1.mu);
+    }
+
+    #[test]
+    fn config_roundtrip() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.max_pipelines = Some(1234);
+        cfg.runtime_view.trigger = TriggerPolicy::OffPeak {
+            threshold: 0.07,
+            max_intensity: 0.4,
+        };
+        cfg.infra.discipline = Discipline::ShortestJobFirst;
+        let back = roundtrip(&cfg);
+        assert_eq!(back.max_pipelines, Some(1234));
+        assert_eq!(back.runtime_view.trigger, cfg.runtime_view.trigger);
+        assert_eq!(back.infra.discipline, Discipline::ShortestJobFirst);
+        assert_eq!(back.synth.framework_shares, cfg.synth.framework_shares);
+    }
+
+    #[test]
+    fn framework_parse() {
+        assert_eq!(Framework::parse_name("sparkml").unwrap(), Framework::SparkML);
+        assert!(Framework::parse_name("mxnet").is_err());
+    }
+
+    #[test]
+    fn bad_shapes_rejected() {
+        let j = Json::parse(r#"{"logw":[0.0],"mu":[1,2],"logsd":[0.0]}"#).unwrap();
+        assert!(Gmm1::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! In-tree substrates replacing crates unavailable in the offline build
+//! environment: JSON persistence, CLI parsing, and a micro-benchmark
+//! harness.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod jsonio;
+
+pub use cli::Args;
+pub use json::Json;

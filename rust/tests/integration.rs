@@ -1,0 +1,225 @@
+//! Integration tests: the full gen → fit → simulate → analyze loop, the
+//! CLI binary, and paper-shape assertions (who wins, where the crossovers
+//! fall) across the subsystems.
+
+use std::process::Command;
+use std::rc::Rc;
+
+use pipesim::analytics::figures;
+use pipesim::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig, SimParams};
+use pipesim::des::DAY;
+use pipesim::empirical::{AnalyticsDb, GroundTruth};
+use pipesim::model::Framework;
+use pipesim::runtime::Runtime;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("pipesim_it_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn full_loop_gen_fit_simulate_analyze() {
+    let db = GroundTruth::new(99).generate_weeks(4);
+    let runtime = Runtime::load_default().map(Rc::new);
+    let params = fit_params(&db, runtime.clone()).unwrap();
+
+    let cfg = ExperimentConfig {
+        name: "it-full".into(),
+        seed: 4,
+        horizon: 7.0 * DAY,
+        arrival: ArrivalSpec::Profile,
+        ..Default::default()
+    };
+    let r = Experiment::new(cfg, params).with_runtime(runtime).run().unwrap();
+    assert!(r.arrived > 2000, "arrived {}", r.arrived);
+    assert!(r.completed as f64 > 0.9 * r.arrived as f64);
+
+    // Fig 12a shape: train strata near-diagonal Q-Q (the paper's best fit)
+    let qq = figures::fig12a_qq(&db, &r, 50);
+    let spark = qq.iter().find(|q| q.name == "train/sparkml").unwrap();
+    assert!(spark.quantile_corr > 0.95, "{}", spark.verdict());
+    let tf = qq.iter().find(|q| q.name == "train/tensorflow").unwrap();
+    assert!(tf.quantile_corr > 0.95, "{}", tf.verdict());
+    // preprocess is fit through a 3-parameter curve: decent but not perfect
+    let pre = qq.iter().find(|q| q.name == "preprocess").unwrap();
+    assert!(pre.quantile_corr > 0.80, "{}", pre.verdict());
+
+    // Fig 12b: interarrival Q-Q under the realistic profile
+    let ia = figures::fig12b_qq(&db, &r, "profile", 50).unwrap();
+    assert!(ia.quantile_corr > 0.95, "{}", ia.verdict());
+}
+
+#[test]
+fn persistence_roundtrip_through_files() {
+    let dir = tmpdir("persist");
+    let db = GroundTruth::new(7).generate_weeks(2);
+    let db_path = dir.join("db.json");
+    db.save(&db_path).unwrap();
+    let db2 = AnalyticsDb::load(&db_path).unwrap();
+    assert_eq!(db.jobs.len(), db2.jobs.len());
+    assert_eq!(db.assets.len(), db2.assets.len());
+
+    let params = fit_params(&db2, None).unwrap();
+    let p_path = dir.join("params.json");
+    params.save(&p_path).unwrap();
+    let params2 = SimParams::load(&p_path).unwrap();
+    assert!((params.preproc_curve.b - params2.preproc_curve.b).abs() < 1e-12);
+
+    // identical seeds + params loaded from disk => identical runs
+    let cfg = ExperimentConfig {
+        name: "it-persist".into(),
+        seed: 5,
+        horizon: DAY,
+        arrival: ArrivalSpec::Random,
+        ..Default::default()
+    };
+    let a = Experiment::new(cfg.clone(), params).run().unwrap();
+    let b = Experiment::new(cfg, params2).run().unwrap();
+    assert_eq!(a.arrived, b.arrived);
+    assert_eq!(a.events_processed, b.events_processed);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn framework_trend_saturates_training_cluster() {
+    // paper section V-A2b: TF jobs are ~18x longer; raising the TF share
+    // must raise training utilization monotonically (shape assertion)
+    let db = GroundTruth::new(3).generate_weeks(3);
+    let params = fit_params(&db, None).unwrap();
+    let mut utils = Vec::new();
+    for tf in [0.32, 0.6, 0.8] {
+        let cfg = ExperimentConfig {
+            name: format!("tf{tf}"),
+            seed: 6,
+            horizon: 3.0 * DAY,
+            arrival: ArrivalSpec::Profile,
+            synth: pipesim::synth::SynthConfig::default().with_tensorflow_share(tf),
+            record_traces: false,
+            ..Default::default()
+        };
+        let r = Experiment::new(cfg, params.clone()).run().unwrap();
+        utils.push(r.util_training);
+    }
+    assert!(
+        utils[0] < utils[1] && utils[1] < utils[2],
+        "utilization not monotone in TF share: {utils:?}"
+    );
+}
+
+#[test]
+fn capacity_crossover_shape() {
+    // Fig 11's story: scarce training capacity => queueing; ample => none.
+    let db = GroundTruth::new(13).generate_weeks(3);
+    let params = fit_params(&db, None).unwrap();
+    let run = |cap: usize| {
+        let mut cfg = ExperimentConfig {
+            name: format!("cap{cap}"),
+            seed: 8,
+            horizon: 3.0 * DAY,
+            arrival: ArrivalSpec::Profile,
+            record_traces: false,
+            ..Default::default()
+        };
+        cfg.infra.training_capacity = cap;
+        Experiment::new(cfg, params.clone()).run().unwrap()
+    };
+    let scarce = run(2);
+    let ample = run(32);
+    assert!(scarce.wait_training.mean() > 10.0 * ample.wait_training.mean().max(0.1));
+    assert!(scarce.util_training > ample.util_training);
+    assert!(ample.completed >= scarce.completed);
+}
+
+#[test]
+fn duration_medians_flow_through_simulation() {
+    // end-to-end: empirical medians -> fit -> simulated exec durations
+    let db = GroundTruth::new(23).generate_weeks(4);
+    let params = fit_params(&db, None).unwrap();
+    let cfg = ExperimentConfig {
+        name: "medians".into(),
+        seed: 9,
+        horizon: 7.0 * DAY,
+        arrival: ArrivalSpec::Random,
+        ..Default::default()
+    };
+    let r = Experiment::new(cfg, params).run().unwrap();
+    let spark = figures::simulated_durations(&r, "train", Some(Framework::SparkML.name()));
+    let tf = figures::simulated_durations(&r, "train", Some(Framework::TensorFlow.name()));
+    assert!(spark.len() > 200 && tf.len() > 100);
+    let med = |xs: &[f64]| pipesim::stats::quantile(xs, 0.5);
+    let (ms, mt) = (med(&spark), med(&tf));
+    // paper: Spark p50 ~10 s, TF p50 ~180 s
+    assert!((4.0..25.0).contains(&ms), "spark median {ms}");
+    assert!((100.0..320.0).contains(&mt), "tf median {mt}");
+    assert!(mt > 8.0 * ms);
+}
+
+// ------------------------------------------------------------------
+// CLI binary smoke tests
+// ------------------------------------------------------------------
+
+fn pipesim_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_pipesim"))
+}
+
+#[test]
+fn cli_end_to_end() {
+    let dir = tmpdir("cli");
+    let db = dir.join("db.json");
+    let params = dir.join("params.json");
+
+    let out = pipesim_bin()
+        .args(["gen-empirical", "--weeks", "2", "--seed", "3"])
+        .arg("--out")
+        .arg(&db)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let out = pipesim_bin()
+        .arg("fit")
+        .arg("--db")
+        .arg(&db)
+        .arg("--out")
+        .arg(&params)
+        .arg("--cpu")
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(params.exists());
+
+    let out = pipesim_bin()
+        .arg("simulate")
+        .arg("--params")
+        .arg(&params)
+        .args(["--days", "1", "--arrival", "poisson:120", "--cpu"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("dashboard"), "missing dashboard: {text}");
+    assert!(text.contains("pipelines"));
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn cli_table1_matches_paper_calibration() {
+    let out = pipesim_bin().arg("table1").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    // paper values present as the calibration columns
+    assert!(text.contains("80.7"), "{text}");
+    assert!(text.lines().count() >= 6);
+}
+
+#[test]
+fn cli_rejects_unknown_subcommand_and_option() {
+    let out = pipesim_bin().arg("bogus").output().unwrap();
+    assert!(!out.status.success());
+    let out = pipesim_bin()
+        .args(["table1", "--bogus", "1"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}

@@ -1,0 +1,295 @@
+//! Property-based tests over randomized inputs (in-tree harness: seeds
+//! drive a PCG64 stream; failures print the offending seed/case).
+//!
+//! Invariants covered (DESIGN.md section 5): event-clock monotonicity and
+//! FIFO tie-breaks, resource capacity/conservation/grant order, pipeline
+//! structural validity, experiment conservation laws, tsdb window
+//! consistency, distribution fit round-trips, JSON round-trips.
+
+use pipesim::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig};
+use pipesim::des::{AcquireResult, Calendar, Resource};
+use pipesim::empirical::GroundTruth;
+use pipesim::stats::dist::{Dist, Distribution, ExpWeibull, LogNormal, Pareto, Weibull};
+use pipesim::stats::rng::Pcg64;
+use pipesim::synth::{PipelineSynthesizer, SynthConfig};
+use pipesim::tsdb::{Agg, SeriesKey, TsStore};
+use pipesim::util::json::Json;
+use pipesim::util::jsonio::JsonIo;
+
+const CASES: u64 = 24;
+
+#[test]
+fn prop_calendar_pops_sorted_under_random_schedules() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(seed);
+        let mut cal: Calendar<u32> = Calendar::new();
+        // random interleaving of schedules and pops
+        let mut popped: Vec<f64> = Vec::new();
+        let mut id = 0u32;
+        for _ in 0..2000 {
+            if rng.uniform() < 0.6 || cal.is_empty() {
+                let delay = rng.uniform() * 1000.0;
+                cal.schedule(delay, id);
+                id += 1;
+            } else {
+                let (t, _) = cal.pop().unwrap();
+                popped.push(t);
+            }
+        }
+        while let Some((t, _)) = cal.pop() {
+            popped.push(t);
+        }
+        for w in popped.windows(2) {
+            assert!(w[0] <= w[1], "seed {seed}: out of order {w:?}");
+        }
+        assert_eq!(popped.len(), id as usize);
+    }
+}
+
+#[test]
+fn prop_resource_capacity_never_exceeded() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(1000 + seed);
+        let cap = 1 + rng.below(8);
+        let mut res: Resource<u32> = Resource::new("p", cap);
+        let mut t = 0.0;
+        let mut in_flight = 0usize;
+        let mut queued = 0usize;
+        for i in 0..3000u32 {
+            t += rng.uniform();
+            if rng.uniform() < 0.55 {
+                match res.request(t, i, rng.uniform()) {
+                    AcquireResult::Acquired => in_flight += 1,
+                    AcquireResult::Queued => queued += 1,
+                }
+            } else if in_flight > 0 {
+                match res.release(t) {
+                    Some(_) => {
+                        queued -= 1; // slot transferred to a waiter
+                    }
+                    None => in_flight -= 1,
+                }
+            }
+            assert!(res.in_use() <= cap, "seed {seed}: capacity exceeded");
+            assert_eq!(res.in_use(), in_flight, "seed {seed}: in-use drift");
+            assert_eq!(res.queued(), queued, "seed {seed}: queue drift");
+        }
+    }
+}
+
+#[test]
+fn prop_fifo_grant_order_is_request_order() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(2000 + seed);
+        let mut res: Resource<u32> = Resource::new("p", 1);
+        res.request(0.0, u32::MAX, 0.0); // occupy the slot
+        let n = 2 + rng.below(50) as u32;
+        for i in 0..n {
+            res.request(i as f64, i, rng.uniform());
+        }
+        for i in 0..n {
+            let g = res.release(100.0 + i as f64).unwrap();
+            assert_eq!(g.token, i, "seed {seed}: FIFO violated");
+        }
+    }
+}
+
+#[test]
+fn prop_synthesized_pipelines_always_valid() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(3000 + seed);
+        // random synthesis probabilities
+        let cfg = SynthConfig {
+            framework_shares: [0.2, 0.2, 0.2, 0.2, 0.2],
+            p_preprocess: rng.uniform(),
+            p_evaluate: rng.uniform(),
+            p_compress: rng.uniform(),
+            p_harden: rng.uniform(),
+            p_reevaluate: rng.uniform(),
+            p_transfer: rng.uniform(),
+            p_deploy: rng.uniform(),
+        };
+        let mut synth = PipelineSynthesizer::new(cfg, rng.substream(1));
+        for _ in 0..300 {
+            let p = synth.generate();
+            p.validate().unwrap_or_else(|e| {
+                panic!("seed {seed}: invalid pipeline {} ({e})", p.signature())
+            });
+        }
+    }
+}
+
+#[test]
+fn prop_experiment_conservation_and_determinism() {
+    let db = GroundTruth::new(77).generate_weeks(2);
+    let params = fit_params(&db, None).unwrap();
+    for seed in 0..6 {
+        let cfg = ExperimentConfig {
+            name: format!("prop-{seed}"),
+            seed,
+            horizon: 43_200.0,
+            arrival: ArrivalSpec::Poisson {
+                mean_interarrival: 60.0,
+            },
+            record_traces: true,
+            ..Default::default()
+        };
+        let a = Experiment::new(cfg.clone(), params.clone()).run().unwrap();
+        let b = Experiment::new(cfg, params.clone()).run().unwrap();
+        // determinism
+        assert_eq!(a.arrived, b.arrived);
+        assert_eq!(a.tasks_executed, b.tasks_executed);
+        assert_eq!(a.events_processed, b.events_processed);
+        // conservation: completions never exceed arrivals; arrival markers
+        // match the counter
+        assert!(a.completed <= a.arrived);
+        let marks: usize = a
+            .tsdb
+            .find("arrivals")
+            .iter()
+            .map(|&h| a.tsdb.series(h).len())
+            .sum();
+        assert_eq!(marks as u64, a.arrived);
+        // every completed pipeline logged exactly one completion marker
+        let comps: usize = a
+            .tsdb
+            .find("completions")
+            .iter()
+            .map(|&h| a.tsdb.series(h).len())
+            .sum();
+        assert_eq!(comps as u64, a.completed);
+    }
+}
+
+#[test]
+fn prop_tsdb_window_counts_partition_points() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(4000 + seed);
+        let mut db = TsStore::new();
+        let h = db.handle(SeriesKey::new("m"));
+        let mut t = 0.0;
+        let n = 500 + rng.below(2000);
+        for _ in 0..n {
+            t += rng.uniform() * 10.0;
+            db.append(h, t, rng.normal());
+        }
+        let t1 = t + 1.0;
+        let width = 1.0 + rng.uniform() * 50.0;
+        let windows = db.window(h, 0.0, t1, width, Agg::Count);
+        let total: f64 = windows.iter().filter_map(|w| w.value).sum();
+        assert_eq!(total as usize, n, "seed {seed}: window counts lost points");
+        // mean of means weighted by counts == global mean
+        let means = db.window(h, 0.0, t1, width, Agg::Mean);
+        let weighted: f64 = windows
+            .iter()
+            .zip(&means)
+            .filter_map(|(c, m)| Some(c.value? * m.value?))
+            .sum();
+        let global = db.aggregate(h, Agg::Mean).unwrap();
+        assert!(
+            (weighted / n as f64 - global).abs() < 1e-9,
+            "seed {seed}: window means inconsistent"
+        );
+    }
+}
+
+#[test]
+fn prop_distribution_sample_fit_roundtrip() {
+    // sample from a random family member, refit, compare quantiles
+    for seed in 0..8 {
+        let mut rng = Pcg64::new(5000 + seed);
+        let truth: Dist = match seed % 3 {
+            0 => Dist::LogNormal(LogNormal::new(
+                rng.uniform_range(0.5, 3.0),
+                rng.uniform_range(0.3, 1.2),
+            )),
+            1 => Dist::Weibull(Weibull::new(
+                rng.uniform_range(0.8, 2.5),
+                rng.uniform_range(5.0, 50.0),
+            )),
+            _ => Dist::Pareto(Pareto::new(
+                rng.uniform_range(0.5, 3.0),
+                rng.uniform_range(1.2, 3.0),
+            )),
+        };
+        let xs: Vec<f64> = (0..20_000).map(|_| truth.sample(&mut rng)).collect();
+        let (fit, _) = pipesim::stats::select_best_fit(&xs, 50).unwrap();
+        for &p in &[0.25, 0.5, 0.75, 0.9] {
+            let (qt, qf) = (truth.quantile(p), fit.quantile(p));
+            assert!(
+                (qt - qf).abs() / qt < 0.15,
+                "seed {seed} {}: q{p} {qt} vs {qf} ({})",
+                truth.name(),
+                fit.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_expweibull_quantile_cdf_inverse() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(6000 + seed);
+        let d = ExpWeibull::new(
+            rng.uniform_range(0.3, 4.0),
+            rng.uniform_range(0.4, 3.0),
+            rng.uniform_range(1.0, 100.0),
+        );
+        for _ in 0..50 {
+            let p = rng.uniform_range(0.001, 0.999);
+            let x = d.quantile(p);
+            assert!(
+                (d.cdf(x) - p).abs() < 1e-8,
+                "seed {seed}: roundtrip failed at p={p}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(rng: &mut Pcg64, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.uniform() < 0.5),
+            2 => Json::Num((rng.normal() * 1e3 * 64.0).round() / 64.0),
+            3 => Json::Str(format!("s{}-\"q\"\n", rng.next_u64())),
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for seed in 0..100 {
+        let mut rng = Pcg64::new(7000 + seed);
+        let v = random_json(&mut rng, 4);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(back, v, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_config_jsonio_roundtrip_random() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(8000 + seed);
+        let mut cfg = ExperimentConfig::default();
+        cfg.seed = rng.next_u64() >> 12;
+        cfg.horizon = rng.uniform_range(1e3, 1e8);
+        cfg.interarrival_factor = rng.uniform_range(0.1, 10.0);
+        cfg.infra.training_capacity = 1 + rng.below(100);
+        cfg.max_pipelines = if rng.uniform() < 0.5 {
+            Some(rng.next_u64() >> 20)
+        } else {
+            None
+        };
+        let back = ExperimentConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back.seed, cfg.seed);
+        assert_eq!(back.max_pipelines, cfg.max_pipelines);
+        assert!((back.horizon - cfg.horizon).abs() < 1e-6 * cfg.horizon);
+        assert_eq!(back.infra.training_capacity, cfg.infra.training_capacity);
+    }
+}
