@@ -4,7 +4,7 @@
 //!
 //! Run: `cargo bench --bench bench_fit`
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use pipesim::arrivals::ArrivalProfile;
 use pipesim::empirical::GroundTruth;
@@ -17,7 +17,7 @@ use pipesim::util::bench::{black_box, Bench};
 fn main() {
     let mut b = Bench::with_budget(std::time::Duration::from_millis(200), 3);
     let db = GroundTruth::new(9).generate_weeks(6);
-    let runtime = Runtime::load_default().map(Rc::new);
+    let runtime = Runtime::load_default().map(Arc::new);
 
     let assets = db.asset_log_matrix();
     let spark_logs: Vec<f64> = db

@@ -4,7 +4,7 @@
 //! Skips the PJRT cases when `artifacts/` is not built.
 //! Run: `cargo bench --bench bench_runtime`
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use pipesim::runtime::pool::{Backend, PreprocDurationPool, SamplePool1, SamplePool3};
 use pipesim::runtime::{Runtime, K1, K3, N_SAMPLE};
@@ -38,7 +38,7 @@ fn toy_gmm1() -> Gmm1 {
 
 fn main() {
     let mut b = Bench::new();
-    let runtime = Runtime::load_default().map(Rc::new);
+    let runtime = Runtime::load_default().map(Arc::new);
 
     let backends: Vec<(&str, Backend)> = match &runtime {
         Some(rt) => vec![

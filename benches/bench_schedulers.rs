@@ -4,7 +4,7 @@
 //!
 //! Run: `cargo bench --bench bench_schedulers`
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use pipesim::coordinator::config::RuntimeViewConfig;
 use pipesim::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig, TriggerPolicy};
@@ -16,7 +16,7 @@ use pipesim::util::bench::Bench;
 
 fn main() {
     let db = GroundTruth::new(17).generate_weeks(4);
-    let runtime = Runtime::load_default().map(Rc::new);
+    let runtime = Runtime::load_default().map(Arc::new);
     let params = fit_params(&db, runtime.clone()).expect("fit");
     let mut b = Bench::with_budget(std::time::Duration::from_millis(100), 3);
 

@@ -2,28 +2,30 @@
 //! of pipeline executions (wall-clock + µs/pipeline + memory), plus the
 //! paper's headline configuration (44 s mean interarrival).
 //!
-//! Run: `cargo bench --bench bench_simulator`
+//! Emits `BENCH_simulator.json` (events/sec, µs/pipeline, peak RSS at
+//! the 100k-pipeline scale) so the single-thread perf trajectory is
+//! tracked across PRs. Run: `cargo bench --bench bench_simulator`
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use pipesim::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig};
 use pipesim::empirical::GroundTruth;
 use pipesim::runtime::Runtime;
 use pipesim::util::bench::Bench;
+use pipesim::util::Json;
 
 fn main() {
     let db = GroundTruth::new(5).generate_weeks(4);
-    let runtime = Runtime::load_default().map(Rc::new);
-    println!(
-        "# sampler backend: {}",
-        if runtime.is_some() { "pjrt" } else { "cpu" }
-    );
+    let runtime = Runtime::load_default().map(Arc::new);
+    let backend = if runtime.is_some() { "pjrt" } else { "cpu" };
+    println!("# sampler backend: {backend}");
     let params = fit_params(&db, runtime.clone()).expect("fit");
 
     let mut b = Bench::with_budget(std::time::Duration::from_millis(200), 3);
 
     println!("# Fig 13: wall-clock vs #pipelines (flat 44 s interarrival)");
     println!("pipelines,wall_secs,us_per_pipeline,events_per_sec,peak_rss_mb");
+    let mut headline = None;
     for n in [1_000u64, 10_000, 100_000] {
         let mut last = None;
         b.bench_once(format!("simulate {n} pipelines"), || {
@@ -47,10 +49,14 @@ fn main() {
         });
         let (w, us, eps, rss) = last.unwrap();
         println!("{n},{w:.4},{us:.2},{eps:.0},{rss:.1}");
+        if n == 100_000 {
+            headline = Some((w, us, eps, rss));
+        }
     }
 
     // trace recording cost (the tsdb substrate's overhead, cf. the
     // paper's InfluxDB pain)
+    let mut traced_eps = 0.0;
     for record in [false, true] {
         b.bench_once(format!("simulate 50k pipelines, traces={record}"), || {
             let cfg = ExperimentConfig {
@@ -65,10 +71,27 @@ fn main() {
                 sample_interval: 3600.0,
                 ..Default::default()
             };
-            Experiment::new(cfg, params.clone())
+            let r = Experiment::new(cfg, params.clone())
                 .with_runtime(runtime.clone())
                 .run()
                 .expect("run");
+            if record {
+                traced_eps = r.events_per_sec();
+            }
         });
     }
+
+    let (wall, us, eps, rss) = headline.expect("100k row measured");
+    let json = Json::obj(vec![
+        ("bench", Json::Str("simulator".into())),
+        ("backend", Json::Str(backend.into())),
+        ("pipelines", Json::Num(100_000.0)),
+        ("wall_secs", Json::Num(wall)),
+        ("us_per_pipeline", Json::Num(us)),
+        ("events_per_sec", Json::Num(eps)),
+        ("events_per_sec_traced_50k", Json::Num(traced_eps)),
+        ("peak_rss_mb", Json::Num(rss)),
+    ]);
+    std::fs::write("BENCH_simulator.json", json.to_string()).expect("write BENCH_simulator.json");
+    println!("# wrote BENCH_simulator.json ({eps:.0} events/s single-thread)");
 }

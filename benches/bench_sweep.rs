@@ -1,0 +1,96 @@
+//! Sweep-engine bench: multicore scaling of the parallel replication
+//! engine over a 32-cell (config × seed) grid, with the determinism
+//! invariant checked at every worker count — parallel results must be
+//! byte-identical to the serial baseline.
+//!
+//! Emits `BENCH_sweep.json` so the scaling trajectory is tracked across
+//! PRs. Run: `cargo bench --bench bench_sweep`
+
+use std::sync::Arc;
+
+use pipesim::coordinator::{fit_params, ArrivalSpec, ExperimentConfig, Sweep, SweepResult};
+use pipesim::empirical::GroundTruth;
+use pipesim::runtime::Runtime;
+use pipesim::util::Json;
+
+const SEEDS_PER_CONFIG: usize = 8;
+const CAPACITIES: [usize; 4] = [4, 6, 8, 12];
+const PIPELINES_PER_CELL: u64 = 2_000;
+
+fn run_with(params: &Arc<pipesim::coordinator::SimParams>, rt: &Option<Arc<Runtime>>, jobs: usize) -> SweepResult {
+    let mut sweep = Sweep::new(params.clone()).with_runtime(rt.clone()).jobs(jobs);
+    for cap in CAPACITIES {
+        let mut cfg = ExperimentConfig {
+            name: format!("cap{cap}"),
+            horizon: f64::MAX / 4.0,
+            arrival: ArrivalSpec::Poisson {
+                mean_interarrival: 44.0,
+            },
+            max_pipelines: Some(PIPELINES_PER_CELL),
+            record_traces: false,
+            sample_interval: 3600.0,
+            ..Default::default()
+        };
+        cfg.infra.training_capacity = cap;
+        sweep.add_replications(&cfg, 1, SEEDS_PER_CONFIG);
+    }
+    sweep.run().expect("sweep")
+}
+
+fn main() {
+    let db = GroundTruth::new(5).generate_weeks(3);
+    let runtime = Runtime::load_default().map(Arc::new);
+    println!(
+        "# sampler backend: {}",
+        if runtime.is_some() { "pjrt" } else { "cpu" }
+    );
+    let params = Arc::new(fit_params(&db, runtime.clone()).expect("fit"));
+    let cells = CAPACITIES.len() * SEEDS_PER_CONFIG;
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("# {cells} cells x {PIPELINES_PER_CELL} pipelines, {cores} cores available");
+
+    // warm-up pass so allocator/page-cache effects don't bias jobs=1
+    let _ = run_with(&params, &runtime, 0);
+
+    println!("jobs,wall_secs,speedup_vs_1,events_per_sec,identical_to_serial");
+    let serial = run_with(&params, &runtime, 1);
+    let base_digests = serial.digests();
+    println!(
+        "1,{:.3},1.00,{:.0},true",
+        serial.wall_secs,
+        serial.events_per_sec()
+    );
+
+    let mut measured: Vec<(usize, f64, f64)> = vec![(1, serial.wall_secs, serial.events_per_sec())];
+    for jobs in [2usize, 4, 8] {
+        let r = run_with(&params, &runtime, jobs);
+        let identical = r.digests() == base_digests;
+        println!(
+            "{jobs},{:.3},{:.2},{:.0},{identical}",
+            r.wall_secs,
+            serial.wall_secs / r.wall_secs,
+            r.events_per_sec()
+        );
+        assert!(identical, "jobs={jobs} diverged from the serial baseline");
+        measured.push((jobs, r.wall_secs, r.events_per_sec()));
+    }
+
+    let best = measured
+        .iter()
+        .cloned()
+        .fold((1, f64::INFINITY, 0.0), |acc, m| if m.1 < acc.1 { m } else { acc });
+    let json = Json::obj(vec![
+        ("bench", Json::Str("sweep".into())),
+        ("cells", Json::Num(cells as f64)),
+        ("pipelines_per_cell", Json::Num(PIPELINES_PER_CELL as f64)),
+        ("cores_available", Json::Num(cores as f64)),
+        ("wall_secs_jobs1", Json::Num(serial.wall_secs)),
+        ("wall_secs_best", Json::Num(best.1)),
+        ("best_jobs", Json::Num(best.0 as f64)),
+        ("speedup_best", Json::Num(serial.wall_secs / best.1)),
+        ("events_per_sec_best", Json::Num(best.2)),
+        ("deterministic", Json::Bool(true)),
+    ]);
+    std::fs::write("BENCH_sweep.json", json.to_string()).expect("write BENCH_sweep.json");
+    println!("# wrote BENCH_sweep.json (speedup x{:.2} at {} jobs)", serial.wall_secs / best.1, best.0);
+}

@@ -5,7 +5,7 @@
 //!
 //! Run: `cargo run --release --example accuracy_eval`
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use pipesim::analytics::figures;
 use pipesim::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig};
@@ -14,10 +14,10 @@ use pipesim::empirical::GroundTruth;
 use pipesim::runtime::Runtime;
 use pipesim::stats::pearson;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> pipesim::Result<()> {
     let db = GroundTruth::new(19).generate_weeks(8);
     println!("{}", db.summary());
-    let runtime = Runtime::load_default().map(Rc::new);
+    let runtime = Runtime::load_default().map(Arc::new);
     let params = fit_params(&db, runtime.clone())?;
 
     let run = |arrival: ArrivalSpec, name: &str| {

@@ -9,7 +9,7 @@
 //!
 //! Run: `cargo run --release --example capacity_planning`
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use pipesim::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig};
 use pipesim::des::resource::Discipline;
@@ -17,9 +17,9 @@ use pipesim::des::DAY;
 use pipesim::empirical::GroundTruth;
 use pipesim::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> pipesim::Result<()> {
     let db = GroundTruth::new(7).generate_weeks(6);
-    let runtime = Runtime::load_default().map(Rc::new);
+    let runtime = Runtime::load_default().map(Arc::new);
     let params = fit_params(&db, runtime.clone())?;
 
     println!("== capacity sweep: 7 days each, realistic arrival profile ==");

@@ -9,7 +9,7 @@
 //!
 //! Run: `cargo run --release --example framework_trend`
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use pipesim::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig};
 use pipesim::des::DAY;
@@ -17,9 +17,9 @@ use pipesim::empirical::GroundTruth;
 use pipesim::runtime::Runtime;
 use pipesim::synth::SynthConfig;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> pipesim::Result<()> {
     let db = GroundTruth::new(13).generate_weeks(6);
-    let runtime = Runtime::load_default().map(Rc::new);
+    let runtime = Runtime::load_default().map(Arc::new);
     let params = fit_params(&db, runtime.clone())?;
 
     println!("== TensorFlow share sweep (7 days, fixed infra) ==");

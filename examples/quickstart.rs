@@ -9,7 +9,7 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use pipesim::analytics::render_dashboard;
 use pipesim::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig};
@@ -17,14 +17,14 @@ use pipesim::des::DAY;
 use pipesim::empirical::GroundTruth;
 use pipesim::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> pipesim::Result<()> {
     // 1. empirical substrate (8 weeks ≈ 32k training jobs)
     println!("== generating empirical database (8 weeks) ==");
     let db = GroundTruth::new(42).generate_weeks(8);
     println!("{}", db.summary());
 
     // 2. fit the modeled system
-    let runtime = Runtime::load_default().map(Rc::new);
+    let runtime = Runtime::load_default().map(Arc::new);
     println!(
         "== fitting simulation parameters ({}) ==",
         if runtime.is_some() { "PJRT artifacts" } else { "CPU fallback" }

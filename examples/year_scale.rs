@@ -10,16 +10,16 @@
 //!
 //! Run: `cargo run --release --example year_scale`
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use pipesim::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig};
 use pipesim::des::DAY;
 use pipesim::empirical::GroundTruth;
 use pipesim::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> pipesim::Result<()> {
     let db = GroundTruth::new(5).generate_weeks(8);
-    let runtime = Runtime::load_default().map(Rc::new);
+    let runtime = Runtime::load_default().map(Arc::new);
     println!(
         "sampler backend: {}",
         if runtime.is_some() { "pjrt (AOT artifacts)" } else { "cpu fallback" }

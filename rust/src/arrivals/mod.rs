@@ -22,12 +22,18 @@ const CLUSTER_FIT_CAP: usize = 2000;
 
 /// An arrival process: produces the next interarrival gap given the
 /// current simulation time.
+///
+/// The heavyweight members (168-cluster profile, recorded replay trace)
+/// sit behind `Arc`s, so cloning a model out of a shared `SimParams` is
+/// pointer-cheap and thread-safe — the parallel sweep engine hands one
+/// fitted model set to every worker. Mutable per-run state (the replay
+/// cursor) lives in the clone, never in the shared data.
 #[derive(Clone, Debug)]
 pub enum ArrivalModel {
     /// Single fitted distribution (paper: exp-Weibull).
     Random(Dist),
-    /// 168 per-hour-of-week fitted distributions.
-    Profile(ArrivalProfile),
+    /// 168 per-hour-of-week fitted distributions (shared, immutable).
+    Profile(std::sync::Arc<ArrivalProfile>),
     /// Fixed mean interarrival (exponential) — scalability experiments
     /// (Fig 13 uses a flat 44 s interarrival).
     Poisson { mean_interarrival: f64 },
@@ -37,25 +43,25 @@ pub enum ArrivalModel {
     Replay(ReplayTrace),
 }
 
-/// Recorded interarrival gaps with a replay cursor.
+/// Recorded interarrival gaps (shared) with a per-clone replay cursor.
 #[derive(Clone, Debug)]
 pub struct ReplayTrace {
-    pub gaps: std::rc::Rc<Vec<f64>>,
-    cursor: std::cell::Cell<usize>,
+    pub gaps: std::sync::Arc<Vec<f64>>,
+    cursor: usize,
 }
 
 impl ReplayTrace {
     pub fn new(gaps: Vec<f64>) -> Self {
         assert!(!gaps.is_empty(), "replay trace must be non-empty");
         ReplayTrace {
-            gaps: std::rc::Rc::new(gaps),
-            cursor: std::cell::Cell::new(0),
+            gaps: std::sync::Arc::new(gaps),
+            cursor: 0,
         }
     }
 
-    fn next(&self) -> f64 {
-        let i = self.cursor.get();
-        self.cursor.set((i + 1) % self.gaps.len());
+    fn next(&mut self) -> f64 {
+        let i = self.cursor;
+        self.cursor = (i + 1) % self.gaps.len();
         self.gaps[i]
     }
 }
@@ -63,7 +69,9 @@ impl ReplayTrace {
 impl ArrivalModel {
     /// Draw the next interarrival at simulated time `t`, scaled by
     /// `factor` (>1 = fewer arrivals, the paper's interarrival factor).
-    pub fn next_interarrival(&self, t: f64, factor: f64, rng: &mut Pcg64) -> f64 {
+    /// `&mut` because replay advances its cursor; the other modes only
+    /// consume RNG state.
+    pub fn next_interarrival(&mut self, t: f64, factor: f64, rng: &mut Pcg64) -> f64 {
         let gap = match self {
             ArrivalModel::Random(d) => d.sample(rng),
             ArrivalModel::Profile(p) => p.sample(t, rng),
@@ -104,7 +112,9 @@ impl ArrivalModel {
 
     /// Fit the realistic 168-cluster profile.
     pub fn fit_profile(db: &AnalyticsDb, rng: &mut Pcg64) -> Result<Self> {
-        Ok(ArrivalModel::Profile(ArrivalProfile::fit(db, rng)?))
+        Ok(ArrivalModel::Profile(std::sync::Arc::new(
+            ArrivalProfile::fit(db, rng)?,
+        )))
     }
 }
 
@@ -188,7 +198,7 @@ mod tests {
     #[test]
     fn random_model_fits_and_samples() {
         let db = db();
-        let m = ArrivalModel::fit_random(&db).unwrap();
+        let mut m = ArrivalModel::fit_random(&db).unwrap();
         let mut rng = Pcg64::new(1);
         let gaps: Vec<f64> = (0..20_000)
             .map(|_| m.next_interarrival(0.0, 1.0, &mut rng))
@@ -227,7 +237,7 @@ mod tests {
 
     #[test]
     fn interarrival_factor_scales() {
-        let m = ArrivalModel::Poisson {
+        let mut m = ArrivalModel::Poisson {
             mean_interarrival: 10.0,
         };
         let mut rng = Pcg64::new(4);
@@ -248,7 +258,7 @@ mod tests {
     #[test]
     fn replay_reproduces_trace_exactly() {
         let db = db();
-        let m = ArrivalModel::from_trace(&db).unwrap();
+        let mut m = ArrivalModel::from_trace(&db).unwrap();
         let mut rng = Pcg64::new(9);
         let want: Vec<f64> = db.interarrivals().into_iter().filter(|&g| g > 0.0).collect();
         for (i, &w) in want.iter().take(500).enumerate() {
@@ -260,7 +270,7 @@ mod tests {
     #[test]
     fn replay_cycles_when_exhausted() {
         let trace = ReplayTrace::new(vec![1.0, 2.0, 3.0]);
-        let m = ArrivalModel::Replay(trace);
+        let mut m = ArrivalModel::Replay(trace);
         let mut rng = Pcg64::new(10);
         let gaps: Vec<f64> = (0..7).map(|_| m.next_interarrival(0.0, 1.0, &mut rng)).collect();
         assert_eq!(gaps, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0, 1.0]);
@@ -268,7 +278,7 @@ mod tests {
 
     #[test]
     fn poisson_mean() {
-        let m = ArrivalModel::Poisson {
+        let mut m = ArrivalModel::Poisson {
             mean_interarrival: 44.0,
         };
         let mut rng = Pcg64::new(6);

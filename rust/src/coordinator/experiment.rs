@@ -8,7 +8,7 @@
 //! artifacts. The optional run-time view ages deployed models and feeds
 //! retraining pipelines back into the arrival stream (Fig 7).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::arrivals::ArrivalModel;
 use crate::des::{AcquireResult, Calendar, Resource, SimTime};
@@ -70,23 +70,28 @@ struct PipelineState {
 }
 
 /// An experiment: config + fitted parameters (+ optional PJRT runtime).
+///
+/// Parameters and runtime are `Arc`-shared: constructing an experiment
+/// from an existing `Arc<SimParams>` copies two pointers, so a parameter
+/// sweep can stamp out thousands of runs without re-cloning the fitted
+/// models (the former per-experiment clone storm).
 pub struct Experiment {
     cfg: ExperimentConfig,
-    params: SimParams,
-    runtime: Option<Rc<Runtime>>,
+    params: Arc<SimParams>,
+    runtime: Option<Arc<Runtime>>,
 }
 
 impl Experiment {
-    pub fn new(cfg: ExperimentConfig, params: SimParams) -> Self {
+    pub fn new(cfg: ExperimentConfig, params: impl Into<Arc<SimParams>>) -> Self {
         Experiment {
             cfg,
-            params,
+            params: params.into(),
             runtime: None,
         }
     }
 
     /// Use the AOT artifacts for all simulation-time sampling.
-    pub fn with_runtime(mut self, rt: Option<Rc<Runtime>>) -> Self {
+    pub fn with_runtime(mut self, rt: Option<Arc<Runtime>>) -> Self {
         self.runtime = rt;
         self
     }
@@ -94,10 +99,14 @@ impl Experiment {
     /// Run to completion; single-threaded, deterministic per seed.
     pub fn run(self) -> Result<ExperimentResult> {
         let started = std::time::Instant::now();
-        let cfg = self.cfg;
+        let Experiment {
+            cfg,
+            params,
+            runtime,
+        } = self;
         cfg.validate()?;
-        let params = self.params;
-        let backend = match &self.runtime {
+        let params: &SimParams = &params;
+        let backend = match &runtime {
             Some(rt) => Backend::Runtime(rt.clone()),
             None => Backend::Cpu,
         };
@@ -109,7 +118,8 @@ impl Experiment {
         let mut rng_noise = root.substream(4);
         let mut rng_drift = root.substream(5);
 
-        // --- samplers -------------------------------------------------
+        // --- samplers (all mixture handles are Arc clones — no deep
+        // copies of fitted parameters per experiment) ------------------
         let mut asset_synth = AssetSynthesizer::new(
             backend.clone(),
             params.asset_gmm.clone(),
@@ -117,13 +127,13 @@ impl Experiment {
             params.preproc_noise,
             &mut rng_asset,
         );
-        let mut pipe_synth = PipelineSynthesizer::new(cfg.synth.clone(), rng_pipe);
+        let mut pipe_synth = PipelineSynthesizer::new(cfg.synth, rng_pipe);
         let mut train_pools: Vec<SamplePool1> = Framework::ALL
             .iter()
             .map(|fw| {
                 SamplePool1::new(
                     backend.clone(),
-                    pad_gmm(params.train_gmm(*fw)),
+                    pad_gmm(params.train_gmm_shared(*fw)),
                     root.substream(0x100 + fw.index() as u64),
                 )
             })
@@ -133,7 +143,7 @@ impl Experiment {
             pad_gmm(&params.eval_log_gmm),
             root.substream(0x200),
         );
-        let arrival = match cfg.arrival {
+        let mut arrival = match cfg.arrival {
             ArrivalSpec::Random => params.arrival_random.clone(),
             ArrivalSpec::Profile => params.arrival_profile.clone(),
             ArrivalSpec::Replay => params.arrival_replay.clone(),
@@ -168,9 +178,12 @@ impl Experiment {
         let h_traffic_w = db.handle(SeriesKey::new(series::TRAFFIC).tag("dir", "write"));
         let h_model_perf = db.handle(SeriesKey::new(series::MODEL_PERF));
         let h_retrains = db.handle(SeriesKey::new(series::RETRAINS));
-        // task exec series per (task, framework)
-        let mut h_exec: std::collections::HashMap<(TaskType, Option<Framework>), SeriesHandle> =
-            std::collections::HashMap::new();
+        // task exec series per (task, framework): a flat array indexed by
+        // (task, framework+1) — the per-event path never hashes anything,
+        // and the tag strings intern into the store's symbol table once
+        const N_FW: usize = Framework::ALL.len() + 1; // +1 = untagged
+        let mut h_exec: [[Option<SeriesHandle>; N_FW]; TaskType::ALL.len()] =
+            [[None; N_FW]; TaskType::ALL.len()];
 
         // --- counters ---------------------------------------------------
         let mut arrived: u64 = 0;
@@ -367,14 +380,22 @@ impl Experiment {
                         cal.schedule(total, Event::TaskDone(g.token));
                     }
                     if cfg.record_traces {
-                        let h = *h_exec.entry((task, fw_tag)).or_insert_with(|| {
-                            let mut key =
-                                SeriesKey::new(series::TASK_EXEC).tag("task", task.name());
-                            if let Some(fw) = fw_tag {
-                                key = key.tag("framework", fw.name());
+                        let slot =
+                            &mut h_exec[task.index()][fw_tag.map_or(0, |f| f.index() + 1)];
+                        let h = match *slot {
+                            Some(h) => h,
+                            None => {
+                                // cold miss: ≤ 36 times per run
+                                let mut key =
+                                    SeriesKey::new(series::TASK_EXEC).tag("task", task.name());
+                                if let Some(fw) = fw_tag {
+                                    key = key.tag("framework", fw.name());
+                                }
+                                let h = db.handle(key);
+                                *slot = Some(h);
+                                h
                             }
-                            db.handle(key)
-                        });
+                        };
                         db.append(h, t, exec_dur);
                     }
 
@@ -584,8 +605,10 @@ impl Experiment {
 }
 
 /// Pad a fitted mixture to exactly K1 components (the AOT sampler's fixed
-/// shape); extra components get -inf-ish weight.
-fn pad_gmm(g: &Gmm1) -> Gmm1 {
+/// shape); extra components get -inf-ish weight. Mixtures that already
+/// have the right shape (the common case: every fit produces K1
+/// components) are shared, not copied.
+fn pad_gmm(g: &Arc<Gmm1>) -> Arc<Gmm1> {
     if g.k() == K1 {
         return g.clone();
     }
@@ -599,7 +622,7 @@ fn pad_gmm(g: &Gmm1) -> Gmm1 {
         out.mu[i] = g.mu[i];
         out.logsd[i] = g.logsd[i];
     }
-    out
+    Arc::new(out)
 }
 
 #[cfg(test)]

@@ -7,10 +7,12 @@ pub mod config;
 pub mod experiment;
 pub mod params;
 pub mod result;
+pub mod sweep;
 pub mod triggers;
 
 pub use config::{ArrivalSpec, ExperimentConfig, RuntimeViewConfig};
 pub use experiment::Experiment;
 pub use params::{fit_params, fit_params_with_report, FitReport, SimParams};
 pub use result::ExperimentResult;
+pub use sweep::{GroupStats, MetricStats, Sweep, SweepResult};
 pub use triggers::TriggerPolicy;

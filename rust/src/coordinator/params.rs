@@ -7,7 +7,7 @@
 //! a [`Runtime`] is supplied (the production path) and fall back to the
 //! identical pure-Rust EM otherwise.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::arrivals::ArrivalModel;
 use crate::empirical::AnalyticsDb;
@@ -52,14 +52,18 @@ impl Default for ModelLaws {
 }
 
 /// Everything the simulator samples from.
+///
+/// The fitted mixtures live behind `Arc`s: an `Experiment` (or a whole
+/// sweep's worth of them) borrows the shared fits instead of deep-copying
+/// kilobytes of mixture parameters per run.
 #[derive(Clone, Debug)]
 pub struct SimParams {
     /// 50-component full-covariance mixture over ln(rows, cols, bytes).
-    pub asset_gmm: Gmm3,
+    pub asset_gmm: Arc<Gmm3>,
     /// Per-framework K1-component mixtures over ln(train seconds).
-    pub train_log_gmm: Vec<Gmm1>,
+    pub train_log_gmm: Vec<Arc<Gmm1>>,
     /// Mixture over ln(evaluate seconds).
-    pub eval_log_gmm: Gmm1,
+    pub eval_log_gmm: Arc<Gmm1>,
     /// Preprocess duration curve f(x) = a·bˣ + c over x = ln(rows·cols).
     pub preproc_curve: ExpCurve,
     /// Additive log-normal noise around the curve.
@@ -103,20 +107,25 @@ impl SimParams {
     pub fn train_gmm(&self, fw: Framework) -> &Gmm1 {
         &self.train_log_gmm[fw.index()]
     }
+
+    /// Shared handle to a framework's train mixture (clone-free pools).
+    pub fn train_gmm_shared(&self, fw: Framework) -> &Arc<Gmm1> {
+        &self.train_log_gmm[fw.index()]
+    }
 }
 
 /// Fit all simulation parameters from the analytics database.
 ///
 /// `runtime`: pass the loaded PJRT runtime to fit through the AOT EM
 /// artifacts; `None` uses the pure-Rust EM baseline.
-pub fn fit_params(db: &AnalyticsDb, runtime: Option<Rc<Runtime>>) -> Result<SimParams> {
+pub fn fit_params(db: &AnalyticsDb, runtime: Option<Arc<Runtime>>) -> Result<SimParams> {
     fit_params_with_report(db, runtime).map(|(p, _)| p)
 }
 
 /// Like [`fit_params`] but also returns fit diagnostics.
 pub fn fit_params_with_report(
     db: &AnalyticsDb,
-    runtime: Option<Rc<Runtime>>,
+    runtime: Option<Arc<Runtime>>,
 ) -> Result<(SimParams, FitReport)> {
     let started = std::time::Instant::now();
     let mut rng = Pcg64::new(0x5EED_F177);
@@ -159,7 +168,7 @@ pub fn fit_params_with_report(
             .collect();
         report.train_rows.push((fw.to_string(), durs.len()));
         let g = fit_log_mixture(&durs, &runtime, &mut rng)?;
-        train_log_gmm.push(g);
+        train_log_gmm.push(Arc::new(g));
     }
 
     // --- evaluation durations (section V-A2c) ------------------------
@@ -203,9 +212,9 @@ pub fn fit_params_with_report(
     report.wall_secs = started.elapsed().as_secs_f64();
     Ok((
         SimParams {
-            asset_gmm,
+            asset_gmm: Arc::new(asset_gmm),
             train_log_gmm,
-            eval_log_gmm,
+            eval_log_gmm: Arc::new(eval_log_gmm),
             preproc_curve,
             preproc_noise,
             arrival_random,
@@ -220,7 +229,7 @@ pub fn fit_params_with_report(
 
 fn fit_log_mixture(
     logs: &[f64],
-    runtime: &Option<Rc<Runtime>>,
+    runtime: &Option<Arc<Runtime>>,
     rng: &mut Pcg64,
 ) -> Result<Gmm1> {
     if logs.len() < K1 {
@@ -282,7 +291,7 @@ mod tests {
     #[test]
     fn fit_interarrival_mean_close_to_db() {
         let db = GroundTruth::new(5).generate_weeks(4);
-        let p = fit_params(&db, None).unwrap();
+        let mut p = fit_params(&db, None).unwrap();
         let want = crate::stats::mean(&db.interarrivals());
         assert!((p.mean_interarrival - want).abs() / want < 1e-9);
         // sampled interarrivals from the random model within 25%

@@ -79,6 +79,54 @@ impl ExperimentResult {
         self.wall_secs * 1e6 / self.arrived as f64
     }
 
+    /// Canonical digest of every *deterministic* outcome of the run —
+    /// floats rendered as exact IEEE-754 bit patterns, wall-clock and RSS
+    /// excluded. Two runs of the same (config, seed) must produce
+    /// byte-identical digests regardless of thread count, machine, or
+    /// load; the sweep engine and the determinism property tests compare
+    /// these strings directly.
+    pub fn digest(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::with_capacity(256);
+        let _ = write!(
+            s,
+            "name={};seed={};horizon={:016x};arrived={};completed={};tasks={};gates={};\
+             retrains={};deployed={};events={}",
+            self.name,
+            self.seed,
+            self.horizon.to_bits(),
+            self.arrived,
+            self.completed,
+            self.tasks_executed,
+            self.gate_failures,
+            self.retrains_triggered,
+            self.models_deployed,
+            self.events_processed,
+        );
+        for (tag, v) in [
+            ("ut", self.util_training),
+            ("uc", self.util_compute),
+            ("wt_sum", self.wait_training.sum),
+            ("wt_max", if self.wait_training.count > 0 { self.wait_training.max } else { 0.0 }),
+            ("wc_sum", self.wait_compute.sum),
+            ("wc_max", if self.wait_compute.count > 0 { self.wait_compute.max } else { 0.0 }),
+            ("qt", self.avg_queue_training),
+            ("qc", self.avg_queue_compute),
+            ("perf", self.final_mean_performance),
+            ("rd", self.wire_read_bytes),
+            ("wr", self.wire_write_bytes),
+        ] {
+            let _ = write!(s, ";{tag}={:016x}", v.to_bits());
+        }
+        let _ = write!(
+            s,
+            ";tsdb={}x{}",
+            self.tsdb.num_series(),
+            self.tsdb.num_points()
+        );
+        s
+    }
+
     /// Human-readable run summary (the dashboard's stat panel, Fig 11).
     pub fn summary(&self) -> String {
         let mut s = String::new();
@@ -210,6 +258,21 @@ mod tests {
         assert!(s.contains("arrived 100"));
         assert!(s.contains("training 50.0%"));
         assert!(s.contains("µs/pipeline"));
+    }
+
+    #[test]
+    fn digest_ignores_wall_clock_but_sees_outcomes() {
+        let a = empty_result();
+        let mut b = empty_result();
+        b.wall_secs = 99.0;
+        b.peak_rss_mb = 7.0;
+        assert_eq!(a.digest(), b.digest());
+        let mut c = empty_result();
+        c.completed += 1;
+        assert_ne!(a.digest(), c.digest());
+        let mut d = empty_result();
+        d.util_training += 1e-15;
+        assert_ne!(a.digest(), d.digest(), "digest must be bit-exact");
     }
 
     #[test]

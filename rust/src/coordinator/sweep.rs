@@ -1,0 +1,473 @@
+//! Parallel experiment sweep / replication engine.
+//!
+//! PipeSim's value is running *many* stochastic experiment variants
+//! (scheduling disciplines, arrival intensities, cluster allocations,
+//! replication seeds) against one fitted model set. Each cell of a sweep
+//! is an independent, deterministically seeded `Experiment`, which makes
+//! the workload embarrassingly parallel: this engine fans the cells over
+//! a `std::thread::scope` worker pool and collects results in the exact
+//! order the cells were added — the output is byte-identical no matter
+//! how many workers ran it (see `ExperimentResult::digest`).
+//!
+//! Shared inputs (`SimParams`, the optional PJRT `Runtime`) cross thread
+//! boundaries behind `Arc`s; per-run mutable state (RNG streams, replay
+//! cursors, the trace store) lives inside each worker's experiment.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::runtime::Runtime;
+use crate::stats::Summary;
+
+use super::config::ExperimentConfig;
+use super::experiment::Experiment;
+use super::params::SimParams;
+use super::result::ExperimentResult;
+
+/// A sweep under construction: shared inputs + the cell grid.
+pub struct Sweep {
+    params: Arc<SimParams>,
+    runtime: Option<Arc<Runtime>>,
+    cells: Vec<ExperimentConfig>,
+    jobs: usize,
+}
+
+impl Sweep {
+    pub fn new(params: impl Into<Arc<SimParams>>) -> Self {
+        Sweep {
+            params: params.into(),
+            runtime: None,
+            cells: Vec::new(),
+            jobs: 0,
+        }
+    }
+
+    /// Use the AOT artifacts for all cells' simulation-time sampling.
+    pub fn with_runtime(mut self, rt: Option<Arc<Runtime>>) -> Self {
+        self.runtime = rt;
+        self
+    }
+
+    /// Worker count. `0` (the default) means one per available core.
+    pub fn jobs(mut self, jobs: usize) -> Self {
+        self.jobs = jobs;
+        self
+    }
+
+    /// Append one cell. Cells sharing a config `name` are treated as
+    /// replications of each other when aggregating statistics.
+    pub fn add(&mut self, cfg: ExperimentConfig) -> &mut Self {
+        self.cells.push(cfg);
+        self
+    }
+
+    /// Append `n` replications of `base` with seeds `seed0..seed0+n`.
+    pub fn add_replications(&mut self, base: &ExperimentConfig, seed0: u64, n: usize) -> &mut Self {
+        for i in 0..n as u64 {
+            let mut cfg = base.clone();
+            cfg.seed = seed0 + i;
+            self.cells.push(cfg);
+        }
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Run every cell to completion and aggregate. The i-th entry of
+    /// `SweepResult::results` is always the i-th added cell, and each
+    /// cell's outcome is bit-identical across any `jobs` value.
+    pub fn run(self) -> Result<SweepResult> {
+        let started = std::time::Instant::now();
+        let Sweep {
+            params,
+            runtime,
+            cells,
+            jobs,
+        } = self;
+        if cells.is_empty() {
+            return Err(Error::Config("sweep: no cells to run".into()));
+        }
+        for cfg in &cells {
+            cfg.validate()?;
+        }
+        let jobs = effective_jobs(jobs, cells.len());
+
+        // Work-stealing by atomic cursor: workers claim the next cell
+        // index and tag results with it, so completion order (which IS
+        // scheduling-dependent) never leaks into the output order.
+        let next = AtomicUsize::new(0);
+        let per_worker: Vec<Vec<(usize, Result<ExperimentResult>)>> =
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(jobs);
+                for _ in 0..jobs {
+                    let params = &params;
+                    let runtime = &runtime;
+                    let cells = &cells;
+                    let next = &next;
+                    handles.push(scope.spawn(move || {
+                        let mut out = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= cells.len() {
+                                break;
+                            }
+                            let r = Experiment::new(cells[i].clone(), params.clone())
+                                .with_runtime(runtime.clone())
+                                .run();
+                            out.push((i, r));
+                        }
+                        out
+                    }));
+                }
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("sweep worker panicked"))
+                    .collect()
+            });
+
+        let mut slots: Vec<Option<ExperimentResult>> = (0..cells.len()).map(|_| None).collect();
+        for (i, r) in per_worker.into_iter().flatten() {
+            slots[i] = Some(r?);
+        }
+        let results: Vec<ExperimentResult> = slots
+            .into_iter()
+            .map(|s| s.expect("sweep: unclaimed cell"))
+            .collect();
+
+        let groups = aggregate_groups(&results);
+        Ok(SweepResult {
+            results,
+            groups,
+            jobs,
+            wall_secs: started.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// Resolve the worker count: explicit `jobs`, else one per core, never
+/// more than there are cells.
+pub fn effective_jobs(jobs: usize, cells: usize) -> usize {
+    let auto = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let j = if jobs == 0 { auto } else { jobs };
+    j.clamp(1, cells.max(1))
+}
+
+/// Cross-replication statistics for one metric of one group.
+#[derive(Clone, Debug)]
+pub struct MetricStats {
+    pub name: &'static str,
+    pub n: usize,
+    pub mean: f64,
+    pub std_dev: f64,
+    /// Half-width of the 95% confidence interval of the mean
+    /// (Student-t for small n, normal beyond).
+    pub ci95: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// All replications sharing one config name.
+#[derive(Clone, Debug)]
+pub struct GroupStats {
+    pub name: String,
+    /// Indices into `SweepResult::results`, input order.
+    pub cells: Vec<usize>,
+    pub metrics: Vec<MetricStats>,
+}
+
+/// Outcome of a sweep: per-cell results in input order + aggregates.
+pub struct SweepResult {
+    pub results: Vec<ExperimentResult>,
+    /// Groups in order of first appearance.
+    pub groups: Vec<GroupStats>,
+    pub jobs: usize,
+    pub wall_secs: f64,
+}
+
+impl SweepResult {
+    /// Deterministic per-cell digests, input order — the parallelism
+    /// invariant: identical across any `jobs` value.
+    pub fn digests(&self) -> Vec<String> {
+        self.results.iter().map(|r| r.digest()).collect()
+    }
+
+    /// Total simulated events across all cells.
+    pub fn events_total(&self) -> u64 {
+        self.results.iter().map(|r| r.events_processed).sum()
+    }
+
+    /// Aggregate events/sec over the sweep's wall-clock.
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.events_total() as f64 / self.wall_secs
+    }
+
+    /// Human-readable aggregate table (mean ± 95% CI per group).
+    pub fn table(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "sweep: {} cells, {} groups, {} jobs, {:.2}s wall, {:.0} events/s aggregate",
+            self.results.len(),
+            self.groups.len(),
+            self.jobs,
+            self.wall_secs,
+            self.events_per_sec()
+        );
+        for g in &self.groups {
+            let _ = writeln!(s, "group '{}' (n={})", g.name, g.cells.len());
+            for m in &g.metrics {
+                let _ = writeln!(
+                    s,
+                    "  {:<24} {:>14.4} ± {:<10.4} [{:.4}, {:.4}]",
+                    m.name, m.mean, m.ci95, m.min, m.max
+                );
+            }
+        }
+        s
+    }
+
+    /// Per-cell CSV: one row per cell, input order.
+    pub fn to_csv(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::from(
+            "cell,name,seed,arrived,completed,tasks_executed,events_processed,\
+             util_training,util_compute,mean_wait_training_s,avg_queue_training,\
+             final_mean_performance,wall_secs\n",
+        );
+        for (i, r) in self.results.iter().enumerate() {
+            let _ = writeln!(
+                s,
+                "{i},{},{},{},{},{},{},{:.6},{:.6},{:.3},{:.3},{:.4},{:.4}",
+                r.name,
+                r.seed,
+                r.arrived,
+                r.completed,
+                r.tasks_executed,
+                r.events_processed,
+                r.util_training,
+                r.util_compute,
+                r.wait_training.mean(),
+                r.avg_queue_training,
+                r.final_mean_performance,
+                r.wall_secs
+            );
+        }
+        s
+    }
+}
+
+/// The metrics aggregated across replications.
+fn metric_values(r: &ExperimentResult) -> [(&'static str, f64); 11] {
+    [
+        ("arrived", r.arrived as f64),
+        ("completed", r.completed as f64),
+        ("tasks_executed", r.tasks_executed as f64),
+        ("events_processed", r.events_processed as f64),
+        ("gate_failures", r.gate_failures as f64),
+        ("retrains_triggered", r.retrains_triggered as f64),
+        ("util_training", r.util_training),
+        ("util_compute", r.util_compute),
+        ("mean_wait_training_s", r.wait_training.mean()),
+        ("avg_queue_training", r.avg_queue_training),
+        ("final_mean_performance", r.final_mean_performance),
+    ]
+}
+
+fn aggregate_groups(results: &[ExperimentResult]) -> Vec<GroupStats> {
+    let mut order: Vec<String> = Vec::new();
+    let mut cells_by_name: std::collections::HashMap<&str, Vec<usize>> =
+        std::collections::HashMap::new();
+    for (i, r) in results.iter().enumerate() {
+        let slot = cells_by_name.entry(r.name.as_str()).or_default();
+        if slot.is_empty() {
+            order.push(r.name.clone());
+        }
+        slot.push(i);
+    }
+    order
+        .into_iter()
+        .map(|name| {
+            let cells = cells_by_name[name.as_str()].clone();
+            let n_metrics = metric_values(&results[cells[0]]).len();
+            let mut summaries = vec![Summary::new(); n_metrics];
+            let mut names = [""; 11];
+            for &i in &cells {
+                for (m, (mname, v)) in metric_values(&results[i]).into_iter().enumerate() {
+                    names[m] = mname;
+                    summaries[m].add(v);
+                }
+            }
+            let metrics = summaries
+                .into_iter()
+                .enumerate()
+                .map(|(m, s)| {
+                    let n = s.count as usize;
+                    let sd = s.std_dev();
+                    MetricStats {
+                        name: names[m],
+                        n,
+                        mean: s.mean(),
+                        std_dev: sd,
+                        ci95: if n > 1 {
+                            t_critical_95(n - 1) * sd / (n as f64).sqrt()
+                        } else {
+                            0.0
+                        },
+                        min: s.min,
+                        max: s.max,
+                    }
+                })
+                .collect();
+            GroupStats {
+                name,
+                cells,
+                metrics,
+            }
+        })
+        .collect()
+}
+
+/// Two-sided 95% Student-t critical value for `df` degrees of freedom
+/// (exact table through 30, normal approximation beyond).
+fn t_critical_95(df: usize) -> f64 {
+    const TABLE: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201, 2.179,
+        2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064,
+        2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    if df == 0 {
+        return f64::INFINITY;
+    }
+    if df <= TABLE.len() {
+        TABLE[df - 1]
+    } else {
+        1.96
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{fit_params, ArrivalSpec};
+    use crate::empirical::GroundTruth;
+
+    fn quick_params() -> SimParams {
+        let db = GroundTruth::new(31).generate_weeks(2);
+        fit_params(&db, None).unwrap()
+    }
+
+    fn small_cfg(name: &str, seed: u64) -> ExperimentConfig {
+        ExperimentConfig {
+            name: name.into(),
+            seed,
+            horizon: 6.0 * 3600.0,
+            arrival: ArrivalSpec::Poisson {
+                mean_interarrival: 90.0,
+            },
+            record_traces: false,
+            sample_interval: 600.0,
+            ..Default::default()
+        }
+    }
+
+    /// Shared inputs must be shareable across worker threads.
+    #[test]
+    fn shared_inputs_are_send_sync() {
+        fn check<T: Send + Sync>() {}
+        check::<SimParams>();
+        check::<ExperimentConfig>();
+        check::<Runtime>();
+        check::<crate::runtime::pool::Backend>();
+        fn check_send<T: Send>() {}
+        check_send::<ExperimentResult>();
+        check_send::<crate::error::Error>();
+    }
+
+    #[test]
+    fn results_come_back_in_input_order() {
+        let params = Arc::new(quick_params());
+        let mut sweep = Sweep::new(params).jobs(3);
+        for seed in [9u64, 1, 7, 3, 5] {
+            sweep.add(small_cfg(&format!("cell-{seed}"), seed));
+        }
+        let out = sweep.run().unwrap();
+        let seeds: Vec<u64> = out.results.iter().map(|r| r.seed).collect();
+        assert_eq!(seeds, vec![9, 1, 7, 3, 5]);
+        assert_eq!(out.results[2].name, "cell-7");
+    }
+
+    #[test]
+    fn parallel_and_serial_runs_are_byte_identical() {
+        let params = Arc::new(quick_params());
+        let build = |jobs| {
+            let mut sweep = Sweep::new(params.clone()).jobs(jobs);
+            sweep.add_replications(&small_cfg("rep", 0), 100, 6);
+            sweep.add(small_cfg("solo", 42));
+            sweep.run().unwrap()
+        };
+        let serial = build(1);
+        let parallel = build(4);
+        assert_eq!(serial.digests(), parallel.digests());
+        assert_eq!(serial.jobs, 1);
+        assert!(parallel.jobs >= 1);
+    }
+
+    #[test]
+    fn groups_aggregate_replications() {
+        let params = Arc::new(quick_params());
+        let mut sweep = Sweep::new(params).jobs(2);
+        sweep.add_replications(&small_cfg("a", 0), 1, 4);
+        sweep.add_replications(&small_cfg("b", 0), 50, 2);
+        let out = sweep.run().unwrap();
+        assert_eq!(out.groups.len(), 2);
+        assert_eq!(out.groups[0].name, "a");
+        assert_eq!(out.groups[0].cells, vec![0, 1, 2, 3]);
+        assert_eq!(out.groups[1].cells, vec![4, 5]);
+        let arrived = out.groups[0]
+            .metrics
+            .iter()
+            .find(|m| m.name == "arrived")
+            .unwrap();
+        assert_eq!(arrived.n, 4);
+        assert!(arrived.min <= arrived.mean && arrived.mean <= arrived.max);
+        assert!(arrived.ci95 >= 0.0);
+        assert!(arrived.mean > 50.0, "6h at 90s gaps: {}", arrived.mean);
+        // table + csv render without panicking and carry the group names
+        assert!(out.table().contains("group 'a'"));
+        assert!(out.to_csv().lines().count() == 7);
+    }
+
+    #[test]
+    fn empty_sweep_is_an_error() {
+        let params = Arc::new(quick_params());
+        assert!(Sweep::new(params).run().is_err());
+    }
+
+    #[test]
+    fn effective_jobs_clamps() {
+        assert_eq!(effective_jobs(8, 3), 3);
+        assert_eq!(effective_jobs(2, 100), 2);
+        assert!(effective_jobs(0, 100) >= 1);
+        assert_eq!(effective_jobs(1, 0), 1);
+    }
+
+    #[test]
+    fn t_table_sane() {
+        assert!(t_critical_95(1) > 12.0);
+        assert!((t_critical_95(29) - 2.045).abs() < 1e-9);
+        assert_eq!(t_critical_95(1000), 1.96);
+    }
+}

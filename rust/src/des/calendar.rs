@@ -1,13 +1,19 @@
-//! Calendar event queue: a binary heap keyed by (time, sequence).
+//! Calendar event queue: a 4-ary min-heap keyed by (time, sequence).
 //!
 //! The sequence number makes event ordering fully deterministic: two
 //! events scheduled for the same instant fire in scheduling order, which
 //! is what makes simulations reproducible bit-for-bit across runs.
-
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+//!
+//! A 4-ary heap beats the std binary heap on this workload: the tree is
+//! half as deep, so a pop touches ~log4(n) cache lines instead of
+//! log2(n), and the four children of a node sit in adjacent memory. Time
+//! comparisons use `f64::total_cmp` — a branch-free total order, no NaN
+//! panic path in the per-event comparator (NaN times are rejected once,
+//! at `schedule_at`).
 
 use super::SimTime;
+
+const ARITY: usize = 4;
 
 struct Entry<E> {
     time: SimTime,
@@ -15,33 +21,21 @@ struct Entry<E> {
     event: E,
 }
 
-impl<E> PartialEq for Entry<E> {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
-    }
-}
-impl<E> Eq for Entry<E> {}
-
-impl<E> PartialOrd for Entry<E> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl<E> Ord for Entry<E> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
-        other
-            .time
-            .partial_cmp(&self.time)
-            .expect("NaN sim time")
-            .then_with(|| other.seq.cmp(&self.seq))
+impl<E> Entry<E> {
+    /// Strict (time, seq) ordering; `seq` is unique so this is total.
+    #[inline]
+    fn earlier_than(&self, other: &Self) -> bool {
+        match self.time.total_cmp(&other.time) {
+            std::cmp::Ordering::Less => true,
+            std::cmp::Ordering::Greater => false,
+            std::cmp::Ordering::Equal => self.seq < other.seq,
+        }
     }
 }
 
 /// Priority queue of future events of type `E`.
 pub struct Calendar<E> {
-    heap: BinaryHeap<Entry<E>>,
+    heap: Vec<Entry<E>>,
     seq: u64,
     now: SimTime,
 }
@@ -55,7 +49,7 @@ impl<E> Default for Calendar<E> {
 impl<E> Calendar<E> {
     pub fn new() -> Self {
         Calendar {
-            heap: BinaryHeap::new(),
+            heap: Vec::new(),
             seq: 0,
             now: 0.0,
         }
@@ -70,13 +64,14 @@ impl<E> Calendar<E> {
     /// Schedule `event` at absolute time `t`. `t` must not be in the past.
     pub fn schedule_at(&mut self, t: SimTime, event: E) {
         debug_assert!(t >= self.now, "scheduling into the past: {t} < {}", self.now);
-        debug_assert!(!t.is_nan());
+        debug_assert!(!t.is_nan(), "NaN sim time");
         self.heap.push(Entry {
             time: t,
             seq: self.seq,
             event,
         });
         self.seq += 1;
+        self.sift_up(self.heap.len() - 1);
     }
 
     /// Schedule `event` after a non-negative `delay` from now.
@@ -88,16 +83,23 @@ impl<E> Calendar<E> {
 
     /// Pop the next event, advancing the clock to its time.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
-        self.heap.pop().map(|e| {
-            debug_assert!(e.time >= self.now);
-            self.now = e.time;
-            (e.time, e.event)
-        })
+        if self.heap.is_empty() {
+            return None;
+        }
+        let last = self.heap.len() - 1;
+        self.heap.swap(0, last);
+        let e = self.heap.pop().expect("non-empty");
+        if !self.heap.is_empty() {
+            self.sift_down(0);
+        }
+        debug_assert!(e.time >= self.now);
+        self.now = e.time;
+        Some((e.time, e.event))
     }
 
     /// Time of the next event without popping it.
     pub fn peek_time(&self) -> Option<SimTime> {
-        self.heap.peek().map(|e| e.time)
+        self.heap.first().map(|e| e.time)
     }
 
     pub fn len(&self) -> usize {
@@ -111,6 +113,44 @@ impl<E> Calendar<E> {
     /// Total events ever scheduled (the sequence counter).
     pub fn scheduled_total(&self) -> u64 {
         self.seq
+    }
+
+    #[inline]
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / ARITY;
+            if self.heap[i].earlier_than(&self.heap[parent]) {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    #[inline]
+    fn sift_down(&mut self, mut i: usize) {
+        let len = self.heap.len();
+        loop {
+            let first = ARITY * i + 1;
+            if first >= len {
+                break;
+            }
+            // earliest of up to four children
+            let mut best = first;
+            let end = (first + ARITY).min(len);
+            for c in (first + 1)..end {
+                if self.heap[c].earlier_than(&self.heap[best]) {
+                    best = c;
+                }
+            }
+            if self.heap[best].earlier_than(&self.heap[i]) {
+                self.heap.swap(i, best);
+                i = best;
+            } else {
+                break;
+            }
+        }
     }
 }
 
@@ -168,11 +208,43 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "NaN sim time")]
+    #[cfg(debug_assertions)]
+    fn rejects_nan_time() {
+        let mut c = Calendar::new();
+        c.schedule_at(f64::NAN, ());
+    }
+
+    #[test]
     fn peek_does_not_advance() {
         let mut c = Calendar::new();
         c.schedule_at(7.0, ());
         assert_eq!(c.peek_time(), Some(7.0));
         assert_eq!(c.now(), 0.0);
         assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn quaternary_heap_orders_large_random_schedules() {
+        // exercise deep sift paths: many entries with duplicate times
+        let mut c = Calendar::new();
+        let mut x = 0x2545_f491_4f6c_dd1du64;
+        let mut times = Vec::new();
+        for i in 0..10_000u64 {
+            // xorshift: deterministic pseudo-random times with collisions
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let t = (x % 997) as f64;
+            times.push((t, i));
+            c.schedule_at(t, i);
+        }
+        times.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        for (want_t, want_id) in times {
+            let (t, id) = c.pop().unwrap();
+            assert_eq!((t, id), (want_t, want_id));
+        }
+        assert!(c.is_empty());
+        assert_eq!(c.scheduled_total(), 10_000);
     }
 }

@@ -47,11 +47,11 @@ impl<T> PartialOrd for Waiter<T> {
 }
 impl<T> Ord for Waiter<T> {
     fn cmp(&self, other: &Self) -> Ordering {
-        // min-heap on (key, seq) via reversal
+        // min-heap on (key, seq) via reversal; total_cmp keeps the hot
+        // comparator branch-free (NaN keys are rejected at `request`)
         other
             .key
-            .partial_cmp(&self.key)
-            .expect("NaN waiter key")
+            .total_cmp(&self.key)
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
@@ -131,6 +131,7 @@ impl<T> Resource<T> {
     /// Request one slot at time `t`. `key` orders the waiter under
     /// Priority/SJF disciplines (ignored under FIFO).
     pub fn request(&mut self, t: SimTime, token: T, key: f64) -> AcquireResult {
+        debug_assert!(!key.is_nan(), "NaN waiter key");
         self.total_requests += 1;
         if self.in_use < self.capacity {
             self.in_use += 1;

@@ -8,34 +8,42 @@
 //!   simulate       --params PARAMS.json [--config CFG.json] [--days D]
 //!                  [--arrival random|profile|poisson:SECS] [--seed S]
 //!                  [--cpu] [--export CSV]
+//!   sweep          --params PARAMS.json [--config CFG.json] [--days D]
+//!                  [--arrival MODE] [--seeds N] [--seed0 S] [--jobs N]
+//!                  [--capacities 2,4,8] [--factors 0.5,1,2] [--traces]
+//!                  [--cpu] [--export CSV] — parallel replication/grid
+//!                  engine (per-cell trace recording off unless --traces)
 //!   figures        --fig 8|9a|9b|10|11|12|table1|all [--out-dir DIR]
 //!   table1
 //!   qq             --db DB.json --params PARAMS.json [--days D] [--cpu]
 //!   scale          --params PARAMS.json --counts 1000,10000 [--cpu]
 
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use pipesim::analytics::{figures, render_dashboard};
 use pipesim::coordinator::{
-    fit_params_with_report, ArrivalSpec, Experiment, ExperimentConfig, SimParams,
+    fit_params_with_report, ArrivalSpec, Experiment, ExperimentConfig, SimParams, Sweep,
 };
 use pipesim::des::DAY;
 use pipesim::empirical::{AnalyticsDb, GroundTruth};
+use pipesim::error::Error;
 use pipesim::runtime::Runtime;
 use pipesim::util::Args;
+use pipesim::Result;
 
-const USAGE: &str = "usage: pipesim <gen-empirical|fit|simulate|figures|table1|qq|scale> [--options]
+const USAGE: &str =
+    "usage: pipesim <gen-empirical|fit|simulate|sweep|figures|table1|qq|scale> [--options]
 run `pipesim <subcommand> --help` semantics: see README.md";
 
-fn load_runtime(cpu: bool) -> Option<Rc<Runtime>> {
+fn load_runtime(cpu: bool) -> Option<Arc<Runtime>> {
     if cpu {
         return None;
     }
     match Runtime::load_default() {
         Some(rt) => {
             eprintln!("runtime: PJRT artifacts loaded");
-            Some(Rc::new(rt))
+            Some(Arc::new(rt))
         }
         None => {
             eprintln!("runtime: artifacts not found, using CPU sampler fallback");
@@ -44,7 +52,7 @@ fn load_runtime(cpu: bool) -> Option<Rc<Runtime>> {
     }
 }
 
-fn parse_arrival(s: &str) -> anyhow::Result<ArrivalSpec> {
+fn parse_arrival(s: &str) -> Result<ArrivalSpec> {
     match s {
         "random" => Ok(ArrivalSpec::Random),
         "profile" => Ok(ArrivalSpec::Profile),
@@ -55,13 +63,13 @@ fn parse_arrival(s: &str) -> anyhow::Result<ArrivalSpec> {
                     mean_interarrival: rest.parse()?,
                 })
             } else {
-                anyhow::bail!("unknown arrival mode {other}")
+                Err(Error::Config(format!("unknown arrival mode {other}")))
             }
         }
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args = Args::from_env()?;
     let sub = args.subcommand.clone().unwrap_or_default();
     match sub.as_str() {
@@ -131,6 +139,86 @@ fn main() -> anyhow::Result<()> {
             }
         }
 
+        "sweep" => {
+            let params = SimParams::load(&PathBuf::from(args.get("params", "sim_params.json")))?;
+            let mut base = match args.get_opt("config") {
+                Some(p) => ExperimentConfig::load(&PathBuf::from(p))?,
+                None => ExperimentConfig::default(),
+            };
+            if let Some(d) = args.get_parse_opt::<f64>("days")? {
+                base.horizon = d * DAY;
+            }
+            if let Some(a) = args.get_opt("arrival") {
+                base.arrival = parse_arrival(&a)?;
+            }
+            let seeds: usize = args.get_parse("seeds", 8)?;
+            let seed0: u64 = args.get_parse("seed0", 1)?;
+            let jobs: usize = args.get_parse("jobs", 0)?;
+            let capacities = args.get_opt("capacities");
+            let factors = args.get_opt("factors");
+            let cpu = args.flag("cpu");
+            // traces off by default: a sweep keeps every cell's result in
+            // memory until aggregation, and nothing downstream reads the
+            // per-cell trace stores unless the user asks for them
+            base.record_traces = args.flag("traces");
+            let export = args.get_opt("export");
+            args.reject_unknown()?;
+
+            // the grid: base × training capacities × interarrival factors,
+            // each cell replicated `seeds` times
+            let caps: Vec<Option<usize>> = match &capacities {
+                Some(list) => list
+                    .split(',')
+                    .map(|v| {
+                        let c: usize = v.trim().parse()?;
+                        if c == 0 {
+                            return Err(Error::Config(
+                                "--capacities: capacity must be >= 1".into(),
+                            ));
+                        }
+                        Ok(Some(c))
+                    })
+                    .collect::<Result<_>>()?,
+                None => vec![None],
+            };
+            let facs: Vec<Option<f64>> = match &factors {
+                Some(list) => list
+                    .split(',')
+                    .map(|v| v.trim().parse::<f64>().map(Some).map_err(Error::from))
+                    .collect::<Result<_>>()?,
+                None => vec![None],
+            };
+            let rt = load_runtime(cpu);
+            let mut sweep = Sweep::new(params).with_runtime(rt).jobs(jobs);
+            for cap in &caps {
+                for fac in &facs {
+                    let mut cfg = base.clone();
+                    let mut name = base.name.clone();
+                    if let Some(c) = cap {
+                        cfg.infra.training_capacity = *c;
+                        name.push_str(&format!("-cap{c}"));
+                    }
+                    if let Some(f) = fac {
+                        cfg.interarrival_factor = *f;
+                        name.push_str(&format!("-x{f}"));
+                    }
+                    cfg.name = name;
+                    sweep.add_replications(&cfg, seed0, seeds);
+                }
+            }
+            eprintln!(
+                "sweep: {} cells ({} groups x {seeds} seeds)",
+                sweep.len(),
+                caps.len() * facs.len()
+            );
+            let out = sweep.run()?;
+            print!("{}", out.table());
+            if let Some(path) = export {
+                std::fs::write(&path, out.to_csv())?;
+                println!("cells -> {path}");
+            }
+        }
+
         "figures" => {
             let fig = args.get("fig", "all");
             let db = AnalyticsDb::load(&PathBuf::from(args.get("db", "empirical_db.json")))?;
@@ -140,7 +228,7 @@ fn main() -> anyhow::Result<()> {
             args.reject_unknown()?;
             std::fs::create_dir_all(&out_dir)?;
             let rt = load_runtime(cpu);
-            let write = |name: &str, data: String| -> anyhow::Result<()> {
+            let write = |name: &str, data: String| -> Result<()> {
                 let path = out_dir.join(name);
                 std::fs::write(&path, data)?;
                 println!("wrote {}", path.display());

@@ -52,6 +52,12 @@ impl TaskType {
             TaskType::Deploy => "deploy",
         }
     }
+
+    /// Position in [`TaskType::ALL`] (constant-time).
+    #[inline]
+    pub fn index(&self) -> usize {
+        *self as usize
+    }
 }
 
 impl fmt::Display for TaskType {
@@ -102,8 +108,11 @@ impl Framework {
         }
     }
 
+    /// Position in [`Framework::ALL`] (constant-time — this sits on the
+    /// per-sample hot path of the train-duration pools).
+    #[inline]
     pub fn index(&self) -> usize {
-        Self::ALL.iter().position(|f| f == self).unwrap()
+        *self as usize
     }
 }
 

@@ -31,8 +31,9 @@ pub struct Runtime {
     sample3: xla::PjRtLoadedExecutable,
     sample1: xla::PjRtLoadedExecutable,
     preproc: xla::PjRtLoadedExecutable,
-    /// Executions performed, per module (perf accounting).
-    pub exec_count: std::cell::Cell<u64>,
+    /// Executions performed (perf accounting). Atomic so a single loaded
+    /// runtime can be shared (`Arc<Runtime>`) across sweep workers.
+    pub exec_count: std::sync::atomic::AtomicU64,
 }
 
 fn f32_literal(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
@@ -84,7 +85,7 @@ impl Runtime {
             sample3: it.next().unwrap(),
             sample1: it.next().unwrap(),
             preproc: it.next().unwrap(),
-            exec_count: std::cell::Cell::new(0),
+            exec_count: std::sync::atomic::AtomicU64::new(0),
         })
     }
 
@@ -107,7 +108,8 @@ impl Runtime {
         exe: &xla::PjRtLoadedExecutable,
         inputs: &[L],
     ) -> Result<Vec<xla::Literal>> {
-        self.exec_count.set(self.exec_count.get() + 1);
+        self.exec_count
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let result = exe.execute::<L>(inputs)?[0][0].to_literal_sync()?;
         Ok(result.to_tuple()?)
     }

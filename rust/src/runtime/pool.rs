@@ -8,7 +8,7 @@
 //! pool also has a pure-Rust fallback so the whole system runs (slower,
 //! identical distributions) without built artifacts.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use super::client::{Runtime, D, N_SAMPLE};
 use crate::error::Result;
@@ -18,10 +18,13 @@ use crate::stats::rng::Pcg64;
 use crate::stats::ExpCurve;
 
 /// Which engine draws the batches.
+///
+/// `Arc`-shared so one loaded runtime serves every worker of a parallel
+/// sweep; cloning a backend is a pointer bump.
 #[derive(Clone)]
 pub enum Backend {
     /// AOT artifacts over PJRT (the production path).
-    Runtime(Rc<Runtime>),
+    Runtime(Arc<Runtime>),
     /// Pure Rust (artifact-free fallback / baseline).
     Cpu,
 }
@@ -38,7 +41,7 @@ impl Backend {
 /// Pool over the 3-D asset mixture (`gmm_sample3`).
 pub struct SamplePool3 {
     backend: Backend,
-    gmm: Gmm3,
+    gmm: Arc<Gmm3>,
     rng: Pcg64,
     buf: Vec<[f64; 3]>,
     pos: usize,
@@ -47,10 +50,10 @@ pub struct SamplePool3 {
 }
 
 impl SamplePool3 {
-    pub fn new(backend: Backend, gmm: Gmm3, rng: Pcg64) -> Self {
+    pub fn new(backend: Backend, gmm: impl Into<Arc<Gmm3>>, rng: Pcg64) -> Self {
         SamplePool3 {
             backend,
-            gmm,
+            gmm: gmm.into(),
             rng,
             buf: Vec::new(),
             pos: 0,
@@ -96,7 +99,7 @@ impl SamplePool3 {
 /// durations, evaluate durations (all in log-space).
 pub struct SamplePool1 {
     backend: Backend,
-    gmm: Gmm1,
+    gmm: Arc<Gmm1>,
     rng: Pcg64,
     buf: Vec<f64>,
     pos: usize,
@@ -104,10 +107,10 @@ pub struct SamplePool1 {
 }
 
 impl SamplePool1 {
-    pub fn new(backend: Backend, gmm: Gmm1, rng: Pcg64) -> Self {
+    pub fn new(backend: Backend, gmm: impl Into<Arc<Gmm1>>, rng: Pcg64) -> Self {
         SamplePool1 {
             backend,
-            gmm,
+            gmm: gmm.into(),
             rng,
             buf: Vec::new(),
             pos: 0,
@@ -268,7 +271,7 @@ mod tests {
     #[test]
     fn runtime_pools_match_cpu_distribution() {
         let Some(rt) = Runtime::load_default() else { return };
-        let rt = Rc::new(rt);
+        let rt = Arc::new(rt);
         // pad toy mixture to K1 components
         let mut logw = vec![-60.0f64; super::super::client::K1];
         logw[0] = 0.0;

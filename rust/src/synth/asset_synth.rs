@@ -25,7 +25,8 @@ const MAX_COLS: f64 = 1e5;
 const MIN_BYTES: f64 = 64.0;
 const MAX_BYTES: f64 = 1e13;
 
-/// Streams (asset, preprocess-duration) pairs.
+/// Streams (asset, preprocess-duration) pairs. The mixture is taken as
+/// an `Arc` so per-experiment construction shares, not copies, the fit.
 pub struct AssetSynthesizer {
     pool: SamplePool3,
     durations: PreprocDurationPool,
@@ -39,7 +40,7 @@ pub struct AssetSynthesizer {
 impl AssetSynthesizer {
     pub fn new(
         backend: Backend,
-        gmm: Gmm3,
+        gmm: impl Into<std::sync::Arc<Gmm3>>,
         curve: ExpCurve,
         noise: LogNormal,
         rng: &mut Pcg64,

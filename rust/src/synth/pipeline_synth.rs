@@ -13,7 +13,7 @@ use crate::stats::rng::Pcg64;
 /// Synthesis probabilities. Every optional step has an inclusion
 /// probability; conditional ones depend on the state of the pipeline
 /// being generated (e.g. a re-evaluation only after compress/harden).
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SynthConfig {
     /// Framework mix (must sum to 1 across Framework::ALL order).
     pub framework_shares: [f64; 5],

@@ -14,4 +14,4 @@ mod query;
 mod store;
 
 pub use query::{Agg, GroupedSeries, WindowAgg};
-pub use store::{SeriesHandle, SeriesKey, TsStore};
+pub use store::{SeriesHandle, SeriesKey, Sym, TsStore};

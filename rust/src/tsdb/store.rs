@@ -1,4 +1,10 @@
 //! Series storage: interned keys, append-only columnar points.
+//!
+//! Two levels of interning keep the hot path string-free:
+//! * tag/measurement strings intern to [`Sym`] ids in a per-store symbol
+//!   table, so series-key lookups hash a few `u32`s instead of `String`s;
+//! * full keys intern to [`SeriesHandle`]s, so recording a point is two
+//!   `Vec::push`es.
 
 use std::collections::HashMap;
 use std::io::Write;
@@ -23,8 +29,14 @@ impl SeriesKey {
     }
 
     pub fn tag(mut self, k: impl Into<String>, v: impl Into<String>) -> Self {
-        self.tags.push((k.into(), v.into()));
-        self.tags.sort();
+        let k = k.into();
+        let v = v.into();
+        // insert in sorted position: O(n) shift instead of an O(n log n)
+        // re-sort per builder call
+        let pos = self
+            .tags
+            .partition_point(|(ek, ev)| (ek.as_str(), ev.as_str()) < (k.as_str(), v.as_str()));
+        self.tags.insert(pos, (k, v));
         self
     }
 
@@ -50,6 +62,46 @@ impl std::fmt::Display for SeriesKey {
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct SeriesHandle(pub(crate) u32);
 
+/// Interned string symbol (per-store scope).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Sym(u32);
+
+/// String → u32 intern table.
+#[derive(Default)]
+struct SymbolTable {
+    names: Vec<String>,
+    index: HashMap<String, u32>,
+}
+
+impl SymbolTable {
+    fn intern(&mut self, s: &str) -> Sym {
+        if let Some(&id) = self.index.get(s) {
+            return Sym(id);
+        }
+        let id = self.names.len() as u32;
+        self.index.insert(s.to_string(), id);
+        self.names.push(s.to_string());
+        Sym(id)
+    }
+
+    fn lookup(&self, s: &str) -> Option<Sym> {
+        self.index.get(s).map(|&id| Sym(id))
+    }
+
+    fn name(&self, s: Sym) -> &str {
+        &self.names[s.0 as usize]
+    }
+}
+
+/// Symbol-level series key: what the index actually hashes.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct CompactKey {
+    measurement: Sym,
+    /// Tag pairs sorted by the *string* order of the underlying symbols,
+    /// matching [`SeriesKey::tags`] order exactly.
+    tags: Vec<(Sym, Sym)>,
+}
+
 /// Columnar storage for one series.
 #[derive(Clone, Debug, Default)]
 pub struct Series {
@@ -71,7 +123,8 @@ impl Series {
 pub struct TsStore {
     keys: Vec<SeriesKey>,
     series: Vec<Series>,
-    index: HashMap<SeriesKey, u32>,
+    symbols: SymbolTable,
+    index: HashMap<CompactKey, u32>,
 }
 
 impl TsStore {
@@ -79,13 +132,65 @@ impl TsStore {
         Self::default()
     }
 
+    /// Intern a string, returning a stable symbol for
+    /// [`TsStore::handle_interned`] lookups that never re-hash strings.
+    pub fn sym(&mut self, s: &str) -> Sym {
+        self.symbols.intern(s)
+    }
+
+    fn compact(&mut self, key: &SeriesKey) -> CompactKey {
+        CompactKey {
+            measurement: self.symbols.intern(&key.measurement),
+            tags: key
+                .tags
+                .iter()
+                .map(|(k, v)| (self.symbols.intern(k), self.symbols.intern(v)))
+                .collect(),
+        }
+    }
+
     /// Intern a key, returning a stable handle. Idempotent.
     pub fn handle(&mut self, key: SeriesKey) -> SeriesHandle {
-        if let Some(&id) = self.index.get(&key) {
+        let compact = self.compact(&key);
+        if let Some(&id) = self.index.get(&compact) {
             return SeriesHandle(id);
         }
+        self.insert_series(compact, key)
+    }
+
+    /// Handle lookup from pre-interned symbols: hashes only `u32`s, no
+    /// string traffic at all. `tags` may be in any order.
+    pub fn handle_interned(&mut self, measurement: Sym, tags: &[(Sym, Sym)]) -> SeriesHandle {
+        let mut stags = tags.to_vec();
+        // order by the underlying strings so equivalent keys collide
+        stags.sort_by(|a, b| {
+            (self.symbols.name(a.0), self.symbols.name(a.1))
+                .cmp(&(self.symbols.name(b.0), self.symbols.name(b.1)))
+        });
+        let compact = CompactKey {
+            measurement,
+            tags: stags,
+        };
+        if let Some(&id) = self.index.get(&compact) {
+            return SeriesHandle(id);
+        }
+        let mut key = SeriesKey::new(self.symbols.name(measurement));
+        key.tags = compact
+            .tags
+            .iter()
+            .map(|&(k, v)| {
+                (
+                    self.symbols.name(k).to_string(),
+                    self.symbols.name(v).to_string(),
+                )
+            })
+            .collect();
+        self.insert_series(compact, key)
+    }
+
+    fn insert_series(&mut self, compact: CompactKey, key: SeriesKey) -> SeriesHandle {
         let id = self.keys.len() as u32;
-        self.index.insert(key.clone(), id);
+        self.index.insert(compact, id);
         self.keys.push(key);
         self.series.push(Series::default());
         SeriesHandle(id)
@@ -120,7 +225,16 @@ impl TsStore {
     }
 
     pub fn get(&self, key: &SeriesKey) -> Option<&Series> {
-        self.index.get(key).map(|&id| &self.series[id as usize])
+        // read-only lookup: any string unknown to the symbol table means
+        // the key was never interned
+        let measurement = self.symbols.lookup(&key.measurement)?;
+        let tags = key
+            .tags
+            .iter()
+            .map(|(k, v)| Some((self.symbols.lookup(k)?, self.symbols.lookup(v)?)))
+            .collect::<Option<Vec<_>>>()?;
+        let compact = CompactKey { measurement, tags };
+        self.index.get(&compact).map(|&id| &self.series[id as usize])
     }
 
     /// All handles whose measurement matches.
@@ -220,6 +334,52 @@ mod tests {
     }
 
     #[test]
+    fn many_tags_insert_sorted_regardless_of_order() {
+        // 5 tags added in scrambled order must come out sorted, and the
+        // key must be identical to one built in sorted order
+        let scrambled = SeriesKey::new("m")
+            .tag("d", "4")
+            .tag("a", "1")
+            .tag("e", "5")
+            .tag("b", "2")
+            .tag("c", "3");
+        let sorted = SeriesKey::new("m")
+            .tag("a", "1")
+            .tag("b", "2")
+            .tag("c", "3")
+            .tag("d", "4")
+            .tag("e", "5");
+        assert_eq!(scrambled, sorted);
+        assert_eq!(scrambled.to_string(), "m,a=1,b=2,c=3,d=4,e=5");
+        let keys: Vec<&str> = scrambled.tags.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["a", "b", "c", "d", "e"]);
+        // duplicate tag keys order by value
+        let dup = SeriesKey::new("m").tag("k", "9").tag("k", "1").tag("k", "5");
+        let vals: Vec<&str> = dup.tags.iter().map(|(_, v)| v.as_str()).collect();
+        assert_eq!(vals, vec!["1", "5", "9"]);
+    }
+
+    #[test]
+    fn interned_symbols_reach_same_series() {
+        let mut db = TsStore::new();
+        let h_str = db.handle(SeriesKey::new("exec").tag("task", "train").tag("fw", "tf"));
+        let m = db.sym("exec");
+        let task = db.sym("task");
+        let train = db.sym("train");
+        let fw = db.sym("fw");
+        let tf = db.sym("tf");
+        // any tag order resolves to the same handle
+        let h_sym = db.handle_interned(m, &[(fw, tf), (task, train)]);
+        assert_eq!(h_str, h_sym);
+        assert_eq!(db.num_series(), 1);
+        // a fresh symbol-built series materializes a proper SeriesKey
+        let eval = db.sym("eval");
+        let h_new = db.handle_interned(m, &[(task, eval)]);
+        assert_eq!(db.key(h_new).to_string(), "exec,task=eval");
+        assert_eq!(db.handle(SeriesKey::new("exec").tag("task", "eval")), h_new);
+    }
+
+    #[test]
     fn find_by_measurement_and_tag() {
         let mut db = TsStore::new();
         db.record(SeriesKey::new("dur").tag("task", "train"), 0.0, 1.0);
@@ -228,6 +388,15 @@ mod tests {
         assert_eq!(db.find("dur").len(), 2);
         assert_eq!(db.find_tagged("dur", "task", "train").len(), 1);
         assert_eq!(db.find_tagged("dur", "task", "nope").len(), 0);
+    }
+
+    #[test]
+    fn get_unknown_key_is_none() {
+        let mut db = TsStore::new();
+        db.record(SeriesKey::new("m").tag("t", "a"), 0.0, 1.0);
+        assert!(db.get(&SeriesKey::new("m").tag("t", "a")).is_some());
+        assert!(db.get(&SeriesKey::new("m").tag("t", "b")).is_none());
+        assert!(db.get(&SeriesKey::new("nope")).is_none());
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! JSON (de)serialization impls for every persisted type, centralized so
 //! the domain modules stay serialization-free.
 
+use std::sync::Arc;
+
 use super::json::Json;
 use crate::arrivals::{ArrivalModel, ArrivalProfile};
 use crate::coordinator::config::{ArrivalSpec, ExperimentConfig, RuntimeViewConfig};
@@ -255,7 +257,7 @@ impl JsonIo for ArrivalModel {
                         clusters.len()
                     )));
                 }
-                ArrivalModel::Profile(ArrivalProfile { clusters, sse })
+                ArrivalModel::Profile(Arc::new(ArrivalProfile { clusters, sse }))
             }
             "poisson" => ArrivalModel::Poisson {
                 mean_interarrival: j.f("mean_interarrival")?,
@@ -317,14 +319,14 @@ impl JsonIo for SimParams {
     }
     fn from_json(j: &Json) -> Result<Self> {
         Ok(SimParams {
-            asset_gmm: Gmm3::from_json(j.req("asset_gmm")?)?,
+            asset_gmm: Arc::new(Gmm3::from_json(j.req("asset_gmm")?)?),
             train_log_gmm: j
                 .req("train_log_gmm")?
                 .as_arr()?
                 .iter()
-                .map(Gmm1::from_json)
+                .map(|g| Gmm1::from_json(g).map(Arc::new))
                 .collect::<Result<Vec<_>>>()?,
-            eval_log_gmm: Gmm1::from_json(j.req("eval_log_gmm")?)?,
+            eval_log_gmm: Arc::new(Gmm1::from_json(j.req("eval_log_gmm")?)?),
             preproc_curve: ExpCurve::from_json(j.req("preproc_curve")?)?,
             preproc_noise: LogNormal::from_json(j.req("preproc_noise")?)?,
             arrival_random: ArrivalModel::from_json(j.req("arrival_random")?)?,

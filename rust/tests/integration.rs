@@ -3,7 +3,7 @@
 //! fall) across the subsystems.
 
 use std::process::Command;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use pipesim::analytics::figures;
 use pipesim::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig, SimParams};
@@ -21,7 +21,7 @@ fn tmpdir(tag: &str) -> std::path::PathBuf {
 #[test]
 fn full_loop_gen_fit_simulate_analyze() {
     let db = GroundTruth::new(99).generate_weeks(4);
-    let runtime = Runtime::load_default().map(Rc::new);
+    let runtime = Runtime::load_default().map(Arc::new);
     let params = fit_params(&db, runtime.clone()).unwrap();
 
     let cfg = ExperimentConfig {
@@ -200,6 +200,26 @@ fn cli_end_to_end() {
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("dashboard"), "missing dashboard: {text}");
     assert!(text.contains("pipelines"));
+
+    // parallel sweep over a small capacity x seed grid
+    let cells = dir.join("cells.csv");
+    let out = pipesim_bin()
+        .arg("sweep")
+        .arg("--params")
+        .arg(&params)
+        .args([
+            "--days", "0.25", "--arrival", "poisson:120", "--seeds", "4", "--jobs", "2",
+            "--capacities", "2,4", "--cpu", "--export",
+        ])
+        .arg(&cells)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("group 'default-cap2'"), "{text}");
+    assert!(text.contains("group 'default-cap4'"), "{text}");
+    let csv = std::fs::read_to_string(&cells).unwrap();
+    assert_eq!(csv.lines().count(), 9, "8 cells + header: {csv}");
     std::fs::remove_dir_all(dir).ok();
 }
 
