@@ -3,7 +3,7 @@
 //! These bound the simulator's event-loop cost (the denominator of the
 //! Fig 13 headline). Run: `cargo bench --bench bench_des`
 
-use pipesim::des::{Calendar, Resource};
+use pipesim::des::{Calendar, JobCtx, Resource};
 use pipesim::stats::rng::Pcg64;
 use pipesim::util::bench::{black_box, Bench};
 
@@ -41,12 +41,12 @@ fn main() {
     let mut res: Resource<u32> = Resource::new("bench", 10);
     let mut t = 0.0f64;
     for k in 0..20 {
-        res.request(t, k, 1.0);
+        res.request(t, k, JobCtx::new(1.0, 1.0, t));
     }
     b.bench("resource release+request (contended)", || {
         t += 1.0;
         black_box(res.release(t));
-        res.request(t, 99, 1.0);
+        res.request(t, 99, JobCtx::new(1.0, 1.0, t));
     });
 
     // uncontended fast path
@@ -54,7 +54,7 @@ fn main() {
     let mut t2 = 0.0f64;
     b.bench("resource request+release (uncontended)", || {
         t2 += 1.0;
-        res2.request(t2, 1, 0.0);
+        res2.request(t2, 1, JobCtx::new(0.0, 0.0, t2));
         black_box(res2.release(t2));
     });
 

@@ -1,77 +1,109 @@
 //! Operational-strategy ablation (Fig 4's scheduler concept + DESIGN.md
-//! ablations): queue disciplines under saturation, and retraining trigger
-//! policies trading model quality against infrastructure load.
+//! ablations): every *registered* scheduling strategy under saturation,
+//! and every registered retraining trigger trading model quality against
+//! infrastructure load.
+//!
+//! Emits `BENCH_schedulers.json` (wait-time mean/p95 per scheduler) so
+//! the strategy trade-off surface is tracked across PRs alongside the
+//! simulator/sweep perf trajectories.
 //!
 //! Run: `cargo bench --bench bench_schedulers`
 
 use std::sync::Arc;
 
 use pipesim::coordinator::config::RuntimeViewConfig;
-use pipesim::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig, TriggerPolicy};
-use pipesim::des::resource::Discipline;
+use pipesim::coordinator::result::series;
+use pipesim::coordinator::{
+    fit_params, scheduler_names, trigger_names, ArrivalSpec, Experiment, ExperimentConfig,
+    StrategySpec,
+};
 use pipesim::des::DAY;
 use pipesim::empirical::GroundTruth;
 use pipesim::runtime::Runtime;
+use pipesim::stats::quantile;
 use pipesim::util::bench::Bench;
+use pipesim::util::Json;
+
+/// p95 of training-queue wait: the recorded nonzero waits padded with
+/// the zero-wait grants (wait_stats counts every request).
+fn wait_p95(r: &pipesim::coordinator::ExperimentResult) -> f64 {
+    let mut waits: Vec<f64> = r
+        .tsdb
+        .find_tagged(series::TASK_WAIT, "resource", "training")
+        .iter()
+        .flat_map(|&h| r.tsdb.series(h).values.iter().copied())
+        .collect();
+    let total = r.wait_training.count as usize;
+    if waits.len() < total {
+        waits.resize(total, 0.0);
+    }
+    if waits.is_empty() {
+        return 0.0;
+    }
+    quantile(&waits, 0.95)
+}
 
 fn main() {
     let db = GroundTruth::new(17).generate_weeks(4);
     let runtime = Runtime::load_default().map(Arc::new);
+    let backend = if runtime.is_some() { "pjrt" } else { "cpu" };
     let params = fit_params(&db, runtime.clone()).expect("fit");
     let mut b = Bench::with_budget(std::time::Duration::from_millis(100), 3);
 
-    println!("# discipline ablation (7 days, training capacity 4)");
-    println!("discipline,mean_wait_s,max_wait_s,completed,util_training");
-    for (name, d) in [
-        ("fifo", Discipline::Fifo),
-        ("sjf", Discipline::ShortestJobFirst),
-        ("priority", Discipline::Priority),
-    ] {
+    println!("# scheduler ablation (7 days, training capacity 4, registry-driven)");
+    println!("scheduler,mean_wait_s,p95_wait_s,max_wait_s,completed,util_training");
+    let mut sched_rows = Vec::new();
+    for name in scheduler_names() {
         let mut out = None;
         b.bench_once(format!("7-day run [{name}]"), || {
             let mut cfg = ExperimentConfig {
-                name: name.into(),
+                name: name.clone(),
                 seed: 2,
                 horizon: 7.0 * DAY,
                 arrival: ArrivalSpec::Profile,
-                record_traces: false,
+                // traces on: the p95 comes from the task_wait series
+                record_traces: true,
                 ..Default::default()
             };
             cfg.infra.training_capacity = 4;
-            cfg.infra.discipline = d;
+            cfg.infra.scheduler = StrategySpec::new(&name);
             let r = Experiment::new(cfg, params.clone())
                 .with_runtime(runtime.clone())
                 .run()
                 .expect("run");
+            let max_wait = if r.wait_training.count > 0 {
+                r.wait_training.max
+            } else {
+                0.0
+            };
             out = Some((
                 r.wait_training.mean(),
-                r.wait_training.max,
+                wait_p95(&r),
+                max_wait,
                 r.completed,
                 r.util_training,
             ));
         });
-        let (mw, xw, c, u) = out.unwrap();
-        println!("{name},{mw:.1},{xw:.0},{c},{u:.3}");
+        let (mw, p95, xw, c, u) = out.unwrap();
+        println!("{name},{mw:.1},{p95:.1},{xw:.0},{c},{u:.3}");
+        sched_rows.push(Json::obj(vec![
+            ("name", Json::Str(name.clone())),
+            ("wait_mean_s", Json::Num(mw)),
+            ("wait_p95_s", Json::Num(p95)),
+            ("wait_max_s", Json::Num(xw)),
+            ("completed", Json::Num(c as f64)),
+            ("util_training", Json::Num(u)),
+        ]));
     }
 
-    println!("# trigger-policy ablation (14 days, runtime view on)");
-    println!("policy,retrains,mean_perf,util_training,completed");
-    for (name, policy) in [
-        ("never", TriggerPolicy::Never),
-        ("eager", TriggerPolicy::Eager),
-        ("threshold", TriggerPolicy::DriftThreshold { threshold: 0.05 }),
-        (
-            "offpeak",
-            TriggerPolicy::OffPeak {
-                threshold: 0.05,
-                max_intensity: 0.5,
-            },
-        ),
-    ] {
+    println!("# trigger ablation (14 days, runtime view on, registry-driven)");
+    println!("trigger,retrains,mean_perf,util_training,completed");
+    let mut trig_rows = Vec::new();
+    for name in trigger_names() {
         let mut out = None;
         b.bench_once(format!("14-day run [{name}]"), || {
             let cfg = ExperimentConfig {
-                name: name.into(),
+                name: name.clone(),
                 seed: 2,
                 horizon: 14.0 * DAY,
                 arrival: ArrivalSpec::Poisson {
@@ -84,7 +116,7 @@ fn main() {
                     decay_per_day: 0.02,
                     sudden_drift_prob: 0.02,
                     sudden_drift_drop: 0.08,
-                    trigger: policy,
+                    trigger: StrategySpec::new(&name),
                     max_models: 1000,
                 },
                 ..Default::default()
@@ -102,5 +134,22 @@ fn main() {
         });
         let (rt_, p, u, c) = out.unwrap();
         println!("{name},{rt_},{p:.3},{u:.3},{c}");
+        trig_rows.push(Json::obj(vec![
+            ("name", Json::Str(name.clone())),
+            ("retrains", Json::Num(rt_ as f64)),
+            ("mean_perf", Json::Num(p)),
+            ("util_training", Json::Num(u)),
+            ("completed", Json::Num(c as f64)),
+        ]));
     }
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("schedulers".into())),
+        ("backend", Json::Str(backend.into())),
+        ("schedulers", Json::Arr(sched_rows)),
+        ("triggers", Json::Arr(trig_rows)),
+    ]);
+    std::fs::write("BENCH_schedulers.json", json.to_string())
+        .expect("write BENCH_schedulers.json");
+    println!("# wrote BENCH_schedulers.json");
 }

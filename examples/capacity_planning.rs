@@ -3,16 +3,18 @@
 //! The paper's dashboard walkthrough: an arrival peak around 16:00
 //! saturates the learning cluster, jobs queue, and post-processing tasks
 //! are delayed. Here we sweep the training-cluster capacity, watch
-//! utilization / queue wait / pipeline wait respond, and also ablate the
-//! queueing discipline (FIFO vs shortest-job-first vs priority) — the
+//! utilization / queue wait / pipeline wait respond, and also ablate
+//! every registered scheduling strategy (FIFO, shortest-job-first,
+//! priority, earliest-deadline-first, weighted-fair, ...) — the
 //! operational strategies the framework exists to evaluate (Fig 4).
 //!
 //! Run: `cargo run --release --example capacity_planning`
 
 use std::sync::Arc;
 
-use pipesim::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig};
-use pipesim::des::resource::Discipline;
+use pipesim::coordinator::{
+    fit_params, scheduler_names, ArrivalSpec, Experiment, ExperimentConfig, StrategySpec,
+};
 use pipesim::des::DAY;
 use pipesim::empirical::GroundTruth;
 use pipesim::runtime::Runtime;
@@ -52,18 +54,14 @@ fn main() -> pipesim::Result<()> {
     }
 
     println!();
-    println!("== discipline ablation at tight capacity (4 slots) ==");
+    println!("== scheduler ablation at tight capacity (4 slots) ==");
     println!(
-        "{:>10} {:>14} {:>14} {:>12}",
-        "discipline", "mean_wait_s", "max_wait_s", "completed"
+        "{:>14} {:>14} {:>14} {:>12}",
+        "scheduler", "mean_wait_s", "max_wait_s", "completed"
     );
-    for (name, discipline) in [
-        ("fifo", Discipline::Fifo),
-        ("sjf", Discipline::ShortestJobFirst),
-        ("priority", Discipline::Priority),
-    ] {
+    for name in scheduler_names() {
         let mut cfg = ExperimentConfig {
-            name: format!("disc-{name}"),
+            name: format!("sched-{name}"),
             seed: 11,
             horizon: 7.0 * DAY,
             arrival: ArrivalSpec::Profile,
@@ -71,12 +69,12 @@ fn main() -> pipesim::Result<()> {
             ..Default::default()
         };
         cfg.infra.training_capacity = 4;
-        cfg.infra.discipline = discipline;
+        cfg.infra.scheduler = StrategySpec::new(&name);
         let r = Experiment::new(cfg, params.clone())
             .with_runtime(runtime.clone())
             .run()?;
         println!(
-            "{:>10} {:>14.1} {:>14.0} {:>12}",
+            "{:>14} {:>14.1} {:>14.0} {:>12}",
             name,
             r.wait_training.mean(),
             r.wait_training.max,

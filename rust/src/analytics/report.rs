@@ -176,15 +176,14 @@ fn truncate(s: &str, n: usize) -> &str {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig};
-    use crate::des::resource::Discipline;
+    use crate::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig, StrategySpec};
     use crate::des::DAY;
     use crate::empirical::GroundTruth;
 
     fn two_results() -> (ExperimentResult, ExperimentResult) {
         let db = GroundTruth::new(55).generate_weeks(2);
         let params = fit_params(&db, None).unwrap();
-        let mk = |name: &str, discipline| {
+        let mk = |name: &str| {
             let mut cfg = ExperimentConfig {
                 name: name.into(),
                 seed: 3,
@@ -196,10 +195,10 @@ mod tests {
                 ..Default::default()
             };
             cfg.infra.training_capacity = 3;
-            cfg.infra.discipline = discipline;
+            cfg.infra.scheduler = StrategySpec::new(name);
             Experiment::new(cfg, params.clone()).run().unwrap()
         };
-        (mk("fifo", Discipline::Fifo), mk("sjf", Discipline::ShortestJobFirst))
+        (mk("fifo"), mk("sjf"))
     }
 
     #[test]

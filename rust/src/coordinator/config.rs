@@ -5,7 +5,7 @@ use crate::error::Result;
 use crate::model::InfraConfig;
 use crate::synth::SynthConfig;
 
-use super::triggers::TriggerPolicy;
+use super::strategy::{build_scheduler, build_trigger, StrategySpec};
 
 /// Which arrival process drives the experiment.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -33,8 +33,9 @@ pub struct RuntimeViewConfig {
     pub sudden_drift_prob: f64,
     /// Performance drop on a sudden drift event.
     pub sudden_drift_drop: f64,
-    /// Retraining trigger policy.
-    pub trigger: TriggerPolicy,
+    /// Retraining trigger strategy (built from the registry in
+    /// `coordinator::strategy`).
+    pub trigger: StrategySpec,
     /// Cap on concurrently monitored models (memory bound).
     pub max_models: usize,
 }
@@ -47,7 +48,7 @@ impl Default for RuntimeViewConfig {
             decay_per_day: 0.004,
             sudden_drift_prob: 0.01,
             sudden_drift_drop: 0.08,
-            trigger: TriggerPolicy::DriftThreshold { threshold: 0.05 },
+            trigger: StrategySpec::new("drift_threshold").with("threshold", 0.05),
             max_models: 2000,
         }
     }
@@ -124,12 +125,23 @@ impl ExperimentConfig {
                 "sample_interval must be > 0".into(),
             ));
         }
+        if self.infra.training_capacity == 0 || self.infra.compute_capacity == 0 {
+            // a zero-capacity resource queues jobs forever: the run would
+            // silently never complete any work
+            return Err(crate::error::Error::Config(
+                "infra capacities must be >= 1".into(),
+            ));
+        }
         let share_sum: f64 = self.synth.framework_shares.iter().sum();
         if (share_sum - 1.0).abs() > 1e-6 {
             return Err(crate::error::Error::Config(format!(
                 "framework shares sum to {share_sum}, expected 1"
             )));
         }
+        // strategies must resolve in the registry (unknown names and
+        // typoed params fail here, before any work is done)
+        build_scheduler(&self.infra.scheduler)?;
+        build_trigger(&self.runtime_view.trigger)?;
         Ok(())
     }
 }
@@ -177,6 +189,31 @@ mod tests {
     }
 
     #[test]
+    fn rejects_zero_capacity_resources() {
+        // a zero-capacity cluster would queue jobs forever
+        let mut cfg = ExperimentConfig::default();
+        cfg.infra.training_capacity = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.infra.compute_capacity = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_strategies() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.infra.scheduler = StrategySpec::new("no_such_scheduler");
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.runtime_view.trigger = StrategySpec::new("no_such_trigger");
+        assert!(cfg.validate().is_err());
+        // known name, typoed parameter key
+        let mut cfg = ExperimentConfig::default();
+        cfg.infra.scheduler = StrategySpec::new("edf").with("slack", 10.0);
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
     fn json_example_parses() {
         let text = r#"{
             "name": "peak-load",
@@ -212,7 +249,56 @@ mod tests {
         let cfg = ExperimentConfig::from_json_text(text).unwrap();
         cfg.validate().unwrap();
         assert_eq!(cfg.infra.training_capacity, 6);
+        // the legacy "discipline"/"policy" forms map onto strategy specs
+        assert_eq!(cfg.infra.scheduler, StrategySpec::new("fifo"));
+        assert_eq!(
+            cfg.runtime_view.trigger,
+            StrategySpec::new("drift_threshold").with("threshold", 0.05)
+        );
         assert!(cfg.runtime_view.enabled);
         assert_eq!(cfg.max_pipelines, None);
+    }
+
+    #[test]
+    fn strategy_spec_json_selects_new_schedulers() {
+        // new strategies are selectable purely from JSON config
+        let text = r#"{
+            "name": "edf-run", "seed": 1, "horizon": 3600.0,
+            "arrival": {"mode": "poisson", "mean_interarrival": 60.0},
+            "interarrival_factor": 1.0,
+            "infra": {
+                "training_capacity": 4, "compute_capacity": 8,
+                "scheduler": {"name": "edf", "params": {"slack_per_class": 900}},
+                "store": {"read_bw": 4e8, "write_bw": 2.5e8,
+                           "latency": 0.05, "tcp_overhead": 1.06}
+            },
+            "synth": {
+                "framework_shares": [0.63, 0.32, 0.03, 0.01, 0.01],
+                "p_preprocess": 0.55, "p_evaluate": 0.7, "p_compress": 0.1,
+                "p_harden": 0.05, "p_reevaluate": 0.8, "p_transfer": 0.05,
+                "p_deploy": 0.8
+            },
+            "sample_interval": 300.0,
+            "record_traces": false,
+            "runtime_view": {
+                "enabled": true,
+                "detector_interval": 21600.0,
+                "decay_per_day": 0.004,
+                "sudden_drift_prob": 0.01,
+                "sudden_drift_drop": 0.08,
+                "trigger": {"name": "performance_floor", "params": {"floor": 0.72}},
+                "max_models": 100
+            }
+        }"#;
+        let cfg = ExperimentConfig::from_json_text(text).unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(
+            cfg.infra.scheduler,
+            StrategySpec::new("edf").with("slack_per_class", 900.0)
+        );
+        assert_eq!(
+            cfg.runtime_view.trigger,
+            StrategySpec::new("performance_floor").with("floor", 0.72)
+        );
     }
 }

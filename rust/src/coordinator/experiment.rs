@@ -1,73 +1,25 @@
-//! The discrete-event experiment runner — PipeSim's simulator core
-//! (paper section V-B) on the Rust DES substrate.
+//! The experiment entry point: config + fitted parameters (+ optional
+//! PJRT runtime) → one deterministic run of the decomposed `Simulation`
+//! core (`coordinator/simulation.rs`, paper section V-B).
 //!
 //! Each pipeline execution is a small state machine over the calendar:
 //! arrival → per task: request resource (queue if saturated) →
 //! read → exec → write → release → next task → completion. Durations come
 //! from the fitted statistical models, batch-sampled through the AOT
 //! artifacts. The optional run-time view ages deployed models and feeds
-//! retraining pipelines back into the arrival stream (Fig 7).
+//! retraining pipelines back into the arrival stream (Fig 7). Which job a
+//! saturated cluster runs next, and when a drifted model retrains, are
+//! pluggable strategies — see `des::sched` and `coordinator::strategy`.
 
 use std::sync::Arc;
 
-use crate::arrivals::ArrivalModel;
-use crate::des::{AcquireResult, Calendar, Resource, SimTime};
 use crate::error::Result;
-use crate::model::pipeline::TaskNode;
-use crate::model::{
-    CompressionModel, DataAsset, Framework, ModelMetrics, ResourceKind, TaskExecutor, TaskType,
-};
-use crate::runtime::pool::{Backend, SamplePool1};
-use crate::runtime::{Runtime, K1};
-use crate::stats::gmm::Gmm1;
-use crate::stats::rng::Pcg64;
-use crate::synth::{AssetSynthesizer, PipelineSynthesizer, TaskList};
-use crate::tsdb::{SeriesHandle, SeriesKey, TsStore};
+use crate::runtime::Runtime;
 
-use super::config::{ArrivalSpec, ExperimentConfig};
+use super::config::ExperimentConfig;
 use super::params::SimParams;
-use super::result::{rss_mb, series, ExperimentResult};
-use super::triggers::DeployedModel;
-
-/// Calendar events.
-#[derive(Clone, Copy, Debug)]
-enum Event {
-    /// Next pipeline arrival (self-rescheduling).
-    Arrival,
-    /// Task of pipeline `pid` finished (exec + write done).
-    TaskDone(u32),
-    /// Periodic utilization/queue sampling.
-    Monitor,
-    /// Run-time view detector sweep.
-    Drift,
-    /// Launch a (possibly deferred) retraining for deployed-model slot.
-    RetrainLaunch(u32),
-}
-
-/// Per-pipeline execution state (slab-allocated, freed on completion so
-/// memory scales with *concurrent*, not total, pipelines).
-struct PipelineState {
-    tasks: TaskList,
-    cur: usize,
-    framework: Framework,
-    asset: DataAsset,
-    preproc_t: f64,
-    /// Last sampled training duration (drives compress/harden cost).
-    train_t: f64,
-    metrics: ModelMetrics,
-    model_bytes: f64,
-    arrived_at: SimTime,
-    total_wait: SimTime,
-    /// Sampled exec duration for the task awaiting a resource grant.
-    pending_exec: f64,
-    pending_read: f64,
-    pending_write: f64,
-    /// Deployed-model slot to refresh when this (retraining) run deploys.
-    retrain_of: Option<u32>,
-    /// User priority (lower = more important; Fig 4's "model
-    /// prioritization"). Retraining pipelines get priority 0.
-    priority: f64,
-}
+use super::result::ExperimentResult;
+use super::simulation::Simulation;
 
 /// An experiment: config + fitted parameters (+ optional PJRT runtime).
 ///
@@ -99,538 +51,18 @@ impl Experiment {
     /// Run to completion; single-threaded, deterministic per seed.
     pub fn run(self) -> Result<ExperimentResult> {
         let started = std::time::Instant::now();
-        let Experiment {
-            cfg,
-            params,
-            runtime,
-        } = self;
-        cfg.validate()?;
-        let params: &SimParams = &params;
-        let backend = match &runtime {
-            Some(rt) => Backend::Runtime(rt.clone()),
-            None => Backend::Cpu,
-        };
-
-        let mut root = Pcg64::new(cfg.seed);
-        let mut rng_arrival = root.substream(1);
-        let rng_pipe = root.substream(2);
-        let mut rng_asset = root.substream(3);
-        let mut rng_noise = root.substream(4);
-        let mut rng_drift = root.substream(5);
-
-        // --- samplers (all mixture handles are Arc clones — no deep
-        // copies of fitted parameters per experiment) ------------------
-        let mut asset_synth = AssetSynthesizer::new(
-            backend.clone(),
-            params.asset_gmm.clone(),
-            params.preproc_curve,
-            params.preproc_noise,
-            &mut rng_asset,
-        );
-        let mut pipe_synth = PipelineSynthesizer::new(cfg.synth, rng_pipe);
-        let mut train_pools: Vec<SamplePool1> = Framework::ALL
-            .iter()
-            .map(|fw| {
-                SamplePool1::new(
-                    backend.clone(),
-                    pad_gmm(params.train_gmm_shared(*fw)),
-                    root.substream(0x100 + fw.index() as u64),
-                )
-            })
-            .collect();
-        let mut eval_pool = SamplePool1::new(
-            backend.clone(),
-            pad_gmm(&params.eval_log_gmm),
-            root.substream(0x200),
-        );
-        let mut arrival = match cfg.arrival {
-            ArrivalSpec::Random => params.arrival_random.clone(),
-            ArrivalSpec::Profile => params.arrival_profile.clone(),
-            ArrivalSpec::Replay => params.arrival_replay.clone(),
-            ArrivalSpec::Poisson { mean_interarrival } => {
-                ArrivalModel::Poisson { mean_interarrival }
-            }
-        };
-        let compression = CompressionModel::from_table1();
-
-        // --- world ----------------------------------------------------
-        let mut cal: Calendar<Event> = Calendar::new();
-        let mut training: Resource<u32> =
-            Resource::with_discipline("training", cfg.infra.training_capacity, cfg.infra.discipline);
-        let mut compute: Resource<u32> =
-            Resource::with_discipline("compute", cfg.infra.compute_capacity, cfg.infra.discipline);
-        let mut slab: Vec<Option<PipelineState>> = Vec::new();
-        let mut free: Vec<u32> = Vec::new();
-        let mut deployed: Vec<DeployedModel> = Vec::new();
-        let mut db = TsStore::new();
-
-        // interned hot-path series
-        let h_arrivals = db.handle(SeriesKey::new(series::ARRIVALS));
-        let h_completions = db.handle(SeriesKey::new(series::COMPLETIONS));
-        let h_pipeline_wait = db.handle(SeriesKey::new(series::PIPELINE_WAIT));
-        let h_util_t = db.handle(SeriesKey::new(series::UTILIZATION).tag("resource", "training"));
-        let h_util_c = db.handle(SeriesKey::new(series::UTILIZATION).tag("resource", "compute"));
-        let h_q_t = db.handle(SeriesKey::new(series::QUEUE_LEN).tag("resource", "training"));
-        let h_q_c = db.handle(SeriesKey::new(series::QUEUE_LEN).tag("resource", "compute"));
-        let h_wait_t = db.handle(SeriesKey::new(series::TASK_WAIT).tag("resource", "training"));
-        let h_wait_c = db.handle(SeriesKey::new(series::TASK_WAIT).tag("resource", "compute"));
-        let h_traffic_r = db.handle(SeriesKey::new(series::TRAFFIC).tag("dir", "read"));
-        let h_traffic_w = db.handle(SeriesKey::new(series::TRAFFIC).tag("dir", "write"));
-        let h_model_perf = db.handle(SeriesKey::new(series::MODEL_PERF));
-        let h_retrains = db.handle(SeriesKey::new(series::RETRAINS));
-        // task exec series per (task, framework): a flat array indexed by
-        // (task, framework+1) — the per-event path never hashes anything,
-        // and the tag strings intern into the store's symbol table once
-        const N_FW: usize = Framework::ALL.len() + 1; // +1 = untagged
-        let mut h_exec: [[Option<SeriesHandle>; N_FW]; TaskType::ALL.len()] =
-            [[None; N_FW]; TaskType::ALL.len()];
-
-        // --- counters ---------------------------------------------------
-        let mut arrived: u64 = 0;
-        let mut live: u64 = 0; // pipelines in flight (slab occupancy)
-        let mut arrivals_stopped = false;
-        let mut completed: u64 = 0;
-        let mut tasks_executed: u64 = 0;
-        let mut gate_failures: u64 = 0;
-        let mut retrains: u64 = 0;
-        let mut models_deployed: u64 = 0;
-        let mut events: u64 = 0;
-        let mut wire_read = 0.0f64;
-        let mut wire_write = 0.0f64;
-        let mut peak_rss = rss_mb();
-
-        // helpers -------------------------------------------------------
-        macro_rules! resource_for {
-            ($kind:expr) => {
-                match $kind {
-                    ResourceKind::Training => &mut training,
-                    ResourceKind::Compute => &mut compute,
-                }
-            };
-        }
-
-        macro_rules! alloc_pid {
-            ($st:expr) => {{
-                if let Some(pid) = free.pop() {
-                    slab[pid as usize] = Some($st);
-                    pid
-                } else {
-                    slab.push(Some($st));
-                    (slab.len() - 1) as u32
-                }
-            }};
-        }
-
-        // sample the exec duration for the current task of `st`
-        macro_rules! sample_exec {
-            ($st:expr) => {{
-                let task = $st.tasks.get($st.cur).task;
-                match task {
-                    TaskType::Preprocess => $st.preproc_t,
-                    TaskType::Train => {
-                        let fw = $st.tasks.get($st.cur).framework.unwrap_or($st.framework);
-                        let d = train_pools[fw.index()].next()?.exp().max(0.1);
-                        $st.train_t = d;
-                        d
-                    }
-                    TaskType::Evaluate => eval_pool.next()?.exp().max(0.05),
-                    // compression costs roughly a training run (section V-A2d)
-                    TaskType::Compress => {
-                        ($st.train_t * (1.0 + 0.05 * rng_noise.normal())).max(0.1)
-                    }
-                    TaskType::Harden => {
-                        ($st.train_t * (1.5 + 0.2 * rng_noise.normal())).max(0.1)
-                    }
-                    TaskType::Deploy => (5.0 * (0.3 * rng_noise.normal()).exp()).max(0.5),
-                }
-            }};
-        }
-
-        // prepare pending durations and request the resource
-        macro_rules! start_task {
-            ($pid:expr) => {{
-                let t_now = cal.now();
-                let st = slab[$pid as usize].as_mut().expect("live pipeline");
-                let node = st.tasks.get(st.cur);
-                let exec = sample_exec!(st);
-                let (read_b, write_b) =
-                    TaskExecutor::payload_bytes(node.task, &st.asset, st.model_bytes);
-                st.pending_exec = exec;
-                st.pending_read = cfg.infra.store.read_time(read_b);
-                st.pending_write = cfg.infra.store.write_time(write_b);
-                wire_read += cfg.infra.store.wire_bytes(read_b);
-                wire_write += cfg.infra.store.wire_bytes(write_b);
-                if cfg.record_traces {
-                    db.append(h_traffic_r, t_now, cfg.infra.store.wire_bytes(read_b));
-                    db.append(h_traffic_w, t_now, cfg.infra.store.wire_bytes(write_b));
-                }
-                let kind = ResourceKind::for_task(node.task);
-                let total = st.pending_read + st.pending_exec + st.pending_write;
-                // the waiter key depends on the operational strategy:
-                // SJF orders by expected occupancy, Priority by the
-                // pipeline's user priority
-                let key = match cfg.infra.discipline {
-                    crate::des::resource::Discipline::ShortestJobFirst => total,
-                    crate::des::resource::Discipline::Priority => st.priority,
-                    crate::des::resource::Discipline::Fifo => 0.0,
-                };
-                let res = resource_for!(kind);
-                match res.request(t_now, $pid, key) {
-                    AcquireResult::Acquired => {
-                        cal.schedule(total, Event::TaskDone($pid));
-                    }
-                    AcquireResult::Queued => {}
-                }
-            }};
-        }
-
-        // --- prime the calendar ---------------------------------------
-        let first_gap = arrival.next_interarrival(0.0, cfg.interarrival_factor, &mut rng_arrival);
-        cal.schedule(first_gap, Event::Arrival);
-        cal.schedule(cfg.sample_interval, Event::Monitor);
-        if cfg.runtime_view.enabled {
-            cal.schedule(cfg.runtime_view.detector_interval, Event::Drift);
-        }
-
-        // --- main loop --------------------------------------------------
-        while let Some((t, ev)) = cal.pop() {
-            if t > cfg.horizon {
-                break;
-            }
-            events += 1;
-            match ev {
-                Event::Arrival => {
-                    arrived += 1;
-                    db.append(h_arrivals, t, 1.0);
-                    // next arrival
-                    let stop = cfg.max_pipelines.map_or(false, |m| arrived >= m);
-                    if !stop {
-                        let gap = arrival.next_interarrival(
-                            t,
-                            cfg.interarrival_factor,
-                            &mut rng_arrival,
-                        );
-                        if t + gap <= cfg.horizon {
-                            cal.schedule(gap, Event::Arrival);
-                        } else {
-                            arrivals_stopped = true;
-                        }
-                    } else {
-                        arrivals_stopped = true;
-                    }
-                    // new pipeline
-                    let tasks = pipe_synth.generate_nodes();
-                    let fw = tasks
-                        .as_slice()
-                        .iter()
-                        .find_map(|n| n.framework)
-                        .unwrap_or(Framework::SparkML);
-                    let (asset, preproc_t) = asset_synth.next()?;
-                    let st = PipelineState {
-                        tasks,
-                        cur: 0,
-                        framework: fw,
-                        asset,
-                        preproc_t,
-                        train_t: 60.0,
-                        metrics: ModelMetrics::default(),
-                        model_bytes: 1e7,
-                        arrived_at: t,
-                        total_wait: 0.0,
-                        pending_exec: 0.0,
-                        pending_read: 0.0,
-                        pending_write: 0.0,
-                        retrain_of: None,
-                        // user-assigned priority class 1..=10
-                        priority: 1.0 + rng_noise.below(10) as f64,
-                    };
-                    let pid = alloc_pid!(st);
-                    live += 1;
-                    start_task!(pid);
-                }
-
-                Event::TaskDone(pid) => {
-                    tasks_executed += 1;
-                    // release + grant next waiter
-                    let (task, fw_tag, exec_dur, kind) = {
-                        let st = slab[pid as usize].as_ref().expect("live");
-                        let node = st.tasks.get(st.cur);
-                        (
-                            node.task,
-                            node.framework,
-                            st.pending_exec,
-                            ResourceKind::for_task(node.task),
-                        )
-                    };
-                    let granted = {
-                        let res = resource_for!(kind);
-                        res.release(t)
-                    };
-                    if let Some(g) = granted {
-                        let w = slab[g.token as usize].as_mut().expect("queued pipeline");
-                        w.total_wait += g.waited;
-                        if cfg.record_traces {
-                            let h = match kind {
-                                ResourceKind::Training => h_wait_t,
-                                ResourceKind::Compute => h_wait_c,
-                            };
-                            db.append(h, t, g.waited);
-                        }
-                        let total = w.pending_read + w.pending_exec + w.pending_write;
-                        cal.schedule(total, Event::TaskDone(g.token));
-                    }
-                    if cfg.record_traces {
-                        let slot =
-                            &mut h_exec[task.index()][fw_tag.map_or(0, |f| f.index() + 1)];
-                        let h = match *slot {
-                            Some(h) => h,
-                            None => {
-                                // cold miss: ≤ 36 times per run
-                                let mut key =
-                                    SeriesKey::new(series::TASK_EXEC).tag("task", task.name());
-                                if let Some(fw) = fw_tag {
-                                    key = key.tag("framework", fw.name());
-                                }
-                                let h = db.handle(key);
-                                *slot = Some(h);
-                                h
-                            }
-                        };
-                        db.append(h, t, exec_dur);
-                    }
-
-                    // task-specific model-metric effects
-                    let mut truncated = false;
-                    {
-                        let st = slab[pid as usize].as_mut().expect("live");
-                        match task {
-                            TaskType::Train => {
-                                let laws = &params.model_laws;
-                                st.metrics.performance = (laws.perf_mean
-                                    + laws.perf_sd * rng_noise.normal())
-                                .clamp(0.05, 0.999);
-                                st.metrics.size_mb = (laws.size_ln_mean
-                                    + laws.size_ln_sd * rng_noise.normal())
-                                .exp();
-                                st.metrics.inference_ms = (laws.inference_ln_mean
-                                    + laws.inference_ln_sd * rng_noise.normal())
-                                .exp();
-                                st.metrics.clever_score =
-                                    rng_noise.uniform() * laws.clever_max;
-                                st.metrics.confidence = st.metrics.performance
-                                    * (0.9 + 0.1 * rng_noise.uniform());
-                                st.model_bytes = st.metrics.size_mb * 1e6;
-                            }
-                            TaskType::Compress => {
-                                let prune = 0.2 + 0.6 * rng_noise.uniform();
-                                st.metrics = compression.apply(prune, &st.metrics);
-                                st.model_bytes = st.metrics.size_mb * 1e6;
-                            }
-                            TaskType::Harden => {
-                                st.metrics.clever_score =
-                                    (st.metrics.clever_score * 1.5).min(5.0);
-                                st.metrics.performance *= 0.99;
-                            }
-                            TaskType::Evaluate => {
-                                // quality gate: pipelines whose model fails
-                                // are aborted (Fig 3's gates)
-                                if st.metrics.performance < 0.55 {
-                                    truncated = true;
-                                }
-                            }
-                            TaskType::Deploy => {
-                                if cfg.runtime_view.enabled {
-                                    if let Some(slot) = st.retrain_of {
-                                        deployed[slot as usize]
-                                            .redeploy(t, st.metrics.performance);
-                                    } else if deployed.len() < cfg.runtime_view.max_models {
-                                        deployed.push(DeployedModel::new(
-                                            models_deployed,
-                                            st.framework,
-                                            st.metrics.performance,
-                                            t,
-                                            1,
-                                        ));
-                                    }
-                                    models_deployed += 1;
-                                }
-                            }
-                            TaskType::Preprocess => {}
-                        }
-                    }
-
-                    // advance or complete
-                    let done = {
-                        let st = slab[pid as usize].as_mut().expect("live");
-                        st.cur += 1;
-                        truncated || st.cur >= st.tasks.len()
-                    };
-                    if done {
-                        let st = slab[pid as usize].take().expect("live");
-                        free.push(pid);
-                        live -= 1;
-                        completed += 1;
-                        if truncated {
-                            gate_failures += 1;
-                        }
-                        db.append(h_completions, t, t - st.arrived_at);
-                        db.append(h_pipeline_wait, t, st.total_wait);
-                        if let (Some(slot), true) = (st.retrain_of, truncated) {
-                            // failed retraining: allow future triggers
-                            deployed[slot as usize].retraining = false;
-                        }
-                    } else {
-                        start_task!(pid);
-                    }
-                }
-
-                Event::Monitor => {
-                    db.append(h_util_t, t, training.in_use() as f64 / training.capacity() as f64);
-                    db.append(h_util_c, t, compute.in_use() as f64 / compute.capacity() as f64);
-                    db.append(h_q_t, t, training.queued() as f64);
-                    db.append(h_q_c, t, compute.queued() as f64);
-                    if !deployed.is_empty() {
-                        let mean: f64 = deployed.iter().map(|m| m.performance).sum::<f64>()
-                            / deployed.len() as f64;
-                        db.append(h_model_perf, t, mean);
-                    }
-                    let rss = rss_mb();
-                    if rss > peak_rss {
-                        peak_rss = rss;
-                    }
-                    // stop sampling once the system has fully drained —
-                    // otherwise a max_pipelines run with a far horizon
-                    // would tick forever
-                    let drained = arrivals_stopped && live == 0;
-                    if !drained && t + cfg.sample_interval <= cfg.horizon {
-                        cal.schedule(cfg.sample_interval, Event::Monitor);
-                    }
-                }
-
-                Event::Drift => {
-                    let rv = &cfg.runtime_view;
-                    for slot in 0..deployed.len() {
-                        let m = &mut deployed[slot];
-                        m.tick(
-                            t,
-                            rv.decay_per_day,
-                            rv.sudden_drift_prob,
-                            rv.sudden_drift_drop,
-                            &mut rng_drift,
-                        );
-                        if m.retraining {
-                            continue;
-                        }
-                        if let Some(delay) = rv.trigger.decide(t, m.drift) {
-                            m.retraining = true;
-                            cal.schedule(delay, Event::RetrainLaunch(slot as u32));
-                        }
-                    }
-                    let drained = arrivals_stopped && live == 0 && deployed.is_empty();
-                    if !drained && t + rv.detector_interval <= cfg.horizon {
-                        cal.schedule(rv.detector_interval, Event::Drift);
-                    }
-                }
-
-                Event::RetrainLaunch(slot) => {
-                    retrains += 1;
-                    db.append(h_retrains, t, 1.0);
-                    let fw = deployed[slot as usize].framework;
-                    let (asset, preproc_t) = asset_synth.next()?;
-                    // retraining pipeline: train – evaluate – deploy
-                    let st = PipelineState {
-                        tasks: TaskList::from_slice(&[
-                            TaskNode::with_framework(TaskType::Train, fw),
-                            TaskNode::new(TaskType::Evaluate),
-                            TaskNode::new(TaskType::Deploy),
-                        ]),
-                        cur: 0,
-                        framework: fw,
-                        asset,
-                        preproc_t,
-                        train_t: 60.0,
-                        metrics: ModelMetrics::default(),
-                        model_bytes: 1e7,
-                        arrived_at: t,
-                        total_wait: 0.0,
-                        pending_exec: 0.0,
-                        pending_read: 0.0,
-                        pending_write: 0.0,
-                        retrain_of: Some(slot),
-                        priority: 0.0, // retrains jump the queue
-                    };
-                    arrived += 1;
-                    db.append(h_arrivals, t, 1.0);
-                    let pid = alloc_pid!(st);
-                    live += 1;
-                    start_task!(pid);
-                }
-            }
-        }
-
-        let horizon_covered = cal.now().min(cfg.horizon);
-        let final_perf = if deployed.is_empty() {
-            0.0
-        } else {
-            deployed.iter().map(|m| m.performance).sum::<f64>() / deployed.len() as f64
-        };
-        let pool_refills = train_pools.iter().map(|p| p.refills).sum::<u64>() + eval_pool.refills;
-        Ok(ExperimentResult {
-            name: cfg.name,
-            seed: cfg.seed,
-            horizon: horizon_covered,
-            arrived,
-            completed,
-            tasks_executed,
-            gate_failures,
-            retrains_triggered: retrains,
-            models_deployed,
-            events_processed: events,
-            util_training: training.utilization(horizon_covered),
-            util_compute: compute.utilization(horizon_covered),
-            wait_training: training.wait_stats.clone(),
-            wait_compute: compute.wait_stats.clone(),
-            avg_queue_training: training.avg_queue_len(horizon_covered),
-            avg_queue_compute: compute.avg_queue_len(horizon_covered),
-            final_mean_performance: final_perf,
-            wire_read_bytes: wire_read,
-            wire_write_bytes: wire_write,
-            wall_secs: started.elapsed().as_secs_f64(),
-            peak_rss_mb: peak_rss,
-            sampler_backend: backend.name().into(),
-            pool_refills,
-            tsdb: db,
-        })
+        self.cfg.validate()?;
+        Simulation::new(self.cfg, self.params, self.runtime)?.run(started)
     }
-}
-
-/// Pad a fitted mixture to exactly K1 components (the AOT sampler's fixed
-/// shape); extra components get -inf-ish weight. Mixtures that already
-/// have the right shape (the common case: every fit produces K1
-/// components) are shared, not copied.
-fn pad_gmm(g: &Arc<Gmm1>) -> Arc<Gmm1> {
-    if g.k() == K1 {
-        return g.clone();
-    }
-    let mut out = Gmm1 {
-        logw: vec![-60.0; K1],
-        mu: vec![0.0; K1],
-        logsd: vec![0.0; K1],
-    };
-    for i in 0..g.k().min(K1) {
-        out.logw[i] = g.logw[i];
-        out.mu[i] = g.mu[i];
-        out.logsd[i] = g.logsd[i];
-    }
-    Arc::new(out)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::config::RuntimeViewConfig;
+    use crate::coordinator::config::{ArrivalSpec, RuntimeViewConfig};
     use crate::coordinator::fit_params;
-    use crate::coordinator::TriggerPolicy;
+    use crate::coordinator::result::series;
+    use crate::coordinator::strategy::{scheduler_names, StrategySpec};
     use crate::des::DAY;
     use crate::empirical::GroundTruth;
 
@@ -659,6 +91,7 @@ mod tests {
             "completed {} of {}", r.completed, r.arrived);
         assert!(r.tasks_executed > r.completed);
         assert!(r.util_training > 0.0 && r.util_training <= 1.0);
+        assert_eq!(r.arrived, r.completed + r.in_flight);
     }
 
     #[test]
@@ -677,6 +110,7 @@ mod tests {
         assert_eq!(a.completed, b.completed);
         assert_eq!(a.events_processed, b.events_processed);
         assert!((a.util_training - b.util_training).abs() < 1e-12);
+        assert_eq!(a.digest(), b.digest());
     }
 
     #[test]
@@ -710,8 +144,60 @@ mod tests {
         };
         let r = run_with(cfg);
         assert!(r.completed <= r.arrived);
+        assert_eq!(r.arrived, r.completed + r.in_flight);
         // whatever didn't complete is still queued/running: bounded
         assert!(r.arrived - r.completed < 2000);
+    }
+
+    #[test]
+    fn new_schedulers_change_outcomes_under_saturation() {
+        // the richer-context strategies must be selectable by name and
+        // actually reorder work once queues form
+        let run = |sched: StrategySpec| {
+            let mut cfg = ExperimentConfig {
+                name: "sched".into(),
+                seed: 12,
+                horizon: DAY,
+                arrival: ArrivalSpec::Poisson {
+                    mean_interarrival: 25.0,
+                },
+                record_traces: false,
+                ..Default::default()
+            };
+            cfg.infra.training_capacity = 2;
+            cfg.infra.scheduler = sched;
+            run_with(cfg)
+        };
+        let fifo = run(StrategySpec::new("fifo"));
+        assert!(fifo.wait_training.mean() > 0.0, "must saturate");
+        let mut digests = vec![fifo.digest()];
+        for name in ["edf", "weighted_fair"] {
+            let r = run(StrategySpec::new(name));
+            assert!(r.completed > 0, "{name} completed nothing");
+            assert_eq!(r.arrived, r.completed + r.in_flight, "{name}");
+            digests.push(r.digest());
+        }
+        digests.sort();
+        digests.dedup();
+        assert_eq!(digests.len(), 3, "schedulers must differ under saturation");
+    }
+
+    #[test]
+    fn every_registered_scheduler_runs_the_default_workload() {
+        for name in scheduler_names() {
+            let mut cfg = ExperimentConfig {
+                name: format!("reg-{name}"),
+                horizon: DAY / 6.0,
+                arrival: ArrivalSpec::Poisson {
+                    mean_interarrival: 90.0,
+                },
+                record_traces: false,
+                ..Default::default()
+            };
+            cfg.infra.scheduler = StrategySpec::new(&name);
+            let r = run_with(cfg);
+            assert!(r.completed > 0, "{name}");
+        }
     }
 
     #[test]
@@ -727,7 +213,7 @@ mod tests {
                 decay_per_day: 0.05,
                 sudden_drift_prob: 0.05,
                 sudden_drift_drop: 0.1,
-                trigger: TriggerPolicy::DriftThreshold { threshold: 0.04 },
+                trigger: StrategySpec::new("drift_threshold").with("threshold", 0.04),
                 max_models: 500,
             },
             ..Default::default()
@@ -740,7 +226,7 @@ mod tests {
 
     #[test]
     fn never_policy_lets_models_decay() {
-        let mk = |policy| ExperimentConfig {
+        let mk = |trigger: StrategySpec| ExperimentConfig {
             horizon: 10.0 * DAY,
             seed: 5,
             arrival: ArrivalSpec::Poisson {
@@ -752,18 +238,48 @@ mod tests {
                 decay_per_day: 0.03,
                 sudden_drift_prob: 0.02,
                 sudden_drift_drop: 0.1,
-                trigger: policy,
+                trigger,
                 max_models: 300,
             },
             ..Default::default()
         };
-        let never = run_with(mk(TriggerPolicy::Never));
-        let eager = run_with(mk(TriggerPolicy::DriftThreshold { threshold: 0.03 }));
+        let never = run_with(mk(StrategySpec::new("never")));
+        let eager = run_with(mk(StrategySpec::new("drift_threshold").with("threshold", 0.03)));
         assert_eq!(never.retrains_triggered, 0);
         assert!(
             eager.final_mean_performance > never.final_mean_performance + 0.05,
             "retraining must preserve performance: {} vs {}",
             eager.final_mean_performance,
+            never.final_mean_performance
+        );
+    }
+
+    #[test]
+    fn performance_floor_trigger_keeps_quality_above_drift_free_baseline() {
+        let mk = |trigger: StrategySpec| ExperimentConfig {
+            horizon: 10.0 * DAY,
+            seed: 5,
+            arrival: ArrivalSpec::Poisson {
+                mean_interarrival: 900.0,
+            },
+            runtime_view: RuntimeViewConfig {
+                enabled: true,
+                detector_interval: 3600.0,
+                decay_per_day: 0.03,
+                sudden_drift_prob: 0.02,
+                sudden_drift_drop: 0.1,
+                trigger,
+                max_models: 300,
+            },
+            ..Default::default()
+        };
+        let floor = run_with(mk(StrategySpec::new("performance_floor").with("floor", 0.75)));
+        let never = run_with(mk(StrategySpec::new("never")));
+        assert!(floor.retrains_triggered > 0);
+        assert!(
+            floor.final_mean_performance > never.final_mean_performance,
+            "{} vs {}",
+            floor.final_mean_performance,
             never.final_mean_performance
         );
     }

@@ -1,12 +1,14 @@
 //! The experimentation coordinator: fitted simulation parameters, the
-//! experiment configuration, the discrete-event experiment runner, and the
-//! operational strategies (queue disciplines + retraining trigger
-//! policies) the paper's framework exists to evaluate.
+//! experiment configuration, the decomposed discrete-event simulation
+//! core, and the pluggable operational strategies (schedulers +
+//! retraining triggers) the paper's framework exists to evaluate.
 
 pub mod config;
 pub mod experiment;
 pub mod params;
 pub mod result;
+mod simulation;
+pub mod strategy;
 pub mod sweep;
 pub mod triggers;
 
@@ -14,5 +16,9 @@ pub use config::{ArrivalSpec, ExperimentConfig, RuntimeViewConfig};
 pub use experiment::Experiment;
 pub use params::{fit_params, fit_params_with_report, FitReport, SimParams};
 pub use result::ExperimentResult;
+pub use strategy::{
+    build_scheduler, build_trigger, register_scheduler, register_trigger, scheduler_names,
+    trigger_names, StrategySpec,
+};
 pub use sweep::{GroupStats, MetricStats, Sweep, SweepResult};
-pub use triggers::TriggerPolicy;
+pub use triggers::{RetrainTrigger, TriggerCtx};

@@ -38,6 +38,12 @@ pub struct ExperimentResult {
     // counters
     pub arrived: u64,
     pub completed: u64,
+    /// Pipelines still queued/executing when the run ended — the
+    /// conservation invariant `arrived == completed + in_flight` holds
+    /// for every scheduler. Derivable, so deliberately not part of
+    /// [`ExperimentResult::digest`] (digests stay comparable across
+    /// versions).
+    pub in_flight: u64,
     pub tasks_executed: u64,
     pub gate_failures: u64,
     pub retrains_triggered: u64,
@@ -140,8 +146,8 @@ impl ExperimentResult {
         );
         let _ = writeln!(
             s,
-            "  pipelines        arrived {}  completed {}  gate-failed {}",
-            self.arrived, self.completed, self.gate_failures
+            "  pipelines        arrived {}  completed {}  gate-failed {}  in-flight {}",
+            self.arrived, self.completed, self.gate_failures, self.in_flight
         );
         let _ = writeln!(
             s,
@@ -224,6 +230,7 @@ mod tests {
             tsdb: TsStore::new(),
             arrived: 100,
             completed: 90,
+            in_flight: 10,
             tasks_executed: 300,
             gate_failures: 2,
             retrains_triggered: 0,
@@ -267,6 +274,9 @@ mod tests {
         b.wall_secs = 99.0;
         b.peak_rss_mb = 7.0;
         assert_eq!(a.digest(), b.digest());
+        // in_flight is derivable (arrived - completed): kept out of the
+        // digest so pre-refactor digest strings remain comparable
+        assert!(!a.digest().contains("in_flight"));
         let mut c = empty_result();
         c.completed += 1;
         assert_ne!(a.digest(), c.digest());

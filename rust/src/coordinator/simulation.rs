@@ -1,0 +1,719 @@
+//! The decomposed simulation core: named state + one method per
+//! calendar event (paper section V-B).
+//!
+//! This replaces the former 600-line `Experiment::run()` monolith (and
+//! its `start_task!` / `sample_exec!` macros) with a [`Simulation`]
+//! struct whose event handlers are ordinary methods — the well-defined
+//! points where operational strategies hook in:
+//!
+//! * [`Simulation::start_task`] builds a [`JobCtx`] and asks the
+//!   resource's pluggable `Scheduler` for admission/ordering;
+//! * [`Simulation::on_drift`] builds a `TriggerCtx` per deployed model
+//!   and asks the pluggable `RetrainTrigger` whether to launch
+//!   retraining.
+//!
+//! Determinism is load-bearing: the RNG substream layout, the order of
+//! draws inside every handler, and the series-interning order are
+//! exactly those of the pre-decomposition runner, so existing
+//! `(config, seed)` pairs keep their byte-identical
+//! `ExperimentResult::digest()` values.
+
+use std::sync::Arc;
+
+use crate::arrivals::ArrivalModel;
+use crate::des::sched::JobCtx;
+use crate::des::{AcquireResult, Calendar, Resource, SimTime};
+use crate::error::Result;
+use crate::model::pipeline::TaskNode;
+use crate::model::{
+    CompressionModel, DataAsset, Framework, ModelMetrics, ResourceKind, TaskExecutor, TaskType,
+};
+use crate::runtime::pool::{Backend, SamplePool1};
+use crate::runtime::{Runtime, K1};
+use crate::stats::gmm::Gmm1;
+use crate::stats::rng::Pcg64;
+use crate::synth::{AssetSynthesizer, PipelineSynthesizer, TaskList};
+use crate::tsdb::{SeriesHandle, SeriesKey, TsStore};
+
+use super::config::{ArrivalSpec, ExperimentConfig};
+use super::params::SimParams;
+use super::result::{rss_mb, series, ExperimentResult};
+use super::strategy::{build_scheduler, build_trigger};
+use super::triggers::{DeployedModel, RetrainTrigger};
+
+/// Calendar events.
+#[derive(Clone, Copy, Debug)]
+enum Event {
+    /// Next pipeline arrival (self-rescheduling).
+    Arrival,
+    /// Task of pipeline `pid` finished (exec + write done).
+    TaskDone(u32),
+    /// Periodic utilization/queue sampling.
+    Monitor,
+    /// Run-time view detector sweep.
+    Drift,
+    /// Launch a (possibly deferred) retraining for deployed-model slot.
+    RetrainLaunch(u32),
+}
+
+/// Per-pipeline execution state (slab-allocated, freed on completion so
+/// memory scales with *concurrent*, not total, pipelines).
+struct PipelineState {
+    tasks: TaskList,
+    cur: usize,
+    framework: Framework,
+    asset: DataAsset,
+    preproc_t: f64,
+    /// Last sampled training duration (drives compress/harden cost).
+    train_t: f64,
+    metrics: ModelMetrics,
+    model_bytes: f64,
+    arrived_at: SimTime,
+    total_wait: SimTime,
+    /// Sampled exec duration for the task awaiting a resource grant.
+    pending_exec: f64,
+    pending_read: f64,
+    pending_write: f64,
+    /// Deployed-model slot to refresh when this (retraining) run deploys.
+    retrain_of: Option<u32>,
+    /// User priority (lower = more important; Fig 4's "model
+    /// prioritization"). Retraining pipelines get priority 0.
+    priority: f64,
+}
+
+const N_FW: usize = Framework::ALL.len() + 1; // +1 = untagged
+const N_TASKS: usize = TaskType::ALL.len();
+
+/// Interned hot-path series handles (created once, before the loop).
+struct SeriesHandles {
+    arrivals: SeriesHandle,
+    completions: SeriesHandle,
+    pipeline_wait: SeriesHandle,
+    util_t: SeriesHandle,
+    util_c: SeriesHandle,
+    q_t: SeriesHandle,
+    q_c: SeriesHandle,
+    wait_t: SeriesHandle,
+    wait_c: SeriesHandle,
+    traffic_r: SeriesHandle,
+    traffic_w: SeriesHandle,
+    model_perf: SeriesHandle,
+    retrains: SeriesHandle,
+    /// Task exec series per (task, framework): a flat array indexed by
+    /// (task, framework+1) — the per-event path never hashes anything,
+    /// and the tag strings intern into the store's symbol table once.
+    exec: [[Option<SeriesHandle>; N_FW]; N_TASKS],
+}
+
+impl SeriesHandles {
+    fn intern(db: &mut TsStore) -> Self {
+        SeriesHandles {
+            arrivals: db.handle(SeriesKey::new(series::ARRIVALS)),
+            completions: db.handle(SeriesKey::new(series::COMPLETIONS)),
+            pipeline_wait: db.handle(SeriesKey::new(series::PIPELINE_WAIT)),
+            util_t: db.handle(SeriesKey::new(series::UTILIZATION).tag("resource", "training")),
+            util_c: db.handle(SeriesKey::new(series::UTILIZATION).tag("resource", "compute")),
+            q_t: db.handle(SeriesKey::new(series::QUEUE_LEN).tag("resource", "training")),
+            q_c: db.handle(SeriesKey::new(series::QUEUE_LEN).tag("resource", "compute")),
+            wait_t: db.handle(SeriesKey::new(series::TASK_WAIT).tag("resource", "training")),
+            wait_c: db.handle(SeriesKey::new(series::TASK_WAIT).tag("resource", "compute")),
+            traffic_r: db.handle(SeriesKey::new(series::TRAFFIC).tag("dir", "read")),
+            traffic_w: db.handle(SeriesKey::new(series::TRAFFIC).tag("dir", "write")),
+            model_perf: db.handle(SeriesKey::new(series::MODEL_PERF)),
+            retrains: db.handle(SeriesKey::new(series::RETRAINS)),
+            exec: [[None; N_FW]; N_TASKS],
+        }
+    }
+}
+
+/// Outcome counters, named (formerly a pile of loop-local `let mut`s).
+#[derive(Default)]
+struct Counters {
+    arrived: u64,
+    /// Pipelines in flight (slab occupancy).
+    live: u64,
+    arrivals_stopped: bool,
+    completed: u64,
+    tasks_executed: u64,
+    gate_failures: u64,
+    retrains: u64,
+    models_deployed: u64,
+    events: u64,
+    wire_read: f64,
+    wire_write: f64,
+    peak_rss: f64,
+}
+
+/// One experiment run in progress: the calendar, the resources with
+/// their pluggable schedulers, the retraining trigger, per-pipeline
+/// state, samplers, RNG streams, and outcome counters.
+pub(super) struct Simulation {
+    cfg: ExperimentConfig,
+    params: Arc<SimParams>,
+    backend: Backend,
+    // world
+    cal: Calendar<Event>,
+    training: Resource<u32>,
+    compute: Resource<u32>,
+    trigger: Box<dyn RetrainTrigger>,
+    slab: Vec<Option<PipelineState>>,
+    free: Vec<u32>,
+    deployed: Vec<DeployedModel>,
+    db: TsStore,
+    h: SeriesHandles,
+    // samplers
+    asset_synth: AssetSynthesizer,
+    pipe_synth: PipelineSynthesizer,
+    train_pools: Vec<SamplePool1>,
+    eval_pool: SamplePool1,
+    arrival: ArrivalModel,
+    compression: CompressionModel,
+    // RNG streams (asset/pipe streams live inside their synthesizers)
+    rng_arrival: Pcg64,
+    rng_noise: Pcg64,
+    rng_drift: Pcg64,
+    c: Counters,
+}
+
+impl Simulation {
+    /// Build the world: RNG substreams, samplers, resources (with their
+    /// schedulers built from `cfg.infra.scheduler`), the retraining
+    /// trigger, and the primed calendar. Assumes `cfg` already validated.
+    pub(super) fn new(
+        cfg: ExperimentConfig,
+        params: Arc<SimParams>,
+        runtime: Option<Arc<Runtime>>,
+    ) -> Result<Self> {
+        let backend = match &runtime {
+            Some(rt) => Backend::Runtime(rt.clone()),
+            None => Backend::Cpu,
+        };
+
+        let mut root = Pcg64::new(cfg.seed);
+        let mut rng_arrival = root.substream(1);
+        let rng_pipe = root.substream(2);
+        let mut rng_asset = root.substream(3);
+        let rng_noise = root.substream(4);
+        let rng_drift = root.substream(5);
+
+        // samplers (all mixture handles are Arc clones — no deep copies
+        // of fitted parameters per experiment)
+        let asset_synth = AssetSynthesizer::new(
+            backend.clone(),
+            params.asset_gmm.clone(),
+            params.preproc_curve,
+            params.preproc_noise,
+            &mut rng_asset,
+        );
+        let pipe_synth = PipelineSynthesizer::new(cfg.synth, rng_pipe);
+        let train_pools: Vec<SamplePool1> = Framework::ALL
+            .iter()
+            .map(|fw| {
+                SamplePool1::new(
+                    backend.clone(),
+                    pad_gmm(params.train_gmm_shared(*fw)),
+                    root.substream(0x100 + fw.index() as u64),
+                )
+            })
+            .collect();
+        let eval_pool = SamplePool1::new(
+            backend.clone(),
+            pad_gmm(&params.eval_log_gmm),
+            root.substream(0x200),
+        );
+        let mut arrival = match cfg.arrival {
+            ArrivalSpec::Random => params.arrival_random.clone(),
+            ArrivalSpec::Profile => params.arrival_profile.clone(),
+            ArrivalSpec::Replay => params.arrival_replay.clone(),
+            ArrivalSpec::Poisson { mean_interarrival } => {
+                ArrivalModel::Poisson { mean_interarrival }
+            }
+        };
+        let compression = CompressionModel::from_table1();
+
+        // world: each resource owns its scheduler instance (stateful
+        // strategies never share state across clusters)
+        let training = Resource::with_scheduler(
+            "training",
+            cfg.infra.training_capacity,
+            build_scheduler(&cfg.infra.scheduler)?,
+        );
+        let compute = Resource::with_scheduler(
+            "compute",
+            cfg.infra.compute_capacity,
+            build_scheduler(&cfg.infra.scheduler)?,
+        );
+        let trigger = build_trigger(&cfg.runtime_view.trigger)?;
+        let mut db = TsStore::new();
+        let h = SeriesHandles::intern(&mut db);
+
+        // prime the calendar
+        let mut cal: Calendar<Event> = Calendar::new();
+        let first_gap = arrival.next_interarrival(0.0, cfg.interarrival_factor, &mut rng_arrival);
+        cal.schedule(first_gap, Event::Arrival);
+        cal.schedule(cfg.sample_interval, Event::Monitor);
+        if cfg.runtime_view.enabled {
+            cal.schedule(cfg.runtime_view.detector_interval, Event::Drift);
+        }
+
+        Ok(Simulation {
+            cfg,
+            params,
+            backend,
+            cal,
+            training,
+            compute,
+            trigger,
+            slab: Vec::new(),
+            free: Vec::new(),
+            deployed: Vec::new(),
+            db,
+            h,
+            asset_synth,
+            pipe_synth,
+            train_pools,
+            eval_pool,
+            arrival,
+            compression,
+            rng_arrival,
+            rng_noise,
+            rng_drift,
+            c: Counters {
+                peak_rss: rss_mb(),
+                ..Counters::default()
+            },
+        })
+    }
+
+    /// Drain the calendar up to the horizon; single-threaded,
+    /// deterministic per seed.
+    pub(super) fn run(mut self, started: std::time::Instant) -> Result<ExperimentResult> {
+        while let Some((t, ev)) = self.cal.pop() {
+            if t > self.cfg.horizon {
+                break;
+            }
+            self.c.events += 1;
+            match ev {
+                Event::Arrival => self.on_arrival(t)?,
+                Event::TaskDone(pid) => self.on_task_done(t, pid)?,
+                Event::Monitor => self.on_monitor(t),
+                Event::Drift => self.on_drift(t),
+                Event::RetrainLaunch(slot) => self.on_retrain_launch(t, slot)?,
+            }
+        }
+        Ok(self.finish(started))
+    }
+
+    /// Slab-allocate a pipeline, reusing freed slots.
+    fn alloc_pid(&mut self, st: PipelineState) -> u32 {
+        if let Some(pid) = self.free.pop() {
+            self.slab[pid as usize] = Some(st);
+            pid
+        } else {
+            self.slab.push(Some(st));
+            (self.slab.len() - 1) as u32
+        }
+    }
+
+    /// A user pipeline arrives: synthesize it, schedule the next
+    /// arrival, and start its first task.
+    fn on_arrival(&mut self, t: SimTime) -> Result<()> {
+        self.c.arrived += 1;
+        self.db.append(self.h.arrivals, t, 1.0);
+        // next arrival
+        let stop = self.cfg.max_pipelines.map_or(false, |m| self.c.arrived >= m);
+        if !stop {
+            let gap = self.arrival.next_interarrival(
+                t,
+                self.cfg.interarrival_factor,
+                &mut self.rng_arrival,
+            );
+            if t + gap <= self.cfg.horizon {
+                self.cal.schedule(gap, Event::Arrival);
+            } else {
+                self.c.arrivals_stopped = true;
+            }
+        } else {
+            self.c.arrivals_stopped = true;
+        }
+        // new pipeline
+        let tasks = self.pipe_synth.generate_nodes();
+        let fw = tasks
+            .as_slice()
+            .iter()
+            .find_map(|n| n.framework)
+            .unwrap_or(Framework::SparkML);
+        let (asset, preproc_t) = self.asset_synth.next()?;
+        let st = PipelineState {
+            tasks,
+            cur: 0,
+            framework: fw,
+            asset,
+            preproc_t,
+            train_t: 60.0,
+            metrics: ModelMetrics::default(),
+            model_bytes: 1e7,
+            arrived_at: t,
+            total_wait: 0.0,
+            pending_exec: 0.0,
+            pending_read: 0.0,
+            pending_write: 0.0,
+            retrain_of: None,
+            // user-assigned priority class 1..=10
+            priority: 1.0 + self.rng_noise.below(10) as f64,
+        };
+        let pid = self.alloc_pid(st);
+        self.c.live += 1;
+        self.start_task(pid)
+    }
+
+    /// Sample the exec duration for the current task of pipeline `pid`
+    /// (formerly the `sample_exec!` macro). Draw order is part of the
+    /// determinism contract.
+    fn sample_exec(&mut self, pid: u32) -> Result<f64> {
+        let (task, fw_tag, fw_default, preproc_t, train_t) = {
+            let st = self.slab[pid as usize].as_ref().expect("live pipeline");
+            let node = st.tasks.get(st.cur);
+            (node.task, node.framework, st.framework, st.preproc_t, st.train_t)
+        };
+        Ok(match task {
+            TaskType::Preprocess => preproc_t,
+            TaskType::Train => {
+                let fw = fw_tag.unwrap_or(fw_default);
+                self.train_pools[fw.index()].next()?.exp().max(0.1)
+            }
+            TaskType::Evaluate => self.eval_pool.next()?.exp().max(0.05),
+            // compression costs roughly a training run (section V-A2d)
+            TaskType::Compress => (train_t * (1.0 + 0.05 * self.rng_noise.normal())).max(0.1),
+            TaskType::Harden => (train_t * (1.5 + 0.2 * self.rng_noise.normal())).max(0.1),
+            TaskType::Deploy => (5.0 * (0.3 * self.rng_noise.normal()).exp()).max(0.5),
+        })
+    }
+
+    /// Prepare pending durations for the current task of `pid`, build
+    /// its [`JobCtx`], and request the owning resource — the scheduler
+    /// decides admission and queue position (formerly `start_task!`).
+    fn start_task(&mut self, pid: u32) -> Result<()> {
+        let t_now = self.cal.now();
+        let exec = self.sample_exec(pid)?;
+        let store = self.cfg.infra.store;
+        let (task, read_wire, write_wire, total, job) = {
+            let st = self.slab[pid as usize].as_mut().expect("live pipeline");
+            let task = st.tasks.get(st.cur).task;
+            if task == TaskType::Train {
+                st.train_t = exec;
+            }
+            let (read_b, write_b) = TaskExecutor::payload_bytes(task, &st.asset, st.model_bytes);
+            st.pending_exec = exec;
+            st.pending_read = store.read_time(read_b);
+            st.pending_write = store.write_time(write_b);
+            let total = st.pending_read + st.pending_exec + st.pending_write;
+            let job = JobCtx::new(total, st.priority, st.arrived_at);
+            (task, store.wire_bytes(read_b), store.wire_bytes(write_b), total, job)
+        };
+        self.c.wire_read += read_wire;
+        self.c.wire_write += write_wire;
+        if self.cfg.record_traces {
+            self.db.append(self.h.traffic_r, t_now, read_wire);
+            self.db.append(self.h.traffic_w, t_now, write_wire);
+        }
+        let res = match ResourceKind::for_task(task) {
+            ResourceKind::Training => &mut self.training,
+            ResourceKind::Compute => &mut self.compute,
+        };
+        if let AcquireResult::Acquired = res.request(t_now, pid, job) {
+            self.cal.schedule(total, Event::TaskDone(pid));
+        }
+        Ok(())
+    }
+
+    /// A task finished: release the slot (granting the scheduler's next
+    /// waiter), record traces, apply model-metric effects, then advance
+    /// the pipeline or complete it.
+    fn on_task_done(&mut self, t: SimTime, pid: u32) -> Result<()> {
+        self.c.tasks_executed += 1;
+        // release + grant next waiter
+        let (task, fw_tag, exec_dur, kind) = {
+            let st = self.slab[pid as usize].as_ref().expect("live");
+            let node = st.tasks.get(st.cur);
+            (node.task, node.framework, st.pending_exec, ResourceKind::for_task(node.task))
+        };
+        let granted = match kind {
+            ResourceKind::Training => self.training.release(t),
+            ResourceKind::Compute => self.compute.release(t),
+        };
+        if let Some(g) = granted {
+            let w = self.slab[g.token as usize].as_mut().expect("queued pipeline");
+            w.total_wait += g.waited;
+            let total = w.pending_read + w.pending_exec + w.pending_write;
+            if self.cfg.record_traces {
+                let h = match kind {
+                    ResourceKind::Training => self.h.wait_t,
+                    ResourceKind::Compute => self.h.wait_c,
+                };
+                self.db.append(h, t, g.waited);
+            }
+            self.cal.schedule(total, Event::TaskDone(g.token));
+        }
+        if self.cfg.record_traces {
+            let slot = &mut self.h.exec[task.index()][fw_tag.map_or(0, |f| f.index() + 1)];
+            let h = match *slot {
+                Some(h) => h,
+                None => {
+                    // cold miss: ≤ 36 times per run
+                    let mut key = SeriesKey::new(series::TASK_EXEC).tag("task", task.name());
+                    if let Some(fw) = fw_tag {
+                        key = key.tag("framework", fw.name());
+                    }
+                    let h = self.db.handle(key);
+                    *slot = Some(h);
+                    h
+                }
+            };
+            self.db.append(h, t, exec_dur);
+        }
+
+        let truncated = self.apply_task_effects(t, pid, task);
+
+        // advance or complete
+        let done = {
+            let st = self.slab[pid as usize].as_mut().expect("live");
+            st.cur += 1;
+            truncated || st.cur >= st.tasks.len()
+        };
+        if done {
+            self.finish_pipeline(t, pid, truncated);
+            Ok(())
+        } else {
+            self.start_task(pid)
+        }
+    }
+
+    /// Task-specific model-metric effects; returns whether the quality
+    /// gate truncated the pipeline.
+    fn apply_task_effects(&mut self, t: SimTime, pid: u32, task: TaskType) -> bool {
+        let mut truncated = false;
+        let st = self.slab[pid as usize].as_mut().expect("live");
+        match task {
+            TaskType::Train => {
+                let laws = &self.params.model_laws;
+                st.metrics.performance =
+                    (laws.perf_mean + laws.perf_sd * self.rng_noise.normal()).clamp(0.05, 0.999);
+                st.metrics.size_mb =
+                    (laws.size_ln_mean + laws.size_ln_sd * self.rng_noise.normal()).exp();
+                st.metrics.inference_ms = (laws.inference_ln_mean
+                    + laws.inference_ln_sd * self.rng_noise.normal())
+                .exp();
+                st.metrics.clever_score = self.rng_noise.uniform() * laws.clever_max;
+                st.metrics.confidence =
+                    st.metrics.performance * (0.9 + 0.1 * self.rng_noise.uniform());
+                st.model_bytes = st.metrics.size_mb * 1e6;
+            }
+            TaskType::Compress => {
+                let prune = 0.2 + 0.6 * self.rng_noise.uniform();
+                st.metrics = self.compression.apply(prune, &st.metrics);
+                st.model_bytes = st.metrics.size_mb * 1e6;
+            }
+            TaskType::Harden => {
+                st.metrics.clever_score = (st.metrics.clever_score * 1.5).min(5.0);
+                st.metrics.performance *= 0.99;
+            }
+            TaskType::Evaluate => {
+                // quality gate: pipelines whose model fails are aborted
+                // (Fig 3's gates)
+                if st.metrics.performance < 0.55 {
+                    truncated = true;
+                }
+            }
+            TaskType::Deploy => {
+                if self.cfg.runtime_view.enabled {
+                    if let Some(slot) = st.retrain_of {
+                        self.deployed[slot as usize].redeploy(t, st.metrics.performance);
+                    } else if self.deployed.len() < self.cfg.runtime_view.max_models {
+                        self.deployed.push(DeployedModel::new(
+                            self.c.models_deployed,
+                            st.framework,
+                            st.metrics.performance,
+                            t,
+                            1,
+                        ));
+                    }
+                    self.c.models_deployed += 1;
+                }
+            }
+            TaskType::Preprocess => {}
+        }
+        truncated
+    }
+
+    /// Free the pipeline's slab slot and record completion outcomes.
+    fn finish_pipeline(&mut self, t: SimTime, pid: u32, truncated: bool) {
+        let st = self.slab[pid as usize].take().expect("live");
+        self.free.push(pid);
+        self.c.live -= 1;
+        self.c.completed += 1;
+        if truncated {
+            self.c.gate_failures += 1;
+        }
+        self.db.append(self.h.completions, t, t - st.arrived_at);
+        self.db.append(self.h.pipeline_wait, t, st.total_wait);
+        if let (Some(slot), true) = (st.retrain_of, truncated) {
+            // failed retraining: allow future triggers
+            self.deployed[slot as usize].retraining = false;
+        }
+    }
+
+    /// Periodic utilization/queue sampling.
+    fn on_monitor(&mut self, t: SimTime) {
+        self.db.append(
+            self.h.util_t,
+            t,
+            self.training.in_use() as f64 / self.training.capacity() as f64,
+        );
+        self.db.append(
+            self.h.util_c,
+            t,
+            self.compute.in_use() as f64 / self.compute.capacity() as f64,
+        );
+        self.db.append(self.h.q_t, t, self.training.queued() as f64);
+        self.db.append(self.h.q_c, t, self.compute.queued() as f64);
+        if !self.deployed.is_empty() {
+            let mean: f64 = self.deployed.iter().map(|m| m.performance).sum::<f64>()
+                / self.deployed.len() as f64;
+            self.db.append(self.h.model_perf, t, mean);
+        }
+        let rss = rss_mb();
+        if rss > self.c.peak_rss {
+            self.c.peak_rss = rss;
+        }
+        // stop sampling once the system has fully drained — otherwise a
+        // max_pipelines run with a far horizon would tick forever
+        let drained = self.c.arrivals_stopped && self.c.live == 0;
+        if !drained && t + self.cfg.sample_interval <= self.cfg.horizon {
+            self.cal.schedule(self.cfg.sample_interval, Event::Monitor);
+        }
+    }
+
+    /// Run-time view detector sweep: advance each deployed model's drift
+    /// process, then ask the retraining trigger strategy to decide.
+    fn on_drift(&mut self, t: SimTime) {
+        let rv = &self.cfg.runtime_view;
+        for slot in 0..self.deployed.len() {
+            let m = &mut self.deployed[slot];
+            m.tick(
+                t,
+                rv.decay_per_day,
+                rv.sudden_drift_prob,
+                rv.sudden_drift_drop,
+                &mut self.rng_drift,
+            );
+            if m.retraining {
+                continue;
+            }
+            if let Some(delay) = self.trigger.decide(&m.trigger_ctx(t)) {
+                m.retraining = true;
+                self.cal.schedule(delay, Event::RetrainLaunch(slot as u32));
+            }
+        }
+        let drained = self.c.arrivals_stopped && self.c.live == 0 && self.deployed.is_empty();
+        if !drained && t + rv.detector_interval <= self.cfg.horizon {
+            self.cal.schedule(rv.detector_interval, Event::Drift);
+        }
+    }
+
+    /// A triggered retraining launches: inject a train–evaluate–deploy
+    /// pipeline at platform priority 0.
+    fn on_retrain_launch(&mut self, t: SimTime, slot: u32) -> Result<()> {
+        self.c.retrains += 1;
+        self.db.append(self.h.retrains, t, 1.0);
+        let fw = self.deployed[slot as usize].framework;
+        let (asset, preproc_t) = self.asset_synth.next()?;
+        // retraining pipeline: train – evaluate – deploy
+        let st = PipelineState {
+            tasks: TaskList::from_slice(&[
+                TaskNode::with_framework(TaskType::Train, fw),
+                TaskNode::new(TaskType::Evaluate),
+                TaskNode::new(TaskType::Deploy),
+            ]),
+            cur: 0,
+            framework: fw,
+            asset,
+            preproc_t,
+            train_t: 60.0,
+            metrics: ModelMetrics::default(),
+            model_bytes: 1e7,
+            arrived_at: t,
+            total_wait: 0.0,
+            pending_exec: 0.0,
+            pending_read: 0.0,
+            pending_write: 0.0,
+            retrain_of: Some(slot),
+            priority: 0.0, // retrains jump the queue
+        };
+        self.c.arrived += 1;
+        self.db.append(self.h.arrivals, t, 1.0);
+        let pid = self.alloc_pid(st);
+        self.c.live += 1;
+        self.start_task(pid)
+    }
+
+    /// Assemble the [`ExperimentResult`] from the final world state.
+    fn finish(self, started: std::time::Instant) -> ExperimentResult {
+        let horizon_covered = self.cal.now().min(self.cfg.horizon);
+        let final_perf = if self.deployed.is_empty() {
+            0.0
+        } else {
+            self.deployed.iter().map(|m| m.performance).sum::<f64>() / self.deployed.len() as f64
+        };
+        let pool_refills = self.train_pools.iter().map(|p| p.refills).sum::<u64>()
+            + self.eval_pool.refills;
+        ExperimentResult {
+            name: self.cfg.name,
+            seed: self.cfg.seed,
+            horizon: horizon_covered,
+            arrived: self.c.arrived,
+            completed: self.c.completed,
+            in_flight: self.c.live,
+            tasks_executed: self.c.tasks_executed,
+            gate_failures: self.c.gate_failures,
+            retrains_triggered: self.c.retrains,
+            models_deployed: self.c.models_deployed,
+            events_processed: self.c.events,
+            util_training: self.training.utilization(horizon_covered),
+            util_compute: self.compute.utilization(horizon_covered),
+            wait_training: self.training.wait_stats.clone(),
+            wait_compute: self.compute.wait_stats.clone(),
+            avg_queue_training: self.training.avg_queue_len(horizon_covered),
+            avg_queue_compute: self.compute.avg_queue_len(horizon_covered),
+            final_mean_performance: final_perf,
+            wire_read_bytes: self.c.wire_read,
+            wire_write_bytes: self.c.wire_write,
+            wall_secs: started.elapsed().as_secs_f64(),
+            peak_rss_mb: self.c.peak_rss,
+            sampler_backend: self.backend.name().into(),
+            pool_refills,
+            tsdb: self.db,
+        }
+    }
+}
+
+/// Pad a fitted mixture to exactly K1 components (the AOT sampler's fixed
+/// shape); extra components get -inf-ish weight. Mixtures that already
+/// have the right shape (the common case: every fit produces K1
+/// components) are shared, not copied.
+fn pad_gmm(g: &Arc<Gmm1>) -> Arc<Gmm1> {
+    if g.k() == K1 {
+        return g.clone();
+    }
+    let mut out = Gmm1 {
+        logw: vec![-60.0; K1],
+        mu: vec![0.0; K1],
+        logsd: vec![0.0; K1],
+    };
+    for i in 0..g.k().min(K1) {
+        out.logw[i] = g.logw[i];
+        out.mu[i] = g.mu[i];
+        out.logsd[i] = g.logsd[i];
+    }
+    Arc::new(out)
+}

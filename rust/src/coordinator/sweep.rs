@@ -1,8 +1,12 @@
 //! Parallel experiment sweep / replication engine.
 //!
 //! PipeSim's value is running *many* stochastic experiment variants
-//! (scheduling disciplines, arrival intensities, cluster allocations,
-//! replication seeds) against one fitted model set. Each cell of a sweep
+//! (scheduling and retraining strategies, arrival intensities, cluster
+//! allocations, replication seeds) against one fitted model set.
+//! Strategies are data (`StrategySpec`), so they are a sweep axis like
+//! any other: vary `cfg.infra.scheduler` / `cfg.runtime_view.trigger`
+//! across cells (the CLI's `sweep --schedulers`/`--triggers` does
+//! exactly that). Each cell of a sweep
 //! is an independent, deterministically seeded `Experiment`, which makes
 //! the workload embarrassingly parallel: this engine fans the cells over
 //! a `std::thread::scope` worker pool and collects results in the exact
@@ -270,10 +274,11 @@ impl SweepResult {
 }
 
 /// The metrics aggregated across replications.
-fn metric_values(r: &ExperimentResult) -> [(&'static str, f64); 11] {
+fn metric_values(r: &ExperimentResult) -> [(&'static str, f64); 12] {
     [
         ("arrived", r.arrived as f64),
         ("completed", r.completed as f64),
+        ("in_flight", r.in_flight as f64),
         ("tasks_executed", r.tasks_executed as f64),
         ("events_processed", r.events_processed as f64),
         ("gate_failures", r.gate_failures as f64),
@@ -303,7 +308,7 @@ fn aggregate_groups(results: &[ExperimentResult]) -> Vec<GroupStats> {
             let cells = cells_by_name[name.as_str()].clone();
             let n_metrics = metric_values(&results[cells[0]]).len();
             let mut summaries = vec![Summary::new(); n_metrics];
-            let mut names = [""; 11];
+            let mut names = vec![""; n_metrics];
             for &i in &cells {
                 for (m, (mname, v)) in metric_values(&results[i]).into_iter().enumerate() {
                     names[m] = mname;

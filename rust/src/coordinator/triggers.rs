@@ -1,57 +1,147 @@
 //! Run-time view: deployed models, drift processes, detectors, and the
-//! retraining trigger policies (paper sections III-A, IV-A2, Fig 7).
+//! retraining trigger strategies (paper sections III-A, IV-A2, Fig 7).
 //!
 //! A deployed model's performance p(M) degrades over time — gradual decay
 //! plus sudden concept-drift events (Fig 2). A detector evaluates each
 //! model periodically; when the configured trigger rule fires, a
 //! retraining pipeline is scheduled. The *policy* deciding when to fire
-//! is the operational strategy under study (Fig 4): retrain eagerly, on a
-//! drift threshold, or deferred into predicted low-load hours.
+//! is the operational strategy under study (Fig 4) — it is a pluggable
+//! [`RetrainTrigger`] trait, registered by name in
+//! [`super::strategy`] and selectable from JSON config, the sweep grid,
+//! and the CLI without recompiling.
 
 use crate::des::SimTime;
 use crate::empirical::db::hour_of_week;
 use crate::empirical::GroundTruth;
 use crate::stats::rng::Pcg64;
 
-/// When does a drifting model get retrained?
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum TriggerPolicy {
-    /// Retrain at every detector tick (the wasteful baseline the paper's
-    /// section III-B warns about).
-    Eager,
-    /// Retrain when the drift metric exceeds a threshold (Fig 7's rule).
-    DriftThreshold { threshold: f64 },
-    /// Drift threshold + defer the launch into the next predicted
-    /// low-load hour (uses the arrival-profile intensity forecast).
-    OffPeak {
-        threshold: f64,
-        /// Launch only in hours with forecast intensity below this.
-        max_intensity: f64,
-    },
-    /// Never retrain (ablation lower bound).
-    Never,
+/// Everything a trigger decision may inspect about one deployed model at
+/// a detector tick.
+#[derive(Clone, Copy, Debug)]
+pub struct TriggerCtx {
+    /// Current simulation time.
+    pub now: SimTime,
+    /// Accumulated drift metric (detector output).
+    pub drift: f64,
+    /// Current composite performance p(M).
+    pub performance: f64,
+    /// Performance at (re)deployment.
+    pub initial_performance: f64,
+    /// When this version was deployed.
+    pub deployed_at: SimTime,
+    /// Version in the retraining lineage.
+    pub version: u32,
 }
 
-impl TriggerPolicy {
-    /// Decide at detector time `t`: `None` = don't retrain, `Some(delay)`
+/// When does a drifting model get retrained?
+///
+/// Implementations may be stateful (`&mut self`); each simulation run
+/// owns its trigger exclusively. Decisions must be deterministic — a pure
+/// function of internal state and the [`TriggerCtx`].
+pub trait RetrainTrigger: Send {
+    /// Registry/display name of the strategy.
+    fn name(&self) -> &'static str;
+
+    /// Decide at a detector tick: `None` = don't retrain, `Some(delay)`
     /// = schedule the retraining pipeline after `delay` seconds.
-    pub fn decide(&self, t: SimTime, drift: f64) -> Option<SimTime> {
-        match *self {
-            TriggerPolicy::Eager => Some(0.0),
-            TriggerPolicy::Never => None,
-            TriggerPolicy::DriftThreshold { threshold } => {
-                (drift >= threshold).then_some(0.0)
-            }
-            TriggerPolicy::OffPeak {
-                threshold,
-                max_intensity,
-            } => {
-                if drift < threshold {
-                    return None;
-                }
-                Some(delay_to_off_peak(t, max_intensity))
-            }
+    fn decide(&mut self, ctx: &TriggerCtx) -> Option<SimTime>;
+}
+
+/// Retrain at every detector tick (the wasteful baseline the paper's
+/// section III-B warns about).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Eager;
+
+impl RetrainTrigger for Eager {
+    fn name(&self) -> &'static str {
+        "eager"
+    }
+    fn decide(&mut self, _ctx: &TriggerCtx) -> Option<SimTime> {
+        Some(0.0)
+    }
+}
+
+/// Never retrain (ablation lower bound).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Never;
+
+impl RetrainTrigger for Never {
+    fn name(&self) -> &'static str {
+        "never"
+    }
+    fn decide(&mut self, _ctx: &TriggerCtx) -> Option<SimTime> {
+        None
+    }
+}
+
+/// Retrain when the drift metric exceeds a threshold (Fig 7's rule).
+#[derive(Clone, Copy, Debug)]
+pub struct DriftThreshold {
+    pub threshold: f64,
+}
+
+impl RetrainTrigger for DriftThreshold {
+    fn name(&self) -> &'static str {
+        "drift_threshold"
+    }
+    fn decide(&mut self, ctx: &TriggerCtx) -> Option<SimTime> {
+        (ctx.drift >= self.threshold).then_some(0.0)
+    }
+}
+
+/// Drift threshold + defer the launch into the next predicted low-load
+/// hour (uses the arrival-profile intensity forecast).
+#[derive(Clone, Copy, Debug)]
+pub struct OffPeak {
+    pub threshold: f64,
+    /// Launch only in hours with forecast intensity below this.
+    pub max_intensity: f64,
+}
+
+impl RetrainTrigger for OffPeak {
+    fn name(&self) -> &'static str {
+        "off_peak"
+    }
+    fn decide(&mut self, ctx: &TriggerCtx) -> Option<SimTime> {
+        if ctx.drift < self.threshold {
+            return None;
         }
+        Some(delay_to_off_peak(ctx.now, self.max_intensity))
+    }
+}
+
+/// Retrain when absolute performance falls below a floor — an SLO-style
+/// rule the drift-based policies cannot express: a model deployed at
+/// mediocre quality trips it immediately, while a strong model tolerates
+/// a lot of drift before breaching.
+#[derive(Clone, Copy, Debug)]
+pub struct PerformanceFloor {
+    pub floor: f64,
+}
+
+impl RetrainTrigger for PerformanceFloor {
+    fn name(&self) -> &'static str {
+        "performance_floor"
+    }
+    fn decide(&mut self, ctx: &TriggerCtx) -> Option<SimTime> {
+        (ctx.performance < self.floor).then_some(0.0)
+    }
+}
+
+/// Retrain on a fixed cadence since (re)deployment, regardless of drift
+/// (the calendar-driven policy many production platforms actually run).
+#[derive(Clone, Copy, Debug)]
+pub struct Periodic {
+    /// Seconds between retrains of one model.
+    pub interval: f64,
+}
+
+impl RetrainTrigger for Periodic {
+    fn name(&self) -> &'static str {
+        "periodic"
+    }
+    fn decide(&mut self, ctx: &TriggerCtx) -> Option<SimTime> {
+        (ctx.now - ctx.deployed_at >= self.interval).then_some(0.0)
     }
 }
 
@@ -112,6 +202,18 @@ impl DeployedModel {
         }
     }
 
+    /// The trigger's view of this model at detector time `t`.
+    pub fn trigger_ctx(&self, t: SimTime) -> TriggerCtx {
+        TriggerCtx {
+            now: t,
+            drift: self.drift,
+            performance: self.performance,
+            initial_performance: self.initial_performance,
+            deployed_at: self.deployed_at,
+            version: self.version,
+        }
+    }
+
     /// Advance the drift process to time `t` (one detector tick):
     /// gradual decay + stochastic sudden drops + detector noise.
     pub fn tick(
@@ -151,38 +253,84 @@ mod tests {
     use super::*;
     use crate::model::Framework;
 
+    fn ctx(now: SimTime, drift: f64) -> TriggerCtx {
+        TriggerCtx {
+            now,
+            drift,
+            performance: 0.8,
+            initial_performance: 0.9,
+            deployed_at: 0.0,
+            version: 1,
+        }
+    }
+
     #[test]
     fn eager_always_fires() {
-        assert_eq!(TriggerPolicy::Eager.decide(0.0, 0.0), Some(0.0));
+        assert_eq!(Eager.decide(&ctx(0.0, 0.0)), Some(0.0));
     }
 
     #[test]
     fn never_never_fires() {
-        assert_eq!(TriggerPolicy::Never.decide(0.0, 9.9), None);
+        assert_eq!(Never.decide(&ctx(0.0, 9.9)), None);
     }
 
     #[test]
     fn threshold_gates_on_drift() {
-        let p = TriggerPolicy::DriftThreshold { threshold: 0.05 };
-        assert_eq!(p.decide(0.0, 0.01), None);
-        assert_eq!(p.decide(0.0, 0.08), Some(0.0));
+        let mut p = DriftThreshold { threshold: 0.05 };
+        assert_eq!(p.decide(&ctx(0.0, 0.01)), None);
+        assert_eq!(p.decide(&ctx(0.0, 0.08)), Some(0.0));
     }
 
     #[test]
     fn off_peak_defers_to_quiet_hours() {
-        let p = TriggerPolicy::OffPeak {
+        let mut p = OffPeak {
             threshold: 0.05,
             max_intensity: 0.5,
         };
         // Monday 16:00 is the peak -> must defer
         let t_peak = 16.0 * 3600.0;
-        let delay = p.decide(t_peak, 0.10).unwrap();
+        let delay = p.decide(&ctx(t_peak, 0.10)).unwrap();
         assert!(delay > 0.0, "must defer from the peak hour");
         // landing hour must be quiet
         let landing = hour_of_week(t_peak + delay);
         assert!(GroundTruth::intensity(landing) <= 0.5);
         // Monday 03:00 is already quiet -> immediate
-        assert_eq!(p.decide(3.0 * 3600.0, 0.10), Some(0.0));
+        assert_eq!(p.decide(&ctx(3.0 * 3600.0, 0.10)), Some(0.0));
+    }
+
+    #[test]
+    fn performance_floor_ignores_drift() {
+        let mut p = PerformanceFloor { floor: 0.7 };
+        // drifted a lot but still above the floor: no retrain
+        let mut c = ctx(0.0, 0.5);
+        c.performance = 0.75;
+        assert_eq!(p.decide(&c), None);
+        // below the floor: retrain even with zero drift
+        c.performance = 0.69;
+        c.drift = 0.0;
+        assert_eq!(p.decide(&c), Some(0.0));
+    }
+
+    #[test]
+    fn periodic_fires_on_model_age() {
+        let mut p = Periodic { interval: 1000.0 };
+        let mut c = ctx(999.0, 0.0);
+        assert_eq!(p.decide(&c), None);
+        c.now = 1000.0;
+        assert_eq!(p.decide(&c), Some(0.0));
+        // a redeploy resets the clock via deployed_at
+        c.deployed_at = 800.0;
+        assert_eq!(p.decide(&c), None);
+    }
+
+    #[test]
+    fn deployed_model_exposes_trigger_ctx() {
+        let m = DeployedModel::new(1, Framework::SparkML, 0.9, 5.0, 3);
+        let c = m.trigger_ctx(42.0);
+        assert_eq!(c.now, 42.0);
+        assert_eq!(c.deployed_at, 5.0);
+        assert_eq!(c.version, 3);
+        assert_eq!(c.performance, 0.9);
     }
 
     #[test]

@@ -11,10 +11,12 @@
 pub mod calendar;
 pub mod monitor;
 pub mod resource;
+pub mod sched;
 
 pub use calendar::Calendar;
 pub use monitor::{Counter, TimeWeighted};
 pub use resource::{AcquireResult, Resource};
+pub use sched::{JobCtx, SchedCtx, Scheduler};
 
 /// Simulated time in seconds since experiment start.
 pub type SimTime = f64;

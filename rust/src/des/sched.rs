@@ -1,0 +1,296 @@
+//! Pluggable scheduling strategies for [`Resource`](super::Resource).
+//!
+//! The paper's framework exists to "devise and evaluate operational
+//! strategies" (sections IV, V-B, Fig 4) — which job a saturated cluster
+//! admits or grants next is exactly such a strategy. This module makes it
+//! a first-class extension point: [`Resource`](super::Resource) delegates
+//! every admission and waiter-ordering decision to a boxed [`Scheduler`],
+//! and the classic disciplines (FIFO, priority, shortest-job-first) are
+//! just the built-in implementations.
+//!
+//! ## Contract
+//!
+//! Decisions must be **deterministic**: a scheduler may keep internal
+//! state, but its output must be a pure function of that state and the
+//! [`SchedCtx`] it is handed — no wall clock, no unseeded randomness.
+//! Every experiment outcome digest depends on it (see
+//! `ExperimentResult::digest`).
+//!
+//! Waiter ordering is decided **at enqueue time**: [`Scheduler::queue_key`]
+//! is called once when a job queues, and the resource grants waiters in
+//! ascending `(key, enqueue sequence)` order. Re-ordering jobs after they
+//! queued (preemption, backfill) needs calendar event cancellation, which
+//! the DES core does not support yet (see ROADMAP).
+
+use super::SimTime;
+
+/// Per-job facts a scheduler may weigh.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct JobCtx {
+    /// Expected slot occupancy of the task: read + exec + write, seconds.
+    pub expected_occupancy: f64,
+    /// Priority class (lower = more important; 0 is reserved for
+    /// platform-initiated work such as retraining pipelines).
+    pub priority: f64,
+    /// When the owning pipeline arrived in the system.
+    pub arrived_at: SimTime,
+}
+
+impl JobCtx {
+    pub fn new(expected_occupancy: f64, priority: f64, arrived_at: SimTime) -> Self {
+        JobCtx {
+            expected_occupancy,
+            priority,
+            arrived_at,
+        }
+    }
+}
+
+/// Snapshot handed to every scheduling decision: the requesting job plus
+/// the resource's current state (full queue visibility).
+#[derive(Clone, Copy, Debug)]
+pub struct SchedCtx {
+    /// Current simulation time.
+    pub now: SimTime,
+    /// The job the decision is about.
+    pub job: JobCtx,
+    /// Slots currently busy.
+    pub in_use: usize,
+    /// Total slot capacity.
+    pub capacity: usize,
+    /// Waiters currently queued.
+    pub queued: usize,
+}
+
+/// An operational scheduling strategy for one resource.
+///
+/// Implementations may be stateful (`&mut self`); each
+/// [`Resource`](super::Resource) owns its scheduler exclusively, so state
+/// is per-resource and per-run. Strategies are registered by name in
+/// `coordinator::strategy` and selectable from JSON config, the sweep
+/// grid, and the CLI without recompiling.
+pub trait Scheduler: Send {
+    /// Registry/display name of the strategy.
+    fn name(&self) -> &'static str;
+
+    /// May this job start immediately? Called only when a slot is free.
+    /// Returning `false` queues the job even though capacity is
+    /// available (e.g. to reserve headroom for a higher class).
+    ///
+    /// Safety valve: a fully idle resource (`in_use == 0`) always admits
+    /// — the resource enforces this and skips the call, because nothing
+    /// would ever be released to grant the queued job (deadlock).
+    fn admit(&mut self, _ctx: &SchedCtx) -> bool {
+        true
+    }
+
+    /// Ordering key for a job that must queue: waiters are granted in
+    /// ascending `(key, enqueue sequence)` order, so ties fall back to
+    /// FIFO. Must not return NaN.
+    fn queue_key(&mut self, ctx: &SchedCtx) -> f64;
+}
+
+/// First-in first-out (SimPy's default; the paper's baseline).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Fifo;
+
+impl Scheduler for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+    fn queue_key(&mut self, _ctx: &SchedCtx) -> f64 {
+        0.0
+    }
+}
+
+/// Lowest priority value first (Fig 4's "model prioritization");
+/// ties FIFO.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Priority;
+
+impl Scheduler for Priority {
+    fn name(&self) -> &'static str {
+        "priority"
+    }
+    fn queue_key(&mut self, ctx: &SchedCtx) -> f64 {
+        ctx.job.priority
+    }
+}
+
+/// Shortest expected occupancy first; ties FIFO.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShortestJobFirst;
+
+impl Scheduler for ShortestJobFirst {
+    fn name(&self) -> &'static str {
+        "sjf"
+    }
+    fn queue_key(&mut self, ctx: &SchedCtx) -> f64 {
+        ctx.job.expected_occupancy
+    }
+}
+
+/// Earliest-deadline-first: each pipeline carries an implicit deadline
+/// `arrival + slack_per_class × priority class`, and waiters are granted
+/// in deadline order. Tighter classes (lower priority value) get earlier
+/// deadlines; retraining pipelines (class 0) are due immediately.
+///
+/// Needs the richer [`SchedCtx`]: it trades off *arrival time* against
+/// *priority*, which neither the FIFO nor the pure priority discipline
+/// can express.
+#[derive(Clone, Copy, Debug)]
+pub struct EarliestDeadlineFirst {
+    /// Deadline slack granted per priority class, seconds.
+    pub slack_per_class: f64,
+}
+
+impl Default for EarliestDeadlineFirst {
+    fn default() -> Self {
+        EarliestDeadlineFirst {
+            slack_per_class: 1800.0,
+        }
+    }
+}
+
+impl Scheduler for EarliestDeadlineFirst {
+    fn name(&self) -> &'static str {
+        "edf"
+    }
+    fn queue_key(&mut self, ctx: &SchedCtx) -> f64 {
+        ctx.job.arrived_at + self.slack_per_class * ctx.job.priority
+    }
+}
+
+/// Weighted-fair queueing across priority classes (start-time fair
+/// queueing approximation): each class accumulates virtual service time
+/// proportional to `class^weight_power × occupancy`, so class 1 receives
+/// roughly `c×` the throughput share of class `c` under saturation while
+/// no class starves.
+///
+/// Stateful: per-class virtual finish times, anchored to the current
+/// simulation time so long-idle classes cannot bank unbounded credit.
+/// Needs the richer [`SchedCtx`]: it combines *expected occupancy*,
+/// *priority class*, and the clock.
+#[derive(Clone, Debug)]
+pub struct WeightedFair {
+    /// Exponent on the class value when converting it to a virtual-time
+    /// cost (1.0 = share inversely proportional to the class value).
+    pub weight_power: f64,
+    /// Virtual finish time per priority class.
+    vft: Vec<f64>,
+}
+
+impl WeightedFair {
+    pub fn new(weight_power: f64) -> Self {
+        WeightedFair {
+            weight_power,
+            vft: Vec::new(),
+        }
+    }
+}
+
+impl Default for WeightedFair {
+    fn default() -> Self {
+        WeightedFair::new(1.0)
+    }
+}
+
+impl Scheduler for WeightedFair {
+    fn name(&self) -> &'static str {
+        "weighted_fair"
+    }
+    fn queue_key(&mut self, ctx: &SchedCtx) -> f64 {
+        let class = ctx.job.priority.clamp(0.0, 63.0) as usize;
+        if self.vft.len() <= class {
+            self.vft.resize(class + 1, 0.0);
+        }
+        // cost per second of occupancy: class value (min 0.5 so class 0
+        // still advances) raised to the configured power
+        let cost = ctx.job.priority.max(0.5).powf(self.weight_power);
+        let start = self.vft[class].max(ctx.now);
+        self.vft[class] = start + ctx.job.expected_occupancy * cost;
+        self.vft[class]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(occ: f64, pri: f64, arrived: f64, now: f64) -> SchedCtx {
+        SchedCtx {
+            now,
+            job: JobCtx::new(occ, pri, arrived),
+            in_use: 1,
+            capacity: 1,
+            queued: 0,
+        }
+    }
+
+    #[test]
+    fn builtin_keys_reproduce_legacy_discipline_rule() {
+        // the pre-trait simulator computed: fifo -> 0, priority -> the
+        // pipeline priority, sjf -> expected occupancy. The trait impls
+        // must be bit-identical for digests to match across the refactor.
+        let c = ctx(42.5, 3.0, 10.0, 11.0);
+        assert_eq!(Fifo.queue_key(&c), 0.0);
+        assert_eq!(Priority.queue_key(&c), 3.0);
+        assert_eq!(ShortestJobFirst.queue_key(&c), 42.5);
+    }
+
+    #[test]
+    fn default_admission_is_work_conserving() {
+        let c = ctx(1.0, 5.0, 0.0, 0.0);
+        assert!(Fifo.admit(&c));
+        assert!(Priority.admit(&c));
+        assert!(WeightedFair::default().admit(&c));
+    }
+
+    #[test]
+    fn edf_orders_by_arrival_plus_class_slack() {
+        let mut edf = EarliestDeadlineFirst {
+            slack_per_class: 100.0,
+        };
+        // late but urgent beats early but lax
+        let urgent = edf.queue_key(&ctx(1.0, 1.0, 500.0, 600.0)); // due 600
+        let lax = edf.queue_key(&ctx(1.0, 9.0, 0.0, 600.0)); // due 900
+        assert!(urgent < lax);
+        // retrains (class 0) are due at arrival
+        assert_eq!(edf.queue_key(&ctx(1.0, 0.0, 123.0, 600.0)), 123.0);
+    }
+
+    #[test]
+    fn weighted_fair_charges_heavier_classes_more() {
+        let mut wf = WeightedFair::default();
+        let k1a = wf.queue_key(&ctx(10.0, 1.0, 0.0, 0.0));
+        let k1b = wf.queue_key(&ctx(10.0, 1.0, 0.0, 0.0));
+        let k9 = wf.queue_key(&ctx(10.0, 9.0, 0.0, 0.0));
+        // class 1 advances 10s of virtual time per job, class 9 90s
+        assert_eq!(k1a, 10.0);
+        assert_eq!(k1b, 20.0);
+        assert_eq!(k9, 90.0);
+        // so two more class-9 jobs would overtake nothing: keys monotone
+        assert!(k1b < k9);
+    }
+
+    #[test]
+    fn weighted_fair_anchors_idle_classes_to_now() {
+        let mut wf = WeightedFair::default();
+        let early = wf.queue_key(&ctx(5.0, 2.0, 0.0, 0.0)); // vft[2] = 10
+        assert_eq!(early, 10.0);
+        // much later, the class's stale credit must not let it jump the
+        // queue arbitrarily: start is max(vft, now)
+        let late = wf.queue_key(&ctx(5.0, 2.0, 0.0, 1000.0));
+        assert_eq!(late, 1010.0);
+    }
+
+    #[test]
+    fn weighted_fair_is_deterministic_per_state() {
+        let mut a = WeightedFair::new(2.0);
+        let mut b = WeightedFair::new(2.0);
+        for i in 0..100 {
+            let c = ctx(1.0 + i as f64, (i % 7) as f64, i as f64, i as f64);
+            assert_eq!(a.queue_key(&c), b.queue_key(&c));
+        }
+    }
+}

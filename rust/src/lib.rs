@@ -10,8 +10,11 @@
 //! * **L3 (this crate)** — the coordinator: discrete-event engine
 //!   ([`des`]), system model ([`model`]), pipeline/asset synthesizers
 //!   ([`synth`]), arrival processes ([`arrivals`]), the experiment runner
-//!   and operational strategies ([`coordinator`]), an embedded time-series
-//!   store ([`tsdb`]), the synthetic empirical substrate ([`empirical`]),
+//!   and pluggable operational strategies ([`coordinator`]; schedulers in
+//!   [`des::sched`], retraining triggers in [`coordinator::triggers`],
+//!   the JSON-describable strategy registry in
+//!   [`coordinator::strategy`]), an embedded time-series store
+//!   ([`tsdb`]), the synthetic empirical substrate ([`empirical`]),
 //!   statistics ([`stats`]) and analytics ([`analytics`]).
 //! * **L2/L1 (build-time Python)** — JAX compute graphs with a Pallas
 //!   E-step kernel, AOT-lowered to HLO text under `artifacts/` and executed
@@ -47,8 +50,9 @@ pub use error::{Error, Result};
 
 /// Convenient re-exports for the common experiment workflow.
 pub mod prelude {
-    pub use crate::coordinator::{Experiment, ExperimentConfig, SimParams};
-    pub use crate::des::{Resource, SimTime};
+    pub use crate::coordinator::{Experiment, ExperimentConfig, SimParams, StrategySpec};
+    pub use crate::coordinator::{RetrainTrigger, TriggerCtx};
+    pub use crate::des::{JobCtx, Resource, SchedCtx, Scheduler, SimTime};
     pub use crate::empirical::{AnalyticsDb, GroundTruth};
     pub use crate::error::{Error, Result};
     pub use crate::model::{Framework, TaskType};

@@ -7,12 +7,20 @@
 //!   fit            --db DB.json --out PARAMS.json [--cpu]
 //!   simulate       --params PARAMS.json [--config CFG.json] [--days D]
 //!                  [--arrival random|profile|poisson:SECS] [--seed S]
+//!                  [--scheduler SPEC] [--trigger SPEC]
 //!                  [--cpu] [--export CSV]
 //!   sweep          --params PARAMS.json [--config CFG.json] [--days D]
 //!                  [--arrival MODE] [--seeds N] [--seed0 S] [--jobs N]
-//!                  [--capacities 2,4,8] [--factors 0.5,1,2] [--traces]
-//!                  [--cpu] [--export CSV] — parallel replication/grid
-//!                  engine (per-cell trace recording off unless --traces)
+//!                  [--capacities 2,4,8] [--factors 0.5,1,2]
+//!                  [--schedulers fifo,sjf,edf:slack_per_class=900]
+//!                  [--triggers never,drift_threshold:threshold=0.05]
+//!                  [--traces] [--cpu] [--export CSV] — parallel
+//!                  replication/grid engine over capacities × load
+//!                  factors × operational strategies (per-cell trace
+//!                  recording off unless --traces)
+//!
+//! Strategy SPECs are `name` or `name:key=value:key=value`; names come
+//! from the strategy registry (`pipesim::coordinator::scheduler_names`).
 //!   figures        --fig 8|9a|9b|10|11|12|table1|all [--out-dir DIR]
 //!   table1
 //!   qq             --db DB.json --params PARAMS.json [--days D] [--cpu]
@@ -23,7 +31,8 @@ use std::sync::Arc;
 
 use pipesim::analytics::{figures, render_dashboard};
 use pipesim::coordinator::{
-    fit_params_with_report, ArrivalSpec, Experiment, ExperimentConfig, SimParams, Sweep,
+    fit_params_with_report, ArrivalSpec, Experiment, ExperimentConfig, SimParams, StrategySpec,
+    Sweep,
 };
 use pipesim::des::DAY;
 use pipesim::empirical::{AnalyticsDb, GroundTruth};
@@ -126,6 +135,16 @@ fn main() -> Result<()> {
             if let Some(s) = args.get_parse_opt::<u64>("seed")? {
                 cfg.seed = s;
             }
+            if let Some(s) = args.get_opt("scheduler") {
+                cfg.infra.scheduler = StrategySpec::parse(&s)?;
+            }
+            if let Some(s) = args.get_opt("trigger") {
+                cfg.runtime_view.trigger = StrategySpec::parse(&s)?;
+                if !cfg.runtime_view.enabled {
+                    eprintln!("trigger: enabling the runtime view (defaults)");
+                    cfg.runtime_view.enabled = true;
+                }
+            }
             let cpu = args.flag("cpu");
             let export = args.get_opt("export");
             args.reject_unknown()?;
@@ -156,6 +175,8 @@ fn main() -> Result<()> {
             let jobs: usize = args.get_parse("jobs", 0)?;
             let capacities = args.get_opt("capacities");
             let factors = args.get_opt("factors");
+            let schedulers = args.get_opt("schedulers");
+            let triggers = args.get_opt("triggers");
             let cpu = args.flag("cpu");
             // traces off by default: a sweep keeps every cell's result in
             // memory until aggregation, and nothing downstream reads the
@@ -188,28 +209,60 @@ fn main() -> Result<()> {
                     .collect::<Result<_>>()?,
                 None => vec![None],
             };
+            // operational strategies are sweep axes like capacity/load:
+            // a spec list is `name[:key=value...]` items, comma-separated
+            let scheds: Vec<Option<StrategySpec>> = match &schedulers {
+                Some(list) => list
+                    .split(',')
+                    .map(|v| StrategySpec::parse(v.trim()).map(Some))
+                    .collect::<Result<_>>()?,
+                None => vec![None],
+            };
+            let trigs: Vec<Option<StrategySpec>> = match &triggers {
+                Some(list) => list
+                    .split(',')
+                    .map(|v| StrategySpec::parse(v.trim()).map(Some))
+                    .collect::<Result<_>>()?,
+                None => vec![None],
+            };
+            if triggers.is_some() && !base.runtime_view.enabled {
+                eprintln!("triggers: enabling the runtime view (defaults)");
+                base.runtime_view.enabled = true;
+            }
             let rt = load_runtime(cpu);
             let mut sweep = Sweep::new(params).with_runtime(rt).jobs(jobs);
             for cap in &caps {
                 for fac in &facs {
-                    let mut cfg = base.clone();
-                    let mut name = base.name.clone();
-                    if let Some(c) = cap {
-                        cfg.infra.training_capacity = *c;
-                        name.push_str(&format!("-cap{c}"));
+                    for sched in &scheds {
+                        for trig in &trigs {
+                            let mut cfg = base.clone();
+                            let mut name = base.name.clone();
+                            if let Some(c) = cap {
+                                cfg.infra.training_capacity = *c;
+                                name.push_str(&format!("-cap{c}"));
+                            }
+                            if let Some(f) = fac {
+                                cfg.interarrival_factor = *f;
+                                name.push_str(&format!("-x{f}"));
+                            }
+                            if let Some(s) = sched {
+                                cfg.infra.scheduler = s.clone();
+                                name.push_str(&format!("-{}", s.label()));
+                            }
+                            if let Some(tr) = trig {
+                                cfg.runtime_view.trigger = tr.clone();
+                                name.push_str(&format!("-trig:{}", tr.label()));
+                            }
+                            cfg.name = name;
+                            sweep.add_replications(&cfg, seed0, seeds);
+                        }
                     }
-                    if let Some(f) = fac {
-                        cfg.interarrival_factor = *f;
-                        name.push_str(&format!("-x{f}"));
-                    }
-                    cfg.name = name;
-                    sweep.add_replications(&cfg, seed0, seeds);
                 }
             }
             eprintln!(
                 "sweep: {} cells ({} groups x {seeds} seeds)",
                 sweep.len(),
-                caps.len() * facs.len()
+                caps.len() * facs.len() * scheds.len() * trigs.len()
             );
             let out = sweep.run()?;
             print!("{}", out.table());

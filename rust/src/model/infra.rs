@@ -2,7 +2,7 @@
 //! plus training and compute clusters, each with a job capacity.
 
 use super::task::TaskType;
-use crate::des::resource::Discipline;
+use crate::coordinator::strategy::StrategySpec;
 
 /// The kinds of compute resource in the modeled platform.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -87,8 +87,9 @@ pub struct InfraConfig {
     pub training_capacity: usize,
     /// Job capacity of the generic compute cluster.
     pub compute_capacity: usize,
-    /// Queueing discipline for both clusters.
-    pub discipline: Discipline,
+    /// Scheduling strategy for both clusters (each cluster builds its
+    /// own instance from the spec — see `coordinator::strategy`).
+    pub scheduler: StrategySpec,
     pub store: StoreConfig,
 }
 
@@ -97,7 +98,7 @@ impl Default for InfraConfig {
         InfraConfig {
             training_capacity: 10,
             compute_capacity: 20,
-            discipline: Discipline::Fifo,
+            scheduler: StrategySpec::new("fifo"),
             store: StoreConfig::default(),
         }
     }

@@ -7,8 +7,7 @@ use super::json::Json;
 use crate::arrivals::{ArrivalModel, ArrivalProfile};
 use crate::coordinator::config::{ArrivalSpec, ExperimentConfig, RuntimeViewConfig};
 use crate::coordinator::params::{ModelLaws, SimParams};
-use crate::coordinator::triggers::TriggerPolicy;
-use crate::des::resource::Discipline;
+use crate::coordinator::strategy::StrategySpec;
 use crate::empirical::{AnalyticsDb, AssetRecord, EvalRecord, JobRecord, PreprocRecord};
 use crate::error::{Error, Result};
 use crate::model::{Framework, InfraConfig, StoreConfig};
@@ -45,24 +44,59 @@ impl Framework {
     }
 }
 
-impl JsonIo for Discipline {
+impl JsonIo for StrategySpec {
+    /// Canonical form: `{"name": "...", "params": {"key": value, ...}}`.
     fn to_json(&self) -> Json {
-        Json::Str(
-            match self {
-                Discipline::Fifo => "fifo",
-                Discipline::Priority => "priority",
-                Discipline::ShortestJobFirst => "sjf",
-            }
-            .into(),
-        )
+        Json::Obj(vec![
+            ("name".to_string(), Json::Str(self.name.clone())),
+            (
+                "params".to_string(),
+                Json::Obj(
+                    self.params
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                        .collect(),
+                ),
+            ),
+        ])
     }
+
+    /// Accepts the canonical form, a bare string (`"fifo"` — the legacy
+    /// `discipline` encoding), and the legacy trigger encoding
+    /// `{"policy": "...", <params inline>}`.
     fn from_json(j: &Json) -> Result<Self> {
-        match j.as_str()? {
-            "fifo" => Ok(Discipline::Fifo),
-            "priority" => Ok(Discipline::Priority),
-            "sjf" => Ok(Discipline::ShortestJobFirst),
-            s => Err(Error::Other(format!("unknown discipline '{s}'"))),
+        if let Json::Str(s) = j {
+            return Ok(StrategySpec::new(s.as_str()));
         }
+        let name = match j.get("name") {
+            Some(n) => n.as_str()?,
+            None => j.s("policy")?,
+        };
+        let mut spec = StrategySpec::new(name);
+        match j.get("params") {
+            Some(Json::Obj(fields)) => {
+                for (k, v) in fields {
+                    spec.params.push((k.clone(), v.as_f64()?));
+                }
+            }
+            Some(Json::Null) | None => {
+                // legacy inline form: every field besides the tag (and an
+                // explicit null "params") is a numeric parameter
+                if let Json::Obj(fields) = j {
+                    for (k, v) in fields {
+                        if k != "policy" && k != "name" && k != "params" {
+                            spec.params.push((k.clone(), v.as_f64()?));
+                        }
+                    }
+                }
+            }
+            Some(other) => {
+                return Err(Error::Other(format!(
+                    "strategy params must be an object, got {other:?}"
+                )))
+            }
+        }
+        Ok(spec)
     }
 }
 
@@ -458,15 +492,21 @@ impl JsonIo for InfraConfig {
         Json::obj(vec![
             ("training_capacity", Json::Num(self.training_capacity as f64)),
             ("compute_capacity", Json::Num(self.compute_capacity as f64)),
-            ("discipline", self.discipline.to_json()),
+            ("scheduler", self.scheduler.to_json()),
             ("store", self.store.to_json()),
         ])
     }
     fn from_json(j: &Json) -> Result<Self> {
+        // "scheduler" is canonical; "discipline" (a bare string) is the
+        // pre-strategy-API encoding, still accepted
+        let scheduler = match j.get("scheduler").or_else(|| j.get("discipline")) {
+            Some(s) => StrategySpec::from_json(s)?,
+            None => StrategySpec::new("fifo"),
+        };
         Ok(InfraConfig {
             training_capacity: j.req("training_capacity")?.as_usize()?,
             compute_capacity: j.req("compute_capacity")?.as_usize()?,
-            discipline: Discipline::from_json(j.req("discipline")?)?,
+            scheduler,
             store: StoreConfig::from_json(j.req("store")?)?,
         })
     }
@@ -506,41 +546,6 @@ impl JsonIo for SynthConfig {
     }
 }
 
-impl JsonIo for TriggerPolicy {
-    fn to_json(&self) -> Json {
-        match self {
-            TriggerPolicy::Eager => Json::obj(vec![("policy", Json::Str("eager".into()))]),
-            TriggerPolicy::Never => Json::obj(vec![("policy", Json::Str("never".into()))]),
-            TriggerPolicy::DriftThreshold { threshold } => Json::obj(vec![
-                ("policy", Json::Str("drift_threshold".into())),
-                ("threshold", Json::Num(*threshold)),
-            ]),
-            TriggerPolicy::OffPeak {
-                threshold,
-                max_intensity,
-            } => Json::obj(vec![
-                ("policy", Json::Str("off_peak".into())),
-                ("threshold", Json::Num(*threshold)),
-                ("max_intensity", Json::Num(*max_intensity)),
-            ]),
-        }
-    }
-    fn from_json(j: &Json) -> Result<Self> {
-        Ok(match j.s("policy")? {
-            "eager" => TriggerPolicy::Eager,
-            "never" => TriggerPolicy::Never,
-            "drift_threshold" => TriggerPolicy::DriftThreshold {
-                threshold: j.f("threshold")?,
-            },
-            "off_peak" => TriggerPolicy::OffPeak {
-                threshold: j.f("threshold")?,
-                max_intensity: j.f("max_intensity")?,
-            },
-            s => return Err(Error::Other(format!("unknown trigger policy '{s}'"))),
-        })
-    }
-}
-
 impl JsonIo for RuntimeViewConfig {
     fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -560,7 +565,7 @@ impl JsonIo for RuntimeViewConfig {
             decay_per_day: j.f("decay_per_day")?,
             sudden_drift_prob: j.f("sudden_drift_prob")?,
             sudden_drift_drop: j.f("sudden_drift_drop")?,
-            trigger: TriggerPolicy::from_json(j.req("trigger")?)?,
+            trigger: StrategySpec::from_json(j.req("trigger")?)?,
             max_models: j.req("max_models")?.as_usize()?,
         })
     }
@@ -678,16 +683,39 @@ mod tests {
     fn config_roundtrip() {
         let mut cfg = ExperimentConfig::default();
         cfg.max_pipelines = Some(1234);
-        cfg.runtime_view.trigger = TriggerPolicy::OffPeak {
-            threshold: 0.07,
-            max_intensity: 0.4,
-        };
-        cfg.infra.discipline = Discipline::ShortestJobFirst;
+        cfg.runtime_view.trigger = StrategySpec::new("off_peak")
+            .with("threshold", 0.07)
+            .with("max_intensity", 0.4);
+        cfg.infra.scheduler = StrategySpec::new("weighted_fair").with("weight_power", 2.0);
         let back = roundtrip(&cfg);
         assert_eq!(back.max_pipelines, Some(1234));
         assert_eq!(back.runtime_view.trigger, cfg.runtime_view.trigger);
-        assert_eq!(back.infra.discipline, Discipline::ShortestJobFirst);
+        assert_eq!(back.infra.scheduler, cfg.infra.scheduler);
         assert_eq!(back.synth.framework_shares, cfg.synth.framework_shares);
+    }
+
+    #[test]
+    fn strategy_spec_accepts_all_encodings() {
+        // canonical
+        let j = Json::parse(r#"{"name":"edf","params":{"slack_per_class":900}}"#).unwrap();
+        let spec = StrategySpec::from_json(&j).unwrap();
+        assert_eq!(spec, StrategySpec::new("edf").with("slack_per_class", 900.0));
+        assert_eq!(roundtrip(&spec), spec);
+        // bare string (legacy "discipline")
+        let j = Json::parse(r#""sjf""#).unwrap();
+        assert_eq!(StrategySpec::from_json(&j).unwrap(), StrategySpec::new("sjf"));
+        // legacy trigger form with inline params
+        let j = Json::parse(r#"{"policy":"off_peak","threshold":0.05,"max_intensity":0.5}"#)
+            .unwrap();
+        let spec = StrategySpec::from_json(&j).unwrap();
+        assert_eq!(spec.name, "off_peak");
+        assert_eq!(spec.get("threshold"), Some(0.05));
+        assert_eq!(spec.get("max_intensity"), Some(0.5));
+        // explicit null params = parameterless
+        let j = Json::parse(r#"{"name":"fifo","params":null}"#).unwrap();
+        assert_eq!(StrategySpec::from_json(&j).unwrap(), StrategySpec::new("fifo"));
+        // no name at all
+        assert!(StrategySpec::from_json(&Json::parse(r#"{"threshold":1}"#).unwrap()).is_err());
     }
 
     #[test]

@@ -201,25 +201,120 @@ fn cli_end_to_end() {
     assert!(text.contains("dashboard"), "missing dashboard: {text}");
     assert!(text.contains("pipelines"));
 
-    // parallel sweep over a small capacity x seed grid
+    // parallel sweep over a small capacity x scheduler x seed grid —
+    // operational strategies are a sweep axis like any other
     let cells = dir.join("cells.csv");
     let out = pipesim_bin()
         .arg("sweep")
         .arg("--params")
         .arg(&params)
         .args([
-            "--days", "0.25", "--arrival", "poisson:120", "--seeds", "4", "--jobs", "2",
-            "--capacities", "2,4", "--cpu", "--export",
+            "--days", "0.25", "--arrival", "poisson:120", "--seeds", "2", "--jobs", "2",
+            "--capacities", "2,4", "--schedulers", "fifo,edf:slack_per_class=900", "--cpu",
+            "--export",
         ])
         .arg(&cells)
         .output()
         .unwrap();
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     let text = String::from_utf8_lossy(&out.stdout);
-    assert!(text.contains("group 'default-cap2'"), "{text}");
-    assert!(text.contains("group 'default-cap4'"), "{text}");
+    assert!(text.contains("group 'default-cap2-fifo'"), "{text}");
+    assert!(
+        text.contains("group 'default-cap4-edf:slack_per_class=900'"),
+        "{text}"
+    );
     let csv = std::fs::read_to_string(&cells).unwrap();
-    assert_eq!(csv.lines().count(), 9, "8 cells + header: {csv}");
+    assert_eq!(csv.lines().count(), 9, "2 caps x 2 scheds x 2 seeds + header: {csv}");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn cli_strategies_selectable_from_json_config_alone() {
+    // new schedulers/triggers are usable with zero recompilation: a JSON
+    // config names them and `simulate` just runs it
+    let dir = tmpdir("strategy_json");
+    let db = dir.join("db.json");
+    let params = dir.join("params.json");
+    let ok = |out: &std::process::Output| {
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    };
+    ok(&pipesim_bin()
+        .args(["gen-empirical", "--weeks", "2", "--seed", "3", "--out"])
+        .arg(&db)
+        .output()
+        .unwrap());
+    ok(&pipesim_bin()
+        .arg("fit")
+        .arg("--db")
+        .arg(&db)
+        .arg("--out")
+        .arg(&params)
+        .arg("--cpu")
+        .output()
+        .unwrap());
+
+    let cfg_path = dir.join("cfg.json");
+    std::fs::write(
+        &cfg_path,
+        r#"{
+            "name": "json-strategies", "seed": 4, "horizon": 43200.0,
+            "arrival": {"mode": "poisson", "mean_interarrival": 120.0},
+            "interarrival_factor": 1.0,
+            "infra": {
+                "training_capacity": 3, "compute_capacity": 8,
+                "scheduler": {"name": "weighted_fair",
+                               "params": {"weight_power": 1.5}},
+                "store": {"read_bw": 4e8, "write_bw": 2.5e8,
+                           "latency": 0.05, "tcp_overhead": 1.06}
+            },
+            "synth": {
+                "framework_shares": [0.63, 0.32, 0.03, 0.01, 0.01],
+                "p_preprocess": 0.55, "p_evaluate": 0.7, "p_compress": 0.1,
+                "p_harden": 0.05, "p_reevaluate": 0.8, "p_transfer": 0.05,
+                "p_deploy": 0.8
+            },
+            "sample_interval": 600.0,
+            "record_traces": false,
+            "runtime_view": {
+                "enabled": true,
+                "detector_interval": 3600.0,
+                "decay_per_day": 0.05,
+                "sudden_drift_prob": 0.02,
+                "sudden_drift_drop": 0.08,
+                "trigger": {"name": "performance_floor", "params": {"floor": 0.75}},
+                "max_models": 200
+            }
+        }"#,
+    )
+    .unwrap();
+    let out = pipesim_bin()
+        .arg("simulate")
+        .arg("--params")
+        .arg(&params)
+        .arg("--config")
+        .arg(&cfg_path)
+        .arg("--cpu")
+        .output()
+        .unwrap();
+    ok(&out);
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("json-strategies"), "{text}");
+
+    // an unknown strategy in the same file must be rejected up front
+    let bad = std::fs::read_to_string(&cfg_path)
+        .unwrap()
+        .replace("weighted_fair", "not_a_scheduler");
+    std::fs::write(&cfg_path, bad).unwrap();
+    let out = pipesim_bin()
+        .arg("simulate")
+        .arg("--params")
+        .arg(&params)
+        .arg("--config")
+        .arg(&cfg_path)
+        .arg("--cpu")
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
     std::fs::remove_dir_all(dir).ok();
 }
 
