@@ -1,0 +1,155 @@
+//! Trace subsystem benchmarks: codec throughput (events/sec write and
+//! read), capture overhead versus a plain run, and the `NullSink`
+//! zero-allocation guard on the event path.
+//!
+//! Emits `BENCH_trace.json` for the CI perf trajectory. The allocation
+//! guard is a hard assertion: emitting events into the `NullSink` must
+//! perform ZERO heap allocations — if it ever allocates, this bench (and
+//! CI) fails.
+//!
+//! Run: `cargo bench --bench bench_trace`
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use pipesim::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig};
+use pipesim::des::DAY;
+use pipesim::empirical::GroundTruth;
+use pipesim::model::{Framework, TaskType};
+use pipesim::trace::{NullSink, Trace, TraceEvent, TraceEventKind, TraceSink};
+use pipesim::util::bench::{black_box, Bench};
+use pipesim::util::Json;
+
+/// System allocator wrapped with an allocation counter.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+fn main() {
+    let db = GroundTruth::new(23).generate_weeks(2);
+    let params = fit_params(&db, None).expect("fit");
+    let mut b = Bench::with_budget(std::time::Duration::from_millis(200), 3);
+    let mut report: Vec<(&str, Json)> = vec![("bench", Json::Str("trace".into()))];
+
+    // --- NullSink zero-allocation guard --------------------------------
+    {
+        let mut sink = NullSink;
+        let n = 1_000_000u64;
+        // warm up whatever lazy state exists before snapshotting
+        sink.record(&TraceEvent {
+            t: 0.0,
+            kind: TraceEventKind::ArrivalGapDrawn { gap: 1.0 },
+        });
+        let before = allocs();
+        for i in 0..n {
+            let ev = TraceEvent {
+                t: i as f64,
+                kind: TraceEventKind::TaskDone {
+                    pid: i as u32,
+                    task: TaskType::Train,
+                    framework: Some(Framework::TensorFlow),
+                    exec: 42.0,
+                },
+            };
+            sink.record(black_box(&ev));
+        }
+        let delta = allocs() - before;
+        println!("# NullSink: {delta} allocations across {n} events");
+        assert_eq!(
+            delta, 0,
+            "NullSink event path must be allocation-free (got {delta} allocs)"
+        );
+        report.push(("null_sink_allocs", Json::Num(delta as f64)));
+        report.push(("null_sink_events", Json::Num(n as f64)));
+    }
+
+    // --- capture overhead vs plain run ---------------------------------
+    let run = |capture: bool| {
+        let cfg = ExperimentConfig {
+            name: if capture { "cap" } else { "plain" }.into(),
+            seed: 5,
+            horizon: 2.0 * DAY,
+            arrival: ArrivalSpec::Poisson {
+                mean_interarrival: 60.0,
+            },
+            record_traces: false,
+            capture_trace: capture,
+            ..Default::default()
+        };
+        Experiment::new(cfg, params.clone()).run().expect("run")
+    };
+    let mut plain_secs = 0.0;
+    b.bench_once("2-day run, capture off", || {
+        let r = run(false);
+        plain_secs = r.wall_secs;
+        black_box(r.events_processed);
+    });
+    let mut capture_secs = 0.0;
+    let mut trace: Option<Trace> = None;
+    b.bench_once("2-day run, capture on", || {
+        let mut r = run(true);
+        capture_secs = r.wall_secs;
+        trace = r.trace.take();
+    });
+    let trace = trace.expect("capture produced a trace");
+    let overhead_pct = if plain_secs > 0.0 {
+        100.0 * (capture_secs / plain_secs - 1.0)
+    } else {
+        0.0
+    };
+    println!(
+        "# capture overhead: {overhead_pct:.1}% ({} events captured)",
+        trace.len()
+    );
+    report.push(("capture_overhead_pct", Json::Num(overhead_pct)));
+    report.push(("captured_events", Json::Num(trace.len() as f64)));
+
+    // --- codec throughput ----------------------------------------------
+    let mut bytes = Vec::new();
+    let m = b
+        .bench("encode trace", || {
+            bytes = black_box(trace.to_bytes());
+        })
+        .clone();
+    let write_eps = trace.len() as f64 / m.mean.as_secs_f64().max(1e-12);
+    let m = b
+        .bench("decode trace", || {
+            black_box(Trace::from_bytes(&bytes).expect("decode"));
+        })
+        .clone();
+    let read_eps = trace.len() as f64 / m.mean.as_secs_f64().max(1e-12);
+    let bytes_per_event = bytes.len() as f64 / trace.len().max(1) as f64;
+    println!(
+        "# codec: write {write_eps:.0} events/s, read {read_eps:.0} events/s, \
+         {bytes_per_event:.1} B/event"
+    );
+    report.push(("write_events_per_sec", Json::Num(write_eps)));
+    report.push(("read_events_per_sec", Json::Num(read_eps)));
+    report.push(("bytes_per_event", Json::Num(bytes_per_event)));
+    report.push(("trace_bytes", Json::Num(bytes.len() as f64)));
+
+    let json = Json::obj(report);
+    std::fs::write("BENCH_trace.json", json.to_string()).expect("write BENCH_trace.json");
+    println!("# wrote BENCH_trace.json");
+}

@@ -1,0 +1,73 @@
+//! Trace round-trip: capture a run's event trace, export it to the
+//! binary format, re-ingest it, and replay it — proving the replay
+//! reproduces the original run's outcome digest byte-for-byte (the trace
+//! subsystem's core guarantee).
+//!
+//! 1. Fit simulation parameters on a small synthetic empirical DB.
+//! 2. Run 2 days with `capture_trace` on and export `trace.pst`.
+//! 3. Load the file, summarize it, Q-Q it against the fits.
+//! 4. Replay through `TraceWorkload` and compare digests.
+//!
+//! Run: `cargo run --release --example trace_roundtrip`
+
+use pipesim::analytics::{trace_qq, TraceSummary};
+use pipesim::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig};
+use pipesim::des::DAY;
+use pipesim::empirical::GroundTruth;
+use pipesim::trace::{Trace, TraceWorkload};
+
+fn main() -> pipesim::Result<()> {
+    println!("== fitting parameters (3-week synthetic empirical DB) ==");
+    let db = GroundTruth::new(11).generate_weeks(3);
+    let params = fit_params(&db, None)?;
+
+    println!("== capturing a 2-day run ==");
+    let cfg = ExperimentConfig {
+        name: "trace-roundtrip".into(),
+        seed: 7,
+        horizon: 2.0 * DAY,
+        arrival: ArrivalSpec::Profile,
+        capture_trace: true,
+        ..Default::default()
+    };
+    let mut captured = Experiment::new(cfg, params.clone()).run()?;
+    let trace = captured.trace.take().expect("capture_trace was on");
+    let digest_captured = captured.digest();
+    println!(
+        "captured {} events from {} pipelines",
+        trace.len(),
+        captured.arrived
+    );
+
+    let path = std::env::temp_dir().join("pipesim_trace_roundtrip.pst");
+    trace.save(&path)?;
+    let on_disk = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "exported {} ({} bytes, {:.1} B/event)",
+        path.display(),
+        on_disk,
+        on_disk as f64 / trace.len().max(1) as f64
+    );
+
+    println!("== re-ingesting + analyzing ==");
+    let loaded = Trace::load(&path)?;
+    assert_eq!(loaded, trace, "binary round-trip must be lossless");
+    print!("{}", TraceSummary::from_trace(&loaded).render());
+    for q in trace_qq(&loaded, &params, 20_000, 40, 1) {
+        println!("{}", q.verdict());
+    }
+
+    println!("== replaying ==");
+    let workload = TraceWorkload::from_trace(&loaded)?;
+    let replayed = workload.run(params, None)?;
+    let digest_replayed = replayed.digest();
+    println!("captured digest: {digest_captured}");
+    println!("replayed digest: {digest_replayed}");
+    assert_eq!(
+        digest_captured, digest_replayed,
+        "capture -> replay must round-trip bit-identically"
+    );
+    println!("round-trip OK: digests are byte-identical");
+    std::fs::remove_file(&path).ok();
+    Ok(())
+}

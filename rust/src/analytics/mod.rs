@@ -1,11 +1,14 @@
 //! Analytics: the exploratory dashboard (Fig 11), the statistical
-//! accuracy analysis (Fig 12), and the figure-data emitters.
+//! accuracy analysis (Fig 12), trace summary/accuracy statistics, and
+//! the figure-data emitters.
 
 pub mod dashboard;
 pub mod figures;
 pub mod qq;
 pub mod report;
+pub mod trace_stats;
 
 pub use dashboard::render_dashboard;
 pub use qq::{qq_report, QqSeries};
 pub use report::{Comparison, Metric};
+pub use trace_stats::{trace_qq, TraceSummary};

@@ -117,13 +117,25 @@ impl<'a> Comparison<'a> {
     }
 
     /// Markdown-style table: rows = metrics, cols = experiments, deltas
-    /// vs the baseline in parentheses.
+    /// vs the baseline in parentheses. The resolved scheduler/trigger
+    /// strategy labels lead the table so exported comparisons are
+    /// self-describing.
     pub fn render(&self) -> String {
         use std::fmt::Write;
         let mut out = String::new();
         let _ = write!(out, "{:<26}", "metric");
         for r in &self.results {
             let _ = write!(out, " {:>22}", truncate(&r.name, 22));
+        }
+        out.push('\n');
+        let _ = write!(out, "{:<26}", "scheduler");
+        for r in &self.results {
+            let _ = write!(out, " {:>22}", truncate(&r.scheduler, 22));
+        }
+        out.push('\n');
+        let _ = write!(out, "{:<26}", "trigger");
+        for r in &self.results {
+            let _ = write!(out, " {:>22}", truncate(&r.trigger, 22));
         }
         out.push('\n');
         for m in Metric::ALL {
@@ -146,12 +158,25 @@ impl<'a> Comparison<'a> {
         out
     }
 
-    /// CSV form: metric, then one column per experiment.
+    /// CSV form: metric, then one column per experiment. The first two
+    /// data rows carry the resolved strategy labels.
     pub fn to_csv(&self) -> String {
         let mut out = String::from("metric");
         for r in &self.results {
             out.push(',');
             out.push_str(&r.name);
+        }
+        out.push('\n');
+        out.push_str("scheduler");
+        for r in &self.results {
+            out.push(',');
+            out.push_str(&r.scheduler);
+        }
+        out.push('\n');
+        out.push_str("trigger");
+        for r in &self.results {
+            out.push(',');
+            out.push_str(&r.trigger);
         }
         out.push('\n');
         for m in Metric::ALL {
@@ -211,15 +236,21 @@ mod tests {
         let table = cmp.render();
         assert!(table.contains("mean_wait_training_s"));
         assert!(table.contains("fifo") && table.contains("sjf"));
+        // the active strategies are spelled out, not just the cell names
+        assert!(table.contains("scheduler"));
+        assert!(table.contains("trigger"));
     }
 
     #[test]
-    fn csv_has_all_metrics() {
+    fn csv_has_all_metrics_and_strategy_labels() {
         let (a, b) = two_results();
         let cmp = Comparison::new(vec![&a, &b]);
         let csv = cmp.to_csv();
-        assert_eq!(csv.lines().count(), Metric::ALL.len() + 1);
+        // header + scheduler row + trigger row + one row per metric
+        assert_eq!(csv.lines().count(), Metric::ALL.len() + 3);
         assert!(csv.starts_with("metric,fifo,sjf"));
+        assert!(csv.contains("scheduler,fifo,sjf"));
+        assert!(csv.contains("trigger,off,off"));
     }
 
     #[test]

@@ -73,6 +73,9 @@ pub struct ExperimentConfig {
     pub sample_interval: f64,
     /// Record per-task duration/wait series into the tsdb.
     pub record_traces: bool,
+    /// Capture the event-level trace (`trace::Trace`) into the result.
+    /// Off by default: the `NullSink` keeps the event path allocation-free.
+    pub capture_trace: bool,
     pub runtime_view: RuntimeViewConfig,
     /// Stop after this many pipeline arrivals (None = horizon only).
     pub max_pipelines: Option<u64>,
@@ -90,6 +93,7 @@ impl Default for ExperimentConfig {
             synth: SynthConfig::default(),
             sample_interval: 300.0,
             record_traces: true,
+            capture_trace: false,
             runtime_view: RuntimeViewConfig::default(),
             max_pipelines: None,
         }

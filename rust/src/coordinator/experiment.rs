@@ -13,6 +13,7 @@
 
 use std::sync::Arc;
 
+use crate::arrivals::ArrivalModel;
 use crate::error::Result;
 use crate::runtime::Runtime;
 
@@ -31,6 +32,7 @@ pub struct Experiment {
     cfg: ExperimentConfig,
     params: Arc<SimParams>,
     runtime: Option<Arc<Runtime>>,
+    arrival: Option<ArrivalModel>,
 }
 
 impl Experiment {
@@ -39,6 +41,7 @@ impl Experiment {
             cfg,
             params: params.into(),
             runtime: None,
+            arrival: None,
         }
     }
 
@@ -48,11 +51,19 @@ impl Experiment {
         self
     }
 
+    /// Override the arrival process, ignoring `cfg.arrival`. The
+    /// trace-replay path (`trace::TraceWorkload`) uses this to feed
+    /// recorded gaps back through `ArrivalModel::Replay`.
+    pub fn with_arrival(mut self, model: ArrivalModel) -> Self {
+        self.arrival = Some(model);
+        self
+    }
+
     /// Run to completion; single-threaded, deterministic per seed.
     pub fn run(self) -> Result<ExperimentResult> {
         let started = std::time::Instant::now();
         self.cfg.validate()?;
-        Simulation::new(self.cfg, self.params, self.runtime)?.run(started)
+        Simulation::new(self.cfg, self.params, self.runtime, self.arrival)?.run(started)
     }
 }
 

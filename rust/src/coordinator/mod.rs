@@ -6,6 +6,7 @@
 pub mod config;
 pub mod experiment;
 pub mod params;
+pub mod params_bin;
 pub mod result;
 mod simulation;
 pub mod strategy;

@@ -10,6 +10,7 @@
 use std::sync::Arc;
 
 use crate::arrivals::ArrivalModel;
+use crate::coordinator::config::ArrivalSpec;
 use crate::empirical::AnalyticsDb;
 use crate::error::{Error, Result};
 use crate::model::Framework;
@@ -94,14 +95,49 @@ pub struct FitReport {
 }
 
 impl SimParams {
+    /// Persist the fitted parameters. A `.bin` extension selects the
+    /// compact binary cache (`coordinator::params_bin` — loads without
+    /// any float parsing, which dominates sweep startup for tiny cells);
+    /// anything else writes JSON.
     pub fn save(&self, path: &std::path::Path) -> Result<()> {
-        use crate::util::jsonio::JsonIo;
-        self.save_json(path)
+        let is_bin = path
+            .extension()
+            .and_then(|e| e.to_str())
+            .is_some_and(|e| e.eq_ignore_ascii_case("bin"));
+        if is_bin {
+            std::fs::write(path, super::params_bin::encode(self))?;
+            Ok(())
+        } else {
+            use crate::util::jsonio::JsonIo;
+            self.save_json(path)
+        }
     }
 
+    /// Load fitted parameters, auto-detecting the encoding by content:
+    /// the binary cache's magic wins, anything else parses as JSON.
     pub fn load(path: &std::path::Path) -> Result<Self> {
+        let bytes = std::fs::read(path)?;
+        if super::params_bin::is_binary(&bytes) {
+            return super::params_bin::decode(&bytes);
+        }
+        let text = String::from_utf8(bytes)
+            .map_err(|_| Error::Other(format!("params {}: not utf-8 JSON", path.display())))?;
         use crate::util::jsonio::JsonIo;
-        Self::load_json(path)
+        Self::from_json(&crate::util::Json::parse(&text)?)
+    }
+
+    /// Resolve an arrival spec against these fitted models — the single
+    /// place an [`ArrivalSpec`] becomes a live [`ArrivalModel`] (the
+    /// simulation core and the trace analytics both go through here).
+    pub fn resolve_arrival(&self, spec: ArrivalSpec) -> ArrivalModel {
+        match spec {
+            ArrivalSpec::Random => self.arrival_random.clone(),
+            ArrivalSpec::Profile => self.arrival_profile.clone(),
+            ArrivalSpec::Replay => self.arrival_replay.clone(),
+            ArrivalSpec::Poisson { mean_interarrival } => {
+                ArrivalModel::Poisson { mean_interarrival }
+            }
+        }
     }
 
     pub fn train_gmm(&self, fw: Framework) -> &Gmm1 {
@@ -312,6 +348,30 @@ mod tests {
         assert_eq!(back.train_log_gmm.len(), 5);
         assert!((back.preproc_curve.b - p.preproc_curve.b).abs() < 1e-12);
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn params_roundtrip_binary_autodetected() {
+        // `.bin` selects the binary cache; `load` detects it by magic
+        let p = fitted();
+        let dir = std::env::temp_dir();
+        let bin = dir.join("pipesim_params_test_cache.bin");
+        let json = dir.join("pipesim_params_test_cache.json");
+        p.save(&bin).unwrap();
+        p.save(&json).unwrap();
+        let back = SimParams::load(&bin).unwrap();
+        // bit-exact, not approximate: a run from either encoding digests
+        // identically
+        assert_eq!(back.preproc_curve.b.to_bits(), p.preproc_curve.b.to_bits());
+        assert_eq!(back.eval_log_gmm.mu, p.eval_log_gmm.mu);
+        let bin_len = std::fs::metadata(&bin).unwrap().len();
+        let json_len = std::fs::metadata(&json).unwrap().len();
+        assert!(
+            bin_len < json_len,
+            "binary cache ({bin_len} B) should undercut JSON ({json_len} B)"
+        );
+        std::fs::remove_file(bin).ok();
+        std::fs::remove_file(json).ok();
     }
 
     #[test]

@@ -1,0 +1,419 @@
+//! Binary cache of fitted [`SimParams`] — the trace codec's byte
+//! vocabulary (`util::binio`) applied to the fitted-parameter bundle.
+//!
+//! JSON parsing of `sim_params.json` dominates sweep startup for tiny
+//! cells (ROADMAP follow-up): the profile alone is 168 fitted
+//! distributions and the replay trace thousands of gaps, all re-parsed
+//! from ASCII floats on every CLI invocation. The binary form
+//! (`fit --out params.bin`) loads with zero float formatting/parsing and
+//! is bit-exact, so a run started from either encoding produces the same
+//! digest. `SimParams::load` auto-detects the format by magic.
+
+use std::sync::Arc;
+
+use crate::arrivals::{ArrivalModel, ArrivalProfile, ReplayTrace};
+use crate::error::{Error, Result};
+use crate::model::Framework;
+use crate::stats::dist::{Dist, ExpWeibull, Exponential, LogNormal, Normal, Pareto, Weibull};
+use crate::stats::gmm::{Gmm1, Gmm3};
+use crate::stats::ExpCurve;
+use crate::util::binio::{ByteReader, ByteWriter};
+
+use super::params::{ModelLaws, SimParams};
+
+/// File magic: **P**ipe**S**im **P**arameter **B**undle.
+pub const MAGIC: &[u8; 4] = b"PSPB";
+/// Current binary format version.
+pub const FORMAT_VERSION: u16 = 1;
+
+/// Does this byte prefix identify a binary parameter bundle?
+pub fn is_binary(bytes: &[u8]) -> bool {
+    bytes.len() >= MAGIC.len() && &bytes[..MAGIC.len()] == MAGIC
+}
+
+/// Serialize fitted parameters to the binary cache format.
+pub fn encode(p: &SimParams) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.header(MAGIC, FORMAT_VERSION);
+    gmm3(&mut w, &p.asset_gmm);
+    w.varint(p.train_log_gmm.len() as u64);
+    for g in &p.train_log_gmm {
+        gmm1(&mut w, g);
+    }
+    gmm1(&mut w, &p.eval_log_gmm);
+    w.f64(p.preproc_curve.a);
+    w.f64(p.preproc_curve.b);
+    w.f64(p.preproc_curve.c);
+    w.f64(p.preproc_noise.mu);
+    w.f64(p.preproc_noise.sigma);
+    arrival(&mut w, &p.arrival_random);
+    arrival(&mut w, &p.arrival_profile);
+    arrival(&mut w, &p.arrival_replay);
+    w.f64(p.mean_interarrival);
+    for v in [
+        p.model_laws.perf_mean,
+        p.model_laws.perf_sd,
+        p.model_laws.size_ln_mean,
+        p.model_laws.size_ln_sd,
+        p.model_laws.inference_ln_mean,
+        p.model_laws.inference_ln_sd,
+        p.model_laws.clever_max,
+    ] {
+        w.f64(v);
+    }
+    w.into_bytes()
+}
+
+/// Parse a binary parameter bundle.
+pub fn decode(bytes: &[u8]) -> Result<SimParams> {
+    let mut r = ByteReader::new(bytes);
+    r.check_header(MAGIC, FORMAT_VERSION, "params")?;
+    let asset_gmm = Arc::new(read_gmm3(&mut r)?);
+    // every length prefix below is validated against the remaining
+    // input (len_prefix_for), so corrupt counts cannot force oversized
+    // allocations before the data itself fails to parse
+    let n_train = r.len_prefix_for(1)?;
+    if n_train != Framework::ALL.len() {
+        // the simulator indexes this by Framework::index — a short list
+        // would panic at sample time, not at load time
+        return Err(Error::Other(format!(
+            "params: {n_train} train mixtures, expected {}",
+            Framework::ALL.len()
+        )));
+    }
+    let mut train_log_gmm = Vec::with_capacity(n_train);
+    for _ in 0..n_train {
+        train_log_gmm.push(Arc::new(read_gmm1(&mut r)?));
+    }
+    let eval_log_gmm = Arc::new(read_gmm1(&mut r)?);
+    let preproc_curve = ExpCurve {
+        a: finite(&mut r)?,
+        b: finite(&mut r)?,
+        c: finite(&mut r)?,
+    };
+    let preproc_noise = LogNormal::new(finite(&mut r)?, positive(&mut r)?);
+    let arrival_random = read_arrival(&mut r)?;
+    let arrival_profile = read_arrival(&mut r)?;
+    let arrival_replay = read_arrival(&mut r)?;
+    let mean_interarrival = positive(&mut r)?;
+    let model_laws = ModelLaws {
+        perf_mean: finite(&mut r)?,
+        perf_sd: finite(&mut r)?,
+        size_ln_mean: finite(&mut r)?,
+        size_ln_sd: finite(&mut r)?,
+        inference_ln_mean: finite(&mut r)?,
+        inference_ln_sd: finite(&mut r)?,
+        clever_max: finite(&mut r)?,
+    };
+    r.expect_eof("params")?;
+    Ok(SimParams {
+        asset_gmm,
+        train_log_gmm,
+        eval_log_gmm,
+        preproc_curve,
+        preproc_noise,
+        arrival_random,
+        arrival_profile,
+        arrival_replay,
+        mean_interarrival,
+        model_laws,
+    })
+}
+
+fn gmm1(w: &mut ByteWriter, g: &Gmm1) {
+    w.varint(g.logw.len() as u64);
+    for &v in g.logw.iter().chain(&g.mu).chain(&g.logsd) {
+        w.f64(v);
+    }
+}
+
+fn read_gmm1(r: &mut ByteReader) -> Result<Gmm1> {
+    // 3 columns x 8 bytes per component
+    let k = r.len_prefix_for(24)?;
+    if k == 0 {
+        // sampling an empty mixture would panic, so reject at load time
+        return Err(Error::Other("params: empty gmm1 mixture".into()));
+    }
+    let col = |r: &mut ByteReader| -> Result<Vec<f64>> { (0..k).map(|_| finite(r)).collect() };
+    Ok(Gmm1 {
+        logw: col(r)?,
+        mu: col(r)?,
+        logsd: col(r)?,
+    })
+}
+
+fn gmm3(w: &mut ByteWriter, g: &Gmm3) {
+    w.varint(g.logw.len() as u64);
+    for &v in &g.logw {
+        w.f64(v);
+    }
+    for row in &g.mu {
+        for &v in row {
+            w.f64(v);
+        }
+    }
+    for m in g.cchol.iter().chain(&g.pchol) {
+        for row in m {
+            for &v in row {
+                w.f64(v);
+            }
+        }
+    }
+}
+
+fn read_gmm3(r: &mut ByteReader) -> Result<Gmm3> {
+    // (1 + 3 + 9 + 9) f64s per component
+    let k = r.len_prefix_for(176)?;
+    if k == 0 {
+        return Err(Error::Other("params: empty gmm3 mixture".into()));
+    }
+    let logw: Vec<f64> = (0..k).map(|_| finite(r)).collect::<Result<_>>()?;
+    let mut mu = Vec::with_capacity(k);
+    for _ in 0..k {
+        mu.push([finite(r)?, finite(r)?, finite(r)?]);
+    }
+    let mat33 = |r: &mut ByteReader| -> Result<Vec<[[f64; 3]; 3]>> {
+        (0..k)
+            .map(|_| {
+                Ok([
+                    [finite(r)?, finite(r)?, finite(r)?],
+                    [finite(r)?, finite(r)?, finite(r)?],
+                    [finite(r)?, finite(r)?, finite(r)?],
+                ])
+            })
+            .collect()
+    };
+    Ok(Gmm3 {
+        logw,
+        mu,
+        cchol: mat33(r)?,
+        pchol: mat33(r)?,
+    })
+}
+
+// Distribution family tags; append-only (format versioning rule).
+const DIST_NORMAL: u8 = 0;
+const DIST_LOGNORMAL: u8 = 1;
+const DIST_EXPONENTIAL: u8 = 2;
+const DIST_WEIBULL: u8 = 3;
+const DIST_EXPWEIBULL: u8 = 4;
+const DIST_PARETO: u8 = 5;
+
+fn dist(w: &mut ByteWriter, d: &Dist) {
+    match d {
+        Dist::Normal(d) => {
+            w.u8(DIST_NORMAL);
+            w.f64(d.mu);
+            w.f64(d.sigma);
+        }
+        Dist::LogNormal(d) => {
+            w.u8(DIST_LOGNORMAL);
+            w.f64(d.mu);
+            w.f64(d.sigma);
+        }
+        Dist::Exponential(d) => {
+            w.u8(DIST_EXPONENTIAL);
+            w.f64(d.lambda);
+        }
+        Dist::Weibull(d) => {
+            w.u8(DIST_WEIBULL);
+            w.f64(d.k);
+            w.f64(d.lambda);
+        }
+        Dist::ExpWeibull(d) => {
+            w.u8(DIST_EXPWEIBULL);
+            w.f64(d.alpha);
+            w.f64(d.k);
+            w.f64(d.lambda);
+        }
+        Dist::Pareto(d) => {
+            w.u8(DIST_PARETO);
+            w.f64(d.xm);
+            w.f64(d.alpha);
+        }
+    }
+}
+
+/// A finite value (location parameters may be any finite float).
+fn finite(r: &mut ByteReader) -> Result<f64> {
+    let v = r.f64()?;
+    if !v.is_finite() {
+        return Err(Error::Other(format!("params: non-finite value {v}")));
+    }
+    Ok(v)
+}
+
+/// A strictly positive finite value (scale/shape parameters) — the dist
+/// constructors `assert!` on these, so corrupt bytes must be rejected
+/// here to keep decode error-returning rather than panicking.
+fn positive(r: &mut ByteReader) -> Result<f64> {
+    let v = finite(r)?;
+    if v <= 0.0 {
+        return Err(Error::Other(format!("params: non-positive scale/shape {v}")));
+    }
+    Ok(v)
+}
+
+fn read_dist(r: &mut ByteReader) -> Result<Dist> {
+    Ok(match r.u8()? {
+        DIST_NORMAL => Dist::Normal(Normal::new(finite(r)?, positive(r)?)),
+        DIST_LOGNORMAL => Dist::LogNormal(LogNormal::new(finite(r)?, positive(r)?)),
+        DIST_EXPONENTIAL => Dist::Exponential(Exponential::new(positive(r)?)),
+        DIST_WEIBULL => Dist::Weibull(Weibull::new(positive(r)?, positive(r)?)),
+        DIST_EXPWEIBULL => Dist::ExpWeibull(ExpWeibull::new(positive(r)?, positive(r)?, positive(r)?)),
+        DIST_PARETO => Dist::Pareto(Pareto::new(positive(r)?, positive(r)?)),
+        tag => return Err(Error::Other(format!("params: unknown dist tag {tag}"))),
+    })
+}
+
+// Arrival-model tags.
+const ARR_RANDOM: u8 = 0;
+const ARR_PROFILE: u8 = 1;
+const ARR_POISSON: u8 = 2;
+const ARR_REPLAY: u8 = 3;
+
+fn arrival(w: &mut ByteWriter, m: &ArrivalModel) {
+    match m {
+        ArrivalModel::Random(d) => {
+            w.u8(ARR_RANDOM);
+            dist(w, d);
+        }
+        ArrivalModel::Profile(p) => {
+            w.u8(ARR_PROFILE);
+            w.varint(p.clusters.len() as u64);
+            for d in &p.clusters {
+                dist(w, d);
+            }
+            w.varint(p.sse.len() as u64);
+            for &v in &p.sse {
+                w.f64(v);
+            }
+        }
+        ArrivalModel::Poisson { mean_interarrival } => {
+            w.u8(ARR_POISSON);
+            w.f64(*mean_interarrival);
+        }
+        ArrivalModel::Replay(trace) => {
+            w.u8(ARR_REPLAY);
+            w.varint(trace.gaps.len() as u64);
+            for &g in trace.gaps.iter() {
+                w.f64(g);
+            }
+        }
+    }
+}
+
+fn read_arrival(r: &mut ByteReader) -> Result<ArrivalModel> {
+    Ok(match r.u8()? {
+        ARR_RANDOM => ArrivalModel::Random(read_dist(r)?),
+        ARR_PROFILE => {
+            // smallest family record: tag + one f64 parameter
+            let n = r.len_prefix_for(9)?;
+            let clusters: Vec<Dist> = (0..n).map(|_| read_dist(r)).collect::<Result<_>>()?;
+            let n_sse = r.len_prefix_for(8)?;
+            let sse: Vec<f64> = (0..n_sse).map(|_| finite(r)).collect::<Result<_>>()?;
+            if clusters.len() != 168 {
+                return Err(Error::Other(format!(
+                    "params: profile has {} clusters, expected 168",
+                    clusters.len()
+                )));
+            }
+            ArrivalModel::Profile(Arc::new(ArrivalProfile { clusters, sse }))
+        }
+        ARR_POISSON => ArrivalModel::Poisson {
+            mean_interarrival: r.f64()?,
+        },
+        ARR_REPLAY => {
+            let n = r.len_prefix_for(8)?;
+            let gaps: Vec<f64> = (0..n).map(|_| positive(r)).collect::<Result<_>>()?;
+            if gaps.is_empty() {
+                return Err(Error::Other("params: empty replay trace".into()));
+            }
+            ArrivalModel::Replay(ReplayTrace::new(gaps))
+        }
+        tag => return Err(Error::Other(format!("params: unknown arrival tag {tag}"))),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::fit_params;
+    use crate::empirical::GroundTruth;
+
+    fn fitted() -> SimParams {
+        let db = GroundTruth::new(19).generate_weeks(2);
+        fit_params(&db, None).unwrap()
+    }
+
+    #[test]
+    fn binary_roundtrip_is_bit_exact() {
+        let p = fitted();
+        let bytes = encode(&p);
+        assert!(is_binary(&bytes));
+        let back = decode(&bytes).unwrap();
+        assert_eq!(back.asset_gmm.logw, p.asset_gmm.logw);
+        assert_eq!(back.asset_gmm.pchol, p.asset_gmm.pchol);
+        assert_eq!(back.train_log_gmm.len(), p.train_log_gmm.len());
+        for (a, b) in back.train_log_gmm.iter().zip(&p.train_log_gmm) {
+            assert_eq!(a.mu, b.mu);
+            assert_eq!(a.logsd, b.logsd);
+        }
+        assert_eq!(back.preproc_curve.b.to_bits(), p.preproc_curve.b.to_bits());
+        assert_eq!(
+            back.mean_interarrival.to_bits(),
+            p.mean_interarrival.to_bits()
+        );
+        // profile clusters survive family + parameter intact
+        let (ArrivalModel::Profile(a), ArrivalModel::Profile(b)) =
+            (&back.arrival_profile, &p.arrival_profile)
+        else {
+            panic!("profile models expected");
+        };
+        assert_eq!(a.clusters.len(), 168);
+        assert_eq!(a.clusters, b.clusters);
+        assert_eq!(a.sse, b.sse);
+        // encoding is deterministic
+        assert_eq!(encode(&back), bytes);
+    }
+
+    #[test]
+    fn corrupt_dist_params_error_instead_of_panicking() {
+        // the dist constructors assert on their arguments; decode must
+        // reject bad values as Err, never abort
+        let mut w = ByteWriter::new();
+        w.u8(DIST_NORMAL);
+        w.f64(0.0);
+        w.f64(-1.0); // sigma <= 0
+        let bytes = w.into_bytes();
+        assert!(read_dist(&mut ByteReader::new(&bytes)).is_err());
+        let mut w = ByteWriter::new();
+        w.u8(DIST_EXPONENTIAL);
+        w.f64(f64::NAN);
+        let bytes = w.into_bytes();
+        assert!(read_dist(&mut ByteReader::new(&bytes)).is_err());
+        let mut w = ByteWriter::new();
+        w.u8(DIST_PARETO);
+        w.f64(f64::INFINITY);
+        w.f64(1.5);
+        let bytes = w.into_bytes();
+        assert!(read_dist(&mut ByteReader::new(&bytes)).is_err());
+    }
+
+    #[test]
+    fn rejects_corrupt_bundles() {
+        let p = fitted();
+        let bytes = encode(&p);
+        assert!(decode(&bytes[..bytes.len() / 2]).is_err());
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(decode(&bad).is_err());
+        assert!(!is_binary(&bad));
+        let mut bad = bytes.clone();
+        bad[4] = 99;
+        assert!(decode(&bad).is_err());
+        let mut bad = bytes;
+        bad.push(7);
+        assert!(decode(&bad).is_err());
+    }
+}

@@ -1,7 +1,21 @@
 //! Experiment results: counters, summaries, and the trace store.
 
 use crate::stats::Summary;
+use crate::trace::Trace;
 use crate::tsdb::TsStore;
+
+/// Version prefix of [`ExperimentResult::digest`] strings. Bump whenever
+/// a behavioral fix legitimately changes deterministic outcomes, so
+/// digests from different behavior generations can never be confused
+/// for a nondeterminism bug.
+///
+/// History:
+/// * v1 (implicit, unprefixed) — through the monitor that stopped
+///   sampling at `arrivals_stopped && live == 0`.
+/// * v2 — the monitor keeps sampling while models remain deployed
+///   (matching `on_drift`'s drained condition), so runtime-view series
+///   cover the retraining load; tsdb point counts changed.
+pub const DIGEST_VERSION: u32 = 2;
 
 /// Canonical series names recorded by the experiment runner.
 pub mod series {
@@ -66,6 +80,15 @@ pub struct ExperimentResult {
     pub peak_rss_mb: f64,
     pub sampler_backend: String,
     pub pool_refills: u64,
+    /// Resolved scheduler strategy label (`StrategySpec::label`), so
+    /// exported reports are self-describing.
+    pub scheduler: String,
+    /// Resolved retraining-trigger label, or `"off"` when the runtime
+    /// view is disabled.
+    pub trigger: String,
+    /// The captured event trace when `cfg.capture_trace` was set.
+    /// Derivable run description, deliberately not part of the digest.
+    pub trace: Option<Trace>,
 }
 
 impl ExperimentResult {
@@ -89,14 +112,16 @@ impl ExperimentResult {
     /// floats rendered as exact IEEE-754 bit patterns, wall-clock and RSS
     /// excluded. Two runs of the same (config, seed) must produce
     /// byte-identical digests regardless of thread count, machine, or
-    /// load; the sweep engine and the determinism property tests compare
-    /// these strings directly.
+    /// load; the sweep engine, the determinism property tests, and the
+    /// trace capture→replay round-trip compare these strings directly.
+    /// The leading `v<N>;` marker is [`DIGEST_VERSION`].
     pub fn digest(&self) -> String {
         use std::fmt::Write;
         let mut s = String::with_capacity(256);
         let _ = write!(
             s,
-            "name={};seed={};horizon={:016x};arrived={};completed={};tasks={};gates={};\
+            "v{DIGEST_VERSION};\
+             name={};seed={};horizon={:016x};arrived={};completed={};tasks={};gates={};\
              retrains={};deployed={};events={}",
             self.name,
             self.seed,
@@ -175,6 +200,11 @@ impl ExperimentResult {
         );
         let _ = writeln!(
             s,
+            "  strategies       scheduler {} | trigger {}",
+            self.scheduler, self.trigger
+        );
+        let _ = writeln!(
+            s,
             "  traffic          read {:.2} GB  write {:.2} GB (incl. TCP overhead)",
             self.wire_read_bytes / 1e9,
             self.wire_write_bytes / 1e9
@@ -249,6 +279,9 @@ mod tests {
             peak_rss_mb: 100.0,
             sampler_backend: "cpu".into(),
             pool_refills: 3,
+            scheduler: "fifo".into(),
+            trigger: "off".into(),
+            trace: None,
         }
     }
 
@@ -265,6 +298,9 @@ mod tests {
         assert!(s.contains("arrived 100"));
         assert!(s.contains("training 50.0%"));
         assert!(s.contains("µs/pipeline"));
+        // resolved strategy labels make the report self-describing
+        assert!(s.contains("scheduler fifo"));
+        assert!(s.contains("trigger off"));
     }
 
     #[test]
@@ -275,7 +311,7 @@ mod tests {
         b.peak_rss_mb = 7.0;
         assert_eq!(a.digest(), b.digest());
         // in_flight is derivable (arrived - completed): kept out of the
-        // digest so pre-refactor digest strings remain comparable
+        // digest so same-version digest strings remain comparable
         assert!(!a.digest().contains("in_flight"));
         let mut c = empty_result();
         c.completed += 1;
@@ -283,6 +319,36 @@ mod tests {
         let mut d = empty_result();
         d.util_training += 1e-15;
         assert_ne!(a.digest(), d.digest(), "digest must be bit-exact");
+    }
+
+    #[test]
+    fn digest_carries_behavior_version() {
+        // digest-compat: the v2 bump marks the monitor drained-condition
+        // fix — digests from different behavior generations must never
+        // compare equal by accident
+        let d = empty_result().digest();
+        assert!(d.starts_with(&format!("v{DIGEST_VERSION};name=")), "{d}");
+        assert_eq!(DIGEST_VERSION, 2);
+    }
+
+    #[test]
+    fn strategy_labels_and_trace_stay_out_of_digest() {
+        let a = empty_result();
+        let mut b = empty_result();
+        b.scheduler = "edf:slack_per_class=900".into();
+        b.trigger = "periodic:interval=3600".into();
+        b.trace = Some(Trace {
+            meta: crate::trace::TraceMeta {
+                name: "t".into(),
+                seed: 1,
+                horizon: 86400.0,
+                config_json: String::new(),
+                extra: Vec::new(),
+            },
+            events: Vec::new(),
+        });
+        // labels/trace describe the run; the digest captures outcomes
+        assert_eq!(a.digest(), b.digest());
     }
 
     #[test]

@@ -33,9 +33,10 @@ use crate::runtime::{Runtime, K1};
 use crate::stats::gmm::Gmm1;
 use crate::stats::rng::Pcg64;
 use crate::synth::{AssetSynthesizer, PipelineSynthesizer, TaskList};
+use crate::trace::{MemorySink, NullSink, Trace, TraceEvent, TraceEventKind, TraceMeta, TraceSink};
 use crate::tsdb::{SeriesHandle, SeriesKey, TsStore};
 
-use super::config::{ArrivalSpec, ExperimentConfig};
+use super::config::ExperimentConfig;
 use super::params::SimParams;
 use super::result::{rss_mb, series, ExperimentResult};
 use super::strategy::{build_scheduler, build_trigger};
@@ -173,16 +174,24 @@ pub(super) struct Simulation {
     rng_noise: Pcg64,
     rng_drift: Pcg64,
     c: Counters,
+    // event-level trace capture (NullSink when cfg.capture_trace is off;
+    // every emission site checks `capture` so the off path costs one
+    // branch and zero allocations)
+    capture: bool,
+    sink: Box<dyn TraceSink>,
 }
 
 impl Simulation {
     /// Build the world: RNG substreams, samplers, resources (with their
     /// schedulers built from `cfg.infra.scheduler`), the retraining
     /// trigger, and the primed calendar. Assumes `cfg` already validated.
+    /// `arrival_override` replaces the config-selected arrival process
+    /// (the trace-replay path feeds recorded gaps through it).
     pub(super) fn new(
         cfg: ExperimentConfig,
         params: Arc<SimParams>,
         runtime: Option<Arc<Runtime>>,
+        arrival_override: Option<ArrivalModel>,
     ) -> Result<Self> {
         let backend = match &runtime {
             Some(rt) => Backend::Runtime(rt.clone()),
@@ -221,13 +230,9 @@ impl Simulation {
             pad_gmm(&params.eval_log_gmm),
             root.substream(0x200),
         );
-        let mut arrival = match cfg.arrival {
-            ArrivalSpec::Random => params.arrival_random.clone(),
-            ArrivalSpec::Profile => params.arrival_profile.clone(),
-            ArrivalSpec::Replay => params.arrival_replay.clone(),
-            ArrivalSpec::Poisson { mean_interarrival } => {
-                ArrivalModel::Poisson { mean_interarrival }
-            }
+        let mut arrival = match arrival_override {
+            Some(model) => model,
+            None => params.resolve_arrival(cfg.arrival),
         };
         let compression = CompressionModel::from_table1();
 
@@ -247,9 +252,23 @@ impl Simulation {
         let mut db = TsStore::new();
         let h = SeriesHandles::intern(&mut db);
 
+        // event-trace capture
+        let capture = cfg.capture_trace;
+        let mut sink: Box<dyn TraceSink> = if capture {
+            Box::new(MemorySink::new())
+        } else {
+            Box::new(NullSink)
+        };
+
         // prime the calendar
         let mut cal: Calendar<Event> = Calendar::new();
         let first_gap = arrival.next_interarrival(0.0, cfg.interarrival_factor, &mut rng_arrival);
+        if capture {
+            sink.record(&TraceEvent {
+                t: 0.0,
+                kind: TraceEventKind::ArrivalGapDrawn { gap: first_gap },
+            });
+        }
         cal.schedule(first_gap, Event::Arrival);
         cal.schedule(cfg.sample_interval, Event::Monitor);
         if cfg.runtime_view.enabled {
@@ -282,6 +301,8 @@ impl Simulation {
                 peak_rss: rss_mb(),
                 ..Counters::default()
             },
+            capture,
+            sink,
         })
     }
 
@@ -328,6 +349,12 @@ impl Simulation {
                 self.cfg.interarrival_factor,
                 &mut self.rng_arrival,
             );
+            if self.capture {
+                self.sink.record(&TraceEvent {
+                    t,
+                    kind: TraceEventKind::ArrivalGapDrawn { gap },
+                });
+            }
             if t + gap <= self.cfg.horizon {
                 self.cal.schedule(gap, Event::Arrival);
             } else {
@@ -362,8 +389,21 @@ impl Simulation {
             // user-assigned priority class 1..=10
             priority: 1.0 + self.rng_noise.below(10) as f64,
         };
+        let (n_tasks, priority) = (st.tasks.len() as u8, st.priority);
         let pid = self.alloc_pid(st);
         self.c.live += 1;
+        if self.capture {
+            self.sink.record(&TraceEvent {
+                t,
+                kind: TraceEventKind::PipelineArrival {
+                    pid,
+                    framework: fw,
+                    n_tasks,
+                    priority,
+                    retrain_of: None,
+                },
+            });
+        }
         self.start_task(pid)
     }
 
@@ -397,9 +437,10 @@ impl Simulation {
         let t_now = self.cal.now();
         let exec = self.sample_exec(pid)?;
         let store = self.cfg.infra.store;
-        let (task, read_wire, write_wire, total, job) = {
+        let (task, fw_tag, read_t, write_t, read_wire, write_wire, total, job) = {
             let st = self.slab[pid as usize].as_mut().expect("live pipeline");
-            let task = st.tasks.get(st.cur).task;
+            let node = st.tasks.get(st.cur);
+            let task = node.task;
             if task == TaskType::Train {
                 st.train_t = exec;
             }
@@ -409,7 +450,16 @@ impl Simulation {
             st.pending_write = store.write_time(write_b);
             let total = st.pending_read + st.pending_exec + st.pending_write;
             let job = JobCtx::new(total, st.priority, st.arrived_at);
-            (task, store.wire_bytes(read_b), store.wire_bytes(write_b), total, job)
+            (
+                task,
+                node.framework,
+                st.pending_read,
+                st.pending_write,
+                store.wire_bytes(read_b),
+                store.wire_bytes(write_b),
+                total,
+                job,
+            )
         };
         self.c.wire_read += read_wire;
         self.c.wire_write += write_wire;
@@ -417,12 +467,43 @@ impl Simulation {
             self.db.append(self.h.traffic_r, t_now, read_wire);
             self.db.append(self.h.traffic_w, t_now, write_wire);
         }
-        let res = match ResourceKind::for_task(task) {
-            ResourceKind::Training => &mut self.training,
-            ResourceKind::Compute => &mut self.compute,
+        let kind = ResourceKind::for_task(task);
+        let acquired = {
+            let res = match kind {
+                ResourceKind::Training => &mut self.training,
+                ResourceKind::Compute => &mut self.compute,
+            };
+            res.request(t_now, pid, job)
         };
-        if let AcquireResult::Acquired = res.request(t_now, pid, job) {
-            self.cal.schedule(total, Event::TaskDone(pid));
+        match acquired {
+            AcquireResult::Acquired => {
+                if self.capture {
+                    self.sink.record(&TraceEvent {
+                        t: t_now,
+                        kind: TraceEventKind::TaskStarted {
+                            pid,
+                            task,
+                            framework: fw_tag,
+                            exec,
+                            read: read_t,
+                            write: write_t,
+                        },
+                    });
+                }
+                self.cal.schedule(total, Event::TaskDone(pid));
+            }
+            AcquireResult::Queued => {
+                if self.capture {
+                    self.sink.record(&TraceEvent {
+                        t: t_now,
+                        kind: TraceEventKind::TaskQueued {
+                            pid,
+                            task,
+                            resource: kind,
+                        },
+                    });
+                }
+            }
         }
         Ok(())
     }
@@ -438,6 +519,17 @@ impl Simulation {
             let node = st.tasks.get(st.cur);
             (node.task, node.framework, st.pending_exec, ResourceKind::for_task(node.task))
         };
+        if self.capture {
+            self.sink.record(&TraceEvent {
+                t,
+                kind: TraceEventKind::TaskDone {
+                    pid,
+                    task,
+                    framework: fw_tag,
+                    exec: exec_dur,
+                },
+            });
+        }
         let granted = match kind {
             ResourceKind::Training => self.training.release(t),
             ResourceKind::Compute => self.compute.release(t),
@@ -446,12 +538,39 @@ impl Simulation {
             let w = self.slab[g.token as usize].as_mut().expect("queued pipeline");
             w.total_wait += g.waited;
             let total = w.pending_read + w.pending_exec + w.pending_write;
+            let node = w.tasks.get(w.cur);
+            let (g_exec, g_read, g_write) = (w.pending_exec, w.pending_read, w.pending_write);
             if self.cfg.record_traces {
                 let h = match kind {
                     ResourceKind::Training => self.h.wait_t,
                     ResourceKind::Compute => self.h.wait_c,
                 };
                 self.db.append(h, t, g.waited);
+            }
+            if self.capture {
+                self.sink.record(&TraceEvent {
+                    t,
+                    kind: TraceEventKind::TaskGranted {
+                        pid: g.token,
+                        task: node.task,
+                        resource: kind,
+                        waited: g.waited,
+                    },
+                });
+                // the grant is also the task's service start: emit the
+                // paired TaskStarted so queued tasks carry their
+                // exec/read/write components like immediate starts do
+                self.sink.record(&TraceEvent {
+                    t,
+                    kind: TraceEventKind::TaskStarted {
+                        pid: g.token,
+                        task: node.task,
+                        framework: node.framework,
+                        exec: g_exec,
+                        read: g_read,
+                        write: g_write,
+                    },
+                });
             }
             self.cal.schedule(total, Event::TaskDone(g.token));
         }
@@ -493,6 +612,8 @@ impl Simulation {
     /// gate truncated the pipeline.
     fn apply_task_effects(&mut self, t: SimTime, pid: u32, task: TaskType) -> bool {
         let mut truncated = false;
+        // (pid, performance) to emit as a ModelMetricUpdate trace event
+        let mut metric_update = None;
         let st = self.slab[pid as usize].as_mut().expect("live");
         match task {
             TaskType::Train => {
@@ -508,15 +629,18 @@ impl Simulation {
                 st.metrics.confidence =
                     st.metrics.performance * (0.9 + 0.1 * self.rng_noise.uniform());
                 st.model_bytes = st.metrics.size_mb * 1e6;
+                metric_update = Some(st.metrics.performance);
             }
             TaskType::Compress => {
                 let prune = 0.2 + 0.6 * self.rng_noise.uniform();
                 st.metrics = self.compression.apply(prune, &st.metrics);
                 st.model_bytes = st.metrics.size_mb * 1e6;
+                metric_update = Some(st.metrics.performance);
             }
             TaskType::Harden => {
                 st.metrics.clever_score = (st.metrics.clever_score * 1.5).min(5.0);
                 st.metrics.performance *= 0.99;
+                metric_update = Some(st.metrics.performance);
             }
             TaskType::Evaluate => {
                 // quality gate: pipelines whose model fails are aborted
@@ -527,8 +651,10 @@ impl Simulation {
             }
             TaskType::Deploy => {
                 if self.cfg.runtime_view.enabled {
+                    let mut deployed_slot = None;
                     if let Some(slot) = st.retrain_of {
                         self.deployed[slot as usize].redeploy(t, st.metrics.performance);
+                        deployed_slot = Some((slot, self.deployed[slot as usize].version));
                     } else if self.deployed.len() < self.cfg.runtime_view.max_models {
                         self.deployed.push(DeployedModel::new(
                             self.c.models_deployed,
@@ -537,11 +663,36 @@ impl Simulation {
                             t,
                             1,
                         ));
+                        deployed_slot = Some((self.deployed.len() as u32 - 1, 1));
                     }
                     self.c.models_deployed += 1;
+                    if self.capture {
+                        if let Some((slot, version)) = deployed_slot {
+                            self.sink.record(&TraceEvent {
+                                t,
+                                kind: TraceEventKind::ModelDeployed {
+                                    slot,
+                                    performance: st.metrics.performance,
+                                    version,
+                                },
+                            });
+                        }
+                    }
                 }
             }
             TaskType::Preprocess => {}
+        }
+        if self.capture {
+            if let Some(performance) = metric_update {
+                self.sink.record(&TraceEvent {
+                    t,
+                    kind: TraceEventKind::ModelMetricUpdate {
+                        pid,
+                        task,
+                        performance,
+                    },
+                });
+            }
         }
         truncated
     }
@@ -557,6 +708,17 @@ impl Simulation {
         }
         self.db.append(self.h.completions, t, t - st.arrived_at);
         self.db.append(self.h.pipeline_wait, t, st.total_wait);
+        if self.capture {
+            self.sink.record(&TraceEvent {
+                t,
+                kind: TraceEventKind::PipelineDone {
+                    pid,
+                    makespan: t - st.arrived_at,
+                    total_wait: st.total_wait,
+                    truncated,
+                },
+            });
+        }
         if let (Some(slot), true) = (st.retrain_of, truncated) {
             // failed retraining: allow future triggers
             self.deployed[slot as usize].retraining = false;
@@ -587,8 +749,13 @@ impl Simulation {
             self.c.peak_rss = rss;
         }
         // stop sampling once the system has fully drained — otherwise a
-        // max_pipelines run with a far horizon would tick forever
-        let drained = self.c.arrivals_stopped && self.c.live == 0;
+        // max_pipelines run with a far horizon would tick forever. The
+        // condition matches `on_drift`'s: while models remain deployed,
+        // retraining launches can revive the system, so sampling must
+        // continue or the utilization/queue/model_perf series would
+        // under-report the retraining load (ROADMAP open item; digest
+        // version bumped to 2 for this).
+        let drained = self.c.arrivals_stopped && self.c.live == 0 && self.deployed.is_empty();
         if !drained && t + self.cfg.sample_interval <= self.cfg.horizon {
             self.cal.schedule(self.cfg.sample_interval, Event::Monitor);
         }
@@ -612,6 +779,18 @@ impl Simulation {
             }
             if let Some(delay) = self.trigger.decide(&m.trigger_ctx(t)) {
                 m.retraining = true;
+                if self.capture {
+                    let (drift, performance) = (m.drift, m.performance);
+                    self.sink.record(&TraceEvent {
+                        t,
+                        kind: TraceEventKind::RetrainTriggered {
+                            slot: slot as u32,
+                            drift,
+                            performance,
+                            delay,
+                        },
+                    });
+                }
                 self.cal.schedule(delay, Event::RetrainLaunch(slot as u32));
             }
         }
@@ -626,6 +805,12 @@ impl Simulation {
     fn on_retrain_launch(&mut self, t: SimTime, slot: u32) -> Result<()> {
         self.c.retrains += 1;
         self.db.append(self.h.retrains, t, 1.0);
+        if self.capture {
+            self.sink.record(&TraceEvent {
+                t,
+                kind: TraceEventKind::RetrainLaunched { slot },
+            });
+        }
         let fw = self.deployed[slot as usize].framework;
         let (asset, preproc_t) = self.asset_synth.next()?;
         // retraining pipeline: train – evaluate – deploy
@@ -652,13 +837,26 @@ impl Simulation {
         };
         self.c.arrived += 1;
         self.db.append(self.h.arrivals, t, 1.0);
+        let n_tasks = st.tasks.len() as u8;
         let pid = self.alloc_pid(st);
         self.c.live += 1;
+        if self.capture {
+            self.sink.record(&TraceEvent {
+                t,
+                kind: TraceEventKind::PipelineArrival {
+                    pid,
+                    framework: fw,
+                    n_tasks,
+                    priority: 0.0,
+                    retrain_of: Some(slot),
+                },
+            });
+        }
         self.start_task(pid)
     }
 
     /// Assemble the [`ExperimentResult`] from the final world state.
-    fn finish(self, started: std::time::Instant) -> ExperimentResult {
+    fn finish(mut self, started: std::time::Instant) -> ExperimentResult {
         let horizon_covered = self.cal.now().min(self.cfg.horizon);
         let final_perf = if self.deployed.is_empty() {
             0.0
@@ -667,6 +865,27 @@ impl Simulation {
         };
         let pool_refills = self.train_pools.iter().map(|p| p.refills).sum::<u64>()
             + self.eval_pool.refills;
+        let scheduler = self.cfg.infra.scheduler.label();
+        let trigger = if self.cfg.runtime_view.enabled {
+            self.cfg.runtime_view.trigger.label()
+        } else {
+            "off".to_string()
+        };
+        // everything in the trace meta is config-derived, so two captures
+        // of the same (config, seed) produce byte-identical trace files
+        let trace = self.capture.then(|| Trace {
+            meta: TraceMeta {
+                name: self.cfg.name.clone(),
+                seed: self.cfg.seed,
+                horizon: self.cfg.horizon,
+                config_json: self.cfg.to_json_text(),
+                extra: vec![
+                    ("scheduler".to_string(), scheduler.clone()),
+                    ("trigger".to_string(), trigger.clone()),
+                ],
+            },
+            events: self.sink.drain(),
+        });
         ExperimentResult {
             name: self.cfg.name,
             seed: self.cfg.seed,
@@ -692,6 +911,9 @@ impl Simulation {
             peak_rss_mb: self.c.peak_rss,
             sampler_backend: self.backend.name().into(),
             pool_refills,
+            scheduler,
+            trigger,
+            trace,
             tsdb: self.db,
         }
     }

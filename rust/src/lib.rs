@@ -14,8 +14,10 @@
 //!   [`des::sched`], retraining triggers in [`coordinator::triggers`],
 //!   the JSON-describable strategy registry in
 //!   [`coordinator::strategy`]), an embedded time-series store
-//!   ([`tsdb`]), the synthetic empirical substrate ([`empirical`]),
-//!   statistics ([`stats`]) and analytics ([`analytics`]).
+//!   ([`tsdb`]), first-class event traces with capture, a binary codec,
+//!   and replay ([`trace`]), the synthetic empirical substrate
+//!   ([`empirical`]), statistics ([`stats`]) and analytics
+//!   ([`analytics`]).
 //! * **L2/L1 (build-time Python)** — JAX compute graphs with a Pallas
 //!   E-step kernel, AOT-lowered to HLO text under `artifacts/` and executed
 //!   from [`runtime`] through the PJRT C API. Python never runs on the
@@ -43,6 +45,7 @@ pub mod model;
 pub mod runtime;
 pub mod stats;
 pub mod synth;
+pub mod trace;
 pub mod tsdb;
 pub mod util;
 
@@ -57,5 +60,6 @@ pub mod prelude {
     pub use crate::error::{Error, Result};
     pub use crate::model::{Framework, TaskType};
     pub use crate::stats::rng::Pcg64;
+    pub use crate::trace::{Trace, TraceEvent, TraceEventKind, TraceWorkload};
     pub use crate::tsdb::TsStore;
 }

@@ -14,22 +14,34 @@
 //!                  [--capacities 2,4,8] [--factors 0.5,1,2]
 //!                  [--schedulers fifo,sjf,edf:slack_per_class=900]
 //!                  [--triggers never,drift_threshold:threshold=0.05]
-//!                  [--traces] [--cpu] [--export CSV] — parallel
-//!                  replication/grid engine over capacities × load
-//!                  factors × operational strategies (per-cell trace
-//!                  recording off unless --traces)
-//!
-//! Strategy SPECs are `name` or `name:key=value:key=value`; names come
-//! from the strategy registry (`pipesim::coordinator::scheduler_names`).
+//!                  [--traces] [--trace-dir DIR] [--cpu] [--export CSV]
+//!                  — parallel replication/grid engine over capacities ×
+//!                  load factors × operational strategies (per-cell tsdb
+//!                  recording off unless --traces; --trace-dir captures
+//!                  and dumps one binary event trace per cell)
+//!   trace export   --params PARAMS.json [--config CFG.json] [--days D]
+//!                  [--arrival MODE] [--seed S] [--scheduler SPEC]
+//!                  [--out T.pst] [--jsonl T.jsonl] [--cpu] — run with
+//!                  event capture on and write the binary trace
+//!   trace stats    --in T.pst [--params PARAMS.json] — summary
+//!                  statistics (+ Q-Q vs the fits when params given)
+//!   trace replay   --in T.pst --params PARAMS.json [--cpu] — re-drive
+//!                  the simulation from the recorded arrival gaps;
+//!                  byte-identical digest given the capture's params
 //!   figures        --fig 8|9a|9b|10|11|12|table1|all [--out-dir DIR]
 //!   table1
 //!   qq             --db DB.json --params PARAMS.json [--days D] [--cpu]
 //!   scale          --params PARAMS.json --counts 1000,10000 [--cpu]
+//!
+//! Strategy SPECs are `name` or `name:key=value:key=value`; names come
+//! from the strategy registry (`pipesim::coordinator::scheduler_names`).
+//! `fit --out params.bin` writes the binary parameter cache instead of
+//! JSON; `simulate`/`sweep`/`trace` auto-detect either format.
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use pipesim::analytics::{figures, render_dashboard};
+use pipesim::analytics::{figures, render_dashboard, trace_qq, TraceSummary};
 use pipesim::coordinator::{
     fit_params_with_report, ArrivalSpec, Experiment, ExperimentConfig, SimParams, StrategySpec,
     Sweep,
@@ -38,11 +50,13 @@ use pipesim::des::DAY;
 use pipesim::empirical::{AnalyticsDb, GroundTruth};
 use pipesim::error::Error;
 use pipesim::runtime::Runtime;
+use pipesim::trace::{Trace, TraceWorkload};
 use pipesim::util::Args;
 use pipesim::Result;
 
 const USAGE: &str =
-    "usage: pipesim <gen-empirical|fit|simulate|sweep|figures|table1|qq|scale> [--options]
+    "usage: pipesim <gen-empirical|fit|simulate|sweep|trace|figures|table1|qq|scale> [--options]
+       pipesim trace <export|stats|replay> [--options]
 run `pipesim <subcommand> --help` semantics: see README.md";
 
 fn load_runtime(cpu: bool) -> Option<Arc<Runtime>> {
@@ -59,6 +73,14 @@ fn load_runtime(cpu: bool) -> Option<Arc<Runtime>> {
             None
         }
     }
+}
+
+/// Filesystem-safe version of a sweep cell name (strategy labels contain
+/// `:` and `=`).
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '.' { c } else { '_' })
+        .collect()
 }
 
 fn parse_arrival(s: &str) -> Result<ArrivalSpec> {
@@ -81,6 +103,13 @@ fn parse_arrival(s: &str) -> Result<ArrivalSpec> {
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     let sub = args.subcommand.clone().unwrap_or_default();
+    // only the grouped `trace` subcommand takes a second positional
+    if sub != "trace" {
+        if let Some(action) = &args.action {
+            eprintln!("unexpected argument '{action}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
     match sub.as_str() {
         "gen-empirical" => {
             let weeks: u32 = args.get_parse("weeks", 8)?;
@@ -182,6 +211,10 @@ fn main() -> Result<()> {
             // memory until aggregation, and nothing downstream reads the
             // per-cell trace stores unless the user asks for them
             base.record_traces = args.flag("traces");
+            // --trace-dir: capture the event-level trace of every cell
+            // and dump one binary trace file per cell after the run
+            let trace_dir = args.get_opt("trace-dir").map(PathBuf::from);
+            base.capture_trace = trace_dir.is_some();
             let export = args.get_opt("export");
             args.reject_unknown()?;
 
@@ -264,13 +297,118 @@ fn main() -> Result<()> {
                 sweep.len(),
                 caps.len() * facs.len() * scheds.len() * trigs.len()
             );
-            let out = sweep.run()?;
+            let mut out = sweep.run()?;
             print!("{}", out.table());
             if let Some(path) = export {
                 std::fs::write(&path, out.to_csv())?;
                 println!("cells -> {path}");
             }
+            if let Some(dir) = &trace_dir {
+                std::fs::create_dir_all(dir)?;
+                let mut written = 0usize;
+                for (i, r) in out.results.iter_mut().enumerate() {
+                    if let Some(trace) = r.trace.take() {
+                        let file =
+                            dir.join(format!("cell{i:04}-{}-s{}.pst", sanitize(&r.name), r.seed));
+                        trace.save(&file)?;
+                        written += 1;
+                    }
+                }
+                println!("{written} event traces -> {}", dir.display());
+            }
         }
+
+        "trace" => match args.action.as_deref().unwrap_or("") {
+            // run a simulation with event capture on; write the binary
+            // trace (and optionally a JSON-lines mirror)
+            "export" => {
+                let params =
+                    SimParams::load(&PathBuf::from(args.get("params", "sim_params.json")))?;
+                let mut cfg = match args.get_opt("config") {
+                    Some(p) => ExperimentConfig::load(&PathBuf::from(p))?,
+                    None => ExperimentConfig::default(),
+                };
+                if let Some(d) = args.get_parse_opt::<f64>("days")? {
+                    cfg.horizon = d * DAY;
+                }
+                if let Some(a) = args.get_opt("arrival") {
+                    cfg.arrival = parse_arrival(&a)?;
+                }
+                if let Some(s) = args.get_parse_opt::<u64>("seed")? {
+                    cfg.seed = s;
+                }
+                if let Some(s) = args.get_opt("scheduler") {
+                    cfg.infra.scheduler = StrategySpec::parse(&s)?;
+                }
+                cfg.capture_trace = true;
+                let out = PathBuf::from(args.get("out", "trace.pst"));
+                let jsonl = args.get_opt("jsonl");
+                let cpu = args.flag("cpu");
+                args.reject_unknown()?;
+                let rt = load_runtime(cpu);
+                let mut result = Experiment::new(cfg, params).with_runtime(rt).run()?;
+                let trace = result.trace.take().expect("capture_trace was set");
+                trace.save(&out)?;
+                println!(
+                    "trace: {} events, {} arrivals -> {}",
+                    trace.len(),
+                    result.arrived,
+                    out.display()
+                );
+                if let Some(path) = jsonl {
+                    std::fs::write(&path, trace.to_jsonl())?;
+                    println!("jsonl -> {path}");
+                }
+                println!("digest: {}", result.digest());
+            }
+
+            // summary statistics (+ accuracy vs the fits with --params)
+            "stats" => {
+                let input = PathBuf::from(args.get("in", "trace.pst"));
+                let params_path = args.get_opt("params");
+                let jsonl = args.get_opt("jsonl");
+                args.reject_unknown()?;
+                let trace = Trace::load(&input)?;
+                println!(
+                    "trace '{}' (seed {}), scheduler {}, trigger {}",
+                    trace.meta.name,
+                    trace.meta.seed,
+                    trace.meta.get("scheduler").unwrap_or("?"),
+                    trace.meta.get("trigger").unwrap_or("?"),
+                );
+                print!("{}", TraceSummary::from_trace(&trace).render());
+                if let Some(p) = params_path {
+                    let params = SimParams::load(&PathBuf::from(p))?;
+                    for q in trace_qq(&trace, &params, 20_000, 60, 1) {
+                        println!("{}", q.verdict());
+                    }
+                }
+                if let Some(path) = jsonl {
+                    std::fs::write(&path, trace.to_jsonl())?;
+                    println!("jsonl -> {path}");
+                }
+            }
+
+            // re-drive the simulation from the recorded arrival gaps
+            "replay" => {
+                let input = PathBuf::from(args.get("in", "trace.pst"));
+                let params =
+                    SimParams::load(&PathBuf::from(args.get("params", "sim_params.json")))?;
+                let cpu = args.flag("cpu");
+                args.reject_unknown()?;
+                let trace = Trace::load(&input)?;
+                let workload = TraceWorkload::from_trace(&trace)?;
+                let rt = load_runtime(cpu);
+                let result = workload.run(params, rt)?;
+                println!("{}", render_dashboard(&result, 72));
+                println!("digest: {}", result.digest());
+            }
+
+            other => {
+                eprintln!("trace: unknown action '{other}' (export|stats|replay)\n{USAGE}");
+                std::process::exit(2);
+            }
+        },
 
         "figures" => {
             let fig = args.get("fig", "all");

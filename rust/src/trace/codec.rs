@@ -1,0 +1,843 @@
+//! The binary trace format (`.pst`) and the JSON-lines export.
+//!
+//! Layout (all multi-byte integers little-endian; full spec in
+//! README.md § Trace format):
+//!
+//! ```text
+//! magic      4 bytes  b"PSTR"
+//! version    u16      format version (currently 1)
+//! reserved   u16      0
+//! strtab     varint n, then n × (varint len + UTF-8 bytes)
+//! meta       name-id, varint seed, f64 horizon, config-id,
+//!            varint n_extra, n_extra × (key-id, value-id)
+//! events     varint n, then n × record
+//! record     varint(bits(t) XOR bits(prev_t))   — delta-encoded time
+//!            u8 kind tag
+//!            kind-specific fields (varints, string-table ids, f64 bits)
+//! ```
+//!
+//! Design notes:
+//! * **Self-describing**: task/framework/resource names travel through
+//!   the interned string table, not enum discriminants — a reader from a
+//!   build with different enum ordering still decodes by name, and
+//!   unknown names fail loudly instead of silently mislabeling.
+//! * **Bit-exact**: timestamps and durations round-trip as raw IEEE-754
+//!   bits (times XOR-delta-compressed against the previous event, so
+//!   repeated/nearby stamps shrink to a byte or two). Replay digests
+//!   depend on this exactness.
+//! * **Versioned**: readers accept exactly [`FORMAT_VERSION`]; any layout
+//!   change must bump it (versioning rules in README.md).
+
+use crate::error::{Error, Result};
+use crate::model::{Framework, ResourceKind, TaskType};
+use crate::util::binio::{ByteReader, ByteWriter, InternTable};
+use crate::util::Json;
+
+use super::{Trace, TraceEvent, TraceEventKind, TraceMeta};
+
+/// File magic: **P**ipe**S**im **TR**ace.
+pub const MAGIC: &[u8; 4] = b"PSTR";
+/// Current binary format version.
+pub const FORMAT_VERSION: u16 = 1;
+
+// Event kind tags (u8). Append-only: reusing or reordering tags is a
+// format break and requires a FORMAT_VERSION bump.
+const TAG_ARRIVAL_GAP: u8 = 0;
+const TAG_PIPELINE_ARRIVAL: u8 = 1;
+const TAG_TASK_QUEUED: u8 = 2;
+const TAG_TASK_STARTED: u8 = 3;
+const TAG_TASK_GRANTED: u8 = 4;
+const TAG_TASK_DONE: u8 = 5;
+const TAG_MODEL_METRIC: u8 = 6;
+const TAG_PIPELINE_DONE: u8 = 7;
+const TAG_RETRAIN_TRIGGERED: u8 = 8;
+const TAG_RETRAIN_LAUNCHED: u8 = 9;
+const TAG_MODEL_DEPLOYED: u8 = 10;
+
+/// Serialize a trace to the binary format.
+pub fn encode(trace: &Trace) -> Vec<u8> {
+    let mut tab = InternTable::new();
+    // meta + events intern strings as they serialize; the table is
+    // complete once both bodies are encoded, then the file assembles as
+    // header + table + bodies.
+    let mut meta = ByteWriter::new();
+    meta.varint(tab.intern(&trace.meta.name) as u64);
+    meta.varint(trace.meta.seed);
+    meta.f64(trace.meta.horizon);
+    meta.varint(tab.intern(&trace.meta.config_json) as u64);
+    meta.varint(trace.meta.extra.len() as u64);
+    for (k, v) in &trace.meta.extra {
+        meta.varint(tab.intern(k) as u64);
+        meta.varint(tab.intern(v) as u64);
+    }
+
+    let mut body = ByteWriter::new();
+    body.varint(trace.events.len() as u64);
+    let mut prev_bits = 0u64; // bits of t = 0.0
+    for ev in &trace.events {
+        let bits = ev.t.to_bits();
+        body.varint(bits ^ prev_bits);
+        prev_bits = bits;
+        encode_kind(&mut body, &mut tab, &ev.kind);
+    }
+
+    let mut out = ByteWriter::new();
+    out.header(MAGIC, FORMAT_VERSION);
+    tab.write(&mut out);
+    out.bytes(&meta.into_bytes());
+    out.bytes(&body.into_bytes());
+    out.into_bytes()
+}
+
+fn sid(w: &mut ByteWriter, tab: &mut InternTable, s: &str) {
+    w.varint(tab.intern(s) as u64);
+}
+
+/// `Option<Framework>` as varint: 0 = none, else string id + 1.
+fn opt_fw(w: &mut ByteWriter, tab: &mut InternTable, fw: Option<Framework>) {
+    match fw {
+        None => w.varint(0),
+        Some(f) => w.varint(tab.intern(f.name()) as u64 + 1),
+    }
+}
+
+fn encode_kind(w: &mut ByteWriter, tab: &mut InternTable, kind: &TraceEventKind) {
+    match *kind {
+        TraceEventKind::ArrivalGapDrawn { gap } => {
+            w.u8(TAG_ARRIVAL_GAP);
+            w.f64(gap);
+        }
+        TraceEventKind::PipelineArrival {
+            pid,
+            framework,
+            n_tasks,
+            priority,
+            retrain_of,
+        } => {
+            w.u8(TAG_PIPELINE_ARRIVAL);
+            w.varint(pid as u64);
+            sid(w, tab, framework.name());
+            w.u8(n_tasks);
+            w.f64(priority);
+            w.varint(retrain_of.map_or(0, |s| s as u64 + 1));
+        }
+        TraceEventKind::TaskQueued {
+            pid,
+            task,
+            resource,
+        } => {
+            w.u8(TAG_TASK_QUEUED);
+            w.varint(pid as u64);
+            sid(w, tab, task.name());
+            sid(w, tab, resource.name());
+        }
+        TraceEventKind::TaskStarted {
+            pid,
+            task,
+            framework,
+            exec,
+            read,
+            write,
+        } => {
+            w.u8(TAG_TASK_STARTED);
+            w.varint(pid as u64);
+            sid(w, tab, task.name());
+            opt_fw(w, tab, framework);
+            w.f64(exec);
+            w.f64(read);
+            w.f64(write);
+        }
+        TraceEventKind::TaskGranted {
+            pid,
+            task,
+            resource,
+            waited,
+        } => {
+            w.u8(TAG_TASK_GRANTED);
+            w.varint(pid as u64);
+            sid(w, tab, task.name());
+            sid(w, tab, resource.name());
+            w.f64(waited);
+        }
+        TraceEventKind::TaskDone {
+            pid,
+            task,
+            framework,
+            exec,
+        } => {
+            w.u8(TAG_TASK_DONE);
+            w.varint(pid as u64);
+            sid(w, tab, task.name());
+            opt_fw(w, tab, framework);
+            w.f64(exec);
+        }
+        TraceEventKind::ModelMetricUpdate {
+            pid,
+            task,
+            performance,
+        } => {
+            w.u8(TAG_MODEL_METRIC);
+            w.varint(pid as u64);
+            sid(w, tab, task.name());
+            w.f64(performance);
+        }
+        TraceEventKind::PipelineDone {
+            pid,
+            makespan,
+            total_wait,
+            truncated,
+        } => {
+            w.u8(TAG_PIPELINE_DONE);
+            w.varint(pid as u64);
+            w.f64(makespan);
+            w.f64(total_wait);
+            w.u8(truncated as u8);
+        }
+        TraceEventKind::RetrainTriggered {
+            slot,
+            drift,
+            performance,
+            delay,
+        } => {
+            w.u8(TAG_RETRAIN_TRIGGERED);
+            w.varint(slot as u64);
+            w.f64(drift);
+            w.f64(performance);
+            w.f64(delay);
+        }
+        TraceEventKind::RetrainLaunched { slot } => {
+            w.u8(TAG_RETRAIN_LAUNCHED);
+            w.varint(slot as u64);
+        }
+        TraceEventKind::ModelDeployed {
+            slot,
+            performance,
+            version,
+        } => {
+            w.u8(TAG_MODEL_DEPLOYED);
+            w.varint(slot as u64);
+            w.f64(performance);
+            w.varint(version as u64);
+        }
+    }
+}
+
+/// Parse a binary trace.
+pub fn decode(bytes: &[u8]) -> Result<Trace> {
+    let mut r = ByteReader::new(bytes);
+    r.check_header(MAGIC, FORMAT_VERSION, "trace")?;
+    let names = InternTable::read(&mut r)?;
+
+    let name = lookup(&names, r.varint()?)?.to_string();
+    let seed = r.varint()?;
+    let horizon = r.f64()?;
+    let config_json = lookup(&names, r.varint()?)?.to_string();
+    // length prefixes are validated against the remaining input (an
+    // extra pair is >= 2 varint bytes, an event record >= 3 bytes), so a
+    // corrupt count can never drive an allocation beyond the file size
+    let n_extra = r.len_prefix_for(2)?;
+    let mut extra = Vec::with_capacity(n_extra);
+    for _ in 0..n_extra {
+        let k = lookup(&names, r.varint()?)?.to_string();
+        let v = lookup(&names, r.varint()?)?.to_string();
+        extra.push((k, v));
+    }
+
+    let n_events = r.len_prefix_for(3)?;
+    let mut events = Vec::with_capacity(n_events);
+    let mut prev_bits = 0u64;
+    for _ in 0..n_events {
+        let bits = prev_bits ^ r.varint()?;
+        prev_bits = bits;
+        let t = f64::from_bits(bits);
+        let kind = decode_kind(&mut r, &names)?;
+        events.push(TraceEvent { t, kind });
+    }
+    r.expect_eof("trace")?;
+    Ok(Trace {
+        meta: TraceMeta {
+            name,
+            seed,
+            horizon,
+            config_json,
+            extra,
+        },
+        events,
+    })
+}
+
+/// Resolve a string-table id, failing loudly on out-of-range ids.
+fn lookup(names: &[String], id: u64) -> Result<&str> {
+    usize::try_from(id)
+        .ok()
+        .and_then(|i| names.get(i))
+        .map(|s| s.as_str())
+        .ok_or_else(|| Error::Other(format!("trace: string id {id} out of range")))
+}
+
+fn task_by_name(s: &str) -> Result<TaskType> {
+    TaskType::ALL
+        .iter()
+        .find(|t| t.name() == s)
+        .copied()
+        .ok_or_else(|| Error::Other(format!("trace: unknown task '{s}'")))
+}
+
+fn resource_by_name(s: &str) -> Result<ResourceKind> {
+    match s {
+        "training" => Ok(ResourceKind::Training),
+        "compute" => Ok(ResourceKind::Compute),
+        other => Err(Error::Other(format!("trace: unknown resource '{other}'"))),
+    }
+}
+
+fn pid32(v: u64) -> Result<u32> {
+    u32::try_from(v).map_err(|_| Error::Other(format!("trace: id {v} exceeds u32")))
+}
+
+fn decode_kind(r: &mut ByteReader, names: &[String]) -> Result<TraceEventKind> {
+    fn opt_fw(r: &mut ByteReader, names: &[String]) -> Result<Option<Framework>> {
+        match r.varint()? {
+            0 => Ok(None),
+            id => Framework::parse_name(lookup(names, id - 1)?).map(Some),
+        }
+    }
+    Ok(match r.u8()? {
+        TAG_ARRIVAL_GAP => TraceEventKind::ArrivalGapDrawn { gap: r.f64()? },
+        TAG_PIPELINE_ARRIVAL => TraceEventKind::PipelineArrival {
+            pid: pid32(r.varint()?)?,
+            framework: Framework::parse_name(lookup(names, r.varint()?)?)?,
+            n_tasks: r.u8()?,
+            priority: r.f64()?,
+            retrain_of: match r.varint()? {
+                0 => None,
+                v => Some(pid32(v - 1)?),
+            },
+        },
+        TAG_TASK_QUEUED => TraceEventKind::TaskQueued {
+            pid: pid32(r.varint()?)?,
+            task: task_by_name(lookup(names, r.varint()?)?)?,
+            resource: resource_by_name(lookup(names, r.varint()?)?)?,
+        },
+        TAG_TASK_STARTED => TraceEventKind::TaskStarted {
+            pid: pid32(r.varint()?)?,
+            task: task_by_name(lookup(names, r.varint()?)?)?,
+            framework: opt_fw(r, names)?,
+            exec: r.f64()?,
+            read: r.f64()?,
+            write: r.f64()?,
+        },
+        TAG_TASK_GRANTED => TraceEventKind::TaskGranted {
+            pid: pid32(r.varint()?)?,
+            task: task_by_name(lookup(names, r.varint()?)?)?,
+            resource: resource_by_name(lookup(names, r.varint()?)?)?,
+            waited: r.f64()?,
+        },
+        TAG_TASK_DONE => TraceEventKind::TaskDone {
+            pid: pid32(r.varint()?)?,
+            task: task_by_name(lookup(names, r.varint()?)?)?,
+            framework: opt_fw(r, names)?,
+            exec: r.f64()?,
+        },
+        TAG_MODEL_METRIC => TraceEventKind::ModelMetricUpdate {
+            pid: pid32(r.varint()?)?,
+            task: task_by_name(lookup(names, r.varint()?)?)?,
+            performance: r.f64()?,
+        },
+        TAG_PIPELINE_DONE => TraceEventKind::PipelineDone {
+            pid: pid32(r.varint()?)?,
+            makespan: r.f64()?,
+            total_wait: r.f64()?,
+            truncated: r.u8()? != 0,
+        },
+        TAG_RETRAIN_TRIGGERED => TraceEventKind::RetrainTriggered {
+            slot: pid32(r.varint()?)?,
+            drift: r.f64()?,
+            performance: r.f64()?,
+            delay: r.f64()?,
+        },
+        TAG_RETRAIN_LAUNCHED => TraceEventKind::RetrainLaunched {
+            slot: pid32(r.varint()?)?,
+        },
+        TAG_MODEL_DEPLOYED => TraceEventKind::ModelDeployed {
+            slot: pid32(r.varint()?)?,
+            performance: r.f64()?,
+            version: pid32(r.varint()?)?,
+        },
+        tag => return Err(Error::Other(format!("trace: unknown event tag {tag}"))),
+    })
+}
+
+/// JSON-lines export: meta on the first line, one event object per line.
+pub fn to_jsonl(trace: &Trace) -> String {
+    let mut out = String::new();
+    let config = Json::parse(&trace.meta.config_json).unwrap_or(Json::Null);
+    let meta = Json::obj(vec![
+        ("name", Json::Str(trace.meta.name.clone())),
+        // a string: JSON numbers are f64 and would clip seeds above 2^53
+        ("seed", Json::Str(trace.meta.seed.to_string())),
+        ("horizon", Json::Num(trace.meta.horizon)),
+        ("format_version", Json::Num(FORMAT_VERSION as f64)),
+        ("events", Json::Num(trace.events.len() as f64)),
+        (
+            "extra",
+            Json::Obj(
+                trace
+                    .meta
+                    .extra
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                    .collect(),
+            ),
+        ),
+        ("config", config),
+    ]);
+    out.push_str(&meta.to_string());
+    out.push('\n');
+    for ev in &trace.events {
+        out.push_str(&event_json(ev).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+fn event_json(ev: &TraceEvent) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("t", Json::Num(ev.t)),
+        ("kind", Json::Str(ev.kind.name().into())),
+    ];
+    match ev.kind {
+        TraceEventKind::ArrivalGapDrawn { gap } => fields.push(("gap", Json::Num(gap))),
+        TraceEventKind::PipelineArrival {
+            pid,
+            framework,
+            n_tasks,
+            priority,
+            retrain_of,
+        } => {
+            fields.push(("pid", Json::Num(pid as f64)));
+            fields.push(("framework", Json::Str(framework.name().into())));
+            fields.push(("n_tasks", Json::Num(n_tasks as f64)));
+            fields.push(("priority", Json::Num(priority)));
+            fields.push((
+                "retrain_of",
+                retrain_of.map_or(Json::Null, |s| Json::Num(s as f64)),
+            ));
+        }
+        TraceEventKind::TaskQueued {
+            pid,
+            task,
+            resource,
+        } => {
+            fields.push(("pid", Json::Num(pid as f64)));
+            fields.push(("task", Json::Str(task.name().into())));
+            fields.push(("resource", Json::Str(resource.name().into())));
+        }
+        TraceEventKind::TaskStarted {
+            pid,
+            task,
+            framework,
+            exec,
+            read,
+            write,
+        } => {
+            fields.push(("pid", Json::Num(pid as f64)));
+            fields.push(("task", Json::Str(task.name().into())));
+            fields.push((
+                "framework",
+                framework.map_or(Json::Null, |f| Json::Str(f.name().into())),
+            ));
+            fields.push(("exec", Json::Num(exec)));
+            fields.push(("read", Json::Num(read)));
+            fields.push(("write", Json::Num(write)));
+        }
+        TraceEventKind::TaskGranted {
+            pid,
+            task,
+            resource,
+            waited,
+        } => {
+            fields.push(("pid", Json::Num(pid as f64)));
+            fields.push(("task", Json::Str(task.name().into())));
+            fields.push(("resource", Json::Str(resource.name().into())));
+            fields.push(("waited", Json::Num(waited)));
+        }
+        TraceEventKind::TaskDone {
+            pid,
+            task,
+            framework,
+            exec,
+        } => {
+            fields.push(("pid", Json::Num(pid as f64)));
+            fields.push(("task", Json::Str(task.name().into())));
+            fields.push((
+                "framework",
+                framework.map_or(Json::Null, |f| Json::Str(f.name().into())),
+            ));
+            fields.push(("exec", Json::Num(exec)));
+        }
+        TraceEventKind::ModelMetricUpdate {
+            pid,
+            task,
+            performance,
+        } => {
+            fields.push(("pid", Json::Num(pid as f64)));
+            fields.push(("task", Json::Str(task.name().into())));
+            fields.push(("performance", Json::Num(performance)));
+        }
+        TraceEventKind::PipelineDone {
+            pid,
+            makespan,
+            total_wait,
+            truncated,
+        } => {
+            fields.push(("pid", Json::Num(pid as f64)));
+            fields.push(("makespan", Json::Num(makespan)));
+            fields.push(("total_wait", Json::Num(total_wait)));
+            fields.push(("truncated", Json::Bool(truncated)));
+        }
+        TraceEventKind::RetrainTriggered {
+            slot,
+            drift,
+            performance,
+            delay,
+        } => {
+            fields.push(("slot", Json::Num(slot as f64)));
+            fields.push(("drift", Json::Num(drift)));
+            fields.push(("performance", Json::Num(performance)));
+            fields.push(("delay", Json::Num(delay)));
+        }
+        TraceEventKind::RetrainLaunched { slot } => {
+            fields.push(("slot", Json::Num(slot as f64)));
+        }
+        TraceEventKind::ModelDeployed {
+            slot,
+            performance,
+            version,
+        } => {
+            fields.push(("slot", Json::Num(slot as f64)));
+            fields.push(("performance", Json::Num(performance)));
+            fields.push(("version", Json::Num(version as f64)));
+        }
+    }
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::rng::Pcg64;
+
+    fn meta() -> TraceMeta {
+        TraceMeta {
+            name: "codec-test".into(),
+            seed: 42,
+            horizon: 86_400.0,
+            config_json: r#"{"name":"codec-test"}"#.into(),
+            extra: vec![
+                ("scheduler".into(), "fifo".into()),
+                ("trigger".into(), "off".into()),
+            ],
+        }
+    }
+
+    /// One event of every kind, with awkward float values.
+    fn all_kinds() -> Vec<TraceEvent> {
+        let e = |t, kind| TraceEvent { t, kind };
+        vec![
+            e(0.0, TraceEventKind::ArrivalGapDrawn { gap: 1.0 / 3.0 }),
+            e(
+                1.0 / 3.0,
+                TraceEventKind::PipelineArrival {
+                    pid: 0,
+                    framework: Framework::TensorFlow,
+                    n_tasks: 8,
+                    priority: 7.0,
+                    retrain_of: None,
+                },
+            ),
+            e(
+                1.0 / 3.0,
+                TraceEventKind::TaskQueued {
+                    pid: 0,
+                    task: TaskType::Train,
+                    resource: ResourceKind::Training,
+                },
+            ),
+            e(
+                0.5,
+                TraceEventKind::TaskStarted {
+                    pid: 1,
+                    task: TaskType::Preprocess,
+                    framework: None,
+                    exec: 12.25,
+                    read: 0.05,
+                    write: 0.075,
+                },
+            ),
+            e(
+                13.0,
+                TraceEventKind::TaskGranted {
+                    pid: 0,
+                    task: TaskType::Train,
+                    resource: ResourceKind::Training,
+                    waited: 12.666_666_666_7,
+                },
+            ),
+            e(
+                99.0,
+                TraceEventKind::TaskDone {
+                    pid: 0,
+                    task: TaskType::Train,
+                    framework: Some(Framework::TensorFlow),
+                    exec: 86.0,
+                },
+            ),
+            e(
+                99.0,
+                TraceEventKind::ModelMetricUpdate {
+                    pid: 0,
+                    task: TaskType::Train,
+                    performance: 0.875,
+                },
+            ),
+            e(
+                200.0,
+                TraceEventKind::PipelineDone {
+                    pid: 0,
+                    makespan: 199.666_666_666_7,
+                    total_wait: 12.666_666_666_7,
+                    truncated: true,
+                },
+            ),
+            e(
+                3600.0,
+                TraceEventKind::RetrainTriggered {
+                    slot: 3,
+                    drift: 0.061,
+                    performance: 0.79,
+                    delay: 1800.0,
+                },
+            ),
+            e(5400.0, TraceEventKind::RetrainLaunched { slot: 3 }),
+            e(
+                7200.0,
+                TraceEventKind::ModelDeployed {
+                    slot: 3,
+                    performance: 0.91,
+                    version: 2,
+                },
+            ),
+            e(
+                7200.0,
+                TraceEventKind::PipelineArrival {
+                    pid: u32::MAX,
+                    framework: Framework::Other,
+                    n_tasks: 3,
+                    priority: 0.0,
+                    retrain_of: Some(u32::MAX - 1),
+                },
+            ),
+        ]
+    }
+
+    #[test]
+    fn roundtrip_all_event_kinds() {
+        let t = Trace {
+            meta: meta(),
+            events: all_kinds(),
+        };
+        let bytes = encode(&t);
+        let back = decode(&bytes).unwrap();
+        assert_eq!(back, t);
+        // encoding is deterministic
+        assert_eq!(encode(&back), bytes);
+    }
+
+    #[test]
+    fn roundtrip_empty_trace() {
+        let t = Trace {
+            meta: TraceMeta {
+                name: String::new(),
+                seed: 0,
+                horizon: 0.0,
+                config_json: String::new(),
+                extra: Vec::new(),
+            },
+            events: Vec::new(),
+        };
+        let back = decode(&encode(&t)).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn roundtrip_string_table_beyond_u16() {
+        // >65536 distinct strings must round-trip: ids are u32 varints
+        let extra: Vec<(String, String)> = (0..70_000)
+            .map(|i| (format!("key-{i}"), format!("value-{i}")))
+            .collect();
+        let t = Trace {
+            meta: TraceMeta {
+                extra,
+                ..meta()
+            },
+            events: all_kinds(),
+        };
+        let bytes = encode(&t);
+        let back = decode(&bytes).unwrap();
+        assert_eq!(back.meta.extra.len(), 70_000);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn roundtrip_randomized_event_streams() {
+        // property test: random event streams (monotone timestamps,
+        // random kinds/values) survive write → read bit-identically
+        for seed in 0..24u64 {
+            let mut rng = Pcg64::new(0xC0DEC + seed);
+            let mut t = 0.0f64;
+            let events: Vec<TraceEvent> = (0..500)
+                .map(|i| {
+                    t += rng.uniform() * 100.0;
+                    let task = TaskType::ALL[rng.below(6)];
+                    let fw = Framework::ALL[rng.below(5)];
+                    let kind = match rng.below(11) {
+                        0 => TraceEventKind::ArrivalGapDrawn {
+                            gap: rng.uniform() * 1e4,
+                        },
+                        1 => TraceEventKind::PipelineArrival {
+                            pid: i,
+                            framework: fw,
+                            n_tasks: 1 + rng.below(8) as u8,
+                            priority: rng.below(11) as f64,
+                            retrain_of: (rng.uniform() < 0.2).then_some(rng.below(100) as u32),
+                        },
+                        2 => TraceEventKind::TaskQueued {
+                            pid: i,
+                            task,
+                            resource: ResourceKind::for_task(task),
+                        },
+                        3 => TraceEventKind::TaskStarted {
+                            pid: i,
+                            task,
+                            framework: (rng.uniform() < 0.5).then_some(fw),
+                            exec: rng.uniform() * 1e3,
+                            read: rng.uniform(),
+                            write: rng.uniform(),
+                        },
+                        4 => TraceEventKind::TaskGranted {
+                            pid: i,
+                            task,
+                            resource: ResourceKind::for_task(task),
+                            waited: rng.uniform() * 1e3,
+                        },
+                        5 => TraceEventKind::TaskDone {
+                            pid: i,
+                            task,
+                            framework: (rng.uniform() < 0.5).then_some(fw),
+                            exec: rng.uniform() * 1e3,
+                        },
+                        6 => TraceEventKind::ModelMetricUpdate {
+                            pid: i,
+                            task,
+                            performance: rng.uniform(),
+                        },
+                        7 => TraceEventKind::PipelineDone {
+                            pid: i,
+                            makespan: rng.uniform() * 1e5,
+                            total_wait: rng.uniform() * 1e4,
+                            truncated: rng.uniform() < 0.1,
+                        },
+                        8 => TraceEventKind::RetrainTriggered {
+                            slot: rng.below(64) as u32,
+                            drift: rng.uniform(),
+                            performance: rng.uniform(),
+                            delay: rng.uniform() * 1e4,
+                        },
+                        9 => TraceEventKind::RetrainLaunched {
+                            slot: rng.below(64) as u32,
+                        },
+                        _ => TraceEventKind::ModelDeployed {
+                            slot: rng.below(64) as u32,
+                            performance: rng.uniform(),
+                            version: 1 + rng.below(9) as u32,
+                        },
+                    };
+                    TraceEvent { t, kind }
+                })
+                .collect();
+            let trace = Trace {
+                meta: meta(),
+                events,
+            };
+            let back = decode(&encode(&trace)).unwrap();
+            assert_eq!(back, trace, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_and_truncation() {
+        let t = Trace {
+            meta: meta(),
+            events: all_kinds(),
+        };
+        let bytes = encode(&t);
+        // magic
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(decode(&bad).is_err());
+        // version
+        let mut bad = bytes.clone();
+        bad[4] = 0xff;
+        assert!(decode(&bad).is_err());
+        // truncation at every prefix must error, never panic
+        for cut in [5, 8, 20, bytes.len() / 2, bytes.len() - 1] {
+            assert!(decode(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        // trailing garbage
+        let mut bad = bytes.clone();
+        bad.push(0);
+        assert!(decode(&bad).is_err());
+    }
+
+    #[test]
+    fn timestamps_compress_but_stay_exact() {
+        // many same-time events: the XOR delta is 0 → 1 byte each
+        let t0 = 12_345.678_9;
+        let events: Vec<TraceEvent> = (0..1000)
+            .map(|i| TraceEvent {
+                t: t0,
+                kind: TraceEventKind::RetrainLaunched { slot: i },
+            })
+            .collect();
+        let trace = Trace {
+            meta: meta(),
+            events,
+        };
+        let bytes = encode(&trace);
+        let back = decode(&bytes).unwrap();
+        assert!(back.events.iter().all(|e| e.t.to_bits() == t0.to_bits()));
+        // 1000 events at < ~12 bytes each incl. the slot varint
+        assert!(bytes.len() < 600 + 1000 * 12, "{} bytes", bytes.len());
+    }
+
+    #[test]
+    fn jsonl_export_parses_per_line() {
+        let t = Trace {
+            meta: meta(),
+            events: all_kinds(),
+        };
+        let jsonl = to_jsonl(&t);
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 1 + t.events.len());
+        let head = Json::parse(lines[0]).unwrap();
+        assert_eq!(head.s("name").unwrap(), "codec-test");
+        // stringly seed: a JSON number is f64 and would clip > 2^53
+        assert_eq!(head.s("seed").unwrap(), "42");
+        assert_eq!(head.f("events").unwrap(), t.events.len() as f64);
+        for (i, line) in lines[1..].iter().enumerate() {
+            let j = Json::parse(line).unwrap_or_else(|e| panic!("line {i}: {e}"));
+            assert_eq!(j.s("kind").unwrap(), t.events[i].kind.name());
+        }
+    }
+}

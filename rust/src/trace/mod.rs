@@ -1,0 +1,408 @@
+//! First-class simulation traces (the paper's core loop: "synthetic
+//! traces are made available for ad-hoc exploration as well as
+//! statistical analysis", section IV-C).
+//!
+//! A [`Trace`] is the portable event-level record of one simulation run:
+//! every pipeline arrival, queue/grant decision, task start/finish,
+//! model-metric update, and retraining action, timestamped in simulation
+//! time. It closes the platform loop — *simulate → export trace →
+//! analyze / re-ingest / replay* — that aggregate results alone cannot:
+//!
+//! * the simulation core emits into a pluggable [`TraceSink`] behind the
+//!   `ExperimentConfig::capture_trace` flag ([`NullSink`] keeps the hot
+//!   path allocation-free when capture is off);
+//! * [`codec`] defines the compact self-describing binary format (magic +
+//!   version header, interned string table, delta-encoded timestamps)
+//!   plus a JSON-lines export for ad-hoc exploration;
+//! * [`replay`] turns a captured trace back into a runnable workload
+//!   ([`TraceWorkload`]) whose replay reproduces the original run's
+//!   `ExperimentResult::digest()` byte-for-byte (given the same fitted
+//!   parameters);
+//! * `analytics::trace_stats` summarizes traces and Q-Q-checks them
+//!   against the fitted distributions.
+
+pub mod codec;
+pub mod replay;
+
+pub use replay::TraceWorkload;
+
+use crate::des::SimTime;
+use crate::model::{Framework, ResourceKind, TaskType};
+
+/// One timestamped simulation event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Simulation time of the event, seconds since experiment start.
+    pub t: SimTime,
+    pub kind: TraceEventKind,
+}
+
+/// The full task-lifecycle event schema. Every variant is `Copy` and
+/// string-free, so constructing and emitting an event never allocates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TraceEventKind {
+    /// An interarrival gap was drawn from the arrival process — including
+    /// the final gap that lands past the horizon and never materializes
+    /// as an arrival. The gap sequence is exactly what replay feeds back
+    /// through `ArrivalModel::Replay`.
+    ArrivalGapDrawn {
+        /// Post-scaling gap, seconds (what the calendar actually used).
+        gap: f64,
+    },
+    /// A pipeline entered the system (user arrival or retraining launch).
+    PipelineArrival {
+        pid: u32,
+        framework: Framework,
+        /// Tasks in the synthesized pipeline.
+        n_tasks: u8,
+        /// Priority class (lower = more important; 0 = platform retrain).
+        priority: f64,
+        /// Deployed-model slot being retrained, if this is a retraining
+        /// pipeline.
+        retrain_of: Option<u32>,
+    },
+    /// A task requested its cluster and had to queue.
+    TaskQueued {
+        pid: u32,
+        task: TaskType,
+        resource: ResourceKind,
+    },
+    /// A task started executing — either immediately on request, or
+    /// right after a queue grant (then the paired [`TaskGranted`]
+    /// precedes it at the same timestamp). Every executed task gets
+    /// exactly one `TaskStarted`, so service-time components are always
+    /// recorded.
+    ///
+    /// [`TaskGranted`]: TraceEventKind::TaskGranted
+    TaskStarted {
+        pid: u32,
+        task: TaskType,
+        framework: Option<Framework>,
+        /// Sampled execution (compute) duration, seconds.
+        exec: f64,
+        /// Store read time, seconds.
+        read: f64,
+        /// Store write time, seconds.
+        write: f64,
+    },
+    /// A queued task was granted a freed slot and started executing.
+    TaskGranted {
+        pid: u32,
+        task: TaskType,
+        resource: ResourceKind,
+        /// Time spent queued, seconds.
+        waited: f64,
+    },
+    /// A task finished (read + exec + write all complete).
+    TaskDone {
+        pid: u32,
+        task: TaskType,
+        framework: Option<Framework>,
+        /// The execution (compute) portion of the task, seconds.
+        exec: f64,
+    },
+    /// A task updated its pipeline's model metrics (train/compress/harden).
+    ModelMetricUpdate {
+        pid: u32,
+        task: TaskType,
+        /// Composite performance p(M) after the update.
+        performance: f64,
+    },
+    /// A pipeline left the system.
+    PipelineDone {
+        pid: u32,
+        /// Arrival-to-completion time, seconds.
+        makespan: f64,
+        /// Total queueing wait accumulated across all tasks, seconds.
+        total_wait: f64,
+        /// Whether the quality gate aborted the pipeline.
+        truncated: bool,
+    },
+    /// The retraining trigger strategy fired for a monitored model.
+    RetrainTriggered {
+        /// Deployed-model slot.
+        slot: u32,
+        /// Detector drift metric at the decision.
+        drift: f64,
+        /// Model performance at the decision.
+        performance: f64,
+        /// Launch delay chosen by the trigger, seconds.
+        delay: f64,
+    },
+    /// A deferred retraining actually launched its pipeline.
+    RetrainLaunched {
+        /// Deployed-model slot.
+        slot: u32,
+    },
+    /// A model (re)deployed into a monitored runtime-view slot. Only
+    /// *tracked* deployments get this event: deploys past
+    /// `runtime_view.max_models` still count toward the result's
+    /// `models_deployed` but are never monitored, so they appear in the
+    /// trace only as their `TaskDone { task: deploy }` record.
+    ModelDeployed {
+        slot: u32,
+        performance: f64,
+        /// Version in the retraining lineage (1 = first deployment).
+        version: u32,
+    },
+}
+
+impl TraceEventKind {
+    /// Stable lowercase name of the event kind (JSON-lines `kind` field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceEventKind::ArrivalGapDrawn { .. } => "arrival_gap",
+            TraceEventKind::PipelineArrival { .. } => "pipeline_arrival",
+            TraceEventKind::TaskQueued { .. } => "task_queued",
+            TraceEventKind::TaskStarted { .. } => "task_started",
+            TraceEventKind::TaskGranted { .. } => "task_granted",
+            TraceEventKind::TaskDone { .. } => "task_done",
+            TraceEventKind::ModelMetricUpdate { .. } => "model_metric",
+            TraceEventKind::PipelineDone { .. } => "pipeline_done",
+            TraceEventKind::RetrainTriggered { .. } => "retrain_triggered",
+            TraceEventKind::RetrainLaunched { .. } => "retrain_launched",
+            TraceEventKind::ModelDeployed { .. } => "model_deployed",
+        }
+    }
+}
+
+/// Where the simulation core sends events when capture is enabled.
+///
+/// Implementations must not assume anything about event volume: a
+/// year-scale run emits hundreds of millions of events. The built-in
+/// sinks are [`NullSink`] (the placeholder when capture is off — every
+/// emission site is additionally gated on the capture flag, so it
+/// receives no traffic in practice) and [`MemorySink`] (collect in
+/// memory for export). The trait is the seam for streaming sinks that
+/// write the binary format incrementally and return an empty vec from
+/// [`TraceSink::drain`]; an injection hook on `Experiment` is a noted
+/// ROADMAP follow-up.
+pub trait TraceSink: Send {
+    /// Observe one event. Called on the simulation hot path — must not
+    /// panic and should not allocate per call.
+    fn record(&mut self, ev: &TraceEvent);
+
+    /// Hand the captured events back at end of run. Sinks that stream
+    /// elsewhere return an empty vec (the default).
+    fn drain(&mut self) -> Vec<TraceEvent> {
+        Vec::new()
+    }
+}
+
+/// The default sink: drops every event, allocation-free (bench-guarded
+/// in `benches/bench_trace.rs`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    #[inline]
+    fn record(&mut self, _ev: &TraceEvent) {}
+}
+
+/// Collects events in memory; the experiment runner drains it into the
+/// result's [`Trace`].
+#[derive(Debug, Default)]
+pub struct MemorySink {
+    events: Vec<TraceEvent>,
+}
+
+impl MemorySink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+impl TraceSink for MemorySink {
+    #[inline]
+    fn record(&mut self, ev: &TraceEvent) {
+        self.events.push(*ev);
+    }
+
+    fn drain(&mut self) -> Vec<TraceEvent> {
+        std::mem::take(&mut self.events)
+    }
+}
+
+/// Run-identifying metadata carried inside a trace file. Everything here
+/// is deterministic — two captures of the same `(config, seed)` produce
+/// byte-identical trace files.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceMeta {
+    /// Experiment name (the config's).
+    pub name: String,
+    pub seed: u64,
+    /// Configured horizon, seconds.
+    pub horizon: f64,
+    /// Canonical JSON of the full `ExperimentConfig` — replay rebuilds
+    /// the exact run definition from this.
+    pub config_json: String,
+    /// Free-form key/value annotations (strategy labels, provenance).
+    pub extra: Vec<(String, String)>,
+}
+
+impl TraceMeta {
+    /// Look up an annotation by key.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.extra
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// A captured simulation trace: metadata + the ordered event stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    pub meta: TraceMeta,
+    /// Events in emission order (timestamps are non-decreasing).
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The interarrival gaps drawn during capture, in draw order — the
+    /// replay workload's arrival sequence.
+    pub fn arrival_gaps(&self) -> Vec<f64> {
+        self.events
+            .iter()
+            .filter_map(|e| match e.kind {
+                TraceEventKind::ArrivalGapDrawn { gap } => Some(gap),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Time span `[first, last]` covered by the events (0,0 when empty).
+    pub fn span(&self) -> (SimTime, SimTime) {
+        match (self.events.first(), self.events.last()) {
+            (Some(a), Some(b)) => (a.t, b.t),
+            _ => (0.0, 0.0),
+        }
+    }
+
+    /// Serialize to the binary trace format (see `codec`).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        codec::encode(self)
+    }
+
+    /// Parse a binary trace previously produced by [`Trace::to_bytes`].
+    pub fn from_bytes(bytes: &[u8]) -> crate::Result<Trace> {
+        codec::decode(bytes)
+    }
+
+    /// Write the binary format to `path`.
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_bytes()).map_err(|e| {
+            crate::Error::Other(format!("writing trace {}: {e}", path.display()))
+        })?;
+        Ok(())
+    }
+
+    /// Load a binary trace file.
+    pub fn load(path: &std::path::Path) -> crate::Result<Trace> {
+        let bytes = std::fs::read(path).map_err(|e| {
+            crate::Error::Other(format!("reading trace {}: {e}", path.display()))
+        })?;
+        Self::from_bytes(&bytes)
+    }
+
+    /// JSON-lines export for ad-hoc exploration: the first line is the
+    /// meta object, then one compact JSON object per event.
+    pub fn to_jsonl(&self) -> String {
+        codec::to_jsonl(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: f64, kind: TraceEventKind) -> TraceEvent {
+        TraceEvent { t, kind }
+    }
+
+    #[test]
+    fn null_sink_drains_nothing() {
+        let mut s = NullSink;
+        s.record(&ev(1.0, TraceEventKind::ArrivalGapDrawn { gap: 5.0 }));
+        assert!(s.drain().is_empty());
+    }
+
+    #[test]
+    fn memory_sink_collects_in_order() {
+        let mut s = MemorySink::new();
+        for i in 0..5 {
+            s.record(&ev(i as f64, TraceEventKind::RetrainLaunched { slot: i }));
+        }
+        assert_eq!(s.len(), 5);
+        let events = s.drain();
+        assert_eq!(events.len(), 5);
+        assert!(s.is_empty());
+        assert_eq!(events[3].t, 3.0);
+    }
+
+    #[test]
+    fn arrival_gaps_and_span_extracted() {
+        let t = Trace {
+            meta: TraceMeta {
+                name: "t".into(),
+                seed: 1,
+                horizon: 100.0,
+                config_json: "{}".into(),
+                extra: vec![("scheduler".into(), "fifo".into())],
+            },
+            events: vec![
+                ev(0.0, TraceEventKind::ArrivalGapDrawn { gap: 3.5 }),
+                ev(
+                    3.5,
+                    TraceEventKind::PipelineArrival {
+                        pid: 0,
+                        framework: Framework::SparkML,
+                        n_tasks: 3,
+                        priority: 4.0,
+                        retrain_of: None,
+                    },
+                ),
+                ev(3.5, TraceEventKind::ArrivalGapDrawn { gap: 9.25 }),
+            ],
+        };
+        assert_eq!(t.arrival_gaps(), vec![3.5, 9.25]);
+        assert_eq!(t.span(), (0.0, 3.5));
+        assert_eq!(t.meta.get("scheduler"), Some("fifo"));
+        assert_eq!(t.meta.get("nope"), None);
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn kind_names_are_stable() {
+        assert_eq!(
+            TraceEventKind::ArrivalGapDrawn { gap: 0.0 }.name(),
+            "arrival_gap"
+        );
+        assert_eq!(
+            TraceEventKind::PipelineDone {
+                pid: 0,
+                makespan: 0.0,
+                total_wait: 0.0,
+                truncated: false
+            }
+            .name(),
+            "pipeline_done"
+        );
+    }
+}

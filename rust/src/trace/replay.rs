@@ -1,0 +1,148 @@
+//! Replay: turn a captured [`Trace`] back into a runnable workload.
+//!
+//! A trace carries (a) the full `ExperimentConfig` of the captured run
+//! and (b) every interarrival gap the arrival process drew — including
+//! the final gap that landed past the horizon. [`TraceWorkload`] feeds
+//! those gaps back through the existing [`ArrivalModel::Replay`] path,
+//! so the replayed run schedules bit-identical arrival times while every
+//! other subsystem (synthesizers, schedulers via `SchedCtx`, triggers,
+//! drift) re-runs from the same seed. Given the same fitted
+//! [`SimParams`], the replay reproduces the original
+//! `ExperimentResult::digest()` byte-for-byte — the round-trip guarantee
+//! the trace subsystem is built on (guarded by `rust/tests/trace.rs`).
+
+use std::sync::Arc;
+
+use crate::arrivals::{ArrivalModel, ReplayTrace};
+use crate::coordinator::{Experiment, ExperimentConfig, ExperimentResult, SimParams};
+use crate::error::{Error, Result};
+use crate::runtime::Runtime;
+
+use super::Trace;
+
+/// A trace-driven workload: the captured config plus the literal
+/// interarrival gap sequence.
+#[derive(Clone, Debug)]
+pub struct TraceWorkload {
+    /// The captured run's full configuration.
+    pub config: ExperimentConfig,
+    /// Every gap drawn during capture, in draw order (post-scaling).
+    pub gaps: Vec<f64>,
+}
+
+impl TraceWorkload {
+    /// Build a workload from a captured trace. Fails if the trace
+    /// carries no config or no arrival gaps (it was not captured by the
+    /// simulator, or the file predates gap recording).
+    pub fn from_trace(trace: &Trace) -> Result<Self> {
+        if trace.meta.config_json.is_empty() {
+            return Err(Error::Config("replay: trace carries no config".into()));
+        }
+        let mut config = ExperimentConfig::from_json_text(&trace.meta.config_json)?;
+        // the binary meta stores the seed losslessly (varint); the JSON
+        // round-trips through f64 and would silently clip seeds above
+        // 2^53 — which would shift every RNG substream and break the
+        // digest guarantee
+        config.seed = trace.meta.seed;
+        let gaps = trace.arrival_gaps();
+        if gaps.is_empty() {
+            return Err(Error::Config(
+                "replay: trace has no arrival gaps to drive the simulation".into(),
+            ));
+        }
+        Ok(TraceWorkload { config, gaps })
+    }
+
+    /// The replay configuration: identical to the captured one except
+    /// (a) `interarrival_factor` is 1 — the recorded gaps are already
+    /// post-scaling, so applying the factor twice would distort them —
+    /// and (b) `capture_trace` is off, so replaying a large trace does
+    /// not silently rebuild a second copy of it in memory. Neither knob
+    /// affects the outcome digest.
+    ///
+    /// Re-enable capture explicitly to re-export. The re-captured trace
+    /// has an identical *event stream*; its bytes equal the original
+    /// file's only when the captured config already had
+    /// `interarrival_factor == 1`, because the embedded config JSON
+    /// reflects the rewritten factor otherwise.
+    pub fn replay_config(&self) -> ExperimentConfig {
+        let mut cfg = self.config.clone();
+        cfg.interarrival_factor = 1.0;
+        cfg.capture_trace = false;
+        cfg
+    }
+
+    /// The literal-gap arrival model that overrides the config's arrival
+    /// spec during replay.
+    pub fn arrival_model(&self) -> ArrivalModel {
+        ArrivalModel::Replay(ReplayTrace::new(self.gaps.clone()))
+    }
+
+    /// Replay the workload against fitted parameters. Bit-identical to
+    /// the captured run's digest when `params` are the same fits the
+    /// capture used.
+    pub fn run(
+        &self,
+        params: impl Into<Arc<SimParams>>,
+        runtime: Option<Arc<Runtime>>,
+    ) -> Result<ExperimentResult> {
+        Experiment::new(self.replay_config(), params)
+            .with_runtime(runtime)
+            .with_arrival(self.arrival_model())
+            .run()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{TraceEvent, TraceEventKind, TraceMeta};
+
+    fn trace_with(config_json: &str, gaps: &[f64]) -> Trace {
+        Trace {
+            meta: TraceMeta {
+                name: "t".into(),
+                seed: 1,
+                horizon: 100.0,
+                config_json: config_json.into(),
+                extra: Vec::new(),
+            },
+            events: gaps
+                .iter()
+                .map(|&gap| TraceEvent {
+                    t: 0.0,
+                    kind: TraceEventKind::ArrivalGapDrawn { gap },
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn workload_extracts_config_and_gaps() {
+        let cfg = ExperimentConfig {
+            interarrival_factor: 2.0,
+            seed: (1 << 60) + 3, // would clip through the f64 JSON path
+            ..Default::default()
+        };
+        let mut trace = trace_with(&cfg.to_json_text(), &[5.0, 7.0, 11.0]);
+        trace.meta.seed = cfg.seed;
+        let w = TraceWorkload::from_trace(&trace).unwrap();
+        assert_eq!(w.gaps, vec![5.0, 7.0, 11.0]);
+        assert_eq!(w.config.interarrival_factor, 2.0);
+        // the seed comes from the lossless binary meta, not the JSON
+        assert_eq!(w.config.seed, (1 << 60) + 3);
+        // replay neutralizes the factor (gaps are already scaled) and
+        // does not re-capture by default
+        assert_eq!(w.replay_config().interarrival_factor, 1.0);
+        assert!(!w.replay_config().capture_trace);
+        assert!(matches!(w.arrival_model(), ArrivalModel::Replay(_)));
+    }
+
+    #[test]
+    fn rejects_traces_without_config_or_gaps() {
+        let t = trace_with("", &[1.0]);
+        assert!(TraceWorkload::from_trace(&t).is_err());
+        let t = trace_with(&ExperimentConfig::default().to_json_text(), &[]);
+        assert!(TraceWorkload::from_trace(&t).is_err());
+    }
+}

@@ -1,0 +1,390 @@
+//! Binary (de)serialization primitives shared by the trace codec and the
+//! cached fitted-parameter format (offline environment: no bincode).
+//!
+//! The vocabulary is deliberately small and fully self-inverse:
+//! * fixed-width little-endian integers (`u8`/`u16`),
+//! * LEB128 varints for counts and ids,
+//! * `f64` as raw IEEE-754 bit patterns (bit-exact round-trips — digests
+//!   and replay depend on it),
+//! * length-prefixed UTF-8 strings,
+//! * an [`InternTable`] building a deduplicated string table on write.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+/// Append-only byte buffer with typed writers.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// LEB128 unsigned varint (1–10 bytes).
+    pub fn varint(&mut self, mut v: u64) {
+        while v >= 0x80 {
+            self.buf.push((v as u8) | 0x80);
+            v >>= 7;
+        }
+        self.buf.push(v as u8);
+    }
+
+    /// Raw IEEE-754 bits, little-endian — exact for every finite and
+    /// non-finite value.
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.varint(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Standard container header shared by every PipeSim binary format:
+    /// 4-byte magic + u16 version + reserved u16 (0). Paired with
+    /// [`ByteReader::check_header`].
+    pub fn header(&mut self, magic: &[u8; 4], version: u16) {
+        self.bytes(magic);
+        self.u16(version);
+        self.u16(0);
+    }
+}
+
+/// Cursor over a byte slice with typed readers; every method fails
+/// cleanly on truncated input.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::Other(format!(
+                "binio: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn varint(&mut self) -> Result<u64> {
+        let mut v: u64 = 0;
+        let mut shift = 0u32;
+        loop {
+            let b = self.u8()?;
+            // at shift 63 only one payload bit remains: anything above 1
+            // (including a continuation bit) would shift data out of the
+            // u64 — reject instead of silently truncating
+            if shift >= 63 && b > 1 {
+                return Err(Error::Other("binio: varint overflows u64".into()));
+            }
+            v |= u64::from(b & 0x7f) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    /// Varint that must fit a `usize` (collection length).
+    pub fn len_prefix(&mut self) -> Result<usize> {
+        let v = self.varint()?;
+        usize::try_from(v).map_err(|_| Error::Other(format!("binio: length {v} too large")))
+    }
+
+    /// Length prefix validated against the remaining input: every
+    /// element needs at least `min_elem_bytes`, so a corrupt or
+    /// malicious length can never trigger an allocation larger than the
+    /// input itself (`Vec::with_capacity(n)` is then always safe).
+    pub fn len_prefix_for(&mut self, min_elem_bytes: usize) -> Result<usize> {
+        let n = self.len_prefix()?;
+        if n.saturating_mul(min_elem_bytes.max(1)) > self.remaining() {
+            return Err(Error::Other(format!(
+                "binio: length {n} (x{min_elem_bytes} B) exceeds remaining {} bytes",
+                self.remaining()
+            )));
+        }
+        Ok(n)
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        let b = self.take(8)?;
+        Ok(f64::from_bits(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ])))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.len_prefix()?;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec()).map_err(|_| Error::Other("binio: invalid utf8".into()))
+    }
+
+    /// Validate a container header written by [`ByteWriter::header`]:
+    /// exact magic and exact version (the shared versioning rule — no
+    /// best-effort decoding of other versions). `what` labels errors.
+    pub fn check_header(&mut self, magic: &[u8; 4], version: u16, what: &str) -> Result<()> {
+        let got = [self.u8()?, self.u8()?, self.u8()?, self.u8()?];
+        if &got != magic {
+            return Err(Error::Other(format!(
+                "{what}: bad magic (not a {what} file)"
+            )));
+        }
+        let v = self.u16()?;
+        if v != version {
+            return Err(Error::Other(format!(
+                "{what}: format version {v}, this build reads {version}"
+            )));
+        }
+        self.u16()?; // reserved
+        Ok(())
+    }
+
+    /// Error if any input remains — every container rejects trailing
+    /// bytes so partial/concatenated files fail loudly.
+    pub fn expect_eof(&mut self, what: &str) -> Result<()> {
+        if !self.is_empty() {
+            return Err(Error::Other(format!(
+                "{what}: {} trailing bytes",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Deduplicating string table built while encoding; ids are `u32`s in
+/// first-intern order, so the same logical content always produces the
+/// same bytes.
+#[derive(Default)]
+pub struct InternTable {
+    names: Vec<String>,
+    index: HashMap<String, u32>,
+}
+
+impl InternTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Intern `s`, returning its stable id.
+    pub fn intern(&mut self, s: &str) -> u32 {
+        if let Some(&id) = self.index.get(s) {
+            return id;
+        }
+        let id = self.names.len() as u32;
+        self.index.insert(s.to_string(), id);
+        self.names.push(s.to_string());
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Serialize as `varint count` + length-prefixed strings in id order.
+    pub fn write(&self, w: &mut ByteWriter) {
+        w.varint(self.names.len() as u64);
+        for s in &self.names {
+            w.str(s);
+        }
+    }
+
+    /// Parse a table previously emitted by [`InternTable::write`] into an
+    /// id-indexed vector.
+    pub fn read(r: &mut ByteReader) -> Result<Vec<String>> {
+        // every string costs >= 1 byte (its length varint)
+        let n = r.len_prefix_for(1)?;
+        let mut names = Vec::with_capacity(n);
+        for _ in 0..n {
+            names.push(r.str()?);
+        }
+        Ok(names)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_roundtrip_edges() {
+        let cases = [
+            0u64,
+            1,
+            0x7f,
+            0x80,
+            0x3fff,
+            0x4000,
+            u32::MAX as u64,
+            u64::MAX - 1,
+            u64::MAX,
+        ];
+        let mut w = ByteWriter::new();
+        for &v in &cases {
+            w.varint(v);
+        }
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        for &v in &cases {
+            assert_eq!(r.varint().unwrap(), v);
+        }
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn varint_rejects_overflow_and_overlong_forms() {
+        // 10th byte with payload bits beyond bit 63 would silently drop
+        // data — must error, not truncate
+        let mut overflowing = vec![0x80u8; 9];
+        overflowing.push(0x7f);
+        assert!(ByteReader::new(&overflowing).varint().is_err());
+        // but the canonical u64::MAX encoding (10th byte == 1) decodes
+        let mut w = ByteWriter::new();
+        w.varint(u64::MAX);
+        let bytes = w.into_bytes();
+        assert_eq!(bytes.len(), 10);
+        assert_eq!(ByteReader::new(&bytes).varint().unwrap(), u64::MAX);
+    }
+
+    #[test]
+    fn f64_is_bit_exact() {
+        let cases = [
+            0.0,
+            -0.0,
+            1.0 / 3.0,
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            f64::NEG_INFINITY,
+            f64::NAN,
+        ];
+        let mut w = ByteWriter::new();
+        for &v in &cases {
+            w.f64(v);
+        }
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        for &v in &cases {
+            assert_eq!(r.f64().unwrap().to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn strings_and_fixed_ints() {
+        let mut w = ByteWriter::new();
+        w.u8(7);
+        w.u16(0xbeef);
+        w.str("héllo\nworld");
+        w.str("");
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 0xbeef);
+        assert_eq!(r.str().unwrap(), "héllo\nworld");
+        assert_eq!(r.str().unwrap(), "");
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn length_prefix_bounded_by_remaining_input() {
+        // a corrupt length can never drive an oversized pre-allocation
+        let mut w = ByteWriter::new();
+        w.varint(1 << 30); // claims ~1G elements...
+        w.f64(0.0); // ...but only 8 bytes follow
+        let bytes = w.into_bytes();
+        let err = ByteReader::new(&bytes).len_prefix_for(8).unwrap_err();
+        assert!(err.to_string().contains("exceeds remaining"), "{err}");
+        // a consistent prefix passes
+        let mut w = ByteWriter::new();
+        w.varint(1);
+        w.f64(3.5);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.len_prefix_for(8).unwrap(), 1);
+        assert_eq!(r.f64().unwrap(), 3.5);
+    }
+
+    #[test]
+    fn truncated_input_is_an_error() {
+        let mut w = ByteWriter::new();
+        w.str("abcdef");
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes[..3]);
+        assert!(r.str().is_err());
+        let mut r = ByteReader::new(&[]);
+        assert!(r.u8().is_err());
+        assert!(ByteReader::new(&[0x80; 12]).varint().is_err());
+    }
+
+    #[test]
+    fn intern_table_dedups_and_roundtrips() {
+        let mut tab = InternTable::new();
+        assert_eq!(tab.intern("a"), 0);
+        assert_eq!(tab.intern("b"), 1);
+        assert_eq!(tab.intern("a"), 0);
+        assert_eq!(tab.len(), 2);
+        let mut w = ByteWriter::new();
+        tab.write(&mut w);
+        let bytes = w.into_bytes();
+        let names = InternTable::read(&mut ByteReader::new(&bytes)).unwrap();
+        assert_eq!(names, vec!["a".to_string(), "b".to_string()]);
+    }
+}

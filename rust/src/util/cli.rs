@@ -1,16 +1,21 @@
 //! Tiny CLI argument parser (offline environment: no clap).
 //!
-//! Supports `pipesim <subcommand> --key value --flag` with typed getters
-//! and defaults; unknown options are an error so typos surface.
+//! Supports `pipesim <subcommand> [<action>] --key value --flag` with
+//! typed getters and defaults; unknown options are an error so typos
+//! surface. The optional second positional is the sub-subcommand used by
+//! grouped commands (`pipesim trace export ...`).
 
 use std::collections::BTreeMap;
 
 use crate::error::{Error, Result};
 
-/// Parsed arguments: a subcommand plus `--key [value]` options.
+/// Parsed arguments: a subcommand, an optional action (second
+/// positional), plus `--key [value]` options.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     pub subcommand: Option<String>,
+    /// Sub-subcommand, e.g. `export` in `pipesim trace export`.
+    pub action: Option<String>,
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
     consumed: std::cell::RefCell<Vec<String>>,
@@ -24,6 +29,11 @@ impl Args {
         if let Some(first) = it.peek() {
             if !first.starts_with("--") {
                 args.subcommand = it.next();
+                if let Some(second) = it.peek() {
+                    if !second.starts_with("--") {
+                        args.action = it.next();
+                    }
+                }
             }
         }
         while let Some(tok) = it.next() {
@@ -152,7 +162,22 @@ mod tests {
     }
 
     #[test]
-    fn unexpected_positional_is_error() {
-        assert!(Args::parse(["x".to_string(), "stray".to_string()]).is_err());
+    fn second_positional_is_the_action() {
+        let a = parse(&["trace", "export", "--out", "t.pst"]);
+        assert_eq!(a.subcommand.as_deref(), Some("trace"));
+        assert_eq!(a.action.as_deref(), Some("export"));
+        assert_eq!(a.get("out", ""), "t.pst");
+        a.reject_unknown().unwrap();
+        // no action
+        let a = parse(&["simulate", "--days", "1"]);
+        assert_eq!(a.action, None);
+    }
+
+    #[test]
+    fn third_positional_is_error() {
+        assert!(Args::parse(
+            ["trace", "export", "stray"].map(String::from)
+        )
+        .is_err());
     }
 }

@@ -608,6 +608,7 @@ impl JsonIo for ExperimentConfig {
             ("synth", self.synth.to_json()),
             ("sample_interval", Json::Num(self.sample_interval)),
             ("record_traces", Json::Bool(self.record_traces)),
+            ("capture_trace", Json::Bool(self.capture_trace)),
             ("runtime_view", self.runtime_view.to_json()),
             (
                 "max_pipelines",
@@ -628,6 +629,11 @@ impl JsonIo for ExperimentConfig {
             synth: SynthConfig::from_json(j.req("synth")?)?,
             sample_interval: j.f("sample_interval")?,
             record_traces: j.req("record_traces")?.as_bool()?,
+            // optional: configs predating the trace subsystem parse as "off"
+            capture_trace: match j.get("capture_trace") {
+                None | Some(Json::Null) => false,
+                Some(v) => v.as_bool()?,
+            },
             runtime_view: RuntimeViewConfig::from_json(j.req("runtime_view")?)?,
             max_pipelines: match j.get("max_pipelines") {
                 None | Some(Json::Null) => None,

@@ -1,8 +1,9 @@
 //! In-tree substrates replacing crates unavailable in the offline build
-//! environment: JSON persistence, CLI parsing, and a micro-benchmark
-//! harness.
+//! environment: JSON and binary persistence, CLI parsing, and a
+//! micro-benchmark harness.
 
 pub mod bench;
+pub mod binio;
 pub mod cli;
 pub mod json;
 pub mod jsonio;

@@ -1,0 +1,350 @@
+//! Trace subsystem integration tests: capture → binary export →
+//! re-ingest → replay round-trips (the digest-equality guarantee), event
+//! conservation against result counters, and the CLI surface
+//! (`trace export|stats|replay`, `sweep --trace-dir`, binary params).
+
+use std::process::Command;
+use std::sync::Arc;
+
+use pipesim::coordinator::config::RuntimeViewConfig;
+use pipesim::coordinator::{
+    fit_params, ArrivalSpec, Experiment, ExperimentConfig, SimParams, StrategySpec,
+};
+use pipesim::des::DAY;
+use pipesim::empirical::GroundTruth;
+use pipesim::trace::{Trace, TraceEventKind, TraceWorkload};
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("pipesim_tr_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn quick_params(seed: u64) -> SimParams {
+    let db = GroundTruth::new(seed).generate_weeks(2);
+    fit_params(&db, None).unwrap()
+}
+
+/// A runtime-view-enabled config: exercises retraining, deferred
+/// launches, and the (fixed) monitor drained condition.
+fn runtime_view_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        name: "trace-rt".into(),
+        seed: 13,
+        horizon: 3.0 * DAY,
+        arrival: ArrivalSpec::Poisson {
+            mean_interarrival: 400.0,
+        },
+        capture_trace: true,
+        runtime_view: RuntimeViewConfig {
+            enabled: true,
+            detector_interval: 3600.0,
+            decay_per_day: 0.05,
+            sudden_drift_prob: 0.05,
+            sudden_drift_drop: 0.1,
+            trigger: StrategySpec::new("drift_threshold").with("threshold", 0.04),
+            max_models: 200,
+        },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn capture_replay_roundtrip_is_byte_identical() {
+    let params = Arc::new(quick_params(51));
+    let mut captured = Experiment::new(runtime_view_cfg(), params.clone())
+        .run()
+        .unwrap();
+    assert!(captured.retrains_triggered > 0, "workload must retrain");
+    let trace = captured.trace.take().expect("capture on");
+    let bytes = trace.to_bytes();
+
+    // binary round-trip is lossless
+    let loaded = Trace::from_bytes(&bytes).unwrap();
+    assert_eq!(loaded, trace);
+
+    // replaying the re-ingested trace reproduces the digest exactly —
+    // without re-capturing (replay_config turns capture off)
+    let workload = TraceWorkload::from_trace(&loaded).unwrap();
+    let replayed = workload.run(params.clone(), None).unwrap();
+    assert_eq!(replayed.digest(), captured.digest());
+    assert!(replayed.trace.is_none(), "replay must not re-capture by default");
+
+    // re-enabling capture on the replay re-exports byte-identically
+    // (the captured config already had interarrival_factor == 1)
+    let mut cfg = workload.replay_config();
+    cfg.capture_trace = true;
+    let mut recaptured = Experiment::new(cfg, params)
+        .with_arrival(workload.arrival_model())
+        .run()
+        .unwrap();
+    let trace2 = recaptured.trace.take().expect("capture re-enabled");
+    assert_eq!(trace2.to_bytes(), bytes);
+}
+
+#[test]
+fn capture_replay_roundtrip_profile_arrivals() {
+    // the stochastic 168-cluster profile is the hard case: replay must
+    // not re-draw from it but feed the recorded gaps back verbatim
+    let params = Arc::new(quick_params(52));
+    let cfg = ExperimentConfig {
+        name: "trace-profile".into(),
+        seed: 4,
+        horizon: DAY,
+        arrival: ArrivalSpec::Profile,
+        capture_trace: true,
+        ..Default::default()
+    };
+    let mut captured = Experiment::new(cfg, params.clone()).run().unwrap();
+    let trace = captured.trace.take().unwrap();
+    let replayed = TraceWorkload::from_trace(&trace)
+        .unwrap()
+        .run(params, None)
+        .unwrap();
+    assert_eq!(replayed.digest(), captured.digest());
+    assert_eq!(replayed.arrived, captured.arrived);
+}
+
+#[test]
+fn capture_flag_never_changes_outcomes() {
+    // tracing is a pure observer: digests with capture on and off match
+    let params = Arc::new(quick_params(53));
+    let mut on = runtime_view_cfg();
+    on.name = "flag".into();
+    let mut off = on.clone();
+    off.capture_trace = false;
+    let a = Experiment::new(on, params.clone()).run().unwrap();
+    let b = Experiment::new(off, params).run().unwrap();
+    assert_eq!(a.digest(), b.digest());
+    assert!(a.trace.is_some());
+    assert!(b.trace.is_none());
+}
+
+#[test]
+fn trace_events_conserve_result_counters() {
+    let params = Arc::new(quick_params(54));
+    let mut r = Experiment::new(runtime_view_cfg(), params).run().unwrap();
+    let trace = r.trace.take().unwrap();
+    let mut arrivals = 0u64;
+    let mut done = 0u64;
+    let mut gates = 0u64;
+    let mut tasks = 0u64;
+    let mut started = 0u64;
+    let mut launches = 0u64;
+    let mut gaps = 0u64;
+    for ev in &trace.events {
+        match ev.kind {
+            TraceEventKind::PipelineArrival { .. } => arrivals += 1,
+            TraceEventKind::PipelineDone { truncated, .. } => {
+                done += 1;
+                if truncated {
+                    gates += 1;
+                }
+            }
+            TraceEventKind::TaskStarted { .. } => started += 1,
+            TraceEventKind::TaskDone { .. } => tasks += 1,
+            TraceEventKind::RetrainLaunched { .. } => launches += 1,
+            TraceEventKind::ArrivalGapDrawn { .. } => gaps += 1,
+            _ => {}
+        }
+    }
+    assert_eq!(arrivals, r.arrived);
+    assert_eq!(done, r.completed);
+    assert_eq!(gates, r.gate_failures);
+    assert_eq!(tasks, r.tasks_executed);
+    assert_eq!(launches, r.retrains_triggered);
+    // every executed task has exactly one TaskStarted (immediate or
+    // post-grant); the surplus is tasks still running at the horizon
+    assert!(started >= tasks, "started {started} < done {tasks}");
+    assert!(started - tasks <= 30, "more running tasks than slots");
+    // one gap per *user* arrival plus the priming draw (retrain launches
+    // inject pipelines without drawing gaps)
+    assert_eq!(gaps, r.arrived - r.retrains_triggered + 1);
+    // timestamps are non-decreasing in emission order
+    assert!(trace.events.windows(2).all(|w| w[0].t <= w[1].t));
+    // meta is self-describing
+    assert_eq!(trace.meta.get("scheduler"), Some("fifo"));
+    assert_eq!(
+        trace.meta.get("trigger"),
+        Some("drift_threshold:threshold=0.04")
+    );
+}
+
+// ------------------------------------------------------------------
+// CLI surface
+// ------------------------------------------------------------------
+
+fn pipesim_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_pipesim"))
+}
+
+fn ok(out: &std::process::Output) -> String {
+    assert!(
+        out.status.success(),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+fn digest_line(stdout: &str) -> String {
+    stdout
+        .lines()
+        .find_map(|l| l.strip_prefix("digest: "))
+        .unwrap_or_else(|| panic!("no digest line in: {stdout}"))
+        .to_string()
+}
+
+#[test]
+fn cli_trace_export_stats_replay() {
+    let dir = tmpdir("cli");
+    let db = dir.join("db.json");
+    // binary params cache end-to-end: fit writes .bin, everything else
+    // auto-detects it
+    let params = dir.join("params.bin");
+    ok(&pipesim_bin()
+        .args(["gen-empirical", "--weeks", "2", "--seed", "3", "--out"])
+        .arg(&db)
+        .output()
+        .unwrap());
+    ok(&pipesim_bin()
+        .arg("fit")
+        .arg("--db")
+        .arg(&db)
+        .arg("--out")
+        .arg(&params)
+        .arg("--cpu")
+        .output()
+        .unwrap());
+    assert!(pipesim::coordinator::params_bin::is_binary(
+        &std::fs::read(&params).unwrap()
+    ));
+
+    let trace_file = dir.join("run.pst");
+    let jsonl = dir.join("run.jsonl");
+    let out = ok(&pipesim_bin()
+        .args(["trace", "export", "--days", "0.5", "--arrival", "poisson:120", "--cpu"])
+        .arg("--params")
+        .arg(&params)
+        .arg("--out")
+        .arg(&trace_file)
+        .arg("--jsonl")
+        .arg(&jsonl)
+        .output()
+        .unwrap());
+    let exported_digest = digest_line(&out);
+    assert!(trace_file.exists());
+    let jsonl_text = std::fs::read_to_string(&jsonl).unwrap();
+    assert!(jsonl_text.lines().count() > 100, "jsonl too small");
+
+    let out = ok(&pipesim_bin()
+        .args(["trace", "stats", "--in"])
+        .arg(&trace_file)
+        .arg("--params")
+        .arg(&params)
+        .output()
+        .unwrap());
+    assert!(out.contains("pipelines"), "{out}");
+    assert!(out.contains("interarrival/fit"), "{out}");
+
+    let out = ok(&pipesim_bin()
+        .args(["trace", "replay", "--cpu", "--in"])
+        .arg(&trace_file)
+        .arg("--params")
+        .arg(&params)
+        .output()
+        .unwrap());
+    assert_eq!(digest_line(&out), exported_digest, "CLI replay diverged");
+
+    // unknown action fails fast
+    let out = pipesim_bin()
+        .args(["trace", "bogus"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn cli_sweep_trace_dir_dumps_one_trace_per_cell() {
+    let dir = tmpdir("sweepdir");
+    let db = dir.join("db.json");
+    let params = dir.join("params.json");
+    let traces = dir.join("traces");
+    ok(&pipesim_bin()
+        .args(["gen-empirical", "--weeks", "2", "--seed", "5", "--out"])
+        .arg(&db)
+        .output()
+        .unwrap());
+    ok(&pipesim_bin()
+        .arg("fit")
+        .arg("--db")
+        .arg(&db)
+        .arg("--out")
+        .arg(&params)
+        .arg("--cpu")
+        .output()
+        .unwrap());
+    ok(&pipesim_bin()
+        .arg("sweep")
+        .arg("--params")
+        .arg(&params)
+        .args([
+            "--days",
+            "0.25",
+            "--arrival",
+            "poisson:300",
+            "--seeds",
+            "2",
+            "--jobs",
+            "2",
+            "--capacities",
+            "2,4",
+            "--cpu",
+            "--trace-dir",
+        ])
+        .arg(&traces)
+        .output()
+        .unwrap());
+    let mut files: Vec<String> = std::fs::read_dir(&traces)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    files.sort();
+    assert_eq!(files.len(), 4, "2 caps x 2 seeds: {files:?}");
+    assert!(files[0].starts_with("cell0000-") && files[0].ends_with(".pst"));
+    // every dumped trace re-ingests and carries its cell's config
+    for f in &files {
+        let t = Trace::load(&traces.join(f)).unwrap();
+        assert!(!t.is_empty());
+        TraceWorkload::from_trace(&t).unwrap();
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn binary_and_json_params_drive_identical_runs() {
+    let dir = tmpdir("paramsfmt");
+    let p = quick_params(55);
+    let bin = dir.join("p.bin");
+    let json = dir.join("p.json");
+    p.save(&bin).unwrap();
+    p.save(&json).unwrap();
+    let cfg = ExperimentConfig {
+        name: "fmt".into(),
+        seed: 2,
+        horizon: DAY / 2.0,
+        arrival: ArrivalSpec::Profile,
+        ..Default::default()
+    };
+    let a = Experiment::new(cfg.clone(), SimParams::load(&bin).unwrap())
+        .run()
+        .unwrap();
+    let b = Experiment::new(cfg, SimParams::load(&json).unwrap())
+        .run()
+        .unwrap();
+    // the binary cache is bit-exact, JSON is round-trip-exact: digests
+    // must agree with each other
+    assert_eq!(a.digest(), b.digest());
+    std::fs::remove_dir_all(dir).ok();
+}
