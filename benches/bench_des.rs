@@ -1,16 +1,31 @@
-//! DES-core microbenchmarks: calendar throughput and resource cycling.
+//! DES-core microbenchmarks: calendar throughput (with and without
+//! event cancellation), resource cycling, and RNG primitives.
 //!
 //! These bound the simulator's event-loop cost (the denominator of the
-//! Fig 13 headline). Run: `cargo bench --bench bench_des`
+//! Fig 13 headline). The cancellation cases guard the tentpole claim
+//! that cancellable events leave the zero-cancellation hot path
+//! unperturbed: the zero-cancel cycle is measured on a calendar that
+//! has the cancellation machinery but never uses it (asserted via the
+//! tombstone counters), side by side with a 10%-cancellation cycle.
+//! Emits `BENCH_des.json` for the CI perf snapshot.
+//!
+//! Run: `cargo bench --bench bench_des`
 
 use pipesim::des::{Calendar, JobCtx, Resource};
 use pipesim::stats::rng::Pcg64;
 use pipesim::util::bench::{black_box, Bench};
+use pipesim::util::Json;
+
+/// Mean of the most recent measurement, in nanoseconds per iteration.
+fn last_ns(b: &Bench) -> f64 {
+    b.results().last().expect("measured").mean.as_secs_f64() * 1e9
+}
 
 fn main() {
     let mut b = Bench::new();
+    let mut rows: Vec<(&'static str, f64)> = Vec::new();
 
-    // schedule+pop cycle on a queue kept at depth ~1000
+    // schedule+pop cycle on a queue kept at depth ~1000, no cancellation
     let mut cal: Calendar<u64> = Calendar::new();
     let mut rng = Pcg64::new(1);
     for i in 0..1000 {
@@ -23,31 +38,59 @@ fn main() {
         cal.schedule_at(t + rng.uniform() * 1e6, i);
         i += 1;
     });
+    rows.push(("calendar_cycle_ns", last_ns(&b)));
+    // the zero-cancellation run must never have engaged the tombstone
+    // machinery: the PR 1 heap hot path is intact
+    assert_eq!(cal.cancelled_total(), 0, "zero-cancel bench touched cancel");
+    assert_eq!(cal.tombstones(), 0);
+
+    // same cycle with ~10% of scheduled events cancelled before firing
+    let mut cal_c: Calendar<u64> = Calendar::new();
+    for i in 0..1000 {
+        cal_c.schedule(rng.uniform() * 1e6, i);
+    }
+    let mut j = 1000u64;
+    b.bench("calendar schedule+pop (depth 1000, 10% cancelled)", || {
+        let (t, v) = cal_c.pop().unwrap();
+        black_box(v);
+        let h = cal_c.schedule_at(t + rng.uniform() * 1e6, j);
+        if j % 10 == 0 {
+            // cancel the pending event and replace it so depth holds
+            if cal_c.cancel(h) {
+                cal_c.schedule_at(t + rng.uniform() * 1e6, j);
+            }
+        }
+        j += 1;
+    });
+    rows.push(("calendar_cycle_10pct_cancel_ns", last_ns(&b)));
+    assert!(cal_c.cancelled_total() > 0, "cancel bench never cancelled");
 
     // deep calendar
     let mut cal2: Calendar<u64> = Calendar::new();
     for i in 0..100_000 {
         cal2.schedule(rng.uniform() * 1e9, i);
     }
-    let mut j = 100_000u64;
+    let mut k = 100_000u64;
     b.bench("calendar schedule+pop (depth 100k)", || {
         let (t, v) = cal2.pop().unwrap();
         black_box(v);
-        cal2.schedule_at(t + rng.uniform() * 1e9, j);
-        j += 1;
+        cal2.schedule_at(t + rng.uniform() * 1e9, k);
+        k += 1;
     });
+    rows.push(("calendar_cycle_deep_ns", last_ns(&b)));
 
     // resource request/release with queueing (capacity 10, 20 in flight)
     let mut res: Resource<u32> = Resource::new("bench", 10);
     let mut t = 0.0f64;
-    for k in 0..20 {
-        res.request(t, k, JobCtx::new(1.0, 1.0, t));
+    for n in 0..20 {
+        res.request(t, n, JobCtx::new(1.0, 1.0, t));
     }
     b.bench("resource release+request (contended)", || {
         t += 1.0;
         black_box(res.release(t));
         res.request(t, 99, JobCtx::new(1.0, 1.0, t));
     });
+    rows.push(("resource_contended_ns", last_ns(&b)));
 
     // uncontended fast path
     let mut res2: Resource<u32> = Resource::new("bench2", 1_000_000);
@@ -57,6 +100,7 @@ fn main() {
         res2.request(t2, 1, JobCtx::new(0.0, 0.0, t2));
         black_box(res2.release(t2));
     });
+    rows.push(("resource_uncontended_ns", last_ns(&b)));
 
     // RNG primitives feeding the simulator
     let mut r = Pcg64::new(2);
@@ -66,4 +110,15 @@ fn main() {
     b.bench("pcg64 uniform()", || {
         black_box(r.uniform());
     });
+
+    let cases: Vec<(String, Json)> = rows
+        .iter()
+        .map(|(key, v)| (key.to_string(), Json::Num(*v)))
+        .collect();
+    let json = Json::obj(vec![
+        ("bench", Json::Str("des".into())),
+        ("cases", Json::Obj(cases)),
+    ]);
+    std::fs::write("BENCH_des.json", json.to_string()).expect("write BENCH_des.json");
+    println!("# wrote BENCH_des.json");
 }

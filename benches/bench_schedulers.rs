@@ -51,7 +51,7 @@ fn main() {
     let mut b = Bench::with_budget(std::time::Duration::from_millis(100), 3);
 
     println!("# scheduler ablation (7 days, training capacity 4, registry-driven)");
-    println!("scheduler,mean_wait_s,p95_wait_s,max_wait_s,completed,util_training");
+    println!("scheduler,mean_wait_s,p95_wait_s,max_wait_s,completed,util_training,preemptions");
     let mut sched_rows = Vec::new();
     for name in scheduler_names() {
         let mut out = None;
@@ -82,10 +82,11 @@ fn main() {
                 max_wait,
                 r.completed,
                 r.util_training,
+                r.preemptions,
             ));
         });
-        let (mw, p95, xw, c, u) = out.unwrap();
-        println!("{name},{mw:.1},{p95:.1},{xw:.0},{c},{u:.3}");
+        let (mw, p95, xw, c, u, pe) = out.unwrap();
+        println!("{name},{mw:.1},{p95:.1},{xw:.0},{c},{u:.3},{pe}");
         sched_rows.push(Json::obj(vec![
             ("name", Json::Str(name.clone())),
             ("wait_mean_s", Json::Num(mw)),
@@ -93,6 +94,50 @@ fn main() {
             ("wait_max_s", Json::Num(xw)),
             ("completed", Json::Num(c as f64)),
             ("util_training", Json::Num(u)),
+            ("preemptions", Json::Num(pe as f64)),
+        ]));
+    }
+
+    // wide-train ablation: 2-slot training jobs create head-of-line
+    // blocking on the training cluster — the regime preemption and
+    // backfill exist for (unit-slot rows above keep their own trend)
+    println!("# wide-train ablation (7 days, capacity 4, train_slots 2)");
+    println!("scheduler,mean_wait_s,completed,util_training,preemptions");
+    let mut wide_rows = Vec::new();
+    for name in ["fifo", "easy_backfill", "priority", "preemptive_priority"] {
+        let mut out = None;
+        b.bench_once(format!("7-day wide run [{name}]"), || {
+            let mut cfg = ExperimentConfig {
+                name: format!("{name}-w2"),
+                seed: 2,
+                horizon: 7.0 * DAY,
+                arrival: ArrivalSpec::Profile,
+                record_traces: false,
+                ..Default::default()
+            };
+            cfg.infra.training_capacity = 4;
+            cfg.infra.train_slots = 2;
+            cfg.infra.scheduler = StrategySpec::new(name);
+            let r = Experiment::new(cfg, params.clone())
+                .with_runtime(runtime.clone())
+                .run()
+                .expect("run");
+            out = Some((
+                r.wait_training.mean(),
+                r.completed,
+                r.util_training,
+                r.preemptions,
+            ));
+        });
+        let (mw, c, u, pe) = out.unwrap();
+        println!("{name},{mw:.1},{c},{u:.3},{pe}");
+        wide_rows.push(Json::obj(vec![
+            ("name", Json::Str(name.into())),
+            ("train_slots", Json::Num(2.0)),
+            ("wait_mean_s", Json::Num(mw)),
+            ("completed", Json::Num(c as f64)),
+            ("util_training", Json::Num(u)),
+            ("preemptions", Json::Num(pe as f64)),
         ]));
     }
 
@@ -147,6 +192,7 @@ fn main() {
         ("bench", Json::Str("schedulers".into())),
         ("backend", Json::Str(backend.into())),
         ("schedulers", Json::Arr(sched_rows)),
+        ("schedulers_wide", Json::Arr(wide_rows)),
         ("triggers", Json::Arr(trig_rows)),
     ]);
     std::fs::write("BENCH_schedulers.json", json.to_string())

@@ -32,6 +32,8 @@ pub struct TraceSummary {
     pub tasks_done: u64,
     /// Tasks that had to queue for a cluster slot.
     pub tasks_queued: u64,
+    /// Running tasks evicted by a preemptive scheduler.
+    pub tasks_preempted: u64,
     /// Trigger firings.
     pub retrains_triggered: u64,
     /// Runtime-view (re)deployments into *monitored* slots. Deploys past
@@ -63,6 +65,7 @@ impl TraceSummary {
             gate_failures: 0,
             tasks_done: 0,
             tasks_queued: 0,
+            tasks_preempted: 0,
             retrains_triggered: 0,
             deployments: 0,
             interarrival: Summary::new(),
@@ -82,6 +85,8 @@ impl TraceSummary {
                     }
                 }
                 TraceEventKind::TaskQueued { .. } => s.tasks_queued += 1,
+                TraceEventKind::TaskPreempted { .. } => s.tasks_preempted += 1,
+                TraceEventKind::TaskRequeued { .. } => {}
                 TraceEventKind::TaskStarted { .. } => {}
                 TraceEventKind::TaskGranted { waited, .. } => s.grant_wait.add(waited),
                 TraceEventKind::TaskDone { task, exec, .. } => {
@@ -145,6 +150,9 @@ impl TraceSummary {
             "  tasks            {} done, {} queued at a saturated cluster",
             self.tasks_done, self.tasks_queued
         );
+        if self.tasks_preempted > 0 {
+            let _ = writeln!(out, "  preemptions      {}", self.tasks_preempted);
+        }
         let _ = writeln!(out, "  interarrival     {}", fmt(&self.interarrival));
         let _ = writeln!(out, "  makespan         {}", fmt(&self.makespan));
         let _ = writeln!(out, "  pipeline wait    {}", fmt(&self.pipeline_wait));

@@ -136,6 +136,14 @@ impl ExperimentConfig {
                 "infra capacities must be >= 1".into(),
             ));
         }
+        if self.infra.train_slots == 0 || self.infra.train_slots > self.infra.training_capacity {
+            // a training job wider than the cluster could never be
+            // granted — it would queue forever
+            return Err(crate::error::Error::Config(format!(
+                "train_slots must be in 1..={} (the training capacity), got {}",
+                self.infra.training_capacity, self.infra.train_slots
+            )));
+        }
         let share_sum: f64 = self.synth.framework_shares.iter().sum();
         if (share_sum - 1.0).abs() > 1e-6 {
             return Err(crate::error::Error::Config(format!(
@@ -189,6 +197,57 @@ mod tests {
         assert!(cfg.validate().is_err());
         let mut cfg = ExperimentConfig::default();
         cfg.synth.framework_shares = [1.0, 1.0, 0.0, 0.0, 0.0];
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_train_slots() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.infra.train_slots = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.infra.training_capacity = 4;
+        cfg.infra.train_slots = 5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.infra.training_capacity = 4;
+        cfg.infra.train_slots = 4;
+        cfg.validate().unwrap();
+        // the knob round-trips through JSON, and old configs without it
+        // parse as unit-slot
+        let text = cfg.to_json_text();
+        let back = ExperimentConfig::from_json_text(&text).unwrap();
+        assert_eq!(back.infra.train_slots, 4);
+        let mut j = crate::util::Json::parse(&text).unwrap();
+        if let crate::util::Json::Obj(fields) = &mut j {
+            let infra = fields
+                .iter_mut()
+                .find(|(k, _)| k == "infra")
+                .map(|(_, v)| v)
+                .unwrap();
+            if let crate::util::Json::Obj(infra_fields) = infra {
+                infra_fields.retain(|(k, _)| k != "train_slots");
+            }
+        }
+        let back = ExperimentConfig::from_json_text(&j.to_string()).unwrap();
+        assert_eq!(back.infra.train_slots, 1);
+    }
+
+    #[test]
+    fn new_scheduler_specs_roundtrip_json() {
+        for spec in [
+            StrategySpec::new("preemptive_priority").with("min_class_gap", 2.0),
+            StrategySpec::new("easy_backfill"),
+        ] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.infra.scheduler = spec.clone();
+            cfg.validate().unwrap();
+            let back = ExperimentConfig::from_json_text(&cfg.to_json_text()).unwrap();
+            assert_eq!(back.infra.scheduler, spec);
+        }
+        // unknown param still rejected
+        let mut cfg = ExperimentConfig::default();
+        cfg.infra.scheduler = StrategySpec::new("easy_backfill").with("window", 1.0);
         assert!(cfg.validate().is_err());
     }
 

@@ -60,6 +60,13 @@ pub struct ExperimentResult {
     pub in_flight: u64,
     pub tasks_executed: u64,
     pub gate_failures: u64,
+    /// Running tasks evicted by a preemptive scheduler (each later
+    /// resumes with its remaining service and completes exactly once).
+    /// Zero for non-preemptive strategies. Like `in_flight`, deliberately
+    /// not part of [`ExperimentResult::digest`]: pre-existing strategies
+    /// must keep byte-identical digests across the preemption-capable
+    /// refactor, and for them this is identically zero.
+    pub preemptions: u64,
     pub retrains_triggered: u64,
     pub models_deployed: u64,
     pub events_processed: u64,
@@ -179,6 +186,9 @@ impl ExperimentResult {
             "  tasks            {} executed, {} events total",
             self.tasks_executed, self.events_processed
         );
+        if self.preemptions > 0 {
+            let _ = writeln!(s, "  preemptions      {}", self.preemptions);
+        }
         let _ = writeln!(
             s,
             "  utilization      training {:.1}%  compute {:.1}%",
@@ -263,6 +273,7 @@ mod tests {
             in_flight: 10,
             tasks_executed: 300,
             gate_failures: 2,
+            preemptions: 0,
             retrains_triggered: 0,
             models_deployed: 0,
             events_processed: 1000,
@@ -313,6 +324,11 @@ mod tests {
         // in_flight is derivable (arrived - completed): kept out of the
         // digest so same-version digest strings remain comparable
         assert!(!a.digest().contains("in_flight"));
+        // preemptions stays out too: identically zero for pre-existing
+        // strategies, whose digests must not move across the refactor
+        let mut p = empty_result();
+        p.preemptions = 3;
+        assert_eq!(a.digest(), p.digest());
         let mut c = empty_result();
         c.completed += 1;
         assert_ne!(a.digest(), c.digest());

@@ -22,7 +22,7 @@ use std::sync::Arc;
 
 use crate::arrivals::ArrivalModel;
 use crate::des::sched::JobCtx;
-use crate::des::{AcquireResult, Calendar, Resource, SimTime};
+use crate::des::{AcquireResult, Calendar, EventHandle, Granted, Resource, SimTime};
 use crate::error::Result;
 use crate::model::pipeline::TaskNode;
 use crate::model::{
@@ -75,6 +75,17 @@ struct PipelineState {
     pending_exec: f64,
     pending_read: f64,
     pending_write: f64,
+    /// Cancellation handle of the in-flight `TaskDone` while the current
+    /// task runs (None while queued / between tasks). Preemption cancels
+    /// it so the completion never fires.
+    done_handle: Option<EventHandle>,
+    /// Absolute completion time of the in-flight task (valid while
+    /// `done_handle` is set); remaining service at preemption is
+    /// `done_at - now`.
+    done_at: SimTime,
+    /// Service seconds left from a preemption; consumed (instead of the
+    /// full read+exec+write) when the task is re-granted a slot.
+    remaining_service: Option<f64>,
     /// Deployed-model slot to refresh when this (retraining) run deploys.
     retrain_of: Option<u32>,
     /// User priority (lower = more important; Fig 4's "model
@@ -137,6 +148,7 @@ struct Counters {
     completed: u64,
     tasks_executed: u64,
     gate_failures: u64,
+    preemptions: u64,
     retrains: u64,
     models_deployed: u64,
     events: u64,
@@ -179,6 +191,9 @@ pub(super) struct Simulation {
     // branch and zero allocations)
     capture: bool,
     sink: Box<dyn TraceSink>,
+    /// Scratch for multi-grant releases (a wide training job freeing
+    /// room for several narrow tasks), reused across events.
+    grant_buf: Vec<Granted<u32>>,
 }
 
 impl Simulation {
@@ -187,11 +202,16 @@ impl Simulation {
     /// trigger, and the primed calendar. Assumes `cfg` already validated.
     /// `arrival_override` replaces the config-selected arrival process
     /// (the trace-replay path feeds recorded gaps through it).
+    /// `sink_override` injects a caller-supplied [`TraceSink`]
+    /// (`Experiment::with_sink`) — event capture is then on regardless of
+    /// `cfg.capture_trace`, and a streaming sink that drains empty leaves
+    /// no in-memory trace behind.
     pub(super) fn new(
         cfg: ExperimentConfig,
         params: Arc<SimParams>,
         runtime: Option<Arc<Runtime>>,
         arrival_override: Option<ArrivalModel>,
+        sink_override: Option<Box<dyn TraceSink>>,
     ) -> Result<Self> {
         let backend = match &runtime {
             Some(rt) => Backend::Runtime(rt.clone()),
@@ -252,12 +272,12 @@ impl Simulation {
         let mut db = TsStore::new();
         let h = SeriesHandles::intern(&mut db);
 
-        // event-trace capture
-        let capture = cfg.capture_trace;
-        let mut sink: Box<dyn TraceSink> = if capture {
-            Box::new(MemorySink::new())
-        } else {
-            Box::new(NullSink)
+        // event-trace capture: an injected sink wins and forces capture
+        let capture = cfg.capture_trace || sink_override.is_some();
+        let mut sink: Box<dyn TraceSink> = match sink_override {
+            Some(s) => s,
+            None if capture => Box::new(MemorySink::new()),
+            None => Box::new(NullSink),
         };
 
         // prime the calendar
@@ -303,6 +323,7 @@ impl Simulation {
             },
             capture,
             sink,
+            grant_buf: Vec::new(),
         })
     }
 
@@ -385,6 +406,9 @@ impl Simulation {
             pending_exec: 0.0,
             pending_read: 0.0,
             pending_write: 0.0,
+            done_handle: None,
+            done_at: 0.0,
+            remaining_service: None,
             retrain_of: None,
             // user-assigned priority class 1..=10
             priority: 1.0 + self.rng_noise.below(10) as f64,
@@ -449,7 +473,8 @@ impl Simulation {
             st.pending_read = store.read_time(read_b);
             st.pending_write = store.write_time(write_b);
             let total = st.pending_read + st.pending_exec + st.pending_write;
-            let job = JobCtx::new(total, st.priority, st.arrived_at);
+            let job = JobCtx::new(total, st.priority, st.arrived_at)
+                .with_slots(self.cfg.infra.task_slots(task));
             (
                 task,
                 node.framework,
@@ -490,7 +515,10 @@ impl Simulation {
                         },
                     });
                 }
-                self.cal.schedule(total, Event::TaskDone(pid));
+                let h = self.cal.schedule(total, Event::TaskDone(pid));
+                let st = self.slab[pid as usize].as_mut().expect("live pipeline");
+                st.done_handle = Some(h);
+                st.done_at = t_now + total;
             }
             AcquireResult::Queued => {
                 if self.capture {
@@ -504,6 +532,62 @@ impl Simulation {
                     });
                 }
             }
+            AcquireResult::Preempted { victim } => {
+                // the scheduler evicted `victim` and already re-queued it
+                // with its remaining service; void its completion event
+                // and remember the remainder for the re-grant
+                let (vh, vtask, remaining) = {
+                    let vst = self.slab[victim as usize]
+                        .as_mut()
+                        .expect("preemption victim is live");
+                    let vh = vst
+                        .done_handle
+                        .take()
+                        .expect("preemption victim had a scheduled completion");
+                    let remaining = (vst.done_at - t_now).max(0.0);
+                    vst.remaining_service = Some(remaining);
+                    (vh, vst.tasks.get(vst.cur).task, remaining)
+                };
+                let cancelled = self.cal.cancel(vh);
+                debug_assert!(cancelled, "victim completion was pending");
+                self.c.preemptions += 1;
+                if self.capture {
+                    self.sink.record(&TraceEvent {
+                        t: t_now,
+                        kind: TraceEventKind::TaskPreempted {
+                            pid: victim,
+                            task: vtask,
+                            resource: kind,
+                            by: pid,
+                            remaining,
+                        },
+                    });
+                    self.sink.record(&TraceEvent {
+                        t: t_now,
+                        kind: TraceEventKind::TaskRequeued {
+                            pid: victim,
+                            task: vtask,
+                            resource: kind,
+                        },
+                    });
+                    // the preemptor starts in the vacated slots
+                    self.sink.record(&TraceEvent {
+                        t: t_now,
+                        kind: TraceEventKind::TaskStarted {
+                            pid,
+                            task,
+                            framework: fw_tag,
+                            exec,
+                            read: read_t,
+                            write: write_t,
+                        },
+                    });
+                }
+                let h = self.cal.schedule(total, Event::TaskDone(pid));
+                let st = self.slab[pid as usize].as_mut().expect("live pipeline");
+                st.done_handle = Some(h);
+                st.done_at = t_now + total;
+            }
         }
         Ok(())
     }
@@ -513,9 +597,11 @@ impl Simulation {
     /// the pipeline or complete it.
     fn on_task_done(&mut self, t: SimTime, pid: u32) -> Result<()> {
         self.c.tasks_executed += 1;
-        // release + grant next waiter
+        // release + grant next waiters (several when a wide training job
+        // frees room for multiple narrow tasks)
         let (task, fw_tag, exec_dur, kind) = {
-            let st = self.slab[pid as usize].as_ref().expect("live");
+            let st = self.slab[pid as usize].as_mut().expect("live");
+            st.done_handle = None; // this completion just fired
             let node = st.tasks.get(st.cur);
             (node.task, node.framework, st.pending_exec, ResourceKind::for_task(node.task))
         };
@@ -530,16 +616,26 @@ impl Simulation {
                 },
             });
         }
-        let granted = match kind {
-            ResourceKind::Training => self.training.release(t),
-            ResourceKind::Compute => self.compute.release(t),
+        let slots = self.cfg.infra.task_slots(task);
+        let mut grants = std::mem::take(&mut self.grant_buf);
+        grants.clear();
+        match kind {
+            ResourceKind::Training => self.training.release_all(t, &pid, slots, &mut grants),
+            ResourceKind::Compute => self.compute.release_all(t, &pid, slots, &mut grants),
         };
-        if let Some(g) = granted {
-            let w = self.slab[g.token as usize].as_mut().expect("queued pipeline");
-            w.total_wait += g.waited;
-            let total = w.pending_read + w.pending_exec + w.pending_write;
-            let node = w.tasks.get(w.cur);
-            let (g_exec, g_read, g_write) = (w.pending_exec, w.pending_read, w.pending_write);
+        for g in grants.drain(..) {
+            let (total, node, g_exec, g_read, g_write) = {
+                let w = self.slab[g.token as usize].as_mut().expect("queued pipeline");
+                w.total_wait += g.waited;
+                // a preempted task resumes with its remaining service
+                let total = w
+                    .remaining_service
+                    .take()
+                    .unwrap_or(w.pending_read + w.pending_exec + w.pending_write);
+                w.done_at = t + total;
+                let node = w.tasks.get(w.cur);
+                (total, node, w.pending_exec, w.pending_read, w.pending_write)
+            };
             if self.cfg.record_traces {
                 let h = match kind {
                     ResourceKind::Training => self.h.wait_t,
@@ -572,8 +668,13 @@ impl Simulation {
                     },
                 });
             }
-            self.cal.schedule(total, Event::TaskDone(g.token));
+            let h = self.cal.schedule(total, Event::TaskDone(g.token));
+            self.slab[g.token as usize]
+                .as_mut()
+                .expect("queued pipeline")
+                .done_handle = Some(h);
         }
+        self.grant_buf = grants;
         if self.cfg.record_traces {
             let slot = &mut self.h.exec[task.index()][fw_tag.map_or(0, |f| f.index() + 1)];
             let h = match *slot {
@@ -832,6 +933,9 @@ impl Simulation {
             pending_exec: 0.0,
             pending_read: 0.0,
             pending_write: 0.0,
+            done_handle: None,
+            done_at: 0.0,
+            remaining_service: None,
             retrain_of: Some(slot),
             priority: 0.0, // retrains jump the queue
         };
@@ -895,6 +999,7 @@ impl Simulation {
             in_flight: self.c.live,
             tasks_executed: self.c.tasks_executed,
             gate_failures: self.c.gate_failures,
+            preemptions: self.c.preemptions,
             retrains_triggered: self.c.retrains,
             models_deployed: self.c.models_deployed,
             events_processed: self.c.events,

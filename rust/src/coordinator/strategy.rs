@@ -13,7 +13,8 @@
 use std::sync::{OnceLock, RwLock};
 
 use crate::des::sched::{
-    EarliestDeadlineFirst, Fifo, Priority, Scheduler, ShortestJobFirst, WeightedFair,
+    EarliestDeadlineFirst, EasyBackfill, Fifo, PreemptivePriority, Priority, Scheduler,
+    ShortestJobFirst, WeightedFair,
 };
 use crate::error::{Error, Result};
 
@@ -142,6 +143,16 @@ fn ctor_weighted_fair(spec: &StrategySpec) -> Result<Box<dyn Scheduler>> {
     spec.check_keys(&["weight_power"])?;
     Ok(Box::new(WeightedFair::new(spec.get_or("weight_power", 1.0))))
 }
+fn ctor_preemptive_priority(spec: &StrategySpec) -> Result<Box<dyn Scheduler>> {
+    spec.check_keys(&["min_class_gap"])?;
+    Ok(Box::new(PreemptivePriority {
+        min_class_gap: spec.get_or("min_class_gap", 1.0),
+    }))
+}
+fn ctor_easy_backfill(spec: &StrategySpec) -> Result<Box<dyn Scheduler>> {
+    spec.check_keys(&[])?;
+    Ok(Box::new(EasyBackfill::default()))
+}
 
 const BUILTIN_SCHEDULERS: &[(&str, SchedulerCtor)] = &[
     ("fifo", ctor_fifo),
@@ -149,6 +160,8 @@ const BUILTIN_SCHEDULERS: &[(&str, SchedulerCtor)] = &[
     ("sjf", ctor_sjf),
     ("edf", ctor_edf),
     ("weighted_fair", ctor_weighted_fair),
+    ("preemptive_priority", ctor_preemptive_priority),
+    ("easy_backfill", ctor_easy_backfill),
 ];
 
 fn ctor_eager(spec: &StrategySpec) -> Result<Box<dyn RetrainTrigger>> {
@@ -293,7 +306,15 @@ mod tests {
 
     #[test]
     fn builtins_resolve_with_defaults() {
-        for name in ["fifo", "priority", "sjf", "edf", "weighted_fair"] {
+        for name in [
+            "fifo",
+            "priority",
+            "sjf",
+            "edf",
+            "weighted_fair",
+            "preemptive_priority",
+            "easy_backfill",
+        ] {
             let s = build_scheduler(&StrategySpec::new(name)).unwrap();
             assert_eq!(s.name(), name);
         }

@@ -1,4 +1,5 @@
-//! Calendar event queue: a 4-ary min-heap keyed by (time, sequence).
+//! Calendar event queue: a 4-ary min-heap keyed by (time, sequence),
+//! with cancellable events.
 //!
 //! The sequence number makes event ordering fully deterministic: two
 //! events scheduled for the same instant fire in scheduling order, which
@@ -10,14 +11,48 @@
 //! comparisons use `f64::total_cmp` — a branch-free total order, no NaN
 //! panic path in the per-event comparator (NaN times are rejected once,
 //! at `schedule_at`).
+//!
+//! ## Cancellation
+//!
+//! [`Calendar::schedule_at`] returns an [`EventHandle`] that
+//! [`Calendar::cancel`] can later revoke — the hook preemptive and
+//! re-ordering schedulers need to void an in-flight completion event.
+//! Cancellation is *lazy*: the entry stays in the heap as a tombstone
+//! (its comparator key untouched, so the heap invariant is preserved)
+//! and is discarded when it surfaces in [`Calendar::pop`]. The hot path
+//! is unperturbed when no cancellations occur: scheduling and popping
+//! allocate nothing extra, and the only added cost is two well-predicted
+//! branches per pop. When tombstones exceed half the backing heap —
+//! checked on every cancel and every live pop — the calendar compacts:
+//! drops every tombstone and re-heapifies in O(n), so the tombstone
+//! count stays at or below `max(backing/2, 64)` (guarded by the
+//! property tests in `rust/tests/props.rs`).
 
 use super::SimTime;
 
 const ARITY: usize = 4;
 
+/// Compact below this backing size is never worthwhile.
+const COMPACT_MIN: usize = 64;
+
+/// A claim ticket for a scheduled event, returned by
+/// [`Calendar::schedule_at`] / [`Calendar::schedule`] and consumed by
+/// [`Calendar::cancel`]. Handles are unique per calendar for the whole
+/// run (they wrap the monotone scheduling sequence number), so a stale
+/// handle can never cancel a different event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct EventHandle {
+    seq: u64,
+}
+
 struct Entry<E> {
     time: SimTime,
     seq: u64,
+    /// Lazily-reaped tombstone flag. Deliberately *not* part of the
+    /// comparator: flipping it on cancel leaves the heap invariant
+    /// intact, so no re-sifting is needed and live-event pop order is
+    /// untouched.
+    cancelled: bool,
     event: E,
 }
 
@@ -38,6 +73,10 @@ pub struct Calendar<E> {
     heap: Vec<Entry<E>>,
     seq: u64,
     now: SimTime,
+    /// Cancelled entries still sitting in `heap`.
+    tombstones: usize,
+    /// Total cancellations ever accepted (stats/bench accounting).
+    cancelled_total: u64,
 }
 
 impl<E> Default for Calendar<E> {
@@ -52,6 +91,8 @@ impl<E> Calendar<E> {
             heap: Vec::new(),
             seq: 0,
             now: 0.0,
+            tombstones: 0,
+            cancelled_total: 0,
         }
     }
 
@@ -61,58 +102,148 @@ impl<E> Calendar<E> {
         self.now
     }
 
-    /// Schedule `event` at absolute time `t`. `t` must not be in the past.
-    pub fn schedule_at(&mut self, t: SimTime, event: E) {
+    /// Schedule `event` at absolute time `t`. `t` must not be in the
+    /// past. The returned handle cancels the event; it may be ignored
+    /// for events that are never revoked.
+    pub fn schedule_at(&mut self, t: SimTime, event: E) -> EventHandle {
         debug_assert!(t >= self.now, "scheduling into the past: {t} < {}", self.now);
         debug_assert!(!t.is_nan(), "NaN sim time");
+        let seq = self.seq;
         self.heap.push(Entry {
             time: t,
-            seq: self.seq,
+            seq,
+            cancelled: false,
             event,
         });
         self.seq += 1;
         self.sift_up(self.heap.len() - 1);
+        EventHandle { seq }
     }
 
     /// Schedule `event` after a non-negative `delay` from now.
     #[inline]
-    pub fn schedule(&mut self, delay: SimTime, event: E) {
+    pub fn schedule(&mut self, delay: SimTime, event: E) -> EventHandle {
         debug_assert!(delay >= 0.0, "negative delay {delay}");
-        self.schedule_at(self.now + delay, event);
+        self.schedule_at(self.now + delay, event)
     }
 
-    /// Pop the next event, advancing the clock to its time.
+    /// Cancel a pending event. Returns `true` when the handle named a
+    /// still-pending event (now tombstoned and guaranteed never to
+    /// fire); `false` when the event already fired, was already
+    /// cancelled, or the handle is unknown. O(heap) scan — cancellation
+    /// is the rare path; scheduling and popping pay nothing for it.
+    pub fn cancel(&mut self, handle: EventHandle) -> bool {
+        if handle.seq >= self.seq {
+            return false; // never issued by this calendar
+        }
+        let Some(entry) = self
+            .heap
+            .iter_mut()
+            .find(|e| e.seq == handle.seq && !e.cancelled)
+        else {
+            return false;
+        };
+        entry.cancelled = true;
+        self.tombstones += 1;
+        self.cancelled_total += 1;
+        if self.heap.len() > COMPACT_MIN && self.tombstones * 2 > self.heap.len() {
+            self.compact();
+        }
+        true
+    }
+
+    /// Pop the next live event, advancing the clock to its time.
+    /// Tombstones surfacing at the top are reaped and skipped without
+    /// advancing the clock.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
-        if self.heap.is_empty() {
-            return None;
+        loop {
+            if self.heap.is_empty() {
+                return None;
+            }
+            let last = self.heap.len() - 1;
+            self.heap.swap(0, last);
+            let e = self.heap.pop().expect("non-empty");
+            if !self.heap.is_empty() {
+                self.sift_down(0);
+            }
+            if e.cancelled {
+                self.tombstones -= 1;
+                continue;
+            }
+            // a live pop shrinks the backing heap while tombstones stay,
+            // so the ratio bound must be re-checked here too, not just
+            // at cancel. The common zero-tombstone case short-circuits
+            // on the first predictable compare.
+            if self.tombstones != 0
+                && self.heap.len() > COMPACT_MIN
+                && self.tombstones * 2 > self.heap.len()
+            {
+                self.compact();
+            }
+            debug_assert!(e.time >= self.now);
+            self.now = e.time;
+            return Some((e.time, e.event));
         }
-        let last = self.heap.len() - 1;
-        self.heap.swap(0, last);
-        let e = self.heap.pop().expect("non-empty");
-        if !self.heap.is_empty() {
-            self.sift_down(0);
-        }
-        debug_assert!(e.time >= self.now);
-        self.now = e.time;
-        Some((e.time, e.event))
     }
 
-    /// Time of the next event without popping it.
-    pub fn peek_time(&self) -> Option<SimTime> {
+    /// Time of the next *live* event without popping it. Reaps any
+    /// tombstones blocking the top first, so the answer is exact.
+    pub fn peek_time(&mut self) -> Option<SimTime> {
+        while self.heap.first().is_some_and(|e| e.cancelled) {
+            let last = self.heap.len() - 1;
+            self.heap.swap(0, last);
+            self.heap.pop();
+            self.tombstones -= 1;
+            if !self.heap.is_empty() {
+                self.sift_down(0);
+            }
+        }
         self.heap.first().map(|e| e.time)
     }
 
+    /// Live (non-cancelled) events pending.
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.heap.len() - self.tombstones
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
+    }
+
+    /// Backing-heap size including tombstones awaiting reap.
+    pub fn backing_len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Tombstones currently awaiting lazy reap. Bounded: cancellation
+    /// and live pops both trigger compaction, keeping this at or below
+    /// `max(backing_len / 2, COMPACT_MIN)` after every operation (the
+    /// property tests assert exactly that bound).
+    pub fn tombstones(&self) -> usize {
+        self.tombstones
     }
 
     /// Total events ever scheduled (the sequence counter).
     pub fn scheduled_total(&self) -> u64 {
         self.seq
+    }
+
+    /// Total cancellations ever accepted.
+    pub fn cancelled_total(&self) -> u64 {
+        self.cancelled_total
+    }
+
+    /// Drop every tombstone and restore the heap invariant in O(n).
+    fn compact(&mut self) {
+        self.heap.retain(|e| !e.cancelled);
+        self.tombstones = 0;
+        // Floyd heapify: sift every internal node down, bottom-up.
+        let len = self.heap.len();
+        if len > 1 {
+            for i in (0..=(len - 2) / ARITY).rev() {
+                self.sift_down(i);
+            }
+        }
     }
 
     #[inline]
@@ -222,6 +353,96 @@ mod tests {
         assert_eq!(c.peek_time(), Some(7.0));
         assert_eq!(c.now(), 0.0);
         assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn cancelled_event_never_fires() {
+        let mut c = Calendar::new();
+        let a = c.schedule_at(1.0, "a");
+        let _b = c.schedule_at(2.0, "b");
+        assert_eq!(c.len(), 2);
+        assert!(c.cancel(a));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.tombstones(), 1);
+        assert_eq!(c.pop().unwrap(), (2.0, "b"));
+        assert!(c.pop().is_none());
+        assert_eq!(c.tombstones(), 0);
+        assert_eq!(c.cancelled_total(), 1);
+    }
+
+    #[test]
+    fn cancel_is_idempotent_and_rejects_fired_or_unknown_handles() {
+        let mut c = Calendar::new();
+        let a = c.schedule_at(1.0, ());
+        assert!(c.cancel(a));
+        assert!(!c.cancel(a), "double cancel must be a no-op");
+        let b = c.schedule_at(2.0, ());
+        assert_eq!(c.pop().unwrap().0, 2.0);
+        assert!(!c.cancel(b), "fired events cannot be cancelled");
+        assert!(!c.cancel(EventHandle { seq: 999 }), "unknown handle");
+        assert_eq!(c.cancelled_total(), 1);
+    }
+
+    #[test]
+    fn cancel_then_reschedule_preserves_order() {
+        let mut c = Calendar::new();
+        let h = c.schedule_at(5.0, "moved");
+        c.schedule_at(4.0, "x");
+        c.schedule_at(6.0, "y");
+        assert!(c.cancel(h));
+        c.schedule_at(4.5, "moved"); // rescheduled earlier
+        assert_eq!(c.pop().unwrap(), (4.0, "x"));
+        assert_eq!(c.pop().unwrap(), (4.5, "moved"));
+        assert_eq!(c.pop().unwrap(), (6.0, "y"));
+        assert!(c.pop().is_none());
+    }
+
+    #[test]
+    fn tombstones_do_not_advance_clock() {
+        let mut c = Calendar::new();
+        let h = c.schedule_at(10.0, ());
+        c.schedule_at(20.0, ());
+        c.cancel(h);
+        let (t, _) = c.pop().unwrap();
+        assert_eq!(t, 20.0);
+        assert_eq!(c.now(), 20.0);
+    }
+
+    #[test]
+    fn peek_skips_tombstones() {
+        let mut c = Calendar::new();
+        let h = c.schedule_at(1.0, ());
+        c.schedule_at(2.0, ());
+        c.cancel(h);
+        assert_eq!(c.peek_time(), Some(2.0));
+        assert_eq!(c.tombstones(), 0, "peek reaps blocking tombstones");
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn compaction_bounds_tombstone_ratio() {
+        let mut c = Calendar::new();
+        let handles: Vec<EventHandle> = (0..1000).map(|i| c.schedule_at(i as f64, i)).collect();
+        // cancel 90%: compaction must keep tombstones <= backing/2
+        for (i, h) in handles.iter().enumerate() {
+            if i % 10 != 0 {
+                assert!(c.cancel(*h));
+            }
+            assert!(
+                c.tombstones() <= (c.backing_len() / 2).max(COMPACT_MIN),
+                "tombstone ratio unbounded: {}/{}",
+                c.tombstones(),
+                c.backing_len()
+            );
+        }
+        assert_eq!(c.len(), 100);
+        // survivors pop in order
+        let mut prev = -1.0;
+        while let Some((t, v)) = c.pop() {
+            assert!(t > prev);
+            assert_eq!(v % 10, 0);
+            prev = t;
+        }
     }
 
     #[test]

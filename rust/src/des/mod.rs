@@ -13,10 +13,10 @@ pub mod monitor;
 pub mod resource;
 pub mod sched;
 
-pub use calendar::Calendar;
+pub use calendar::{Calendar, EventHandle};
 pub use monitor::{Counter, TimeWeighted};
-pub use resource::{AcquireResult, Resource};
-pub use sched::{JobCtx, SchedCtx, Scheduler};
+pub use resource::{AcquireResult, Granted, Resource};
+pub use sched::{EnqueueAction, JobCtx, SchedCtx, SchedView, Scheduler};
 
 /// Simulated time in seconds since experiment start.
 pub type SimTime = f64;

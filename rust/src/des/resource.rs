@@ -2,66 +2,49 @@
 //!
 //! Mirrors SimPy's `Resource` (the paper models every compute cluster as
 //! one, section V-B a): a congestion point with a fixed number of job
-//! slots. Requests beyond capacity queue up; on release the next waiter
-//! is granted according to the resource's [`Scheduler`].
+//! slots. Requests beyond capacity queue up; on release the next waiters
+//! are granted according to the resource's [`Scheduler`].
 //!
 //! Scheduling beyond FIFO is the hook for the paper's envisioned
-//! pipeline schedulers (Fig 4): every admission and waiter-ordering
-//! decision is delegated to a pluggable [`Scheduler`] strategy (see
-//! [`super::sched`]), selectable by name from experiment config.
-
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+//! pipeline schedulers (Fig 4): every admission, ordering, grant, and
+//! preemption decision is delegated to a pluggable [`Scheduler`]
+//! strategy (see [`super::sched`]), selectable by name from experiment
+//! config. Jobs may occupy multiple slots ([`JobCtx::slots`]), which is
+//! what gives backfill strategies a blocked head-of-queue to reserve
+//! around; re-decision strategies ([`Scheduler::needs_view`]) can evict
+//! running work ([`AcquireResult::Preempted`]) — the caller then cancels
+//! the victim's completion event and the victim waits in queue with its
+//! remaining service.
 
 use super::monitor::TimeWeighted;
-use super::sched::{Fifo, JobCtx, SchedCtx, Scheduler};
+use super::sched::{
+    default_grants, earlier_waiter, EnqueueAction, Fifo, JobCtx, RunningView, SchedCtx, SchedView,
+    Scheduler, WaiterView,
+};
 use super::SimTime;
 use crate::stats::Summary;
 
-struct Waiter<T> {
-    token: T,
-    key: f64,
-    enq_t: SimTime,
-    seq: u64,
-}
-
-impl<T> PartialEq for Waiter<T> {
-    fn eq(&self, other: &Self) -> bool {
-        self.key == other.key && self.seq == other.seq
-    }
-}
-impl<T> Eq for Waiter<T> {}
-impl<T> PartialOrd for Waiter<T> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl<T> Ord for Waiter<T> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // min-heap on (key, seq) via reversal; total_cmp keeps the hot
-        // comparator branch-free (NaN keys are rejected at `request`)
-        other
-            .key
-            .total_cmp(&self.key)
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
-}
-
 /// Result of a resource request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum AcquireResult {
-    /// A slot was free; the job may start immediately.
+pub enum AcquireResult<T> {
+    /// Enough slots were free; the job may start immediately.
     Acquired,
-    /// All slots busy (or admission deferred); the token was enqueued and
-    /// will be returned by a future `release` call.
+    /// The job could not start (capacity short or admission deferred);
+    /// the token was enqueued and will be returned by a future
+    /// release call.
     Queued,
+    /// The job starts immediately by evicting `victim`, which has been
+    /// re-queued with its remaining service. The caller must cancel the
+    /// victim's scheduled completion event.
+    Preempted { victim: T },
 }
 
-/// A granted waiter returned by [`Resource::release`].
+/// A granted waiter returned by a release call.
 #[derive(Clone, Copy, Debug)]
 pub struct Granted<T> {
     pub token: T,
-    /// How long the job waited in queue.
+    /// How long the job waited in queue (since its last enqueue — a
+    /// preempted job re-enters the queue at preemption time).
     pub waited: SimTime,
 }
 
@@ -71,14 +54,28 @@ pub struct Resource<T> {
     capacity: usize,
     in_use: usize,
     scheduler: Box<dyn Scheduler>,
-    queue: BinaryHeap<Waiter<T>>,
-    seq: u64,
+    /// Cached `scheduler.needs_view()`: when false the re-decision hooks
+    /// are never called and the running set is not tracked.
+    track_view: bool,
+    // waiters as parallel arrays so the views form a contiguous slice
+    // handed to the scheduler without copying (storage order arbitrary —
+    // `WaiterView::seq` carries FCFS order)
+    waiter_tok: Vec<T>,
+    waiter_views: Vec<WaiterView>,
+    // running set (only maintained when `track_view`)
+    run_tok: Vec<T>,
+    run_views: Vec<RunningView>,
+    wseq: u64,
+    rseq: u64,
+    grant_scratch: Vec<usize>,
     // instrumentation
     pub busy: TimeWeighted,
     pub queue_len: TimeWeighted,
     pub wait_stats: Summary,
     pub total_requests: u64,
     pub total_queued: u64,
+    /// Running jobs evicted by a preemptive strategy.
+    pub total_preempted: u64,
 }
 
 impl<T> Resource<T> {
@@ -96,18 +93,26 @@ impl<T> Resource<T> {
         scheduler: Box<dyn Scheduler>,
     ) -> Self {
         assert!(capacity > 0, "resource capacity must be positive");
+        let track_view = scheduler.needs_view();
         Resource {
             name: name.into(),
             capacity,
             in_use: 0,
             scheduler,
-            queue: BinaryHeap::new(),
-            seq: 0,
+            track_view,
+            waiter_tok: Vec::new(),
+            waiter_views: Vec::new(),
+            run_tok: Vec::new(),
+            run_views: Vec::new(),
+            wseq: 0,
+            rseq: 0,
+            grant_scratch: Vec::new(),
             busy: TimeWeighted::new(0.0, 0.0),
             queue_len: TimeWeighted::new(0.0, 0.0),
             wait_stats: Summary::new(),
             total_requests: 0,
             total_queued: 0,
+            total_preempted: 0,
         }
     }
 
@@ -120,7 +125,7 @@ impl<T> Resource<T> {
     }
 
     pub fn queued(&self) -> usize {
-        self.queue.len()
+        self.waiter_views.len()
     }
 
     /// Name of the scheduling strategy driving this resource.
@@ -128,62 +133,49 @@ impl<T> Resource<T> {
         self.scheduler.name()
     }
 
-    /// Request one slot at time `t` for a job described by `job`. The
-    /// scheduler decides admission (when a slot is free) and, if the job
-    /// must queue, its ordering key.
-    pub fn request(&mut self, t: SimTime, token: T, job: JobCtx) -> AcquireResult {
-        self.total_requests += 1;
-        let ctx = SchedCtx {
+    fn ctx(&self, t: SimTime, job: JobCtx) -> SchedCtx {
+        SchedCtx {
             now: t,
             job,
             in_use: self.in_use,
             capacity: self.capacity,
-            queued: self.queue.len(),
-        };
-        // idle resources always admit (enforced here, not just documented):
-        // with nothing running, nothing will ever be released to grant a
-        // queued job, so a scheduler refusing at in_use == 0 would deadlock
-        if self.in_use < self.capacity && (self.in_use == 0 || self.scheduler.admit(&ctx)) {
-            self.in_use += 1;
-            self.busy.set(t, self.in_use as f64);
-            self.wait_stats.add(0.0);
-            AcquireResult::Acquired
-        } else {
-            let key = self.scheduler.queue_key(&ctx);
-            debug_assert!(!key.is_nan(), "NaN waiter key from {}", self.scheduler.name());
-            self.queue.push(Waiter {
-                token,
-                key,
-                enq_t: t,
-                seq: self.seq,
-            });
-            self.seq += 1;
-            self.total_queued += 1;
-            self.queue_len.set(t, self.queue.len() as f64);
-            AcquireResult::Queued
+            queued: self.waiter_views.len(),
         }
     }
 
-    /// Release one slot at time `t`. If waiters are queued, the next one
-    /// (per the scheduler's ordering) is granted *immediately* — the slot
-    /// never goes idle — and returned so the caller can schedule its
-    /// continuation.
-    pub fn release(&mut self, t: SimTime) -> Option<Granted<T>> {
-        debug_assert!(self.in_use > 0, "release on idle resource {}", self.name);
-        if let Some(w) = self.queue.pop() {
-            self.queue_len.set(t, self.queue.len() as f64);
-            let waited = t - w.enq_t;
-            self.wait_stats.add(waited);
-            // in_use unchanged: slot transfers to the waiter
-            Some(Granted {
-                token: w.token,
-                waited,
-            })
-        } else {
-            self.in_use -= 1;
-            self.busy.set(t, self.in_use as f64);
-            None
+    /// Enqueue a job: the scheduler assigns its ordering key.
+    fn enqueue(&mut self, t: SimTime, token: T, job: JobCtx) {
+        let ctx = self.ctx(t, job);
+        let key = self.scheduler.queue_key(&ctx);
+        debug_assert!(!key.is_nan(), "NaN waiter key from {}", self.scheduler.name());
+        self.waiter_tok.push(token);
+        self.waiter_views.push(WaiterView {
+            job,
+            key,
+            enq_t: t,
+            seq: self.wseq,
+        });
+        self.wseq += 1;
+        self.total_queued += 1;
+        self.queue_len.set(t, self.waiter_views.len() as f64);
+    }
+
+    /// Start a job immediately: occupy its slots and (when tracked)
+    /// record it in the running set.
+    fn start_running(&mut self, t: SimTime, token: T, job: JobCtx) {
+        self.in_use += job.slots as usize;
+        debug_assert!(self.in_use <= self.capacity);
+        if self.track_view {
+            self.run_tok.push(token);
+            self.run_views.push(RunningView {
+                job,
+                started_at: t,
+                expected_done: t + job.expected_occupancy,
+                seq: self.rseq,
+            });
+            self.rseq += 1;
         }
+        self.busy.set(t, self.in_use as f64);
     }
 
     /// Fraction of total slot-time busy over [0, t].
@@ -200,15 +192,270 @@ impl<T> Resource<T> {
     }
 }
 
+impl<T: Copy> Resource<T> {
+    /// Request `job.slots` slots at time `t` for a job described by
+    /// `job`. The scheduler decides admission; when the job cannot start
+    /// a re-decision scheduler may backfill it into free capacity or
+    /// preempt running work ([`AcquireResult::Preempted`]); otherwise it
+    /// queues under the scheduler's ordering key.
+    pub fn request(&mut self, t: SimTime, token: T, job: JobCtx) -> AcquireResult<T> {
+        self.total_requests += 1;
+        debug_assert!(
+            job.slots >= 1 && job.slots as usize <= self.capacity,
+            "job of {} slots can never fit {} ({} capacity)",
+            job.slots,
+            self.name,
+            self.capacity
+        );
+        let ctx = self.ctx(t, job);
+        let fits = self.in_use + job.slots as usize <= self.capacity;
+        // idle resources always admit (enforced here, not just documented):
+        // with nothing running, nothing will ever be released to grant a
+        // queued job, so a scheduler refusing at in_use == 0 would deadlock
+        if fits && (self.in_use == 0 || self.scheduler.admit(&ctx)) {
+            self.start_running(t, token, job);
+            self.wait_stats.add(0.0);
+            return AcquireResult::Acquired;
+        }
+        if self.track_view {
+            let view = SchedView {
+                now: t,
+                free: self.capacity - self.in_use,
+                capacity: self.capacity,
+                waiters: &self.waiter_views,
+                running: &self.run_views,
+            };
+            match self.scheduler.on_enqueue(&ctx, &view) {
+                EnqueueAction::Queue => {}
+                EnqueueAction::Admit => {
+                    let admit_fits = self.in_use + job.slots as usize <= self.capacity;
+                    debug_assert!(admit_fits, "{}: Admit for a job that does not fit", self.name);
+                    if admit_fits {
+                        self.start_running(t, token, job);
+                        self.wait_stats.add(0.0);
+                        return AcquireResult::Acquired;
+                    }
+                }
+                EnqueueAction::Preempt { victim_seq } => {
+                    if let Some(victim) = self.preempt(t, token, job, victim_seq) {
+                        return AcquireResult::Preempted { victim };
+                    }
+                }
+            }
+        }
+        self.enqueue(t, token, job);
+        AcquireResult::Queued
+    }
+
+    /// Evict the running job with view-seq `victim_seq`, start `job` in
+    /// its place, and re-queue the victim with its remaining service.
+    /// Returns the victim token, or `None` when the decision is invalid
+    /// (unknown victim, or the swap would not fit) — the job then queues.
+    fn preempt(&mut self, t: SimTime, token: T, job: JobCtx, victim_seq: u64) -> Option<T> {
+        let vi = self.run_views.iter().position(|r| r.seq == victim_seq)?;
+        let v = self.run_views[vi];
+        let swap_fits = self.capacity - self.in_use + v.job.slots as usize >= job.slots as usize;
+        debug_assert!(swap_fits, "{}: preemption swap does not fit", self.name);
+        if !swap_fits {
+            return None;
+        }
+        let vtok = self.run_tok.swap_remove(vi);
+        self.run_views.swap_remove(vi);
+        self.in_use -= v.job.slots as usize;
+        // the preemptor starts now; it never waited
+        self.start_running(t, token, job);
+        self.wait_stats.add(0.0);
+        // the victim waits with its remaining service as the occupancy
+        // (it resumes where it stopped); its queue position comes from
+        // the scheduler's key like any other waiter
+        let remaining = (v.expected_done - t).max(0.0);
+        let vjob = JobCtx {
+            expected_occupancy: remaining,
+            ..v.job
+        };
+        self.enqueue(t, vtok, vjob);
+        self.total_preempted += 1;
+        Some(vtok)
+    }
+
+    /// Release one slot at time `t` — the unit-width convenience API
+    /// (every job occupies one slot; re-decision schedulers must use
+    /// [`Resource::release_all`], which identifies the releasing job).
+    /// If waiters are queued, the scheduler's best `(key, seq)` waiter
+    /// is granted *immediately* — the slot never goes idle — and
+    /// returned so the caller can schedule its continuation.
+    pub fn release(&mut self, t: SimTime) -> Option<Granted<T>> {
+        debug_assert!(self.in_use > 0, "release on idle resource {}", self.name);
+        debug_assert!(
+            !self.track_view,
+            "{}: re-decision schedulers release via release_all",
+            self.name
+        );
+        match self.best_waiter() {
+            Some(i) => {
+                let g = self.take_waiter(t, i);
+                self.queue_len.set(t, self.waiter_views.len() as f64);
+                self.wait_stats.add(g.waited);
+                // in_use unchanged: slot transfers to the waiter
+                Some(g)
+            }
+            None => {
+                self.in_use -= 1;
+                self.busy.set(t, self.in_use as f64);
+                None
+            }
+        }
+    }
+
+    /// Release the `slots` occupied by `token` at time `t` and grant
+    /// waiters per the scheduler's decision — possibly several when a
+    /// wide job frees room for multiple narrow ones, possibly none when
+    /// the discipline holds slots for a blocked head-of-queue. Grants
+    /// are appended to `out` in grant order.
+    pub fn release_all(&mut self, t: SimTime, token: &T, slots: u32, out: &mut Vec<Granted<T>>)
+    where
+        T: PartialEq,
+    {
+        debug_assert!(
+            self.in_use >= slots as usize,
+            "release of {slots} slots on resource {} with {} in use",
+            self.name,
+            self.in_use
+        );
+        let in_use_before = self.in_use;
+        self.in_use -= slots as usize;
+        if self.track_view {
+            let pos = self.run_tok.iter().position(|rt| rt == token);
+            debug_assert!(pos.is_some(), "{}: released token not running", self.name);
+            if let Some(i) = pos {
+                debug_assert_eq!(self.run_views[i].job.slots, slots);
+                self.run_tok.swap_remove(i);
+                self.run_views.swap_remove(i);
+            }
+        }
+        let mut granted_any = false;
+        if !self.waiter_views.is_empty() {
+            let mut grants = std::mem::take(&mut self.grant_scratch);
+            grants.clear();
+            let view = SchedView {
+                now: t,
+                free: self.capacity - self.in_use,
+                capacity: self.capacity,
+                waiters: &self.waiter_views,
+                running: &self.run_views,
+            };
+            if self.track_view {
+                self.scheduler.on_release(&view, &mut grants);
+            } else {
+                default_grants(&view, &mut grants);
+            }
+            granted_any = !grants.is_empty();
+            self.apply_grants(t, &mut grants, out);
+            self.grant_scratch = grants;
+        }
+        // touch the monitors only when the tracked value changed: the
+        // piecewise integral is partition-sensitive in the last float
+        // bit, and pre-existing schedulers' digests must stay
+        // byte-identical to the single-grant release path
+        if self.in_use != in_use_before {
+            self.busy.set(t, self.in_use as f64);
+        }
+        if granted_any {
+            self.queue_len.set(t, self.waiter_views.len() as f64);
+        }
+    }
+
+    /// Validate and apply a grant selection: occupy slots, record stats,
+    /// and remove the granted waiters. `grants` is consumed (re-sorted
+    /// in place for the removal pass — its order is scratch afterward).
+    fn apply_grants(&mut self, t: SimTime, grants: &mut Vec<usize>, out: &mut Vec<Granted<T>>) {
+        let mut free = self.capacity - self.in_use;
+        for (n, &i) in grants.iter().enumerate() {
+            assert!(
+                i < self.waiter_views.len() && !grants[..n].contains(&i),
+                "{}: scheduler {} granted an invalid waiter index",
+                self.name,
+                self.scheduler.name()
+            );
+            let w = self.waiter_views[i];
+            assert!(
+                w.job.slots as usize <= free,
+                "{}: scheduler {} granted a job that does not fit",
+                self.name,
+                self.scheduler.name()
+            );
+            free -= w.job.slots as usize;
+            let g = Granted {
+                token: self.waiter_tok[i],
+                waited: t - w.enq_t,
+            };
+            self.wait_stats.add(g.waited);
+            self.in_use += w.job.slots as usize;
+            if self.track_view {
+                self.run_tok.push(self.waiter_tok[i]);
+                self.run_views.push(RunningView {
+                    job: w.job,
+                    started_at: t,
+                    expected_done: t + w.job.expected_occupancy,
+                    seq: self.rseq,
+                });
+                self.rseq += 1;
+            }
+            out.push(g);
+        }
+        // remove granted waiters, highest index first so the remaining
+        // indices stay valid under swap_remove (in place: the event path
+        // stays allocation-free)
+        grants.sort_unstable_by(|a, b| b.cmp(a));
+        for &i in grants.iter() {
+            self.waiter_tok.swap_remove(i);
+            self.waiter_views.swap_remove(i);
+        }
+    }
+
+    /// Index of the `(key, seq)`-minimal waiter (the same
+    /// [`earlier_waiter`] rule `default_grants` uses, so the unit-width
+    /// `release` path and `release_all` can never diverge).
+    fn best_waiter(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, w) in self.waiter_views.iter().enumerate() {
+            if best.is_none_or(|b| earlier_waiter(w, &self.waiter_views[b])) {
+                best = Some(i);
+            }
+        }
+        best
+    }
+
+    fn take_waiter(&mut self, t: SimTime, i: usize) -> Granted<T> {
+        let w = self.waiter_views.swap_remove(i);
+        let token = self.waiter_tok.swap_remove(i);
+        Granted {
+            token,
+            waited: t - w.enq_t,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::des::sched::{Priority, ShortestJobFirst};
+    use crate::des::sched::{EasyBackfill, PreemptivePriority, Priority, ShortestJobFirst};
 
     fn job(key: f64) -> JobCtx {
         // tests drive ordering through a single knob: use the same value
         // for occupancy and priority so either discipline sees it
         JobCtx::new(key, key, 0.0)
+    }
+
+    fn release_one<'a>(
+        r: &mut Resource<&'a str>,
+        t: SimTime,
+        token: &'a str,
+        slots: u32,
+    ) -> Vec<&'a str> {
+        let mut out = Vec::new();
+        r.release_all(t, &token, slots, &mut out);
+        out.iter().map(|g| g.token).collect()
     }
 
     #[test]
@@ -236,6 +483,29 @@ mod tests {
         assert_eq!(g.waited, 7.0);
         assert!(r.release(10.0).is_none());
         assert_eq!(r.in_use(), 0);
+    }
+
+    #[test]
+    fn release_all_matches_release_for_unit_jobs() {
+        let run = |wide: bool| {
+            let mut r: Resource<u32> = Resource::new("train", 2);
+            r.request(0.0, 1, job(0.0));
+            r.request(0.0, 2, job(0.0));
+            r.request(1.0, 3, job(0.5));
+            r.request(2.0, 4, job(0.25));
+            let mut order = Vec::new();
+            for t in [3.0, 4.0, 5.0, 6.0] {
+                if wide {
+                    let mut out = Vec::new();
+                    r.release_all(t, &0, 1, &mut out);
+                    order.extend(out.iter().map(|g| g.token));
+                } else if let Some(g) = r.release(t) {
+                    order.push(g.token);
+                }
+            }
+            (order, r.wait_stats.sum, r.utilization(6.0))
+        };
+        assert_eq!(run(false), run(true));
     }
 
     #[test]
@@ -347,5 +617,197 @@ mod tests {
     #[should_panic]
     fn zero_capacity_rejected() {
         let _: Resource<u32> = Resource::new("bad", 0);
+    }
+
+    // ---- multi-slot jobs ----
+
+    #[test]
+    fn wide_jobs_occupy_multiple_slots() {
+        let mut r: Resource<&str> = Resource::new("t", 4);
+        let wide = JobCtx::new(10.0, 1.0, 0.0).with_slots(3);
+        assert_eq!(r.request(0.0, "wide", wide), AcquireResult::Acquired);
+        assert_eq!(r.in_use(), 3);
+        assert_eq!(r.request(1.0, "unit", job(0.0)), AcquireResult::Acquired);
+        assert_eq!(r.in_use(), 4);
+        // queue drains on the wide release: both slots go out again
+        let wide2 = JobCtx::new(5.0, 1.0, 0.0).with_slots(2);
+        assert_eq!(r.request(2.0, "w2", wide2), AcquireResult::Queued);
+        assert_eq!(r.request(3.0, "u2", job(0.0)), AcquireResult::Queued);
+        let granted = release_one(&mut r, 9.0, "wide", 3);
+        assert_eq!(granted, vec!["w2", "u2"]);
+        assert_eq!(r.in_use(), 4);
+    }
+
+    #[test]
+    fn fifo_blocks_head_of_line_and_never_overtakes() {
+        // strict FCFS: a free slot does not let later work overtake a
+        // blocked wide head — neither at release nor at request time
+        let mut r: Resource<&str> = Resource::new("t", 3);
+        r.request(0.0, "a", job(0.0));
+        r.request(0.0, "b", job(0.0));
+        r.request(0.0, "c", job(0.0));
+        let wide = JobCtx::new(10.0, 1.0, 0.0).with_slots(2);
+        assert_eq!(r.request(1.0, "wide", wide), AcquireResult::Queued);
+        // one slot frees: the wide head does not fit, nothing granted
+        assert_eq!(release_one(&mut r, 2.0, "a", 1), Vec::<&str>::new());
+        assert_eq!(r.in_use(), 2);
+        // an arriving unit job may not grab the free slot past the head
+        assert_eq!(r.request(3.0, "late", job(0.0)), AcquireResult::Queued);
+        // second slot frees: the head fits and takes both
+        assert_eq!(release_one(&mut r, 4.0, "b", 1), vec!["wide"]);
+        assert_eq!(r.in_use(), 3);
+        assert_eq!(release_one(&mut r, 5.0, "c", 1), vec!["late"]);
+    }
+
+    // ---- preemption ----
+
+    #[test]
+    fn preemptive_priority_evicts_and_requeues_victim() {
+        let mut r: Resource<&str> =
+            Resource::with_scheduler("t", 2, Box::new(PreemptivePriority::default()));
+        r.request(0.0, "bulk9", JobCtx::new(100.0, 9.0, 0.0));
+        r.request(0.0, "bulk5", JobCtx::new(100.0, 5.0, 0.0));
+        // a class-1 arrival evicts the class-9 job, not the class-5 one
+        match r.request(10.0, "vip", JobCtx::new(20.0, 1.0, 10.0)) {
+            AcquireResult::Preempted { victim } => assert_eq!(victim, "bulk9"),
+            other => panic!("expected preemption, got {other:?}"),
+        }
+        assert_eq!(r.in_use(), 2);
+        assert_eq!(r.queued(), 1);
+        assert_eq!(r.total_preempted, 1);
+        // the victim resumes with its remaining 90s when a slot frees
+        let granted = release_one(&mut r, 30.0, "vip", 1);
+        assert_eq!(granted, vec!["bulk9"]);
+        assert_eq!(granted.len(), 1);
+    }
+
+    #[test]
+    fn preemption_respects_class_gap_and_never_thrashes_same_class() {
+        let mut r: Resource<&str> =
+            Resource::with_scheduler("t", 1, Box::new(PreemptivePriority::default()));
+        r.request(0.0, "a", JobCtx::new(100.0, 4.0, 0.0));
+        // same class queues instead of evicting
+        assert_eq!(
+            r.request(1.0, "b", JobCtx::new(10.0, 4.0, 1.0)),
+            AcquireResult::Queued
+        );
+        // worse class queues
+        assert_eq!(
+            r.request(2.0, "c", JobCtx::new(10.0, 9.0, 2.0)),
+            AcquireResult::Queued
+        );
+        assert_eq!(r.total_preempted, 0);
+    }
+
+    #[test]
+    fn preempted_victim_keeps_remaining_service_not_full() {
+        let mut r: Resource<&str> =
+            Resource::with_scheduler("t", 1, Box::new(PreemptivePriority::default()));
+        r.request(0.0, "victim", JobCtx::new(100.0, 9.0, 0.0));
+        // preempt at t=60: 40s of service remain
+        match r.request(60.0, "vip", JobCtx::new(10.0, 0.0, 60.0)) {
+            AcquireResult::Preempted { victim } => assert_eq!(victim, "victim"),
+            other => panic!("{other:?}"),
+        }
+        let mut out = Vec::new();
+        r.release_all(70.0, &"vip", 1, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].token, "victim");
+        assert_eq!(out[0].waited, 10.0, "wait counts from preemption time");
+        // the running view carries the remaining 40s, not the full 100
+        let mut out2 = Vec::new();
+        r.release_all(110.0, &"victim", 1, &mut out2);
+        assert!(out2.is_empty());
+        assert_eq!(r.in_use(), 0);
+    }
+
+    // ---- EASY backfill ----
+
+    #[test]
+    fn easy_backfill_grants_window_fitting_job_past_blocked_head() {
+        let mut r: Resource<&str> =
+            Resource::with_scheduler("t", 3, Box::new(EasyBackfill::default()));
+        // two running: one frees 2 slots at t=50, one runs to t=100
+        r.request(0.0, "w2", JobCtx::new(50.0, 5.0, 0.0).with_slots(2));
+        r.request(0.0, "long", JobCtx::new(100.0, 5.0, 0.0));
+        // head needs 2 slots -> must wait for w2 at t=50
+        assert_eq!(
+            r.request(1.0, "head", JobCtx::new(30.0, 5.0, 1.0).with_slots(2)),
+            AcquireResult::Queued
+        );
+        // a short unit job arrives: fits the window (10 + 35 <= 50)
+        assert_eq!(
+            r.request(10.0, "short", JobCtx::new(35.0, 5.0, 10.0)),
+            AcquireResult::Queued,
+            "no free slot yet, so it queues"
+        );
+        // long unit job that would overrun the reservation: also queued
+        assert_eq!(
+            r.request(11.0, "over", JobCtx::new(200.0, 5.0, 11.0)),
+            AcquireResult::Queued
+        );
+        // nothing free yet; now w2 finishes at 50: head takes its 2 slots
+        let granted = release_one(&mut r, 50.0, "w2", 2);
+        assert_eq!(granted, vec!["head"]);
+        assert_eq!(r.in_use(), 3);
+    }
+
+    #[test]
+    fn easy_backfill_arrival_backfills_into_free_slot() {
+        let mut r: Resource<&str> =
+            Resource::with_scheduler("t", 3, Box::new(EasyBackfill::default()));
+        r.request(0.0, "w2", JobCtx::new(50.0, 5.0, 0.0).with_slots(2));
+        r.request(0.0, "u", JobCtx::new(20.0, 5.0, 0.0));
+        assert_eq!(
+            r.request(1.0, "head", JobCtx::new(30.0, 5.0, 1.0).with_slots(2)),
+            AcquireResult::Queued
+        );
+        // u releases at 20: head (needs 2) still blocked, 1 slot free
+        assert_eq!(release_one(&mut r, 20.0, "u", 1), Vec::<&str>::new());
+        assert_eq!(r.in_use(), 2);
+        // reservation: w2 frees 2 slots at t=50 -> R = 50. A 25s arrival
+        // fits (20 + 25 <= 50) and backfills immediately...
+        assert_eq!(
+            r.request(20.0, "fill", JobCtx::new(25.0, 5.0, 20.0)),
+            AcquireResult::Acquired
+        );
+        // ...while a 40s arrival would overrun R and queues
+        assert_eq!(release_one(&mut r, 45.0, "fill", 1), Vec::<&str>::new());
+        assert_eq!(
+            r.request(45.5, "over", JobCtx::new(40.0, 5.0, 45.5)),
+            AcquireResult::Queued
+        );
+        // head granted at its reservation; the freed room also lets the
+        // queued job behind it start (plain FCFS once the head fits)
+        assert_eq!(release_one(&mut r, 50.0, "w2", 2), vec!["head", "over"]);
+    }
+
+    #[test]
+    fn easy_backfill_release_backfills_window_fitting_waiter() {
+        let mut r: Resource<&str> =
+            Resource::with_scheduler("t", 3, Box::new(EasyBackfill::default()));
+        r.request(0.0, "w2", JobCtx::new(50.0, 5.0, 0.0).with_slots(2));
+        r.request(0.0, "u", JobCtx::new(20.0, 5.0, 0.0));
+        assert_eq!(
+            r.request(1.0, "head", JobCtx::new(30.0, 5.0, 1.0).with_slots(2)),
+            AcquireResult::Queued
+        );
+        // two waiters behind the head: one fits the window, one overruns
+        assert_eq!(
+            r.request(2.0, "fit", JobCtx::new(25.0, 5.0, 2.0)),
+            AcquireResult::Queued
+        );
+        assert_eq!(
+            r.request(3.0, "over", JobCtx::new(200.0, 5.0, 3.0)),
+            AcquireResult::Queued
+        );
+        // u releases at 20: head blocked (R=50); "fit" backfills, "over"
+        // stays behind the reservation
+        assert_eq!(release_one(&mut r, 20.0, "u", 1), vec!["fit"]);
+        assert_eq!(release_one(&mut r, 45.0, "fit", 1), Vec::<&str>::new());
+        // at the reservation the head starts, and FCFS resumes for the
+        // remaining waiter in the space left over
+        assert_eq!(release_one(&mut r, 50.0, "w2", 2), vec!["head", "over"]);
+        assert_eq!(r.queued(), 0);
     }
 }

@@ -4,23 +4,48 @@
 //! strategies" (sections IV, V-B, Fig 4) — which job a saturated cluster
 //! admits or grants next is exactly such a strategy. This module makes it
 //! a first-class extension point: [`Resource`](super::Resource) delegates
-//! every admission and waiter-ordering decision to a boxed [`Scheduler`],
-//! and the classic disciplines (FIFO, priority, shortest-job-first) are
-//! just the built-in implementations.
+//! every admission, waiter-ordering, grant, and preemption decision to a
+//! boxed [`Scheduler`], and the classic disciplines (FIFO, priority,
+//! shortest-job-first) are just the built-in implementations.
+//!
+//! ## Two tiers of strategy
+//!
+//! *Key-based* strategies decide ordering **at enqueue time**:
+//! [`Scheduler::queue_key`] is called once when a job queues, and the
+//! resource grants waiters in ascending `(key, enqueue sequence)` order.
+//! Fifo/Priority/SJF/EDF/WeightedFair live here; they never pay for the
+//! machinery below.
+//!
+//! *Re-decision* strategies (opting in via [`Scheduler::needs_view`])
+//! additionally get the two re-decision hooks, each with full visibility
+//! of the wait queue and the running set through [`SchedView`]:
+//!
+//! * [`Scheduler::on_enqueue`] fires when a job cannot start on request;
+//!   it may queue the job (default), admit it anyway (backfill into
+//!   reserved/idle capacity), or **preempt** a running job — the victim
+//!   is re-queued with its remaining service and its scheduled
+//!   completion event is cancelled by the simulation (see
+//!   [`Calendar::cancel`](super::calendar::Calendar::cancel)).
+//! * [`Scheduler::on_release`] fires when slots free up; it picks which
+//!   waiters start, in what order — the seam for backfill policies that
+//!   overtake a blocked head-of-queue without delaying it.
+//!
+//! [`PreemptivePriority`] (higher class evicts the lowest-class running
+//! task) and [`EasyBackfill`] (FCFS with head-of-queue reservation and
+//! EASY-style backfill) are the built-in re-decision strategies.
 //!
 //! ## Contract
 //!
 //! Decisions must be **deterministic**: a scheduler may keep internal
 //! state, but its output must be a pure function of that state and the
-//! [`SchedCtx`] it is handed — no wall clock, no unseeded randomness.
-//! Every experiment outcome digest depends on it (see
-//! `ExperimentResult::digest`).
-//!
-//! Waiter ordering is decided **at enqueue time**: [`Scheduler::queue_key`]
-//! is called once when a job queues, and the resource grants waiters in
-//! ascending `(key, enqueue sequence)` order. Re-ordering jobs after they
-//! queued (preemption, backfill) needs calendar event cancellation, which
-//! the DES core does not support yet (see ROADMAP).
+//! [`SchedCtx`] / [`SchedView`] it is handed — no wall clock, no
+//! unseeded randomness, no iteration over anything with nondeterministic
+//! order (the view slices are deterministically ordered; `HashMap`
+//! iteration is not). Every experiment outcome digest depends on it (see
+//! `ExperimentResult::digest`), and the re-decision hooks are inside the
+//! determinism boundary: `on_enqueue`/`on_release` run at
+//! deterministically-ordered calendar events and see deterministic
+//! views, so the same `(config, seed)` replays the same decisions.
 
 use super::SimTime;
 
@@ -34,6 +59,9 @@ pub struct JobCtx {
     pub priority: f64,
     /// When the owning pipeline arrived in the system.
     pub arrived_at: SimTime,
+    /// Slots the job occupies while running (1 for every task unless the
+    /// experiment widens training jobs via `InfraConfig::train_slots`).
+    pub slots: u32,
 }
 
 impl JobCtx {
@@ -42,12 +70,20 @@ impl JobCtx {
             expected_occupancy,
             priority,
             arrived_at,
+            slots: 1,
         }
+    }
+
+    /// Builder: a job occupying `slots` slots while running.
+    pub fn with_slots(mut self, slots: u32) -> Self {
+        debug_assert!(slots >= 1, "jobs occupy at least one slot");
+        self.slots = slots;
+        self
     }
 }
 
 /// Snapshot handed to every scheduling decision: the requesting job plus
-/// the resource's current state (full queue visibility).
+/// the resource's current aggregate state.
 #[derive(Clone, Copy, Debug)]
 pub struct SchedCtx {
     /// Current simulation time.
@@ -62,6 +98,69 @@ pub struct SchedCtx {
     pub queued: usize,
 }
 
+/// One queued job as seen by the re-decision hooks.
+#[derive(Clone, Copy, Debug)]
+pub struct WaiterView {
+    pub job: JobCtx,
+    /// The ordering key `queue_key` assigned at enqueue.
+    pub key: f64,
+    /// When the job entered the queue (re-set on re-queue after
+    /// preemption).
+    pub enq_t: SimTime,
+    /// Enqueue sequence number: ascending `seq` is FCFS order. Unique
+    /// within a resource.
+    pub seq: u64,
+}
+
+/// One running job as seen by the re-decision hooks. Only maintained for
+/// schedulers that opt in via [`Scheduler::needs_view`].
+#[derive(Clone, Copy, Debug)]
+pub struct RunningView {
+    pub job: JobCtx,
+    /// When the job was granted its slots.
+    pub started_at: SimTime,
+    /// Projected completion: `started_at + expected_occupancy` (for a
+    /// resumed preempted job, the occupancy is its remaining service).
+    pub expected_done: SimTime,
+    /// Grant sequence number identifying this running job (the victim id
+    /// in [`EnqueueAction::Preempt`]). Unique within a resource.
+    pub seq: u64,
+}
+
+/// Full queue + running-set visibility for the re-decision hooks.
+///
+/// `waiters` is in arbitrary storage order — use [`WaiterView::seq`] for
+/// FCFS order and [`WaiterView::key`] for the key discipline; both
+/// orders are deterministic. `running` is empty unless the scheduler
+/// opted in via [`Scheduler::needs_view`].
+#[derive(Clone, Copy, Debug)]
+pub struct SchedView<'a> {
+    /// Current simulation time.
+    pub now: SimTime,
+    /// Slots currently free (`capacity - in_use`).
+    pub free: usize,
+    /// Total slot capacity.
+    pub capacity: usize,
+    pub waiters: &'a [WaiterView],
+    pub running: &'a [RunningView],
+}
+
+/// What to do with a job that could not start on request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EnqueueAction {
+    /// Enqueue the job (the default; ordered by `queue_key`).
+    Queue,
+    /// Start it immediately anyway — it must fit the free slots. The
+    /// backfill path for jobs an admission policy would otherwise hold
+    /// back.
+    Admit,
+    /// Evict the running job identified by [`RunningView::seq`], hand its
+    /// slots to the requester, and re-queue the victim with its
+    /// remaining service. The victim's slots plus the free pool must
+    /// cover the requester.
+    Preempt { victim_seq: u64 },
+}
+
 /// An operational scheduling strategy for one resource.
 ///
 /// Implementations may be stateful (`&mut self`); each
@@ -73,9 +172,11 @@ pub trait Scheduler: Send {
     /// Registry/display name of the strategy.
     fn name(&self) -> &'static str;
 
-    /// May this job start immediately? Called only when a slot is free.
-    /// Returning `false` queues the job even though capacity is
-    /// available (e.g. to reserve headroom for a higher class).
+    /// May this job start immediately? Called only when its slots fit
+    /// the free capacity. Returning `false` routes the job through
+    /// [`Scheduler::on_enqueue`] even though capacity is available
+    /// (e.g. to reserve headroom, or to forbid overtaking a non-empty
+    /// queue).
     ///
     /// Safety valve: a fully idle resource (`in_use == 0`) always admits
     /// — the resource enforces this and skips the call, because nothing
@@ -84,19 +185,96 @@ pub trait Scheduler: Send {
         true
     }
 
-    /// Ordering key for a job that must queue: waiters are granted in
-    /// ascending `(key, enqueue sequence)` order, so ties fall back to
-    /// FIFO. Must not return NaN.
+    /// Ordering key for a job that must queue: the default grant path
+    /// picks waiters in ascending `(key, enqueue sequence)` order, so
+    /// ties fall back to FIFO. Must not return NaN. Also called to place
+    /// a preempted victim back in the queue (with its remaining service
+    /// as the expected occupancy).
     fn queue_key(&mut self, ctx: &SchedCtx) -> f64;
+
+    /// Opt into the re-decision hooks. When `true`, the resource tracks
+    /// its running set, builds a [`SchedView`] for every re-decision,
+    /// and routes grants through [`Scheduler::on_release`] and blocked
+    /// requests through [`Scheduler::on_enqueue`]. When `false` (the
+    /// default), neither hook is ever called and the resource keeps the
+    /// exact pre-hook fast path — key-based strategies pay nothing.
+    fn needs_view(&self) -> bool {
+        false
+    }
+
+    /// Re-decision for a job that could not start on request (capacity
+    /// short, or [`Scheduler::admit`] refused). Only called when
+    /// [`Scheduler::needs_view`] is `true`. The view does *not* yet
+    /// contain the requesting job.
+    fn on_enqueue(&mut self, _ctx: &SchedCtx, _view: &SchedView) -> EnqueueAction {
+        EnqueueAction::Queue
+    }
+
+    /// Pick the waiters to grant after slots freed up. Push indices into
+    /// `view.waiters` onto `grants`, in grant order; each granted job
+    /// must fit the slots still free at its turn, and indices must be
+    /// unique. Only called when [`Scheduler::needs_view`] is `true`; the
+    /// default reproduces the built-in `(key, seq)` selection via
+    /// [`default_grants`].
+    fn on_release(&mut self, view: &SchedView, grants: &mut Vec<usize>) {
+        default_grants(view, grants);
+    }
+}
+
+/// The one canonical waiter ordering: ascending `(key, enqueue seq)`.
+/// Every built-in grant decision — [`default_grants`] and the resource's
+/// unit-width `release` fast path — goes through this comparison, so the
+/// digest-critical tie-break rule exists exactly once.
+#[inline]
+pub fn earlier_waiter(a: &WaiterView, b: &WaiterView) -> bool {
+    match a.key.total_cmp(&b.key) {
+        std::cmp::Ordering::Less => true,
+        std::cmp::Ordering::Greater => false,
+        std::cmp::Ordering::Equal => a.seq < b.seq,
+    }
+}
+
+/// The built-in grant rule: repeatedly grant the `(key, seq)`-minimal
+/// waiter while it fits the free slots, stopping at the first best
+/// waiter that does not fit (head-of-line blocking — overtaking a
+/// blocked head is a policy decision, not a default).
+pub fn default_grants(view: &SchedView, grants: &mut Vec<usize>) {
+    let mut free = view.free;
+    loop {
+        let mut best: Option<usize> = None;
+        for (i, w) in view.waiters.iter().enumerate() {
+            if grants.contains(&i) {
+                continue;
+            }
+            if best.is_none_or(|b| earlier_waiter(w, &view.waiters[b])) {
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) if view.waiters[i].job.slots as usize <= free => {
+                free -= view.waiters[i].job.slots as usize;
+                grants.push(i);
+            }
+            _ => break,
+        }
+    }
 }
 
 /// First-in first-out (SimPy's default; the paper's baseline).
+///
+/// Strict FCFS: a job may not overtake a non-empty queue even when slots
+/// are free (only reachable with multi-slot jobs — with unit-slot jobs a
+/// non-empty queue implies a full resource, so the admission rule is
+/// vacuous and grant order is unchanged).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Fifo;
 
 impl Scheduler for Fifo {
     fn name(&self) -> &'static str {
         "fifo"
+    }
+    fn admit(&mut self, ctx: &SchedCtx) -> bool {
+        ctx.queued == 0
     }
     fn queue_key(&mut self, _ctx: &SchedCtx) -> f64 {
         0.0
@@ -213,6 +391,214 @@ impl Scheduler for WeightedFair {
     }
 }
 
+/// Preemptive priority: a saturated cluster evicts its lowest-class
+/// running task when a sufficiently more important job arrives. The
+/// victim's completion event is cancelled and it re-queues with its
+/// remaining service (resuming where it stopped, not restarting), placed
+/// by its priority class like any other waiter. Queue order is the
+/// plain priority discipline, so with preemption impossible (e.g.
+/// `min_class_gap` larger than any class spread) it degenerates to
+/// `priority` exactly — a digest-level oracle the tests lean on.
+///
+/// Victim choice is deterministic: the running job with the *highest*
+/// priority value, ties broken toward the most recently started (oldest
+/// work is preserved). Preemption requires
+/// `victim.class - newcomer.class >= min_class_gap`, so same-class work
+/// never thrashes.
+#[derive(Clone, Copy, Debug)]
+pub struct PreemptivePriority {
+    /// Minimum class advantage (victim class − newcomer class) required
+    /// to evict. 1 = any strictly more important job preempts.
+    pub min_class_gap: f64,
+}
+
+impl Default for PreemptivePriority {
+    fn default() -> Self {
+        PreemptivePriority { min_class_gap: 1.0 }
+    }
+}
+
+impl Scheduler for PreemptivePriority {
+    fn name(&self) -> &'static str {
+        "preemptive_priority"
+    }
+    fn queue_key(&mut self, ctx: &SchedCtx) -> f64 {
+        ctx.job.priority
+    }
+    fn needs_view(&self) -> bool {
+        true
+    }
+    fn on_enqueue(&mut self, ctx: &SchedCtx, view: &SchedView) -> EnqueueAction {
+        let mut victim: Option<&RunningView> = None;
+        for r in view.running {
+            let worse = match victim {
+                None => true,
+                Some(v) => match r.job.priority.total_cmp(&v.job.priority) {
+                    std::cmp::Ordering::Greater => true,
+                    std::cmp::Ordering::Less => false,
+                    std::cmp::Ordering::Equal => r.seq > v.seq,
+                },
+            };
+            if worse {
+                victim = Some(r);
+            }
+        }
+        match victim {
+            Some(v)
+                if v.job.priority - ctx.job.priority >= self.min_class_gap
+                    && view.free + v.job.slots as usize >= ctx.job.slots as usize =>
+            {
+                EnqueueAction::Preempt { victim_seq: v.seq }
+            }
+            _ => EnqueueAction::Queue,
+        }
+    }
+}
+
+/// EASY backfill: strict FCFS with a reservation for the head of the
+/// queue. When the head cannot start (not enough free slots — only
+/// possible with multi-slot jobs, see `InfraConfig::train_slots`), its
+/// reservation time is projected from the running jobs' expected
+/// completions, and later waiters may overtake it only if they fit the
+/// free slots *and* finish within the reservation window — so with
+/// faithful occupancy estimates the head's grant time is never delayed
+/// relative to plain FIFO (the invariant the tests enforce).
+///
+/// With unit-slot jobs only, the head always fits and this is
+/// byte-identical to `fifo` — the digest-level oracle for the grant-path
+/// refactor.
+#[derive(Clone, Debug, Default)]
+pub struct EasyBackfill {
+    /// Scratch: waiter indices in FCFS order (reused across calls).
+    order: Vec<usize>,
+    /// Scratch: projected (completion, slots) frees (reused).
+    frees: Vec<(f64, u32)>,
+    /// Scratch: completions of jobs granted within one decision.
+    granted_frees: Vec<(f64, u32)>,
+}
+
+impl EasyBackfill {
+    /// Earliest time the free pool reaches `need` slots, projecting the
+    /// running jobs' expected completions — plus `granted`, the
+    /// `(completion, slots)` of jobs started earlier in this same
+    /// decision, which may return their slots before any running job
+    /// does — onto `free` currently-idle slots (overdue completions
+    /// count as due now). Omitting the just-granted jobs would
+    /// over-estimate the reservation and let a backfill overstay it,
+    /// delaying the head.
+    fn reservation(
+        &mut self,
+        view: &SchedView,
+        free: usize,
+        need: usize,
+        granted: &[(f64, u32)],
+    ) -> f64 {
+        self.frees.clear();
+        for r in view.running {
+            self.frees.push((r.expected_done.max(view.now), r.job.slots));
+        }
+        self.frees.extend_from_slice(granted);
+        self.frees.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut acc = free;
+        for &(t, slots) in &self.frees {
+            acc += slots as usize;
+            if acc >= need {
+                return t;
+            }
+        }
+        // capacity itself cannot cover the job — unreachable for
+        // validated configs; an infinite window disables backfill limits
+        f64::INFINITY
+    }
+}
+
+impl Scheduler for EasyBackfill {
+    fn name(&self) -> &'static str {
+        "easy_backfill"
+    }
+    fn admit(&mut self, ctx: &SchedCtx) -> bool {
+        // strict FCFS: never overtake a non-empty queue on request;
+        // overtaking is on_enqueue's backfill decision
+        ctx.queued == 0
+    }
+    fn queue_key(&mut self, _ctx: &SchedCtx) -> f64 {
+        0.0
+    }
+    fn needs_view(&self) -> bool {
+        true
+    }
+    fn on_enqueue(&mut self, ctx: &SchedCtx, view: &SchedView) -> EnqueueAction {
+        // arriving while the queue is non-empty but slots are free: the
+        // job may backfill if it fits and finishes within the head's
+        // reservation window
+        if ctx.job.slots as usize > view.free || view.waiters.is_empty() {
+            return EnqueueAction::Queue;
+        }
+        let head = view
+            .waiters
+            .iter()
+            .min_by_key(|w| w.seq)
+            .expect("non-empty");
+        let r = self.reservation(view, view.free, head.job.slots as usize, &[]);
+        if view.now + ctx.job.expected_occupancy <= r {
+            EnqueueAction::Admit
+        } else {
+            EnqueueAction::Queue
+        }
+    }
+    fn on_release(&mut self, view: &SchedView, grants: &mut Vec<usize>) {
+        self.order.clear();
+        self.order.extend(0..view.waiters.len());
+        self.order.sort_unstable_by_key(|&i| view.waiters[i].seq);
+        let mut free = view.free;
+        // FCFS grants until the head no longer fits
+        let mut k = 0;
+        while k < self.order.len() {
+            let w = &view.waiters[self.order[k]];
+            if w.job.slots as usize <= free {
+                free -= w.job.slots as usize;
+                grants.push(self.order[k]);
+                k += 1;
+            } else {
+                break;
+            }
+        }
+        if k >= self.order.len() || free == 0 {
+            return;
+        }
+        // the head is blocked: reserve its start, then backfill later
+        // waiters that fit the free slots and the reservation window.
+        // The reservation must see the jobs granted above too — they
+        // start now and may return their slots before any running job
+        // does, so projecting from the running set alone would place R
+        // too late and let a backfill overstay the head's true start.
+        // R is fixed for the whole pass: each backfill admitted here
+        // finishes by R and only borrows slots the head cannot use, so
+        // at R the head's slots are all back and it starts on time.
+        let mut gfrees = std::mem::take(&mut self.granted_frees);
+        gfrees.clear();
+        for &gi in grants.iter() {
+            let w = &view.waiters[gi];
+            gfrees.push((view.now + w.job.expected_occupancy, w.job.slots));
+        }
+        let head = &view.waiters[self.order[k]];
+        let r = self.reservation(view, free, head.job.slots as usize, &gfrees);
+        self.granted_frees = gfrees;
+        let order = std::mem::take(&mut self.order);
+        for &i in &order[k + 1..] {
+            let w = &view.waiters[i];
+            if w.job.slots as usize <= free && view.now + w.job.expected_occupancy <= r {
+                free -= w.job.slots as usize;
+                grants.push(i);
+                if free == 0 {
+                    break;
+                }
+            }
+        }
+        self.order = order;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -224,6 +610,24 @@ mod tests {
             in_use: 1,
             capacity: 1,
             queued: 0,
+        }
+    }
+
+    fn wv(occ: f64, pri: f64, slots: u32, key: f64, seq: u64) -> WaiterView {
+        WaiterView {
+            job: JobCtx::new(occ, pri, 0.0).with_slots(slots),
+            key,
+            enq_t: 0.0,
+            seq,
+        }
+    }
+
+    fn rv(occ: f64, pri: f64, slots: u32, started: f64, seq: u64) -> RunningView {
+        RunningView {
+            job: JobCtx::new(occ, pri, 0.0).with_slots(slots),
+            started_at: started,
+            expected_done: started + occ,
+            seq,
         }
     }
 
@@ -244,6 +648,23 @@ mod tests {
         assert!(Fifo.admit(&c));
         assert!(Priority.admit(&c));
         assert!(WeightedFair::default().admit(&c));
+        // fifo refuses to overtake a non-empty queue (only observable
+        // with multi-slot jobs; unit-slot queues imply a full resource)
+        let mut c2 = c;
+        c2.queued = 1;
+        assert!(!Fifo.admit(&c2));
+        assert!(Priority.admit(&c2));
+    }
+
+    #[test]
+    fn key_based_schedulers_skip_the_view_machinery() {
+        assert!(!Fifo.needs_view());
+        assert!(!Priority.needs_view());
+        assert!(!ShortestJobFirst.needs_view());
+        assert!(!EarliestDeadlineFirst::default().needs_view());
+        assert!(!WeightedFair::default().needs_view());
+        assert!(PreemptivePriority::default().needs_view());
+        assert!(EasyBackfill::default().needs_view());
     }
 
     #[test]
@@ -292,5 +713,159 @@ mod tests {
             let c = ctx(1.0 + i as f64, (i % 7) as f64, i as f64, i as f64);
             assert_eq!(a.queue_key(&c), b.queue_key(&c));
         }
+    }
+
+    #[test]
+    fn default_grants_pick_key_seq_minimum_until_blocked() {
+        let waiters = [
+            wv(1.0, 1.0, 1, 2.0, 0),
+            wv(1.0, 1.0, 1, 1.0, 1),
+            wv(1.0, 1.0, 2, 1.0, 2),
+        ];
+        let view = SchedView {
+            now: 0.0,
+            free: 2,
+            capacity: 4,
+            waiters: &waiters,
+            running: &[],
+        };
+        let mut grants = Vec::new();
+        default_grants(&view, &mut grants);
+        // key 1.0/seq 1 first; then key 1.0/seq 2 needs 2 slots but only
+        // 1 free -> head-of-line blocks (no skipping to key 2.0)
+        assert_eq!(grants, vec![1]);
+    }
+
+    #[test]
+    fn preemptive_priority_evicts_worst_running_class() {
+        let mut p = PreemptivePriority::default();
+        let running = [rv(100.0, 4.0, 1, 0.0, 0), rv(100.0, 9.0, 1, 0.0, 1)];
+        let view = SchedView {
+            now: 10.0,
+            free: 0,
+            capacity: 2,
+            waiters: &[],
+            running: &running,
+        };
+        // class 2 newcomer evicts the class-9 job
+        let act = p.on_enqueue(&ctx(5.0, 2.0, 10.0, 10.0), &view);
+        assert_eq!(act, EnqueueAction::Preempt { victim_seq: 1 });
+        // class 9 newcomer evicts nothing (no strictly worse victim)
+        let act = p.on_enqueue(&ctx(5.0, 9.0, 10.0, 10.0), &view);
+        assert_eq!(act, EnqueueAction::Queue);
+        // gap too small under a stricter config
+        let mut strict = PreemptivePriority { min_class_gap: 10.0 };
+        let act = strict.on_enqueue(&ctx(5.0, 2.0, 10.0, 10.0), &view);
+        assert_eq!(act, EnqueueAction::Queue);
+    }
+
+    #[test]
+    fn preemptive_priority_ties_prefer_most_recent_start() {
+        let mut p = PreemptivePriority::default();
+        let running = [rv(100.0, 9.0, 1, 0.0, 0), rv(100.0, 9.0, 1, 5.0, 3)];
+        let view = SchedView {
+            now: 10.0,
+            free: 0,
+            capacity: 2,
+            waiters: &[],
+            running: &running,
+        };
+        let act = p.on_enqueue(&ctx(5.0, 1.0, 10.0, 10.0), &view);
+        assert_eq!(act, EnqueueAction::Preempt { victim_seq: 3 });
+    }
+
+    #[test]
+    fn easy_backfill_reserves_head_and_backfills_the_window() {
+        let mut e = EasyBackfill::default();
+        // capacity 4, 3 busy via two running jobs; 1 free after release.
+        // head needs 3 slots -> blocked; reservation = when the first
+        // running job (done at t=50) frees its 2 slots: 1+2 >= 3 -> R=50.
+        let running = [rv(40.0, 5.0, 2, 10.0, 0), rv(90.0, 5.0, 1, 10.0, 1)];
+        let waiters = [
+            wv(30.0, 5.0, 3, 0.0, 0), // blocked head (needs 3)
+            wv(45.0, 5.0, 1, 0.0, 1), // too long: 10 + 45 > 50
+            wv(35.0, 5.0, 1, 0.0, 2), // fits the window: 10 + 35 <= 50
+        ];
+        let view = SchedView {
+            now: 10.0,
+            free: 1,
+            capacity: 4,
+            waiters: &waiters,
+            running: &running,
+        };
+        let mut grants = Vec::new();
+        e.on_release(&view, &mut grants);
+        assert_eq!(grants, vec![2], "only the window-fitting job backfills");
+    }
+
+    #[test]
+    fn easy_backfill_reservation_counts_jobs_granted_in_the_same_pass() {
+        // regression: the reservation must include completions of jobs
+        // granted earlier in this very decision. Capacity 5, running
+        // A(2 slots, done 100) and B(1 slot, done 10); 2 slots free.
+        // FCFS grants g(1 slot, 5s) -> free 1; head needs 3. True
+        // reservation: g returns at 5, B at 10 -> 3 slots at t=10.
+        // Projecting from the running set alone would say R=100 and
+        // wrongly backfill w(80s), delaying the head to t=80.
+        let mut e = EasyBackfill::default();
+        let running = [rv(100.0, 5.0, 2, 0.0, 0), rv(10.0, 5.0, 1, 0.0, 1)];
+        let waiters = [
+            wv(5.0, 5.0, 1, 0.0, 0),  // g: granted FCFS into a free slot
+            wv(30.0, 5.0, 3, 0.0, 1), // blocked head (needs 3)
+            wv(80.0, 5.0, 1, 0.0, 2), // w: fits R=100 but NOT R=10
+        ];
+        let view = SchedView {
+            now: 0.0,
+            free: 2,
+            capacity: 5,
+            waiters: &waiters,
+            running: &running,
+        };
+        let mut grants = Vec::new();
+        e.on_release(&view, &mut grants);
+        assert_eq!(grants, vec![0], "w must not overstay the head's true start");
+    }
+
+    #[test]
+    fn easy_backfill_is_fcfs_when_head_fits() {
+        let mut e = EasyBackfill::default();
+        let waiters = [wv(10.0, 9.0, 1, 0.0, 0), wv(1.0, 1.0, 1, 0.0, 1)];
+        let view = SchedView {
+            now: 0.0,
+            free: 1,
+            capacity: 2,
+            waiters: &waiters,
+            running: &[],
+        };
+        let mut grants = Vec::new();
+        e.on_release(&view, &mut grants);
+        // seq order, not priority or length
+        assert_eq!(grants, vec![0]);
+    }
+
+    #[test]
+    fn easy_backfill_admits_arrivals_inside_the_window() {
+        let mut e = EasyBackfill::default();
+        let running = [rv(40.0, 5.0, 2, 10.0, 0)]; // done at 50, frees 2
+        let waiters = [wv(30.0, 5.0, 3, 0.0, 0)]; // head needs 3, 1 free
+        let view = SchedView {
+            now: 10.0,
+            free: 1,
+            capacity: 3,
+            waiters: &waiters,
+            running: &running,
+        };
+        // fits free=1 and finishes by R=50
+        let act = e.on_enqueue(&ctx(30.0, 7.0, 10.0, 10.0), &view);
+        assert_eq!(act, EnqueueAction::Admit);
+        // would overrun the reservation
+        let act = e.on_enqueue(&ctx(60.0, 7.0, 10.0, 10.0), &view);
+        assert_eq!(act, EnqueueAction::Queue);
+        // too wide for the free pool
+        let c = SchedCtx {
+            job: JobCtx::new(5.0, 7.0, 10.0).with_slots(2),
+            ..ctx(5.0, 7.0, 10.0, 10.0)
+        };
+        assert_eq!(e.on_enqueue(&c, &view), EnqueueAction::Queue);
     }
 }

@@ -87,6 +87,13 @@ pub struct InfraConfig {
     pub training_capacity: usize,
     /// Job capacity of the generic compute cluster.
     pub compute_capacity: usize,
+    /// Slots a training task occupies on the training cluster (a
+    /// gang-scheduled multi-accelerator job). Default 1 — every task is
+    /// single-slot and queue behavior is unchanged. Values above 1 mix
+    /// wide training jobs with single-slot compress/harden work on the
+    /// same cluster, which is what gives backfill schedulers
+    /// (`easy_backfill`) a blocked head-of-queue to reserve around.
+    pub train_slots: usize,
     /// Scheduling strategy for both clusters (each cluster builds its
     /// own instance from the spec — see `coordinator::strategy`).
     pub scheduler: StrategySpec,
@@ -98,6 +105,7 @@ impl Default for InfraConfig {
         InfraConfig {
             training_capacity: 10,
             compute_capacity: 20,
+            train_slots: 1,
             scheduler: StrategySpec::new("fifo"),
             store: StoreConfig::default(),
         }
@@ -109,6 +117,15 @@ impl InfraConfig {
         match kind {
             ResourceKind::Training => self.training_capacity,
             ResourceKind::Compute => self.compute_capacity,
+        }
+    }
+
+    /// Slots a task occupies on its cluster.
+    pub fn task_slots(&self, task: TaskType) -> u32 {
+        if task == TaskType::Train {
+            self.train_slots as u32
+        } else {
+            1
         }
     }
 }

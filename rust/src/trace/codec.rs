@@ -5,7 +5,7 @@
 //!
 //! ```text
 //! magic      4 bytes  b"PSTR"
-//! version    u16      format version (currently 1)
+//! version    u16      format version (1 or 2, see below)
 //! reserved   u16      0
 //! strtab     varint n, then n × (varint len + UTF-8 bytes)
 //! meta       name-id, varint seed, f64 horizon, config-id,
@@ -25,8 +25,15 @@
 //!   bits (times XOR-delta-compressed against the previous event, so
 //!   repeated/nearby stamps shrink to a byte or two). Replay digests
 //!   depend on this exactness.
-//! * **Versioned**: readers accept exactly [`FORMAT_VERSION`]; any layout
-//!   change must bump it (versioning rules in README.md).
+//! * **Versioned**: readers accept versions 1 through
+//!   [`FORMAT_VERSION`]; any layout change must bump it (versioning
+//!   rules in README.md). Version 2 added the preemption records
+//!   (`task_preempted` / `task_requeued`); the encoder stamps the
+//!   *lowest* version that can represent the trace, so runs without
+//!   preemption stay byte-identical to version-1 files and remain
+//!   readable by older builds. A version-1 header with a version-2
+//!   record is rejected gracefully (a decode error naming the tag,
+//!   never a panic or a silent misread).
 
 use crate::error::{Error, Result};
 use crate::model::{Framework, ResourceKind, TaskType};
@@ -37,11 +44,14 @@ use super::{Trace, TraceEvent, TraceEventKind, TraceMeta};
 
 /// File magic: **P**ipe**S**im **TR**ace.
 pub const MAGIC: &[u8; 4] = b"PSTR";
-/// Current binary format version.
-pub const FORMAT_VERSION: u16 = 1;
+/// Newest binary format version this build writes and reads. The
+/// encoder stamps each file with the lowest version that can represent
+/// it (see [`needed_version`]); the decoder accepts `1..=FORMAT_VERSION`.
+pub const FORMAT_VERSION: u16 = 2;
 
 // Event kind tags (u8). Append-only: reusing or reordering tags is a
-// format break and requires a FORMAT_VERSION bump.
+// format break; *appending* tags bumps FORMAT_VERSION and records the
+// first version carrying the tag in `tag_min_version`.
 const TAG_ARRIVAL_GAP: u8 = 0;
 const TAG_PIPELINE_ARRIVAL: u8 = 1;
 const TAG_TASK_QUEUED: u8 = 2;
@@ -53,6 +63,33 @@ const TAG_PIPELINE_DONE: u8 = 7;
 const TAG_RETRAIN_TRIGGERED: u8 = 8;
 const TAG_RETRAIN_LAUNCHED: u8 = 9;
 const TAG_MODEL_DEPLOYED: u8 = 10;
+// version 2 (preemptive schedulers)
+const TAG_TASK_PREEMPTED: u8 = 11;
+const TAG_TASK_REQUEUED: u8 = 12;
+
+/// First format version that can carry `tag`.
+fn tag_min_version(tag: u8) -> u16 {
+    if tag >= TAG_TASK_PREEMPTED {
+        2
+    } else {
+        1
+    }
+}
+
+/// Lowest format version able to represent every event in the trace.
+pub fn needed_version(trace: &Trace) -> u16 {
+    let preemptive = trace.events.iter().any(|e| {
+        matches!(
+            e.kind,
+            TraceEventKind::TaskPreempted { .. } | TraceEventKind::TaskRequeued { .. }
+        )
+    });
+    if preemptive {
+        2
+    } else {
+        1
+    }
+}
 
 /// Serialize a trace to the binary format.
 pub fn encode(trace: &Trace) -> Vec<u8> {
@@ -82,7 +119,7 @@ pub fn encode(trace: &Trace) -> Vec<u8> {
     }
 
     let mut out = ByteWriter::new();
-    out.header(MAGIC, FORMAT_VERSION);
+    out.header(MAGIC, needed_version(trace));
     tab.write(&mut out);
     out.bytes(&meta.into_bytes());
     out.bytes(&body.into_bytes());
@@ -171,6 +208,30 @@ fn encode_kind(w: &mut ByteWriter, tab: &mut InternTable, kind: &TraceEventKind)
             opt_fw(w, tab, framework);
             w.f64(exec);
         }
+        TraceEventKind::TaskPreempted {
+            pid,
+            task,
+            resource,
+            by,
+            remaining,
+        } => {
+            w.u8(TAG_TASK_PREEMPTED);
+            w.varint(pid as u64);
+            sid(w, tab, task.name());
+            sid(w, tab, resource.name());
+            w.varint(by as u64);
+            w.f64(remaining);
+        }
+        TraceEventKind::TaskRequeued {
+            pid,
+            task,
+            resource,
+        } => {
+            w.u8(TAG_TASK_REQUEUED);
+            w.varint(pid as u64);
+            sid(w, tab, task.name());
+            sid(w, tab, resource.name());
+        }
         TraceEventKind::ModelMetricUpdate {
             pid,
             task,
@@ -222,10 +283,12 @@ fn encode_kind(w: &mut ByteWriter, tab: &mut InternTable, kind: &TraceEventKind)
     }
 }
 
-/// Parse a binary trace.
+/// Parse a binary trace. The header is validated through the shared
+/// binio container-header helper, accepting versions
+/// `1..=FORMAT_VERSION`; anything newer (or not a trace) is an error.
 pub fn decode(bytes: &[u8]) -> Result<Trace> {
     let mut r = ByteReader::new(bytes);
-    r.check_header(MAGIC, FORMAT_VERSION, "trace")?;
+    let version = r.check_header_range(MAGIC, 1, FORMAT_VERSION, "trace")?;
     let names = InternTable::read(&mut r)?;
 
     let name = lookup(&names, r.varint()?)?.to_string();
@@ -250,7 +313,7 @@ pub fn decode(bytes: &[u8]) -> Result<Trace> {
         let bits = prev_bits ^ r.varint()?;
         prev_bits = bits;
         let t = f64::from_bits(bits);
-        let kind = decode_kind(&mut r, &names)?;
+        let kind = decode_kind(&mut r, &names, version)?;
         events.push(TraceEvent { t, kind });
     }
     r.expect_eof("trace")?;
@@ -295,14 +358,23 @@ fn pid32(v: u64) -> Result<u32> {
     u32::try_from(v).map_err(|_| Error::Other(format!("trace: id {v} exceeds u32")))
 }
 
-fn decode_kind(r: &mut ByteReader, names: &[String]) -> Result<TraceEventKind> {
+fn decode_kind(r: &mut ByteReader, names: &[String], version: u16) -> Result<TraceEventKind> {
     fn opt_fw(r: &mut ByteReader, names: &[String]) -> Result<Option<Framework>> {
         match r.varint()? {
             0 => Ok(None),
             id => Framework::parse_name(lookup(names, id - 1)?).map(Some),
         }
     }
-    Ok(match r.u8()? {
+    let tag = r.u8()?;
+    if tag <= TAG_TASK_REQUEUED && tag_min_version(tag) > version {
+        // a tag from a newer layout inside an old-version header: the
+        // file is corrupt or mislabeled — refuse rather than misread
+        return Err(Error::Other(format!(
+            "trace: event tag {tag} requires format version {} but the file header says {version}",
+            tag_min_version(tag)
+        )));
+    }
+    Ok(match tag {
         TAG_ARRIVAL_GAP => TraceEventKind::ArrivalGapDrawn { gap: r.f64()? },
         TAG_PIPELINE_ARRIVAL => TraceEventKind::PipelineArrival {
             pid: pid32(r.varint()?)?,
@@ -338,6 +410,18 @@ fn decode_kind(r: &mut ByteReader, names: &[String]) -> Result<TraceEventKind> {
             task: task_by_name(lookup(names, r.varint()?)?)?,
             framework: opt_fw(r, names)?,
             exec: r.f64()?,
+        },
+        TAG_TASK_PREEMPTED => TraceEventKind::TaskPreempted {
+            pid: pid32(r.varint()?)?,
+            task: task_by_name(lookup(names, r.varint()?)?)?,
+            resource: resource_by_name(lookup(names, r.varint()?)?)?,
+            by: pid32(r.varint()?)?,
+            remaining: r.f64()?,
+        },
+        TAG_TASK_REQUEUED => TraceEventKind::TaskRequeued {
+            pid: pid32(r.varint()?)?,
+            task: task_by_name(lookup(names, r.varint()?)?)?,
+            resource: resource_by_name(lookup(names, r.varint()?)?)?,
         },
         TAG_MODEL_METRIC => TraceEventKind::ModelMetricUpdate {
             pid: pid32(r.varint()?)?,
@@ -377,7 +461,7 @@ pub fn to_jsonl(trace: &Trace) -> String {
         // a string: JSON numbers are f64 and would clip seeds above 2^53
         ("seed", Json::Str(trace.meta.seed.to_string())),
         ("horizon", Json::Num(trace.meta.horizon)),
-        ("format_version", Json::Num(FORMAT_VERSION as f64)),
+        ("format_version", Json::Num(needed_version(trace) as f64)),
         ("events", Json::Num(trace.events.len() as f64)),
         (
             "extra",
@@ -475,6 +559,28 @@ fn event_json(ev: &TraceEvent) -> Json {
                 framework.map_or(Json::Null, |f| Json::Str(f.name().into())),
             ));
             fields.push(("exec", Json::Num(exec)));
+        }
+        TraceEventKind::TaskPreempted {
+            pid,
+            task,
+            resource,
+            by,
+            remaining,
+        } => {
+            fields.push(("pid", Json::Num(pid as f64)));
+            fields.push(("task", Json::Str(task.name().into())));
+            fields.push(("resource", Json::Str(resource.name().into())));
+            fields.push(("by", Json::Num(by as f64)));
+            fields.push(("remaining", Json::Num(remaining)));
+        }
+        TraceEventKind::TaskRequeued {
+            pid,
+            task,
+            resource,
+        } => {
+            fields.push(("pid", Json::Num(pid as f64)));
+            fields.push(("task", Json::Str(task.name().into())));
+            fields.push(("resource", Json::Str(resource.name().into())));
         }
         TraceEventKind::ModelMetricUpdate {
             pid,
@@ -619,6 +725,24 @@ mod tests {
                     delay: 1800.0,
                 },
             ),
+            e(
+                4000.0,
+                TraceEventKind::TaskPreempted {
+                    pid: 7,
+                    task: TaskType::Train,
+                    resource: ResourceKind::Training,
+                    by: 9,
+                    remaining: 123.456_789,
+                },
+            ),
+            e(
+                4000.0,
+                TraceEventKind::TaskRequeued {
+                    pid: 7,
+                    task: TaskType::Train,
+                    resource: ResourceKind::Training,
+                },
+            ),
             e(5400.0, TraceEventKind::RetrainLaunched { slot: 3 }),
             e(
                 7200.0,
@@ -701,7 +825,7 @@ mod tests {
                     t += rng.uniform() * 100.0;
                     let task = TaskType::ALL[rng.below(6)];
                     let fw = Framework::ALL[rng.below(5)];
-                    let kind = match rng.below(11) {
+                    let kind = match rng.below(13) {
                         0 => TraceEventKind::ArrivalGapDrawn {
                             gap: rng.uniform() * 1e4,
                         },
@@ -757,10 +881,22 @@ mod tests {
                         9 => TraceEventKind::RetrainLaunched {
                             slot: rng.below(64) as u32,
                         },
-                        _ => TraceEventKind::ModelDeployed {
+                        10 => TraceEventKind::ModelDeployed {
                             slot: rng.below(64) as u32,
                             performance: rng.uniform(),
                             version: 1 + rng.below(9) as u32,
+                        },
+                        11 => TraceEventKind::TaskPreempted {
+                            pid: i,
+                            task,
+                            resource: ResourceKind::for_task(task),
+                            by: rng.below(1000) as u32,
+                            remaining: rng.uniform() * 1e3,
+                        },
+                        _ => TraceEventKind::TaskRequeued {
+                            pid: i,
+                            task,
+                            resource: ResourceKind::for_task(task),
                         },
                     };
                     TraceEvent { t, kind }
@@ -798,6 +934,56 @@ mod tests {
         let mut bad = bytes.clone();
         bad.push(0);
         assert!(decode(&bad).is_err());
+    }
+
+    #[test]
+    fn version_stamp_is_the_lowest_that_fits() {
+        // no preemption records -> version 1 on the wire, readable by
+        // pre-preemption builds
+        let v1 = Trace {
+            meta: meta(),
+            events: vec![TraceEvent {
+                t: 1.0,
+                kind: TraceEventKind::ArrivalGapDrawn { gap: 2.0 },
+            }],
+        };
+        let bytes = encode(&v1);
+        assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 1);
+        assert_eq!(decode(&bytes).unwrap(), v1);
+        // preemption records -> version 2
+        let v2 = Trace {
+            meta: meta(),
+            events: all_kinds(),
+        };
+        let bytes = encode(&v2);
+        assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 2);
+        assert_eq!(decode(&bytes).unwrap(), v2);
+    }
+
+    #[test]
+    fn old_version_header_rejects_preemption_tags_gracefully() {
+        // craft a corrupt file: version-2 records under a version-1
+        // header. The decoder must fail with a tagged error, not panic
+        // or silently misread.
+        let t = Trace {
+            meta: meta(),
+            events: all_kinds(),
+        };
+        let mut bytes = encode(&t);
+        assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 2);
+        bytes[4] = 1;
+        bytes[5] = 0;
+        let err = decode(&bytes).unwrap_err().to_string();
+        assert!(
+            err.contains("requires format version 2"),
+            "unexpected error: {err}"
+        );
+        // and a future version is refused up front
+        let mut future = encode(&t);
+        future[4] = 3;
+        future[5] = 0;
+        let err = decode(&future).unwrap_err().to_string();
+        assert!(err.contains("this build reads"), "{err}");
     }
 
     #[test]

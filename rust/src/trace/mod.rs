@@ -67,13 +67,22 @@ pub enum TraceEventKind {
         task: TaskType,
         resource: ResourceKind,
     },
-    /// A task started executing — either immediately on request, or
-    /// right after a queue grant (then the paired [`TaskGranted`]
-    /// precedes it at the same timestamp). Every executed task gets
-    /// exactly one `TaskStarted`, so service-time components are always
-    /// recorded.
+    /// A task started executing — immediately on request, right after a
+    /// queue grant (then the paired [`TaskGranted`] precedes it at the
+    /// same timestamp), or resuming after a preemption. Every executed
+    /// task gets at least one `TaskStarted` (exactly one unless a
+    /// preemptive scheduler evicted it mid-service), so service-time
+    /// components are always recorded.
+    ///
+    /// The `exec`/`read`/`write` components always describe the task's
+    /// *full original* service, including on a post-preemption resume —
+    /// the slot time actually remaining at a resume is carried by the
+    /// preceding [`TaskPreempted`]'s `remaining` field, so consumers
+    /// reconstructing busy time must subtract it rather than re-count
+    /// the full components.
     ///
     /// [`TaskGranted`]: TraceEventKind::TaskGranted
+    /// [`TaskPreempted`]: TraceEventKind::TaskPreempted
     TaskStarted {
         pid: u32,
         task: TaskType,
@@ -100,6 +109,30 @@ pub enum TraceEventKind {
         framework: Option<Framework>,
         /// The execution (compute) portion of the task, seconds.
         exec: f64,
+    },
+    /// A running task was evicted by a preemptive scheduler: its
+    /// scheduled completion was cancelled and it re-queues with
+    /// `remaining` seconds of service. Always followed by the paired
+    /// [`TaskRequeued`] at the same timestamp; the task emits another
+    /// [`TaskStarted`] when it resumes (so under preemption a task may
+    /// carry several `TaskStarted` records but exactly one `TaskDone`).
+    ///
+    /// [`TaskRequeued`]: TraceEventKind::TaskRequeued
+    /// [`TaskStarted`]: TraceEventKind::TaskStarted
+    TaskPreempted {
+        pid: u32,
+        task: TaskType,
+        resource: ResourceKind,
+        /// Pipeline whose task evicted this one.
+        by: u32,
+        /// Service seconds outstanding at eviction.
+        remaining: f64,
+    },
+    /// A preempted task re-entered its cluster's wait queue.
+    TaskRequeued {
+        pid: u32,
+        task: TaskType,
+        resource: ResourceKind,
     },
     /// A task updated its pipeline's model metrics (train/compress/harden).
     ModelMetricUpdate {
@@ -157,6 +190,8 @@ impl TraceEventKind {
             TraceEventKind::TaskStarted { .. } => "task_started",
             TraceEventKind::TaskGranted { .. } => "task_granted",
             TraceEventKind::TaskDone { .. } => "task_done",
+            TraceEventKind::TaskPreempted { .. } => "task_preempted",
+            TraceEventKind::TaskRequeued { .. } => "task_requeued",
             TraceEventKind::ModelMetricUpdate { .. } => "model_metric",
             TraceEventKind::PipelineDone { .. } => "pipeline_done",
             TraceEventKind::RetrainTriggered { .. } => "retrain_triggered",

@@ -178,6 +178,22 @@ impl<'a> ByteReader<'a> {
     /// exact magic and exact version (the shared versioning rule — no
     /// best-effort decoding of other versions). `what` labels errors.
     pub fn check_header(&mut self, magic: &[u8; 4], version: u16, what: &str) -> Result<()> {
+        self.check_header_range(magic, version, version, what)?;
+        Ok(())
+    }
+
+    /// Like [`ByteReader::check_header`], but for formats whose readers
+    /// accept a range of versions (append-only evolutions where the
+    /// writer stamps the lowest version that can represent the
+    /// payload). Returns the file's version so the caller can gate
+    /// version-specific records.
+    pub fn check_header_range(
+        &mut self,
+        magic: &[u8; 4],
+        min_version: u16,
+        max_version: u16,
+        what: &str,
+    ) -> Result<u16> {
         let got = [self.u8()?, self.u8()?, self.u8()?, self.u8()?];
         if &got != magic {
             return Err(Error::Other(format!(
@@ -185,13 +201,18 @@ impl<'a> ByteReader<'a> {
             )));
         }
         let v = self.u16()?;
-        if v != version {
+        if v < min_version || v > max_version {
+            let readable = if min_version == max_version {
+                format!("{min_version}")
+            } else {
+                format!("{min_version}..={max_version}")
+            };
             return Err(Error::Other(format!(
-                "{what}: format version {v}, this build reads {version}"
+                "{what}: format version {v}, this build reads {readable}"
             )));
         }
         self.u16()?; // reserved
-        Ok(())
+        Ok(v)
     }
 
     /// Error if any input remains — every container rejects trailing
@@ -372,6 +393,36 @@ mod tests {
         let mut r = ByteReader::new(&[]);
         assert!(r.u8().is_err());
         assert!(ByteReader::new(&[0x80; 12]).varint().is_err());
+    }
+
+    #[test]
+    fn header_range_accepts_span_and_reports_version() {
+        let mk = |version: u16| {
+            let mut w = ByteWriter::new();
+            w.header(b"TEST", version);
+            w.into_bytes()
+        };
+        // exact helper: only its own version
+        assert!(ByteReader::new(&mk(2)).check_header(b"TEST", 2, "t").is_ok());
+        assert!(ByteReader::new(&mk(1)).check_header(b"TEST", 2, "t").is_err());
+        // range helper: returns the stamped version inside the span
+        for v in 1..=3u16 {
+            let bytes = mk(v);
+            let mut r = ByteReader::new(&bytes);
+            assert_eq!(r.check_header_range(b"TEST", 1, 3, "t").unwrap(), v);
+        }
+        let bytes = mk(4);
+        let err = ByteReader::new(&bytes)
+            .check_header_range(b"TEST", 1, 3, "t")
+            .unwrap_err();
+        assert!(err.to_string().contains("1..=3"), "{err}");
+        let bytes = mk(0);
+        let err = ByteReader::new(&bytes)
+            .check_header_range(b"TEST", 1, 3, "t")
+            .unwrap_err();
+        assert!(err.to_string().contains("format version 0"), "{err}");
+        // wrong magic still rejected
+        assert!(ByteReader::new(&mk(1)).check_header_range(b"NOPE", 1, 3, "t").is_err());
     }
 
     #[test]

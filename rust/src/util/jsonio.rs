@@ -492,6 +492,7 @@ impl JsonIo for InfraConfig {
         Json::obj(vec![
             ("training_capacity", Json::Num(self.training_capacity as f64)),
             ("compute_capacity", Json::Num(self.compute_capacity as f64)),
+            ("train_slots", Json::Num(self.train_slots as f64)),
             ("scheduler", self.scheduler.to_json()),
             ("store", self.store.to_json()),
         ])
@@ -506,6 +507,11 @@ impl JsonIo for InfraConfig {
         Ok(InfraConfig {
             training_capacity: j.req("training_capacity")?.as_usize()?,
             compute_capacity: j.req("compute_capacity")?.as_usize()?,
+            // optional: configs predating wide training jobs are unit-slot
+            train_slots: match j.get("train_slots") {
+                Some(v) => v.as_usize()?,
+                None => 1,
+            },
             scheduler,
             store: StoreConfig::from_json(j.req("store")?)?,
         })
