@@ -1,20 +1,55 @@
 //! DES-core microbenchmarks: calendar throughput (with and without
-//! event cancellation), resource cycling, and RNG primitives.
+//! event cancellation), resource cycling, deep-queue grant scaling, and
+//! RNG primitives.
 //!
 //! These bound the simulator's event-loop cost (the denominator of the
-//! Fig 13 headline). The cancellation cases guard the tentpole claim
-//! that cancellable events leave the zero-cancellation hot path
-//! unperturbed: the zero-cancel cycle is measured on a calendar that
-//! has the cancellation machinery but never uses it (asserted via the
-//! tombstone counters), side by side with a 10%-cancellation cycle.
-//! Emits `BENCH_des.json` for the CI perf snapshot.
+//! Fig 13 headline). The cancellation cases guard the PR 4 claim that
+//! cancellable events leave the zero-cancellation hot path unperturbed
+//! (asserted via the tombstone counters). The deep-queue cases pin the
+//! indexed-waiter-heap claim: draining a queue of Q waiters costs
+//! O(Q log Q) total, so 10× the depth must grow the total grant cost by
+//! ~10–13×, not the ~100× of the old linear argmin scan — asserted
+//! here, recorded in `BENCH_des.json` for the CI perf snapshot.
 //!
 //! Run: `cargo bench --bench bench_des`
+
+use std::time::Instant;
 
 use pipesim::des::{Calendar, JobCtx, Resource};
 use pipesim::stats::rng::Pcg64;
 use pipesim::util::bench::{black_box, Bench};
 use pipesim::util::Json;
+
+/// Seconds to drain a capacity-1 priority resource with `q` queued
+/// waiters (one `release` per grant — each pops the heap minimum).
+/// Queue build-up is untimed; best of `reps` drains.
+fn drain_deep_queue(q: usize, reps: usize) -> f64 {
+    use pipesim::coordinator::{build_scheduler, StrategySpec};
+    let mut best = f64::INFINITY;
+    for rep in 0..reps {
+        let mut rng = Pcg64::new(0xDEE9 + rep as u64);
+        let mut res: Resource<u32> = Resource::with_scheduler(
+            "deep",
+            1,
+            build_scheduler(&StrategySpec::new("priority")).unwrap(),
+        );
+        res.request(0.0, u32::MAX, JobCtx::new(1.0, 1.0, 0.0));
+        for i in 0..q as u32 {
+            // heavy key ties so the seq tie-break is exercised at depth
+            let pri = rng.below(16) as f64;
+            res.request(i as f64, i, JobCtx::new(1.0, pri, i as f64));
+        }
+        let t0 = Instant::now();
+        let mut t = q as f64;
+        for _ in 0..q {
+            t += 1.0;
+            black_box(res.release(t).expect("waiter available"));
+        }
+        best = best.min(t0.elapsed().as_secs_f64());
+        assert_eq!(res.queued(), 0);
+    }
+    best
+}
 
 /// Mean of the most recent measurement, in nanoseconds per iteration.
 fn last_ns(b: &Bench) -> f64 {
@@ -91,6 +126,32 @@ fn main() {
         res.request(t, 99, JobCtx::new(1.0, 1.0, t));
     });
     rows.push(("resource_contended_ns", last_ns(&b)));
+
+    // deep-queue grant scaling: the indexed-heap acceptance case. A
+    // persistently overloaded cell grows its queue with sim time; with
+    // the heap, draining Q waiters is O(Q log Q) total, so 10× depth
+    // grows the drain ~10–13×. The old linear scan was O(Q²): ~100×.
+    let q1 = 1_000usize;
+    let q10 = 10_000usize;
+    let drain_1k = drain_deep_queue(q1, 5);
+    let drain_10k = drain_deep_queue(q10, 5);
+    let scaling = drain_10k / drain_1k.max(1e-12);
+    println!(
+        "# deep queue: drain {q1} = {:.3} ms ({:.0} ns/grant), drain {q10} = {:.3} ms \
+         ({:.0} ns/grant), 10x-depth total-cost ratio {scaling:.1}x",
+        drain_1k * 1e3,
+        drain_1k * 1e9 / q1 as f64,
+        drain_10k * 1e3,
+        drain_10k * 1e9 / q10 as f64
+    );
+    assert!(
+        scaling <= 15.0,
+        "deep-queue grant cost scales super-linearithmically: 10x depth cost {scaling:.1}x \
+         (linear-scan regression?)"
+    );
+    rows.push(("deep_queue_grant_q1k_ns", drain_1k * 1e9 / q1 as f64));
+    rows.push(("deep_queue_grant_q10k_ns", drain_10k * 1e9 / q10 as f64));
+    rows.push(("deep_queue_scaling_10x", scaling));
 
     // uncontended fast path
     let mut res2: Resource<u32> = Resource::new("bench2", 1_000_000);

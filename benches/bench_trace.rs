@@ -1,10 +1,14 @@
 //! Trace subsystem benchmarks: codec throughput (events/sec write and
-//! read), capture overhead versus a plain run, and the `NullSink`
-//! zero-allocation guard on the event path.
+//! read), capture overhead versus a plain run, the `NullSink`
+//! zero-allocation guard on the event path, and the streaming-sink
+//! throughput + bounded-allocation guard.
 //!
 //! Emits `BENCH_trace.json` for the CI perf trajectory. The allocation
-//! guard is a hard assertion: emitting events into the `NullSink` must
-//! perform ZERO heap allocations — if it ever allocates, this bench (and
+//! guards are hard assertions: emitting events into the `NullSink` must
+//! perform ZERO heap allocations, and the `StreamingPstSink` record
+//! path must perform ZERO allocations once its bounded buffers (intern
+//! table, record scratch, `BufWriter` block) are warm — that is the
+//! memory-flat-capture claim. If either ever allocates, this bench (and
 //! CI) fails.
 //!
 //! Run: `cargo bench --bench bench_trace`
@@ -16,7 +20,7 @@ use pipesim::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig
 use pipesim::des::DAY;
 use pipesim::empirical::GroundTruth;
 use pipesim::model::{Framework, TaskType};
-use pipesim::trace::{NullSink, Trace, TraceEvent, TraceEventKind, TraceSink};
+use pipesim::trace::{NullSink, StreamingPstSink, Trace, TraceEvent, TraceEventKind, TraceSink};
 use pipesim::util::bench::{black_box, Bench};
 use pipesim::util::Json;
 
@@ -148,6 +152,53 @@ fn main() {
     report.push(("read_events_per_sec", Json::Num(read_eps)));
     report.push(("bytes_per_event", Json::Num(bytes_per_event)));
     report.push(("trace_bytes", Json::Num(bytes.len() as f64)));
+
+    // --- streaming sink: throughput + bounded-allocation guard ---------
+    {
+        let dir = std::env::temp_dir().join(format!("pipesim_bench_stream_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).expect("temp dir");
+        let path = dir.join("stream.pst");
+        let cfg = ExperimentConfig {
+            name: "stream-bench".into(),
+            ..Default::default()
+        };
+        let mut sink = StreamingPstSink::create(&path, &cfg.trace_meta()).expect("create");
+        // replay the captured run's real event mix through the sink.
+        // Warm up every bounded buffer first: all record kinds intern
+        // their strings, the scratch reaches its final capacity, and the
+        // BufWriter cycles through several flushes.
+        let warmup = trace.events.len().min(50_000);
+        for ev in &trace.events[..warmup] {
+            sink.record(ev);
+        }
+        let before = allocs();
+        let passes = 4u64;
+        let t0 = std::time::Instant::now();
+        for _ in 0..passes {
+            for ev in &trace.events {
+                sink.record(black_box(ev));
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let streamed = passes * trace.events.len() as u64;
+        let delta = allocs() - before;
+        let stream_eps = streamed as f64 / secs.max(1e-12);
+        println!(
+            "# streaming sink: {stream_eps:.0} events/s, {delta} allocations across {streamed} \
+             events after warmup"
+        );
+        assert_eq!(
+            delta, 0,
+            "StreamingPstSink record path must hold O(1) memory (got {delta} allocs)"
+        );
+        sink.finish().expect("finalize streamed trace");
+        // the streamed file re-reads to exactly what the sink was fed
+        let loaded = Trace::load(&path).expect("streamed file decodes");
+        assert_eq!(loaded.events.len() as u64, warmup as u64 + streamed);
+        report.push(("stream_write_events_per_sec", Json::Num(stream_eps)));
+        report.push(("stream_allocs_after_warmup", Json::Num(delta as f64)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
 
     let json = Json::obj(report);
     std::fs::write("BENCH_trace.json", json.to_string()).expect("write BENCH_trace.json");

@@ -2,8 +2,9 @@
 
 use crate::des::DAY;
 use crate::error::Result;
-use crate::model::InfraConfig;
+use crate::model::{InfraConfig, ResourceKind};
 use crate::synth::SynthConfig;
+use crate::trace::TraceMeta;
 
 use super::strategy::{build_scheduler, build_trigger, StrategySpec};
 
@@ -151,10 +152,42 @@ impl ExperimentConfig {
             )));
         }
         // strategies must resolve in the registry (unknown names and
-        // typoed params fail here, before any work is done)
+        // typoed params fail here, before any work is done) — the shared
+        // scheduler spec and both per-cluster overrides all resolve
         build_scheduler(&self.infra.scheduler)?;
+        build_scheduler(self.infra.scheduler_for(ResourceKind::Training))?;
+        build_scheduler(self.infra.scheduler_for(ResourceKind::Compute))?;
         build_trigger(&self.runtime_view.trigger)?;
         Ok(())
+    }
+
+    /// Resolved retraining-trigger label for reports and trace metadata
+    /// (`"off"` when the runtime view is disabled).
+    pub fn trigger_label(&self) -> String {
+        if self.runtime_view.enabled {
+            self.runtime_view.trigger.label()
+        } else {
+            "off".to_string()
+        }
+    }
+
+    /// The [`TraceMeta`] a capture of this config produces. Everything
+    /// here is config-derived, so two captures of the same
+    /// `(config, seed)` carry byte-identical metadata — the in-memory
+    /// capture path and file-backed streaming sinks
+    /// (`trace::StreamingPstSink`) both label traces through this one
+    /// constructor and can never diverge.
+    pub fn trace_meta(&self) -> TraceMeta {
+        TraceMeta {
+            name: self.name.clone(),
+            seed: self.seed,
+            horizon: self.horizon,
+            config_json: self.to_json_text(),
+            extra: vec![
+                ("scheduler".to_string(), self.infra.scheduler_label()),
+                ("trigger".to_string(), self.trigger_label()),
+            ],
+        }
     }
 }
 
@@ -249,6 +282,56 @@ mod tests {
         let mut cfg = ExperimentConfig::default();
         cfg.infra.scheduler = StrategySpec::new("easy_backfill").with("window", 1.0);
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn per_resource_scheduler_specs_roundtrip_and_validate() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.infra.scheduler_training = Some(StrategySpec::new("easy_backfill"));
+        cfg.infra.scheduler_compute = Some(StrategySpec::new("sjf"));
+        cfg.validate().unwrap();
+        let back = ExperimentConfig::from_json_text(&cfg.to_json_text()).unwrap();
+        assert_eq!(back.infra.scheduler_training, cfg.infra.scheduler_training);
+        assert_eq!(back.infra.scheduler_compute, cfg.infra.scheduler_compute);
+        // a bad override fails validation even though the shared spec is
+        // fine — resolution covers what each cluster will actually run
+        let mut cfg = ExperimentConfig::default();
+        cfg.infra.scheduler_training = Some(StrategySpec::new("no_such"));
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.infra.scheduler_compute = Some(StrategySpec::new("edf").with("typo", 1.0));
+        assert!(cfg.validate().is_err());
+        // configs predating the split parse with no overrides
+        let plain = ExperimentConfig::default().to_json_text();
+        let back = ExperimentConfig::from_json_text(&plain).unwrap();
+        assert_eq!(back.infra.scheduler_training, None);
+        assert_eq!(back.infra.scheduler_compute, None);
+    }
+
+    #[test]
+    fn trace_meta_is_config_derived_and_labelled() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = "meta".into();
+        cfg.seed = 9;
+        let m = cfg.trace_meta();
+        assert_eq!(m.name, "meta");
+        assert_eq!(m.seed, 9);
+        assert_eq!(m.horizon, cfg.horizon);
+        assert_eq!(m.get("scheduler"), Some("fifo"));
+        assert_eq!(m.get("trigger"), Some("off"), "runtime view disabled");
+        assert_eq!(
+            ExperimentConfig::from_json_text(&m.config_json).unwrap().seed,
+            9,
+            "embedded config replays"
+        );
+        cfg.runtime_view.enabled = true;
+        cfg.infra.scheduler_training = Some(StrategySpec::new("priority"));
+        let m = cfg.trace_meta();
+        assert_eq!(
+            m.get("scheduler"),
+            Some("training=priority|compute=fifo")
+        );
+        assert_eq!(m.get("trigger"), Some("drift_threshold:threshold=0.05"));
     }
 
     #[test]

@@ -311,6 +311,40 @@ mod tests {
     }
 
     #[test]
+    fn per_resource_scheduler_split_is_a_pure_superset() {
+        // digest oracles for the scheduler split: an explicit override
+        // equal to the shared spec is byte-identical to no override, and
+        // overriding only the compute cluster leaves training untouched
+        // while actually changing outcomes once compute queues form
+        let mk = |tr: Option<&str>, co: Option<&str>| {
+            let mut cfg = saturated_cfg("split", StrategySpec::new("fifo"));
+            // saturate compute too so its discipline matters
+            cfg.infra.compute_capacity = 3;
+            cfg.infra.scheduler_training = tr.map(StrategySpec::new);
+            cfg.infra.scheduler_compute = co.map(StrategySpec::new);
+            run_with(cfg)
+        };
+        let shared = mk(None, None);
+        assert!(shared.wait_compute.mean() > 0.0, "compute must queue");
+        let explicit = mk(Some("fifo"), Some("fifo"));
+        assert_eq!(
+            shared.digest(),
+            explicit.digest(),
+            "explicit fifo override must be byte-identical to the shared spec"
+        );
+        let split = mk(None, Some("sjf"));
+        assert_ne!(
+            shared.digest(),
+            split.digest(),
+            "compute override never engaged"
+        );
+        assert_eq!(split.arrived, split.completed + split.in_flight);
+        // the result label is self-describing about the split
+        assert_eq!(shared.scheduler, "fifo");
+        assert_eq!(split.scheduler, "training=fifo|compute=sjf");
+    }
+
+    #[test]
     fn every_registered_scheduler_runs_the_default_workload() {
         for name in scheduler_names() {
             let mut cfg = ExperimentConfig {

@@ -33,7 +33,7 @@ use crate::runtime::{Runtime, K1};
 use crate::stats::gmm::Gmm1;
 use crate::stats::rng::Pcg64;
 use crate::synth::{AssetSynthesizer, PipelineSynthesizer, TaskList};
-use crate::trace::{MemorySink, NullSink, Trace, TraceEvent, TraceEventKind, TraceMeta, TraceSink};
+use crate::trace::{MemorySink, NullSink, Trace, TraceEvent, TraceEventKind, TraceSink};
 use crate::tsdb::{SeriesHandle, SeriesKey, TsStore};
 
 use super::config::ExperimentConfig;
@@ -257,16 +257,18 @@ impl Simulation {
         let compression = CompressionModel::from_table1();
 
         // world: each resource owns its scheduler instance (stateful
-        // strategies never share state across clusters)
+        // strategies never share state across clusters), built from its
+        // cluster's resolved spec — `infra.scheduler_training` /
+        // `infra.scheduler_compute` override the shared `infra.scheduler`
         let training = Resource::with_scheduler(
             "training",
             cfg.infra.training_capacity,
-            build_scheduler(&cfg.infra.scheduler)?,
+            build_scheduler(cfg.infra.scheduler_for(ResourceKind::Training))?,
         );
         let compute = Resource::with_scheduler(
             "compute",
             cfg.infra.compute_capacity,
-            build_scheduler(&cfg.infra.scheduler)?,
+            build_scheduler(cfg.infra.scheduler_for(ResourceKind::Compute))?,
         );
         let trigger = build_trigger(&cfg.runtime_view.trigger)?;
         let mut db = TsStore::new();
@@ -343,7 +345,7 @@ impl Simulation {
                 Event::RetrainLaunch(slot) => self.on_retrain_launch(t, slot)?,
             }
         }
-        Ok(self.finish(started))
+        self.finish(started)
     }
 
     /// Slab-allocate a pipeline, reusing freed slots.
@@ -960,7 +962,9 @@ impl Simulation {
     }
 
     /// Assemble the [`ExperimentResult`] from the final world state.
-    fn finish(mut self, started: std::time::Instant) -> ExperimentResult {
+    /// Fails only when a streaming sink cannot finalize its output
+    /// ([`TraceSink::finish`] — e.g. the footer write hit a full disk).
+    fn finish(mut self, started: std::time::Instant) -> Result<ExperimentResult> {
         let horizon_covered = self.cal.now().min(self.cfg.horizon);
         let final_perf = if self.deployed.is_empty() {
             0.0
@@ -969,28 +973,20 @@ impl Simulation {
         };
         let pool_refills = self.train_pools.iter().map(|p| p.refills).sum::<u64>()
             + self.eval_pool.refills;
-        let scheduler = self.cfg.infra.scheduler.label();
-        let trigger = if self.cfg.runtime_view.enabled {
-            self.cfg.runtime_view.trigger.label()
-        } else {
-            "off".to_string()
-        };
-        // everything in the trace meta is config-derived, so two captures
-        // of the same (config, seed) produce byte-identical trace files
+        let scheduler = self.cfg.infra.scheduler_label();
+        let trigger = self.cfg.trigger_label();
+        // the stream is complete: streaming sinks finalize (string-table
+        // + meta footer, flush) before the result is assembled
+        self.sink.finish()?;
+        // everything in the trace meta is config-derived
+        // (ExperimentConfig::trace_meta — shared with streaming sinks),
+        // so two captures of the same (config, seed) produce
+        // byte-identical trace files
         let trace = self.capture.then(|| Trace {
-            meta: TraceMeta {
-                name: self.cfg.name.clone(),
-                seed: self.cfg.seed,
-                horizon: self.cfg.horizon,
-                config_json: self.cfg.to_json_text(),
-                extra: vec![
-                    ("scheduler".to_string(), scheduler.clone()),
-                    ("trigger".to_string(), trigger.clone()),
-                ],
-            },
+            meta: self.cfg.trace_meta(),
             events: self.sink.drain(),
         });
-        ExperimentResult {
+        Ok(ExperimentResult {
             name: self.cfg.name,
             seed: self.cfg.seed,
             horizon: horizon_covered,
@@ -1020,7 +1016,7 @@ impl Simulation {
             trigger,
             trace,
             tsdb: self.db,
-        }
+        })
     }
 }
 

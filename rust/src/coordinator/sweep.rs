@@ -23,11 +23,22 @@ use std::sync::Arc;
 use crate::error::{Error, Result};
 use crate::runtime::Runtime;
 use crate::stats::Summary;
+use crate::trace::TraceSink;
 
 use super::config::ExperimentConfig;
 use super::experiment::Experiment;
 use super::params::SimParams;
 use super::result::ExperimentResult;
+
+/// Per-cell [`TraceSink`] constructor: invoked with the cell's input
+/// index and config just before the cell runs (on the worker thread),
+/// and the returned sink is injected via `Experiment::with_sink` —
+/// capture is forced on for that cell, and a streaming sink (e.g.
+/// `trace::StreamingPstSink`) keeps the capture out of memory, which is
+/// what makes `sweep --trace-dir` memory-flat instead of buffering
+/// every cell's trace until the sweep ends.
+pub type CellSinkFactory =
+    Box<dyn Fn(usize, &ExperimentConfig) -> Result<Box<dyn TraceSink>> + Send + Sync>;
 
 /// A sweep under construction: shared inputs + the cell grid.
 pub struct Sweep {
@@ -35,6 +46,7 @@ pub struct Sweep {
     runtime: Option<Arc<Runtime>>,
     cells: Vec<ExperimentConfig>,
     jobs: usize,
+    sink_factory: Option<CellSinkFactory>,
 }
 
 impl Sweep {
@@ -44,12 +56,21 @@ impl Sweep {
             runtime: None,
             cells: Vec::new(),
             jobs: 0,
+            sink_factory: None,
         }
     }
 
     /// Use the AOT artifacts for all cells' simulation-time sampling.
     pub fn with_runtime(mut self, rt: Option<Arc<Runtime>>) -> Self {
         self.runtime = rt;
+        self
+    }
+
+    /// Construct a [`TraceSink`] per cell (see [`CellSinkFactory`]).
+    /// Capture is then on for every cell regardless of
+    /// `capture_trace`; a factory error fails that cell's run.
+    pub fn with_cell_sinks(mut self, factory: CellSinkFactory) -> Self {
+        self.sink_factory = Some(factory);
         self
     }
 
@@ -94,6 +115,7 @@ impl Sweep {
             runtime,
             cells,
             jobs,
+            sink_factory,
         } = self;
         if cells.is_empty() {
             return Err(Error::Config("sweep: no cells to run".into()));
@@ -115,6 +137,7 @@ impl Sweep {
                     let runtime = &runtime;
                     let cells = &cells;
                     let next = &next;
+                    let sink_factory = &sink_factory;
                     handles.push(scope.spawn(move || {
                         let mut out = Vec::new();
                         loop {
@@ -122,9 +145,15 @@ impl Sweep {
                             if i >= cells.len() {
                                 break;
                             }
-                            let r = Experiment::new(cells[i].clone(), params.clone())
-                                .with_runtime(runtime.clone())
-                                .run();
+                            let exp = Experiment::new(cells[i].clone(), params.clone())
+                                .with_runtime(runtime.clone());
+                            // a per-cell sink (streamed captures) is
+                            // built on the worker, next to its run
+                            let r = match sink_factory.as_ref().map(|f| f(i, &cells[i])) {
+                                None => exp.run(),
+                                Some(Ok(sink)) => exp.with_sink(sink).run(),
+                                Some(Err(e)) => Err(e),
+                            };
                             out.push((i, r));
                         }
                         out
@@ -459,6 +488,61 @@ mod tests {
     fn empty_sweep_is_an_error() {
         let params = Arc::new(quick_params());
         assert!(Sweep::new(params).run().is_err());
+    }
+
+    #[test]
+    fn cell_sink_factory_runs_per_cell_and_stays_digest_neutral() {
+        use std::sync::atomic::AtomicU64;
+
+        use crate::trace::{TraceEvent, TraceSink};
+
+        struct Counting {
+            events: Arc<AtomicU64>,
+        }
+        impl TraceSink for Counting {
+            fn record(&mut self, _ev: &TraceEvent) {
+                self.events.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let params = Arc::new(quick_params());
+        let cells_seen = Arc::new(AtomicUsize::new(0));
+        let events = Arc::new(AtomicU64::new(0));
+        let build = |with_sinks: bool| {
+            let mut sweep = Sweep::new(params.clone()).jobs(2);
+            if with_sinks {
+                let cells_seen = cells_seen.clone();
+                let events = events.clone();
+                sweep = sweep.with_cell_sinks(Box::new(move |_i, _cfg| {
+                    cells_seen.fetch_add(1, Ordering::Relaxed);
+                    let sink: Box<dyn TraceSink> = Box::new(Counting {
+                        events: events.clone(),
+                    });
+                    Ok(sink)
+                }));
+            }
+            sweep.add_replications(&small_cfg("sinks", 0), 10, 3);
+            sweep.run().unwrap()
+        };
+        let plain = build(false);
+        let sunk = build(true);
+        assert_eq!(cells_seen.load(Ordering::Relaxed), 3, "one sink per cell");
+        assert!(events.load(Ordering::Relaxed) > 1000, "sinks saw the streams");
+        // injected sinks are pure observers
+        assert_eq!(plain.digests(), sunk.digests());
+        // streaming-style sinks drain empty: meta only, no buffered events
+        assert!(sunk
+            .results
+            .iter()
+            .all(|r| r.trace.as_ref().is_some_and(|t| t.is_empty())));
+        // a factory error fails the sweep, not the process
+        let mut sweep = Sweep::new(params.clone()).jobs(1);
+        sweep.add(small_cfg("bad", 1));
+        let out = sweep
+            .with_cell_sinks(Box::new(|_i, _cfg| {
+                Err(crate::error::Error::Config("no sink for you".into()))
+            }))
+            .run();
+        assert!(out.is_err());
     }
 
     #[test]

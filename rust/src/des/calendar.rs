@@ -7,7 +7,9 @@
 //!
 //! A 4-ary heap beats the std binary heap on this workload: the tree is
 //! half as deep, so a pop touches ~log4(n) cache lines instead of
-//! log2(n), and the four children of a node sit in adjacent memory. Time
+//! log2(n), and the four children of a node sit in adjacent memory (the
+//! sift/heapify primitives live in [`crate::util::heap4`], shared with
+//! the resource's waiter index heap). Time
 //! comparisons use `f64::total_cmp` — a branch-free total order, no NaN
 //! panic path in the per-event comparator (NaN times are rejected once,
 //! at `schedule_at`).
@@ -29,8 +31,7 @@
 //! property tests in `rust/tests/props.rs`).
 
 use super::SimTime;
-
-const ARITY: usize = 4;
+use crate::util::heap4;
 
 /// Compact below this backing size is never worthwhile.
 const COMPACT_MIN: usize = 64;
@@ -160,12 +161,7 @@ impl<E> Calendar<E> {
             if self.heap.is_empty() {
                 return None;
             }
-            let last = self.heap.len() - 1;
-            self.heap.swap(0, last);
-            let e = self.heap.pop().expect("non-empty");
-            if !self.heap.is_empty() {
-                self.sift_down(0);
-            }
+            let e = heap4::pop_root(&mut self.heap, Entry::earlier_than);
             if e.cancelled {
                 self.tombstones -= 1;
                 continue;
@@ -190,13 +186,8 @@ impl<E> Calendar<E> {
     /// tombstones blocking the top first, so the answer is exact.
     pub fn peek_time(&mut self) -> Option<SimTime> {
         while self.heap.first().is_some_and(|e| e.cancelled) {
-            let last = self.heap.len() - 1;
-            self.heap.swap(0, last);
-            self.heap.pop();
+            heap4::pop_root(&mut self.heap, Entry::earlier_than);
             self.tombstones -= 1;
-            if !self.heap.is_empty() {
-                self.sift_down(0);
-            }
         }
         self.heap.first().map(|e| e.time)
     }
@@ -233,55 +224,17 @@ impl<E> Calendar<E> {
         self.cancelled_total
     }
 
-    /// Drop every tombstone and restore the heap invariant in O(n).
+    /// Drop every tombstone and restore the heap invariant in O(n)
+    /// (Floyd heapify via the shared [`heap4`] primitives).
     fn compact(&mut self) {
         self.heap.retain(|e| !e.cancelled);
         self.tombstones = 0;
-        // Floyd heapify: sift every internal node down, bottom-up.
-        let len = self.heap.len();
-        if len > 1 {
-            for i in (0..=(len - 2) / ARITY).rev() {
-                self.sift_down(i);
-            }
-        }
+        heap4::heapify(&mut self.heap, Entry::earlier_than);
     }
 
     #[inline]
-    fn sift_up(&mut self, mut i: usize) {
-        while i > 0 {
-            let parent = (i - 1) / ARITY;
-            if self.heap[i].earlier_than(&self.heap[parent]) {
-                self.heap.swap(i, parent);
-                i = parent;
-            } else {
-                break;
-            }
-        }
-    }
-
-    #[inline]
-    fn sift_down(&mut self, mut i: usize) {
-        let len = self.heap.len();
-        loop {
-            let first = ARITY * i + 1;
-            if first >= len {
-                break;
-            }
-            // earliest of up to four children
-            let mut best = first;
-            let end = (first + ARITY).min(len);
-            for c in (first + 1)..end {
-                if self.heap[c].earlier_than(&self.heap[best]) {
-                    best = c;
-                }
-            }
-            if self.heap[best].earlier_than(&self.heap[i]) {
-                self.heap.swap(i, best);
-                i = best;
-            } else {
-                break;
-            }
-        }
+    fn sift_up(&mut self, i: usize) {
+        heap4::sift_up(&mut self.heap, i, Entry::earlier_than);
     }
 }
 

@@ -16,7 +16,7 @@ pub mod sched;
 pub use calendar::{Calendar, EventHandle};
 pub use monitor::{Counter, TimeWeighted};
 pub use resource::{AcquireResult, Granted, Resource};
-pub use sched::{EnqueueAction, JobCtx, SchedCtx, SchedView, Scheduler};
+pub use sched::{EnqueueAction, JobCtx, QueueKey, SchedCtx, SchedView, Scheduler};
 
 /// Simulated time in seconds since experiment start.
 pub type SimTime = f64;

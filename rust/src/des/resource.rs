@@ -15,14 +15,38 @@
 //! running work ([`AcquireResult::Preempted`]) — the caller then cancels
 //! the victim's completion event and the victim waits in queue with its
 //! remaining service.
+//!
+//! ## The indexed waiter heap (O(log n) grants)
+//!
+//! Waiters live in parallel arrays so re-decision hooks get the full
+//! queue as a contiguous [`SchedView`] slice. For every `!needs_view()`
+//! scheduler the resource additionally maintains an **index min-heap**
+//! over those arrays, keyed by each waiter's immutable
+//! [`QueueKey`](super::sched::QueueKey): a grant is then a heap
+//! peek/pop instead of a linear `(key, seq)` argmin scan, turning the
+//! total grant cost of a persistently overloaded resource from O(Q²)
+//! into O(Q log Q). Heap entries record the array slot they were pushed
+//! for; `swap_remove` moves a waiter to a lower slot, so the mover gets
+//! a fresh entry and the old one goes **stale** — detected lazily by
+//! re-checking the slot's unique `seq` when the entry surfaces at the
+//! top (the calendar's tombstone technique). Stale entries are bounded
+//! by compaction: when they exceed half the backing heap the heap is
+//! rebuilt from the live arrays in O(n), so amortized grant cost stays
+//! logarithmic. Re-decision schedulers keep the pre-heap Vec path
+//! untouched — their grant decisions need the whole queue anyway.
+//!
+//! The heap's grant order is **byte-identical** to the linear scan
+//! ([`default_grants`](super::sched::default_grants), retained as the
+//! reference): both compare through `QueueKey`'s total strict order,
+//! property-tested across the registry in `rust/tests/props.rs`.
 
 use super::monitor::TimeWeighted;
 use super::sched::{
-    default_grants, earlier_waiter, EnqueueAction, Fifo, JobCtx, RunningView, SchedCtx, SchedView,
-    Scheduler, WaiterView,
+    EnqueueAction, Fifo, JobCtx, QueueKey, RunningView, SchedCtx, SchedView, Scheduler, WaiterView,
 };
 use super::SimTime;
 use crate::stats::Summary;
+use crate::util::heap4;
 
 /// Result of a resource request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -48,6 +72,29 @@ pub struct Granted<T> {
     pub waited: SimTime,
 }
 
+/// Below this backing size compaction is never worthwhile (mirrors the
+/// calendar's tombstone bound).
+const COMPACT_MIN: usize = 64;
+
+/// One entry of the waiter index heap: a waiter's [`QueueKey`] plus the
+/// slot it occupied in the parallel waiter arrays when the entry was
+/// pushed. The entry is *stale* once that slot no longer holds the
+/// waiter (`seq` mismatch — seqs are unique, and a waiter's slot only
+/// ever decreases under `swap_remove`, so at most one entry per waiter
+/// is ever live).
+#[derive(Clone, Copy, Debug)]
+struct HeapSlot {
+    key: QueueKey,
+    slot: usize,
+}
+
+/// Strict order of the waiter index heap: ascending [`QueueKey`] — the
+/// canonical grant rule, handed to the shared [`heap4`] primitives.
+#[inline]
+fn heap_less(a: &HeapSlot, b: &HeapSlot) -> bool {
+    a.key < b.key
+}
+
 /// A capacity-limited shared resource with queueing and instrumentation.
 pub struct Resource<T> {
     pub name: String,
@@ -62,6 +109,11 @@ pub struct Resource<T> {
     // `WaiterView::seq` carries FCFS order)
     waiter_tok: Vec<T>,
     waiter_views: Vec<WaiterView>,
+    /// Index min-heap over the waiter arrays, keyed by `QueueKey` — the
+    /// O(log n) grant path. Maintained only when `!track_view`
+    /// (re-decision schedulers re-rank the whole queue per decision, so
+    /// a cached order cannot serve them); empty otherwise.
+    heap: Vec<HeapSlot>,
     // running set (only maintained when `track_view`)
     run_tok: Vec<T>,
     run_views: Vec<RunningView>,
@@ -102,6 +154,7 @@ impl<T> Resource<T> {
             track_view,
             waiter_tok: Vec::new(),
             waiter_views: Vec::new(),
+            heap: Vec::new(),
             run_tok: Vec::new(),
             run_views: Vec::new(),
             wseq: 0,
@@ -148,16 +201,110 @@ impl<T> Resource<T> {
         let ctx = self.ctx(t, job);
         let key = self.scheduler.queue_key(&ctx);
         debug_assert!(!key.is_nan(), "NaN waiter key from {}", self.scheduler.name());
+        let seq = self.wseq;
         self.waiter_tok.push(token);
         self.waiter_views.push(WaiterView {
             job,
             key,
             enq_t: t,
-            seq: self.wseq,
+            seq,
         });
+        if !self.track_view {
+            self.heap.push(HeapSlot {
+                key: QueueKey { key, seq },
+                slot: self.waiter_views.len() - 1,
+            });
+            let leaf = self.heap.len() - 1;
+            heap4::sift_up(&mut self.heap, leaf, heap_less);
+        }
         self.wseq += 1;
         self.total_queued += 1;
         self.queue_len.set(t, self.waiter_views.len() as f64);
+    }
+
+    // ---- waiter index heap (the !track_view grant fast path) ----
+
+    /// Backing index-heap size including stale entries awaiting reap.
+    /// Always 0 for re-decision (`needs_view`) schedulers. Exposed for
+    /// the property tests and benches that pin the compaction bound.
+    pub fn index_heap_len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Stale index-heap entries awaiting lazy reap. Bounded after every
+    /// public operation at `max(index_heap_len / 2, 64)` — grants
+    /// create staleness, `maybe_compact` re-establishes the bound.
+    pub fn index_heap_stale(&self) -> usize {
+        self.heap.len().saturating_sub(self.waiter_views.len())
+    }
+
+    /// True when `e` still names the waiter it was pushed for (seqs are
+    /// unique per resource, so a slot match is exact).
+    #[inline]
+    fn heap_live(&self, e: &HeapSlot) -> bool {
+        self.waiter_views
+            .get(e.slot)
+            .is_some_and(|w| w.seq == e.key.seq)
+    }
+
+    /// Reap stale entries off the top, then return the live minimum's
+    /// array slot without removing its entry. `None` when no waiters.
+    fn peek_min(&mut self) -> Option<usize> {
+        loop {
+            let e = *self.heap.first()?;
+            if self.heap_live(&e) {
+                return Some(e.slot);
+            }
+            self.heap_pop_top();
+        }
+    }
+
+    /// Remove the top heap entry (caller has inspected it via
+    /// [`Resource::peek_min`], so the heap is non-empty).
+    fn heap_pop_top(&mut self) {
+        heap4::pop_root(&mut self.heap, heap_less);
+    }
+
+    /// Pop the `QueueKey`-minimal live waiter's slot off the index heap.
+    fn pop_min(&mut self) -> Option<usize> {
+        let slot = self.peek_min()?;
+        self.heap_pop_top();
+        Some(slot)
+    }
+
+    /// After a `swap_remove` at array slot `i`: the former last waiter
+    /// (if any) now occupies `i`, so its old heap entry is stale — push
+    /// a fresh one. No-op for re-decision schedulers (no heap) and when
+    /// `i` was the last slot.
+    fn fix_moved_slot(&mut self, i: usize) {
+        if self.track_view {
+            return;
+        }
+        if let Some(w) = self.waiter_views.get(i) {
+            let key = w.queue_key();
+            self.heap.push(HeapSlot { key, slot: i });
+            let leaf = self.heap.len() - 1;
+            heap4::sift_up(&mut self.heap, leaf, heap_less);
+        }
+    }
+
+    /// Rebuild the heap and re-check the stale bound. Called at the end
+    /// of every grant-producing operation (never mid-grant, where
+    /// granted-but-unremoved waiters would be re-indexed): when stale
+    /// entries exceed half the backing heap, rebuild from the live
+    /// arrays in O(n) — the calendar's bounded-tombstone rule.
+    fn maybe_compact(&mut self) {
+        let stale = self.index_heap_stale();
+        if self.heap.len() > COMPACT_MIN && stale * 2 > self.heap.len() {
+            self.heap.clear();
+            for (i, w) in self.waiter_views.iter().enumerate() {
+                self.heap.push(HeapSlot {
+                    key: w.queue_key(),
+                    slot: i,
+                });
+            }
+            heap4::heapify(&mut self.heap, heap_less);
+        }
     }
 
     /// Start a job immediately: occupy its slots and (when tracked)
@@ -281,9 +428,10 @@ impl<T: Copy> Resource<T> {
     /// Release one slot at time `t` — the unit-width convenience API
     /// (every job occupies one slot; re-decision schedulers must use
     /// [`Resource::release_all`], which identifies the releasing job).
-    /// If waiters are queued, the scheduler's best `(key, seq)` waiter
-    /// is granted *immediately* — the slot never goes idle — and
-    /// returned so the caller can schedule its continuation.
+    /// If waiters are queued, the scheduler's best `QueueKey` waiter is
+    /// granted *immediately* — the slot never goes idle — and returned
+    /// so the caller can schedule its continuation. The winner comes
+    /// off the index heap in O(log n).
     pub fn release(&mut self, t: SimTime) -> Option<Granted<T>> {
         debug_assert!(self.in_use > 0, "release on idle resource {}", self.name);
         debug_assert!(
@@ -291,9 +439,10 @@ impl<T: Copy> Resource<T> {
             "{}: re-decision schedulers release via release_all",
             self.name
         );
-        match self.best_waiter() {
+        match self.pop_min() {
             Some(i) => {
                 let g = self.take_waiter(t, i);
+                self.maybe_compact();
                 self.queue_len.set(t, self.waiter_views.len() as f64);
                 self.wait_stats.add(g.waited);
                 // in_use unchanged: slot transfers to the waiter
@@ -337,21 +486,22 @@ impl<T: Copy> Resource<T> {
         if !self.waiter_views.is_empty() {
             let mut grants = std::mem::take(&mut self.grant_scratch);
             grants.clear();
-            let view = SchedView {
-                now: t,
-                free: self.capacity - self.in_use,
-                capacity: self.capacity,
-                waiters: &self.waiter_views,
-                running: &self.run_views,
-            };
             if self.track_view {
+                let view = SchedView {
+                    now: t,
+                    free: self.capacity - self.in_use,
+                    capacity: self.capacity,
+                    waiters: &self.waiter_views,
+                    running: &self.run_views,
+                };
                 self.scheduler.on_release(&view, &mut grants);
             } else {
-                default_grants(&view, &mut grants);
+                self.heap_grants(&mut grants);
             }
             granted_any = !grants.is_empty();
             self.apply_grants(t, &mut grants, out);
             self.grant_scratch = grants;
+            self.maybe_compact();
         }
         // touch the monitors only when the tracked value changed: the
         // piecewise integral is partition-sensitive in the last float
@@ -405,30 +555,45 @@ impl<T: Copy> Resource<T> {
         }
         // remove granted waiters, highest index first so the remaining
         // indices stay valid under swap_remove (in place: the event path
-        // stays allocation-free)
+        // stays allocation-free); each removal re-indexes the waiter it
+        // moved
         grants.sort_unstable_by(|a, b| b.cmp(a));
         for &i in grants.iter() {
             self.waiter_tok.swap_remove(i);
             self.waiter_views.swap_remove(i);
+            self.fix_moved_slot(i);
         }
     }
 
-    /// Index of the `(key, seq)`-minimal waiter (the same
-    /// [`earlier_waiter`] rule `default_grants` uses, so the unit-width
-    /// `release` path and `release_all` can never diverge).
-    fn best_waiter(&self) -> Option<usize> {
-        let mut best: Option<usize> = None;
-        for (i, w) in self.waiter_views.iter().enumerate() {
-            if best.is_none_or(|b| earlier_waiter(w, &self.waiter_views[b])) {
-                best = Some(i);
+    /// The built-in grant rule on the index heap: repeatedly take the
+    /// `QueueKey`-minimal live waiter while it fits the free slots,
+    /// stopping at the first minimum that does not fit (head-of-line
+    /// blocking). Byte-identical to the linear scan of
+    /// [`default_grants`](super::sched::default_grants) — both are the
+    /// strict `QueueKey` order — in O(g log n) instead of O(g·n).
+    /// Granted waiters stay in the arrays (their heap entries are
+    /// popped here); `apply_grants` removes them.
+    fn heap_grants(&mut self, grants: &mut Vec<usize>) {
+        let mut free = self.capacity - self.in_use;
+        while free > 0 {
+            let Some(i) = self.peek_min() else { break };
+            let slots = self.waiter_views[i].job.slots as usize;
+            if slots > free {
+                break;
             }
+            free -= slots;
+            self.heap_pop_top();
+            grants.push(i);
         }
-        best
     }
 
+    /// Remove waiter `i` (its heap entry was already popped by the
+    /// caller) and re-index the waiter `swap_remove` moved into its
+    /// slot.
     fn take_waiter(&mut self, t: SimTime, i: usize) -> Granted<T> {
         let w = self.waiter_views.swap_remove(i);
         let token = self.waiter_tok.swap_remove(i);
+        self.fix_moved_slot(i);
         Granted {
             token,
             waited: t - w.enq_t,
@@ -617,6 +782,83 @@ mod tests {
     #[should_panic]
     fn zero_capacity_rejected() {
         let _: Resource<u32> = Resource::new("bad", 0);
+    }
+
+    // ---- waiter index heap ----
+
+    #[test]
+    fn deep_queue_grants_in_exact_key_seq_order() {
+        // the heap path must reproduce the strict (key, seq) order at
+        // depth — a small LCG drives repeated keys so ties exercise the
+        // seq tie-break
+        let mut r: Resource<u32> = Resource::with_scheduler("deep", 1, Box::new(Priority));
+        r.request(0.0, u32::MAX, job(0.0)); // occupy the slot
+        let mut x = 0x9e37_79b9u64;
+        let mut expect: Vec<(f64, u64, u32)> = Vec::new();
+        for i in 0..5000u32 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(99);
+            let pri = (x >> 33) % 16; // many ties
+            r.request(i as f64, i, JobCtx::new(1.0, pri as f64, i as f64));
+            expect.push((pri as f64, i as u64, i));
+        }
+        expect.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        for (n, &(_, _, tok)) in expect.iter().enumerate() {
+            let g = r.release(10_000.0 + n as f64).unwrap();
+            assert_eq!(g.token, tok, "grant {n} diverged from (key, seq) order");
+        }
+        assert_eq!(r.queued(), 0);
+        // the drained queue may leave a few stale entries (reaped lazily),
+        // but never more than the compaction floor
+        assert!(r.index_heap_len() <= 64, "{} stale", r.index_heap_len());
+    }
+
+    #[test]
+    fn index_heap_stale_entries_stay_bounded() {
+        // mixed-width churn forces swap_remove moves (stale entries);
+        // the compaction bound must hold after every public operation
+        let bound_ok = |r: &Resource<u32>| {
+            r.index_heap_stale() <= (r.index_heap_len() / 2).max(64)
+        };
+        let mut r: Resource<u32> = Resource::new("churn", 3);
+        let mut x = 7u64;
+        let mut t = 0.0;
+        let mut widths = vec![0u32; 4000];
+        let mut running: Vec<u32> = Vec::new();
+        for i in 0..4000u32 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(99);
+            t += 1.0;
+            if x % 5 < 3 || running.is_empty() {
+                let slots = 1 + (x >> 40) as u32 % 2;
+                widths[i as usize] = slots;
+                let job = JobCtx::new(5.0, 1.0, t).with_slots(slots);
+                if r.request(t, i, job) == AcquireResult::Acquired {
+                    running.push(i);
+                }
+            } else {
+                let tok = running.remove(((x >> 20) as usize) % running.len());
+                let mut out = Vec::new();
+                r.release_all(t, &tok, widths[tok as usize], &mut out);
+                running.extend(out.iter().map(|g| g.token));
+            }
+            assert!(
+                bound_ok(&r),
+                "op {i}: stale {} of {} unbounded",
+                r.index_heap_stale(),
+                r.index_heap_len()
+            );
+        }
+    }
+
+    #[test]
+    fn re_decision_schedulers_never_build_the_heap() {
+        let mut r: Resource<&str> =
+            Resource::with_scheduler("t", 1, Box::new(EasyBackfill::default()));
+        r.request(0.0, "run", job(0.0));
+        r.request(1.0, "w1", job(0.0));
+        r.request(2.0, "w2", job(0.0));
+        assert_eq!(r.queued(), 2);
+        assert_eq!(r.index_heap_len(), 0, "view schedulers use the Vec path");
+        assert_eq!(r.index_heap_stale(), 0);
     }
 
     // ---- multi-slot jobs ----

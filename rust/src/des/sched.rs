@@ -34,6 +34,21 @@
 //! task) and [`EasyBackfill`] (FCFS with head-of-queue reservation and
 //! EASY-style backfill) are the built-in re-decision strategies.
 //!
+//! ## The `QueueKey` ordering contract
+//!
+//! The grant rule for key-based strategies is a single total order:
+//! ascending [`QueueKey`] — the scheduler-assigned `key` compared by
+//! `f64::total_cmp` (so every float, NaN included, has a defined rank),
+//! tie-broken by the enqueue sequence number, which is unique per
+//! resource and makes the order *strict*. [`QueueKey`]'s `Ord` impl IS
+//! the digest-critical rule: [`earlier_waiter`], [`default_grants`],
+//! and the resource's indexed waiter heap (the O(log n) fast path for
+//! `!needs_view()` strategies) all compare through it, so the
+//! linear-scan reference and the heap can never disagree on which
+//! waiter is granted next. Keys are assigned once, at enqueue time, and
+//! never change while a job waits — that immutability is what lets the
+//! heap cache them.
+//!
 //! ## Contract
 //!
 //! Decisions must be **deterministic**: a scheduler may keep internal
@@ -98,6 +113,43 @@ pub struct SchedCtx {
     pub queued: usize,
 }
 
+/// A waiter's rank under the canonical grant order: the
+/// scheduler-assigned `key` (primary, compared by `f64::total_cmp`) with
+/// the enqueue sequence number as the FIFO tie-break. `seq` is unique
+/// per resource, so the order is total *and strict* — no two waiters
+/// ever compare equal, which is what makes grant order deterministic
+/// and lets the resource's indexed heap reproduce the linear-scan rule
+/// byte-for-byte.
+#[derive(Clone, Copy, Debug)]
+pub struct QueueKey {
+    /// Ordering key assigned by [`Scheduler::queue_key`] at enqueue.
+    pub key: f64,
+    /// Enqueue sequence number (ascending = FCFS order).
+    pub seq: u64,
+}
+
+impl Ord for QueueKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key
+            .total_cmp(&other.key)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+impl PartialOrd for QueueKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl PartialEq for QueueKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for QueueKey {}
+
 /// One queued job as seen by the re-decision hooks.
 #[derive(Clone, Copy, Debug)]
 pub struct WaiterView {
@@ -110,6 +162,17 @@ pub struct WaiterView {
     /// Enqueue sequence number: ascending `seq` is FCFS order. Unique
     /// within a resource.
     pub seq: u64,
+}
+
+impl WaiterView {
+    /// This waiter's rank under the canonical grant order.
+    #[inline]
+    pub fn queue_key(&self) -> QueueKey {
+        QueueKey {
+            key: self.key,
+            seq: self.seq,
+        }
+    }
 }
 
 /// One running job as seen by the re-decision hooks. Only maintained for
@@ -221,23 +284,26 @@ pub trait Scheduler: Send {
     }
 }
 
-/// The one canonical waiter ordering: ascending `(key, enqueue seq)`.
-/// Every built-in grant decision — [`default_grants`] and the resource's
-/// unit-width `release` fast path — goes through this comparison, so the
-/// digest-critical tie-break rule exists exactly once.
+/// The one canonical waiter ordering: ascending [`QueueKey`]. Every
+/// built-in grant decision — [`default_grants`], the resource's indexed
+/// waiter heap, and the unit-width `release` fast path — goes through
+/// this comparison, so the digest-critical tie-break rule exists
+/// exactly once (it is [`QueueKey`]'s `Ord`).
 #[inline]
 pub fn earlier_waiter(a: &WaiterView, b: &WaiterView) -> bool {
-    match a.key.total_cmp(&b.key) {
-        std::cmp::Ordering::Less => true,
-        std::cmp::Ordering::Greater => false,
-        std::cmp::Ordering::Equal => a.seq < b.seq,
-    }
+    a.queue_key() < b.queue_key()
 }
 
-/// The built-in grant rule: repeatedly grant the `(key, seq)`-minimal
+/// The built-in grant rule: repeatedly grant the [`QueueKey`]-minimal
 /// waiter while it fits the free slots, stopping at the first best
 /// waiter that does not fit (head-of-line blocking — overtaking a
 /// blocked head is a policy decision, not a default).
+///
+/// This is the **linear-scan reference** for the grant order: O(n) per
+/// grant, but definitionally correct. Re-decision schedulers that do
+/// not override [`Scheduler::on_release`] run it directly; key-based
+/// schedulers take the resource's indexed-heap fast path, whose output
+/// is property-tested byte-identical to this scan.
 pub fn default_grants(view: &SchedView, grants: &mut Vec<usize>) {
     let mut free = view.free;
     loop {
@@ -629,6 +695,37 @@ mod tests {
             expected_done: started + occ,
             seq,
         }
+    }
+
+    #[test]
+    fn queue_key_orders_by_total_cmp_then_seq() {
+        let qk = |key, seq| QueueKey { key, seq };
+        // primary: the float key under total_cmp
+        assert!(qk(1.0, 9) < qk(2.0, 0));
+        assert!(qk(-0.0, 9) < qk(0.0, 0), "total_cmp: -0.0 < +0.0");
+        assert!(qk(f64::NEG_INFINITY, 0) < qk(f64::MIN, 0));
+        assert!(qk(f64::INFINITY, 0) < qk(f64::NAN, 0), "NaN ranks last");
+        // tie-break: enqueue sequence (FCFS)
+        assert!(qk(5.0, 1) < qk(5.0, 2));
+        let same = qk(5.0, 1);
+        assert_eq!(same, qk(5.0, 1));
+        assert_ne!(same, qk(5.0, 2), "seq makes the order strict");
+        // Ord/PartialOrd agree (the heap and earlier_waiter share one rule)
+        assert_eq!(
+            qk(3.0, 4).partial_cmp(&qk(3.0, 5)),
+            Some(std::cmp::Ordering::Less)
+        );
+    }
+
+    #[test]
+    fn earlier_waiter_is_queue_key_order() {
+        let a = wv(1.0, 1.0, 1, 2.0, 0);
+        let b = wv(1.0, 1.0, 1, 2.0, 1);
+        let c = wv(1.0, 1.0, 1, 1.0, 2);
+        assert!(earlier_waiter(&a, &b), "key tie falls back to seq");
+        assert!(!earlier_waiter(&b, &a));
+        assert!(earlier_waiter(&c, &a), "lower key wins regardless of seq");
+        assert_eq!(a.queue_key(), QueueKey { key: 2.0, seq: 0 });
     }
 
     #[test]

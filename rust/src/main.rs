@@ -13,12 +13,16 @@
 //!                  [--arrival MODE] [--seeds N] [--seed0 S] [--jobs N]
 //!                  [--capacities 2,4,8] [--factors 0.5,1,2]
 //!                  [--schedulers fifo,sjf,edf:slack_per_class=900]
+//!                  [--schedulers-training LIST] [--schedulers-compute LIST]
 //!                  [--triggers never,drift_threshold:threshold=0.05]
 //!                  [--traces] [--trace-dir DIR] [--cpu] [--export CSV]
 //!                  — parallel replication/grid engine over capacities ×
 //!                  load factors × operational strategies (per-cell tsdb
-//!                  recording off unless --traces; --trace-dir captures
-//!                  and dumps one binary event trace per cell)
+//!                  recording off unless --traces; --trace-dir streams
+//!                  one binary event trace per cell to disk as it runs,
+//!                  so captures stay memory-flat; the per-cluster
+//!                  scheduler lists override the shared --schedulers
+//!                  axis for the training/compute cluster respectively)
 //!   trace export   --params PARAMS.json [--config CFG.json] [--days D]
 //!                  [--arrival MODE] [--seed S] [--scheduler SPEC]
 //!                  [--out T.pst] [--jsonl T.jsonl] [--cpu] — run with
@@ -50,7 +54,7 @@ use pipesim::des::DAY;
 use pipesim::empirical::{AnalyticsDb, GroundTruth};
 use pipesim::error::Error;
 use pipesim::runtime::Runtime;
-use pipesim::trace::{Trace, TraceWorkload};
+use pipesim::trace::{StreamingPstSink, Trace, TraceWorkload};
 use pipesim::util::Args;
 use pipesim::Result;
 
@@ -205,16 +209,18 @@ fn main() -> Result<()> {
             let capacities = args.get_opt("capacities");
             let factors = args.get_opt("factors");
             let schedulers = args.get_opt("schedulers");
+            let schedulers_training = args.get_opt("schedulers-training");
+            let schedulers_compute = args.get_opt("schedulers-compute");
             let triggers = args.get_opt("triggers");
             let cpu = args.flag("cpu");
             // traces off by default: a sweep keeps every cell's result in
             // memory until aggregation, and nothing downstream reads the
             // per-cell trace stores unless the user asks for them
             base.record_traces = args.flag("traces");
-            // --trace-dir: capture the event-level trace of every cell
-            // and dump one binary trace file per cell after the run
+            // --trace-dir: stream every cell's event-level trace to its
+            // own .pst file while the cell runs (StreamingPstSink per
+            // cell — the capture never accumulates in memory)
             let trace_dir = args.get_opt("trace-dir").map(PathBuf::from);
-            base.capture_trace = trace_dir.is_some();
             let export = args.get_opt("export");
             args.reject_unknown()?;
 
@@ -244,77 +250,118 @@ fn main() -> Result<()> {
             };
             // operational strategies are sweep axes like capacity/load:
             // a spec list is `name[:key=value...]` items, comma-separated
-            let scheds: Vec<Option<StrategySpec>> = match &schedulers {
-                Some(list) => list
-                    .split(',')
-                    .map(|v| StrategySpec::parse(v.trim()).map(Some))
-                    .collect::<Result<_>>()?,
-                None => vec![None],
+            let spec_axis = |list: &Option<String>| -> Result<Vec<Option<StrategySpec>>> {
+                match list {
+                    Some(list) => list
+                        .split(',')
+                        .map(|v| StrategySpec::parse(v.trim()).map(Some))
+                        .collect(),
+                    None => Ok(vec![None]),
+                }
             };
-            let trigs: Vec<Option<StrategySpec>> = match &triggers {
-                Some(list) => list
-                    .split(',')
-                    .map(|v| StrategySpec::parse(v.trim()).map(Some))
-                    .collect::<Result<_>>()?,
-                None => vec![None],
-            };
+            let scheds = spec_axis(&schedulers)?;
+            // per-cluster scheduler axes (override the shared spec for
+            // one cluster only — `infra.scheduler_training/_compute`)
+            let scheds_t = spec_axis(&schedulers_training)?;
+            let scheds_c = spec_axis(&schedulers_compute)?;
+            let trigs = spec_axis(&triggers)?;
             if triggers.is_some() && !base.runtime_view.enabled {
                 eprintln!("triggers: enabling the runtime view (defaults)");
                 base.runtime_view.enabled = true;
             }
             let rt = load_runtime(cpu);
             let mut sweep = Sweep::new(params).with_runtime(rt).jobs(jobs);
-            for cap in &caps {
-                for fac in &facs {
-                    for sched in &scheds {
-                        for trig in &trigs {
-                            let mut cfg = base.clone();
-                            let mut name = base.name.clone();
-                            if let Some(c) = cap {
-                                cfg.infra.training_capacity = *c;
-                                name.push_str(&format!("-cap{c}"));
+            // the grid is the cartesian product of the axes, built by a
+            // fold: each axis multiplies the current cell list by its
+            // variants, each variant a labeled config edit (None = keep
+            // the base value, no label suffix). Earlier axes vary
+            // slowest — the same cell order the old nested loops
+            // produced. Adding an axis is one `axes.push`.
+            type Edit = Box<dyn Fn(&mut ExperimentConfig, &mut String)>;
+            fn axis<T: Clone + 'static>(
+                variants: &[Option<T>],
+                apply: impl Fn(&T, &mut ExperimentConfig, &mut String) + Copy + 'static,
+            ) -> Vec<Edit> {
+                variants
+                    .iter()
+                    .map(|v| -> Edit {
+                        let v = v.clone();
+                        Box::new(move |cfg, name| {
+                            if let Some(v) = &v {
+                                apply(v, cfg, name);
                             }
-                            if let Some(f) = fac {
-                                cfg.interarrival_factor = *f;
-                                name.push_str(&format!("-x{f}"));
-                            }
-                            if let Some(s) = sched {
-                                cfg.infra.scheduler = s.clone();
-                                name.push_str(&format!("-{}", s.label()));
-                            }
-                            if let Some(tr) = trig {
-                                cfg.runtime_view.trigger = tr.clone();
-                                name.push_str(&format!("-trig:{}", tr.label()));
-                            }
-                            cfg.name = name;
-                            sweep.add_replications(&cfg, seed0, seeds);
-                        }
+                        })
+                    })
+                    .collect()
+            }
+            let axes: Vec<Vec<Edit>> = vec![
+                axis(&caps, |c, cfg, name| {
+                    cfg.infra.training_capacity = *c;
+                    name.push_str(&format!("-cap{c}"));
+                }),
+                axis(&facs, |f, cfg, name| {
+                    cfg.interarrival_factor = *f;
+                    name.push_str(&format!("-x{f}"));
+                }),
+                axis(&scheds, |s, cfg, name| {
+                    cfg.infra.scheduler = s.clone();
+                    name.push_str(&format!("-{}", s.label()));
+                }),
+                axis(&scheds_t, |s, cfg, name| {
+                    cfg.infra.scheduler_training = Some(s.clone());
+                    name.push_str(&format!("-tr:{}", s.label()));
+                }),
+                axis(&scheds_c, |s, cfg, name| {
+                    cfg.infra.scheduler_compute = Some(s.clone());
+                    name.push_str(&format!("-co:{}", s.label()));
+                }),
+                axis(&trigs, |tr, cfg, name| {
+                    cfg.runtime_view.trigger = tr.clone();
+                    name.push_str(&format!("-trig:{}", tr.label()));
+                }),
+            ];
+            let mut grid = vec![(base.clone(), base.name.clone())];
+            for variants in &axes {
+                let mut next = Vec::with_capacity(grid.len() * variants.len());
+                for (cfg, name) in &grid {
+                    for edit in variants {
+                        let mut cfg = cfg.clone();
+                        let mut name = name.clone();
+                        edit(&mut cfg, &mut name);
+                        next.push((cfg, name));
                     }
                 }
+                grid = next;
             }
-            eprintln!(
-                "sweep: {} cells ({} groups x {seeds} seeds)",
-                sweep.len(),
-                caps.len() * facs.len() * scheds.len() * trigs.len()
-            );
-            let mut out = sweep.run()?;
+            let groups = grid.len();
+            for (mut cfg, name) in grid {
+                cfg.name = name;
+                sweep.add_replications(&cfg, seed0, seeds);
+            }
+            let cell_count = sweep.len();
+            eprintln!("sweep: {cell_count} cells ({groups} groups x {seeds} seeds)");
+            if let Some(dir) = &trace_dir {
+                // one streaming sink per cell: each cell's events go
+                // straight to its .pst file from the worker thread, so
+                // a year-scale sweep capture never lives in memory
+                std::fs::create_dir_all(dir)?;
+                let dir = dir.clone();
+                sweep = sweep.with_cell_sinks(Box::new(move |i, cfg| {
+                    let file = dir
+                        .join(format!("cell{i:04}-{}-s{}.pst", sanitize(&cfg.name), cfg.seed));
+                    let sink: Box<dyn pipesim::trace::TraceSink> =
+                        Box::new(StreamingPstSink::create(file, &cfg.trace_meta())?);
+                    Ok(sink)
+                }));
+            }
+            let out = sweep.run()?;
             print!("{}", out.table());
             if let Some(path) = export {
                 std::fs::write(&path, out.to_csv())?;
                 println!("cells -> {path}");
             }
             if let Some(dir) = &trace_dir {
-                std::fs::create_dir_all(dir)?;
-                let mut written = 0usize;
-                for (i, r) in out.results.iter_mut().enumerate() {
-                    if let Some(trace) = r.trace.take() {
-                        let file =
-                            dir.join(format!("cell{i:04}-{}-s{}.pst", sanitize(&r.name), r.seed));
-                        trace.save(&file)?;
-                        written += 1;
-                    }
-                }
-                println!("{written} event traces -> {}", dir.display());
+                println!("{cell_count} event traces (streamed) -> {}", dir.display());
             }
         }
 

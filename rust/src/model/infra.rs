@@ -94,9 +94,18 @@ pub struct InfraConfig {
     /// same cluster, which is what gives backfill schedulers
     /// (`easy_backfill`) a blocked head-of-queue to reserve around.
     pub train_slots: usize,
-    /// Scheduling strategy for both clusters (each cluster builds its
-    /// own instance from the spec — see `coordinator::strategy`).
+    /// Shared scheduling strategy for both clusters (each cluster builds
+    /// its own instance from the spec — see `coordinator::strategy`).
+    /// Per-cluster overrides below take precedence where set.
     pub scheduler: StrategySpec,
+    /// Training-cluster override of [`InfraConfig::scheduler`]
+    /// (`None` → the shared spec). Backfill and gang-scheduling
+    /// strategies mainly matter here, so a split lets e.g.
+    /// `easy_backfill` drive training while compute stays FIFO.
+    pub scheduler_training: Option<StrategySpec>,
+    /// Compute-cluster override of [`InfraConfig::scheduler`]
+    /// (`None` → the shared spec).
+    pub scheduler_compute: Option<StrategySpec>,
     pub store: StoreConfig,
 }
 
@@ -107,6 +116,8 @@ impl Default for InfraConfig {
             compute_capacity: 20,
             train_slots: 1,
             scheduler: StrategySpec::new("fifo"),
+            scheduler_training: None,
+            scheduler_compute: None,
             store: StoreConfig::default(),
         }
     }
@@ -118,6 +129,31 @@ impl InfraConfig {
             ResourceKind::Training => self.training_capacity,
             ResourceKind::Compute => self.compute_capacity,
         }
+    }
+
+    /// The scheduler spec that drives `kind`'s cluster: the per-cluster
+    /// override when set, else the shared [`InfraConfig::scheduler`].
+    pub fn scheduler_for(&self, kind: ResourceKind) -> &StrategySpec {
+        let over = match kind {
+            ResourceKind::Training => &self.scheduler_training,
+            ResourceKind::Compute => &self.scheduler_compute,
+        };
+        over.as_ref().unwrap_or(&self.scheduler)
+    }
+
+    /// Compact strategy label for reports and trace metadata: the shared
+    /// spec's label when no override is set (pre-split behavior, so
+    /// existing trace files stay byte-identical), else both resolved
+    /// labels.
+    pub fn scheduler_label(&self) -> String {
+        if self.scheduler_training.is_none() && self.scheduler_compute.is_none() {
+            return self.scheduler.label();
+        }
+        format!(
+            "training={}|compute={}",
+            self.scheduler_for(ResourceKind::Training).label(),
+            self.scheduler_for(ResourceKind::Compute).label()
+        )
     }
 
     /// Slots a task occupies on its cluster.
@@ -177,5 +213,41 @@ mod tests {
             InfraConfig::from_json(&crate::util::Json::parse(&c.to_json().to_string()).unwrap())
                 .unwrap();
         assert_eq!(c, back);
+    }
+
+    #[test]
+    fn per_resource_specs_resolve_and_label() {
+        let mut c = InfraConfig::default();
+        // no overrides: both clusters share the spec, label is pre-split
+        assert_eq!(c.scheduler_for(ResourceKind::Training).name, "fifo");
+        assert_eq!(c.scheduler_for(ResourceKind::Compute).name, "fifo");
+        assert_eq!(c.scheduler_label(), "fifo");
+        // training override: compute still follows the shared spec
+        c.scheduler_training = Some(StrategySpec::new("easy_backfill"));
+        assert_eq!(
+            c.scheduler_for(ResourceKind::Training).name,
+            "easy_backfill"
+        );
+        assert_eq!(c.scheduler_for(ResourceKind::Compute).name, "fifo");
+        assert_eq!(c.scheduler_label(), "training=easy_backfill|compute=fifo");
+        c.scheduler_compute = Some(StrategySpec::new("sjf"));
+        assert_eq!(c.scheduler_label(), "training=easy_backfill|compute=sjf");
+    }
+
+    #[test]
+    fn per_resource_specs_roundtrip_json_and_stay_optional() {
+        use crate::util::jsonio::JsonIo;
+        let mut c = InfraConfig::default();
+        c.scheduler_training = Some(StrategySpec::new("priority"));
+        c.scheduler_compute = Some(StrategySpec::new("edf").with("slack_per_class", 60.0));
+        let back =
+            InfraConfig::from_json(&crate::util::Json::parse(&c.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(c, back);
+        // the default emits no override keys, so pre-split configs (and
+        // the config JSON embedded in existing trace files) are unchanged
+        let plain = InfraConfig::default().to_json().to_string();
+        assert!(!plain.contains("scheduler_training"), "{plain}");
+        assert!(!plain.contains("scheduler_compute"), "{plain}");
     }
 }

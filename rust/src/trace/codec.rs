@@ -1,7 +1,7 @@
 //! The binary trace format (`.pst`) and the JSON-lines export.
 //!
-//! Layout (all multi-byte integers little-endian; full spec in
-//! README.md § Trace format):
+//! Buffered layout, versions 1–2 (all multi-byte integers
+//! little-endian; full spec in README.md § Trace format):
 //!
 //! ```text
 //! magic      4 bytes  b"PSTR"
@@ -15,6 +15,24 @@
 //!            u8 kind tag
 //!            kind-specific fields (varints, string-table ids, f64 bits)
 //! ```
+//!
+//! Streamed layout, version 3 ([`STREAM_VERSION`], written by
+//! `trace::StreamingPstSink` — the memory-flat capture path):
+//!
+//! ```text
+//! magic      4 bytes  b"PSTR"
+//! version    u16      3
+//! reserved   u16      0
+//! events     records back-to-back, identical encoding to v2 — written
+//!            as they happen, with no count prefix (unknowable up front)
+//! footer     strtab + meta (layouts as above) + varint n_events
+//! tail       u64 footer byte offset + 4 bytes b"PSTF"
+//! ```
+//!
+//! A streamed reader seeks the fixed-size tail, parses the footer
+//! (string table, meta, event count), then decodes the record body —
+//! so the writer holds only the intern table and one record's scratch
+//! in memory, never the event stream.
 //!
 //! Design notes:
 //! * **Self-describing**: task/framework/resource names travel through
@@ -33,7 +51,11 @@
 //!   preemption stay byte-identical to version-1 files and remain
 //!   readable by older builds. A version-1 header with a version-2
 //!   record is rejected gracefully (a decode error naming the tag,
-//!   never a panic or a silent misread).
+//!   never a panic or a silent misread). Version 3 marks the streamed
+//!   footer-offset layout; only the streaming writer stamps it —
+//!   [`encode`] keeps stamping the lowest buffered version, so
+//!   re-encoding a decoded streamed trace yields a v1/v2 file with the
+//!   same logical content.
 
 use crate::error::{Error, Result};
 use crate::model::{Framework, ResourceKind, TaskType};
@@ -45,9 +67,19 @@ use super::{Trace, TraceEvent, TraceEventKind, TraceMeta};
 /// File magic: **P**ipe**S**im **TR**ace.
 pub const MAGIC: &[u8; 4] = b"PSTR";
 /// Newest binary format version this build writes and reads. The
-/// encoder stamps each file with the lowest version that can represent
-/// it (see [`needed_version`]); the decoder accepts `1..=FORMAT_VERSION`.
-pub const FORMAT_VERSION: u16 = 2;
+/// buffered encoder stamps each file with the lowest version that can
+/// represent it (see [`needed_version`]); the decoder accepts
+/// `1..=FORMAT_VERSION`, dispatching `STREAM_VERSION` files to the
+/// footer-offset reader.
+pub const FORMAT_VERSION: u16 = 3;
+/// The streamed footer-offset layout (see the module docs). Stamped
+/// only by `trace::StreamingPstSink`, which cannot know the event count
+/// — or whether preemption records will occur — up front.
+pub const STREAM_VERSION: u16 = 3;
+/// Trailing magic of a streamed file: the last 12 bytes are
+/// `u64 footer_offset ++ TAIL_MAGIC`. Its absence means the writer
+/// never finalized (crashed mid-run) — rejected loudly.
+pub const TAIL_MAGIC: &[u8; 4] = b"PSTF";
 
 // Event kind tags (u8). Append-only: reusing or reordering tags is a
 // format break; *appending* tags bumps FORMAT_VERSION and records the
@@ -91,22 +123,75 @@ pub fn needed_version(trace: &Trace) -> u16 {
     }
 }
 
-/// Serialize a trace to the binary format.
+/// Encode the meta block (shared by the buffered encoder and the
+/// streaming writer — both intern the meta strings *first*, so the two
+/// paths build their string tables in the same order).
+pub(crate) fn encode_meta(w: &mut ByteWriter, tab: &mut InternTable, meta: &TraceMeta) {
+    w.varint(tab.intern(&meta.name) as u64);
+    w.varint(meta.seed);
+    w.f64(meta.horizon);
+    w.varint(tab.intern(&meta.config_json) as u64);
+    w.varint(meta.extra.len() as u64);
+    for (k, v) in &meta.extra {
+        w.varint(tab.intern(k) as u64);
+        w.varint(tab.intern(v) as u64);
+    }
+}
+
+/// Decode the meta block previously written by [`encode_meta`].
+fn decode_meta(r: &mut ByteReader, names: &[String]) -> Result<TraceMeta> {
+    let name = lookup(names, r.varint()?)?.to_string();
+    let seed = r.varint()?;
+    let horizon = r.f64()?;
+    let config_json = lookup(names, r.varint()?)?.to_string();
+    // length prefixes are validated against the remaining input (an
+    // extra pair is >= 2 varint bytes), so a corrupt count can never
+    // drive an allocation beyond the file size
+    let n_extra = r.len_prefix_for(2)?;
+    let mut extra = Vec::with_capacity(n_extra);
+    for _ in 0..n_extra {
+        let k = lookup(names, r.varint()?)?.to_string();
+        let v = lookup(names, r.varint()?)?.to_string();
+        extra.push((k, v));
+    }
+    Ok(TraceMeta {
+        name,
+        seed,
+        horizon,
+        config_json,
+        extra,
+    })
+}
+
+/// Decode `n_events` XOR-delta event records — the one decode loop the
+/// buffered and streamed layouts share (replay digests hang off its
+/// exactness, so it exists once).
+fn decode_events(
+    r: &mut ByteReader,
+    names: &[String],
+    version: u16,
+    n_events: usize,
+) -> Result<Vec<TraceEvent>> {
+    let mut events = Vec::with_capacity(n_events);
+    let mut prev_bits = 0u64;
+    for _ in 0..n_events {
+        let bits = prev_bits ^ r.varint()?;
+        prev_bits = bits;
+        let t = f64::from_bits(bits);
+        let kind = decode_kind(r, names, version)?;
+        events.push(TraceEvent { t, kind });
+    }
+    Ok(events)
+}
+
+/// Serialize a trace to the buffered binary format (v1/v2).
 pub fn encode(trace: &Trace) -> Vec<u8> {
     let mut tab = InternTable::new();
     // meta + events intern strings as they serialize; the table is
     // complete once both bodies are encoded, then the file assembles as
     // header + table + bodies.
     let mut meta = ByteWriter::new();
-    meta.varint(tab.intern(&trace.meta.name) as u64);
-    meta.varint(trace.meta.seed);
-    meta.f64(trace.meta.horizon);
-    meta.varint(tab.intern(&trace.meta.config_json) as u64);
-    meta.varint(trace.meta.extra.len() as u64);
-    for (k, v) in &trace.meta.extra {
-        meta.varint(tab.intern(k) as u64);
-        meta.varint(tab.intern(v) as u64);
-    }
+    encode_meta(&mut meta, &mut tab, &trace.meta);
 
     let mut body = ByteWriter::new();
     body.varint(trace.events.len() as u64);
@@ -138,7 +223,7 @@ fn opt_fw(w: &mut ByteWriter, tab: &mut InternTable, fw: Option<Framework>) {
     }
 }
 
-fn encode_kind(w: &mut ByteWriter, tab: &mut InternTable, kind: &TraceEventKind) {
+pub(crate) fn encode_kind(w: &mut ByteWriter, tab: &mut InternTable, kind: &TraceEventKind) {
     match *kind {
         TraceEventKind::ArrivalGapDrawn { gap } => {
             w.u8(TAG_ARRIVAL_GAP);
@@ -286,47 +371,69 @@ fn encode_kind(w: &mut ByteWriter, tab: &mut InternTable, kind: &TraceEventKind)
 /// Parse a binary trace. The header is validated through the shared
 /// binio container-header helper, accepting versions
 /// `1..=FORMAT_VERSION`; anything newer (or not a trace) is an error.
+/// [`STREAM_VERSION`] files dispatch to the footer-offset reader; the
+/// decoded [`Trace`] is indistinguishable from a buffered capture of
+/// the same run.
 pub fn decode(bytes: &[u8]) -> Result<Trace> {
     let mut r = ByteReader::new(bytes);
     let version = r.check_header_range(MAGIC, 1, FORMAT_VERSION, "trace")?;
+    if version >= STREAM_VERSION {
+        return decode_streamed(bytes, version);
+    }
     let names = InternTable::read(&mut r)?;
+    let meta = decode_meta(&mut r, &names)?;
 
-    let name = lookup(&names, r.varint()?)?.to_string();
-    let seed = r.varint()?;
-    let horizon = r.f64()?;
-    let config_json = lookup(&names, r.varint()?)?.to_string();
-    // length prefixes are validated against the remaining input (an
-    // extra pair is >= 2 varint bytes, an event record >= 3 bytes), so a
-    // corrupt count can never drive an allocation beyond the file size
-    let n_extra = r.len_prefix_for(2)?;
-    let mut extra = Vec::with_capacity(n_extra);
-    for _ in 0..n_extra {
-        let k = lookup(&names, r.varint()?)?.to_string();
-        let v = lookup(&names, r.varint()?)?.to_string();
-        extra.push((k, v));
-    }
-
+    // an event record costs >= 3 bytes (time varint + tag + payload)
     let n_events = r.len_prefix_for(3)?;
-    let mut events = Vec::with_capacity(n_events);
-    let mut prev_bits = 0u64;
-    for _ in 0..n_events {
-        let bits = prev_bits ^ r.varint()?;
-        prev_bits = bits;
-        let t = f64::from_bits(bits);
-        let kind = decode_kind(&mut r, &names, version)?;
-        events.push(TraceEvent { t, kind });
-    }
+    let events = decode_events(&mut r, &names, version, n_events)?;
     r.expect_eof("trace")?;
-    Ok(Trace {
-        meta: TraceMeta {
-            name,
-            seed,
-            horizon,
-            config_json,
-            extra,
-        },
-        events,
-    })
+    Ok(Trace { meta, events })
+}
+
+/// Parse the streamed footer-offset layout: fixed-size tail → footer
+/// (string table, meta, event count) → record body. Truncated files
+/// (a writer that died before finalizing) fail on the tail magic.
+fn decode_streamed(bytes: &[u8], version: u16) -> Result<Trace> {
+    const HEADER: usize = 8; // magic + version + reserved
+    const TAIL: usize = 12; // u64 footer offset + tail magic
+    if bytes.len() < HEADER + TAIL {
+        return Err(Error::Other(format!(
+            "trace: streamed file of {} bytes is shorter than header + tail",
+            bytes.len()
+        )));
+    }
+    let tail = &bytes[bytes.len() - TAIL..];
+    if &tail[8..] != TAIL_MAGIC {
+        return Err(Error::Other(
+            "trace: streamed file has no footer tail (writer never finalized?)".into(),
+        ));
+    }
+    let mut tr = ByteReader::new(tail);
+    let off = usize::try_from(tr.u64()?)
+        .map_err(|_| Error::Other("trace: footer offset exceeds usize".into()))?;
+    if off < HEADER || off > bytes.len() - TAIL {
+        return Err(Error::Other(format!(
+            "trace: footer offset {off} outside the file body ({} bytes)",
+            bytes.len()
+        )));
+    }
+    // footer: string table + meta + event count
+    let mut f = ByteReader::new(&bytes[off..bytes.len() - TAIL]);
+    let names = InternTable::read(&mut f)?;
+    let meta = decode_meta(&mut f, &names)?;
+    let n_events = f.len_prefix()?;
+    f.expect_eof("trace footer")?;
+    // body: exactly n_events records between header and footer
+    let mut b = ByteReader::new(&bytes[HEADER..off]);
+    if n_events.saturating_mul(3) > b.remaining() {
+        return Err(Error::Other(format!(
+            "trace: footer claims {n_events} events, body holds {} bytes",
+            b.remaining()
+        )));
+    }
+    let events = decode_events(&mut b, &names, version, n_events)?;
+    b.expect_eof("trace events")?;
+    Ok(Trace { meta, events })
 }
 
 /// Resolve a string-table id, failing loudly on out-of-range ids.
@@ -980,10 +1087,17 @@ mod tests {
         );
         // and a future version is refused up front
         let mut future = encode(&t);
-        future[4] = 3;
+        future[4] = FORMAT_VERSION as u8 + 1;
         future[5] = 0;
         let err = decode(&future).unwrap_err().to_string();
         assert!(err.contains("this build reads"), "{err}");
+        // a v3 stamp routes to the streamed reader, which demands the
+        // footer tail — a relabeled buffered file is rejected loudly
+        let mut relabeled = encode(&t);
+        relabeled[4] = STREAM_VERSION as u8;
+        relabeled[5] = 0;
+        let err = decode(&relabeled).unwrap_err().to_string();
+        assert!(err.contains("footer"), "{err}");
     }
 
     #[test]

@@ -10,7 +10,8 @@
 //!
 //! * the simulation core emits into a pluggable [`TraceSink`] behind the
 //!   `ExperimentConfig::capture_trace` flag ([`NullSink`] keeps the hot
-//!   path allocation-free when capture is off);
+//!   path allocation-free when capture is off; [`StreamingPstSink`]
+//!   writes the binary format incrementally for memory-flat captures);
 //! * [`codec`] defines the compact self-describing binary format (magic +
 //!   version header, interned string table, delta-encoded timestamps)
 //!   plus a JSON-lines export for ad-hoc exploration;
@@ -23,8 +24,10 @@
 
 pub mod codec;
 pub mod replay;
+pub mod stream;
 
 pub use replay::TraceWorkload;
+pub use stream::StreamingPstSink;
 
 use crate::des::SimTime;
 use crate::model::{Framework, ResourceKind, TaskType};
@@ -207,11 +210,12 @@ impl TraceEventKind {
 /// year-scale run emits hundreds of millions of events. The built-in
 /// sinks are [`NullSink`] (the placeholder when capture is off — every
 /// emission site is additionally gated on the capture flag, so it
-/// receives no traffic in practice) and [`MemorySink`] (collect in
-/// memory for export). The trait is the seam for streaming sinks that
-/// write the binary format incrementally and return an empty vec from
-/// [`TraceSink::drain`]; an injection hook on `Experiment` is a noted
-/// ROADMAP follow-up.
+/// receives no traffic in practice), [`MemorySink`] (collect in memory
+/// for export), and [`StreamingPstSink`] (write the binary format
+/// incrementally — memory-flat captures; inject via
+/// `Experiment::with_sink` or `sweep --trace-dir`). Streaming sinks
+/// return an empty vec from [`TraceSink::drain`] and finalize their
+/// output in [`TraceSink::finish`].
 pub trait TraceSink: Send {
     /// Observe one event. Called on the simulation hot path — must not
     /// panic and should not allocate per call.
@@ -221,6 +225,14 @@ pub trait TraceSink: Send {
     /// elsewhere return an empty vec (the default).
     fn drain(&mut self) -> Vec<TraceEvent> {
         Vec::new()
+    }
+
+    /// Called exactly once by the simulation after the final event,
+    /// before the result is assembled. Streaming sinks finalize here
+    /// (write footers, flush, surface latched IO errors); the default
+    /// is a no-op.
+    fn finish(&mut self) -> crate::Result<()> {
+        Ok(())
     }
 }
 

@@ -1,0 +1,351 @@
+//! File-backed incremental `.pst` writer: memory-flat captures.
+//!
+//! [`MemorySink`](super::MemorySink) buffers every event until the run
+//! ends — fine for a day, fatal for the year-scale horizons the paper's
+//! operational studies need (hundreds of millions of events).
+//! [`StreamingPstSink`] instead writes each record to disk the moment it
+//! is emitted, in the exact encoding of the buffered codec, and
+//! finalizes the string table + metadata in a *footer* when the run
+//! completes (the streamed layout, format version
+//! [`STREAM_VERSION`](super::codec::STREAM_VERSION) — see
+//! [`codec`](super::codec)). Resident state is O(1) in trace length:
+//! the intern table (a few dozen task/framework/resource names plus the
+//! metadata strings), one record's encode scratch, and the `BufWriter`
+//! block — a bound the `bench_trace` counting-allocator guard enforces.
+//!
+//! Inject one per run via `Experiment::with_sink` (capture turns on,
+//! the sink drains empty, so the result carries metadata but no
+//! buffered events), or let `sweep --trace-dir` construct one per cell.
+//! The metadata must be supplied up front — build it with
+//! `ExperimentConfig::trace_meta()`, the same constructor the in-memory
+//! capture path uses, so a streamed file and a buffered capture of the
+//! same `(config, seed)` decode to identical [`Trace`](super::Trace)s.
+//!
+//! IO errors on the hot path are *latched*, not panicked: `record` is
+//! infallible by contract, so the first failure stops further writes
+//! and surfaces from [`TraceSink::finish`] at end of run.
+//!
+//! The footer is written **only** by `finish` — never on drop. A sink
+//! abandoned mid-run (the simulation errored, a sweep worker
+//! unwound) leaves a file without the tail, which the decoder rejects
+//! loudly; a partial capture can never masquerade as a complete one.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::binio::{ByteWriter, InternTable};
+
+use super::codec::{encode_kind, encode_meta, MAGIC, STREAM_VERSION, TAIL_MAGIC};
+use super::{TraceEvent, TraceMeta, TraceSink};
+
+/// Header bytes preceding the record stream (magic + version +
+/// reserved) — also the byte offset of the first record.
+const HEADER_BYTES: u64 = 8;
+
+/// A [`TraceSink`] that streams the binary trace format to a file as
+/// events arrive. See the module docs for the layout and the O(1)
+/// memory contract.
+pub struct StreamingPstSink {
+    path: PathBuf,
+    out: Option<BufWriter<File>>,
+    tab: InternTable,
+    /// Meta block encoded at construction (interned first, mirroring
+    /// the buffered encoder's table order); flushed into the footer.
+    meta: Vec<u8>,
+    /// Per-record encode scratch, reused — the only hot-path buffer.
+    scratch: ByteWriter,
+    prev_bits: u64,
+    events: u64,
+    /// Record-stream bytes written so far (the footer offset is
+    /// `HEADER_BYTES + body_bytes`).
+    body_bytes: u64,
+    /// First IO error, latched; surfaced by [`TraceSink::finish`].
+    err: Option<String>,
+    finished: bool,
+}
+
+impl StreamingPstSink {
+    /// Create `path` (truncating any existing file) and write the
+    /// streamed-layout header. `meta` is everything the footer will
+    /// carry besides the event count — pass
+    /// `ExperimentConfig::trace_meta()` so streamed and buffered
+    /// captures of the same run are interchangeable.
+    pub fn create(path: impl Into<PathBuf>, meta: &TraceMeta) -> Result<Self> {
+        let path = path.into();
+        let file = File::create(&path)
+            .map_err(|e| Error::Other(format!("creating trace {}: {e}", path.display())))?;
+        let mut out = BufWriter::new(file);
+        let mut head = ByteWriter::new();
+        head.header(MAGIC, STREAM_VERSION);
+        debug_assert_eq!(head.len() as u64, HEADER_BYTES);
+        out.write_all(head.as_slice())
+            .map_err(|e| Error::Other(format!("writing trace {}: {e}", path.display())))?;
+        let mut tab = InternTable::new();
+        let mut mw = ByteWriter::new();
+        encode_meta(&mut mw, &mut tab, meta);
+        Ok(StreamingPstSink {
+            path,
+            out: Some(out),
+            tab,
+            meta: mw.into_bytes(),
+            scratch: ByteWriter::new(),
+            prev_bits: 0,
+            events: 0,
+            body_bytes: 0,
+            err: None,
+            finished: false,
+        })
+    }
+
+    /// The file being written.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Records streamed so far.
+    pub fn events_written(&self) -> u64 {
+        self.events
+    }
+
+    /// Write the footer (string table + meta + event count) and the
+    /// fixed-size tail, then flush. Idempotent; invoked by
+    /// [`TraceSink::finish`] at end of run, which is where a latched
+    /// mid-run IO error finally surfaces. Deliberately *not* run on
+    /// drop: only a run that reached its orderly end may stamp the
+    /// tail that marks the capture complete.
+    fn close(&mut self) -> Result<()> {
+        if self.finished {
+            return Ok(());
+        }
+        self.finished = true;
+        let mut out = self.out.take().expect("sink open until first close");
+        if let Some(e) = self.err.take() {
+            return Err(Error::Other(e));
+        }
+        let mut f = ByteWriter::new();
+        self.tab.write(&mut f);
+        f.bytes(&self.meta);
+        f.varint(self.events);
+        f.u64(HEADER_BYTES + self.body_bytes);
+        f.bytes(TAIL_MAGIC);
+        out.write_all(f.as_slice())
+            .and_then(|()| out.flush())
+            .map_err(|e| Error::Other(format!("finalizing trace {}: {e}", self.path.display())))
+    }
+}
+
+impl TraceSink for StreamingPstSink {
+    fn record(&mut self, ev: &TraceEvent) {
+        if self.err.is_some() || self.finished {
+            return;
+        }
+        let bits = ev.t.to_bits();
+        self.scratch.clear();
+        self.scratch.varint(bits ^ self.prev_bits);
+        encode_kind(&mut self.scratch, &mut self.tab, &ev.kind);
+        self.prev_bits = bits;
+        self.events += 1;
+        let out = self.out.as_mut().expect("sink open while recording");
+        match out.write_all(self.scratch.as_slice()) {
+            Ok(()) => self.body_bytes += self.scratch.len() as u64,
+            Err(e) => {
+                self.err = Some(format!(
+                    "streaming trace {}: {e} (after {} events)",
+                    self.path.display(),
+                    self.events
+                ));
+            }
+        }
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.close()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Trace, TraceEventKind};
+    use super::*;
+    use crate::model::{Framework, ResourceKind, TaskType};
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("pipesim_stream_{tag}_{}.pst", std::process::id()))
+    }
+
+    fn meta() -> TraceMeta {
+        TraceMeta {
+            name: "stream-test".into(),
+            seed: 7,
+            horizon: 1000.0,
+            config_json: r#"{"name":"stream-test"}"#.into(),
+            extra: vec![("scheduler".into(), "fifo".into())],
+        }
+    }
+
+    fn sample_events() -> Vec<TraceEvent> {
+        let e = |t, kind| TraceEvent { t, kind };
+        vec![
+            e(0.0, TraceEventKind::ArrivalGapDrawn { gap: 1.0 / 3.0 }),
+            e(
+                1.0 / 3.0,
+                TraceEventKind::PipelineArrival {
+                    pid: 0,
+                    framework: Framework::TensorFlow,
+                    n_tasks: 4,
+                    priority: 2.0,
+                    retrain_of: None,
+                },
+            ),
+            e(
+                0.5,
+                TraceEventKind::TaskQueued {
+                    pid: 0,
+                    task: TaskType::Train,
+                    resource: ResourceKind::Training,
+                },
+            ),
+            e(
+                9.0,
+                TraceEventKind::TaskPreempted {
+                    pid: 0,
+                    task: TaskType::Train,
+                    resource: ResourceKind::Training,
+                    by: 1,
+                    remaining: 4.25,
+                },
+            ),
+            e(
+                12.0,
+                TraceEventKind::PipelineDone {
+                    pid: 0,
+                    makespan: 11.666_7,
+                    total_wait: 3.0,
+                    truncated: false,
+                },
+            ),
+        ]
+    }
+
+    #[test]
+    fn streamed_file_decodes_to_the_logical_trace() {
+        let path = tmp("roundtrip");
+        let mut sink = StreamingPstSink::create(&path, &meta()).unwrap();
+        for ev in sample_events() {
+            sink.record(&ev);
+        }
+        assert_eq!(sink.events_written(), 5);
+        assert_eq!(sink.path(), path.as_path());
+        sink.finish().unwrap();
+        // finish is idempotent
+        sink.finish().unwrap();
+        let loaded = Trace::load(&path).unwrap();
+        assert_eq!(loaded.meta, meta());
+        assert_eq!(loaded.events, sample_events());
+        // the streamed file stamps the streamed version on the wire
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(
+            u16::from_le_bytes([bytes[4], bytes[5]]),
+            STREAM_VERSION
+        );
+        // ... while re-encoding the decoded trace yields a buffered file
+        // with the same logical content (lowest sufficient version)
+        let rebuf = Trace::from_bytes(&loaded.to_bytes()).unwrap();
+        assert_eq!(rebuf, loaded);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_stream_roundtrips() {
+        let path = tmp("empty");
+        let mut sink = StreamingPstSink::create(&path, &meta()).unwrap();
+        sink.finish().unwrap();
+        let loaded = Trace::load(&path).unwrap();
+        assert!(loaded.is_empty());
+        assert_eq!(loaded.meta, meta());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn abandoned_sink_leaves_an_unfinalized_file_that_fails_loudly() {
+        // a sink dropped without finish (the run errored or unwound)
+        // must NOT stamp the completion tail: a partial capture may
+        // never decode as a complete one
+        let path = tmp("abandoned");
+        let mut sink = StreamingPstSink::create(&path, &meta()).unwrap();
+        for ev in sample_events() {
+            sink.record(&ev);
+        }
+        drop(sink);
+        let err = Trace::load(&path).unwrap_err();
+        assert!(err.to_string().contains("footer"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_streamed_files_fail_loudly() {
+        let path = tmp("trunc");
+        let mut sink = StreamingPstSink::create(&path, &meta()).unwrap();
+        for ev in sample_events() {
+            sink.record(&ev);
+        }
+        sink.finish().unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        // chop the tail: "writer never finalized"
+        let err = Trace::from_bytes(&bytes[..bytes.len() - 12]).unwrap_err();
+        assert!(err.to_string().contains("footer"), "{err}");
+        // chop mid-body: the tail (and with it the footer) is gone too
+        assert!(Trace::from_bytes(&bytes[..20]).is_err());
+        // corrupt the footer offset past the tail
+        let mut bad = bytes.clone();
+        let off_pos = bad.len() - 12;
+        bad[off_pos..off_pos + 8].copy_from_slice(&(u64::MAX).to_le_bytes());
+        let err = Trace::from_bytes(&bad).unwrap_err();
+        assert!(err.to_string().contains("offset"), "{err}");
+        // inflate the event count in the footer: body can't hold them.
+        // Rebuild the footer with a huge count by appending a fresh tail
+        // over a shortened body window — cheaper: flip the count varint.
+        // The count (5) is the last footer byte before the tail.
+        let mut bad = bytes.clone();
+        let count_pos = bad.len() - 13;
+        assert_eq!(bad[count_pos], 5, "single-byte varint count");
+        bad[count_pos] = 0x7f; // claims 127 events
+        let err = Trace::from_bytes(&bad).unwrap_err();
+        assert!(err.to_string().contains("claims"), "{err}");
+    }
+
+    #[test]
+    fn create_rejects_unwritable_paths() {
+        // a directory path cannot be created as a file
+        let dir = std::env::temp_dir();
+        assert!(StreamingPstSink::create(&dir, &meta()).is_err());
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn record_io_errors_latch_and_surface_at_finish() {
+        // /dev/full accepts opens but fails every write with ENOSPC:
+        // the first BufWriter flush inside record() trips it, the error
+        // latches (later records are dropped, the counter freezes), and
+        // finish() surfaces it instead of stamping a completion tail
+        let mut sink = StreamingPstSink::create("/dev/full", &meta()).unwrap();
+        let evs = sample_events();
+        // push well past the BufWriter block size to force flushes
+        for _ in 0..2000 {
+            for ev in &evs {
+                sink.record(ev);
+            }
+        }
+        let at_latch = sink.events_written();
+        assert!(at_latch < 10_000, "no write ever failed on /dev/full");
+        sink.record(&evs[0]);
+        assert_eq!(sink.events_written(), at_latch, "post-latch record not dropped");
+        let err = sink.finish().unwrap_err();
+        assert!(err.to_string().contains("streaming trace"), "{err}");
+        // the error was consumed; a later finish is the idempotent no-op
+        sink.finish().unwrap();
+    }
+}

@@ -28,6 +28,19 @@ impl ByteWriter {
         self.buf
     }
 
+    /// The bytes written so far, without consuming the writer — the
+    /// streaming path copies each encoded record out and then
+    /// [`ByteWriter::clear`]s the scratch.
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// Reset to empty, keeping the allocation (bounded-buffer reuse on
+    /// hot paths).
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
     pub fn len(&self) -> usize {
         self.buf.len()
     }
@@ -41,6 +54,12 @@ impl ByteWriter {
     }
 
     pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Fixed-width little-endian u64 (for offsets that must be written
+    /// before their value is known to fit a varint's variable width).
+    pub fn u64(&mut self, v: u64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
@@ -159,6 +178,14 @@ impl<'a> ByteReader<'a> {
             )));
         }
         Ok(n)
+    }
+
+    /// Fixed-width little-endian u64, paired with [`ByteWriter::u64`].
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
     }
 
     pub fn f64(&mut self) -> Result<f64> {
@@ -353,15 +380,35 @@ mod tests {
         let mut w = ByteWriter::new();
         w.u8(7);
         w.u16(0xbeef);
+        w.u64(0xdead_beef_cafe_f00d);
         w.str("héllo\nworld");
         w.str("");
         let bytes = w.into_bytes();
         let mut r = ByteReader::new(&bytes);
         assert_eq!(r.u8().unwrap(), 7);
         assert_eq!(r.u16().unwrap(), 0xbeef);
+        assert_eq!(r.u64().unwrap(), 0xdead_beef_cafe_f00d);
         assert_eq!(r.str().unwrap(), "héllo\nworld");
         assert_eq!(r.str().unwrap(), "");
         assert!(r.is_empty());
+        // u64 is fixed-width (8 bytes) regardless of value
+        let mut w = ByteWriter::new();
+        w.u64(1);
+        assert_eq!(w.len(), 8);
+        assert!(ByteReader::new(&w.into_bytes()[..7]).u64().is_err());
+    }
+
+    #[test]
+    fn clear_keeps_capacity_and_resets_content() {
+        let mut w = ByteWriter::new();
+        w.str("some scratch content");
+        assert!(!w.is_empty());
+        assert_eq!(w.as_slice().len(), w.len());
+        w.clear();
+        assert!(w.is_empty());
+        assert_eq!(w.as_slice(), &[] as &[u8]);
+        w.u8(1);
+        assert_eq!(w.as_slice(), &[1u8]);
     }
 
     #[test]

@@ -489,13 +489,23 @@ impl JsonIo for StoreConfig {
 
 impl JsonIo for InfraConfig {
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("training_capacity", Json::Num(self.training_capacity as f64)),
             ("compute_capacity", Json::Num(self.compute_capacity as f64)),
             ("train_slots", Json::Num(self.train_slots as f64)),
             ("scheduler", self.scheduler.to_json()),
-            ("store", self.store.to_json()),
-        ])
+        ];
+        // per-cluster overrides are emitted only when set, so configs
+        // without them (and the config JSON embedded in existing trace
+        // files) keep their exact pre-split encoding
+        if let Some(s) = &self.scheduler_training {
+            fields.push(("scheduler_training", s.to_json()));
+        }
+        if let Some(s) = &self.scheduler_compute {
+            fields.push(("scheduler_compute", s.to_json()));
+        }
+        fields.push(("store", self.store.to_json()));
+        Json::obj(fields)
     }
     fn from_json(j: &Json) -> Result<Self> {
         // "scheduler" is canonical; "discipline" (a bare string) is the
@@ -503,6 +513,12 @@ impl JsonIo for InfraConfig {
         let scheduler = match j.get("scheduler").or_else(|| j.get("discipline")) {
             Some(s) => StrategySpec::from_json(s)?,
             None => StrategySpec::new("fifo"),
+        };
+        let opt_spec = |key: &str| -> Result<Option<StrategySpec>> {
+            match j.get(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(s) => StrategySpec::from_json(s).map(Some),
+            }
         };
         Ok(InfraConfig {
             training_capacity: j.req("training_capacity")?.as_usize()?,
@@ -513,6 +529,8 @@ impl JsonIo for InfraConfig {
                 None => 1,
             },
             scheduler,
+            scheduler_training: opt_spec("scheduler_training")?,
+            scheduler_compute: opt_spec("scheduler_compute")?,
             store: StoreConfig::from_json(j.req("store")?)?,
         })
     }

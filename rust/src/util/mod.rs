@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod binio;
 pub mod cli;
+pub mod heap4;
 pub mod json;
 pub mod jsonio;
 

@@ -10,7 +10,8 @@ use pipesim::coordinator::{
     build_scheduler, fit_params, scheduler_names, trigger_names, ArrivalSpec, Experiment,
     ExperimentConfig, StrategySpec, Sweep,
 };
-use pipesim::des::{AcquireResult, Calendar, JobCtx, Resource};
+use pipesim::des::sched::{default_grants, SchedView, WaiterView};
+use pipesim::des::{AcquireResult, Calendar, JobCtx, Resource, SchedCtx, Scheduler};
 use pipesim::empirical::GroundTruth;
 use pipesim::stats::dist::{Dist, Distribution, ExpWeibull, LogNormal, Pareto, Weibull};
 use pipesim::stats::rng::Pcg64;
@@ -289,6 +290,203 @@ fn prop_easy_backfill_never_delays_the_first_blocked_head() {
         diverged as u64 >= CASES / 4,
         "backfill should engage on a fair share of seeds, got {diverged}/{CASES}"
     );
+}
+
+/// Key-based registry schedulers (the indexed-heap grant fast path).
+const KEY_SCHEDULERS: [&str; 5] = ["fifo", "priority", "sjf", "edf", "weighted_fair"];
+
+#[test]
+fn prop_indexed_heap_grants_match_linear_scan_reference() {
+    // the tentpole oracle: for every key-based scheduler, drive a
+    // Resource (whose grants come off the indexed waiter heap) next to
+    // a mirror queue granted by `default_grants` — the retained linear
+    // (key, seq) argmin scan — on random mixed-width workloads. Grant
+    // order AND waited times must be byte-identical at every release,
+    // and the heap's stale-entry ratio must stay inside the compaction
+    // bound after every operation.
+    for mode in KEY_SCHEDULERS {
+        for seed in 0..CASES {
+            let mut rng = Pcg64::new(15_000 + seed);
+            let cap = 2 + rng.below(3); // 2..=4 slots
+            let mut res: Resource<u32> = Resource::with_scheduler(
+                "h",
+                cap,
+                build_scheduler(&StrategySpec::new(mode)).unwrap(),
+            );
+            // the mirror scheduler instance sees the identical ctx
+            // sequence, so stateful keys (weighted_fair) match bitwise
+            let mut mirror_sched = build_scheduler(&StrategySpec::new(mode)).unwrap();
+            let mut waiters: Vec<WaiterView> = Vec::new();
+            let mut tokens: Vec<u32> = Vec::new();
+            let mut mseq = 0u64;
+            let mut running: Vec<(u32, u32)> = Vec::new(); // (token, slots)
+            let mut t = 0.0;
+            for i in 0..1200u32 {
+                t += rng.uniform() * 5.0;
+                if rng.uniform() < 0.6 || running.is_empty() {
+                    let occ = rng.uniform() * 100.0;
+                    let pri = 1.0 + rng.below(10) as f64;
+                    let slots = if rng.uniform() < 0.25 {
+                        1 + rng.below(cap.min(3)) as u32 // up to cap-wide
+                    } else {
+                        1
+                    };
+                    let job = JobCtx::new(occ, pri, t).with_slots(slots);
+                    let ctx = SchedCtx {
+                        now: t,
+                        job,
+                        in_use: res.in_use(),
+                        capacity: cap,
+                        queued: res.queued(),
+                    };
+                    match res.request(t, i, job) {
+                        AcquireResult::Acquired => running.push((i, slots)),
+                        AcquireResult::Queued => {
+                            let key = mirror_sched.queue_key(&ctx);
+                            waiters.push(WaiterView {
+                                job,
+                                key,
+                                enq_t: t,
+                                seq: mseq,
+                            });
+                            tokens.push(i);
+                            mseq += 1;
+                        }
+                        AcquireResult::Preempted { .. } => {
+                            unreachable!("key-based schedulers never preempt")
+                        }
+                    }
+                } else {
+                    let vi = rng.below(running.len());
+                    let (tok, slots) = running.remove(vi);
+                    let mut out = Vec::new();
+                    res.release_all(t, &tok, slots, &mut out);
+                    // reference decision: linear scan over the mirror
+                    let in_use: usize = running.iter().map(|r| r.1 as usize).sum();
+                    let view = SchedView {
+                        now: t,
+                        free: cap - in_use,
+                        capacity: cap,
+                        waiters: &waiters,
+                        running: &[],
+                    };
+                    let mut grants = Vec::new();
+                    default_grants(&view, &mut grants);
+                    let want: Vec<u32> = grants.iter().map(|&gi| tokens[gi]).collect();
+                    let got: Vec<u32> = out.iter().map(|g| g.token).collect();
+                    assert_eq!(
+                        got, want,
+                        "{mode} seed {seed}: heap diverged from the linear scan"
+                    );
+                    for (g, &gi) in out.iter().zip(grants.iter()) {
+                        assert_eq!(
+                            g.waited.to_bits(),
+                            (t - waiters[gi].enq_t).to_bits(),
+                            "{mode} seed {seed}: waited time diverged"
+                        );
+                    }
+                    // remove granted mirror entries, highest index first
+                    let mut del = grants;
+                    del.sort_unstable_by(|a, b| b.cmp(a));
+                    for gi in del {
+                        running.push((tokens[gi], waiters[gi].job.slots));
+                        waiters.swap_remove(gi);
+                        tokens.swap_remove(gi);
+                    }
+                    let occupied: usize = running.iter().map(|r| r.1 as usize).sum();
+                    assert_eq!(res.in_use(), occupied, "{mode} seed {seed}: in_use drift");
+                    assert_eq!(res.queued(), waiters.len(), "{mode} seed {seed}");
+                }
+                assert!(
+                    res.index_heap_stale() <= (res.index_heap_len() / 2).max(64),
+                    "{mode} seed {seed}: stale {} of {} unbounded",
+                    res.index_heap_stale(),
+                    res.index_heap_len()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_deep_queue_heap_drains_in_exact_reference_order() {
+    // Q ≈ 10k waiters: the asymptotic regime the heap exists for. The
+    // drain order must equal the (key, seq) sort of the legacy rule —
+    // keys drawn with heavy ties so the seq tie-break is exercised at
+    // depth.
+    for mode in ["fifo", "priority", "sjf"] {
+        for seed in 0..3u64 {
+            let mut rng = Pcg64::new(16_000 + seed);
+            let mut res: Resource<u32> = Resource::with_scheduler(
+                "deep",
+                1,
+                build_scheduler(&StrategySpec::new(mode)).unwrap(),
+            );
+            res.request(0.0, u32::MAX, JobCtx::new(1.0, 1.0, 0.0));
+            let mut expect: Vec<(f64, u64, u32)> = Vec::new();
+            for i in 0..10_000u32 {
+                let occ = (rng.below(32) as f64) + 0.5;
+                let pri = 1.0 + rng.below(8) as f64;
+                res.request(i as f64, i, JobCtx::new(occ, pri, i as f64));
+                let key = match mode {
+                    "fifo" => 0.0,
+                    "priority" => pri,
+                    _ => occ,
+                };
+                expect.push((key, i as u64, i));
+            }
+            expect.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            for (n, &(_, _, tok)) in expect.iter().enumerate() {
+                let g = res.release(20_000.0 + n as f64).unwrap();
+                assert_eq!(g.token, tok, "{mode} seed {seed}: grant {n} diverged");
+            }
+            assert_eq!(res.queued(), 0, "{mode} seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_conservation_under_sustained_overload() {
+    // arrival rate far above service capacity for the whole horizon:
+    // the wait queue grows with sim time (the deep-queue regime the
+    // indexed heap targets) and the conservation law must still hold
+    // exactly at the horizon
+    let db = GroundTruth::new(99).generate_weeks(2);
+    let params = fit_params(&db, None).unwrap();
+    for name in ["fifo", "priority", "weighted_fair"] {
+        let mut cfg = ExperimentConfig {
+            name: format!("overload-{name}"),
+            seed: 11,
+            horizon: 86_400.0,
+            arrival: ArrivalSpec::Poisson {
+                mean_interarrival: 12.0,
+            },
+            record_traces: false,
+            sample_interval: 1800.0,
+            ..Default::default()
+        };
+        cfg.infra.training_capacity = 2;
+        cfg.infra.compute_capacity = 4;
+        cfg.infra.scheduler = StrategySpec::new(name);
+        let r = Experiment::new(cfg, params.clone()).run().unwrap();
+        assert_eq!(
+            r.arrived,
+            r.completed + r.in_flight,
+            "{name} broke conservation under overload"
+        );
+        assert!(r.completed > 0, "{name} completed nothing");
+        assert!(
+            r.in_flight > 100,
+            "{name}: overload never built a backlog ({} in flight)",
+            r.in_flight
+        );
+        assert!(
+            r.avg_queue_training > 10.0,
+            "{name}: training queue never deepened ({})",
+            r.avg_queue_training
+        );
+        assert!(r.util_training > 0.95, "{name}: not saturated");
+    }
 }
 
 #[test]

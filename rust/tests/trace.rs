@@ -13,7 +13,7 @@ use pipesim::coordinator::{
 };
 use pipesim::des::DAY;
 use pipesim::empirical::GroundTruth;
-use pipesim::trace::{Trace, TraceEvent, TraceEventKind, TraceSink, TraceWorkload};
+use pipesim::trace::{StreamingPstSink, Trace, TraceEvent, TraceEventKind, TraceSink, TraceWorkload};
 
 fn tmpdir(tag: &str) -> std::path::PathBuf {
     let dir = std::env::temp_dir().join(format!("pipesim_tr_{tag}_{}", std::process::id()));
@@ -238,6 +238,45 @@ fn injected_sink_sees_preemption_events_without_buffering() {
     // the injected sink is a pure observer: outcome digest unchanged
     let plain = Experiment::new(preemptive_cfg(), params).run().unwrap();
     assert_eq!(r.digest(), plain.digest());
+}
+
+#[test]
+fn streamed_capture_decodes_identical_to_memory_capture() {
+    // the streaming acceptance bar: a StreamingPstSink run and a
+    // MemorySink run of the same (config, seed) must be outcome-digest
+    // equal, and the streamed .pst must re-read to the exact events and
+    // metadata the in-memory capture produced — so the two capture
+    // paths are interchangeable artifacts
+    let dir = tmpdir("stream");
+    let path = dir.join("streamed.pst");
+    let params = Arc::new(quick_params(58));
+    let cfg = runtime_view_cfg();
+    assert!(cfg.capture_trace, "memory path captures via the flag");
+    let mut buffered = Experiment::new(cfg.clone(), params.clone()).run().unwrap();
+    let trace = buffered.trace.take().expect("capture on");
+    assert!(trace.len() > 1000, "workload too small to prove anything");
+
+    let sink = StreamingPstSink::create(&path, &cfg.trace_meta()).unwrap();
+    let streamed = Experiment::new(cfg, params.clone())
+        .with_sink(Box::new(sink))
+        .run()
+        .unwrap();
+    assert_eq!(streamed.digest(), buffered.digest(), "capture is an observer");
+    // the streaming sink drains empty: meta only on the result
+    assert!(streamed.trace.as_ref().is_some_and(|t| t.is_empty()));
+
+    let loaded = Trace::load(&path).unwrap();
+    assert_eq!(loaded.meta, trace.meta, "metadata built by one constructor");
+    assert_eq!(loaded.events.len(), trace.events.len());
+    assert_eq!(loaded.events, trace.events, "streamed events diverged");
+    // a streamed file is a runnable workload like any capture: replay
+    // reproduces the original digest byte-for-byte
+    let replayed = TraceWorkload::from_trace(&loaded)
+        .unwrap()
+        .run(params, None)
+        .unwrap();
+    assert_eq!(replayed.digest(), buffered.digest());
+    std::fs::remove_dir_all(dir).ok();
 }
 
 #[test]
