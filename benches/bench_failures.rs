@@ -1,0 +1,161 @@
+//! Failure-injection perf + reliability ablation (DESIGN.md robustness
+//! direction): what the failure subsystem costs when it is off, what it
+//! costs when it is on, and how the checkpoint interval trades lost work
+//! against goodput.
+//!
+//! Three claims tracked across PRs via `BENCH_failures.json`:
+//!   1. failure-off overhead is zero in work terms — an inert failure
+//!      model (MTBF far past the horizon) is digest-identical to no
+//!      model at all, and its wall-clock stays within noise;
+//!   2. failures-on throughput (events/s) degrades gracefully with
+//!      failure pressure (MTBF sweep);
+//!   3. tighter checkpoints monotonically recover goodput at fixed MTBF.
+//!
+//! Run: `cargo bench --bench bench_failures`
+
+use std::sync::Arc;
+
+use pipesim::coordinator::{
+    fit_params, ArrivalSpec, Experiment, ExperimentConfig, ExperimentResult,
+};
+use pipesim::des::DAY;
+use pipesim::empirical::GroundTruth;
+use pipesim::model::{ClusterFailureConfig, FailureModel};
+use pipesim::runtime::Runtime;
+use pipesim::util::bench::Bench;
+use pipesim::util::Json;
+
+/// The shared 7-day saturated workload; `failures` is the only knob.
+fn cfg(name: &str, failures: Option<FailureModel>) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig {
+        name: name.into(),
+        seed: 2,
+        horizon: 7.0 * DAY,
+        arrival: ArrivalSpec::Profile,
+        record_traces: false,
+        ..Default::default()
+    };
+    cfg.infra.training_capacity = 4;
+    cfg.infra.failures = failures;
+    cfg
+}
+
+fn failing(mtbf: f64, ckpt: f64) -> Option<FailureModel> {
+    Some(FailureModel {
+        training: Some(
+            ClusterFailureConfig::exponential(mtbf, 600.0).with_checkpointing(ckpt, 30.0),
+        ),
+        compute: None,
+    })
+}
+
+fn row(label: &str, r: &ExperimentResult, events_per_sec: f64) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(label.into())),
+        ("events_per_sec", Json::Num(events_per_sec)),
+        ("failures", Json::Num(r.failures as f64)),
+        ("repairs", Json::Num(r.repairs as f64)),
+        ("lost_work_s", Json::Num(r.lost_work)),
+        ("goodput", Json::Num(r.goodput)),
+        ("completed", Json::Num(r.completed as f64)),
+        ("recovery_p95_s", Json::Num(r.recovery_p95)),
+    ])
+}
+
+fn main() {
+    let db = GroundTruth::new(17).generate_weeks(4);
+    let runtime = Runtime::load_default().map(Arc::new);
+    let backend = if runtime.is_some() { "pjrt" } else { "cpu" };
+    let params = Arc::new(fit_params(&db, runtime.clone()).expect("fit"));
+    let mut b = Bench::with_budget(std::time::Duration::from_millis(100), 3);
+
+    let mut run = |b: &mut Bench, label: &str, c: ExperimentConfig| {
+        let mut out = None;
+        let m = b
+            .bench_once(format!("7-day run [{label}]"), || {
+                out = Some(
+                    Experiment::new(c.clone(), params.clone())
+                        .with_runtime(runtime.clone())
+                        .run()
+                        .expect("run"),
+                );
+            })
+            .clone();
+        let r = out.unwrap();
+        let eps = r.events_processed as f64 / m.min.as_secs_f64();
+        (r, eps)
+    };
+
+    // -- claim 1: the failure-off path costs nothing ------------------
+    println!("# failure-off overhead (baseline vs inert model, 7 days)");
+    let (base, base_eps) = run(&mut b, "no failure model", cfg("base", None));
+    let (inert, inert_eps) = run(
+        &mut b,
+        "inert model (mtbf >> horizon)",
+        cfg("inert", failing(1e30, 600.0)),
+    );
+    assert_eq!(
+        base.digest(),
+        inert.digest(),
+        "inert failure model changed outcomes"
+    );
+    assert_eq!(inert.failures, 0, "inert model must never fire");
+    let overhead = base_eps / inert_eps - 1.0;
+    println!(
+        "events/s: {base_eps:.0} (off) vs {inert_eps:.0} (inert), overhead {:+.2}%",
+        100.0 * overhead
+    );
+    // digest equality already proves identical work; the wall-clock
+    // guard is deliberately loose (shared CI runners are noisy)
+    assert!(
+        overhead < 0.5,
+        "failure-off path overhead is not near-zero: {:+.1}%",
+        100.0 * overhead
+    );
+
+    // -- claim 2: throughput under failure pressure -------------------
+    println!("# mtbf ablation (mttr 600s, checkpoint 600s, restart 30s)");
+    println!("mtbf_s,events_per_sec,failures,repairs,lost_work_s,goodput,completed");
+    let mut mtbf_rows = vec![
+        row("off", &base, base_eps),
+        row("inert", &inert, inert_eps),
+    ];
+    for mtbf in [14_400.0, 3600.0, 1200.0] {
+        let (r, eps) = run(
+            &mut b,
+            &format!("mtbf {mtbf}s"),
+            cfg(&format!("mtbf{mtbf}"), failing(mtbf, 600.0)),
+        );
+        assert!(r.failures > 0, "7 days at mtbf {mtbf}s must fail");
+        assert_eq!(r.arrived, r.completed + r.in_flight, "conservation");
+        println!(
+            "{mtbf},{eps:.0},{},{},{:.0},{:.4},{}",
+            r.failures, r.repairs, r.lost_work, r.goodput, r.completed
+        );
+        mtbf_rows.push(row(&format!("mtbf{mtbf}"), &r, eps));
+    }
+
+    // -- claim 3: checkpoint-interval tuning at fixed pressure --------
+    println!("# checkpoint ablation (mtbf 3600s; 0 = checkpointing off)");
+    println!("checkpoint_s,lost_work_s,goodput,completed");
+    let mut ckpt_rows = Vec::new();
+    for ckpt in [0.0, 3600.0, 600.0, 120.0] {
+        let (r, eps) = run(
+            &mut b,
+            &format!("checkpoint {ckpt}s"),
+            cfg(&format!("ckpt{ckpt}"), failing(3600.0, ckpt)),
+        );
+        println!("{ckpt},{:.0},{:.4},{}", r.lost_work, r.goodput, r.completed);
+        ckpt_rows.push(row(&format!("ckpt{ckpt}"), &r, eps));
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("failures".into())),
+        ("backend", Json::Str(backend.into())),
+        ("overhead_off_path", Json::Num(overhead)),
+        ("mtbf", Json::Arr(mtbf_rows)),
+        ("checkpoint", Json::Arr(ckpt_rows)),
+    ]);
+    std::fs::write("BENCH_failures.json", json.to_string()).expect("write BENCH_failures.json");
+    println!("# wrote BENCH_failures.json");
+}

@@ -18,10 +18,13 @@ pub enum Metric {
     MeanModelPerformance,
     Retrains,
     WirePerPipelineMb,
+    Failures,
+    LostWork,
+    Goodput,
 }
 
 impl Metric {
-    pub const ALL: [Metric; 10] = [
+    pub const ALL: [Metric; 13] = [
         Metric::UtilTraining,
         Metric::UtilCompute,
         Metric::MeanWaitTraining,
@@ -32,6 +35,9 @@ impl Metric {
         Metric::MeanModelPerformance,
         Metric::Retrains,
         Metric::WirePerPipelineMb,
+        Metric::Failures,
+        Metric::LostWork,
+        Metric::Goodput,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -46,6 +52,9 @@ impl Metric {
             Metric::MeanModelPerformance => "mean_model_perf",
             Metric::Retrains => "retrains",
             Metric::WirePerPipelineMb => "wire_mb_per_pipeline",
+            Metric::Failures => "failures",
+            Metric::LostWork => "lost_work_s",
+            Metric::Goodput => "goodput",
         }
     }
 
@@ -86,6 +95,9 @@ impl Metric {
                     (r.wire_read_bytes + r.wire_write_bytes) / 1e6 / r.arrived as f64
                 }
             }
+            Metric::Failures => r.failures as f64,
+            Metric::LostWork => r.lost_work,
+            Metric::Goodput => r.goodput,
         }
     }
 }
@@ -269,5 +281,23 @@ mod tests {
         assert!(Metric::CompletionRate.of(&a) <= 1.0);
         assert!(Metric::Throughput.of(&a) > 0.0);
         assert!(Metric::WirePerPipelineMb.of(&a) > 0.0);
+        // failure-free runs: perfect goodput, nothing lost, no failures
+        assert_eq!(Metric::Failures.of(&a), 0.0);
+        assert_eq!(Metric::LostWork.of(&a), 0.0);
+        assert_eq!(Metric::Goodput.of(&a), 1.0);
+    }
+
+    #[test]
+    fn reliability_rows_render_only_when_nonzero() {
+        let (a, b) = two_results();
+        let cmp = Comparison::new(vec![&a, &b]);
+        let table = cmp.render();
+        // goodput is 1.0 even without failures, so it renders; the
+        // all-zero failures/lost-work rows are suppressed
+        assert!(table.contains("goodput"));
+        assert!(!table.contains("failures"));
+        assert!(!table.contains("lost_work_s"));
+        // csv keeps every metric regardless (machine-readable form)
+        assert!(cmp.to_csv().contains("lost_work_s,0,0"));
     }
 }

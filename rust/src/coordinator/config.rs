@@ -151,6 +151,28 @@ impl ExperimentConfig {
                 "framework shares sum to {share_sum}, expected 1"
             )));
         }
+        // failure-model knobs must be sane before any failure event is
+        // scheduled (distribution parameters are validated at
+        // construction by the Dist constructors themselves)
+        if let Some(fm) = &self.infra.failures {
+            for (cluster, fc) in [("training", &fm.training), ("compute", &fm.compute)] {
+                if let Some(fc) = fc {
+                    if !fc.checkpoint_interval.is_finite() || fc.checkpoint_interval < 0.0 {
+                        return Err(crate::error::Error::Config(format!(
+                            "{cluster} checkpoint_interval must be finite and >= 0 \
+                             (0 disables checkpointing), got {}",
+                            fc.checkpoint_interval
+                        )));
+                    }
+                    if !fc.restart_cost.is_finite() || fc.restart_cost < 0.0 {
+                        return Err(crate::error::Error::Config(format!(
+                            "{cluster} restart_cost must be finite and >= 0, got {}",
+                            fc.restart_cost
+                        )));
+                    }
+                }
+            }
+        }
         // strategies must resolve in the registry (unknown names and
         // typoed params fail here, before any work is done) — the shared
         // scheduler spec and both per-cluster overrides all resolve
@@ -343,6 +365,36 @@ mod tests {
         let mut cfg = ExperimentConfig::default();
         cfg.infra.compute_capacity = 0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn failure_model_roundtrips_and_validates_knobs() {
+        use crate::model::{ClusterFailureConfig, FailureModel};
+        let mut cfg = ExperimentConfig::default();
+        cfg.infra.failures = Some(FailureModel {
+            training: Some(
+                ClusterFailureConfig::exponential(86_400.0, 1_800.0)
+                    .with_checkpointing(600.0, 30.0),
+            ),
+            compute: None,
+        });
+        cfg.validate().unwrap();
+        let back = ExperimentConfig::from_json_text(&cfg.to_json_text()).unwrap();
+        assert_eq!(back.infra.failures, cfg.infra.failures);
+        // bad knobs are rejected up front
+        let mut bad = cfg.clone();
+        bad.infra.failures.as_mut().unwrap().training.as_mut().unwrap().checkpoint_interval =
+            -1.0;
+        assert!(bad.validate().is_err());
+        let mut bad = cfg.clone();
+        bad.infra.failures.as_mut().unwrap().training.as_mut().unwrap().restart_cost =
+            f64::INFINITY;
+        assert!(bad.validate().is_err());
+        // configs predating the failure model parse with failures off
+        let plain = ExperimentConfig::default().to_json_text();
+        assert!(!plain.contains("failures"));
+        let back = ExperimentConfig::from_json_text(&plain).unwrap();
+        assert_eq!(back.infra.failures, None);
     }
 
     #[test]

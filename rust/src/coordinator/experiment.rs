@@ -92,6 +92,7 @@ mod tests {
     use crate::coordinator::strategy::{scheduler_names, StrategySpec};
     use crate::des::DAY;
     use crate::empirical::GroundTruth;
+    use crate::model::{ClusterFailureConfig, FailureModel};
 
     fn quick_params() -> SimParams {
         let db = GroundTruth::new(21).generate_weeks(3);
@@ -223,6 +224,88 @@ mod tests {
         cfg.infra.training_capacity = 2;
         cfg.infra.scheduler = sched;
         cfg
+    }
+
+    fn failing_cfg(name: &str, mtbf: f64, ckpt: f64, restart: f64) -> ExperimentConfig {
+        let mut cfg = saturated_cfg(name, StrategySpec::new("priority"));
+        cfg.infra.failures = Some(FailureModel {
+            training: Some(
+                ClusterFailureConfig::exponential(mtbf, 600.0).with_checkpointing(ckpt, restart),
+            ),
+            compute: None,
+        });
+        cfg
+    }
+
+    #[test]
+    fn unreachable_mtbf_is_byte_identical_to_failure_free() {
+        // digest-compat oracle: the failure subsystem must be a pure
+        // superset — with a failure model attached but an MTBF far past
+        // the horizon, no failure event ever schedules and the run IS
+        // the failure-free simulation, bit for bit
+        let plain = run_with(saturated_cfg("fail", StrategySpec::new("priority")));
+        let gated = run_with(failing_cfg("fail", 1e30, 600.0, 30.0));
+        assert!(plain.wait_training.mean() > 0.0, "must saturate");
+        assert_eq!(gated.failures, 0);
+        assert_eq!(gated.lost_work, 0.0);
+        assert_eq!(gated.goodput, 1.0);
+        assert_eq!(plain.digest(), gated.digest());
+    }
+
+    #[test]
+    fn failure_injection_loses_work_and_conserves() {
+        let r = run_with(failing_cfg("fail", 3600.0, 600.0, 30.0));
+        assert!(r.failures > 0, "a day at 1h MTBF must fail: {}", r.failures);
+        assert!(r.repairs > 0, "10min MTTR must repair within the day");
+        assert!(r.lost_work > 0.0, "saturated slots must lose in-flight work");
+        assert!(r.goodput > 0.0 && r.goodput < 1.0, "goodput {}", r.goodput);
+        assert!(r.recovery_p50 > 0.0 && r.recovery_p95 >= r.recovery_p50);
+        // interrupted pipelines restart and still complete: conservation
+        assert_eq!(r.arrived, r.completed + r.in_flight);
+        assert!(r.completed > 0);
+        let again = run_with(failing_cfg("fail", 3600.0, 600.0, 30.0));
+        assert_eq!(r.digest(), again.digest(), "failure runs must stay deterministic");
+    }
+
+    #[test]
+    fn checkpointing_bounds_lost_work() {
+        // without checkpoints a failure forfeits the whole attempt; with
+        // a tight interval only the tail since the last checkpoint (plus
+        // the restart cost) is lost, so total lost work must drop
+        let off = run_with(failing_cfg("ckpt", 1800.0, 0.0, 0.0));
+        let on = run_with(failing_cfg("ckpt", 1800.0, 10.0, 0.0));
+        assert!(off.lost_work > 0.0 && on.lost_work > 0.0);
+        assert!(
+            on.lost_work < off.lost_work,
+            "checkpointing must reduce lost work: {} vs {}",
+            on.lost_work,
+            off.lost_work
+        );
+        assert!(on.goodput > off.goodput, "{} vs {}", on.goodput, off.goodput);
+    }
+
+    #[test]
+    fn restart_first_without_failures_is_byte_identical_to_priority() {
+        // the failure-aware strategy's boost only applies to restarted
+        // jobs; with failures off it IS the priority discipline
+        let plain = run_with(saturated_cfg("rf", StrategySpec::new("priority")));
+        let rf = run_with(saturated_cfg("rf", StrategySpec::new("restart_first")));
+        assert!(plain.wait_training.mean() > 0.0, "must saturate");
+        assert_eq!(plain.digest(), rf.digest());
+    }
+
+    #[test]
+    fn restart_first_reorders_under_failures() {
+        let mk = |sched: &str| {
+            let mut cfg = failing_cfg("rf-fail", 1800.0, 600.0, 30.0);
+            cfg.infra.scheduler = StrategySpec::new(sched);
+            run_with(cfg)
+        };
+        let prio = mk("priority");
+        let rf = mk("restart_first");
+        assert!(rf.failures > 0, "must fail to exercise the boost");
+        assert_eq!(rf.arrived, rf.completed + rf.in_flight);
+        assert_ne!(prio.digest(), rf.digest(), "restart boost never engaged");
     }
 
     #[test]

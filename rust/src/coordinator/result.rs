@@ -67,6 +67,25 @@ pub struct ExperimentResult {
     /// must keep byte-identical digests across the preemption-capable
     /// refactor, and for them this is identically zero.
     pub preemptions: u64,
+    /// Slot failures injected (landed) over the run. Like `preemptions`,
+    /// identically zero without a `FailureModel` and therefore kept out
+    /// of [`ExperimentResult::digest`] — failure-off configs must keep
+    /// byte-identical digests across the failure-injection release.
+    pub failures: u64,
+    /// Failed slots brought back online (≤ `failures`; repairs pending
+    /// at the horizon never land).
+    pub repairs: u64,
+    /// Service seconds destroyed by failures: un-checkpointed attempt
+    /// tails plus restart costs. Out of the digest (zero when failures
+    /// are off).
+    pub lost_work: f64,
+    /// useful / (useful + lost) service seconds — exactly 1.0 when no
+    /// work was lost. Out of the digest.
+    pub goodput: f64,
+    /// Median of the per-failure repair times (0 with no failures).
+    pub recovery_p50: f64,
+    /// 95th percentile of the per-failure repair times.
+    pub recovery_p95: f64,
     pub retrains_triggered: u64,
     pub models_deployed: u64,
     pub events_processed: u64,
@@ -189,6 +208,18 @@ impl ExperimentResult {
         if self.preemptions > 0 {
             let _ = writeln!(s, "  preemptions      {}", self.preemptions);
         }
+        if self.failures > 0 {
+            let _ = writeln!(
+                s,
+                "  failures         {} ({} repaired)  lost work {:.0}s  goodput {:.4}",
+                self.failures, self.repairs, self.lost_work, self.goodput
+            );
+            let _ = writeln!(
+                s,
+                "  recovery time    p50 {:.0}s  p95 {:.0}s",
+                self.recovery_p50, self.recovery_p95
+            );
+        }
         let _ = writeln!(
             s,
             "  utilization      training {:.1}%  compute {:.1}%",
@@ -274,6 +305,12 @@ mod tests {
             tasks_executed: 300,
             gate_failures: 2,
             preemptions: 0,
+            failures: 0,
+            repairs: 0,
+            lost_work: 0.0,
+            goodput: 1.0,
+            recovery_p50: 0.0,
+            recovery_p95: 0.0,
             retrains_triggered: 0,
             models_deployed: 0,
             events_processed: 1000,
@@ -312,6 +349,19 @@ mod tests {
         // resolved strategy labels make the report self-describing
         assert!(s.contains("scheduler fifo"));
         assert!(s.contains("trigger off"));
+        // failure lines only appear when failures landed
+        assert!(!s.contains("goodput"));
+        let mut r = empty_result();
+        r.failures = 2;
+        r.repairs = 1;
+        r.lost_work = 500.0;
+        r.goodput = 0.95;
+        r.recovery_p50 = 300.0;
+        r.recovery_p95 = 900.0;
+        let s = r.summary();
+        assert!(s.contains("failures         2 (1 repaired)"), "{s}");
+        assert!(s.contains("goodput 0.9500"), "{s}");
+        assert!(s.contains("p50 300s"), "{s}");
     }
 
     #[test]
@@ -329,6 +379,17 @@ mod tests {
         let mut p = empty_result();
         p.preemptions = 3;
         assert_eq!(a.digest(), p.digest());
+        // reliability counters follow the same rule: identically
+        // zero/1.0 without a FailureModel, so failure-off configs keep
+        // their pre-failure-release digests byte-identical
+        let mut f = empty_result();
+        f.failures = 4;
+        f.repairs = 3;
+        f.lost_work = 1234.5;
+        f.goodput = 0.91;
+        f.recovery_p50 = 600.0;
+        f.recovery_p95 = 1800.0;
+        assert_eq!(a.digest(), f.digest());
         let mut c = empty_result();
         c.completed += 1;
         assert_ne!(a.digest(), c.digest());

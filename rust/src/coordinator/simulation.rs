@@ -26,12 +26,14 @@ use crate::des::{AcquireResult, Calendar, EventHandle, Granted, Resource, SimTim
 use crate::error::Result;
 use crate::model::pipeline::TaskNode;
 use crate::model::{
-    CompressionModel, DataAsset, Framework, ModelMetrics, ResourceKind, TaskExecutor, TaskType,
+    ClusterFailureConfig, CompressionModel, DataAsset, Framework, ModelMetrics, ResourceKind,
+    TaskExecutor, TaskType,
 };
 use crate::runtime::pool::{Backend, SamplePool1};
 use crate::runtime::{Runtime, K1};
 use crate::stats::gmm::Gmm1;
 use crate::stats::rng::Pcg64;
+use crate::stats::Distribution;
 use crate::synth::{AssetSynthesizer, PipelineSynthesizer, TaskList};
 use crate::trace::{MemorySink, NullSink, Trace, TraceEvent, TraceEventKind, TraceSink};
 use crate::tsdb::{SeriesHandle, SeriesKey, TsStore};
@@ -55,6 +57,13 @@ enum Event {
     Drift,
     /// Launch a (possibly deferred) retraining for deployed-model slot.
     RetrainLaunch(u32),
+    /// Failure injection: one slot on the cluster fails
+    /// (self-rescheduling through the cluster's MTBF distribution).
+    SlotFailed(ResourceKind),
+    /// A failed slot comes back after the carried repair time (the
+    /// MTTR sample drawn when the failure landed — carried here so the
+    /// trace can report the exact downtime without FIFO pairing).
+    SlotRepaired(ResourceKind, f64),
 }
 
 /// Per-pipeline execution state (slab-allocated, freed on completion so
@@ -83,9 +92,15 @@ struct PipelineState {
     /// `done_handle` is set); remaining service at preemption is
     /// `done_at - now`.
     done_at: SimTime,
-    /// Service seconds left from a preemption; consumed (instead of the
-    /// full read+exec+write) when the task is re-granted a slot.
+    /// Service seconds left from a preemption or slot failure; consumed
+    /// (instead of the full read+exec+write) when the task is
+    /// re-granted a slot. After a failure it includes the re-done tail
+    /// since the last checkpoint plus the restart cost.
     remaining_service: Option<f64>,
+    /// When the in-flight attempt began service (valid while
+    /// `done_handle` is set). A slot failure loses the attempt progress
+    /// `t - attempt_start` back to the last checkpoint boundary.
+    attempt_start: SimTime,
     /// Deployed-model slot to refresh when this (retraining) run deploys.
     retrain_of: Option<u32>,
     /// User priority (lower = more important; Fig 4's "model
@@ -155,6 +170,18 @@ struct Counters {
     wire_read: f64,
     wire_write: f64,
     peak_rss: f64,
+    // failure injection (all zero / empty when no FailureModel is set)
+    failures: u64,
+    repairs: u64,
+    /// Service seconds thrown away by failures: un-checkpointed attempt
+    /// tails plus restart costs.
+    lost_work: f64,
+    /// Service seconds of completed tasks (their nominal read+exec+write
+    /// — the work that contributed to outcomes). Goodput is
+    /// useful / (useful + lost).
+    useful_work: f64,
+    /// MTTR samples, one per landed failure — recovery-time percentiles.
+    downtimes: Vec<f64>,
 }
 
 /// One experiment run in progress: the calendar, the resources with
@@ -185,6 +212,10 @@ pub(super) struct Simulation {
     rng_arrival: Pcg64,
     rng_noise: Pcg64,
     rng_drift: Pcg64,
+    /// Dedicated failure-injection stream: drawn from only by failure
+    /// events, so enabling failures perturbs no other stream and
+    /// failure-off runs keep their digests byte-identical.
+    rng_failure: Pcg64,
     c: Counters,
     // event-level trace capture (NullSink when cfg.capture_trace is off;
     // every emission site checks `capture` so the off path costs one
@@ -250,6 +281,10 @@ impl Simulation {
             pad_gmm(&params.eval_log_gmm),
             root.substream(0x200),
         );
+        // derived unconditionally, and *after* every pre-existing
+        // substream: failure-off runs keep every other stream — and
+        // therefore their digests — byte-identical
+        let mut rng_failure = root.substream(0x300);
         let mut arrival = match arrival_override {
             Some(model) => model,
             None => params.resolve_arrival(cfg.arrival),
@@ -296,6 +331,17 @@ impl Simulation {
         if cfg.runtime_view.enabled {
             cal.schedule(cfg.runtime_view.detector_interval, Event::Drift);
         }
+        // failure injection: prime each configured cluster's first
+        // failure (training before compute — draw order is part of the
+        // determinism contract)
+        for kind in [ResourceKind::Training, ResourceKind::Compute] {
+            if let Some(fc) = cfg.infra.failure_for(kind) {
+                let gap = fc.mtbf.sample(&mut rng_failure).max(0.0);
+                if gap <= cfg.horizon {
+                    cal.schedule(gap, Event::SlotFailed(kind));
+                }
+            }
+        }
 
         Ok(Simulation {
             cfg,
@@ -319,6 +365,7 @@ impl Simulation {
             rng_arrival,
             rng_noise,
             rng_drift,
+            rng_failure,
             c: Counters {
                 peak_rss: rss_mb(),
                 ..Counters::default()
@@ -343,6 +390,8 @@ impl Simulation {
                 Event::Monitor => self.on_monitor(t),
                 Event::Drift => self.on_drift(t),
                 Event::RetrainLaunch(slot) => self.on_retrain_launch(t, slot)?,
+                Event::SlotFailed(kind) => self.on_slot_failed(t, kind)?,
+                Event::SlotRepaired(kind, downtime) => self.on_slot_repaired(t, kind, downtime),
             }
         }
         self.finish(started)
@@ -411,6 +460,7 @@ impl Simulation {
             done_handle: None,
             done_at: 0.0,
             remaining_service: None,
+            attempt_start: 0.0,
             retrain_of: None,
             // user-assigned priority class 1..=10
             priority: 1.0 + self.rng_noise.below(10) as f64,
@@ -521,6 +571,7 @@ impl Simulation {
                 let st = self.slab[pid as usize].as_mut().expect("live pipeline");
                 st.done_handle = Some(h);
                 st.done_at = t_now + total;
+                st.attempt_start = t_now;
             }
             AcquireResult::Queued => {
                 if self.capture {
@@ -589,6 +640,7 @@ impl Simulation {
                 let st = self.slab[pid as usize].as_mut().expect("live pipeline");
                 st.done_handle = Some(h);
                 st.done_at = t_now + total;
+                st.attempt_start = t_now;
             }
         }
         Ok(())
@@ -601,12 +653,21 @@ impl Simulation {
         self.c.tasks_executed += 1;
         // release + grant next waiters (several when a wide training job
         // frees room for multiple narrow tasks)
-        let (task, fw_tag, exec_dur, kind) = {
+        let (task, fw_tag, exec_dur, kind, service) = {
             let st = self.slab[pid as usize].as_mut().expect("live");
             st.done_handle = None; // this completion just fired
             let node = st.tasks.get(st.cur);
-            (node.task, node.framework, st.pending_exec, ResourceKind::for_task(node.task))
+            (
+                node.task,
+                node.framework,
+                st.pending_exec,
+                ResourceKind::for_task(node.task),
+                st.pending_read + st.pending_exec + st.pending_write,
+            )
         };
+        // goodput numerator: the task's nominal service contributed to
+        // the outcome (failure-lost tails are tallied separately)
+        self.c.useful_work += service;
         if self.capture {
             self.sink.record(&TraceEvent {
                 t,
@@ -625,16 +686,61 @@ impl Simulation {
             ResourceKind::Training => self.training.release_all(t, &pid, slots, &mut grants),
             ResourceKind::Compute => self.compute.release_all(t, &pid, slots, &mut grants),
         };
+        self.grant_buf = grants;
+        self.apply_grants(t, kind);
+        if self.cfg.record_traces {
+            let slot = &mut self.h.exec[task.index()][fw_tag.map_or(0, |f| f.index() + 1)];
+            let h = match *slot {
+                Some(h) => h,
+                None => {
+                    // cold miss: ≤ 36 times per run
+                    let mut key = SeriesKey::new(series::TASK_EXEC).tag("task", task.name());
+                    if let Some(fw) = fw_tag {
+                        key = key.tag("framework", fw.name());
+                    }
+                    let h = self.db.handle(key);
+                    *slot = Some(h);
+                    h
+                }
+            };
+            self.db.append(h, t, exec_dur);
+        }
+
+        let truncated = self.apply_task_effects(t, pid, task);
+
+        // advance or complete
+        let done = {
+            let st = self.slab[pid as usize].as_mut().expect("live");
+            st.cur += 1;
+            truncated || st.cur >= st.tasks.len()
+        };
+        if done {
+            self.finish_pipeline(t, pid, truncated);
+            Ok(())
+        } else {
+            self.start_task(pid)
+        }
+    }
+
+    /// Start every granted waiter in `self.grant_buf`: consume its
+    /// remaining service (or the full read+exec+write), record the
+    /// wait, emit the grant/start traces, and schedule its completion.
+    /// Shared by task completion, slot failure (the victim's released
+    /// slots may admit queued work), and slot repair.
+    fn apply_grants(&mut self, t: SimTime, kind: ResourceKind) {
+        let mut grants = std::mem::take(&mut self.grant_buf);
         for g in grants.drain(..) {
             let (total, node, g_exec, g_read, g_write) = {
                 let w = self.slab[g.token as usize].as_mut().expect("queued pipeline");
                 w.total_wait += g.waited;
-                // a preempted task resumes with its remaining service
+                // a preempted or failed task resumes with its remaining
+                // service (incl. any failure-lost tail to re-do)
                 let total = w
                     .remaining_service
                     .take()
                     .unwrap_or(w.pending_read + w.pending_exec + w.pending_write);
                 w.done_at = t + total;
+                w.attempt_start = t;
                 let node = w.tasks.get(w.cur);
                 (total, node, w.pending_exec, w.pending_read, w.pending_write)
             };
@@ -677,38 +783,268 @@ impl Simulation {
                 .done_handle = Some(h);
         }
         self.grant_buf = grants;
-        if self.cfg.record_traces {
-            let slot = &mut self.h.exec[task.index()][fw_tag.map_or(0, |f| f.index() + 1)];
-            let h = match *slot {
-                Some(h) => h,
-                None => {
-                    // cold miss: ≤ 36 times per run
-                    let mut key = SeriesKey::new(series::TASK_EXEC).tag("task", task.name());
-                    if let Some(fw) = fw_tag {
-                        key = key.tag("framework", fw.name());
-                    }
-                    let h = self.db.handle(key);
-                    *slot = Some(h);
-                    h
-                }
+    }
+
+    /// Failure injection: one slot on `kind`'s cluster dies. The failed
+    /// slot is drawn uniformly over the *effective* (still-online)
+    /// slots — busy slots take down the task running there, idle ones
+    /// just shrink capacity until repair. Draw order per failure is
+    /// part of the determinism contract: placement (when any slot is
+    /// up), then MTTR (when the failure lands), then the next MTBF gap
+    /// (always, so the stream position never depends on what was hit).
+    fn on_slot_failed(&mut self, t: SimTime, kind: ResourceKind) -> Result<()> {
+        let fc = self
+            .cfg
+            .infra
+            .failure_for(kind)
+            .expect("slot-failure events are only scheduled with a failure config")
+            .clone();
+        let (eff, busy) = {
+            let res = match kind {
+                ResourceKind::Training => &self.training,
+                ResourceKind::Compute => &self.compute,
             };
-            self.db.append(h, t, exec_dur);
-        }
-
-        let truncated = self.apply_task_effects(t, pid, task);
-
-        // advance or complete
-        let done = {
-            let st = self.slab[pid as usize].as_mut().expect("live");
-            st.cur += 1;
-            truncated || st.cur >= st.tasks.len()
+            (res.effective_capacity(), res.in_use())
         };
-        if done {
-            self.finish_pipeline(t, pid, truncated);
-            Ok(())
-        } else {
-            self.start_task(pid)
+        if eff > 0 {
+            let u = self.rng_failure.below(eff);
+            // map a busy placement to the pipeline occupying that slot:
+            // walk the slab in pid order accumulating each running
+            // task's slot width (slot-proportional blast radius)
+            let mut victim: Option<u32> = None;
+            if u < busy {
+                let mut acc = 0usize;
+                for (i, slot) in self.slab.iter().enumerate() {
+                    if let Some(st) = slot {
+                        if st.done_handle.is_some() {
+                            let task = st.tasks.get(st.cur).task;
+                            if ResourceKind::for_task(task) == kind {
+                                acc += self.cfg.infra.task_slots(task) as usize;
+                                if acc > u {
+                                    victim = Some(i as u32);
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                }
+                debug_assert!(victim.is_some(), "busy slots imply a running owner");
+            }
+            // capacity shrinks *before* the victim's slots release, so
+            // re-grant decisions already see the reduced cluster
+            match kind {
+                ResourceKind::Training => self.training.fail_slot(),
+                ResourceKind::Compute => self.compute.fail_slot(),
+            }
+            let offline = match kind {
+                ResourceKind::Training => self.training.offline(),
+                ResourceKind::Compute => self.compute.offline(),
+            } as u32;
+            self.c.failures += 1;
+            if self.capture {
+                self.sink.record(&TraceEvent {
+                    t,
+                    kind: TraceEventKind::SlotFailed {
+                        resource: kind,
+                        offline,
+                    },
+                });
+            }
+            if let Some(vpid) = victim {
+                self.fail_running_task(t, vpid, kind, &fc);
+            }
+            let mttr = fc.mttr.sample(&mut self.rng_failure).max(0.0);
+            self.c.downtimes.push(mttr);
+            self.cal.schedule(mttr, Event::SlotRepaired(kind, mttr));
         }
+        // next failure on this cluster; like the other periodic events,
+        // stop once the system has fully drained so max_pipelines runs
+        // still terminate before the horizon
+        let gap = fc.mtbf.sample(&mut self.rng_failure).max(0.0);
+        let drained = self.c.arrivals_stopped && self.c.live == 0 && self.deployed.is_empty();
+        if !drained && t + gap <= self.cfg.horizon {
+            self.cal.schedule(gap, Event::SlotFailed(kind));
+        }
+        Ok(())
+    }
+
+    /// Blast radius of a busy-slot failure: cancel the victim's
+    /// completion, charge the checkpoint/restart cost model, release
+    /// its slots (queued work may be granted into the survivors), and
+    /// re-queue it with the restart flag set so failure-aware
+    /// schedulers can prioritize it.
+    fn fail_running_task(
+        &mut self,
+        t: SimTime,
+        pid: u32,
+        kind: ResourceKind,
+        fc: &ClusterFailureConfig,
+    ) {
+        let (vh, task, slots, new_rem, preserved, lost, priority, arrived_at) = {
+            let st = self.slab[pid as usize].as_mut().expect("failure victim is live");
+            let vh = st
+                .done_handle
+                .take()
+                .expect("failure victim had a scheduled completion");
+            let task = st.tasks.get(st.cur).task;
+            let elapsed = (t - st.attempt_start).max(0.0);
+            let work_left = (st.done_at - t).max(0.0);
+            let ci = fc.checkpoint_interval;
+            // the attempt progress since the last checkpoint boundary is
+            // lost — the whole attempt when checkpointing is off — and
+            // the restart cost is paid on top in both modes
+            let lost_tail = if ci > 0.0 {
+                elapsed - (elapsed / ci).floor() * ci
+            } else {
+                elapsed
+            };
+            let lost = lost_tail + fc.restart_cost;
+            let new_rem = work_left + lost;
+            st.remaining_service = Some(new_rem);
+            (
+                vh,
+                task,
+                self.cfg.infra.task_slots(task),
+                new_rem,
+                elapsed - lost_tail,
+                lost,
+                st.priority,
+                st.arrived_at,
+            )
+        };
+        let cancelled = self.cal.cancel(vh);
+        debug_assert!(cancelled, "victim completion was pending");
+        self.c.lost_work += lost;
+        if self.capture {
+            self.sink.record(&TraceEvent {
+                t,
+                kind: TraceEventKind::TaskCheckpointed {
+                    pid,
+                    task,
+                    preserved,
+                    lost,
+                },
+            });
+        }
+        // release the victim's slots under the already-reduced capacity
+        let mut grants = std::mem::take(&mut self.grant_buf);
+        grants.clear();
+        match kind {
+            ResourceKind::Training => self.training.release_all(t, &pid, slots, &mut grants),
+            ResourceKind::Compute => self.compute.release_all(t, &pid, slots, &mut grants),
+        };
+        self.grant_buf = grants;
+        self.apply_grants(t, kind);
+        // re-queue the victim with its restart remainder
+        let job = JobCtx::new(new_rem, priority, arrived_at)
+            .with_slots(slots)
+            .after_restart();
+        let acquired = match kind {
+            ResourceKind::Training => self.training.request(t, pid, job),
+            ResourceKind::Compute => self.compute.request(t, pid, job),
+        };
+        if self.capture {
+            self.sink.record(&TraceEvent {
+                t,
+                kind: TraceEventKind::TaskRestarted {
+                    pid,
+                    task,
+                    resource: kind,
+                    remaining: new_rem,
+                },
+            });
+        }
+        match acquired {
+            AcquireResult::Acquired => {
+                // room left on the shrunken cluster: restart immediately
+                let h = self.cal.schedule(new_rem, Event::TaskDone(pid));
+                let st = self.slab[pid as usize].as_mut().expect("failure victim is live");
+                st.remaining_service = None;
+                st.done_handle = Some(h);
+                st.done_at = t + new_rem;
+                st.attempt_start = t;
+            }
+            AcquireResult::Queued => {
+                // remaining_service stays set; consumed at the grant
+            }
+            AcquireResult::Preempted { victim } => {
+                // the restarted job evicted a lower-priority task (the
+                // scheduler already re-queued it) — mirrors the
+                // preemption arm of start_task
+                let (wh, vtask, remaining) = {
+                    let vst = self.slab[victim as usize]
+                        .as_mut()
+                        .expect("preemption victim is live");
+                    let wh = vst
+                        .done_handle
+                        .take()
+                        .expect("preemption victim had a scheduled completion");
+                    let remaining = (vst.done_at - t).max(0.0);
+                    vst.remaining_service = Some(remaining);
+                    (wh, vst.tasks.get(vst.cur).task, remaining)
+                };
+                let cancelled = self.cal.cancel(wh);
+                debug_assert!(cancelled, "victim completion was pending");
+                self.c.preemptions += 1;
+                if self.capture {
+                    self.sink.record(&TraceEvent {
+                        t,
+                        kind: TraceEventKind::TaskPreempted {
+                            pid: victim,
+                            task: vtask,
+                            resource: kind,
+                            by: pid,
+                            remaining,
+                        },
+                    });
+                    self.sink.record(&TraceEvent {
+                        t,
+                        kind: TraceEventKind::TaskRequeued {
+                            pid: victim,
+                            task: vtask,
+                            resource: kind,
+                        },
+                    });
+                }
+                let h = self.cal.schedule(new_rem, Event::TaskDone(pid));
+                let st = self.slab[pid as usize].as_mut().expect("failure victim is live");
+                st.remaining_service = None;
+                st.done_handle = Some(h);
+                st.done_at = t + new_rem;
+                st.attempt_start = t;
+            }
+        }
+    }
+
+    /// A failed slot on `kind`'s cluster comes back: restore capacity
+    /// and grant queued tasks into the recovered slot in scheduler
+    /// order.
+    fn on_slot_repaired(&mut self, t: SimTime, kind: ResourceKind, downtime: f64) {
+        let mut grants = std::mem::take(&mut self.grant_buf);
+        grants.clear();
+        let offline = match kind {
+            ResourceKind::Training => {
+                self.training.repair_slot(t, &mut grants);
+                self.training.offline()
+            }
+            ResourceKind::Compute => {
+                self.compute.repair_slot(t, &mut grants);
+                self.compute.offline()
+            }
+        } as u32;
+        self.grant_buf = grants;
+        self.c.repairs += 1;
+        if self.capture {
+            self.sink.record(&TraceEvent {
+                t,
+                kind: TraceEventKind::SlotRepaired {
+                    resource: kind,
+                    offline,
+                    downtime,
+                },
+            });
+        }
+        self.apply_grants(t, kind);
     }
 
     /// Task-specific model-metric effects; returns whether the quality
@@ -938,6 +1274,7 @@ impl Simulation {
             done_handle: None,
             done_at: 0.0,
             remaining_service: None,
+            attempt_start: 0.0,
             retrain_of: Some(slot),
             priority: 0.0, // retrains jump the queue
         };
@@ -975,6 +1312,18 @@ impl Simulation {
             + self.eval_pool.refills;
         let scheduler = self.cfg.infra.scheduler_label();
         let trigger = self.cfg.trigger_label();
+        // reliability analytics: goodput is the fraction of delivered
+        // service that contributed to outcomes; recovery percentiles
+        // summarize the MTTR samples of landed failures
+        let goodput = if self.c.lost_work > 0.0 {
+            self.c.useful_work / (self.c.useful_work + self.c.lost_work)
+        } else {
+            1.0
+        };
+        let mut downtimes = std::mem::take(&mut self.c.downtimes);
+        downtimes.sort_by(|a, b| a.partial_cmp(b).expect("downtimes are finite"));
+        let recovery_p50 = pct(&downtimes, 0.50);
+        let recovery_p95 = pct(&downtimes, 0.95);
         // the stream is complete: streaming sinks finalize (string-table
         // + meta footer, flush) before the result is assembled
         self.sink.finish()?;
@@ -996,6 +1345,12 @@ impl Simulation {
             tasks_executed: self.c.tasks_executed,
             gate_failures: self.c.gate_failures,
             preemptions: self.c.preemptions,
+            failures: self.c.failures,
+            repairs: self.c.repairs,
+            lost_work: self.c.lost_work,
+            goodput,
+            recovery_p50,
+            recovery_p95,
             retrains_triggered: self.c.retrains,
             models_deployed: self.c.models_deployed,
             events_processed: self.c.events,
@@ -1018,6 +1373,15 @@ impl Simulation {
             tsdb: self.db,
         })
     }
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample; 0 when empty.
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
 }
 
 /// Pad a fitted mixture to exactly K1 components (the AOT sampler's fixed

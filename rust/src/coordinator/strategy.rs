@@ -13,8 +13,8 @@
 use std::sync::{OnceLock, RwLock};
 
 use crate::des::sched::{
-    EarliestDeadlineFirst, EasyBackfill, Fifo, PreemptivePriority, Priority, Scheduler,
-    ShortestJobFirst, WeightedFair,
+    EarliestDeadlineFirst, EasyBackfill, Fifo, PreemptivePriority, Priority, RestartFirst,
+    Scheduler, ShortestJobFirst, WeightedFair,
 };
 use crate::error::{Error, Result};
 
@@ -153,6 +153,12 @@ fn ctor_easy_backfill(spec: &StrategySpec) -> Result<Box<dyn Scheduler>> {
     spec.check_keys(&[])?;
     Ok(Box::new(EasyBackfill::default()))
 }
+fn ctor_restart_first(spec: &StrategySpec) -> Result<Box<dyn Scheduler>> {
+    spec.check_keys(&["restart_boost"])?;
+    Ok(Box::new(RestartFirst {
+        restart_boost: spec.get_or("restart_boost", 1e6),
+    }))
+}
 
 const BUILTIN_SCHEDULERS: &[(&str, SchedulerCtor)] = &[
     ("fifo", ctor_fifo),
@@ -162,6 +168,7 @@ const BUILTIN_SCHEDULERS: &[(&str, SchedulerCtor)] = &[
     ("weighted_fair", ctor_weighted_fair),
     ("preemptive_priority", ctor_preemptive_priority),
     ("easy_backfill", ctor_easy_backfill),
+    ("restart_first", ctor_restart_first),
 ];
 
 fn ctor_eager(spec: &StrategySpec) -> Result<Box<dyn RetrainTrigger>> {
@@ -314,6 +321,7 @@ mod tests {
             "weighted_fair",
             "preemptive_priority",
             "easy_backfill",
+            "restart_first",
         ] {
             let s = build_scheduler(&StrategySpec::new(name)).unwrap();
             assert_eq!(s.name(), name);

@@ -278,12 +278,12 @@ impl SweepResult {
         let mut s = String::from(
             "cell,name,seed,arrived,completed,tasks_executed,events_processed,\
              util_training,util_compute,mean_wait_training_s,avg_queue_training,\
-             final_mean_performance,wall_secs\n",
+             final_mean_performance,failures,lost_work_s,goodput,wall_secs\n",
         );
         for (i, r) in self.results.iter().enumerate() {
             let _ = writeln!(
                 s,
-                "{i},{},{},{},{},{},{},{:.6},{:.6},{:.3},{:.3},{:.4},{:.4}",
+                "{i},{},{},{},{},{},{},{:.6},{:.6},{:.3},{:.3},{:.4},{},{:.3},{:.6},{:.4}",
                 r.name,
                 r.seed,
                 r.arrived,
@@ -295,6 +295,9 @@ impl SweepResult {
                 r.wait_training.mean(),
                 r.avg_queue_training,
                 r.final_mean_performance,
+                r.failures,
+                r.lost_work,
+                r.goodput,
                 r.wall_secs
             );
         }
@@ -303,7 +306,7 @@ impl SweepResult {
 }
 
 /// The metrics aggregated across replications.
-fn metric_values(r: &ExperimentResult) -> [(&'static str, f64); 12] {
+fn metric_values(r: &ExperimentResult) -> [(&'static str, f64); 15] {
     [
         ("arrived", r.arrived as f64),
         ("completed", r.completed as f64),
@@ -317,6 +320,9 @@ fn metric_values(r: &ExperimentResult) -> [(&'static str, f64); 12] {
         ("mean_wait_training_s", r.wait_training.mean()),
         ("avg_queue_training", r.avg_queue_training),
         ("final_mean_performance", r.final_mean_performance),
+        ("failures", r.failures as f64),
+        ("lost_work_s", r.lost_work),
+        ("goodput", r.goodput),
     ]
 }
 
@@ -479,9 +485,25 @@ mod tests {
         assert!(arrived.min <= arrived.mean && arrived.mean <= arrived.max);
         assert!(arrived.ci95 >= 0.0);
         assert!(arrived.mean > 50.0, "6h at 90s gaps: {}", arrived.mean);
+        // reliability metrics aggregate too; failure-free cells report
+        // perfect goodput and zero losses
+        let goodput = out.groups[0]
+            .metrics
+            .iter()
+            .find(|m| m.name == "goodput")
+            .unwrap();
+        assert_eq!(goodput.mean, 1.0);
+        let lost = out.groups[0]
+            .metrics
+            .iter()
+            .find(|m| m.name == "lost_work_s")
+            .unwrap();
+        assert_eq!(lost.max, 0.0);
         // table + csv render without panicking and carry the group names
         assert!(out.table().contains("group 'a'"));
         assert!(out.to_csv().lines().count() == 7);
+        assert!(out.to_csv().starts_with("cell,name,seed,"));
+        assert!(out.to_csv().contains("goodput"));
     }
 
     #[test]

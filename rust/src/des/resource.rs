@@ -99,6 +99,12 @@ fn heap_less(a: &HeapSlot, b: &HeapSlot) -> bool {
 pub struct Resource<T> {
     pub name: String,
     capacity: usize,
+    /// Slots currently offline after an injected failure (see
+    /// [`Resource::fail_slot`]). Every scheduling decision works against
+    /// the *effective* capacity `capacity - offline`; always 0 when
+    /// failure injection is off, so the arithmetic below reduces to the
+    /// historical `capacity` expressions bit-for-bit.
+    offline: usize,
     in_use: usize,
     scheduler: Box<dyn Scheduler>,
     /// Cached `scheduler.needs_view()`: when false the re-decision hooks
@@ -149,6 +155,7 @@ impl<T> Resource<T> {
         Resource {
             name: name.into(),
             capacity,
+            offline: 0,
             in_use: 0,
             scheduler,
             track_view,
@@ -173,6 +180,17 @@ impl<T> Resource<T> {
         self.capacity
     }
 
+    /// Slots currently offline after injected failures.
+    pub fn offline(&self) -> usize {
+        self.offline
+    }
+
+    /// Capacity available to the scheduler right now: nominal capacity
+    /// minus failed slots.
+    pub fn effective_capacity(&self) -> usize {
+        self.capacity - self.offline
+    }
+
     pub fn in_use(&self) -> usize {
         self.in_use
     }
@@ -191,7 +209,10 @@ impl<T> Resource<T> {
             now: t,
             job,
             in_use: self.in_use,
-            capacity: self.capacity,
+            // strategies reason about what is schedulable, so they see
+            // the effective capacity (identical to nominal without
+            // failure injection)
+            capacity: self.effective_capacity(),
             queued: self.waiter_views.len(),
         }
     }
@@ -325,7 +346,23 @@ impl<T> Resource<T> {
         self.busy.set(t, self.in_use as f64);
     }
 
-    /// Fraction of total slot-time busy over [0, t].
+    /// Take one slot offline (an injected failure). The caller is
+    /// responsible for the blast radius: if the slot carried a running
+    /// job, cancel its completion and re-queue it via
+    /// [`Resource::release_all`] *after* this call, so the re-queue
+    /// decision already sees the reduced effective capacity.
+    pub fn fail_slot(&mut self) {
+        debug_assert!(
+            self.offline < self.capacity,
+            "{}: every slot already offline",
+            self.name
+        );
+        self.offline += 1;
+    }
+
+    /// Fraction of total slot-time busy over [0, t]. The denominator is
+    /// the nominal capacity — offline slots still count as provisioned
+    /// (failures *lower* reported utilization, they don't excuse it).
     pub fn utilization(&self, t: SimTime) -> f64 {
         if t <= 0.0 {
             return 0.0;
@@ -355,7 +392,7 @@ impl<T: Copy> Resource<T> {
             self.capacity
         );
         let ctx = self.ctx(t, job);
-        let fits = self.in_use + job.slots as usize <= self.capacity;
+        let fits = self.in_use + job.slots as usize <= self.effective_capacity();
         // idle resources always admit (enforced here, not just documented):
         // with nothing running, nothing will ever be released to grant a
         // queued job, so a scheduler refusing at in_use == 0 would deadlock
@@ -367,15 +404,16 @@ impl<T: Copy> Resource<T> {
         if self.track_view {
             let view = SchedView {
                 now: t,
-                free: self.capacity - self.in_use,
-                capacity: self.capacity,
+                free: self.effective_capacity().saturating_sub(self.in_use),
+                capacity: self.effective_capacity(),
                 waiters: &self.waiter_views,
                 running: &self.run_views,
             };
             match self.scheduler.on_enqueue(&ctx, &view) {
                 EnqueueAction::Queue => {}
                 EnqueueAction::Admit => {
-                    let admit_fits = self.in_use + job.slots as usize <= self.capacity;
+                    let admit_fits =
+                        self.in_use + job.slots as usize <= self.effective_capacity();
                     debug_assert!(admit_fits, "{}: Admit for a job that does not fit", self.name);
                     if admit_fits {
                         self.start_running(t, token, job);
@@ -401,7 +439,8 @@ impl<T: Copy> Resource<T> {
     fn preempt(&mut self, t: SimTime, token: T, job: JobCtx, victim_seq: u64) -> Option<T> {
         let vi = self.run_views.iter().position(|r| r.seq == victim_seq)?;
         let v = self.run_views[vi];
-        let swap_fits = self.capacity - self.in_use + v.job.slots as usize >= job.slots as usize;
+        let swap_fits =
+            self.effective_capacity() + v.job.slots as usize >= self.in_use + job.slots as usize;
         debug_assert!(swap_fits, "{}: preemption swap does not fit", self.name);
         if !swap_fits {
             return None;
@@ -489,8 +528,8 @@ impl<T: Copy> Resource<T> {
             if self.track_view {
                 let view = SchedView {
                     now: t,
-                    free: self.capacity - self.in_use,
-                    capacity: self.capacity,
+                    free: self.effective_capacity().saturating_sub(self.in_use),
+                    capacity: self.effective_capacity(),
                     waiters: &self.waiter_views,
                     running: &self.run_views,
                 };
@@ -515,11 +554,48 @@ impl<T: Copy> Resource<T> {
         }
     }
 
+    /// Bring one failed slot back online at time `t` and grant waiters
+    /// that now fit the restored effective capacity, appending them to
+    /// `out` in grant order (the repaired slot never sits idle while
+    /// work queues — the same invariant release holds).
+    pub fn repair_slot(&mut self, t: SimTime, out: &mut Vec<Granted<T>>) {
+        debug_assert!(self.offline > 0, "{}: repair with no slot offline", self.name);
+        self.offline -= 1;
+        let in_use_before = self.in_use;
+        let mut granted_any = false;
+        if !self.waiter_views.is_empty() {
+            let mut grants = std::mem::take(&mut self.grant_scratch);
+            grants.clear();
+            if self.track_view {
+                let view = SchedView {
+                    now: t,
+                    free: self.effective_capacity().saturating_sub(self.in_use),
+                    capacity: self.effective_capacity(),
+                    waiters: &self.waiter_views,
+                    running: &self.run_views,
+                };
+                self.scheduler.on_release(&view, &mut grants);
+            } else {
+                self.heap_grants(&mut grants);
+            }
+            granted_any = !grants.is_empty();
+            self.apply_grants(t, &mut grants, out);
+            self.grant_scratch = grants;
+            self.maybe_compact();
+        }
+        if self.in_use != in_use_before {
+            self.busy.set(t, self.in_use as f64);
+        }
+        if granted_any {
+            self.queue_len.set(t, self.waiter_views.len() as f64);
+        }
+    }
+
     /// Validate and apply a grant selection: occupy slots, record stats,
     /// and remove the granted waiters. `grants` is consumed (re-sorted
     /// in place for the removal pass — its order is scratch afterward).
     fn apply_grants(&mut self, t: SimTime, grants: &mut Vec<usize>, out: &mut Vec<Granted<T>>) {
-        let mut free = self.capacity - self.in_use;
+        let mut free = self.effective_capacity().saturating_sub(self.in_use);
         for (n, &i) in grants.iter().enumerate() {
             assert!(
                 i < self.waiter_views.len() && !grants[..n].contains(&i),
@@ -574,7 +650,7 @@ impl<T: Copy> Resource<T> {
     /// Granted waiters stay in the arrays (their heap entries are
     /// popped here); `apply_grants` removes them.
     fn heap_grants(&mut self, grants: &mut Vec<usize>) {
-        let mut free = self.capacity - self.in_use;
+        let mut free = self.effective_capacity().saturating_sub(self.in_use);
         while free > 0 {
             let Some(i) = self.peek_min() else { break };
             let slots = self.waiter_views[i].job.slots as usize;
@@ -961,6 +1037,69 @@ mod tests {
         r.release_all(110.0, &"victim", 1, &mut out2);
         assert!(out2.is_empty());
         assert_eq!(r.in_use(), 0);
+    }
+
+    // ---- failure injection ----
+
+    #[test]
+    fn failed_slot_shrinks_effective_capacity_until_repair() {
+        let mut r: Resource<u32> = Resource::new("t", 2);
+        r.fail_slot();
+        assert_eq!(r.capacity(), 2);
+        assert_eq!(r.offline(), 1);
+        assert_eq!(r.effective_capacity(), 1);
+        // only one slot is schedulable now
+        assert_eq!(r.request(0.0, 1, job(0.0)), AcquireResult::Acquired);
+        assert_eq!(r.request(1.0, 2, job(0.0)), AcquireResult::Queued);
+        // the repair grants the waiter straight into the restored slot
+        let mut out = Vec::new();
+        r.repair_slot(5.0, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].token, 2);
+        assert_eq!(out[0].waited, 4.0);
+        assert_eq!(r.in_use(), 2);
+        assert_eq!(r.offline(), 0);
+    }
+
+    #[test]
+    fn idle_repair_grants_nothing() {
+        let mut r: Resource<u32> = Resource::new("t", 3);
+        r.fail_slot();
+        let mut out = Vec::new();
+        r.repair_slot(1.0, &mut out);
+        assert!(out.is_empty());
+        assert_eq!(r.effective_capacity(), 3);
+    }
+
+    #[test]
+    fn failure_blast_radius_requeues_released_victim_under_reduced_capacity() {
+        // the simulation's failure flow: fail the slot first, then
+        // release the victim's slots and re-request — the re-queue
+        // decision must see the reduced capacity and hold the victim
+        let mut r: Resource<u32> = Resource::new("t", 1);
+        assert_eq!(r.request(0.0, 7, job(0.0)), AcquireResult::Acquired);
+        r.fail_slot();
+        let mut out = Vec::new();
+        r.release_all(5.0, &7, 1, &mut out);
+        assert!(out.is_empty(), "no capacity left: nothing may start");
+        assert_eq!(r.request(5.0, 7, job(0.0)), AcquireResult::Queued);
+        // repair resumes the victim
+        r.repair_slot(25.0, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].token, 7);
+    }
+
+    #[test]
+    fn repair_grants_respect_scheduler_order() {
+        let mut r: Resource<&str> = Resource::with_scheduler("t", 2, Box::new(Priority));
+        r.request(0.0, "run", job(3.0));
+        r.fail_slot();
+        r.request(1.0, "low", job(9.0));
+        r.request(2.0, "high", job(1.0));
+        let mut out = Vec::new();
+        r.repair_slot(3.0, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].token, "high");
     }
 
     // ---- EASY backfill ----

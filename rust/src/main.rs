@@ -15,14 +15,21 @@
 //!                  [--schedulers fifo,sjf,edf:slack_per_class=900]
 //!                  [--schedulers-training LIST] [--schedulers-compute LIST]
 //!                  [--triggers never,drift_threshold:threshold=0.05]
+//!                  [--mtbf 3600,14400,inf] [--mttr 600]
+//!                  [--checkpoint-intervals 0,600,3600]
 //!                  [--traces] [--trace-dir DIR] [--cpu] [--export CSV]
 //!                  — parallel replication/grid engine over capacities ×
-//!                  load factors × operational strategies (per-cell tsdb
-//!                  recording off unless --traces; --trace-dir streams
-//!                  one binary event trace per cell to disk as it runs,
-//!                  so captures stay memory-flat; the per-cluster
-//!                  scheduler lists override the shared --schedulers
-//!                  axis for the training/compute cluster respectively)
+//!                  load factors × operational strategies × reliability
+//!                  (per-cell tsdb recording off unless --traces;
+//!                  --trace-dir streams one binary event trace per cell
+//!                  to disk as it runs, so captures stay memory-flat; the
+//!                  per-cluster scheduler lists override the shared
+//!                  --schedulers axis for the training/compute cluster
+//!                  respectively; --mtbf injects exponential slot
+//!                  failures on the training cluster with mean repair
+//!                  --mttr, 'inf' = failures off, and
+//!                  --checkpoint-intervals varies the checkpoint period
+//!                  of every failing cluster)
 //!   trace export   --params PARAMS.json [--config CFG.json] [--days D]
 //!                  [--arrival MODE] [--seed S] [--scheduler SPEC]
 //!                  [--out T.pst] [--jsonl T.jsonl] [--cpu] — run with
@@ -53,6 +60,7 @@ use pipesim::coordinator::{
 use pipesim::des::DAY;
 use pipesim::empirical::{AnalyticsDb, GroundTruth};
 use pipesim::error::Error;
+use pipesim::model::{ClusterFailureConfig, FailureModel};
 use pipesim::runtime::Runtime;
 use pipesim::trace::{StreamingPstSink, Trace, TraceWorkload};
 use pipesim::util::Args;
@@ -212,6 +220,9 @@ fn main() -> Result<()> {
             let schedulers_training = args.get_opt("schedulers-training");
             let schedulers_compute = args.get_opt("schedulers-compute");
             let triggers = args.get_opt("triggers");
+            let mtbf = args.get_opt("mtbf");
+            let mttr: f64 = args.get_parse("mttr", 600.0)?;
+            let checkpoint_intervals = args.get_opt("checkpoint-intervals");
             let cpu = args.flag("cpu");
             // traces off by default: a sweep keeps every cell's result in
             // memory until aggregation, and nothing downstream reads the
@@ -265,6 +276,46 @@ fn main() -> Result<()> {
             let scheds_t = spec_axis(&schedulers_training)?;
             let scheds_c = spec_axis(&schedulers_compute)?;
             let trigs = spec_axis(&triggers)?;
+            // reliability axes: mean-time-between-failures values in
+            // seconds ('inf' = a perfectly reliable cell, i.e. failures
+            // off) × checkpoint periods in seconds of task progress
+            if mttr <= 0.0 {
+                return Err(Error::Config("--mttr: mean must be > 0".into()));
+            }
+            let mtbfs: Vec<Option<f64>> = match &mtbf {
+                Some(list) => list
+                    .split(',')
+                    .map(|v| {
+                        let v = v.trim();
+                        if v == "inf" {
+                            return Ok(Some(f64::INFINITY));
+                        }
+                        let m: f64 = v.parse()?;
+                        if m <= 0.0 {
+                            return Err(Error::Config(
+                                "--mtbf: mean must be > 0 seconds (or 'inf')".into(),
+                            ));
+                        }
+                        Ok(Some(m))
+                    })
+                    .collect::<Result<_>>()?,
+                None => vec![None],
+            };
+            let ckpts: Vec<Option<f64>> = match &checkpoint_intervals {
+                Some(list) => list
+                    .split(',')
+                    .map(|v| {
+                        let c: f64 = v.trim().parse()?;
+                        if c < 0.0 || !c.is_finite() {
+                            return Err(Error::Config(
+                                "--checkpoint-intervals: period must be finite and >= 0".into(),
+                            ));
+                        }
+                        Ok(Some(c))
+                    })
+                    .collect::<Result<_>>()?,
+                None => vec![None],
+            };
             if triggers.is_some() && !base.runtime_view.enabled {
                 eprintln!("triggers: enabling the runtime view (defaults)");
                 base.runtime_view.enabled = true;
@@ -318,6 +369,40 @@ fn main() -> Result<()> {
                 axis(&trigs, |tr, cfg, name| {
                     cfg.runtime_view.trigger = tr.clone();
                     name.push_str(&format!("-trig:{}", tr.label()));
+                }),
+                // --mtbf varies failure pressure on the training cluster
+                // (the saturating one); a config-file failure model keeps
+                // its checkpoint/restart knobs, only the MTBF is swept.
+                // 'inf' clears the whole model so the cell is the exact
+                // failure-free baseline (digest-identical to no subsystem)
+                axis(&mtbfs, move |m, cfg, name| {
+                    if m.is_infinite() {
+                        cfg.infra.failures = None;
+                        name.push_str("-mtbf:inf");
+                    } else {
+                        let fresh = ClusterFailureConfig::exponential(*m, mttr);
+                        let fm = cfg.infra.failures.get_or_insert_with(FailureModel::default);
+                        fm.training = Some(match fm.training.take() {
+                            Some(old) => ClusterFailureConfig {
+                                mtbf: fresh.mtbf,
+                                ..old
+                            },
+                            None => fresh,
+                        });
+                        name.push_str(&format!("-mtbf{m}"));
+                    }
+                }),
+                // --checkpoint-intervals retunes every failing cluster;
+                // a no-op (label only) on cells without a failure model
+                axis(&ckpts, |ci, cfg, name| {
+                    if let Some(fm) = &mut cfg.infra.failures {
+                        for fc in [&mut fm.training, &mut fm.compute] {
+                            if let Some(fc) = fc {
+                                fc.checkpoint_interval = *ci;
+                            }
+                        }
+                    }
+                    name.push_str(&format!("-ckpt{ci}"));
                 }),
             ];
             let mut grid = vec![(base.clone(), base.name.clone())];

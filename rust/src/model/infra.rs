@@ -3,6 +3,7 @@
 
 use super::task::TaskType;
 use crate::coordinator::strategy::StrategySpec;
+use crate::stats::{Dist, Exponential};
 
 /// The kinds of compute resource in the modeled platform.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -80,6 +81,80 @@ impl StoreConfig {
     }
 }
 
+/// Failure behavior of one cluster: slot failures arrive with
+/// inter-failure times drawn from `mtbf`, each failed slot comes back
+/// after a repair time drawn from `mttr`. An interrupted task loses the
+/// service tail since its last checkpoint (every `checkpoint_interval`
+/// seconds of *attempt* progress) and pays `restart_cost` extra service
+/// on top; with checkpointing off (`checkpoint_interval == 0`) the whole
+/// attempt so far is lost.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterFailureConfig {
+    /// Distribution of times between slot failures, seconds.
+    pub mtbf: Dist,
+    /// Distribution of per-slot repair times, seconds.
+    pub mttr: Dist,
+    /// Checkpoint period in seconds of task progress; `0.0` disables
+    /// checkpointing (an interrupted attempt is lost entirely).
+    pub checkpoint_interval: f64,
+    /// Fixed extra service a restarted task pays (state reload, requeue
+    /// overheads), seconds.
+    pub restart_cost: f64,
+}
+
+impl ClusterFailureConfig {
+    /// Memoryless failures/repairs with the given mean times, the
+    /// standard reliability-model baseline.
+    pub fn exponential(mtbf_mean: f64, mttr_mean: f64) -> Self {
+        assert!(mtbf_mean > 0.0 && mttr_mean > 0.0);
+        ClusterFailureConfig {
+            mtbf: Dist::Exponential(Exponential::new(1.0 / mtbf_mean)),
+            mttr: Dist::Exponential(Exponential::new(1.0 / mttr_mean)),
+            checkpoint_interval: 0.0,
+            restart_cost: 0.0,
+        }
+    }
+
+    /// Builder-style checkpointing knob.
+    pub fn with_checkpointing(mut self, interval: f64, restart_cost: f64) -> Self {
+        self.checkpoint_interval = interval;
+        self.restart_cost = restart_cost;
+        self
+    }
+}
+
+/// Per-cluster failure injection; `None` for a cluster means it never
+/// fails. The whole model is optional on [`InfraConfig`] — the default
+/// (`None`) keeps the simulation's event stream and digests byte-for-byte
+/// identical to a build without the subsystem.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FailureModel {
+    pub training: Option<ClusterFailureConfig>,
+    pub compute: Option<ClusterFailureConfig>,
+}
+
+impl FailureModel {
+    /// Same failure behavior on both clusters.
+    pub fn uniform(cfg: ClusterFailureConfig) -> Self {
+        FailureModel {
+            training: Some(cfg.clone()),
+            compute: Some(cfg),
+        }
+    }
+
+    pub fn for_kind(&self, kind: ResourceKind) -> Option<&ClusterFailureConfig> {
+        match kind {
+            ResourceKind::Training => self.training.as_ref(),
+            ResourceKind::Compute => self.compute.as_ref(),
+        }
+    }
+
+    /// True when neither cluster can fail (equivalent to `failures: None`).
+    pub fn is_empty(&self) -> bool {
+        self.training.is_none() && self.compute.is_none()
+    }
+}
+
 /// Full infrastructure configuration for an experiment.
 #[derive(Clone, Debug, PartialEq)]
 pub struct InfraConfig {
@@ -106,6 +181,9 @@ pub struct InfraConfig {
     /// Compute-cluster override of [`InfraConfig::scheduler`]
     /// (`None` → the shared spec).
     pub scheduler_compute: Option<StrategySpec>,
+    /// Failure injection (`None` → a perfectly reliable platform; this
+    /// is the default and keeps every pre-existing digest byte-identical).
+    pub failures: Option<FailureModel>,
     pub store: StoreConfig,
 }
 
@@ -118,6 +196,7 @@ impl Default for InfraConfig {
             scheduler: StrategySpec::new("fifo"),
             scheduler_training: None,
             scheduler_compute: None,
+            failures: None,
             store: StoreConfig::default(),
         }
     }
@@ -154,6 +233,11 @@ impl InfraConfig {
             self.scheduler_for(ResourceKind::Training).label(),
             self.scheduler_for(ResourceKind::Compute).label()
         )
+    }
+
+    /// Failure behavior of `kind`'s cluster, when any is configured.
+    pub fn failure_for(&self, kind: ResourceKind) -> Option<&ClusterFailureConfig> {
+        self.failures.as_ref().and_then(|f| f.for_kind(kind))
     }
 
     /// Slots a task occupies on its cluster.
@@ -249,5 +333,37 @@ mod tests {
         let plain = InfraConfig::default().to_json().to_string();
         assert!(!plain.contains("scheduler_training"), "{plain}");
         assert!(!plain.contains("scheduler_compute"), "{plain}");
+        assert!(!plain.contains("failures"), "{plain}");
+    }
+
+    #[test]
+    fn failure_model_roundtrips_json_and_stays_optional() {
+        use crate::util::jsonio::JsonIo;
+        let mut c = InfraConfig::default();
+        c.failures = Some(FailureModel {
+            training: Some(
+                ClusterFailureConfig::exponential(3600.0, 120.0).with_checkpointing(300.0, 30.0),
+            ),
+            compute: None,
+        });
+        let back =
+            InfraConfig::from_json(&crate::util::Json::parse(&c.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(c, back);
+        assert_eq!(
+            c.failure_for(ResourceKind::Training)
+                .map(|f| f.checkpoint_interval),
+            Some(300.0)
+        );
+        assert!(c.failure_for(ResourceKind::Compute).is_none());
+    }
+
+    #[test]
+    fn failure_model_helpers() {
+        let f = FailureModel::uniform(ClusterFailureConfig::exponential(1e4, 60.0));
+        assert!(!f.is_empty());
+        assert!(f.for_kind(ResourceKind::Training).is_some());
+        assert!(f.for_kind(ResourceKind::Compute).is_some());
+        assert!(FailureModel::default().is_empty());
     }
 }

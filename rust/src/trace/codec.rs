@@ -16,13 +16,13 @@
 //!            kind-specific fields (varints, string-table ids, f64 bits)
 //! ```
 //!
-//! Streamed layout, version 3 ([`STREAM_VERSION`], written by
+//! Streamed layout, version 3+ ([`STREAM_VERSION`], written by
 //! `trace::StreamingPstSink` — the memory-flat capture path):
 //!
 //! ```text
 //! magic      4 bytes  b"PSTR"
-//! version    u16      3
-//! reserved   u16      0
+//! version    u16      3, or 4 when failure records are present
+//! reserved   u16      0 at version 3; 1 at version 4+ (streamed flag)
 //! events     records back-to-back, identical encoding to v2 — written
 //!            as they happen, with no count prefix (unknowable up front)
 //! footer     strtab + meta (layouts as above) + varint n_events
@@ -52,10 +52,15 @@
 //!   readable by older builds. A version-1 header with a version-2
 //!   record is rejected gracefully (a decode error naming the tag,
 //!   never a panic or a silent misread). Version 3 marks the streamed
-//!   footer-offset layout; only the streaming writer stamps it —
-//!   [`encode`] keeps stamping the lowest buffered version, so
-//!   re-encoding a decoded streamed trace yields a v1/v2 file with the
-//!   same logical content.
+//!   footer-offset layout; only the streaming writer stamps it.
+//!   Version 4 added the failure-injection records (`slot_failed` /
+//!   `slot_repaired` / `task_checkpointed` / `task_restarted`) and
+//!   exists in *both* layouts, disambiguated by the reserved word:
+//!   buffered v4 files keep reserved = 0, a streaming writer that had
+//!   to admit v4 records patches its header to version 4 with
+//!   reserved = 1 at close. Failure-free captures keep stamping v1/v2
+//!   (buffered) or v3 (streamed) and stay byte-identical to files from
+//!   pre-failure builds.
 
 use crate::error::{Error, Result};
 use crate::model::{Framework, ResourceKind, TaskType};
@@ -71,11 +76,16 @@ pub const MAGIC: &[u8; 4] = b"PSTR";
 /// represent it (see [`needed_version`]); the decoder accepts
 /// `1..=FORMAT_VERSION`, dispatching `STREAM_VERSION` files to the
 /// footer-offset reader.
-pub const FORMAT_VERSION: u16 = 3;
-/// The streamed footer-offset layout (see the module docs). Stamped
-/// only by `trace::StreamingPstSink`, which cannot know the event count
-/// — or whether preemption records will occur — up front.
+pub const FORMAT_VERSION: u16 = 4;
+/// First version of the streamed footer-offset layout (see the module
+/// docs). Stamped only by `trace::StreamingPstSink`, which cannot know
+/// the event count — or whether preemption/failure records will occur —
+/// up front. A version-3 file is always streamed; version 4+ files
+/// carry the layout in the header's reserved word (1 = streamed).
 pub const STREAM_VERSION: u16 = 3;
+/// Reserved-word value marking a version-4+ file as the streamed
+/// footer-offset layout rather than the buffered one.
+pub const STREAMED_FLAG: u16 = 1;
 /// Trailing magic of a streamed file: the last 12 bytes are
 /// `u64 footer_offset ++ TAIL_MAGIC`. Its absence means the writer
 /// never finalized (crashed mid-run) — rejected loudly.
@@ -98,29 +108,46 @@ const TAG_MODEL_DEPLOYED: u8 = 10;
 // version 2 (preemptive schedulers)
 const TAG_TASK_PREEMPTED: u8 = 11;
 const TAG_TASK_REQUEUED: u8 = 12;
+// version 4 (failure injection; 3 is the streamed-layout marker, which
+// carries no tags of its own)
+const TAG_SLOT_FAILED: u8 = 13;
+const TAG_SLOT_REPAIRED: u8 = 14;
+const TAG_TASK_CHECKPOINTED: u8 = 15;
+const TAG_TASK_RESTARTED: u8 = 16;
 
 /// First format version that can carry `tag`.
 fn tag_min_version(tag: u8) -> u16 {
-    if tag >= TAG_TASK_PREEMPTED {
+    if tag >= TAG_SLOT_FAILED {
+        4
+    } else if tag >= TAG_TASK_PREEMPTED {
         2
     } else {
         1
     }
 }
 
+/// First format version that can carry `kind` — the in-memory twin of
+/// [`tag_min_version`], used by the streaming writer to decide at close
+/// whether its header must be patched up to version 4.
+pub(crate) fn kind_min_version(kind: &TraceEventKind) -> u16 {
+    match kind {
+        TraceEventKind::SlotFailed { .. }
+        | TraceEventKind::SlotRepaired { .. }
+        | TraceEventKind::TaskCheckpointed { .. }
+        | TraceEventKind::TaskRestarted { .. } => 4,
+        TraceEventKind::TaskPreempted { .. } | TraceEventKind::TaskRequeued { .. } => 2,
+        _ => 1,
+    }
+}
+
 /// Lowest format version able to represent every event in the trace.
 pub fn needed_version(trace: &Trace) -> u16 {
-    let preemptive = trace.events.iter().any(|e| {
-        matches!(
-            e.kind,
-            TraceEventKind::TaskPreempted { .. } | TraceEventKind::TaskRequeued { .. }
-        )
-    });
-    if preemptive {
-        2
-    } else {
-        1
-    }
+    trace
+        .events
+        .iter()
+        .map(|e| kind_min_version(&e.kind))
+        .max()
+        .unwrap_or(1)
 }
 
 /// Encode the meta block (shared by the buffered encoder and the
@@ -317,6 +344,45 @@ pub(crate) fn encode_kind(w: &mut ByteWriter, tab: &mut InternTable, kind: &Trac
             sid(w, tab, task.name());
             sid(w, tab, resource.name());
         }
+        TraceEventKind::SlotFailed { resource, offline } => {
+            w.u8(TAG_SLOT_FAILED);
+            sid(w, tab, resource.name());
+            w.varint(offline as u64);
+        }
+        TraceEventKind::SlotRepaired {
+            resource,
+            offline,
+            downtime,
+        } => {
+            w.u8(TAG_SLOT_REPAIRED);
+            sid(w, tab, resource.name());
+            w.varint(offline as u64);
+            w.f64(downtime);
+        }
+        TraceEventKind::TaskCheckpointed {
+            pid,
+            task,
+            preserved,
+            lost,
+        } => {
+            w.u8(TAG_TASK_CHECKPOINTED);
+            w.varint(pid as u64);
+            sid(w, tab, task.name());
+            w.f64(preserved);
+            w.f64(lost);
+        }
+        TraceEventKind::TaskRestarted {
+            pid,
+            task,
+            resource,
+            remaining,
+        } => {
+            w.u8(TAG_TASK_RESTARTED);
+            w.varint(pid as u64);
+            sid(w, tab, task.name());
+            sid(w, tab, resource.name());
+            w.f64(remaining);
+        }
         TraceEventKind::ModelMetricUpdate {
             pid,
             task,
@@ -371,13 +437,17 @@ pub(crate) fn encode_kind(w: &mut ByteWriter, tab: &mut InternTable, kind: &Trac
 /// Parse a binary trace. The header is validated through the shared
 /// binio container-header helper, accepting versions
 /// `1..=FORMAT_VERSION`; anything newer (or not a trace) is an error.
-/// [`STREAM_VERSION`] files dispatch to the footer-offset reader; the
-/// decoded [`Trace`] is indistinguishable from a buffered capture of
-/// the same run.
+/// Streamed files — version exactly [`STREAM_VERSION`], or newer with
+/// the [`STREAMED_FLAG`] reserved word — dispatch to the footer-offset
+/// reader; the decoded [`Trace`] is indistinguishable from a buffered
+/// capture of the same run.
 pub fn decode(bytes: &[u8]) -> Result<Trace> {
     let mut r = ByteReader::new(bytes);
-    let version = r.check_header_range(MAGIC, 1, FORMAT_VERSION, "trace")?;
-    if version >= STREAM_VERSION {
+    let (version, reserved) =
+        r.check_header_range_with_reserved(MAGIC, 1, FORMAT_VERSION, "trace")?;
+    let streamed = version == STREAM_VERSION
+        || (version > STREAM_VERSION && reserved == STREAMED_FLAG);
+    if streamed {
         return decode_streamed(bytes, version);
     }
     let names = InternTable::read(&mut r)?;
@@ -473,7 +543,7 @@ fn decode_kind(r: &mut ByteReader, names: &[String], version: u16) -> Result<Tra
         }
     }
     let tag = r.u8()?;
-    if tag <= TAG_TASK_REQUEUED && tag_min_version(tag) > version {
+    if tag <= TAG_TASK_RESTARTED && tag_min_version(tag) > version {
         // a tag from a newer layout inside an old-version header: the
         // file is corrupt or mislabeled — refuse rather than misread
         return Err(Error::Other(format!(
@@ -529,6 +599,27 @@ fn decode_kind(r: &mut ByteReader, names: &[String], version: u16) -> Result<Tra
             pid: pid32(r.varint()?)?,
             task: task_by_name(lookup(names, r.varint()?)?)?,
             resource: resource_by_name(lookup(names, r.varint()?)?)?,
+        },
+        TAG_SLOT_FAILED => TraceEventKind::SlotFailed {
+            resource: resource_by_name(lookup(names, r.varint()?)?)?,
+            offline: pid32(r.varint()?)?,
+        },
+        TAG_SLOT_REPAIRED => TraceEventKind::SlotRepaired {
+            resource: resource_by_name(lookup(names, r.varint()?)?)?,
+            offline: pid32(r.varint()?)?,
+            downtime: r.f64()?,
+        },
+        TAG_TASK_CHECKPOINTED => TraceEventKind::TaskCheckpointed {
+            pid: pid32(r.varint()?)?,
+            task: task_by_name(lookup(names, r.varint()?)?)?,
+            preserved: r.f64()?,
+            lost: r.f64()?,
+        },
+        TAG_TASK_RESTARTED => TraceEventKind::TaskRestarted {
+            pid: pid32(r.varint()?)?,
+            task: task_by_name(lookup(names, r.varint()?)?)?,
+            resource: resource_by_name(lookup(names, r.varint()?)?)?,
+            remaining: r.f64()?,
         },
         TAG_MODEL_METRIC => TraceEventKind::ModelMetricUpdate {
             pid: pid32(r.varint()?)?,
@@ -688,6 +779,41 @@ fn event_json(ev: &TraceEvent) -> Json {
             fields.push(("pid", Json::Num(pid as f64)));
             fields.push(("task", Json::Str(task.name().into())));
             fields.push(("resource", Json::Str(resource.name().into())));
+        }
+        TraceEventKind::SlotFailed { resource, offline } => {
+            fields.push(("resource", Json::Str(resource.name().into())));
+            fields.push(("offline", Json::Num(offline as f64)));
+        }
+        TraceEventKind::SlotRepaired {
+            resource,
+            offline,
+            downtime,
+        } => {
+            fields.push(("resource", Json::Str(resource.name().into())));
+            fields.push(("offline", Json::Num(offline as f64)));
+            fields.push(("downtime", Json::Num(downtime)));
+        }
+        TraceEventKind::TaskCheckpointed {
+            pid,
+            task,
+            preserved,
+            lost,
+        } => {
+            fields.push(("pid", Json::Num(pid as f64)));
+            fields.push(("task", Json::Str(task.name().into())));
+            fields.push(("preserved", Json::Num(preserved)));
+            fields.push(("lost", Json::Num(lost)));
+        }
+        TraceEventKind::TaskRestarted {
+            pid,
+            task,
+            resource,
+            remaining,
+        } => {
+            fields.push(("pid", Json::Num(pid as f64)));
+            fields.push(("task", Json::Str(task.name().into())));
+            fields.push(("resource", Json::Str(resource.name().into())));
+            fields.push(("remaining", Json::Num(remaining)));
         }
         TraceEventKind::ModelMetricUpdate {
             pid,
@@ -850,6 +976,39 @@ mod tests {
                     resource: ResourceKind::Training,
                 },
             ),
+            e(
+                4500.0,
+                TraceEventKind::SlotFailed {
+                    resource: ResourceKind::Training,
+                    offline: 1,
+                },
+            ),
+            e(
+                4500.0,
+                TraceEventKind::TaskCheckpointed {
+                    pid: 7,
+                    task: TaskType::Train,
+                    preserved: 300.0,
+                    lost: 123.456_789,
+                },
+            ),
+            e(
+                4500.0,
+                TraceEventKind::TaskRestarted {
+                    pid: 7,
+                    task: TaskType::Train,
+                    resource: ResourceKind::Training,
+                    remaining: 223.456_789,
+                },
+            ),
+            e(
+                5100.0,
+                TraceEventKind::SlotRepaired {
+                    resource: ResourceKind::Training,
+                    offline: 0,
+                    downtime: 600.0,
+                },
+            ),
             e(5400.0, TraceEventKind::RetrainLaunched { slot: 3 }),
             e(
                 7200.0,
@@ -932,7 +1091,7 @@ mod tests {
                     t += rng.uniform() * 100.0;
                     let task = TaskType::ALL[rng.below(6)];
                     let fw = Framework::ALL[rng.below(5)];
-                    let kind = match rng.below(13) {
+                    let kind = match rng.below(17) {
                         0 => TraceEventKind::ArrivalGapDrawn {
                             gap: rng.uniform() * 1e4,
                         },
@@ -1000,10 +1159,31 @@ mod tests {
                             by: rng.below(1000) as u32,
                             remaining: rng.uniform() * 1e3,
                         },
-                        _ => TraceEventKind::TaskRequeued {
+                        12 => TraceEventKind::TaskRequeued {
                             pid: i,
                             task,
                             resource: ResourceKind::for_task(task),
+                        },
+                        13 => TraceEventKind::SlotFailed {
+                            resource: ResourceKind::for_task(task),
+                            offline: 1 + rng.below(4) as u32,
+                        },
+                        14 => TraceEventKind::SlotRepaired {
+                            resource: ResourceKind::for_task(task),
+                            offline: rng.below(4) as u32,
+                            downtime: rng.uniform() * 1e4,
+                        },
+                        15 => TraceEventKind::TaskCheckpointed {
+                            pid: i,
+                            task,
+                            preserved: rng.uniform() * 1e3,
+                            lost: rng.uniform() * 1e3,
+                        },
+                        _ => TraceEventKind::TaskRestarted {
+                            pid: i,
+                            task,
+                            resource: ResourceKind::for_task(task),
+                            remaining: rng.uniform() * 1e3,
                         },
                     };
                     TraceEvent { t, kind }
@@ -1057,19 +1237,38 @@ mod tests {
         let bytes = encode(&v1);
         assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 1);
         assert_eq!(decode(&bytes).unwrap(), v1);
-        // preemption records -> version 2
+        // preemption records (but no failures) -> version 2
         let v2 = Trace {
             meta: meta(),
-            events: all_kinds(),
+            events: vec![TraceEvent {
+                t: 1.0,
+                kind: TraceEventKind::TaskPreempted {
+                    pid: 7,
+                    task: TaskType::Train,
+                    resource: ResourceKind::Training,
+                    by: 9,
+                    remaining: 5.0,
+                },
+            }],
         };
         let bytes = encode(&v2);
         assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 2);
         assert_eq!(decode(&bytes).unwrap(), v2);
+        // failure records -> version 4 (3 is streamed-only), buffered
+        // layout signalled by reserved = 0
+        let v4 = Trace {
+            meta: meta(),
+            events: all_kinds(),
+        };
+        let bytes = encode(&v4);
+        assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 4);
+        assert_eq!(u16::from_le_bytes([bytes[6], bytes[7]]), 0);
+        assert_eq!(decode(&bytes).unwrap(), v4);
     }
 
     #[test]
     fn old_version_header_rejects_preemption_tags_gracefully() {
-        // craft a corrupt file: version-2 records under a version-1
+        // craft a corrupt file: newer records under an older-version
         // header. The decoder must fail with a tagged error, not panic
         // or silently misread.
         let t = Trace {
@@ -1077,12 +1276,24 @@ mod tests {
             events: all_kinds(),
         };
         let mut bytes = encode(&t);
-        assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 2);
+        assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 4);
         bytes[4] = 1;
         bytes[5] = 0;
+        // the preemption record comes first in all_kinds, so the v1
+        // relabel trips on the version-2 requirement
         let err = decode(&bytes).unwrap_err().to_string();
         assert!(
             err.contains("requires format version 2"),
+            "unexpected error: {err}"
+        );
+        // a v2 relabel admits the preemption tags but trips on the
+        // failure records
+        let mut bytes = encode(&t);
+        bytes[4] = 2;
+        bytes[5] = 0;
+        let err = decode(&bytes).unwrap_err().to_string();
+        assert!(
+            err.contains("requires format version 4"),
             "unexpected error: {err}"
         );
         // and a future version is refused up front

@@ -170,6 +170,48 @@ pub enum TraceEventKind {
         /// Deployed-model slot.
         slot: u32,
     },
+    /// A cluster slot failed (failure injection). If the slot carried a
+    /// running task, the paired [`TaskCheckpointed`] and [`TaskRestarted`]
+    /// records follow at the same timestamp.
+    ///
+    /// [`TaskCheckpointed`]: TraceEventKind::TaskCheckpointed
+    /// [`TaskRestarted`]: TraceEventKind::TaskRestarted
+    SlotFailed {
+        resource: ResourceKind,
+        /// Slots offline on the cluster *after* this failure.
+        offline: u32,
+    },
+    /// A failed slot came back online after repair.
+    SlotRepaired {
+        resource: ResourceKind,
+        /// Slots still offline *after* this repair.
+        offline: u32,
+        /// How long the slot was down, seconds (the MTTR draw).
+        downtime: f64,
+    },
+    /// A failure interrupted a running task: the checkpoint/restart cost
+    /// model settled how much of the attempt survives. `preserved` is
+    /// the service recovered from the last checkpoint, `lost` the tail
+    /// thrown away plus the fixed restart cost — the task re-queues with
+    /// `remaining + lost` service outstanding.
+    TaskCheckpointed {
+        pid: u32,
+        task: TaskType,
+        /// Attempt progress preserved by checkpointing, seconds.
+        preserved: f64,
+        /// Service lost: the tail since the last checkpoint plus the
+        /// restart cost, seconds.
+        lost: f64,
+    },
+    /// A failure-interrupted task re-entered its cluster's wait queue.
+    TaskRestarted {
+        pid: u32,
+        task: TaskType,
+        resource: ResourceKind,
+        /// Service outstanding at re-queue (work left + lost tail +
+        /// restart cost), seconds.
+        remaining: f64,
+    },
     /// A model (re)deployed into a monitored runtime-view slot. Only
     /// *tracked* deployments get this event: deploys past
     /// `runtime_view.max_models` still count toward the result's
@@ -199,6 +241,10 @@ impl TraceEventKind {
             TraceEventKind::PipelineDone { .. } => "pipeline_done",
             TraceEventKind::RetrainTriggered { .. } => "retrain_triggered",
             TraceEventKind::RetrainLaunched { .. } => "retrain_launched",
+            TraceEventKind::SlotFailed { .. } => "slot_failed",
+            TraceEventKind::SlotRepaired { .. } => "slot_repaired",
+            TraceEventKind::TaskCheckpointed { .. } => "task_checkpointed",
+            TraceEventKind::TaskRestarted { .. } => "task_restarted",
             TraceEventKind::ModelDeployed { .. } => "model_deployed",
         }
     }
@@ -450,6 +496,43 @@ mod tests {
             }
             .name(),
             "pipeline_done"
+        );
+        assert_eq!(
+            TraceEventKind::SlotFailed {
+                resource: ResourceKind::Training,
+                offline: 1
+            }
+            .name(),
+            "slot_failed"
+        );
+        assert_eq!(
+            TraceEventKind::SlotRepaired {
+                resource: ResourceKind::Compute,
+                offline: 0,
+                downtime: 60.0
+            }
+            .name(),
+            "slot_repaired"
+        );
+        assert_eq!(
+            TraceEventKind::TaskCheckpointed {
+                pid: 0,
+                task: TaskType::Train,
+                preserved: 10.0,
+                lost: 5.0
+            }
+            .name(),
+            "task_checkpointed"
+        );
+        assert_eq!(
+            TraceEventKind::TaskRestarted {
+                pid: 0,
+                task: TaskType::Train,
+                resource: ResourceKind::Training,
+                remaining: 30.0
+            }
+            .name(),
+            "task_restarted"
         );
     }
 }

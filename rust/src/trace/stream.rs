@@ -8,7 +8,10 @@
 //! finalizes the string table + metadata in a *footer* when the run
 //! completes (the streamed layout, format version
 //! [`STREAM_VERSION`](super::codec::STREAM_VERSION) — see
-//! [`codec`](super::codec)). Resident state is O(1) in trace length:
+//! [`codec`](super::codec); if a recorded event needs a newer format
+//! version, e.g. the failure-injection records of version 4, the
+//! header is patched in place at close, keeping failure-free captures
+//! byte-identical to v3 files). Resident state is O(1) in trace length:
 //! the intern table (a few dozen task/framework/resource names plus the
 //! metadata strings), one record's encode scratch, and the `BufWriter`
 //! block — a bound the `bench_trace` counting-allocator guard enforces.
@@ -31,13 +34,15 @@
 //! loudly; a partial capture can never masquerade as a complete one.
 
 use std::fs::File;
-use std::io::{BufWriter, Write};
+use std::io::{BufWriter, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
 use crate::util::binio::{ByteWriter, InternTable};
 
-use super::codec::{encode_kind, encode_meta, MAGIC, STREAM_VERSION, TAIL_MAGIC};
+use super::codec::{
+    encode_kind, encode_meta, kind_min_version, MAGIC, STREAMED_FLAG, STREAM_VERSION, TAIL_MAGIC,
+};
 use super::{TraceEvent, TraceMeta, TraceSink};
 
 /// Header bytes preceding the record stream (magic + version +
@@ -61,6 +66,13 @@ pub struct StreamingPstSink {
     /// Record-stream bytes written so far (the footer offset is
     /// `HEADER_BYTES + body_bytes`).
     body_bytes: u64,
+    /// Highest format version any recorded event requires (per
+    /// `codec::kind_min_version`). The header is stamped
+    /// [`STREAM_VERSION`] at create; if a record needs a newer version
+    /// (failure-injection tags need 4), `close` patches the header to
+    /// that version with the [`STREAMED_FLAG`] reserved word — so
+    /// failure-free captures stay byte-identical to version-3 files.
+    needed: u16,
     /// First IO error, latched; surfaced by [`TraceSink::finish`].
     err: Option<String>,
     finished: bool,
@@ -94,6 +106,7 @@ impl StreamingPstSink {
             prev_bits: 0,
             events: 0,
             body_bytes: 0,
+            needed: 1,
             err: None,
             finished: false,
         })
@@ -132,6 +145,23 @@ impl StreamingPstSink {
         f.bytes(TAIL_MAGIC);
         out.write_all(f.as_slice())
             .and_then(|()| out.flush())
+            .and_then(|()| {
+                // a record needed a newer version than the v3 header
+                // stamped at create (failure-injection tags need v4):
+                // rewrite the version + reserved words in place. The
+                // buffer is flushed, so writing through the raw file is
+                // safe; the streamed flag tells the decoder this v4+
+                // file is the footer-offset layout, not the buffered
+                // one.
+                if self.needed > STREAM_VERSION {
+                    let file = out.get_mut();
+                    file.seek(SeekFrom::Start(4))?;
+                    file.write_all(&self.needed.to_le_bytes())?;
+                    file.write_all(&STREAMED_FLAG.to_le_bytes())?;
+                    file.flush()?;
+                }
+                Ok(())
+            })
             .map_err(|e| Error::Other(format!("finalizing trace {}: {e}", self.path.display())))
     }
 }
@@ -142,6 +172,7 @@ impl TraceSink for StreamingPstSink {
             return;
         }
         let bits = ev.t.to_bits();
+        self.needed = self.needed.max(kind_min_version(&ev.kind));
         self.scratch.clear();
         self.scratch.varint(bits ^ self.prev_bits);
         encode_kind(&mut self.scratch, &mut self.tab, &ev.kind);
@@ -252,6 +283,42 @@ mod tests {
         );
         // ... while re-encoding the decoded trace yields a buffered file
         // with the same logical content (lowest sufficient version)
+        let rebuf = Trace::from_bytes(&loaded.to_bytes()).unwrap();
+        assert_eq!(rebuf, loaded);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn failure_records_patch_the_header_to_v4_streamed() {
+        let path = tmp("v4");
+        let mut sink = StreamingPstSink::create(&path, &meta()).unwrap();
+        let mut events = sample_events();
+        events.push(TraceEvent {
+            t: 20.0,
+            kind: TraceEventKind::SlotFailed {
+                resource: ResourceKind::Training,
+                offline: 1,
+            },
+        });
+        events.push(TraceEvent {
+            t: 25.0,
+            kind: TraceEventKind::SlotRepaired {
+                resource: ResourceKind::Training,
+                offline: 0,
+                downtime: 5.0,
+            },
+        });
+        for ev in &events {
+            sink.record(ev);
+        }
+        sink.finish().unwrap();
+        // header: version 4, reserved = streamed flag
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 4);
+        assert_eq!(u16::from_le_bytes([bytes[6], bytes[7]]), STREAMED_FLAG);
+        // and it decodes to the logical trace, same as a buffered capture
+        let loaded = Trace::load(&path).unwrap();
+        assert_eq!(loaded.events, events);
         let rebuf = Trace::from_bytes(&loaded.to_bytes()).unwrap();
         assert_eq!(rebuf, loaded);
         std::fs::remove_file(&path).ok();

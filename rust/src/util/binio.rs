@@ -92,9 +92,17 @@ impl ByteWriter {
     /// 4-byte magic + u16 version + reserved u16 (0). Paired with
     /// [`ByteReader::check_header`].
     pub fn header(&mut self, magic: &[u8; 4], version: u16) {
+        self.header_with_reserved(magic, version, 0);
+    }
+
+    /// Container header with an explicit reserved word — for formats
+    /// that retro-fit meaning into the reserved field (e.g. the trace
+    /// codec's streamed-layout flag). Readers that ignore the reserved
+    /// word ([`ByteReader::check_header`] and friends) still accept it.
+    pub fn header_with_reserved(&mut self, magic: &[u8; 4], version: u16, reserved: u16) {
         self.bytes(magic);
         self.u16(version);
-        self.u16(0);
+        self.u16(reserved);
     }
 }
 
@@ -221,6 +229,21 @@ impl<'a> ByteReader<'a> {
         max_version: u16,
         what: &str,
     ) -> Result<u16> {
+        let (v, _reserved) = self.check_header_range_with_reserved(magic, min_version, max_version, what)?;
+        Ok(v)
+    }
+
+    /// Like [`ByteReader::check_header_range`], but also returns the
+    /// header's reserved word for formats that assign it meaning (the
+    /// trace codec uses it to distinguish streamed from buffered
+    /// layouts at version 4+).
+    pub fn check_header_range_with_reserved(
+        &mut self,
+        magic: &[u8; 4],
+        min_version: u16,
+        max_version: u16,
+        what: &str,
+    ) -> Result<(u16, u16)> {
         let got = [self.u8()?, self.u8()?, self.u8()?, self.u8()?];
         if &got != magic {
             return Err(Error::Other(format!(
@@ -238,8 +261,8 @@ impl<'a> ByteReader<'a> {
                 "{what}: format version {v}, this build reads {readable}"
             )));
         }
-        self.u16()?; // reserved
-        Ok(v)
+        let reserved = self.u16()?;
+        Ok((v, reserved))
     }
 
     /// Error if any input remains — every container rejects trailing
@@ -470,6 +493,22 @@ mod tests {
         assert!(err.to_string().contains("format version 0"), "{err}");
         // wrong magic still rejected
         assert!(ByteReader::new(&mk(1)).check_header_range(b"NOPE", 1, 3, "t").is_err());
+        // reserved word round-trips through the _with_reserved variant
+        // (and defaults to 0 from the plain `header` writer)
+        let mut w = ByteWriter::new();
+        w.header_with_reserved(b"TEST", 2, 1);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(
+            r.check_header_range_with_reserved(b"TEST", 1, 3, "t").unwrap(),
+            (2, 1)
+        );
+        let bytes = mk(2);
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(
+            r.check_header_range_with_reserved(b"TEST", 1, 3, "t").unwrap(),
+            (2, 0)
+        );
     }
 
     #[test]

@@ -10,7 +10,7 @@ use crate::coordinator::params::{ModelLaws, SimParams};
 use crate::coordinator::strategy::StrategySpec;
 use crate::empirical::{AnalyticsDb, AssetRecord, EvalRecord, JobRecord, PreprocRecord};
 use crate::error::{Error, Result};
-use crate::model::{Framework, InfraConfig, StoreConfig};
+use crate::model::{ClusterFailureConfig, FailureModel, Framework, InfraConfig, StoreConfig};
 use crate::stats::dist::{Dist, ExpWeibull, Exponential, LogNormal, Normal, Pareto, Weibull};
 use crate::stats::gmm::{Gmm1, Gmm3};
 use crate::stats::ExpCurve;
@@ -487,6 +487,58 @@ impl JsonIo for StoreConfig {
     }
 }
 
+impl JsonIo for ClusterFailureConfig {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mtbf", self.mtbf.to_json()),
+            ("mttr", self.mttr.to_json()),
+            ("checkpoint_interval", Json::Num(self.checkpoint_interval)),
+            ("restart_cost", Json::Num(self.restart_cost)),
+        ])
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(ClusterFailureConfig {
+            mtbf: Dist::from_json(j.req("mtbf")?)?,
+            mttr: Dist::from_json(j.req("mttr")?)?,
+            // both knobs are optional: a bare {mtbf, mttr} model means
+            // no checkpointing and free restarts
+            checkpoint_interval: match j.get("checkpoint_interval") {
+                Some(v) => v.as_f64()?,
+                None => 0.0,
+            },
+            restart_cost: match j.get("restart_cost") {
+                Some(v) => v.as_f64()?,
+                None => 0.0,
+            },
+        })
+    }
+}
+
+impl JsonIo for FailureModel {
+    fn to_json(&self) -> Json {
+        let mut fields = Vec::new();
+        if let Some(f) = &self.training {
+            fields.push(("training", f.to_json()));
+        }
+        if let Some(f) = &self.compute {
+            fields.push(("compute", f.to_json()));
+        }
+        Json::obj(fields)
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        let opt = |key: &str| -> Result<Option<ClusterFailureConfig>> {
+            match j.get(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(s) => ClusterFailureConfig::from_json(s).map(Some),
+            }
+        };
+        Ok(FailureModel {
+            training: opt("training")?,
+            compute: opt("compute")?,
+        })
+    }
+}
+
 impl JsonIo for InfraConfig {
     fn to_json(&self) -> Json {
         let mut fields = vec![
@@ -503,6 +555,11 @@ impl JsonIo for InfraConfig {
         }
         if let Some(s) = &self.scheduler_compute {
             fields.push(("scheduler_compute", s.to_json()));
+        }
+        // same rule for failure injection: the reliable-platform default
+        // emits no key at all
+        if let Some(f) = &self.failures {
+            fields.push(("failures", f.to_json()));
         }
         fields.push(("store", self.store.to_json()));
         Json::obj(fields)
@@ -531,6 +588,10 @@ impl JsonIo for InfraConfig {
             scheduler,
             scheduler_training: opt_spec("scheduler_training")?,
             scheduler_compute: opt_spec("scheduler_compute")?,
+            failures: match j.get("failures") {
+                None | Some(Json::Null) => None,
+                Some(f) => Some(FailureModel::from_json(f)?),
+            },
             store: StoreConfig::from_json(j.req("store")?)?,
         })
     }
@@ -746,6 +807,33 @@ mod tests {
         assert_eq!(StrategySpec::from_json(&j).unwrap(), StrategySpec::new("fifo"));
         // no name at all
         assert!(StrategySpec::from_json(&Json::parse(r#"{"threshold":1}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn failure_config_roundtrips_and_defaults_knobs() {
+        let f = ClusterFailureConfig {
+            mtbf: Dist::Weibull(Weibull::new(1.2, 7200.0)),
+            mttr: Dist::LogNormal(LogNormal::new(4.0, 0.5)),
+            checkpoint_interval: 600.0,
+            restart_cost: 45.0,
+        };
+        assert_eq!(roundtrip(&f), f);
+        // a bare {mtbf, mttr} model parses with both knobs off
+        let j = Json::parse(
+            r#"{"mtbf":{"family":"exponential","lambda":0.001},
+                "mttr":{"family":"exponential","lambda":0.01}}"#,
+        )
+        .unwrap();
+        let f = ClusterFailureConfig::from_json(&j).unwrap();
+        assert_eq!(f.checkpoint_interval, 0.0);
+        assert_eq!(f.restart_cost, 0.0);
+        // FailureModel omits unset clusters
+        let m = FailureModel {
+            training: Some(f),
+            compute: None,
+        };
+        assert_eq!(roundtrip(&m), m);
+        assert!(!m.to_json().to_string().contains("compute"));
     }
 
     #[test]

@@ -13,6 +13,7 @@ use pipesim::coordinator::{
 use pipesim::des::sched::{default_grants, SchedView, WaiterView};
 use pipesim::des::{AcquireResult, Calendar, JobCtx, Resource, SchedCtx, Scheduler};
 use pipesim::empirical::GroundTruth;
+use pipesim::model::{ClusterFailureConfig, FailureModel};
 use pipesim::stats::dist::{Dist, Distribution, ExpWeibull, LogNormal, Pareto, Weibull};
 use pipesim::stats::rng::Pcg64;
 use pipesim::synth::{PipelineSynthesizer, SynthConfig};
@@ -664,6 +665,84 @@ fn prop_every_registered_strategy_conserves_and_is_deterministic() {
             "trigger {name} broke conservation"
         );
     }
+}
+
+#[test]
+fn prop_conservation_holds_under_sustained_failure_injection() {
+    // slot failures cancel in-flight completions, requeue the victims,
+    // and shrink capacity until repair — under that churn every
+    // registered scheduler must still conserve pipelines exactly and
+    // stay deterministic, and the reliability counters must be coherent
+    let db = GroundTruth::new(66).generate_weeks(2);
+    let params = fit_params(&db, None).unwrap();
+    for name in scheduler_names() {
+        let mut cfg = ExperimentConfig {
+            name: format!("fail-{name}"),
+            seed: 7,
+            horizon: 21_600.0,
+            arrival: ArrivalSpec::Poisson {
+                mean_interarrival: 45.0,
+            },
+            record_traces: false,
+            sample_interval: 600.0,
+            ..Default::default()
+        };
+        // saturate training so failures hit busy slots, then fail hard
+        // (MTBF 20min, MTTR 5min) with checkpointing on
+        cfg.infra.training_capacity = 3;
+        cfg.infra.scheduler = StrategySpec::new(&name);
+        cfg.infra.failures = Some(FailureModel {
+            training: Some(
+                ClusterFailureConfig::exponential(1200.0, 300.0).with_checkpointing(600.0, 30.0),
+            ),
+            compute: None,
+        });
+        let a = Experiment::new(cfg.clone(), params.clone()).run().unwrap();
+        let b = Experiment::new(cfg, params.clone()).run().unwrap();
+        assert_eq!(a.digest(), b.digest(), "{name} nondeterministic with failures");
+        assert!(a.failures > 0, "{name}: 6h at 20min MTBF never failed");
+        assert_eq!(
+            a.arrived,
+            a.completed + a.in_flight,
+            "{name} broke conservation under failures"
+        );
+        assert!(a.completed > 0, "{name} completed nothing");
+        assert!(a.lost_work >= 0.0 && a.goodput > 0.0 && a.goodput <= 1.0, "{name}");
+        assert!(a.repairs <= a.failures, "{name}: more repairs than failures");
+    }
+}
+
+#[test]
+fn prop_infinite_mtbf_loses_no_work() {
+    // a failure model whose MTBF can never land inside the horizon is
+    // inert: zero failures, zero lost work, perfect goodput, and the
+    // exact digest of a config with no failure model at all
+    let db = GroundTruth::new(66).generate_weeks(2);
+    let params = fit_params(&db, None).unwrap();
+    let mk = |failures: Option<FailureModel>| {
+        let mut cfg = ExperimentConfig {
+            name: "inert".into(),
+            seed: 7,
+            horizon: 21_600.0,
+            arrival: ArrivalSpec::Poisson {
+                mean_interarrival: 45.0,
+            },
+            record_traces: false,
+            sample_interval: 600.0,
+            ..Default::default()
+        };
+        cfg.infra.training_capacity = 3;
+        cfg.infra.failures = failures;
+        Experiment::new(cfg, params.clone()).run().unwrap()
+    };
+    let inert = mk(Some(FailureModel::uniform(
+        ClusterFailureConfig::exponential(1e30, 60.0).with_checkpointing(600.0, 30.0),
+    )));
+    let none = mk(None);
+    assert_eq!(inert.failures, 0);
+    assert_eq!(inert.lost_work, 0.0);
+    assert_eq!(inert.goodput, 1.0);
+    assert_eq!(inert.digest(), none.digest());
 }
 
 #[test]

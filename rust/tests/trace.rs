@@ -13,6 +13,7 @@ use pipesim::coordinator::{
 };
 use pipesim::des::DAY;
 use pipesim::empirical::GroundTruth;
+use pipesim::model::{ClusterFailureConfig, FailureModel};
 use pipesim::trace::{StreamingPstSink, Trace, TraceEvent, TraceEventKind, TraceSink, TraceWorkload};
 
 fn tmpdir(tag: &str) -> std::path::PathBuf {
@@ -310,6 +311,102 @@ fn preemptive_capture_replays_byte_identically_and_roundtrips_codec() {
         .unwrap();
     assert_eq!(replayed.digest(), captured.digest());
     assert_eq!(replayed.preemptions, captured.preemptions);
+}
+
+/// A saturated workload with slot failures, checkpointing, and restarts
+/// on the training cluster.
+fn failing_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig {
+        name: "trace-fail".into(),
+        seed: 31,
+        horizon: DAY / 2.0,
+        arrival: ArrivalSpec::Poisson {
+            mean_interarrival: 25.0,
+        },
+        record_traces: false,
+        ..Default::default()
+    };
+    cfg.infra.training_capacity = 2;
+    cfg.infra.failures = Some(FailureModel {
+        training: Some(
+            ClusterFailureConfig::exponential(1800.0, 300.0).with_checkpointing(600.0, 30.0),
+        ),
+        compute: None,
+    });
+    cfg
+}
+
+#[test]
+fn failure_capture_replays_byte_identically_and_stamps_v4() {
+    let params = Arc::new(quick_params(59));
+    let mut cfg = failing_cfg();
+    cfg.capture_trace = true;
+    let mut captured = Experiment::new(cfg, params.clone()).run().unwrap();
+    assert!(captured.failures > 0, "workload must fail");
+    assert!(captured.lost_work > 0.0, "saturated slots must lose work");
+    let trace = captured.trace.take().unwrap();
+
+    // the failure records mirror the reliability counters exactly
+    let count = |pred: fn(&TraceEventKind) -> bool| {
+        trace.events.iter().filter(|e| pred(&e.kind)).count() as u64
+    };
+    let failed = count(|k| matches!(k, TraceEventKind::SlotFailed { .. }));
+    let repaired = count(|k| matches!(k, TraceEventKind::SlotRepaired { .. }));
+    let checkpointed = count(|k| matches!(k, TraceEventKind::TaskCheckpointed { .. }));
+    let restarted = count(|k| matches!(k, TraceEventKind::TaskRestarted { .. }));
+    assert_eq!(failed, captured.failures);
+    assert_eq!(repaired, captured.repairs);
+    assert_eq!(checkpointed, restarted, "each interruption restarts once");
+    assert!(restarted > 0 && restarted <= failed);
+
+    // failure records force the v4 stamp (buffered ⇒ reserved word 0);
+    // the codec round-trips the new kinds bit-exactly
+    let bytes = trace.to_bytes();
+    assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 4);
+    assert_eq!(u16::from_le_bytes([bytes[6], bytes[7]]), 0);
+    let loaded = Trace::from_bytes(&bytes).unwrap();
+    assert_eq!(loaded, trace);
+    assert_eq!(loaded.to_bytes(), bytes);
+
+    // replay re-derives the failure stream from the recorded config and
+    // seed: digest and reliability outcomes reproduce exactly
+    let replayed = TraceWorkload::from_trace(&loaded)
+        .unwrap()
+        .run(params, None)
+        .unwrap();
+    assert_eq!(replayed.digest(), captured.digest());
+    assert_eq!(replayed.failures, captured.failures);
+    assert_eq!(replayed.repairs, captured.repairs);
+    assert_eq!(replayed.lost_work.to_bits(), captured.lost_work.to_bits());
+}
+
+#[test]
+fn streamed_failure_capture_patches_header_and_matches_memory() {
+    // a StreamingPstSink cannot know mid-run whether a failure record
+    // will appear; the close-time header patch must leave a valid v4
+    // streamed file equal to the buffered capture
+    let dir = tmpdir("failstream");
+    let path = dir.join("fail.pst");
+    let params = Arc::new(quick_params(60));
+    let mut cfg = failing_cfg();
+    cfg.capture_trace = true;
+    let mut buffered = Experiment::new(cfg.clone(), params.clone()).run().unwrap();
+    assert!(buffered.failures > 0, "workload must fail");
+    let trace = buffered.trace.take().unwrap();
+
+    let sink = StreamingPstSink::create(&path, &cfg.trace_meta()).unwrap();
+    let streamed = Experiment::new(cfg, params)
+        .with_sink(Box::new(sink))
+        .run()
+        .unwrap();
+    assert_eq!(streamed.digest(), buffered.digest());
+    let bytes = std::fs::read(&path).unwrap();
+    assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 4);
+    assert_eq!(u16::from_le_bytes([bytes[6], bytes[7]]), 1, "streamed flag");
+    let loaded = Trace::load(&path).unwrap();
+    assert_eq!(loaded.meta, trace.meta);
+    assert_eq!(loaded.events, trace.events, "streamed events diverged");
+    std::fs::remove_dir_all(dir).ok();
 }
 
 // ------------------------------------------------------------------
