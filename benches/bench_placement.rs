@@ -1,0 +1,211 @@
+//! Heterogeneous-hardware perf + placement ablation: what the hw-class
+//! subsystem costs when its layout is degenerate, how the placement
+//! strategies trade wait against cost on a mixed fleet, and how the
+//! class-aware grant path scales with class count.
+//!
+//! Three claims tracked across PRs via `BENCH_placement.json`:
+//!   1. degenerate-layout overhead is zero in work terms — one class at
+//!      speed 1.0 with no cost knobs is digest-identical to the
+//!      homogeneous pool, and its wall-clock stays within noise;
+//!   2. `fastest_fit` and `cheapest_fit` demonstrably diverge on a
+//!      fast-expensive + slow-cheap fleet (wait/cost rows per placer);
+//!   3. splitting a fixed capacity into more classes keeps the event
+//!      stream byte-identical (speed 1.0 everywhere) while the per-grant
+//!      placement cost grows only mildly with class count.
+//!
+//! Run: `cargo bench --bench bench_placement`
+
+use std::sync::Arc;
+
+use pipesim::coordinator::{
+    fit_params, ArrivalSpec, Experiment, ExperimentConfig, ExperimentResult, StrategySpec,
+};
+use pipesim::des::DAY;
+use pipesim::empirical::GroundTruth;
+use pipesim::model::{HwClass, HwClasses};
+use pipesim::runtime::Runtime;
+use pipesim::util::bench::Bench;
+use pipesim::util::Json;
+
+/// The shared 7-day workload; the class layout is the only knob. The
+/// training capacity snaps to the class slot sum so every cell compares
+/// like against like.
+fn cfg(name: &str, classes: Option<HwClasses>) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig {
+        name: name.into(),
+        seed: 2,
+        horizon: 7.0 * DAY,
+        arrival: ArrivalSpec::Profile,
+        record_traces: false,
+        ..Default::default()
+    };
+    cfg.infra.training_capacity = 4;
+    if let Some(hw) = classes {
+        let total: usize = hw.training.iter().map(|c| c.slots).sum();
+        if total > 0 {
+            cfg.infra.training_capacity = total;
+        }
+        cfg.infra.hw_classes = Some(hw);
+    }
+    cfg
+}
+
+fn hw(training: Vec<HwClass>, placer: &str) -> HwClasses {
+    HwClasses {
+        training,
+        compute: Vec::new(),
+        placer: StrategySpec::new(placer),
+    }
+}
+
+fn row(label: &str, r: &ExperimentResult, events_per_sec: f64) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(label.into())),
+        ("events_per_sec", Json::Num(events_per_sec)),
+        ("mean_wait_training_s", Json::Num(r.wait_training.mean())),
+        ("util_training", Json::Num(r.util_training)),
+        ("cost", Json::Num(r.cost)),
+        ("completed", Json::Num(r.completed as f64)),
+    ])
+}
+
+fn main() {
+    let db = GroundTruth::new(17).generate_weeks(4);
+    let runtime = Runtime::load_default().map(Arc::new);
+    let backend = if runtime.is_some() { "pjrt" } else { "cpu" };
+    let params = Arc::new(fit_params(&db, runtime.clone()).expect("fit"));
+    let mut b = Bench::with_budget(std::time::Duration::from_millis(100), 3);
+
+    let mut run = |b: &mut Bench, label: &str, c: ExperimentConfig| {
+        let mut out = None;
+        let m = b
+            .bench_once(format!("7-day run [{label}]"), || {
+                out = Some(
+                    Experiment::new(c.clone(), params.clone())
+                        .with_runtime(runtime.clone())
+                        .run()
+                        .expect("run"),
+                );
+            })
+            .clone();
+        let r = out.unwrap();
+        let eps = r.events_processed as f64 / m.min.as_secs_f64();
+        (r, eps)
+    };
+
+    // -- claim 1: the degenerate class layout costs nothing -----------
+    println!("# degenerate-layout overhead (homogeneous vs one class at speed 1.0)");
+    let (base, base_eps) = run(&mut b, "homogeneous pool", cfg("base", None));
+    let (one, one_eps) = run(
+        &mut b,
+        "one class, speed 1.0",
+        cfg("one-class", Some(hw(vec![HwClass::new("only", 4)], "fastest_fit"))),
+    );
+    assert_eq!(
+        base.digest(),
+        one.digest(),
+        "a degenerate single class changed outcomes"
+    );
+    let overhead = base_eps / one_eps - 1.0;
+    println!(
+        "events/s: {base_eps:.0} (homogeneous) vs {one_eps:.0} (one class), overhead {:+.2}%",
+        100.0 * overhead
+    );
+    // digest equality already proves identical work; the wall-clock
+    // guard is deliberately loose (shared CI runners are noisy)
+    assert!(
+        overhead < 0.5,
+        "degenerate class layout overhead is not near-zero: {:+.1}%",
+        100.0 * overhead
+    );
+
+    // -- claim 2: placer ablation on a mixed fleet --------------------
+    // moderate load so more than one class usually has free slots —
+    // placement is only a choice when the cluster has slack
+    println!("# placer ablation (a100 1x speed 2.0 $0.004/s + k80 3x speed 1.0 $0.001/s)");
+    println!("placer,events_per_sec,mean_wait_training_s,cost,completed");
+    let fleet = |placer: &str| {
+        hw(
+            vec![
+                HwClass::new("a100", 1).with_speed(2.0).with_cost(0.004),
+                HwClass::new("k80", 3).with_cost(0.001),
+            ],
+            placer,
+        )
+    };
+    let mut placer_rows = Vec::new();
+    let mut by_name: Vec<(String, ExperimentResult)> = Vec::new();
+    for placer in ["fastest_fit", "cheapest_fit", "pack", "spread"] {
+        let mut c = cfg(&format!("pl-{placer}"), Some(fleet(placer)));
+        c.arrival = ArrivalSpec::Poisson {
+            mean_interarrival: 240.0,
+        };
+        let (r, eps) = run(&mut b, placer, c);
+        assert_eq!(r.arrived, r.completed + r.in_flight, "{placer}: conservation");
+        assert!(r.cost > 0.0, "{placer}: priced fleet accrued no cost");
+        println!(
+            "{placer},{eps:.0},{:.1},{:.2},{}",
+            r.wait_training.mean(),
+            r.cost,
+            r.completed
+        );
+        placer_rows.push(row(placer, &r, eps));
+        by_name.push((placer.into(), r));
+    }
+    let get = |n: &str| &by_name.iter().find(|(p, _)| p == n).unwrap().1;
+    let (fast, cheap) = (get("fastest_fit"), get("cheapest_fit"));
+    assert_ne!(
+        fast.digest(),
+        cheap.digest(),
+        "fastest_fit and cheapest_fit agreed on a heterogeneous fleet"
+    );
+    assert!(
+        (fast.cost - cheap.cost).abs() > f64::EPSILON,
+        "placement strategy did not move cost"
+    );
+
+    // -- claim 3: class-count scaling at fixed capacity ---------------
+    // identical speed-1.0 classes: any split of the same 8 slots must
+    // replay the homogeneous event stream byte-for-byte, so this row
+    // isolates the pure bookkeeping cost of the class-aware grant path
+    println!("# class-count scaling (8 slots, all classes speed 1.0)");
+    println!("classes,events_per_sec");
+    let mut wide = cfg("wide-base", None);
+    wide.infra.training_capacity = 8;
+    let (wide_base, wide_eps) = run(&mut b, "8 slots, homogeneous", wide);
+    let mut scale_rows = vec![Json::obj(vec![
+        ("classes", Json::Num(0.0)),
+        ("events_per_sec", Json::Num(wide_eps)),
+    ])];
+    println!("0,{wide_eps:.0}");
+    for n in [1usize, 2, 4, 8] {
+        let classes: Vec<HwClass> = (0..n)
+            .map(|i| HwClass::new(format!("c{i}"), 8 / n))
+            .collect();
+        let (r, eps) = run(
+            &mut b,
+            &format!("{n} classes"),
+            cfg(&format!("split{n}"), Some(hw(classes, "spread"))),
+        );
+        assert_eq!(
+            wide_base.digest(),
+            r.digest(),
+            "splitting 8 speed-1.0 slots into {n} classes changed outcomes"
+        );
+        println!("{n},{eps:.0}");
+        scale_rows.push(Json::obj(vec![
+            ("classes", Json::Num(n as f64)),
+            ("events_per_sec", Json::Num(eps)),
+        ]));
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("placement".into())),
+        ("backend", Json::Str(backend.into())),
+        ("overhead_degenerate_layout", Json::Num(overhead)),
+        ("placers", Json::Arr(placer_rows)),
+        ("class_scaling", Json::Arr(scale_rows)),
+    ]);
+    std::fs::write("BENCH_placement.json", json.to_string()).expect("write BENCH_placement.json");
+    println!("# wrote BENCH_placement.json");
+}

@@ -16,6 +16,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use pipesim::analytics::TraceSummary;
 use pipesim::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig};
 use pipesim::des::DAY;
 use pipesim::empirical::GroundTruth;
@@ -197,6 +198,19 @@ fn main() {
         assert_eq!(loaded.events.len() as u64, warmup as u64 + streamed);
         report.push(("stream_write_events_per_sec", Json::Num(stream_eps)));
         report.push(("stream_allocs_after_warmup", Json::Num(delta as f64)));
+
+        // --- streamed stats: summarize the file without materializing --
+        let total = loaded.events.len() as f64;
+        drop(loaded);
+        let m = b
+            .bench("streamed stats over .pst file", || {
+                let (_, s) = TraceSummary::from_file(&path).expect("streamed stats");
+                black_box(s.events);
+            })
+            .clone();
+        let stats_eps = total / m.mean.as_secs_f64().max(1e-12);
+        println!("# streamed stats: {stats_eps:.0} events/s over the file-backed scanner");
+        report.push(("streamed_stats_events_per_sec", Json::Num(stats_eps)));
         std::fs::remove_dir_all(&dir).ok();
     }
 

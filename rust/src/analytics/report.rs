@@ -21,10 +21,11 @@ pub enum Metric {
     Failures,
     LostWork,
     Goodput,
+    Cost,
 }
 
 impl Metric {
-    pub const ALL: [Metric; 13] = [
+    pub const ALL: [Metric; 14] = [
         Metric::UtilTraining,
         Metric::UtilCompute,
         Metric::MeanWaitTraining,
@@ -38,6 +39,7 @@ impl Metric {
         Metric::Failures,
         Metric::LostWork,
         Metric::Goodput,
+        Metric::Cost,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -55,6 +57,7 @@ impl Metric {
             Metric::Failures => "failures",
             Metric::LostWork => "lost_work_s",
             Metric::Goodput => "goodput",
+            Metric::Cost => "cost",
         }
     }
 
@@ -98,6 +101,7 @@ impl Metric {
             Metric::Failures => r.failures as f64,
             Metric::LostWork => r.lost_work,
             Metric::Goodput => r.goodput,
+            Metric::Cost => r.cost,
         }
     }
 }

@@ -9,7 +9,7 @@ use crate::coordinator::{ExperimentConfig, SimParams};
 use crate::model::{Framework, TaskType};
 use crate::stats::rng::Pcg64;
 use crate::stats::Summary;
-use crate::trace::{Trace, TraceEventKind};
+use crate::trace::{Trace, TraceEventKind, TraceMeta};
 
 use super::qq::{qq_report, QqSeries};
 
@@ -34,6 +34,9 @@ pub struct TraceSummary {
     pub tasks_queued: u64,
     /// Running tasks evicted by a preemptive scheduler.
     pub tasks_preempted: u64,
+    /// Hardware-class placement records (one per allocated class; zero
+    /// for traces captured without `hw_classes`).
+    pub tasks_placed: u64,
     /// Trigger firings.
     pub retrains_triggered: u64,
     /// Runtime-view (re)deployments into *monitored* slots. Deploys past
@@ -53,12 +56,20 @@ pub struct TraceSummary {
     pub exec_by_task: Vec<Summary>,
 }
 
+impl Default for TraceSummary {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl TraceSummary {
-    /// Scan a trace once and aggregate.
-    pub fn from_trace(trace: &Trace) -> Self {
-        let mut s = TraceSummary {
-            events: trace.len(),
-            span: trace.span(),
+    /// An empty accumulator. Feed events with [`TraceSummary::add`] —
+    /// the push-style API exists so the streamed scanner can summarize
+    /// year-scale `.pst` files without materializing the event `Vec`.
+    pub fn new() -> Self {
+        TraceSummary {
+            events: 0,
+            span: (0.0, 0.0),
             arrivals: 0,
             retrain_arrivals: 0,
             completions: 0,
@@ -66,6 +77,7 @@ impl TraceSummary {
             tasks_done: 0,
             tasks_queued: 0,
             tasks_preempted: 0,
+            tasks_placed: 0,
             retrains_triggered: 0,
             deployments: 0,
             interarrival: Summary::new(),
@@ -73,46 +85,83 @@ impl TraceSummary {
             pipeline_wait: Summary::new(),
             grant_wait: Summary::new(),
             exec_by_task: vec![Summary::new(); TaskType::ALL.len()],
-        };
-        for ev in &trace.events {
-            match ev.kind {
-                TraceEventKind::ArrivalGapDrawn { gap } => s.interarrival.add(gap),
-                TraceEventKind::PipelineArrival { retrain_of, .. } => {
-                    if retrain_of.is_some() {
-                        s.retrain_arrivals += 1;
-                    } else {
-                        s.arrivals += 1;
-                    }
+        }
+    }
+
+    /// Fold one event in. Events must arrive in time order (the order
+    /// any `.pst` file stores them); the span tracks first/last stamps.
+    pub fn add(&mut self, ev: &crate::trace::TraceEvent) {
+        if self.events == 0 {
+            self.span = (ev.t, ev.t);
+        } else {
+            self.span.1 = ev.t;
+        }
+        self.events += 1;
+        match ev.kind {
+            TraceEventKind::ArrivalGapDrawn { gap } => self.interarrival.add(gap),
+            TraceEventKind::PipelineArrival { retrain_of, .. } => {
+                if retrain_of.is_some() {
+                    self.retrain_arrivals += 1;
+                } else {
+                    self.arrivals += 1;
                 }
-                TraceEventKind::TaskQueued { .. } => s.tasks_queued += 1,
-                TraceEventKind::TaskPreempted { .. } => s.tasks_preempted += 1,
-                TraceEventKind::TaskRequeued { .. } => {}
-                TraceEventKind::TaskStarted { .. } => {}
-                TraceEventKind::TaskGranted { waited, .. } => s.grant_wait.add(waited),
-                TraceEventKind::TaskDone { task, exec, .. } => {
-                    s.tasks_done += 1;
-                    s.exec_by_task[task.index()].add(exec);
-                }
-                TraceEventKind::ModelMetricUpdate { .. } => {}
-                TraceEventKind::PipelineDone {
-                    makespan,
-                    total_wait,
-                    truncated,
-                    ..
-                } => {
-                    s.completions += 1;
-                    if truncated {
-                        s.gate_failures += 1;
-                    }
-                    s.makespan.add(makespan);
-                    s.pipeline_wait.add(total_wait);
-                }
-                TraceEventKind::RetrainTriggered { .. } => s.retrains_triggered += 1,
-                TraceEventKind::RetrainLaunched { .. } => {}
-                TraceEventKind::ModelDeployed { .. } => s.deployments += 1,
             }
+            TraceEventKind::TaskQueued { .. } => self.tasks_queued += 1,
+            TraceEventKind::TaskPreempted { .. } => self.tasks_preempted += 1,
+            TraceEventKind::TaskRequeued { .. } => {}
+            TraceEventKind::TaskStarted { .. } => {}
+            TraceEventKind::TaskPlaced { .. } => self.tasks_placed += 1,
+            TraceEventKind::TaskGranted { waited, .. } => self.grant_wait.add(waited),
+            TraceEventKind::TaskDone { task, exec, .. } => {
+                self.tasks_done += 1;
+                self.exec_by_task[task.index()].add(exec);
+            }
+            TraceEventKind::ModelMetricUpdate { .. } => {}
+            TraceEventKind::PipelineDone {
+                makespan,
+                total_wait,
+                truncated,
+                ..
+            } => {
+                self.completions += 1;
+                if truncated {
+                    self.gate_failures += 1;
+                }
+                self.makespan.add(makespan);
+                self.pipeline_wait.add(total_wait);
+            }
+            TraceEventKind::RetrainTriggered { .. } => self.retrains_triggered += 1,
+            TraceEventKind::RetrainLaunched { .. } => {}
+            TraceEventKind::ModelDeployed { .. } => self.deployments += 1,
+            TraceEventKind::SlotFailed { .. }
+            | TraceEventKind::SlotRepaired { .. }
+            | TraceEventKind::TaskCheckpointed { .. }
+            | TraceEventKind::TaskRestarted { .. } => {}
+        }
+    }
+
+    /// Scan a materialized trace once and aggregate.
+    pub fn from_trace(trace: &Trace) -> Self {
+        let mut s = TraceSummary::new();
+        for ev in &trace.events {
+            s.add(ev);
         }
         s
+    }
+
+    /// Summarize a `.pst` file record-by-record through
+    /// [`TraceScanner`](crate::trace::TraceScanner) — memory stays O(1)
+    /// in trace length, so year-scale streamed captures can be
+    /// summarized on machines that could never hold their event `Vec`.
+    /// Returns the file's metadata alongside the summary.
+    pub fn from_file(path: impl AsRef<std::path::Path>) -> crate::Result<(TraceMeta, Self)> {
+        let mut scan = crate::trace::TraceScanner::open(path)?;
+        let meta = scan.meta().clone();
+        let mut s = TraceSummary::new();
+        for ev in &mut scan {
+            s.add(&ev?);
+        }
+        Ok((meta, s))
     }
 
     /// Human-readable stats block for `pipesim trace stats`.
@@ -152,6 +201,9 @@ impl TraceSummary {
         );
         if self.tasks_preempted > 0 {
             let _ = writeln!(out, "  preemptions      {}", self.tasks_preempted);
+        }
+        if self.tasks_placed > 0 {
+            let _ = writeln!(out, "  placements       {}", self.tasks_placed);
         }
         let _ = writeln!(out, "  interarrival     {}", fmt(&self.interarrival));
         let _ = writeln!(out, "  makespan         {}", fmt(&self.makespan));
@@ -312,6 +364,29 @@ mod tests {
         let text = s.render();
         assert!(text.contains("pipelines"));
         assert!(text.contains("exec train"));
+    }
+
+    #[test]
+    fn from_file_agrees_with_from_trace() {
+        // the streamed scanner and the materializing loader must
+        // produce the identical summary for the same capture
+        let (_, trace) = captured();
+        let path = std::env::temp_dir().join(format!(
+            "pipesim_stats_scan_{}.pst",
+            std::process::id()
+        ));
+        trace.save(&path).unwrap();
+        let (meta, streamed) = TraceSummary::from_file(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(meta, trace.meta);
+        let buffered = TraceSummary::from_trace(&trace);
+        assert_eq!(streamed.events, buffered.events);
+        assert_eq!(streamed.arrivals, buffered.arrivals);
+        assert_eq!(streamed.completions, buffered.completions);
+        assert_eq!(streamed.tasks_done, buffered.tasks_done);
+        assert_eq!(streamed.span, buffered.span);
+        assert_eq!(streamed.makespan.sum.to_bits(), buffered.makespan.sum.to_bits());
+        assert_eq!(streamed.grant_wait.count, buffered.grant_wait.count);
     }
 
     #[test]

@@ -6,7 +6,7 @@ use crate::model::{InfraConfig, ResourceKind};
 use crate::synth::SynthConfig;
 use crate::trace::TraceMeta;
 
-use super::strategy::{build_scheduler, build_trigger, StrategySpec};
+use super::strategy::{build_placer, build_scheduler, build_trigger, StrategySpec};
 
 /// Which arrival process drives the experiment.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -173,6 +173,68 @@ impl ExperimentConfig {
                 }
             }
         }
+        // hardware classes: per-cluster slot counts must sum to the
+        // cluster capacity (a mismatch would desynchronize class
+        // accounting from the resource), names must be unique, and the
+        // speed/cost knobs must be finite and usable
+        if let Some(hw) = &self.infra.hw_classes {
+            for (cluster, classes, capacity) in [
+                ("training", &hw.training, self.infra.training_capacity),
+                ("compute", &hw.compute, self.infra.compute_capacity),
+            ] {
+                if classes.is_empty() {
+                    continue;
+                }
+                let sum: usize = classes.iter().map(|c| c.slots).sum();
+                if sum != capacity {
+                    return Err(crate::error::Error::Config(format!(
+                        "{cluster} hw_classes slots sum to {sum}, \
+                         expected the cluster capacity {capacity}"
+                    )));
+                }
+                for (i, c) in classes.iter().enumerate() {
+                    if c.name.is_empty() {
+                        return Err(crate::error::Error::Config(format!(
+                            "{cluster} hw_classes[{i}]: class name must not be empty"
+                        )));
+                    }
+                    if classes[..i].iter().any(|o| o.name == c.name) {
+                        return Err(crate::error::Error::Config(format!(
+                            "{cluster} hw_classes: duplicate class name '{}'",
+                            c.name
+                        )));
+                    }
+                    if c.slots == 0 {
+                        return Err(crate::error::Error::Config(format!(
+                            "{cluster} hw class '{}': slots must be >= 1",
+                            c.name
+                        )));
+                    }
+                    if !c.speed.is_finite() || c.speed <= 0.0 {
+                        return Err(crate::error::Error::Config(format!(
+                            "{cluster} hw class '{}': speed must be finite and > 0, got {}",
+                            c.name, c.speed
+                        )));
+                    }
+                    if !c.cost_per_sec.is_finite() || c.cost_per_sec < 0.0 {
+                        return Err(crate::error::Error::Config(format!(
+                            "{cluster} hw class '{}': cost_per_sec must be finite \
+                             and >= 0, got {}",
+                            c.name, c.cost_per_sec
+                        )));
+                    }
+                    for (fw, s) in &c.fw_speed {
+                        if !s.is_finite() || *s <= 0.0 {
+                            return Err(crate::error::Error::Config(format!(
+                                "{cluster} hw class '{}': fw_speed[{fw}] must be \
+                                 finite and > 0, got {s}",
+                                c.name
+                            )));
+                        }
+                    }
+                }
+            }
+        }
         // strategies must resolve in the registry (unknown names and
         // typoed params fail here, before any work is done) — the shared
         // scheduler spec and both per-cluster overrides all resolve
@@ -180,6 +242,9 @@ impl ExperimentConfig {
         build_scheduler(self.infra.scheduler_for(ResourceKind::Training))?;
         build_scheduler(self.infra.scheduler_for(ResourceKind::Compute))?;
         build_trigger(&self.runtime_view.trigger)?;
+        if let Some(hw) = &self.infra.hw_classes {
+            build_placer(&hw.placer)?;
+        }
         Ok(())
     }
 
@@ -200,15 +265,21 @@ impl ExperimentConfig {
     /// (`trace::StreamingPstSink`) both label traces through this one
     /// constructor and can never diverge.
     pub fn trace_meta(&self) -> TraceMeta {
+        let mut extra = vec![
+            ("scheduler".to_string(), self.infra.scheduler_label()),
+            ("trigger".to_string(), self.trigger_label()),
+        ];
+        // only hw-class configs carry a placer entry, so pre-existing
+        // captures stay byte-identical
+        if let Some(placer) = self.infra.placer_label() {
+            extra.push(("placer".to_string(), placer));
+        }
         TraceMeta {
             name: self.name.clone(),
             seed: self.seed,
             horizon: self.horizon,
             config_json: self.to_json_text(),
-            extra: vec![
-                ("scheduler".to_string(), self.infra.scheduler_label()),
-                ("trigger".to_string(), self.trigger_label()),
-            ],
+            extra,
         }
     }
 }
@@ -395,6 +466,77 @@ mod tests {
         assert!(!plain.contains("failures"));
         let back = ExperimentConfig::from_json_text(&plain).unwrap();
         assert_eq!(back.infra.failures, None);
+    }
+
+    #[test]
+    fn hw_class_configs_validate_slots_names_and_knobs() {
+        use crate::model::{HwClass, HwClasses};
+        let two_class = |a: HwClass, b: HwClass| {
+            let mut cfg = ExperimentConfig::default();
+            cfg.infra.training_capacity = 6;
+            cfg.infra.hw_classes = Some(HwClasses {
+                training: vec![a, b],
+                compute: Vec::new(),
+                placer: StrategySpec::new("fastest_fit"),
+            });
+            cfg
+        };
+        let good = two_class(
+            HwClass::new("a100", 2).with_speed(2.0).with_cost(3.0),
+            HwClass::new("v100", 4),
+        );
+        good.validate().unwrap();
+        let back = ExperimentConfig::from_json_text(&good.to_json_text()).unwrap();
+        assert_eq!(back.infra.hw_classes, good.infra.hw_classes);
+        // slots must sum to the cluster capacity
+        let bad = two_class(HwClass::new("a", 2), HwClass::new("b", 3));
+        let err = bad.validate().unwrap_err();
+        assert!(err.to_string().contains("sum to 5"), "{err}");
+        // duplicate names rejected
+        let bad = two_class(HwClass::new("a", 2), HwClass::new("a", 4));
+        let err = bad.validate().unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+        // non-finite / non-positive knobs rejected
+        let bad = two_class(HwClass::new("a", 2).with_speed(f64::NAN), HwClass::new("b", 4));
+        assert!(bad.validate().is_err());
+        let bad = two_class(HwClass::new("a", 2).with_speed(0.0), HwClass::new("b", 4));
+        assert!(bad.validate().is_err());
+        let bad = two_class(
+            HwClass::new("a", 2).with_cost(f64::INFINITY),
+            HwClass::new("b", 4),
+        );
+        assert!(bad.validate().is_err());
+        let bad = two_class(
+            HwClass::new("a", 2).with_fw_speed("tensorflow", -1.0),
+            HwClass::new("b", 4),
+        );
+        assert!(bad.validate().is_err());
+        // unknown placer rejected through the registry
+        let mut bad = good.clone();
+        bad.infra.hw_classes.as_mut().unwrap().placer = StrategySpec::new("no_such_placer");
+        assert!(bad.validate().is_err());
+        // classless configs are untouched by the new checks
+        let plain = ExperimentConfig::default().to_json_text();
+        assert!(!plain.contains("hw_classes"));
+        assert_eq!(
+            ExperimentConfig::from_json_text(&plain).unwrap().infra.hw_classes,
+            None
+        );
+    }
+
+    #[test]
+    fn trace_meta_placer_entry_only_with_classes() {
+        use crate::model::{HwClass, HwClasses};
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.trace_meta().get("placer"), None);
+        let mut cfg = ExperimentConfig::default();
+        cfg.infra.training_capacity = 4;
+        cfg.infra.hw_classes = Some(HwClasses {
+            training: vec![HwClass::new("gpu", 4)],
+            compute: Vec::new(),
+            placer: StrategySpec::new("spread"),
+        });
+        assert_eq!(cfg.trace_meta().get("placer"), Some("spread"));
     }
 
     #[test]

@@ -18,8 +18,8 @@ pub use experiment::Experiment;
 pub use params::{fit_params, fit_params_with_report, FitReport, SimParams};
 pub use result::ExperimentResult;
 pub use strategy::{
-    build_scheduler, build_trigger, register_scheduler, register_trigger, scheduler_names,
-    trigger_names, StrategySpec,
+    build_placer, build_scheduler, build_trigger, placer_names, register_placer,
+    register_scheduler, register_trigger, scheduler_names, trigger_names, StrategySpec,
 };
 pub use sweep::{GroupStats, MetricStats, Sweep, SweepResult};
 pub use triggers::{RetrainTrigger, TriggerCtx};

@@ -86,6 +86,20 @@ pub struct ExperimentResult {
     pub recovery_p50: f64,
     /// 95th percentile of the per-failure repair times.
     pub recovery_p95: f64,
+    /// Dollar cost of the run: per-class busy slot-seconds times each
+    /// class's `cost_per_slot_hour`, summed over both clusters. Exactly
+    /// 0.0 without hardware classes (or with all-zero cost knobs), so
+    /// like `preemptions`/`failures` it stays out of
+    /// [`ExperimentResult::digest`] — classless configs must keep
+    /// byte-identical digests across the heterogeneous-hardware release.
+    pub cost: f64,
+    /// Per-class busy-time utilization labeled `"<cluster>/<class>"`
+    /// in [training, compute] x config order. Empty without hardware
+    /// classes; out of the digest.
+    pub class_util: Vec<(String, f64)>,
+    /// Slot failures attributed to each class (same labels/order as
+    /// `class_util`). Empty without hardware classes; out of the digest.
+    pub class_failures: Vec<(String, u64)>,
     pub retrains_triggered: u64,
     pub models_deployed: u64,
     pub events_processed: u64,
@@ -112,6 +126,10 @@ pub struct ExperimentResult {
     /// Resolved retraining-trigger label, or `"off"` when the runtime
     /// view is disabled.
     pub trigger: String,
+    /// Resolved placement strategy label, or `""` when the config has
+    /// no hardware classes. Descriptive, so out of the digest like
+    /// `scheduler`/`trigger`.
+    pub placer: String,
     /// The captured event trace when `cfg.capture_trace` was set.
     /// Derivable run description, deliberately not part of the digest.
     pub trace: Option<Trace>,
@@ -239,11 +257,37 @@ impl ExperimentResult {
             "  avg queue len    training {:.2}  compute {:.2}",
             self.avg_queue_training, self.avg_queue_compute
         );
-        let _ = writeln!(
-            s,
-            "  strategies       scheduler {} | trigger {}",
-            self.scheduler, self.trigger
-        );
+        if self.placer.is_empty() {
+            let _ = writeln!(
+                s,
+                "  strategies       scheduler {} | trigger {}",
+                self.scheduler, self.trigger
+            );
+        } else {
+            let _ = writeln!(
+                s,
+                "  strategies       scheduler {} | trigger {} | placer {}",
+                self.scheduler, self.trigger, self.placer
+            );
+        }
+        if !self.class_util.is_empty() {
+            let _ = writeln!(s, "  cost             ${:.2}", self.cost);
+            for (label, util) in &self.class_util {
+                let fails = self
+                    .class_failures
+                    .iter()
+                    .find(|(l, _)| l == label)
+                    .map(|&(_, n)| n)
+                    .unwrap_or(0);
+                let _ = writeln!(
+                    s,
+                    "  class {:<16} util {:.1}%  failures {}",
+                    label,
+                    100.0 * util,
+                    fails
+                );
+            }
+        }
         let _ = writeln!(
             s,
             "  traffic          read {:.2} GB  write {:.2} GB (incl. TCP overhead)",
@@ -311,6 +355,9 @@ mod tests {
             goodput: 1.0,
             recovery_p50: 0.0,
             recovery_p95: 0.0,
+            cost: 0.0,
+            class_util: Vec::new(),
+            class_failures: Vec::new(),
             retrains_triggered: 0,
             models_deployed: 0,
             events_processed: 1000,
@@ -329,6 +376,7 @@ mod tests {
             pool_refills: 3,
             scheduler: "fifo".into(),
             trigger: "off".into(),
+            placer: String::new(),
             trace: None,
         }
     }
@@ -362,6 +410,17 @@ mod tests {
         assert!(s.contains("failures         2 (1 repaired)"), "{s}");
         assert!(s.contains("goodput 0.9500"), "{s}");
         assert!(s.contains("p50 300s"), "{s}");
+        // cost/class lines only appear with hardware classes configured
+        let mut r = empty_result();
+        r.placer = "fastest_fit".into();
+        r.cost = 42.5;
+        r.class_util = vec![("training/a100".into(), 0.75)];
+        r.class_failures = vec![("training/a100".into(), 1)];
+        let s = r.summary();
+        assert!(s.contains("placer fastest_fit"), "{s}");
+        assert!(s.contains("cost             $42.50"), "{s}");
+        assert!(s.contains("training/a100"), "{s}");
+        assert!(s.contains("util 75.0%  failures 1"), "{s}");
     }
 
     #[test]
@@ -390,6 +449,13 @@ mod tests {
         f.recovery_p50 = 600.0;
         f.recovery_p95 = 1800.0;
         assert_eq!(a.digest(), f.digest());
+        // cost accounting too: identically zero/empty without hardware
+        // classes, so classless digests survive the placement release
+        let mut h = empty_result();
+        h.cost = 123.45;
+        h.class_util = vec![("training/a100".into(), 0.5)];
+        h.class_failures = vec![("training/a100".into(), 2)];
+        assert_eq!(a.digest(), h.digest());
         let mut c = empty_result();
         c.completed += 1;
         assert_ne!(a.digest(), c.digest());
@@ -414,6 +480,7 @@ mod tests {
         let mut b = empty_result();
         b.scheduler = "edf:slack_per_class=900".into();
         b.trigger = "periodic:interval=3600".into();
+        b.placer = "cheapest_fit".into();
         b.trace = Some(Trace {
             meta: crate::trace::TraceMeta {
                 name: "t".into(),

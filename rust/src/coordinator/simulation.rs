@@ -22,7 +22,7 @@ use std::sync::Arc;
 
 use crate::arrivals::ArrivalModel;
 use crate::des::sched::JobCtx;
-use crate::des::{AcquireResult, Calendar, EventHandle, Granted, Resource, SimTime};
+use crate::des::{AcquireResult, Calendar, ClassPool, EventHandle, Granted, Resource, SimTime};
 use crate::error::Result;
 use crate::model::pipeline::TaskNode;
 use crate::model::{
@@ -41,7 +41,7 @@ use crate::tsdb::{SeriesHandle, SeriesKey, TsStore};
 use super::config::ExperimentConfig;
 use super::params::SimParams;
 use super::result::{rss_mb, series, ExperimentResult};
-use super::strategy::{build_scheduler, build_trigger};
+use super::strategy::{build_placer, build_scheduler, build_trigger};
 use super::triggers::{DeployedModel, RetrainTrigger};
 
 /// Calendar events.
@@ -64,6 +64,16 @@ enum Event {
     /// MTTR sample drawn when the failure landed — carried here so the
     /// trace can report the exact downtime without FIFO pairing).
     SlotRepaired(ResourceKind, f64),
+    /// Per-class failure injection: one slot of hardware class `.1` on
+    /// cluster `.0` fails (self-rescheduling through that class's own
+    /// MTBF distribution — scheduled only for classes with a failure
+    /// config).
+    ClassFailed(ResourceKind, u32),
+    /// A failed slot of hardware class `.1` comes back after the
+    /// carried repair time. Also used by cluster-level failures when
+    /// hardware classes are configured, so the repair restores the
+    /// same class the failure was attributed to.
+    ClassRepaired(ResourceKind, u32, f64),
 }
 
 /// Per-pipeline execution state (slab-allocated, freed on completion so
@@ -101,6 +111,11 @@ struct PipelineState {
     /// `done_handle` is set). A slot failure loses the attempt progress
     /// `t - attempt_start` back to the last checkpoint boundary.
     attempt_start: SimTime,
+    /// Hardware-class allocation of the in-flight task: `(class index,
+    /// slots)` per class, written at placement (grant) time and freed
+    /// on completion, preemption, or failure. Always empty when the
+    /// cluster has no `hw_classes`.
+    allocation: Vec<(u32, u32)>,
     /// Deployed-model slot to refresh when this (retraining) run deploys.
     retrain_of: Option<u32>,
     /// User priority (lower = more important; Fig 4's "model
@@ -195,6 +210,12 @@ pub(super) struct Simulation {
     cal: Calendar<Event>,
     training: Resource<u32>,
     compute: Resource<u32>,
+    /// Class-aware placement per cluster (`[training, compute]`), `None`
+    /// without `hw_classes` — the whole placement layer then costs one
+    /// branch per grant and perturbs nothing.
+    class_pools: [Option<ClassPool>; 2],
+    /// Landed failures per class, same indexing as `class_pools`.
+    class_failures: [Vec<u64>; 2],
     trigger: Box<dyn RetrainTrigger>,
     slab: Vec<Option<PipelineState>>,
     free: Vec<u32>,
@@ -306,6 +327,22 @@ impl Simulation {
             build_scheduler(cfg.infra.scheduler_for(ResourceKind::Compute))?,
         );
         let trigger = build_trigger(&cfg.runtime_view.trigger)?;
+        // class-aware placement: each configured cluster gets its own
+        // placer instance (stateful placers never share state across
+        // clusters); clusters without classes stay plain pools
+        let mut class_pools: [Option<ClassPool>; 2] = [None, None];
+        let mut class_failures: [Vec<u64>; 2] = [Vec::new(), Vec::new()];
+        if let Some(hw) = &cfg.infra.hw_classes {
+            for (i, kind) in [ResourceKind::Training, ResourceKind::Compute]
+                .iter()
+                .enumerate()
+            {
+                if let Some(classes) = cfg.infra.hw_classes_for(*kind) {
+                    class_pools[i] = Some(ClassPool::new(classes, build_placer(&hw.placer)?));
+                    class_failures[i] = vec![0; classes.len()];
+                }
+            }
+        }
         let mut db = TsStore::new();
         let h = SeriesHandles::intern(&mut db);
 
@@ -342,6 +379,22 @@ impl Simulation {
                 }
             }
         }
+        // per-class failure priming comes *after* every cluster-level
+        // draw (training classes then compute classes, config order),
+        // so configs without class failure knobs keep the failure
+        // stream — and their digests — byte-identical
+        for kind in [ResourceKind::Training, ResourceKind::Compute] {
+            if let Some(classes) = cfg.infra.hw_classes_for(kind) {
+                for (ci, hc) in classes.iter().enumerate() {
+                    if let Some(fc) = &hc.failures {
+                        let gap = fc.mtbf.sample(&mut rng_failure).max(0.0);
+                        if gap <= cfg.horizon {
+                            cal.schedule(gap, Event::ClassFailed(kind, ci as u32));
+                        }
+                    }
+                }
+            }
+        }
 
         Ok(Simulation {
             cfg,
@@ -350,6 +403,8 @@ impl Simulation {
             cal,
             training,
             compute,
+            class_pools,
+            class_failures,
             trigger,
             slab: Vec::new(),
             free: Vec::new(),
@@ -392,9 +447,76 @@ impl Simulation {
                 Event::RetrainLaunch(slot) => self.on_retrain_launch(t, slot)?,
                 Event::SlotFailed(kind) => self.on_slot_failed(t, kind)?,
                 Event::SlotRepaired(kind, downtime) => self.on_slot_repaired(t, kind, downtime),
+                Event::ClassFailed(kind, ci) => self.on_class_failed(t, kind, ci)?,
+                Event::ClassRepaired(kind, ci, downtime) => {
+                    self.on_class_repaired(t, kind, ci, downtime)
+                }
             }
         }
         self.finish(started)
+    }
+
+    /// Index of `kind`'s entry in `class_pools` / `class_failures`.
+    fn pool_idx(kind: ResourceKind) -> usize {
+        match kind {
+            ResourceKind::Training => 0,
+            ResourceKind::Compute => 1,
+        }
+    }
+
+    /// Place a just-granted task of `pid` onto `kind`'s hardware
+    /// classes via the configured placer and return the job's speed
+    /// factor (the slowest allocated class). Without `hw_classes` this
+    /// is a no-op returning 1.0 — and since `x / 1.0 == x` bit-exactly,
+    /// the classless service-time path is unperturbed.
+    fn place_task(&mut self, t: SimTime, pid: u32, kind: ResourceKind, job: &JobCtx) -> f64 {
+        let Some(pool) = self.class_pools[Self::pool_idx(kind)].as_mut() else {
+            return 1.0;
+        };
+        let st = self.slab[pid as usize].as_mut().expect("live pipeline");
+        debug_assert!(st.allocation.is_empty(), "task placed twice");
+        let fw = st.tasks.get(st.cur).framework;
+        let mut alloc = std::mem::take(&mut st.allocation);
+        alloc.clear();
+        let speed = pool.place(t, job, fw.map(|f| f.name()), &mut alloc);
+        st.allocation = alloc;
+        speed
+    }
+
+    /// Free `pid`'s class allocation back to its pool (no-op without
+    /// `hw_classes`, or when the task never got placed).
+    fn unplace(&mut self, t: SimTime, pid: u32, kind: ResourceKind) {
+        let Some(pool) = self.class_pools[Self::pool_idx(kind)].as_mut() else {
+            return;
+        };
+        let st = self.slab[pid as usize].as_mut().expect("live pipeline");
+        pool.release(t, &st.allocation);
+        st.allocation.clear();
+    }
+
+    /// Emit one `TaskPlaced` record per allocated class of `pid`'s
+    /// current task — immediately after the grant's `TaskStarted`, per
+    /// the format-v5 spec. Capture-gated; no-op without `hw_classes`.
+    fn emit_placed(&mut self, t: SimTime, pid: u32, kind: ResourceKind) {
+        if !self.capture || self.class_pools[Self::pool_idx(kind)].is_none() {
+            return;
+        }
+        let (task, alloc) = {
+            let st = self.slab[pid as usize].as_ref().expect("live pipeline");
+            (st.tasks.get(st.cur).task, st.allocation.clone())
+        };
+        for (class, slots) in alloc {
+            self.sink.record(&TraceEvent {
+                t,
+                kind: TraceEventKind::TaskPlaced {
+                    pid,
+                    task,
+                    resource: kind,
+                    class,
+                    slots,
+                },
+            });
+        }
     }
 
     /// Slab-allocate a pipeline, reusing freed slots.
@@ -461,6 +583,7 @@ impl Simulation {
             done_at: 0.0,
             remaining_service: None,
             attempt_start: 0.0,
+            allocation: Vec::new(),
             retrain_of: None,
             // user-assigned priority class 1..=10
             priority: 1.0 + self.rng_noise.below(10) as f64,
@@ -513,7 +636,7 @@ impl Simulation {
         let t_now = self.cal.now();
         let exec = self.sample_exec(pid)?;
         let store = self.cfg.infra.store;
-        let (task, fw_tag, read_t, write_t, read_wire, write_wire, total, job) = {
+        let (task, fw_tag, read_t, write_t, read_wire, write_wire, job) = {
             let st = self.slab[pid as usize].as_mut().expect("live pipeline");
             let node = st.tasks.get(st.cur);
             let task = node.task;
@@ -534,7 +657,6 @@ impl Simulation {
                 st.pending_write,
                 store.wire_bytes(read_b),
                 store.wire_bytes(write_b),
-                total,
                 job,
             )
         };
@@ -554,6 +676,11 @@ impl Simulation {
         };
         match acquired {
             AcquireResult::Acquired => {
+                // the grant is the placement point: the chosen class's
+                // speed scales the exec component (I/O is unaffected)
+                let speed = self.place_task(t_now, pid, kind, &job);
+                let exec_s = exec / speed;
+                let total_s = read_t + exec_s + write_t;
                 if self.capture {
                     self.sink.record(&TraceEvent {
                         t: t_now,
@@ -561,16 +688,18 @@ impl Simulation {
                             pid,
                             task,
                             framework: fw_tag,
-                            exec,
+                            exec: exec_s,
                             read: read_t,
                             write: write_t,
                         },
                     });
                 }
-                let h = self.cal.schedule(total, Event::TaskDone(pid));
+                self.emit_placed(t_now, pid, kind);
+                let h = self.cal.schedule(total_s, Event::TaskDone(pid));
                 let st = self.slab[pid as usize].as_mut().expect("live pipeline");
+                st.pending_exec = exec_s;
                 st.done_handle = Some(h);
-                st.done_at = t_now + total;
+                st.done_at = t_now + total_s;
                 st.attempt_start = t_now;
             }
             AcquireResult::Queued => {
@@ -604,6 +733,12 @@ impl Simulation {
                 let cancelled = self.cal.cancel(vh);
                 debug_assert!(cancelled, "victim completion was pending");
                 self.c.preemptions += 1;
+                // the victim's class slots free up before the preemptor
+                // places into them
+                self.unplace(t_now, victim, kind);
+                let speed = self.place_task(t_now, pid, kind, &job);
+                let exec_s = exec / speed;
+                let total_s = read_t + exec_s + write_t;
                 if self.capture {
                     self.sink.record(&TraceEvent {
                         t: t_now,
@@ -630,16 +765,18 @@ impl Simulation {
                             pid,
                             task,
                             framework: fw_tag,
-                            exec,
+                            exec: exec_s,
                             read: read_t,
                             write: write_t,
                         },
                     });
                 }
-                let h = self.cal.schedule(total, Event::TaskDone(pid));
+                self.emit_placed(t_now, pid, kind);
+                let h = self.cal.schedule(total_s, Event::TaskDone(pid));
                 let st = self.slab[pid as usize].as_mut().expect("live pipeline");
+                st.pending_exec = exec_s;
                 st.done_handle = Some(h);
-                st.done_at = t_now + total;
+                st.done_at = t_now + total_s;
                 st.attempt_start = t_now;
             }
         }
@@ -679,6 +816,9 @@ impl Simulation {
                 },
             });
         }
+        // class slots free before the cluster release, so waiters
+        // granted into the freed capacity can place into them
+        self.unplace(t, pid, kind);
         let slots = self.cfg.infra.task_slots(task);
         let mut grants = std::mem::take(&mut self.grant_buf);
         grants.clear();
@@ -730,15 +870,33 @@ impl Simulation {
     fn apply_grants(&mut self, t: SimTime, kind: ResourceKind) {
         let mut grants = std::mem::take(&mut self.grant_buf);
         for g in grants.drain(..) {
-            let (total, node, g_exec, g_read, g_write) = {
+            let (resumed, nominal, pri, arr, slots) = {
                 let w = self.slab[g.token as usize].as_mut().expect("queued pipeline");
                 w.total_wait += g.waited;
-                // a preempted or failed task resumes with its remaining
-                // service (incl. any failure-lost tail to re-do)
-                let total = w
-                    .remaining_service
-                    .take()
-                    .unwrap_or(w.pending_read + w.pending_exec + w.pending_write);
+                (
+                    // a preempted or failed task resumes with its
+                    // remaining service (incl. any failure-lost tail)
+                    w.remaining_service.take(),
+                    w.pending_read + w.pending_exec + w.pending_write,
+                    w.priority,
+                    w.arrived_at,
+                    self.cfg.infra.task_slots(w.tasks.get(w.cur).task),
+                )
+            };
+            // the grant is the placement point. Fresh grants run at the
+            // placed class's speed; resumed remainders are wall-clock
+            // service already, so re-placement never re-scales them.
+            let job = JobCtx::new(resumed.unwrap_or(nominal), pri, arr).with_slots(slots);
+            let speed = self.place_task(t, g.token, kind, &job);
+            let (total, node, g_exec, g_read, g_write) = {
+                let w = self.slab[g.token as usize].as_mut().expect("queued pipeline");
+                let total = match resumed {
+                    Some(rem) => rem,
+                    None => {
+                        w.pending_exec /= speed;
+                        w.pending_read + w.pending_exec + w.pending_write
+                    }
+                };
                 w.done_at = t + total;
                 w.attempt_start = t;
                 let node = w.tasks.get(w.cur);
@@ -776,6 +934,7 @@ impl Simulation {
                     },
                 });
             }
+            self.emit_placed(t, g.token, kind);
             let h = self.cal.schedule(total, Event::TaskDone(g.token));
             self.slab[g.token as usize]
                 .as_mut()
@@ -836,6 +995,33 @@ impl Simulation {
                 ResourceKind::Training => self.training.fail_slot(),
                 ResourceKind::Compute => self.compute.fail_slot(),
             }
+            // with hardware classes, the failed slot is attributed to a
+            // class so placement capacity shrinks in the same ledger: a
+            // busy hit takes a slot of the victim's (first) class, an
+            // idle hit the first class with a free slot. The repair
+            // event carries the class so recovery restores it.
+            let class_hit = if self.class_pools[Self::pool_idx(kind)].is_some() {
+                let pi = Self::pool_idx(kind);
+                let ci = match victim {
+                    Some(vpid) => self.slab[vpid as usize]
+                        .as_ref()
+                        .expect("failure victim is live")
+                        .allocation
+                        .first()
+                        .map(|&(c, _)| c)
+                        .unwrap_or(0),
+                    None => {
+                        let pool = self.class_pools[pi].as_ref().expect("checked above");
+                        pool.classes.iter().position(|c| c.free() > 0).unwrap_or(0) as u32
+                    }
+                };
+                let pool = self.class_pools[pi].as_mut().expect("checked above");
+                pool.fail_slot(ci as usize);
+                self.class_failures[pi][ci as usize] += 1;
+                Some(ci)
+            } else {
+                None
+            };
             let offline = match kind {
                 ResourceKind::Training => self.training.offline(),
                 ResourceKind::Compute => self.compute.offline(),
@@ -855,7 +1041,11 @@ impl Simulation {
             }
             let mttr = fc.mttr.sample(&mut self.rng_failure).max(0.0);
             self.c.downtimes.push(mttr);
-            self.cal.schedule(mttr, Event::SlotRepaired(kind, mttr));
+            let repair = match class_hit {
+                Some(ci) => Event::ClassRepaired(kind, ci, mttr),
+                None => Event::SlotRepaired(kind, mttr),
+            };
+            self.cal.schedule(mttr, repair);
         }
         // next failure on this cluster; like the other periodic events,
         // stop once the system has fully drained so max_pipelines runs
@@ -927,6 +1117,8 @@ impl Simulation {
             });
         }
         // release the victim's slots under the already-reduced capacity
+        // (class slots first, so re-granted waiters can place there)
+        self.unplace(t, pid, kind);
         let mut grants = std::mem::take(&mut self.grant_buf);
         grants.clear();
         match kind {
@@ -956,7 +1148,11 @@ impl Simulation {
         }
         match acquired {
             AcquireResult::Acquired => {
-                // room left on the shrunken cluster: restart immediately
+                // room left on the shrunken cluster: restart immediately.
+                // The remainder is wall-clock (already-scaled) service,
+                // so the fresh placement's speed never re-scales it.
+                self.place_task(t, pid, kind, &job);
+                self.emit_placed(t, pid, kind);
                 let h = self.cal.schedule(new_rem, Event::TaskDone(pid));
                 let st = self.slab[pid as usize].as_mut().expect("failure victim is live");
                 st.remaining_service = None;
@@ -986,6 +1182,9 @@ impl Simulation {
                 let cancelled = self.cal.cancel(wh);
                 debug_assert!(cancelled, "victim completion was pending");
                 self.c.preemptions += 1;
+                // evicted class slots free up, then the restart places
+                self.unplace(t, victim, kind);
+                self.place_task(t, pid, kind, &job);
                 if self.capture {
                     self.sink.record(&TraceEvent {
                         t,
@@ -1006,6 +1205,7 @@ impl Simulation {
                         },
                     });
                 }
+                self.emit_placed(t, pid, kind);
                 let h = self.cal.schedule(new_rem, Event::TaskDone(pid));
                 let st = self.slab[pid as usize].as_mut().expect("failure victim is live");
                 st.remaining_service = None;
@@ -1045,6 +1245,110 @@ impl Simulation {
             });
         }
         self.apply_grants(t, kind);
+    }
+
+    /// Per-class failure injection: one slot of hardware class `ci` on
+    /// `kind`'s cluster dies. Mirrors [`Simulation::on_slot_failed`],
+    /// except the placement draw is uniform over the *class's* online
+    /// slots and the blast radius only reaches tasks with slots
+    /// allocated in that class — other classes keep running, bounding
+    /// the blast radius to one failure domain.
+    fn on_class_failed(&mut self, t: SimTime, kind: ResourceKind, ci: u32) -> Result<()> {
+        let fc = self
+            .cfg
+            .infra
+            .hw_classes_for(kind)
+            .and_then(|cs| cs.get(ci as usize))
+            .and_then(|hc| hc.failures.clone())
+            .expect("class-failure events are only scheduled with a class failure config");
+        let pi = Self::pool_idx(kind);
+        let (online, busy) = {
+            let pool = self.class_pools[pi].as_ref().expect("class events imply a pool");
+            let c = &pool.classes[ci as usize];
+            (c.online(), c.in_use)
+        };
+        if online > 0 {
+            let u = self.rng_failure.below(online);
+            // map a busy placement to the pipeline occupying it: walk
+            // the slab in pid order accumulating each running task's
+            // slots allocated *in this class*
+            let mut victim: Option<u32> = None;
+            if u < busy {
+                let mut acc = 0usize;
+                for (i, slot) in self.slab.iter().enumerate() {
+                    if let Some(st) = slot {
+                        if st.done_handle.is_some()
+                            && ResourceKind::for_task(st.tasks.get(st.cur).task) == kind
+                        {
+                            let width: u32 = st
+                                .allocation
+                                .iter()
+                                .filter(|&&(c, _)| c == ci)
+                                .map(|&(_, n)| n)
+                                .sum();
+                            if width > 0 {
+                                acc += width as usize;
+                                if acc > u {
+                                    victim = Some(i as u32);
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                }
+                debug_assert!(victim.is_some(), "busy class slots imply a running owner");
+            }
+            // both ledgers shrink before the victim's slots release
+            match kind {
+                ResourceKind::Training => self.training.fail_slot(),
+                ResourceKind::Compute => self.compute.fail_slot(),
+            }
+            self.class_pools[pi]
+                .as_mut()
+                .expect("class events imply a pool")
+                .fail_slot(ci as usize);
+            self.class_failures[pi][ci as usize] += 1;
+            let offline = match kind {
+                ResourceKind::Training => self.training.offline(),
+                ResourceKind::Compute => self.compute.offline(),
+            } as u32;
+            self.c.failures += 1;
+            if self.capture {
+                self.sink.record(&TraceEvent {
+                    t,
+                    kind: TraceEventKind::SlotFailed {
+                        resource: kind,
+                        offline,
+                    },
+                });
+            }
+            if let Some(vpid) = victim {
+                self.fail_running_task(t, vpid, kind, &fc);
+            }
+            let mttr = fc.mttr.sample(&mut self.rng_failure).max(0.0);
+            self.c.downtimes.push(mttr);
+            self.cal.schedule(mttr, Event::ClassRepaired(kind, ci, mttr));
+        }
+        // next failure of this class; same drain rule as the cluster-
+        // level stream, and the gap is always drawn so the stream
+        // position never depends on what was hit
+        let gap = fc.mtbf.sample(&mut self.rng_failure).max(0.0);
+        let drained = self.c.arrivals_stopped && self.c.live == 0 && self.deployed.is_empty();
+        if !drained && t + gap <= self.cfg.horizon {
+            self.cal.schedule(gap, Event::ClassFailed(kind, ci));
+        }
+        Ok(())
+    }
+
+    /// A failed slot of class `ci` comes back: restore the class ledger
+    /// first, so queued tasks granted by the cluster-level repair can
+    /// place into the recovered slot, then run the shared repair path.
+    fn on_class_repaired(&mut self, t: SimTime, kind: ResourceKind, ci: u32, downtime: f64) {
+        self.class_pools[Self::pool_idx(kind)]
+            .as_mut()
+            .expect("class events imply a pool")
+            .repair_slot(ci as usize);
+        self.on_slot_repaired(t, kind, downtime);
     }
 
     /// Task-specific model-metric effects; returns whether the quality
@@ -1275,6 +1579,7 @@ impl Simulation {
             done_at: 0.0,
             remaining_service: None,
             attempt_start: 0.0,
+            allocation: Vec::new(),
             retrain_of: Some(slot),
             priority: 0.0, // retrains jump the queue
         };
@@ -1324,6 +1629,25 @@ impl Simulation {
         downtimes.sort_by(|a, b| a.partial_cmp(b).expect("downtimes are finite"));
         let recovery_p50 = pct(&downtimes, 0.50);
         let recovery_p95 = pct(&downtimes, 0.95);
+        // hardware-class accounting: settle busy-time integrals at the
+        // covered horizon, then fold per-class busy seconds into dollar
+        // cost and label per-class utilization / failure counts as
+        // "<cluster>/<class>" in [training, compute] x config order
+        let mut cost = 0.0;
+        let mut class_util: Vec<(String, f64)> = Vec::new();
+        let mut class_failures: Vec<(String, u64)> = Vec::new();
+        for (pi, kind) in [ResourceKind::Training, ResourceKind::Compute].iter().enumerate() {
+            if let Some(pool) = self.class_pools[pi].as_mut() {
+                pool.settle(horizon_covered);
+                cost += pool.cost();
+                for (ci, c) in pool.classes.iter().enumerate() {
+                    let label = format!("{}/{}", kind.name(), c.cfg.name);
+                    class_util.push((label.clone(), pool.utilization(ci, horizon_covered)));
+                    class_failures.push((label, self.class_failures[pi][ci]));
+                }
+            }
+        }
+        let placer = self.cfg.infra.placer_label().unwrap_or_default();
         // the stream is complete: streaming sinks finalize (string-table
         // + meta footer, flush) before the result is assembled
         self.sink.finish()?;
@@ -1367,8 +1691,12 @@ impl Simulation {
             peak_rss_mb: self.c.peak_rss,
             sampler_backend: self.backend.name().into(),
             pool_refills,
+            cost,
+            class_util,
+            class_failures,
             scheduler,
             trigger,
+            placer,
             trace,
             tsdb: self.db,
         })

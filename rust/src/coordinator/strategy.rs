@@ -7,11 +7,12 @@
 //! recompiling: a spec round-trips through JSON (`util::jsonio`), rides
 //! inside `ExperimentConfig`, and is parsed from CLI grids
 //! (`sweep --schedulers fifo,edf:slack_per_class=900`). Custom strategies
-//! register at startup via [`register_scheduler`] /
-//! [`register_trigger`] and are then selectable exactly like built-ins.
+//! register at startup via [`register_scheduler`] / [`register_trigger`]
+//! / [`register_placer`] and are then selectable exactly like built-ins.
 
 use std::sync::{OnceLock, RwLock};
 
+use crate::des::place::{CheapestFit, FastestFit, Pack, Placer, Spread};
 use crate::des::sched::{
     EarliestDeadlineFirst, EasyBackfill, Fifo, PreemptivePriority, Priority, RestartFirst,
     Scheduler, ShortestJobFirst, WeightedFair,
@@ -214,6 +215,33 @@ const BUILTIN_TRIGGERS: &[(&str, TriggerCtor)] = &[
     ("periodic", ctor_periodic),
 ];
 
+/// Constructor turning a spec into a live placement strategy.
+pub type PlacerCtor = fn(&StrategySpec) -> Result<Box<dyn Placer>>;
+
+fn ctor_fastest_fit(spec: &StrategySpec) -> Result<Box<dyn Placer>> {
+    spec.check_keys(&[])?;
+    Ok(Box::new(FastestFit))
+}
+fn ctor_cheapest_fit(spec: &StrategySpec) -> Result<Box<dyn Placer>> {
+    spec.check_keys(&[])?;
+    Ok(Box::new(CheapestFit))
+}
+fn ctor_pack(spec: &StrategySpec) -> Result<Box<dyn Placer>> {
+    spec.check_keys(&[])?;
+    Ok(Box::new(Pack))
+}
+fn ctor_spread(spec: &StrategySpec) -> Result<Box<dyn Placer>> {
+    spec.check_keys(&[])?;
+    Ok(Box::new(Spread))
+}
+
+const BUILTIN_PLACERS: &[(&str, PlacerCtor)] = &[
+    ("fastest_fit", ctor_fastest_fit),
+    ("cheapest_fit", ctor_cheapest_fit),
+    ("pack", ctor_pack),
+    ("spread", ctor_spread),
+];
+
 fn sched_ext() -> &'static RwLock<Vec<(String, SchedulerCtor)>> {
     static EXT: OnceLock<RwLock<Vec<(String, SchedulerCtor)>>> = OnceLock::new();
     EXT.get_or_init(|| RwLock::new(Vec::new()))
@@ -221,6 +249,11 @@ fn sched_ext() -> &'static RwLock<Vec<(String, SchedulerCtor)>> {
 
 fn trigger_ext() -> &'static RwLock<Vec<(String, TriggerCtor)>> {
     static EXT: OnceLock<RwLock<Vec<(String, TriggerCtor)>>> = OnceLock::new();
+    EXT.get_or_init(|| RwLock::new(Vec::new()))
+}
+
+fn placer_ext() -> &'static RwLock<Vec<(String, PlacerCtor)>> {
+    static EXT: OnceLock<RwLock<Vec<(String, PlacerCtor)>>> = OnceLock::new();
     EXT.get_or_init(|| RwLock::new(Vec::new()))
 }
 
@@ -239,6 +272,14 @@ pub fn register_trigger(name: &str, ctor: TriggerCtor) {
     trigger_ext()
         .write()
         .expect("trigger registry poisoned")
+        .push((name.to_string(), ctor));
+}
+
+/// Register a custom placement-strategy constructor under `name`.
+pub fn register_placer(name: &str, ctor: PlacerCtor) {
+    placer_ext()
+        .write()
+        .expect("placer registry poisoned")
         .push((name.to_string(), ctor));
 }
 
@@ -277,6 +318,23 @@ pub fn build_trigger(spec: &StrategySpec) -> Result<Box<dyn RetrainTrigger>> {
     )))
 }
 
+/// Build a placement strategy from its spec.
+pub fn build_placer(spec: &StrategySpec) -> Result<Box<dyn Placer>> {
+    let ext = placer_ext().read().expect("placer registry poisoned");
+    if let Some((_, ctor)) = ext.iter().rev().find(|(n, _)| *n == spec.name) {
+        return ctor(spec);
+    }
+    drop(ext);
+    if let Some((_, ctor)) = BUILTIN_PLACERS.iter().find(|(n, _)| *n == spec.name) {
+        return ctor(spec);
+    }
+    Err(Error::Config(format!(
+        "unknown placer '{}' (known: {})",
+        spec.name,
+        placer_names().join(", ")
+    )))
+}
+
 /// All selectable scheduler names: built-ins plus registered extensions,
 /// in registration order, deduplicated.
 pub fn scheduler_names() -> Vec<String> {
@@ -299,6 +357,20 @@ pub fn trigger_names() -> Vec<String> {
         .map(|(n, _)| n.to_string())
         .collect();
     for (n, _) in trigger_ext().read().expect("trigger registry poisoned").iter() {
+        if !names.contains(n) {
+            names.push(n.clone());
+        }
+    }
+    names
+}
+
+/// All selectable placement-strategy names.
+pub fn placer_names() -> Vec<String> {
+    let mut names: Vec<String> = BUILTIN_PLACERS
+        .iter()
+        .map(|(n, _)| n.to_string())
+        .collect();
+    for (n, _) in placer_ext().read().expect("placer registry poisoned").iter() {
         if !names.contains(n) {
             names.push(n.clone());
         }
@@ -337,6 +409,10 @@ mod tests {
             let t = build_trigger(&StrategySpec::new(name)).unwrap();
             assert_eq!(t.name(), name);
         }
+        for name in ["fastest_fit", "cheapest_fit", "pack", "spread"] {
+            let p = build_placer(&StrategySpec::new(name)).unwrap();
+            assert_eq!(p.name(), name);
+        }
     }
 
     #[test]
@@ -345,6 +421,21 @@ mod tests {
         assert!(err.to_string().contains("fifo"), "{err}");
         assert!(build_scheduler(&StrategySpec::new("fifo").with("x", 1.0)).is_err());
         assert!(build_trigger(&StrategySpec::new("drift_threshold").with("thresh", 0.1)).is_err());
+        let err = build_placer(&StrategySpec::new("bogus")).unwrap_err();
+        assert!(err.to_string().contains("fastest_fit"), "{err}");
+        assert!(build_placer(&StrategySpec::new("pack").with("x", 1.0)).is_err());
+    }
+
+    #[test]
+    fn placer_registry_lists_and_extends() {
+        fn ctor(spec: &StrategySpec) -> Result<Box<dyn Placer>> {
+            spec.check_keys(&[])?;
+            Ok(Box::new(crate::des::place::FastestFit))
+        }
+        register_placer("custom_test_placer", ctor);
+        assert!(placer_names().iter().any(|n| n == "custom_test_placer"));
+        let p = build_placer(&StrategySpec::new("custom_test_placer")).unwrap();
+        assert_eq!(p.name(), "fastest_fit"); // the ctor builds FastestFit underneath
     }
 
     #[test]

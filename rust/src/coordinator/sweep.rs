@@ -278,12 +278,12 @@ impl SweepResult {
         let mut s = String::from(
             "cell,name,seed,arrived,completed,tasks_executed,events_processed,\
              util_training,util_compute,mean_wait_training_s,avg_queue_training,\
-             final_mean_performance,failures,lost_work_s,goodput,wall_secs\n",
+             final_mean_performance,failures,lost_work_s,goodput,cost,wall_secs\n",
         );
         for (i, r) in self.results.iter().enumerate() {
             let _ = writeln!(
                 s,
-                "{i},{},{},{},{},{},{},{:.6},{:.6},{:.3},{:.3},{:.4},{},{:.3},{:.6},{:.4}",
+                "{i},{},{},{},{},{},{},{:.6},{:.6},{:.3},{:.3},{:.4},{},{:.3},{:.6},{:.4},{:.4}",
                 r.name,
                 r.seed,
                 r.arrived,
@@ -298,6 +298,7 @@ impl SweepResult {
                 r.failures,
                 r.lost_work,
                 r.goodput,
+                r.cost,
                 r.wall_secs
             );
         }
@@ -306,7 +307,7 @@ impl SweepResult {
 }
 
 /// The metrics aggregated across replications.
-fn metric_values(r: &ExperimentResult) -> [(&'static str, f64); 15] {
+fn metric_values(r: &ExperimentResult) -> [(&'static str, f64); 16] {
     [
         ("arrived", r.arrived as f64),
         ("completed", r.completed as f64),
@@ -323,6 +324,7 @@ fn metric_values(r: &ExperimentResult) -> [(&'static str, f64); 15] {
         ("failures", r.failures as f64),
         ("lost_work_s", r.lost_work),
         ("goodput", r.goodput),
+        ("cost", r.cost),
     ]
 }
 

@@ -1,0 +1,543 @@
+//! Class-aware placement: which hardware class a granted job runs on.
+//!
+//! Clusters stay capacity-limited [`Resource`](super::Resource)s — a
+//! grant still means "the cluster has the slots". When the cluster is
+//! configured with [`HwClass`]es, a [`Placer`] strategy then decides
+//! *which* class-tagged slots the granted job occupies, and the chosen
+//! class's speed profile scales the task's sampled service time while
+//! its price accrues busy-time cost. Placement is layered strictly on
+//! top of scheduling: admission, ordering, and preemption decisions are
+//! untouched, so a single-class pool at speed 1.0 with no cost knobs is
+//! byte-identical in digest to the homogeneous pool it replaces.
+//!
+//! Placers are registered alongside schedulers and retrain triggers in
+//! `coordinator::strategy` (JSON `StrategySpec` + CLI + sweep axes) and
+//! must draw no randomness: the simulation's RNG substream layout is
+//! part of the determinism contract.
+
+use super::sched::JobCtx;
+use super::SimTime;
+use crate::model::infra::HwClass;
+
+/// What a [`Placer`] sees of one hardware class at placement time.
+#[derive(Clone, Copy, Debug)]
+pub struct ClassView {
+    /// Index of the class in the cluster's ordered class list.
+    pub idx: usize,
+    /// Nominal slots of this class.
+    pub slots: usize,
+    /// Slots currently online (nominal minus failed).
+    pub online: usize,
+    /// Slots currently occupied by running jobs.
+    pub in_use: usize,
+    /// Slots available right now (`online - in_use`, floored at 0).
+    pub free: usize,
+    /// Execution-speed factor for *this job* (per-framework profile
+    /// already resolved — see [`HwClass::speed_for`]).
+    pub speed: f64,
+    /// Price of one busy slot-second.
+    pub cost_per_sec: f64,
+}
+
+/// Context of one placement decision.
+#[derive(Clone, Copy, Debug)]
+pub struct PlaceCtx<'a> {
+    pub now: SimTime,
+    /// The granted job (slots, priority, expected occupancy).
+    pub job: JobCtx,
+    /// Slots to allocate (`job.slots`).
+    pub need: u32,
+    /// One view per configured class, in config order.
+    pub classes: &'a [ClassView],
+}
+
+/// A placement strategy: ranks classes and allocates a granted job's
+/// slots across them. The contract mirrors `Scheduler`: pure decision
+/// logic, no randomness, deterministic for identical inputs.
+pub trait Placer: Send {
+    /// Registry name (e.g. `"fastest_fit"`).
+    fn name(&self) -> &'static str;
+
+    /// Preference score for `class` — **lower is better**. Ties break
+    /// toward the lower class index, so scores need not be unique.
+    fn score(&mut self, class: &ClassView, ctx: &PlaceCtx) -> f64;
+
+    /// Allocate `ctx.need` slots, appending `(class index, slots)`
+    /// pairs to `out`. The default rule: place the whole job in the
+    /// best-scoring class that can hold it; when no single class fits,
+    /// spill greedily across classes in score order. Implementations
+    /// may allocate fewer than `need` slots only when the cluster
+    /// genuinely lacks free class slots (the caller tops up from any
+    /// free class and keeps cluster accounting consistent).
+    fn place(&mut self, ctx: &PlaceCtx, out: &mut Vec<(u32, u32)>) {
+        let order = rank(self, ctx);
+        let need = ctx.need as usize;
+        for &i in &order {
+            if ctx.classes[i].free >= need {
+                out.push((i as u32, ctx.need));
+                return;
+            }
+        }
+        let mut left = ctx.need;
+        for &i in &order {
+            if left == 0 {
+                break;
+            }
+            let take = (ctx.classes[i].free as u32).min(left);
+            if take > 0 {
+                out.push((i as u32, take));
+                left -= take;
+            }
+        }
+    }
+}
+
+/// Class indices sorted by ascending score, ties by index — the shared
+/// ranking pass behind the default [`Placer::place`].
+fn rank<P: Placer + ?Sized>(placer: &mut P, ctx: &PlaceCtx) -> Vec<usize> {
+    let mut order: Vec<(f64, usize)> = ctx
+        .classes
+        .iter()
+        .map(|c| (placer.score(c, ctx), c.idx))
+        .collect();
+    order.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    order.into_iter().map(|(_, i)| i).collect()
+}
+
+/// Prefer the class that runs this job fastest (highest effective
+/// speed); among equally fast classes, config order wins.
+pub struct FastestFit;
+
+impl Placer for FastestFit {
+    fn name(&self) -> &'static str {
+        "fastest_fit"
+    }
+    fn score(&mut self, class: &ClassView, _ctx: &PlaceCtx) -> f64 {
+        -class.speed
+    }
+}
+
+/// Prefer the cheapest class (lowest cost per busy slot-second); among
+/// equally priced classes, the faster one wins.
+pub struct CheapestFit;
+
+impl Placer for CheapestFit {
+    fn name(&self) -> &'static str {
+        "cheapest_fit"
+    }
+    fn score(&mut self, class: &ClassView, _ctx: &PlaceCtx) -> f64 {
+        // speed as a bounded tie-break under the primary cost key
+        class.cost_per_sec - class.speed * 1e-12
+    }
+}
+
+/// Utilization packing: fill the most-utilized class that still fits,
+/// keeping whole classes empty for future wide jobs (and for draining
+/// under cost pressure).
+pub struct Pack;
+
+impl Placer for Pack {
+    fn name(&self) -> &'static str {
+        "pack"
+    }
+    fn score(&mut self, class: &ClassView, _ctx: &PlaceCtx) -> f64 {
+        class.free as f64
+    }
+}
+
+/// Failure-domain spread for gang jobs: allocate one slot at a time,
+/// always to the class with the most remaining free slots, so a wide
+/// job lands across as many classes (failure domains) as possible and
+/// a single class failure costs the fewest of its slots.
+pub struct Spread;
+
+impl Placer for Spread {
+    fn name(&self) -> &'static str {
+        "spread"
+    }
+    fn score(&mut self, class: &ClassView, _ctx: &PlaceCtx) -> f64 {
+        -(class.free as f64)
+    }
+    fn place(&mut self, ctx: &PlaceCtx, out: &mut Vec<(u32, u32)>) {
+        let mut taken = vec![0u32; ctx.classes.len()];
+        let mut left = ctx.need;
+        while left > 0 {
+            let mut best: Option<(usize, usize)> = None; // (free remaining, idx)
+            for (i, c) in ctx.classes.iter().enumerate() {
+                let rem = c.free.saturating_sub(taken[i] as usize);
+                if rem == 0 {
+                    continue;
+                }
+                // strictly-more-free wins; ties keep the earlier class
+                if best.map(|(brem, _)| rem > brem).unwrap_or(true) {
+                    best = Some((rem, i));
+                }
+            }
+            let Some((_, i)) = best else { break };
+            taken[i] += 1;
+            left -= 1;
+        }
+        for (i, &k) in taken.iter().enumerate() {
+            if k > 0 {
+                out.push((i as u32, k));
+            }
+        }
+    }
+}
+
+/// Live state of one hardware class: its config plus occupancy,
+/// failed-slot count, and the busy slot-seconds integral that cost and
+/// per-class utilization are computed from.
+#[derive(Clone, Debug)]
+pub struct ClassState {
+    pub cfg: HwClass,
+    pub in_use: usize,
+    pub offline: usize,
+    /// ∫ in_use dt — busy slot-seconds, advanced lazily on every
+    /// occupancy change ([`ClassState::touch`]).
+    busy_integral: f64,
+    last_t: SimTime,
+}
+
+impl ClassState {
+    /// Advance the busy integral to `t`. Out-of-order touches (a repair
+    /// racing the final settle) clamp to zero elapsed time.
+    fn touch(&mut self, t: SimTime) {
+        let dt = (t - self.last_t).max(0.0);
+        self.busy_integral += self.in_use as f64 * dt;
+        self.last_t = self.last_t.max(t);
+    }
+
+    /// Slots currently online.
+    pub fn online(&self) -> usize {
+        self.cfg.slots.saturating_sub(self.offline)
+    }
+
+    /// Slots free for placement right now.
+    pub fn free(&self) -> usize {
+        self.online().saturating_sub(self.in_use)
+    }
+
+    /// Busy slot-seconds accrued so far (advance with
+    /// [`ClassPool::settle`] first for an up-to-date figure).
+    pub fn busy_slot_secs(&self) -> f64 {
+        self.busy_integral
+    }
+}
+
+/// Per-cluster placement state: the ordered class list plus the placer
+/// that assigns granted jobs to classes. Occupancy here mirrors the
+/// cluster [`Resource`](super::Resource) — the resource decides *how
+/// many* slots a job gets and when; the pool decides *which class* they
+/// come from.
+pub struct ClassPool {
+    pub classes: Vec<ClassState>,
+    placer: Box<dyn Placer>,
+    view_buf: Vec<ClassView>,
+    alloc_buf: Vec<(u32, u32)>,
+}
+
+impl ClassPool {
+    pub fn new(classes: &[HwClass], placer: Box<dyn Placer>) -> Self {
+        ClassPool {
+            classes: classes
+                .iter()
+                .map(|cfg| ClassState {
+                    cfg: cfg.clone(),
+                    in_use: 0,
+                    offline: 0,
+                    busy_integral: 0.0,
+                    last_t: 0.0,
+                })
+                .collect(),
+            placer,
+            view_buf: Vec::new(),
+            alloc_buf: Vec::new(),
+        }
+    }
+
+    /// Name of the placement strategy driving this pool.
+    pub fn placer_name(&self) -> &'static str {
+        self.placer.name()
+    }
+
+    /// Place a granted job: allocate `job.slots` class slots at time
+    /// `t`, append the `(class index, slots)` allocation to `out`, and
+    /// return the job's effective speed factor — the *slowest*
+    /// allocated class (a gang job runs at its slowest member's pace).
+    /// `fw` resolves per-framework speed profiles. If the placer leaves
+    /// slots unallocated despite free capacity (a buggy strategy), the
+    /// remainder is topped up greedily in class order so pool occupancy
+    /// never diverges from the cluster resource.
+    pub fn place(
+        &mut self,
+        t: SimTime,
+        job: &JobCtx,
+        fw: Option<&str>,
+        out: &mut Vec<(u32, u32)>,
+    ) -> f64 {
+        self.view_buf.clear();
+        for (i, c) in self.classes.iter().enumerate() {
+            self.view_buf.push(ClassView {
+                idx: i,
+                slots: c.cfg.slots,
+                online: c.online(),
+                in_use: c.in_use,
+                free: c.free(),
+                speed: c.cfg.speed_for(fw),
+                cost_per_sec: c.cfg.cost_per_sec,
+            });
+        }
+        let ctx = PlaceCtx {
+            now: t,
+            job: *job,
+            need: job.slots,
+            classes: &self.view_buf,
+        };
+        let mut alloc = std::mem::take(&mut self.alloc_buf);
+        alloc.clear();
+        self.placer.place(&ctx, &mut alloc);
+        let mut placed: u32 = alloc.iter().map(|&(_, n)| n).sum();
+        debug_assert!(
+            placed <= job.slots,
+            "placer {} over-allocated ({placed} > {})",
+            self.placer.name(),
+            job.slots
+        );
+        if placed > job.slots {
+            alloc.clear();
+            placed = 0;
+        }
+        if placed < job.slots {
+            // top-up: the resource admitted this job, so free class
+            // slots exist; take them in class order
+            let mut left = job.slots - placed;
+            for (i, c) in self.classes.iter().enumerate() {
+                if left == 0 {
+                    break;
+                }
+                let already: u32 = alloc
+                    .iter()
+                    .filter(|&&(ci, _)| ci as usize == i)
+                    .map(|&(_, n)| n)
+                    .sum();
+                let take = (c.free() as u32).saturating_sub(already).min(left);
+                if take > 0 {
+                    alloc.push((i as u32, take));
+                    left -= take;
+                }
+            }
+            debug_assert_eq!(left, 0, "cluster granted a job its classes cannot hold");
+        }
+        let mut speed = f64::INFINITY;
+        for &(ci, n) in alloc.iter() {
+            let c = &mut self.classes[ci as usize];
+            c.touch(t);
+            c.in_use += n as usize;
+            speed = speed.min(c.cfg.speed_for(fw));
+        }
+        out.extend_from_slice(&alloc);
+        self.alloc_buf = alloc;
+        if speed.is_finite() && speed > 0.0 {
+            speed
+        } else {
+            1.0
+        }
+    }
+
+    /// Release a previously placed allocation at time `t`.
+    pub fn release(&mut self, t: SimTime, alloc: &[(u32, u32)]) {
+        for &(ci, n) in alloc {
+            let c = &mut self.classes[ci as usize];
+            debug_assert!(c.in_use >= n as usize, "class release underflow");
+            c.touch(t);
+            c.in_use = c.in_use.saturating_sub(n as usize);
+        }
+    }
+
+    /// Take one slot of class `ci` offline (an injected failure).
+    pub fn fail_slot(&mut self, ci: usize) {
+        debug_assert!(self.classes[ci].offline < self.classes[ci].cfg.slots);
+        self.classes[ci].offline += 1;
+    }
+
+    /// Bring one failed slot of class `ci` back online.
+    pub fn repair_slot(&mut self, ci: usize) {
+        debug_assert!(self.classes[ci].offline > 0);
+        self.classes[ci].offline -= 1;
+    }
+
+    /// Advance every class's busy integral to `t` (call once at the end
+    /// of a run before reading costs/utilizations).
+    pub fn settle(&mut self, t: SimTime) {
+        for c in &mut self.classes {
+            c.touch(t);
+        }
+    }
+
+    /// Total accrued cost: busy slot-seconds × price, summed over
+    /// classes.
+    pub fn cost(&self) -> f64 {
+        self.classes
+            .iter()
+            .map(|c| c.busy_integral * c.cfg.cost_per_sec)
+            .sum()
+    }
+
+    /// Per-class utilization over `[0, horizon]` against nominal slots
+    /// (offline slots still count as provisioned, matching
+    /// `Resource::utilization`).
+    pub fn utilization(&self, ci: usize, horizon: SimTime) -> f64 {
+        let c = &self.classes[ci];
+        if horizon <= 0.0 || c.cfg.slots == 0 {
+            return 0.0;
+        }
+        c.busy_integral / (horizon * c.cfg.slots as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn classes() -> Vec<HwClass> {
+        vec![
+            HwClass::new("fast", 2).with_speed(2.0).with_cost(4.0),
+            HwClass::new("slow", 4).with_speed(1.0).with_cost(1.0),
+        ]
+    }
+
+    fn job(slots: u32) -> JobCtx {
+        JobCtx::new(10.0, 1.0, 0.0).with_slots(slots)
+    }
+
+    fn place_one(pool: &mut ClassPool, t: SimTime, slots: u32) -> (Vec<(u32, u32)>, f64) {
+        let mut out = Vec::new();
+        let speed = pool.place(t, &job(slots), None, &mut out);
+        (out, speed)
+    }
+
+    #[test]
+    fn fastest_fit_prefers_high_speed() {
+        let mut pool = ClassPool::new(&classes(), Box::new(FastestFit));
+        let (alloc, speed) = place_one(&mut pool, 0.0, 1);
+        assert_eq!(alloc, vec![(0, 1)]);
+        assert_eq!(speed, 2.0);
+        // fast class exhausted after two singles: spill to slow
+        place_one(&mut pool, 0.0, 1);
+        let (alloc, speed) = place_one(&mut pool, 0.0, 1);
+        assert_eq!(alloc, vec![(1, 1)]);
+        assert_eq!(speed, 1.0);
+    }
+
+    #[test]
+    fn cheapest_fit_prefers_low_cost() {
+        let mut pool = ClassPool::new(&classes(), Box::new(CheapestFit));
+        let (alloc, speed) = place_one(&mut pool, 0.0, 3);
+        assert_eq!(alloc, vec![(1, 3)]);
+        assert_eq!(speed, 1.0);
+    }
+
+    #[test]
+    fn default_place_spills_when_no_single_class_fits() {
+        let mut pool = ClassPool::new(&classes(), Box::new(FastestFit));
+        // 5 slots: no class holds 5; greedy spill fast-first 2 + 3
+        let (alloc, speed) = place_one(&mut pool, 0.0, 5);
+        assert_eq!(alloc, vec![(0, 2), (1, 3)]);
+        // gang speed is the slowest allocated class
+        assert_eq!(speed, 1.0);
+    }
+
+    #[test]
+    fn pack_fills_most_utilized_class_first() {
+        let mut pool = ClassPool::new(&classes(), Box::new(Pack));
+        // both empty: fewer-free (fast, 2 slots) packs first
+        assert_eq!(place_one(&mut pool, 0.0, 1).0, vec![(0, 1)]);
+        assert_eq!(place_one(&mut pool, 0.0, 1).0, vec![(0, 1)]);
+        assert_eq!(place_one(&mut pool, 0.0, 1).0, vec![(1, 1)]);
+    }
+
+    #[test]
+    fn spread_round_robins_across_failure_domains() {
+        let mut pool = ClassPool::new(
+            &[
+                HwClass::new("a", 3),
+                HwClass::new("b", 3),
+                HwClass::new("c", 3),
+            ],
+            Box::new(Spread),
+        );
+        let (alloc, _) = place_one(&mut pool, 0.0, 6);
+        // one slot at a time to the most-free class: 2 + 2 + 2
+        assert_eq!(alloc, vec![(0, 2), (1, 2), (2, 2)]);
+    }
+
+    #[test]
+    fn framework_profile_overrides_class_speed() {
+        let mut pool = ClassPool::new(
+            &[
+                HwClass::new("gpu", 2).with_speed(1.5).with_fw_speed("tensorflow", 4.0),
+                HwClass::new("cpu", 2).with_speed(2.0),
+            ],
+            Box::new(FastestFit),
+        );
+        let mut out = Vec::new();
+        // tensorflow profiles the gpu class faster than its generic factor
+        let speed = pool.place(0.0, &job(1), Some("tensorflow"), &mut out);
+        assert_eq!(out, vec![(0, 1)]);
+        assert_eq!(speed, 4.0);
+        out.clear();
+        // untagged jobs see the generic factors: cpu wins
+        let speed = pool.place(0.0, &job(1), None, &mut out);
+        assert_eq!(out, vec![(1, 1)]);
+        assert_eq!(speed, 2.0);
+    }
+
+    #[test]
+    fn failed_slots_shrink_placement_capacity() {
+        let mut pool = ClassPool::new(&classes(), Box::new(FastestFit));
+        pool.fail_slot(0);
+        pool.fail_slot(0);
+        // fast class fully offline: everything lands on slow
+        let (alloc, speed) = place_one(&mut pool, 0.0, 2);
+        assert_eq!(alloc, vec![(1, 2)]);
+        assert_eq!(speed, 1.0);
+        pool.repair_slot(0);
+        let (alloc, _) = place_one(&mut pool, 0.0, 1);
+        assert_eq!(alloc, vec![(0, 1)]);
+    }
+
+    #[test]
+    fn busy_integral_accrues_cost_and_utilization() {
+        let mut pool = ClassPool::new(&classes(), Box::new(CheapestFit));
+        let mut out = Vec::new();
+        pool.place(0.0, &job(2), None, &mut out);
+        pool.release(10.0, &out);
+        pool.settle(20.0);
+        // 2 slots × 10 s on the slow ($1/slot-s) class
+        assert!((pool.cost() - 20.0).abs() < 1e-9);
+        assert!((pool.utilization(1, 20.0) - 20.0 / 80.0).abs() < 1e-12);
+        assert_eq!(pool.utilization(0, 20.0), 0.0);
+    }
+
+    #[test]
+    fn top_up_covers_underallocating_placers() {
+        // a placer that allocates nothing: the pool must still account
+        // every granted slot
+        struct Lazy;
+        impl Placer for Lazy {
+            fn name(&self) -> &'static str {
+                "lazy"
+            }
+            fn score(&mut self, _c: &ClassView, _ctx: &PlaceCtx) -> f64 {
+                0.0
+            }
+            fn place(&mut self, _ctx: &PlaceCtx, _out: &mut Vec<(u32, u32)>) {}
+        }
+        let mut pool = ClassPool::new(&classes(), Box::new(Lazy));
+        let (alloc, _) = place_one(&mut pool, 0.0, 3);
+        let total: u32 = alloc.iter().map(|&(_, n)| n).sum();
+        assert_eq!(total, 3);
+        assert_eq!(pool.classes[0].in_use + pool.classes[1].in_use, 3);
+    }
+}

@@ -17,25 +17,32 @@
 //!                  [--triggers never,drift_threshold:threshold=0.05]
 //!                  [--mtbf 3600,14400,inf] [--mttr 600]
 //!                  [--checkpoint-intervals 0,600,3600]
+//!                  [--hw-classes a100:2:2.0:0.004+k80:6:1.0:0.001,v100:8]
+//!                  [--placers fastest_fit,cheapest_fit,pack,spread]
 //!                  [--traces] [--trace-dir DIR] [--cpu] [--export CSV]
 //!                  — parallel replication/grid engine over capacities ×
-//!                  load factors × operational strategies × reliability
-//!                  (per-cell tsdb recording off unless --traces;
-//!                  --trace-dir streams one binary event trace per cell
-//!                  to disk as it runs, so captures stay memory-flat; the
-//!                  per-cluster scheduler lists override the shared
-//!                  --schedulers axis for the training/compute cluster
-//!                  respectively; --mtbf injects exponential slot
+//!                  load factors × operational strategies × reliability ×
+//!                  hardware classes (per-cell tsdb recording off unless
+//!                  --traces; --trace-dir streams one binary event trace
+//!                  per cell to disk as it runs, so captures stay
+//!                  memory-flat; the per-cluster scheduler lists override
+//!                  the shared --schedulers axis for the training/compute
+//!                  cluster respectively; --mtbf injects exponential slot
 //!                  failures on the training cluster with mean repair
 //!                  --mttr, 'inf' = failures off, and
 //!                  --checkpoint-intervals varies the checkpoint period
-//!                  of every failing cluster)
+//!                  of every failing cluster; --hw-classes variants are
+//!                  comma-separated training-cluster class mixes, classes
+//!                  '+'-joined with fields name:slots[:speed[:cost_per_sec]],
+//!                  and --placers varies the placement strategy over them)
 //!   trace export   --params PARAMS.json [--config CFG.json] [--days D]
 //!                  [--arrival MODE] [--seed S] [--scheduler SPEC]
 //!                  [--out T.pst] [--jsonl T.jsonl] [--cpu] — run with
 //!                  event capture on and write the binary trace
 //!   trace stats    --in T.pst [--params PARAMS.json] — summary
-//!                  statistics (+ Q-Q vs the fits when params given)
+//!                  statistics, streamed record-by-record so year-scale
+//!                  files never materialize in memory (+ Q-Q vs the
+//!                  fits when params given)
 //!   trace replay   --in T.pst --params PARAMS.json [--cpu] — re-drive
 //!                  the simulation from the recorded arrival gaps;
 //!                  byte-identical digest given the capture's params
@@ -60,7 +67,7 @@ use pipesim::coordinator::{
 use pipesim::des::DAY;
 use pipesim::empirical::{AnalyticsDb, GroundTruth};
 use pipesim::error::Error;
-use pipesim::model::{ClusterFailureConfig, FailureModel};
+use pipesim::model::{ClusterFailureConfig, FailureModel, HwClass, HwClasses};
 use pipesim::runtime::Runtime;
 use pipesim::trace::{StreamingPstSink, Trace, TraceWorkload};
 use pipesim::util::Args;
@@ -223,6 +230,8 @@ fn main() -> Result<()> {
             let mtbf = args.get_opt("mtbf");
             let mttr: f64 = args.get_parse("mttr", 600.0)?;
             let checkpoint_intervals = args.get_opt("checkpoint-intervals");
+            let hw_classes = args.get_opt("hw-classes");
+            let placers = args.get_opt("placers");
             let cpu = args.flag("cpu");
             // traces off by default: a sweep keeps every cell's result in
             // memory until aggregation, and nothing downstream reads the
@@ -316,6 +325,44 @@ fn main() -> Result<()> {
                     .collect::<Result<_>>()?,
                 None => vec![None],
             };
+            // hardware-class axes: each --hw-classes variant is a
+            // training-cluster class mix (classes joined by '+', fields
+            // name:slots[:speed[:cost_per_sec]]); --placers varies the
+            // placement strategy over whatever classes are configured
+            let hw_axis: Vec<Option<Vec<HwClass>>> = match &hw_classes {
+                Some(list) => list
+                    .split(',')
+                    .map(|variant| {
+                        let mut classes = Vec::new();
+                        for spec in variant.trim().split('+') {
+                            let parts: Vec<&str> = spec.trim().split(':').collect();
+                            if parts.len() < 2 || parts.len() > 4 || parts[0].is_empty() {
+                                return Err(Error::Config(format!(
+                                    "--hw-classes: '{spec}' is not name:slots[:speed[:cost_per_sec]]"
+                                )));
+                            }
+                            let slots: usize = parts[1].parse()?;
+                            let mut hc = HwClass::new(parts[0], slots);
+                            if let Some(s) = parts.get(2) {
+                                hc = hc.with_speed(s.parse()?);
+                            }
+                            if let Some(c) = parts.get(3) {
+                                hc = hc.with_cost(c.parse()?);
+                            }
+                            classes.push(hc);
+                        }
+                        Ok(Some(classes))
+                    })
+                    .collect::<Result<_>>()?,
+                None => vec![None],
+            };
+            let placer_axis = spec_axis(&placers)?;
+            if placers.is_some() && hw_classes.is_none() && base.infra.hw_classes.is_none() {
+                return Err(Error::Config(
+                    "--placers: requires hardware classes (--hw-classes or hw_classes in the config)"
+                        .into(),
+                ));
+            }
             if triggers.is_some() && !base.runtime_view.enabled {
                 eprintln!("triggers: enabling the runtime view (defaults)");
                 base.runtime_view.enabled = true;
@@ -403,6 +450,29 @@ fn main() -> Result<()> {
                         }
                     }
                     name.push_str(&format!("-ckpt{ci}"));
+                }),
+                // --hw-classes replaces the training cluster's class mix
+                // (capacity follows the slot sum so the cell is
+                // apples-to-apples with a homogeneous pool of the same
+                // size); applied before --placers so the placer axis
+                // always finds classes to act on
+                axis(&hw_axis, |classes, cfg, name| {
+                    let total: usize = classes.iter().map(|c| c.slots).sum();
+                    let hw = cfg.infra.hw_classes.get_or_insert_with(HwClasses::default);
+                    hw.training = classes.clone();
+                    cfg.infra.training_capacity = total;
+                    let label = classes
+                        .iter()
+                        .map(|c| format!("{}{}", c.name, c.slots))
+                        .collect::<Vec<_>>()
+                        .join("+");
+                    name.push_str(&format!("-hw:{label}"));
+                }),
+                axis(&placer_axis, |p, cfg, name| {
+                    if let Some(hw) = &mut cfg.infra.hw_classes {
+                        hw.placer = p.clone();
+                    }
+                    name.push_str(&format!("-pl:{}", p.label()));
                 }),
             ];
             let mut grid = vec![(base.clone(), base.name.clone())];
@@ -500,24 +570,32 @@ fn main() -> Result<()> {
                 let params_path = args.get_opt("params");
                 let jsonl = args.get_opt("jsonl");
                 args.reject_unknown()?;
-                let trace = Trace::load(&input)?;
+                // the summary streams through TraceScanner record by
+                // record — O(1) memory, so year-scale streamed captures
+                // summarize on machines that could never hold the event
+                // Vec; the trace only materializes when Q-Q or the
+                // JSON-lines mirror actually need all of it
+                let (meta, summary) = TraceSummary::from_file(&input)?;
                 println!(
                     "trace '{}' (seed {}), scheduler {}, trigger {}",
-                    trace.meta.name,
-                    trace.meta.seed,
-                    trace.meta.get("scheduler").unwrap_or("?"),
-                    trace.meta.get("trigger").unwrap_or("?"),
+                    meta.name,
+                    meta.seed,
+                    meta.get("scheduler").unwrap_or("?"),
+                    meta.get("trigger").unwrap_or("?"),
                 );
-                print!("{}", TraceSummary::from_trace(&trace).render());
-                if let Some(p) = params_path {
-                    let params = SimParams::load(&PathBuf::from(p))?;
-                    for q in trace_qq(&trace, &params, 20_000, 60, 1) {
-                        println!("{}", q.verdict());
+                print!("{}", summary.render());
+                if params_path.is_some() || jsonl.is_some() {
+                    let trace = Trace::load(&input)?;
+                    if let Some(p) = params_path {
+                        let params = SimParams::load(&PathBuf::from(p))?;
+                        for q in trace_qq(&trace, &params, 20_000, 60, 1) {
+                            println!("{}", q.verdict());
+                        }
                     }
-                }
-                if let Some(path) = jsonl {
-                    std::fs::write(&path, trace.to_jsonl())?;
-                    println!("jsonl -> {path}");
+                    if let Some(path) = jsonl {
+                        std::fs::write(&path, trace.to_jsonl())?;
+                        println!("jsonl -> {path}");
+                    }
                 }
             }
 

@@ -155,6 +155,132 @@ impl FailureModel {
     }
 }
 
+/// One hardware class inside a cluster: a named group of slots with a
+/// common execution-speed profile and price. Classes model mixed fleets —
+/// GPU generations, CPU pools, spot vs reserved capacity — where both
+/// how fast a task runs and what it costs depend on *where* it lands
+/// (the offline-profiling simulation approach: per-(framework,
+/// hw-class) profiled speeds instead of one fitted distribution).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HwClass {
+    /// Class name, unique within its cluster (e.g. `"a100"`, `"spot"`).
+    pub name: String,
+    /// Slots of this class. Per-cluster class slot counts must sum to
+    /// the cluster's capacity (validated by `ExperimentConfig`).
+    pub slots: usize,
+    /// Execution-speed factor: sampled service time is divided by this,
+    /// so `2.0` runs tasks twice as fast and `1.0` is the homogeneous
+    /// baseline (bit-exact: `x / 1.0 == x`).
+    pub speed: f64,
+    /// Price of one busy slot-second, accrued into
+    /// `ExperimentResult::cost` (outside the digest). `0.0` = free.
+    pub cost_per_sec: f64,
+    /// Per-framework speed overrides `(framework name, speed)` — the
+    /// profile-driven execution model. A task tagged with a listed
+    /// framework uses that speed instead of [`HwClass::speed`]; gang
+    /// jobs spanning classes run at the slowest allocated class.
+    pub fw_speed: Vec<(String, f64)>,
+    /// Per-class failure behavior (MTBF/MTTR on this class's slots
+    /// only), independent of any cluster-level [`FailureModel`].
+    pub failures: Option<ClusterFailureConfig>,
+}
+
+impl HwClass {
+    /// A class with uniform speed 1.0 and no cost — indistinguishable
+    /// from homogeneous slots.
+    pub fn new(name: impl Into<String>, slots: usize) -> Self {
+        HwClass {
+            name: name.into(),
+            slots,
+            speed: 1.0,
+            cost_per_sec: 0.0,
+            fw_speed: Vec::new(),
+            failures: None,
+        }
+    }
+
+    /// Builder-style speed factor.
+    pub fn with_speed(mut self, speed: f64) -> Self {
+        self.speed = speed;
+        self
+    }
+
+    /// Builder-style cost knob.
+    pub fn with_cost(mut self, cost_per_sec: f64) -> Self {
+        self.cost_per_sec = cost_per_sec;
+        self
+    }
+
+    /// Builder-style per-framework profiled speed.
+    pub fn with_fw_speed(mut self, fw: impl Into<String>, speed: f64) -> Self {
+        self.fw_speed.push((fw.into(), speed));
+        self
+    }
+
+    /// Builder-style per-class failure behavior.
+    pub fn with_failures(mut self, fc: ClusterFailureConfig) -> Self {
+        self.failures = Some(fc);
+        self
+    }
+
+    /// Effective speed for a task tagged with framework `fw` (`None` =
+    /// untagged → the class-wide factor).
+    pub fn speed_for(&self, fw: Option<&str>) -> f64 {
+        if let Some(fw) = fw {
+            for (name, s) in &self.fw_speed {
+                if name == fw {
+                    return *s;
+                }
+            }
+        }
+        self.speed
+    }
+}
+
+/// Hardware classes of both clusters plus the placement strategy that
+/// assigns granted jobs to classes. An empty class list for a cluster
+/// means that cluster stays a homogeneous pool. The whole struct is
+/// optional on [`InfraConfig`]: `None` (the default) keeps the
+/// simulation's event stream and digests byte-for-byte identical to a
+/// build without the subsystem.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HwClasses {
+    /// Classes of the training cluster (slot counts must sum to
+    /// `training_capacity`; empty = homogeneous).
+    pub training: Vec<HwClass>,
+    /// Classes of the compute cluster (slot counts must sum to
+    /// `compute_capacity`; empty = homogeneous).
+    pub compute: Vec<HwClass>,
+    /// Placement strategy choosing which class a granted job runs on
+    /// (see `coordinator::strategy::placer_names`).
+    pub placer: StrategySpec,
+}
+
+impl Default for HwClasses {
+    fn default() -> Self {
+        HwClasses {
+            training: Vec::new(),
+            compute: Vec::new(),
+            placer: StrategySpec::new("fastest_fit"),
+        }
+    }
+}
+
+impl HwClasses {
+    pub fn for_kind(&self, kind: ResourceKind) -> &[HwClass] {
+        match kind {
+            ResourceKind::Training => &self.training,
+            ResourceKind::Compute => &self.compute,
+        }
+    }
+
+    /// True when neither cluster has classes (equivalent to
+    /// `hw_classes: None`).
+    pub fn is_empty(&self) -> bool {
+        self.training.is_empty() && self.compute.is_empty()
+    }
+}
+
 /// Full infrastructure configuration for an experiment.
 #[derive(Clone, Debug, PartialEq)]
 pub struct InfraConfig {
@@ -184,6 +310,10 @@ pub struct InfraConfig {
     /// Failure injection (`None` → a perfectly reliable platform; this
     /// is the default and keeps every pre-existing digest byte-identical).
     pub failures: Option<FailureModel>,
+    /// Hardware classes + placement strategy (`None` → homogeneous
+    /// pools; this is the default and keeps every pre-existing digest
+    /// byte-identical).
+    pub hw_classes: Option<HwClasses>,
     pub store: StoreConfig,
 }
 
@@ -197,6 +327,7 @@ impl Default for InfraConfig {
             scheduler_training: None,
             scheduler_compute: None,
             failures: None,
+            hw_classes: None,
             store: StoreConfig::default(),
         }
     }
@@ -246,6 +377,32 @@ impl InfraConfig {
             self.train_slots as u32
         } else {
             1
+        }
+    }
+
+    /// Hardware classes of `kind`'s cluster, when any are configured
+    /// (an empty class list counts as homogeneous).
+    pub fn hw_classes_for(&self, kind: ResourceKind) -> Option<&[HwClass]> {
+        match &self.hw_classes {
+            Some(hw) => {
+                let classes = hw.for_kind(kind);
+                if classes.is_empty() {
+                    None
+                } else {
+                    Some(classes)
+                }
+            }
+            None => None,
+        }
+    }
+
+    /// Compact placer label for reports and trace metadata; `None` when
+    /// no hardware classes are configured (so pre-PR trace metadata is
+    /// byte-identical).
+    pub fn placer_label(&self) -> Option<String> {
+        match &self.hw_classes {
+            Some(hw) if !hw.is_empty() => Some(hw.placer.label()),
+            _ => None,
         }
     }
 }
@@ -356,6 +513,63 @@ mod tests {
             Some(300.0)
         );
         assert!(c.failure_for(ResourceKind::Compute).is_none());
+    }
+
+    #[test]
+    fn hw_classes_roundtrip_json_and_stay_optional() {
+        use crate::util::jsonio::JsonIo;
+        let mut c = InfraConfig::default();
+        c.training_capacity = 6;
+        c.hw_classes = Some(HwClasses {
+            training: vec![
+                HwClass::new("a100", 2)
+                    .with_speed(2.0)
+                    .with_cost(3.0)
+                    .with_fw_speed("tensorflow", 2.5),
+                HwClass::new("v100", 4)
+                    .with_failures(ClusterFailureConfig::exponential(7200.0, 60.0)),
+            ],
+            compute: Vec::new(),
+            placer: StrategySpec::new("cheapest_fit"),
+        });
+        let back =
+            InfraConfig::from_json(&crate::util::Json::parse(&c.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(c, back);
+        // the default emits no hw_classes key, so pre-PR config JSON
+        // (and the config embedded in existing traces) is unchanged
+        let plain = InfraConfig::default().to_json().to_string();
+        assert!(!plain.contains("hw_classes"), "{plain}");
+    }
+
+    #[test]
+    fn hw_class_speed_profile_resolution() {
+        let c = HwClass::new("a100", 2)
+            .with_speed(2.0)
+            .with_fw_speed("tensorflow", 3.0);
+        assert_eq!(c.speed_for(None), 2.0);
+        assert_eq!(c.speed_for(Some("pytorch")), 2.0);
+        assert_eq!(c.speed_for(Some("tensorflow")), 3.0);
+    }
+
+    #[test]
+    fn hw_classes_accessors() {
+        let mut c = InfraConfig::default();
+        assert!(c.hw_classes_for(ResourceKind::Training).is_none());
+        assert!(c.placer_label().is_none());
+        c.training_capacity = 3;
+        c.hw_classes = Some(HwClasses {
+            training: vec![HwClass::new("gpu", 3)],
+            compute: Vec::new(),
+            placer: StrategySpec::new("pack"),
+        });
+        assert_eq!(
+            c.hw_classes_for(ResourceKind::Training).map(|s| s.len()),
+            Some(1)
+        );
+        // compute has no classes: it stays a homogeneous pool
+        assert!(c.hw_classes_for(ResourceKind::Compute).is_none());
+        assert_eq!(c.placer_label().as_deref(), Some("pack"));
     }
 
     #[test]

@@ -12,6 +12,8 @@ pub mod task;
 pub use asset::{DataAsset, ModelMetrics, TrainedModel};
 pub use compression::CompressionModel;
 pub use executor::{Op, TaskExecutor};
-pub use infra::{ClusterFailureConfig, FailureModel, InfraConfig, ResourceKind, StoreConfig};
+pub use infra::{
+    ClusterFailureConfig, FailureModel, HwClass, HwClasses, InfraConfig, ResourceKind, StoreConfig,
+};
 pub use pipeline::{Pipeline, PipelineId, PipelineTemplate};
 pub use task::{Framework, ModelType, PredictionType, TaskType};

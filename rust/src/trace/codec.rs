@@ -61,10 +61,14 @@
 //!   reserved = 1 at close. Failure-free captures keep stamping v1/v2
 //!   (buffered) or v3 (streamed) and stay byte-identical to files from
 //!   pre-failure builds.
+//!   Version 5 added the placement record (`task_placed`, emitted only
+//!   when hardware classes are configured) under the same
+//!   lowest-version-that-fits rule: class-free captures keep their old
+//!   stamps and stay byte-identical to pre-class builds.
 
 use crate::error::{Error, Result};
 use crate::model::{Framework, ResourceKind, TaskType};
-use crate::util::binio::{ByteReader, ByteWriter, InternTable};
+use crate::util::binio::{BinRead, ByteReader, ByteWriter, InternTable};
 use crate::util::Json;
 
 use super::{Trace, TraceEvent, TraceEventKind, TraceMeta};
@@ -76,7 +80,7 @@ pub const MAGIC: &[u8; 4] = b"PSTR";
 /// represent it (see [`needed_version`]); the decoder accepts
 /// `1..=FORMAT_VERSION`, dispatching `STREAM_VERSION` files to the
 /// footer-offset reader.
-pub const FORMAT_VERSION: u16 = 4;
+pub const FORMAT_VERSION: u16 = 5;
 /// First version of the streamed footer-offset layout (see the module
 /// docs). Stamped only by `trace::StreamingPstSink`, which cannot know
 /// the event count — or whether preemption/failure records will occur —
@@ -114,10 +118,14 @@ const TAG_SLOT_FAILED: u8 = 13;
 const TAG_SLOT_REPAIRED: u8 = 14;
 const TAG_TASK_CHECKPOINTED: u8 = 15;
 const TAG_TASK_RESTARTED: u8 = 16;
+// version 5 (heterogeneous hardware classes)
+const TAG_TASK_PLACED: u8 = 17;
 
 /// First format version that can carry `tag`.
-fn tag_min_version(tag: u8) -> u16 {
-    if tag >= TAG_SLOT_FAILED {
+pub(super) fn tag_min_version(tag: u8) -> u16 {
+    if tag >= TAG_TASK_PLACED {
+        5
+    } else if tag >= TAG_SLOT_FAILED {
         4
     } else if tag >= TAG_TASK_PREEMPTED {
         2
@@ -131,6 +139,7 @@ fn tag_min_version(tag: u8) -> u16 {
 /// whether its header must be patched up to version 4.
 pub(crate) fn kind_min_version(kind: &TraceEventKind) -> u16 {
     match kind {
+        TraceEventKind::TaskPlaced { .. } => 5,
         TraceEventKind::SlotFailed { .. }
         | TraceEventKind::SlotRepaired { .. }
         | TraceEventKind::TaskCheckpointed { .. }
@@ -166,7 +175,7 @@ pub(crate) fn encode_meta(w: &mut ByteWriter, tab: &mut InternTable, meta: &Trac
 }
 
 /// Decode the meta block previously written by [`encode_meta`].
-fn decode_meta(r: &mut ByteReader, names: &[String]) -> Result<TraceMeta> {
+pub(super) fn decode_meta(r: &mut ByteReader, names: &[String]) -> Result<TraceMeta> {
     let name = lookup(names, r.varint()?)?.to_string();
     let seed = r.varint()?;
     let horizon = r.f64()?;
@@ -421,6 +430,20 @@ pub(crate) fn encode_kind(w: &mut ByteWriter, tab: &mut InternTable, kind: &Trac
             w.u8(TAG_RETRAIN_LAUNCHED);
             w.varint(slot as u64);
         }
+        TraceEventKind::TaskPlaced {
+            pid,
+            task,
+            resource,
+            class,
+            slots,
+        } => {
+            w.u8(TAG_TASK_PLACED);
+            w.varint(pid as u64);
+            sid(w, tab, task.name());
+            sid(w, tab, resource.name());
+            w.varint(class as u64);
+            w.varint(slots as u64);
+        }
         TraceEventKind::ModelDeployed {
             slot,
             performance,
@@ -507,7 +530,7 @@ fn decode_streamed(bytes: &[u8], version: u16) -> Result<Trace> {
 }
 
 /// Resolve a string-table id, failing loudly on out-of-range ids.
-fn lookup(names: &[String], id: u64) -> Result<&str> {
+pub(super) fn lookup(names: &[String], id: u64) -> Result<&str> {
     usize::try_from(id)
         .ok()
         .and_then(|i| names.get(i))
@@ -535,15 +558,22 @@ fn pid32(v: u64) -> Result<u32> {
     u32::try_from(v).map_err(|_| Error::Other(format!("trace: id {v} exceeds u32")))
 }
 
-fn decode_kind(r: &mut ByteReader, names: &[String], version: u16) -> Result<TraceEventKind> {
-    fn opt_fw(r: &mut ByteReader, names: &[String]) -> Result<Option<Framework>> {
+/// Decode one event-kind record from any [`BinRead`] source — the slice
+/// readers of the buffered/streamed loaders and the file-backed
+/// iterator of [`scan`](super::scan) share this single implementation.
+pub(super) fn decode_kind<R: BinRead>(
+    r: &mut R,
+    names: &[String],
+    version: u16,
+) -> Result<TraceEventKind> {
+    fn opt_fw<R: BinRead>(r: &mut R, names: &[String]) -> Result<Option<Framework>> {
         match r.varint()? {
             0 => Ok(None),
             id => Framework::parse_name(lookup(names, id - 1)?).map(Some),
         }
     }
     let tag = r.u8()?;
-    if tag <= TAG_TASK_RESTARTED && tag_min_version(tag) > version {
+    if tag <= TAG_TASK_PLACED && tag_min_version(tag) > version {
         // a tag from a newer layout inside an old-version header: the
         // file is corrupt or mislabeled — refuse rather than misread
         return Err(Error::Other(format!(
@@ -620,6 +650,13 @@ fn decode_kind(r: &mut ByteReader, names: &[String], version: u16) -> Result<Tra
             task: task_by_name(lookup(names, r.varint()?)?)?,
             resource: resource_by_name(lookup(names, r.varint()?)?)?,
             remaining: r.f64()?,
+        },
+        TAG_TASK_PLACED => TraceEventKind::TaskPlaced {
+            pid: pid32(r.varint()?)?,
+            task: task_by_name(lookup(names, r.varint()?)?)?,
+            resource: resource_by_name(lookup(names, r.varint()?)?)?,
+            class: pid32(r.varint()?)?,
+            slots: pid32(r.varint()?)?,
         },
         TAG_MODEL_METRIC => TraceEventKind::ModelMetricUpdate {
             pid: pid32(r.varint()?)?,
@@ -849,6 +886,19 @@ fn event_json(ev: &TraceEvent) -> Json {
         TraceEventKind::RetrainLaunched { slot } => {
             fields.push(("slot", Json::Num(slot as f64)));
         }
+        TraceEventKind::TaskPlaced {
+            pid,
+            task,
+            resource,
+            class,
+            slots,
+        } => {
+            fields.push(("pid", Json::Num(pid as f64)));
+            fields.push(("task", Json::Str(task.name().into())));
+            fields.push(("resource", Json::Str(resource.name().into())));
+            fields.push(("class", Json::Num(class as f64)));
+            fields.push(("slots", Json::Num(slots as f64)));
+        }
         TraceEventKind::ModelDeployed {
             slot,
             performance,
@@ -1009,6 +1059,16 @@ mod tests {
                     downtime: 600.0,
                 },
             ),
+            e(
+                5000.0,
+                TraceEventKind::TaskPlaced {
+                    pid: 8,
+                    task: TaskType::Train,
+                    resource: ResourceKind::Training,
+                    class: 1,
+                    slots: 2,
+                },
+            ),
             e(5400.0, TraceEventKind::RetrainLaunched { slot: 3 }),
             e(
                 7200.0,
@@ -1091,7 +1151,7 @@ mod tests {
                     t += rng.uniform() * 100.0;
                     let task = TaskType::ALL[rng.below(6)];
                     let fw = Framework::ALL[rng.below(5)];
-                    let kind = match rng.below(17) {
+                    let kind = match rng.below(18) {
                         0 => TraceEventKind::ArrivalGapDrawn {
                             gap: rng.uniform() * 1e4,
                         },
@@ -1179,11 +1239,18 @@ mod tests {
                             preserved: rng.uniform() * 1e3,
                             lost: rng.uniform() * 1e3,
                         },
-                        _ => TraceEventKind::TaskRestarted {
+                        16 => TraceEventKind::TaskRestarted {
                             pid: i,
                             task,
                             resource: ResourceKind::for_task(task),
                             remaining: rng.uniform() * 1e3,
+                        },
+                        _ => TraceEventKind::TaskPlaced {
+                            pid: i,
+                            task,
+                            resource: ResourceKind::for_task(task),
+                            class: rng.below(4) as u32,
+                            slots: 1 + rng.below(4) as u32,
                         },
                     };
                     TraceEvent { t, kind }
@@ -1254,16 +1321,31 @@ mod tests {
         let bytes = encode(&v2);
         assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 2);
         assert_eq!(decode(&bytes).unwrap(), v2);
-        // failure records -> version 4 (3 is streamed-only), buffered
-        // layout signalled by reserved = 0
+        // failure records (but no placement) -> version 4 (3 is
+        // streamed-only), buffered layout signalled by reserved = 0
         let v4 = Trace {
             meta: meta(),
-            events: all_kinds(),
+            events: vec![TraceEvent {
+                t: 1.0,
+                kind: TraceEventKind::SlotFailed {
+                    resource: ResourceKind::Training,
+                    offline: 1,
+                },
+            }],
         };
         let bytes = encode(&v4);
         assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 4);
         assert_eq!(u16::from_le_bytes([bytes[6], bytes[7]]), 0);
         assert_eq!(decode(&bytes).unwrap(), v4);
+        // placement records -> version 5; all_kinds has one
+        let v5 = Trace {
+            meta: meta(),
+            events: all_kinds(),
+        };
+        let bytes = encode(&v5);
+        assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 5);
+        assert_eq!(u16::from_le_bytes([bytes[6], bytes[7]]), 0);
+        assert_eq!(decode(&bytes).unwrap(), v5);
     }
 
     #[test]
@@ -1276,7 +1358,7 @@ mod tests {
             events: all_kinds(),
         };
         let mut bytes = encode(&t);
-        assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 4);
+        assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 5);
         bytes[4] = 1;
         bytes[5] = 0;
         // the preemption record comes first in all_kinds, so the v1
@@ -1294,6 +1376,16 @@ mod tests {
         let err = decode(&bytes).unwrap_err().to_string();
         assert!(
             err.contains("requires format version 4"),
+            "unexpected error: {err}"
+        );
+        // a v4 relabel admits the failure tags but trips on the
+        // placement record
+        let mut bytes = encode(&t);
+        bytes[4] = 4;
+        bytes[5] = 0;
+        let err = decode(&bytes).unwrap_err().to_string();
+        assert!(
+            err.contains("requires format version 5"),
             "unexpected error: {err}"
         );
         // and a future version is refused up front

@@ -24,9 +24,11 @@
 
 pub mod codec;
 pub mod replay;
+pub mod scan;
 pub mod stream;
 
 pub use replay::TraceWorkload;
+pub use scan::TraceScanner;
 pub use stream::StreamingPstSink;
 
 use crate::des::SimTime;
@@ -212,6 +214,23 @@ pub enum TraceEventKind {
         /// restart cost), seconds.
         remaining: f64,
     },
+    /// A granted task was placed onto a hardware class (one record per
+    /// allocated class — a gang job spread across classes emits
+    /// several at the same timestamp). Emitted only when the cluster is
+    /// configured with `hw_classes`, immediately after the grant's
+    /// [`TaskStarted`]. Requires trace format v5.
+    ///
+    /// [`TaskStarted`]: TraceEventKind::TaskStarted
+    TaskPlaced {
+        pid: u32,
+        task: TaskType,
+        resource: ResourceKind,
+        /// Index of the class in the cluster's ordered class list (the
+        /// config JSON embedded in the trace meta names it).
+        class: u32,
+        /// Slots taken from that class.
+        slots: u32,
+    },
     /// A model (re)deployed into a monitored runtime-view slot. Only
     /// *tracked* deployments get this event: deploys past
     /// `runtime_view.max_models` still count toward the result's
@@ -245,6 +264,7 @@ impl TraceEventKind {
             TraceEventKind::SlotRepaired { .. } => "slot_repaired",
             TraceEventKind::TaskCheckpointed { .. } => "task_checkpointed",
             TraceEventKind::TaskRestarted { .. } => "task_restarted",
+            TraceEventKind::TaskPlaced { .. } => "task_placed",
             TraceEventKind::ModelDeployed { .. } => "model_deployed",
         }
     }
@@ -533,6 +553,17 @@ mod tests {
             }
             .name(),
             "task_restarted"
+        );
+        assert_eq!(
+            TraceEventKind::TaskPlaced {
+                pid: 0,
+                task: TaskType::Train,
+                resource: ResourceKind::Training,
+                class: 1,
+                slots: 2
+            }
+            .name(),
+            "task_placed"
         );
     }
 }

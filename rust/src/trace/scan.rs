@@ -1,0 +1,488 @@
+//! Streamed `.pst` reading: iterate a trace file record-by-record.
+//!
+//! [`Trace::load`](super::Trace::load) materializes the whole event
+//! `Vec` — fine for a day of simulated time, hopeless for the
+//! year-scale captures `StreamingPstSink` exists to produce (hundreds
+//! of millions of events would need tens of GB of RAM just to be
+//! *counted*). [`TraceScanner`] instead decodes one record at a time
+//! straight off a `BufReader`, holding only the string table, the
+//! metadata, and one record's state — O(1) in trace length, the read
+//! twin of the sink's write-side bound.
+//!
+//! Both layouts are supported and yield the identical event sequence:
+//!
+//! * **buffered** (versions 1/2/4/5, reserved = 0): string table and
+//!   meta precede the records, so the scanner parses them on open and
+//!   then streams the body forward.
+//! * **streamed** (version 3, or 4+ with the reserved streamed flag):
+//!   the scanner seeks the fixed-size tail, parses the footer (string
+//!   table + meta + count), then seeks back to the first record and
+//!   streams the body — two seeks total, never a full-file read.
+//!
+//! Decoding is byte-identical to the buffered loader: both call the
+//! same `codec::decode_kind`, generic over
+//! [`BinRead`](crate::util::binio::BinRead). Truncated or corrupt
+//! files surface as an `Err` item from the iterator (and the scanner
+//! fuses afterwards); a partial capture can never summarize silently.
+
+use std::fs::File;
+use std::io::{BufReader, Read, Seek, SeekFrom};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::binio::{BinRead, ByteReader, InternTable};
+
+use super::codec::{
+    decode_kind, decode_meta, FORMAT_VERSION, MAGIC, STREAMED_FLAG, STREAM_VERSION, TAIL_MAGIC,
+};
+use super::{TraceEvent, TraceMeta};
+
+/// Header bytes (magic + version + reserved) — the offset of either the
+/// string table (buffered) or the first record (streamed).
+const HEADER: u64 = 8;
+/// Tail bytes of a streamed file: u64 footer offset + `TAIL_MAGIC`.
+const TAIL: u64 = 12;
+
+/// Byte-counting buffered reader over the trace file; implements
+/// [`BinRead`] so the shared record decoder runs directly against it.
+struct FileSource {
+    inner: BufReader<File>,
+    pos: u64,
+}
+
+impl FileSource {
+    fn read_exact(&mut self, buf: &mut [u8]) -> Result<()> {
+        self.inner
+            .read_exact(buf)
+            .map_err(|e| Error::Other(format!("trace scan: read at offset {}: {e}", self.pos)))?;
+        self.pos += buf.len() as u64;
+        Ok(())
+    }
+
+    /// Length-prefixed UTF-8 string, with the allocation bounded by
+    /// `cap` (the file length): a corrupt prefix can never drive an
+    /// allocation larger than the input itself.
+    fn str_owned(&mut self, cap: u64) -> Result<String> {
+        let n = self.varint()?;
+        if n > cap {
+            return Err(Error::Other(format!(
+                "trace scan: string length {n} exceeds file size {cap}"
+            )));
+        }
+        let mut buf = vec![0u8; n as usize];
+        self.read_exact(&mut buf)?;
+        String::from_utf8(buf).map_err(|_| Error::Other("trace scan: invalid utf8".into()))
+    }
+}
+
+impl BinRead for FileSource {
+    fn u8(&mut self) -> Result<u8> {
+        let mut b = [0u8; 1];
+        self.read_exact(&mut b)?;
+        Ok(b[0])
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        let mut b = [0u8; 8];
+        self.read_exact(&mut b)?;
+        Ok(f64::from_bits(u64::from_le_bytes(b)))
+    }
+}
+
+/// Record-by-record `.pst` reader; see the module docs. Construct with
+/// [`TraceScanner::open`], consume as an iterator of
+/// `Result<TraceEvent>`.
+pub struct TraceScanner {
+    src: FileSource,
+    names: Vec<String>,
+    meta: TraceMeta,
+    version: u16,
+    /// Total records the file claims (count prefix or footer).
+    total: u64,
+    remaining: u64,
+    /// Streamed layout: absolute offset where the record body ends (the
+    /// footer starts); buffered: the file length. Every record must
+    /// finish at or before it.
+    body_end: u64,
+    prev_bits: u64,
+    /// Set after the first `Err` item or the end-of-body check, so the
+    /// iterator fuses instead of re-reporting forever.
+    done: bool,
+}
+
+impl TraceScanner {
+    /// Open `path` and parse everything *except* the event records:
+    /// header, string table, metadata, and the event count — from the
+    /// front (buffered layout) or the footer (streamed layout). The
+    /// returned scanner is positioned at the first record.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let file = File::open(path)
+            .map_err(|e| Error::Other(format!("opening trace {}: {e}", path.display())))?;
+        let file_len = file
+            .metadata()
+            .map_err(|e| Error::Other(format!("stat trace {}: {e}", path.display())))?
+            .len();
+        let mut src = FileSource {
+            inner: BufReader::new(file),
+            pos: 0,
+        };
+        let mut head = [0u8; HEADER as usize];
+        src.read_exact(&mut head)?;
+        let (version, reserved) = ByteReader::new(&head).check_header_range_with_reserved(
+            MAGIC,
+            1,
+            FORMAT_VERSION,
+            "trace",
+        )?;
+        let streamed =
+            version == STREAM_VERSION || (version > STREAM_VERSION && reserved == STREAMED_FLAG);
+        if streamed {
+            Self::open_streamed(src, file_len, version)
+        } else {
+            Self::open_buffered(src, file_len, version)
+        }
+    }
+
+    /// Buffered layout: string table, meta, and count precede the
+    /// records, so parse them forward off the stream.
+    fn open_buffered(mut src: FileSource, file_len: u64, version: u16) -> Result<Self> {
+        // string table: every entry costs >= 1 byte, so the count is
+        // bounded by the file length (same guard as the slice reader)
+        let n_names = src.varint()?;
+        if n_names > file_len {
+            return Err(Error::Other(format!(
+                "trace scan: string table claims {n_names} entries in a {file_len}-byte file"
+            )));
+        }
+        let mut names = Vec::with_capacity(n_names as usize);
+        for _ in 0..n_names {
+            names.push(src.str_owned(file_len)?);
+        }
+        // meta block (codec::encode_meta layout: ids into the table)
+        let meta = {
+            let name = lookup_owned(&names, src.varint()?)?;
+            let seed = src.varint()?;
+            let horizon = src.f64()?;
+            let config_json = lookup_owned(&names, src.varint()?)?;
+            let n_extra = src.varint()?;
+            if n_extra > file_len {
+                return Err(Error::Other(format!(
+                    "trace scan: meta claims {n_extra} extra pairs in a {file_len}-byte file"
+                )));
+            }
+            let mut extra = Vec::with_capacity(n_extra as usize);
+            for _ in 0..n_extra {
+                let k = lookup_owned(&names, src.varint()?)?;
+                let v = lookup_owned(&names, src.varint()?)?;
+                extra.push((k, v));
+            }
+            TraceMeta {
+                name,
+                seed,
+                horizon,
+                config_json,
+                extra,
+            }
+        };
+        let total = src.varint()?;
+        // a record costs >= 3 bytes (time varint + tag + payload)
+        if total.saturating_mul(3) > file_len {
+            return Err(Error::Other(format!(
+                "trace scan: count claims {total} events, file holds {file_len} bytes"
+            )));
+        }
+        Ok(TraceScanner {
+            src,
+            names,
+            meta,
+            version,
+            total,
+            remaining: total,
+            body_end: file_len,
+            prev_bits: 0,
+            done: false,
+        })
+    }
+
+    /// Streamed layout: seek the tail for the footer offset, parse the
+    /// footer (it is small — names, meta, count), then seek back to the
+    /// first record.
+    fn open_streamed(mut src: FileSource, file_len: u64, version: u16) -> Result<Self> {
+        if file_len < HEADER + TAIL {
+            return Err(Error::Other(format!(
+                "trace: streamed file of {file_len} bytes is shorter than header + tail"
+            )));
+        }
+        let seek = |src: &mut FileSource, to: u64| -> Result<()> {
+            src.inner
+                .seek(SeekFrom::Start(to))
+                .map_err(|e| Error::Other(format!("trace scan: seek to {to}: {e}")))?;
+            src.pos = to;
+            Ok(())
+        };
+        seek(&mut src, file_len - TAIL)?;
+        let mut tail = [0u8; TAIL as usize];
+        src.read_exact(&mut tail)?;
+        if &tail[8..] != TAIL_MAGIC {
+            return Err(Error::Other(
+                "trace: streamed file has no footer tail (writer never finalized?)".into(),
+            ));
+        }
+        let off = u64::from_le_bytes(tail[..8].try_into().expect("8-byte slice"));
+        if off < HEADER || off > file_len - TAIL {
+            return Err(Error::Other(format!(
+                "trace: footer offset {off} outside the file body ({file_len} bytes)"
+            )));
+        }
+        // the footer is names + meta + count — bounded and small, so a
+        // single in-memory parse through the slice readers is exact
+        seek(&mut src, off)?;
+        let mut footer = vec![0u8; (file_len - TAIL - off) as usize];
+        src.read_exact(&mut footer)?;
+        let mut f = ByteReader::new(&footer);
+        let names = InternTable::read(&mut f)?;
+        let meta = decode_meta(&mut f, &names)?;
+        let total = f.varint()?;
+        f.expect_eof("trace footer")?;
+        if total.saturating_mul(3) > off - HEADER {
+            return Err(Error::Other(format!(
+                "trace: footer claims {total} events, body holds {} bytes",
+                off - HEADER
+            )));
+        }
+        seek(&mut src, HEADER)?;
+        Ok(TraceScanner {
+            src,
+            names,
+            meta,
+            version,
+            total,
+            remaining: total,
+            body_end: off,
+            prev_bits: 0,
+            done: false,
+        })
+    }
+
+    /// The capture's metadata (same content a full `Trace::load` gets).
+    pub fn meta(&self) -> &TraceMeta {
+        &self.meta
+    }
+
+    /// The format version stamped in the file header.
+    pub fn version(&self) -> u16 {
+        self.version
+    }
+
+    /// Total records the file claims to hold.
+    pub fn events(&self) -> u64 {
+        self.total
+    }
+
+    fn next_event(&mut self) -> Result<Option<TraceEvent>> {
+        if self.remaining == 0 {
+            // the body must end exactly where the count said it would —
+            // trailing bytes mean a corrupt or concatenated file
+            if self.src.pos != self.body_end {
+                return Err(Error::Other(format!(
+                    "trace scan: {} trailing bytes after the last record",
+                    self.body_end.saturating_sub(self.src.pos)
+                )));
+            }
+            return Ok(None);
+        }
+        let bits = self.prev_bits ^ self.src.varint()?;
+        self.prev_bits = bits;
+        let kind = decode_kind(&mut self.src, &self.names, self.version)?;
+        if self.src.pos > self.body_end {
+            return Err(Error::Other(
+                "trace scan: record runs past the end of the body".into(),
+            ));
+        }
+        self.remaining -= 1;
+        Ok(Some(TraceEvent {
+            t: f64::from_bits(bits),
+            kind,
+        }))
+    }
+}
+
+impl Iterator for TraceScanner {
+    type Item = Result<TraceEvent>;
+
+    fn next(&mut self) -> Option<Result<TraceEvent>> {
+        if self.done {
+            return None;
+        }
+        match self.next_event() {
+            Ok(Some(ev)) => Some(Ok(ev)),
+            Ok(None) => {
+                self.done = true;
+                None
+            }
+            Err(e) => {
+                self.done = true;
+                Some(Err(e))
+            }
+        }
+    }
+}
+
+/// Owned variant of the codec's id lookup (the scanner keeps the table
+/// alive for record decoding, so meta strings are copied out).
+fn lookup_owned(names: &[String], id: u64) -> Result<String> {
+    super::codec::lookup(names, id).map(str::to_string)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Trace, TraceEventKind};
+    use super::*;
+    use crate::model::{Framework, ResourceKind, TaskType};
+    use crate::trace::stream::StreamingPstSink;
+    use crate::trace::TraceSink;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("pipesim_scan_{tag}_{}.pst", std::process::id()))
+    }
+
+    fn meta() -> TraceMeta {
+        TraceMeta {
+            name: "scan-test".into(),
+            seed: 11,
+            horizon: 5000.0,
+            config_json: r#"{"name":"scan-test"}"#.into(),
+            extra: vec![("scheduler".into(), "fifo".into())],
+        }
+    }
+
+    fn sample_events() -> Vec<TraceEvent> {
+        let e = |t, kind| TraceEvent { t, kind };
+        vec![
+            e(0.0, TraceEventKind::ArrivalGapDrawn { gap: 0.25 }),
+            e(
+                0.25,
+                TraceEventKind::PipelineArrival {
+                    pid: 0,
+                    framework: Framework::PyTorch,
+                    n_tasks: 3,
+                    priority: 1.0,
+                    retrain_of: None,
+                },
+            ),
+            e(
+                0.25,
+                TraceEventKind::TaskQueued {
+                    pid: 0,
+                    task: TaskType::Train,
+                    resource: ResourceKind::Training,
+                },
+            ),
+            e(
+                9.5,
+                TraceEventKind::TaskPlaced {
+                    pid: 0,
+                    task: TaskType::Train,
+                    resource: ResourceKind::Training,
+                    class: 1,
+                    slots: 2,
+                },
+            ),
+            e(
+                40.0,
+                TraceEventKind::PipelineDone {
+                    pid: 0,
+                    makespan: 39.75,
+                    total_wait: 2.5,
+                    truncated: false,
+                },
+            ),
+        ]
+    }
+
+    #[test]
+    fn scans_buffered_files_to_the_same_events_as_load() {
+        let path = tmp("buffered");
+        let trace = Trace {
+            meta: meta(),
+            events: sample_events(),
+        };
+        trace.save(&path).unwrap();
+        let mut scan = TraceScanner::open(&path).unwrap();
+        assert_eq!(scan.meta(), &meta());
+        assert_eq!(scan.events(), 5);
+        assert_eq!(scan.version(), 5, "TaskPlaced needs v5");
+        let events: Result<Vec<TraceEvent>> = (&mut scan).collect();
+        assert_eq!(events.unwrap(), trace.events);
+        // fused after completion
+        assert!(scan.next().is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn scans_streamed_files_without_loading_the_body() {
+        let path = tmp("streamed");
+        let mut sink = StreamingPstSink::create(&path, &meta()).unwrap();
+        for ev in sample_events() {
+            sink.record(&ev);
+        }
+        sink.finish().unwrap();
+        let scan = TraceScanner::open(&path).unwrap();
+        assert_eq!(scan.meta(), &meta());
+        assert_eq!(scan.events(), 5);
+        let events: Result<Vec<TraceEvent>> = scan.collect();
+        assert_eq!(events.unwrap(), sample_events());
+        // and the scan agrees with the materializing loader exactly
+        let loaded = Trace::load(&path).unwrap();
+        assert_eq!(loaded.events, sample_events());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_traces_scan_cleanly() {
+        let path = tmp("empty");
+        let trace = Trace {
+            meta: meta(),
+            events: Vec::new(),
+        };
+        trace.save(&path).unwrap();
+        let mut scan = TraceScanner::open(&path).unwrap();
+        assert_eq!(scan.events(), 0);
+        assert!(scan.next().is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn unfinalized_streamed_files_are_rejected_at_open() {
+        let path = tmp("unfinalized");
+        let sink = StreamingPstSink::create(&path, &meta()).unwrap();
+        drop(sink); // never finished: no footer tail
+        let err = TraceScanner::open(&path).unwrap_err();
+        assert!(err.to_string().contains("footer"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_bodies_surface_as_err_items() {
+        let path = tmp("truncated");
+        let trace = Trace {
+            meta: meta(),
+            events: sample_events(),
+        };
+        let bytes = trace.to_bytes();
+        std::fs::write(&path, &bytes[..bytes.len() - 4]).unwrap();
+        let scan = TraceScanner::open(&path).unwrap();
+        let items: Vec<Result<TraceEvent>> = scan.collect();
+        assert!(items.last().unwrap().is_err(), "truncation must surface");
+        // earlier records still decoded
+        assert!(items[0].is_ok());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_files_fail_at_open() {
+        assert!(TraceScanner::open("/nonexistent/nope.pst").is_err());
+    }
+}

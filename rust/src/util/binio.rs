@@ -278,6 +278,52 @@ impl<'a> ByteReader<'a> {
     }
 }
 
+/// Incremental typed reads shared by the slice-backed [`ByteReader`]
+/// and file-backed streams (`trace::scan`). The trace record decoder is
+/// generic over this, so a year-scale streamed `.pst` can be summarized
+/// without ever materializing its body in memory. Only the primitives a
+/// *record* needs are here — container plumbing (headers, string
+/// tables, length-validated prefixes) stays on the concrete readers.
+pub trait BinRead {
+    fn u8(&mut self) -> Result<u8>;
+    fn f64(&mut self) -> Result<f64>;
+
+    /// LEB128 varint with the same canonical-form rule as
+    /// [`ByteReader::varint`]: payload bits beyond bit 63 are an error,
+    /// never a silent truncation.
+    fn varint(&mut self) -> Result<u64> {
+        let mut v: u64 = 0;
+        let mut shift = 0u32;
+        loop {
+            let b = self.u8()?;
+            if shift >= 63 && b > 1 {
+                return Err(Error::Other("binio: varint overflows u64".into()));
+            }
+            v |= u64::from(b & 0x7f) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+}
+
+impl BinRead for ByteReader<'_> {
+    fn u8(&mut self) -> Result<u8> {
+        ByteReader::u8(self)
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        ByteReader::f64(self)
+    }
+
+    // the inherent implementation already enforces the canonical-form
+    // rule; delegating avoids running two copies of the same loop
+    fn varint(&mut self) -> Result<u64> {
+        ByteReader::varint(self)
+    }
+}
+
 /// Deduplicating string table built while encoding; ids are `u32`s in
 /// first-intern order, so the same logical content always produces the
 /// same bytes.

@@ -10,7 +10,9 @@ use crate::coordinator::params::{ModelLaws, SimParams};
 use crate::coordinator::strategy::StrategySpec;
 use crate::empirical::{AnalyticsDb, AssetRecord, EvalRecord, JobRecord, PreprocRecord};
 use crate::error::{Error, Result};
-use crate::model::{ClusterFailureConfig, FailureModel, Framework, InfraConfig, StoreConfig};
+use crate::model::{
+    ClusterFailureConfig, FailureModel, Framework, HwClass, HwClasses, InfraConfig, StoreConfig,
+};
 use crate::stats::dist::{Dist, ExpWeibull, Exponential, LogNormal, Normal, Pareto, Weibull};
 use crate::stats::gmm::{Gmm1, Gmm3};
 use crate::stats::ExpCurve;
@@ -539,6 +541,102 @@ impl JsonIo for FailureModel {
     }
 }
 
+impl JsonIo for HwClass {
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("slots", Json::Num(self.slots as f64)),
+            ("speed", Json::Num(self.speed)),
+            ("cost_per_sec", Json::Num(self.cost_per_sec)),
+        ];
+        if !self.fw_speed.is_empty() {
+            fields.push((
+                "fw_speed",
+                Json::Obj(
+                    self.fw_speed
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                        .collect(),
+                ),
+            ));
+        }
+        if let Some(f) = &self.failures {
+            fields.push(("failures", f.to_json()));
+        }
+        Json::obj(fields)
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        let mut fw_speed = Vec::new();
+        match j.get("fw_speed") {
+            None | Some(Json::Null) => {}
+            Some(Json::Obj(fields)) => {
+                for (k, v) in fields {
+                    fw_speed.push((k.clone(), v.as_f64()?));
+                }
+            }
+            Some(other) => {
+                return Err(Error::Other(format!(
+                    "hw class fw_speed must be an object, got {other:?}"
+                )))
+            }
+        }
+        Ok(HwClass {
+            name: j.s("name")?.to_string(),
+            slots: j.req("slots")?.as_usize()?,
+            // speed/cost are optional: a bare {name, slots} class is the
+            // homogeneous baseline
+            speed: match j.get("speed") {
+                Some(v) => v.as_f64()?,
+                None => 1.0,
+            },
+            cost_per_sec: match j.get("cost_per_sec") {
+                Some(v) => v.as_f64()?,
+                None => 0.0,
+            },
+            fw_speed,
+            failures: match j.get("failures") {
+                None | Some(Json::Null) => None,
+                Some(f) => Some(ClusterFailureConfig::from_json(f)?),
+            },
+        })
+    }
+}
+
+impl JsonIo for HwClasses {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "training",
+                Json::Arr(self.training.iter().map(|c| c.to_json()).collect()),
+            ),
+            (
+                "compute",
+                Json::Arr(self.compute.iter().map(|c| c.to_json()).collect()),
+            ),
+            ("placer", self.placer.to_json()),
+        ])
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        let classes = |key: &str| -> Result<Vec<HwClass>> {
+            match j.get(key) {
+                None | Some(Json::Null) => Ok(Vec::new()),
+                Some(Json::Arr(items)) => items.iter().map(HwClass::from_json).collect(),
+                Some(other) => Err(Error::Other(format!(
+                    "hw_classes.{key} must be an array, got {other:?}"
+                ))),
+            }
+        };
+        Ok(HwClasses {
+            training: classes("training")?,
+            compute: classes("compute")?,
+            placer: match j.get("placer") {
+                None | Some(Json::Null) => StrategySpec::new("fastest_fit"),
+                Some(p) => StrategySpec::from_json(p)?,
+            },
+        })
+    }
+}
+
 impl JsonIo for InfraConfig {
     fn to_json(&self) -> Json {
         let mut fields = vec![
@@ -560,6 +658,10 @@ impl JsonIo for InfraConfig {
         // emits no key at all
         if let Some(f) = &self.failures {
             fields.push(("failures", f.to_json()));
+        }
+        // and for hardware classes: homogeneous pools emit no key
+        if let Some(hw) = &self.hw_classes {
+            fields.push(("hw_classes", hw.to_json()));
         }
         fields.push(("store", self.store.to_json()));
         Json::obj(fields)
@@ -591,6 +693,10 @@ impl JsonIo for InfraConfig {
             failures: match j.get("failures") {
                 None | Some(Json::Null) => None,
                 Some(f) => Some(FailureModel::from_json(f)?),
+            },
+            hw_classes: match j.get("hw_classes") {
+                None | Some(Json::Null) => None,
+                Some(h) => Some(HwClasses::from_json(h)?),
             },
             store: StoreConfig::from_json(j.req("store")?)?,
         })

@@ -1,0 +1,264 @@
+//! Heterogeneous-hardware oracles: the digest-compat guarantees the
+//! hw-class subsystem makes (a degenerate class layout is byte-identical
+//! to the homogeneous pool), placer-agreement laws on symmetric fleets,
+//! cost accounting living strictly outside the digest, and per-class
+//! failure blast radius.
+
+use pipesim::coordinator::{
+    fit_params, ArrivalSpec, Experiment, ExperimentConfig, ExperimentResult, SimParams,
+    StrategySpec,
+};
+use pipesim::empirical::GroundTruth;
+use pipesim::model::{ClusterFailureConfig, HwClass, HwClasses};
+
+fn params() -> SimParams {
+    let db = GroundTruth::new(66).generate_weeks(2);
+    fit_params(&db, None).unwrap()
+}
+
+/// The shared saturated 6-hour workload; classes are the only knob.
+fn cfg(name: &str, classes: Option<HwClasses>) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig {
+        name: name.into(),
+        seed: 7,
+        horizon: 21_600.0,
+        arrival: ArrivalSpec::Poisson {
+            mean_interarrival: 45.0,
+        },
+        record_traces: false,
+        sample_interval: 600.0,
+        ..Default::default()
+    };
+    cfg.infra.training_capacity = 3;
+    if let Some(hw) = classes {
+        let total: usize = hw.training.iter().map(|c| c.slots).sum();
+        if total > 0 {
+            cfg.infra.training_capacity = total;
+        }
+        cfg.infra.hw_classes = Some(hw);
+    }
+    cfg
+}
+
+fn run(cfg: ExperimentConfig, params: &SimParams) -> ExperimentResult {
+    Experiment::new(cfg, params.clone()).run().unwrap()
+}
+
+fn classes(training: Vec<HwClass>, placer: &str) -> HwClasses {
+    HwClasses {
+        training,
+        compute: Vec::new(),
+        placer: StrategySpec::new(placer),
+    }
+}
+
+#[test]
+fn single_class_speed_one_is_digest_identical_to_homogeneous_pool() {
+    // THE compat oracle: one class covering the whole cluster at speed
+    // 1.0 with no cost knobs must replay the exact event stream of the
+    // classless pool — byte-identical digest, not merely equal metrics
+    let params = params();
+    let base = run(cfg("homog", None), &params);
+    let one = run(
+        cfg("one-class", Some(classes(vec![HwClass::new("only", 3)], "fastest_fit"))),
+        &params,
+    );
+    assert_eq!(
+        base.digest(),
+        one.digest(),
+        "a degenerate single class changed simulation outcomes"
+    );
+    assert_eq!(base.events_processed, one.events_processed);
+    // the class-aware run reports the subsystem's extras outside the digest
+    assert!(base.class_util.is_empty() && base.placer.is_empty());
+    assert_eq!(one.placer, "fastest_fit");
+    assert_eq!(one.class_util.len(), 1);
+    assert_eq!(one.class_util[0].0, "training/only");
+    assert!(one.class_util[0].1 > 0.0, "saturated class shows utilization");
+}
+
+#[test]
+fn cost_accrues_outside_the_digest() {
+    // pricing the same degenerate class must not perturb a single event:
+    // digest stays byte-identical to the classless baseline while the
+    // new cost field becomes positive
+    let params = params();
+    let base = run(cfg("homog", None), &params);
+    let priced = run(
+        cfg(
+            "priced",
+            Some(classes(
+                vec![HwClass::new("only", 3).with_cost(0.002)],
+                "fastest_fit",
+            )),
+        ),
+        &params,
+    );
+    assert_eq!(
+        base.digest(),
+        priced.digest(),
+        "cost accounting leaked into the digest"
+    );
+    assert_eq!(base.cost, 0.0);
+    assert!(priced.cost > 0.0, "busy priced slots accrued nothing");
+}
+
+#[test]
+fn identical_classes_make_every_placer_agree() {
+    // when every class has the same speed profile, the placement choice
+    // cannot affect execution — all registered placers must agree on the
+    // digest (fastest_fit == cheapest_fit == pack == spread)
+    let params = params();
+    let mk = |placer: &str| {
+        run(
+            cfg(
+                &format!("sym-{placer}"),
+                Some(classes(
+                    vec![HwClass::new("a", 2), HwClass::new("b", 1)],
+                    placer,
+                )),
+            ),
+            &params,
+        )
+    };
+    let reference = mk("fastest_fit");
+    for placer in ["cheapest_fit", "pack", "spread"] {
+        let r = mk(placer);
+        assert_eq!(
+            reference.digest(),
+            r.digest(),
+            "placer {placer} diverged on a symmetric fleet"
+        );
+    }
+}
+
+#[test]
+fn fastest_and_cheapest_diverge_on_a_heterogeneous_fleet() {
+    // a fleet with a fast-expensive and a slow-cheap class is the
+    // placement trade-off in miniature: the two strategies must produce
+    // different event streams, and chasing speed must cost more. Load is
+    // kept moderate — placement is only a *choice* when more than one
+    // class has free slots, so a fully saturated cluster would reduce
+    // both placers to "take the only free slot"
+    let params = params();
+    let fleet = |placer: &str| {
+        classes(
+            vec![
+                HwClass::new("a100", 1).with_speed(2.0).with_cost(0.004),
+                HwClass::new("k80", 2).with_cost(0.001),
+            ],
+            placer,
+        )
+    };
+    let mk = |name: &str, placer: &str| {
+        let mut c = cfg(name, Some(fleet(placer)));
+        c.horizon = 2.0 * 86_400.0;
+        c.arrival = ArrivalSpec::Poisson {
+            mean_interarrival: 450.0,
+        };
+        c
+    };
+    let fast = run(mk("fast", "fastest_fit"), &params);
+    let cheap = run(mk("cheap", "cheapest_fit"), &params);
+    assert_ne!(
+        fast.digest(),
+        cheap.digest(),
+        "placement strategy had no effect on a heterogeneous fleet"
+    );
+    assert!(
+        fast.cost > cheap.cost,
+        "preferring the priced class must cost more ({} vs {})",
+        fast.cost,
+        cheap.cost
+    );
+    for r in [&fast, &cheap] {
+        assert_eq!(r.arrived, r.completed + r.in_flight, "{}", r.name);
+        assert!(r.completed > 0, "{}", r.name);
+    }
+}
+
+#[test]
+fn per_class_failures_stay_inside_their_class() {
+    // MTBF configured on one class must take down only that class's
+    // slots: the failure ledger shows hits on the frail class and zero
+    // on the solid one, and conservation survives the churn
+    let params = params();
+    let r = run(
+        cfg(
+            "frail",
+            Some(classes(
+                vec![
+                    HwClass::new("frail", 2)
+                        .with_failures(ClusterFailureConfig::exponential(1200.0, 300.0)),
+                    HwClass::new("solid", 2),
+                ],
+                "spread",
+            )),
+        ),
+        &params,
+    );
+    assert!(r.failures > 0, "6h at 20min MTBF never failed");
+    let count = |label: &str| {
+        r.class_failures
+            .iter()
+            .find(|(l, _)| l == label)
+            .map(|&(_, n)| n)
+            .unwrap_or_else(|| panic!("missing class ledger entry {label}"))
+    };
+    assert_eq!(
+        count("training/frail"),
+        r.failures,
+        "failures escaped the frail class's ledger"
+    );
+    assert_eq!(count("training/solid"), 0, "a solid slot failed");
+    assert_eq!(r.arrived, r.completed + r.in_flight, "conservation under class failures");
+    assert!(r.completed > 0);
+    // determinism holds with the per-class failure RNG substream engaged
+    let again = run(
+        cfg(
+            "frail",
+            Some(classes(
+                vec![
+                    HwClass::new("frail", 2)
+                        .with_failures(ClusterFailureConfig::exponential(1200.0, 300.0)),
+                    HwClass::new("solid", 2),
+                ],
+                "spread",
+            )),
+        ),
+        &params,
+    );
+    assert_eq!(r.digest(), again.digest(), "class failures nondeterministic");
+}
+
+#[test]
+fn fw_profile_speed_overrides_class_speed() {
+    // per-(framework, class) profiled speeds: a class that is fast only
+    // for one framework must diverge from the same class being fast for
+    // everything, and both diverge from the uniform baseline
+    let params = params();
+    let uniform = run(
+        cfg("uniform", Some(classes(vec![HwClass::new("c", 3)], "fastest_fit"))),
+        &params,
+    );
+    let all_fast = run(
+        cfg(
+            "all-fast",
+            Some(classes(vec![HwClass::new("c", 3).with_speed(2.0)], "fastest_fit")),
+        ),
+        &params,
+    );
+    let tf_fast = run(
+        cfg(
+            "tf-fast",
+            Some(classes(
+                vec![HwClass::new("c", 3).with_fw_speed("tensorflow", 2.0)],
+                "fastest_fit",
+            )),
+        ),
+        &params,
+    );
+    assert_ne!(uniform.digest(), all_fast.digest(), "speed factor inert");
+    assert_ne!(uniform.digest(), tf_fast.digest(), "fw profile inert");
+    assert_ne!(all_fast.digest(), tf_fast.digest(), "fw profile equals class speed");
+}

@@ -7,13 +7,13 @@
 //! consistency, distribution fit round-trips, JSON round-trips.
 
 use pipesim::coordinator::{
-    build_scheduler, fit_params, scheduler_names, trigger_names, ArrivalSpec, Experiment,
-    ExperimentConfig, StrategySpec, Sweep,
+    build_scheduler, fit_params, placer_names, scheduler_names, trigger_names, ArrivalSpec,
+    Experiment, ExperimentConfig, StrategySpec, Sweep,
 };
 use pipesim::des::sched::{default_grants, SchedView, WaiterView};
 use pipesim::des::{AcquireResult, Calendar, JobCtx, Resource, SchedCtx, Scheduler};
 use pipesim::empirical::GroundTruth;
-use pipesim::model::{ClusterFailureConfig, FailureModel};
+use pipesim::model::{ClusterFailureConfig, FailureModel, HwClass, HwClasses};
 use pipesim::stats::dist::{Dist, Distribution, ExpWeibull, LogNormal, Pareto, Weibull};
 use pipesim::stats::rng::Pcg64;
 use pipesim::synth::{PipelineSynthesizer, SynthConfig};
@@ -664,6 +664,50 @@ fn prop_every_registered_strategy_conserves_and_is_deterministic() {
             a.completed + a.in_flight,
             "trigger {name} broke conservation"
         );
+    }
+}
+
+#[test]
+fn prop_every_registered_placer_conserves_and_is_deterministic() {
+    // the conservation and determinism laws must hold for every placer
+    // in the registry on a genuinely heterogeneous fleet — a placement
+    // strategy can pick any class it likes, but it cannot lose pipelines
+    // or make the event stream seed-dependent
+    let db = GroundTruth::new(66).generate_weeks(2);
+    let params = fit_params(&db, None).unwrap();
+    for name in placer_names() {
+        let mut cfg = ExperimentConfig {
+            name: format!("place-{name}"),
+            seed: 7,
+            horizon: 21_600.0,
+            arrival: ArrivalSpec::Poisson {
+                mean_interarrival: 45.0,
+            },
+            record_traces: false,
+            sample_interval: 600.0,
+            ..Default::default()
+        };
+        // saturate a fast-expensive + slow-cheap fleet so placement engages
+        cfg.infra.training_capacity = 3;
+        cfg.infra.hw_classes = Some(HwClasses {
+            training: vec![
+                HwClass::new("fast", 1).with_speed(2.0).with_cost(0.004),
+                HwClass::new("slow", 2).with_cost(0.001),
+            ],
+            compute: Vec::new(),
+            placer: StrategySpec::new(&name),
+        });
+        let a = Experiment::new(cfg.clone(), params.clone()).run().unwrap();
+        let b = Experiment::new(cfg, params.clone()).run().unwrap();
+        assert_eq!(a.digest(), b.digest(), "placer {name} nondeterministic");
+        assert_eq!(
+            a.arrived,
+            a.completed + a.in_flight,
+            "placer {name} broke conservation"
+        );
+        assert!(a.completed > 0, "placer {name} completed nothing");
+        assert!(a.cost > 0.0, "placer {name} accrued no cost on priced classes");
+        assert_eq!(a.placer, name, "resolved placer label mismatch");
     }
 }
 
