@@ -1,0 +1,167 @@
+//! Observability-layer benchmarks: meter-off overhead (with a hard
+//! digest-equality guard — the probe must be invisible when disabled),
+//! meter-on overhead, downsampled-vs-raw tsdb memory at 1M points (with
+//! a hard bound on the downsampled footprint), and exporter throughput.
+//!
+//! Emits `BENCH_obs.json` for the CI perf trajectory.
+//!
+//! Run: `cargo bench --bench bench_obs`
+
+use pipesim::coordinator::{
+    fit_params, ArrivalSpec, Experiment, ExperimentConfig, RetentionConfig,
+};
+use pipesim::des::DAY;
+use pipesim::empirical::GroundTruth;
+use pipesim::obs::{render_metrics_json, render_openmetrics};
+use pipesim::tsdb::{SeriesKey, TsStore};
+use pipesim::util::bench::{black_box, Bench};
+use pipesim::util::Json;
+
+fn main() {
+    let db = GroundTruth::new(29).generate_weeks(2);
+    let params = fit_params(&db, None).expect("fit");
+    let mut b = Bench::with_budget(std::time::Duration::from_millis(200), 3);
+    let mut report: Vec<(&str, Json)> = vec![("bench", Json::Str("obs".into()))];
+
+    // --- meter overhead: off must be free, on must be cheap ------------
+    let run = |meter: bool| {
+        let cfg = ExperimentConfig {
+            name: "meter-bench".into(),
+            seed: 7,
+            horizon: 2.0 * DAY,
+            arrival: ArrivalSpec::Poisson {
+                mean_interarrival: 60.0,
+            },
+            record_traces: false,
+            meter,
+            ..Default::default()
+        };
+        Experiment::new(cfg, params.clone()).run().expect("run")
+    };
+    let mut off_secs = 0.0;
+    let mut off_digest = String::new();
+    b.bench_once("2-day run, meter off", || {
+        let r = run(false);
+        off_secs = r.wall_secs;
+        off_digest = r.digest();
+    });
+    let mut on_secs = 0.0;
+    let mut metered = None;
+    b.bench_once("2-day run, meter on", || {
+        let r = run(true);
+        on_secs = r.wall_secs;
+        metered = Some(r);
+    });
+    let metered = metered.expect("metered run");
+    // the hard guard: metering must not perturb the simulation
+    assert_eq!(
+        off_digest,
+        metered.digest(),
+        "meter-on digest must equal meter-off"
+    );
+    let m = metered.meter.as_ref().expect("meter report");
+    assert_eq!(m.total_events(), metered.events_processed);
+    let overhead_pct = if off_secs > 0.0 {
+        100.0 * (on_secs / off_secs - 1.0)
+    } else {
+        0.0
+    };
+    println!(
+        "# meter overhead: {overhead_pct:.1}% over {} events (loop wall {:.3}s)",
+        metered.events_processed,
+        m.loop_wall_secs()
+    );
+    report.push(("meter_overhead_pct", Json::Num(overhead_pct)));
+    report.push(("events", Json::Num(metered.events_processed as f64)));
+
+    // --- downsampled vs raw tsdb at 1M points --------------------------
+    {
+        let n = 1_000_000u64;
+        let resolution = 3600.0;
+        let mut raw = TsStore::new();
+        let hr = raw.handle(SeriesKey::new("m").tag("k", "v"));
+        let t0 = std::time::Instant::now();
+        for i in 0..n {
+            raw.append(hr, i as f64, (i % 1000) as f64);
+        }
+        let raw_append_eps = n as f64 / t0.elapsed().as_secs_f64().max(1e-12);
+        let mut rolled = TsStore::new();
+        rolled.set_retention(resolution);
+        let hd = rolled.handle(SeriesKey::new("m").tag("k", "v"));
+        let t0 = std::time::Instant::now();
+        for i in 0..n {
+            rolled.append(hd, i as f64, (i % 1000) as f64);
+        }
+        let rolled_append_eps = n as f64 / t0.elapsed().as_secs_f64().max(1e-12);
+        let raw_mb = raw.approx_bytes() as f64 / (1 << 20) as f64;
+        let rolled_mb = rolled.approx_bytes() as f64 / (1 << 20) as f64;
+        println!(
+            "# tsdb 1M points: raw {raw_mb:.1} MB, downsampled {rolled_mb:.2} MB \
+             ({} buckets); append raw {raw_append_eps:.0}/s, rolled {rolled_append_eps:.0}/s"
+        , rolled.resident_points());
+        // the memory-flat claim, as a hard bound: ~278 hour-buckets of
+        // a bounded sketch each must stay under 2 MB (raw is ~15 MB)
+        assert!(
+            rolled.approx_bytes() < 2 << 20,
+            "downsampled 1M-point store must stay bounded, got {} bytes",
+            rolled.approx_bytes()
+        );
+        assert_eq!(rolled.num_points(), n as usize, "observed count invariant");
+        report.push(("raw_1m_bytes", Json::Num(raw.approx_bytes() as f64)));
+        report.push(("rolled_1m_bytes", Json::Num(rolled.approx_bytes() as f64)));
+        report.push(("raw_append_per_sec", Json::Num(raw_append_eps)));
+        report.push(("rolled_append_per_sec", Json::Num(rolled_append_eps)));
+    }
+
+    // --- exporter throughput -------------------------------------------
+    let mut om_len = 0usize;
+    let m = b
+        .bench("render OpenMetrics", || {
+            om_len = black_box(render_openmetrics(&metered)).len();
+        })
+        .clone();
+    let om_mbps = om_len as f64 / (1 << 20) as f64 / m.mean.as_secs_f64().max(1e-12);
+    let mut js_len = 0usize;
+    let m = b
+        .bench("render metrics JSON", || {
+            js_len = black_box(render_metrics_json(&metered)).len();
+        })
+        .clone();
+    let js_mbps = js_len as f64 / (1 << 20) as f64 / m.mean.as_secs_f64().max(1e-12);
+    println!(
+        "# exporters: openmetrics {om_len} B at {om_mbps:.1} MB/s, json {js_len} B at \
+         {js_mbps:.1} MB/s"
+    );
+    report.push(("openmetrics_bytes", Json::Num(om_len as f64)));
+    report.push(("openmetrics_mb_per_sec", Json::Num(om_mbps)));
+    report.push(("json_bytes", Json::Num(js_len as f64)));
+    report.push(("json_mb_per_sec", Json::Num(js_mbps)));
+
+    // --- retention inside a real run: digest-neutral, memory down ------
+    {
+        let cfg = ExperimentConfig {
+            name: "meter-bench".into(),
+            seed: 7,
+            horizon: 2.0 * DAY,
+            arrival: ArrivalSpec::Poisson {
+                mean_interarrival: 60.0,
+            },
+            record_traces: false,
+            retention: Some(RetentionConfig { resolution: 1800.0 }),
+            ..Default::default()
+        };
+        let r = Experiment::new(cfg, params.clone()).run().expect("run");
+        assert_eq!(off_digest, r.digest(), "retention must be digest-neutral");
+        println!(
+            "# retention run: {} resident vs {} raw points",
+            r.tsdb.resident_points(),
+            metered.tsdb.resident_points()
+        );
+        report.push(("retained_resident_points", Json::Num(r.tsdb.resident_points() as f64)));
+        report.push(("raw_resident_points", Json::Num(metered.tsdb.resident_points() as f64)));
+    }
+
+    let json = Json::obj(report);
+    std::fs::write("BENCH_obs.json", json.to_string()).expect("write BENCH_obs.json");
+    println!("# wrote BENCH_obs.json");
+}

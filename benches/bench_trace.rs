@@ -13,43 +13,18 @@
 //!
 //! Run: `cargo bench --bench bench_trace`
 
-use std::alloc::{GlobalAlloc, Layout, System};
-use std::sync::atomic::{AtomicU64, Ordering};
-
 use pipesim::analytics::TraceSummary;
 use pipesim::coordinator::{fit_params, ArrivalSpec, Experiment, ExperimentConfig};
 use pipesim::des::DAY;
 use pipesim::empirical::GroundTruth;
 use pipesim::model::{Framework, TaskType};
 use pipesim::trace::{NullSink, StreamingPstSink, Trace, TraceEvent, TraceEventKind, TraceSink};
+use pipesim::util::alloc::{allocs, CountingAlloc};
 use pipesim::util::bench::{black_box, Bench};
 use pipesim::util::Json;
 
-/// System allocator wrapped with an allocation counter.
-struct CountingAlloc;
-
-static ALLOCS: AtomicU64 = AtomicU64::new(0);
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(layout)
-    }
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
-    }
-}
-
 #[global_allocator]
 static ALLOCATOR: CountingAlloc = CountingAlloc;
-
-fn allocs() -> u64 {
-    ALLOCS.load(Ordering::Relaxed)
-}
 
 fn main() {
     let db = GroundTruth::new(23).generate_weeks(2);

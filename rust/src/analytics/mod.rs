@@ -11,4 +11,4 @@ pub mod trace_stats;
 pub use dashboard::render_dashboard;
 pub use qq::{qq_report, QqSeries};
 pub use report::{Comparison, Metric};
-pub use trace_stats::{trace_qq, TraceSummary};
+pub use trace_stats::{trace_qq, trace_qq_file, TraceSummary};

@@ -9,7 +9,7 @@ use crate::coordinator::{ExperimentConfig, SimParams};
 use crate::model::{Framework, TaskType};
 use crate::stats::rng::Pcg64;
 use crate::stats::Summary;
-use crate::trace::{Trace, TraceEventKind, TraceMeta};
+use crate::trace::{Trace, TraceEvent, TraceEventKind, TraceMeta, TraceScanner};
 
 use super::qq::{qq_report, QqSeries};
 
@@ -234,11 +234,53 @@ const MIN_STRATUM: usize = 30;
 /// comparing profile/poisson captures against the global random fit
 /// would report spurious mismatches. Traces without a parseable config
 /// fall back to the random fit at factor 1.
-fn arrival_reference(trace: &Trace, params: &SimParams) -> (ArrivalModel, f64) {
-    if let Ok(cfg) = ExperimentConfig::from_json_text(&trace.meta.config_json) {
+fn arrival_reference(config_json: &str, params: &SimParams) -> (ArrivalModel, f64) {
+    if let Ok(cfg) = ExperimentConfig::from_json_text(config_json) {
         (params.resolve_arrival(cfg.arrival), cfg.interarrival_factor)
     } else {
         (params.arrival_random.clone(), 1.0)
+    }
+}
+
+/// One-pass observation collector for the Q-Q strata: only the sampled
+/// values survive (interarrival draws, per-framework train durations,
+/// evaluate durations), so the Q-Q can run off a [`TraceScanner`]
+/// without the full event `Vec` — memory is bounded by the *observed*
+/// strata, not the trace length.
+struct QqObservations {
+    /// `(draw time, gap)` per interarrival draw — the profile model is
+    /// time-of-week dependent, so the re-sampling needs the times too.
+    gaps: Vec<(f64, f64)>,
+    /// Train exec durations, indexed by `Framework::index`.
+    train_by_fw: Vec<Vec<f64>>,
+    eval: Vec<f64>,
+}
+
+impl QqObservations {
+    fn new() -> Self {
+        QqObservations {
+            gaps: Vec::new(),
+            train_by_fw: vec![Vec::new(); Framework::ALL.len()],
+            eval: Vec::new(),
+        }
+    }
+
+    fn record(&mut self, ev: &TraceEvent) {
+        match ev.kind {
+            TraceEventKind::ArrivalGapDrawn { gap } => self.gaps.push((ev.t, gap)),
+            TraceEventKind::TaskDone {
+                task: TaskType::Train,
+                framework: Some(f),
+                exec,
+                ..
+            } => self.train_by_fw[f.index()].push(exec),
+            TraceEventKind::TaskDone {
+                task: TaskType::Evaluate,
+                exec,
+                ..
+            } => self.eval.push(exec),
+            _ => {}
+        }
     }
 }
 
@@ -257,72 +299,82 @@ pub fn trace_qq(
     n_q: usize,
     seed: u64,
 ) -> Vec<QqSeries> {
+    let mut obs = QqObservations::new();
+    for ev in &trace.events {
+        obs.record(ev);
+    }
+    qq_from_observations(&obs, &trace.meta.config_json, params, n_samples, n_q, seed)
+}
+
+/// Streamed [`trace_qq`]: collect the strata in one [`TraceScanner`]
+/// pass over the file, never materializing the event `Vec` — same
+/// reports, same sampling order, so the output is identical to
+/// `trace_qq(&Trace::load(path)?, ...)`.
+pub fn trace_qq_file(
+    path: &std::path::Path,
+    params: &SimParams,
+    n_samples: usize,
+    n_q: usize,
+    seed: u64,
+) -> crate::Result<Vec<QqSeries>> {
+    let mut scan = TraceScanner::open(path)?;
+    let config_json = scan.meta().config_json.clone();
+    let mut obs = QqObservations::new();
+    for ev in &mut scan {
+        obs.record(&ev?);
+    }
+    Ok(qq_from_observations(
+        &obs,
+        &config_json,
+        params,
+        n_samples,
+        n_q,
+        seed,
+    ))
+}
+
+fn qq_from_observations(
+    obs: &QqObservations,
+    config_json: &str,
+    params: &SimParams,
+    n_samples: usize,
+    n_q: usize,
+    seed: u64,
+) -> Vec<QqSeries> {
     let mut rng = Pcg64::new(seed);
     let mut out = Vec::new();
 
     // interarrivals vs the model the capture drew from
-    let gap_events: Vec<(f64, f64)> = trace
-        .events
-        .iter()
-        .filter_map(|e| match e.kind {
-            TraceEventKind::ArrivalGapDrawn { gap } => Some((e.t, gap)),
-            _ => None,
-        })
-        .collect();
-    if gap_events.len() >= MIN_STRATUM {
-        let (mut model, factor) = arrival_reference(trace, params);
+    if obs.gaps.len() >= MIN_STRATUM {
+        let (mut model, factor) = arrival_reference(config_json, params);
         let sim: Vec<f64> = (0..n_samples)
             .map(|i| {
-                let (t, _) = gap_events[i % gap_events.len()];
+                let (t, _) = obs.gaps[i % obs.gaps.len()];
                 model.next_interarrival(t, factor, &mut rng)
             })
             .collect();
-        let gaps: Vec<f64> = gap_events.iter().map(|&(_, g)| g).collect();
+        let gaps: Vec<f64> = obs.gaps.iter().map(|&(_, g)| g).collect();
         out.push(qq_report("interarrival/fit", &gaps, &sim, n_q));
     }
 
     // train durations per framework vs the fitted log-mixtures
     for fw in Framework::ALL {
-        let observed: Vec<f64> = trace
-            .events
-            .iter()
-            .filter_map(|e| match e.kind {
-                TraceEventKind::TaskDone {
-                    task: TaskType::Train,
-                    framework: Some(f),
-                    exec,
-                    ..
-                } if f == fw => Some(exec),
-                _ => None,
-            })
-            .collect();
+        let observed = &obs.train_by_fw[fw.index()];
         if observed.len() >= MIN_STRATUM {
             let g = params.train_gmm(fw);
             let sim: Vec<f64> = (0..n_samples)
                 .map(|_| g.sample(&mut rng).exp().max(0.1))
                 .collect();
-            out.push(qq_report(format!("train/{fw}/fit"), &observed, &sim, n_q));
+            out.push(qq_report(format!("train/{fw}/fit"), observed, &sim, n_q));
         }
     }
 
     // evaluate durations vs the fitted mixture
-    let observed: Vec<f64> = trace
-        .events
-        .iter()
-        .filter_map(|e| match e.kind {
-            TraceEventKind::TaskDone {
-                task: TaskType::Evaluate,
-                exec,
-                ..
-            } => Some(exec),
-            _ => None,
-        })
-        .collect();
-    if observed.len() >= MIN_STRATUM {
+    if obs.eval.len() >= MIN_STRATUM {
         let sim: Vec<f64> = (0..n_samples)
             .map(|_| params.eval_log_gmm.sample(&mut rng).exp().max(0.05))
             .collect();
-        out.push(qq_report("evaluate/fit", &observed, &sim, n_q));
+        out.push(qq_report("evaluate/fit", &obs.eval, &sim, n_q));
     }
     out
 }
@@ -387,6 +439,30 @@ mod tests {
         assert_eq!(streamed.span, buffered.span);
         assert_eq!(streamed.makespan.sum.to_bits(), buffered.makespan.sum.to_bits());
         assert_eq!(streamed.grant_wait.count, buffered.grant_wait.count);
+    }
+
+    #[test]
+    fn streamed_qq_matches_the_buffered_qq() {
+        let (params, trace) = captured();
+        let path = std::env::temp_dir().join(format!(
+            "pipesim_qq_scan_{}.pst",
+            std::process::id()
+        ));
+        trace.save(&path).unwrap();
+        let streamed = trace_qq_file(&path, &params, 5_000, 30, 7).unwrap();
+        std::fs::remove_file(&path).ok();
+        let buffered = trace_qq(&trace, &params, 5_000, 30, 7);
+        assert_eq!(streamed.len(), buffered.len());
+        for (a, b) in streamed.iter().zip(&buffered) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.ks.to_bits(), b.ks.to_bits(), "{}", a.name);
+            assert_eq!(
+                a.quantile_corr.to_bits(),
+                b.quantile_corr.to_bits(),
+                "{}",
+                a.name
+            );
+        }
     }
 
     #[test]

@@ -80,6 +80,26 @@ pub struct ExperimentConfig {
     pub runtime_view: RuntimeViewConfig,
     /// Stop after this many pipeline arrivals (None = horizon only).
     pub max_pipelines: Option<u64>,
+    /// Downsampled tsdb retention: when set, series points roll into
+    /// fixed-resolution windows of `(count, sum, min, max, sketch)`
+    /// instead of raw columns, so memory stays flat over the run
+    /// length. `None` (the default) stores every point raw and is
+    /// byte-identical to pre-retention behavior.
+    pub retention: Option<RetentionConfig>,
+    /// Enable the simulator self-profiling meter
+    /// ([`crate::obs::SimMeter`]): per-kind event counts and wall time,
+    /// calendar depth, heap rebuilds, RNG draws. Off by default
+    /// (zero-cost); the report lands in `ExperimentResult::meter` and
+    /// never affects the digest.
+    pub meter: bool,
+}
+
+/// Downsampled retention policy for the run's tsdb.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetentionConfig {
+    /// Window resolution in seconds (points within one window roll
+    /// into a single streaming-aggregate bucket).
+    pub resolution: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -97,6 +117,8 @@ impl Default for ExperimentConfig {
             capture_trace: false,
             runtime_view: RuntimeViewConfig::default(),
             max_pipelines: None,
+            retention: None,
+            meter: false,
         }
     }
 }
@@ -129,6 +151,14 @@ impl ExperimentConfig {
             return Err(crate::error::Error::Config(
                 "sample_interval must be > 0".into(),
             ));
+        }
+        if let Some(ret) = &self.retention {
+            if !ret.resolution.is_finite() || ret.resolution <= 0.0 {
+                return Err(crate::error::Error::Config(format!(
+                    "retention resolution must be finite and > 0, got {}",
+                    ret.resolution
+                )));
+            }
         }
         if self.infra.training_capacity == 0 || self.infra.compute_capacity == 0 {
             // a zero-capacity resource queues jobs forever: the run would
@@ -399,6 +429,32 @@ mod tests {
         let back = ExperimentConfig::from_json_text(&plain).unwrap();
         assert_eq!(back.infra.scheduler_training, None);
         assert_eq!(back.infra.scheduler_compute, None);
+    }
+
+    #[test]
+    fn retention_and_meter_knobs_roundtrip_and_validate() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.retention = Some(RetentionConfig { resolution: 600.0 });
+        cfg.meter = true;
+        cfg.validate().unwrap();
+        let back = ExperimentConfig::from_json_text(&cfg.to_json_text()).unwrap();
+        assert_eq!(back.retention, cfg.retention);
+        assert!(back.meter);
+        // bad resolutions rejected up front
+        cfg.retention = Some(RetentionConfig { resolution: 0.0 });
+        assert!(cfg.validate().is_err());
+        cfg.retention = Some(RetentionConfig {
+            resolution: f64::NAN,
+        });
+        assert!(cfg.validate().is_err());
+        // unset knobs are omitted from JSON, so pre-existing configs
+        // and trace metadata stay byte-identical
+        let plain = ExperimentConfig::default().to_json_text();
+        assert!(!plain.contains("retention"), "{plain}");
+        assert!(!plain.contains("meter"), "{plain}");
+        let back = ExperimentConfig::from_json_text(&plain).unwrap();
+        assert_eq!(back.retention, None);
+        assert!(!back.meter);
     }
 
     #[test]

@@ -13,7 +13,7 @@ pub mod strategy;
 pub mod sweep;
 pub mod triggers;
 
-pub use config::{ArrivalSpec, ExperimentConfig, RuntimeViewConfig};
+pub use config::{ArrivalSpec, ExperimentConfig, RetentionConfig, RuntimeViewConfig};
 pub use experiment::Experiment;
 pub use params::{fit_params, fit_params_with_report, FitReport, SimParams};
 pub use result::ExperimentResult;

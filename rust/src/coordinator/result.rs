@@ -1,5 +1,6 @@
 //! Experiment results: counters, summaries, and the trace store.
 
+use crate::obs::MeterReport;
 use crate::stats::Summary;
 use crate::trace::Trace;
 use crate::tsdb::TsStore;
@@ -133,6 +134,11 @@ pub struct ExperimentResult {
     /// The captured event trace when `cfg.capture_trace` was set.
     /// Derivable run description, deliberately not part of the digest.
     pub trace: Option<Trace>,
+    /// The simulator self-profile when `cfg.meter` was set. Pure
+    /// engine accounting (like `wall_secs`/`peak_rss_mb`), deliberately
+    /// not part of the digest: meter-on and meter-off runs of the same
+    /// `(config, seed)` must produce byte-identical digests.
+    pub meter: Option<MeterReport>,
 }
 
 impl ExperimentResult {
@@ -378,6 +384,7 @@ mod tests {
             trigger: "off".into(),
             placer: String::new(),
             trace: None,
+            meter: None,
         }
     }
 
@@ -456,6 +463,15 @@ mod tests {
         h.class_util = vec![("training/a100".into(), 0.5)];
         h.class_failures = vec![("training/a100".into(), 2)];
         assert_eq!(a.digest(), h.digest());
+        // the self-profiling meter is engine accounting, same rule as
+        // wall_secs/peak_rss_mb: meter-on runs keep meter-off digests
+        let mut m = empty_result();
+        m.meter = Some(MeterReport {
+            events_by_kind: vec![("arrival".into(), 100)],
+            calendar_scheduled: 500,
+            ..Default::default()
+        });
+        assert_eq!(a.digest(), m.digest());
         let mut c = empty_result();
         c.completed += 1;
         assert_ne!(a.digest(), c.digest());

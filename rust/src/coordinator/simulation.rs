@@ -29,6 +29,7 @@ use crate::model::{
     ClusterFailureConfig, CompressionModel, DataAsset, Framework, ModelMetrics, ResourceKind,
     TaskExecutor, TaskType,
 };
+use crate::obs::{MeterReport, SimMeter, EVENT_KINDS};
 use crate::runtime::pool::{Backend, SamplePool1};
 use crate::runtime::{Runtime, K1};
 use crate::stats::gmm::Gmm1;
@@ -74,6 +75,21 @@ enum Event {
     /// hardware classes are configured, so the repair restores the
     /// same class the failure was attributed to.
     ClassRepaired(ResourceKind, u32, f64),
+}
+
+/// Index of an event's kind in [`EVENT_KINDS`] (SimMeter accounting).
+fn kind_index(ev: &Event) -> usize {
+    match ev {
+        Event::Arrival => 0,
+        Event::TaskDone(_) => 1,
+        Event::Monitor => 2,
+        Event::Drift => 3,
+        Event::RetrainLaunch(_) => 4,
+        Event::SlotFailed(_) => 5,
+        Event::SlotRepaired(..) => 6,
+        Event::ClassFailed(..) => 7,
+        Event::ClassRepaired(..) => 8,
+    }
 }
 
 /// Per-pipeline execution state (slab-allocated, freed on completion so
@@ -197,6 +213,9 @@ struct Counters {
     useful_work: f64,
     /// MTTR samples, one per landed failure — recovery-time percentiles.
     downtimes: Vec<f64>,
+    /// Class-placement operations performed (meter-only; never enters
+    /// the digest).
+    placements: u64,
 }
 
 /// One experiment run in progress: the calendar, the resources with
@@ -238,6 +257,10 @@ pub(super) struct Simulation {
     /// failure-off runs keep their digests byte-identical.
     rng_failure: Pcg64,
     c: Counters,
+    /// Self-profiling hooks (disabled unless `cfg.meter`): per-kind
+    /// event counts/wall time and the calendar depth high-water mark.
+    /// All readings stay out of the digest.
+    meter: SimMeter,
     // event-level trace capture (NullSink when cfg.capture_trace is off;
     // every emission site checks `capture` so the off path costs one
     // branch and zero allocations)
@@ -344,6 +367,9 @@ impl Simulation {
             }
         }
         let mut db = TsStore::new();
+        if let Some(ret) = &cfg.retention {
+            db.set_retention(ret.resolution);
+        }
         let h = SeriesHandles::intern(&mut db);
 
         // event-trace capture: an injected sink wins and forces capture
@@ -396,6 +422,9 @@ impl Simulation {
             }
         }
 
+        // `cfg` is moved into the struct below before `meter` is built,
+        // so lift the knob out first.
+        let cfg_meter = cfg.meter;
         Ok(Simulation {
             cfg,
             params,
@@ -425,6 +454,7 @@ impl Simulation {
                 peak_rss: rss_mb(),
                 ..Counters::default()
             },
+            meter: SimMeter::new(cfg_meter),
             capture,
             sink,
             grant_buf: Vec::new(),
@@ -439,6 +469,13 @@ impl Simulation {
                 break;
             }
             self.c.events += 1;
+            // Meter probe: one branch when off, so unmetered runs keep
+            // their hot loop (and their digests) untouched.
+            let probe = if self.meter.enabled() {
+                Some((kind_index(&ev), std::time::Instant::now()))
+            } else {
+                None
+            };
             match ev {
                 Event::Arrival => self.on_arrival(t)?,
                 Event::TaskDone(pid) => self.on_task_done(t, pid)?,
@@ -451,6 +488,10 @@ impl Simulation {
                 Event::ClassRepaired(kind, ci, downtime) => {
                     self.on_class_repaired(t, kind, ci, downtime)
                 }
+            }
+            if let Some((k, t0)) = probe {
+                self.meter
+                    .record_event(k, t0.elapsed().as_nanos() as u64, self.cal.backing_len());
             }
         }
         self.finish(started)
@@ -480,6 +521,7 @@ impl Simulation {
         alloc.clear();
         let speed = pool.place(t, job, fw.map(|f| f.name()), &mut alloc);
         st.allocation = alloc;
+        self.c.placements += 1;
         speed
     }
 
@@ -1659,6 +1701,50 @@ impl Simulation {
             meta: self.cfg.trace_meta(),
             events: self.sink.drain(),
         });
+        // fold the meter readings into a self-contained report (string
+        // labels only, so exporters need no simulator types); built
+        // before the result literal because `self.db` moves into it
+        let meter = self.meter.enabled().then(|| MeterReport {
+            events_by_kind: EVENT_KINDS
+                .iter()
+                .zip(self.meter.events_by_kind())
+                .map(|(k, &n)| (k.to_string(), n))
+                .collect(),
+            wall_ns_by_kind: EVENT_KINDS
+                .iter()
+                .zip(self.meter.wall_ns_by_kind())
+                .map(|(k, &n)| (k.to_string(), n))
+                .collect(),
+            calendar_scheduled: self.cal.scheduled_total(),
+            calendar_cancelled: self.cal.cancelled_total(),
+            calendar_compactions: self.cal.compactions_total(),
+            calendar_depth_hwm: self.meter.depth_hwm(),
+            heap_rebuilds: vec![
+                ("training".into(), self.training.index_rebuilds()),
+                ("compute".into(), self.compute.index_rebuilds()),
+            ],
+            requests: vec![
+                ("training".into(), self.training.total_requests),
+                ("compute".into(), self.compute.total_requests),
+            ],
+            queued: vec![
+                ("training".into(), self.training.total_queued),
+                ("compute".into(), self.compute.total_queued),
+            ],
+            grants: vec![
+                ("training".into(), self.training.wait_stats.count),
+                ("compute".into(), self.compute.wait_stats.count),
+            ],
+            preemptions: self.c.preemptions,
+            placements: self.c.placements,
+            rng_draws: vec![
+                ("arrival".into(), self.rng_arrival.draws()),
+                ("noise".into(), self.rng_noise.draws()),
+                ("drift".into(), self.rng_drift.draws()),
+                ("failure".into(), self.rng_failure.draws()),
+            ],
+            alloc_events: self.meter.alloc_events(),
+        });
         Ok(ExperimentResult {
             name: self.cfg.name,
             seed: self.cfg.seed,
@@ -1698,6 +1784,7 @@ impl Simulation {
             trigger,
             placer,
             trace,
+            meter,
             tsdb: self.db,
         })
     }

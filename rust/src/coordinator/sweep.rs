@@ -40,6 +40,13 @@ use super::result::ExperimentResult;
 pub type CellSinkFactory =
     Box<dyn Fn(usize, &ExperimentConfig) -> Result<Box<dyn TraceSink>> + Send + Sync>;
 
+/// Per-cell completion hook: invoked on the worker thread with the
+/// cell's input index, config, and finished result — before the result
+/// is handed back for ordering. This is how `sweep --metrics-dir`
+/// writes one OpenMetrics file per cell without buffering every cell's
+/// export until the sweep ends; a hook error fails that cell's run.
+pub type CellHook = Box<dyn Fn(usize, &ExperimentConfig, &ExperimentResult) -> Result<()> + Send + Sync>;
+
 /// A sweep under construction: shared inputs + the cell grid.
 pub struct Sweep {
     params: Arc<SimParams>,
@@ -47,6 +54,7 @@ pub struct Sweep {
     cells: Vec<ExperimentConfig>,
     jobs: usize,
     sink_factory: Option<CellSinkFactory>,
+    cell_hook: Option<CellHook>,
 }
 
 impl Sweep {
@@ -57,6 +65,7 @@ impl Sweep {
             cells: Vec::new(),
             jobs: 0,
             sink_factory: None,
+            cell_hook: None,
         }
     }
 
@@ -71,6 +80,12 @@ impl Sweep {
     /// `capture_trace`; a factory error fails that cell's run.
     pub fn with_cell_sinks(mut self, factory: CellSinkFactory) -> Self {
         self.sink_factory = Some(factory);
+        self
+    }
+
+    /// Run a [`CellHook`] after each cell completes (see its docs).
+    pub fn with_cell_hook(mut self, hook: CellHook) -> Self {
+        self.cell_hook = Some(hook);
         self
     }
 
@@ -116,6 +131,7 @@ impl Sweep {
             cells,
             jobs,
             sink_factory,
+            cell_hook,
         } = self;
         if cells.is_empty() {
             return Err(Error::Config("sweep: no cells to run".into()));
@@ -138,6 +154,7 @@ impl Sweep {
                     let cells = &cells;
                     let next = &next;
                     let sink_factory = &sink_factory;
+                    let cell_hook = &cell_hook;
                     handles.push(scope.spawn(move || {
                         let mut out = Vec::new();
                         loop {
@@ -154,6 +171,14 @@ impl Sweep {
                                 Some(Ok(sink)) => exp.with_sink(sink).run(),
                                 Some(Err(e)) => Err(e),
                             };
+                            // per-cell exports happen here, on the
+                            // worker, while the result is still warm
+                            let r = r.and_then(|res| {
+                                if let Some(hook) = cell_hook.as_ref() {
+                                    hook(i, &cells[i], &res)?;
+                                }
+                                Ok(res)
+                            });
                             out.push((i, r));
                         }
                         out
@@ -278,12 +303,13 @@ impl SweepResult {
         let mut s = String::from(
             "cell,name,seed,arrived,completed,tasks_executed,events_processed,\
              util_training,util_compute,mean_wait_training_s,avg_queue_training,\
-             final_mean_performance,failures,lost_work_s,goodput,cost,wall_secs\n",
+             final_mean_performance,failures,lost_work_s,goodput,cost,wall_secs,\
+             wall_time_ms,peak_rss_points\n",
         );
         for (i, r) in self.results.iter().enumerate() {
             let _ = writeln!(
                 s,
-                "{i},{},{},{},{},{},{},{:.6},{:.6},{:.3},{:.3},{:.4},{},{:.3},{:.6},{:.4},{:.4}",
+                "{i},{},{},{},{},{},{},{:.6},{:.6},{:.3},{:.3},{:.4},{},{:.3},{:.6},{:.4},{:.4},{:.3},{}",
                 r.name,
                 r.seed,
                 r.arrived,
@@ -299,7 +325,9 @@ impl SweepResult {
                 r.lost_work,
                 r.goodput,
                 r.cost,
-                r.wall_secs
+                r.wall_secs,
+                r.wall_secs * 1000.0,
+                r.tsdb.resident_points()
             );
         }
         s
@@ -506,6 +534,12 @@ mod tests {
         assert!(out.to_csv().lines().count() == 7);
         assert!(out.to_csv().starts_with("cell,name,seed,"));
         assert!(out.to_csv().contains("goodput"));
+        // runtime-cost columns ride at the end of every row
+        let csv = out.to_csv();
+        let header = csv.lines().next().unwrap();
+        assert!(header.ends_with("wall_time_ms,peak_rss_points"));
+        let first = csv.lines().nth(1).unwrap();
+        assert_eq!(first.split(',').count(), header.split(',').count());
     }
 
     #[test]
@@ -564,6 +598,36 @@ mod tests {
         let out = sweep
             .with_cell_sinks(Box::new(|_i, _cfg| {
                 Err(crate::error::Error::Config("no sink for you".into()))
+            }))
+            .run();
+        assert!(out.is_err());
+    }
+
+    #[test]
+    fn cell_hook_fires_per_cell_and_errors_fail_the_sweep() {
+        let params = Arc::new(quick_params());
+        let seen = Arc::new(AtomicUsize::new(0));
+        let mut sweep = Sweep::new(params.clone()).jobs(2);
+        sweep.add_replications(&small_cfg("hooked", 0), 20, 3);
+        let seen2 = seen.clone();
+        let out = sweep
+            .with_cell_hook(Box::new(move |i, cfg, r| {
+                assert!(i < 3);
+                assert_eq!(cfg.name, "hooked");
+                assert_eq!(cfg.seed, r.seed);
+                seen2.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }))
+            .run()
+            .unwrap();
+        assert_eq!(seen.load(Ordering::Relaxed), 3, "one hook call per cell");
+        assert_eq!(out.results.len(), 3);
+        // a hook error surfaces as the sweep's error
+        let mut sweep = Sweep::new(params).jobs(1);
+        sweep.add(small_cfg("bad-hook", 1));
+        let out = sweep
+            .with_cell_hook(Box::new(|_i, _cfg, _r| {
+                Err(crate::error::Error::Config("hook says no".into()))
             }))
             .run();
         assert!(out.is_err());

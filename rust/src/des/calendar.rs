@@ -78,6 +78,8 @@ pub struct Calendar<E> {
     tombstones: usize,
     /// Total cancellations ever accepted (stats/bench accounting).
     cancelled_total: u64,
+    /// Total tombstone compactions performed (SimMeter accounting).
+    compactions: u64,
 }
 
 impl<E> Default for Calendar<E> {
@@ -94,6 +96,7 @@ impl<E> Calendar<E> {
             now: 0.0,
             tombstones: 0,
             cancelled_total: 0,
+            compactions: 0,
         }
     }
 
@@ -224,11 +227,17 @@ impl<E> Calendar<E> {
         self.cancelled_total
     }
 
+    /// Total tombstone compactions ever performed.
+    pub fn compactions_total(&self) -> u64 {
+        self.compactions
+    }
+
     /// Drop every tombstone and restore the heap invariant in O(n)
     /// (Floyd heapify via the shared [`heap4`] primitives).
     fn compact(&mut self) {
         self.heap.retain(|e| !e.cancelled);
         self.tombstones = 0;
+        self.compactions += 1;
         heap4::heapify(&mut self.heap, Entry::earlier_than);
     }
 
@@ -389,6 +398,7 @@ mod tests {
             );
         }
         assert_eq!(c.len(), 100);
+        assert!(c.compactions_total() > 0, "compactions must be counted");
         // survivors pop in order
         let mut prev = -1.0;
         while let Some((t, v)) = c.pop() {

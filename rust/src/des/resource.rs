@@ -134,6 +134,9 @@ pub struct Resource<T> {
     pub total_queued: u64,
     /// Running jobs evicted by a preemptive strategy.
     pub total_preempted: u64,
+    /// Stale-entry rebuilds of the waiter index heap (SimMeter
+    /// accounting).
+    index_rebuilds: u64,
 }
 
 impl<T> Resource<T> {
@@ -173,6 +176,7 @@ impl<T> Resource<T> {
             total_requests: 0,
             total_queued: 0,
             total_preempted: 0,
+            index_rebuilds: 0,
         }
     }
 
@@ -259,6 +263,11 @@ impl<T> Resource<T> {
         self.heap.len().saturating_sub(self.waiter_views.len())
     }
 
+    /// Total stale-entry rebuilds of the waiter index heap so far.
+    pub fn index_rebuilds(&self) -> u64 {
+        self.index_rebuilds
+    }
+
     /// True when `e` still names the waiter it was pushed for (seqs are
     /// unique per resource, so a slot match is exact).
     #[inline]
@@ -317,6 +326,7 @@ impl<T> Resource<T> {
     fn maybe_compact(&mut self) {
         let stale = self.index_heap_stale();
         if self.heap.len() > COMPACT_MIN && stale * 2 > self.heap.len() {
+            self.index_rebuilds += 1;
             self.heap.clear();
             for (i, w) in self.waiter_views.iter().enumerate() {
                 self.heap.push(HeapSlot {

@@ -16,8 +16,9 @@
 //!   [`coordinator::strategy`]), an embedded time-series store
 //!   ([`tsdb`]), first-class event traces with capture, a binary codec,
 //!   and replay ([`trace`]), the synthetic empirical substrate
-//!   ([`empirical`]), statistics ([`stats`]) and analytics
-//!   ([`analytics`]).
+//!   ([`empirical`]), statistics ([`stats`]), analytics
+//!   ([`analytics`]), and simulator self-observability with
+//!   OpenMetrics/JSON export ([`obs`]).
 //! * **L2/L1 (build-time Python)** — JAX compute graphs with a Pallas
 //!   E-step kernel, AOT-lowered to HLO text under `artifacts/` and executed
 //!   from [`runtime`] through the PJRT C API. Python never runs on the
@@ -42,6 +43,7 @@ pub mod des;
 pub mod empirical;
 pub mod error;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod stats;
 pub mod synth;

@@ -8,7 +8,14 @@
 //!   simulate       --params PARAMS.json [--config CFG.json] [--days D]
 //!                  [--arrival random|profile|poisson:SECS] [--seed S]
 //!                  [--scheduler SPEC] [--trigger SPEC]
+//!                  [--retention SECS] [--metrics FILE]
 //!                  [--cpu] [--export CSV]
+//!                  — --retention rolls the run's time series into
+//!                  fixed windows of that many seconds (bounded memory,
+//!                  sketched quantiles) instead of keeping raw points;
+//!                  --metrics turns the self-profiling meter on and
+//!                  writes the run's metrics to FILE (OpenMetrics text,
+//!                  or JSON when FILE ends in .json)
 //!   sweep          --params PARAMS.json [--config CFG.json] [--days D]
 //!                  [--arrival MODE] [--seeds N] [--seed0 S] [--jobs N]
 //!                  [--capacities 2,4,8] [--factors 0.5,1,2]
@@ -19,13 +26,18 @@
 //!                  [--checkpoint-intervals 0,600,3600]
 //!                  [--hw-classes a100:2:2.0:0.004+k80:6:1.0:0.001,v100:8]
 //!                  [--placers fastest_fit,cheapest_fit,pack,spread]
-//!                  [--traces] [--trace-dir DIR] [--cpu] [--export CSV]
+//!                  [--traces] [--trace-dir DIR] [--retention SECS]
+//!                  [--metrics-dir DIR] [--cpu] [--export CSV]
 //!                  — parallel replication/grid engine over capacities ×
 //!                  load factors × operational strategies × reliability ×
 //!                  hardware classes (per-cell tsdb recording off unless
 //!                  --traces; --trace-dir streams one binary event trace
 //!                  per cell to disk as it runs, so captures stay
-//!                  memory-flat; the per-cluster scheduler lists override
+//!                  memory-flat; --metrics-dir meters every cell and
+//!                  streams one OpenMetrics file per cell from the
+//!                  worker that ran it, and --retention bounds each
+//!                  cell's tsdb via windowed downsampling; the
+//!                  per-cluster scheduler lists override
 //!                  the shared --schedulers axis for the training/compute
 //!                  cluster respectively; --mtbf injects exponential slot
 //!                  failures on the training cluster with mean repair
@@ -59,7 +71,7 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use pipesim::analytics::{figures, render_dashboard, trace_qq, TraceSummary};
+use pipesim::analytics::{figures, render_dashboard, trace_qq_file, TraceSummary};
 use pipesim::coordinator::{
     fit_params_with_report, ArrivalSpec, Experiment, ExperimentConfig, SimParams, StrategySpec,
     Sweep,
@@ -67,9 +79,11 @@ use pipesim::coordinator::{
 use pipesim::des::DAY;
 use pipesim::empirical::{AnalyticsDb, GroundTruth};
 use pipesim::error::Error;
+use pipesim::coordinator::RetentionConfig;
 use pipesim::model::{ClusterFailureConfig, FailureModel, HwClass, HwClasses};
+use pipesim::obs::{render_metrics_json, render_openmetrics};
 use pipesim::runtime::Runtime;
-use pipesim::trace::{StreamingPstSink, Trace, TraceWorkload};
+use pipesim::trace::{StreamingPstSink, Trace, TraceScanner, TraceWorkload};
 use pipesim::util::Args;
 use pipesim::Result;
 
@@ -193,6 +207,15 @@ fn main() -> Result<()> {
                     cfg.runtime_view.enabled = true;
                 }
             }
+            if let Some(r) = args.get_parse_opt::<f64>("retention")? {
+                cfg.retention = Some(RetentionConfig { resolution: r });
+            }
+            // --metrics implies the meter: an export with all-zero
+            // self-profiling families would be worse than an error
+            let metrics = args.get_opt("metrics");
+            if metrics.is_some() {
+                cfg.meter = true;
+            }
             let cpu = args.flag("cpu");
             let export = args.get_opt("export");
             args.reject_unknown()?;
@@ -203,6 +226,15 @@ fn main() -> Result<()> {
                 let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
                 result.tsdb.export_csv(&mut f)?;
                 println!("traces -> {path}");
+            }
+            if let Some(path) = metrics {
+                let text = if path.ends_with(".json") {
+                    render_metrics_json(&result)
+                } else {
+                    render_openmetrics(&result)
+                };
+                std::fs::write(&path, text)?;
+                println!("metrics -> {path}");
             }
         }
 
@@ -241,6 +273,15 @@ fn main() -> Result<()> {
             // own .pst file while the cell runs (StreamingPstSink per
             // cell — the capture never accumulates in memory)
             let trace_dir = args.get_opt("trace-dir").map(PathBuf::from);
+            if let Some(r) = args.get_parse_opt::<f64>("retention")? {
+                base.retention = Some(RetentionConfig { resolution: r });
+            }
+            // --metrics-dir: meter every cell and stream one OpenMetrics
+            // file per cell from the worker thread that ran it
+            let metrics_dir = args.get_opt("metrics-dir").map(PathBuf::from);
+            if metrics_dir.is_some() {
+                base.meter = true;
+            }
             let export = args.get_opt("export");
             args.reject_unknown()?;
 
@@ -509,6 +550,16 @@ fn main() -> Result<()> {
                     Ok(sink)
                 }));
             }
+            if let Some(dir) = &metrics_dir {
+                std::fs::create_dir_all(dir)?;
+                let dir = dir.clone();
+                sweep = sweep.with_cell_hook(Box::new(move |i, cfg, r| {
+                    let file = dir
+                        .join(format!("cell{i:04}-{}-s{}.om", sanitize(&cfg.name), cfg.seed));
+                    std::fs::write(file, render_openmetrics(r))?;
+                    Ok(())
+                }));
+            }
             let out = sweep.run()?;
             print!("{}", out.table());
             if let Some(path) = export {
@@ -517,6 +568,9 @@ fn main() -> Result<()> {
             }
             if let Some(dir) = &trace_dir {
                 println!("{cell_count} event traces (streamed) -> {}", dir.display());
+            }
+            if let Some(dir) = &metrics_dir {
+                println!("{cell_count} metrics files -> {}", dir.display());
             }
         }
 
@@ -558,7 +612,10 @@ fn main() -> Result<()> {
                     out.display()
                 );
                 if let Some(path) = jsonl {
-                    std::fs::write(&path, trace.to_jsonl())?;
+                    // stream the mirror off the .pst just written — the
+                    // jsonl text never materializes as one giant String
+                    let mut w = std::io::BufWriter::new(std::fs::File::create(&path)?);
+                    TraceScanner::open(&out)?.write_jsonl(&mut w)?;
                     println!("jsonl -> {path}");
                 }
                 println!("digest: {}", result.digest());
@@ -570,11 +627,11 @@ fn main() -> Result<()> {
                 let params_path = args.get_opt("params");
                 let jsonl = args.get_opt("jsonl");
                 args.reject_unknown()?;
-                // the summary streams through TraceScanner record by
-                // record — O(1) memory, so year-scale streamed captures
-                // summarize on machines that could never hold the event
-                // Vec; the trace only materializes when Q-Q or the
-                // JSON-lines mirror actually need all of it
+                // every path here streams through TraceScanner record
+                // by record — the summary, the Q-Q (which keeps only
+                // the sampled strata), and the JSON-lines mirror — so
+                // year-scale streamed captures analyze on machines that
+                // could never hold the event Vec
                 let (meta, summary) = TraceSummary::from_file(&input)?;
                 println!(
                     "trace '{}' (seed {}), scheduler {}, trigger {}",
@@ -584,18 +641,16 @@ fn main() -> Result<()> {
                     meta.get("trigger").unwrap_or("?"),
                 );
                 print!("{}", summary.render());
-                if params_path.is_some() || jsonl.is_some() {
-                    let trace = Trace::load(&input)?;
-                    if let Some(p) = params_path {
-                        let params = SimParams::load(&PathBuf::from(p))?;
-                        for q in trace_qq(&trace, &params, 20_000, 60, 1) {
-                            println!("{}", q.verdict());
-                        }
+                if let Some(p) = params_path {
+                    let params = SimParams::load(&PathBuf::from(p))?;
+                    for q in trace_qq_file(&input, &params, 20_000, 60, 1)? {
+                        println!("{}", q.verdict());
                     }
-                    if let Some(path) = jsonl {
-                        std::fs::write(&path, trace.to_jsonl())?;
-                        println!("jsonl -> {path}");
-                    }
+                }
+                if let Some(path) = jsonl {
+                    let mut w = std::io::BufWriter::new(std::fs::File::create(&path)?);
+                    TraceScanner::open(&input)?.write_jsonl(&mut w)?;
+                    println!("jsonl -> {path}");
                 }
             }
 

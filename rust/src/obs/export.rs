@@ -1,0 +1,665 @@
+//! Metric exporters: OpenMetrics text and JSON renderings of an
+//! [`ExperimentResult`].
+//!
+//! Four metric families, all `pipesim_`-prefixed:
+//! * **outcome** — the run's headline counters and gauges (arrivals,
+//!   utilization, waits, traffic, wall time);
+//! * **ledger** — reliability and cost accounting (failures, lost
+//!   work, recovery quantiles, per-class utilization and dollars);
+//! * **series** — per-tsdb-series aggregates (`count/sum/min/max/
+//!   p50/p95`), computed exactly from raw columns or sketch-merged
+//!   from retention windows;
+//! * **meter** — the [`super::SimMeter`] self-profile, emitted only
+//!   when the run carried one.
+//!
+//! OpenMetrics conventions: counter families are declared without the
+//! `_total` suffix and sampled with it; label values are escaped; the
+//! exposition ends with `# EOF`.
+
+use crate::coordinator::ExperimentResult;
+use crate::stats::desc::{quantile_sorted, sorted};
+use crate::tsdb::{SeriesHandle, TsStore};
+use crate::util::Json;
+
+/// Escape a label value per the OpenMetrics exposition format.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// OpenMetrics text builder: `# TYPE` headers plus escaped samples.
+struct Om {
+    out: String,
+}
+
+impl Om {
+    fn new() -> Self {
+        Om {
+            out: String::with_capacity(4096),
+        }
+    }
+
+    /// Declare a metric family (counter families: name WITHOUT `_total`).
+    fn family(&mut self, name: &str, mtype: &str, help: &str) {
+        self.out.push_str("# TYPE pipesim_");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(mtype);
+        self.out.push('\n');
+        if !help.is_empty() {
+            self.out.push_str("# HELP pipesim_");
+            self.out.push_str(name);
+            self.out.push(' ');
+            self.out.push_str(help);
+            self.out.push('\n');
+        }
+    }
+
+    /// Emit one sample line (counter samples: name WITH `_total`).
+    fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str("pipesim_");
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(k);
+                self.out.push_str("=\"");
+                self.out.push_str(&esc(v));
+                self.out.push('"');
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+        self.out.push_str(&format!("{value}"));
+        self.out.push('\n');
+    }
+
+    fn counter(&mut self, name: &str, help: &str, value: f64) {
+        self.family(name, "counter", help);
+        self.sample(&format!("{name}_total"), &[], value);
+    }
+
+    fn gauge(&mut self, name: &str, help: &str, value: f64) {
+        self.family(name, "gauge", help);
+        self.sample(name, &[], value);
+    }
+
+    fn finish(mut self) -> String {
+        self.out.push_str("# EOF\n");
+        self.out
+    }
+}
+
+/// Per-series aggregate answered from either representation: exact
+/// from raw columns, or streaming-aggregate + sketch-merged from
+/// retention windows. `None` for series with no points.
+struct SeriesStats {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    p50: f64,
+    p95: f64,
+}
+
+fn series_stats(db: &TsStore, h: SeriesHandle) -> Option<SeriesStats> {
+    if let Some(w) = db.downsampled(h) {
+        let bs = w.buckets();
+        let first = bs.first()?;
+        let mut sketch = first.sketch.clone();
+        let (mut count, mut sum, mut min, mut max) =
+            (first.count, first.sum, first.min, first.max);
+        for b in &bs[1..] {
+            count += b.count;
+            sum += b.sum;
+            min = min.min(b.min);
+            max = max.max(b.max);
+            sketch.merge_from(&b.sketch);
+        }
+        return Some(SeriesStats {
+            count,
+            sum,
+            min,
+            max,
+            p50: sketch.quantile(0.5),
+            p95: sketch.quantile(0.95),
+        });
+    }
+    let s = db.series(h);
+    if s.is_empty() {
+        return None;
+    }
+    let v = sorted(&s.values);
+    Some(SeriesStats {
+        count: v.len() as u64,
+        sum: v.iter().sum(),
+        min: v[0],
+        max: v[v.len() - 1],
+        p50: quantile_sorted(&v, 0.5),
+        p95: quantile_sorted(&v, 0.95),
+    })
+}
+
+/// Render an [`ExperimentResult`] as OpenMetrics exposition text.
+pub fn render_openmetrics(r: &ExperimentResult) -> String {
+    let mut om = Om::new();
+
+    // ---- run info ------------------------------------------------------
+    let seed = r.seed.to_string();
+    om.family("run", "gauge", "run descriptor (labels carry identity)");
+    om.sample(
+        "run_info",
+        &[
+            ("name", r.name.as_str()),
+            ("seed", seed.as_str()),
+            ("scheduler", r.scheduler.as_str()),
+            ("trigger", r.trigger.as_str()),
+            ("placer", r.placer.as_str()),
+            ("sampler", r.sampler_backend.as_str()),
+        ],
+        1.0,
+    );
+
+    // ---- outcome -------------------------------------------------------
+    om.gauge("horizon_seconds", "simulated horizon covered", r.horizon);
+    om.counter("pipelines_arrived", "pipelines arrived", r.arrived as f64);
+    om.counter(
+        "pipelines_completed",
+        "pipelines completed",
+        r.completed as f64,
+    );
+    om.gauge(
+        "pipelines_in_flight",
+        "pipelines still queued/executing at the horizon",
+        r.in_flight as f64,
+    );
+    om.counter("tasks_executed", "tasks executed", r.tasks_executed as f64);
+    om.counter("gate_failures", "quality-gate failures", r.gate_failures as f64);
+    om.counter(
+        "preemptions",
+        "running tasks evicted by a preemptive scheduler",
+        r.preemptions as f64,
+    );
+    om.counter(
+        "retrains",
+        "retraining launches",
+        r.retrains_triggered as f64,
+    );
+    om.counter("models_deployed", "models deployed", r.models_deployed as f64);
+    om.counter(
+        "events",
+        "simulation events processed",
+        r.events_processed as f64,
+    );
+    om.family("utilization", "gauge", "resource slot utilization");
+    om.sample("utilization", &[("resource", "training")], r.util_training);
+    om.sample("utilization", &[("resource", "compute")], r.util_compute);
+    om.family("queue_len_avg", "gauge", "time-averaged queue length");
+    om.sample(
+        "queue_len_avg",
+        &[("resource", "training")],
+        r.avg_queue_training,
+    );
+    om.sample(
+        "queue_len_avg",
+        &[("resource", "compute")],
+        r.avg_queue_compute,
+    );
+    om.family("wait_seconds", "summary", "task queueing wait");
+    for (res, s) in [("training", &r.wait_training), ("compute", &r.wait_compute)] {
+        om.sample("wait_seconds_count", &[("resource", res)], s.count as f64);
+        om.sample("wait_seconds_sum", &[("resource", res)], s.sum);
+    }
+    om.family("wait_seconds_max", "gauge", "max task queueing wait");
+    for (res, s) in [("training", &r.wait_training), ("compute", &r.wait_compute)] {
+        let max = if s.count > 0 { s.max } else { 0.0 };
+        om.sample("wait_seconds_max", &[("resource", res)], max);
+    }
+    om.gauge(
+        "final_mean_performance",
+        "mean performance over deployed models at the horizon",
+        r.final_mean_performance,
+    );
+    om.family("wire_bytes", "counter", "store wire traffic incl. TCP overhead");
+    om.sample("wire_bytes_total", &[("dir", "read")], r.wire_read_bytes);
+    om.sample("wire_bytes_total", &[("dir", "write")], r.wire_write_bytes);
+    om.gauge("wall_seconds", "engine wall-clock time", r.wall_secs);
+    om.gauge("peak_rss_mb", "peak resident set size", r.peak_rss_mb);
+
+    // ---- ledger (reliability + cost) -----------------------------------
+    om.counter("failures", "slot failures injected", r.failures as f64);
+    om.counter("repairs", "failed slots brought back online", r.repairs as f64);
+    om.gauge(
+        "lost_work_seconds",
+        "service seconds destroyed by failures",
+        r.lost_work,
+    );
+    om.gauge(
+        "goodput_ratio",
+        "useful / (useful + lost) service seconds",
+        r.goodput,
+    );
+    om.family("recovery_seconds", "gauge", "per-failure repair time quantiles");
+    om.sample("recovery_seconds", &[("quantile", "0.5")], r.recovery_p50);
+    om.sample("recovery_seconds", &[("quantile", "0.95")], r.recovery_p95);
+    om.gauge("cost_dollars", "dollar cost of the run", r.cost);
+    if !r.class_util.is_empty() {
+        om.family("class_utilization", "gauge", "per-class busy-time utilization");
+        for (label, util) in &r.class_util {
+            om.sample("class_utilization", &[("class", label)], *util);
+        }
+    }
+    if !r.class_failures.is_empty() {
+        om.family("class_failures", "counter", "slot failures per hardware class");
+        for (label, n) in &r.class_failures {
+            om.sample("class_failures_total", &[("class", label)], *n as f64);
+        }
+    }
+
+    // ---- series --------------------------------------------------------
+    for (stat, help) in [
+        ("count", "points observed"),
+        ("sum", "sum of observed values"),
+        ("min", "min observed value"),
+        ("max", "max observed value"),
+        ("p50", "median (exact raw / sketch-merged downsampled)"),
+        ("p95", "95th percentile (exact raw / sketch-merged downsampled)"),
+    ] {
+        om.family(&format!("series_{stat}"), "gauge", help);
+        for h in r.tsdb.handles() {
+            let Some(s) = series_stats(&r.tsdb, h) else {
+                continue;
+            };
+            let key = r.tsdb.key(h);
+            let mut labels: Vec<(&str, &str)> =
+                vec![("series", key.measurement.as_str())];
+            for (k, v) in &key.tags {
+                labels.push((k.as_str(), v.as_str()));
+            }
+            let v = match stat {
+                "count" => s.count as f64,
+                "sum" => s.sum,
+                "min" => s.min,
+                "max" => s.max,
+                "p50" => s.p50,
+                _ => s.p95,
+            };
+            om.sample(&format!("series_{stat}"), &labels, v);
+        }
+    }
+
+    // ---- meter ---------------------------------------------------------
+    if let Some(m) = &r.meter {
+        om.family("meter_events", "counter", "events dispatched per kind");
+        for (kind, n) in &m.events_by_kind {
+            om.sample("meter_events_total", &[("kind", kind)], *n as f64);
+        }
+        om.family(
+            "meter_wall_seconds",
+            "gauge",
+            "handler wall time per event kind",
+        );
+        for (kind, ns) in &m.wall_ns_by_kind {
+            om.sample(
+                "meter_wall_seconds",
+                &[("kind", kind)],
+                *ns as f64 / 1e9,
+            );
+        }
+        om.counter(
+            "meter_calendar_scheduled",
+            "calendar events scheduled",
+            m.calendar_scheduled as f64,
+        );
+        om.counter(
+            "meter_calendar_cancelled",
+            "calendar events cancelled",
+            m.calendar_cancelled as f64,
+        );
+        om.counter(
+            "meter_calendar_compactions",
+            "calendar tombstone compactions",
+            m.calendar_compactions as f64,
+        );
+        om.gauge(
+            "meter_calendar_depth_hwm",
+            "calendar backing-heap high-water mark",
+            m.calendar_depth_hwm as f64,
+        );
+        om.family(
+            "meter_heap_rebuilds",
+            "counter",
+            "waiter-heap stale-entry rebuilds",
+        );
+        for (res, n) in &m.heap_rebuilds {
+            om.sample("meter_heap_rebuilds_total", &[("resource", res)], *n as f64);
+        }
+        om.family("meter_requests", "counter", "resource slot requests");
+        for (res, n) in &m.requests {
+            om.sample("meter_requests_total", &[("resource", res)], *n as f64);
+        }
+        om.family("meter_queued", "counter", "requests that had to queue");
+        for (res, n) in &m.queued {
+            om.sample("meter_queued_total", &[("resource", res)], *n as f64);
+        }
+        om.family(
+            "meter_grants",
+            "counter",
+            "jobs started on the resource (immediate + queued)",
+        );
+        for (res, n) in &m.grants {
+            om.sample("meter_grants_total", &[("resource", res)], *n as f64);
+        }
+        om.counter(
+            "meter_preemptions",
+            "running tasks evicted",
+            m.preemptions as f64,
+        );
+        om.counter(
+            "meter_placements",
+            "placement decisions taken",
+            m.placements as f64,
+        );
+        om.family("meter_rng_draws", "counter", "raw 64-bit draws per substream");
+        for (sub, n) in &m.rng_draws {
+            om.sample("meter_rng_draws_total", &[("substream", sub)], *n as f64);
+        }
+        om.counter(
+            "meter_allocations",
+            "allocation events during the run (0 without the counting allocator)",
+            m.alloc_events as f64,
+        );
+    }
+
+    om.finish()
+}
+
+/// Render an [`ExperimentResult`] as a JSON metrics document with the
+/// same coverage as [`render_openmetrics`] (`run`/`outcome`/`ledger`/
+/// `series`/`meter` sections; `meter` is `null` when the run carried
+/// no meter).
+pub fn render_metrics_json(r: &ExperimentResult) -> String {
+    fn pairs_u64(v: &[(String, u64)]) -> Json {
+        Json::obj(
+            v.iter()
+                .map(|(k, n)| (k.as_str(), Json::Num(*n as f64)))
+                .collect(),
+        )
+    }
+    let run = Json::obj(vec![
+        ("name", Json::Str(r.name.clone())),
+        ("seed", Json::Num(r.seed as f64)),
+        ("scheduler", Json::Str(r.scheduler.clone())),
+        ("trigger", Json::Str(r.trigger.clone())),
+        ("placer", Json::Str(r.placer.clone())),
+        ("sampler", Json::Str(r.sampler_backend.clone())),
+    ]);
+    let outcome = Json::obj(vec![
+        ("horizon_seconds", Json::Num(r.horizon)),
+        ("arrived", Json::Num(r.arrived as f64)),
+        ("completed", Json::Num(r.completed as f64)),
+        ("in_flight", Json::Num(r.in_flight as f64)),
+        ("tasks_executed", Json::Num(r.tasks_executed as f64)),
+        ("gate_failures", Json::Num(r.gate_failures as f64)),
+        ("preemptions", Json::Num(r.preemptions as f64)),
+        ("retrains", Json::Num(r.retrains_triggered as f64)),
+        ("models_deployed", Json::Num(r.models_deployed as f64)),
+        ("events", Json::Num(r.events_processed as f64)),
+        ("util_training", Json::Num(r.util_training)),
+        ("util_compute", Json::Num(r.util_compute)),
+        ("wait_training_count", Json::Num(r.wait_training.count as f64)),
+        ("wait_training_sum", Json::Num(r.wait_training.sum)),
+        ("wait_compute_count", Json::Num(r.wait_compute.count as f64)),
+        ("wait_compute_sum", Json::Num(r.wait_compute.sum)),
+        ("avg_queue_training", Json::Num(r.avg_queue_training)),
+        ("avg_queue_compute", Json::Num(r.avg_queue_compute)),
+        (
+            "final_mean_performance",
+            Json::Num(r.final_mean_performance),
+        ),
+        ("wire_read_bytes", Json::Num(r.wire_read_bytes)),
+        ("wire_write_bytes", Json::Num(r.wire_write_bytes)),
+        ("wall_seconds", Json::Num(r.wall_secs)),
+        ("peak_rss_mb", Json::Num(r.peak_rss_mb)),
+    ]);
+    let ledger = Json::obj(vec![
+        ("failures", Json::Num(r.failures as f64)),
+        ("repairs", Json::Num(r.repairs as f64)),
+        ("lost_work_seconds", Json::Num(r.lost_work)),
+        ("goodput_ratio", Json::Num(r.goodput)),
+        ("recovery_p50", Json::Num(r.recovery_p50)),
+        ("recovery_p95", Json::Num(r.recovery_p95)),
+        ("cost_dollars", Json::Num(r.cost)),
+        (
+            "class_utilization",
+            Json::obj(
+                r.class_util
+                    .iter()
+                    .map(|(k, v)| (k.as_str(), Json::Num(*v)))
+                    .collect(),
+            ),
+        ),
+        ("class_failures", pairs_u64(&r.class_failures)),
+    ]);
+    let mut series = Json::Arr(Vec::new());
+    if let Json::Arr(items) = &mut series {
+        for h in r.tsdb.handles() {
+            let Some(s) = series_stats(&r.tsdb, h) else {
+                continue;
+            };
+            items.push(Json::obj(vec![
+                ("key", Json::Str(r.tsdb.key(h).to_string())),
+                ("count", Json::Num(s.count as f64)),
+                ("sum", Json::Num(s.sum)),
+                ("min", Json::Num(s.min)),
+                ("max", Json::Num(s.max)),
+                ("p50", Json::Num(s.p50)),
+                ("p95", Json::Num(s.p95)),
+            ]));
+        }
+    }
+    let meter = match &r.meter {
+        None => Json::Null,
+        Some(m) => Json::obj(vec![
+            ("events_by_kind", pairs_u64(&m.events_by_kind)),
+            ("wall_ns_by_kind", pairs_u64(&m.wall_ns_by_kind)),
+            ("calendar_scheduled", Json::Num(m.calendar_scheduled as f64)),
+            ("calendar_cancelled", Json::Num(m.calendar_cancelled as f64)),
+            (
+                "calendar_compactions",
+                Json::Num(m.calendar_compactions as f64),
+            ),
+            ("calendar_depth_hwm", Json::Num(m.calendar_depth_hwm as f64)),
+            ("heap_rebuilds", pairs_u64(&m.heap_rebuilds)),
+            ("requests", pairs_u64(&m.requests)),
+            ("queued", pairs_u64(&m.queued)),
+            ("grants", pairs_u64(&m.grants)),
+            ("preemptions", Json::Num(m.preemptions as f64)),
+            ("placements", Json::Num(m.placements as f64)),
+            ("rng_draws", pairs_u64(&m.rng_draws)),
+            ("alloc_events", Json::Num(m.alloc_events as f64)),
+        ]),
+    };
+    Json::obj(vec![
+        ("run", run),
+        ("outcome", outcome),
+        ("ledger", ledger),
+        ("series", series),
+        ("meter", meter),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::MeterReport;
+    use crate::stats::Summary;
+    use crate::tsdb::SeriesKey;
+
+    fn result_with_series() -> ExperimentResult {
+        let mut db = TsStore::new();
+        let h = db.handle(SeriesKey::new("utilization").tag("resource", "training"));
+        for i in 0..10 {
+            db.append(h, i as f64, i as f64);
+        }
+        db.handle(SeriesKey::new("empty")); // no points → skipped
+        ExperimentResult {
+            name: "exp".into(),
+            seed: 7,
+            horizon: 3600.0,
+            tsdb: db,
+            arrived: 10,
+            completed: 9,
+            in_flight: 1,
+            tasks_executed: 30,
+            gate_failures: 1,
+            preemptions: 0,
+            failures: 2,
+            repairs: 1,
+            lost_work: 120.0,
+            goodput: 0.98,
+            recovery_p50: 60.0,
+            recovery_p95: 300.0,
+            cost: 12.5,
+            class_util: vec![("training/a100".into(), 0.8)],
+            class_failures: vec![("training/a100".into(), 2)],
+            retrains_triggered: 1,
+            models_deployed: 1,
+            events_processed: 500,
+            util_training: 0.5,
+            util_compute: 0.25,
+            wait_training: Summary::new(),
+            wait_compute: Summary::new(),
+            avg_queue_training: 0.1,
+            avg_queue_compute: 0.0,
+            final_mean_performance: 0.9,
+            wire_read_bytes: 1e6,
+            wire_write_bytes: 2e6,
+            wall_secs: 0.1,
+            peak_rss_mb: 50.0,
+            sampler_backend: "cpu".into(),
+            pool_refills: 0,
+            scheduler: "fifo".into(),
+            trigger: "off".into(),
+            placer: String::new(),
+            trace: None,
+            meter: None,
+        }
+    }
+
+    #[test]
+    fn openmetrics_has_all_families_and_eof() {
+        let r = result_with_series();
+        let text = render_openmetrics(&r);
+        assert!(text.ends_with("# EOF\n"), "{text}");
+        // counter declared without _total, sampled with it
+        assert!(text.contains("# TYPE pipesim_pipelines_arrived counter"));
+        assert!(text.contains("pipesim_pipelines_arrived_total 10"));
+        // ledger
+        assert!(text.contains("pipesim_failures_total 2"));
+        assert!(text.contains("pipesim_recovery_seconds{quantile=\"0.95\"} 300"));
+        assert!(text.contains("pipesim_class_utilization{class=\"training/a100\"} 0.8"));
+        // series: tags become labels, exact raw aggregates
+        assert!(
+            text.contains(
+                "pipesim_series_count{series=\"utilization\",resource=\"training\"} 10"
+            ),
+            "{text}"
+        );
+        assert!(text.contains("pipesim_series_sum{series=\"utilization\",resource=\"training\"} 45"));
+        // empty series skipped
+        assert!(!text.contains("series=\"empty\""));
+        // no meter → no meter family
+        assert!(!text.contains("pipesim_meter_"));
+    }
+
+    #[test]
+    fn openmetrics_emits_meter_when_present() {
+        let mut r = result_with_series();
+        r.meter = Some(MeterReport {
+            events_by_kind: vec![("arrival".into(), 10)],
+            wall_ns_by_kind: vec![("arrival".into(), 2_000_000_000)],
+            calendar_scheduled: 42,
+            calendar_depth_hwm: 9,
+            heap_rebuilds: vec![("training".into(), 1)],
+            requests: vec![("training".into(), 30)],
+            queued: vec![("training".into(), 5)],
+            grants: vec![("training".into(), 30)],
+            rng_draws: vec![("arrival".into(), 100)],
+            alloc_events: 1234,
+            ..Default::default()
+        });
+        let text = render_openmetrics(&r);
+        assert!(text.contains("pipesim_meter_events_total{kind=\"arrival\"} 10"));
+        assert!(text.contains("pipesim_meter_wall_seconds{kind=\"arrival\"} 2"));
+        assert!(text.contains("pipesim_meter_calendar_scheduled_total 42"));
+        assert!(text.contains("pipesim_meter_calendar_depth_hwm 9"));
+        assert!(text.contains("pipesim_meter_grants_total{resource=\"training\"} 30"));
+        assert!(text.contains("pipesim_meter_rng_draws_total{substream=\"arrival\"} 100"));
+        assert!(text.contains("pipesim_meter_allocations_total 1234"));
+    }
+
+    #[test]
+    fn openmetrics_downsampled_series_use_sketches() {
+        let mut r = result_with_series();
+        let mut db = TsStore::new();
+        db.set_retention(5.0);
+        let h = db.handle(SeriesKey::new("m"));
+        for i in 0..100 {
+            db.append(h, i as f64 * 0.1, i as f64);
+        }
+        r.tsdb = db;
+        let text = render_openmetrics(&r);
+        assert!(text.contains("pipesim_series_count{series=\"m\"} 100"));
+        assert!(text.contains("pipesim_series_sum{series=\"m\"} 4950"));
+        assert!(text.contains("pipesim_series_min{series=\"m\"} 0"));
+        assert!(text.contains("pipesim_series_max{series=\"m\"} 99"));
+        // sketch-merged median of 0..=99 lands near 49.5
+        let p50_line = text
+            .lines()
+            .find(|l| l.starts_with("pipesim_series_p50{series=\"m\"}"))
+            .expect("p50 sample");
+        let p50: f64 = p50_line.rsplit(' ').next().unwrap().parse().unwrap();
+        assert!((p50 - 49.5).abs() <= 5.0, "{p50_line}");
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let mut r = result_with_series();
+        r.name = "we\"ird\\name\nline".into();
+        let text = render_openmetrics(&r);
+        assert!(
+            text.contains(r#"name="we\"ird\\name\nline""#),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn json_renderer_covers_sections() {
+        let mut r = result_with_series();
+        r.meter = Some(MeterReport::default());
+        let text = render_metrics_json(&r);
+        let doc = Json::parse(&text).expect("valid json");
+        assert_eq!(doc.req("outcome").unwrap().f("arrived").unwrap(), 10.0);
+        assert_eq!(doc.req("ledger").unwrap().f("failures").unwrap(), 2.0);
+        let series = doc.req("series").unwrap().as_arr().unwrap();
+        assert_eq!(series.len(), 1); // empty series skipped
+        assert!(!matches!(doc.req("meter").unwrap(), Json::Null));
+        // meter-less run serializes meter: null
+        let r2 = result_with_series();
+        let doc2 = Json::parse(&render_metrics_json(&r2)).unwrap();
+        assert!(matches!(doc2.get("meter"), Some(Json::Null)));
+    }
+}

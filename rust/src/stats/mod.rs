@@ -11,8 +11,10 @@ pub mod fit;
 pub mod gmm;
 pub mod kmeans;
 pub mod rng;
+pub mod sketch;
 
 pub use desc::{mean, pearson, qq_points, quantile, quantiles, std_dev, Summary};
+pub use sketch::{FixedHistogram, TDigest};
 pub use dist::{Dist, Distribution, ExpWeibull, Exponential, LogNormal, Normal, Pareto, Weibull};
 pub use fit::{fit_exp_curve, fit_expweibull, fit_lognormal, fit_pareto, select_best_fit, ExpCurve};
 pub use gmm::{Gmm1, Gmm3};

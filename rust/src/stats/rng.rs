@@ -11,6 +11,10 @@ pub struct Pcg64 {
     inc: u128,
     /// Cached second normal from the Box–Muller pair.
     cached_normal: Option<f64>,
+    /// Raw 64-bit outputs drawn so far, including the two
+    /// initialization draws (SimMeter accounting; never affects the
+    /// stream itself).
+    draws: u64,
 }
 
 const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
@@ -28,6 +32,7 @@ impl Pcg64 {
             state: 0,
             inc: ((stream as u128) << 1) | 1,
             cached_normal: None,
+            draws: 0,
         };
         rng.next_u64();
         rng.state = rng.state.wrapping_add(seed as u128);
@@ -43,10 +48,17 @@ impl Pcg64 {
     /// Next raw 64 random bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
+        self.draws += 1;
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
         let rot = (self.state >> 122) as u32;
         let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
         xsl.rotate_right(rot)
+    }
+
+    /// Raw 64-bit outputs drawn from this generator so far (including
+    /// the two initialization draws of [`Pcg64::with_stream`]).
+    pub fn draws(&self) -> u64 {
+        self.draws
     }
 
     /// Uniform in [0, 1) with 53-bit precision.
@@ -227,6 +239,22 @@ mod tests {
         let set: std::collections::HashSet<_> = idx.iter().collect();
         assert_eq!(set.len(), 50);
         assert!(idx.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn draw_counter_tracks_outputs() {
+        let mut rng = Pcg64::new(8);
+        let init = rng.draws();
+        assert_eq!(init, 2, "with_stream performs two init draws");
+        for _ in 0..10 {
+            rng.next_u64();
+        }
+        assert_eq!(rng.draws(), init + 10);
+        // the counter never perturbs the stream
+        let mut a = Pcg64::new(9);
+        let mut b = Pcg64::new(9);
+        a.draws(); // read-only
+        assert_eq!(a.next_u64(), b.next_u64());
     }
 
     #[test]

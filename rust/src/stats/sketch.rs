@@ -1,0 +1,514 @@
+//! Mergeable streaming summaries: a t-digest quantile sketch and a
+//! fixed-bin histogram.
+//!
+//! Both structures hold O(1) memory regardless of how many points they
+//! absorb, and both merge associatively (up to floating-point
+//! accumulation), which is what makes downsampled tsdb windows
+//! re-aggregatable across query windows and — the ROADMAP follow-up —
+//! across sweep shards.
+//!
+//! ## Accuracy contract
+//!
+//! [`TDigest`] with compression `δ` keeps at most ~`2δ` centroids and
+//! answers `quantile(q)` with a *rank* error bounded by roughly `1/δ`
+//! in the middle of the distribution and tighter near the tails (the
+//! k1 scale function concentrates centroids there). The property tests
+//! in this module and in `tests/obs.rs` assert the conservative bound
+//! used throughout the repo: for the default `δ = 100`, the estimate
+//! lies between the exact empirical quantiles at `q ± 0.05`.
+//!
+//! [`FixedHistogram`] answers quantiles with value error bounded by one
+//! bin width (plus clamping at the configured range edges).
+
+/// One weighted centroid of a [`TDigest`].
+#[derive(Clone, Copy, Debug)]
+pub struct Centroid {
+    pub mean: f64,
+    pub weight: f64,
+}
+
+/// Mergeable t-digest quantile sketch (Dunning's merging variant with
+/// the k1 scale function).
+///
+/// Points insert in sorted position (the centroid list is small —
+/// at most ~`2δ` entries — so the memmove is cheap) and the list
+/// compresses back under the scale-function limit whenever it
+/// overflows. All operations are deterministic: the same sequence of
+/// `add`/`merge_from` calls produces bit-identical state.
+#[derive(Clone, Debug)]
+pub struct TDigest {
+    compression: f64,
+    /// Sorted by mean, non-decreasing.
+    centroids: Vec<Centroid>,
+    count: u64,
+    min: f64,
+    max: f64,
+}
+
+/// Default compression for tsdb retention windows: ~200 centroids,
+/// rank error well under the documented 0.05 test bound.
+pub const DEFAULT_COMPRESSION: f64 = 100.0;
+
+impl Default for TDigest {
+    fn default() -> Self {
+        TDigest::new(DEFAULT_COMPRESSION)
+    }
+}
+
+impl TDigest {
+    pub fn new(compression: f64) -> Self {
+        assert!(compression >= 10.0, "compression must be >= 10");
+        TDigest {
+            compression,
+            centroids: Vec::new(),
+            count: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Smallest absorbed value (+inf when empty).
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Largest absorbed value (-inf when empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn compression(&self) -> f64 {
+        self.compression
+    }
+
+    pub fn centroid_count(&self) -> usize {
+        self.centroids.len()
+    }
+
+    /// Approximate resident bytes: the centroid buffer plus the header.
+    pub fn approx_bytes(&self) -> usize {
+        self.centroids.capacity() * std::mem::size_of::<Centroid>() + 48
+    }
+
+    fn max_centroids(&self) -> usize {
+        (2.0 * self.compression).ceil() as usize + 8
+    }
+
+    /// Absorb one point.
+    pub fn add(&mut self, x: f64) {
+        debug_assert!(x.is_finite(), "t-digest rejects non-finite values");
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+        self.count += 1;
+        let pos = self.centroids.partition_point(|c| c.mean < x);
+        self.centroids.insert(pos, Centroid { mean: x, weight: 1.0 });
+        if self.centroids.len() > self.max_centroids() {
+            self.compress();
+        }
+    }
+
+    /// Absorb another sketch. Associative up to floating-point
+    /// accumulation: `(a ⊕ b) ⊕ c` and `a ⊕ (b ⊕ c)` agree within the
+    /// documented rank-error bound (property-tested). The result keeps
+    /// `self`'s compression.
+    pub fn merge_from(&mut self, other: &TDigest) {
+        if other.count == 0 {
+            return;
+        }
+        if other.min < self.min {
+            self.min = other.min;
+        }
+        if other.max > self.max {
+            self.max = other.max;
+        }
+        self.count += other.count;
+        for c in &other.centroids {
+            let pos = self.centroids.partition_point(|d| d.mean < c.mean);
+            self.centroids.insert(pos, *c);
+        }
+        self.compress();
+    }
+
+    /// k1 scale function: concentrates centroid resolution at the tails.
+    fn k1(q: f64, d: f64) -> f64 {
+        d / (2.0 * std::f64::consts::PI) * (2.0 * q - 1.0).clamp(-1.0, 1.0).asin()
+    }
+
+    fn k1_inv(k: f64, d: f64) -> f64 {
+        0.5 * ((2.0 * std::f64::consts::PI * k / d).sin() + 1.0)
+    }
+
+    /// One merging pass under the k1 weight limit; leaves ≤ ~2δ
+    /// centroids.
+    fn compress(&mut self) {
+        if self.centroids.len() <= 1 {
+            return;
+        }
+        let total: f64 = self.centroids.iter().map(|c| c.weight).sum();
+        let d = self.compression;
+        let mut out: Vec<Centroid> = Vec::with_capacity(self.compression as usize * 2);
+        let mut iter = self.centroids.drain(..);
+        let mut acc = iter.next().expect("len > 1");
+        let mut w_before = 0.0f64;
+        let mut q_limit = Self::k1_inv(Self::k1(0.0, d) + 1.0, d) * total;
+        for c in iter {
+            if w_before + acc.weight + c.weight <= q_limit {
+                // merge c into acc (weighted mean stays within the run,
+                // so the output list remains sorted)
+                let w = acc.weight + c.weight;
+                acc.mean = (acc.mean * acc.weight + c.mean * c.weight) / w;
+                acc.weight = w;
+            } else {
+                w_before += acc.weight;
+                q_limit = Self::k1_inv(Self::k1(w_before / total, d) + 1.0, d) * total;
+                out.push(acc);
+                acc = c;
+            }
+        }
+        out.push(acc);
+        self.centroids = out;
+    }
+
+    /// Estimate the `q`-quantile (q clamped to [0, 1]; NaN when empty).
+    ///
+    /// Anchored midpoint interpolation: centroid `i` with cumulative
+    /// weight `C_i` before it represents rank `C_i + w_i/2`; the
+    /// estimate interpolates linearly between successive centroid
+    /// means, anchored at `min` (rank 0) and `max` (rank n).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let q = q.clamp(0.0, 1.0);
+        if self.centroids.len() == 1 {
+            return self.centroids[0].mean;
+        }
+        let total = self.count as f64;
+        let target = q * total;
+        let mut cum = 0.0f64;
+        let mut prev_center = 0.0f64;
+        let mut prev_mean = self.min;
+        for (i, c) in self.centroids.iter().enumerate() {
+            let center = cum + c.weight / 2.0;
+            if target < center {
+                let (lo_rank, lo_val) = if i == 0 {
+                    (0.0, self.min)
+                } else {
+                    (prev_center, prev_mean)
+                };
+                let span = center - lo_rank;
+                let frac = if span > 0.0 {
+                    ((target - lo_rank) / span).clamp(0.0, 1.0)
+                } else {
+                    0.0
+                };
+                return lo_val + frac * (c.mean - lo_val);
+            }
+            cum += c.weight;
+            prev_center = center;
+            prev_mean = c.mean;
+        }
+        // past the last centroid's center: interpolate toward max
+        let span = total - prev_center;
+        let frac = if span > 0.0 {
+            ((target - prev_center) / span).clamp(0.0, 1.0)
+        } else {
+            1.0
+        };
+        prev_mean + frac * (self.max - prev_mean)
+    }
+}
+
+/// Fixed-range, fixed-bin histogram with underflow/overflow buckets.
+///
+/// Exact for `count`; quantiles carry value error of at most one bin
+/// width inside `[lo, hi)` and clamp to the range edges outside it.
+/// Merges exactly (integer counts) when the configurations match.
+#[derive(Clone, Debug)]
+pub struct FixedHistogram {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+    count: u64,
+}
+
+impl FixedHistogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(bins > 0 && hi > lo && lo.is_finite() && hi.is_finite());
+        FixedHistogram {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            underflow: 0,
+            overflow: 0,
+            count: 0,
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn bins(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn bin_width(&self) -> f64 {
+        (self.hi - self.lo) / self.counts.len() as f64
+    }
+
+    pub fn bin_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn underflow(&self) -> u64 {
+        self.underflow
+    }
+
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let idx = (((x - self.lo) / (self.hi - self.lo)) * self.counts.len() as f64) as usize;
+            self.counts[idx.min(self.counts.len() - 1)] += 1;
+        }
+    }
+
+    /// Merge another histogram with the same `[lo, hi) × bins`
+    /// configuration; returns false (and absorbs nothing) on mismatch.
+    pub fn merge_from(&mut self, other: &FixedHistogram) -> bool {
+        if other.lo != self.lo || other.hi != self.hi || other.counts.len() != self.counts.len() {
+            return false;
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.underflow += other.underflow;
+        self.overflow += other.overflow;
+        self.count += other.count;
+        true
+    }
+
+    /// Estimate the `q`-quantile by linear interpolation inside the
+    /// containing bin (NaN when empty; clamps to `lo`/`hi` when the
+    /// rank falls in the underflow/overflow buckets).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let target = q.clamp(0.0, 1.0) * self.count as f64;
+        if target <= self.underflow as f64 {
+            return self.lo;
+        }
+        let mut cum = self.underflow as f64;
+        let w = self.bin_width();
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = cum + c as f64;
+            if target <= next {
+                let frac = (target - cum) / c as f64;
+                return self.lo + (i as f64 + frac) * w;
+            }
+            cum = next;
+        }
+        self.hi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::desc::quantile_sorted;
+    use crate::stats::rng::Pcg64;
+
+    /// Assert a sketch estimate lies between the exact quantiles at
+    /// `q ± eps` (the rank-error contract).
+    fn assert_rank_close(sorted: &[f64], est: f64, q: f64, eps: f64) {
+        let lo = quantile_sorted(sorted, (q - eps).max(0.0));
+        let hi = quantile_sorted(sorted, (q + eps).min(1.0));
+        let slack = 1e-9 * (1.0 + hi.abs() + lo.abs());
+        assert!(
+            est >= lo - slack && est <= hi + slack,
+            "q={q}: est {est} outside [{lo}, {hi}]"
+        );
+    }
+
+    fn sorted(xs: &[f64]) -> Vec<f64> {
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+
+    #[test]
+    fn digest_quantiles_track_exact_uniform_and_lognormal() {
+        let mut rng = Pcg64::new(11);
+        for dist in 0..2 {
+            let xs: Vec<f64> = (0..20_000)
+                .map(|_| {
+                    if dist == 0 {
+                        rng.uniform() * 100.0
+                    } else {
+                        (rng.normal() * 1.5).exp()
+                    }
+                })
+                .collect();
+            let mut td = TDigest::new(100.0);
+            for &x in &xs {
+                td.add(x);
+            }
+            let s = sorted(&xs);
+            for q in [0.0, 0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0] {
+                assert_rank_close(&s, td.quantile(q), q, 0.05);
+            }
+            assert_eq!(td.count(), xs.len() as u64);
+            assert_eq!(td.min(), s[0]);
+            assert_eq!(td.max(), *s.last().unwrap());
+            assert!(td.centroid_count() <= 208, "{}", td.centroid_count());
+        }
+    }
+
+    #[test]
+    fn digest_extremes_and_small_inputs() {
+        let mut td = TDigest::new(100.0);
+        assert!(td.quantile(0.5).is_nan());
+        td.add(7.0);
+        assert_eq!(td.quantile(0.0), 7.0);
+        assert_eq!(td.quantile(0.5), 7.0);
+        assert_eq!(td.quantile(1.0), 7.0);
+        td.add(9.0);
+        assert_eq!(td.quantile(0.0), 7.0);
+        assert_eq!(td.quantile(1.0), 9.0);
+        let mid = td.quantile(0.5);
+        assert!((7.0..=9.0).contains(&mid));
+    }
+
+    #[test]
+    fn digest_merge_matches_single_sketch() {
+        let mut rng = Pcg64::new(5);
+        let xs: Vec<f64> = (0..12_000).map(|_| rng.normal() * 10.0 + 50.0).collect();
+        let mut whole = TDigest::new(100.0);
+        let mut parts: Vec<TDigest> = (0..4).map(|_| TDigest::new(100.0)).collect();
+        for (i, &x) in xs.iter().enumerate() {
+            whole.add(x);
+            parts[i % 4].add(x);
+        }
+        let mut merged = TDigest::new(100.0);
+        for p in &parts {
+            merged.merge_from(p);
+        }
+        assert_eq!(merged.count(), whole.count());
+        assert_eq!(merged.min(), whole.min());
+        assert_eq!(merged.max(), whole.max());
+        let s = sorted(&xs);
+        for q in [0.05, 0.25, 0.5, 0.75, 0.95] {
+            assert_rank_close(&s, merged.quantile(q), q, 0.05);
+        }
+    }
+
+    #[test]
+    fn digest_merge_is_associative_within_bound() {
+        let mut rng = Pcg64::new(17);
+        let chunks: Vec<Vec<f64>> = (0..3)
+            .map(|_| (0..5_000).map(|_| rng.uniform() * 1000.0).collect())
+            .collect();
+        let all: Vec<f64> = chunks.iter().flatten().cloned().collect();
+        let s = sorted(&all);
+        let sketch = |xs: &[f64]| {
+            let mut t = TDigest::new(100.0);
+            for &x in xs {
+                t.add(x);
+            }
+            t
+        };
+        let (a, b, c) = (sketch(&chunks[0]), sketch(&chunks[1]), sketch(&chunks[2]));
+        // (a ⊕ b) ⊕ c
+        let mut left = a.clone();
+        left.merge_from(&b);
+        left.merge_from(&c);
+        // a ⊕ (b ⊕ c)
+        let mut bc = b.clone();
+        bc.merge_from(&c);
+        let mut right = a.clone();
+        right.merge_from(&bc);
+        assert_eq!(left.count(), right.count());
+        assert_eq!(left.min(), right.min());
+        assert_eq!(left.max(), right.max());
+        for q in [0.01, 0.1, 0.5, 0.9, 0.99] {
+            assert_rank_close(&s, left.quantile(q), q, 0.05);
+            assert_rank_close(&s, right.quantile(q), q, 0.05);
+        }
+    }
+
+    #[test]
+    fn digest_memory_stays_bounded() {
+        let mut td = TDigest::new(100.0);
+        let mut rng = Pcg64::new(3);
+        for _ in 0..200_000 {
+            td.add(rng.uniform());
+        }
+        assert!(td.centroid_count() <= 208);
+        assert!(td.approx_bytes() < 16 * 1024, "{}", td.approx_bytes());
+    }
+
+    #[test]
+    fn histogram_quantiles_within_bin_width() {
+        let mut rng = Pcg64::new(9);
+        let xs: Vec<f64> = (0..30_000).map(|_| rng.uniform() * 50.0).collect();
+        let mut h = FixedHistogram::new(0.0, 50.0, 100);
+        for &x in &xs {
+            h.add(x);
+        }
+        let s = sorted(&xs);
+        let w = h.bin_width();
+        for q in [0.05, 0.25, 0.5, 0.75, 0.95] {
+            let exact = quantile_sorted(&s, q);
+            let est = h.quantile(q);
+            assert!((est - exact).abs() <= w + 1e-9, "q={q}: {est} vs {exact}");
+        }
+        assert_eq!(h.count(), xs.len() as u64);
+    }
+
+    #[test]
+    fn histogram_range_edges_and_merge() {
+        let mut h = FixedHistogram::new(0.0, 10.0, 10);
+        h.add(-5.0);
+        h.add(15.0);
+        h.add(5.0);
+        assert_eq!(h.underflow(), 1);
+        assert_eq!(h.overflow(), 1);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.quantile(0.0), 0.0); // underflow clamps to lo
+        assert_eq!(h.quantile(1.0), 10.0); // overflow clamps to hi
+        let mut other = FixedHistogram::new(0.0, 10.0, 10);
+        other.add(5.0);
+        assert!(h.merge_from(&other));
+        assert_eq!(h.count(), 4);
+        // mismatched configuration refuses to merge
+        let bad = FixedHistogram::new(0.0, 20.0, 10);
+        assert!(!h.merge_from(&bad));
+        assert_eq!(h.count(), 4);
+    }
+}

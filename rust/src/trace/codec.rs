@@ -690,34 +690,48 @@ pub(super) fn decode_kind<R: BinRead>(
 /// JSON-lines export: meta on the first line, one event object per line.
 pub fn to_jsonl(trace: &Trace) -> String {
     let mut out = String::new();
-    let config = Json::parse(&trace.meta.config_json).unwrap_or(Json::Null);
-    let meta = Json::obj(vec![
-        ("name", Json::Str(trace.meta.name.clone())),
-        // a string: JSON numbers are f64 and would clip seeds above 2^53
-        ("seed", Json::Str(trace.meta.seed.to_string())),
-        ("horizon", Json::Num(trace.meta.horizon)),
-        ("format_version", Json::Num(needed_version(trace) as f64)),
-        ("events", Json::Num(trace.events.len() as f64)),
-        (
-            "extra",
-            Json::Obj(
-                trace
-                    .meta
-                    .extra
-                    .iter()
-                    .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
-                    .collect(),
-            ),
-        ),
-        ("config", config),
-    ]);
-    out.push_str(&meta.to_string());
+    out.push_str(&jsonl_meta_line(
+        &trace.meta,
+        needed_version(trace),
+        trace.events.len() as u64,
+    ));
     out.push('\n');
     for ev in &trace.events {
         out.push_str(&event_json(ev).to_string());
         out.push('\n');
     }
     out
+}
+
+/// The header line of the JSON-lines export, built from the metadata
+/// alone — the streamed exporter calls this with the file header's
+/// version and record count so it never needs the event `Vec`.
+pub fn jsonl_meta_line(meta: &TraceMeta, format_version: u16, events: u64) -> String {
+    let config = Json::parse(&meta.config_json).unwrap_or(Json::Null);
+    Json::obj(vec![
+        ("name", Json::Str(meta.name.clone())),
+        // a string: JSON numbers are f64 and would clip seeds above 2^53
+        ("seed", Json::Str(meta.seed.to_string())),
+        ("horizon", Json::Num(meta.horizon)),
+        ("format_version", Json::Num(format_version as f64)),
+        ("events", Json::Num(events as f64)),
+        (
+            "extra",
+            Json::Obj(
+                meta.extra
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                    .collect(),
+            ),
+        ),
+        ("config", config),
+    ])
+    .to_string()
+}
+
+/// One event's JSON-lines record (no trailing newline).
+pub fn jsonl_event_line(ev: &TraceEvent) -> String {
+    event_json(ev).to_string()
 }
 
 fn event_json(ev: &TraceEvent) -> Json {

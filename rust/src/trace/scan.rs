@@ -280,6 +280,25 @@ impl TraceScanner {
         self.total
     }
 
+    /// Stream the whole file to JSON-lines (meta line first, one event
+    /// object per line) — the streamed twin of [`Trace::to_jsonl`]
+    /// (byte-identical output for buffered captures), O(1) in trace
+    /// length. Returns the number of event lines written.
+    ///
+    /// [`Trace::to_jsonl`]: super::Trace::to_jsonl
+    pub fn write_jsonl<W: std::io::Write>(mut self, w: &mut W) -> Result<u64> {
+        use super::codec::{jsonl_event_line, jsonl_meta_line};
+        let io_err = |e: std::io::Error| Error::Other(format!("trace jsonl: write: {e}"));
+        writeln!(w, "{}", jsonl_meta_line(&self.meta, self.version, self.total)).map_err(io_err)?;
+        let mut n = 0u64;
+        for ev in &mut self {
+            writeln!(w, "{}", jsonl_event_line(&ev?)).map_err(io_err)?;
+            n += 1;
+        }
+        w.flush().map_err(io_err)?;
+        Ok(n)
+    }
+
     fn next_event(&mut self) -> Result<Option<TraceEvent>> {
         if self.remaining == 0 {
             // the body must end exactly where the count said it would —
@@ -438,6 +457,24 @@ mod tests {
         let loaded = Trace::load(&path).unwrap();
         assert_eq!(loaded.events, sample_events());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn streamed_jsonl_matches_the_buffered_export() {
+        let path = tmp("jsonl");
+        let trace = Trace {
+            meta: meta(),
+            events: sample_events(),
+        };
+        trace.save(&path).unwrap();
+        let mut out = Vec::new();
+        let n = TraceScanner::open(&path)
+            .unwrap()
+            .write_jsonl(&mut out)
+            .unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(n, 5);
+        assert_eq!(String::from_utf8(out).unwrap(), trace.to_jsonl());
     }
 
     #[test]

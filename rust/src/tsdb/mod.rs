@@ -9,9 +9,14 @@
 //! Hot-path design: series are interned to integer handles once
 //! ([`TsStore::handle`]) so recording a point in the simulator's event
 //! loop is two `Vec::push`es — no hashing, no allocation.
+//!
+//! Memory-flat mode: [`TsStore::set_retention`] rolls appends into
+//! fixed-resolution windows of `(count, sum, min, max, last, sketch)`
+//! instead of raw columns, so a year-scale run holds O(windows) rather
+//! than O(points); the query layer answers from either representation.
 
 mod query;
 mod store;
 
 pub use query::{Agg, GroupedSeries, WindowAgg};
-pub use store::{SeriesHandle, SeriesKey, Sym, TsStore};
+pub use store::{SeriesHandle, SeriesKey, Sym, TsStore, WindowBucket, WindowedSeries};

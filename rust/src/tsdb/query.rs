@@ -5,8 +5,9 @@
 //! arrivals per hour, wait-time aggregates — here O(n) over columnar
 //! series with no index amplification.
 
-use super::store::{Series, SeriesHandle, TsStore};
+use super::store::{Series, SeriesHandle, TsStore, WindowBucket, WindowedSeries};
 use crate::des::SimTime;
+use crate::stats::sketch::TDigest;
 
 /// Aggregation functions over a window of values.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -83,6 +84,83 @@ pub fn window_aggregate(
         .collect()
 }
 
+/// Combine a set of retention buckets (and optionally loose raw values)
+/// into one aggregate. `count`/`sum`/`min`/`max`/`mean` are exact;
+/// `P50`/`P95` merge the bucket sketches (documented t-digest bound);
+/// `Last` takes the most recent contribution.
+fn combine_partials(buckets: &[&WindowBucket], raw: &mut Vec<f64>, agg: Agg) -> Option<f64> {
+    if buckets.is_empty() {
+        return agg.apply(raw);
+    }
+    Some(match agg {
+        Agg::Count => buckets.iter().map(|b| b.count).sum::<u64>() as f64 + raw.len() as f64,
+        Agg::Sum => buckets.iter().map(|b| b.sum).sum::<f64>() + raw.iter().sum::<f64>(),
+        Agg::Min => buckets
+            .iter()
+            .map(|b| b.min)
+            .chain(raw.iter().cloned())
+            .fold(f64::INFINITY, f64::min),
+        Agg::Max => buckets
+            .iter()
+            .map(|b| b.max)
+            .chain(raw.iter().cloned())
+            .fold(f64::NEG_INFINITY, f64::max),
+        Agg::Mean => {
+            let count = buckets.iter().map(|b| b.count).sum::<u64>() as f64 + raw.len() as f64;
+            let sum = buckets.iter().map(|b| b.sum).sum::<f64>() + raw.iter().sum::<f64>();
+            sum / count
+        }
+        Agg::P50 | Agg::P95 => {
+            let q = if agg == Agg::P50 { 0.50 } else { 0.95 };
+            let mut td: TDigest = buckets[0].sketch.clone();
+            for b in &buckets[1..] {
+                td.merge_from(&b.sketch);
+            }
+            for &v in raw.iter() {
+                td.add(v);
+            }
+            td.quantile(q)
+        }
+        // buckets are time-ordered and raw values (if any) come from
+        // series merged at bucket granularity; prefer the last bucket
+        Agg::Last => buckets.last().unwrap().last,
+    })
+}
+
+/// Aggregate a downsampled series into fixed-width query windows over
+/// `[t0, t1)`. Each retention bucket is assigned wholly to the query
+/// window containing its start — exact when `width` is a multiple of
+/// the retention resolution and `t0` is aligned to it (the repo's
+/// dashboards and tests use aligned windows), a one-bucket-blurred
+/// approximation otherwise.
+pub fn window_aggregate_downsampled(
+    w: &WindowedSeries,
+    t0: SimTime,
+    t1: SimTime,
+    width: SimTime,
+    agg: Agg,
+) -> Vec<WindowAgg> {
+    assert!(width > 0.0 && t1 > t0);
+    let n_windows = ((t1 - t0) / width).ceil() as usize;
+    let mut groups: Vec<Vec<&WindowBucket>> = vec![Vec::new(); n_windows];
+    for b in w.buckets() {
+        if b.start >= t0 && b.start < t1 {
+            let idx = ((b.start - t0) / width) as usize;
+            if idx < n_windows {
+                groups[idx].push(b);
+            }
+        }
+    }
+    groups
+        .into_iter()
+        .enumerate()
+        .map(|(i, bs)| WindowAgg {
+            start: t0 + i as f64 * width,
+            value: combine_partials(&bs, &mut Vec::new(), agg),
+        })
+        .collect()
+}
+
 /// A group-by result: one aggregated series per tag value.
 #[derive(Clone, Debug)]
 pub struct GroupedSeries {
@@ -91,7 +169,7 @@ pub struct GroupedSeries {
 }
 
 impl TsStore {
-    /// Windowed aggregation of a single series.
+    /// Windowed aggregation of a single series (raw or downsampled).
     pub fn window(
         &self,
         h: SeriesHandle,
@@ -100,6 +178,9 @@ impl TsStore {
         width: SimTime,
         agg: Agg,
     ) -> Vec<WindowAgg> {
+        if let Some(w) = self.downsampled(h) {
+            return window_aggregate_downsampled(w, t0, t1, width, agg);
+        }
         window_aggregate(self.series(h), t0, t1, width, agg)
     }
 
@@ -115,6 +196,9 @@ impl TsStore {
         agg: Agg,
     ) -> Vec<GroupedSeries> {
         use std::collections::BTreeMap;
+        if self.any_downsampled() {
+            return self.group_by_mixed(measurement, tag, t0, t1, width, agg);
+        }
         // merge series sharing a tag value before aggregating
         let mut merged: BTreeMap<String, Series> = BTreeMap::new();
         for h in self.find(measurement) {
@@ -144,14 +228,89 @@ impl TsStore {
             .collect()
     }
 
-    /// Scalar aggregate over the full range of one series.
+    /// Group-by over a store holding downsampled (and possibly some
+    /// raw) series: per query window, members contribute retention
+    /// buckets or raw points, combined by [`combine_partials`].
+    fn group_by_mixed(
+        &self,
+        measurement: &str,
+        tag: &str,
+        t0: SimTime,
+        t1: SimTime,
+        width: SimTime,
+        agg: Agg,
+    ) -> Vec<GroupedSeries> {
+        use std::collections::BTreeMap;
+        assert!(width > 0.0 && t1 > t0);
+        let n_windows = ((t1 - t0) / width).ceil() as usize;
+        #[derive(Default)]
+        struct Partial<'a> {
+            buckets: Vec<Vec<&'a WindowBucket>>,
+            raw: Vec<Vec<f64>>,
+        }
+        let mut groups: BTreeMap<String, Partial<'_>> = BTreeMap::new();
+        for h in self.find(measurement) {
+            let group = self
+                .key(h)
+                .tag_value(tag)
+                .unwrap_or("<none>")
+                .to_string();
+            let p = groups.entry(group).or_default();
+            if p.buckets.is_empty() {
+                p.buckets = vec![Vec::new(); n_windows];
+                p.raw = vec![Vec::new(); n_windows];
+            }
+            if let Some(w) = self.downsampled(h) {
+                for b in w.buckets() {
+                    if b.start >= t0 && b.start < t1 {
+                        let idx = ((b.start - t0) / width) as usize;
+                        if idx < n_windows {
+                            p.buckets[idx].push(b);
+                        }
+                    }
+                }
+            } else {
+                let s = self.series(h);
+                for (&t, &v) in s.times.iter().zip(&s.values) {
+                    if t >= t0 && t < t1 {
+                        let idx = ((t - t0) / width) as usize;
+                        if idx < n_windows {
+                            p.raw[idx].push(v);
+                        }
+                    }
+                }
+            }
+        }
+        groups
+            .into_iter()
+            .map(|(group, mut p)| GroupedSeries {
+                group,
+                windows: (0..n_windows)
+                    .map(|i| WindowAgg {
+                        start: t0 + i as f64 * width,
+                        value: combine_partials(&p.buckets[i], &mut p.raw[i], agg),
+                    })
+                    .collect(),
+            })
+            .collect()
+    }
+
+    /// Scalar aggregate over the full range of one series (raw or
+    /// downsampled).
     pub fn aggregate(&self, h: SeriesHandle, agg: Agg) -> Option<f64> {
+        if let Some(w) = self.downsampled(h) {
+            let bs: Vec<&WindowBucket> = w.buckets().iter().collect();
+            return combine_partials(&bs, &mut Vec::new(), agg);
+        }
         let s = self.series(h);
         let mut vals = s.values.clone();
         agg.apply(&mut vals)
     }
 
     /// All raw values of a series (for Q-Q / distribution analytics).
+    /// Downsampled series hold no raw values, so this returns an empty
+    /// slice for them — use [`TsStore::window`] / [`TsStore::aggregate`]
+    /// instead.
     pub fn values(&self, h: SeriesHandle) -> &[f64] {
         &self.series(h).values
     }
@@ -229,5 +388,73 @@ mod tests {
         let (db, h) = sample_store();
         assert_eq!(db.aggregate(h, Agg::Sum), Some(45.0));
         assert_eq!(db.values(h).len(), 10);
+    }
+
+    fn downsampled_store() -> (TsStore, SeriesHandle) {
+        let mut db = TsStore::new();
+        db.set_retention(1.0); // finer than the 5.0 query windows
+        let h = db.handle(SeriesKey::new("m"));
+        for i in 0..10 {
+            db.append(h, i as f64, i as f64);
+        }
+        (db, h)
+    }
+
+    #[test]
+    fn downsampled_window_matches_raw_for_aligned_queries() {
+        let (raw_db, hr) = sample_store();
+        let (down_db, hd) = downsampled_store();
+        for agg in [Agg::Mean, Agg::Sum, Agg::Min, Agg::Max, Agg::Count, Agg::Last] {
+            let a = raw_db.window(hr, 0.0, 10.0, 5.0, agg);
+            let b = down_db.window(hd, 0.0, 10.0, 5.0, agg);
+            assert_eq!(a, b, "{agg:?}");
+        }
+    }
+
+    #[test]
+    fn downsampled_quantiles_close_to_raw() {
+        let (raw_db, hr) = sample_store();
+        let (down_db, hd) = downsampled_store();
+        for agg in [Agg::P50, Agg::P95] {
+            let a = raw_db.window(hr, 0.0, 10.0, 10.0, agg)[0].value.unwrap();
+            let b = down_db.window(hd, 0.0, 10.0, 10.0, agg)[0].value.unwrap();
+            // 10 distinct values → sketch holds them exactly; allow
+            // interpolation slack of one value step
+            assert!((a - b).abs() <= 1.0, "{agg:?}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn downsampled_full_range_aggregate() {
+        let (db, h) = downsampled_store();
+        assert_eq!(db.aggregate(h, Agg::Sum), Some(45.0));
+        assert_eq!(db.aggregate(h, Agg::Count), Some(10.0));
+        assert_eq!(db.aggregate(h, Agg::Min), Some(0.0));
+        assert_eq!(db.aggregate(h, Agg::Max), Some(9.0));
+        assert_eq!(db.aggregate(h, Agg::Last), Some(9.0));
+        // downsampled series expose no raw values
+        assert!(db.values(h).is_empty());
+    }
+
+    #[test]
+    fn group_by_with_downsampled_members() {
+        let mut db = TsStore::new();
+        db.set_retention(1.0);
+        db.record(SeriesKey::new("dur").tag("fw", "tf"), 0.0, 100.0);
+        db.record(SeriesKey::new("dur").tag("fw", "tf"), 1.0, 200.0);
+        db.record(SeriesKey::new("dur").tag("fw", "spark"), 0.5, 10.0);
+        let groups = db.group_by("dur", "fw", 0.0, 2.0, 2.0, Agg::Mean);
+        assert_eq!(groups.len(), 2);
+        let spark = groups.iter().find(|g| g.group == "spark").unwrap();
+        assert_eq!(spark.windows[0].value, Some(10.0));
+        let tf = groups.iter().find(|g| g.group == "tf").unwrap();
+        assert_eq!(tf.windows[0].value, Some(150.0));
+        // count across both groups is conserved
+        let total: f64 = db
+            .group_by("dur", "fw", 0.0, 2.0, 2.0, Agg::Count)
+            .iter()
+            .filter_map(|g| g.windows[0].value)
+            .sum();
+        assert_eq!(total, 3.0);
     }
 }

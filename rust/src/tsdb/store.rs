@@ -11,6 +11,7 @@ use std::io::Write;
 
 use crate::des::SimTime;
 use crate::error::Result;
+use crate::stats::sketch::TDigest;
 
 /// A measurement name plus sorted tag pairs, e.g.
 /// `("task_duration", [("task","train"),("framework","tensorflow")])`.
@@ -118,11 +119,125 @@ impl Series {
     }
 }
 
+/// One fixed-resolution retention window: streaming aggregates plus a
+/// mergeable quantile sketch over every point that fell in
+/// `[start, start + resolution)`.
+#[derive(Clone, Debug)]
+pub struct WindowBucket {
+    pub start: SimTime,
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Most recent value (gauge / `Agg::Last` semantics).
+    pub last: f64,
+    pub sketch: TDigest,
+}
+
+impl WindowBucket {
+    fn new(start: SimTime, v: f64) -> Self {
+        let mut sketch = TDigest::default();
+        sketch.add(v);
+        WindowBucket {
+            start,
+            count: 1,
+            sum: v,
+            min: v,
+            max: v,
+            last: v,
+            sketch,
+        }
+    }
+
+    fn absorb(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+        self.last = v;
+        self.sketch.add(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.sum / self.count as f64
+    }
+
+    fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<WindowBucket>() + self.sketch.approx_bytes()
+    }
+}
+
+/// Downsampled representation of one series: points roll into
+/// fixed-resolution [`WindowBucket`]s as they arrive, so memory is
+/// O(elapsed_time / resolution) instead of O(points).
+#[derive(Clone, Debug)]
+pub struct WindowedSeries {
+    resolution: SimTime,
+    buckets: Vec<WindowBucket>,
+    /// Total points absorbed (the raw-equivalent point count).
+    observed: u64,
+}
+
+impl WindowedSeries {
+    fn new(resolution: SimTime) -> Self {
+        WindowedSeries {
+            resolution,
+            buckets: Vec::new(),
+            observed: 0,
+        }
+    }
+
+    pub fn resolution(&self) -> SimTime {
+        self.resolution
+    }
+
+    pub fn buckets(&self) -> &[WindowBucket] {
+        &self.buckets
+    }
+
+    /// Points absorbed across all buckets.
+    pub fn observed(&self) -> u64 {
+        self.observed
+    }
+
+    fn add(&mut self, t: SimTime, v: f64) {
+        self.observed += 1;
+        match self.buckets.last_mut() {
+            // monotone clock: either the point lands in the open bucket…
+            Some(b) if t < b.start + self.resolution => b.absorb(v),
+            // …or it opens a new one further right
+            _ => {
+                let start = (t / self.resolution).floor() * self.resolution;
+                self.buckets.push(WindowBucket::new(start, v));
+            }
+        }
+    }
+
+    pub fn approx_bytes(&self) -> usize {
+        self.buckets.iter().map(|b| b.approx_bytes()).sum::<usize>() + 32
+    }
+}
+
 /// The store: all series of one experiment run.
+///
+/// By default every point is stored raw (`times`/`values` columns).
+/// With [`TsStore::set_retention`], appends instead roll into
+/// fixed-resolution [`WindowedSeries`] buckets — memory-flat over the
+/// run length — and the query layer ([`super::query`]) answers from
+/// either representation. Retention-off behavior is byte-identical to
+/// a store without the feature.
 #[derive(Default)]
 pub struct TsStore {
     keys: Vec<SeriesKey>,
     series: Vec<Series>,
+    /// Parallel to `series` when retention is on; EMPTY when off, so
+    /// the retention-off hot path is a single bounds-check miss.
+    windowed: Vec<Option<WindowedSeries>>,
+    retention: Option<SimTime>,
     symbols: SymbolTable,
     index: HashMap<CompactKey, u32>,
 }
@@ -130,6 +245,43 @@ pub struct TsStore {
 impl TsStore {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Switch the store to downsampled retention: from now on, appends
+    /// to every series roll into `resolution`-second windows of
+    /// `(count, sum, min, max, last, sketch)` instead of raw points.
+    ///
+    /// Series that already hold raw points keep their raw
+    /// representation (retention applies to series whose life starts
+    /// under the policy); call this before recording, as
+    /// `Simulation::new` does.
+    pub fn set_retention(&mut self, resolution: SimTime) {
+        assert!(
+            resolution > 0.0 && resolution.is_finite(),
+            "retention resolution must be positive"
+        );
+        self.retention = Some(resolution);
+        self.windowed = self
+            .series
+            .iter()
+            .map(|s| {
+                if s.is_empty() {
+                    Some(WindowedSeries::new(resolution))
+                } else {
+                    None
+                }
+            })
+            .collect();
+    }
+
+    /// The retention resolution, when downsampling is on.
+    pub fn retention(&self) -> Option<SimTime> {
+        self.retention
+    }
+
+    /// The downsampled representation of a series, when it has one.
+    pub fn downsampled(&self, h: SeriesHandle) -> Option<&WindowedSeries> {
+        self.windowed.get(h.0 as usize).and_then(|w| w.as_ref())
     }
 
     /// Intern a string, returning a stable symbol for
@@ -193,6 +345,9 @@ impl TsStore {
         self.index.insert(compact, id);
         self.keys.push(key);
         self.series.push(Series::default());
+        if let Some(res) = self.retention {
+            self.windowed.push(Some(WindowedSeries::new(res)));
+        }
         SeriesHandle(id)
     }
 
@@ -200,6 +355,11 @@ impl TsStore {
     /// (the simulator's clock is monotone, so this is free).
     #[inline]
     pub fn append(&mut self, h: SeriesHandle, t: SimTime, v: f64) {
+        // retention off → `windowed` is empty → one bounds-check miss
+        if let Some(Some(w)) = self.windowed.get_mut(h.0 as usize) {
+            w.add(t, v);
+            return;
+        }
         let s = &mut self.series[h.0 as usize];
         debug_assert!(
             s.times.last().map_or(true, |&last| t >= last),
@@ -259,24 +419,64 @@ impl TsStore {
         self.keys.len()
     }
 
+    /// Points *observed*: raw points stored plus points absorbed into
+    /// retention windows. Invariant under the retention mode (it feeds
+    /// the digest's `tsdb=` field).
     pub fn num_points(&self) -> usize {
-        self.series.iter().map(|s| s.len()).sum()
+        let raw: usize = self.series.iter().map(|s| s.len()).sum();
+        let rolled: u64 = self
+            .windowed
+            .iter()
+            .flatten()
+            .map(|w| w.observed())
+            .sum();
+        raw + rolled as usize
     }
 
-    /// Approximate resident bytes of the stored points.
+    /// Points *resident*: raw points held in RAM plus retention
+    /// buckets. This is the quantity downsampling keeps flat (the
+    /// sweep CSV's `peak_rss_points` column).
+    pub fn resident_points(&self) -> usize {
+        let raw: usize = self.series.iter().map(|s| s.len()).sum();
+        let buckets: usize = self
+            .windowed
+            .iter()
+            .flatten()
+            .map(|w| w.buckets().len())
+            .sum();
+        raw + buckets
+    }
+
+    /// Approximate resident bytes of the stored points (raw columns
+    /// plus retention buckets and their sketches).
     pub fn approx_bytes(&self) -> usize {
-        self.num_points() * 16
+        let raw: usize = self.series.iter().map(|s| s.len()).sum::<usize>() * 16;
+        let rolled: usize = self
+            .windowed
+            .iter()
+            .flatten()
+            .map(|w| w.approx_bytes())
+            .sum();
+        raw + rolled
     }
 
     pub fn handles(&self) -> impl Iterator<Item = SeriesHandle> + '_ {
         (0..self.keys.len() as u32).map(SeriesHandle)
     }
 
-    /// Export every series to CSV: `series,time,value` rows.
+    /// Export every series to CSV: `series,time,value` rows. Windowed
+    /// series export one row per retention bucket with the bucket mean
+    /// as the value.
     pub fn export_csv<W: Write>(&self, w: &mut W) -> Result<()> {
         writeln!(w, "series,time,value")?;
         for h in self.handles() {
             let key = self.key(h).to_string();
+            if let Some(ws) = self.downsampled(h) {
+                for b in ws.buckets() {
+                    writeln!(w, "{key},{},{}", b.start, b.mean())?;
+                }
+                continue;
+            }
             let s = self.series(h);
             for (t, v) in s.times.iter().zip(&s.values) {
                 writeln!(w, "{key},{t},{v}")?;
@@ -285,9 +485,27 @@ impl TsStore {
         Ok(())
     }
 
-    /// Export one series as JSON {key, times, values}.
+    /// Export one series as JSON. Raw series emit
+    /// `{key, times, values}`; windowed series emit
+    /// `{key, resolution, starts, counts, sums, mins, maxs}`.
     pub fn export_series_json(&self, h: SeriesHandle) -> Result<String> {
         use crate::util::Json;
+        if let Some(ws) = self.downsampled(h) {
+            let bs = ws.buckets();
+            return Ok(Json::obj(vec![
+                ("key", Json::Str(self.key(h).to_string())),
+                ("resolution", Json::Num(ws.resolution())),
+                ("starts", Json::arr_f64(bs.iter().map(|b| b.start))),
+                (
+                    "counts",
+                    Json::arr_f64(bs.iter().map(|b| b.count as f64)),
+                ),
+                ("sums", Json::arr_f64(bs.iter().map(|b| b.sum))),
+                ("mins", Json::arr_f64(bs.iter().map(|b| b.min))),
+                ("maxs", Json::arr_f64(bs.iter().map(|b| b.max))),
+            ])
+            .to_string());
+        }
         let s = self.series(h);
         Ok(Json::obj(vec![
             ("key", Json::Str(self.key(h).to_string())),
@@ -295,6 +513,11 @@ impl TsStore {
             ("values", Json::arr_f64(s.values.iter().cloned())),
         ])
         .to_string())
+    }
+
+    /// True when any series in the store is downsampled.
+    pub(crate) fn any_downsampled(&self) -> bool {
+        self.windowed.iter().any(|w| w.is_some())
     }
 }
 
@@ -418,5 +641,85 @@ mod tests {
         let h = db.handle(SeriesKey::new("m"));
         db.append(h, 5.0, 0.0);
         db.append(h, 1.0, 0.0);
+    }
+
+    #[test]
+    fn retention_rolls_points_into_buckets() {
+        let mut db = TsStore::new();
+        db.set_retention(10.0);
+        let h = db.handle(SeriesKey::new("m"));
+        for i in 0..25 {
+            db.append(h, i as f64, i as f64);
+        }
+        // raw column stays empty; everything lives in buckets
+        assert!(db.series(h).is_empty());
+        let w = db.downsampled(h).expect("windowed");
+        assert_eq!(w.observed(), 25);
+        assert_eq!(w.buckets().len(), 3);
+        let b0 = &w.buckets()[0];
+        assert_eq!(b0.start, 0.0);
+        assert_eq!(b0.count, 10);
+        assert_eq!(b0.sum, 45.0);
+        assert_eq!(b0.min, 0.0);
+        assert_eq!(b0.max, 9.0);
+        assert_eq!(b0.last, 9.0);
+        // observed points count as points; residency counts buckets
+        assert_eq!(db.num_points(), 25);
+        assert_eq!(db.resident_points(), 3);
+    }
+
+    #[test]
+    fn retention_memory_stays_flat() {
+        let mut raw = TsStore::new();
+        let mut down = TsStore::new();
+        down.set_retention(100.0);
+        let hr = raw.handle(SeriesKey::new("m"));
+        let hd = down.handle(SeriesKey::new("m"));
+        for i in 0..100_000 {
+            let t = i as f64 * 0.01; // 1000 s span → 10 buckets
+            raw.append(hr, t, (i % 97) as f64);
+            down.append(hd, t, (i % 97) as f64);
+        }
+        assert_eq!(raw.num_points(), down.num_points());
+        assert!(down.resident_points() <= 10);
+        assert!(
+            down.approx_bytes() * 10 < raw.approx_bytes(),
+            "downsampled {} vs raw {}",
+            down.approx_bytes(),
+            raw.approx_bytes()
+        );
+    }
+
+    #[test]
+    fn retention_skips_series_with_existing_raw_points() {
+        let mut db = TsStore::new();
+        let h = db.handle(SeriesKey::new("old"));
+        db.append(h, 0.0, 1.0);
+        db.set_retention(10.0);
+        // pre-existing raw series keeps its representation…
+        assert!(db.downsampled(h).is_none());
+        db.append(h, 1.0, 2.0);
+        assert_eq!(db.series(h).len(), 2);
+        // …while a fresh series created under the policy downsamples
+        let h2 = db.handle(SeriesKey::new("new"));
+        db.append(h2, 1.0, 2.0);
+        assert!(db.downsampled(h2).is_some());
+        assert!(db.series(h2).is_empty());
+    }
+
+    #[test]
+    fn windowed_csv_and_json_export() {
+        let mut db = TsStore::new();
+        db.set_retention(10.0);
+        let h = db.handle(SeriesKey::new("m").tag("t", "a"));
+        db.append(h, 1.0, 2.0);
+        db.append(h, 2.0, 4.0);
+        let mut buf = Vec::new();
+        db.export_csv(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("m,t=a,0,3")); // bucket start 0, mean 3
+        let json = db.export_series_json(h).unwrap();
+        assert!(json.contains("\"resolution\""));
+        assert!(json.contains("\"counts\""));
     }
 }

@@ -1,0 +1,50 @@
+//! Counting global allocator, promoted out of `benches/bench_trace.rs`
+//! so every bench and the `SimMeter` share one implementation.
+//!
+//! The counter tracks *allocation events* (`alloc` + `realloc`, not
+//! `dealloc`), which is the quantity the zero-allocation guards assert
+//! on: a hot path that performs zero allocation events holds O(1)
+//! memory no matter how long it runs.
+//!
+//! Counting only happens when a binary opts in by installing the
+//! allocator:
+//!
+//! ```ignore
+//! use pipesim::util::alloc::CountingAlloc;
+//! #[global_allocator]
+//! static ALLOCATOR: CountingAlloc = CountingAlloc;
+//! ```
+//!
+//! Rust permits a single `#[global_allocator]` per binary, so the
+//! attribute lives in each bench/binary, not here. When no binary
+//! installs it, [`allocs`] stays at 0 and the `SimMeter`'s
+//! `alloc_events` counter reads 0 — documented as "allocator not
+//! installed", never an error.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// System allocator wrapped with an allocation-event counter.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Total allocation events since process start (0 when no binary has
+/// installed [`CountingAlloc`]).
+pub fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}

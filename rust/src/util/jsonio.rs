@@ -5,7 +5,9 @@ use std::sync::Arc;
 
 use super::json::Json;
 use crate::arrivals::{ArrivalModel, ArrivalProfile};
-use crate::coordinator::config::{ArrivalSpec, ExperimentConfig, RuntimeViewConfig};
+use crate::coordinator::config::{
+    ArrivalSpec, ExperimentConfig, RetentionConfig, RuntimeViewConfig,
+};
 use crate::coordinator::params::{ModelLaws, SimParams};
 use crate::coordinator::strategy::StrategySpec;
 use crate::empirical::{AnalyticsDb, AssetRecord, EvalRecord, JobRecord, PreprocRecord};
@@ -787,9 +789,20 @@ impl JsonIo for ArrivalSpec {
     }
 }
 
+impl JsonIo for RetentionConfig {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![("resolution", Json::Num(self.resolution))])
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(RetentionConfig {
+            resolution: j.f("resolution")?,
+        })
+    }
+}
+
 impl JsonIo for ExperimentConfig {
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::Str(self.name.clone())),
             ("seed", Json::Num(self.seed as f64)),
             ("horizon", Json::Num(self.horizon)),
@@ -807,7 +820,17 @@ impl JsonIo for ExperimentConfig {
                     .map(|m| Json::Num(m as f64))
                     .unwrap_or(Json::Null),
             ),
-        ])
+        ];
+        // observability knobs are emitted only when set, so pre-existing
+        // configs (and the config JSON embedded in trace files) keep
+        // their exact prior encoding
+        if let Some(ret) = &self.retention {
+            fields.push(("retention", ret.to_json()));
+        }
+        if self.meter {
+            fields.push(("meter", Json::Bool(true)));
+        }
+        Json::obj(fields)
     }
     fn from_json(j: &Json) -> Result<Self> {
         Ok(ExperimentConfig {
@@ -829,6 +852,14 @@ impl JsonIo for ExperimentConfig {
             max_pipelines: match j.get("max_pipelines") {
                 None | Some(Json::Null) => None,
                 Some(v) => Some(v.as_u64()?),
+            },
+            retention: match j.get("retention") {
+                None | Some(Json::Null) => None,
+                Some(r) => Some(RetentionConfig::from_json(r)?),
+            },
+            meter: match j.get("meter") {
+                None | Some(Json::Null) => false,
+                Some(v) => v.as_bool()?,
             },
         })
     }

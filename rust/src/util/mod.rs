@@ -2,6 +2,7 @@
 //! environment: JSON and binary persistence, CLI parsing, and a
 //! micro-benchmark harness.
 
+pub mod alloc;
 pub mod bench;
 pub mod binio;
 pub mod cli;

@@ -1,0 +1,293 @@
+//! Observability-layer integration and property tests: downsampled
+//! retention vs raw storage, sketch merge laws, meter/retention digest
+//! neutrality, and the OpenMetrics/JSON exporters against real runs.
+
+use pipesim::coordinator::{
+    fit_params, ArrivalSpec, Experiment, ExperimentConfig, RetentionConfig,
+};
+use pipesim::empirical::GroundTruth;
+use pipesim::obs::{render_metrics_json, render_openmetrics};
+use pipesim::stats::rng::Pcg64;
+use pipesim::stats::{FixedHistogram, TDigest};
+use pipesim::tsdb::{SeriesKey, TsStore};
+use pipesim::util::json::Json;
+
+const CASES: u64 = 16;
+
+fn exact_quantile(sorted: &[f64], q: f64) -> f64 {
+    // nearest-rank is enough for the tolerance checks below
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+/// Downsampled windows must agree with the raw points they replaced:
+/// count/sum/min/max/last are running aggregates over the identical
+/// append sequence (bit-exact), and sketched quantiles stay within a
+/// small fraction of the bucket's value range.
+#[test]
+fn prop_downsampled_windows_match_raw_aggregates() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(900 + seed);
+        // dense series, coarse windows: ~1-2k points per bucket, so the
+        // sketch (bounded centroids) is far smaller than the raw points
+        let resolution = 500.0 + rng.uniform() * 500.0;
+        let mut raw = TsStore::new();
+        let mut rolled = TsStore::new();
+        rolled.set_retention(resolution);
+        let hr = raw.handle(SeriesKey::new("m").tag("k", "v"));
+        let hd = rolled.handle(SeriesKey::new("m").tag("k", "v"));
+        let n = 2000 + (seed as usize) * 500;
+        let mut t = 0.0;
+        let mut points: Vec<(f64, f64)> = Vec::with_capacity(n);
+        for _ in 0..n {
+            t += rng.uniform();
+            // heavy-tailed values exercise the sketch across scales
+            let v = (-(rng.uniform().max(1e-12)).ln()).powi(2) * 10.0;
+            raw.append(hr, t, v);
+            rolled.append(hd, t, v);
+            points.push((t, v));
+        }
+        // observed counts agree even though residency differs
+        assert_eq!(raw.num_points(), rolled.num_points(), "seed {seed}");
+        assert!(rolled.resident_points() < raw.resident_points(), "seed {seed}");
+
+        let ws = rolled.downsampled(hd).expect("retention is on");
+        assert_eq!(ws.observed(), n as u64);
+        let mut covered = 0u64;
+        for b in ws.buckets() {
+            let in_bucket: Vec<f64> = points
+                .iter()
+                .filter(|(pt, _)| *pt >= b.start && *pt < b.start + resolution)
+                .map(|&(_, v)| v)
+                .collect();
+            assert_eq!(b.count, in_bucket.len() as u64, "seed {seed}");
+            covered += b.count;
+            // the bucket accumulated in the same order the reference
+            // sums here, so even the f64 sum is bit-identical
+            let sum: f64 = in_bucket.iter().fold(0.0, |a, v| a + v);
+            assert_eq!(b.sum.to_bits(), sum.to_bits(), "seed {seed}");
+            let min = in_bucket.iter().cloned().fold(f64::INFINITY, f64::min);
+            let max = in_bucket.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            assert_eq!(b.min.to_bits(), min.to_bits(), "seed {seed}");
+            assert_eq!(b.max.to_bits(), max.to_bits(), "seed {seed}");
+            assert_eq!(b.last.to_bits(), in_bucket.last().unwrap().to_bits());
+            // sketched quantiles: within 10% of the bucket's value range
+            let mut sorted = in_bucket.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let range = (max - min).max(1e-9);
+            for q in [0.5, 0.95] {
+                let approx = b.sketch.quantile(q);
+                let exact = exact_quantile(&sorted, q);
+                assert!(
+                    (approx - exact).abs() <= 0.10 * range,
+                    "seed {seed} q{q}: sketch {approx} vs exact {exact} (range {range})"
+                );
+            }
+        }
+        assert_eq!(covered, n as u64, "seed {seed}: every point in a bucket");
+        // the rolled store's footprint is a fraction of raw at this
+        // point density (the acceptance bound the bench also guards)
+        assert!(
+            rolled.approx_bytes() < raw.approx_bytes() / 2,
+            "seed {seed}: {} vs {}",
+            rolled.approx_bytes(),
+            raw.approx_bytes()
+        );
+    }
+}
+
+/// Merging sketches must commute/associate up to quantile accuracy:
+/// any merge order gives exact count/min/max and quantiles within the
+/// digest's error of the pooled exact quantile. The fixed-bin histogram
+/// is exactly associative (bin counts are integers).
+#[test]
+fn prop_sketch_merge_is_order_insensitive() {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(1700 + seed);
+        let parts: Vec<Vec<f64>> = (0..3)
+            .map(|_| {
+                (0..500 + rng.below(1500))
+                    .map(|_| rng.uniform() * 100.0 + (seed as f64))
+                    .collect()
+            })
+            .collect();
+        let digest_of = |xs: &[f64]| {
+            let mut d = TDigest::new(100.0);
+            for &x in xs {
+                d.add(x);
+            }
+            d
+        };
+        let [a, b, c] = [
+            digest_of(&parts[0]),
+            digest_of(&parts[1]),
+            digest_of(&parts[2]),
+        ];
+        // (a + b) + c
+        let mut left = a.clone();
+        left.merge_from(&b);
+        left.merge_from(&c);
+        // a + (b + c)
+        let mut bc = b.clone();
+        bc.merge_from(&c);
+        let mut right = a.clone();
+        right.merge_from(&bc);
+
+        let mut all: Vec<f64> = parts.concat();
+        all.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        for m in [&left, &right] {
+            assert_eq!(m.count(), all.len() as u64, "seed {seed}");
+            assert_eq!(m.min().to_bits(), all[0].to_bits(), "seed {seed}");
+            assert_eq!(
+                m.max().to_bits(),
+                all[all.len() - 1].to_bits(),
+                "seed {seed}"
+            );
+            let range = all[all.len() - 1] - all[0];
+            for q in [0.1, 0.5, 0.9, 0.99] {
+                let err = (m.quantile(q) - exact_quantile(&all, q)).abs();
+                assert!(
+                    err <= 0.05 * range,
+                    "seed {seed} q{q}: err {err} of range {range}"
+                );
+            }
+        }
+
+        // fixed histograms with matching bins merge exactly associatively
+        let hist_of = |xs: &[f64]| {
+            let mut h = FixedHistogram::new(0.0, 200.0, 64);
+            for &x in xs {
+                h.add(x);
+            }
+            h
+        };
+        let [ha, hb, hc] = [
+            hist_of(&parts[0]),
+            hist_of(&parts[1]),
+            hist_of(&parts[2]),
+        ];
+        let mut hl = ha.clone();
+        assert!(hl.merge_from(&hb));
+        assert!(hl.merge_from(&hc));
+        let mut hbc = hb.clone();
+        assert!(hbc.merge_from(&hc));
+        let mut hr = ha.clone();
+        assert!(hr.merge_from(&hbc));
+        assert_eq!(hl.bin_counts(), hr.bin_counts(), "seed {seed}");
+        assert_eq!(hl.count(), all.len() as u64, "seed {seed}");
+    }
+}
+
+fn quick_cfg(name: &str) -> ExperimentConfig {
+    ExperimentConfig {
+        name: name.into(),
+        seed: 5,
+        horizon: 12.0 * 3600.0,
+        arrival: ArrivalSpec::Poisson {
+            mean_interarrival: 75.0,
+        },
+        sample_interval: 300.0,
+        ..Default::default()
+    }
+}
+
+/// The whole observability layer is a pure observer: turning the meter
+/// on, retention on, or both must leave the digest byte-identical to
+/// the plain run.
+#[test]
+fn meter_and_retention_are_digest_neutral() {
+    let db = GroundTruth::new(77).generate_weeks(2);
+    let params = fit_params(&db, None).unwrap();
+    let run = |meter: bool, retention: Option<f64>| {
+        let mut cfg = quick_cfg("obs-neutral");
+        cfg.meter = meter;
+        cfg.retention = retention.map(|resolution| RetentionConfig { resolution });
+        Experiment::new(cfg, params.clone()).run().unwrap()
+    };
+    let plain = run(false, None);
+    let metered = run(true, None);
+    let rolled = run(false, Some(1800.0));
+    let both = run(true, Some(1800.0));
+    assert_eq!(plain.digest(), metered.digest());
+    assert_eq!(plain.digest(), rolled.digest());
+    assert_eq!(plain.digest(), both.digest());
+
+    // the meter actually measured the run it rode along with
+    assert!(plain.meter.is_none());
+    let m = metered.meter.as_ref().unwrap();
+    assert_eq!(m.total_events(), metered.events_processed);
+    assert!(m.calendar_scheduled > 0);
+    assert!(m.calendar_depth_hwm > 0);
+    let arrivals = m
+        .events_by_kind
+        .iter()
+        .find(|(k, _)| k == "arrival")
+        .unwrap()
+        .1;
+    assert_eq!(arrivals, metered.arrived);
+    assert!(m.rng_draws.iter().any(|(_, n)| *n > 0));
+
+    // retention actually rolled points into windows
+    assert!(rolled.tsdb.retention().is_some());
+    assert!(rolled.tsdb.resident_points() < plain.tsdb.resident_points());
+    assert!(rolled
+        .tsdb
+        .handles()
+        .any(|h| rolled.tsdb.downsampled(h).is_some()));
+    // ...while observing the same point count the digest covers
+    assert_eq!(rolled.tsdb.num_points(), plain.tsdb.num_points());
+}
+
+/// The OpenMetrics export of a real metered run: structurally valid
+/// (every line is a comment or `pipesim_name{...} value`, terminated by
+/// `# EOF`) and covering all four metric families.
+#[test]
+fn openmetrics_export_covers_all_families_and_parses() {
+    let db = GroundTruth::new(78).generate_weeks(2);
+    let params = fit_params(&db, None).unwrap();
+    let mut cfg = quick_cfg("obs-export");
+    cfg.meter = true;
+    cfg.retention = Some(RetentionConfig { resolution: 1800.0 });
+    let r = Experiment::new(cfg, params).run().unwrap();
+
+    let text = render_openmetrics(&r);
+    assert!(text.ends_with("# EOF\n"));
+    for line in text.lines() {
+        if line == "# EOF" || line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            assert!(
+                rest.starts_with("TYPE pipesim_") || rest.starts_with("HELP pipesim_"),
+                "bad comment line: {line}"
+            );
+            continue;
+        }
+        // sample line: name{labels} value — value must parse as f64
+        assert!(line.starts_with("pipesim_"), "bad sample line: {line}");
+        let value = line.rsplit(' ').next().unwrap();
+        assert!(value.parse::<f64>().is_ok(), "unparseable value: {line}");
+    }
+    // one representative per family: run outcome, reliability ledger,
+    // recorded series, and the self-profiling meter
+    for needle in [
+        "pipesim_pipelines_arrived_total",
+        "pipesim_goodput_ratio",
+        "pipesim_series_count{",
+        "pipesim_meter_events_total{kind=\"arrival\"}",
+        "pipesim_meter_rng_draws_total{",
+    ] {
+        assert!(text.contains(needle), "missing {needle}");
+    }
+    // downsampled series still export quantiles (via the sketches)
+    assert!(text.contains("pipesim_series_p95{"));
+
+    // the JSON renderer carries the same sections
+    let doc = Json::parse(&render_metrics_json(&r)).unwrap();
+    assert_eq!(
+        doc.req("outcome").unwrap().f("arrived").unwrap(),
+        r.arrived as f64
+    );
+    assert!(!matches!(doc.req("meter").unwrap(), Json::Null));
+    assert!(!doc.req("series").unwrap().as_arr().unwrap().is_empty());
+}
