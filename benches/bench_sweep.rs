@@ -1,14 +1,18 @@
 //! Sweep-engine bench: multicore scaling of the parallel replication
 //! engine over a 32-cell (config × seed) grid, with the determinism
 //! invariant checked at every worker count — parallel results must be
-//! byte-identical to the serial baseline.
+//! byte-identical to the serial baseline — plus a sharded-vs-single
+//! section over a 10k-cell grid exercising `--shard` + `sweep-merge`.
 //!
 //! Emits `BENCH_sweep.json` so the scaling trajectory is tracked across
 //! PRs. Run: `cargo bench --bench bench_sweep`
 
 use std::sync::Arc;
 
-use pipesim::coordinator::{fit_params, ArrivalSpec, ExperimentConfig, Sweep, SweepResult};
+use pipesim::coordinator::{
+    fit_params, merge_shards, ArrivalSpec, ExperimentConfig, ShardManifest, ShardSpec, Sweep,
+    SweepResult,
+};
 use pipesim::empirical::GroundTruth;
 use pipesim::runtime::Runtime;
 use pipesim::util::Json;
@@ -16,6 +20,12 @@ use pipesim::util::Json;
 const SEEDS_PER_CONFIG: usize = 8;
 const CAPACITIES: [usize; 4] = [4, 6, 8, 12];
 const PIPELINES_PER_CELL: u64 = 2_000;
+
+// the sharded section: 25 groups × 400 seeds = 10 000 tiny cells
+const BIG_GROUPS: usize = 25;
+const BIG_SEEDS: usize = 400;
+const BIG_PIPELINES: u64 = 8;
+const BIG_SHARDS: usize = 4;
 
 fn run_with(params: &Arc<pipesim::coordinator::SimParams>, rt: &Option<Arc<Runtime>>, jobs: usize) -> SweepResult {
     let mut sweep = Sweep::new(params.clone()).with_runtime(rt.clone()).jobs(jobs);
@@ -35,6 +45,35 @@ fn run_with(params: &Arc<pipesim::coordinator::SimParams>, rt: &Option<Arc<Runti
         sweep.add_replications(&cfg, 1, SEEDS_PER_CONFIG);
     }
     sweep.run().expect("sweep")
+}
+
+/// One pass over the 10k-cell grid — the whole grid when `shard` is
+/// `None`, one stride of it otherwise. Auto worker count either way.
+fn run_big(
+    params: &Arc<pipesim::coordinator::SimParams>,
+    rt: &Option<Arc<Runtime>>,
+    shard: Option<ShardSpec>,
+) -> SweepResult {
+    let mut sweep = Sweep::new(params.clone())
+        .with_runtime(rt.clone())
+        .jobs(0)
+        .shard(shard);
+    for g in 0..BIG_GROUPS {
+        let mut cfg = ExperimentConfig {
+            name: format!("grid{g:02}"),
+            horizon: f64::MAX / 4.0,
+            arrival: ArrivalSpec::Poisson {
+                mean_interarrival: 44.0,
+            },
+            max_pipelines: Some(BIG_PIPELINES),
+            record_traces: false,
+            sample_interval: 3600.0,
+            ..Default::default()
+        };
+        cfg.infra.training_capacity = 4 + (g % 8);
+        sweep.add_replications(&cfg, 1, BIG_SEEDS);
+    }
+    sweep.run().expect("sharded sweep")
 }
 
 fn main() {
@@ -79,6 +118,35 @@ fn main() {
         .iter()
         .cloned()
         .fold((1, f64::INFINITY, 0.0), |acc, m| if m.1 < acc.1 { m } else { acc });
+    // sharded-vs-single: split the 10k-cell grid into BIG_SHARDS
+    // stride shards (each run as an independent sweep, modelling one
+    // host per shard), round-trip every manifest through its wire
+    // format, merge, and demand digest identity with the single run
+    let big_cells = BIG_GROUPS * BIG_SEEDS;
+    println!("# sharded sweep: {big_cells} cells split {BIG_SHARDS} ways");
+    let single = run_big(&params, &runtime, None);
+    let mut manifests = Vec::new();
+    let mut shard_wall_total = 0.0_f64;
+    let mut shard_wall_max = 0.0_f64;
+    for k in 0..BIG_SHARDS {
+        let spec = ShardSpec::new(k, BIG_SHARDS).expect("shard spec");
+        let r = run_big(&params, &runtime, Some(spec));
+        shard_wall_total += r.wall_secs;
+        shard_wall_max = shard_wall_max.max(r.wall_secs);
+        manifests.push(ShardManifest::from_bytes(&r.manifest().to_bytes()).expect("manifest"));
+    }
+    let merge_t0 = std::time::Instant::now();
+    let merged = merge_shards(manifests).expect("merge");
+    let merge_secs = merge_t0.elapsed().as_secs_f64();
+    let sharded_identical = merged.digests() == single.digests();
+    assert!(sharded_identical, "sharded merge diverged from single-process sweep");
+    println!("mode,cells,single_wall_secs,shard_wall_max,shard_wall_total,merge_secs,identical");
+    println!(
+        "sharded,{big_cells},{:.3},{shard_wall_max:.3},{shard_wall_total:.3},\
+         {merge_secs:.4},{sharded_identical}",
+        single.wall_secs
+    );
+
     let json = Json::obj(vec![
         ("bench", Json::Str("sweep".into())),
         ("cells", Json::Num(cells as f64)),
@@ -90,6 +158,13 @@ fn main() {
         ("speedup_best", Json::Num(serial.wall_secs / best.1)),
         ("events_per_sec_best", Json::Num(best.2)),
         ("deterministic", Json::Bool(true)),
+        ("sharded_cells", Json::Num(big_cells as f64)),
+        ("sharded_shards", Json::Num(BIG_SHARDS as f64)),
+        ("sharded_single_wall_secs", Json::Num(single.wall_secs)),
+        ("sharded_shard_wall_max", Json::Num(shard_wall_max)),
+        ("sharded_shard_wall_total", Json::Num(shard_wall_total)),
+        ("sharded_merge_secs", Json::Num(merge_secs)),
+        ("sharded_identical", Json::Bool(sharded_identical)),
     ]);
     std::fs::write("BENCH_sweep.json", json.to_string()).expect("write BENCH_sweep.json");
     println!("# wrote BENCH_sweep.json (speedup x{:.2} at {} jobs)", serial.wall_secs / best.1, best.0);

@@ -1,14 +1,17 @@
 //! Analytics: the exploratory dashboard (Fig 11), the statistical
-//! accuracy analysis (Fig 12), trace summary/accuracy statistics, and
-//! the figure-data emitters.
+//! accuracy analysis (Fig 12), trace summary/accuracy statistics, the
+//! figure-data emitters, and the Pareto-front capacity-planning report
+//! over merged sweep groups.
 
 pub mod dashboard;
 pub mod figures;
+pub mod pareto;
 pub mod qq;
 pub mod report;
 pub mod trace_stats;
 
 pub use dashboard::render_dashboard;
+pub use pareto::{pareto_front, render_pareto, ParetoPoint};
 pub use qq::{qq_report, QqSeries};
 pub use report::{Comparison, Metric};
 pub use trace_stats::{trace_qq, trace_qq_file, TraceSummary};

@@ -1,0 +1,200 @@
+//! Pareto-front analysis over sweep groups: which configurations are
+//! worth considering at all?
+//!
+//! A capacity-planning sweep (the paper's section V use case) trades
+//! throughput against latency and dollars. Once `sweep-merge` has the
+//! per-group means, the planner's question is not "which single config
+//! wins" — there is no single winner across objectives — but "which
+//! configs are *dominated*": beaten or matched on every objective and
+//! strictly beaten on at least one by some other group. Those can be
+//! discarded; the survivors form the Pareto front.
+//!
+//! Objectives (fixed, matching the capacity-planning report):
+//! * **capacity** — mean `completed` pipelines, maximize;
+//! * **wait** — mean `mean_wait_training_s`, minimize;
+//! * **utilization** — mean `util_training`, maximize;
+//! * **cost** — mean `cost` dollars, minimize.
+
+use std::fmt::Write as _;
+
+use crate::coordinator::GroupStats;
+
+/// One sweep group projected onto the planning objectives.
+#[derive(Clone, Debug)]
+pub struct ParetoPoint {
+    /// Group (config) name.
+    pub group: String,
+    /// Mean completed pipelines (maximize).
+    pub capacity: f64,
+    /// Mean training wait, seconds (minimize).
+    pub wait: f64,
+    /// Mean training utilization (maximize).
+    pub utilization: f64,
+    /// Mean dollar cost (minimize).
+    pub cost: f64,
+    /// Whether some other group dominates this one.
+    pub dominated: bool,
+}
+
+impl ParetoPoint {
+    /// `true` when `other` is at least as good on every objective and
+    /// strictly better on at least one.
+    fn dominated_by(&self, other: &ParetoPoint) -> bool {
+        let geq = other.capacity >= self.capacity
+            && other.wait <= self.wait
+            && other.utilization >= self.utilization
+            && other.cost <= self.cost;
+        let strict = other.capacity > self.capacity
+            || other.wait < self.wait
+            || other.utilization > self.utilization
+            || other.cost < self.cost;
+        geq && strict
+    }
+}
+
+fn metric_mean(g: &GroupStats, name: &str) -> f64 {
+    g.metrics
+        .iter()
+        .find(|m| m.name == name)
+        .map(|m| m.mean)
+        .unwrap_or(f64::NAN)
+}
+
+/// Project every group onto the objectives and mark domination.
+/// O(n²) pairwise — sweeps have tens to hundreds of groups, not
+/// millions. NaN objectives (a metric missing from the group table)
+/// make a point incomparable: it neither dominates nor is dominated.
+pub fn pareto_front(groups: &[GroupStats]) -> Vec<ParetoPoint> {
+    let mut points: Vec<ParetoPoint> = groups
+        .iter()
+        .map(|g| ParetoPoint {
+            group: g.name.clone(),
+            capacity: metric_mean(g, "completed"),
+            wait: metric_mean(g, "mean_wait_training_s"),
+            utilization: metric_mean(g, "util_training"),
+            cost: metric_mean(g, "cost"),
+            dominated: false,
+        })
+        .collect();
+    // self-comparison is harmless: domination requires a strict win
+    let flags: Vec<bool> = points
+        .iter()
+        .map(|p| points.iter().any(|other| p.dominated_by(other)))
+        .collect();
+    for (p, dominated) in points.iter_mut().zip(flags) {
+        p.dominated = dominated;
+    }
+    points
+}
+
+/// Render the Pareto report: the front first (input order preserved
+/// within each section), then the dominated groups.
+pub fn render_pareto(points: &[ParetoPoint]) -> String {
+    let mut s = String::new();
+    let front = points.iter().filter(|p| !p.dominated).count();
+    let _ = writeln!(
+        s,
+        "pareto front over (capacity ^, wait v, utilization ^, cost v): \
+         {front} of {} groups",
+        points.len()
+    );
+    let _ = writeln!(
+        s,
+        "  {:<28} {:>12} {:>12} {:>12} {:>12}",
+        "group", "capacity", "wait_s", "util", "cost"
+    );
+    for dominated in [false, true] {
+        if dominated && front < points.len() {
+            let _ = writeln!(s, "dominated:");
+        }
+        for p in points.iter().filter(|p| p.dominated == dominated) {
+            let _ = writeln!(
+                s,
+                "  {:<28} {:>12.2} {:>12.3} {:>12.4} {:>12.2}",
+                p.group, p.capacity, p.wait, p.utilization, p.cost
+            );
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CellRecord;
+
+    fn group(name: &str, completed: u64, wait: f64, util: f64, cost: f64) -> GroupStats {
+        let mut c = CellRecord {
+            index: 0,
+            name: name.into(),
+            seed: 1,
+            arrived: completed,
+            completed,
+            in_flight: 0,
+            tasks_executed: 0,
+            events_processed: 0,
+            gate_failures: 0,
+            retrains_triggered: 0,
+            failures: 0,
+            wait_training: crate::stats::Summary::new(),
+            util_training: util,
+            util_compute: 0.0,
+            avg_queue_training: 0.0,
+            final_mean_performance: 0.0,
+            lost_work: 0.0,
+            goodput: 1.0,
+            cost,
+            wall_secs: 0.0,
+            peak_rss_points: 0,
+            digest: String::new(),
+        };
+        c.wait_training.add(wait);
+        crate::coordinator::shard::aggregate_cells(&[c])
+            .pop()
+            .expect("one group")
+    }
+
+    #[test]
+    fn dominated_groups_are_marked() {
+        // b strictly beats a everywhere; c trades cost for capacity, so
+        // both b and c sit on the front
+        let groups = vec![
+            group("a", 80, 5.0, 0.5, 100.0),
+            group("b", 100, 4.0, 0.6, 90.0),
+            group("c", 60, 4.5, 0.55, 40.0),
+        ];
+        let points = pareto_front(&groups);
+        assert!(points[0].dominated, "a is beaten by b on all four");
+        assert!(!points[1].dominated);
+        assert!(!points[2].dominated);
+        let report = render_pareto(&points);
+        assert!(report.contains("2 of 3 groups"), "{report}");
+        assert!(report.contains("dominated:"), "{report}");
+        // the dominated section lists a after the front
+        let a_pos = report.find("\n  a ").expect("a row");
+        let dom_pos = report.find("dominated:").expect("section");
+        assert!(a_pos > dom_pos, "{report}");
+    }
+
+    #[test]
+    fn equal_points_do_not_dominate_each_other() {
+        let groups = vec![
+            group("x", 50, 1.0, 0.5, 10.0),
+            group("y", 50, 1.0, 0.5, 10.0),
+        ];
+        let points = pareto_front(&groups);
+        assert!(!points[0].dominated && !points[1].dominated);
+    }
+
+    #[test]
+    fn missing_metrics_stay_incomparable() {
+        let mut g = group("partial", 10, 1.0, 0.5, 5.0);
+        g.metrics.retain(|m| m.name != "cost");
+        let groups = vec![g, group("full", 100, 0.5, 0.9, 1.0)];
+        let points = pareto_front(&groups);
+        assert!(points[0].capacity.is_finite());
+        assert!(points[0].cost.is_nan());
+        // NaN comparisons are false, so neither direction dominates
+        assert!(!points[0].dominated && !points[1].dominated);
+    }
+}

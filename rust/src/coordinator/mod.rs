@@ -8,6 +8,7 @@ pub mod experiment;
 pub mod params;
 pub mod params_bin;
 pub mod result;
+pub mod shard;
 mod simulation;
 pub mod strategy;
 pub mod sweep;
@@ -17,9 +18,12 @@ pub use config::{ArrivalSpec, ExperimentConfig, RetentionConfig, RuntimeViewConf
 pub use experiment::Experiment;
 pub use params::{fit_params, fit_params_with_report, FitReport, SimParams};
 pub use result::ExperimentResult;
+pub use shard::{
+    merge_shards, CellRecord, GroupStats, MergedSweep, MetricStats, ShardManifest, ShardSpec,
+};
 pub use strategy::{
     build_placer, build_scheduler, build_trigger, placer_names, register_placer,
     register_scheduler, register_trigger, scheduler_names, trigger_names, StrategySpec,
 };
-pub use sweep::{GroupStats, MetricStats, Sweep, SweepResult};
+pub use sweep::{Sweep, SweepResult};
 pub use triggers::{RetrainTrigger, TriggerCtx};

@@ -1,0 +1,1025 @@
+//! Sharded sweeps: deterministic grid partitioning, the per-shard
+//! binary manifest (`.psm`, magic `PSSM`), and the merge that
+//! reassembles N shard artifacts into one sweep-shaped result.
+//!
+//! ## Determinism contract
+//!
+//! Every shard enumerates the *full* (config, seed) grid and runs only
+//! its stride (`index % count == shard`), so global cell indices, group
+//! names, and per-cell output filenames are shard-invariant. The merge
+//! then restores single-process semantics exactly:
+//!
+//! * **per-cell digests** are byte-identical to the single-process
+//!   sweep (they ride through the manifest verbatim);
+//! * **group mean/std/CI** are *bit*-identical: merging reorders
+//!   floating-point accumulation, so instead of summing partial group
+//!   summaries, the merge reassembles the per-cell records in global
+//!   cell order and re-runs the same [`aggregate_cells`] the
+//!   single-process path uses — same values, same add order, same bits;
+//! * **quantiles** come from the per-shard t-digest sketches merged via
+//!   the order-insensitive `TDigest::merge_from` (PR 8) — approximate
+//!   within the documented rank-error bound, by design.
+//!
+//! [`merge_shards`] rejects overlapping, missing, or mismatched shards
+//! with named errors; a hole in the grid can never be silently averaged
+//! over.
+
+use std::fmt;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::stats::sketch::{FixedHistogram, TDigest};
+use crate::stats::Summary;
+use crate::util::binio::{ByteReader, ByteWriter};
+
+use super::result::ExperimentResult;
+
+/// Which stride of the grid this process runs: shard `index` of
+/// `count` owns every cell whose global index `i` satisfies
+/// `i % count == index`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub index: usize,
+    pub count: usize,
+}
+
+impl ShardSpec {
+    pub fn new(index: usize, count: usize) -> Result<Self> {
+        if count == 0 {
+            return Err(Error::Config("shard: count must be >= 1".into()));
+        }
+        if index >= count {
+            return Err(Error::Config(format!(
+                "shard: index {index} out of range for {count} shards (use 0..{count})"
+            )));
+        }
+        Ok(ShardSpec { index, count })
+    }
+
+    /// Parse the CLI form `k/N`, e.g. `--shard 0/4`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let bad = || Error::Config(format!("shard: expected k/N (e.g. 0/4), got '{s}'"));
+        let (k, n) = s.split_once('/').ok_or_else(bad)?;
+        let index: usize = k.trim().parse().map_err(|_| bad())?;
+        let count: usize = n.trim().parse().map_err(|_| bad())?;
+        ShardSpec::new(index, count)
+    }
+
+    /// Does this shard own global cell index `i`?
+    pub fn owns(&self, i: usize) -> bool {
+        i % self.count == self.index
+    }
+
+    /// A 1-shard spec covers the whole grid.
+    pub fn is_full(&self) -> bool {
+        self.count == 1
+    }
+}
+
+impl fmt::Display for ShardSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
+/// Number of aggregated metrics per group (the
+/// [`CellRecord::metric_values`] tuple).
+pub(crate) const METRICS: usize = 16;
+
+/// Everything the merge needs from one finished cell, detached from the
+/// heavyweight [`ExperimentResult`] (no tsdb, no trace): the aggregate
+/// inputs bit-exact, the CSV row inputs, and the cell's digest.
+#[derive(Clone, Debug)]
+pub struct CellRecord {
+    /// Global cell index in the full grid — shard-invariant.
+    pub index: usize,
+    pub name: String,
+    pub seed: u64,
+    pub arrived: u64,
+    pub completed: u64,
+    pub in_flight: u64,
+    pub tasks_executed: u64,
+    pub events_processed: u64,
+    pub gate_failures: u64,
+    pub retrains_triggered: u64,
+    pub failures: u64,
+    /// Full task-wait summary (not just the mean) so group-level wait
+    /// statistics merge exactly via [`Summary::merge_from`].
+    pub wait_training: Summary,
+    pub util_training: f64,
+    pub util_compute: f64,
+    pub avg_queue_training: f64,
+    pub final_mean_performance: f64,
+    pub lost_work: f64,
+    pub goodput: f64,
+    pub cost: f64,
+    pub wall_secs: f64,
+    pub peak_rss_points: u64,
+    /// `ExperimentResult::digest()` — the byte-exact merge oracle.
+    pub digest: String,
+}
+
+impl CellRecord {
+    pub fn from_result(index: usize, r: &ExperimentResult) -> Self {
+        CellRecord {
+            index,
+            name: r.name.clone(),
+            seed: r.seed,
+            arrived: r.arrived,
+            completed: r.completed,
+            in_flight: r.in_flight,
+            tasks_executed: r.tasks_executed,
+            events_processed: r.events_processed,
+            gate_failures: r.gate_failures,
+            retrains_triggered: r.retrains_triggered,
+            failures: r.failures,
+            wait_training: r.wait_training.clone(),
+            util_training: r.util_training,
+            util_compute: r.util_compute,
+            avg_queue_training: r.avg_queue_training,
+            final_mean_performance: r.final_mean_performance,
+            lost_work: r.lost_work,
+            goodput: r.goodput,
+            cost: r.cost,
+            wall_secs: r.wall_secs,
+            peak_rss_points: r.tsdb.resident_points() as u64,
+            digest: r.digest(),
+        }
+    }
+
+    /// The metrics aggregated across replications, in table order.
+    pub(crate) fn metric_values(&self) -> [(&'static str, f64); METRICS] {
+        [
+            ("arrived", self.arrived as f64),
+            ("completed", self.completed as f64),
+            ("in_flight", self.in_flight as f64),
+            ("tasks_executed", self.tasks_executed as f64),
+            ("events_processed", self.events_processed as f64),
+            ("gate_failures", self.gate_failures as f64),
+            ("retrains_triggered", self.retrains_triggered as f64),
+            ("util_training", self.util_training),
+            ("util_compute", self.util_compute),
+            ("mean_wait_training_s", self.wait_training.mean()),
+            ("avg_queue_training", self.avg_queue_training),
+            ("final_mean_performance", self.final_mean_performance),
+            ("failures", self.failures as f64),
+            ("lost_work_s", self.lost_work),
+            ("goodput", self.goodput),
+            ("cost", self.cost),
+        ]
+    }
+
+    fn write_to(&self, w: &mut ByteWriter) {
+        w.varint(self.index as u64);
+        w.str(&self.name);
+        w.varint(self.seed);
+        for v in [
+            self.arrived,
+            self.completed,
+            self.in_flight,
+            self.tasks_executed,
+            self.events_processed,
+            self.gate_failures,
+            self.retrains_triggered,
+            self.failures,
+            self.peak_rss_points,
+        ] {
+            w.varint(v);
+        }
+        w.varint(self.wait_training.count);
+        for v in [
+            self.wait_training.sum,
+            self.wait_training.sum_sq,
+            self.wait_training.min,
+            self.wait_training.max,
+            self.util_training,
+            self.util_compute,
+            self.avg_queue_training,
+            self.final_mean_performance,
+            self.lost_work,
+            self.goodput,
+            self.cost,
+            self.wall_secs,
+        ] {
+            w.f64(v);
+        }
+        w.str(&self.digest);
+    }
+
+    fn read_from(r: &mut ByteReader) -> Result<CellRecord> {
+        let index = r.len_prefix()?;
+        let name = r.str()?;
+        let seed = r.varint()?;
+        let mut ints = [0u64; 9];
+        for v in ints.iter_mut() {
+            *v = r.varint()?;
+        }
+        let wait_count = r.varint()?;
+        let mut floats = [0f64; 12];
+        for v in floats.iter_mut() {
+            *v = r.f64()?;
+        }
+        let digest = r.str()?;
+        Ok(CellRecord {
+            index,
+            name,
+            seed,
+            arrived: ints[0],
+            completed: ints[1],
+            in_flight: ints[2],
+            tasks_executed: ints[3],
+            events_processed: ints[4],
+            gate_failures: ints[5],
+            retrains_triggered: ints[6],
+            failures: ints[7],
+            peak_rss_points: ints[8],
+            wait_training: Summary {
+                count: wait_count,
+                sum: floats[0],
+                sum_sq: floats[1],
+                min: floats[2],
+                max: floats[3],
+            },
+            util_training: floats[4],
+            util_compute: floats[5],
+            avg_queue_training: floats[6],
+            final_mean_performance: floats[7],
+            lost_work: floats[8],
+            goodput: floats[9],
+            cost: floats[10],
+            wall_secs: floats[11],
+            digest,
+        })
+    }
+}
+
+/// Cross-replication statistics for one metric of one group.
+#[derive(Clone, Debug)]
+pub struct MetricStats {
+    pub name: &'static str,
+    pub n: usize,
+    pub mean: f64,
+    pub std_dev: f64,
+    /// Half-width of the 95% confidence interval of the mean
+    /// (Student-t for small n, normal beyond).
+    pub ci95: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Sketch-backed median across replications (t-digest; exact-rank
+    /// error within the documented bound).
+    pub p50: f64,
+    /// Sketch-backed 95th percentile across replications.
+    pub p95: f64,
+}
+
+/// All replications sharing one config name.
+#[derive(Clone, Debug)]
+pub struct GroupStats {
+    pub name: String,
+    /// Global cell indices, ascending. For an unsharded sweep these are
+    /// also indices into `SweepResult::results`.
+    pub cells: Vec<usize>,
+    pub metrics: Vec<MetricStats>,
+    /// Exact task-wait summary: every member cell's `wait_training`
+    /// merged via [`Summary::merge_from`] in global cell order, so the
+    /// merged N-shard value is bit-identical to the single-process one.
+    pub wait: Summary,
+    /// Per-metric t-digest over the replication values (same order as
+    /// `metrics`); what `sweep-merge` combines across shards.
+    pub sketches: Vec<TDigest>,
+}
+
+/// Group per-cell records by config name (first-appearance order) and
+/// aggregate. This single function is the statistics path for *both*
+/// the single-process sweep and the N-shard merge — feeding it the same
+/// records in the same global order is what makes merged group stats
+/// bit-identical, not merely close.
+pub(crate) fn aggregate_cells(cells: &[CellRecord]) -> Vec<GroupStats> {
+    let mut order: Vec<String> = Vec::new();
+    let mut index: std::collections::HashMap<&str, Vec<usize>> = std::collections::HashMap::new();
+    for (pos, c) in cells.iter().enumerate() {
+        let slot = index.entry(c.name.as_str()).or_default();
+        if slot.is_empty() {
+            order.push(c.name.clone());
+        }
+        slot.push(pos);
+    }
+    order
+        .into_iter()
+        .map(|name| {
+            let positions = index[name.as_str()].clone();
+            let mut summaries = vec![Summary::new(); METRICS];
+            let mut sketches: Vec<TDigest> = (0..METRICS).map(|_| TDigest::default()).collect();
+            let mut names = [""; METRICS];
+            let mut wait = Summary::new();
+            for &p in &positions {
+                for (m, (mname, v)) in cells[p].metric_values().into_iter().enumerate() {
+                    names[m] = mname;
+                    summaries[m].add(v);
+                    sketches[m].add(v);
+                }
+                wait.merge_from(&cells[p].wait_training);
+            }
+            let metrics = summaries
+                .into_iter()
+                .enumerate()
+                .map(|(m, s)| {
+                    let n = s.count as usize;
+                    let sd = s.std_dev();
+                    MetricStats {
+                        name: names[m],
+                        n,
+                        mean: s.mean(),
+                        std_dev: sd,
+                        ci95: if n > 1 {
+                            t_critical_95(n - 1) * sd / (n as f64).sqrt()
+                        } else {
+                            0.0
+                        },
+                        min: s.min,
+                        max: s.max,
+                        p50: sketches[m].quantile(0.5),
+                        p95: sketches[m].quantile(0.95),
+                    }
+                })
+                .collect();
+            GroupStats {
+                name,
+                cells: positions.into_iter().map(|p| cells[p].index).collect(),
+                metrics,
+                wait,
+                sketches,
+            }
+        })
+        .collect()
+}
+
+/// Two-sided 95% Student-t critical value for `df` degrees of freedom
+/// (exact table through 30, normal approximation beyond).
+pub(crate) fn t_critical_95(df: usize) -> f64 {
+    const TABLE: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201, 2.179,
+        2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064,
+        2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    if df == 0 {
+        return f64::INFINITY;
+    }
+    if df <= TABLE.len() {
+        TABLE[df - 1]
+    } else {
+        1.96
+    }
+}
+
+/// RFC 4180: quote a CSV field iff it contains a comma, quote, or line
+/// break; embedded quotes double. Group names are built from strategy
+/// labels and hw-class specs and absolutely can contain commas.
+pub(crate) fn csv_field(s: &str) -> std::borrow::Cow<'_, str> {
+    if !s.contains([',', '"', '\n', '\r']) {
+        return std::borrow::Cow::Borrowed(s);
+    }
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        if ch == '"' {
+            out.push('"');
+        }
+        out.push(ch);
+    }
+    out.push('"');
+    std::borrow::Cow::Owned(out)
+}
+
+/// Header shared by `sweep --export` and `sweep-merge --export`.
+pub(crate) const CSV_HEADER: &str = "cell,name,seed,arrived,completed,tasks_executed,\
+events_processed,util_training,util_compute,mean_wait_training_s,avg_queue_training,\
+final_mean_performance,failures,lost_work_s,goodput,cost,wall_secs,wall_time_ms,\
+peak_rss_points,digest\n";
+
+/// One CSV row per cell. The `cell` column is the *global* grid index,
+/// so shard CSVs concatenate into exactly the single-process export.
+pub(crate) fn cells_to_csv(cells: &[CellRecord]) -> String {
+    use std::fmt::Write;
+    let mut s = String::from(CSV_HEADER);
+    for c in cells {
+        let _ = writeln!(
+            s,
+            "{},{},{},{},{},{},{},{:.6},{:.6},{:.3},{:.3},{:.4},{},{:.3},{:.6},{:.4},{:.4},{:.3},{},{}",
+            c.index,
+            csv_field(&c.name),
+            c.seed,
+            c.arrived,
+            c.completed,
+            c.tasks_executed,
+            c.events_processed,
+            c.util_training,
+            c.util_compute,
+            c.wait_training.mean(),
+            c.avg_queue_training,
+            c.final_mean_performance,
+            c.failures,
+            c.lost_work,
+            c.goodput,
+            c.cost,
+            c.wall_secs,
+            c.wall_secs * 1000.0,
+            c.peak_rss_points,
+            csv_field(&c.digest)
+        );
+    }
+    s
+}
+
+/// Group table body shared by `SweepResult::table` and
+/// `MergedSweep::table`.
+pub(crate) fn render_group_lines(s: &mut String, groups: &[GroupStats]) {
+    use std::fmt::Write;
+    for g in groups {
+        let _ = writeln!(s, "group '{}' (n={})", g.name, g.cells.len());
+        for m in &g.metrics {
+            let _ = writeln!(
+                s,
+                "  {:<24} {:>14.4} ± {:<10.4} [{:.4}, {:.4}]  p50 {:.4}  p95 {:.4}",
+                m.name, m.mean, m.ci95, m.min, m.max, m.p50, m.p95
+            );
+        }
+    }
+}
+
+/// Fixed configuration of the per-cell wall-time histogram carried by
+/// every shard manifest: constant so shard histograms always merge
+/// exactly (0–60 s in 250 ms bins; slower cells land in the overflow
+/// bucket and still count).
+const WALL_HIST_LO_MS: f64 = 0.0;
+const WALL_HIST_HI_MS: f64 = 60_000.0;
+const WALL_HIST_BINS: usize = 240;
+
+fn new_wall_hist() -> FixedHistogram {
+    FixedHistogram::new(WALL_HIST_LO_MS, WALL_HIST_HI_MS, WALL_HIST_BINS)
+}
+
+const MANIFEST_MAGIC: &[u8; 4] = b"PSSM";
+const MANIFEST_VERSION: u16 = 1;
+
+/// The per-shard artifact: which stride of which grid this process ran,
+/// its per-cell records (digests included), per-group metric sketches
+/// for mergeable quantiles, and the per-cell wall-time histogram.
+/// Serialized as the `.psm` binary format (magic `PSSM`, version 1) via
+/// `util/binio`.
+#[derive(Clone, Debug)]
+pub struct ShardManifest {
+    pub shard: ShardSpec,
+    /// Length of the *full* grid every shard enumerated.
+    pub grid_len: usize,
+    /// This shard's cells, ascending global index.
+    pub cells: Vec<CellRecord>,
+    /// Per group (first-appearance order): one t-digest per metric,
+    /// built shard-locally; `sweep-merge` combines them with the
+    /// order-insensitive `TDigest::merge_from`.
+    pub group_sketches: Vec<(String, Vec<TDigest>)>,
+    /// Per-cell wall-time milliseconds (exact integer merge across
+    /// shards — fixed configuration, see `WALL_HIST_*`).
+    pub wall_hist: FixedHistogram,
+}
+
+impl ShardManifest {
+    /// Build the artifact for one finished shard run.
+    pub fn from_cells(shard: ShardSpec, grid_len: usize, cells: Vec<CellRecord>) -> Self {
+        let mut wall_hist = new_wall_hist();
+        let mut order: Vec<String> = Vec::new();
+        let mut sketches: std::collections::HashMap<String, Vec<TDigest>> =
+            std::collections::HashMap::new();
+        for c in &cells {
+            wall_hist.add(c.wall_secs * 1000.0);
+            let slot = sketches.entry(c.name.clone()).or_insert_with(|| {
+                order.push(c.name.clone());
+                (0..METRICS).map(|_| TDigest::default()).collect()
+            });
+            for (m, (_, v)) in c.metric_values().into_iter().enumerate() {
+                slot[m].add(v);
+            }
+        }
+        let group_sketches = order
+            .into_iter()
+            .map(|name| {
+                let sk = sketches.remove(&name).expect("group registered above");
+                (name, sk)
+            })
+            .collect();
+        ShardManifest {
+            shard,
+            grid_len,
+            cells,
+            group_sketches,
+            wall_hist,
+        }
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.header(MANIFEST_MAGIC, MANIFEST_VERSION);
+        w.varint(self.shard.index as u64);
+        w.varint(self.shard.count as u64);
+        w.varint(self.grid_len as u64);
+        w.varint(self.cells.len() as u64);
+        for c in &self.cells {
+            c.write_to(&mut w);
+        }
+        w.varint(self.group_sketches.len() as u64);
+        for (name, sketches) in &self.group_sketches {
+            w.str(name);
+            debug_assert_eq!(sketches.len(), METRICS);
+            for sk in sketches {
+                sk.write_to(&mut w);
+            }
+        }
+        self.wall_hist.write_to(&mut w);
+        w.into_bytes()
+    }
+
+    /// Decode + validate: shard spec in range, cells strictly ascending
+    /// and owned by the shard's stride, indices inside the grid. A
+    /// manifest that passes cannot corrupt a merge silently.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(bytes);
+        r.check_header(MANIFEST_MAGIC, MANIFEST_VERSION, "shard manifest")?;
+        let shard = ShardSpec::new(r.len_prefix()?, r.len_prefix()?)?;
+        let grid_len = r.len_prefix()?;
+        if grid_len == 0 {
+            return Err(Error::Other("shard manifest: empty grid".into()));
+        }
+        // every cell record costs well over 32 bytes on the wire
+        let n_cells = r.len_prefix_for(32)?;
+        let mut cells = Vec::with_capacity(n_cells);
+        let mut prev: Option<usize> = None;
+        for _ in 0..n_cells {
+            let c = CellRecord::read_from(&mut r)?;
+            if c.index >= grid_len {
+                return Err(Error::Other(format!(
+                    "shard manifest: cell {} outside grid of {grid_len}",
+                    c.index
+                )));
+            }
+            if !shard.owns(c.index) {
+                return Err(Error::Other(format!(
+                    "shard manifest: cell {} does not belong to shard {shard}",
+                    c.index
+                )));
+            }
+            if prev.is_some_and(|p| c.index <= p) {
+                return Err(Error::Other(
+                    "shard manifest: cells out of order".into(),
+                ));
+            }
+            prev = Some(c.index);
+            cells.push(c);
+        }
+        let n_groups = r.len_prefix_for(1)?;
+        let mut group_sketches = Vec::with_capacity(n_groups);
+        for _ in 0..n_groups {
+            let name = r.str()?;
+            let mut sketches = Vec::with_capacity(METRICS);
+            for _ in 0..METRICS {
+                sketches.push(TDigest::read_from(&mut r)?);
+            }
+            group_sketches.push((name, sketches));
+        }
+        let wall_hist = FixedHistogram::read_from(&mut r)?;
+        r.expect_eof("shard manifest")?;
+        Ok(ShardManifest {
+            shard,
+            grid_len,
+            cells,
+            group_sketches,
+            wall_hist,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let bytes = std::fs::read(&path).map_err(|e| {
+            Error::Other(format!(
+                "shard manifest {}: {e}",
+                path.as_ref().display()
+            ))
+        })?;
+        Self::from_bytes(&bytes)
+    }
+}
+
+/// A full grid reassembled from shard manifests: the same reporting
+/// surface as `SweepResult` (digests, group tables, per-cell CSV) plus
+/// the merged wall-time histogram.
+pub struct MergedSweep {
+    /// How many shards the grid was split into.
+    pub shards: usize,
+    pub grid_len: usize,
+    /// Every cell of the grid, global order.
+    pub cells: Vec<CellRecord>,
+    /// Recomputed in global cell order (bit-identical to the
+    /// single-process sweep); quantiles overridden from the merged
+    /// shard sketches.
+    pub groups: Vec<GroupStats>,
+    pub wall_hist: FixedHistogram,
+}
+
+impl MergedSweep {
+    /// Deterministic per-cell digests, global order — byte-identical to
+    /// the single-process sweep of the same grid.
+    pub fn digests(&self) -> Vec<String> {
+        self.cells.iter().map(|c| c.digest.clone()).collect()
+    }
+
+    pub fn events_total(&self) -> u64 {
+        self.cells.iter().map(|c| c.events_processed).sum()
+    }
+
+    /// Per-cell CSV, identical in shape (and in every deterministic
+    /// column) to `SweepResult::to_csv` of the unsharded sweep.
+    pub fn to_csv(&self) -> String {
+        cells_to_csv(&self.cells)
+    }
+
+    /// Human-readable aggregate table (same group body as
+    /// `SweepResult::table`).
+    pub fn table(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "sweep-merge: {} cells from {} shards, {} groups, {} events total",
+            self.cells.len(),
+            self.shards,
+            self.groups.len(),
+            self.events_total()
+        );
+        let _ = writeln!(
+            s,
+            "cell wall ms: p50 {:.1}  p95 {:.1}  p99 {:.1}",
+            self.wall_hist.quantile(0.5),
+            self.wall_hist.quantile(0.95),
+            self.wall_hist.quantile(0.99)
+        );
+        render_group_lines(&mut s, &self.groups);
+        s
+    }
+}
+
+/// Combine N shard manifests back into one grid. Rejects incompatible
+/// layouts, overlapping shards, and missing shards/cells by name —
+/// merging must be all-or-nothing.
+pub fn merge_shards(mut manifests: Vec<ShardManifest>) -> Result<MergedSweep> {
+    let fail = |m: String| Err(Error::Config(format!("sweep-merge: {m}")));
+    if manifests.is_empty() {
+        return fail("no shard manifests".into());
+    }
+    let count = manifests[0].shard.count;
+    let grid_len = manifests[0].grid_len;
+    for m in &manifests {
+        if m.shard.count != count {
+            return fail(format!(
+                "shard layout mismatch: {} vs {}",
+                manifests[0].shard, m.shard
+            ));
+        }
+        if m.grid_len != grid_len {
+            return fail(format!(
+                "grid length mismatch: {} vs {} cells",
+                grid_len, m.grid_len
+            ));
+        }
+    }
+    manifests.sort_by_key(|m| m.shard.index);
+    for pair in manifests.windows(2) {
+        if pair[0].shard.index == pair[1].shard.index {
+            return fail(format!(
+                "overlapping shards: {} supplied twice",
+                pair[0].shard
+            ));
+        }
+    }
+    if manifests.len() != count {
+        for k in 0..count {
+            if !manifests.iter().any(|m| m.shard.index == k) {
+                return fail(format!("missing shard {k}/{count}"));
+            }
+        }
+    }
+
+    // Reassemble the grid in global cell order. Each manifest is
+    // already validated (ascending, stride-owned), so a k-way merge by
+    // index reproduces the single-process ordering exactly.
+    let mut cells: Vec<CellRecord> = Vec::with_capacity(grid_len);
+    {
+        let mut cursors: Vec<std::iter::Peekable<std::vec::IntoIter<CellRecord>>> = manifests
+            .iter_mut()
+            .map(|m| std::mem::take(&mut m.cells).into_iter().peekable())
+            .collect();
+        for i in 0..grid_len {
+            let c = cursors[i % count]
+                .next()
+                .filter(|c| c.index == i)
+                .ok_or_else(|| {
+                    Error::Config(format!(
+                        "sweep-merge: missing cell {i} (shard {}/{count} incomplete)",
+                        i % count
+                    ))
+                })?;
+            cells.push(c);
+        }
+        for (k, mut cur) in cursors.into_iter().enumerate() {
+            if let Some(extra) = cur.next() {
+                return fail(format!(
+                    "duplicate cell {} in shard {k}/{count}",
+                    extra.index
+                ));
+            }
+        }
+    }
+
+    // Exact statistics: same records, same global order, same function
+    // as the single-process path => bit-identical mean/std/CI.
+    let mut groups = aggregate_cells(&cells);
+
+    // Approximate statistics: merge the per-shard sketches (shard-index
+    // order; TDigest::merge_from is order-insensitive within the rank
+    // bound) and override the group quantiles with the merged view.
+    for g in groups.iter_mut() {
+        let mut merged: Vec<TDigest> = (0..METRICS).map(|_| TDigest::default()).collect();
+        for m in &manifests {
+            if let Some((_, sk)) = m.group_sketches.iter().find(|(n, _)| n == &g.name) {
+                for (dst, src) in merged.iter_mut().zip(sk) {
+                    dst.merge_from(src);
+                }
+            }
+        }
+        if merged[0].count() != g.cells.len() as u64 {
+            return fail(format!(
+                "group '{}': sketches cover {} cells, grid has {}",
+                g.name,
+                merged[0].count(),
+                g.cells.len()
+            ));
+        }
+        for (ms, sk) in g.metrics.iter_mut().zip(&merged) {
+            ms.p50 = sk.quantile(0.5);
+            ms.p95 = sk.quantile(0.95);
+        }
+        g.sketches = merged;
+    }
+
+    let mut wall_hist = new_wall_hist();
+    for m in &manifests {
+        if !wall_hist.merge_from(&m.wall_hist) {
+            return fail(format!(
+                "shard {} wall-time histogram configuration disagrees",
+                m.shard
+            ));
+        }
+    }
+
+    Ok(MergedSweep {
+        shards: count,
+        grid_len,
+        cells,
+        groups,
+        wall_hist,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(index: usize, name: &str, seed: u64) -> CellRecord {
+        let mut wait = Summary::new();
+        wait.add(1.5 * (seed as f64 + 1.0));
+        wait.add(0.5 * (index as f64 + 1.0));
+        CellRecord {
+            index,
+            name: name.into(),
+            seed,
+            arrived: 100 + index as u64,
+            completed: 90 + seed,
+            in_flight: 10,
+            tasks_executed: 300,
+            events_processed: 1000 + 7 * index as u64,
+            gate_failures: 1,
+            retrains_triggered: 2,
+            failures: 0,
+            wait_training: wait,
+            util_training: 0.5 + 0.01 * index as f64,
+            util_compute: 0.25,
+            avg_queue_training: 0.1 * seed as f64,
+            final_mean_performance: 0.9,
+            lost_work: 0.0,
+            goodput: 1.0,
+            cost: 12.5 + index as f64,
+            wall_secs: 0.001 * (index as f64 + 1.0),
+            peak_rss_points: 42,
+            digest: format!("v2;name={name};seed={seed};cell={index}"),
+        }
+    }
+
+    fn grid(n: usize) -> Vec<CellRecord> {
+        (0..n)
+            .map(|i| cell(i, if i % 2 == 0 { "even" } else { "odd" }, i as u64 * 3))
+            .collect()
+    }
+
+    #[test]
+    fn spec_parse_and_ownership() {
+        let s = ShardSpec::parse("1/3").unwrap();
+        assert_eq!((s.index, s.count), (1, 3));
+        assert_eq!(s.to_string(), "1/3");
+        assert!(!s.is_full());
+        assert!(ShardSpec::parse("0/1").unwrap().is_full());
+        let owned: Vec<usize> = (0..10).filter(|&i| s.owns(i)).collect();
+        assert_eq!(owned, vec![1, 4, 7]);
+        // the strides of all shards partition the grid exactly
+        for n in 1..=5usize {
+            let mut seen = vec![0u32; 17];
+            for k in 0..n {
+                let sp = ShardSpec::new(k, n).unwrap();
+                for (i, s) in seen.iter_mut().enumerate() {
+                    *s += u32::from(sp.owns(i));
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "n={n}: {seen:?}");
+        }
+        for bad in ["", "3", "a/b", "1/0", "3/3", "4/2", "-1/2"] {
+            assert!(ShardSpec::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrips_bit_exact() {
+        let all = grid(11);
+        let spec = ShardSpec::new(2, 3).unwrap();
+        let mine: Vec<CellRecord> = all.iter().filter(|c| spec.owns(c.index)).cloned().collect();
+        let m = ShardManifest::from_cells(spec, 11, mine);
+        let bytes = m.to_bytes();
+        let back = ShardManifest::from_bytes(&bytes).unwrap();
+        assert_eq!(back.shard, spec);
+        assert_eq!(back.grid_len, 11);
+        assert_eq!(back.cells.len(), m.cells.len());
+        for (a, b) in m.cells.iter().zip(&back.cells) {
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.digest, b.digest);
+            assert_eq!(a.wait_training.sum.to_bits(), b.wait_training.sum.to_bits());
+            assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+            assert_eq!(a.peak_rss_points, b.peak_rss_points);
+        }
+        assert_eq!(back.group_sketches.len(), m.group_sketches.len());
+        assert_eq!(back.wall_hist.count(), m.wall_hist.count());
+        // and the encoding is deterministic
+        assert_eq!(bytes, back.to_bytes());
+    }
+
+    #[test]
+    fn manifest_rejects_corruption() {
+        let all = grid(6);
+        let spec = ShardSpec::new(0, 2).unwrap();
+        let mine: Vec<CellRecord> = all.iter().filter(|c| spec.owns(c.index)).cloned().collect();
+        let good = ShardManifest::from_cells(spec, 6, mine.clone()).to_bytes();
+        assert!(ShardManifest::from_bytes(&good).is_ok());
+        // magic
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        let err = ShardManifest::from_bytes(&bad).unwrap_err();
+        assert!(err.to_string().contains("shard manifest"), "{err}");
+        // truncation
+        assert!(ShardManifest::from_bytes(&good[..good.len() - 4]).is_err());
+        // trailing bytes
+        let mut long = good.clone();
+        long.push(0);
+        assert!(ShardManifest::from_bytes(&long).is_err());
+        // a cell the shard does not own
+        let foreign = ShardManifest::from_cells(spec, 6, vec![mine[0].clone(), all[1].clone()]);
+        let err = ShardManifest::from_bytes(&foreign.to_bytes()).unwrap_err();
+        assert!(err.to_string().contains("does not belong"), "{err}");
+        // out-of-order cells
+        let swapped =
+            ShardManifest::from_cells(spec, 6, vec![mine[1].clone(), mine[0].clone()]);
+        let err = ShardManifest::from_bytes(&swapped.to_bytes()).unwrap_err();
+        assert!(err.to_string().contains("out of order"), "{err}");
+        // cell outside the declared grid
+        let outside = ShardManifest::from_cells(spec, 3, vec![all[4].clone()]);
+        let err = ShardManifest::from_bytes(&outside.to_bytes()).unwrap_err();
+        assert!(err.to_string().contains("outside grid"), "{err}");
+    }
+
+    #[test]
+    fn merge_is_bit_identical_to_direct_aggregation() {
+        let all = grid(13);
+        let direct = aggregate_cells(&all);
+        for n in [1usize, 2, 3, 5] {
+            let manifests: Vec<ShardManifest> = (0..n)
+                .map(|k| {
+                    let spec = ShardSpec::new(k, n).unwrap();
+                    let mine: Vec<CellRecord> =
+                        all.iter().filter(|c| spec.owns(c.index)).cloned().collect();
+                    // through the wire format, like the real tool
+                    ShardManifest::from_bytes(
+                        &ShardManifest::from_cells(spec, all.len(), mine).to_bytes(),
+                    )
+                    .unwrap()
+                })
+                .collect();
+            let merged = merge_shards(manifests).unwrap();
+            assert_eq!(merged.shards, n);
+            assert_eq!(merged.cells.len(), all.len());
+            for (a, b) in all.iter().zip(&merged.cells) {
+                assert_eq!(a.index, b.index);
+                assert_eq!(a.digest, b.digest);
+            }
+            assert_eq!(merged.to_csv(), cells_to_csv(&all));
+            assert_eq!(direct.len(), merged.groups.len());
+            for (d, m) in direct.iter().zip(&merged.groups) {
+                assert_eq!(d.name, m.name);
+                assert_eq!(d.cells, m.cells);
+                assert_eq!(d.wait.count, m.wait.count);
+                assert_eq!(d.wait.sum.to_bits(), m.wait.sum.to_bits());
+                assert_eq!(d.wait.sum_sq.to_bits(), m.wait.sum_sq.to_bits());
+                for (dm, mm) in d.metrics.iter().zip(&m.metrics) {
+                    assert_eq!(dm.mean.to_bits(), mm.mean.to_bits(), "{}", dm.name);
+                    assert_eq!(dm.std_dev.to_bits(), mm.std_dev.to_bits());
+                    assert_eq!(dm.ci95.to_bits(), mm.ci95.to_bits());
+                    assert_eq!(dm.min.to_bits(), mm.min.to_bits());
+                    assert_eq!(dm.max.to_bits(), mm.max.to_bits());
+                    // sketch-backed quantiles stay inside the value range
+                    assert!(mm.p50 >= mm.min - 1e-9 && mm.p50 <= mm.max + 1e-9);
+                    assert!(mm.p95 >= mm.min - 1e-9 && mm.p95 <= mm.max + 1e-9);
+                }
+            }
+            assert_eq!(merged.wall_hist.count(), all.len() as u64);
+            assert!(merged.table().contains("group 'even'"));
+        }
+    }
+
+    #[test]
+    fn merge_rejects_overlap_missing_and_mismatch() {
+        let all = grid(9);
+        let mk = |k: usize, n: usize, grid_len: usize| {
+            let spec = ShardSpec::new(k, n).unwrap();
+            let mine: Vec<CellRecord> = all
+                .iter()
+                .filter(|c| spec.owns(c.index) && c.index < grid_len)
+                .cloned()
+                .collect();
+            ShardManifest::from_cells(spec, grid_len, mine)
+        };
+        let err = merge_shards(vec![]).unwrap_err();
+        assert!(err.to_string().contains("no shard manifests"), "{err}");
+        let err = merge_shards(vec![mk(0, 3, 9), mk(1, 3, 9)]).unwrap_err();
+        assert!(err.to_string().contains("missing shard 2/3"), "{err}");
+        let err = merge_shards(vec![mk(0, 3, 9), mk(1, 3, 9), mk(1, 3, 9)]).unwrap_err();
+        assert!(err.to_string().contains("overlapping shards: 1/3"), "{err}");
+        let err = merge_shards(vec![mk(0, 2, 9), mk(1, 3, 9)]).unwrap_err();
+        assert!(err.to_string().contains("shard layout mismatch"), "{err}");
+        let err = merge_shards(vec![mk(0, 2, 9), mk(1, 2, 7)]).unwrap_err();
+        assert!(err.to_string().contains("grid length mismatch"), "{err}");
+        // a shard that ran only part of its stride is caught cell-wise
+        let mut partial = mk(1, 3, 9);
+        partial.cells.pop();
+        let err = merge_shards(vec![mk(0, 3, 9), partial, mk(2, 3, 9)]).unwrap_err();
+        assert!(err.to_string().contains("missing cell 7"), "{err}");
+        // the happy path still merges
+        assert!(merge_shards(vec![mk(0, 3, 9), mk(1, 3, 9), mk(2, 3, 9)]).is_ok());
+    }
+
+    #[test]
+    fn csv_field_quotes_per_rfc4180() {
+        assert_eq!(csv_field("plain"), "plain");
+        assert_eq!(csv_field("has,comma"), "\"has,comma\"");
+        assert_eq!(csv_field("say \"hi\""), "\"say \"\"hi\"\"\"");
+        assert_eq!(csv_field("line\nbreak"), "\"line\nbreak\"");
+        let csv = cells_to_csv(&[cell(0, "cap=4,fac=1.5", 7)]);
+        let row = csv.lines().nth(1).unwrap();
+        assert!(row.contains("\"cap=4,fac=1.5\""), "{row}");
+        assert!(csv.starts_with(CSV_HEADER));
+    }
+
+    #[test]
+    fn aggregate_exposes_wait_and_quantiles() {
+        let all = grid(8);
+        let groups = aggregate_cells(&all);
+        assert_eq!(groups.len(), 2);
+        let even = &groups[0];
+        assert_eq!(even.name, "even");
+        assert_eq!(even.cells, vec![0, 2, 4, 6]);
+        // wait merges every member cell's summary (2 samples per cell)
+        assert_eq!(even.wait.count, 8);
+        assert!(even.wait.max >= even.wait.min);
+        assert_eq!(even.sketches.len(), METRICS);
+        let arrived = even.metrics.iter().find(|m| m.name == "arrived").unwrap();
+        assert_eq!(arrived.n, 4);
+        assert!(arrived.p50 >= arrived.min && arrived.p50 <= arrived.max);
+        assert!(arrived.p95 >= arrived.p50);
+    }
+}

@@ -13,6 +13,19 @@
 //! order the cells were added — the output is byte-identical no matter
 //! how many workers ran it (see `ExperimentResult::digest`).
 //!
+//! The same determinism extends *across processes*: [`Sweep::shard`]
+//! restricts a run to the `i % N == k` stride of the grid while keeping
+//! global cell indices (and therefore group names, digests, and
+//! per-cell output filenames) shard-invariant, and the resulting
+//! [`ShardManifest`]s merge back into the single-process outcome via
+//! [`super::shard::merge_shards`].
+//!
+//! Failure isolation: each cell's body (sink construction, the run,
+//! the completion hook) executes under `catch_unwind`, so one panicking
+//! or failing cell cannot poison the worker pool — the sweep reports
+//! every failed cell with its (index, name, seed) attached instead of
+//! discarding the grid.
+//!
 //! Shared inputs (`SimParams`, the optional PJRT `Runtime`) cross thread
 //! boundaries behind `Arc`s; per-run mutable state (RNG streams, replay
 //! cursors, the trace store) lives inside each worker's experiment.
@@ -22,29 +35,35 @@ use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::runtime::Runtime;
-use crate::stats::Summary;
 use crate::trace::TraceSink;
 
 use super::config::ExperimentConfig;
 use super::experiment::Experiment;
 use super::params::SimParams;
 use super::result::ExperimentResult;
+use super::shard::{
+    aggregate_cells, cells_to_csv, render_group_lines, CellRecord, GroupStats, ShardManifest,
+    ShardSpec,
+};
 
-/// Per-cell [`TraceSink`] constructor: invoked with the cell's input
-/// index and config just before the cell runs (on the worker thread),
-/// and the returned sink is injected via `Experiment::with_sink` —
-/// capture is forced on for that cell, and a streaming sink (e.g.
+/// Per-cell [`TraceSink`] constructor: invoked with the cell's global
+/// grid index and config just before the cell runs (on the worker
+/// thread), and the returned sink is injected via `Experiment::with_sink`
+/// — capture is forced on for that cell, and a streaming sink (e.g.
 /// `trace::StreamingPstSink`) keeps the capture out of memory, which is
 /// what makes `sweep --trace-dir` memory-flat instead of buffering
-/// every cell's trace until the sweep ends.
+/// every cell's trace until the sweep ends. Under [`Sweep::shard`] the
+/// index is still the *global* one, so per-cell filenames derived from
+/// it are shard-invariant.
 pub type CellSinkFactory =
     Box<dyn Fn(usize, &ExperimentConfig) -> Result<Box<dyn TraceSink>> + Send + Sync>;
 
 /// Per-cell completion hook: invoked on the worker thread with the
-/// cell's input index, config, and finished result — before the result
-/// is handed back for ordering. This is how `sweep --metrics-dir`
+/// cell's global grid index, config, and finished result — before the
+/// result is handed back for ordering. This is how `sweep --metrics-dir`
 /// writes one OpenMetrics file per cell without buffering every cell's
-/// export until the sweep ends; a hook error fails that cell's run.
+/// export until the sweep ends; a hook error (or panic) fails that
+/// cell's run, attributed, without taking down the sweep.
 pub type CellHook = Box<dyn Fn(usize, &ExperimentConfig, &ExperimentResult) -> Result<()> + Send + Sync>;
 
 /// A sweep under construction: shared inputs + the cell grid.
@@ -55,6 +74,7 @@ pub struct Sweep {
     jobs: usize,
     sink_factory: Option<CellSinkFactory>,
     cell_hook: Option<CellHook>,
+    shard: Option<ShardSpec>,
 }
 
 impl Sweep {
@@ -66,6 +86,7 @@ impl Sweep {
             jobs: 0,
             sink_factory: None,
             cell_hook: None,
+            shard: None,
         }
     }
 
@@ -95,6 +116,14 @@ impl Sweep {
         self
     }
 
+    /// Run only this process's stride of the grid (`None` = the whole
+    /// grid). The full grid must still be added — sharding selects
+    /// cells by global index, it does not renumber them.
+    pub fn shard(mut self, shard: Option<ShardSpec>) -> Self {
+        self.shard = shard;
+        self
+    }
+
     /// Append one cell. Cells sharing a config `name` are treated as
     /// replications of each other when aggregating statistics.
     pub fn add(&mut self, cfg: ExperimentConfig) -> &mut Self {
@@ -120,9 +149,13 @@ impl Sweep {
         self.cells.is_empty()
     }
 
-    /// Run every cell to completion and aggregate. The i-th entry of
-    /// `SweepResult::results` is always the i-th added cell, and each
-    /// cell's outcome is bit-identical across any `jobs` value.
+    /// Run every owned cell to completion and aggregate. The i-th entry
+    /// of `SweepResult::results` is always the i-th *owned* cell in
+    /// grid order (the whole grid when unsharded), and each cell's
+    /// outcome is bit-identical across any `jobs` value. Cells that
+    /// fail — by error or by panic — are collected and reported
+    /// together with their (global index, name, seed); one bad cell no
+    /// longer discards the grid silently.
     pub fn run(self) -> Result<SweepResult> {
         let started = std::time::Instant::now();
         let Sweep {
@@ -132,6 +165,7 @@ impl Sweep {
             jobs,
             sink_factory,
             cell_hook,
+            shard,
         } = self;
         if cells.is_empty() {
             return Err(Error::Config("sweep: no cells to run".into()));
@@ -139,11 +173,18 @@ impl Sweep {
         for cfg in &cells {
             cfg.validate()?;
         }
-        let jobs = effective_jobs(jobs, cells.len());
+        let grid_len = cells.len();
+        // The stride this process owns. Global indices survive into
+        // results, sinks, hooks, and the manifest — shard-invariance.
+        let owned: Vec<usize> = match shard {
+            Some(s) => (0..grid_len).filter(|&i| s.owns(i)).collect(),
+            None => (0..grid_len).collect(),
+        };
+        let jobs = effective_jobs(jobs, owned.len());
 
-        // Work-stealing by atomic cursor: workers claim the next cell
-        // index and tag results with it, so completion order (which IS
-        // scheduling-dependent) never leaks into the output order.
+        // Work-stealing by atomic cursor: workers claim the next owned
+        // position and tag results with it, so completion order (which
+        // IS scheduling-dependent) never leaks into the output order.
         let next = AtomicUsize::new(0);
         let per_worker: Vec<Vec<(usize, Result<ExperimentResult>)>> =
             std::thread::scope(|scope| {
@@ -152,60 +193,128 @@ impl Sweep {
                     let params = &params;
                     let runtime = &runtime;
                     let cells = &cells;
+                    let owned = &owned;
                     let next = &next;
                     let sink_factory = &sink_factory;
                     let cell_hook = &cell_hook;
                     handles.push(scope.spawn(move || {
                         let mut out = Vec::new();
                         loop {
-                            let i = next.fetch_add(1, Ordering::Relaxed);
-                            if i >= cells.len() {
+                            let pos = next.fetch_add(1, Ordering::Relaxed);
+                            if pos >= owned.len() {
                                 break;
                             }
-                            let exp = Experiment::new(cells[i].clone(), params.clone())
-                                .with_runtime(runtime.clone());
-                            // a per-cell sink (streamed captures) is
-                            // built on the worker, next to its run
-                            let r = match sink_factory.as_ref().map(|f| f(i, &cells[i])) {
-                                None => exp.run(),
-                                Some(Ok(sink)) => exp.with_sink(sink).run(),
-                                Some(Err(e)) => Err(e),
-                            };
-                            // per-cell exports happen here, on the
-                            // worker, while the result is still warm
-                            let r = r.and_then(|res| {
-                                if let Some(hook) = cell_hook.as_ref() {
-                                    hook(i, &cells[i], &res)?;
-                                }
-                                Ok(res)
-                            });
-                            out.push((i, r));
+                            let i = owned[pos];
+                            let r =
+                                run_cell(i, &cells[i], params, runtime, sink_factory, cell_hook);
+                            out.push((pos, r));
                         }
                         out
                     }));
                 }
                 handles
                     .into_iter()
-                    .map(|h| h.join().expect("sweep worker panicked"))
+                    // cell bodies are panic-isolated in run_cell, so a
+                    // worker can only die to an engine bug — fatal
+                    .map(|h| h.join().expect("sweep worker panicked outside a cell body"))
                     .collect()
             });
 
-        let mut slots: Vec<Option<ExperimentResult>> = (0..cells.len()).map(|_| None).collect();
-        for (i, r) in per_worker.into_iter().flatten() {
-            slots[i] = Some(r?);
+        let mut slots: Vec<Option<Result<ExperimentResult>>> =
+            (0..owned.len()).map(|_| None).collect();
+        for (pos, r) in per_worker.into_iter().flatten() {
+            slots[pos] = Some(r);
         }
-        let results: Vec<ExperimentResult> = slots
-            .into_iter()
-            .map(|s| s.expect("sweep: unclaimed cell"))
-            .collect();
+        let mut results = Vec::with_capacity(owned.len());
+        let mut failed: Vec<String> = Vec::new();
+        for (pos, slot) in slots.into_iter().enumerate() {
+            let i = owned[pos];
+            match slot.expect("sweep: unclaimed cell") {
+                Ok(r) => results.push(r),
+                Err(e) => failed.push(format!(
+                    "cell {i} '{}' seed {}: {e}",
+                    cells[i].name, cells[i].seed
+                )),
+            }
+        }
+        if !failed.is_empty() {
+            let shown = 8.min(failed.len());
+            let mut msg = format!("sweep: {} of {} cells failed", failed.len(), owned.len());
+            for line in failed.iter().take(shown) {
+                msg.push_str("\n  ");
+                msg.push_str(line);
+            }
+            if failed.len() > shown {
+                msg.push_str(&format!("\n  ... and {} more", failed.len() - shown));
+            }
+            return Err(Error::Other(msg));
+        }
 
-        let groups = aggregate_groups(&results);
+        let cell_records: Vec<CellRecord> = owned
+            .iter()
+            .zip(&results)
+            .map(|(&i, r)| CellRecord::from_result(i, r))
+            .collect();
+        let groups = aggregate_cells(&cell_records);
         Ok(SweepResult {
             results,
+            cells: cell_records,
             groups,
             jobs,
             wall_secs: started.elapsed().as_secs_f64(),
+            shard,
+            grid_len,
         })
+    }
+}
+
+/// One cell, panic-isolated: sink construction, the experiment run,
+/// and the completion hook all execute under `catch_unwind`, so a
+/// panicking cell becomes that cell's `Err` (later attributed with its
+/// global index, name, and seed) instead of poisoning the worker pool.
+fn run_cell(
+    i: usize,
+    cfg: &ExperimentConfig,
+    params: &Arc<SimParams>,
+    runtime: &Option<Arc<Runtime>>,
+    sink_factory: &Option<CellSinkFactory>,
+    cell_hook: &Option<CellHook>,
+) -> Result<ExperimentResult> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let exp = Experiment::new(cfg.clone(), params.clone()).with_runtime(runtime.clone());
+        // a per-cell sink (streamed captures) is built on the worker,
+        // next to its run
+        let r = match sink_factory.as_ref().map(|f| f(i, cfg)) {
+            None => exp.run(),
+            Some(Ok(sink)) => exp.with_sink(sink).run(),
+            Some(Err(e)) => Err(e),
+        };
+        // per-cell exports happen here, on the worker, while the
+        // result is still warm
+        r.and_then(|res| {
+            if let Some(hook) = cell_hook.as_ref() {
+                hook(i, cfg, &res)?;
+            }
+            Ok(res)
+        })
+    }))
+    .unwrap_or_else(|payload| {
+        Err(Error::Other(format!(
+            "panicked: {}",
+            panic_message(payload.as_ref())
+        )))
+    })
+}
+
+/// Best-effort text of a panic payload (`&str` / `String` payloads,
+/// which is what `panic!` produces; anything else gets a placeholder).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "<non-string panic payload>"
     }
 }
 
@@ -219,41 +328,30 @@ pub fn effective_jobs(jobs: usize, cells: usize) -> usize {
     j.clamp(1, cells.max(1))
 }
 
-/// Cross-replication statistics for one metric of one group.
-#[derive(Clone, Debug)]
-pub struct MetricStats {
-    pub name: &'static str,
-    pub n: usize,
-    pub mean: f64,
-    pub std_dev: f64,
-    /// Half-width of the 95% confidence interval of the mean
-    /// (Student-t for small n, normal beyond).
-    pub ci95: f64,
-    pub min: f64,
-    pub max: f64,
-}
-
-/// All replications sharing one config name.
-#[derive(Clone, Debug)]
-pub struct GroupStats {
-    pub name: String,
-    /// Indices into `SweepResult::results`, input order.
-    pub cells: Vec<usize>,
-    pub metrics: Vec<MetricStats>,
-}
-
-/// Outcome of a sweep: per-cell results in input order + aggregates.
+/// Outcome of a sweep: per-cell results in grid order + aggregates.
+/// Under [`Sweep::shard`] only the owned stride is present; its
+/// [`SweepResult::manifest`] is the artifact `sweep-merge` combines.
 pub struct SweepResult {
+    /// Full per-cell results (tsdb, traces, meter...), owned-cell grid
+    /// order.
     pub results: Vec<ExperimentResult>,
+    /// The compact per-cell records (same order) that flow into CSV,
+    /// aggregation, and the shard manifest; `cells[k].index` is the
+    /// global grid index.
+    pub cells: Vec<CellRecord>,
     /// Groups in order of first appearance.
     pub groups: Vec<GroupStats>,
     pub jobs: usize,
     pub wall_secs: f64,
+    /// Which stride this run covered (`None` = the whole grid).
+    pub shard: Option<ShardSpec>,
+    /// Length of the full grid (== `results.len()` when unsharded).
+    pub grid_len: usize,
 }
 
 impl SweepResult {
-    /// Deterministic per-cell digests, input order — the parallelism
-    /// invariant: identical across any `jobs` value.
+    /// Deterministic per-cell digests, owned-cell grid order — the
+    /// parallelism invariant: identical across any `jobs` value.
     pub fn digests(&self) -> Vec<String> {
         self.results.iter().map(|r| r.digest()).collect()
     }
@@ -271,11 +369,19 @@ impl SweepResult {
         self.events_total() as f64 / self.wall_secs
     }
 
+    /// The shard artifact for this run: per-cell records + group metric
+    /// sketches + the wall-time histogram, ready for `sweep-merge`. An
+    /// unsharded run produces the (only) shard of a 1-shard layout.
+    pub fn manifest(&self) -> ShardManifest {
+        let shard = self.shard.unwrap_or(ShardSpec { index: 0, count: 1 });
+        ShardManifest::from_cells(shard, self.grid_len, self.cells.clone())
+    }
+
     /// Human-readable aggregate table (mean ± 95% CI per group).
     pub fn table(&self) -> String {
         use std::fmt::Write;
         let mut s = String::new();
-        let _ = writeln!(
+        let _ = write!(
             s,
             "sweep: {} cells, {} groups, {} jobs, {:.2}s wall, {:.0} events/s aggregate",
             self.results.len(),
@@ -284,147 +390,20 @@ impl SweepResult {
             self.wall_secs,
             self.events_per_sec()
         );
-        for g in &self.groups {
-            let _ = writeln!(s, "group '{}' (n={})", g.name, g.cells.len());
-            for m in &g.metrics {
-                let _ = writeln!(
-                    s,
-                    "  {:<24} {:>14.4} ± {:<10.4} [{:.4}, {:.4}]",
-                    m.name, m.mean, m.ci95, m.min, m.max
-                );
-            }
+        if let Some(sp) = self.shard {
+            let _ = write!(s, " [shard {sp}: {} of {} cells]", self.results.len(), self.grid_len);
         }
+        s.push('\n');
+        render_group_lines(&mut s, &self.groups);
         s
     }
 
-    /// Per-cell CSV: one row per cell, input order.
+    /// Per-cell CSV: one row per owned cell, grid order; the `cell`
+    /// column is the global grid index and the final column is the
+    /// cell's digest. Names quote per RFC 4180 (strategy and hw-class
+    /// labels can contain commas).
     pub fn to_csv(&self) -> String {
-        use std::fmt::Write;
-        let mut s = String::from(
-            "cell,name,seed,arrived,completed,tasks_executed,events_processed,\
-             util_training,util_compute,mean_wait_training_s,avg_queue_training,\
-             final_mean_performance,failures,lost_work_s,goodput,cost,wall_secs,\
-             wall_time_ms,peak_rss_points\n",
-        );
-        for (i, r) in self.results.iter().enumerate() {
-            let _ = writeln!(
-                s,
-                "{i},{},{},{},{},{},{},{:.6},{:.6},{:.3},{:.3},{:.4},{},{:.3},{:.6},{:.4},{:.4},{:.3},{}",
-                r.name,
-                r.seed,
-                r.arrived,
-                r.completed,
-                r.tasks_executed,
-                r.events_processed,
-                r.util_training,
-                r.util_compute,
-                r.wait_training.mean(),
-                r.avg_queue_training,
-                r.final_mean_performance,
-                r.failures,
-                r.lost_work,
-                r.goodput,
-                r.cost,
-                r.wall_secs,
-                r.wall_secs * 1000.0,
-                r.tsdb.resident_points()
-            );
-        }
-        s
-    }
-}
-
-/// The metrics aggregated across replications.
-fn metric_values(r: &ExperimentResult) -> [(&'static str, f64); 16] {
-    [
-        ("arrived", r.arrived as f64),
-        ("completed", r.completed as f64),
-        ("in_flight", r.in_flight as f64),
-        ("tasks_executed", r.tasks_executed as f64),
-        ("events_processed", r.events_processed as f64),
-        ("gate_failures", r.gate_failures as f64),
-        ("retrains_triggered", r.retrains_triggered as f64),
-        ("util_training", r.util_training),
-        ("util_compute", r.util_compute),
-        ("mean_wait_training_s", r.wait_training.mean()),
-        ("avg_queue_training", r.avg_queue_training),
-        ("final_mean_performance", r.final_mean_performance),
-        ("failures", r.failures as f64),
-        ("lost_work_s", r.lost_work),
-        ("goodput", r.goodput),
-        ("cost", r.cost),
-    ]
-}
-
-fn aggregate_groups(results: &[ExperimentResult]) -> Vec<GroupStats> {
-    let mut order: Vec<String> = Vec::new();
-    let mut cells_by_name: std::collections::HashMap<&str, Vec<usize>> =
-        std::collections::HashMap::new();
-    for (i, r) in results.iter().enumerate() {
-        let slot = cells_by_name.entry(r.name.as_str()).or_default();
-        if slot.is_empty() {
-            order.push(r.name.clone());
-        }
-        slot.push(i);
-    }
-    order
-        .into_iter()
-        .map(|name| {
-            let cells = cells_by_name[name.as_str()].clone();
-            let n_metrics = metric_values(&results[cells[0]]).len();
-            let mut summaries = vec![Summary::new(); n_metrics];
-            let mut names = vec![""; n_metrics];
-            for &i in &cells {
-                for (m, (mname, v)) in metric_values(&results[i]).into_iter().enumerate() {
-                    names[m] = mname;
-                    summaries[m].add(v);
-                }
-            }
-            let metrics = summaries
-                .into_iter()
-                .enumerate()
-                .map(|(m, s)| {
-                    let n = s.count as usize;
-                    let sd = s.std_dev();
-                    MetricStats {
-                        name: names[m],
-                        n,
-                        mean: s.mean(),
-                        std_dev: sd,
-                        ci95: if n > 1 {
-                            t_critical_95(n - 1) * sd / (n as f64).sqrt()
-                        } else {
-                            0.0
-                        },
-                        min: s.min,
-                        max: s.max,
-                    }
-                })
-                .collect();
-            GroupStats {
-                name,
-                cells,
-                metrics,
-            }
-        })
-        .collect()
-}
-
-/// Two-sided 95% Student-t critical value for `df` degrees of freedom
-/// (exact table through 30, normal approximation beyond).
-fn t_critical_95(df: usize) -> f64 {
-    const TABLE: [f64; 30] = [
-        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201, 2.179,
-        2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064,
-        2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
-    ];
-    if df == 0 {
-        return f64::INFINITY;
-    }
-    if df <= TABLE.len() {
-        TABLE[df - 1]
-    } else {
-        1.96
+        cells_to_csv(&self.cells)
     }
 }
 
@@ -477,6 +456,10 @@ mod tests {
         let seeds: Vec<u64> = out.results.iter().map(|r| r.seed).collect();
         assert_eq!(seeds, vec![9, 1, 7, 3, 5]);
         assert_eq!(out.results[2].name, "cell-7");
+        let indices: Vec<usize> = out.cells.iter().map(|c| c.index).collect();
+        assert_eq!(indices, vec![0, 1, 2, 3, 4]);
+        assert_eq!(out.grid_len, 5);
+        assert!(out.shard.is_none());
     }
 
     #[test]
@@ -493,6 +476,49 @@ mod tests {
         assert_eq!(serial.digests(), parallel.digests());
         assert_eq!(serial.jobs, 1);
         assert!(parallel.jobs >= 1);
+    }
+
+    #[test]
+    fn sharded_run_keeps_global_indices_and_filenames() {
+        let params = Arc::new(quick_params());
+        let spec = ShardSpec::new(1, 3).unwrap();
+        let seen = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let seen2 = seen.clone();
+        let mut sweep = Sweep::new(params.clone())
+            .jobs(2)
+            .shard(Some(spec))
+            .with_cell_hook(Box::new(move |i, cfg, r| {
+                seen2.lock().unwrap().push((i, cfg.seed, r.seed));
+                Ok(())
+            }));
+        sweep.add_replications(&small_cfg("sh", 0), 10, 7);
+        let out = sweep.run().unwrap();
+        // shard 1/3 of 7 cells owns global indices 1, 4
+        let indices: Vec<usize> = out.cells.iter().map(|c| c.index).collect();
+        assert_eq!(indices, vec![1, 4]);
+        assert_eq!(out.grid_len, 7);
+        assert_eq!(out.results.len(), 2);
+        assert_eq!(out.results[0].seed, 11);
+        assert_eq!(out.results[1].seed, 14);
+        // hooks observed the *global* indices (shard-invariant names)
+        let mut hooked = seen.lock().unwrap().clone();
+        hooked.sort_unstable();
+        assert_eq!(hooked, vec![(1, 11, 11), (4, 14, 14)]);
+        // the shard's digests are the matching slice of the full run's
+        let mut full = Sweep::new(params).jobs(2);
+        full.add_replications(&small_cfg("sh", 0), 10, 7);
+        let full = full.run().unwrap();
+        let full_digests = full.digests();
+        assert_eq!(out.digests(), vec![full_digests[1].clone(), full_digests[4].clone()]);
+        assert!(out.table().contains("[shard 1/3: 2 of 7 cells]"));
+        // a stride with no cells is a valid (empty) shard
+        let spec = ShardSpec::new(4, 5).unwrap();
+        let mut sweep = Sweep::new(Arc::new(quick_params())).shard(Some(spec));
+        sweep.add_replications(&small_cfg("sh", 0), 10, 3);
+        let out = sweep.run().unwrap();
+        assert!(out.results.is_empty());
+        assert_eq!(out.grid_len, 3);
+        assert!(out.manifest().cells.is_empty());
     }
 
     #[test]
@@ -515,6 +541,12 @@ mod tests {
         assert!(arrived.min <= arrived.mean && arrived.mean <= arrived.max);
         assert!(arrived.ci95 >= 0.0);
         assert!(arrived.mean > 50.0, "6h at 90s gaps: {}", arrived.mean);
+        // sketch-backed quantiles ride along and respect the range
+        assert!(arrived.p50 >= arrived.min && arrived.p50 <= arrived.max);
+        assert!(arrived.p95 >= arrived.p50);
+        // the exact group wait summary merges every member cell's
+        let wait_total: u64 = out.results[..4].iter().map(|r| r.wait_training.count).sum();
+        assert_eq!(out.groups[0].wait.count, wait_total);
         // reliability metrics aggregate too; failure-free cells report
         // perfect goodput and zero losses
         let goodput = out.groups[0]
@@ -534,12 +566,98 @@ mod tests {
         assert!(out.to_csv().lines().count() == 7);
         assert!(out.to_csv().starts_with("cell,name,seed,"));
         assert!(out.to_csv().contains("goodput"));
-        // runtime-cost columns ride at the end of every row
+        // runtime-cost and digest columns ride at the end of every row
         let csv = out.to_csv();
         let header = csv.lines().next().unwrap();
-        assert!(header.ends_with("wall_time_ms,peak_rss_points"));
+        assert!(header.ends_with("wall_time_ms,peak_rss_points,digest"));
         let first = csv.lines().nth(1).unwrap();
         assert_eq!(first.split(',').count(), header.split(',').count());
+        // ...and the digest column is the real digest
+        assert!(first.ends_with(&out.results[0].digest()), "{first}");
+    }
+
+    #[test]
+    fn csv_quotes_comma_bearing_group_names() {
+        let params = Arc::new(quick_params());
+        let mut sweep = Sweep::new(params).jobs(1);
+        sweep.add(small_cfg("cap=4,fac=1.5,\"hot\"", 3));
+        let out = sweep.run().unwrap();
+        let csv = out.to_csv();
+        let header = csv.lines().next().unwrap();
+        let row = csv.lines().nth(1).unwrap();
+        // RFC 4180: the name field arrives quoted with doubled quotes,
+        // so a compliant parser sees exactly as many fields as columns
+        assert!(row.contains("\"cap=4,fac=1.5,\"\"hot\"\"\""), "{row}");
+        let parse = |line: &str| {
+            let mut fields = 1usize;
+            let mut in_quotes = false;
+            for ch in line.chars() {
+                match ch {
+                    '"' => in_quotes = !in_quotes,
+                    ',' if !in_quotes => fields += 1,
+                    _ => {}
+                }
+            }
+            assert!(!in_quotes, "unbalanced quotes: {line}");
+            fields
+        };
+        assert_eq!(parse(row), parse(header), "{row}");
+    }
+
+    #[test]
+    fn failing_cells_are_attributed_not_fatal() {
+        let params = Arc::new(quick_params());
+        // error path: the hook rejects one specific cell
+        let mut sweep = Sweep::new(params.clone()).jobs(2);
+        sweep.add_replications(&small_cfg("att", 0), 7, 5);
+        let err = sweep
+            .with_cell_hook(Box::new(|i, _cfg, _r| {
+                if i == 3 {
+                    Err(Error::Config("disk full".into()))
+                } else {
+                    Ok(())
+                }
+            }))
+            .run()
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("1 of 5 cells failed"), "{msg}");
+        assert!(msg.contains("cell 3 'att' seed 10"), "{msg}");
+        assert!(msg.contains("disk full"), "{msg}");
+
+        // panic path, property-tested across worker counts: a
+        // deliberately panicking cell hook becomes that cell's error,
+        // with the index attached, and never poisons the process
+        for jobs in 1..=3 {
+            let mut sweep = Sweep::new(params.clone()).jobs(jobs);
+            sweep.add_replications(&small_cfg("boom", 0), 1, 4);
+            let err = sweep
+                .with_cell_hook(Box::new(|i, _cfg, _r| {
+                    if i == 2 {
+                        panic!("cell hook exploded");
+                    }
+                    Ok(())
+                }))
+                .run()
+                .unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains("1 of 4 cells failed"), "jobs={jobs}: {msg}");
+            assert!(msg.contains("cell 2 'boom' seed 3"), "jobs={jobs}: {msg}");
+            assert!(msg.contains("panicked: cell hook exploded"), "jobs={jobs}: {msg}");
+        }
+
+        // every failed cell is listed (with truncation past 8)
+        let mut sweep = Sweep::new(params).jobs(3);
+        sweep.add_replications(&small_cfg("all-bad", 0), 0, 11);
+        let err = sweep
+            .with_cell_hook(Box::new(|_i, _cfg, _r| {
+                Err(Error::Config("nope".into()))
+            }))
+            .run()
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("11 of 11 cells failed"), "{msg}");
+        assert!(msg.contains("... and 3 more"), "{msg}");
     }
 
     #[test]
@@ -592,15 +710,18 @@ mod tests {
             .results
             .iter()
             .all(|r| r.trace.as_ref().is_some_and(|t| t.is_empty())));
-        // a factory error fails the sweep, not the process
+        // a factory error fails the sweep with the cell attributed
         let mut sweep = Sweep::new(params.clone()).jobs(1);
         sweep.add(small_cfg("bad", 1));
-        let out = sweep
+        let err = sweep
             .with_cell_sinks(Box::new(|_i, _cfg| {
                 Err(crate::error::Error::Config("no sink for you".into()))
             }))
-            .run();
-        assert!(out.is_err());
+            .run()
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("cell 0 'bad' seed 1"), "{msg}");
+        assert!(msg.contains("no sink for you"), "{msg}");
     }
 
     #[test]
@@ -634,6 +755,24 @@ mod tests {
     }
 
     #[test]
+    fn manifest_of_unsharded_run_is_the_single_shard() {
+        let params = Arc::new(quick_params());
+        let mut sweep = Sweep::new(params).jobs(2);
+        sweep.add_replications(&small_cfg("m", 0), 5, 3);
+        let out = sweep.run().unwrap();
+        let m = out.manifest();
+        assert_eq!(m.shard, ShardSpec { index: 0, count: 1 });
+        assert_eq!(m.grid_len, 3);
+        assert_eq!(m.cells.len(), 3);
+        assert_eq!(m.wall_hist.count(), 3);
+        let digests: Vec<String> = m.cells.iter().map(|c| c.digest.clone()).collect();
+        assert_eq!(digests, out.digests());
+        // and it survives the wire
+        let back = ShardManifest::from_bytes(&m.to_bytes()).unwrap();
+        assert_eq!(back.cells.len(), 3);
+    }
+
+    #[test]
     fn effective_jobs_clamps() {
         assert_eq!(effective_jobs(8, 3), 3);
         assert_eq!(effective_jobs(2, 100), 2);
@@ -643,6 +782,7 @@ mod tests {
 
     #[test]
     fn t_table_sane() {
+        use super::super::shard::t_critical_95;
         assert!(t_critical_95(1) > 12.0);
         assert!((t_critical_95(29) - 2.045).abs() < 1e-9);
         assert_eq!(t_critical_95(1000), 1.96);

@@ -28,6 +28,7 @@
 //!                  [--placers fastest_fit,cheapest_fit,pack,spread]
 //!                  [--traces] [--trace-dir DIR] [--retention SECS]
 //!                  [--metrics-dir DIR] [--cpu] [--export CSV]
+//!                  [--shard k/N] [--manifest FILE]
 //!                  — parallel replication/grid engine over capacities ×
 //!                  load factors × operational strategies × reliability ×
 //!                  hardware classes (per-cell tsdb recording off unless
@@ -46,7 +47,21 @@
 //!                  of every failing cluster; --hw-classes variants are
 //!                  comma-separated training-cluster class mixes, classes
 //!                  '+'-joined with fields name:slots[:speed[:cost_per_sec]],
-//!                  and --placers varies the placement strategy over them)
+//!                  and --placers varies the placement strategy over them;
+//!                  --shard k/N runs only every N-th cell of the exact
+//!                  same grid — global cell indices, names, and output
+//!                  filenames are shard-invariant — and writes a binary
+//!                  shard manifest, default sweep-shard-K-of-N.psm, that
+//!                  sweep-merge later combines; --manifest overrides the
+//!                  manifest path and also writes one for a full run)
+//!   sweep-merge    --shards A.psm,B.psm,... [--dir DIR] [--export CSV]
+//!                  [--metrics FILE] — combine the N shard manifests of
+//!                  one sweep back into the single-process surface:
+//!                  per-cell digests byte-identical and group mean/CI
+//!                  tables bit-identical to an unsharded run, quantiles
+//!                  sketch-merged, plus a Pareto-front report over
+//!                  (capacity, wait, utilization, cost); rejects
+//!                  overlapping, missing, or mismatched shards
 //!   trace export   --params PARAMS.json [--config CFG.json] [--days D]
 //!                  [--arrival MODE] [--seed S] [--scheduler SPEC]
 //!                  [--out T.pst] [--jsonl T.jsonl] [--cpu] — run with
@@ -56,8 +71,11 @@
 //!                  files never materialize in memory (+ Q-Q vs the
 //!                  fits when params given)
 //!   trace replay   --in T.pst --params PARAMS.json [--cpu] — re-drive
-//!                  the simulation from the recorded arrival gaps;
-//!                  byte-identical digest given the capture's params
+//!                  the simulation from the recorded arrival gaps,
+//!                  streamed record-by-record off the file (year-scale
+//!                  captures replay without materializing the event
+//!                  list); byte-identical digest given the capture's
+//!                  params
 //!   figures        --fig 8|9a|9b|10|11|12|table1|all [--out-dir DIR]
 //!   table1
 //!   qq             --db DB.json --params PARAMS.json [--days D] [--cpu]
@@ -71,24 +89,25 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use pipesim::analytics::{figures, render_dashboard, trace_qq_file, TraceSummary};
+use pipesim::analytics::{
+    figures, pareto_front, render_dashboard, render_pareto, trace_qq_file, TraceSummary,
+};
 use pipesim::coordinator::{
-    fit_params_with_report, ArrivalSpec, Experiment, ExperimentConfig, SimParams, StrategySpec,
-    Sweep,
+    fit_params_with_report, merge_shards, ArrivalSpec, Experiment, ExperimentConfig,
+    RetentionConfig, ShardManifest, ShardSpec, SimParams, StrategySpec, Sweep,
 };
 use pipesim::des::DAY;
 use pipesim::empirical::{AnalyticsDb, GroundTruth};
 use pipesim::error::Error;
-use pipesim::coordinator::RetentionConfig;
 use pipesim::model::{ClusterFailureConfig, FailureModel, HwClass, HwClasses};
-use pipesim::obs::{render_metrics_json, render_openmetrics};
+use pipesim::obs::{render_metrics_json, render_openmetrics, render_sweep_openmetrics};
 use pipesim::runtime::Runtime;
-use pipesim::trace::{StreamingPstSink, Trace, TraceScanner, TraceWorkload};
+use pipesim::trace::{StreamingPstSink, TraceScanner, TraceWorkload};
 use pipesim::util::Args;
 use pipesim::Result;
 
-const USAGE: &str =
-    "usage: pipesim <gen-empirical|fit|simulate|sweep|trace|figures|table1|qq|scale> [--options]
+const USAGE: &str = "usage: pipesim \
+     <gen-empirical|fit|simulate|sweep|sweep-merge|trace|figures|table1|qq|scale> [--options]
        pipesim trace <export|stats|replay> [--options]
 run `pipesim <subcommand> --help` semantics: see README.md";
 
@@ -283,6 +302,20 @@ fn main() -> Result<()> {
                 base.meter = true;
             }
             let export = args.get_opt("export");
+            // --shard k/N: enumerate the identical grid but run only
+            // the cells whose global index i satisfies i % N == k; the
+            // manifest written at the end is sweep-merge's input
+            let shard = match args.get_opt("shard") {
+                Some(s) => Some(ShardSpec::parse(&s)?),
+                None => None,
+            };
+            let manifest_path = match (args.get_opt("manifest"), shard) {
+                (Some(p), _) => Some(PathBuf::from(p)),
+                (None, Some(s)) => {
+                    Some(format!("sweep-shard-{}-of-{}.psm", s.index, s.count).into())
+                }
+                (None, None) => None,
+            };
             args.reject_unknown()?;
 
             // the grid: base × training capacities × interarrival factors,
@@ -409,7 +442,7 @@ fn main() -> Result<()> {
                 base.runtime_view.enabled = true;
             }
             let rt = load_runtime(cpu);
-            let mut sweep = Sweep::new(params).with_runtime(rt).jobs(jobs);
+            let mut sweep = Sweep::new(params).with_runtime(rt).jobs(jobs).shard(shard);
             // the grid is the cartesian product of the axes, built by a
             // fold: each axis multiplies the current cell list by its
             // variants, each variant a labeled config edit (None = keep
@@ -535,7 +568,12 @@ fn main() -> Result<()> {
                 sweep.add_replications(&cfg, seed0, seeds);
             }
             let cell_count = sweep.len();
-            eprintln!("sweep: {cell_count} cells ({groups} groups x {seeds} seeds)");
+            match shard {
+                Some(sp) => eprintln!(
+                    "sweep: {cell_count} cells ({groups} groups x {seeds} seeds), shard {sp}"
+                ),
+                None => eprintln!("sweep: {cell_count} cells ({groups} groups x {seeds} seeds)"),
+            }
             if let Some(dir) = &trace_dir {
                 // one streaming sink per cell: each cell's events go
                 // straight to its .pst file from the worker thread, so
@@ -566,11 +604,61 @@ fn main() -> Result<()> {
                 std::fs::write(&path, out.to_csv())?;
                 println!("cells -> {path}");
             }
+            if let Some(path) = &manifest_path {
+                out.manifest().save(path)?;
+                println!("shard manifest ({} cells) -> {}", out.cells.len(), path.display());
+            }
             if let Some(dir) = &trace_dir {
                 println!("{cell_count} event traces (streamed) -> {}", dir.display());
             }
             if let Some(dir) = &metrics_dir {
                 println!("{cell_count} metrics files -> {}", dir.display());
+            }
+        }
+
+        // combine the shard manifests of one sweep (run with --shard
+        // k/N across hosts) back into the single-process result surface
+        "sweep-merge" => {
+            let shards = args.get_opt("shards");
+            let dir = args.get_opt("dir").map(PathBuf::from);
+            let export = args.get_opt("export");
+            let metrics = args.get_opt("metrics");
+            args.reject_unknown()?;
+            let mut paths: Vec<PathBuf> = Vec::new();
+            if let Some(list) = &shards {
+                paths.extend(list.split(',').map(|p| PathBuf::from(p.trim())));
+            }
+            if let Some(dir) = &dir {
+                // scan the directory for *.psm, name-sorted so the
+                // invocation is reproducible (merge order is irrelevant
+                // to the output anyway — manifests sort by shard index)
+                let mut found: Vec<PathBuf> = std::fs::read_dir(dir)?
+                    .filter_map(|e| e.ok().map(|e| e.path()))
+                    .filter(|p| p.extension().is_some_and(|x| x == "psm"))
+                    .collect();
+                found.sort();
+                paths.extend(found);
+            }
+            if paths.is_empty() {
+                return Err(Error::Config(
+                    "sweep-merge: no shard manifests (--shards a.psm,b.psm and/or --dir DIR)"
+                        .into(),
+                ));
+            }
+            let manifests = paths
+                .iter()
+                .map(ShardManifest::load)
+                .collect::<Result<Vec<_>>>()?;
+            let merged = merge_shards(manifests)?;
+            print!("{}", merged.table());
+            print!("{}", render_pareto(&pareto_front(&merged.groups)));
+            if let Some(path) = export {
+                std::fs::write(&path, merged.to_csv())?;
+                println!("cells -> {path}");
+            }
+            if let Some(path) = metrics {
+                std::fs::write(&path, render_sweep_openmetrics(&merged))?;
+                println!("metrics -> {path}");
             }
         }
 
@@ -654,15 +742,16 @@ fn main() -> Result<()> {
                 }
             }
 
-            // re-drive the simulation from the recorded arrival gaps
+            // re-drive the simulation from the recorded arrival gaps,
+            // scanned record-by-record — the event Vec of a year-scale
+            // capture never materializes, only the gap sequence does
             "replay" => {
                 let input = PathBuf::from(args.get("in", "trace.pst"));
                 let params =
                     SimParams::load(&PathBuf::from(args.get("params", "sim_params.json")))?;
                 let cpu = args.flag("cpu");
                 args.reject_unknown()?;
-                let trace = Trace::load(&input)?;
-                let workload = TraceWorkload::from_trace(&trace)?;
+                let workload = TraceWorkload::from_file(&input)?;
                 let rt = load_runtime(cpu);
                 let result = workload.run(params, rt)?;
                 println!("{}", render_dashboard(&result, 72));

@@ -16,7 +16,7 @@
 //! `_total` suffix and sampled with it; label values are escaped; the
 //! exposition ends with `# EOF`.
 
-use crate::coordinator::ExperimentResult;
+use crate::coordinator::{ExperimentResult, MergedSweep};
 use crate::stats::desc::{quantile_sorted, sorted};
 use crate::tsdb::{SeriesHandle, TsStore};
 use crate::util::Json;
@@ -385,6 +385,68 @@ pub fn render_openmetrics(r: &ExperimentResult) -> String {
     om.finish()
 }
 
+/// Render a [`MergedSweep`] (the `sweep-merge` surface — also what an
+/// unsharded sweep's manifest merges to) as OpenMetrics exposition
+/// text: sweep-level gauges, per-group replication counts, and one
+/// sample per `(group, metric, stat)` with `stat` ranging over
+/// `mean/std_dev/ci95/min/max/p50/p95`.
+pub fn render_sweep_openmetrics(m: &MergedSweep) -> String {
+    let mut om = Om::new();
+    om.gauge("sweep_cells", "cells in the merged sweep", m.cells.len() as f64);
+    om.gauge("sweep_shards", "shard manifests merged", m.shards as f64);
+    om.counter(
+        "sweep_events",
+        "simulation events processed across all cells",
+        m.events_total() as f64,
+    );
+    om.family("sweep_group_cells", "gauge", "replications per config group");
+    for g in &m.groups {
+        om.sample(
+            "sweep_group_cells",
+            &[("group", g.name.as_str())],
+            g.cells.len() as f64,
+        );
+    }
+    om.family(
+        "sweep_metric",
+        "gauge",
+        "per-group metric statistic (mean/std_dev/ci95/min/max/p50/p95)",
+    );
+    for g in &m.groups {
+        for ms in &g.metrics {
+            for (stat, v) in [
+                ("mean", ms.mean),
+                ("std_dev", ms.std_dev),
+                ("ci95", ms.ci95),
+                ("min", ms.min),
+                ("max", ms.max),
+                ("p50", ms.p50),
+                ("p95", ms.p95),
+            ] {
+                om.sample(
+                    "sweep_metric",
+                    &[("group", g.name.as_str()), ("metric", ms.name), ("stat", stat)],
+                    v,
+                );
+            }
+        }
+    }
+    om.family(
+        "sweep_cell_wall_ms",
+        "gauge",
+        "cell wall-time quantiles, milliseconds (histogram-derived)",
+    );
+    for q in ["0.5", "0.95", "0.99"] {
+        let quant: f64 = q.parse().expect("literal quantile");
+        om.sample(
+            "sweep_cell_wall_ms",
+            &[("quantile", q)],
+            m.wall_hist.quantile(quant),
+        );
+    }
+    om.finish()
+}
+
 /// Render an [`ExperimentResult`] as a JSON metrics document with the
 /// same coverage as [`render_openmetrics`] (`run`/`outcome`/`ledger`/
 /// `series`/`meter` sections; `meter` is `null` when the run carried
@@ -644,6 +706,55 @@ mod tests {
             text.contains(r#"name="we\"ird\\name\nline""#),
             "{text}"
         );
+    }
+
+    #[test]
+    fn sweep_renderer_emits_group_metric_samples() {
+        use crate::coordinator::{merge_shards, CellRecord, ShardManifest, ShardSpec};
+        let cell = |i: usize, name: &str| {
+            let mut wait = Summary::new();
+            wait.add(1.0 + i as f64);
+            CellRecord {
+                index: i,
+                name: name.into(),
+                seed: i as u64,
+                arrived: 10 + i as u64,
+                completed: 9,
+                in_flight: 1,
+                tasks_executed: 30,
+                events_processed: 500,
+                gate_failures: 0,
+                retrains_triggered: 0,
+                failures: 0,
+                wait_training: wait,
+                util_training: 0.5,
+                util_compute: 0.25,
+                avg_queue_training: 0.1,
+                final_mean_performance: 0.9,
+                lost_work: 0.0,
+                goodput: 1.0,
+                cost: 2.5,
+                wall_secs: 0.02,
+                peak_rss_points: 100,
+                digest: format!("v2;cell={i}"),
+            }
+        };
+        let cells = vec![cell(0, "cap=4"), cell(1, "cap=4"), cell(2, "cap=8")];
+        let spec = ShardSpec { index: 0, count: 1 };
+        let merged = merge_shards(vec![ShardManifest::from_cells(spec, 3, cells)]).unwrap();
+        let text = render_sweep_openmetrics(&merged);
+        assert!(text.ends_with("# EOF\n"), "{text}");
+        assert!(text.contains("pipesim_sweep_cells 3"));
+        assert!(text.contains("pipesim_sweep_shards 1"));
+        assert!(text.contains("pipesim_sweep_events_total 1500"));
+        assert!(text.contains("pipesim_sweep_group_cells{group=\"cap=4\"} 2"));
+        assert!(text.contains(
+            "pipesim_sweep_metric{group=\"cap=4\",metric=\"arrived\",stat=\"mean\"} 10.5"
+        ));
+        assert!(text.contains(
+            "pipesim_sweep_metric{group=\"cap=8\",metric=\"cost\",stat=\"p95\"} 2.5"
+        ));
+        assert!(text.contains("pipesim_sweep_cell_wall_ms{quantile=\"0.95\"}"));
     }
 
     #[test]

@@ -13,7 +13,7 @@
 
 pub mod export;
 
-pub use export::{render_metrics_json, render_openmetrics};
+pub use export::{render_metrics_json, render_openmetrics, render_sweep_openmetrics};
 
 /// Event kinds of the simulation loop, in `Event` discriminant order.
 /// The simulation maps its event enum to these indices — `obs` stays

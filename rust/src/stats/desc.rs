@@ -195,6 +195,23 @@ impl Summary {
         self.max = self.max.max(x);
     }
 
+    /// Absorb another summary: counts and sums accumulate, extrema
+    /// combine. `count`/`min`/`max` merge exactly in any order; the
+    /// floating-point sums accumulate in call order, so replaying the
+    /// same merge sequence is bit-identical (the sweep-shard merge
+    /// contract: shards are re-merged in global cell order), while
+    /// *different* merge orders agree only up to f64 rounding.
+    pub fn merge_from(&mut self, other: &Summary) {
+        if other.count == 0 {
+            return;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.sum_sq += other.sum_sq;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -300,5 +317,35 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 3.0);
         assert!((s.std_dev() - (2.0f64 / 3.0).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_merge_matches_sequential_adds() {
+        // merging per-point summaries in add order is bit-identical to
+        // the sequential add() path — the shard-merge determinism anchor
+        let xs = [3.25, -1.5, 7.0, 0.125, 42.0, -0.0];
+        let mut seq = Summary::new();
+        let mut merged = Summary::new();
+        for &x in &xs {
+            seq.add(x);
+            let mut one = Summary::new();
+            one.add(x);
+            merged.merge_from(&one);
+        }
+        assert_eq!(seq.count, merged.count);
+        assert_eq!(seq.sum.to_bits(), merged.sum.to_bits());
+        assert_eq!(seq.sum_sq.to_bits(), merged.sum_sq.to_bits());
+        assert_eq!(seq.min.to_bits(), merged.min.to_bits());
+        assert_eq!(seq.max.to_bits(), merged.max.to_bits());
+        // merging an empty summary is a no-op either way
+        let before = merged.sum.to_bits();
+        merged.merge_from(&Summary::new());
+        assert_eq!(merged.sum.to_bits(), before);
+        assert_eq!(merged.count, 6);
+        let mut empty = Summary::new();
+        empty.merge_from(&seq);
+        assert_eq!(empty.count, seq.count);
+        assert_eq!(empty.min, seq.min);
+        assert_eq!(empty.max, seq.max);
     }
 }

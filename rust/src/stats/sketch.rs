@@ -20,6 +20,9 @@
 //! [`FixedHistogram`] answers quantiles with value error bounded by one
 //! bin width (plus clamping at the configured range edges).
 
+use crate::error::{Error, Result};
+use crate::util::binio::{ByteReader, ByteWriter};
+
 /// One weighted centroid of a [`TDigest`].
 #[derive(Clone, Copy, Debug)]
 pub struct Centroid {
@@ -229,6 +232,74 @@ impl TDigest {
         };
         prev_mean + frac * (self.max - prev_mean)
     }
+
+    /// Serialize into `w` with the repo's binio vocabulary (f64s as raw
+    /// bit patterns, so state round-trips bit-exactly). No container
+    /// header — the sketch is a field of larger formats (the shard
+    /// manifest), which own magic/version.
+    pub fn write_to(&self, w: &mut ByteWriter) {
+        w.f64(self.compression);
+        w.varint(self.count);
+        w.f64(self.min);
+        w.f64(self.max);
+        w.varint(self.centroids.len() as u64);
+        for c in &self.centroids {
+            w.f64(c.mean);
+            w.f64(c.weight);
+        }
+    }
+
+    /// Inverse of [`TDigest::write_to`], hardened against corrupt input
+    /// the way every PipeSim decoder is: invariants (sorted centroids,
+    /// positive finite weights, count consistency) are validated, never
+    /// assumed.
+    pub fn read_from(r: &mut ByteReader) -> Result<TDigest> {
+        let bad = |m: &str| Error::Other(format!("t-digest: {m}"));
+        let compression = r.f64()?;
+        if !compression.is_finite() || compression < 10.0 {
+            return Err(bad("compression out of range"));
+        }
+        let count = r.varint()?;
+        let min = r.f64()?;
+        let max = r.f64()?;
+        let n = r.len_prefix_for(16)?;
+        let mut centroids = Vec::with_capacity(n);
+        let mut prev = f64::NEG_INFINITY;
+        let mut weight_sum = 0.0f64;
+        for _ in 0..n {
+            let mean = r.f64()?;
+            let weight = r.f64()?;
+            if !mean.is_finite() || !weight.is_finite() || weight <= 0.0 {
+                return Err(bad("non-finite centroid"));
+            }
+            if mean < prev {
+                return Err(bad("centroids not sorted"));
+            }
+            prev = mean;
+            weight_sum += weight;
+            centroids.push(Centroid { mean, weight });
+        }
+        if (count == 0) != centroids.is_empty() {
+            return Err(bad("count/centroid mismatch"));
+        }
+        if count > 0 {
+            if !(min.is_finite() && max.is_finite() && min <= max) {
+                return Err(bad("min/max out of order"));
+            }
+            // weights are integer-valued accumulations; a drifted sum
+            // means the payload was not produced by this writer
+            if (weight_sum - count as f64).abs() > 1e-6 * (count as f64).max(1.0) {
+                return Err(bad("weight sum disagrees with count"));
+            }
+        }
+        Ok(TDigest {
+            compression,
+            centroids,
+            count,
+            min,
+            max,
+        })
+    }
 }
 
 /// Fixed-range, fixed-bin histogram with underflow/overflow buckets.
@@ -335,6 +406,63 @@ impl FixedHistogram {
             cum = next;
         }
         self.hi
+    }
+
+    /// Serialize into `w` (binio vocabulary, headerless — see
+    /// [`TDigest::write_to`]). Bin counts are varints: shard wall-time
+    /// histograms are sparse, so this is much smaller than fixed-width.
+    pub fn write_to(&self, w: &mut ByteWriter) {
+        w.f64(self.lo);
+        w.f64(self.hi);
+        w.varint(self.counts.len() as u64);
+        for &c in &self.counts {
+            w.varint(c);
+        }
+        w.varint(self.underflow);
+        w.varint(self.overflow);
+        w.varint(self.count);
+    }
+
+    /// Inverse of [`FixedHistogram::write_to`]; validates range and
+    /// count-conservation invariants on the way in.
+    pub fn read_from(r: &mut ByteReader) -> Result<FixedHistogram> {
+        let bad = |m: &str| Error::Other(format!("histogram: {m}"));
+        let lo = r.f64()?;
+        let hi = r.f64()?;
+        if !(lo.is_finite() && hi.is_finite() && hi > lo) {
+            return Err(bad("invalid range"));
+        }
+        let bins = r.len_prefix_for(1)?;
+        if bins == 0 {
+            return Err(bad("zero bins"));
+        }
+        let mut counts = Vec::with_capacity(bins);
+        let mut in_range: u64 = 0;
+        for _ in 0..bins {
+            let c = r.varint()?;
+            in_range = in_range
+                .checked_add(c)
+                .ok_or_else(|| bad("count overflow"))?;
+            counts.push(c);
+        }
+        let underflow = r.varint()?;
+        let overflow = r.varint()?;
+        let count = r.varint()?;
+        let total = in_range
+            .checked_add(underflow)
+            .and_then(|t| t.checked_add(overflow))
+            .ok_or_else(|| bad("count overflow"))?;
+        if total != count {
+            return Err(bad("bin counts disagree with total"));
+        }
+        Ok(FixedHistogram {
+            lo,
+            hi,
+            counts,
+            underflow,
+            overflow,
+            count,
+        })
     }
 }
 
@@ -510,5 +638,116 @@ mod tests {
         let bad = FixedHistogram::new(0.0, 20.0, 10);
         assert!(!h.merge_from(&bad));
         assert_eq!(h.count(), 4);
+    }
+
+    #[test]
+    fn digest_serialization_roundtrips_bit_exact() {
+        let mut rng = Pcg64::new(21);
+        let mut td = TDigest::new(100.0);
+        for _ in 0..5_000 {
+            td.add(rng.normal() * 3.0 - 1.0);
+        }
+        let mut w = ByteWriter::new();
+        td.write_to(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        let back = TDigest::read_from(&mut r).unwrap();
+        assert!(r.is_empty());
+        assert_eq!(back.count(), td.count());
+        assert_eq!(back.min().to_bits(), td.min().to_bits());
+        assert_eq!(back.max().to_bits(), td.max().to_bits());
+        assert_eq!(back.centroid_count(), td.centroid_count());
+        for q in [0.0, 0.1, 0.5, 0.9, 1.0] {
+            assert_eq!(back.quantile(q).to_bits(), td.quantile(q).to_bits());
+        }
+        // empty sketch round-trips too (min/max are infinities)
+        let empty = TDigest::new(50.0);
+        let mut w = ByteWriter::new();
+        empty.write_to(&mut w);
+        let bytes = w.into_bytes();
+        let back = TDigest::read_from(&mut ByteReader::new(&bytes)).unwrap();
+        assert!(back.is_empty());
+        assert_eq!(back.compression(), 50.0);
+    }
+
+    #[test]
+    fn digest_deserialization_rejects_corrupt_payloads() {
+        let mut td = TDigest::new(100.0);
+        for x in [3.0, 1.0, 2.0] {
+            td.add(x);
+        }
+        let mut w = ByteWriter::new();
+        td.write_to(&mut w);
+        let good = w.into_bytes();
+        assert!(TDigest::read_from(&mut ByteReader::new(&good)).is_ok());
+        // truncation fails cleanly
+        assert!(TDigest::read_from(&mut ByteReader::new(&good[..good.len() - 3])).is_err());
+        // bad compression
+        let mut w = ByteWriter::new();
+        w.f64(1.0);
+        assert!(TDigest::read_from(&mut ByteReader::new(&w.into_bytes())).is_err());
+        // unsorted centroids
+        let mut w = ByteWriter::new();
+        w.f64(100.0);
+        w.varint(2);
+        w.f64(1.0);
+        w.f64(9.0);
+        w.varint(2);
+        w.f64(9.0);
+        w.f64(1.0);
+        w.f64(1.0);
+        w.f64(1.0);
+        let err = TDigest::read_from(&mut ByteReader::new(&w.into_bytes())).unwrap_err();
+        assert!(err.to_string().contains("not sorted"), "{err}");
+        // weight sum disagreeing with count
+        let mut w = ByteWriter::new();
+        w.f64(100.0);
+        w.varint(5);
+        w.f64(1.0);
+        w.f64(2.0);
+        w.varint(1);
+        w.f64(1.5);
+        w.f64(2.0);
+        let err = TDigest::read_from(&mut ByteReader::new(&w.into_bytes())).unwrap_err();
+        assert!(err.to_string().contains("weight sum"), "{err}");
+    }
+
+    #[test]
+    fn histogram_serialization_roundtrips_and_rejects_corruption() {
+        let mut h = FixedHistogram::new(0.0, 100.0, 40);
+        let mut rng = Pcg64::new(8);
+        for _ in 0..2_000 {
+            h.add(rng.uniform() * 120.0 - 10.0);
+        }
+        let mut w = ByteWriter::new();
+        h.write_to(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        let back = FixedHistogram::read_from(&mut r).unwrap();
+        assert!(r.is_empty());
+        assert_eq!(back.count(), h.count());
+        assert_eq!(back.bin_counts(), h.bin_counts());
+        assert_eq!(back.underflow(), h.underflow());
+        assert_eq!(back.overflow(), h.overflow());
+        for q in [0.05, 0.5, 0.95] {
+            assert_eq!(back.quantile(q).to_bits(), h.quantile(q).to_bits());
+        }
+        // inconsistent total is rejected
+        let mut w = ByteWriter::new();
+        w.f64(0.0);
+        w.f64(10.0);
+        w.varint(2);
+        w.varint(3);
+        w.varint(4);
+        w.varint(0);
+        w.varint(0);
+        w.varint(99);
+        let err = FixedHistogram::read_from(&mut ByteReader::new(&w.into_bytes())).unwrap_err();
+        assert!(err.to_string().contains("disagree"), "{err}");
+        // inverted range is rejected
+        let mut w = ByteWriter::new();
+        w.f64(10.0);
+        w.f64(0.0);
+        assert!(FixedHistogram::read_from(&mut ByteReader::new(&w.into_bytes())).is_err());
     }
 }

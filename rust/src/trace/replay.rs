@@ -11,6 +11,7 @@
 //! `ExperimentResult::digest()` byte-for-byte — the round-trip guarantee
 //! the trace subsystem is built on (guarded by `rust/tests/trace.rs`).
 
+use std::path::Path;
 use std::sync::Arc;
 
 use crate::arrivals::{ArrivalModel, ReplayTrace};
@@ -18,7 +19,7 @@ use crate::coordinator::{Experiment, ExperimentConfig, ExperimentResult, SimPara
 use crate::error::{Error, Result};
 use crate::runtime::Runtime;
 
-use super::Trace;
+use super::{Trace, TraceEventKind, TraceMeta, TraceScanner};
 
 /// A trace-driven workload: the captured config plus the literal
 /// interarrival gap sequence.
@@ -35,16 +36,38 @@ impl TraceWorkload {
     /// carries no config or no arrival gaps (it was not captured by the
     /// simulator, or the file predates gap recording).
     pub fn from_trace(trace: &Trace) -> Result<Self> {
-        if trace.meta.config_json.is_empty() {
+        Self::from_parts(&trace.meta, trace.arrival_gaps())
+    }
+
+    /// Build a workload straight off a `.pst` file via [`TraceScanner`],
+    /// keeping only the metadata and the interarrival gaps — O(gaps) in
+    /// memory instead of O(events). A year-scale capture replays without
+    /// ever materializing its event `Vec`; the resulting workload is
+    /// identical to `from_trace(&Trace::load(path)?)` (both layouts).
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let scanner = TraceScanner::open(path)?;
+        let meta = scanner.meta().clone();
+        let mut gaps = Vec::new();
+        for ev in scanner {
+            if let TraceEventKind::ArrivalGapDrawn { gap } = ev?.kind {
+                gaps.push(gap);
+            }
+        }
+        Self::from_parts(&meta, gaps)
+    }
+
+    /// Shared tail of both constructors: rebuild the config from the
+    /// embedded JSON and validate the gap sequence.
+    fn from_parts(meta: &TraceMeta, gaps: Vec<f64>) -> Result<Self> {
+        if meta.config_json.is_empty() {
             return Err(Error::Config("replay: trace carries no config".into()));
         }
-        let mut config = ExperimentConfig::from_json_text(&trace.meta.config_json)?;
+        let mut config = ExperimentConfig::from_json_text(&meta.config_json)?;
         // the binary meta stores the seed losslessly (varint); the JSON
         // round-trips through f64 and would silently clip seeds above
         // 2^53 — which would shift every RNG substream and break the
         // digest guarantee
-        config.seed = trace.meta.seed;
-        let gaps = trace.arrival_gaps();
+        config.seed = meta.seed;
         if gaps.is_empty() {
             return Err(Error::Config(
                 "replay: trace has no arrival gaps to drive the simulation".into(),
@@ -136,6 +159,30 @@ mod tests {
         assert_eq!(w.replay_config().interarrival_factor, 1.0);
         assert!(!w.replay_config().capture_trace);
         assert!(matches!(w.arrival_model(), ArrivalModel::Replay(_)));
+    }
+
+    #[test]
+    fn from_file_streams_the_same_workload_as_from_trace() {
+        let cfg = ExperimentConfig {
+            seed: 42,
+            ..Default::default()
+        };
+        let mut trace = trace_with(&cfg.to_json_text(), &[2.0, 4.0, 8.0]);
+        trace.meta.seed = cfg.seed;
+        let path = std::env::temp_dir().join(format!(
+            "pipesim_replay_from_file_{}.pst",
+            std::process::id()
+        ));
+        trace.save(&path).unwrap();
+        let streamed = TraceWorkload::from_file(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let buffered = TraceWorkload::from_trace(&trace).unwrap();
+        assert_eq!(streamed.gaps, buffered.gaps);
+        assert_eq!(streamed.config.seed, buffered.config.seed);
+        assert_eq!(
+            streamed.config.to_json_text(),
+            buffered.config.to_json_text()
+        );
     }
 
     #[test]

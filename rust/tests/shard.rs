@@ -1,0 +1,304 @@
+//! Sharded-sweep integration tests: the shard/merge oracle — merging
+//! the N shard manifests of a sweep must reproduce the single-process
+//! run byte-identically in per-cell digests and bit-identically in
+//! group statistics — property-tested across shard counts, the 3-shard
+//! disk round-trip, the named rejection errors, and the CLI surface
+//! (`sweep --shard k/N` + `sweep-merge`).
+
+use std::process::Command;
+use std::sync::Arc;
+
+use pipesim::coordinator::{
+    fit_params, merge_shards, ArrivalSpec, ExperimentConfig, MergedSweep, ShardManifest,
+    ShardSpec, SimParams, Sweep, SweepResult,
+};
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("pipesim_shard_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn quick_params(seed: u64) -> SimParams {
+    let db = pipesim::empirical::GroundTruth::new(seed).generate_weeks(2);
+    fit_params(&db, None).unwrap()
+}
+
+/// The test grid: three capacity groups (one name carries commas and
+/// quotes — the RFC-4180 regression rides through the whole pipeline),
+/// three seeds each, nine cells total.
+fn add_grid(sweep: &mut Sweep) {
+    for (name, cap) in [("cap=2", 2), ("cap=4,\"hot\"", 4), ("cap=8", 8)] {
+        let mut cfg = ExperimentConfig {
+            name: name.into(),
+            horizon: 3.0 * 3600.0,
+            arrival: ArrivalSpec::Poisson {
+                mean_interarrival: 120.0,
+            },
+            record_traces: false,
+            sample_interval: 600.0,
+            ..Default::default()
+        };
+        cfg.infra.training_capacity = cap;
+        sweep.add_replications(&cfg, 40, 3);
+    }
+}
+
+fn run_full(params: &Arc<SimParams>) -> SweepResult {
+    let mut sweep = Sweep::new(params.clone()).jobs(2);
+    add_grid(&mut sweep);
+    sweep.run().unwrap()
+}
+
+/// Run the same grid as `n` independent sharded sweeps and merge the
+/// manifests through the wire format, exactly as the CLI would.
+fn run_sharded(params: &Arc<SimParams>, n: usize) -> MergedSweep {
+    let mut manifests = Vec::new();
+    for k in 0..n {
+        let spec = ShardSpec::new(k, n).unwrap();
+        let mut sweep = Sweep::new(params.clone()).jobs(2).shard(Some(spec));
+        add_grid(&mut sweep);
+        let out = sweep.run().unwrap();
+        manifests.push(ShardManifest::from_bytes(&out.manifest().to_bytes()).unwrap());
+    }
+    merge_shards(manifests).unwrap()
+}
+
+/// CSV rows minus the two wall-clock columns (`wall_secs`,
+/// `wall_time_ms` — the only nondeterministic fields).
+fn rows_sans_wall(csv: &str) -> Vec<Vec<String>> {
+    csv.lines()
+        .map(|l| {
+            let fields: Vec<&str> = l.split(',').collect();
+            let n = fields.len();
+            fields
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != n - 3 && *i != n - 4)
+                .map(|(_, f)| f.to_string())
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn merged_shards_reproduce_the_single_process_sweep() {
+    let params = Arc::new(quick_params(71));
+    let full = run_full(&params);
+    let full_digests = full.digests();
+    // the oracle holds for any shard count, including trivial (1) and
+    // more shards than some strides can fill
+    for n in [1usize, 2, 3, 5] {
+        let merged = run_sharded(&params, n);
+        assert_eq!(merged.shards, n);
+        assert_eq!(merged.grid_len, 9);
+        // per-cell digests byte-identical, in global grid order
+        assert_eq!(merged.digests(), full_digests, "n={n}");
+        // per-cell CSV identical except the wall columns
+        assert_eq!(
+            rows_sans_wall(&merged.to_csv()),
+            rows_sans_wall(&full.to_csv()),
+            "n={n}"
+        );
+        // group statistics bit-identical: the merge reassembles cells
+        // in global order and reruns the same aggregation
+        assert_eq!(merged.groups.len(), full.groups.len());
+        for (m, f) in merged.groups.iter().zip(&full.groups) {
+            assert_eq!(m.name, f.name);
+            assert_eq!(m.cells, f.cells, "group '{}' n={n}", m.name);
+            assert_eq!(m.wait.count, f.wait.count);
+            assert_eq!(m.wait.sum.to_bits(), f.wait.sum.to_bits(), "n={n}");
+            for (ms, fs) in m.metrics.iter().zip(&f.metrics) {
+                assert_eq!(ms.name, fs.name);
+                assert_eq!(ms.mean.to_bits(), fs.mean.to_bits(), "{} n={n}", ms.name);
+                assert_eq!(ms.std_dev.to_bits(), fs.std_dev.to_bits(), "{}", ms.name);
+                assert_eq!(ms.ci95.to_bits(), fs.ci95.to_bits(), "{}", ms.name);
+                assert_eq!(ms.min.to_bits(), fs.min.to_bits(), "{}", ms.name);
+                assert_eq!(ms.max.to_bits(), fs.max.to_bits(), "{}", ms.name);
+                // sketch-merged quantiles are rank-bounded by design;
+                // a 1-shard merge is exactly the single-process sketch
+                assert!(ms.p50 >= ms.min && ms.p50 <= ms.max, "{}", ms.name);
+                assert!(ms.p95 >= ms.p50 && ms.p95 <= ms.max, "{}", ms.name);
+                if n == 1 {
+                    assert_eq!(ms.p50.to_bits(), fs.p50.to_bits(), "{}", ms.name);
+                    assert_eq!(ms.p95.to_bits(), fs.p95.to_bits(), "{}", ms.name);
+                }
+            }
+        }
+        // the comma-bearing group survives quoted in the merged CSV
+        assert!(merged.to_csv().contains("\"cap=4,\"\"hot\"\"\""));
+    }
+}
+
+#[test]
+fn three_shard_disk_roundtrip_is_digest_identical() {
+    let dir = tmpdir("disk");
+    let params = Arc::new(quick_params(72));
+    let full = run_full(&params);
+    // each shard saves its manifest like an independent host would
+    let mut paths = Vec::new();
+    for k in 0..3 {
+        let spec = ShardSpec::new(k, 3).unwrap();
+        let mut sweep = Sweep::new(params.clone()).jobs(2).shard(Some(spec));
+        add_grid(&mut sweep);
+        let out = sweep.run().unwrap();
+        let path = dir.join(format!("shard-{k}-of-3.psm"));
+        out.manifest().save(&path).unwrap();
+        paths.push(path);
+    }
+    // load in scrambled order: merge sorts by shard index
+    let manifests: Vec<ShardManifest> = [2usize, 0, 1]
+        .iter()
+        .map(|&k| ShardManifest::load(&paths[k]).unwrap())
+        .collect();
+    let merged = merge_shards(manifests).unwrap();
+    assert_eq!(merged.digests(), full.digests());
+    assert_eq!(
+        rows_sans_wall(&merged.to_csv()),
+        rows_sans_wall(&full.to_csv())
+    );
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn merge_rejects_broken_shard_sets_by_name() {
+    let params = Arc::new(quick_params(73));
+    let shard_run = |k: usize, n: usize| {
+        let spec = ShardSpec::new(k, n).unwrap();
+        let mut sweep = Sweep::new(params.clone()).jobs(2).shard(Some(spec));
+        add_grid(&mut sweep);
+        sweep.run().unwrap().manifest()
+    };
+    let (s0, s1, s2) = (shard_run(0, 3), shard_run(1, 3), shard_run(2, 3));
+    // missing shard
+    let err = merge_shards(vec![s0.clone(), s2.clone()]).unwrap_err();
+    assert!(err.to_string().contains("missing shard 1/3"), "{err}");
+    // overlapping (duplicate) shard
+    let err = merge_shards(vec![s0.clone(), s1.clone(), s1.clone()]).unwrap_err();
+    assert!(err.to_string().contains("supplied twice"), "{err}");
+    // layout mismatch: a 2-shard manifest in a 3-shard set
+    let foreign = shard_run(0, 2);
+    let err = merge_shards(vec![foreign, s1.clone(), s2.clone()]).unwrap_err();
+    assert!(err.to_string().contains("shard layout mismatch"), "{err}");
+    // the intact set still merges
+    assert!(merge_shards(vec![s0, s1, s2]).is_ok());
+}
+
+// ------------------------------------------------------------------
+// CLI surface
+// ------------------------------------------------------------------
+
+fn pipesim_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_pipesim"))
+}
+
+fn ok(out: &std::process::Output) -> String {
+    assert!(
+        out.status.success(),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn cli_sharded_sweep_merges_to_the_single_process_output() {
+    let dir = tmpdir("cli");
+    let db = dir.join("db.json");
+    let params = dir.join("params.json");
+    ok(&pipesim_bin()
+        .args(["gen-empirical", "--weeks", "2", "--seed", "9", "--out"])
+        .arg(&db)
+        .output()
+        .unwrap());
+    ok(&pipesim_bin()
+        .arg("fit")
+        .arg("--db")
+        .arg(&db)
+        .arg("--out")
+        .arg(&params)
+        .arg("--cpu")
+        .output()
+        .unwrap());
+    let sweep_args = [
+        "--days",
+        "0.25",
+        "--arrival",
+        "poisson:300",
+        "--seeds",
+        "2",
+        "--seed0",
+        "7",
+        "--capacities",
+        "2,4",
+        "--jobs",
+        "2",
+        "--cpu",
+    ];
+    // the single-process reference
+    let full_csv = dir.join("full.csv");
+    ok(&pipesim_bin()
+        .arg("sweep")
+        .arg("--params")
+        .arg(&params)
+        .args(sweep_args)
+        .arg("--export")
+        .arg(&full_csv)
+        .output()
+        .unwrap());
+    // three shard runs, as three hosts would execute them
+    let mut shard_paths = Vec::new();
+    for k in 0..3 {
+        let psm = dir.join(format!("s{k}.psm"));
+        ok(&pipesim_bin()
+            .arg("sweep")
+            .arg("--params")
+            .arg(&params)
+            .args(sweep_args)
+            .args(["--shard", &format!("{k}/3")])
+            .arg("--manifest")
+            .arg(&psm)
+            .output()
+            .unwrap());
+        assert!(psm.exists(), "shard {k} manifest missing");
+        shard_paths.push(psm);
+    }
+    // merge and compare to the reference export
+    let merged_csv = dir.join("merged.csv");
+    let merged_om = dir.join("merged.om");
+    let shards_arg = shard_paths
+        .iter()
+        .map(|p| p.display().to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    let out = ok(&pipesim_bin()
+        .args(["sweep-merge", "--shards", &shards_arg])
+        .arg("--export")
+        .arg(&merged_csv)
+        .arg("--metrics")
+        .arg(&merged_om)
+        .output()
+        .unwrap());
+    assert!(out.contains("sweep-merge: 4 cells from 3 shards"), "{out}");
+    assert!(out.contains("pareto front"), "{out}");
+    let full = std::fs::read_to_string(&full_csv).unwrap();
+    let merged = std::fs::read_to_string(&merged_csv).unwrap();
+    assert_eq!(rows_sans_wall(&merged), rows_sans_wall(&full));
+    let om = std::fs::read_to_string(&merged_om).unwrap();
+    assert!(om.contains("pipesim_sweep_cells 4"), "{om}");
+    assert!(om.ends_with("# EOF\n"));
+    // an incomplete shard set is rejected with the shard named
+    let bad = pipesim_bin()
+        .args(["sweep-merge", "--shards"])
+        .arg(format!(
+            "{},{}",
+            shard_paths[0].display(),
+            shard_paths[2].display()
+        ))
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
+    let stderr = String::from_utf8_lossy(&bad.stderr);
+    assert!(stderr.contains("missing shard 1/3"), "{stderr}");
+    std::fs::remove_dir_all(dir).ok();
+}

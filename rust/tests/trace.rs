@@ -281,6 +281,45 @@ fn streamed_capture_decodes_identical_to_memory_capture() {
 }
 
 #[test]
+fn streamed_replay_digest_equals_buffered_replay() {
+    // `TraceWorkload::from_file` drives the replay record-by-record
+    // through `TraceScanner` without ever materializing the event
+    // vector; it must reproduce the buffered `Trace::load` → `from_trace`
+    // digest exactly — for both the buffered and the streamed (footer)
+    // file layouts
+    let dir = tmpdir("stream_replay");
+    let params = Arc::new(quick_params(59));
+    let cfg = runtime_view_cfg();
+    let mut captured = Experiment::new(cfg.clone(), params.clone()).run().unwrap();
+    let trace = captured.trace.take().expect("capture on");
+
+    // buffered layout: a whole-trace save
+    let buffered_path = dir.join("buffered.pst");
+    trace.save(&buffered_path).unwrap();
+    // streamed layout: events written live, meta in the footer
+    let streamed_path = dir.join("streamed.pst");
+    let sink = StreamingPstSink::create(&streamed_path, &cfg.trace_meta()).unwrap();
+    Experiment::new(cfg, params.clone())
+        .with_sink(Box::new(sink))
+        .run()
+        .unwrap();
+
+    let oracle = TraceWorkload::from_trace(&Trace::load(&buffered_path).unwrap())
+        .unwrap()
+        .run(params.clone(), None)
+        .unwrap();
+    assert_eq!(oracle.digest(), captured.digest());
+    for path in [&buffered_path, &streamed_path] {
+        let streamed = TraceWorkload::from_file(path)
+            .unwrap()
+            .run(params.clone(), None)
+            .unwrap();
+        assert_eq!(streamed.digest(), oracle.digest(), "{}", path.display());
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn preemptive_capture_replays_byte_identically_and_roundtrips_codec() {
     let params = Arc::new(quick_params(57));
     let mut cfg = preemptive_cfg();
