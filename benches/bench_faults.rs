@@ -1,0 +1,186 @@
+//! Task-fault perf + reliability ablation (DESIGN.md robustness
+//! direction): what the task-fault subsystem costs when it is off, how
+//! throughput and outcomes respond to fault pressure, and how the retry
+//! policy trades wait against abandonment at fixed pressure.
+//!
+//! Three claims tracked across PRs via `BENCH_faults.json`:
+//!   1. fault-off overhead is zero in work terms — an inert fault model
+//!      (mean time-to-fault far past any attempt) is digest-identical
+//!      to no model at all, and its wall-clock stays within noise;
+//!   2. faults-on throughput (events/s) degrades gracefully with fault
+//!      pressure (mean time-to-fault sweep) while the four-way
+//!      conservation law holds exactly;
+//!   3. retry policies meaningfully trade deadline attainment, wasted
+//!      work, and abandonment at fixed fault pressure.
+//!
+//! Run: `cargo bench --bench bench_faults`
+
+use std::sync::Arc;
+
+use pipesim::coordinator::{
+    fit_params, ArrivalSpec, Experiment, ExperimentConfig, ExperimentResult, StrategySpec,
+};
+use pipesim::des::DAY;
+use pipesim::empirical::GroundTruth;
+use pipesim::model::{FaultModel, TaskFaultConfig};
+use pipesim::runtime::Runtime;
+use pipesim::util::bench::Bench;
+use pipesim::util::Json;
+
+/// The shared 7-day saturated workload; `faults` is the only knob.
+fn cfg(name: &str, faults: Option<FaultModel>) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig {
+        name: name.into(),
+        seed: 2,
+        horizon: 7.0 * DAY,
+        arrival: ArrivalSpec::Profile,
+        record_traces: false,
+        ..Default::default()
+    };
+    cfg.infra.training_capacity = 4;
+    cfg.infra.faults = faults;
+    cfg
+}
+
+fn faulting(mean_time_to_fault: f64, retry: StrategySpec) -> Option<FaultModel> {
+    let mut fm = FaultModel::uniform(TaskFaultConfig::transient(mean_time_to_fault));
+    fm.retry = retry;
+    Some(fm)
+}
+
+fn row(label: &str, r: &ExperimentResult, events_per_sec: f64) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(label.into())),
+        ("events_per_sec", Json::Num(events_per_sec)),
+        ("task_faults", Json::Num(r.task_faults as f64)),
+        ("retries", Json::Num(r.retries as f64)),
+        ("abandoned", Json::Num(r.abandoned as f64)),
+        ("shed", Json::Num(r.shed as f64)),
+        ("wasted_work_s", Json::Num(r.wasted_work)),
+        ("deadline_attainment", Json::Num(r.deadline_attainment)),
+        ("mean_wait_training_s", Json::Num(r.wait_training.mean())),
+        ("completed", Json::Num(r.completed as f64)),
+    ])
+}
+
+fn main() {
+    let db = GroundTruth::new(17).generate_weeks(4);
+    let runtime = Runtime::load_default().map(Arc::new);
+    let backend = if runtime.is_some() { "pjrt" } else { "cpu" };
+    let params = Arc::new(fit_params(&db, runtime.clone()).expect("fit"));
+    let mut b = Bench::with_budget(std::time::Duration::from_millis(100), 3);
+
+    let mut run = |b: &mut Bench, label: &str, c: ExperimentConfig| {
+        let mut out = None;
+        let m = b
+            .bench_once(format!("7-day run [{label}]"), || {
+                out = Some(
+                    Experiment::new(c.clone(), params.clone())
+                        .with_runtime(runtime.clone())
+                        .run()
+                        .expect("run"),
+                );
+            })
+            .clone();
+        let r = out.unwrap();
+        let eps = r.events_processed as f64 / m.min.as_secs_f64();
+        (r, eps)
+    };
+
+    // -- claim 1: the fault-off path costs nothing --------------------
+    println!("# fault-off overhead (baseline vs inert model, 7 days)");
+    let (base, base_eps) = run(&mut b, "no fault model", cfg("base", None));
+    let (inert, inert_eps) = run(
+        &mut b,
+        "inert model (mttf >> any attempt)",
+        cfg("inert", faulting(1e30, StrategySpec::new("exp_backoff"))),
+    );
+    assert_eq!(
+        base.digest(),
+        inert.digest(),
+        "inert fault model changed outcomes"
+    );
+    assert_eq!(inert.task_faults, 0, "inert model must never fire");
+    assert_eq!(inert.retries, 0);
+    assert_eq!(inert.wasted_work, 0.0);
+    let overhead = base_eps / inert_eps - 1.0;
+    println!(
+        "events/s: {base_eps:.0} (off) vs {inert_eps:.0} (inert), overhead {:+.2}%",
+        100.0 * overhead
+    );
+    // digest equality already proves identical work; the wall-clock
+    // guard is deliberately loose (shared CI runners are noisy)
+    assert!(
+        overhead < 0.5,
+        "fault-off path overhead is not near-zero: {:+.1}%",
+        100.0 * overhead
+    );
+
+    // -- claim 2: throughput under fault pressure ---------------------
+    println!("# fault-rate ablation (exp_backoff retry)");
+    println!("mttf_s,events_per_sec,task_faults,retries,abandoned,wasted_work_s,completed");
+    let mut rate_rows = vec![
+        row("off", &base, base_eps),
+        row("inert", &inert, inert_eps),
+    ];
+    for mttf in [14_400.0, 3600.0, 1200.0] {
+        let (r, eps) = run(
+            &mut b,
+            &format!("mttf {mttf}s"),
+            cfg(
+                &format!("mttf{mttf}"),
+                faulting(mttf, StrategySpec::new("exp_backoff")),
+            ),
+        );
+        assert!(r.task_faults > 0, "7 days at mttf {mttf}s must fault");
+        assert_eq!(
+            r.arrived,
+            r.completed + r.abandoned + r.shed + r.in_flight,
+            "conservation"
+        );
+        println!(
+            "{mttf},{eps:.0},{},{},{},{:.0},{}",
+            r.task_faults, r.retries, r.abandoned, r.wasted_work, r.completed
+        );
+        rate_rows.push(row(&format!("mttf{mttf}"), &r, eps));
+    }
+
+    // -- claim 3: retry-policy trade-offs at fixed pressure -----------
+    println!("# retry-policy ablation (mttf 3600s)");
+    println!("policy,mean_wait_training_s,deadline_attainment,retries,abandoned,completed");
+    let mut policy_rows = Vec::new();
+    for policy in ["always", "fixed", "exp_backoff", "deadline_aware"] {
+        let (r, eps) = run(
+            &mut b,
+            &format!("retry {policy}"),
+            cfg(
+                &format!("re-{policy}"),
+                faulting(3600.0, StrategySpec::new(policy)),
+            ),
+        );
+        assert_eq!(
+            r.arrived,
+            r.completed + r.abandoned + r.shed + r.in_flight,
+            "conservation under {policy}"
+        );
+        println!(
+            "{policy},{:.1},{:.4},{},{},{}",
+            r.wait_training.mean(),
+            r.deadline_attainment,
+            r.retries,
+            r.abandoned,
+            r.completed
+        );
+        policy_rows.push(row(policy, &r, eps));
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("faults".into())),
+        ("backend", Json::Str(backend.into())),
+        ("overhead_off_path", Json::Num(overhead)),
+        ("fault_rate", Json::Arr(rate_rows)),
+        ("retry_policy", Json::Arr(policy_rows)),
+    ]);
+    std::fs::write("BENCH_faults.json", json.to_string()).expect("write BENCH_faults.json");
+    println!("# wrote BENCH_faults.json");
+}

@@ -13,6 +13,10 @@ use crate::trace::{Trace, TraceEvent, TraceEventKind, TraceMeta, TraceScanner};
 
 use super::qq::{qq_report, QqSeries};
 
+/// Retry-histogram buckets: retries of attempts 1..=7 plus an "8+"
+/// tail — fixed size, so the streamed scan stays O(1) in trace length.
+pub const RETRY_HIST_BUCKETS: usize = 8;
+
 /// Aggregate statistics of one trace.
 #[derive(Clone, Debug)]
 pub struct TraceSummary {
@@ -37,6 +41,21 @@ pub struct TraceSummary {
     /// Hardware-class placement records (one per allocated class; zero
     /// for traces captured without `hw_classes`).
     pub tasks_placed: u64,
+    /// Task attempts lost to transient faults (format v6; zero for
+    /// traces captured without a fault model).
+    pub tasks_failed: u64,
+    /// Task attempts that ran past the per-attempt timeout.
+    pub tasks_timed_out: u64,
+    /// Retry re-submissions issued by the retry policy.
+    pub tasks_retried: u64,
+    /// Arrivals turned away by admission control (`queue_cap`).
+    pub tasks_shed: u64,
+    /// Pipelines the retry policy gave up on.
+    pub abandoned: u64,
+    /// Retries by attempt number: bucket `i` counts retries of attempt
+    /// `i + 1`; the last bucket absorbs attempts
+    /// >= [`RETRY_HIST_BUCKETS`].
+    pub retry_histogram: [u64; RETRY_HIST_BUCKETS],
     /// Trigger firings.
     pub retrains_triggered: u64,
     /// Runtime-view (re)deployments into *monitored* slots. Deploys past
@@ -78,6 +97,12 @@ impl TraceSummary {
             tasks_queued: 0,
             tasks_preempted: 0,
             tasks_placed: 0,
+            tasks_failed: 0,
+            tasks_timed_out: 0,
+            tasks_retried: 0,
+            tasks_shed: 0,
+            abandoned: 0,
+            retry_histogram: [0; RETRY_HIST_BUCKETS],
             retrains_triggered: 0,
             deployments: 0,
             interarrival: Summary::new(),
@@ -133,6 +158,15 @@ impl TraceSummary {
             TraceEventKind::RetrainTriggered { .. } => self.retrains_triggered += 1,
             TraceEventKind::RetrainLaunched { .. } => {}
             TraceEventKind::ModelDeployed { .. } => self.deployments += 1,
+            TraceEventKind::TaskFailed { .. } => self.tasks_failed += 1,
+            TraceEventKind::TaskRetried { attempt, .. } => {
+                self.tasks_retried += 1;
+                let bucket = (attempt as usize).clamp(1, RETRY_HIST_BUCKETS) - 1;
+                self.retry_histogram[bucket] += 1;
+            }
+            TraceEventKind::TaskTimedOut { .. } => self.tasks_timed_out += 1,
+            TraceEventKind::TaskShed { .. } => self.tasks_shed += 1,
+            TraceEventKind::PipelineAbandoned { .. } => self.abandoned += 1,
             TraceEventKind::SlotFailed { .. }
             | TraceEventKind::SlotRepaired { .. }
             | TraceEventKind::TaskCheckpointed { .. }
@@ -204,6 +238,30 @@ impl TraceSummary {
         }
         if self.tasks_placed > 0 {
             let _ = writeln!(out, "  placements       {}", self.tasks_placed);
+        }
+        if self.abandoned > 0 || self.tasks_shed > 0 {
+            let _ = writeln!(
+                out,
+                "  outcomes         {} completed | {} abandoned | {} shed",
+                self.completions, self.abandoned, self.tasks_shed
+            );
+        }
+        if self.tasks_failed > 0 || self.tasks_timed_out > 0 {
+            let _ = writeln!(
+                out,
+                "  task faults      {} transient, {} timed out, {} retried",
+                self.tasks_failed, self.tasks_timed_out, self.tasks_retried
+            );
+        }
+        if self.tasks_retried > 0 {
+            let mut hist = String::new();
+            for (i, &n) in self.retry_histogram.iter().enumerate() {
+                if n > 0 {
+                    let tail = if i + 1 == RETRY_HIST_BUCKETS { "+" } else { "" };
+                    let _ = write!(hist, " attempt{}{}:{}", i + 1, tail, n);
+                }
+            }
+            let _ = writeln!(out, "  retry histogram {hist}");
         }
         let _ = writeln!(out, "  interarrival     {}", fmt(&self.interarrival));
         let _ = writeln!(out, "  makespan         {}", fmt(&self.makespan));
@@ -416,6 +474,98 @@ mod tests {
         let text = s.render();
         assert!(text.contains("pipelines"));
         assert!(text.contains("exec train"));
+    }
+
+    #[test]
+    fn fault_outcomes_and_retry_histogram_stream_identically() {
+        use crate::model::ResourceKind;
+        let e = |t, kind| TraceEvent { t, kind };
+        let mut events = vec![e(0.0, TraceEventKind::ArrivalGapDrawn { gap: 1.0 })];
+        for a in 1..=10u32 {
+            events.push(e(
+                a as f64,
+                TraceEventKind::TaskFailed {
+                    pid: a,
+                    task: TaskType::Train,
+                    resource: ResourceKind::Training,
+                    attempt: a,
+                    elapsed: 5.0,
+                },
+            ));
+            events.push(e(
+                a as f64,
+                TraceEventKind::TaskRetried {
+                    pid: a,
+                    task: TaskType::Train,
+                    resource: ResourceKind::Training,
+                    attempt: a,
+                    delay: 1.0,
+                },
+            ));
+        }
+        events.push(e(
+            20.0,
+            TraceEventKind::TaskTimedOut {
+                pid: 1,
+                task: TaskType::Evaluate,
+                resource: ResourceKind::Compute,
+                elapsed: 30.0,
+            },
+        ));
+        events.push(e(
+            21.0,
+            TraceEventKind::TaskShed {
+                pid: 2,
+                task: TaskType::Preprocess,
+                resource: ResourceKind::Compute,
+                queue_depth: 9,
+            },
+        ));
+        events.push(e(
+            22.0,
+            TraceEventKind::PipelineAbandoned {
+                pid: 1,
+                attempts: 4,
+                makespan: 22.0,
+            },
+        ));
+        let trace = Trace {
+            meta: TraceMeta {
+                name: "faults".into(),
+                seed: 1,
+                horizon: 100.0,
+                config_json: String::new(),
+                extra: Vec::new(),
+            },
+            events,
+        };
+        let s = TraceSummary::from_trace(&trace);
+        assert_eq!(s.tasks_failed, 10);
+        assert_eq!(s.tasks_retried, 10);
+        assert_eq!(s.tasks_timed_out, 1);
+        assert_eq!(s.tasks_shed, 1);
+        assert_eq!(s.abandoned, 1);
+        // attempts 1..=7 land in their own buckets; 8, 9, 10 in the tail
+        assert_eq!(&s.retry_histogram[..7], &[1, 1, 1, 1, 1, 1, 1]);
+        assert_eq!(s.retry_histogram[7], 3);
+        let text = s.render();
+        assert!(text.contains("1 abandoned | 1 shed"), "{text}");
+        assert!(
+            text.contains("10 transient, 1 timed out, 10 retried"),
+            "{text}"
+        );
+        assert!(text.contains("attempt8+:3"), "{text}");
+        // the streamed scanner folds the v6 records identically
+        let path = std::env::temp_dir().join(format!(
+            "pipesim_stats_faults_{}.pst",
+            std::process::id()
+        ));
+        trace.save(&path).unwrap();
+        let (_, streamed) = TraceSummary::from_file(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(streamed.tasks_failed, s.tasks_failed);
+        assert_eq!(streamed.retry_histogram, s.retry_histogram);
+        assert_eq!(streamed.abandoned, s.abandoned);
     }
 
     #[test]

@@ -6,7 +6,9 @@ use crate::model::{InfraConfig, ResourceKind};
 use crate::synth::SynthConfig;
 use crate::trace::TraceMeta;
 
-use super::strategy::{build_placer, build_scheduler, build_trigger, StrategySpec};
+use super::strategy::{
+    build_placer, build_retry_policy, build_scheduler, build_trigger, StrategySpec,
+};
 
 /// Which arrival process drives the experiment.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -203,6 +205,22 @@ impl ExperimentConfig {
                 }
             }
         }
+        // task-fault knobs must be sane before any fault event is
+        // scheduled (fault-time distribution parameters are validated at
+        // construction by the Dist constructors themselves)
+        if let Some(fm) = &self.infra.faults {
+            for (cluster, fc) in [("training", &fm.training), ("compute", &fm.compute)] {
+                if let Some(fc) = fc {
+                    if !fc.timeout.is_finite() || fc.timeout < 0.0 {
+                        return Err(crate::error::Error::Config(format!(
+                            "{cluster} fault timeout must be finite and >= 0 \
+                             (0 disables timeouts), got {}",
+                            fc.timeout
+                        )));
+                    }
+                }
+            }
+        }
         // hardware classes: per-cluster slot counts must sum to the
         // cluster capacity (a mismatch would desynchronize class
         // accounting from the resource), names must be unique, and the
@@ -275,6 +293,9 @@ impl ExperimentConfig {
         if let Some(hw) = &self.infra.hw_classes {
             build_placer(&hw.placer)?;
         }
+        if let Some(fm) = &self.infra.faults {
+            build_retry_policy(&fm.retry)?;
+        }
         Ok(())
     }
 
@@ -303,6 +324,11 @@ impl ExperimentConfig {
         // captures stay byte-identical
         if let Some(placer) = self.infra.placer_label() {
             extra.push(("placer".to_string(), placer));
+        }
+        // same rule for the retry policy: only fault-model configs
+        // carry the entry
+        if let Some(retry) = self.infra.retry_label() {
+            extra.push(("retry".to_string(), retry));
         }
         TraceMeta {
             name: self.name.clone(),
@@ -522,6 +548,59 @@ mod tests {
         assert!(!plain.contains("failures"));
         let back = ExperimentConfig::from_json_text(&plain).unwrap();
         assert_eq!(back.infra.failures, None);
+    }
+
+    #[test]
+    fn fault_model_roundtrips_and_validates_knobs() {
+        use crate::model::{FaultModel, TaskFaultConfig};
+        let mut cfg = ExperimentConfig::default();
+        cfg.infra.faults = Some(FaultModel {
+            training: Some(
+                TaskFaultConfig::transient(7_200.0)
+                    .with_timeout(3_600.0)
+                    .with_queue_cap(16),
+            ),
+            compute: None,
+            retry: StrategySpec::new("exp_backoff").with("max_attempts", 4.0),
+        });
+        cfg.validate().unwrap();
+        let back = ExperimentConfig::from_json_text(&cfg.to_json_text()).unwrap();
+        assert_eq!(back.infra.faults, cfg.infra.faults);
+        // bad knobs are rejected up front, with the cluster named
+        let mut bad = cfg.clone();
+        bad.infra.faults.as_mut().unwrap().training.as_mut().unwrap().timeout = -1.0;
+        let err = bad.validate().unwrap_err();
+        assert!(err.to_string().contains("training fault timeout"), "{err}");
+        let mut bad = cfg.clone();
+        bad.infra.faults.as_mut().unwrap().training.as_mut().unwrap().timeout = f64::NAN;
+        assert!(bad.validate().is_err());
+        // unknown retry policy / typoed param rejected through the registry
+        let mut bad = cfg.clone();
+        bad.infra.faults.as_mut().unwrap().retry = StrategySpec::new("no_such_retry");
+        let err = bad.validate().unwrap_err();
+        assert!(err.to_string().contains("unknown retry policy"), "{err}");
+        let mut bad = cfg.clone();
+        bad.infra.faults.as_mut().unwrap().retry = StrategySpec::new("fixed").with("typo", 1.0);
+        assert!(bad.validate().is_err());
+        // configs predating the fault model parse with faults off
+        let plain = ExperimentConfig::default().to_json_text();
+        assert!(!plain.contains("faults"));
+        let back = ExperimentConfig::from_json_text(&plain).unwrap();
+        assert_eq!(back.infra.faults, None);
+    }
+
+    #[test]
+    fn trace_meta_retry_entry_only_with_faults() {
+        use crate::model::{FaultModel, TaskFaultConfig};
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.trace_meta().get("retry"), None);
+        let mut cfg = ExperimentConfig::default();
+        cfg.infra.faults = Some(FaultModel {
+            training: Some(TaskFaultConfig::transient(3_600.0)),
+            compute: None,
+            retry: StrategySpec::new("deadline_aware"),
+        });
+        assert_eq!(cfg.trace_meta().get("retry"), Some("deadline_aware"));
     }
 
     #[test]

@@ -92,7 +92,7 @@ mod tests {
     use crate::coordinator::strategy::{scheduler_names, StrategySpec};
     use crate::des::DAY;
     use crate::empirical::GroundTruth;
-    use crate::model::{ClusterFailureConfig, FailureModel};
+    use crate::model::{ClusterFailureConfig, FailureModel, FaultModel, TaskFaultConfig};
 
     fn quick_params() -> SimParams {
         let db = GroundTruth::new(21).generate_weeks(3);
@@ -284,8 +284,112 @@ mod tests {
         assert!(on.goodput > off.goodput, "{} vs {}", on.goodput, off.goodput);
     }
 
+    fn faulty_cfg(name: &str, mean_time_to_fault: f64, retry: StrategySpec) -> ExperimentConfig {
+        let mut cfg = saturated_cfg(name, StrategySpec::new("priority"));
+        let mut faults = FaultModel::uniform(TaskFaultConfig::transient(mean_time_to_fault));
+        faults.retry = retry;
+        cfg.infra.faults = Some(faults);
+        cfg
+    }
+
     #[test]
-    fn restart_first_without_failures_is_byte_identical_to_priority() {
+    fn unreachable_fault_rate_is_byte_identical_to_fault_free() {
+        // digest-compat oracle for the task-fault subsystem: with a
+        // fault model attached but a mean time-to-fault far past any
+        // task duration, every armed fault lands after its task's
+        // completion, no fault event ever fires, and the run IS the
+        // fault-free simulation, bit for bit — the fault RNG substream
+        // draws but never perturbs the outcome
+        let plain = run_with(saturated_cfg("fault", StrategySpec::new("priority")));
+        let gated = run_with(faulty_cfg("fault", 1e30, StrategySpec::new("always")));
+        assert!(plain.wait_training.mean() > 0.0, "must saturate");
+        assert_eq!(gated.task_faults, 0);
+        assert_eq!(gated.retries, 0);
+        assert_eq!(gated.abandoned, 0);
+        assert_eq!(gated.wasted_work, 0.0);
+        assert_eq!(plain.digest(), gated.digest());
+    }
+
+    #[test]
+    fn task_faults_retry_and_conserve() {
+        let r = run_with(faulty_cfg("fault", 1800.0, StrategySpec::new("always")));
+        assert!(r.task_faults > 0, "a day at 30min MTTF must fault: {}", r.task_faults);
+        assert_eq!(r.retries, r.task_faults, "always retries every fault");
+        assert!(r.wasted_work > 0.0, "faulted attempts must waste work");
+        assert_eq!(r.abandoned, 0, "always never abandons");
+        assert_eq!(r.arrived, r.completed + r.abandoned + r.shed + r.in_flight);
+        assert!(r.completed > 0);
+        let again = run_with(faulty_cfg("fault", 1800.0, StrategySpec::new("always")));
+        assert_eq!(r.digest(), again.digest(), "fault runs must stay deterministic");
+    }
+
+    #[test]
+    fn bounded_retries_abandon_and_policies_diverge() {
+        let capped = run_with(faulty_cfg(
+            "fault",
+            900.0,
+            StrategySpec::new("fixed").with("max_attempts", 2.0),
+        ));
+        assert!(capped.abandoned > 0, "2 attempts at 15min MTTF must abandon");
+        assert_eq!(
+            capped.arrived,
+            capped.completed + capped.abandoned + capped.shed + capped.in_flight
+        );
+        let always = run_with(faulty_cfg("fault", 900.0, StrategySpec::new("always")));
+        assert_ne!(capped.digest(), always.digest(), "retry policy never engaged");
+        assert!(capped.retry.starts_with("fixed"), "{}", capped.retry);
+    }
+
+    #[test]
+    fn timeouts_cancel_long_attempts() {
+        let mut cfg = saturated_cfg("timeout", StrategySpec::new("priority"));
+        // no transient faults — only a per-attempt timeout under long
+        // training runs, so every timeout comes from the timer; the
+        // bounded policy guarantees the run drains even for tasks whose
+        // every resampled attempt would blow the budget
+        cfg.infra.faults = Some(FaultModel {
+            training: Some(TaskFaultConfig::default().with_timeout(900.0)),
+            compute: None,
+            retry: StrategySpec::new("fixed").with("max_attempts", 3.0),
+        });
+        let r = run_with(cfg);
+        assert!(r.task_timeouts > 0, "15min cap must time out long trains");
+        assert_eq!(r.task_faults, 0, "no transient fault source configured");
+        assert_eq!(r.arrived, r.completed + r.abandoned + r.shed + r.in_flight);
+    }
+
+    #[test]
+    fn queue_caps_shed_overload() {
+        let mk = |cap: u64| {
+            let mut cfg = saturated_cfg("shed", StrategySpec::new("priority"));
+            cfg.arrival = ArrivalSpec::Poisson {
+                mean_interarrival: 15.0,
+            };
+            if cap > 0 {
+                cfg.infra.faults = Some(FaultModel {
+                    training: Some(TaskFaultConfig::default().with_queue_cap(cap)),
+                    compute: None,
+                    retry: StrategySpec::new("always"),
+                });
+            }
+            run_with(cfg)
+        };
+        let capped = mk(8);
+        assert!(capped.shed > 0, "sustained overload over cap 8 must shed");
+        assert_eq!(
+            capped.arrived,
+            capped.completed + capped.abandoned + capped.shed + capped.in_flight
+        );
+        // admission control trades completed work for shorter queues
+        let open = mk(0);
+        assert_eq!(open.shed, 0);
+        assert!(
+            capped.avg_queue_training < open.avg_queue_training,
+            "shedding must shorten the queue: {} vs {}",
+            capped.avg_queue_training,
+            open.avg_queue_training
+        );
+    }
         // the failure-aware strategy's boost only applies to restarted
         // jobs; with failures off it IS the priority discipline
         let plain = run_with(saturated_cfg("rf", StrategySpec::new("priority")));

@@ -22,8 +22,9 @@ pub use shard::{
     merge_shards, CellRecord, GroupStats, MergedSweep, MetricStats, ShardManifest, ShardSpec,
 };
 pub use strategy::{
-    build_placer, build_scheduler, build_trigger, placer_names, register_placer,
-    register_scheduler, register_trigger, scheduler_names, trigger_names, StrategySpec,
+    build_placer, build_retry_policy, build_scheduler, build_trigger, placer_names,
+    register_placer, register_retry_policy, register_scheduler, register_trigger,
+    retry_policy_names, scheduler_names, trigger_names, StrategySpec,
 };
 pub use sweep::{Sweep, SweepResult};
 pub use triggers::{RetrainTrigger, TriggerCtx};

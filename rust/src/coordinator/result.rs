@@ -87,6 +87,34 @@ pub struct ExperimentResult {
     pub recovery_p50: f64,
     /// 95th percentile of the per-failure repair times.
     pub recovery_p95: f64,
+    /// Transient task faults injected (landed) over the run. Like
+    /// `failures`, identically zero without a `FaultModel` and therefore
+    /// kept out of [`ExperimentResult::digest`] — fault-off configs must
+    /// keep byte-identical digests across the task-fault release.
+    pub task_faults: u64,
+    /// Attempts killed by the per-attempt timeout. Out of the digest
+    /// (zero when faults are off).
+    pub task_timeouts: u64,
+    /// Retry attempts scheduled by the retry policy (each fault/timeout
+    /// the policy answered with `Retry`). Out of the digest.
+    pub retries: u64,
+    /// Pipelines terminally abandoned by the retry policy — the
+    /// conservation invariant becomes
+    /// `arrived == completed + abandoned + shed + in_flight`.
+    /// Out of the digest.
+    pub abandoned: u64,
+    /// Pipelines shed at admission (arrival queue over `queue_cap`).
+    /// Out of the digest.
+    pub shed: u64,
+    /// Service seconds burned by attempts that faulted or timed out
+    /// (the whole attempt's progress is wasted — task faults have no
+    /// checkpointing). Out of the digest (zero when faults are off).
+    pub wasted_work: f64,
+    /// Fraction of completed pipelines that finished within their EDF
+    /// deadline (`arrived_at + slack_per_class * priority`) — the SLO
+    /// attainment headline. Exactly 1.0 degenerates to "all on time";
+    /// 0.0 with no completions. Out of the digest.
+    pub deadline_attainment: f64,
     /// Dollar cost of the run: per-class busy slot-seconds times each
     /// class's `cost_per_slot_hour`, summed over both clusters. Exactly
     /// 0.0 without hardware classes (or with all-zero cost knobs), so
@@ -131,6 +159,9 @@ pub struct ExperimentResult {
     /// no hardware classes. Descriptive, so out of the digest like
     /// `scheduler`/`trigger`.
     pub placer: String,
+    /// Resolved retry-policy label, or `""` when the config has no
+    /// fault model. Descriptive, so out of the digest like `placer`.
+    pub retry: String,
     /// The captured event trace when `cfg.capture_trace` was set.
     /// Derivable run description, deliberately not part of the digest.
     pub trace: Option<Trace>,
@@ -232,16 +263,38 @@ impl ExperimentResult {
         if self.preemptions > 0 {
             let _ = writeln!(s, "  preemptions      {}", self.preemptions);
         }
-        if self.failures > 0 {
+        // the reliability block renders whenever ANY reliability counter
+        // is nonzero — a fault-only (or shed-only) run must not print an
+        // all-reliable report just because no *slot* ever failed
+        let reliability = self.failures > 0
+            || self.task_faults > 0
+            || self.task_timeouts > 0
+            || self.shed > 0
+            || self.abandoned > 0;
+        if reliability {
             let _ = writeln!(
                 s,
                 "  failures         {} ({} repaired)  lost work {:.0}s  goodput {:.4}",
                 self.failures, self.repairs, self.lost_work, self.goodput
             );
+            if self.failures > 0 {
+                let _ = writeln!(
+                    s,
+                    "  recovery time    p50 {:.0}s  p95 {:.0}s",
+                    self.recovery_p50, self.recovery_p95
+                );
+            }
+            if self.task_faults > 0 || self.task_timeouts > 0 {
+                let _ = writeln!(
+                    s,
+                    "  task faults      {} transient, {} timed out  wasted work {:.0}s",
+                    self.task_faults, self.task_timeouts, self.wasted_work
+                );
+            }
             let _ = writeln!(
                 s,
-                "  recovery time    p50 {:.0}s  p95 {:.0}s",
-                self.recovery_p50, self.recovery_p95
+                "  outcomes         {} retries | {} abandoned | {} shed | SLO attainment {:.4}",
+                self.retries, self.abandoned, self.shed, self.deadline_attainment
             );
         }
         let _ = writeln!(
@@ -263,19 +316,17 @@ impl ExperimentResult {
             "  avg queue len    training {:.2}  compute {:.2}",
             self.avg_queue_training, self.avg_queue_compute
         );
-        if self.placer.is_empty() {
-            let _ = writeln!(
-                s,
-                "  strategies       scheduler {} | trigger {}",
-                self.scheduler, self.trigger
-            );
-        } else {
-            let _ = writeln!(
-                s,
-                "  strategies       scheduler {} | trigger {} | placer {}",
-                self.scheduler, self.trigger, self.placer
-            );
+        let mut strategies = format!(
+            "scheduler {} | trigger {}",
+            self.scheduler, self.trigger
+        );
+        if !self.placer.is_empty() {
+            let _ = write!(strategies, " | placer {}", self.placer);
         }
+        if !self.retry.is_empty() {
+            let _ = write!(strategies, " | retry {}", self.retry);
+        }
+        let _ = writeln!(s, "  strategies       {strategies}");
         if !self.class_util.is_empty() {
             let _ = writeln!(s, "  cost             ${:.2}", self.cost);
             for (label, util) in &self.class_util {
@@ -361,6 +412,13 @@ mod tests {
             goodput: 1.0,
             recovery_p50: 0.0,
             recovery_p95: 0.0,
+            task_faults: 0,
+            task_timeouts: 0,
+            retries: 0,
+            abandoned: 0,
+            shed: 0,
+            wasted_work: 0.0,
+            deadline_attainment: 1.0,
             cost: 0.0,
             class_util: Vec::new(),
             class_failures: Vec::new(),
@@ -383,6 +441,7 @@ mod tests {
             scheduler: "fifo".into(),
             trigger: "off".into(),
             placer: String::new(),
+            retry: String::new(),
             trace: None,
             meter: None,
         }
@@ -417,6 +476,32 @@ mod tests {
         assert!(s.contains("failures         2 (1 repaired)"), "{s}");
         assert!(s.contains("goodput 0.9500"), "{s}");
         assert!(s.contains("p50 300s"), "{s}");
+        // the reliability block renders for fault-only runs too (no
+        // slot failures at all) — the pre-fix gate keyed only on
+        // self.failures and would have printed nothing
+        let mut r = empty_result();
+        r.task_faults = 5;
+        r.task_timeouts = 1;
+        r.retries = 4;
+        r.abandoned = 2;
+        r.wasted_work = 120.0;
+        r.deadline_attainment = 0.875;
+        let s = r.summary();
+        assert!(s.contains("task faults      5 transient, 1 timed out"), "{s}");
+        assert!(s.contains("wasted work 120s"), "{s}");
+        assert!(s.contains("4 retries | 2 abandoned | 0 shed"), "{s}");
+        assert!(s.contains("SLO attainment 0.8750"), "{s}");
+        assert!(!s.contains("recovery time"), "no slot failures: no recovery line");
+        // shed-only runs render the block as well
+        let mut r = empty_result();
+        r.shed = 7;
+        let s = r.summary();
+        assert!(s.contains("7 shed"), "{s}");
+        // retry label joins the strategies line when set
+        let mut r = empty_result();
+        r.retry = "exp_backoff:max_attempts=4".into();
+        let s = r.summary();
+        assert!(s.contains("| retry exp_backoff:max_attempts=4"), "{s}");
         // cost/class lines only appear with hardware classes configured
         let mut r = empty_result();
         r.placer = "fastest_fit".into();
@@ -456,6 +541,18 @@ mod tests {
         f.recovery_p50 = 600.0;
         f.recovery_p95 = 1800.0;
         assert_eq!(a.digest(), f.digest());
+        // the task-fault/SLO counters follow the same rule: identically
+        // zero without a FaultModel, so fault-off configs keep their
+        // pre-task-fault-release digests byte-identical
+        let mut t = empty_result();
+        t.task_faults = 9;
+        t.task_timeouts = 2;
+        t.retries = 7;
+        t.abandoned = 1;
+        t.shed = 3;
+        t.wasted_work = 456.7;
+        t.deadline_attainment = 0.5;
+        assert_eq!(a.digest(), t.digest());
         // cost accounting too: identically zero/empty without hardware
         // classes, so classless digests survive the placement release
         let mut h = empty_result();
@@ -497,6 +594,7 @@ mod tests {
         b.scheduler = "edf:slack_per_class=900".into();
         b.trigger = "periodic:interval=3600".into();
         b.placer = "cheapest_fit".into();
+        b.retry = "deadline_aware".into();
         b.trace = Some(Trace {
             meta: crate::trace::TraceMeta {
                 name: "t".into(),

@@ -22,7 +22,10 @@ use std::sync::Arc;
 
 use crate::arrivals::ArrivalModel;
 use crate::des::sched::JobCtx;
-use crate::des::{AcquireResult, Calendar, ClassPool, EventHandle, Granted, Resource, SimTime};
+use crate::des::{
+    AcquireResult, Calendar, ClassPool, EventHandle, Granted, Resource, RetryCtx, RetryDecision,
+    RetryPolicy, SimTime,
+};
 use crate::error::Result;
 use crate::model::pipeline::TaskNode;
 use crate::model::{
@@ -42,7 +45,7 @@ use crate::tsdb::{SeriesHandle, SeriesKey, TsStore};
 use super::config::ExperimentConfig;
 use super::params::SimParams;
 use super::result::{rss_mb, series, ExperimentResult};
-use super::strategy::{build_placer, build_scheduler, build_trigger};
+use super::strategy::{build_placer, build_retry_policy, build_scheduler, build_trigger, StrategySpec};
 use super::triggers::{DeployedModel, RetrainTrigger};
 
 /// Calendar events.
@@ -75,6 +78,16 @@ enum Event {
     /// hardware classes are configured, so the repair restores the
     /// same class the failure was attributed to.
     ClassRepaired(ResourceKind, u32, f64),
+    /// Task-level fault: the in-flight attempt of pipeline `pid` fails
+    /// transiently (armed at service start from the cluster's
+    /// fault-time distribution, cancelled on normal completion).
+    TaskFault(u32),
+    /// Per-attempt timeout: the in-flight attempt of pipeline `pid`
+    /// exceeded the cluster's `timeout` (cancelled on completion or an
+    /// earlier fault).
+    TaskTimeout(u32),
+    /// Retry backoff expired: re-submit pipeline `pid`'s current task.
+    TaskRetry(u32),
 }
 
 /// Index of an event's kind in [`EVENT_KINDS`] (SimMeter accounting).
@@ -89,8 +102,17 @@ fn kind_index(ev: &Event) -> usize {
         Event::SlotRepaired(..) => 6,
         Event::ClassFailed(..) => 7,
         Event::ClassRepaired(..) => 8,
+        Event::TaskFault(_) => 9,
+        Event::TaskTimeout(_) => 10,
+        Event::TaskRetry(_) => 11,
     }
 }
+
+/// Deadline slack per priority class for the SLO/retry analytics —
+/// mirrors `EdfScheduler`'s default, so "within deadline" means the
+/// same thing to the attainment metric, the `deadline_aware` retry
+/// policy, and the EDF scheduler.
+const DEADLINE_SLACK: f64 = 1800.0;
 
 /// Per-pipeline execution state (slab-allocated, freed on completion so
 /// memory scales with *concurrent*, not total, pipelines).
@@ -132,6 +154,15 @@ struct PipelineState {
     /// on completion, preemption, or failure. Always empty when the
     /// cluster has no `hw_classes`.
     allocation: Vec<(u32, u32)>,
+    /// 1-based attempt number of the current task (reset when the
+    /// pipeline advances, bumped on every fault/timeout retry).
+    attempt: u32,
+    /// Cancellation handle of the pending `TaskFault` armed for the
+    /// in-flight attempt (None when no fault landed inside it).
+    fault_handle: Option<EventHandle>,
+    /// Cancellation handle of the pending `TaskTimeout` for the
+    /// in-flight attempt.
+    timeout_handle: Option<EventHandle>,
     /// Deployed-model slot to refresh when this (retraining) run deploys.
     retrain_of: Option<u32>,
     /// User priority (lower = more important; Fig 4's "model
@@ -216,6 +247,18 @@ struct Counters {
     /// Class-placement operations performed (meter-only; never enters
     /// the digest).
     placements: u64,
+    // task-level faults (all zero when no FaultModel is set)
+    task_faults: u64,
+    task_timeouts: u64,
+    retries: u64,
+    abandoned: u64,
+    shed: u64,
+    /// Service seconds of faulted / timed-out attempts — progress the
+    /// fault model threw away.
+    wasted_work: f64,
+    /// Completed pipelines that finished within their EDF deadline
+    /// (`arrived_at + DEADLINE_SLACK × priority class`).
+    slo_met: u64,
 }
 
 /// One experiment run in progress: the calendar, the resources with
@@ -256,6 +299,15 @@ pub(super) struct Simulation {
     /// events, so enabling failures perturbs no other stream and
     /// failure-off runs keep their digests byte-identical.
     rng_failure: Pcg64,
+    /// Dedicated task-fault stream: drawn from only when a fault-time
+    /// distribution is configured, so enabling task faults perturbs no
+    /// other stream and fault-off runs keep their digests
+    /// byte-identical.
+    rng_fault: Pcg64,
+    /// Pluggable retry policy consulted on every task fault/timeout
+    /// (`infra.faults.retry`; the built-in `always` when no fault model
+    /// is configured, in which case it is never asked).
+    retry: Box<dyn RetryPolicy>,
     c: Counters,
     /// Self-profiling hooks (disabled unless `cfg.meter`): per-kind
     /// event counts/wall time and the calendar depth high-water mark.
@@ -329,6 +381,17 @@ impl Simulation {
         // substream: failure-off runs keep every other stream — and
         // therefore their digests — byte-identical
         let mut rng_failure = root.substream(0x300);
+        // same pattern for task-level faults: derived unconditionally,
+        // and *after* every pre-existing substream, so fault-off runs
+        // keep every other stream — and their digests — byte-identical
+        let rng_fault = root.substream(0x400);
+        // the retry policy only decides anything when a fault model is
+        // configured; the unconditional `always` default keeps the
+        // field total without an Option on the hot path
+        let retry = match cfg.infra.retry_spec() {
+            Some(spec) => build_retry_policy(spec)?,
+            None => build_retry_policy(&StrategySpec::new("always"))?,
+        };
         let mut arrival = match arrival_override {
             Some(model) => model,
             None => params.resolve_arrival(cfg.arrival),
@@ -450,6 +513,8 @@ impl Simulation {
             rng_noise,
             rng_drift,
             rng_failure,
+            rng_fault,
+            retry,
             c: Counters {
                 peak_rss: rss_mb(),
                 ..Counters::default()
@@ -488,6 +553,9 @@ impl Simulation {
                 Event::ClassRepaired(kind, ci, downtime) => {
                     self.on_class_repaired(t, kind, ci, downtime)
                 }
+                Event::TaskFault(pid) => self.on_task_fault(t, pid)?,
+                Event::TaskTimeout(pid) => self.on_task_timeout(t, pid)?,
+                Event::TaskRetry(pid) => self.on_task_retry(pid)?,
             }
             if let Some((k, t0)) = probe {
                 self.meter
@@ -626,6 +694,9 @@ impl Simulation {
             remaining_service: None,
             attempt_start: 0.0,
             allocation: Vec::new(),
+            attempt: 1,
+            fault_handle: None,
+            timeout_handle: None,
             retrain_of: None,
             // user-assigned priority class 1..=10
             priority: 1.0 + self.rng_noise.below(10) as f64,
@@ -675,7 +746,26 @@ impl Simulation {
     /// its [`JobCtx`], and request the owning resource — the scheduler
     /// decides admission and queue position (formerly `start_task!`).
     fn start_task(&mut self, pid: u32) -> Result<()> {
+        self.start_task_inner(pid, false)
+    }
+
+    /// [`Simulation::start_task`] with the retry path made explicit:
+    /// `retry` re-submissions carry the restart flag (so
+    /// `restart_first` schedulers compose with task-level retries the
+    /// way they do with slot-failure restarts) and bypass admission
+    /// control — a retried task is already inside the system.
+    fn start_task_inner(&mut self, pid: u32, retry: bool) -> Result<()> {
         let t_now = self.cal.now();
+        // admission control: a pipeline's *first* task is shed when the
+        // owning cluster's queue sits at the configured cap. The check
+        // runs before any sampling, so sheds draw no RNG and cap-free
+        // runs keep every stream byte-identical.
+        if !retry {
+            if let Some(depth) = self.shed_depth(pid) {
+                self.shed_pipeline(t_now, pid, depth);
+                return Ok(());
+            }
+        }
         let exec = self.sample_exec(pid)?;
         let store = self.cfg.infra.store;
         let (task, fw_tag, read_t, write_t, read_wire, write_wire, job) = {
@@ -690,8 +780,11 @@ impl Simulation {
             st.pending_read = store.read_time(read_b);
             st.pending_write = store.write_time(write_b);
             let total = st.pending_read + st.pending_exec + st.pending_write;
-            let job = JobCtx::new(total, st.priority, st.arrived_at)
+            let mut job = JobCtx::new(total, st.priority, st.arrived_at)
                 .with_slots(self.cfg.infra.task_slots(task));
+            if retry {
+                job = job.after_restart();
+            }
             (
                 task,
                 node.framework,
@@ -743,6 +836,7 @@ impl Simulation {
                 st.done_handle = Some(h);
                 st.done_at = t_now + total_s;
                 st.attempt_start = t_now;
+                self.arm_fault_events(t_now, pid, kind);
             }
             AcquireResult::Queued => {
                 if self.capture {
@@ -774,6 +868,7 @@ impl Simulation {
                 };
                 let cancelled = self.cal.cancel(vh);
                 debug_assert!(cancelled, "victim completion was pending");
+                self.cancel_fault_events(victim);
                 self.c.preemptions += 1;
                 // the victim's class slots free up before the preemptor
                 // places into them
@@ -820,6 +915,7 @@ impl Simulation {
                 st.done_handle = Some(h);
                 st.done_at = t_now + total_s;
                 st.attempt_start = t_now;
+                self.arm_fault_events(t_now, pid, kind);
             }
         }
         Ok(())
@@ -830,6 +926,8 @@ impl Simulation {
     /// the pipeline or complete it.
     fn on_task_done(&mut self, t: SimTime, pid: u32) -> Result<()> {
         self.c.tasks_executed += 1;
+        // any armed fault/timeout for this attempt dies unfired
+        self.cancel_fault_events(pid);
         // release + grant next waiters (several when a wide training job
         // frees room for multiple narrow tasks)
         let (task, fw_tag, exec_dur, kind, service) = {
@@ -894,6 +992,7 @@ impl Simulation {
         let done = {
             let st = self.slab[pid as usize].as_mut().expect("live");
             st.cur += 1;
+            st.attempt = 1; // the next task starts its own attempt count
             truncated || st.cur >= st.tasks.len()
         };
         if done {
@@ -982,8 +1081,249 @@ impl Simulation {
                 .as_mut()
                 .expect("queued pipeline")
                 .done_handle = Some(h);
+            self.arm_fault_events(t, g.token, kind);
         }
         self.grant_buf = grants;
+    }
+
+    /// Arm the per-attempt fault and timeout events for `pid`'s task
+    /// that just entered service on `kind`. No-op without a fault
+    /// config for the cluster. When a fault-time distribution is set,
+    /// exactly one sample is drawn per attempt — the stream position
+    /// never depends on whether the fault lands inside the attempt
+    /// (the MTBF pattern) — and `TaskFault` is scheduled only when it
+    /// strikes before the completion. Timeouts draw nothing.
+    fn arm_fault_events(&mut self, t: SimTime, pid: u32, kind: ResourceKind) {
+        let Some(fc) = self.cfg.infra.fault_for(kind) else {
+            return;
+        };
+        let (fault_time, timeout) = (fc.fault_time.clone(), fc.timeout);
+        let done_at = self.slab[pid as usize]
+            .as_ref()
+            .expect("live pipeline")
+            .done_at;
+        let fault_h = fault_time.and_then(|d| {
+            let gap = d.sample(&mut self.rng_fault).max(0.0);
+            (t + gap < done_at).then(|| self.cal.schedule(gap, Event::TaskFault(pid)))
+        });
+        let timeout_h = (timeout > 0.0 && t + timeout < done_at)
+            .then(|| self.cal.schedule(timeout, Event::TaskTimeout(pid)));
+        let st = self.slab[pid as usize].as_mut().expect("live pipeline");
+        st.fault_handle = fault_h;
+        st.timeout_handle = timeout_h;
+    }
+
+    /// Cancel whatever fault/timeout events are still armed for `pid`'s
+    /// in-flight attempt — called on normal completion, preemption,
+    /// slot failure, and when the paired fault event fires first.
+    fn cancel_fault_events(&mut self, pid: u32) {
+        let (fh, th) = {
+            let st = self.slab[pid as usize].as_mut().expect("live pipeline");
+            (st.fault_handle.take(), st.timeout_handle.take())
+        };
+        if let Some(h) = fh {
+            self.cal.cancel(h);
+        }
+        if let Some(h) = th {
+            self.cal.cancel(h);
+        }
+    }
+
+    /// Admission check for `pid`'s next task: `Some(queue depth)` when
+    /// this is the pipeline's first task and the owning cluster's queue
+    /// already sits at its configured `queue_cap` (0 = uncapped).
+    fn shed_depth(&self, pid: u32) -> Option<usize> {
+        let st = self.slab[pid as usize].as_ref().expect("live pipeline");
+        if st.cur != 0 {
+            return None; // mid-pipeline tasks are always admitted
+        }
+        let kind = ResourceKind::for_task(st.tasks.get(st.cur).task);
+        let cap = self.cfg.infra.fault_for(kind).map_or(0, |fc| fc.queue_cap);
+        if cap == 0 {
+            return None;
+        }
+        let depth = match kind {
+            ResourceKind::Training => self.training.queued(),
+            ResourceKind::Compute => self.compute.queued(),
+        };
+        (depth as u64 >= cap).then_some(depth)
+    }
+
+    /// Terminal shed: the overloaded cluster turns the arrival away at
+    /// admission, before it enters the queue.
+    fn shed_pipeline(&mut self, t: SimTime, pid: u32, depth: usize) {
+        let st = self.slab[pid as usize].take().expect("live pipeline");
+        self.free.push(pid);
+        self.c.live -= 1;
+        self.c.shed += 1;
+        if self.capture {
+            let task = st.tasks.get(0).task;
+            self.sink.record(&TraceEvent {
+                t,
+                kind: TraceEventKind::TaskShed {
+                    pid,
+                    task,
+                    resource: ResourceKind::for_task(task),
+                    queue_depth: depth as u32,
+                },
+            });
+        }
+        if let Some(slot) = st.retrain_of {
+            // shed retraining: allow future triggers
+            self.deployed[slot as usize].retraining = false;
+        }
+    }
+
+    /// A task-level transient fault lands on `pid`'s in-flight attempt.
+    fn on_task_fault(&mut self, t: SimTime, pid: u32) -> Result<()> {
+        self.c.task_faults += 1;
+        self.slab[pid as usize]
+            .as_mut()
+            .expect("live pipeline")
+            .fault_handle = None; // this fault just fired
+        self.cancel_fault_events(pid); // the paired timeout dies with it
+        self.fail_attempt(t, pid, false)
+    }
+
+    /// `pid`'s in-flight attempt ran past the cluster's per-attempt
+    /// timeout.
+    fn on_task_timeout(&mut self, t: SimTime, pid: u32) -> Result<()> {
+        self.c.task_timeouts += 1;
+        self.slab[pid as usize]
+            .as_mut()
+            .expect("live pipeline")
+            .timeout_handle = None; // this timeout just fired
+        self.cancel_fault_events(pid); // the paired fault dies with it
+        self.fail_attempt(t, pid, true)
+    }
+
+    /// Shared fault/timeout teardown: void the completion, charge the
+    /// wasted attempt progress, free the slots (queued work may be
+    /// granted into them), then consult the retry policy — a backoff
+    /// re-queue through the calendar, or a terminal abandon.
+    fn fail_attempt(&mut self, t: SimTime, pid: u32, timed_out: bool) -> Result<()> {
+        let (dh, task, kind, slots, attempt, elapsed, arrived_at, priority) = {
+            let st = self.slab[pid as usize].as_mut().expect("live pipeline");
+            let dh = st
+                .done_handle
+                .take()
+                .expect("faulted attempt had a scheduled completion");
+            let task = st.tasks.get(st.cur).task;
+            let elapsed = (t - st.attempt_start).max(0.0);
+            // the attempt is void: a retry resamples its service from
+            // scratch, so no remainder carries over
+            st.remaining_service = None;
+            (
+                dh,
+                task,
+                ResourceKind::for_task(task),
+                self.cfg.infra.task_slots(task),
+                st.attempt,
+                elapsed,
+                st.arrived_at,
+                st.priority,
+            )
+        };
+        let cancelled = self.cal.cancel(dh);
+        debug_assert!(cancelled, "faulted completion was pending");
+        self.c.wasted_work += elapsed;
+        if self.capture {
+            let kind_ev = if timed_out {
+                TraceEventKind::TaskTimedOut {
+                    pid,
+                    task,
+                    resource: kind,
+                    elapsed,
+                }
+            } else {
+                TraceEventKind::TaskFailed {
+                    pid,
+                    task,
+                    resource: kind,
+                    attempt,
+                    elapsed,
+                }
+            };
+            self.sink.record(&TraceEvent { t, kind: kind_ev });
+        }
+        // the attempt's slots free up; queued work may start in them
+        self.unplace(t, pid, kind);
+        let mut grants = std::mem::take(&mut self.grant_buf);
+        grants.clear();
+        match kind {
+            ResourceKind::Training => self.training.release_all(t, &pid, slots, &mut grants),
+            ResourceKind::Compute => self.compute.release_all(t, &pid, slots, &mut grants),
+        };
+        self.grant_buf = grants;
+        self.apply_grants(t, kind);
+        // the policy decides; deadline slack mirrors the EDF
+        // scheduler's `arrived_at + slack × priority class` deadline
+        let queue_depth = match kind {
+            ResourceKind::Training => self.training.queued(),
+            ResourceKind::Compute => self.compute.queued(),
+        };
+        let ctx = RetryCtx {
+            attempt,
+            elapsed: t - arrived_at,
+            deadline_slack: (arrived_at + DEADLINE_SLACK * priority) - t,
+            queue_depth,
+        };
+        match self.retry.decide(&ctx) {
+            RetryDecision::Retry { delay } => {
+                let delay = delay.max(0.0);
+                self.c.retries += 1;
+                if self.capture {
+                    self.sink.record(&TraceEvent {
+                        t,
+                        kind: TraceEventKind::TaskRetried {
+                            pid,
+                            task,
+                            resource: kind,
+                            attempt,
+                            delay,
+                        },
+                    });
+                }
+                self.slab[pid as usize]
+                    .as_mut()
+                    .expect("live pipeline")
+                    .attempt += 1;
+                self.cal.schedule(delay, Event::TaskRetry(pid));
+            }
+            RetryDecision::Abandon => self.abandon_pipeline(t, pid, attempt),
+        }
+        Ok(())
+    }
+
+    /// Terminal abandon: the retry policy gave up on `pid`'s task, so
+    /// the whole pipeline leaves the system without completing.
+    /// Conservation becomes
+    /// `arrived == completed + abandoned + shed + in_flight`.
+    fn abandon_pipeline(&mut self, t: SimTime, pid: u32, attempts: u32) {
+        let st = self.slab[pid as usize].take().expect("live pipeline");
+        self.free.push(pid);
+        self.c.live -= 1;
+        self.c.abandoned += 1;
+        if self.capture {
+            self.sink.record(&TraceEvent {
+                t,
+                kind: TraceEventKind::PipelineAbandoned {
+                    pid,
+                    attempts,
+                    makespan: t - st.arrived_at,
+                },
+            });
+        }
+        if let Some(slot) = st.retrain_of {
+            // abandoned retraining: allow future triggers
+            self.deployed[slot as usize].retraining = false;
+        }
+    }
+
+    /// A retry backoff expired: re-submit `pid`'s current task with the
+    /// restart flag set.
+    fn on_task_retry(&mut self, pid: u32) -> Result<()> {
+        self.start_task_inner(pid, true)
     }
 
     /// Failure injection: one slot on `kind`'s cluster dies. The failed
@@ -1146,6 +1486,7 @@ impl Simulation {
         };
         let cancelled = self.cal.cancel(vh);
         debug_assert!(cancelled, "victim completion was pending");
+        self.cancel_fault_events(pid);
         self.c.lost_work += lost;
         if self.capture {
             self.sink.record(&TraceEvent {
@@ -1201,6 +1542,7 @@ impl Simulation {
                 st.done_handle = Some(h);
                 st.done_at = t + new_rem;
                 st.attempt_start = t;
+                self.arm_fault_events(t, pid, kind);
             }
             AcquireResult::Queued => {
                 // remaining_service stays set; consumed at the grant
@@ -1223,6 +1565,7 @@ impl Simulation {
                 };
                 let cancelled = self.cal.cancel(wh);
                 debug_assert!(cancelled, "victim completion was pending");
+                self.cancel_fault_events(victim);
                 self.c.preemptions += 1;
                 // evicted class slots free up, then the restart places
                 self.unplace(t, victim, kind);
@@ -1254,6 +1597,7 @@ impl Simulation {
                 st.done_handle = Some(h);
                 st.done_at = t + new_rem;
                 st.attempt_start = t;
+                self.arm_fault_events(t, pid, kind);
             }
         }
     }
@@ -1491,6 +1835,12 @@ impl Simulation {
         if truncated {
             self.c.gate_failures += 1;
         }
+        // SLO attainment: completed within the EDF deadline. Priority-0
+        // retrains get one slack class — a zero-width deadline would
+        // make them unmeetable by definition.
+        if t <= st.arrived_at + DEADLINE_SLACK * st.priority.max(1.0) {
+            self.c.slo_met += 1;
+        }
         self.db.append(self.h.completions, t, t - st.arrived_at);
         self.db.append(self.h.pipeline_wait, t, st.total_wait);
         if self.capture {
@@ -1622,6 +1972,9 @@ impl Simulation {
             remaining_service: None,
             attempt_start: 0.0,
             allocation: Vec::new(),
+            attempt: 1,
+            fault_handle: None,
+            timeout_handle: None,
             retrain_of: Some(slot),
             priority: 0.0, // retrains jump the queue
         };
@@ -1690,6 +2043,13 @@ impl Simulation {
             }
         }
         let placer = self.cfg.infra.placer_label().unwrap_or_default();
+        let retry = self.cfg.infra.retry_label().unwrap_or_default();
+        // SLO attainment over completed pipelines; 0 with none completed
+        let deadline_attainment = if self.c.completed > 0 {
+            self.c.slo_met as f64 / self.c.completed as f64
+        } else {
+            0.0
+        };
         // the stream is complete: streaming sinks finalize (string-table
         // + meta footer, flush) before the result is assembled
         self.sink.finish()?;
@@ -1742,6 +2102,7 @@ impl Simulation {
                 ("noise".into(), self.rng_noise.draws()),
                 ("drift".into(), self.rng_drift.draws()),
                 ("failure".into(), self.rng_failure.draws()),
+                ("fault".into(), self.rng_fault.draws()),
             ],
             alloc_events: self.meter.alloc_events(),
         });
@@ -1761,6 +2122,13 @@ impl Simulation {
             goodput,
             recovery_p50,
             recovery_p95,
+            task_faults: self.c.task_faults,
+            task_timeouts: self.c.task_timeouts,
+            retries: self.c.retries,
+            abandoned: self.c.abandoned,
+            shed: self.c.shed,
+            wasted_work: self.c.wasted_work,
+            deadline_attainment,
             retrains_triggered: self.c.retrains,
             models_deployed: self.c.models_deployed,
             events_processed: self.c.events,
@@ -1783,6 +2151,7 @@ impl Simulation {
             scheduler,
             trigger,
             placer,
+            retry,
             trace,
             meter,
             tsdb: self.db,

@@ -8,11 +8,15 @@
 //! inside `ExperimentConfig`, and is parsed from CLI grids
 //! (`sweep --schedulers fifo,edf:slack_per_class=900`). Custom strategies
 //! register at startup via [`register_scheduler`] / [`register_trigger`]
-//! / [`register_placer`] and are then selectable exactly like built-ins.
+//! / [`register_placer`] / [`register_retry_policy`] and are then
+//! selectable exactly like built-ins.
 
 use std::sync::{OnceLock, RwLock};
 
 use crate::des::place::{CheapestFit, FastestFit, Pack, Placer, Spread};
+use crate::des::retry::{
+    AlwaysRetry, DeadlineAwareRetry, ExpBackoffRetry, FixedRetry, RetryPolicy,
+};
 use crate::des::sched::{
     EarliestDeadlineFirst, EasyBackfill, Fifo, PreemptivePriority, Priority, RestartFirst,
     Scheduler, ShortestJobFirst, WeightedFair,
@@ -242,6 +246,43 @@ const BUILTIN_PLACERS: &[(&str, PlacerCtor)] = &[
     ("spread", ctor_spread),
 ];
 
+/// Constructor turning a spec into a live retry policy.
+pub type RetryCtor = fn(&StrategySpec) -> Result<Box<dyn RetryPolicy>>;
+
+fn ctor_always(spec: &StrategySpec) -> Result<Box<dyn RetryPolicy>> {
+    spec.check_keys(&["delay"])?;
+    Ok(Box::new(AlwaysRetry::new(spec.get_or("delay", 0.0))))
+}
+fn ctor_fixed(spec: &StrategySpec) -> Result<Box<dyn RetryPolicy>> {
+    spec.check_keys(&["max_attempts", "delay"])?;
+    Ok(Box::new(FixedRetry::new(
+        spec.get_or("max_attempts", 3.0) as u32,
+        spec.get_or("delay", 0.0),
+    )))
+}
+fn ctor_exp_backoff(spec: &StrategySpec) -> Result<Box<dyn RetryPolicy>> {
+    spec.check_keys(&["base", "cap", "max_attempts"])?;
+    Ok(Box::new(ExpBackoffRetry::new(
+        spec.get_or("base", 60.0),
+        spec.get_or("cap", 3600.0),
+        spec.get_or("max_attempts", 5.0) as u32,
+    )))
+}
+fn ctor_deadline_aware(spec: &StrategySpec) -> Result<Box<dyn RetryPolicy>> {
+    spec.check_keys(&["base", "cap"])?;
+    Ok(Box::new(DeadlineAwareRetry::new(
+        spec.get_or("base", 60.0),
+        spec.get_or("cap", 3600.0),
+    )))
+}
+
+const BUILTIN_RETRIES: &[(&str, RetryCtor)] = &[
+    ("always", ctor_always),
+    ("fixed", ctor_fixed),
+    ("exp_backoff", ctor_exp_backoff),
+    ("deadline_aware", ctor_deadline_aware),
+];
+
 fn sched_ext() -> &'static RwLock<Vec<(String, SchedulerCtor)>> {
     static EXT: OnceLock<RwLock<Vec<(String, SchedulerCtor)>>> = OnceLock::new();
     EXT.get_or_init(|| RwLock::new(Vec::new()))
@@ -254,6 +295,11 @@ fn trigger_ext() -> &'static RwLock<Vec<(String, TriggerCtor)>> {
 
 fn placer_ext() -> &'static RwLock<Vec<(String, PlacerCtor)>> {
     static EXT: OnceLock<RwLock<Vec<(String, PlacerCtor)>>> = OnceLock::new();
+    EXT.get_or_init(|| RwLock::new(Vec::new()))
+}
+
+fn retry_ext() -> &'static RwLock<Vec<(String, RetryCtor)>> {
+    static EXT: OnceLock<RwLock<Vec<(String, RetryCtor)>>> = OnceLock::new();
     EXT.get_or_init(|| RwLock::new(Vec::new()))
 }
 
@@ -280,6 +326,14 @@ pub fn register_placer(name: &str, ctor: PlacerCtor) {
     placer_ext()
         .write()
         .expect("placer registry poisoned")
+        .push((name.to_string(), ctor));
+}
+
+/// Register a custom retry-policy constructor under `name`.
+pub fn register_retry_policy(name: &str, ctor: RetryCtor) {
+    retry_ext()
+        .write()
+        .expect("retry registry poisoned")
         .push((name.to_string(), ctor));
 }
 
@@ -335,6 +389,23 @@ pub fn build_placer(spec: &StrategySpec) -> Result<Box<dyn Placer>> {
     )))
 }
 
+/// Build a retry policy from its spec.
+pub fn build_retry_policy(spec: &StrategySpec) -> Result<Box<dyn RetryPolicy>> {
+    let ext = retry_ext().read().expect("retry registry poisoned");
+    if let Some((_, ctor)) = ext.iter().rev().find(|(n, _)| *n == spec.name) {
+        return ctor(spec);
+    }
+    drop(ext);
+    if let Some((_, ctor)) = BUILTIN_RETRIES.iter().find(|(n, _)| *n == spec.name) {
+        return ctor(spec);
+    }
+    Err(Error::Config(format!(
+        "unknown retry policy '{}' (known: {})",
+        spec.name,
+        retry_policy_names().join(", ")
+    )))
+}
+
 /// All selectable scheduler names: built-ins plus registered extensions,
 /// in registration order, deduplicated.
 pub fn scheduler_names() -> Vec<String> {
@@ -378,6 +449,20 @@ pub fn placer_names() -> Vec<String> {
     names
 }
 
+/// All selectable retry-policy names.
+pub fn retry_policy_names() -> Vec<String> {
+    let mut names: Vec<String> = BUILTIN_RETRIES
+        .iter()
+        .map(|(n, _)| n.to_string())
+        .collect();
+    for (n, _) in retry_ext().read().expect("retry registry poisoned").iter() {
+        if !names.contains(n) {
+            names.push(n.clone());
+        }
+    }
+    names
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -413,6 +498,10 @@ mod tests {
             let p = build_placer(&StrategySpec::new(name)).unwrap();
             assert_eq!(p.name(), name);
         }
+        for name in ["always", "fixed", "exp_backoff", "deadline_aware"] {
+            let r = build_retry_policy(&StrategySpec::new(name)).unwrap();
+            assert_eq!(r.name(), name);
+        }
     }
 
     #[test]
@@ -424,6 +513,34 @@ mod tests {
         let err = build_placer(&StrategySpec::new("bogus")).unwrap_err();
         assert!(err.to_string().contains("fastest_fit"), "{err}");
         assert!(build_placer(&StrategySpec::new("pack").with("x", 1.0)).is_err());
+        let err = build_retry_policy(&StrategySpec::new("bogus")).unwrap_err();
+        assert!(err.to_string().contains("exp_backoff"), "{err}");
+        assert!(build_retry_policy(&StrategySpec::new("always").with("x", 1.0)).is_err());
+    }
+
+    #[test]
+    fn retry_params_reach_the_policy_and_registry_extends() {
+        use crate::des::retry::{RetryCtx, RetryDecision};
+        let spec = StrategySpec::new("fixed").with("max_attempts", 2.0).with("delay", 7.0);
+        let mut r = build_retry_policy(&spec).unwrap();
+        let ctx = RetryCtx {
+            attempt: 1,
+            elapsed: 0.0,
+            deadline_slack: 0.0,
+            queue_depth: 0,
+        };
+        assert_eq!(r.decide(&ctx), RetryDecision::Retry { delay: 7.0 });
+        let ctx = RetryCtx { attempt: 2, ..ctx };
+        assert_eq!(r.decide(&ctx), RetryDecision::Abandon);
+
+        fn ctor(spec: &StrategySpec) -> Result<Box<dyn RetryPolicy>> {
+            spec.check_keys(&[])?;
+            Ok(Box::new(AlwaysRetry::new(0.0)))
+        }
+        register_retry_policy("custom_test_retry", ctor);
+        assert!(retry_policy_names().iter().any(|n| n == "custom_test_retry"));
+        let r = build_retry_policy(&StrategySpec::new("custom_test_retry")).unwrap();
+        assert_eq!(r.name(), "always"); // the ctor builds AlwaysRetry underneath
     }
 
     #[test]

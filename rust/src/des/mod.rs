@@ -12,12 +12,14 @@ pub mod calendar;
 pub mod monitor;
 pub mod place;
 pub mod resource;
+pub mod retry;
 pub mod sched;
 
 pub use calendar::{Calendar, EventHandle};
 pub use monitor::{Counter, TimeWeighted};
 pub use place::{ClassPool, ClassView, PlaceCtx, Placer};
 pub use resource::{AcquireResult, Granted, Resource};
+pub use retry::{RetryCtx, RetryDecision, RetryPolicy};
 pub use sched::{EnqueueAction, JobCtx, QueueKey, SchedCtx, SchedView, Scheduler};
 
 /// Simulated time in seconds since experiment start.

@@ -1,0 +1,243 @@
+//! Retry policies: the strategy consulted after a task attempt faults
+//! or times out (the fourth pluggable strategy family, alongside
+//! schedulers, retrain triggers, and placers).
+//!
+//! A policy sees a compact [`RetryCtx`] snapshot — which attempt just
+//! failed, how long the pipeline has been in flight, how much slack is
+//! left before its EDF deadline, and how deep the cluster's wait queue
+//! is — and answers [`RetryDecision::Retry`] with a backoff delay or
+//! [`RetryDecision::Abandon`]. Policies must be deterministic: the
+//! simulation's byte-exact digest oracle covers retry schedules, so a
+//! policy that randomized its backoff would need its own substream.
+
+use super::SimTime;
+
+/// Snapshot handed to a [`RetryPolicy`] after an attempt fails.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryCtx {
+    /// 1-based index of the attempt that just failed (`1` = the first
+    /// try failed).
+    pub attempt: u32,
+    /// Time since the pipeline arrived, seconds.
+    pub elapsed: SimTime,
+    /// Seconds until the pipeline's EDF deadline; negative once the
+    /// deadline has already passed.
+    pub deadline_slack: SimTime,
+    /// Jobs currently waiting on the failed task's cluster.
+    pub queue_depth: usize,
+}
+
+/// What to do with the failed task.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RetryDecision {
+    /// Re-queue the task after `delay` seconds of backoff (`0.0` =
+    /// immediately).
+    Retry { delay: SimTime },
+    /// Give up: the whole pipeline terminates with the abandoned
+    /// outcome.
+    Abandon,
+}
+
+/// Pluggable post-fault strategy. Implementations are registered in
+/// `coordinator::strategy` and selected by name via `StrategySpec`.
+pub trait RetryPolicy: Send {
+    /// Decide the fate of a failed attempt.
+    fn decide(&mut self, ctx: &RetryCtx) -> RetryDecision;
+
+    /// Registry name, for labels and reports.
+    fn name(&self) -> &'static str;
+}
+
+/// `always`: retry forever with a fixed delay (default 0). The
+/// simplest policy — and the one that shows why timeouts and caps
+/// matter, since a permanently-faulting task retries until the horizon.
+#[derive(Clone, Copy, Debug)]
+pub struct AlwaysRetry {
+    pub delay: SimTime,
+}
+
+impl AlwaysRetry {
+    pub fn new(delay: SimTime) -> Self {
+        AlwaysRetry { delay }
+    }
+}
+
+impl RetryPolicy for AlwaysRetry {
+    fn decide(&mut self, _ctx: &RetryCtx) -> RetryDecision {
+        RetryDecision::Retry { delay: self.delay }
+    }
+    fn name(&self) -> &'static str {
+        "always"
+    }
+}
+
+/// `fixed`: at most `max_attempts` total attempts, each retried after
+/// a constant `delay`.
+#[derive(Clone, Copy, Debug)]
+pub struct FixedRetry {
+    pub max_attempts: u32,
+    pub delay: SimTime,
+}
+
+impl FixedRetry {
+    pub fn new(max_attempts: u32, delay: SimTime) -> Self {
+        FixedRetry {
+            max_attempts: max_attempts.max(1),
+            delay,
+        }
+    }
+}
+
+impl RetryPolicy for FixedRetry {
+    fn decide(&mut self, ctx: &RetryCtx) -> RetryDecision {
+        if ctx.attempt >= self.max_attempts {
+            RetryDecision::Abandon
+        } else {
+            RetryDecision::Retry { delay: self.delay }
+        }
+    }
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+}
+
+/// Deterministic exponential backoff: `base * 2^(attempt-1)`, capped.
+fn backoff(base: SimTime, cap: SimTime, attempt: u32) -> SimTime {
+    // attempt is 1-based; saturate the shift so huge attempt counts
+    // don't overflow into garbage
+    let exp = (attempt.saturating_sub(1)).min(62);
+    (base * (1u64 << exp) as f64).min(cap)
+}
+
+/// `exp_backoff`: exponential backoff (`base`, doubling per attempt,
+/// capped at `cap`) with a hard attempt budget.
+#[derive(Clone, Copy, Debug)]
+pub struct ExpBackoffRetry {
+    pub base: SimTime,
+    pub cap: SimTime,
+    pub max_attempts: u32,
+}
+
+impl ExpBackoffRetry {
+    pub fn new(base: SimTime, cap: SimTime, max_attempts: u32) -> Self {
+        ExpBackoffRetry {
+            base: base.max(0.0),
+            cap: cap.max(0.0),
+            max_attempts: max_attempts.max(1),
+        }
+    }
+}
+
+impl RetryPolicy for ExpBackoffRetry {
+    fn decide(&mut self, ctx: &RetryCtx) -> RetryDecision {
+        if ctx.attempt >= self.max_attempts {
+            RetryDecision::Abandon
+        } else {
+            RetryDecision::Retry {
+                delay: backoff(self.base, self.cap, ctx.attempt),
+            }
+        }
+    }
+    fn name(&self) -> &'static str {
+        "exp_backoff"
+    }
+}
+
+/// `deadline_aware`: exponential backoff that gives up as soon as
+/// another attempt cannot plausibly finish before the pipeline's EDF
+/// deadline. The next attempt's span is estimated from history as
+/// `elapsed / attempt` (mean time per attempt so far, queueing
+/// included); if `backoff + estimate` exceeds the remaining slack the
+/// pipeline is abandoned immediately rather than burning cluster time
+/// on a result that will arrive too late.
+#[derive(Clone, Copy, Debug)]
+pub struct DeadlineAwareRetry {
+    pub base: SimTime,
+    pub cap: SimTime,
+}
+
+impl DeadlineAwareRetry {
+    pub fn new(base: SimTime, cap: SimTime) -> Self {
+        DeadlineAwareRetry {
+            base: base.max(0.0),
+            cap: cap.max(0.0),
+        }
+    }
+}
+
+impl RetryPolicy for DeadlineAwareRetry {
+    fn decide(&mut self, ctx: &RetryCtx) -> RetryDecision {
+        let delay = backoff(self.base, self.cap, ctx.attempt);
+        let per_attempt = ctx.elapsed / ctx.attempt.max(1) as f64;
+        if delay + per_attempt > ctx.deadline_slack {
+            RetryDecision::Abandon
+        } else {
+            RetryDecision::Retry { delay }
+        }
+    }
+    fn name(&self) -> &'static str {
+        "deadline_aware"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(attempt: u32, elapsed: f64, slack: f64) -> RetryCtx {
+        RetryCtx {
+            attempt,
+            elapsed,
+            deadline_slack: slack,
+            queue_depth: 0,
+        }
+    }
+
+    #[test]
+    fn always_retries_forever() {
+        let mut p = AlwaysRetry::new(5.0);
+        for attempt in [1, 10, 1000] {
+            assert_eq!(
+                p.decide(&ctx(attempt, 1e6, -1e6)),
+                RetryDecision::Retry { delay: 5.0 }
+            );
+        }
+    }
+
+    #[test]
+    fn fixed_caps_attempts() {
+        let mut p = FixedRetry::new(3, 2.0);
+        assert_eq!(p.decide(&ctx(1, 0.0, 0.0)), RetryDecision::Retry { delay: 2.0 });
+        assert_eq!(p.decide(&ctx(2, 0.0, 0.0)), RetryDecision::Retry { delay: 2.0 });
+        assert_eq!(p.decide(&ctx(3, 0.0, 0.0)), RetryDecision::Abandon);
+        // degenerate budget still allows the first attempt to fail hard
+        let mut p = FixedRetry::new(0, 2.0);
+        assert_eq!(p.decide(&ctx(1, 0.0, 0.0)), RetryDecision::Abandon);
+    }
+
+    #[test]
+    fn exp_backoff_doubles_and_caps() {
+        let mut p = ExpBackoffRetry::new(10.0, 35.0, 10);
+        assert_eq!(p.decide(&ctx(1, 0.0, 0.0)), RetryDecision::Retry { delay: 10.0 });
+        assert_eq!(p.decide(&ctx(2, 0.0, 0.0)), RetryDecision::Retry { delay: 20.0 });
+        assert_eq!(p.decide(&ctx(3, 0.0, 0.0)), RetryDecision::Retry { delay: 35.0 });
+        assert_eq!(p.decide(&ctx(9, 0.0, 0.0)), RetryDecision::Retry { delay: 35.0 });
+        assert_eq!(p.decide(&ctx(10, 0.0, 0.0)), RetryDecision::Abandon);
+        // saturating shift: absurd attempt numbers stay finite
+        assert!(backoff(1.0, f64::MAX, u32::MAX).is_finite());
+    }
+
+    #[test]
+    fn deadline_aware_gives_up_when_slack_runs_out() {
+        let mut p = DeadlineAwareRetry::new(10.0, 3600.0);
+        // attempt 1 took 100s; slack 500s → 10 + 100 fits
+        assert_eq!(
+            p.decide(&ctx(1, 100.0, 500.0)),
+            RetryDecision::Retry { delay: 10.0 }
+        );
+        // slack 50s → 10 + 100 does not fit
+        assert_eq!(p.decide(&ctx(1, 100.0, 50.0)), RetryDecision::Abandon);
+        // past the deadline entirely
+        assert_eq!(p.decide(&ctx(2, 100.0, -1.0)), RetryDecision::Abandon);
+    }
+}

@@ -7,9 +7,12 @@
 //!   fit            --db DB.json --out PARAMS.json [--cpu]
 //!   simulate       --params PARAMS.json [--config CFG.json] [--days D]
 //!                  [--arrival random|profile|poisson:SECS] [--seed S]
-//!                  [--scheduler SPEC] [--trigger SPEC]
+//!                  [--scheduler SPEC] [--trigger SPEC] [--retry SPEC]
 //!                  [--retention SECS] [--metrics FILE]
 //!                  [--cpu] [--export CSV]
+//!                  — --retry sets the task-fault retry policy (the
+//!                  fault model itself comes from the config file's
+//!                  `faults` block)
 //!                  — --retention rolls the run's time series into
 //!                  fixed windows of that many seconds (bounded memory,
 //!                  sketched quantiles) instead of keeping raw points;
@@ -24,6 +27,8 @@
 //!                  [--triggers never,drift_threshold:threshold=0.05]
 //!                  [--mtbf 3600,14400,inf] [--mttr 600]
 //!                  [--checkpoint-intervals 0,600,3600]
+//!                  [--fault-rates 3600,inf] [--retries always,exp_backoff]
+//!                  [--queue-caps 0,64]
 //!                  [--hw-classes a100:2:2.0:0.004+k80:6:1.0:0.001,v100:8]
 //!                  [--placers fastest_fit,cheapest_fit,pack,spread]
 //!                  [--traces] [--trace-dir DIR] [--retention SECS]
@@ -44,7 +49,13 @@
 //!                  failures on the training cluster with mean repair
 //!                  --mttr, 'inf' = failures off, and
 //!                  --checkpoint-intervals varies the checkpoint period
-//!                  of every failing cluster; --hw-classes variants are
+//!                  of every failing cluster; --fault-rates injects
+//!                  transient *task* faults on both clusters with the
+//!                  given mean time-to-fault in seconds ('inf' = faults
+//!                  off), --retries varies the retry policy consulted
+//!                  after each fault/timeout, and --queue-caps varies
+//!                  the training cluster's admission-control bound
+//!                  (0 = shedding off); --hw-classes variants are
 //!                  comma-separated training-cluster class mixes, classes
 //!                  '+'-joined with fields name:slots[:speed[:cost_per_sec]],
 //!                  and --placers varies the placement strategy over them;
@@ -99,7 +110,9 @@ use pipesim::coordinator::{
 use pipesim::des::DAY;
 use pipesim::empirical::{AnalyticsDb, GroundTruth};
 use pipesim::error::Error;
-use pipesim::model::{ClusterFailureConfig, FailureModel, HwClass, HwClasses};
+use pipesim::model::{
+    ClusterFailureConfig, FailureModel, FaultModel, HwClass, HwClasses, TaskFaultConfig,
+};
 use pipesim::obs::{render_metrics_json, render_openmetrics, render_sweep_openmetrics};
 use pipesim::runtime::Runtime;
 use pipesim::trace::{StreamingPstSink, TraceScanner, TraceWorkload};
@@ -226,6 +239,15 @@ fn main() -> Result<()> {
                     cfg.runtime_view.enabled = true;
                 }
             }
+            if let Some(s) = args.get_opt("retry") {
+                // the policy rides on the fault model; without a
+                // `faults` block in the config it can never be consulted,
+                // so materialize an (inert) model to carry it
+                cfg.infra
+                    .faults
+                    .get_or_insert_with(FaultModel::default)
+                    .retry = StrategySpec::parse(&s)?;
+            }
             if let Some(r) = args.get_parse_opt::<f64>("retention")? {
                 cfg.retention = Some(RetentionConfig { resolution: r });
             }
@@ -281,6 +303,9 @@ fn main() -> Result<()> {
             let mtbf = args.get_opt("mtbf");
             let mttr: f64 = args.get_parse("mttr", 600.0)?;
             let checkpoint_intervals = args.get_opt("checkpoint-intervals");
+            let fault_rates = args.get_opt("fault-rates");
+            let retries = args.get_opt("retries");
+            let queue_caps = args.get_opt("queue-caps");
             let hw_classes = args.get_opt("hw-classes");
             let placers = args.get_opt("placers");
             let cpu = args.flag("cpu");
@@ -396,6 +421,36 @@ fn main() -> Result<()> {
                         }
                         Ok(Some(c))
                     })
+                    .collect::<Result<_>>()?,
+                None => vec![None],
+            };
+            // task-fault axes: mean time-to-transient-fault in seconds
+            // ('inf' = a fault-free cell) × retry policies × training
+            // admission-control queue caps (0 = shedding off)
+            let faults_axis: Vec<Option<f64>> = match &fault_rates {
+                Some(list) => list
+                    .split(',')
+                    .map(|v| {
+                        let v = v.trim();
+                        if v == "inf" {
+                            return Ok(Some(f64::INFINITY));
+                        }
+                        let m: f64 = v.parse()?;
+                        if m <= 0.0 {
+                            return Err(Error::Config(
+                                "--fault-rates: mean must be > 0 seconds (or 'inf')".into(),
+                            ));
+                        }
+                        Ok(Some(m))
+                    })
+                    .collect::<Result<_>>()?,
+                None => vec![None],
+            };
+            let retry_axis = spec_axis(&retries)?;
+            let caps_axis: Vec<Option<u64>> = match &queue_caps {
+                Some(list) => list
+                    .split(',')
+                    .map(|v| v.trim().parse::<u64>().map(Some).map_err(Error::from))
                     .collect::<Result<_>>()?,
                 None => vec![None],
             };
@@ -524,6 +579,55 @@ fn main() -> Result<()> {
                         }
                     }
                     name.push_str(&format!("-ckpt{ci}"));
+                }),
+                // --fault-rates varies transient *task* faults on both
+                // clusters; a config-file fault model keeps its timeout/
+                // queue-cap/retry knobs, only the fault-time distribution
+                // is swept. 'inf' clears the fault-time on every cluster,
+                // making the cell the exact fault-free baseline (an inert
+                // fault config is digest-identical to none at all)
+                axis(&faults_axis, |m, cfg, name| {
+                    if m.is_infinite() {
+                        if let Some(fm) = &mut cfg.infra.faults {
+                            for fc in [&mut fm.training, &mut fm.compute] {
+                                if let Some(fc) = fc {
+                                    fc.fault_time = None;
+                                }
+                            }
+                        }
+                        name.push_str("-fault:inf");
+                    } else {
+                        let fresh = TaskFaultConfig::transient(*m);
+                        let fm = cfg.infra.faults.get_or_insert_with(FaultModel::default);
+                        for fc in [&mut fm.training, &mut fm.compute] {
+                            let base = fc.take().unwrap_or_default();
+                            *fc = Some(TaskFaultConfig {
+                                fault_time: fresh.fault_time.clone(),
+                                ..base
+                            });
+                        }
+                        name.push_str(&format!("-fault{m}"));
+                    }
+                }),
+                // --retries varies the policy consulted after each task
+                // fault/timeout; it rides on the fault model, so a cell
+                // without one gets an inert carrier (label still applies
+                // for grid-shape invariance)
+                axis(&retry_axis, |s, cfg, name| {
+                    cfg.infra.faults.get_or_insert_with(FaultModel::default).retry = s.clone();
+                    name.push_str(&format!("-re:{}", s.label()));
+                }),
+                // --queue-caps varies the training cluster's admission-
+                // control bound (the saturating cluster, like --mtbf);
+                // 0 turns shedding off
+                axis(&caps_axis, |q, cfg, name| {
+                    let fm = cfg.infra.faults.get_or_insert_with(FaultModel::default);
+                    let base = fm.training.take().unwrap_or_default();
+                    fm.training = Some(TaskFaultConfig {
+                        queue_cap: *q,
+                        ..base
+                    });
+                    name.push_str(&format!("-qcap{q}"));
                 }),
                 // --hw-classes replaces the training cluster's class mix
                 // (capacity follows the slot sum so the cell is

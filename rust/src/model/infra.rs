@@ -155,6 +155,121 @@ impl FailureModel {
     }
 }
 
+/// Task-level fault behavior of one cluster (the complement of
+/// [`ClusterFailureConfig`], which models *infrastructure* failures):
+/// each running attempt independently draws a fault time from
+/// `fault_time` and fails transiently if that lands before the attempt
+/// completes; attempts running longer than `timeout` are killed; and
+/// fresh pipelines arriving while the cluster's wait queue holds
+/// `queue_cap` or more jobs are shed outright (admission control).
+/// What happens after a fault/timeout is the retry policy's call
+/// (see [`FaultModel::retry`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskFaultConfig {
+    /// Distribution of per-attempt transient-fault times, seconds.
+    /// `None` disables transient faults (timeout/shedding still apply),
+    /// and — because fault times are drawn on a dedicated RNG substream
+    /// only when this is set — leaves every other stream untouched.
+    pub fault_time: Option<Dist>,
+    /// Per-attempt wall-clock budget, seconds; attempts still running
+    /// after this are killed and routed through the retry policy.
+    /// `0.0` disables timeouts.
+    pub timeout: f64,
+    /// Admission-control bound on the cluster's wait queue: a fresh
+    /// pipeline whose first task would queue behind `queue_cap` or more
+    /// waiting jobs is shed (terminal outcome, no retry). `0` disables
+    /// shedding. Retries and mid-pipeline tasks are always admitted.
+    pub queue_cap: u64,
+}
+
+impl Default for TaskFaultConfig {
+    fn default() -> Self {
+        TaskFaultConfig {
+            fault_time: None,
+            timeout: 0.0,
+            queue_cap: 0,
+        }
+    }
+}
+
+impl TaskFaultConfig {
+    /// Memoryless transient faults with the given mean time-to-fault,
+    /// the standard reliability baseline.
+    pub fn transient(mean_time_to_fault: f64) -> Self {
+        assert!(mean_time_to_fault > 0.0);
+        TaskFaultConfig {
+            fault_time: Some(Dist::Exponential(Exponential::new(1.0 / mean_time_to_fault))),
+            ..Default::default()
+        }
+    }
+
+    /// Builder-style per-attempt timeout.
+    pub fn with_timeout(mut self, timeout: f64) -> Self {
+        self.timeout = timeout;
+        self
+    }
+
+    /// Builder-style admission-control queue cap.
+    pub fn with_queue_cap(mut self, cap: u64) -> Self {
+        self.queue_cap = cap;
+        self
+    }
+
+    /// True when every knob is off — behaviorally identical to no
+    /// fault config at all.
+    pub fn is_inert(&self) -> bool {
+        self.fault_time.is_none() && self.timeout == 0.0 && self.queue_cap == 0
+    }
+}
+
+/// Per-cluster task-fault injection plus the retry policy that decides
+/// what happens after each fault or timeout. `None` for a cluster means
+/// its tasks never fault. The whole model is optional on
+/// [`InfraConfig`] — the default (`None`) draws nothing from the fault
+/// RNG substream and keeps every pre-existing digest byte-identical.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultModel {
+    pub training: Option<TaskFaultConfig>,
+    pub compute: Option<TaskFaultConfig>,
+    /// Retry strategy consulted after every task fault/timeout (see
+    /// `coordinator::strategy::retry_policy_names`). Default `always`.
+    pub retry: StrategySpec,
+}
+
+impl Default for FaultModel {
+    fn default() -> Self {
+        FaultModel {
+            training: None,
+            compute: None,
+            retry: StrategySpec::new("always"),
+        }
+    }
+}
+
+impl FaultModel {
+    /// Same fault behavior on both clusters.
+    pub fn uniform(cfg: TaskFaultConfig) -> Self {
+        FaultModel {
+            training: Some(cfg.clone()),
+            compute: Some(cfg),
+            ..Default::default()
+        }
+    }
+
+    pub fn for_kind(&self, kind: ResourceKind) -> Option<&TaskFaultConfig> {
+        match kind {
+            ResourceKind::Training => self.training.as_ref(),
+            ResourceKind::Compute => self.compute.as_ref(),
+        }
+    }
+
+    /// True when no cluster can fault (equivalent to `faults: None`;
+    /// the retry spec is irrelevant when nothing ever fails).
+    pub fn is_empty(&self) -> bool {
+        self.training.is_none() && self.compute.is_none()
+    }
+}
+
 /// One hardware class inside a cluster: a named group of slots with a
 /// common execution-speed profile and price. Classes model mixed fleets —
 /// GPU generations, CPU pools, spot vs reserved capacity — where both
@@ -314,6 +429,10 @@ pub struct InfraConfig {
     /// pools; this is the default and keeps every pre-existing digest
     /// byte-identical).
     pub hw_classes: Option<HwClasses>,
+    /// Task-level fault injection + retry policy (`None` → tasks never
+    /// fault; this is the default and keeps every pre-existing digest
+    /// byte-identical).
+    pub faults: Option<FaultModel>,
     pub store: StoreConfig,
 }
 
@@ -328,6 +447,7 @@ impl Default for InfraConfig {
             scheduler_compute: None,
             failures: None,
             hw_classes: None,
+            faults: None,
             store: StoreConfig::default(),
         }
     }
@@ -402,6 +522,26 @@ impl InfraConfig {
     pub fn placer_label(&self) -> Option<String> {
         match &self.hw_classes {
             Some(hw) if !hw.is_empty() => Some(hw.placer.label()),
+            _ => None,
+        }
+    }
+
+    /// Task-fault behavior of `kind`'s cluster, when any is configured.
+    pub fn fault_for(&self, kind: ResourceKind) -> Option<&TaskFaultConfig> {
+        self.faults.as_ref().and_then(|f| f.for_kind(kind))
+    }
+
+    /// The retry-policy spec, when a fault model is configured.
+    pub fn retry_spec(&self) -> Option<&StrategySpec> {
+        self.faults.as_ref().map(|f| &f.retry)
+    }
+
+    /// Compact retry-policy label for reports and trace metadata;
+    /// `None` when no fault model is configured (so pre-PR trace
+    /// metadata is byte-identical).
+    pub fn retry_label(&self) -> Option<String> {
+        match &self.faults {
+            Some(f) if !f.is_empty() => Some(f.retry.label()),
             _ => None,
         }
     }
@@ -570,6 +710,53 @@ mod tests {
         // compute has no classes: it stays a homogeneous pool
         assert!(c.hw_classes_for(ResourceKind::Compute).is_none());
         assert_eq!(c.placer_label().as_deref(), Some("pack"));
+    }
+
+    #[test]
+    fn fault_model_roundtrips_json_and_stays_optional() {
+        use crate::util::jsonio::JsonIo;
+        let mut c = InfraConfig::default();
+        c.faults = Some(FaultModel {
+            training: Some(
+                TaskFaultConfig::transient(3600.0)
+                    .with_timeout(1800.0)
+                    .with_queue_cap(16),
+            ),
+            compute: None,
+            retry: StrategySpec::new("exp_backoff").with("max_attempts", 4.0),
+        });
+        let back =
+            InfraConfig::from_json(&crate::util::Json::parse(&c.to_json().to_string()).unwrap())
+                .unwrap();
+        assert_eq!(c, back);
+        assert_eq!(
+            c.fault_for(ResourceKind::Training).map(|f| f.queue_cap),
+            Some(16)
+        );
+        assert!(c.fault_for(ResourceKind::Compute).is_none());
+        assert_eq!(c.retry_label().as_deref(), Some("exp_backoff:max_attempts=4"));
+        // the default emits no faults key, so pre-PR config JSON (and
+        // the config embedded in existing traces) is unchanged
+        let plain = InfraConfig::default().to_json().to_string();
+        assert!(!plain.contains("faults"), "{plain}");
+    }
+
+    #[test]
+    fn fault_model_helpers() {
+        let f = FaultModel::uniform(TaskFaultConfig::transient(1e4));
+        assert!(!f.is_empty());
+        assert!(f.for_kind(ResourceKind::Training).is_some());
+        assert!(f.for_kind(ResourceKind::Compute).is_some());
+        assert_eq!(f.retry.name, "always");
+        assert!(FaultModel::default().is_empty());
+        assert!(TaskFaultConfig::default().is_inert());
+        assert!(!TaskFaultConfig::transient(100.0).is_inert());
+        assert!(!TaskFaultConfig::default().with_queue_cap(1).is_inert());
+        // no fault model → no retry label, like placer_label
+        let c = InfraConfig::default();
+        assert!(c.retry_label().is_none());
+        assert!(c.retry_spec().is_none());
+        assert!(c.fault_for(ResourceKind::Training).is_none());
     }
 
     #[test]

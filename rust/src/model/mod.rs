@@ -13,7 +13,8 @@ pub use asset::{DataAsset, ModelMetrics, TrainedModel};
 pub use compression::CompressionModel;
 pub use executor::{Op, TaskExecutor};
 pub use infra::{
-    ClusterFailureConfig, FailureModel, HwClass, HwClasses, InfraConfig, ResourceKind, StoreConfig,
+    ClusterFailureConfig, FailureModel, FaultModel, HwClass, HwClasses, InfraConfig, ResourceKind,
+    StoreConfig, TaskFaultConfig,
 };
 pub use pipeline::{Pipeline, PipelineId, PipelineTemplate};
 pub use task::{Framework, ModelType, PredictionType, TaskType};

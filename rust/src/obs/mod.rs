@@ -18,7 +18,7 @@ pub use export::{render_metrics_json, render_openmetrics, render_sweep_openmetri
 /// Event kinds of the simulation loop, in `Event` discriminant order.
 /// The simulation maps its event enum to these indices — `obs` stays
 /// independent of the coordinator's types on the hot path.
-pub const EVENT_KINDS: [&str; 9] = [
+pub const EVENT_KINDS: [&str; 12] = [
     "arrival",
     "task_done",
     "monitor",
@@ -28,6 +28,9 @@ pub const EVENT_KINDS: [&str; 9] = [
     "slot_repaired",
     "class_failed",
     "class_repaired",
+    "task_fault",
+    "task_timeout",
+    "task_retry",
 ];
 
 /// Hot-path self-profiling accumulator, owned by the simulation.

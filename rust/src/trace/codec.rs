@@ -65,6 +65,12 @@
 //!   when hardware classes are configured) under the same
 //!   lowest-version-that-fits rule: class-free captures keep their old
 //!   stamps and stay byte-identical to pre-class builds.
+//!   Version 6 added the task-level fault records (`task_failed` /
+//!   `task_retried` / `task_timed_out` / `task_shed` /
+//!   `pipeline_abandoned`), emitted only when a fault model is
+//!   configured. The same rule holds: fault-free captures keep stamping
+//!   their old versions and stay byte-identical to pre-fault builds,
+//!   and a v6 tag under an older header is rejected by name.
 
 use crate::error::{Error, Result};
 use crate::model::{Framework, ResourceKind, TaskType};
@@ -80,7 +86,7 @@ pub const MAGIC: &[u8; 4] = b"PSTR";
 /// represent it (see [`needed_version`]); the decoder accepts
 /// `1..=FORMAT_VERSION`, dispatching `STREAM_VERSION` files to the
 /// footer-offset reader.
-pub const FORMAT_VERSION: u16 = 5;
+pub const FORMAT_VERSION: u16 = 6;
 /// First version of the streamed footer-offset layout (see the module
 /// docs). Stamped only by `trace::StreamingPstSink`, which cannot know
 /// the event count — or whether preemption/failure records will occur —
@@ -120,10 +126,18 @@ const TAG_TASK_CHECKPOINTED: u8 = 15;
 const TAG_TASK_RESTARTED: u8 = 16;
 // version 5 (heterogeneous hardware classes)
 const TAG_TASK_PLACED: u8 = 17;
+// version 6 (task-level faults)
+const TAG_TASK_FAILED: u8 = 18;
+const TAG_TASK_RETRIED: u8 = 19;
+const TAG_TASK_TIMED_OUT: u8 = 20;
+const TAG_TASK_SHED: u8 = 21;
+const TAG_PIPELINE_ABANDONED: u8 = 22;
 
 /// First format version that can carry `tag`.
 pub(super) fn tag_min_version(tag: u8) -> u16 {
-    if tag >= TAG_TASK_PLACED {
+    if tag >= TAG_TASK_FAILED {
+        6
+    } else if tag >= TAG_TASK_PLACED {
         5
     } else if tag >= TAG_SLOT_FAILED {
         4
@@ -139,6 +153,11 @@ pub(super) fn tag_min_version(tag: u8) -> u16 {
 /// whether its header must be patched up to version 4.
 pub(crate) fn kind_min_version(kind: &TraceEventKind) -> u16 {
     match kind {
+        TraceEventKind::TaskFailed { .. }
+        | TraceEventKind::TaskRetried { .. }
+        | TraceEventKind::TaskTimedOut { .. }
+        | TraceEventKind::TaskShed { .. }
+        | TraceEventKind::PipelineAbandoned { .. } => 6,
         TraceEventKind::TaskPlaced { .. } => 5,
         TraceEventKind::SlotFailed { .. }
         | TraceEventKind::SlotRepaired { .. }
@@ -444,6 +463,68 @@ pub(crate) fn encode_kind(w: &mut ByteWriter, tab: &mut InternTable, kind: &Trac
             w.varint(class as u64);
             w.varint(slots as u64);
         }
+        TraceEventKind::TaskFailed {
+            pid,
+            task,
+            resource,
+            attempt,
+            elapsed,
+        } => {
+            w.u8(TAG_TASK_FAILED);
+            w.varint(pid as u64);
+            sid(w, tab, task.name());
+            sid(w, tab, resource.name());
+            w.varint(attempt as u64);
+            w.f64(elapsed);
+        }
+        TraceEventKind::TaskRetried {
+            pid,
+            task,
+            resource,
+            attempt,
+            delay,
+        } => {
+            w.u8(TAG_TASK_RETRIED);
+            w.varint(pid as u64);
+            sid(w, tab, task.name());
+            sid(w, tab, resource.name());
+            w.varint(attempt as u64);
+            w.f64(delay);
+        }
+        TraceEventKind::TaskTimedOut {
+            pid,
+            task,
+            resource,
+            elapsed,
+        } => {
+            w.u8(TAG_TASK_TIMED_OUT);
+            w.varint(pid as u64);
+            sid(w, tab, task.name());
+            sid(w, tab, resource.name());
+            w.f64(elapsed);
+        }
+        TraceEventKind::TaskShed {
+            pid,
+            task,
+            resource,
+            queue_depth,
+        } => {
+            w.u8(TAG_TASK_SHED);
+            w.varint(pid as u64);
+            sid(w, tab, task.name());
+            sid(w, tab, resource.name());
+            w.varint(queue_depth as u64);
+        }
+        TraceEventKind::PipelineAbandoned {
+            pid,
+            attempts,
+            makespan,
+        } => {
+            w.u8(TAG_PIPELINE_ABANDONED);
+            w.varint(pid as u64);
+            w.varint(attempts as u64);
+            w.f64(makespan);
+        }
         TraceEventKind::ModelDeployed {
             slot,
             performance,
@@ -573,7 +654,7 @@ pub(super) fn decode_kind<R: BinRead>(
         }
     }
     let tag = r.u8()?;
-    if tag <= TAG_TASK_PLACED && tag_min_version(tag) > version {
+    if tag <= TAG_PIPELINE_ABANDONED && tag_min_version(tag) > version {
         // a tag from a newer layout inside an old-version header: the
         // file is corrupt or mislabeled — refuse rather than misread
         return Err(Error::Other(format!(
@@ -677,6 +758,37 @@ pub(super) fn decode_kind<R: BinRead>(
         },
         TAG_RETRAIN_LAUNCHED => TraceEventKind::RetrainLaunched {
             slot: pid32(r.varint()?)?,
+        },
+        TAG_TASK_FAILED => TraceEventKind::TaskFailed {
+            pid: pid32(r.varint()?)?,
+            task: task_by_name(lookup(names, r.varint()?)?)?,
+            resource: resource_by_name(lookup(names, r.varint()?)?)?,
+            attempt: pid32(r.varint()?)?,
+            elapsed: r.f64()?,
+        },
+        TAG_TASK_RETRIED => TraceEventKind::TaskRetried {
+            pid: pid32(r.varint()?)?,
+            task: task_by_name(lookup(names, r.varint()?)?)?,
+            resource: resource_by_name(lookup(names, r.varint()?)?)?,
+            attempt: pid32(r.varint()?)?,
+            delay: r.f64()?,
+        },
+        TAG_TASK_TIMED_OUT => TraceEventKind::TaskTimedOut {
+            pid: pid32(r.varint()?)?,
+            task: task_by_name(lookup(names, r.varint()?)?)?,
+            resource: resource_by_name(lookup(names, r.varint()?)?)?,
+            elapsed: r.f64()?,
+        },
+        TAG_TASK_SHED => TraceEventKind::TaskShed {
+            pid: pid32(r.varint()?)?,
+            task: task_by_name(lookup(names, r.varint()?)?)?,
+            resource: resource_by_name(lookup(names, r.varint()?)?)?,
+            queue_depth: pid32(r.varint()?)?,
+        },
+        TAG_PIPELINE_ABANDONED => TraceEventKind::PipelineAbandoned {
+            pid: pid32(r.varint()?)?,
+            attempts: pid32(r.varint()?)?,
+            makespan: r.f64()?,
         },
         TAG_MODEL_DEPLOYED => TraceEventKind::ModelDeployed {
             slot: pid32(r.varint()?)?,
@@ -913,6 +1025,63 @@ fn event_json(ev: &TraceEvent) -> Json {
             fields.push(("class", Json::Num(class as f64)));
             fields.push(("slots", Json::Num(slots as f64)));
         }
+        TraceEventKind::TaskFailed {
+            pid,
+            task,
+            resource,
+            attempt,
+            elapsed,
+        } => {
+            fields.push(("pid", Json::Num(pid as f64)));
+            fields.push(("task", Json::Str(task.name().into())));
+            fields.push(("resource", Json::Str(resource.name().into())));
+            fields.push(("attempt", Json::Num(attempt as f64)));
+            fields.push(("elapsed", Json::Num(elapsed)));
+        }
+        TraceEventKind::TaskRetried {
+            pid,
+            task,
+            resource,
+            attempt,
+            delay,
+        } => {
+            fields.push(("pid", Json::Num(pid as f64)));
+            fields.push(("task", Json::Str(task.name().into())));
+            fields.push(("resource", Json::Str(resource.name().into())));
+            fields.push(("attempt", Json::Num(attempt as f64)));
+            fields.push(("delay", Json::Num(delay)));
+        }
+        TraceEventKind::TaskTimedOut {
+            pid,
+            task,
+            resource,
+            elapsed,
+        } => {
+            fields.push(("pid", Json::Num(pid as f64)));
+            fields.push(("task", Json::Str(task.name().into())));
+            fields.push(("resource", Json::Str(resource.name().into())));
+            fields.push(("elapsed", Json::Num(elapsed)));
+        }
+        TraceEventKind::TaskShed {
+            pid,
+            task,
+            resource,
+            queue_depth,
+        } => {
+            fields.push(("pid", Json::Num(pid as f64)));
+            fields.push(("task", Json::Str(task.name().into())));
+            fields.push(("resource", Json::Str(resource.name().into())));
+            fields.push(("queue_depth", Json::Num(queue_depth as f64)));
+        }
+        TraceEventKind::PipelineAbandoned {
+            pid,
+            attempts,
+            makespan,
+        } => {
+            fields.push(("pid", Json::Num(pid as f64)));
+            fields.push(("attempts", Json::Num(attempts as f64)));
+            fields.push(("makespan", Json::Num(makespan)));
+        }
         TraceEventKind::ModelDeployed {
             slot,
             performance,
@@ -1102,6 +1271,52 @@ mod tests {
                     retrain_of: Some(u32::MAX - 1),
                 },
             ),
+            e(
+                7300.0,
+                TraceEventKind::TaskFailed {
+                    pid: 11,
+                    task: TaskType::Train,
+                    resource: ResourceKind::Training,
+                    attempt: 2,
+                    elapsed: 456.789,
+                },
+            ),
+            e(
+                7300.0,
+                TraceEventKind::TaskRetried {
+                    pid: 11,
+                    task: TaskType::Train,
+                    resource: ResourceKind::Training,
+                    attempt: 2,
+                    delay: 120.0,
+                },
+            ),
+            e(
+                7400.0,
+                TraceEventKind::TaskTimedOut {
+                    pid: 12,
+                    task: TaskType::Evaluate,
+                    resource: ResourceKind::Compute,
+                    elapsed: 900.0,
+                },
+            ),
+            e(
+                7400.0,
+                TraceEventKind::TaskShed {
+                    pid: 13,
+                    task: TaskType::Preprocess,
+                    resource: ResourceKind::Compute,
+                    queue_depth: 64,
+                },
+            ),
+            e(
+                7500.0,
+                TraceEventKind::PipelineAbandoned {
+                    pid: 11,
+                    attempts: 5,
+                    makespan: 3210.987_654,
+                },
+            ),
         ]
     }
 
@@ -1165,7 +1380,7 @@ mod tests {
                     t += rng.uniform() * 100.0;
                     let task = TaskType::ALL[rng.below(6)];
                     let fw = Framework::ALL[rng.below(5)];
-                    let kind = match rng.below(18) {
+                    let kind = match rng.below(23) {
                         0 => TraceEventKind::ArrivalGapDrawn {
                             gap: rng.uniform() * 1e4,
                         },
@@ -1259,12 +1474,43 @@ mod tests {
                             resource: ResourceKind::for_task(task),
                             remaining: rng.uniform() * 1e3,
                         },
-                        _ => TraceEventKind::TaskPlaced {
+                        17 => TraceEventKind::TaskPlaced {
                             pid: i,
                             task,
                             resource: ResourceKind::for_task(task),
                             class: rng.below(4) as u32,
                             slots: 1 + rng.below(4) as u32,
+                        },
+                        18 => TraceEventKind::TaskFailed {
+                            pid: i,
+                            task,
+                            resource: ResourceKind::for_task(task),
+                            attempt: 1 + rng.below(9) as u32,
+                            elapsed: rng.uniform() * 1e3,
+                        },
+                        19 => TraceEventKind::TaskRetried {
+                            pid: i,
+                            task,
+                            resource: ResourceKind::for_task(task),
+                            attempt: 1 + rng.below(9) as u32,
+                            delay: rng.uniform() * 1e3,
+                        },
+                        20 => TraceEventKind::TaskTimedOut {
+                            pid: i,
+                            task,
+                            resource: ResourceKind::for_task(task),
+                            elapsed: rng.uniform() * 1e3,
+                        },
+                        21 => TraceEventKind::TaskShed {
+                            pid: i,
+                            task,
+                            resource: ResourceKind::for_task(task),
+                            queue_depth: rng.below(256) as u32,
+                        },
+                        _ => TraceEventKind::PipelineAbandoned {
+                            pid: i,
+                            attempts: 1 + rng.below(9) as u32,
+                            makespan: rng.uniform() * 1e5,
                         },
                     };
                     TraceEvent { t, kind }
@@ -1351,15 +1597,33 @@ mod tests {
         assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 4);
         assert_eq!(u16::from_le_bytes([bytes[6], bytes[7]]), 0);
         assert_eq!(decode(&bytes).unwrap(), v4);
-        // placement records -> version 5; all_kinds has one
+        // placement records (but no fault records) -> version 5
         let v5 = Trace {
             meta: meta(),
-            events: all_kinds(),
+            events: vec![TraceEvent {
+                t: 1.0,
+                kind: TraceEventKind::TaskPlaced {
+                    pid: 8,
+                    task: TaskType::Train,
+                    resource: ResourceKind::Training,
+                    class: 1,
+                    slots: 2,
+                },
+            }],
         };
         let bytes = encode(&v5);
         assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 5);
         assert_eq!(u16::from_le_bytes([bytes[6], bytes[7]]), 0);
         assert_eq!(decode(&bytes).unwrap(), v5);
+        // fault records -> version 6; all_kinds has them
+        let v6 = Trace {
+            meta: meta(),
+            events: all_kinds(),
+        };
+        let bytes = encode(&v6);
+        assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 6);
+        assert_eq!(u16::from_le_bytes([bytes[6], bytes[7]]), 0);
+        assert_eq!(decode(&bytes).unwrap(), v6);
     }
 
     #[test]
@@ -1372,7 +1636,7 @@ mod tests {
             events: all_kinds(),
         };
         let mut bytes = encode(&t);
-        assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 5);
+        assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 6);
         bytes[4] = 1;
         bytes[5] = 0;
         // the preemption record comes first in all_kinds, so the v1
@@ -1400,6 +1664,16 @@ mod tests {
         let err = decode(&bytes).unwrap_err().to_string();
         assert!(
             err.contains("requires format version 5"),
+            "unexpected error: {err}"
+        );
+        // a v5 relabel admits the placement record but trips on the
+        // fault records
+        let mut bytes = encode(&t);
+        bytes[4] = 5;
+        bytes[5] = 0;
+        let err = decode(&bytes).unwrap_err().to_string();
+        assert!(
+            err.contains("requires format version 6"),
             "unexpected error: {err}"
         );
         // and a future version is refused up front

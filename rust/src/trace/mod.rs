@@ -231,6 +231,70 @@ pub enum TraceEventKind {
         /// Slots taken from that class.
         slots: u32,
     },
+    /// A running attempt was hit by a transient task fault (the
+    /// task-level fault model, distinct from slot-level [`SlotFailed`]):
+    /// the attempt's progress is wasted and the retry policy decides
+    /// between the paired [`TaskRetried`] and [`PipelineAbandoned`] at
+    /// the same timestamp. Requires trace format v6.
+    ///
+    /// [`SlotFailed`]: TraceEventKind::SlotFailed
+    /// [`TaskRetried`]: TraceEventKind::TaskRetried
+    /// [`PipelineAbandoned`]: TraceEventKind::PipelineAbandoned
+    TaskFailed {
+        pid: u32,
+        task: TaskType,
+        resource: ResourceKind,
+        /// 1-based attempt number that faulted.
+        attempt: u32,
+        /// Attempt progress wasted by the fault, seconds.
+        elapsed: f64,
+    },
+    /// The retry policy answered a fault/timeout with `Retry`: the task
+    /// re-enters its cluster after `delay` seconds of backoff. Requires
+    /// trace format v6.
+    TaskRetried {
+        pid: u32,
+        task: TaskType,
+        resource: ResourceKind,
+        /// 1-based attempt number that just failed (the retry runs as
+        /// attempt `attempt + 1`).
+        attempt: u32,
+        /// Backoff delay before the task re-requests its cluster, seconds.
+        delay: f64,
+    },
+    /// A running attempt exceeded the cluster's per-attempt `timeout`
+    /// and was killed; the retry policy decides what happens next, as
+    /// with [`TaskFailed`]. Requires trace format v6.
+    ///
+    /// [`TaskFailed`]: TraceEventKind::TaskFailed
+    TaskTimedOut {
+        pid: u32,
+        task: TaskType,
+        resource: ResourceKind,
+        /// Attempt progress wasted by the timeout (= the timeout),
+        /// seconds.
+        elapsed: f64,
+    },
+    /// A fresh pipeline was refused admission because its first task's
+    /// cluster queue was at `queue_cap` — a terminal outcome counted in
+    /// `ExperimentResult::shed`. Requires trace format v6.
+    TaskShed {
+        pid: u32,
+        task: TaskType,
+        resource: ResourceKind,
+        /// Jobs waiting on the cluster at the admission decision.
+        queue_depth: u32,
+    },
+    /// The retry policy gave up on a pipeline — a terminal outcome
+    /// counted in `ExperimentResult::abandoned`. Requires trace
+    /// format v6.
+    PipelineAbandoned {
+        pid: u32,
+        /// Attempts the failing task burned before the policy gave up.
+        attempts: u32,
+        /// Arrival-to-abandonment time, seconds.
+        makespan: f64,
+    },
     /// A model (re)deployed into a monitored runtime-view slot. Only
     /// *tracked* deployments get this event: deploys past
     /// `runtime_view.max_models` still count toward the result's
@@ -265,6 +329,11 @@ impl TraceEventKind {
             TraceEventKind::TaskCheckpointed { .. } => "task_checkpointed",
             TraceEventKind::TaskRestarted { .. } => "task_restarted",
             TraceEventKind::TaskPlaced { .. } => "task_placed",
+            TraceEventKind::TaskFailed { .. } => "task_failed",
+            TraceEventKind::TaskRetried { .. } => "task_retried",
+            TraceEventKind::TaskTimedOut { .. } => "task_timed_out",
+            TraceEventKind::TaskShed { .. } => "task_shed",
+            TraceEventKind::PipelineAbandoned { .. } => "pipeline_abandoned",
             TraceEventKind::ModelDeployed { .. } => "model_deployed",
         }
     }
@@ -564,6 +633,57 @@ mod tests {
             }
             .name(),
             "task_placed"
+        );
+        assert_eq!(
+            TraceEventKind::TaskFailed {
+                pid: 0,
+                task: TaskType::Train,
+                resource: ResourceKind::Training,
+                attempt: 1,
+                elapsed: 12.5
+            }
+            .name(),
+            "task_failed"
+        );
+        assert_eq!(
+            TraceEventKind::TaskRetried {
+                pid: 0,
+                task: TaskType::Train,
+                resource: ResourceKind::Training,
+                attempt: 1,
+                delay: 60.0
+            }
+            .name(),
+            "task_retried"
+        );
+        assert_eq!(
+            TraceEventKind::TaskTimedOut {
+                pid: 0,
+                task: TaskType::Evaluate,
+                resource: ResourceKind::Compute,
+                elapsed: 900.0
+            }
+            .name(),
+            "task_timed_out"
+        );
+        assert_eq!(
+            TraceEventKind::TaskShed {
+                pid: 0,
+                task: TaskType::Preprocess,
+                resource: ResourceKind::Compute,
+                queue_depth: 64
+            }
+            .name(),
+            "task_shed"
+        );
+        assert_eq!(
+            TraceEventKind::PipelineAbandoned {
+                pid: 0,
+                attempts: 3,
+                makespan: 5000.0
+            }
+            .name(),
+            "pipeline_abandoned"
         );
     }
 }

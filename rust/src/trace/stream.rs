@@ -325,6 +325,55 @@ mod tests {
     }
 
     #[test]
+    fn fault_records_patch_the_header_to_v6_streamed() {
+        let path = tmp("v6");
+        let mut sink = StreamingPstSink::create(&path, &meta()).unwrap();
+        let mut events = sample_events();
+        events.push(TraceEvent {
+            t: 20.0,
+            kind: TraceEventKind::TaskFailed {
+                pid: 0,
+                task: TaskType::Train,
+                resource: ResourceKind::Training,
+                attempt: 1,
+                elapsed: 8.0,
+            },
+        });
+        events.push(TraceEvent {
+            t: 20.0,
+            kind: TraceEventKind::TaskRetried {
+                pid: 0,
+                task: TaskType::Train,
+                resource: ResourceKind::Training,
+                attempt: 1,
+                delay: 30.0,
+            },
+        });
+        events.push(TraceEvent {
+            t: 80.0,
+            kind: TraceEventKind::PipelineAbandoned {
+                pid: 0,
+                attempts: 2,
+                makespan: 79.666_7,
+            },
+        });
+        for ev in &events {
+            sink.record(ev);
+        }
+        sink.finish().unwrap();
+        // header: version 6, reserved = streamed flag
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 6);
+        assert_eq!(u16::from_le_bytes([bytes[6], bytes[7]]), STREAMED_FLAG);
+        // and it decodes to the logical trace, same as a buffered capture
+        let loaded = Trace::load(&path).unwrap();
+        assert_eq!(loaded.events, events);
+        let rebuf = Trace::from_bytes(&loaded.to_bytes()).unwrap();
+        assert_eq!(rebuf, loaded);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn empty_stream_roundtrips() {
         let path = tmp("empty");
         let mut sink = StreamingPstSink::create(&path, &meta()).unwrap();

@@ -13,7 +13,8 @@ use crate::coordinator::strategy::StrategySpec;
 use crate::empirical::{AnalyticsDb, AssetRecord, EvalRecord, JobRecord, PreprocRecord};
 use crate::error::{Error, Result};
 use crate::model::{
-    ClusterFailureConfig, FailureModel, Framework, HwClass, HwClasses, InfraConfig, StoreConfig,
+    ClusterFailureConfig, FailureModel, FaultModel, Framework, HwClass, HwClasses, InfraConfig,
+    StoreConfig, TaskFaultConfig,
 };
 use crate::stats::dist::{Dist, ExpWeibull, Exponential, LogNormal, Normal, Pareto, Weibull};
 use crate::stats::gmm::{Gmm1, Gmm3};
@@ -543,6 +544,69 @@ impl JsonIo for FailureModel {
     }
 }
 
+impl JsonIo for TaskFaultConfig {
+    fn to_json(&self) -> Json {
+        let mut fields = Vec::new();
+        if let Some(d) = &self.fault_time {
+            fields.push(("fault_time", d.to_json()));
+        }
+        if self.timeout != 0.0 {
+            fields.push(("timeout", Json::Num(self.timeout)));
+        }
+        if self.queue_cap != 0 {
+            fields.push(("queue_cap", Json::Num(self.queue_cap as f64)));
+        }
+        Json::obj(fields)
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(TaskFaultConfig {
+            // every knob is optional: a bare {} is the all-off config
+            fault_time: match j.get("fault_time") {
+                None | Some(Json::Null) => None,
+                Some(d) => Some(Dist::from_json(d)?),
+            },
+            timeout: match j.get("timeout") {
+                Some(v) => v.as_f64()?,
+                None => 0.0,
+            },
+            queue_cap: match j.get("queue_cap") {
+                Some(v) => v.as_u64()?,
+                None => 0,
+            },
+        })
+    }
+}
+
+impl JsonIo for FaultModel {
+    fn to_json(&self) -> Json {
+        let mut fields = Vec::new();
+        if let Some(f) = &self.training {
+            fields.push(("training", f.to_json()));
+        }
+        if let Some(f) = &self.compute {
+            fields.push(("compute", f.to_json()));
+        }
+        fields.push(("retry", self.retry.to_json()));
+        Json::obj(fields)
+    }
+    fn from_json(j: &Json) -> Result<Self> {
+        let opt = |key: &str| -> Result<Option<TaskFaultConfig>> {
+            match j.get(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(s) => TaskFaultConfig::from_json(s).map(Some),
+            }
+        };
+        Ok(FaultModel {
+            training: opt("training")?,
+            compute: opt("compute")?,
+            retry: match j.get("retry") {
+                None | Some(Json::Null) => StrategySpec::new("always"),
+                Some(r) => StrategySpec::from_json(r)?,
+            },
+        })
+    }
+}
+
 impl JsonIo for HwClass {
     fn to_json(&self) -> Json {
         let mut fields = vec![
@@ -665,6 +729,10 @@ impl JsonIo for InfraConfig {
         if let Some(hw) = &self.hw_classes {
             fields.push(("hw_classes", hw.to_json()));
         }
+        // and for task faults: the fault-free default emits no key
+        if let Some(f) = &self.faults {
+            fields.push(("faults", f.to_json()));
+        }
         fields.push(("store", self.store.to_json()));
         Json::obj(fields)
     }
@@ -699,6 +767,10 @@ impl JsonIo for InfraConfig {
             hw_classes: match j.get("hw_classes") {
                 None | Some(Json::Null) => None,
                 Some(h) => Some(HwClasses::from_json(h)?),
+            },
+            faults: match j.get("faults") {
+                None | Some(Json::Null) => None,
+                Some(f) => Some(FaultModel::from_json(f)?),
             },
             store: StoreConfig::from_json(j.req("store")?)?,
         })
@@ -971,6 +1043,36 @@ mod tests {
         };
         assert_eq!(roundtrip(&m), m);
         assert!(!m.to_json().to_string().contains("compute"));
+    }
+
+    #[test]
+    fn fault_config_roundtrips_and_defaults_knobs() {
+        let f = TaskFaultConfig {
+            fault_time: Some(Dist::Weibull(Weibull::new(0.8, 5400.0))),
+            timeout: 900.0,
+            queue_cap: 32,
+        };
+        assert_eq!(roundtrip(&f), f);
+        // a bare {} parses as the all-off config, and off knobs are
+        // omitted on the way out
+        let j = Json::parse("{}").unwrap();
+        let f = TaskFaultConfig::from_json(&j).unwrap();
+        assert_eq!(f, TaskFaultConfig::default());
+        let text = TaskFaultConfig::transient(3600.0).to_json().to_string();
+        assert!(!text.contains("timeout"), "{text}");
+        assert!(!text.contains("queue_cap"), "{text}");
+        // FaultModel omits unset clusters and defaults retry to always
+        let m = FaultModel {
+            training: None,
+            compute: Some(TaskFaultConfig::transient(7200.0)),
+            retry: StrategySpec::new("fixed").with("max_attempts", 3.0),
+        };
+        assert_eq!(roundtrip(&m), m);
+        assert!(!m.to_json().to_string().contains("training"));
+        let j = Json::parse(r#"{"compute":{"queue_cap":8}}"#).unwrap();
+        let m = FaultModel::from_json(&j).unwrap();
+        assert_eq!(m.retry, StrategySpec::new("always"));
+        assert_eq!(m.compute.as_ref().map(|c| c.queue_cap), Some(8));
     }
 
     #[test]

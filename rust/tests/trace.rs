@@ -13,7 +13,7 @@ use pipesim::coordinator::{
 };
 use pipesim::des::DAY;
 use pipesim::empirical::GroundTruth;
-use pipesim::model::{ClusterFailureConfig, FailureModel};
+use pipesim::model::{ClusterFailureConfig, FailureModel, FaultModel, TaskFaultConfig};
 use pipesim::trace::{StreamingPstSink, Trace, TraceEvent, TraceEventKind, TraceSink, TraceWorkload};
 
 fn tmpdir(tag: &str) -> std::path::PathBuf {
@@ -444,6 +444,120 @@ fn streamed_failure_capture_patches_header_and_matches_memory() {
     assert_eq!(u16::from_le_bytes([bytes[6], bytes[7]]), 1, "streamed flag");
     let loaded = Trace::load(&path).unwrap();
     assert_eq!(loaded.meta, trace.meta);
+    assert_eq!(loaded.events, trace.events, "streamed events diverged");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// A saturated workload with transient task faults, per-attempt
+/// timeouts, admission-control shedding, and exponential-backoff
+/// retries on both clusters.
+fn faulty_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig {
+        name: "trace-fault".into(),
+        seed: 33,
+        horizon: DAY / 2.0,
+        arrival: ArrivalSpec::Poisson {
+            mean_interarrival: 20.0,
+        },
+        record_traces: false,
+        ..Default::default()
+    };
+    cfg.infra.training_capacity = 2;
+    let mut faults = FaultModel::uniform(
+        TaskFaultConfig::transient(1200.0)
+            .with_timeout(2400.0)
+            .with_queue_cap(12),
+    );
+    faults.retry = StrategySpec::new("exp_backoff").with("base", 30.0);
+    cfg.infra.faults = Some(faults);
+    cfg
+}
+
+#[test]
+fn fault_capture_replays_byte_identically_and_stamps_v6() {
+    let params = Arc::new(quick_params(61));
+    let mut cfg = faulty_cfg();
+    cfg.capture_trace = true;
+    let mut captured = Experiment::new(cfg, params.clone()).run().unwrap();
+    assert!(captured.task_faults > 0, "workload must fault");
+    assert!(captured.retries > 0, "faults must route through the policy");
+    let trace = captured.trace.take().unwrap();
+
+    // the fault records mirror the reliability counters exactly
+    let count = |pred: fn(&TraceEventKind) -> bool| {
+        trace.events.iter().filter(|e| pred(&e.kind)).count() as u64
+    };
+    assert_eq!(
+        count(|k| matches!(k, TraceEventKind::TaskFailed { .. })),
+        captured.task_faults
+    );
+    assert_eq!(
+        count(|k| matches!(k, TraceEventKind::TaskRetried { .. })),
+        captured.retries
+    );
+    assert_eq!(
+        count(|k| matches!(k, TraceEventKind::TaskTimedOut { .. })),
+        captured.task_timeouts
+    );
+    assert_eq!(
+        count(|k| matches!(k, TraceEventKind::TaskShed { .. })),
+        captured.shed
+    );
+    assert_eq!(
+        count(|k| matches!(k, TraceEventKind::PipelineAbandoned { .. })),
+        captured.abandoned
+    );
+
+    // fault records force the v6 stamp (buffered ⇒ reserved word 0);
+    // the codec round-trips the new kinds bit-exactly
+    let bytes = trace.to_bytes();
+    assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 6);
+    assert_eq!(u16::from_le_bytes([bytes[6], bytes[7]]), 0);
+    let loaded = Trace::from_bytes(&bytes).unwrap();
+    assert_eq!(loaded, trace);
+    assert_eq!(loaded.to_bytes(), bytes);
+
+    // replay re-derives faults, backoff delays, timeouts, and sheds from
+    // the recorded config and seed: digest and counters reproduce exactly
+    let replayed = TraceWorkload::from_trace(&loaded)
+        .unwrap()
+        .run(params, None)
+        .unwrap();
+    assert_eq!(replayed.digest(), captured.digest());
+    assert_eq!(replayed.task_faults, captured.task_faults);
+    assert_eq!(replayed.retries, captured.retries);
+    assert_eq!(replayed.task_timeouts, captured.task_timeouts);
+    assert_eq!(replayed.shed, captured.shed);
+    assert_eq!(replayed.abandoned, captured.abandoned);
+    assert_eq!(replayed.wasted_work.to_bits(), captured.wasted_work.to_bits());
+}
+
+#[test]
+fn streamed_fault_capture_patches_header_and_matches_memory() {
+    // a StreamingPstSink cannot know mid-run whether a fault record
+    // will appear; the close-time header patch must leave a valid v6
+    // streamed file equal to the buffered capture
+    let dir = tmpdir("faultstream");
+    let path = dir.join("fault.pst");
+    let params = Arc::new(quick_params(62));
+    let mut cfg = faulty_cfg();
+    cfg.capture_trace = true;
+    let mut buffered = Experiment::new(cfg.clone(), params.clone()).run().unwrap();
+    assert!(buffered.task_faults > 0, "workload must fault");
+    let trace = buffered.trace.take().unwrap();
+
+    let sink = StreamingPstSink::create(&path, &cfg.trace_meta()).unwrap();
+    let streamed = Experiment::new(cfg, params)
+        .with_sink(Box::new(sink))
+        .run()
+        .unwrap();
+    assert_eq!(streamed.digest(), buffered.digest());
+    let bytes = std::fs::read(&path).unwrap();
+    assert_eq!(u16::from_le_bytes([bytes[4], bytes[5]]), 6);
+    assert_eq!(u16::from_le_bytes([bytes[6], bytes[7]]), 1, "streamed flag");
+    let loaded = Trace::load(&path).unwrap();
+    assert_eq!(loaded.meta, trace.meta);
+    assert!(loaded.meta.get("retry").is_some(), "meta names the policy");
     assert_eq!(loaded.events, trace.events, "streamed events diverged");
     std::fs::remove_dir_all(dir).ok();
 }
